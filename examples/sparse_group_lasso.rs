@@ -1,0 +1,106 @@
+//! Sparse group lasso via the g/h split (paper §6).
+//!
+//! Regularization `λ₃/2·‖w‖² + λ₂‖w‖₁ + λ₁·Σ_G‖w_G‖₂`: putting the group
+//! norm into `h` keeps every *local* dual update in closed form (elastic
+//! net only), while the group prox runs once per (rare) global
+//! synchronization — exactly the computational argument §6 makes.
+//!
+//! ```bash
+//! cargo run --release --example sparse_group_lasso
+//! ```
+
+use dadm::comm::CostModel;
+use dadm::coordinator::{Dadm, DadmOptions};
+use dadm::data::{Dataset, Partition, SparseMatrix};
+use dadm::loss::Squared;
+use dadm::reg::{ElasticNet, GroupLasso, Zero};
+use dadm::solver::ProxSdca;
+use dadm::utils::Rng;
+
+/// Regression data whose ground truth lives on the first half of the
+/// groups — the setting where group sparsity should shine.
+fn group_sparse_regression(n: usize, d: usize, group_size: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let active_dims = d / 2; // first half of the groups carry signal
+    let w_star: Vec<f64> = (0..d)
+        .map(|j| if j < active_dims { rng.normal() } else { 0.0 })
+        .collect();
+    let mut rows = Vec::with_capacity(n);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let x: Vec<f64> = (0..d).map(|_| rng.normal() / (d as f64).sqrt()).collect();
+        y.push(x.iter().zip(&w_star).map(|(a, b)| a * b).sum::<f64>() + 0.05 * rng.normal());
+        rows.push(x);
+    }
+    let _ = group_size;
+    Dataset {
+        x: SparseMatrix::from_dense(&rows),
+        y,
+        name: "group-sparse-reg".into(),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let d = 32;
+    let group_size = 4;
+    let data = group_sparse_regression(600, d, group_size, 11);
+    let part = Partition::balanced(data.n(), 4, 11);
+    let lambda = 1e-3; // λ₃ (strong convexity)
+    let l1 = 2e-3; // λ₂/λ₃ scaled into g
+    let group_weight = 1.2; // λ₁ in h — strong enough to zero the noise groups
+
+    let opts = DadmOptions {
+        sp: 1.0,
+        cost: CostModel::free(),
+        ..Default::default()
+    };
+
+    // Without group norm (plain elastic net).
+    let mut en_only = Dadm::new(
+        &data,
+        &part,
+        Squared,
+        ElasticNet::new(l1 / lambda),
+        Zero,
+        lambda,
+        ProxSdca,
+        opts.clone(),
+    );
+    let r_en = en_only.solve(1e-8, 800);
+
+    // With the group norm assigned to h (the §6 split).
+    let mut sgl = Dadm::new(
+        &data,
+        &part,
+        Squared,
+        ElasticNet::new(l1 / lambda),
+        GroupLasso::contiguous(d, group_size, group_weight),
+        lambda,
+        ProxSdca,
+        opts,
+    );
+    let r_sgl = sgl.solve(1e-8, 800);
+
+    let group_pattern = |w: &[f64]| -> Vec<bool> {
+        (0..d / group_size)
+            .map(|g| {
+                w[g * group_size..(g + 1) * group_size]
+                    .iter()
+                    .any(|&x| x != 0.0)
+            })
+            .collect()
+    };
+
+    let en_groups = group_pattern(&r_en.w).iter().filter(|&&b| b).count();
+    let sgl_groups = group_pattern(&r_sgl.w).iter().filter(|&&b| b).count();
+    println!("elastic net only : gap {:.2e}, {} communications, {} / {} groups active",
+        r_en.normalized_gap(), r_en.rounds, en_groups, d / group_size);
+    println!("sparse group lasso: gap {:.2e}, {} communications, {} / {} groups active",
+        r_sgl.normalized_gap(), r_sgl.rounds, sgl_groups, d / group_size);
+    println!(
+        "\ngroup sparsity induced: {}",
+        if sgl_groups < en_groups { "yes ✓" } else { "no (weight too small)" }
+    );
+    anyhow::ensure!(r_sgl.converged, "sparse group lasso solve did not converge");
+    Ok(())
+}

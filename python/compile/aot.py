@@ -1,0 +1,62 @@
+"""AOT lowering: JAX/Pallas local steps -> HLO text artifacts.
+
+Emits ``artifacts/local_step_<loss>_<M>x<d>.hlo.txt`` for every loss in
+the zoo at the shapes the Rust runtime uses (a small test shape and the
+default production shape).
+
+HLO **text** is the interchange format, NOT ``lowered.compile()`` or a
+serialized ``HloModuleProto``: jax >= 0.5 emits protos with 64-bit
+instruction ids which xla_extension 0.5.1 (the version the published
+``xla`` 0.1.6 crate links) rejects; the text parser reassigns ids and
+round-trips cleanly.  Lowered with ``return_tuple=True`` and unwrapped
+with ``to_tuple()`` on the Rust side.  See /opt/xla-example/README.md.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (see Makefile).
+"""
+
+import argparse
+import pathlib
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (M, d) shapes baked into artifacts: test shape + production shape.
+SHAPES = [(8, 16), (128, 256)]
+
+
+def to_hlo_text(lowered):
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(loss, m, d):
+    fn = model.local_step(loss, tile=min(256, d))
+    lowered = jax.jit(fn).lower(*model.example_args(m, d))
+    return to_hlo_text(lowered)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--losses", nargs="*", default=list(model.LOSSES))
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    for loss in args.losses:
+        for m, d in SHAPES:
+            text = lower_one(loss, m, d)
+            path = out_dir / f"local_step_{loss}_{m}x{d}.hlo.txt"
+            path.write_text(text)
+            print(f"wrote {path} ({len(text)} chars)")
+    # Stamp file lets `make` skip regeneration when inputs are unchanged.
+    (out_dir / ".stamp").write_text("ok\n")
+
+
+if __name__ == "__main__":
+    main()

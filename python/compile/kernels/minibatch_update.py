@@ -1,0 +1,134 @@
+"""Layer-1 Pallas kernel: the batched Theorem-6 mini-batch dual update.
+
+The paper's local-step hot spot is, per machine and per round,
+
+    u       = X_b @ w            (forward scores over the mini-batch)
+    d_alpha = s * (-phi'(u,y) - alpha)
+    dv_raw  = X_b^T @ d_alpha    (rank-M update of the dual combination)
+
+i.e. two GEMVs against the same (M, d) mini-batch block plus an
+elementwise dual maximizer. On TPU the schedule that matters is HBM->VMEM
+streaming of X: this kernel tiles the feature dimension into (M, d_blk)
+blocks and runs a TWO-PHASE sequential grid
+
+    phase 0, tile j:  u += X[:, j] @ w[j]          (accumulate scores)
+    phase 1, tile 0:  d_alpha = s*(dir(u) - alpha) (once, from scratch)
+    phase 1, tile j:  dv[j] = X[:, j]^T @ d_alpha
+
+so each X tile is fetched from HBM exactly twice (once per phase) and
+everything else lives in VMEM scratch — the TPU translation of the
+paper's "one pass over the mini-batch per round" CPU loop (DESIGN.md
+SS2/SS8).  MUST run with interpret=True on CPU: real-TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_TILE = 256
+
+
+def _dual_direction(name, u, y, gamma):
+    """-phi'(u, y): the Theorem-6 feasible dual point, elementwise."""
+    return -ref.grad_phi(name, u, y, gamma)
+
+
+def _kernel(x_ref, y_ref, alpha_ref, w_ref, s_ref, alpha_out_ref, dv_ref,
+            u_acc, d_alpha, *, loss, gamma, n_tiles):
+    phase = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(jnp.logical_and(phase == 0, j == 0))
+    def _init():
+        u_acc[...] = jnp.zeros_like(u_acc)
+
+    @pl.when(phase == 0)
+    def _accumulate_scores():
+        # u += X[:, tile] @ w[tile]  — MXU-shaped (M, d_blk) x (d_blk,)
+        u_acc[...] += x_ref[...] @ w_ref[...]
+
+    @pl.when(jnp.logical_and(phase == 1, j == 0))
+    def _dual_step():
+        u = u_acc[...]
+        y = y_ref[...]
+        alpha = alpha_ref[...]
+        s = s_ref[0]
+        direction = _dual_direction(loss, u, y, gamma)
+        d_alpha[...] = s * (direction - alpha)
+        alpha_out_ref[...] = alpha + d_alpha[...]
+
+    @pl.when(phase == 1)
+    def _transpose_update():
+        # dv[tile] = X[:, tile]^T @ d_alpha
+        dv_ref[...] = x_ref[...].T @ d_alpha[...]
+
+    del n_tiles  # encoded in the grid
+
+
+@functools.partial(jax.jit, static_argnames=("loss", "gamma", "tile"))
+def local_step_pallas(x, y, alpha, w, s, *, loss, gamma=1.0, tile=DEFAULT_TILE):
+    """Batched Theorem-6 local step as a Pallas kernel.
+
+    Args:
+      x:     (M, d) float32 mini-batch block.
+      y:     (M,) labels.
+      alpha: (M,) dual variables.
+      w:     (d,) primal point.
+      s:     scalar step size (0-d array or python float).
+      loss:  one of ``ref.LOSSES``.
+      gamma: smooth-hinge gamma.
+      tile:  feature-tile width (d is zero-padded to a multiple).
+
+    Returns:
+      (alpha_new (M,), dv_raw (d,)).
+    """
+    if loss not in ref.LOSSES:
+        raise ValueError(f"unknown loss {loss!r}")
+    m, d = x.shape
+    x = x.astype(jnp.float32)
+    w = w.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    alpha = alpha.astype(jnp.float32)
+    s_arr = jnp.asarray(s, jnp.float32).reshape((1,))
+
+    d_blk = min(tile, d)
+    pad = (-d) % d_blk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+        w = jnp.pad(w, (0, pad))
+    d_padded = d + pad
+    n_tiles = d_padded // d_blk
+
+    kernel = functools.partial(_kernel, loss=loss, gamma=gamma, n_tiles=n_tiles)
+    alpha_new, dv = pl.pallas_call(
+        kernel,
+        grid=(2, n_tiles),
+        in_specs=[
+            pl.BlockSpec((m, d_blk), lambda p, j: (0, j)),  # X tile
+            pl.BlockSpec((m,), lambda p, j: (0,)),          # y
+            pl.BlockSpec((m,), lambda p, j: (0,)),          # alpha
+            pl.BlockSpec((d_blk,), lambda p, j: (j,)),      # w tile
+            pl.BlockSpec((1,), lambda p, j: (0,)),          # s
+        ],
+        out_specs=[
+            pl.BlockSpec((m,), lambda p, j: (0,)),          # alpha_new
+            pl.BlockSpec((d_blk,), lambda p, j: (j,)),      # dv tile
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+            jax.ShapeDtypeStruct((d_padded,), jnp.float32),
+        ],
+        # u accumulator and d_alpha persist in scratch across the grid
+        # (VMEM on real TPU; MemorySpace.ANY keeps interpret-mode happy).
+        scratch_shapes=[
+            pl.MemorySpace.ANY((m,), jnp.float32),
+            pl.MemorySpace.ANY((m,), jnp.float32),
+        ],
+        interpret=True,  # CPU path; real TPU would lower to Mosaic
+    )(x, y, alpha, w, s_arr)
+    return alpha_new, dv[:d]

@@ -1,0 +1,63 @@
+"""Pure-jnp reference oracle for the local-step kernel.
+
+This is the CORE correctness signal for Layer 1: the Pallas kernel in
+``minibatch_update.py`` must match these functions to float32 tolerance
+on every shape/dtype hypothesis sweeps throw at it.
+
+Semantics (matching ``rust/src/solver/theorem_step.rs`` and
+``rust/src/runtime/local_step.rs``):
+
+    u      = X_b @ w                       scores, (M,)
+    u_dir  = -phi'(u, y)                   Theorem-6 direction, (M,)
+    d_alpha= s * (u_dir - alpha)           scaled dual step, (M,)
+    out    = (alpha + d_alpha, X_b.T @ d_alpha)
+
+Losses: smooth_hinge (gamma=1), logistic, hinge, squared — the same zoo
+as ``rust/src/loss``.
+"""
+
+import jax.numpy as jnp
+
+LOSSES = ("smooth_hinge", "logistic", "hinge", "squared")
+
+
+def grad_phi(name, u, y, gamma=1.0):
+    """Subgradient phi'(u) for each loss (same conventions as rust/src/loss)."""
+    if name == "smooth_hinge":
+        z = y * u
+        # 0 if z >= 1; -y if z <= 1-gamma; -y(1-z)/gamma otherwise
+        mid = -y * (1.0 - z) / gamma
+        return jnp.where(z >= 1.0, 0.0, jnp.where(z <= 1.0 - gamma, -y, mid))
+    if name == "logistic":
+        # -y * sigmoid(-y u), computed stably
+        z = y * u
+        return -y * (0.5 * (1.0 - jnp.tanh(0.5 * z)))
+    if name == "hinge":
+        return jnp.where(y * u < 1.0, -y, 0.0)
+    if name == "squared":
+        return 2.0 * (u - y)
+    raise ValueError(f"unknown loss {name}")
+
+
+def local_step_ref(name, x, y, alpha, w, s, gamma=1.0):
+    """Reference batched Theorem-6 local step.
+
+    Args:
+      name:  loss name.
+      x:     (M, d) mini-batch design block.
+      y:     (M,) labels.
+      alpha: (M,) current dual variables.
+      w:     (d,) primal point  (= grad g*(v_tilde), computed by Rust).
+      s:     scalar step scale in [0, 1].
+      gamma: smooth-hinge smoothing parameter.
+
+    Returns:
+      (alpha_new (M,), delta_v_raw (d,)) with delta_v_raw = X^T d_alpha
+      (unscaled; the Rust side divides by lambda*n_l).
+    """
+    u = x @ w
+    u_dir = -grad_phi(name, u, y, gamma)
+    d_alpha = s * (u_dir - alpha)
+    alpha_new = alpha + d_alpha
+    delta_v_raw = x.T @ d_alpha
+    return alpha_new, delta_v_raw

@@ -1,0 +1,75 @@
+"""Layer-2 JAX model: the DADM local step as a jittable computation.
+
+Composes the Layer-1 Pallas kernel (`kernels.minibatch_update`) into the
+functions that get AOT-lowered for the Rust coordinator:
+
+* ``local_step(loss)`` — the batched Theorem-6 update the Rust runtime
+  drives: inputs ``(X_b, y_b, alpha_b, w, s)``, outputs
+  ``(alpha_new, dv_raw)``.  The regularizer side (``w = grad g*(v~)``,
+  exact f64, including the Acc-DADM shift) stays in Rust — see
+  DESIGN.md SS2 for the division of labor.
+
+* ``local_step_fused(loss)`` — the fully-fused variant that also applies
+  the elastic-net soft-threshold ``w = soft_threshold(v~ + shift, tau)``
+  inside the graph: inputs ``(X_b, y_b, alpha_b, v_tilde, shift, tau, s)``.
+  Exercised by the model tests and available for an all-XLA deployment;
+  XLA fuses the threshold into the first GEMV so the marginal cost is nil.
+
+Python here is build-time only: ``aot.py`` lowers these once to HLO text
+and the Rust binary never imports Python again.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.minibatch_update import local_step_pallas
+
+LOSSES = ref.LOSSES
+
+
+def local_step(loss, gamma=1.0, tile=256):
+    """The (X, y, alpha, w, s) -> (alpha_new, dv_raw) local step."""
+
+    @jax.jit
+    def fn(x, y, alpha, w, s):
+        alpha_new, dv = local_step_pallas(
+            x, y, alpha, w, s, loss=loss, gamma=gamma, tile=tile
+        )
+        return (alpha_new, dv)
+
+    return fn
+
+
+def soft_threshold(v, tau):
+    """Elementwise sign(v) * max(|v| - tau, 0) — grad g* of the elastic net."""
+    return jnp.sign(v) * jnp.maximum(jnp.abs(v) - tau, 0.0)
+
+
+def local_step_fused(loss, gamma=1.0, tile=256):
+    """Variant that computes w from (v_tilde, shift, tau) in-graph."""
+
+    @jax.jit
+    def fn(x, y, alpha, v_tilde, shift, tau, s):
+        w = soft_threshold(v_tilde + shift, tau)
+        alpha_new, dv = local_step_pallas(
+            x, y, alpha, w, s, loss=loss, gamma=gamma, tile=tile
+        )
+        return (alpha_new, dv)
+
+    return fn
+
+
+@functools.lru_cache(maxsize=None)
+def example_args(m, d):
+    """ShapeDtypeStructs for lowering at shape (m, d)."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((m, d), f32),  # X
+        jax.ShapeDtypeStruct((m,), f32),    # y
+        jax.ShapeDtypeStruct((m,), f32),    # alpha
+        jax.ShapeDtypeStruct((d,), f32),    # w
+        jax.ShapeDtypeStruct((), f32),      # s
+    )

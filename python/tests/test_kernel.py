@@ -1,0 +1,108 @@
+"""L1 correctness: the Pallas kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, dtypes (via value ranges), losses, tile sizes,
+and step scales; assert_allclose against ``ref.local_step_ref`` is THE
+correctness signal for Layer 1.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.minibatch_update import local_step_pallas
+
+RTOL, ATOL = 1e-4, 1e-5
+
+
+def make_case(seed, m, d):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(m, d)).astype(np.float32)
+    y = np.sign(rng.normal(size=m)).astype(np.float32)
+    y[y == 0] = 1.0
+    alpha = (rng.uniform(0, 1, size=m) * y).astype(np.float32)
+    w = rng.normal(size=d).astype(np.float32)
+    return x, y, alpha, w
+
+
+@pytest.mark.parametrize("loss", ref.LOSSES)
+def test_matches_ref_basic(loss):
+    x, y, alpha, w = make_case(0, 16, 32)
+    a1, dv1 = local_step_pallas(x, y, alpha, w, 0.5, loss=loss, tile=16)
+    a2, dv2 = ref.local_step_ref(loss, x, y, alpha, w, 0.5)
+    np.testing.assert_allclose(a1, a2, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(dv1, dv2, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    m=st.integers(1, 24),
+    d=st.integers(1, 48),
+    loss=st.sampled_from(ref.LOSSES),
+    s=st.floats(0.0, 1.0),
+)
+def test_matches_ref_hypothesis(seed, m, d, loss, s):
+    x, y, alpha, w = make_case(seed, m, d)
+    a1, dv1 = local_step_pallas(x, y, alpha, w, s, loss=loss, tile=16)
+    a2, dv2 = ref.local_step_ref(loss, x, y, alpha, w, s)
+    np.testing.assert_allclose(a1, a2, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(np.asarray(dv1), np.asarray(dv2), rtol=1e-3, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    tile=st.sampled_from([4, 8, 16, 64, 256]),
+)
+def test_tile_size_invariance(seed, tile):
+    """The d-tiling is an implementation detail: results must not depend
+    on it (this is what validates the two-phase grid schedule)."""
+    x, y, alpha, w = make_case(seed, 12, 40)
+    base_a, base_dv = ref.local_step_ref("smooth_hinge", x, y, alpha, w, 0.7)
+    a, dv = local_step_pallas(x, y, alpha, w, 0.7, loss="smooth_hinge", tile=tile)
+    np.testing.assert_allclose(a, base_a, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(dv, base_dv, rtol=1e-3, atol=1e-4)
+
+
+def test_zero_rows_are_noops():
+    """Zero-padding safety: x = 0, y = 0, alpha = 0 rows must produce
+    d_alpha = 0 for every loss (the Rust chunking path relies on this)."""
+    m, d = 8, 16
+    x = np.zeros((m, d), np.float32)
+    y = np.zeros(m, np.float32)
+    alpha = np.zeros(m, np.float32)
+    w = np.ones(d, np.float32)
+    for loss in ref.LOSSES:
+        a, dv = local_step_pallas(x, y, alpha, w, 0.9, loss=loss, tile=8)
+        np.testing.assert_array_equal(np.asarray(a), 0.0)
+        np.testing.assert_array_equal(np.asarray(dv), 0.0)
+
+
+def test_s_zero_is_identity():
+    x, y, alpha, w = make_case(3, 8, 8)
+    a, dv = local_step_pallas(x, y, alpha, w, 0.0, loss="logistic", tile=8)
+    np.testing.assert_allclose(a, alpha, rtol=0, atol=0)
+    np.testing.assert_array_equal(np.asarray(dv), 0.0)
+
+
+def test_dual_feasibility_preserved_smooth_hinge():
+    """s in [0,1] keeps y*alpha in [0,1] (convex combination with the
+    feasible direction)."""
+    rng = np.random.default_rng(7)
+    m, d = 32, 16
+    x = rng.normal(size=(m, d)).astype(np.float32)
+    y = np.sign(rng.normal(size=m)).astype(np.float32)
+    y[y == 0] = 1.0
+    alpha = (rng.uniform(0, 1, size=m) * y).astype(np.float32)
+    w = rng.normal(size=d).astype(np.float32)
+    for s in [0.1, 0.5, 1.0]:
+        a, _ = local_step_pallas(x, y, alpha, w, s, loss="smooth_hinge", tile=16)
+        ya = y * np.asarray(a)
+        assert (ya >= -1e-6).all() and (ya <= 1 + 1e-6).all()
+
+
+def test_rejects_unknown_loss():
+    x, y, alpha, w = make_case(0, 4, 4)
+    with pytest.raises(ValueError):
+        local_step_pallas(x, y, alpha, w, 0.5, loss="nope")

@@ -1,0 +1,67 @@
+"""L2 model tests: shapes, the fused regularizer variant, and the AOT
+lowering path (HLO text emission)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def test_local_step_shapes():
+    fn = model.local_step("smooth_hinge", tile=16)
+    m, d = 8, 16
+    rng = np.random.default_rng(0)
+    out = fn(
+        rng.normal(size=(m, d)).astype(np.float32),
+        np.ones(m, np.float32),
+        np.zeros(m, np.float32),
+        rng.normal(size=d).astype(np.float32),
+        np.float32(0.5),
+    )
+    assert out[0].shape == (m,)
+    assert out[1].shape == (d,)
+    assert str(out[0].dtype) == "float32"
+
+
+def test_soft_threshold_matches_numpy():
+    v = np.array([2.0, -2.0, 0.5, -0.5, 0.0], np.float32)
+    got = np.asarray(model.soft_threshold(v, 1.0))
+    np.testing.assert_allclose(got, [1.0, -1.0, 0.0, 0.0, 0.0])
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), tau=st.floats(0.0, 0.5))
+def test_fused_equals_manual_composition(seed, tau):
+    rng = np.random.default_rng(seed)
+    m, d = 8, 24
+    x = rng.normal(size=(m, d)).astype(np.float32)
+    y = np.sign(rng.normal(size=m)).astype(np.float32)
+    y[y == 0] = 1.0
+    alpha = np.zeros(m, np.float32)
+    v_tilde = rng.normal(size=d).astype(np.float32)
+    shift = rng.normal(size=d).astype(np.float32) * 0.1
+    fused = model.local_step_fused("logistic", tile=8)
+    a1, dv1 = fused(x, y, alpha, v_tilde, shift, np.float32(tau), np.float32(0.6))
+    w = np.asarray(model.soft_threshold(v_tilde + shift, tau))
+    a2, dv2 = ref.local_step_ref("logistic", x, y, alpha, w, 0.6)
+    np.testing.assert_allclose(a1, a2, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(dv1, dv2, rtol=1e-3, atol=1e-4)
+
+
+@pytest.mark.parametrize("loss", model.LOSSES)
+def test_aot_lowering_emits_valid_hlo_text(loss):
+    text = aot.lower_one(loss, 8, 16)
+    assert "HloModule" in text
+    # The entry computation must take the 5 runtime inputs and return a
+    # 2-tuple (alpha_new, dv).
+    assert "f32[8,16]" in text  # X
+    assert "(f32[8]" in text or "f32[8]" in text
+    assert len(text) > 1000
+
+
+def test_aot_shapes_cover_runtime_contract():
+    # The Rust runtime hard-codes these shapes in its tests/examples.
+    assert (8, 16) in aot.SHAPES
+    assert (128, 256) in aot.SHAPES

@@ -1,0 +1,121 @@
+//! Ablations for the design choices DESIGN.md calls out.
+//!
+//! * **Local solver** (Remark 10): the analyzed conservative Theorem-6
+//!   step vs the practical sequential ProxSDCA — the paper claims actual
+//!   performance is "significantly better than what is indicated by the
+//!   bounds when the local duals are better optimized".
+//! * **κ choice** (Remark 12): the default `κ = mR/(γn) − λ` vs
+//!   under-/over-regularized prox weights.
+
+use dadm::comm::CostModel;
+use dadm::coordinator::{AccDadm, AccDadmOptions, Dadm, DadmOptions};
+use dadm::data::synthetic::SyntheticSpec;
+use dadm::data::Partition;
+use dadm::loss::SmoothHinge;
+use dadm::metrics::bench::BenchTable;
+use dadm::reg::{ElasticNet, Zero};
+use dadm::solver::{ProxSdca, TheoremStep};
+
+fn main() {
+    let data = SyntheticSpec::covtype(0.005).generate();
+    let part = Partition::balanced(data.n(), 8, 7);
+    let lambda = 0.07 / data.n() as f64; // the mid grid point (λn = 0.07)
+    let mu = 1e-5;
+    let eps = 1e-3;
+    let opts = DadmOptions {
+        sp: 0.2,
+        cost: CostModel::free(),
+        gap_every: 3,
+        ..Default::default()
+    };
+    let max_rounds = 500;
+
+    let mut table = BenchTable::new(
+        "ablation",
+        &["ablation", "variant", "comms_to_1e-3", "final_gap"],
+    );
+
+    // --- Local solver ablation (plain DADM) ---
+    {
+        let mut dadm = Dadm::new(
+            &data,
+            &part,
+            SmoothHinge::default(),
+            ElasticNet::new(mu / lambda),
+            Zero,
+            lambda,
+            ProxSdca,
+            opts.clone(),
+        );
+        let r = dadm.solve(eps, max_rounds);
+        table.row(&[
+            "local_solver".into(),
+            "prox_sdca (practical)".into(),
+            r.trace
+                .rounds_to_gap(eps)
+                .map(|c| c.to_string())
+                .unwrap_or(format!(">{max_rounds}")),
+            format!("{:.3e}", r.normalized_gap()),
+        ]);
+        let mut dadm = Dadm::new(
+            &data,
+            &part,
+            SmoothHinge::default(),
+            ElasticNet::new(mu / lambda),
+            Zero,
+            lambda,
+            TheoremStep {
+                radius: data.max_row_norm_sq(),
+            },
+            opts.clone(),
+        );
+        let r = dadm.solve(eps, max_rounds);
+        table.row(&[
+            "local_solver".into(),
+            "theorem-6 (analyzed)".into(),
+            r.trace
+                .rounds_to_gap(eps)
+                .map(|c| c.to_string())
+                .unwrap_or(format!(">{max_rounds}")),
+            format!("{:.3e}", r.normalized_gap()),
+        ]);
+    }
+
+    // --- κ ablation (Acc-DADM) ---
+    let kappa_star = part.machines() as f64 * data.max_row_norm_sq() / data.n() as f64 - lambda;
+    for (name, kappa) in [
+        ("κ*/16 (under)", kappa_star / 16.0),
+        ("κ* = mR/(γn)−λ", kappa_star),
+        ("16κ* (over)", kappa_star * 16.0),
+        ("κ = 0 (≡ DADM)", 0.0),
+    ] {
+        let mut acc = AccDadm::new(
+            &data,
+            &part,
+            SmoothHinge::default(),
+            Zero,
+            lambda,
+            mu,
+            ProxSdca,
+            AccDadmOptions {
+                kappa: Some(kappa.max(0.0)),
+                dadm: opts.clone(),
+                ..Default::default()
+            },
+        );
+        let r = acc.solve(eps, max_rounds);
+        table.row(&[
+            "kappa".into(),
+            name.into(),
+            r.trace
+                .rounds_to_gap(eps)
+                .map(|c| c.to_string())
+                .unwrap_or(format!(">{max_rounds}")),
+            format!("{:.3e}", r.normalized_gap()),
+        ]);
+    }
+
+    table.finish();
+    println!("\nExpected: prox_sdca ≪ theorem-6 in comms (Remark 10); κ* near-optimal");
+    println!("with degradation both under- and over-regularized (Remark 12).");
+}

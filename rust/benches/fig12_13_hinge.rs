@@ -1,0 +1,72 @@
+//! Figures 12 & 13: non-smooth hinge loss — normalized duality gap vs
+//! communications (Fig 12) and modeled time (Fig 13).
+//!
+//! CoCoA+ runs the plain hinge (Theorem-7 Lipschitz regime); Acc-DADM
+//! runs the Nesterov-smoothed hinge (§8.2 / Corollary 13; practical γ).
+//! Paper shape: acceleration carries over — Acc-DADM converges
+//! significantly faster, especially at small λ.
+
+use dadm::config::Method;
+use dadm::coordinator::NuChoice;
+use dadm::experiments::*;
+use dadm::loss::{Hinge, SmoothHinge};
+use dadm::metrics::bench::BenchTable;
+
+fn main() {
+    let datasets = bench_datasets();
+    let mut table = BenchTable::new(
+        "fig12_13_hinge",
+        &[
+            "dataset", "lambda", "sp", "method", "comms_to_1e-3", "time_to_1e-3_s",
+            "final_gap",
+        ],
+    );
+    let max = 100.0;
+    for data in datasets.iter().take(2) {
+        let m = 8;
+        for (li, &lambda) in lambda_grid(data.n()).iter().enumerate() {
+            for &sp in &SP_GRID {
+                // CoCoA+ on the plain (non-smooth) hinge.
+                let cell = run_cell(data, Hinge, Method::Dadm, lambda, sp, m, NuChoice::Zero, max);
+                table.row(&[
+                    data.name.clone(),
+                    lambda_label(li).into(),
+                    format!("{sp}"),
+                    "CoCoA+".into(),
+                    fmt_or_max(cell.comms_to_target, (max / sp) as usize),
+                    fmt_secs_opt(cell.time_to_target),
+                    format!("{:.3e}", cell.final_gap),
+                ]);
+                // Acc-DADM on the Nesterov-smoothed hinge. Corollary 13's
+                // exact transfer needs γ = ε/L², but at this reduced scale
+                // that condition number is unreachable under the 100-pass
+                // cap (κ = mR/(γn) ≈ 2.75 here vs 0.014 at the paper's n);
+                // we use the practical γ = 0.1 and measure the smoothed
+                // objective's gap, as §8.2 prescribes ("we minimize the
+                // smoothed objective"). See EXPERIMENTS.md §F12-13.
+                let cell = run_cell(
+                    data,
+                    SmoothHinge::new(0.1),
+                    Method::AccDadm,
+                    lambda,
+                    sp,
+                    m,
+                    NuChoice::Zero,
+                    max,
+                );
+                table.row(&[
+                    data.name.clone(),
+                    lambda_label(li).into(),
+                    format!("{sp}"),
+                    "Acc-DADM".into(),
+                    fmt_or_max(cell.comms_to_target, (max / sp) as usize),
+                    fmt_secs_opt(cell.time_to_target),
+                    format!("{:.3e}", cell.final_gap),
+                ]);
+            }
+        }
+    }
+    table.finish();
+    println!("\nShape check (paper Figs 12-13): smoothing + acceleration beats the");
+    println!("Lipschitz-rate CoCoA+ on the plain hinge, most visibly at small λ.");
+}

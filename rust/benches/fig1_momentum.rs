@@ -1,0 +1,52 @@
+//! Figure 1: Acc-DADM with the theory momentum ν = (1−η)/(1+η) vs the
+//! practical ν = 0, SVM (smooth hinge), μ = 1e-5, λ and sp grids.
+//!
+//! Paper shape to reproduce: both variants accelerate; the theory ν
+//! converges with rippling, ν = 0 is smoother — and both dominate plain
+//! DADM/CoCoA+ at small λ.
+
+use dadm::config::Method;
+use dadm::coordinator::NuChoice;
+use dadm::experiments::*;
+use dadm::loss::SmoothHinge;
+use dadm::metrics::bench::BenchTable;
+
+fn main() {
+    let datasets = bench_datasets();
+    let data = &datasets[0]; // covtype analogue, as in the paper's panel 1
+    let mut table = BenchTable::new(
+        "fig1_momentum",
+        &["dataset", "lambda", "sp", "variant", "comms_to_1e-3", "final_gap"],
+    );
+    let max = 100.0;
+    for (li, &lambda) in lambda_grid(data.n()).iter().enumerate() {
+        for &sp in &SP_GRID {
+            for (name, nu) in [
+                ("Acc-DADM-theo", NuChoice::Theory),
+                ("Acc-DADM-0", NuChoice::Zero),
+            ] {
+                let cell = run_cell(
+                    data,
+                    SmoothHinge::default(),
+                    Method::AccDadm,
+                    lambda,
+                    sp,
+                    8,
+                    nu,
+                    max,
+                );
+                table.row(&[
+                    data.name.clone(),
+                    lambda_label(li).into(),
+                    format!("{sp}"),
+                    name.into(),
+                    fmt_or_max(cell.comms_to_target, (max / sp) as usize),
+                    format!("{:.3e}", cell.final_gap),
+                ]);
+            }
+        }
+    }
+    table.finish();
+    println!("\nShape check (paper Fig 1): both ν choices reach the target; the");
+    println!("theory ν may ripple (slightly more comms on some cells), ν = 0 is smooth.");
+}

@@ -1,0 +1,68 @@
+//! Figures 2 & 3: SVM (smooth hinge) — normalized duality gap vs number
+//! of communications (Fig 2) and vs modeled time (Fig 3), CoCoA+ vs
+//! Acc-DADM, all four dataset analogues × λ grid × sp grid.
+//!
+//! Paper shape to reproduce: Acc-DADM ≤ CoCoA+ everywhere; the advantage
+//! explodes as λ shrinks (CoCoA+ hits the 100-pass cap at λ ~ 1e-8 while
+//! Acc-DADM still converges); larger sp ⇒ fewer communications.
+
+use dadm::config::Method;
+use dadm::coordinator::NuChoice;
+use dadm::experiments::*;
+use dadm::loss::SmoothHinge;
+use dadm::metrics::bench::BenchTable;
+use dadm::metrics::plot::{render, series_from_trace, PlotSpec};
+
+fn main() {
+    let datasets = bench_datasets();
+    let mut panel: Vec<dadm::metrics::plot::Series> = Vec::new();
+    let mut table = BenchTable::new(
+        "fig2_3_svm_convergence",
+        &[
+            "dataset", "lambda", "sp", "method", "comms_to_1e-3", "time_to_1e-3_s",
+            "comm_time_s", "final_gap",
+        ],
+    );
+    let max = 100.0;
+    for data in &datasets {
+        let m = if data.n() > 8_000 { 20 } else { 8 }; // §10 machine counts
+        for (li, &lambda) in lambda_grid(data.n()).iter().enumerate() {
+            for &sp in &SP_GRID {
+                for (name, method) in [("CoCoA+", Method::Dadm), ("Acc-DADM", Method::AccDadm)] {
+                    let cell = run_cell(
+                        data,
+                        SmoothHinge::default(),
+                        method,
+                        lambda,
+                        sp,
+                        m,
+                        NuChoice::Zero,
+                        max,
+                    );
+                    // One representative curve panel (the paper's middle
+                    // column: λ̂ = 1e-7, sp = 0.2, covtype analogue).
+                    if data.name == "synth-covtype" && li == 1 && sp == 0.20 {
+                        panel.push(series_from_trace(name, &cell.report.trace));
+                    }
+                    table.row(&[
+                        data.name.clone(),
+                        lambda_label(li).into(),
+                        format!("{sp}"),
+                        name.into(),
+                        fmt_or_max(cell.comms_to_target, (max / sp) as usize),
+                        fmt_secs_opt(cell.time_to_target),
+                        format!("{:.4}", cell.comm_secs),
+                        format!("{:.3e}", cell.final_gap),
+                    ]);
+                }
+            }
+        }
+    }
+    table.finish();
+    println!(
+        "\nFig-2 curve panel (synth-covtype, λ̂ = 1e-7, sp = 0.2):\n{}",
+        render(&PlotSpec::default(), &panel)
+    );
+    println!("\nShape check (paper Figs 2-3): Acc-DADM needs no more comms than CoCoA+");
+    println!("on every cell, and CoCoA+ caps out (>max) at the smallest λ.");
+}

@@ -1,0 +1,85 @@
+//! Figures 6 & 7: OWL-QN vs CoCoA+ vs Acc-DADM on L2-L1 logistic
+//! regression, sp = 1.0 (one communication per pass), normalized primal
+//! objective vs passes (Fig 6) and vs modeled time (Fig 7).
+//!
+//! Paper shape: the dual methods reach low objective in far fewer passes
+//! than the batch quasi-Newton baseline, and Acc-DADM keeps its edge as
+//! λ shrinks.
+
+use dadm::comm::{Cluster, CostModel};
+use dadm::config::Method;
+use dadm::coordinator::{run_owlqn_distributed, NuChoice};
+use dadm::data::Partition;
+use dadm::experiments::*;
+use dadm::loss::Logistic;
+use dadm::metrics::bench::BenchTable;
+
+fn main() {
+    let datasets = bench_datasets();
+    let mut table = BenchTable::new(
+        "fig6_7_owlqn",
+        &[
+            "dataset", "lambda", "method", "passes", "final_norm_primal", "modeled_secs",
+        ],
+    );
+    let max_passes = 100usize;
+    for data in datasets.iter().take(2) {
+        // covtype + rcv1 analogues (the paper's medium datasets, m = 8)
+        let m = 8;
+        for (li, &lambda) in lambda_grid(data.n()).iter().enumerate() {
+            // OWL-QN baseline.
+            let part = Partition::balanced(data.n(), m, 7);
+            let ow = run_owlqn_distributed(
+                data,
+                &part,
+                Logistic,
+                lambda,
+                MU,
+                max_passes,
+                Cluster::Serial,
+                CostModel::default(),
+            );
+            table.row(&[
+                data.name.clone(),
+                lambda_label(li).into(),
+                "OWL-QN".into(),
+                ow.passes.to_string(),
+                format!("{:.6e}", ow.objective),
+                format!("{:.4}", ow.compute_secs + ow.comm_secs),
+            ]);
+            // Dual methods at sp = 1.0.
+            for (name, method) in [("CoCoA+", Method::Dadm), ("Acc-DADM", Method::AccDadm)] {
+                let cell = run_cell(
+                    data,
+                    Logistic,
+                    method,
+                    lambda,
+                    1.0,
+                    m,
+                    NuChoice::Zero,
+                    max_passes as f64,
+                );
+                let norm_primal = cell
+                    .report
+                    .trace
+                    .last()
+                    .map(|r| r.primal / data.n() as f64)
+                    .unwrap_or(f64::NAN);
+                table.row(&[
+                    data.name.clone(),
+                    lambda_label(li).into(),
+                    name.into(),
+                    format!("{:.0}", cell.report.passes),
+                    format!("{norm_primal:.6e}"),
+                    format!(
+                        "{:.4}",
+                        cell.report.trace.last().map(|r| r.modeled_secs()).unwrap_or(0.0)
+                    ),
+                ]);
+            }
+        }
+    }
+    table.finish();
+    println!("\nShape check (paper Figs 6-7): dual methods hit lower objective in fewer");
+    println!("passes than OWL-QN; Acc-DADM converges fastest at small λ.");
+}

@@ -1,0 +1,188 @@
+//! §Perf micro-benchmarks: the L3 hot paths.
+//!
+//! * ProxSDCA epoch throughput (coordinate updates/s, dense + sparse) —
+//!   the innermost solve loop;
+//! * Theorem-step batched update throughput;
+//! * tree allreduce bandwidth;
+//! * PJRT artifact execute latency (when `artifacts/` exists).
+//!
+//! Results feed EXPERIMENTS.md §Perf (before/after iteration log).
+
+use dadm::data::synthetic::SyntheticSpec;
+use dadm::data::Partition;
+use dadm::loss::{Loss, SmoothHinge};
+use dadm::metrics::bench::{fmt_secs, time_it, BenchTable};
+use dadm::reg::ElasticNet;
+use dadm::solver::{LocalSolver, ProxSdca, TheoremStep, WorkerState};
+use dadm::utils::Rng;
+
+fn main() {
+    let mut table = BenchTable::new(
+        "perf_hotpath",
+        &["bench", "config", "median", "throughput"],
+    );
+
+    // --- ProxSDCA epoch throughput ---
+    for (name, density, d) in [("dense", 1.0, 64), ("sparse", 0.02, 2048)] {
+        let n = 20_000;
+        let data = SyntheticSpec {
+            name: format!("perf-{name}"),
+            n,
+            d,
+            density,
+            signal_density: 0.2,
+            noise: 0.1,
+            seed: 1,
+        }
+        .generate();
+        let part = Partition::balanced(n, 1, 1);
+        let mut ws = WorkerState::from_partition(&data, &part, 0);
+        let loss = SmoothHinge::default();
+        let reg = ElasticNet::new(0.1);
+        let lambda_n_l = 1e-4 * n as f64;
+        let batch: Vec<usize> = (0..n).collect();
+        let mut rng = Rng::new(2);
+        let t = time_it(1, 5, || {
+            let dv = ProxSdca.local_step(&mut ws, &batch, &loss, &reg, lambda_n_l, &mut rng);
+            ws.apply_global(&dv, &reg);
+        });
+        let coords_per_sec = n as f64 / t.median;
+        let nnz_per_sec = data.x.nnz() as f64 / t.median;
+        table.row(&[
+            "prox_sdca_epoch".into(),
+            format!("{name} n={n} d={d}"),
+            fmt_secs(t.median),
+            format!("{:.2}M coord/s, {:.1}M nnz/s", coords_per_sec / 1e6, nnz_per_sec / 1e6),
+        ]);
+    }
+
+    // --- ProxSDCA mini-batch regime (sp ≪ 1: many small local steps) ---
+    {
+        let n = 20_000;
+        let d = 2048;
+        let data = SyntheticSpec {
+            name: "perf-mini".into(),
+            n,
+            d,
+            density: 0.02,
+            signal_density: 0.2,
+            noise: 0.1,
+            seed: 9,
+        }
+        .generate();
+        let part = Partition::balanced(n, 1, 1);
+        let mut ws = WorkerState::from_partition(&data, &part, 0);
+        let loss = SmoothHinge::default();
+        let reg = ElasticNet::new(0.1);
+        let lambda_n_l = 1e-4 * n as f64;
+        let m_batch = 64usize;
+        let mut rng = Rng::new(7);
+        let calls = 100;
+        let t = time_it(1, 5, || {
+            for _ in 0..calls {
+                let batch = rng.sample_indices(n, m_batch);
+                let _ = ProxSdca.local_step(&mut ws, &batch, &loss, &reg, lambda_n_l, &mut rng);
+            }
+        });
+        table.row(&[
+            "prox_sdca_minibatch".into(),
+            format!("M={m_batch} d={d} x{calls} calls"),
+            fmt_secs(t.median / calls as f64),
+            format!("{:.2}M coord/s", (calls * m_batch) as f64 / t.median / 1e6),
+        ]);
+    }
+
+    // --- Theorem batched step ---
+    {
+        let n = 20_000;
+        let data = SyntheticSpec {
+            name: "perf-thm".into(),
+            n,
+            d: 256,
+            density: 0.1,
+            signal_density: 0.2,
+            noise: 0.1,
+            seed: 3,
+        }
+        .generate();
+        let part = Partition::balanced(n, 1, 1);
+        let mut ws = WorkerState::from_partition(&data, &part, 0);
+        let loss = SmoothHinge::default();
+        let reg = ElasticNet::new(0.1);
+        let batch: Vec<usize> = (0..n).collect();
+        let mut rng = Rng::new(4);
+        let step = TheoremStep { radius: 1.0 };
+        let t = time_it(1, 5, || {
+            let dv = step.local_step(&mut ws, &batch, &loss, &reg, 2.0, &mut rng);
+            ws.apply_global(&dv, &reg);
+        });
+        table.row(&[
+            "theorem_step_epoch".into(),
+            format!("n={n} d=256 dens=0.1"),
+            fmt_secs(t.median),
+            format!("{:.2}M coord/s", n as f64 / t.median / 1e6),
+        ]);
+    }
+
+    // --- Allreduce ---
+    for m in [8usize, 32] {
+        let d = 1 << 16;
+        let contribs: Vec<Vec<f64>> = (0..m).map(|l| vec![l as f64; d]).collect();
+        let weights = vec![1.0 / m as f64; m];
+        let t = time_it(2, 10, || {
+            let out = dadm::comm::allreduce::tree_allreduce(&contribs, &weights);
+            assert_eq!(out.len(), d);
+        });
+        table.row(&[
+            "tree_allreduce".into(),
+            format!("m={m} d={d}"),
+            fmt_secs(t.median),
+            format!("{:.2} GB/s", (m * d * 8) as f64 / t.median / 1e9),
+        ]);
+    }
+
+    // --- PJRT execute latency (requires artifacts) ---
+    {
+        use dadm::runtime::XlaLocalStep;
+        let loss = SmoothHinge::default();
+        match XlaLocalStep::new(loss.name(), 128, 256, 1.0) {
+            Ok(step) => {
+                let n = 4_096;
+                let data = SyntheticSpec {
+                    name: "perf-xla".into(),
+                    n,
+                    d: 256,
+                    density: 0.1,
+                    signal_density: 0.2,
+                    noise: 0.1,
+                    seed: 5,
+                }
+                .generate();
+                let part = Partition::balanced(n, 1, 1);
+                let mut ws = WorkerState::from_partition(&data, &part, 0);
+                let reg = ElasticNet::new(0.1);
+                let batch: Vec<usize> = (0..128).collect();
+                let mut rng = Rng::new(6);
+                let t = time_it(2, 10, || {
+                    let _ = step.local_step(&mut ws, &batch, &loss, &reg, 0.4, &mut rng);
+                });
+                table.row(&[
+                    "xla_local_step".into(),
+                    "M=128 d=256".into(),
+                    fmt_secs(t.median),
+                    format!("{:.0}k coord/s", 128.0 / t.median / 1e3),
+                ]);
+            }
+            Err(_) => {
+                table.row(&[
+                    "xla_local_step".into(),
+                    "M=128 d=256".into(),
+                    "skipped".into(),
+                    "run `make artifacts`".into(),
+                ]);
+            }
+        }
+    }
+
+    table.finish();
+}

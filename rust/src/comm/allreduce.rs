@@ -1,0 +1,95 @@
+//! Tree allreduce over per-worker vectors.
+//!
+//! The global step of Algorithm 2 is a single weighted allreduce
+//! `v ← v + Σ_ℓ (n_ℓ/n)·Δv_ℓ`. This module implements the reduction with
+//! the same binary-tree round structure an MPI allreduce uses, so the
+//! modeled communication rounds in [`super::cost`] correspond one-to-one
+//! with what the code actually performs, and tests can validate the tree
+//! result against the serial sum.
+
+/// Weighted tree-reduce: returns `Σ_ℓ weight_ℓ · contributions_ℓ`.
+///
+/// Pairwise binary-tree combination (⌈log₂ m⌉ rounds), matching MPI's
+/// recursive halving/doubling order rather than a serial left fold — the
+/// floating-point result therefore matches what a real cluster computes.
+pub fn tree_allreduce(contributions: &[Vec<f64>], weights: &[f64]) -> Vec<f64> {
+    assert_eq!(contributions.len(), weights.len());
+    assert!(!contributions.is_empty());
+    let d = contributions[0].len();
+    let mut buf: Vec<Vec<f64>> = contributions
+        .iter()
+        .zip(weights)
+        .map(|(c, &w)| {
+            assert_eq!(c.len(), d, "ragged contribution");
+            c.iter().map(|x| w * x).collect()
+        })
+        .collect();
+    let mut stride = 1usize;
+    while stride < buf.len() {
+        let mut i = 0;
+        while i + stride < buf.len() {
+            let (left, right) = buf.split_at_mut(i + stride);
+            let dst = &mut left[i];
+            let src = &right[0];
+            for (a, b) in dst.iter_mut().zip(src) {
+                *a += b;
+            }
+            i += stride * 2;
+        }
+        stride *= 2;
+    }
+    std::mem::take(&mut buf[0])
+}
+
+/// Number of tree rounds an allreduce over `m` machines takes.
+pub fn rounds(m: usize) -> usize {
+    (usize::BITS - (m.max(1) - 1).leading_zeros()) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::for_each_case;
+
+    #[test]
+    fn matches_serial_sum() {
+        let contribs = vec![vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]];
+        let w = vec![0.5, 0.25, 0.25];
+        let got = tree_allreduce(&contribs, &w);
+        assert_eq!(got, vec![0.5 + 0.75 + 1.25, 1.0 + 1.0 + 1.5]);
+    }
+
+    #[test]
+    fn single_contribution_scaled() {
+        assert_eq!(tree_allreduce(&[vec![2.0]], &[0.5]), vec![1.0]);
+    }
+
+    #[test]
+    fn rounds_is_ceil_log2() {
+        assert_eq!(rounds(1), 0);
+        assert_eq!(rounds(2), 1);
+        assert_eq!(rounds(3), 2);
+        assert_eq!(rounds(8), 3);
+        assert_eq!(rounds(9), 4);
+    }
+
+    #[test]
+    fn prop_tree_equals_serial_within_fp_tolerance() {
+        for_each_case(0xA77, 50, |g| {
+            let m = g.usize_in(1, 20);
+            let d = g.usize_in(1, 30);
+            let contribs: Vec<Vec<f64>> =
+                (0..m).map(|_| g.vec_f64(d, -10.0, 10.0)).collect();
+            let weights = g.vec_f64(m, 0.0, 1.0);
+            let got = tree_allreduce(&contribs, &weights);
+            for j in 0..d {
+                let serial: f64 = (0..m).map(|l| weights[l] * contribs[l][j]).sum();
+                assert!(
+                    (got[j] - serial).abs() < 1e-9,
+                    "tree {} vs serial {serial}",
+                    got[j]
+                );
+            }
+        });
+    }
+}

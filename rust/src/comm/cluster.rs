@@ -1,0 +1,132 @@
+//! Worker execution: run a closure on every machine, serially or on real
+//! OS threads, returning per-worker results plus the modeled parallel
+//! compute time (`max_ℓ t_ℓ` — the machines run concurrently).
+
+use std::time::Instant;
+
+/// Execution backend for the per-machine local steps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Cluster {
+    /// Deterministic serial execution; parallel wall-clock is *modeled*
+    /// as the max over per-worker compute times.
+    Serial,
+    /// Real `std::thread::scope` parallelism (one thread per machine).
+    Threads,
+}
+
+/// Outcome of one parallel section.
+#[derive(Debug)]
+pub struct ParallelRun<T> {
+    /// Per-worker results, in machine order.
+    pub results: Vec<T>,
+    /// Modeled parallel time: `max_ℓ` of per-worker elapsed seconds.
+    pub parallel_secs: f64,
+    /// Total CPU work: `Σ_ℓ` of per-worker elapsed seconds.
+    pub total_secs: f64,
+}
+
+impl Cluster {
+    /// Run `f(l, &mut states[l])` for every machine `l`.
+    pub fn run<S, T, F>(&self, states: &mut [S], f: F) -> ParallelRun<T>
+    where
+        S: Send,
+        T: Send,
+        F: Fn(usize, &mut S) -> T + Sync,
+    {
+        match self {
+            Cluster::Serial => {
+                let mut results = Vec::with_capacity(states.len());
+                let mut times = Vec::with_capacity(states.len());
+                for (l, s) in states.iter_mut().enumerate() {
+                    let t0 = Instant::now();
+                    results.push(f(l, s));
+                    times.push(t0.elapsed().as_secs_f64());
+                }
+                ParallelRun {
+                    results,
+                    parallel_secs: times.iter().cloned().fold(0.0, f64::max),
+                    total_secs: times.iter().sum(),
+                }
+            }
+            Cluster::Threads => {
+                let mut slots: Vec<Option<(T, f64)>> =
+                    (0..states.len()).map(|_| None).collect();
+                std::thread::scope(|scope| {
+                    for ((l, s), slot) in states.iter_mut().enumerate().zip(slots.iter_mut()) {
+                        let f = &f;
+                        scope.spawn(move || {
+                            let t0 = Instant::now();
+                            let r = f(l, s);
+                            *slot = Some((r, t0.elapsed().as_secs_f64()));
+                        });
+                    }
+                });
+                let mut results = Vec::with_capacity(slots.len());
+                let mut parallel_secs = 0.0f64;
+                let mut total_secs = 0.0f64;
+                for slot in slots {
+                    let (r, t) = slot.expect("worker thread panicked");
+                    results.push(r);
+                    parallel_secs = parallel_secs.max(t);
+                    total_secs += t;
+                }
+                ParallelRun {
+                    results,
+                    parallel_secs,
+                    total_secs,
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_and_threads_compute_same_results() {
+        let mut a = vec![1u64, 2, 3, 4];
+        let mut b = a.clone();
+        let f = |l: usize, s: &mut u64| {
+            *s += l as u64;
+            *s * 10
+        };
+        let ra = Cluster::Serial.run(&mut a, f);
+        let rb = Cluster::Threads.run(&mut b, f);
+        assert_eq!(ra.results, rb.results);
+        assert_eq!(a, b);
+        assert_eq!(ra.results, vec![10, 30, 50, 70]);
+    }
+
+    #[test]
+    fn parallel_time_is_max_total_is_sum() {
+        let mut s = vec![(); 3];
+        let r = Cluster::Serial.run(&mut s, |l, _| {
+            std::thread::sleep(std::time::Duration::from_millis(2 * (l as u64 + 1)));
+        });
+        assert!(r.parallel_secs >= 0.005 && r.parallel_secs < 0.1);
+        assert!(r.total_secs >= r.parallel_secs);
+    }
+
+    #[test]
+    fn threads_actually_overlap() {
+        let mut s = vec![(); 4];
+        let t0 = Instant::now();
+        let r = Cluster::Threads.run(&mut s, |_, _| {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        // 4×20 ms serially would be 80 ms; overlapped should be well under.
+        assert!(wall < 0.06, "threads did not overlap: {wall}s");
+        assert!(r.total_secs > 0.07);
+    }
+
+    #[test]
+    fn empty_states() {
+        let mut s: Vec<u8> = vec![];
+        let r = Cluster::Serial.run(&mut s, |_, _| 0u8);
+        assert!(r.results.is_empty());
+        assert_eq!(r.parallel_secs, 0.0);
+    }
+}

@@ -1,0 +1,94 @@
+//! Alpha-beta communication cost model.
+//!
+//! A communication round moving `b` bytes among `m` machines through a
+//! binary reduce+broadcast tree costs
+//!
+//! ```text
+//! T = 2·⌈log₂ m⌉·α  +  2·b·β
+//! ```
+//!
+//! with `α` the per-message latency and `β` the inverse bandwidth
+//! (seconds/byte). Defaults model the commodity-Ethernet private-cloud
+//! cluster of §10 (α = 100 µs, 1 GbE ⇒ β = 8 ns/byte), and the benches
+//! expose both knobs so Figures 9/11 ("Comm. Time" in green) can be
+//! regenerated under different fabrics.
+
+/// Latency/bandwidth communication model.
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// Per-message latency in seconds.
+    pub alpha: f64,
+    /// Inverse bandwidth in seconds per byte.
+    pub beta: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel {
+            alpha: 100e-6,
+            beta: 8e-9,
+        }
+    }
+}
+
+impl CostModel {
+    /// A zero-cost model (pure algorithmic comparisons).
+    pub fn free() -> Self {
+        CostModel {
+            alpha: 0.0,
+            beta: 0.0,
+        }
+    }
+
+    /// Modeled time of one allreduce of `elems` f64 values over `m`
+    /// machines.
+    pub fn allreduce_time(&self, m: usize, elems: usize) -> f64 {
+        if m <= 1 {
+            return 0.0;
+        }
+        let hops = (m as f64).log2().ceil();
+        2.0 * hops * self.alpha + 2.0 * (elems * 8) as f64 * self.beta
+    }
+
+    /// Modeled time of a leader broadcast of `elems` f64 values.
+    pub fn broadcast_time(&self, m: usize, elems: usize) -> f64 {
+        if m <= 1 {
+            return 0.0;
+        }
+        let hops = (m as f64).log2().ceil();
+        hops * self.alpha + (elems * 8) as f64 * self.beta
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_machine_is_free() {
+        let c = CostModel::default();
+        assert_eq!(c.allreduce_time(1, 1_000_000), 0.0);
+        assert_eq!(c.broadcast_time(1, 1_000_000), 0.0);
+    }
+
+    #[test]
+    fn grows_with_machines_and_size() {
+        let c = CostModel::default();
+        assert!(c.allreduce_time(16, 100) > c.allreduce_time(4, 100));
+        assert!(c.allreduce_time(4, 10_000) > c.allreduce_time(4, 100));
+    }
+
+    #[test]
+    fn latency_dominates_small_messages() {
+        let c = CostModel::default();
+        // 8-byte message at m=2: latency term 2·1·100µs ≫ bandwidth term.
+        let t = c.allreduce_time(2, 1);
+        assert!((t - (2.0 * 100e-6 + 2.0 * 8.0 * 8e-9)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn free_model_is_zero() {
+        let c = CostModel::free();
+        assert_eq!(c.allreduce_time(32, 1 << 20), 0.0);
+    }
+}

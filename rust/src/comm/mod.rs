@@ -1,0 +1,19 @@
+//! Simulated multi-machine substrate.
+//!
+//! The paper runs on an OpenMPI cluster with one process per machine
+//! (§10: "we use one processor to simulate one machine"). We go one level
+//! lighter: one *worker* per machine executed by a thread pool
+//! ([`cluster`]), an explicit [`allreduce`] implementation whose round
+//! structure matches an MPI reduce+broadcast tree, and an alpha-beta
+//! [`cost`] model that accounts communication time per round exactly the
+//! way the figures split compute vs. "Comm. Time". All algorithmic
+//! quantities (rounds, bytes moved, gap-vs-communications) are identical
+//! to a real deployment; only wall-clock is modeled, and both modeled and
+//! real wall-clock are recorded.
+
+pub mod allreduce;
+pub mod cluster;
+pub mod cost;
+
+pub use cluster::Cluster;
+pub use cost::CostModel;

@@ -1,0 +1,310 @@
+//! Experiment configuration.
+//!
+//! A small key=value configuration layer (no `serde`/`clap` offline):
+//! [`ExperimentConfig`] captures everything a paper experiment needs —
+//! dataset, loss, λ/μ grid point, machine count, sampling fraction,
+//! method — parsed from CLI `--key value` pairs or a `key = value` file,
+//! with validation and defaults matching §10.
+
+use crate::comm::Cluster;
+use crate::loss::LossKind;
+use crate::solver::SolverKind;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Optimization method to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// Plain DADM (≡ CoCoA+ for h = 0, balanced partitions — §6).
+    Dadm,
+    /// Accelerated DADM (Algorithm 3).
+    AccDadm,
+    /// OWL-QN batch baseline.
+    Owlqn,
+}
+
+impl Method {
+    /// Parse from string.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "dadm" | "cocoa+" | "cocoa" => Method::Dadm,
+            "acc-dadm" | "acc_dadm" | "acc" => Method::AccDadm,
+            "owlqn" | "owl-qn" => Method::Owlqn,
+            other => bail!("unknown method `{other}`"),
+        })
+    }
+
+    /// Canonical name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::Dadm => "dadm",
+            Method::AccDadm => "acc-dadm",
+            Method::Owlqn => "owlqn",
+        }
+    }
+}
+
+/// One experiment's full configuration (defaults mirror §10).
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Dataset name: one of the synthetic analogues
+    /// (`synth-covtype|synth-rcv1|synth-higgs|synth-kdd2010|tiny`) or a
+    /// path to a LIBSVM file.
+    pub dataset: String,
+    /// Scale factor for synthetic generation (fraction of the paper n).
+    pub scale: f64,
+    /// Method.
+    pub method: Method,
+    /// Loss.
+    pub loss: LossKind,
+    /// Local solver.
+    pub solver: SolverKind,
+    /// Regularization λ.
+    pub lambda: f64,
+    /// L1 weight μ.
+    pub mu: f64,
+    /// Machines m.
+    pub machines: usize,
+    /// Sampling fraction sp.
+    pub sp: f64,
+    /// Target normalized duality gap.
+    pub eps: f64,
+    /// Maximum passes over the data (the paper caps at 100).
+    pub max_passes: f64,
+    /// Cluster backend.
+    pub cluster: Cluster,
+    /// RNG seed.
+    pub seed: u64,
+    /// Momentum ν = 0 (paper's practical choice) vs theory.
+    pub nu_theory: bool,
+    /// Comm model latency α (seconds).
+    pub comm_alpha: f64,
+    /// Comm model inverse bandwidth β (seconds/byte).
+    pub comm_beta: f64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            dataset: "synth-covtype".into(),
+            scale: 0.01,
+            method: Method::AccDadm,
+            loss: LossKind::SmoothHinge,
+            solver: SolverKind::ProxSdca,
+            lambda: 1e-6,
+            mu: 1e-5,
+            machines: 8,
+            sp: 0.2,
+            eps: 1e-3,
+            max_passes: 100.0,
+            cluster: Cluster::Serial,
+            seed: 42,
+            nu_theory: false,
+            comm_alpha: 100e-6,
+            comm_beta: 8e-9,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Parse from `--key value` CLI arguments.
+    pub fn from_args(args: &[String]) -> Result<Self> {
+        let mut map = BTreeMap::new();
+        let mut it = args.iter();
+        while let Some(k) = it.next() {
+            let key = k
+                .strip_prefix("--")
+                .with_context(|| format!("expected `--key`, got `{k}`"))?;
+            let v = it
+                .next()
+                .with_context(|| format!("missing value for `--{key}`"))?;
+            map.insert(key.to_string(), v.clone());
+        }
+        Self::from_map(map)
+    }
+
+    /// Parse from a `key = value` config file body (`#` comments allowed).
+    pub fn from_file_body(body: &str) -> Result<Self> {
+        let mut map = BTreeMap::new();
+        for (lineno, line) in body.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected `key = value`", lineno + 1))?;
+            map.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Self::from_map(map)
+    }
+
+    fn from_map(mut map: BTreeMap<String, String>) -> Result<Self> {
+        let mut cfg = ExperimentConfig::default();
+        let mut take = |k: &str| map.remove(k);
+        if let Some(v) = take("dataset") {
+            cfg.dataset = v;
+        }
+        if let Some(v) = take("scale") {
+            cfg.scale = v.parse().context("scale")?;
+        }
+        if let Some(v) = take("method") {
+            cfg.method = Method::parse(&v)?;
+        }
+        if let Some(v) = take("loss") {
+            cfg.loss = LossKind::parse(&v)?;
+        }
+        if let Some(v) = take("solver") {
+            cfg.solver = SolverKind::parse(&v)?;
+        }
+        if let Some(v) = take("lambda") {
+            cfg.lambda = v.parse().context("lambda")?;
+        }
+        if let Some(v) = take("mu") {
+            cfg.mu = v.parse().context("mu")?;
+        }
+        if let Some(v) = take("machines") {
+            cfg.machines = v.parse().context("machines")?;
+        }
+        if let Some(v) = take("sp") {
+            cfg.sp = v.parse().context("sp")?;
+        }
+        if let Some(v) = take("eps") {
+            cfg.eps = v.parse().context("eps")?;
+        }
+        if let Some(v) = take("max-passes") {
+            cfg.max_passes = v.parse().context("max-passes")?;
+        }
+        if let Some(v) = take("cluster") {
+            cfg.cluster = match v.as_str() {
+                "serial" => Cluster::Serial,
+                "threads" => Cluster::Threads,
+                other => bail!("unknown cluster backend `{other}`"),
+            };
+        }
+        if let Some(v) = take("seed") {
+            cfg.seed = v.parse().context("seed")?;
+        }
+        if let Some(v) = take("nu") {
+            cfg.nu_theory = match v.as_str() {
+                "theory" => true,
+                "zero" | "0" => false,
+                other => bail!("nu must be `theory` or `zero`, got `{other}`"),
+            };
+        }
+        if let Some(v) = take("comm-alpha") {
+            cfg.comm_alpha = v.parse().context("comm-alpha")?;
+        }
+        if let Some(v) = take("comm-beta") {
+            cfg.comm_beta = v.parse().context("comm-beta")?;
+        }
+        if let Some(k) = map.keys().next() {
+            bail!("unknown config key `{k}`");
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Validate ranges.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.lambda > 0.0, "lambda must be > 0");
+        anyhow::ensure!(self.mu >= 0.0, "mu must be ≥ 0");
+        anyhow::ensure!(self.machines >= 1, "machines must be ≥ 1");
+        anyhow::ensure!(
+            self.sp > 0.0 && self.sp <= 1.0,
+            "sp must be in (0, 1], got {}",
+            self.sp
+        );
+        anyhow::ensure!(self.eps > 0.0, "eps must be > 0");
+        anyhow::ensure!(self.scale > 0.0, "scale must be > 0");
+        Ok(())
+    }
+
+    /// Max communication rounds implied by the pass cap: `passes/sp`.
+    pub fn max_rounds(&self) -> usize {
+        (self.max_passes / self.sp).ceil() as usize
+    }
+
+    /// Materialize the dataset (synthetic analogue or LIBSVM path).
+    pub fn load_dataset(&self) -> Result<crate::data::Dataset> {
+        use crate::data::synthetic::*;
+        Ok(match self.dataset.as_str() {
+            "synth-covtype" => SyntheticSpec::covtype(self.scale).generate(),
+            "synth-rcv1" => SyntheticSpec::rcv1(self.scale).generate(),
+            "synth-higgs" => SyntheticSpec::higgs(self.scale).generate(),
+            "synth-kdd2010" => SyntheticSpec::kdd2010(self.scale).generate(),
+            "tiny" => tiny_classification(2000, 32, self.seed),
+            path => crate::data::libsvm::load(std::path::Path::new(path))?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_protocol() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.mu, 1e-5);
+        assert_eq!(c.machines, 8);
+        assert_eq!(c.max_passes, 100.0);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn parses_cli_args() {
+        let args: Vec<String> = [
+            "--method", "dadm", "--lambda", "1e-7", "--machines", "20", "--sp", "0.8",
+            "--loss", "logistic", "--dataset", "synth-higgs",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let c = ExperimentConfig::from_args(&args).unwrap();
+        assert_eq!(c.method, Method::Dadm);
+        assert_eq!(c.lambda, 1e-7);
+        assert_eq!(c.machines, 20);
+        assert_eq!(c.sp, 0.8);
+        assert_eq!(c.loss, LossKind::Logistic);
+    }
+
+    #[test]
+    fn parses_file_body() {
+        let body = "# experiment\nmethod = acc-dadm\nlambda = 1e-8\nsp = 0.05\n";
+        let c = ExperimentConfig::from_file_body(body).unwrap();
+        assert_eq!(c.method, Method::AccDadm);
+        assert_eq!(c.lambda, 1e-8);
+        assert_eq!(c.sp, 0.05);
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_bad_values() {
+        assert!(ExperimentConfig::from_file_body("bogus = 1\n").is_err());
+        assert!(ExperimentConfig::from_file_body("sp = 1.5\n").is_err());
+        assert!(ExperimentConfig::from_file_body("lambda = -1\n").is_err());
+        let args: Vec<String> = vec!["--sp".into()];
+        assert!(ExperimentConfig::from_args(&args).is_err());
+    }
+
+    #[test]
+    fn max_rounds_from_pass_cap() {
+        let mut c = ExperimentConfig::default();
+        c.sp = 0.05;
+        c.max_passes = 100.0;
+        assert_eq!(c.max_rounds(), 2000);
+    }
+
+    #[test]
+    fn loads_synthetic_datasets() {
+        let mut c = ExperimentConfig::default();
+        c.scale = 2e-4;
+        for name in ["synth-covtype", "synth-higgs"] {
+            c.dataset = name.into();
+            let d = c.load_dataset().unwrap();
+            assert!(d.n() > 50);
+        }
+        c.dataset = "tiny".into();
+        assert_eq!(c.load_dataset().unwrap().n(), 2000);
+    }
+}

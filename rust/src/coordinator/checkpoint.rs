@@ -1,0 +1,175 @@
+//! Solver-state checkpointing.
+//!
+//! Long distributed solves (the paper's kdd2010 runs take hours on a real
+//! cluster) need resumable state. The dual state of Algorithm 2 is fully
+//! characterized by `(α, v)` — everything else (`ṽ`, `w`, `β`) is
+//! recomputed by one Proposition-4/5 global sync — so a checkpoint is
+//! small: one f64 per example plus one per feature, stored in a
+//! versioned, self-describing text format (no serde offline).
+//!
+//! Format:
+//! ```text
+//! dadm-checkpoint v1
+//! lambda <float>
+//! machines <m>
+//! v <d> <float>*d
+//! alpha <l> <n_l> <float>*n_l        (one line per machine)
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, Write};
+
+/// A dual-state snapshot: global `v` plus per-machine `α_(ℓ)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    /// Effective λ the state was produced under (λ̃ during Acc-DADM).
+    pub lambda: f64,
+    /// Global `v = Σ X_i α_i / (λn)`.
+    pub v: Vec<f64>,
+    /// Per-machine local duals, in machine order.
+    pub alpha: Vec<Vec<f64>>,
+}
+
+impl Checkpoint {
+    /// Serialize to a writer.
+    pub fn save<W: Write>(&self, mut w: W) -> Result<()> {
+        writeln!(w, "dadm-checkpoint v1")?;
+        writeln!(w, "lambda {:e}", self.lambda)?;
+        writeln!(w, "machines {}", self.alpha.len())?;
+        write!(w, "v {}", self.v.len())?;
+        for x in &self.v {
+            write!(w, " {x:e}")?;
+        }
+        writeln!(w)?;
+        for (l, a) in self.alpha.iter().enumerate() {
+            write!(w, "alpha {l} {}", a.len())?;
+            for x in a {
+                write!(w, " {x:e}")?;
+            }
+            writeln!(w)?;
+        }
+        Ok(())
+    }
+
+    /// Parse from a reader.
+    pub fn load<R: BufRead>(r: R) -> Result<Self> {
+        let mut lines = r.lines();
+        let header = lines.next().context("empty checkpoint")??;
+        if header.trim() != "dadm-checkpoint v1" {
+            bail!("unknown checkpoint header `{header}`");
+        }
+        let mut lambda = None;
+        let mut machines = None;
+        let mut v: Option<Vec<f64>> = None;
+        let mut alpha: Vec<(usize, Vec<f64>)> = vec![];
+        for line in lines {
+            let line = line?;
+            let mut toks = line.split_ascii_whitespace();
+            match toks.next() {
+                Some("lambda") => {
+                    lambda = Some(toks.next().context("lambda value")?.parse()?);
+                }
+                Some("machines") => {
+                    machines = Some(toks.next().context("machine count")?.parse::<usize>()?);
+                }
+                Some("v") => {
+                    let d: usize = toks.next().context("v length")?.parse()?;
+                    let vals: Vec<f64> = toks
+                        .map(|t| t.parse::<f64>().context("v entry"))
+                        .collect::<Result<_>>()?;
+                    anyhow::ensure!(vals.len() == d, "v length mismatch");
+                    v = Some(vals);
+                }
+                Some("alpha") => {
+                    let l: usize = toks.next().context("machine id")?.parse()?;
+                    let n: usize = toks.next().context("alpha length")?.parse()?;
+                    let vals: Vec<f64> = toks
+                        .map(|t| t.parse::<f64>().context("alpha entry"))
+                        .collect::<Result<_>>()?;
+                    anyhow::ensure!(vals.len() == n, "alpha[{l}] length mismatch");
+                    alpha.push((l, vals));
+                }
+                Some(other) => bail!("unknown checkpoint record `{other}`"),
+                None => continue,
+            }
+        }
+        let machines = machines.context("missing machines record")?;
+        anyhow::ensure!(
+            alpha.len() == machines,
+            "expected {machines} alpha records, found {}",
+            alpha.len()
+        );
+        alpha.sort_by_key(|(l, _)| *l);
+        for (want, (got, _)) in alpha.iter().enumerate() {
+            anyhow::ensure!(*got == want, "missing alpha record for machine {want}");
+        }
+        Ok(Checkpoint {
+            lambda: lambda.context("missing lambda record")?,
+            v: v.context("missing v record")?,
+            alpha: alpha.into_iter().map(|(_, a)| a).collect(),
+        })
+    }
+
+    /// Save to a file path.
+    pub fn save_file(&self, path: &std::path::Path) -> Result<()> {
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        self.save(std::io::BufWriter::new(f))
+    }
+
+    /// Load from a file path.
+    pub fn load_file(path: &std::path::Path) -> Result<Self> {
+        let f = std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?;
+        Self::load(std::io::BufReader::new(f))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            lambda: 1e-6,
+            v: vec![0.25, -1.5e-8, 0.0],
+            alpha: vec![vec![1.0, -0.5], vec![0.0, 0.125, 3.0]],
+        }
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let ck = sample();
+        let mut buf = Vec::new();
+        ck.save(&mut buf).unwrap();
+        let back = Checkpoint::load(std::io::Cursor::new(buf)).unwrap();
+        assert_eq!(ck, back); // bit-exact through `{:e}` printing
+    }
+
+    #[test]
+    fn rejects_bad_header_and_truncation() {
+        assert!(Checkpoint::load(std::io::Cursor::new("nope\n")).is_err());
+        let mut buf = Vec::new();
+        sample().save(&mut buf).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        let truncated: String = text.lines().take(3).collect::<Vec<_>>().join("\n");
+        assert!(Checkpoint::load(std::io::Cursor::new(truncated)).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_machine_record() {
+        let text = "dadm-checkpoint v1\nlambda 1e-6\nmachines 2\nv 1 0.5\nalpha 0 1 1.0\n";
+        let err = Checkpoint::load(std::io::Cursor::new(text)).unwrap_err();
+        assert!(format!("{err:#}").contains("alpha records"));
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("dadm-ck-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("state.ck");
+        sample().save_file(&path).unwrap();
+        assert_eq!(Checkpoint::load_file(&path).unwrap(), sample());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,832 @@
+//! DADM — Algorithm 2 of the paper.
+//!
+//! One iteration = a **local step** (every machine approximately
+//! maximizes its local dual `D̃_ℓ(α_(ℓ)|β_ℓ)` over a random mini-batch)
+//! followed by a **global step** (one allreduce of the weighted `Δv_ℓ`,
+//! then the closed-form β-maximization of Propositions 4/5, then a
+//! broadcast of `Δṽ`). The duality gap `P(w) − D(α, β)` is computed
+//! exactly and drives the stopping condition.
+//!
+//! Global step in conjugate coordinates (see DESIGN.md §6): with
+//! `v ← v + Σ_ℓ (n_ℓ/n)Δv_ℓ`,
+//!
+//! ```text
+//! z  = ∇g*(v)                (elastic-net soft-threshold)
+//! w  = prox_{h/(λn)}(z)      (identity when h = 0)
+//! ṽ  = v − (z − w)           (so ∇g*(ṽ) = w and β is Prop-5 optimal)
+//! ρ  = λn·(z − w)            (= Σ_ℓ β_ℓ = ∇h(w))
+//! ```
+//!
+//! With `h = 0` and balanced partitions this procedure is exactly CoCoA+
+//! (§6), which is how the CoCoA+ baseline is run in the benches.
+
+use crate::comm::allreduce::tree_allreduce;
+use crate::comm::{Cluster, CostModel};
+use crate::data::{Dataset, Partition};
+use crate::loss::Loss;
+use crate::metrics::{RoundRecord, Trace};
+use crate::reg::{ExtraReg, Regularizer};
+use crate::solver::{LocalSolver, WorkerState};
+use crate::utils::Rng;
+use std::time::Instant;
+
+/// DADM driver options.
+#[derive(Clone, Debug)]
+pub struct DadmOptions {
+    /// Mini-batch sampling fraction `sp = M_ℓ/n_ℓ` (§10).
+    pub sp: f64,
+    /// Execution backend for local steps.
+    pub cluster: Cluster,
+    /// Communication cost model.
+    pub cost: CostModel,
+    /// Seed for partition-independent mini-batch draws.
+    pub seed: u64,
+    /// Evaluate the duality gap every `gap_every` rounds (1 = every
+    /// round). Gap evaluation is instrumentation: excluded from modeled
+    /// compute/comm time.
+    pub gap_every: usize,
+    /// Charge communication for *sparse* Δv/Δṽ messages (index+value
+    /// pairs, 12 B/nnz) instead of dense vectors — the paper's "it may be
+    /// beneficial to pass Δṽ instead, especially when Δṽ is sparse but ṽ
+    /// is dense" (§6). Algorithmically identical; only the cost model
+    /// changes.
+    pub sparse_comm: bool,
+}
+
+impl Default for DadmOptions {
+    fn default() -> Self {
+        DadmOptions {
+            sp: 0.2,
+            cluster: Cluster::Serial,
+            cost: CostModel::default(),
+            seed: 0xDAD_A,
+            gap_every: 1,
+            sparse_comm: false,
+        }
+    }
+}
+
+/// Result of a [`Dadm::solve`] run.
+#[derive(Clone, Debug)]
+pub struct SolveReport {
+    /// Final primal iterate.
+    pub w: Vec<f64>,
+    /// Final primal objective.
+    pub primal: f64,
+    /// Final dual objective.
+    pub dual: f64,
+    /// Communication rounds used.
+    pub rounds: usize,
+    /// Passes over the data.
+    pub passes: f64,
+    /// Whether the gap target was reached.
+    pub converged: bool,
+    /// Full per-round trace.
+    pub trace: Trace,
+}
+
+impl SolveReport {
+    /// Final normalized duality gap `(P − D)/n`.
+    pub fn normalized_gap(&self) -> f64 {
+        (self.primal - self.dual) / self.trace.n as f64
+    }
+}
+
+/// One simulated machine: shard state + its private mini-batch RNG.
+#[derive(Clone, Debug)]
+pub struct Machine {
+    /// Shard + dual state.
+    pub state: WorkerState,
+    /// Private RNG stream (mirrors the per-process seed of §10).
+    pub rng: Rng,
+    /// Mini-batch size `M_ℓ`.
+    pub batch: usize,
+}
+
+/// The DADM coordinator (Algorithm 2), generic over loss `L`, strongly
+/// convex regularizer `R` (= `g`), extra regularizer `H` (= `h`), and the
+/// local solver `S`.
+#[derive(Debug)]
+pub struct Dadm<L, R, H, S> {
+    /// Loss `φ`.
+    pub loss: L,
+    /// Regularizer `g` (swapped per stage by Acc-DADM).
+    pub reg: R,
+    /// Extra regularizer `h`.
+    pub h: H,
+    /// Effective regularization weight λ (λ̃ during Acc-DADM stages).
+    pub lambda: f64,
+    /// Local solver.
+    pub solver: S,
+    machines: Vec<Machine>,
+    weights: Vec<f64>, // n_ℓ/n
+    v: Vec<f64>,       // global v = Σ X_i α_i / (λn)
+    v_tilde: Vec<f64>, // global ṽ (Eq. 15)
+    w: Vec<f64>,       // global primal iterate ∇g*(ṽ)
+    rho: Vec<f64>,     // Σ_ℓ β_ℓ = ∇h(w)
+    n: usize,
+    d: usize,
+    opts: DadmOptions,
+    // cumulative accounting
+    rounds: usize,
+    passes: f64,
+    compute_secs: f64,
+    comm_secs: f64,
+    wall_start: Instant,
+}
+
+impl<L, R, H, S> Dadm<L, R, H, S>
+where
+    L: Loss,
+    R: Regularizer,
+    H: ExtraReg,
+    S: LocalSolver,
+{
+    /// Build a DADM instance: shard the data per `part`, zero-initialize
+    /// all dual state.
+    pub fn new(
+        data: &Dataset,
+        part: &Partition,
+        loss: L,
+        reg: R,
+        h: H,
+        lambda: f64,
+        solver: S,
+        opts: DadmOptions,
+    ) -> Self {
+        assert!(lambda > 0.0, "λ must be positive");
+        assert!(
+            opts.sp > 0.0 && opts.sp <= 1.0,
+            "sampling fraction must be in (0, 1]"
+        );
+        let m = part.machines();
+        let mut seed_rng = Rng::new(opts.seed);
+        let machines: Vec<Machine> = (0..m)
+            .map(|l| {
+                let state = WorkerState::from_partition(data, part, l);
+                let batch = ((opts.sp * state.n_l() as f64).ceil() as usize)
+                    .clamp(1, state.n_l());
+                Machine {
+                    state,
+                    rng: seed_rng.fork(l as u64),
+                    batch,
+                }
+            })
+            .collect();
+        let n = data.n();
+        let d = data.dim();
+        let weights = machines
+            .iter()
+            .map(|mch| mch.state.n_l() as f64 / n as f64)
+            .collect();
+        Dadm {
+            loss,
+            reg,
+            h,
+            lambda,
+            solver,
+            machines,
+            weights,
+            v: vec![0.0; d],
+            v_tilde: vec![0.0; d],
+            w: vec![0.0; d],
+            rho: vec![0.0; d],
+            n,
+            d,
+            opts,
+            rounds: 0,
+            passes: 0.0,
+            compute_secs: 0.0,
+            comm_secs: 0.0,
+            wall_start: Instant::now(),
+        }
+    }
+
+    /// Number of machines `m`.
+    pub fn machines(&self) -> usize {
+        self.machines.len()
+    }
+
+    /// Problem size `n`.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Current primal iterate `w`.
+    pub fn w(&self) -> &[f64] {
+        &self.w
+    }
+
+    /// Current global `v` (dual combination / λn).
+    pub fn v(&self) -> &[f64] {
+        &self.v
+    }
+
+    /// Immutable view of the machines (tests / invariant checks).
+    pub fn machine_states(&self) -> impl Iterator<Item = &WorkerState> {
+        self.machines.iter().map(|m| &m.state)
+    }
+
+    /// Communication rounds so far.
+    pub fn rounds(&self) -> usize {
+        self.rounds
+    }
+
+    /// Passes over the data so far.
+    pub fn passes(&self) -> f64 {
+        self.passes
+    }
+
+    /// Cumulative (compute, comm) modeled seconds.
+    pub fn modeled_secs(&self) -> (f64, f64) {
+        (self.compute_secs, self.comm_secs)
+    }
+
+    /// The Proposition-4/5 global synchronization, recomputing
+    /// `(z, w, ṽ, ρ)` from the current `v`. Called after every aggregate
+    /// and by [`Dadm::resync`].
+    fn global_sync(&mut self) {
+        let z = self.reg.grad_conj(&self.v);
+        let w = self.h.prox(&z, 1.0 / (self.lambda * self.n as f64));
+        for j in 0..self.d {
+            self.rho[j] = self.lambda * self.n as f64 * (z[j] - w[j]);
+            self.v_tilde[j] = self.v[j] - (z[j] - w[j]);
+        }
+        self.w = w;
+    }
+
+    /// Broadcast the current global `ṽ` to every machine (sets, not
+    /// increments — used at init and Acc-DADM stage boundaries).
+    pub fn resync(&mut self) {
+        self.global_sync();
+        let (v_tilde, reg) = (&self.v_tilde, &self.reg);
+        for m in &mut self.machines {
+            m.state.set_v_tilde(v_tilde, reg);
+        }
+    }
+
+    /// One DADM iteration (Algorithm 2): local step on every machine,
+    /// aggregate, global step, broadcast. Returns the modeled
+    /// (compute, comm) seconds of this round.
+    pub fn round(&mut self) -> (f64, f64) {
+        let loss = &self.loss;
+        let reg = &self.reg;
+        let solver = &self.solver;
+        let lambda = self.lambda;
+
+        // --- Local step (parallel across machines) ---
+        let run = self.opts.cluster.run(&mut self.machines, |_, m| {
+            let n_l = m.state.n_l();
+            let batch_idx = m.rng.sample_indices(n_l, m.batch);
+            solver.local_step(
+                &mut m.state,
+                &batch_idx,
+                loss,
+                reg,
+                lambda * n_l as f64,
+                &mut m.rng,
+            )
+        });
+
+        // --- Global step ---
+        // v ← v + Σ (n_ℓ/n)·Δv_ℓ  (one allreduce)
+        let delta_v = tree_allreduce(&run.results, &self.weights);
+        for (vj, dvj) in self.v.iter_mut().zip(&delta_v) {
+            *vj += dvj;
+        }
+        let v_tilde_old = self.v_tilde.clone();
+        self.global_sync();
+        // Δṽ broadcast; workers update incrementally (Algorithm 2).
+        let delta_v_tilde: Vec<f64> = self
+            .v_tilde
+            .iter()
+            .zip(&v_tilde_old)
+            .map(|(a, b)| a - b)
+            .collect();
+        let reg = &self.reg;
+        for m in &mut self.machines {
+            m.state.apply_global(&delta_v_tilde, reg);
+        }
+
+        // --- Accounting ---
+        let m = self.machines.len();
+        let comm = if self.opts.sparse_comm {
+            // Sparse encoding: (u32 index, f64 value) = 12 B per stored
+            // entry vs 8 B per dense element ⇒ 1.5 "dense-equivalent"
+            // elements per nnz, capped at the dense size. The reduce leg
+            // is bounded by the largest worker message, the broadcast leg
+            // by Δṽ's support.
+            let to_elems = |nnz: usize| ((nnz * 3).div_ceil(2)).min(self.d);
+            let reduce_nnz = run
+                .results
+                .iter()
+                .map(|dv| dv.iter().filter(|x| **x != 0.0).count())
+                .max()
+                .unwrap_or(0);
+            let bcast_nnz = delta_v_tilde.iter().filter(|x| **x != 0.0).count();
+            self.opts
+                .cost
+                .allreduce_time(m, to_elems(reduce_nnz).max(to_elems(bcast_nnz)))
+        } else {
+            self.opts.cost.allreduce_time(m, self.d)
+        };
+        self.compute_secs += run.parallel_secs;
+        self.comm_secs += comm;
+        self.rounds += 1;
+        self.passes += self.opts.sp;
+        (run.parallel_secs, comm)
+    }
+
+    /// Distributed loss sum `Σ_i φ_i(x_iᵀ w)` at an arbitrary `w`
+    /// (one parallel pass; also used by Acc-DADM's original-problem gap).
+    pub fn loss_sum_at(&mut self, w: &[f64]) -> f64 {
+        let loss = &self.loss;
+        let run = self
+            .opts
+            .cluster
+            .run(&mut self.machines, |_, m| m.state.primal_loss_sum(loss, w));
+        run.results.iter().sum()
+    }
+
+    /// Distributed conjugate sum `Σ_i −φ_i*(−α_i)` at the current duals.
+    pub fn conj_sum(&mut self) -> f64 {
+        let loss = &self.loss;
+        let run = self
+            .opts
+            .cluster
+            .run(&mut self.machines, |_, m| m.state.dual_conj_sum(loss));
+        run.results.iter().sum()
+    }
+
+    /// Exact primal objective `P(w) = Σφ_i(x_iᵀw) + λn·g(w) + h(w)` at the
+    /// current iterate.
+    pub fn primal(&mut self) -> f64 {
+        let w = self.w.clone();
+        let loss_sum = self.loss_sum_at(&w);
+        loss_sum + self.lambda * self.n as f64 * self.reg.value(&self.w) + self.h.value(&self.w)
+    }
+
+    /// Exact dual objective
+    /// `D(α, β) = Σ−φ*(−α_i) − λn·g*(ṽ) − h*(ρ)` at the Prop-5-optimal β.
+    pub fn dual(&mut self) -> f64 {
+        let conj_sum = self.conj_sum();
+        conj_sum - self.lambda * self.n as f64 * self.reg.conj(&self.v_tilde)
+            - self.h.conj(&self.rho)
+    }
+
+    /// Current duality gap `P − D` (one full pass; instrumentation).
+    pub fn gap(&mut self) -> f64 {
+        self.primal() - self.dual()
+    }
+
+    /// Run until the **normalized** duality gap `(P−D)/n ≤ eps` or
+    /// `max_rounds` is exhausted.
+    pub fn solve(&mut self, eps: f64, max_rounds: usize) -> SolveReport {
+        self.wall_start = Instant::now();
+        let mut trace = Trace::new(self.n);
+        self.resync();
+        let record = |s: &mut Self, trace: &mut Trace| {
+            let primal = s.primal();
+            let dual = s.dual();
+            trace.push(RoundRecord {
+                round: s.rounds,
+                passes: s.passes,
+                primal,
+                dual,
+                compute_secs: s.compute_secs,
+                comm_secs: s.comm_secs,
+                wall_secs: s.wall_start.elapsed().as_secs_f64(),
+            });
+            primal - dual
+        };
+        let mut gap = record(self, &mut trace);
+        let mut converged = gap / self.n as f64 <= eps;
+        let mut rounds_done = 0usize;
+        while !converged && rounds_done < max_rounds {
+            self.round();
+            rounds_done += 1;
+            if rounds_done % self.opts.gap_every == 0 || rounds_done == max_rounds {
+                gap = record(self, &mut trace);
+                converged = gap / self.n as f64 <= eps;
+            }
+        }
+        SolveReport {
+            w: self.w.clone(),
+            primal: trace.last().map(|r| r.primal).unwrap_or(f64::NAN),
+            dual: trace.last().map(|r| r.dual).unwrap_or(f64::NAN),
+            rounds: self.rounds,
+            passes: self.passes,
+            converged,
+            trace,
+        }
+    }
+
+    /// Replace the regularizer (Acc-DADM stage transition) keeping all
+    /// dual state, then re-synchronize `ṽ`, `w` in the new geometry.
+    pub fn set_reg(&mut self, reg: R) {
+        self.reg = reg;
+        self.resync();
+    }
+
+    /// Decompose into (machines, v) for state hand-off (Acc-DADM reuses
+    /// the same instance, so this is only for tests / inspection).
+    pub fn dual_state(&self) -> (&[f64], Vec<&[f64]>) {
+        (
+            &self.v,
+            self.machines.iter().map(|m| m.state.alpha.as_slice()).collect(),
+        )
+    }
+
+    /// Snapshot the dual state (see [`super::Checkpoint`]): `(λ, v, α)`
+    /// fully determine the solve; everything else is one global sync.
+    pub fn checkpoint(&self) -> super::Checkpoint {
+        super::Checkpoint {
+            lambda: self.lambda,
+            v: self.v.clone(),
+            alpha: self
+                .machines
+                .iter()
+                .map(|m| m.state.alpha.clone())
+                .collect(),
+        }
+    }
+
+    /// Restore a snapshot taken on an identically-configured instance
+    /// (same dataset, partition, λ) and re-synchronize.
+    pub fn restore(&mut self, ck: &super::Checkpoint) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            (ck.lambda - self.lambda).abs() <= 1e-15 * self.lambda.abs(),
+            "checkpoint λ = {} does not match instance λ = {}",
+            ck.lambda,
+            self.lambda
+        );
+        anyhow::ensure!(ck.v.len() == self.d, "dimension mismatch");
+        anyhow::ensure!(
+            ck.alpha.len() == self.machines.len(),
+            "machine count mismatch"
+        );
+        for (m, a) in self.machines.iter_mut().zip(&ck.alpha) {
+            anyhow::ensure!(
+                a.len() == m.state.n_l(),
+                "shard size mismatch (same partition seed required)"
+            );
+            m.state.alpha.copy_from_slice(a);
+        }
+        self.v.copy_from_slice(&ck.v);
+        self.resync();
+        anyhow::Context::context(self.check_v_invariant(), "restored state is inconsistent")?;
+        Ok(())
+    }
+
+    /// Validate the cross-machine bookkeeping invariant
+    /// `v == Σ_ℓ (n_ℓ/n) · X_ℓᵀα_ℓ/(λ n_ℓ)` (tests only; full recompute).
+    pub fn check_v_invariant(&self) -> anyhow::Result<()> {
+        let mut want = vec![0.0; self.d];
+        for m in &self.machines {
+            let raw = m.state.raw_dual_combination();
+            for (wj, rj) in want.iter_mut().zip(&raw) {
+                *wj += rj / (self.lambda * self.n as f64);
+            }
+        }
+        for (j, (got, want)) in self.v.iter().zip(&want).enumerate() {
+            anyhow::ensure!(
+                (got - want).abs() < 1e-8 * (1.0 + want.abs()),
+                "v[{j}] drifted: {got} vs recomputed {want}"
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{tiny_classification, tiny_regression};
+    use crate::loss::{Logistic, SmoothHinge, Squared};
+    use crate::reg::{ElasticNet, Zero};
+    use crate::solver::{ProxSdca, TheoremStep};
+
+    fn opts() -> DadmOptions {
+        DadmOptions {
+            cost: CostModel::free(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn gap_is_nonnegative_and_decreases() {
+        let data = tiny_classification(200, 8, 1);
+        let part = Partition::balanced(200, 4, 1);
+        let mut dadm = Dadm::new(
+            &data,
+            &part,
+            SmoothHinge::default(),
+            ElasticNet::new(0.0),
+            Zero,
+            1e-2,
+            ProxSdca,
+            opts(),
+        );
+        dadm.resync();
+        let gap0 = dadm.gap();
+        assert!(gap0 >= -1e-9, "initial gap negative: {gap0}");
+        // The dual objective is monotone non-decreasing (each local step
+        // improves the local dual, Prop-5 β-maximization improves D); the
+        // primal — and hence the gap — may wiggle between rounds but must
+        // trend down.
+        let mut prev_dual = dadm.dual();
+        for _ in 0..15 {
+            dadm.round();
+            let gap = dadm.gap();
+            assert!(gap >= -1e-9, "gap negative: {gap}");
+            let dual = dadm.dual();
+            assert!(
+                dual >= prev_dual - 1e-8,
+                "dual decreased: {prev_dual} -> {dual}"
+            );
+            prev_dual = dual;
+        }
+        let gap_end = dadm.gap();
+        assert!(gap_end < 0.5 * gap0, "no overall progress: {gap0} -> {gap_end}");
+        dadm.check_v_invariant().unwrap();
+    }
+
+    #[test]
+    fn converges_to_target() {
+        let data = tiny_classification(150, 6, 2);
+        let part = Partition::balanced(150, 3, 2);
+        let mut dadm = Dadm::new(
+            &data,
+            &part,
+            SmoothHinge::default(),
+            ElasticNet::new(0.1),
+            Zero,
+            1e-2,
+            ProxSdca,
+            DadmOptions { sp: 1.0, ..opts() },
+        );
+        let report = dadm.solve(1e-6, 300);
+        assert!(report.converged, "gap = {}", report.normalized_gap());
+        assert!(report.normalized_gap() <= 1e-6);
+        // Trace rounds increase and the dual ascends monotonically.
+        assert!(report.trace.rounds.len() >= 2);
+        for pair in report.trace.rounds.windows(2) {
+            assert!(pair[1].round > pair[0].round);
+            assert!(pair[1].dual >= pair[0].dual - 1e-8);
+        }
+    }
+
+    #[test]
+    fn single_machine_equals_multi_machine_start() {
+        // After the first global step from a zero start with sp = 1, the
+        // m-machine primal iterate must be reproducible from the dual
+        // combination regardless of m (the β decoupling at work).
+        let data = tiny_classification(120, 5, 3);
+        for m in [1usize, 2, 4] {
+            let part = Partition::balanced(120, m, 3);
+            let mut dadm = Dadm::new(
+                &data,
+                &part,
+                SmoothHinge::default(),
+                ElasticNet::new(0.0),
+                Zero,
+                1e-2,
+                TheoremStep::default(),
+                DadmOptions { sp: 1.0, ..opts() },
+            );
+            dadm.resync();
+            dadm.round();
+            dadm.check_v_invariant().unwrap();
+            // w == ∇g*(ṽ) == ṽ for τ = 0 and h = 0, and ṽ == v.
+            assert_eq!(dadm.w(), &dadm.v_tilde[..]);
+        }
+    }
+
+    #[test]
+    fn logistic_converges() {
+        let data = tiny_classification(100, 4, 4);
+        let part = Partition::balanced(100, 4, 4);
+        let mut dadm = Dadm::new(
+            &data,
+            &part,
+            Logistic,
+            ElasticNet::new(0.05),
+            Zero,
+            5e-3,
+            ProxSdca,
+            DadmOptions { sp: 0.5, ..opts() },
+        );
+        let report = dadm.solve(1e-5, 500);
+        assert!(report.converged, "gap = {}", report.normalized_gap());
+    }
+
+    #[test]
+    fn ridge_regression_matches_closed_form() {
+        // Squared loss, τ = 0, h = 0: P(w) = Σ(x_iᵀw − y_i)² + (λn/2)‖w‖²
+        // has closed form w* = (XᵀX·2 + λn I)⁻¹ · 2Xᵀy … solve via DADM and
+        // verify the primal optimality conditions ∇P(w*) ≈ 0 instead of
+        // inverting: ∇P(w) = 2Xᵀ(Xw − y) + λn·w.
+        let data = tiny_regression(80, 4, 0.05, 5);
+        let part = Partition::balanced(80, 2, 5);
+        let lambda = 0.05;
+        let mut dadm = Dadm::new(
+            &data,
+            &part,
+            Squared,
+            ElasticNet::l2(),
+            Zero,
+            lambda,
+            ProxSdca,
+            DadmOptions { sp: 1.0, ..opts() },
+        );
+        let report = dadm.solve(1e-10, 2000);
+        assert!(report.converged);
+        let w = &report.w;
+        let preds = data.x.matvec(w);
+        let resid: Vec<f64> = preds.iter().zip(&data.y).map(|(p, y)| p - y).collect();
+        let grad_loss = data.x.matvec_t(&resid);
+        let n = data.n() as f64;
+        for j in 0..data.dim() {
+            let g = 2.0 * grad_loss[j] + lambda * n * w[j];
+            assert!(g.abs() < 1e-3, "∇P[{j}] = {g}");
+        }
+    }
+
+    #[test]
+    fn serial_and_threads_agree() {
+        let data = tiny_classification(100, 5, 6);
+        let part = Partition::balanced(100, 4, 6);
+        let build = |cluster: Cluster| {
+            Dadm::new(
+                &data,
+                &part,
+                SmoothHinge::default(),
+                ElasticNet::new(0.1),
+                Zero,
+                1e-2,
+                ProxSdca,
+                DadmOptions {
+                    cluster,
+                    ..opts()
+                },
+            )
+        };
+        let mut a = build(Cluster::Serial);
+        let mut b = build(Cluster::Threads);
+        a.resync();
+        b.resync();
+        for _ in 0..5 {
+            a.round();
+            b.round();
+        }
+        for (x, y) in a.w().iter().zip(b.w()) {
+            assert!((x - y).abs() < 1e-12, "cluster backends diverge");
+        }
+        assert!((a.gap() - b.gap()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn comm_accounting_scales_with_machines() {
+        let data = tiny_classification(120, 16, 7);
+        let run = |m: usize| {
+            let part = Partition::balanced(120, m, 7);
+            let mut dadm = Dadm::new(
+                &data,
+                &part,
+                SmoothHinge::default(),
+                ElasticNet::new(0.0),
+                Zero,
+                1e-2,
+                ProxSdca,
+                DadmOptions::default(), // default (non-free) cost model
+            );
+            dadm.resync();
+            for _ in 0..3 {
+                dadm.round();
+            }
+            dadm.modeled_secs().1
+        };
+        assert_eq!(run(1), 0.0); // single machine: no comm
+        assert!(run(8) > run(2));
+    }
+
+    #[test]
+    fn checkpoint_resume_continues_identically() {
+        let data = tiny_classification(120, 6, 71);
+        let part = Partition::balanced(120, 3, 71);
+        let build = || {
+            Dadm::new(
+                &data,
+                &part,
+                SmoothHinge::default(),
+                ElasticNet::new(0.1),
+                Zero,
+                1e-3,
+                ProxSdca,
+                opts(),
+            )
+        };
+        // Reference: 10 uninterrupted rounds.
+        let mut full = build();
+        full.resync();
+        for _ in 0..10 {
+            full.round();
+        }
+        // Checkpoint after 5, restore into a fresh instance, run 5 more.
+        let mut first = build();
+        first.resync();
+        for _ in 0..5 {
+            first.round();
+        }
+        let mut buf = Vec::new();
+        first.checkpoint().save(&mut buf).unwrap();
+        let ck = crate::coordinator::Checkpoint::load(std::io::Cursor::new(buf)).unwrap();
+        let mut resumed = build();
+        resumed.restore(&ck).unwrap();
+        // Mini-batch RNG streams restart, so the trajectories differ, but
+        // the restored state must be exactly the checkpointed one…
+        for (a, b) in resumed.w().iter().zip(first.w()) {
+            assert!((a - b).abs() < 1e-15);
+        }
+        assert!((resumed.gap() - first.gap()).abs() < 1e-9);
+        // …and further rounds must keep converging from there.
+        let before = resumed.gap();
+        for _ in 0..5 {
+            resumed.round();
+        }
+        assert!(resumed.gap() < before);
+        // And the uninterrupted run's gap is in the same ballpark (same
+        // algorithm, different mini-batch draws after round 5).
+        assert!(full.gap() > 0.0);
+    }
+
+    #[test]
+    fn sparse_comm_cheaper_same_math() {
+        // Sparse data + tiny mini-batches ⇒ Δv has small support, so the
+        // §6 sparse-message option must charge less comm time while
+        // producing bit-identical iterates.
+        use crate::data::synthetic::SyntheticSpec;
+        let data = SyntheticSpec {
+            name: "sparse-comm".into(),
+            n: 300,
+            d: 512,
+            density: 0.01,
+            signal_density: 0.1,
+            noise: 0.1,
+            seed: 99,
+        }
+        .generate();
+        let part = Partition::balanced(300, 4, 9);
+        let run = |sparse_comm: bool| {
+            let mut dadm = Dadm::new(
+                &data,
+                &part,
+                SmoothHinge::default(),
+                ElasticNet::new(0.1),
+                Zero,
+                1e-2,
+                ProxSdca,
+                DadmOptions {
+                    sp: 0.05,
+                    sparse_comm,
+                    ..DadmOptions::default() // default (non-free) cost model
+                },
+            );
+            dadm.resync();
+            for _ in 0..5 {
+                dadm.round();
+            }
+            (dadm.w().to_vec(), dadm.modeled_secs().1)
+        };
+        let (w_dense, t_dense) = run(false);
+        let (w_sparse, t_sparse) = run(true);
+        assert_eq!(w_dense, w_sparse, "cost model must not change the math");
+        assert!(
+            t_sparse < t_dense,
+            "sparse messages not cheaper: {t_sparse} vs {t_dense}"
+        );
+    }
+
+    #[test]
+    fn gap_every_skips_instrumentation() {
+        let data = tiny_classification(100, 4, 8);
+        let part = Partition::balanced(100, 2, 8);
+        let mut dadm = Dadm::new(
+            &data,
+            &part,
+            SmoothHinge::default(),
+            ElasticNet::new(0.0),
+            Zero,
+            1e-2,
+            ProxSdca,
+            DadmOptions {
+                gap_every: 5,
+                ..opts()
+            },
+        );
+        let report = dadm.solve(0.0, 12); // never converges; 12 rounds
+        // Records: initial + rounds 5, 10, 12 (final).
+        let recorded: Vec<usize> = report.trace.rounds.iter().map(|r| r.round).collect();
+        assert_eq!(recorded, vec![0, 5, 10, 12]);
+    }
+}

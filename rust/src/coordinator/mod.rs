@@ -1,0 +1,25 @@
+//! The paper's system contribution: Distributed Alternating Dual
+//! Maximization and its accelerated variant.
+//!
+//! * [`dadm`] — Algorithm 2: the alternating local/global loop over the
+//!   simulated cluster, with the closed-form β-maximization global step
+//!   of Propositions 4/5 and exact duality-gap tracking. With `h = 0` and
+//!   balanced partitions this *is* CoCoA+ (§6), so the CoCoA+ baseline in
+//!   every bench is DADM without acceleration.
+//! * [`acc_dadm`] — Algorithm 3: the Catalyst-style inner–outer
+//!   acceleration with stage regularizer `g_t` (see
+//!   [`crate::reg::ShiftedElasticNet`]), momentum `ν` (theory value or
+//!   the paper's empirically-smoother `ν = 0`), and the geometric
+//!   stage-target schedule `ξ_t`.
+//! * [`owlqn_driver`] — the distributed OWL-QN baseline of Figures 6–7,
+//!   sharing the cluster/cost accounting.
+
+pub mod acc_dadm;
+pub mod checkpoint;
+pub mod dadm;
+pub mod owlqn_driver;
+
+pub use acc_dadm::{AccDadm, AccDadmOptions, NuChoice};
+pub use checkpoint::Checkpoint;
+pub use dadm::{Dadm, DadmOptions, SolveReport};
+pub use owlqn_driver::{run_owlqn_distributed, OwlqnDriverReport};

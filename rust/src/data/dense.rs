@@ -1,0 +1,100 @@
+//! Dense row-major matrix — staging buffers for the XLA batched path and
+//! small test fixtures. The solve path proper works on [`super::sparse`].
+
+/// Dense row-major `f64` matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseMatrix {
+    data: Vec<f64>,
+    rows: usize,
+    cols: usize,
+}
+
+impl DenseMatrix {
+    /// Zero-filled matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        DenseMatrix {
+            data: vec![0.0; rows * cols],
+            rows,
+            cols,
+        }
+    }
+
+    /// From a flat row-major buffer.
+    pub fn from_flat(data: Vec<f64>, rows: usize, cols: usize) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        DenseMatrix { data, rows, cols }
+    }
+
+    /// Row count.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Column count.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Borrow row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable row `i`.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Flat row-major view.
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// `X w`.
+    pub fn matvec(&self, w: &[f64]) -> Vec<f64> {
+        assert_eq!(w.len(), self.cols);
+        (0..self.rows)
+            .map(|i| crate::utils::math::dot(self.row(i), w))
+            .collect()
+    }
+
+    /// `Xᵀ a`.
+    pub fn matvec_t(&self, a: &[f64]) -> Vec<f64> {
+        assert_eq!(a.len(), self.rows);
+        let mut out = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            crate::utils::math::axpy(a[i], self.row(i), &mut out);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_and_matvec() {
+        let m = DenseMatrix::from_flat(vec![1.0, 2.0, 3.0, 4.0], 2, 2);
+        assert_eq!(m.row(1), &[3.0, 4.0]);
+        assert_eq!(m.matvec(&[1.0, 1.0]), vec![3.0, 7.0]);
+        assert_eq!(m.matvec_t(&[1.0, 1.0]), vec![4.0, 6.0]);
+    }
+
+    #[test]
+    fn zeros_shape() {
+        let m = DenseMatrix::zeros(3, 4);
+        assert_eq!(m.rows(), 3);
+        assert_eq!(m.cols(), 4);
+        assert!(m.as_slice().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn row_mut_writes() {
+        let mut m = DenseMatrix::zeros(2, 2);
+        m.row_mut(1)[0] = 5.0;
+        assert_eq!(m.row(1), &[5.0, 0.0]);
+    }
+}

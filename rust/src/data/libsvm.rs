@@ -1,0 +1,149 @@
+//! LIBSVM text format I/O.
+//!
+//! The paper's datasets (covtype, rcv1, HIGGS, kdd2010) are distributed in
+//! this format. We parse it so real data drops into the benches unchanged
+//! (`--data path.libsvm`); the synthetic generators are only the default.
+//!
+//! Format: one example per line, `label idx:val idx:val ...` with
+//! **1-based** indices, `#` comments allowed at end of line.
+
+use super::{Dataset, SparseMatrix};
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+/// Parse LIBSVM text from a reader. Labels are kept as parsed, except that
+/// `0/1` labels are mapped to `±1` (rcv1-style convention).
+pub fn parse<R: BufRead>(reader: R) -> Result<Dataset> {
+    let mut rows: Vec<Vec<(u32, f64)>> = Vec::new();
+    let mut labels: Vec<f64> = Vec::new();
+    let mut max_col = 0usize;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split_ascii_whitespace();
+        let label: f64 = parts
+            .next()
+            .context("missing label")?
+            .parse()
+            .with_context(|| format!("line {}: bad label", lineno + 1))?;
+        let mut feats = Vec::new();
+        for tok in parts {
+            let (idx, val) = tok
+                .split_once(':')
+                .with_context(|| format!("line {}: bad feature `{tok}`", lineno + 1))?;
+            let idx: usize = idx
+                .parse()
+                .with_context(|| format!("line {}: bad index `{idx}`", lineno + 1))?;
+            anyhow::ensure!(idx >= 1, "line {}: LIBSVM indices are 1-based", lineno + 1);
+            let val: f64 = val
+                .parse()
+                .with_context(|| format!("line {}: bad value `{val}`", lineno + 1))?;
+            max_col = max_col.max(idx);
+            feats.push(((idx - 1) as u32, val));
+        }
+        labels.push(label);
+        rows.push(feats);
+    }
+    // Map {0,1} labels to ±1 if the file uses that convention.
+    let zero_one = labels.iter().all(|&y| y == 0.0 || y == 1.0)
+        && labels.iter().any(|&y| y == 0.0);
+    if zero_one {
+        for y in &mut labels {
+            *y = if *y == 1.0 { 1.0 } else { -1.0 };
+        }
+    }
+    let x = SparseMatrix::from_rows(rows, max_col.max(1));
+    let d = Dataset {
+        x,
+        y: labels,
+        name: "libsvm".into(),
+    };
+    d.validate()?;
+    Ok(d)
+}
+
+/// Load a LIBSVM file from disk.
+pub fn load(path: &Path) -> Result<Dataset> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut d = parse(BufReader::new(f))?;
+    d.name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "libsvm".into());
+    Ok(d)
+}
+
+/// Serialize a dataset back to LIBSVM text (round-trip tested).
+pub fn write<W: Write>(d: &Dataset, mut w: W) -> Result<()> {
+    for i in 0..d.n() {
+        write!(w, "{}", d.y[i])?;
+        let row = d.x.row(i);
+        for (&j, &v) in row.indices.iter().zip(row.values) {
+            write!(w, " {}:{}", j + 1, v)?;
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_basic_file() {
+        let text = "+1 1:0.5 3:1.25\n-1 2:2.0\n";
+        let d = parse(Cursor::new(text)).unwrap();
+        assert_eq!(d.n(), 2);
+        assert_eq!(d.dim(), 3);
+        assert_eq!(d.y, vec![1.0, -1.0]);
+        assert_eq!(d.x.row(0).to_dense(3), vec![0.5, 0.0, 1.25]);
+        assert_eq!(d.x.row(1).to_dense(3), vec![0.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn skips_comments_and_blank_lines() {
+        let text = "\n# full comment\n1 1:1.0 # trailing\n\n-1 1:2.0\n";
+        let d = parse(Cursor::new(text)).unwrap();
+        assert_eq!(d.n(), 2);
+    }
+
+    #[test]
+    fn maps_zero_one_labels() {
+        let d = parse(Cursor::new("1 1:1\n0 1:2\n")).unwrap();
+        assert_eq!(d.y, vec![1.0, -1.0]);
+    }
+
+    #[test]
+    fn keeps_pm1_labels() {
+        let d = parse(Cursor::new("1 1:1\n-1 1:2\n")).unwrap();
+        assert_eq!(d.y, vec![1.0, -1.0]);
+    }
+
+    #[test]
+    fn rejects_zero_index() {
+        assert!(parse(Cursor::new("1 0:1.0\n")).is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse(Cursor::new("abc 1:1.0\n")).is_err());
+        assert!(parse(Cursor::new("1 1-1.0\n")).is_err());
+    }
+
+    #[test]
+    fn roundtrip() {
+        let text = "1 1:0.5 3:1.25\n-1 2:2\n";
+        let d = parse(Cursor::new(text)).unwrap();
+        let mut buf = Vec::new();
+        write(&d, &mut buf).unwrap();
+        let d2 = parse(Cursor::new(buf)).unwrap();
+        assert_eq!(d.y, d2.y);
+        assert_eq!(d.x.to_dense(), d2.x.to_dense());
+    }
+}

@@ -1,0 +1,109 @@
+//! Data substrate: design matrices, dataset I/O, synthetic generators,
+//! and the balanced partitioner.
+//!
+//! The paper evaluates on four LIBSVM datasets (covtype, rcv1, HIGGS,
+//! kdd2010 — Table 1). Real data is not shipped with this repository, so
+//! [`synthetic`] provides generators matched to each dataset's (n, d,
+//! sparsity, label balance) profile at a configurable scale, while
+//! [`libsvm`] parses the real files unchanged if the user supplies them.
+
+pub mod dense;
+pub mod libsvm;
+pub mod partition;
+pub mod sparse;
+pub mod synthetic;
+
+pub use partition::Partition;
+pub use sparse::{SparseMatrix, SparseRow};
+
+/// A binary-classification / regression dataset in row-major sparse form.
+///
+/// `X` is stored row-wise (one [`SparseRow`] per example, matching the
+/// paper's `X_i` columns of the design matrix with `q = 1`), labels are
+/// `±1` for classification or reals for regression.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Design matrix, one row per example.
+    pub x: SparseMatrix,
+    /// Labels, `y.len() == x.rows()`.
+    pub y: Vec<f64>,
+    /// Human-readable name (used by bench output).
+    pub name: String,
+}
+
+impl Dataset {
+    /// Number of examples `n`.
+    pub fn n(&self) -> usize {
+        self.x.rows()
+    }
+
+    /// Feature dimension `d`.
+    pub fn dim(&self) -> usize {
+        self.x.cols()
+    }
+
+    /// `R = max_i ‖x_i‖²` — the data-radius constant in Theorems 6/7/11.
+    pub fn max_row_norm_sq(&self) -> f64 {
+        (0..self.n())
+            .map(|i| self.x.row(i).norm_sq())
+            .fold(0.0, f64::max)
+    }
+
+    /// Fraction of structurally non-zero entries.
+    pub fn density(&self) -> f64 {
+        self.x.nnz() as f64 / (self.n() as f64 * self.dim() as f64)
+    }
+
+    /// Basic sanity checks used by loaders and generators.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.y.len() == self.x.rows(),
+            "label count {} != row count {}",
+            self.y.len(),
+            self.x.rows()
+        );
+        anyhow::ensure!(self.x.rows() > 0, "empty dataset");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        let x = SparseMatrix::from_dense(&[vec![1.0, 0.0], vec![0.0, 2.0], vec![3.0, 4.0]]);
+        Dataset {
+            x,
+            y: vec![1.0, -1.0, 1.0],
+            name: "tiny".into(),
+        }
+    }
+
+    #[test]
+    fn dims() {
+        let d = tiny();
+        assert_eq!(d.n(), 3);
+        assert_eq!(d.dim(), 2);
+        d.validate().unwrap();
+    }
+
+    #[test]
+    fn radius() {
+        let d = tiny();
+        assert_eq!(d.max_row_norm_sq(), 25.0);
+    }
+
+    #[test]
+    fn density_counts_structural_nnz() {
+        let d = tiny();
+        assert!((d.density() - 4.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validate_rejects_mismatch() {
+        let mut d = tiny();
+        d.y.pop();
+        assert!(d.validate().is_err());
+    }
+}

@@ -1,0 +1,165 @@
+//! Balanced random partitioning of examples across `m` simulated machines.
+//!
+//! Mirrors the paper's experimental protocol (§10: "we use same balanced
+//! data partitions and random seeds"): a seeded shuffle of `{0..n}` split
+//! into `m` contiguous chunks whose sizes differ by at most one.
+
+use crate::utils::Rng;
+
+/// A partition of `{0, …, n−1}` into `m` machine-local index sets `S_ℓ`.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    shards: Vec<Vec<usize>>,
+    n: usize,
+}
+
+impl Partition {
+    /// Balanced random partition with a seeded shuffle.
+    pub fn balanced(n: usize, m: usize, seed: u64) -> Self {
+        assert!(m >= 1, "need at least one machine");
+        assert!(n >= m, "need at least one example per machine (n={n}, m={m})");
+        let mut idx: Vec<usize> = (0..n).collect();
+        Rng::new(seed).shuffle(&mut idx);
+        let base = n / m;
+        let extra = n % m;
+        let mut shards = Vec::with_capacity(m);
+        let mut cursor = 0usize;
+        for l in 0..m {
+            let size = base + usize::from(l < extra);
+            shards.push(idx[cursor..cursor + size].to_vec());
+            cursor += size;
+        }
+        Partition { shards, n }
+    }
+
+    /// Deterministic round-robin partition (no shuffle) — used by tests
+    /// that need a fixed assignment.
+    pub fn round_robin(n: usize, m: usize) -> Self {
+        assert!(m >= 1 && n >= m);
+        let mut shards = vec![Vec::new(); m];
+        for i in 0..n {
+            shards[i % m].push(i);
+        }
+        Partition { shards, n }
+    }
+
+    /// Number of machines `m`.
+    pub fn machines(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Total number of examples `n`.
+    pub fn total(&self) -> usize {
+        self.n
+    }
+
+    /// Index set `S_ℓ`.
+    pub fn shard(&self, l: usize) -> &[usize] {
+        &self.shards[l]
+    }
+
+    /// `n_ℓ = |S_ℓ|`.
+    pub fn shard_size(&self, l: usize) -> usize {
+        self.shards[l].len()
+    }
+
+    /// `max_ℓ n_ℓ / M_ℓ` term of Theorems 6/7 for a fixed sampling
+    /// fraction `sp` (`M_ℓ = ⌈sp · n_ℓ⌉`).
+    pub fn max_epoch_ratio(&self, sp: f64) -> f64 {
+        (0..self.machines())
+            .map(|l| {
+                let nl = self.shard_size(l) as f64;
+                let ml = (sp * nl).ceil().max(1.0);
+                nl / ml
+            })
+            .fold(0.0, f64::max)
+    }
+
+    /// Verify partition invariants: disjoint cover of `{0..n}` with shard
+    /// sizes differing by ≤ 1 (balanced variants only).
+    pub fn check_invariants(&self, balanced: bool) -> anyhow::Result<()> {
+        let mut seen = vec![false; self.n];
+        for shard in &self.shards {
+            for &i in shard {
+                anyhow::ensure!(i < self.n, "index {i} out of range");
+                anyhow::ensure!(!seen[i], "index {i} appears twice");
+                seen[i] = true;
+            }
+        }
+        anyhow::ensure!(seen.iter().all(|&s| s), "partition does not cover all indices");
+        if balanced {
+            let min = self.shards.iter().map(Vec::len).min().unwrap();
+            let max = self.shards.iter().map(Vec::len).max().unwrap();
+            anyhow::ensure!(max - min <= 1, "unbalanced shards: {min}..{max}");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::for_each_case;
+
+    #[test]
+    fn balanced_invariants_hold() {
+        for &(n, m) in &[(10, 3), (100, 8), (7, 7), (1000, 20)] {
+            let p = Partition::balanced(n, m, 42);
+            assert_eq!(p.machines(), m);
+            p.check_invariants(true).unwrap();
+        }
+    }
+
+    #[test]
+    fn same_seed_same_partition() {
+        let a = Partition::balanced(100, 4, 7);
+        let b = Partition::balanced(100, 4, 7);
+        for l in 0..4 {
+            assert_eq!(a.shard(l), b.shard(l));
+        }
+    }
+
+    #[test]
+    fn different_seed_different_partition() {
+        let a = Partition::balanced(100, 4, 7);
+        let b = Partition::balanced(100, 4, 8);
+        assert!((0..4).any(|l| a.shard(l) != b.shard(l)));
+    }
+
+    #[test]
+    fn round_robin_deterministic() {
+        let p = Partition::round_robin(7, 3);
+        assert_eq!(p.shard(0), &[0, 3, 6]);
+        assert_eq!(p.shard(1), &[1, 4]);
+        assert_eq!(p.shard(2), &[2, 5]);
+        p.check_invariants(true).unwrap();
+    }
+
+    #[test]
+    fn epoch_ratio_matches_theorem_term() {
+        let p = Partition::balanced(100, 4, 1); // n_ℓ = 25
+        // sp = 0.2 ⇒ M_ℓ = 5 ⇒ n_ℓ/M_ℓ = 5
+        assert!((p.max_epoch_ratio(0.2) - 5.0).abs() < 1e-12);
+        // sp = 1.0 ⇒ ratio 1
+        assert!((p.max_epoch_ratio(1.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prop_invariants_random_shapes() {
+        for_each_case(0x9A27, 60, |g| {
+            let m = g.usize_in(1, 12);
+            let n = g.usize_in(m, m * 40);
+            let seed = g.rng().next_u64();
+            let p = Partition::balanced(n, m, seed);
+            p.check_invariants(true).unwrap();
+            let total: usize = (0..m).map(|l| p.shard_size(l)).sum();
+            assert_eq!(total, n);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_more_machines_than_examples() {
+        Partition::balanced(3, 5, 0);
+    }
+}

@@ -1,0 +1,325 @@
+//! Compressed sparse row (CSR) matrix.
+//!
+//! The single most important data structure on the Layer-3 hot path: every
+//! ProxSDCA coordinate step does one sparse dot `x_iᵀ w` and one sparse
+//! axpy `v += c·x_i` against a row of this matrix. Rows are contiguous
+//! `(indices, values)` slices so the inner loops are cache-friendly and
+//! allocation-free.
+
+/// Borrowed view of one CSR row.
+#[derive(Clone, Copy, Debug)]
+pub struct SparseRow<'a> {
+    /// Column indices (strictly increasing).
+    pub indices: &'a [u32],
+    /// Matching values.
+    pub values: &'a [f64],
+}
+
+impl<'a> SparseRow<'a> {
+    /// Number of stored entries.
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Sparse dot product against a dense vector.
+    ///
+    /// The innermost loop of every coordinate step. Column indices are
+    /// validated once at construction (`SparseMatrix::from_rows`), so the
+    /// gather skips per-element bounds checks (§Perf iteration 1: +35%
+    /// epoch throughput).
+    #[inline]
+    pub fn dot(&self, w: &[f64]) -> f64 {
+        debug_assert!(self
+            .indices
+            .iter()
+            .all(|&j| (j as usize) < w.len()));
+        // Fully-dense row (covtype/HIGGS-like data): indices are exactly
+        // 0..d, so the gather degenerates to a contiguous dot product that
+        // LLVM auto-vectorizes (§Perf iteration 2).
+        if self.indices.len() == w.len() {
+            return self.values.iter().zip(w).map(|(v, x)| v * x).sum();
+        }
+        let mut acc = 0.0;
+        for (&j, &v) in self.indices.iter().zip(self.values) {
+            // SAFETY: j < cols ≤ w.len(), enforced at matrix construction
+            // and checked above in debug builds.
+            acc += v * unsafe { *w.get_unchecked(j as usize) };
+        }
+        acc
+    }
+
+    /// `out += c · x_i` (sparse axpy).
+    #[inline]
+    pub fn axpy_into(&self, c: f64, out: &mut [f64]) {
+        debug_assert!(self
+            .indices
+            .iter()
+            .all(|&j| (j as usize) < out.len()));
+        if self.indices.len() == out.len() {
+            for (o, &v) in out.iter_mut().zip(self.values) {
+                *o += c * v;
+            }
+            return;
+        }
+        for (&j, &v) in self.indices.iter().zip(self.values) {
+            // SAFETY: as in `dot`.
+            unsafe { *out.get_unchecked_mut(j as usize) += c * v };
+        }
+    }
+
+    /// `‖x_i‖₂²`.
+    #[inline]
+    pub fn norm_sq(&self) -> f64 {
+        self.values.iter().map(|v| v * v).sum()
+    }
+
+    /// Materialize as a dense vector of length `dim`.
+    pub fn to_dense(&self, dim: usize) -> Vec<f64> {
+        let mut out = vec![0.0; dim];
+        self.axpy_into(1.0, &mut out);
+        out
+    }
+}
+
+/// CSR sparse matrix with `u32` column indices.
+#[derive(Clone, Debug, Default)]
+pub struct SparseMatrix {
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    values: Vec<f64>,
+    cols: usize,
+}
+
+impl SparseMatrix {
+    /// Build from per-row `(col, value)` lists. Columns within a row are
+    /// sorted and duplicate columns are summed.
+    pub fn from_rows(rows: Vec<Vec<(u32, f64)>>, cols: usize) -> Self {
+        let mut indptr = Vec::with_capacity(rows.len() + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0usize);
+        for mut row in rows {
+            row.sort_unstable_by_key(|&(j, _)| j);
+            let mut last: Option<u32> = None;
+            for (j, v) in row {
+                assert!((j as usize) < cols, "column {j} out of bounds ({cols})");
+                if last == Some(j) {
+                    *values.last_mut().unwrap() += v;
+                } else if v != 0.0 {
+                    indices.push(j);
+                    values.push(v);
+                    last = Some(j);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        SparseMatrix {
+            indptr,
+            indices,
+            values,
+            cols,
+        }
+    }
+
+    /// Build from a dense row-major matrix (zeros dropped).
+    pub fn from_dense(rows: &[Vec<f64>]) -> Self {
+        let cols = rows.first().map(|r| r.len()).unwrap_or(0);
+        let sparse_rows = rows
+            .iter()
+            .map(|r| {
+                assert_eq!(r.len(), cols, "ragged dense input");
+                r.iter()
+                    .enumerate()
+                    .filter(|(_, &v)| v != 0.0)
+                    .map(|(j, &v)| (j as u32, v))
+                    .collect()
+            })
+            .collect();
+        SparseMatrix::from_rows(sparse_rows, cols)
+    }
+
+    /// Number of rows.
+    pub fn rows(&self) -> usize {
+        self.indptr.len() - 1
+    }
+
+    /// Number of columns.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Total stored non-zeros.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Borrow row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> SparseRow<'_> {
+        let (lo, hi) = (self.indptr[i], self.indptr[i + 1]);
+        SparseRow {
+            indices: &self.indices[lo..hi],
+            values: &self.values[lo..hi],
+        }
+    }
+
+    /// Dense mat-vec `X w`.
+    pub fn matvec(&self, w: &[f64]) -> Vec<f64> {
+        assert_eq!(w.len(), self.cols);
+        (0..self.rows()).map(|i| self.row(i).dot(w)).collect()
+    }
+
+    /// Transposed mat-vec `Xᵀ a`.
+    pub fn matvec_t(&self, a: &[f64]) -> Vec<f64> {
+        assert_eq!(a.len(), self.rows());
+        let mut out = vec![0.0; self.cols];
+        for i in 0..self.rows() {
+            if a[i] != 0.0 {
+                self.row(i).axpy_into(a[i], &mut out);
+            }
+        }
+        out
+    }
+
+    /// Materialize a subset of rows as a new matrix (used by the
+    /// partitioner to give each simulated machine an owned shard).
+    pub fn select_rows(&self, rows: &[usize]) -> SparseMatrix {
+        let mut indptr = Vec::with_capacity(rows.len() + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0usize);
+        for &i in rows {
+            let r = self.row(i);
+            indices.extend_from_slice(r.indices);
+            values.extend_from_slice(r.values);
+            indptr.push(indices.len());
+        }
+        SparseMatrix {
+            indptr,
+            indices,
+            values,
+            cols: self.cols,
+        }
+    }
+
+    /// Dense row-major copy (tests / XLA path staging).
+    pub fn to_dense(&self) -> Vec<Vec<f64>> {
+        (0..self.rows()).map(|i| self.row(i).to_dense(self.cols)).collect()
+    }
+
+    /// Pack rows `rows` into a dense row-major `f32` buffer of shape
+    /// `(rows.len(), cols)` — the staging format for the PJRT batched
+    /// local step.
+    pub fn pack_rows_f32(&self, rows: &[usize], out: &mut [f32]) {
+        assert_eq!(out.len(), rows.len() * self.cols);
+        out.fill(0.0);
+        for (k, &i) in rows.iter().enumerate() {
+            let r = self.row(i);
+            let base = k * self.cols;
+            for (&j, &v) in r.indices.iter().zip(r.values) {
+                out[base + j as usize] = v as f32;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::for_each_case;
+
+    fn sample() -> SparseMatrix {
+        SparseMatrix::from_dense(&[
+            vec![1.0, 0.0, 2.0],
+            vec![0.0, 0.0, 0.0],
+            vec![-1.0, 3.0, 0.0],
+        ])
+    }
+
+    #[test]
+    fn shape_and_nnz() {
+        let m = sample();
+        assert_eq!(m.rows(), 3);
+        assert_eq!(m.cols(), 3);
+        assert_eq!(m.nnz(), 4);
+        assert_eq!(m.row(1).nnz(), 0);
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let m = sample();
+        let w = vec![1.0, 2.0, 3.0];
+        assert_eq!(m.matvec(&w), vec![7.0, 0.0, 5.0]);
+    }
+
+    #[test]
+    fn matvec_t_matches_dense() {
+        let m = sample();
+        let a = vec![1.0, 5.0, 2.0];
+        assert_eq!(m.matvec_t(&a), vec![-1.0, 6.0, 2.0]);
+    }
+
+    #[test]
+    fn duplicate_columns_are_summed() {
+        let m = SparseMatrix::from_rows(vec![vec![(0, 1.0), (0, 2.0), (2, 1.0)]], 3);
+        assert_eq!(m.row(0).to_dense(3), vec![3.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn select_rows_copies() {
+        let m = sample();
+        let s = m.select_rows(&[2, 0]);
+        assert_eq!(s.rows(), 2);
+        assert_eq!(s.row(0).to_dense(3), vec![-1.0, 3.0, 0.0]);
+        assert_eq!(s.row(1).to_dense(3), vec![1.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn pack_rows_f32_layout() {
+        let m = sample();
+        let mut buf = vec![0f32; 6];
+        m.pack_rows_f32(&[0, 2], &mut buf);
+        assert_eq!(buf, vec![1.0, 0.0, 2.0, -1.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_bounds_column_rejected() {
+        SparseMatrix::from_rows(vec![vec![(5, 1.0)]], 3);
+    }
+
+    #[test]
+    fn prop_roundtrip_and_matvec_agree_with_dense() {
+        for_each_case(0xDA7A, 50, |g| {
+            let rows = g.usize_in(1, 12);
+            let cols = g.usize_in(1, 12);
+            let dense: Vec<Vec<f64>> = (0..rows)
+                .map(|_| {
+                    (0..cols)
+                        .map(|_| {
+                            if g.bool(0.4) {
+                                g.f64_in(-2.0, 2.0)
+                            } else {
+                                0.0
+                            }
+                        })
+                        .collect()
+                })
+                .collect();
+            let m = SparseMatrix::from_dense(&dense);
+            assert_eq!(m.to_dense(), dense);
+            let w = g.vec_f64(cols, -1.0, 1.0);
+            let got = m.matvec(&w);
+            for i in 0..rows {
+                let want: f64 = dense[i].iter().zip(&w).map(|(a, b)| a * b).sum();
+                assert!((got[i] - want).abs() < 1e-12);
+            }
+            let a = g.vec_f64(rows, -1.0, 1.0);
+            let got_t = m.matvec_t(&a);
+            for j in 0..cols {
+                let want: f64 = (0..rows).map(|i| dense[i][j] * a[i]).sum();
+                assert!((got_t[j] - want).abs() < 1e-12);
+            }
+        });
+    }
+}

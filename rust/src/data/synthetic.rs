@@ -1,0 +1,270 @@
+//! Synthetic dataset generators matched to the paper's Table 1.
+//!
+//! | Paper dataset | n          | d          | sparsity | analogue default |
+//! |---------------|------------|------------|----------|------------------|
+//! | covtype       | 581,012    | 54         | 22.12%   | n/29 ≈ 20k       |
+//! | rcv1          | 677,399    | 47,236     | 0.16%    | 20k × 2,048      |
+//! | HIGGS         | 11,000,000 | 28         | 92.11%   | 40k × 28         |
+//! | kdd2010       | 19,264,097 | 29,890,095 | ~1e-6    | 40k × 8,192      |
+//!
+//! The substitution rationale (DESIGN.md §3): dual coordinate method
+//! behaviour is governed by (n, d, sparsity, R = max‖x_i‖², label noise,
+//! λ); the generators preserve those while scaling n so laptop-scale
+//! benches finish. Each generator draws a ground-truth sparse predictor
+//! `w*`, emits features with the target density, and labels
+//! `y = sign(x·w* + noise)`, giving a realistic margin distribution.
+
+use super::{Dataset, SparseMatrix};
+use crate::utils::Rng;
+
+/// Generator configuration.
+#[derive(Clone, Debug)]
+pub struct SyntheticSpec {
+    /// Dataset name (bench output key).
+    pub name: String,
+    /// Number of examples.
+    pub n: usize,
+    /// Feature dimension.
+    pub d: usize,
+    /// Target fraction of non-zeros per row (1.0 = dense).
+    pub density: f64,
+    /// Fraction of features active in the ground-truth predictor.
+    pub signal_density: f64,
+    /// Label flip probability (Bayes noise).
+    pub noise: f64,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl SyntheticSpec {
+    /// covtype analogue: small dense-ish d, moderately sparse rows.
+    pub fn covtype(scale: f64) -> Self {
+        SyntheticSpec {
+            name: "synth-covtype".into(),
+            n: ((581_012.0 * scale) as usize).max(64),
+            d: 54,
+            density: 0.2212,
+            signal_density: 0.5,
+            noise: 0.1,
+            seed: 0xC0F_7359E,
+        }
+    }
+
+    /// rcv1 analogue: high-dimensional, very sparse text-like features.
+    pub fn rcv1(scale: f64) -> Self {
+        SyntheticSpec {
+            name: "synth-rcv1".into(),
+            n: ((677_399.0 * scale) as usize).max(64),
+            d: 2_048,
+            density: 0.016, // scaled-up from 0.0016 so rows keep ≥ a few nnz at d=2048
+            signal_density: 0.05,
+            noise: 0.05,
+            seed: 0x9C41,
+        }
+    }
+
+    /// HIGGS analogue: low-dimensional fully dense physics features.
+    pub fn higgs(scale: f64) -> Self {
+        SyntheticSpec {
+            name: "synth-higgs".into(),
+            n: ((11_000_000.0 * scale) as usize).max(64),
+            d: 28,
+            density: 0.9211,
+            signal_density: 1.0,
+            noise: 0.2,
+            seed: 0x8166_5,
+        }
+    }
+
+    /// kdd2010 analogue: extreme dimension/sparsity ratio.
+    pub fn kdd2010(scale: f64) -> Self {
+        SyntheticSpec {
+            name: "synth-kdd2010".into(),
+            n: ((19_264_097.0 * scale) as usize).max(64),
+            d: 8_192,
+            density: 0.002,
+            signal_density: 0.02,
+            noise: 0.05,
+            seed: 0x6DD2010,
+        }
+    }
+
+    /// Generate the dataset.
+    pub fn generate(&self) -> Dataset {
+        let mut rng = Rng::new(self.seed);
+        // Ground-truth predictor on a random support.
+        let k = ((self.d as f64 * self.signal_density).ceil() as usize).clamp(1, self.d);
+        let support = rng.sample_indices(self.d, k);
+        let mut w_star = vec![0.0; self.d];
+        for &j in &support {
+            w_star[j] = rng.normal();
+        }
+        let nnz_per_row = ((self.d as f64 * self.density).round() as usize).clamp(1, self.d);
+        let mut rows: Vec<Vec<(u32, f64)>> = Vec::with_capacity(self.n);
+        let mut y = Vec::with_capacity(self.n);
+        for _ in 0..self.n {
+            let cols = rng.sample_indices(self.d, nnz_per_row);
+            // Normalize rows to unit norm like common LIBSVM preprocessing —
+            // this pins R = max‖x_i‖² = 1, matching how the paper's λ grid
+            // (1e-6..1e-8) maps onto condition numbers.
+            let mut vals: Vec<f64> = (0..nnz_per_row).map(|_| rng.normal()).collect();
+            let norm = vals.iter().map(|v| v * v).sum::<f64>().sqrt().max(1e-12);
+            for v in &mut vals {
+                *v /= norm;
+            }
+            let margin: f64 = cols
+                .iter()
+                .zip(&vals)
+                .map(|(&j, &v)| v * w_star[j])
+                .sum();
+            let mut label = if margin >= 0.0 { 1.0 } else { -1.0 };
+            if rng.bernoulli(self.noise) {
+                label = -label;
+            }
+            y.push(label);
+            rows.push(cols.into_iter().map(|j| (j as u32, 0.0)).zip(vals).map(|((j, _), v)| (j, v)).collect());
+        }
+        let x = SparseMatrix::from_rows(rows, self.d);
+        Dataset {
+            x,
+            y,
+            name: self.name.clone(),
+        }
+    }
+}
+
+/// The paper's four datasets at a given scale factor (fraction of the
+/// original n). `scale = 3.5e-5` gives the quick defaults used by tests;
+/// benches use larger scales.
+pub fn paper_suite(scale: f64) -> Vec<SyntheticSpec> {
+    vec![
+        SyntheticSpec::covtype(scale * 10.0), // covtype is small; keep it bigger
+        SyntheticSpec::rcv1(scale * 10.0),
+        SyntheticSpec::higgs(scale),
+        SyntheticSpec::kdd2010(scale),
+    ]
+}
+
+/// A tiny well-conditioned classification problem for unit tests.
+pub fn tiny_classification(n: usize, d: usize, seed: u64) -> Dataset {
+    SyntheticSpec {
+        name: "tiny".into(),
+        n,
+        d,
+        density: 1.0,
+        signal_density: 1.0,
+        noise: 0.05,
+        seed,
+    }
+    .generate()
+}
+
+/// A tiny regression problem (`y = x·w* + ε`, unnormalized labels) for the
+/// squared-loss / ridge closed-form cross-checks.
+pub fn tiny_regression(n: usize, d: usize, noise: f64, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let w_star: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+    let mut rows = Vec::with_capacity(n);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let x: Vec<f64> = (0..d).map(|_| rng.normal() / (d as f64).sqrt()).collect();
+        let target: f64 = x.iter().zip(&w_star).map(|(a, b)| a * b).sum::<f64>()
+            + noise * rng.normal();
+        y.push(target);
+        rows.push(x.iter().enumerate().map(|(j, &v)| (j as u32, v)).collect());
+    }
+    Dataset {
+        x: SparseMatrix::from_rows(rows, d),
+        y,
+        name: "tiny-reg".into(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covtype_profile() {
+        let d = SyntheticSpec::covtype(0.002).generate();
+        assert_eq!(d.dim(), 54);
+        assert!(d.n() >= 1000);
+        let density = d.density();
+        assert!(
+            (density - 0.2212).abs() < 0.03,
+            "density {density} far from covtype's 22.12%"
+        );
+        d.validate().unwrap();
+    }
+
+    #[test]
+    fn rows_are_unit_norm() {
+        let d = SyntheticSpec::higgs(2e-5).generate();
+        for i in 0..d.n() {
+            let ns = d.x.row(i).norm_sq();
+            assert!((ns - 1.0).abs() < 1e-9, "row {i} norm² = {ns}");
+        }
+        assert!((d.max_row_norm_sq() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn labels_are_pm1_and_balanced_ish() {
+        let d = tiny_classification(2000, 10, 42);
+        assert!(d.y.iter().all(|&y| y == 1.0 || y == -1.0));
+        let pos = d.y.iter().filter(|&&y| y > 0.0).count() as f64 / d.n() as f64;
+        assert!((0.3..0.7).contains(&pos), "positive fraction {pos}");
+    }
+
+    #[test]
+    fn labels_mostly_agree_with_signal() {
+        // With 5% flip noise a linear model should fit well; check that the
+        // generator's labels are actually learnable by measuring agreement
+        // between the margin sign implied by regenerating with zero noise.
+        let spec = SyntheticSpec {
+            noise: 0.0,
+            ..SyntheticSpec::covtype(0.001)
+        };
+        let a = spec.generate();
+        let spec_noisy = SyntheticSpec {
+            noise: 0.3,
+            ..spec.clone()
+        };
+        let b = spec_noisy.generate();
+        // Same seed ⇒ same features; labels differ only by flips ≈ 30%.
+        let flips = a
+            .y
+            .iter()
+            .zip(&b.y)
+            .filter(|(p, q)| p != q)
+            .count() as f64
+            / a.n() as f64;
+        assert!((0.2..0.4).contains(&flips), "flip rate {flips}");
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let a = SyntheticSpec::rcv1(2e-5).generate();
+        let b = SyntheticSpec::rcv1(2e-5).generate();
+        assert_eq!(a.y, b.y);
+        assert_eq!(a.x.to_dense(), b.x.to_dense());
+    }
+
+    #[test]
+    fn regression_targets_correlate() {
+        let d = tiny_regression(500, 8, 0.01, 7);
+        assert_eq!(d.n(), 500);
+        // Targets should have non-trivial variance (signal present).
+        let mean = d.y.iter().sum::<f64>() / 500.0;
+        let var = d.y.iter().map(|y| (y - mean) * (y - mean)).sum::<f64>() / 500.0;
+        assert!(var > 0.1);
+    }
+
+    #[test]
+    fn paper_suite_has_four() {
+        let suite = paper_suite(1e-5);
+        assert_eq!(suite.len(), 4);
+        let names: Vec<_> = suite.iter().map(|s| s.name.as_str()).collect();
+        assert!(names.contains(&"synth-covtype"));
+        assert!(names.contains(&"synth-kdd2010"));
+    }
+}

@@ -1,0 +1,49 @@
+//! # DADM — Distributed Alternating Dual Maximization
+//!
+//! A production-quality reproduction of *"A General Distributed Dual
+//! Coordinate Optimization Framework for Regularized Loss Minimization"*
+//! (Zheng, Wang, Xia, Xu, Zhang; 2016).
+//!
+//! The crate implements the paper's full system as the Layer-3 (Rust)
+//! coordinator of a three-layer Rust + JAX + Pallas stack:
+//!
+//! * [`data`] — sparse/dense design matrices, LIBSVM parsing, synthetic
+//!   dataset generators mimicking the paper's four benchmark datasets,
+//!   balanced partitioning across simulated machines.
+//! * [`loss`] — the loss-function zoo (smooth hinge, logistic, hinge,
+//!   squared) with convex conjugates and closed-form / Newton coordinate
+//!   maximizers.
+//! * [`reg`] — strongly convex regularizers `g` and the extra convex term
+//!   `h` (elastic net, group lasso), with `∇g*` maps and prox operators.
+//! * [`solver`] — local dual solvers: ProxSDCA, the Theorem-6 mini-batch
+//!   update, and the OWL-QN / L-BFGS primal baselines.
+//! * [`coordinator`] — the paper's contribution: the DADM alternating
+//!   local/global loop (Algorithm 2), the accelerated outer loop
+//!   Acc-DADM (Algorithm 3), and the CoCoA+ equivalence mode.
+//! * [`comm`] — the simulated multi-machine substrate: worker threads,
+//!   an allreduce tree, and an alpha-beta communication cost model.
+//! * [`runtime`] — PJRT client wrapper loading the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) for the batched hot path.
+//! * [`metrics`] — duality-gap traces, timers, CSV emission for benches.
+//! * [`config`] / [`cli`] — experiment configuration and the launcher.
+//! * [`testing`] — an in-tree property-based testing harness (stand-in
+//!   for `proptest`, which is unavailable offline).
+
+pub mod cli;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod loss;
+pub mod metrics;
+pub mod reg;
+pub mod runtime;
+pub mod solver;
+pub mod testing;
+pub mod utils;
+
+pub use coordinator::{AccDadm, AccDadmOptions, Dadm, DadmOptions, SolveReport};
+pub use data::{Dataset, Partition, SparseMatrix};
+pub use loss::Loss;
+pub use reg::{ElasticNet, Regularizer};

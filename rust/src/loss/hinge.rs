@@ -1,0 +1,126 @@
+//! Plain (non-smooth) hinge loss `φ(u) = max(0, 1 − y·u)` — 1-Lipschitz.
+//!
+//! Conjugate (a := y·α): `φ*(−α) = −a` for `a ∈ [0, 1]`, else ∞
+//! (Lemma 16: `φ*` is +∞ outside the L-ball). The coordinate maximizer is
+//! the classic SVM-SDCA box update `a* = clip(a + (1 − y·u)/q, 0, 1)`.
+//!
+//! DADM uses this loss directly under Theorem 7 (Lipschitz rate); the
+//! accelerated path (Figures 12–13) instead runs on
+//! [`super::SmoothHinge::nesterov`] per §8.2.
+
+use super::Loss;
+use crate::utils::math::clip;
+
+/// Non-smooth hinge loss.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Hinge;
+
+impl Loss for Hinge {
+    fn phi(&self, u: f64, y: f64) -> f64 {
+        (1.0 - y * u).max(0.0)
+    }
+
+    fn grad(&self, u: f64, y: f64) -> f64 {
+        // Subgradient: −y on the active branch, 0 otherwise; at the kink we
+        // return −y (any element of [−y, 0] is valid for y = +1).
+        if y * u < 1.0 {
+            -y
+        } else {
+            0.0
+        }
+    }
+
+    fn conj_neg(&self, alpha: f64, y: f64) -> f64 {
+        let a = y * alpha;
+        if !(0.0..=1.0).contains(&a) {
+            f64::INFINITY
+        } else {
+            -a
+        }
+    }
+
+    fn coordinate_delta(&self, alpha: f64, u: f64, q: f64, y: f64) -> f64 {
+        let a = y * alpha;
+        // q = 0 (empty feature row): the subproblem is linear in δ, so the
+        // box constraint is active — avoid the 0/0 NaN at y·u = 1.
+        let a_new = if q == 0.0 {
+            let slope = 1.0 - y * u;
+            if slope > 0.0 {
+                1.0
+            } else if slope < 0.0 {
+                0.0
+            } else {
+                a
+            }
+        } else {
+            clip(a + (1.0 - y * u) / q, 0.0, 1.0)
+        };
+        y * (a_new - a)
+    }
+
+    fn gamma(&self) -> f64 {
+        0.0
+    }
+
+    fn lipschitz(&self) -> f64 {
+        1.0
+    }
+
+    fn project_dual(&self, alpha: f64, y: f64) -> f64 {
+        y * clip(y * alpha, 0.0, 1.0)
+    }
+
+    fn name(&self) -> &'static str {
+        "hinge"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loss::test_support::*;
+
+    #[test]
+    fn values() {
+        let l = Hinge;
+        assert_eq!(l.phi(2.0, 1.0), 0.0);
+        assert_eq!(l.phi(0.0, 1.0), 1.0);
+        assert_eq!(l.phi(-1.0, 1.0), 2.0);
+        assert_eq!(l.phi(1.0, -1.0), 2.0);
+    }
+
+    #[test]
+    fn lipschitz_bound_holds() {
+        let l = Hinge;
+        for &(a, b, y) in &[(0.0, 1.0, 1.0), (-3.0, 2.5, -1.0), (0.9, 1.1, 1.0)] {
+            assert!((l.phi(a, y) - l.phi(b, y)).abs() <= (a - b).abs() + 1e-12);
+        }
+    }
+
+    #[test]
+    fn conjugate_is_linear_on_box() {
+        let l = Hinge;
+        assert_eq!(l.conj_neg(0.0, 1.0), 0.0);
+        assert_eq!(l.conj_neg(1.0, 1.0), -1.0);
+        assert_eq!(l.conj_neg(0.5, 1.0), -0.5);
+        assert!(l.conj_neg(1.5, 1.0).is_infinite());
+    }
+
+    #[test]
+    fn fenchel_young() {
+        check_fenchel_young(&Hinge, 0x61);
+    }
+
+    #[test]
+    fn coordinate_update_is_optimal() {
+        check_coordinate_optimal(&Hinge, 0x62, 1e-4);
+    }
+
+    #[test]
+    fn theorem_direction_feasible() {
+        let l = Hinge;
+        for &(u, y) in &[(0.5, 1.0), (2.0, 1.0), (-1.0, -1.0)] {
+            assert!(l.conj_neg(l.theorem_direction(u, y), y).is_finite());
+        }
+    }
+}

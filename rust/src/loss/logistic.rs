@@ -1,0 +1,206 @@
+//! Logistic loss `φ(u) = log(1 + exp(−y·u))` — ¼-smooth (γ = 4).
+//!
+//! Conjugate (a := y·α): `φ*(−α) = a·ln(a) + (1−a)·ln(1−a)` for
+//! `a ∈ [0, 1]`, else ∞. The coordinate subproblem
+//!
+//! ```text
+//! max_{a∈(0,1)}  −a·ln a − (1−a)·ln(1−a) − y(a − ā)·u − q(a − ā)²/2
+//! ```
+//!
+//! has no closed form; we maximize it with a safeguarded Newton iteration
+//! (monotone bisection fallback), which is also what the paper's local
+//! ProxSDCA procedure does in practice for LR.
+
+use super::Loss;
+use crate::utils::math::{clip, log1p_exp, xlogx};
+
+/// Logistic loss.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Logistic;
+
+/// Solve `f'(a) = −ln(a/(1−a)) − y·u − q(a − ā) = 0` on (0, 1) by Newton
+/// with bisection safeguard. `f'` is strictly decreasing (f is strictly
+/// concave), so the root is unique; f'(0⁺) = +∞, f'(1⁻) = −∞ guarantee it
+/// exists in the open interval.
+fn solve_coordinate(a_bar: f64, yu: f64, q: f64) -> f64 {
+    let fprime = |a: f64| -(a / (1.0 - a)).ln() - yu - q * (a - a_bar);
+    // Bracket.
+    let (mut lo, mut hi) = (1e-15, 1.0 - 1e-15);
+    // Newton from a reasonable start: the sigmoid of −yu (the unregularized
+    // stationary point), nudged toward ā.
+    let mut a = clip(0.5 * (1.0 / (1.0 + yu.exp()) + a_bar), 1e-12, 1.0 - 1e-12);
+    for _ in 0..100 {
+        let f = fprime(a);
+        // Converged? Check *before* moving, otherwise a fully-converged
+        // Newton point (f ≈ 0, newton == a == bracket edge) would bounce
+        // to the bisection midpoint and the loop could end mid-bounce.
+        if f.abs() < 1e-12 {
+            break;
+        }
+        if f > 0.0 {
+            lo = a;
+        } else {
+            hi = a;
+        }
+        if hi - lo < 1e-16 {
+            break;
+        }
+        // f''(a) = −1/(a(1−a)) − q
+        let fpp = -1.0 / (a * (1.0 - a)) - q;
+        let newton = a - f / fpp;
+        a = if newton > lo && newton < hi {
+            newton
+        } else {
+            0.5 * (lo + hi)
+        };
+    }
+    a
+}
+
+impl Loss for Logistic {
+    fn phi(&self, u: f64, y: f64) -> f64 {
+        log1p_exp(-y * u)
+    }
+
+    fn grad(&self, u: f64, y: f64) -> f64 {
+        // −y·σ(−y·u) computed stably.
+        let z = y * u;
+        let s = if z >= 0.0 {
+            let e = (-z).exp();
+            e / (1.0 + e)
+        } else {
+            1.0 / (1.0 + z.exp())
+        };
+        -y * s
+    }
+
+    fn conj_neg(&self, alpha: f64, y: f64) -> f64 {
+        let a = y * alpha;
+        if !(0.0..=1.0).contains(&a) {
+            f64::INFINITY
+        } else {
+            xlogx(a) + xlogx(1.0 - a)
+        }
+    }
+
+    fn coordinate_delta(&self, alpha: f64, u: f64, q: f64, y: f64) -> f64 {
+        let a_bar = y * alpha;
+        let a_new = solve_coordinate(clip(a_bar, 0.0, 1.0), y * u, q);
+        y * (a_new - a_bar)
+    }
+
+    fn gamma(&self) -> f64 {
+        4.0
+    }
+
+    fn lipschitz(&self) -> f64 {
+        1.0
+    }
+
+    fn project_dual(&self, alpha: f64, y: f64) -> f64 {
+        y * clip(y * alpha, 0.0, 1.0)
+    }
+
+    fn name(&self) -> &'static str {
+        "logistic"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loss::test_support::*;
+    use crate::testing::prop::for_each_case;
+
+    #[test]
+    fn values_and_symmetry() {
+        let l = Logistic;
+        assert!((l.phi(0.0, 1.0) - std::f64::consts::LN_2).abs() < 1e-12);
+        assert!((l.phi(1.0, 1.0) - l.phi(-1.0, -1.0)).abs() < 1e-12);
+        assert!(l.phi(50.0, 1.0) < 1e-20);
+        assert!((l.phi(-50.0, 1.0) - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let l = Logistic;
+        for_each_case(0x71, 100, |g| {
+            let y = g.label();
+            let u = g.f64_in(-5.0, 5.0);
+            let h = 1e-6;
+            let fd = (l.phi(u + h, y) - l.phi(u - h, y)) / (2.0 * h);
+            assert!((l.grad(u, y) - fd).abs() < 1e-6);
+        });
+    }
+
+    #[test]
+    fn conjugate_entropy_values() {
+        let l = Logistic;
+        assert_eq!(l.conj_neg(0.0, 1.0), 0.0);
+        assert_eq!(l.conj_neg(1.0, 1.0), 0.0);
+        let mid = l.conj_neg(0.5, 1.0);
+        assert!((mid + std::f64::consts::LN_2).abs() < 1e-12); // −ln 2
+        assert!(l.conj_neg(-0.2, 1.0).is_infinite());
+    }
+
+    #[test]
+    fn fenchel_young() {
+        check_fenchel_young(&Logistic, 0x72);
+    }
+
+    #[test]
+    fn quarter_smoothness() {
+        check_smoothness(&Logistic, 0x73);
+    }
+
+    #[test]
+    fn coordinate_update_is_optimal() {
+        check_coordinate_optimal(&Logistic, 0x74, 1e-5);
+    }
+
+    #[test]
+    fn newton_handles_extreme_q() {
+        let l = Logistic;
+        for &q in &[1e-8, 1e8] {
+            let d = l.coordinate_delta(0.3, -2.0, q, 1.0);
+            assert!(d.is_finite());
+            assert!(l.conj_neg(0.3 + d, 1.0).is_finite());
+        }
+    }
+
+    #[test]
+    fn newton_matches_golden_section() {
+        // Independent check of the 1-D solver against golden-section search.
+        let l = Logistic;
+        for_each_case(0x75, 30, |g| {
+            let y = g.label();
+            let u = g.f64_in(-3.0, 3.0);
+            let q = g.f64_log_in(1e-2, 1e2);
+            let alpha = l.project_dual(g.f64_in(-1.0, 1.0), y);
+            let delta = l.coordinate_delta(alpha, u, q, y);
+            let obj = |d: f64| coord_obj(&l, alpha, d, u, q, y);
+            // golden-section on δ over the feasible interval
+            let a_bar = y * alpha;
+            let (mut lo, mut hi) = if y > 0.0 {
+                (-a_bar, 1.0 - a_bar)
+            } else {
+                (a_bar - 1.0, a_bar)
+            };
+            let phi = (5f64.sqrt() - 1.0) / 2.0;
+            for _ in 0..200 {
+                let x1 = hi - phi * (hi - lo);
+                let x2 = lo + phi * (hi - lo);
+                if obj(x1) < obj(x2) {
+                    lo = x1;
+                } else {
+                    hi = x2;
+                }
+            }
+            let golden = 0.5 * (lo + hi);
+            assert!(
+                obj(delta) >= obj(golden) - 1e-9,
+                "newton {delta} worse than golden {golden}"
+            );
+        });
+    }
+}

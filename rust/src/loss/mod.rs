@@ -1,0 +1,217 @@
+//! Loss functions `φ_i`, their convex conjugates `φ_i*`, and the
+//! per-coordinate dual maximizers used by the local solvers.
+//!
+//! The paper (§10) evaluates three classification losses — the smooth
+//! hinge (1-smooth), logistic (¼-smooth), and the non-smooth hinge
+//! (1-Lipschitz, handled via Nesterov smoothing per §8.2) — and the
+//! general framework also covers squared loss. Each implementation
+//! provides:
+//!
+//! * the primal value `φ(u)` and a subgradient,
+//! * the conjugate `φ*(−α)` restricted to its effective domain,
+//! * `closed_form_delta`: the exact maximizer of the 1-D dual subproblem
+//!
+//!   ```text
+//!   max_δ  −φ*(−(α + δ)) − δ·u − δ²·q/2        (q = ‖x_i‖²/(λ n_ℓ))
+//!   ```
+//!
+//!   which is the ProxSDCA coordinate step (Shalev-Shwartz & Zhang 2014,
+//!   "option I"); for logistic there is no closed form and a safeguarded
+//!   Newton iteration is used (`solver::scalar`),
+//! * the Theorem-6/7 special update direction `u_i = −∇φ_i(x_iᵀw)`.
+//!
+//! All losses here are scalar (`q = 1` in the paper's `X_i ∈ R^{d×q}`).
+
+mod hinge;
+mod logistic;
+mod smooth_hinge;
+mod squared;
+
+pub use hinge::Hinge;
+pub use logistic::Logistic;
+pub use smooth_hinge::SmoothHinge;
+pub use squared::Squared;
+
+/// A scalar convex loss with label, plus its dual-side interface.
+///
+/// `y` is the example's label; classification losses use `y ∈ {−1, +1}`,
+/// squared loss uses real `y`.
+pub trait Loss: Send + Sync + std::fmt::Debug {
+    /// Primal loss `φ(u)` at margin/prediction `u = x_iᵀ w`.
+    fn phi(&self, u: f64, y: f64) -> f64;
+
+    /// A subgradient `∇φ(u)` (the derivative where smooth).
+    fn grad(&self, u: f64, y: f64) -> f64;
+
+    /// Conjugate `φ*(−α)`. Returns `f64::INFINITY` outside the effective
+    /// domain (e.g. hinge requires `yα ∈ [0, 1]`).
+    fn conj_neg(&self, alpha: f64, y: f64) -> f64;
+
+    /// Exact (or high-precision) maximizer `δ*` of the coordinate dual
+    /// subproblem `max_δ −φ*(−(α+δ)) − δu − δ²q/2`.
+    fn coordinate_delta(&self, alpha: f64, u: f64, q: f64, y: f64) -> f64;
+
+    /// The Theorem-6/7 direction `u_i = −∇φ(u)` (a feasible dual point).
+    fn theorem_direction(&self, u: f64, y: f64) -> f64 {
+        -self.grad(u, y)
+    }
+
+    /// Smoothness constant: `φ` is `(1/γ)`-smooth; `γ = 0` means
+    /// non-smooth (Lipschitz only).
+    fn gamma(&self) -> f64;
+
+    /// Lipschitz constant `L` (∞-safe upper bound for smooth losses too).
+    fn lipschitz(&self) -> f64;
+
+    /// Clamp a dual variable into the conjugate's effective domain
+    /// (identity for losses with full domain).
+    fn project_dual(&self, alpha: f64, y: f64) -> f64;
+
+    /// Loss name (bench output key).
+    fn name(&self) -> &'static str;
+}
+
+/// Enum dispatch over the loss zoo — lets configs choose a loss without
+/// trait objects in the hot loop (the solvers are generic over `L: Loss`,
+/// benches use this enum at the boundary).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LossKind {
+    /// Smooth hinge, γ = 1 (paper Eq. 32).
+    SmoothHinge,
+    /// Logistic, γ = 4 (¼-smooth).
+    Logistic,
+    /// Non-smooth hinge (used with Nesterov smoothing, §8.2).
+    Hinge,
+    /// Squared loss `(u − y)²`.
+    Squared,
+}
+
+impl LossKind {
+    /// Parse from a CLI string.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "smooth_hinge" | "svm" => LossKind::SmoothHinge,
+            "logistic" | "lr" => LossKind::Logistic,
+            "hinge" => LossKind::Hinge,
+            "squared" | "lsq" => LossKind::Squared,
+            other => anyhow::bail!("unknown loss `{other}`"),
+        })
+    }
+
+    /// Canonical name.
+    pub fn name(self) -> &'static str {
+        match self {
+            LossKind::SmoothHinge => "smooth_hinge",
+            LossKind::Logistic => "logistic",
+            LossKind::Hinge => "hinge",
+            LossKind::Squared => "squared",
+        }
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    //! Shared conformance checks every loss must pass; each loss module
+    //! instantiates these against its own implementation.
+    use super::Loss;
+    use crate::testing::prop::{for_each_case, Gen};
+
+    /// Grid-search the coordinate subproblem objective.
+    pub fn grid_best<L: Loss>(loss: &L, alpha: f64, u: f64, q: f64, y: f64) -> f64 {
+        let obj = |delta: f64| {
+            let a = alpha + delta;
+            let c = loss.conj_neg(a, y);
+            if !c.is_finite() {
+                return f64::NEG_INFINITY;
+            }
+            -c - delta * u - 0.5 * q * delta * delta
+        };
+        let mut best = f64::NEG_INFINITY;
+        let mut arg = 0.0;
+        let span = 1.0_f64.max(loss.lipschitz().min(10.0)) * 3.0;
+        let steps = 40_000;
+        for k in 0..=steps {
+            let delta = -span + 2.0 * span * (k as f64) / (steps as f64);
+            let v = obj(delta);
+            if v > best {
+                best = v;
+                arg = delta;
+            }
+        }
+        arg
+    }
+
+    /// The coordinate objective value at a given δ.
+    pub fn coord_obj<L: Loss>(loss: &L, alpha: f64, delta: f64, u: f64, q: f64, y: f64) -> f64 {
+        let c = loss.conj_neg(alpha + delta, y);
+        if !c.is_finite() {
+            return f64::NEG_INFINITY;
+        }
+        -c - delta * u - 0.5 * q * delta * delta
+    }
+
+    /// Fenchel–Young: `φ(u) + φ*(−α) ≥ −α·u`, equality at `α = −∇φ(u)`.
+    pub fn check_fenchel_young<L: Loss>(loss: &L, seed: u64) {
+        for_each_case(seed, 200, |g: &mut Gen| {
+            let y = g.label();
+            let u = g.f64_in(-4.0, 4.0);
+            let alpha = loss.project_dual(g.f64_in(-3.0, 3.0), y);
+            let lhs = loss.phi(u, y) + loss.conj_neg(alpha, y);
+            let rhs = -alpha * u;
+            assert!(
+                lhs >= rhs - 1e-8,
+                "Fenchel-Young violated: φ({u})+φ*(−{alpha}) = {lhs} < {rhs}"
+            );
+            // Equality at the gradient pairing.
+            let a_star = -loss.grad(u, y);
+            let lhs_eq = loss.phi(u, y) + loss.conj_neg(a_star, y);
+            let rhs_eq = -a_star * u;
+            assert!(
+                (lhs_eq - rhs_eq).abs() < 1e-6,
+                "FY equality fails at maximizer: {lhs_eq} vs {rhs_eq} (u={u}, y={y})"
+            );
+        });
+    }
+
+    /// The coordinate update must (a) stay in the dual domain and
+    /// (b) be at least as good as a fine grid search.
+    pub fn check_coordinate_optimal<L: Loss>(loss: &L, seed: u64, tol: f64) {
+        for_each_case(seed, 60, |g: &mut Gen| {
+            let y = g.label();
+            let u = g.f64_in(-3.0, 3.0);
+            let q = g.f64_log_in(1e-3, 1e2);
+            let alpha = loss.project_dual(g.f64_in(-1.5, 1.5), y);
+            let delta = loss.coordinate_delta(alpha, u, q, y);
+            let v_closed = coord_obj(loss, alpha, delta, u, q, y);
+            assert!(
+                v_closed.is_finite(),
+                "update left dual domain: α={alpha} δ={delta} y={y}"
+            );
+            let arg_grid = grid_best(loss, alpha, u, q, y);
+            let v_grid = coord_obj(loss, alpha, arg_grid, u, q, y);
+            assert!(
+                v_closed >= v_grid - tol,
+                "coordinate update suboptimal: {v_closed} < grid {v_grid} \
+                 (α={alpha}, u={u}, q={q}, y={y}, δ={delta}, δ_grid={arg_grid})"
+            );
+        });
+    }
+
+    /// Smoothness: `φ(b) ≤ φ(a) + φ'(a)(b−a) + (b−a)²/(2γ)`.
+    pub fn check_smoothness<L: Loss>(loss: &L, seed: u64) {
+        let gamma = loss.gamma();
+        assert!(gamma > 0.0, "smoothness check requires γ > 0");
+        for_each_case(seed, 200, |g: &mut Gen| {
+            let y = g.label();
+            let a = g.f64_in(-4.0, 4.0);
+            let b = g.f64_in(-4.0, 4.0);
+            let bound = loss.phi(a, y) + loss.grad(a, y) * (b - a)
+                + (b - a) * (b - a) / (2.0 * gamma);
+            assert!(
+                loss.phi(b, y) <= bound + 1e-9,
+                "smoothness violated: φ({b}) = {} > {bound}",
+                loss.phi(b, y)
+            );
+        });
+    }
+}

@@ -1,0 +1,188 @@
+//! Smooth(ed) hinge loss — paper Eq. (32), γ-smooth.
+//!
+//! ```text
+//! φ(u) = 0                 if y·u ≥ 1
+//!        1 − y·u − γ/2     if y·u ≤ 1 − γ
+//!        (1 − y·u)²/(2γ)   otherwise
+//! ```
+//!
+//! With γ = 1 this is the paper's SVM loss (§10); with γ = ε/L² it is the
+//! Nesterov smoothing of the plain hinge used for Figures 12–13 (§8.2) —
+//! smoothing the hinge by adding `(γ/2)‖α‖²` to its conjugate yields
+//! exactly this family, so [`SmoothHinge::nesterov`] is the §8.2
+//! construction.
+//!
+//! Conjugate (a := y·α): `φ*(−α) = −a + (γ/2)a²` for `a ∈ [0, 1]`, else ∞.
+//! The coordinate maximizer is the classic SDCA closed form
+//! `a* = clip(a + (1 − y·u − γ·a)/(γ + q), 0, 1)`.
+
+use super::Loss;
+use crate::utils::math::clip;
+
+/// Smooth hinge with smoothing parameter `γ > 0`.
+#[derive(Clone, Copy, Debug)]
+pub struct SmoothHinge {
+    gamma: f64,
+}
+
+impl Default for SmoothHinge {
+    fn default() -> Self {
+        SmoothHinge::new(1.0)
+    }
+}
+
+impl SmoothHinge {
+    /// Smooth hinge with explicit γ.
+    pub fn new(gamma: f64) -> Self {
+        assert!(gamma > 0.0, "γ must be positive (use `Hinge` for γ = 0)");
+        SmoothHinge { gamma }
+    }
+
+    /// §8.2 Nesterov smoothing of the plain hinge for target accuracy `ε`:
+    /// `γ = ε/L²` with `L = 1`.
+    pub fn nesterov(epsilon: f64) -> Self {
+        SmoothHinge::new(epsilon) // L = 1 for the hinge
+    }
+}
+
+impl Loss for SmoothHinge {
+    fn phi(&self, u: f64, y: f64) -> f64 {
+        let z = y * u;
+        let g = self.gamma;
+        if z >= 1.0 {
+            0.0
+        } else if z <= 1.0 - g {
+            1.0 - z - g / 2.0
+        } else {
+            (1.0 - z) * (1.0 - z) / (2.0 * g)
+        }
+    }
+
+    fn grad(&self, u: f64, y: f64) -> f64 {
+        let z = y * u;
+        let g = self.gamma;
+        if z >= 1.0 {
+            0.0
+        } else if z <= 1.0 - g {
+            -y
+        } else {
+            -y * (1.0 - z) / g
+        }
+    }
+
+    fn conj_neg(&self, alpha: f64, y: f64) -> f64 {
+        let a = y * alpha;
+        if !(0.0..=1.0).contains(&a) {
+            f64::INFINITY
+        } else {
+            -a + self.gamma * a * a / 2.0
+        }
+    }
+
+    fn coordinate_delta(&self, alpha: f64, u: f64, q: f64, y: f64) -> f64 {
+        let a = y * alpha;
+        let a_new = clip(a + (1.0 - y * u - self.gamma * a) / (self.gamma + q), 0.0, 1.0);
+        y * (a_new - a)
+    }
+
+    fn gamma(&self) -> f64 {
+        self.gamma
+    }
+
+    fn lipschitz(&self) -> f64 {
+        1.0
+    }
+
+    fn project_dual(&self, alpha: f64, y: f64) -> f64 {
+        y * clip(y * alpha, 0.0, 1.0)
+    }
+
+    fn name(&self) -> &'static str {
+        "smooth_hinge"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loss::test_support::*;
+
+    #[test]
+    fn values_match_piecewise_definition() {
+        let l = SmoothHinge::new(1.0);
+        assert_eq!(l.phi(2.0, 1.0), 0.0); // z = 2 ≥ 1
+        assert_eq!(l.phi(-1.0, 1.0), 1.5); // z = −1 ≤ 0: 1 − (−1) − ½
+        assert_eq!(l.phi(0.5, 1.0), 0.125); // z = 0.5: (0.5)²/2
+        // label symmetry
+        assert_eq!(l.phi(-0.5, -1.0), l.phi(0.5, 1.0));
+    }
+
+    #[test]
+    fn gradient_is_continuous_at_kinks() {
+        let l = SmoothHinge::new(1.0);
+        for y in [1.0, -1.0] {
+            for z0 in [0.0, 1.0] {
+                let u = y * z0;
+                let eps = 1e-7;
+                let g_left = l.grad(u - eps * y, y);
+                let g_right = l.grad(u + eps * y, y);
+                assert!((g_left - g_right).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn conjugate_domain() {
+        let l = SmoothHinge::new(1.0);
+        assert!(l.conj_neg(0.5, 1.0).is_finite());
+        assert!(l.conj_neg(-0.1, 1.0).is_infinite());
+        assert!(l.conj_neg(1.1, 1.0).is_infinite());
+        // y = −1 flips the feasible interval
+        assert!(l.conj_neg(-0.5, -1.0).is_finite());
+        assert!(l.conj_neg(0.5, -1.0).is_infinite());
+    }
+
+    #[test]
+    fn fenchel_young() {
+        check_fenchel_young(&SmoothHinge::new(1.0), 0x51);
+        check_fenchel_young(&SmoothHinge::new(0.25), 0x52);
+    }
+
+    #[test]
+    fn smoothness_bound() {
+        check_smoothness(&SmoothHinge::new(1.0), 0x53);
+        check_smoothness(&SmoothHinge::new(0.1), 0x54);
+    }
+
+    #[test]
+    fn coordinate_update_is_optimal() {
+        check_coordinate_optimal(&SmoothHinge::new(1.0), 0x55, 1e-6);
+        check_coordinate_optimal(&SmoothHinge::new(0.3), 0x56, 1e-6);
+    }
+
+    #[test]
+    fn theorem_direction_is_feasible() {
+        let l = SmoothHinge::new(1.0);
+        for &(u, y) in &[(0.5, 1.0), (-2.0, 1.0), (3.0, -1.0), (0.0, -1.0)] {
+            let dir = l.theorem_direction(u, y);
+            assert!(l.conj_neg(dir, y).is_finite(), "u_i outside dual domain");
+        }
+    }
+
+    #[test]
+    fn nesterov_construction_shrinks_gap_bound() {
+        // 0 ≤ φ̃(u) − φ_hinge(u) ≤ γL²/2 (paper §8.2)
+        let eps = 0.01;
+        let smooth = SmoothHinge::nesterov(eps);
+        let hinge = crate::loss::Hinge;
+        for &u in &[-2.0, -0.5, 0.0, 0.3, 0.99, 1.0, 2.0] {
+            for &y in &[1.0, -1.0] {
+                let diff = hinge.phi(u, y) - smooth.phi(u, y);
+                assert!(
+                    (0.0..=eps / 2.0 + 1e-12).contains(&diff),
+                    "smoothing gap {diff} outside [0, γ/2] at u={u}"
+                );
+            }
+        }
+    }
+}

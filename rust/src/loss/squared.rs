@@ -1,0 +1,111 @@
+//! Squared loss `φ(u) = (u − y)²` — 2-smooth (γ = ½), unbounded dual.
+//!
+//! Conjugate: `φ*(s) = s·y + s²/4`, so `φ*(−α) = −α·y + α²/4` with full
+//! domain. Coordinate maximizer is the ridge-regression closed form
+//! `δ* = (y − u − α/2)/(½ + q)`.
+//!
+//! This is the loss of the paper's motivating L2-L1 regularized least
+//! squares example (§4) and gives us a closed-form global optimum to
+//! cross-check the whole DADM stack against (ridge when μ = 0).
+
+use super::Loss;
+
+/// Squared loss for regression.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Squared;
+
+impl Loss for Squared {
+    fn phi(&self, u: f64, y: f64) -> f64 {
+        (u - y) * (u - y)
+    }
+
+    fn grad(&self, u: f64, y: f64) -> f64 {
+        2.0 * (u - y)
+    }
+
+    fn conj_neg(&self, alpha: f64, y: f64) -> f64 {
+        -alpha * y + alpha * alpha / 4.0
+    }
+
+    fn coordinate_delta(&self, alpha: f64, u: f64, q: f64, y: f64) -> f64 {
+        (y - u - alpha / 2.0) / (0.5 + q)
+    }
+
+    fn gamma(&self) -> f64 {
+        0.5
+    }
+
+    fn lipschitz(&self) -> f64 {
+        f64::INFINITY
+    }
+
+    fn project_dual(&self, alpha: f64, _y: f64) -> f64 {
+        alpha
+    }
+
+    fn name(&self) -> &'static str {
+        "squared"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loss::test_support::*;
+    use crate::loss::Loss;
+    use crate::testing::prop::for_each_case;
+
+    #[test]
+    fn values_and_grad() {
+        let l = Squared;
+        assert_eq!(l.phi(3.0, 1.0), 4.0);
+        assert_eq!(l.grad(3.0, 1.0), 4.0);
+        assert_eq!(l.phi(1.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn conjugate_identity() {
+        // φ*(s) = sup_u [s·u − (u−y)²] = s·y + s²/4, checked numerically.
+        let l = Squared;
+        for_each_case(0x81, 100, |g| {
+            let y = g.f64_in(-2.0, 2.0);
+            let s = g.f64_in(-3.0, 3.0);
+            let mut best = f64::NEG_INFINITY;
+            let mut u = -30.0;
+            while u <= 30.0 {
+                best = best.max(s * u - (u - y) * (u - y));
+                u += 1e-3;
+            }
+            assert!((l.conj_neg(-s, y) - best).abs() < 1e-5);
+        });
+    }
+
+    #[test]
+    fn fenchel_young() {
+        check_fenchel_young(&Squared, 0x82);
+    }
+
+    #[test]
+    fn half_smoothness() {
+        check_smoothness(&Squared, 0x83);
+    }
+
+    #[test]
+    fn coordinate_update_is_optimal() {
+        check_coordinate_optimal(&Squared, 0x84, 1e-6);
+    }
+
+    #[test]
+    fn coordinate_update_closed_form_is_stationary() {
+        // f'(δ*) = 0 analytically: y − u − (α+δ*)/2 − qδ* = 0.
+        let l = Squared;
+        for_each_case(0x85, 100, |g| {
+            let (y, u) = (g.f64_in(-2.0, 2.0), g.f64_in(-2.0, 2.0));
+            let q = g.f64_log_in(1e-3, 1e3);
+            let alpha = g.f64_in(-2.0, 2.0);
+            let d = l.coordinate_delta(alpha, u, q, y);
+            let stationarity = y - u - (alpha + d) / 2.0 - q * d;
+            assert!(stationarity.abs() < 1e-9);
+        });
+    }
+}

@@ -1,0 +1,9 @@
+//! `dadm` — leader entrypoint / experiment launcher.
+//!
+//! See `dadm --help` for usage; all logic lives in [`dadm::cli`] so the
+//! launcher is testable in-process.
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    dadm::cli::main_with_args(&args)
+}

@@ -1,0 +1,157 @@
+//! Minimal bench harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets are plain `harness = false` binaries built on
+//! this module: [`time_it`] measures a closure with warmup + repeated
+//! timed runs and reports median/min/max; [`BenchTable`] accumulates rows
+//! and renders both an aligned console table (mirroring the paper's
+//! figures' series) and a CSV file under `target/bench_out/`.
+
+use std::io::Write;
+use std::time::Instant;
+
+/// Timing summary over repeated runs.
+#[derive(Clone, Copy, Debug)]
+pub struct Timing {
+    /// Median seconds per run.
+    pub median: f64,
+    /// Fastest run.
+    pub min: f64,
+    /// Slowest run.
+    pub max: f64,
+    /// Number of timed runs.
+    pub runs: usize,
+}
+
+/// Time `f` with `warmup` untimed runs and `runs` timed runs.
+pub fn time_it<F: FnMut()>(warmup: usize, runs: usize, mut f: F) -> Timing {
+    assert!(runs >= 1);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<f64> = (0..runs)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Timing {
+        median: samples[samples.len() / 2],
+        min: samples[0],
+        max: *samples.last().unwrap(),
+        runs,
+    }
+}
+
+/// A column-aligned results table that also writes CSV.
+#[derive(Debug)]
+pub struct BenchTable {
+    name: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl BenchTable {
+    /// Create a table with a bench name and column headers.
+    pub fn new(name: &str, header: &[&str]) -> Self {
+        BenchTable {
+            name: name.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    /// Append a row (stringified cells).
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "ragged bench row");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render to stdout and persist CSV to `target/bench_out/<name>.csv`.
+    pub fn finish(&self) {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        println!("\n== {} ==", self.name);
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("{}", fmt_row(&self.header));
+        for row in &self.rows {
+            println!("{}", fmt_row(row));
+        }
+        if let Err(e) = self.write_csv() {
+            eprintln!("warning: could not write bench CSV: {e}");
+        }
+    }
+
+    fn write_csv(&self) -> std::io::Result<()> {
+        let dir = std::path::Path::new("target/bench_out");
+        std::fs::create_dir_all(dir)?;
+        let mut f = std::fs::File::create(dir.join(format!("{}.csv", self.name)))?;
+        writeln!(f, "{}", self.header.join(","))?;
+        for row in &self.rows {
+            writeln!(f, "{}", row.join(","))?;
+        }
+        Ok(())
+    }
+}
+
+/// Format seconds with an adaptive unit.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_measures_positive() {
+        let mut x = 0u64;
+        let t = time_it(1, 5, || {
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+        });
+        assert!(t.median > 0.0);
+        assert!(t.min <= t.median && t.median <= t.max);
+        assert_eq!(t.runs, 5);
+        assert!(x > 0 || x == 0); // keep x live
+    }
+
+    #[test]
+    fn table_rejects_ragged_rows() {
+        let mut t = BenchTable::new("test", &["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            t.row(&["only-one".into()])
+        }));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn fmt_secs_units() {
+        assert!(fmt_secs(2.5).ends_with('s'));
+        assert!(fmt_secs(2.5e-3).ends_with("ms"));
+        assert!(fmt_secs(2.5e-6).ends_with("µs"));
+        assert!(fmt_secs(2.5e-9).ends_with("ns"));
+    }
+}

@@ -1,0 +1,8 @@
+//! Metrics: convergence traces, timing decomposition, CSV emission, and
+//! the in-tree bench harness (criterion is unavailable offline).
+
+pub mod bench;
+pub mod plot;
+pub mod trace;
+
+pub use trace::{RoundRecord, Trace};

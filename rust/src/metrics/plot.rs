@@ -1,0 +1,216 @@
+//! ASCII line plots for convergence curves.
+//!
+//! The paper's Figures 1–5 and 12–13 are log-scale duality-gap curves;
+//! the benches render the same curves directly in the terminal (and the
+//! CSVs remain available for external plotting). Multiple series share
+//! one canvas with per-series glyphs.
+
+/// One named series of `(x, y)` points.
+#[derive(Clone, Debug)]
+pub struct Series {
+    /// Legend label.
+    pub label: String,
+    /// Points (x must be non-decreasing).
+    pub points: Vec<(f64, f64)>,
+}
+
+/// Plot configuration.
+#[derive(Clone, Debug)]
+pub struct PlotSpec {
+    /// Canvas width in characters (data area).
+    pub width: usize,
+    /// Canvas height in characters.
+    pub height: usize,
+    /// Log-scale the y axis.
+    pub log_y: bool,
+    /// Axis labels.
+    pub x_label: String,
+    /// Y-axis label.
+    pub y_label: String,
+}
+
+impl Default for PlotSpec {
+    fn default() -> Self {
+        PlotSpec {
+            width: 64,
+            height: 16,
+            log_y: true,
+            x_label: "communications".into(),
+            y_label: "normalized gap".into(),
+        }
+    }
+}
+
+const GLYPHS: [char; 6] = ['*', 'o', '+', 'x', '#', '@'];
+
+/// Render series onto an ASCII canvas and return it as a string.
+pub fn render(spec: &PlotSpec, series: &[Series]) -> String {
+    let mut pts: Vec<(f64, f64)> = Vec::new();
+    for s in series {
+        for &(x, y) in &s.points {
+            if y.is_finite() && (!spec.log_y || y > 0.0) {
+                pts.push((x, y));
+            }
+        }
+    }
+    if pts.is_empty() {
+        return "(no finite points to plot)\n".into();
+    }
+    let ymap = |y: f64| if spec.log_y { y.log10() } else { y };
+    let (mut x_min, mut x_max) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y_min, mut y_max) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &pts {
+        x_min = x_min.min(x);
+        x_max = x_max.max(x);
+        y_min = y_min.min(ymap(y));
+        y_max = y_max.max(ymap(y));
+    }
+    if (x_max - x_min).abs() < 1e-300 {
+        x_max = x_min + 1.0;
+    }
+    if (y_max - y_min).abs() < 1e-300 {
+        y_max = y_min + 1.0;
+    }
+
+    let (w, h) = (spec.width, spec.height);
+    let mut canvas = vec![vec![' '; w]; h];
+    for (si, s) in series.iter().enumerate() {
+        let glyph = GLYPHS[si % GLYPHS.len()];
+        for &(x, y) in &s.points {
+            if !y.is_finite() || (spec.log_y && y <= 0.0) {
+                continue;
+            }
+            let cx = ((x - x_min) / (x_max - x_min) * (w - 1) as f64).round() as usize;
+            let cy = ((ymap(y) - y_min) / (y_max - y_min) * (h - 1) as f64).round() as usize;
+            let row = h - 1 - cy.min(h - 1);
+            canvas[row][cx.min(w - 1)] = glyph;
+        }
+    }
+
+    let mut out = String::new();
+    let y_hi = if spec.log_y {
+        format!("1e{y_max:.1}")
+    } else {
+        format!("{y_max:.3}")
+    };
+    let y_lo = if spec.log_y {
+        format!("1e{y_min:.1}")
+    } else {
+        format!("{y_min:.3}")
+    };
+    out.push_str(&format!("{} ({})\n", spec.y_label, y_hi));
+    for row in &canvas {
+        out.push_str("  |");
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str("  +");
+    out.push_str(&"-".repeat(w));
+    out.push('\n');
+    out.push_str(&format!(
+        "   {:<10}{:^width$}{:>10}  ({})\n",
+        format!("{x_min:.0}"),
+        &spec.x_label,
+        format!("{x_max:.0}"),
+        y_lo,
+        width = w.saturating_sub(20),
+    ));
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!("   {} {}\n", GLYPHS[si % GLYPHS.len()], s.label));
+    }
+    out
+}
+
+/// Convenience: gap-vs-communications series from a [`super::Trace`].
+pub fn series_from_trace(label: &str, trace: &super::Trace) -> Series {
+    let n = trace.n as f64;
+    Series {
+        label: label.to_string(),
+        points: trace
+            .rounds
+            .iter()
+            .map(|r| (r.round as f64, r.gap() / n))
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> PlotSpec {
+        PlotSpec {
+            width: 20,
+            height: 6,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn renders_points_within_canvas() {
+        let s = Series {
+            label: "a".into(),
+            points: (0..10).map(|i| (i as f64, 10f64.powi(-i))).collect(),
+        };
+        let out = render(&spec(), &[s]);
+        assert!(out.contains('*'));
+        assert!(out.contains("a"));
+        // Every canvas row is prefixed and bounded.
+        for line in out.lines().filter(|l| l.starts_with("  |")) {
+            assert!(line.len() <= 3 + 20);
+        }
+    }
+
+    #[test]
+    fn multiple_series_get_distinct_glyphs() {
+        let a = Series {
+            label: "one".into(),
+            points: vec![(0.0, 1.0), (1.0, 0.1)],
+        };
+        let b = Series {
+            label: "two".into(),
+            points: vec![(0.0, 0.5), (1.0, 0.05)],
+        };
+        let out = render(&spec(), &[a, b]);
+        assert!(out.contains('*') && out.contains('o'));
+    }
+
+    #[test]
+    fn ignores_nonpositive_on_log_scale() {
+        let s = Series {
+            label: "z".into(),
+            points: vec![(0.0, 0.0), (1.0, -1.0)],
+        };
+        let out = render(&spec(), &[s]);
+        assert!(out.contains("no finite points"));
+    }
+
+    #[test]
+    fn linear_scale_handles_zero() {
+        let mut sp = spec();
+        sp.log_y = false;
+        let s = Series {
+            label: "lin".into(),
+            points: vec![(0.0, 0.0), (1.0, 1.0)],
+        };
+        let out = render(&sp, &[s]);
+        assert!(out.contains('*'));
+    }
+
+    #[test]
+    fn trace_conversion_normalizes() {
+        use crate::metrics::{RoundRecord, Trace};
+        let mut t = Trace::new(100);
+        t.push(RoundRecord {
+            round: 1,
+            passes: 0.2,
+            primal: 60.0,
+            dual: 10.0,
+            compute_secs: 0.0,
+            comm_secs: 0.0,
+            wall_secs: 0.0,
+        });
+        let s = series_from_trace("t", &t);
+        assert_eq!(s.points, vec![(1.0, 0.5)]);
+    }
+}

@@ -1,0 +1,168 @@
+//! Convergence traces — one record per communication round, carrying
+//! everything the paper's figures plot: duality gap, primal objective,
+//! passes over the data, modeled compute/communication time.
+
+use std::io::Write;
+
+/// One communication round's measurements.
+#[derive(Clone, Debug)]
+pub struct RoundRecord {
+    /// Communication round index (1-based; round 0 = initial state).
+    pub round: usize,
+    /// Cumulative passes over the data (`Σ sp` per round).
+    pub passes: f64,
+    /// Primal objective `P(w)` (unnormalized).
+    pub primal: f64,
+    /// Dual objective `D(α, β)` (unnormalized).
+    pub dual: f64,
+    /// Cumulative modeled compute seconds (max over machines per round).
+    pub compute_secs: f64,
+    /// Cumulative modeled communication seconds.
+    pub comm_secs: f64,
+    /// Cumulative real wall-clock seconds.
+    pub wall_secs: f64,
+}
+
+impl RoundRecord {
+    /// Duality gap `P − D`.
+    pub fn gap(&self) -> f64 {
+        self.primal - self.dual
+    }
+
+    /// Total modeled time (compute + comm).
+    pub fn modeled_secs(&self) -> f64 {
+        self.compute_secs + self.comm_secs
+    }
+}
+
+/// A full solve trace.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    /// Per-round records in order.
+    pub rounds: Vec<RoundRecord>,
+    /// Problem size `n` (for normalized plots).
+    pub n: usize,
+}
+
+impl Trace {
+    /// New empty trace for a problem with `n` examples.
+    pub fn new(n: usize) -> Self {
+        Trace { rounds: vec![], n }
+    }
+
+    /// Append a record.
+    pub fn push(&mut self, r: RoundRecord) {
+        self.rounds.push(r);
+    }
+
+    /// Last record, if any.
+    pub fn last(&self) -> Option<&RoundRecord> {
+        self.rounds.last()
+    }
+
+    /// Normalized duality gap `(P − D)/n` per round — the y-axis of
+    /// Figures 1–5, 12–13.
+    pub fn normalized_gaps(&self) -> Vec<f64> {
+        let n = self.n as f64;
+        self.rounds.iter().map(|r| r.gap() / n).collect()
+    }
+
+    /// First round index whose normalized gap ≤ `eps`, if reached — the
+    /// y-axis of the scalability Figures 8/10.
+    pub fn rounds_to_gap(&self, eps: f64) -> Option<usize> {
+        let n = self.n as f64;
+        self.rounds
+            .iter()
+            .find(|r| r.gap() / n <= eps)
+            .map(|r| r.round)
+    }
+
+    /// Modeled time until the normalized gap reaches `eps` — Figures 9/11.
+    pub fn time_to_gap(&self, eps: f64) -> Option<f64> {
+        let n = self.n as f64;
+        self.rounds
+            .iter()
+            .find(|r| r.gap() / n <= eps)
+            .map(|r| r.modeled_secs())
+    }
+
+    /// Write the trace as CSV.
+    pub fn write_csv<W: Write>(&self, mut w: W) -> std::io::Result<()> {
+        writeln!(
+            w,
+            "round,passes,primal,dual,gap,norm_gap,compute_secs,comm_secs,wall_secs"
+        )?;
+        let n = self.n as f64;
+        for r in &self.rounds {
+            writeln!(
+                w,
+                "{},{},{},{},{},{},{},{},{}",
+                r.round,
+                r.passes,
+                r.primal,
+                r.dual,
+                r.gap(),
+                r.gap() / n,
+                r.compute_secs,
+                r.comm_secs,
+                r.wall_secs
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: usize, gap: f64, comm: f64) -> RoundRecord {
+        RoundRecord {
+            round,
+            passes: round as f64 * 0.2,
+            primal: 10.0 + gap,
+            dual: 10.0,
+            compute_secs: round as f64 * 0.1,
+            comm_secs: comm,
+            wall_secs: round as f64 * 0.15,
+        }
+    }
+
+    #[test]
+    fn gap_and_normalization() {
+        let mut t = Trace::new(100);
+        t.push(rec(1, 50.0, 0.01));
+        t.push(rec(2, 5.0, 0.02));
+        assert_eq!(t.normalized_gaps(), vec![0.5, 0.05]);
+    }
+
+    #[test]
+    fn rounds_to_gap_finds_first_crossing() {
+        let mut t = Trace::new(10);
+        t.push(rec(1, 10.0, 0.0));
+        t.push(rec(2, 0.5, 0.0));
+        t.push(rec(3, 0.05, 0.0));
+        assert_eq!(t.rounds_to_gap(0.06), Some(2));
+        assert_eq!(t.rounds_to_gap(1e-9), None);
+    }
+
+    #[test]
+    fn time_to_gap_uses_modeled_time() {
+        let mut t = Trace::new(10);
+        t.push(rec(1, 10.0, 1.0));
+        t.push(rec(2, 0.1, 2.0));
+        let secs = t.time_to_gap(0.02).unwrap();
+        assert!((secs - (0.2 + 2.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut t = Trace::new(10);
+        t.push(rec(1, 1.0, 0.0));
+        let mut buf = Vec::new();
+        t.write_csv(&mut buf).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.starts_with("round,passes,primal"));
+        assert_eq!(text.lines().count(), 2);
+    }
+}

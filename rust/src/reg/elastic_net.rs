@@ -1,0 +1,134 @@
+//! Elastic-net regularizer `g(w) = ½‖w‖₂² + τ‖w‖₁` (1-strongly convex).
+//!
+//! This is the paper's experimental `g` with `τ = μ/λ` (§10, "we choose
+//! `λg(w) = (λ/2)‖w‖² + μ‖w‖₁`"); `τ = 0` gives plain L2. Closed forms:
+//!
+//! * `∇g*(v) = soft_threshold(v, τ)` elementwise,
+//! * `g*(v) = ½‖soft_threshold(v, τ)‖²`.
+//!
+//! The Acc-DADM inner problem replaces `g` by
+//! `f(w) = (λ/λ̃)g(w) + (κ/2λ̃)‖w‖²  = ½‖w‖² + (μ/λ̃)‖w‖₁` (§9.8), i.e.
+//! *another* `ElasticNet` with `τ = μ/λ̃` — constructed by the coordinator
+//! via [`ElasticNet::new`].
+
+use super::Regularizer;
+use crate::utils::math::{l1_norm, l2_norm_sq, soft_threshold_scalar};
+
+/// `g(w) = ½‖w‖² + τ‖w‖₁`.
+#[derive(Clone, Copy, Debug)]
+pub struct ElasticNet {
+    tau: f64,
+}
+
+impl ElasticNet {
+    /// Build with L1 weight `τ ≥ 0`.
+    pub fn new(tau: f64) -> Self {
+        assert!(tau >= 0.0 && tau.is_finite(), "invalid τ = {tau}");
+        ElasticNet { tau }
+    }
+
+    /// Plain L2: `g(w) = ½‖w‖²`.
+    pub fn l2() -> Self {
+        ElasticNet::new(0.0)
+    }
+
+    /// The L1 weight τ.
+    pub fn tau(&self) -> f64 {
+        self.tau
+    }
+}
+
+impl Regularizer for ElasticNet {
+    fn value(&self, w: &[f64]) -> f64 {
+        0.5 * l2_norm_sq(w) + self.tau * l1_norm(w)
+    }
+
+    fn conj(&self, v: &[f64]) -> f64 {
+        v.iter()
+            .map(|&vj| {
+                let wj = soft_threshold_scalar(vj, self.tau);
+                0.5 * wj * wj
+            })
+            .sum()
+    }
+
+    fn grad_conj_at(&self, _j: usize, vj: f64) -> f64 {
+        soft_threshold_scalar(vj, self.tau)
+    }
+
+    fn grad_conj_into(&self, v: &[f64], w: &mut [f64]) {
+        debug_assert_eq!(v.len(), w.len());
+        if self.tau == 0.0 {
+            w.copy_from_slice(v);
+        } else {
+            for (wj, &vj) in w.iter_mut().zip(v) {
+                *wj = soft_threshold_scalar(vj, self.tau);
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "elastic_net"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::for_each_case;
+
+    #[test]
+    fn l2_special_case_is_identity_map() {
+        let r = ElasticNet::l2();
+        let v = vec![1.5, -2.0, 0.0];
+        assert_eq!(r.grad_conj(&v), v);
+        assert_eq!(r.conj(&v), 0.5 * (1.5f64 * 1.5 + 4.0));
+        assert_eq!(r.value(&v), r.conj(&v)); // self-conjugate
+    }
+
+    #[test]
+    fn grad_conj_soft_thresholds() {
+        let r = ElasticNet::new(1.0);
+        assert_eq!(r.grad_conj(&[2.0, -2.0, 0.5]), vec![1.0, -1.0, 0.0]);
+    }
+
+    #[test]
+    fn conj_matches_sup_definition() {
+        // g*(v) = sup_w vᵀw − g(w), checked by 1-D grid (g separable).
+        let r = ElasticNet::new(0.7);
+        for_each_case(0xA1, 50, |g| {
+            let v = g.f64_in(-3.0, 3.0);
+            let mut best = f64::NEG_INFINITY;
+            let mut w = -5.0;
+            while w <= 5.0 {
+                best = best.max(v * w - 0.5 * w * w - 0.7 * w.abs());
+                w += 1e-4;
+            }
+            let got = r.conj(&[v]);
+            assert!((got - best).abs() < 1e-6, "g*({v}) = {got}, grid {best}");
+        });
+    }
+
+    #[test]
+    fn value_is_one_strongly_convex() {
+        // g(w) − ½‖w‖² = τ‖w‖₁ convex ⇒ strong convexity modulus exactly 1;
+        // spot-check the inequality g(b) ≥ g(a) + ∂g(a)ᵀ(b−a) + ½‖b−a‖².
+        let r = ElasticNet::new(0.3);
+        for_each_case(0xA2, 100, |g| {
+            let d = g.usize_in(1, 6);
+            let a = g.vec_f64(d, -2.0, 2.0);
+            let b = g.vec_f64(d, -2.0, 2.0);
+            // subgradient of g at a: a + τ·sign(a) (choose 0 at 0)
+            let sub: Vec<f64> = a.iter().map(|&x| x + 0.3 * x.signum()).collect();
+            let lin: f64 = sub.iter().zip(b.iter().zip(&a)).map(|(s, (x, y))| s * (x - y)).sum();
+            let quad: f64 = b.iter().zip(&a).map(|(x, y)| (x - y) * (x - y)).sum::<f64>() * 0.5;
+            assert!(r.value(&b) + 1e-9 >= r.value(&a) + lin + quad);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_negative_tau() {
+        ElasticNet::new(-0.1);
+    }
+}

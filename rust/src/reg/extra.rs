@@ -1,0 +1,229 @@
+//! The extra convex regularizer `h(w)` and its dual-side interface.
+//!
+//! §5–§6 of the paper allow an arbitrary convex `h` whose conjugate
+//! `h*(Σ_ℓ β_ℓ)` couples the machines; `h = 0` (the experiments' choice)
+//! makes `h*` the indicator of `{0}`, i.e. the constraint `Σβ_ℓ = 0`.
+//! §6's sparse-group-lasso discussion assigns the group norm
+//! `h(w) = λ₁ Σ_G ‖w_G‖₂` to `h` so local updates keep closed form and
+//! only the global synchronization (Proposition 4) pays for the group
+//! prox — both are implemented here.
+
+/// Extra convex regularizer `h` with the maps the global step needs.
+pub trait ExtraReg: Send + Sync + std::fmt::Debug {
+    /// `h(w)`.
+    fn value(&self, w: &[f64]) -> f64;
+
+    /// `h*(b)` where `b = Σ_ℓ β_ℓ` (often an indicator: 0 or +∞).
+    fn conj(&self, b: &[f64]) -> f64;
+
+    /// Proximal map `argmin_w ½‖w − z‖² + scale·h(w)` — the Proposition-4
+    /// global synchronization step uses this with `scale = 1/(λn)` after
+    /// the elastic-net soft-threshold.
+    fn prox(&self, z: &[f64], scale: f64) -> Vec<f64>;
+
+    /// Name for bench output.
+    fn name(&self) -> &'static str;
+}
+
+/// `h = 0` — the experiments' default; `h*` is the indicator of `{0}`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Zero;
+
+impl ExtraReg for Zero {
+    fn value(&self, _w: &[f64]) -> f64 {
+        0.0
+    }
+
+    fn conj(&self, b: &[f64]) -> f64 {
+        // Indicator of {0}; tolerate numerical dust from the allreduce.
+        if b.iter().all(|&x| x.abs() < 1e-9) {
+            0.0
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    fn prox(&self, z: &[f64], _scale: f64) -> Vec<f64> {
+        z.to_vec()
+    }
+
+    fn name(&self) -> &'static str {
+        "zero"
+    }
+}
+
+/// Group lasso `h(w) = weight · Σ_G ‖w_G‖₂` over disjoint index groups.
+#[derive(Clone, Debug)]
+pub struct GroupLasso {
+    groups: Vec<std::ops::Range<usize>>,
+    weight: f64,
+}
+
+impl GroupLasso {
+    /// Build from disjoint, sorted index ranges covering ≤ the dimension.
+    pub fn new(groups: Vec<std::ops::Range<usize>>, weight: f64) -> Self {
+        assert!(weight >= 0.0);
+        for pair in groups.windows(2) {
+            assert!(
+                pair[0].end <= pair[1].start,
+                "groups must be disjoint and sorted"
+            );
+        }
+        GroupLasso { groups, weight }
+    }
+
+    /// Contiguous equal-size groups over dimension `d`.
+    pub fn contiguous(d: usize, group_size: usize, weight: f64) -> Self {
+        assert!(group_size >= 1);
+        let groups = (0..d)
+            .step_by(group_size)
+            .map(|s| s..(s + group_size).min(d))
+            .collect();
+        GroupLasso::new(groups, weight)
+    }
+
+    fn group_norm(w: &[f64], g: &std::ops::Range<usize>) -> f64 {
+        w[g.clone()].iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+}
+
+impl ExtraReg for GroupLasso {
+    fn value(&self, w: &[f64]) -> f64 {
+        self.weight
+            * self
+                .groups
+                .iter()
+                .map(|g| Self::group_norm(w, g))
+                .sum::<f64>()
+    }
+
+    fn conj(&self, b: &[f64]) -> f64 {
+        // h* = indicator{ ‖b_G‖₂ ≤ weight ∀G } ∪ {b = 0 off-group}.
+        let covered: Vec<bool> = {
+            let mut c = vec![false; b.len()];
+            for g in &self.groups {
+                for j in g.clone() {
+                    c[j] = true;
+                }
+            }
+            c
+        };
+        for (j, &bj) in b.iter().enumerate() {
+            if !covered[j] && bj.abs() > 1e-9 {
+                return f64::INFINITY;
+            }
+        }
+        for g in &self.groups {
+            if Self::group_norm(b, g) > self.weight + 1e-9 {
+                return f64::INFINITY;
+            }
+        }
+        0.0
+    }
+
+    fn prox(&self, z: &[f64], scale: f64) -> Vec<f64> {
+        // Group soft-threshold (block shrinkage): w_G = max(0, 1 − c/‖z_G‖)·z_G.
+        let c = scale * self.weight;
+        let mut w = z.to_vec();
+        for g in &self.groups {
+            let norm = Self::group_norm(z, g);
+            let shrink = if norm > c { 1.0 - c / norm } else { 0.0 };
+            for j in g.clone() {
+                w[j] = shrink * z[j];
+            }
+        }
+        w
+    }
+
+    fn name(&self) -> &'static str {
+        "group_lasso"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::for_each_case;
+
+    #[test]
+    fn zero_is_trivial() {
+        let h = Zero;
+        assert_eq!(h.value(&[1.0, 2.0]), 0.0);
+        assert_eq!(h.conj(&[0.0, 0.0]), 0.0);
+        assert!(h.conj(&[0.1, 0.0]).is_infinite());
+        assert_eq!(h.prox(&[1.0, -2.0], 0.5), vec![1.0, -2.0]);
+    }
+
+    #[test]
+    fn group_lasso_value() {
+        let h = GroupLasso::contiguous(4, 2, 2.0);
+        // groups {0,1}, {2,3}: 2·(5 + 13^.5)
+        let w = [3.0, 4.0, 2.0, 3.0];
+        assert!((h.value(&w) - 2.0 * (5.0 + 13f64.sqrt())).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prox_kills_small_groups_keeps_direction() {
+        let h = GroupLasso::contiguous(4, 2, 1.0);
+        let z = [3.0, 4.0, 0.1, 0.1];
+        let w = h.prox(&z, 1.0);
+        // group 1: ‖z‖=5 > 1 ⇒ scaled by 4/5
+        assert!((w[0] - 2.4).abs() < 1e-12);
+        assert!((w[1] - 3.2).abs() < 1e-12);
+        // group 2: ‖z‖ < 1 ⇒ zeroed
+        assert_eq!(&w[2..], &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn prox_matches_grid_search_1d_groups() {
+        // With singleton groups the prox must equal scalar soft-threshold.
+        let h = GroupLasso::contiguous(1, 1, 0.7);
+        for_each_case(0xB1, 50, |g| {
+            let z = g.f64_in(-3.0, 3.0);
+            let scale = g.f64_log_in(0.1, 10.0);
+            let got = h.prox(&[z], scale)[0];
+            let want = crate::utils::math::soft_threshold_scalar(z, 0.7 * scale);
+            assert!((got - want).abs() < 1e-12);
+        });
+    }
+
+    #[test]
+    fn prox_is_optimal_by_perturbation() {
+        let h = GroupLasso::contiguous(6, 3, 1.5);
+        for_each_case(0xB2, 40, |g| {
+            let z = g.vec_f64(6, -2.0, 2.0);
+            let scale = g.f64_log_in(0.05, 5.0);
+            let w = h.prox(&z, scale);
+            let obj = |w: &[f64]| {
+                0.5 * w
+                    .iter()
+                    .zip(&z)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum::<f64>()
+                    + scale * h.value(w)
+            };
+            let base = obj(&w);
+            // Random perturbations must not improve the objective.
+            for _ in 0..20 {
+                let pert: Vec<f64> = w
+                    .iter()
+                    .map(|&x| x + g.f64_in(-0.05, 0.05))
+                    .collect();
+                assert!(obj(&pert) >= base - 1e-9);
+            }
+        });
+    }
+
+    #[test]
+    fn conj_indicator() {
+        let h = GroupLasso::contiguous(2, 2, 1.0);
+        assert_eq!(h.conj(&[0.6, 0.6]), 0.0); // ‖b‖ ≈ 0.85 ≤ 1
+        assert!(h.conj(&[1.0, 1.0]).is_infinite()); // ‖b‖ ≈ 1.41 > 1
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_overlapping_groups() {
+        GroupLasso::new(vec![0..3, 2..5], 1.0);
+    }
+}

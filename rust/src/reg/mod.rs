@@ -1,0 +1,110 @@
+//! Regularizers: the strongly convex `g` and the extra convex term `h`
+//! of the paper's primal problem `P(w) = Σφ_i(X_iᵀw) + λn·g(w) + h(w)`.
+//!
+//! The experiments (§10) use `λ·g(w) = (λ/2)‖w‖² + μ‖w‖₁` with `h = 0`;
+//! §6 motivates the `g`/`h` split with sparse group lasso, where the group
+//! norm goes into `h` so the *local* updates keep closed form and only the
+//! (rare) global synchronization step pays for the group prox. Both are
+//! implemented: [`ElasticNet`] for `g`, [`GroupLasso`]/[`Zero`] for `h`.
+
+mod elastic_net;
+mod extra;
+mod shifted;
+
+pub use elastic_net::ElasticNet;
+pub use extra::{ExtraReg, GroupLasso, Zero};
+pub use shifted::ShiftedElasticNet;
+
+/// A 1-strongly-convex regularizer `g` with the conjugate-side maps the
+/// dual solvers need.
+///
+/// All `g` in this crate are *separable* (`∇g*` acts elementwise), which
+/// the sequential ProxSDCA inner loop exploits to refresh only the
+/// touched coordinates of `w = ∇g*(ṽ)` after a sparse dual update —
+/// hence the per-coordinate [`Regularizer::grad_conj_at`].
+pub trait Regularizer: Send + Sync + std::fmt::Debug {
+    /// `g(w)`.
+    fn value(&self, w: &[f64]) -> f64;
+
+    /// `g*(v)`.
+    fn conj(&self, v: &[f64]) -> f64;
+
+    /// Elementwise `∇g*`: component `j` of the map at `v[j] = vj`.
+    fn grad_conj_at(&self, j: usize, vj: f64) -> f64;
+
+    /// `w = ∇g*(v)` written into `w` (the primal-from-dual map, Eq. 3/10).
+    fn grad_conj_into(&self, v: &[f64], w: &mut [f64]) {
+        debug_assert_eq!(v.len(), w.len());
+        for (j, (wj, &vj)) in w.iter_mut().zip(v).enumerate() {
+            *wj = self.grad_conj_at(j, vj);
+        }
+    }
+
+    /// Allocating convenience wrapper.
+    fn grad_conj(&self, v: &[f64]) -> Vec<f64> {
+        let mut w = vec![0.0; v.len()];
+        self.grad_conj_into(v, &mut w);
+        w
+    }
+
+    /// Strong convexity modulus w.r.t. ‖·‖₂ (the theorems assume 1).
+    fn strong_convexity(&self) -> f64 {
+        1.0
+    }
+
+    /// Name for bench output.
+    fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::for_each_case;
+    use crate::utils::math::{dot, l2_norm_sq};
+
+    /// Conjugate consistency: `g(w) + g*(v) = wᵀv` at `w = ∇g*(v)`
+    /// (Fenchel–Young equality), and `≥` elsewhere.
+    fn check_conjugate<R: Regularizer>(reg: &R, seed: u64) {
+        for_each_case(seed, 100, |g| {
+            let d = g.usize_in(1, 10);
+            let v = g.vec_f64(d, -3.0, 3.0);
+            let w_star = reg.grad_conj(&v);
+            let eq = reg.value(&w_star) + reg.conj(&v) - dot(&w_star, &v);
+            assert!(eq.abs() < 1e-9, "FY equality violated: {eq}");
+            let w_other = g.vec_f64(d, -3.0, 3.0);
+            let ineq = reg.value(&w_other) + reg.conj(&v) - dot(&w_other, &v);
+            assert!(ineq >= -1e-9, "FY inequality violated: {ineq}");
+        });
+    }
+
+    /// 1-strong convexity of g ⇒ 1-smoothness of g*:
+    /// `g*(b) ≤ g*(a) + ∇g*(a)ᵀ(b−a) + ½‖b−a‖²`.
+    fn check_conj_smooth<R: Regularizer>(reg: &R, seed: u64) {
+        for_each_case(seed, 100, |g| {
+            let d = g.usize_in(1, 8);
+            let a = g.vec_f64(d, -3.0, 3.0);
+            let b = g.vec_f64(d, -3.0, 3.0);
+            let grad_a = reg.grad_conj(&a);
+            let diff: Vec<f64> = b.iter().zip(&a).map(|(x, y)| x - y).collect();
+            let bound = reg.conj(&a) + dot(&grad_a, &diff) + 0.5 * l2_norm_sq(&diff);
+            assert!(
+                reg.conj(&b) <= bound + 1e-9,
+                "g* not 1-smooth: {} > {bound}",
+                reg.conj(&b)
+            );
+        });
+    }
+
+    #[test]
+    fn elastic_net_conjugate_laws() {
+        check_conjugate(&ElasticNet::new(0.0), 0x91);
+        check_conjugate(&ElasticNet::new(0.5), 0x92);
+        check_conjugate(&ElasticNet::new(2.0), 0x93);
+    }
+
+    #[test]
+    fn elastic_net_conjugate_smooth() {
+        check_conj_smooth(&ElasticNet::new(0.0), 0x94);
+        check_conj_smooth(&ElasticNet::new(1.0), 0x95);
+    }
+}

@@ -1,0 +1,141 @@
+//! Linearly-shifted elastic net — the Acc-DADM inner regularizer.
+//!
+//! Algorithm 3 solves, at stage `t`, the proximal-point objective
+//! `P_t(w) = Σφ_i + λn·g(w) + h(w) + (κn/2)‖w − y^{t−1}‖²`. Following
+//! §9.8 ("Dual subproblems in Acc-DADM") with `λ̃ = λ + κ` and
+//! `f(w) = (λ/λ̃)g(w) + (κ/2λ̃)‖w‖²`, the inner problem is a *standard*
+//! DADM instance with effective regularization `λ̃` and regularizer
+//!
+//! ```text
+//! g_t(w) = f(w) − sᵀw,     s = (κ/λ̃)·y^{t−1}
+//!        = ½‖w‖² + (μ/λ̃)‖w‖₁ − sᵀw      (for the experiments' g)
+//! ```
+//!
+//! (dropping the additive constant `(κn/2)‖y‖²`, which cancels in the
+//! duality gap). `g_t` is still 1-strongly convex and its conjugate maps
+//! are those of the elastic net evaluated at `v + s`:
+//! `g_t*(v) = f*(v+s)`, `∇g_t*(v) = soft_threshold(v + s, μ/λ̃)`.
+
+use super::{ElasticNet, Regularizer};
+use crate::utils::math::{dot, soft_threshold_scalar};
+
+/// `g(w) − shiftᵀw` with `g` an [`ElasticNet`].
+#[derive(Clone, Debug)]
+pub struct ShiftedElasticNet {
+    base: ElasticNet,
+    shift: Vec<f64>,
+}
+
+impl ShiftedElasticNet {
+    /// Build from the base elastic net and the shift vector `s`.
+    pub fn new(base: ElasticNet, shift: Vec<f64>) -> Self {
+        ShiftedElasticNet { base, shift }
+    }
+
+    /// The Acc-DADM stage regularizer: `τ = μ/λ̃`, `s = (κ/λ̃)·y`.
+    pub fn acc_stage(mu: f64, lambda_tilde: f64, kappa: f64, y: &[f64]) -> Self {
+        let shift = y.iter().map(|&yj| kappa / lambda_tilde * yj).collect();
+        ShiftedElasticNet::new(ElasticNet::new(mu / lambda_tilde), shift)
+    }
+
+    /// The shift vector `s`.
+    pub fn shift(&self) -> &[f64] {
+        &self.shift
+    }
+
+    /// The base elastic net.
+    pub fn base(&self) -> &ElasticNet {
+        &self.base
+    }
+}
+
+impl Regularizer for ShiftedElasticNet {
+    fn value(&self, w: &[f64]) -> f64 {
+        self.base.value(w) - dot(&self.shift, w)
+    }
+
+    fn conj(&self, v: &[f64]) -> f64 {
+        debug_assert_eq!(v.len(), self.shift.len());
+        let tau = self.base.tau();
+        v.iter()
+            .zip(&self.shift)
+            .map(|(&vj, &sj)| {
+                let wj = soft_threshold_scalar(vj + sj, tau);
+                0.5 * wj * wj
+            })
+            .sum()
+    }
+
+    fn grad_conj_at(&self, j: usize, vj: f64) -> f64 {
+        soft_threshold_scalar(vj + self.shift[j], self.base.tau())
+    }
+
+    fn grad_conj_into(&self, v: &[f64], w: &mut [f64]) {
+        debug_assert_eq!(v.len(), self.shift.len());
+        let tau = self.base.tau();
+        for ((wj, &vj), &sj) in w.iter_mut().zip(v).zip(&self.shift) {
+            *wj = soft_threshold_scalar(vj + sj, tau);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "shifted_elastic_net"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::for_each_case;
+
+    #[test]
+    fn zero_shift_equals_base() {
+        let base = ElasticNet::new(0.4);
+        let s = ShiftedElasticNet::new(base, vec![0.0; 3]);
+        let v = vec![1.0, -2.0, 0.2];
+        assert_eq!(s.conj(&v), base.conj(&v));
+        assert_eq!(s.grad_conj(&v), base.grad_conj(&v));
+        let w = vec![0.3, -0.7, 1.1];
+        assert_eq!(s.value(&w), base.value(&w));
+    }
+
+    #[test]
+    fn fenchel_young_with_shift() {
+        for_each_case(0xC1, 100, |g| {
+            let d = g.usize_in(1, 8);
+            let shift = g.vec_f64(d, -1.0, 1.0);
+            let reg = ShiftedElasticNet::new(ElasticNet::new(0.3), shift);
+            let v = g.vec_f64(d, -3.0, 3.0);
+            let w_star = reg.grad_conj(&v);
+            let eq = reg.value(&w_star) + reg.conj(&v) - dot(&w_star, &v);
+            assert!(eq.abs() < 1e-9, "FY equality violated: {eq}");
+            let w_other = g.vec_f64(d, -3.0, 3.0);
+            let ineq = reg.value(&w_other) + reg.conj(&v) - dot(&w_other, &v);
+            assert!(ineq >= -1e-9);
+        });
+    }
+
+    #[test]
+    fn acc_stage_matches_section_9_8() {
+        // λ̃·g_t(w) must equal λ·g(w) + (κ/2)‖w‖² − κ·yᵀw for the
+        // experiments' g (up to the dropped κ/2‖y‖² constant).
+        for_each_case(0xC2, 50, |g| {
+            let d = g.usize_in(1, 6);
+            let (lambda, kappa, mu) = (
+                g.f64_log_in(1e-8, 1e-2),
+                g.f64_log_in(1e-6, 1.0),
+                g.f64_log_in(1e-7, 1e-3),
+            );
+            let lt = lambda + kappa;
+            let y = g.vec_f64(d, -1.0, 1.0);
+            let w = g.vec_f64(d, -2.0, 2.0);
+            let stage = ShiftedElasticNet::acc_stage(mu, lt, kappa, &y);
+            let lhs = lt * stage.value(&w);
+            let g_orig = ElasticNet::new(mu / lambda);
+            let rhs = lambda * g_orig.value(&w)
+                + kappa / 2.0 * crate::utils::math::l2_norm_sq(&w)
+                - kappa * dot(&y, &w);
+            assert!((lhs - rhs).abs() < 1e-9, "{lhs} vs {rhs}");
+        });
+    }
+}

@@ -1,0 +1,181 @@
+//! Artifact discovery + PJRT compilation cache.
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Identity of one AOT artifact: the local-step computation for a given
+/// loss at a fixed `(batch, dim)` shape (XLA programs are shape-static).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct ArtifactSpec {
+    /// Loss name as used by `python/compile/aot.py` (e.g. `smooth_hinge`).
+    pub loss: String,
+    /// Mini-batch rows `M` baked into the artifact.
+    pub batch: usize,
+    /// Feature dimension `d` baked into the artifact.
+    pub dim: usize,
+}
+
+impl ArtifactSpec {
+    /// Conventional file name: `local_step_<loss>_<M>x<d>.hlo.txt`.
+    pub fn file_name(&self) -> String {
+        format!("local_step_{}_{}x{}.hlo.txt", self.loss, self.batch, self.dim)
+    }
+}
+
+/// Resolve the artifacts directory: `$DADM_ARTIFACTS` or `./artifacts`.
+pub fn artifact_path() -> PathBuf {
+    std::env::var_os("DADM_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// A PJRT CPU client plus a compile cache of loaded artifacts.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    cache: HashMap<ArtifactSpec, xla::PjRtLoadedExecutable>,
+    dir: PathBuf,
+}
+
+// SAFETY: `PjRtClient`/`PjRtLoadedExecutable` hold `Rc`s and raw PJRT
+// pointers, so they are not auto-`Send`. Every clone of those `Rc`s lives
+// inside this one struct (the client and its compiled executables), and
+// `XlaLocalStep` only ever accesses the runtime through a `Mutex`, so the
+// whole object graph moves between threads atomically with exclusive
+// access. The PJRT CPU client itself is thread-safe per the PJRT C API
+// contract.
+unsafe impl Send for XlaRuntime {}
+
+impl std::fmt::Debug for XlaRuntime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("XlaRuntime")
+            .field("platform", &self.client.platform_name())
+            .field("cached", &self.cache.len())
+            .field("dir", &self.dir)
+            .finish()
+    }
+}
+
+impl XlaRuntime {
+    /// Create a CPU PJRT client rooted at the default artifacts dir.
+    pub fn cpu() -> Result<Self> {
+        Self::with_dir(artifact_path())
+    }
+
+    /// Create with an explicit artifacts directory.
+    pub fn with_dir(dir: PathBuf) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(XlaRuntime {
+            client,
+            cache: HashMap::new(),
+            dir,
+        })
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Whether the artifact file for `spec` exists on disk.
+    pub fn available(&self, spec: &ArtifactSpec) -> bool {
+        self.dir.join(spec.file_name()).exists()
+    }
+
+    /// Load + compile (cached) the artifact for `spec`.
+    pub fn load(&mut self, spec: &ArtifactSpec) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(spec) {
+            let path = self.dir.join(spec.file_name());
+            let exe = compile_file(&self.client, &path)
+                .with_context(|| format!("load artifact {}", path.display()))?;
+            self.cache.insert(spec.clone(), exe);
+        }
+        Ok(&self.cache[spec])
+    }
+
+    /// Execute a loaded artifact on f32 input buffers, returning the
+    /// flattened f32 outputs of the (tupled) result.
+    pub fn execute_f32(
+        &mut self,
+        spec: &ArtifactSpec,
+        inputs: &[(&[f32], &[usize])],
+    ) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, shape)| {
+                let lit = xla::Literal::vec1(data);
+                let dims: Vec<i64> = shape.iter().map(|&s| s as i64).collect();
+                lit.reshape(&dims).context("reshape input literal")
+            })
+            .collect::<Result<_>>()?;
+        let exe = self.load(spec)?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .context("PJRT execute")?[0][0]
+            .to_literal_sync()
+            .context("fetch result")?;
+        // aot.py lowers with return_tuple=True: decompose the tuple.
+        let mut result = result;
+        let elements = result.decompose_tuple().context("decompose result tuple")?;
+        elements
+            .into_iter()
+            .map(|lit| lit.to_vec::<f32>().context("read f32 output"))
+            .collect()
+    }
+}
+
+fn compile_file(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    anyhow::ensure!(
+        path.exists(),
+        "artifact {} not found — run `make artifacts` first",
+        path.display()
+    );
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().context("non-utf8 artifact path")?,
+    )
+    .context("parse HLO text")?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client.compile(&comp).context("PJRT compile")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_file_name_convention() {
+        let s = ArtifactSpec {
+            loss: "smooth_hinge".into(),
+            batch: 128,
+            dim: 256,
+        };
+        assert_eq!(s.file_name(), "local_step_smooth_hinge_128x256.hlo.txt");
+    }
+
+    #[test]
+    fn artifact_path_env_override() {
+        // Note: tests run in parallel; use a unique var through the public
+        // default path instead of mutating the environment.
+        let p = artifact_path();
+        assert!(p.ends_with("artifacts") || p.is_absolute());
+    }
+
+    #[test]
+    fn missing_artifact_is_a_clean_error() {
+        let mut rt = match XlaRuntime::with_dir(PathBuf::from("/nonexistent-dir")) {
+            Ok(rt) => rt,
+            Err(_) => return, // PJRT unavailable in this environment
+        };
+        let spec = ArtifactSpec {
+            loss: "nope".into(),
+            batch: 1,
+            dim: 1,
+        };
+        assert!(!rt.available(&spec));
+        let err = match rt.load(&spec) {
+            Err(e) => e,
+            Ok(_) => panic!("load of missing artifact succeeded"),
+        };
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

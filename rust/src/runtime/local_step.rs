@@ -1,0 +1,138 @@
+//! The XLA-backed local solver: executes the AOT-compiled batched
+//! Theorem-6 update through PJRT.
+//!
+//! Division of labor (see DESIGN.md §2): the *regularizer* side
+//! (`w = ∇g*(ṽ)`, exact in f64, including the Acc-DADM shift) stays in
+//! Rust; the artifact computes the batched loss-side hot spot
+//!
+//! ```text
+//! u      = X_b · w                     (scores)
+//! u_dir  = −∇φ(u, y)                   (Theorem-6 direction)
+//! Δα     = s·(u_dir − α_b)
+//! Δv_raw = X_bᵀ · Δα                   (unscaled dual combination)
+//! ```
+//!
+//! in f32 with `s` passed as a scalar input, exactly matching
+//! [`crate::solver::TheoremStep`] (cross-checked in `rust/tests/`).
+//! Batches are padded/chunked to the artifact's static `M`; zero rows
+//! (x = 0, y = 0, α = 0) provably produce `Δα = 0` for every loss.
+
+use crate::loss::Loss;
+use crate::reg::Regularizer;
+use crate::solver::{LocalSolver, WorkerState};
+use crate::utils::Rng;
+use anyhow::Result;
+use std::sync::Mutex;
+
+use super::artifact::{ArtifactSpec, XlaRuntime};
+
+/// PJRT-backed Theorem-6 local step.
+///
+/// Holds the runtime behind a `Mutex`: PJRT execution is serialized
+/// across worker threads (the CPU client is already internally threaded,
+/// so this costs little; use `Cluster::Serial` for fully deterministic
+/// runs).
+#[derive(Debug)]
+pub struct XlaLocalStep {
+    runtime: Mutex<XlaRuntime>,
+    /// Artifact batch rows `M`.
+    pub batch_rows: usize,
+    /// Artifact feature dim `d`.
+    pub dim: usize,
+    /// Data radius `R` used for the step scale.
+    pub radius: f64,
+}
+
+impl XlaLocalStep {
+    /// Create for a given artifact shape, verifying the artifact exists.
+    pub fn new(loss_name: &str, batch_rows: usize, dim: usize, radius: f64) -> Result<Self> {
+        let mut runtime = XlaRuntime::cpu()?;
+        let spec = ArtifactSpec {
+            loss: loss_name.to_string(),
+            batch: batch_rows,
+            dim,
+        };
+        // Compile eagerly so construction fails fast when artifacts are
+        // missing or stale.
+        runtime.load(&spec)?;
+        Ok(XlaLocalStep {
+            runtime: Mutex::new(runtime),
+            batch_rows,
+            dim,
+            radius,
+        })
+    }
+
+    fn spec_for<L: Loss>(&self, loss: &L) -> ArtifactSpec {
+        ArtifactSpec {
+            loss: loss.name().to_string(),
+            batch: self.batch_rows,
+            dim: self.dim,
+        }
+    }
+}
+
+impl LocalSolver for XlaLocalStep {
+    fn local_step<L: Loss, R: Regularizer>(
+        &self,
+        state: &mut WorkerState,
+        batch: &[usize],
+        loss: &L,
+        _reg: &R,
+        lambda_n_l: f64,
+        _rng: &mut Rng,
+    ) -> Vec<f64> {
+        let m = self.batch_rows;
+        let d = self.dim;
+        assert_eq!(state.dim(), d, "artifact dim mismatch");
+        let gamma = loss.gamma();
+        let s = if gamma > 0.0 {
+            gamma * lambda_n_l / (gamma * lambda_n_l + batch.len() as f64 * self.radius)
+        } else {
+            lambda_n_l / (lambda_n_l + batch.len() as f64 * self.radius)
+        };
+        let spec = self.spec_for(loss);
+
+        let w_f32: Vec<f32> = state.w.iter().map(|&x| x as f32).collect();
+        let mut delta_v = vec![0.0f64; d];
+        let mut x_buf = vec![0.0f32; m * d];
+        let mut rt = self.runtime.lock().expect("runtime poisoned");
+
+        for chunk in batch.chunks(m) {
+            state.x.pack_rows_f32(chunk, &mut x_buf[..chunk.len() * d]);
+            x_buf[chunk.len() * d..].fill(0.0);
+            let mut y_buf = vec![0.0f32; m];
+            let mut a_buf = vec![0.0f32; m];
+            for (k, &i) in chunk.iter().enumerate() {
+                y_buf[k] = state.y[i] as f32;
+                a_buf[k] = state.alpha[i] as f32;
+            }
+            let s_buf = [s as f32];
+            let outputs = rt
+                .execute_f32(
+                    &spec,
+                    &[
+                        (&x_buf, &[m, d]),
+                        (&y_buf, &[m]),
+                        (&a_buf, &[m]),
+                        (&w_f32, &[d]),
+                        (&s_buf, &[]),
+                    ],
+                )
+                .expect("XLA local step failed");
+            let (alpha_new, delta_v_raw) = (&outputs[0], &outputs[1]);
+            for (k, &i) in chunk.iter().enumerate() {
+                state.alpha[i] = alpha_new[k] as f64;
+            }
+            for j in 0..d {
+                delta_v[j] += delta_v_raw[j] as f64 / lambda_n_l;
+            }
+        }
+        delta_v
+    }
+}
+
+// No unit tests here: exercising this path needs built artifacts, which
+// `make artifacts` produces at build time. The cross-checks against the
+// native `TheoremStep` live in `rust/tests/xla_runtime.rs` and skip with
+// a notice when `artifacts/` is absent.

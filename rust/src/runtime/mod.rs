@@ -1,0 +1,14 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! The build-time Python layers (`python/compile/`) lower the batched
+//! Theorem-6 local step to HLO **text** (`artifacts/local_step_*.hlo.txt`;
+//! text, not serialized proto — xla_extension 0.5.1 rejects jax ≥ 0.5's
+//! 64-bit instruction ids). This module wraps the `xla` crate's PJRT CPU
+//! client to compile those artifacts once and execute them from the Rust
+//! hot path, so Python is never on the solve path.
+
+mod artifact;
+mod local_step;
+
+pub use artifact::{artifact_path, ArtifactSpec, XlaRuntime};
+pub use local_step::XlaLocalStep;

@@ -1,0 +1,153 @@
+//! Limited-memory BFGS direction (two-loop recursion).
+//!
+//! Substrate for the OWL-QN baseline (Figures 6–7): maintains the last
+//! `memory` curvature pairs `(s_k, y_k)` and maps a gradient to the
+//! quasi-Newton direction `−H_k·g`.
+
+/// L-BFGS curvature history.
+#[derive(Clone, Debug)]
+pub struct LbfgsHistory {
+    memory: usize,
+    s: std::collections::VecDeque<Vec<f64>>,
+    y: std::collections::VecDeque<Vec<f64>>,
+    rho: std::collections::VecDeque<f64>,
+}
+
+impl LbfgsHistory {
+    /// New history with the given memory (the paper uses 10 for OWL-QN).
+    pub fn new(memory: usize) -> Self {
+        assert!(memory >= 1);
+        LbfgsHistory {
+            memory,
+            s: Default::default(),
+            y: Default::default(),
+            rho: Default::default(),
+        }
+    }
+
+    /// Record a curvature pair; skipped if `sᵀy` is not sufficiently
+    /// positive (preserves positive-definiteness).
+    pub fn push(&mut self, s: Vec<f64>, y: Vec<f64>) {
+        let sy = crate::utils::math::dot(&s, &y);
+        if sy <= 1e-12 {
+            return;
+        }
+        if self.s.len() == self.memory {
+            self.s.pop_front();
+            self.y.pop_front();
+            self.rho.pop_front();
+        }
+        self.rho.push_back(1.0 / sy);
+        self.s.push_back(s);
+        self.y.push_back(y);
+    }
+
+    /// Number of stored pairs.
+    pub fn len(&self) -> usize {
+        self.s.len()
+    }
+
+    /// True if no curvature pairs are stored yet.
+    pub fn is_empty(&self) -> bool {
+        self.s.is_empty()
+    }
+
+    /// Two-loop recursion: returns `H_k · g` (NOT negated).
+    pub fn apply(&self, grad: &[f64]) -> Vec<f64> {
+        let mut q = grad.to_vec();
+        if self.is_empty() {
+            return q;
+        }
+        let k = self.len();
+        let mut alpha = vec![0.0; k];
+        for i in (0..k).rev() {
+            alpha[i] = self.rho[i] * crate::utils::math::dot(&self.s[i], &q);
+            for (qj, yj) in q.iter_mut().zip(&self.y[i]) {
+                *qj -= alpha[i] * yj;
+            }
+        }
+        // Initial Hessian scaling γ_k = sᵀy / yᵀy of the newest pair.
+        let last = k - 1;
+        let gamma = (1.0 / self.rho[last]) / crate::utils::math::l2_norm_sq(&self.y[last]);
+        for qj in q.iter_mut() {
+            *qj *= gamma;
+        }
+        for i in 0..k {
+            let beta = self.rho[i] * crate::utils::math::dot(&self.y[i], &q);
+            for (qj, sj) in q.iter_mut().zip(&self.s[i]) {
+                *qj += (alpha[i] - beta) * sj;
+            }
+        }
+        q
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::utils::math::dot;
+
+    #[test]
+    fn empty_history_is_identity() {
+        let h = LbfgsHistory::new(5);
+        assert_eq!(h.apply(&[1.0, -2.0]), vec![1.0, -2.0]);
+    }
+
+    #[test]
+    fn rejects_negative_curvature() {
+        let mut h = LbfgsHistory::new(5);
+        h.push(vec![1.0, 0.0], vec![-1.0, 0.0]);
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn memory_is_bounded() {
+        let mut h = LbfgsHistory::new(2);
+        for k in 1..=5 {
+            h.push(vec![k as f64, 0.0], vec![k as f64, 0.0]);
+        }
+        assert_eq!(h.len(), 2);
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        // minimize ½ wᵀ A w − bᵀw with A = diag(1, 10): L-BFGS with exact
+        // line search should reach the optimum quickly.
+        let a = [1.0, 10.0];
+        let b = [1.0, 1.0];
+        let grad = |w: &[f64]| vec![a[0] * w[0] - b[0], a[1] * w[1] - b[1]];
+        let mut h = LbfgsHistory::new(5);
+        let mut w = vec![0.0, 0.0];
+        for _ in 0..20 {
+            let g = grad(&w);
+            if crate::utils::math::l2_norm_sq(&g) < 1e-20 {
+                break;
+            }
+            let dir: Vec<f64> = h.apply(&g).iter().map(|x| -x).collect();
+            // exact line search for quadratic: t = −gᵀd / dᵀAd
+            let gd = dot(&g, &dir);
+            let dad = a[0] * dir[0] * dir[0] + a[1] * dir[1] * dir[1];
+            let t = -gd / dad;
+            let w_new: Vec<f64> = w.iter().zip(&dir).map(|(wi, di)| wi + t * di).collect();
+            let g_new = grad(&w_new);
+            h.push(
+                w_new.iter().zip(&w).map(|(x, y)| x - y).collect(),
+                g_new.iter().zip(&g).map(|(x, y)| x - y).collect(),
+            );
+            w = w_new;
+        }
+        assert!((w[0] - 1.0).abs() < 1e-8, "w0 = {}", w[0]);
+        assert!((w[1] - 0.1).abs() < 1e-8, "w1 = {}", w[1]);
+    }
+
+    #[test]
+    fn direction_is_descent() {
+        let mut h = LbfgsHistory::new(3);
+        h.push(vec![0.5, 0.1, -0.2], vec![0.4, 0.2, -0.1]);
+        h.push(vec![-0.1, 0.3, 0.0], vec![-0.05, 0.25, 0.02]);
+        let g = vec![1.0, -0.5, 0.25];
+        let hg = h.apply(&g);
+        // H is positive definite ⇒ gᵀHg > 0 ⇒ −Hg is a descent direction.
+        assert!(dot(&g, &hg) > 0.0);
+    }
+}

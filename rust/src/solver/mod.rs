@@ -1,0 +1,78 @@
+//! Local solvers.
+//!
+//! DADM's local step (Algorithm 1) may use *any* procedure that improves
+//! the local dual `D̃_ℓ(α_(ℓ)|β_ℓ)` over a mini-batch `Q_ℓ`. We provide:
+//!
+//! * [`ProxSdca`] — the paper's practical choice (§10): sequential
+//!   aggressive ProxSDCA coordinate updates within the mini-batch, exactly
+//!   maximizing each 1-D dual subproblem.
+//! * [`TheoremStep`] — the conservative scaled update `Δα̃_i = s_ℓ(u_i −
+//!   α_i)` of Theorems 6/7 (the analyzed variant; also the batched form
+//!   the L1 Pallas kernel / XLA path implements).
+//! * [`owlqn`]/[`lbfgs`] — the primal OWL-QN baseline of Figures 6–7.
+//!
+//! All local solvers operate on a [`WorkerState`], the per-machine shard
+//! of data + dual variables, and return the scaled update
+//! `Δv_ℓ = Σ_{i∈Q_ℓ} X_i Δα_i / (λ n_ℓ)` that the global step aggregates.
+
+pub mod lbfgs;
+pub mod owlqn;
+mod prox_sdca;
+mod theorem_step;
+mod worker;
+
+pub use owlqn::{Owlqn, OwlqnOptions};
+pub use prox_sdca::ProxSdca;
+pub use theorem_step::TheoremStep;
+pub use worker::WorkerState;
+
+use crate::loss::Loss;
+use crate::reg::Regularizer;
+use crate::utils::Rng;
+
+/// A local dual solver: one invocation = one local step of Algorithm 1.
+pub trait LocalSolver: Send + Sync + std::fmt::Debug {
+    /// Approximately maximize the local dual over the mini-batch `batch`
+    /// (indices into the worker's shard), updating `state.alpha` and
+    /// returning `Δv_ℓ` (dense, length d).
+    ///
+    /// `lambda_n_l = λ_eff · n_ℓ` is the local dual scaling (λ̃ during
+    /// Acc-DADM inner solves).
+    fn local_step<L: Loss, R: Regularizer>(
+        &self,
+        state: &mut WorkerState,
+        batch: &[usize],
+        loss: &L,
+        reg: &R,
+        lambda_n_l: f64,
+        rng: &mut Rng,
+    ) -> Vec<f64>;
+}
+
+/// Which local solver to run (config/CLI surface).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SolverKind {
+    /// Sequential aggressive ProxSDCA (paper's practical variant).
+    ProxSdca,
+    /// Theorem-6/7 conservative scaled mini-batch update.
+    Theorem,
+}
+
+impl SolverKind {
+    /// Parse from a CLI string.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "prox_sdca" | "sdca" => SolverKind::ProxSdca,
+            "theorem" | "minibatch" => SolverKind::Theorem,
+            other => anyhow::bail!("unknown solver `{other}`"),
+        })
+    }
+
+    /// Canonical name.
+    pub fn name(self) -> &'static str {
+        match self {
+            SolverKind::ProxSdca => "prox_sdca",
+            SolverKind::Theorem => "theorem",
+        }
+    }
+}

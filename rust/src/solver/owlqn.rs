@@ -1,0 +1,295 @@
+//! OWL-QN (Orthant-Wise Limited-memory Quasi-Newton, Andrew & Gao 2007).
+//!
+//! The batch baseline of Figures 6–7: minimizes
+//!
+//! ```text
+//! F(w) = f(w) + μ‖w‖₁,   f smooth (here (1/n)Σφ_i(x_iᵀw) + (λ/2)‖w‖²)
+//! ```
+//!
+//! via L-BFGS on the smooth part with the orthant-wise pseudo-gradient,
+//! direction alignment, orthant projection in the line search, and the
+//! paper's memory parameter 10. The objective/gradient oracle is a
+//! callback so the distributed bench can count data passes and charge one
+//! allreduce per evaluation (each evaluation is one pass over the data).
+
+use super::lbfgs::LbfgsHistory;
+use crate::utils::math::dot;
+
+/// OWL-QN options.
+#[derive(Clone, Debug)]
+pub struct OwlqnOptions {
+    /// L1 weight μ.
+    pub mu: f64,
+    /// L-BFGS memory (paper: 10).
+    pub memory: usize,
+    /// Max outer iterations.
+    pub max_iters: usize,
+    /// Stop when the pseudo-gradient ∞-norm falls below this.
+    pub tol: f64,
+    /// Max line-search backtracks per iteration.
+    pub max_line_search: usize,
+}
+
+impl Default for OwlqnOptions {
+    fn default() -> Self {
+        OwlqnOptions {
+            mu: 0.0,
+            memory: 10,
+            max_iters: 100,
+            tol: 1e-10,
+            max_line_search: 30,
+        }
+    }
+}
+
+/// Result of an OWL-QN run.
+#[derive(Clone, Debug)]
+pub struct OwlqnResult {
+    /// Final iterate.
+    pub w: Vec<f64>,
+    /// Final full objective `f(w) + μ‖w‖₁`.
+    pub objective: f64,
+    /// Number of oracle evaluations (== data passes == comm rounds in the
+    /// distributed accounting).
+    pub evals: usize,
+    /// Outer iterations taken.
+    pub iters: usize,
+    /// Objective after every oracle evaluation (trace for Fig 6/7).
+    pub eval_trace: Vec<f64>,
+}
+
+/// OWL-QN optimizer.
+#[derive(Clone, Debug)]
+pub struct Owlqn {
+    opts: OwlqnOptions,
+}
+
+impl Owlqn {
+    /// Build with options.
+    pub fn new(opts: OwlqnOptions) -> Self {
+        Self { opts }
+    }
+
+    /// Pseudo-gradient ⋄F(w) of `f + μ‖·‖₁`.
+    fn pseudo_gradient(&self, w: &[f64], grad: &[f64]) -> Vec<f64> {
+        let mu = self.opts.mu;
+        w.iter()
+            .zip(grad)
+            .map(|(&wj, &gj)| {
+                if wj > 0.0 {
+                    gj + mu
+                } else if wj < 0.0 {
+                    gj - mu
+                } else if gj + mu < 0.0 {
+                    gj + mu
+                } else if gj - mu > 0.0 {
+                    gj - mu
+                } else {
+                    0.0
+                }
+            })
+            .collect()
+    }
+
+    /// Minimize using the oracle `f_and_grad(w) -> (f(w), ∇f(w))`.
+    pub fn minimize<F>(&self, w0: Vec<f64>, mut f_and_grad: F) -> OwlqnResult
+    where
+        F: FnMut(&[f64]) -> (f64, Vec<f64>),
+    {
+        let mu = self.opts.mu;
+        let full = |fval: f64, w: &[f64]| fval + mu * crate::utils::math::l1_norm(w);
+
+        let mut w = w0;
+        let mut evals = 0usize;
+        let mut eval_trace = Vec::new();
+        let (mut fval, mut grad) = f_and_grad(&w);
+        evals += 1;
+        eval_trace.push(full(fval, &w));
+        let mut history = LbfgsHistory::new(self.opts.memory);
+        let mut iters = 0usize;
+
+        for it in 0..self.opts.max_iters {
+            iters = it + 1;
+            let pg = self.pseudo_gradient(&w, &grad);
+            let pg_inf = pg.iter().fold(0.0f64, |m, x| m.max(x.abs()));
+            if pg_inf < self.opts.tol {
+                break;
+            }
+            // Quasi-Newton direction on the pseudo-gradient…
+            let mut dir: Vec<f64> = history.apply(&pg).iter().map(|x| -x).collect();
+            // …aligned: discard components that disagree with −⋄F.
+            for (dj, pgj) in dir.iter_mut().zip(&pg) {
+                if *dj * -pgj <= 0.0 {
+                    *dj = 0.0;
+                }
+            }
+            // Orthant ξ: sign of w, or of −⋄F where w = 0.
+            let xi: Vec<f64> = w
+                .iter()
+                .zip(&pg)
+                .map(|(&wj, &pgj)| if wj != 0.0 { wj.signum() } else { -pgj.signum() })
+                .collect();
+            let dir_deriv = dot(&pg, &dir);
+            if dir_deriv >= 0.0 {
+                break; // no descent possible
+            }
+            // Backtracking line search with orthant projection.
+            let f_old_full = full(fval, &w);
+            let mut t = if history.is_empty() {
+                // conservative first step like the reference implementation
+                1.0 / (1.0 + crate::utils::math::l2_norm_sq(&pg).sqrt())
+            } else {
+                1.0
+            };
+            let c1 = 1e-4;
+            let mut accepted = false;
+            for _ in 0..self.opts.max_line_search {
+                let w_new: Vec<f64> = w
+                    .iter()
+                    .zip(&dir)
+                    .zip(&xi)
+                    .map(|((&wj, &dj), &xij)| {
+                        let cand = wj + t * dj;
+                        // Project onto the orthant: zero if sign flips.
+                        if cand * xij < 0.0 {
+                            0.0
+                        } else {
+                            cand
+                        }
+                    })
+                    .collect();
+                let (f_new, g_new) = f_and_grad(&w_new);
+                evals += 1;
+                let f_new_full = full(f_new, &w_new);
+                eval_trace.push(f_new_full.min(*eval_trace.last().unwrap()));
+                if f_new_full <= f_old_full + c1 * t * dir_deriv {
+                    // Curvature pair from accepted step.
+                    let s: Vec<f64> = w_new.iter().zip(&w).map(|(a, b)| a - b).collect();
+                    let yv: Vec<f64> = g_new.iter().zip(&grad).map(|(a, b)| a - b).collect();
+                    history.push(s, yv);
+                    w = w_new;
+                    fval = f_new;
+                    grad = g_new;
+                    accepted = true;
+                    break;
+                }
+                t *= 0.5;
+            }
+            if !accepted {
+                break; // line search failed — practical convergence
+            }
+        }
+
+        OwlqnResult {
+            objective: full(fval, &w),
+            w,
+            evals,
+            iters,
+            eval_trace,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Smooth quadratic oracle ½‖w − c‖².
+    fn quad_oracle(c: Vec<f64>) -> impl FnMut(&[f64]) -> (f64, Vec<f64>) {
+        move |w: &[f64]| {
+            let f = 0.5
+                * w.iter()
+                    .zip(&c)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum::<f64>();
+            let g = w.iter().zip(&c).map(|(a, b)| a - b).collect();
+            (f, g)
+        }
+    }
+
+    #[test]
+    fn solves_smooth_quadratic_without_l1() {
+        let owlqn = Owlqn::new(OwlqnOptions::default());
+        let res = owlqn.minimize(vec![0.0; 3], quad_oracle(vec![1.0, -2.0, 3.0]));
+        for (wi, ci) in res.w.iter().zip(&[1.0, -2.0, 3.0]) {
+            assert!((wi - ci).abs() < 1e-6, "{:?}", res.w);
+        }
+    }
+
+    #[test]
+    fn lasso_fixed_point_is_soft_threshold() {
+        // min ½‖w − c‖² + μ‖w‖₁ has solution soft_threshold(c, μ).
+        let mu = 0.8;
+        let owlqn = Owlqn::new(OwlqnOptions {
+            mu,
+            max_iters: 200,
+            ..Default::default()
+        });
+        let c = vec![2.0, 0.5, -1.5, -0.3];
+        let res = owlqn.minimize(vec![0.0; 4], quad_oracle(c.clone()));
+        let want = crate::utils::math::soft_threshold(&c, mu);
+        for (got, want) in res.w.iter().zip(&want) {
+            assert!((got - want).abs() < 1e-6, "{:?} vs {want}", res.w);
+        }
+    }
+
+    #[test]
+    fn iterates_stay_sparse_with_strong_l1() {
+        let owlqn = Owlqn::new(OwlqnOptions {
+            mu: 10.0,
+            ..Default::default()
+        });
+        let res = owlqn.minimize(vec![0.0; 3], quad_oracle(vec![1.0, -2.0, 3.0]));
+        assert!(res.w.iter().all(|&w| w == 0.0), "{:?}", res.w);
+    }
+
+    #[test]
+    fn trace_is_monotone_nonincreasing() {
+        let owlqn = Owlqn::new(OwlqnOptions {
+            mu: 0.1,
+            ..Default::default()
+        });
+        let res = owlqn.minimize(vec![5.0; 4], quad_oracle(vec![0.0; 4]));
+        for pair in res.eval_trace.windows(2) {
+            assert!(pair[1] <= pair[0] + 1e-12);
+        }
+        assert_eq!(res.eval_trace.len(), res.evals);
+    }
+
+    #[test]
+    fn logistic_regression_1d_matches_grid() {
+        // min f(w) = log(1+e^{−w}) + log(1+e^{w·0.5}) + 0.05 w² + 0.1|w|
+        let oracle = |w: &[f64]| {
+            let w0 = w[0];
+            let f = crate::utils::math::log1p_exp(-w0)
+                + crate::utils::math::log1p_exp(0.5 * w0)
+                + 0.05 * w0 * w0;
+            let g = -1.0 / (1.0 + w0.exp()) + 0.5 / (1.0 + (-0.5 * w0).exp()) + 0.1 * w0;
+            (f, vec![g])
+        };
+        let owlqn = Owlqn::new(OwlqnOptions {
+            mu: 0.1,
+            max_iters: 300,
+            ..Default::default()
+        });
+        let res = owlqn.minimize(vec![0.0], oracle);
+        // grid search the full objective
+        let mut best = f64::INFINITY;
+        let mut arg = 0.0;
+        let mut w = -5.0;
+        while w <= 5.0 {
+            let (f, _) = oracle(&[w]);
+            let full = f + 0.1 * w.abs();
+            if full < best {
+                best = full;
+                arg = w;
+            }
+            w += 1e-4;
+        }
+        assert!(
+            (res.w[0] - arg).abs() < 1e-3,
+            "owlqn {} vs grid {arg}",
+            res.w[0]
+        );
+    }
+}

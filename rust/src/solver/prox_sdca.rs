@@ -1,0 +1,211 @@
+//! Sequential ProxSDCA local solver — the paper's practical variant.
+//!
+//! Within a mini-batch `Q_ℓ`, visit coordinates in random order and apply
+//! the *exact* 1-D dual maximizer (aggressive sequential updates, as the
+//! practical DisDCA variant and the CoCoA+ local solver do — §10). After
+//! each coordinate step the scratch `ṽ` and the touched entries of
+//! `w = ∇g*(ṽ)` are refreshed, so later coordinates in the batch see the
+//! earlier updates. Cost per step is `O(nnz(x_i))`.
+
+use super::{LocalSolver, WorkerState};
+use crate::loss::Loss;
+use crate::reg::Regularizer;
+use crate::utils::Rng;
+
+/// Sequential aggressive ProxSDCA over the mini-batch.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ProxSdca;
+
+impl LocalSolver for ProxSdca {
+    fn local_step<L: Loss, R: Regularizer>(
+        &self,
+        state: &mut WorkerState,
+        batch: &[usize],
+        loss: &L,
+        reg: &R,
+        lambda_n_l: f64,
+        rng: &mut Rng,
+    ) -> Vec<f64> {
+        // Allocation-free hot path (§Perf iteration 3): Δv accumulates in
+        // a persistent zeroed buffer, `w` is updated *in place* so later
+        // coordinates see earlier updates, and both are reverted/reset
+        // from the touched-coordinate log afterwards — the synchronized
+        // (ṽ_ℓ, w_ℓ) are untouched on return, as Algorithm 2 requires.
+        debug_assert!(state.scratch_delta.iter().all(|&x| x == 0.0));
+        // Expected touched volume decides the restore strategy up front so
+        // dense epochs skip the per-entry touch log entirely.
+        let avg_nnz = state.x.nnz() / state.x.rows().max(1);
+        let dense_reset = batch.len().saturating_mul(avg_nnz) >= state.dim();
+        let mut order: Vec<usize> = batch.to_vec();
+        rng.shuffle(&mut order);
+
+        for &i in &order {
+            let row = state.x.row(i);
+            let u = row.dot(&state.w);
+            // q = 0 for empty rows is handled by each loss's closed form —
+            // the dual term −φ*(−α_i) still needs maximizing there or the
+            // duality gap keeps a φ_i(0) floor forever.
+            let q = state.row_norm_sq[i] / lambda_n_l;
+            let delta = loss.coordinate_delta(state.alpha[i], u, q, state.y[i]);
+            if delta == 0.0 {
+                continue;
+            }
+            state.alpha[i] += delta;
+            // Δv += x_i·δ/(λn_ℓ); refresh the touched w entries (∇g* is
+            // separable for every g in this crate).
+            let c = delta / lambda_n_l;
+            for (&j, &xv) in row.indices.iter().zip(row.values) {
+                let ju = j as usize;
+                state.scratch_delta[ju] += c * xv;
+                state.w[ju] =
+                    reg.grad_conj_at(ju, state.v_tilde[ju] + state.scratch_delta[ju]);
+                if !dense_reset {
+                    state.scratch_touched.push(j);
+                }
+            }
+        }
+
+        // Emit Δv_ℓ and restore the synchronized state — sparsely when the
+        // touched set is small (mini-batch regime), densely otherwise.
+        let delta_v = state.scratch_delta.clone();
+        if dense_reset {
+            state.scratch_delta.fill(0.0);
+            reg.grad_conj_into(&state.v_tilde, &mut state.w);
+        } else {
+            for &j in &state.scratch_touched {
+                let ju = j as usize;
+                state.scratch_delta[ju] = 0.0;
+                state.w[ju] = reg.grad_conj_at(ju, state.v_tilde[ju]);
+            }
+        }
+        state.scratch_touched.clear();
+        delta_v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::tiny_classification;
+    use crate::data::Partition;
+    use crate::loss::{Logistic, SmoothHinge};
+    use crate::reg::ElasticNet;
+
+    fn setup(seed: u64) -> WorkerState {
+        let data = tiny_classification(40, 6, seed);
+        let part = Partition::balanced(40, 1, seed);
+        WorkerState::from_partition(&data, &part, 0)
+    }
+
+    /// Local dual objective D̃_ℓ (up to the constant −λn_ℓ·g*(ṽ₀) shift).
+    fn local_dual<L: Loss, R: Regularizer>(
+        ws: &WorkerState,
+        loss: &L,
+        reg: &R,
+        lambda_n_l: f64,
+        v_tilde: &[f64],
+    ) -> f64 {
+        let conj_sum: f64 = (0..ws.n_l())
+            .map(|i| -loss.conj_neg(ws.alpha[i], ws.y[i]))
+            .sum();
+        conj_sum - lambda_n_l * reg.conj(v_tilde)
+    }
+
+    #[test]
+    fn dual_objective_increases_monotonically() {
+        let mut ws = setup(5);
+        let loss = SmoothHinge::default();
+        let reg = ElasticNet::new(0.1);
+        let lambda_n_l = 1e-2 * ws.n_l() as f64;
+        let mut rng = Rng::new(1);
+        let mut prev = local_dual(&ws, &loss, &reg, lambda_n_l, &ws.v_tilde);
+        for _ in 0..10 {
+            let batch: Vec<usize> = (0..ws.n_l()).collect();
+            let dv = ProxSdca.local_step(&mut ws, &batch, &loss, &reg, lambda_n_l, &mut rng);
+            // Emulate the m=1 global step: ṽ += Δv.
+            ws.apply_global(&dv, &reg);
+            let cur = local_dual(&ws, &loss, &reg, lambda_n_l, &ws.v_tilde);
+            assert!(
+                cur >= prev - 1e-10,
+                "dual decreased: {prev} -> {cur}"
+            );
+            prev = cur;
+        }
+    }
+
+    #[test]
+    fn delta_v_matches_alpha_change() {
+        // Invariant: Δv_ℓ == X_ℓᵀ Δα / (λn_ℓ).
+        let mut ws = setup(6);
+        let loss = Logistic;
+        let reg = ElasticNet::new(0.05);
+        let lambda_n_l = 5e-2 * ws.n_l() as f64;
+        let mut rng = Rng::new(2);
+        let alpha_before = ws.alpha.clone();
+        let batch: Vec<usize> = (0..ws.n_l()).step_by(2).collect();
+        let dv = ProxSdca.local_step(&mut ws, &batch, &loss, &reg, lambda_n_l, &mut rng);
+        let d_alpha: Vec<f64> = ws
+            .alpha
+            .iter()
+            .zip(&alpha_before)
+            .map(|(a, b)| a - b)
+            .collect();
+        let want: Vec<f64> = ws
+            .x
+            .matvec_t(&d_alpha)
+            .into_iter()
+            .map(|x| x / lambda_n_l)
+            .collect();
+        for (got, want) in dv.iter().zip(&want) {
+            assert!((got - want).abs() < 1e-12);
+        }
+        // Untouched coordinates keep α = 0.
+        for (i, a) in ws.alpha.iter().enumerate() {
+            if !batch.contains(&i) {
+                assert_eq!(*a, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn local_step_does_not_mutate_synced_state() {
+        let mut ws = setup(7);
+        let loss = SmoothHinge::default();
+        let reg = ElasticNet::new(0.0);
+        let v_before = ws.v_tilde.clone();
+        let w_before = ws.w.clone();
+        let mut rng = Rng::new(3);
+        let batch: Vec<usize> = (0..10).collect();
+        let _ = ProxSdca.local_step(&mut ws, &batch, &loss, &reg, 0.5, &mut rng);
+        assert_eq!(ws.v_tilde, v_before);
+        assert_eq!(ws.w, w_before);
+    }
+
+    #[test]
+    fn touched_refresh_matches_full_recompute() {
+        let mut ws = setup(8);
+        let loss = SmoothHinge::default();
+        let reg = ElasticNet::new(0.3);
+        let lambda_n_l = 1e-2 * ws.n_l() as f64;
+        let mut rng = Rng::new(4);
+        // Run a step, then verify w-consistency by recomputing from ṽ.
+        let batch: Vec<usize> = (0..ws.n_l()).collect();
+        let dv = ProxSdca.local_step(&mut ws, &batch, &loss, &reg, lambda_n_l, &mut rng);
+        ws.apply_global(&dv, &reg);
+        let full = reg.grad_conj(&ws.v_tilde);
+        for (a, b) in ws.w.iter().zip(&full) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        let mut ws = setup(9);
+        let loss = SmoothHinge::default();
+        let reg = ElasticNet::new(0.0);
+        let mut rng = Rng::new(5);
+        let dv = ProxSdca.local_step(&mut ws, &[], &loss, &reg, 1.0, &mut rng);
+        assert!(dv.iter().all(|&x| x == 0.0));
+        assert!(ws.alpha.iter().all(|&a| a == 0.0));
+    }
+}

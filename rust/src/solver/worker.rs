@@ -1,0 +1,167 @@
+//! Per-machine worker state: the shard of data plus the machine-local
+//! optimizer variables of Algorithm 2.
+
+use crate::data::{Dataset, Partition, SparseMatrix};
+use crate::reg::Regularizer;
+
+/// Machine-local state: `(S_ℓ, α_(ℓ), ṽ_ℓ)` plus caches.
+///
+/// `v_tilde` is kept at the *globally synchronized* value (Eq. 15);
+/// during a local step the solver works on a scratch copy and the
+/// difference becomes `Δv_ℓ`. `w` caches `∇g*(ṽ_ℓ)` and is refreshed by
+/// the global step.
+#[derive(Clone, Debug)]
+pub struct WorkerState {
+    /// Shard design matrix (rows = local examples, owned copy).
+    pub x: SparseMatrix,
+    /// Shard labels.
+    pub y: Vec<f64>,
+    /// Local dual variables `α_(ℓ)` (one scalar per local example).
+    pub alpha: Vec<f64>,
+    /// Synchronized `ṽ_ℓ` (length d).
+    pub v_tilde: Vec<f64>,
+    /// Cached `w_ℓ = ∇g*(ṽ_ℓ)` (length d).
+    pub w: Vec<f64>,
+    /// Precomputed `‖x_i‖²` per local example.
+    pub row_norm_sq: Vec<f64>,
+    /// Global indices of the shard (for debugging / trace).
+    pub global_indices: Vec<usize>,
+    /// Reused Δv accumulation buffer (length d, zero between local steps)
+    /// — lets the mini-batch hot path run allocation-free (§Perf it. 3).
+    pub scratch_delta: Vec<f64>,
+    /// Reused touched-coordinate log for reverting the in-place `w`
+    /// updates after a local step.
+    pub scratch_touched: Vec<u32>,
+}
+
+impl WorkerState {
+    /// Build worker `l`'s state from a dataset and partition.
+    pub fn from_partition(data: &Dataset, part: &Partition, l: usize) -> Self {
+        let idx = part.shard(l);
+        let x = data.x.select_rows(idx);
+        let y: Vec<f64> = idx.iter().map(|&i| data.y[i]).collect();
+        let row_norm_sq: Vec<f64> = (0..x.rows()).map(|i| x.row(i).norm_sq()).collect();
+        let d = data.dim();
+        WorkerState {
+            x,
+            y,
+            alpha: vec![0.0; idx.len()],
+            v_tilde: vec![0.0; d],
+            w: vec![0.0; d],
+            row_norm_sq,
+            global_indices: idx.to_vec(),
+            scratch_delta: vec![0.0; d],
+            scratch_touched: Vec::new(),
+        }
+    }
+
+    /// Local shard size `n_ℓ`.
+    pub fn n_l(&self) -> usize {
+        self.y.len()
+    }
+
+    /// Feature dimension `d`.
+    pub fn dim(&self) -> usize {
+        self.v_tilde.len()
+    }
+
+    /// Apply the broadcast global update `ṽ_ℓ += Δṽ` and refresh `w`.
+    pub fn apply_global<R: Regularizer>(&mut self, delta_v_tilde: &[f64], reg: &R) {
+        for (v, &dv) in self.v_tilde.iter_mut().zip(delta_v_tilde) {
+            *v += dv;
+        }
+        reg.grad_conj_into(&self.v_tilde, &mut self.w);
+    }
+
+    /// Overwrite `ṽ_ℓ` (Acc-DADM stage transitions) and refresh `w`.
+    pub fn set_v_tilde<R: Regularizer>(&mut self, v_tilde: &[f64], reg: &R) {
+        self.v_tilde.copy_from_slice(v_tilde);
+        reg.grad_conj_into(&self.v_tilde, &mut self.w);
+    }
+
+    /// Reset dual variables (fresh solve on the same shard).
+    pub fn reset(&mut self) {
+        self.alpha.iter_mut().for_each(|a| *a = 0.0);
+        self.v_tilde.iter_mut().for_each(|v| *v = 0.0);
+        self.w.iter_mut().for_each(|w| *w = 0.0);
+    }
+
+    /// `v_ℓ`-side contribution `Σ_{i∈S_ℓ} X_i α_i` (unscaled) — used by
+    /// invariants tests to validate `ṽ` bookkeeping.
+    pub fn raw_dual_combination(&self) -> Vec<f64> {
+        self.x.matvec_t(&self.alpha)
+    }
+
+    /// Local primal sum `Σ_{i∈S_ℓ} φ_i(x_iᵀ w_global)`.
+    pub fn primal_loss_sum<L: crate::loss::Loss>(&self, loss: &L, w: &[f64]) -> f64 {
+        (0..self.n_l())
+            .map(|i| loss.phi(self.x.row(i).dot(w), self.y[i]))
+            .sum()
+    }
+
+    /// Local dual sum `Σ_{i∈S_ℓ} −φ_i*(−α_i)`.
+    pub fn dual_conj_sum<L: crate::loss::Loss>(&self, loss: &L) -> f64 {
+        (0..self.n_l())
+            .map(|i| -loss.conj_neg(self.alpha[i], self.y[i]))
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::tiny_classification;
+    use crate::loss::{Loss, SmoothHinge};
+    use crate::reg::ElasticNet;
+
+    #[test]
+    fn from_partition_shards_data() {
+        let data = tiny_classification(20, 4, 3);
+        let part = Partition::balanced(20, 3, 7);
+        let total: usize = (0..3)
+            .map(|l| WorkerState::from_partition(&data, &part, l).n_l())
+            .sum();
+        assert_eq!(total, 20);
+        let w0 = WorkerState::from_partition(&data, &part, 0);
+        assert_eq!(w0.dim(), 4);
+        assert_eq!(w0.alpha.len(), w0.n_l());
+        // Shard rows match the original data.
+        for (local, &gi) in w0.global_indices.iter().enumerate() {
+            assert_eq!(w0.x.row(local).to_dense(4), data.x.row(gi).to_dense(4));
+            assert_eq!(w0.y[local], data.y[gi]);
+        }
+    }
+
+    #[test]
+    fn apply_global_refreshes_w() {
+        let data = tiny_classification(10, 3, 1);
+        let part = Partition::balanced(10, 2, 1);
+        let mut ws = WorkerState::from_partition(&data, &part, 0);
+        let reg = ElasticNet::new(0.5);
+        ws.apply_global(&[1.0, -2.0, 0.2], &reg);
+        assert_eq!(ws.v_tilde, vec![1.0, -2.0, 0.2]);
+        assert_eq!(ws.w, vec![0.5, -1.5, 0.0]);
+        // Incremental second application accumulates.
+        ws.apply_global(&[0.5, 0.0, 0.0], &reg);
+        assert_eq!(ws.v_tilde[0], 1.5);
+        assert_eq!(ws.w[0], 1.0);
+    }
+
+    #[test]
+    fn sums_match_direct_computation() {
+        let data = tiny_classification(12, 3, 9);
+        let part = Partition::balanced(12, 2, 2);
+        let mut ws = WorkerState::from_partition(&data, &part, 1);
+        let loss = SmoothHinge::default();
+        ws.alpha = (0..ws.n_l()).map(|i| ws.y[i] * 0.3).collect();
+        let w = vec![0.1, -0.2, 0.4];
+        let p: f64 = (0..ws.n_l())
+            .map(|i| loss.phi(ws.x.row(i).dot(&w), ws.y[i]))
+            .sum();
+        assert!((ws.primal_loss_sum(&loss, &w) - p).abs() < 1e-12);
+        let d: f64 = (0..ws.n_l())
+            .map(|i| -loss.conj_neg(ws.alpha[i], ws.y[i]))
+            .sum();
+        assert!((ws.dual_conj_sum(&loss) - d).abs() < 1e-12);
+    }
+}

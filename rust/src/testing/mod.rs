@@ -1,0 +1,11 @@
+//! In-tree testing infrastructure.
+//!
+//! `proptest` is not available in the offline build environment, so
+//! [`prop`] provides a small deterministic property-based testing harness
+//! with the same workflow: generate many random cases from a seeded RNG,
+//! run a check, and on failure report the case index + seed so the exact
+//! failing input can be replayed.
+
+pub mod prop;
+
+pub use prop::{for_each_case, Gen};

@@ -1,0 +1,174 @@
+//! A minimal deterministic property-based testing harness.
+//!
+//! Usage (doctests run as unit tests in this crate — the doctest harness
+//! cannot link the PJRT shared library, so this block is `text`):
+//!
+//! ```text
+//! use dadm::testing::prop::{for_each_case, Gen};
+//! for_each_case(0xC0FFEE, 100, |g: &mut Gen| {
+//!     let x = g.f64_in(-10.0, 10.0);
+//!     assert!(x.abs() <= 10.0);
+//! });
+//! ```
+//!
+//! On panic the harness re-raises with the case number and seed embedded
+//! in the message so a failing case can be replayed with
+//! [`replay_case`].
+
+use crate::utils::Rng;
+
+/// Random-input generator handed to each property case.
+pub struct Gen {
+    rng: Rng,
+}
+
+impl Gen {
+    /// Raw access to the underlying RNG.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    /// Uniform `f64` in `[lo, hi)`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    /// Log-uniform positive `f64` in `[lo, hi)` (both must be > 0).
+    /// Useful for regularization parameters spanning decades.
+    pub fn f64_log_in(&mut self, lo: f64, hi: f64) -> f64 {
+        assert!(lo > 0.0 && hi > lo);
+        (self.rng.uniform(lo.ln(), hi.ln())).exp()
+    }
+
+    /// Uniform `usize` in `[lo, hi)`.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi > lo);
+        lo + self.rng.below(hi - lo)
+    }
+
+    /// Vector of length `n` with entries in `[lo, hi)`.
+    pub fn vec_f64(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..n).map(|_| self.f64_in(lo, hi)).collect()
+    }
+
+    /// Vector of length `n` of standard normals.
+    pub fn vec_normal(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.rng.normal()).collect()
+    }
+
+    /// A ±1 label.
+    pub fn label(&mut self) -> f64 {
+        if self.rng.bernoulli(0.5) {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    /// Bernoulli draw.
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.bernoulli(p)
+    }
+}
+
+fn case_seed(seed: u64, case: usize) -> u64 {
+    seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Run `cases` independent random cases of a property.
+///
+/// Each case gets its own RNG stream derived from `(seed, case_index)` so
+/// failures are replayable in isolation.
+pub fn for_each_case<F: FnMut(&mut Gen)>(seed: u64, cases: usize, mut prop: F) {
+    for case in 0..cases {
+        let mut g = Gen {
+            rng: Rng::new(case_seed(seed, case)),
+        };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!("property failed at case {case}/{cases} (seed={seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Re-run a single failing case from the `(seed, case)` pair reported by
+/// [`for_each_case`].
+pub fn replay_case<F: FnOnce(&mut Gen)>(seed: u64, case: usize, prop: F) {
+    let mut g = Gen {
+        rng: Rng::new(case_seed(seed, case)),
+    };
+    prop(&mut g);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_requested_cases() {
+        let mut count = 0;
+        for_each_case(1, 57, |_| count += 1);
+        assert_eq!(count, 57);
+    }
+
+    #[test]
+    fn cases_are_deterministic_and_distinct() {
+        let mut first: Vec<f64> = vec![];
+        for_each_case(2, 10, |g| first.push(g.f64_in(0.0, 1.0)));
+        let mut second: Vec<f64> = vec![];
+        for_each_case(2, 10, |g| second.push(g.f64_in(0.0, 1.0)));
+        assert_eq!(first, second);
+        let distinct: std::collections::HashSet<u64> =
+            first.iter().map(|x| x.to_bits()).collect();
+        assert!(distinct.len() > 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at case")]
+    fn failure_reports_case() {
+        for_each_case(3, 100, |g| {
+            let x = g.f64_in(0.0, 1.0);
+            assert!(x < 0.95, "x too large: {x}");
+        });
+    }
+
+    #[test]
+    fn replay_reproduces_case_stream() {
+        let mut captured = None;
+        for_each_case(4, 5, |g| {
+            if captured.is_none() {
+                captured = Some(g.f64_in(0.0, 1.0));
+            }
+        });
+        replay_case(4, 0, |g| {
+            assert_eq!(Some(g.f64_in(0.0, 1.0)), captured);
+        });
+    }
+
+    #[test]
+    fn log_uniform_spans_decades() {
+        let mut lo_seen = false;
+        let mut hi_seen = false;
+        for_each_case(5, 200, |g| {
+            let x = g.f64_log_in(1e-8, 1e-2);
+            assert!((1e-8..1e-2).contains(&x));
+            if x < 1e-6 {
+                lo_seen = true;
+            }
+            if x > 1e-4 {
+                hi_seen = true;
+            }
+        });
+        assert!(lo_seen && hi_seen);
+    }
+}

@@ -1,0 +1,168 @@
+//! Dense numeric kernels shared by the solvers.
+//!
+//! These are the innermost loops of the Layer-3 hot path; they are written
+//! so LLVM auto-vectorizes them (slice iterators, no bounds checks in the
+//! hot loop) and benchmarked in `benches/perf_hotpath.rs`.
+
+/// Dense dot product `xᵀ y`.
+#[inline]
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(a, b)| a * b).sum()
+}
+
+/// Squared Euclidean norm `‖x‖₂²`.
+#[inline]
+pub fn l2_norm_sq(x: &[f64]) -> f64 {
+    x.iter().map(|a| a * a).sum()
+}
+
+/// `‖x‖₁`.
+#[inline]
+pub fn l1_norm(x: &[f64]) -> f64 {
+    x.iter().map(|a| a.abs()).sum()
+}
+
+/// `y ← y + c·x` (axpy).
+#[inline]
+pub fn axpy(c: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += c * xi;
+    }
+}
+
+/// Elementwise soft-threshold: `sign(v)·max(|v| − τ, 0)`.
+///
+/// This is `∇g*` for the paper's experimental regularizer
+/// `g(w) = ½‖w‖² + (μ/λ)‖w‖₁` with `τ = μ/λ` (§10), and equally the prox
+/// map of `τ‖·‖₁`.
+#[inline]
+pub fn soft_threshold_scalar(v: f64, tau: f64) -> f64 {
+    if v > tau {
+        v - tau
+    } else if v < -tau {
+        v + tau
+    } else {
+        0.0
+    }
+}
+
+/// Vectorized [`soft_threshold_scalar`], writing into `out`.
+#[inline]
+pub fn soft_threshold_into(v: &[f64], tau: f64, out: &mut [f64]) {
+    debug_assert_eq!(v.len(), out.len());
+    for (o, &vi) in out.iter_mut().zip(v) {
+        *o = soft_threshold_scalar(vi, tau);
+    }
+}
+
+/// Allocating convenience wrapper around [`soft_threshold_into`].
+pub fn soft_threshold(v: &[f64], tau: f64) -> Vec<f64> {
+    let mut out = vec![0.0; v.len()];
+    soft_threshold_into(v, tau, &mut out);
+    out
+}
+
+/// Clamp `x` into `[lo, hi]`.
+#[inline]
+pub fn clip(x: f64, lo: f64, hi: f64) -> f64 {
+    x.max(lo).min(hi)
+}
+
+/// Relative/absolute tolerance comparison for tests.
+pub fn approx_eq(a: f64, b: f64, tol: f64) -> bool {
+    let scale = 1.0_f64.max(a.abs()).max(b.abs());
+    (a - b).abs() <= tol * scale
+}
+
+/// `log(1 + exp(x))` computed without overflow.
+#[inline]
+pub fn log1p_exp(x: f64) -> f64 {
+    if x > 35.0 {
+        x
+    } else if x < -35.0 {
+        x.exp() // ≈ 0, but keeps strict positivity
+    } else {
+        x.exp().ln_1p()
+    }
+}
+
+/// Binary entropy term `a·ln(a)` with the `0·ln 0 = 0` convention.
+#[inline]
+pub fn xlogx(a: f64) -> f64 {
+    if a <= 0.0 {
+        0.0
+    } else {
+        a * a.ln()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_basic() {
+        assert_eq!(dot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]), 32.0);
+        assert_eq!(dot(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn norms() {
+        assert_eq!(l2_norm_sq(&[3.0, 4.0]), 25.0);
+        assert_eq!(l1_norm(&[-3.0, 4.0]), 7.0);
+    }
+
+    #[test]
+    fn axpy_accumulates() {
+        let mut y = vec![1.0, 1.0];
+        axpy(2.0, &[3.0, -1.0], &mut y);
+        assert_eq!(y, vec![7.0, -1.0]);
+    }
+
+    #[test]
+    fn soft_threshold_cases() {
+        assert_eq!(soft_threshold_scalar(3.0, 1.0), 2.0);
+        assert_eq!(soft_threshold_scalar(-3.0, 1.0), -2.0);
+        assert_eq!(soft_threshold_scalar(0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold_scalar(-0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold(&[2.0, -2.0, 0.1], 1.0), vec![1.0, -1.0, 0.0]);
+    }
+
+    #[test]
+    fn soft_threshold_is_prox_of_l1() {
+        // prox_{τ‖·‖₁}(v) = argmin_w ½(w−v)² + τ|w| — verify by grid search.
+        let tau = 0.7;
+        for &v in &[-2.0, -0.5, 0.0, 0.3, 1.5] {
+            let st = soft_threshold_scalar(v, tau);
+            let obj = |w: f64| 0.5 * (w - v) * (w - v) + tau * w.abs();
+            let mut best = f64::INFINITY;
+            let mut arg = 0.0;
+            let mut w = -3.0;
+            while w <= 3.0 {
+                if obj(w) < best {
+                    best = obj(w);
+                    arg = w;
+                }
+                w += 1e-4;
+            }
+            assert!((st - arg).abs() < 1e-3, "v={v}: {st} vs {arg}");
+        }
+    }
+
+    #[test]
+    fn log1p_exp_stable() {
+        assert!((log1p_exp(0.0) - std::f64::consts::LN_2).abs() < 1e-12);
+        assert!((log1p_exp(100.0) - 100.0).abs() < 1e-9);
+        assert!(log1p_exp(-100.0) >= 0.0);
+        assert!(log1p_exp(-100.0) < 1e-40);
+    }
+
+    #[test]
+    fn clip_bounds() {
+        assert_eq!(clip(5.0, 0.0, 1.0), 1.0);
+        assert_eq!(clip(-5.0, 0.0, 1.0), 0.0);
+        assert_eq!(clip(0.5, 0.0, 1.0), 0.5);
+    }
+}

@@ -1,0 +1,11 @@
+//! Small shared utilities: deterministic RNG and numeric helpers.
+//!
+//! The offline build environment ships no `rand` crate, so we carry a
+//! small, well-tested PRNG of our own (xoshiro256** seeded via
+//! splitmix64), plus the handful of float helpers the solvers share.
+
+pub mod math;
+pub mod rng;
+
+pub use math::{approx_eq, dot, l1_norm, l2_norm_sq, soft_threshold};
+pub use rng::Rng;

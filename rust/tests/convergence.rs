@@ -1,0 +1,239 @@
+//! Integration: end-to-end convergence properties of the full stack on
+//! problems with independently-known answers.
+
+use dadm::comm::{Cluster, CostModel};
+use dadm::coordinator::{AccDadm, AccDadmOptions, Dadm, DadmOptions};
+use dadm::data::synthetic::{tiny_classification, tiny_regression};
+use dadm::data::Partition;
+use dadm::loss::{Logistic, SmoothHinge, Squared};
+use dadm::reg::{ElasticNet, GroupLasso, Zero};
+use dadm::solver::ProxSdca;
+use dadm::utils::math::soft_threshold;
+
+fn opts(sp: f64) -> DadmOptions {
+    DadmOptions {
+        sp,
+        cost: CostModel::free(),
+        cluster: Cluster::Serial,
+        ..Default::default()
+    }
+}
+
+/// Lasso-style problem with orthogonal-ish design: the optimal w of
+/// `min Σ(x_iᵀw − y_i)² + (λn/2)‖w‖² + μn‖w‖₁` must satisfy the
+/// first-order condition `2Xᵀ(Xw − y) + λn·w + μn·∂‖w‖₁ ∋ 0`.
+#[test]
+fn elastic_net_regression_kkt() {
+    let data = tiny_regression(120, 6, 0.02, 41);
+    let part = Partition::balanced(120, 3, 41);
+    let (lambda, mu) = (0.02, 0.01);
+    let mut dadm = Dadm::new(
+        &data,
+        &part,
+        Squared,
+        ElasticNet::new(mu / lambda),
+        Zero,
+        lambda,
+        ProxSdca,
+        opts(1.0),
+    );
+    let r = dadm.solve(1e-11, 3000);
+    assert!(r.converged, "gap {}", r.normalized_gap());
+    let n = data.n() as f64;
+    let resid: Vec<f64> = data
+        .x
+        .matvec(&r.w)
+        .iter()
+        .zip(&data.y)
+        .map(|(p, y)| p - y)
+        .collect();
+    let grad_smooth = data.x.matvec_t(&resid);
+    for j in 0..data.dim() {
+        let g = 2.0 * grad_smooth[j] + lambda * n * r.w[j];
+        if r.w[j] != 0.0 {
+            let kkt = g + mu * n * r.w[j].signum();
+            assert!(kkt.abs() < 2e-2 * n, "KKT violated at {j}: {kkt}");
+        } else {
+            assert!(g.abs() <= mu * n * (1.0 + 1e-2), "|∂| bound violated at {j}: {g}");
+        }
+    }
+}
+
+/// m = 1 DADM with sp = 1/n_ℓ is plain sequential ProxSDCA — it must
+/// converge on logistic regression to the same optimum as full-batch.
+#[test]
+fn single_machine_reduces_to_sdca() {
+    let data = tiny_classification(150, 5, 42);
+    let part1 = Partition::balanced(150, 1, 42);
+    let mut sdca = Dadm::new(
+        &data,
+        &part1,
+        Logistic,
+        ElasticNet::new(0.01),
+        Zero,
+        1e-2,
+        ProxSdca,
+        opts(1.0),
+    );
+    let r1 = sdca.solve(1e-8, 2000);
+    assert!(r1.converged);
+
+    let part4 = Partition::balanced(150, 4, 42);
+    let mut multi = Dadm::new(
+        &data,
+        &part4,
+        Logistic,
+        ElasticNet::new(0.01),
+        Zero,
+        1e-2,
+        ProxSdca,
+        opts(1.0),
+    );
+    let r4 = multi.solve(1e-8, 2000);
+    assert!(r4.converged);
+    // Same optimum regardless of the machine count.
+    for (a, b) in r1.w.iter().zip(&r4.w) {
+        assert!((a - b).abs() < 1e-3, "m=1 vs m=4 optima differ: {a} vs {b}");
+    }
+}
+
+/// The sparse-group-lasso split (§6): solving with the group norm in `h`
+/// must satisfy the combined KKT conditions at the optimum.
+#[test]
+fn group_lasso_solve_is_group_sparse() {
+    // Ground truth supported on the first two of four groups; the noise
+    // groups must be zeroed by a moderate group weight.
+    use dadm::data::{Dataset, SparseMatrix};
+    use dadm::utils::Rng;
+    let d = 12;
+    let n = 200;
+    let mut rng = Rng::new(43);
+    let w_star: Vec<f64> = (0..d)
+        .map(|j| if j < 6 { 1.0 + 0.2 * rng.normal() } else { 0.0 })
+        .collect();
+    let mut rows = Vec::with_capacity(n);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let x: Vec<f64> = (0..d).map(|_| rng.normal() / (d as f64).sqrt()).collect();
+        y.push(
+            x.iter().zip(&w_star).map(|(a, b)| a * b).sum::<f64>() + 0.02 * rng.normal(),
+        );
+        rows.push(x);
+    }
+    let data = Dataset {
+        x: SparseMatrix::from_dense(&rows),
+        y,
+        name: "group-sparse".into(),
+    };
+    let part = Partition::balanced(200, 2, 43);
+    let lambda = 0.05;
+    let h = GroupLasso::contiguous(d, 3, 2.0);
+    let mut dadm = Dadm::new(
+        &data,
+        &part,
+        Squared,
+        ElasticNet::new(0.01),
+        h,
+        lambda,
+        ProxSdca,
+        opts(1.0),
+    );
+    let r = dadm.solve(1e-10, 4000);
+    assert!(r.converged, "gap {}", r.normalized_gap());
+    // With a strong group weight at least one full group must be zeroed,
+    // while the fit remains sane (some groups survive).
+    let groups: Vec<bool> = (0..d / 3)
+        .map(|g| r.w[g * 3..(g + 1) * 3].iter().any(|&x| x != 0.0))
+        .collect();
+    assert!(groups.iter().any(|&b| !b), "no group zeroed: {groups:?}");
+    assert!(groups.iter().any(|&b| b), "all groups zeroed");
+}
+
+/// Acc-DADM and DADM must agree on the optimum (not just both converge).
+#[test]
+fn acc_and_plain_reach_same_optimum() {
+    let data = tiny_classification(200, 6, 44);
+    let part = Partition::balanced(200, 4, 44);
+    let (lambda, mu) = (1e-3, 1e-4);
+    let mut plain = Dadm::new(
+        &data,
+        &part,
+        SmoothHinge::default(),
+        ElasticNet::new(mu / lambda),
+        Zero,
+        lambda,
+        ProxSdca,
+        opts(1.0),
+    );
+    let r_plain = plain.solve(1e-8, 3000);
+    let mut acc = AccDadm::new(
+        &data,
+        &part,
+        SmoothHinge::default(),
+        Zero,
+        lambda,
+        mu,
+        ProxSdca,
+        AccDadmOptions {
+            dadm: opts(1.0),
+            ..Default::default()
+        },
+    );
+    let r_acc = acc.solve(1e-8, 3000);
+    assert!(r_plain.converged && r_acc.converged);
+    for (a, b) in r_plain.w.iter().zip(&r_acc.w) {
+        assert!((a - b).abs() < 1e-3, "optima differ: {a} vs {b}");
+    }
+}
+
+/// The final predictor respects the L1 geometry: w = soft_threshold of
+/// the dual combination (the Prop-4 structure).
+#[test]
+fn solution_has_soft_threshold_structure() {
+    let data = tiny_classification(120, 8, 45);
+    let part = Partition::balanced(120, 3, 45);
+    let (lambda, mu) = (1e-3, 5e-4);
+    let tau = mu / lambda;
+    let mut dadm = Dadm::new(
+        &data,
+        &part,
+        SmoothHinge::default(),
+        ElasticNet::new(tau),
+        Zero,
+        lambda,
+        ProxSdca,
+        opts(0.5),
+    );
+    let r = dadm.solve(1e-7, 3000);
+    assert!(r.converged);
+    let st = soft_threshold(dadm.v(), tau);
+    for (a, b) in r.w.iter().zip(&st) {
+        assert!((a - b).abs() < 1e-12, "w != soft_threshold(v): {a} vs {b}");
+    }
+}
+
+/// Mini-batch sp < 1 converges to the same answer as sp = 1.
+#[test]
+fn minibatch_and_fullbatch_same_optimum() {
+    let data = tiny_classification(160, 5, 46);
+    let part = Partition::balanced(160, 4, 46);
+    let solve = |sp: f64| {
+        let mut dadm = Dadm::new(
+            &data,
+            &part,
+            Logistic,
+            ElasticNet::new(0.0),
+            Zero,
+            1e-2,
+            ProxSdca,
+            opts(sp),
+        );
+        dadm.solve(1e-9, 5000)
+    };
+    let full = solve(1.0);
+    let mini = solve(0.1);
+    assert!(full.converged && mini.converged);
+    for (a, b) in full.w.iter().zip(&mini.w) {
+        assert!((a - b).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,209 @@
+//! Integration: edge cases and failure injection across the stack.
+
+use dadm::comm::CostModel;
+use dadm::coordinator::{AccDadm, AccDadmOptions, Dadm, DadmOptions};
+use dadm::data::synthetic::tiny_classification;
+use dadm::data::{Dataset, Partition, SparseMatrix};
+use dadm::loss::{Logistic, SmoothHinge};
+use dadm::reg::{ElasticNet, Zero};
+use dadm::solver::ProxSdca;
+
+fn opts(sp: f64) -> DadmOptions {
+    DadmOptions {
+        sp,
+        cost: CostModel::free(),
+        ..Default::default()
+    }
+}
+
+/// One example per machine — the most extreme partition.
+#[test]
+fn one_example_per_machine() {
+    let data = tiny_classification(8, 3, 61);
+    let part = Partition::balanced(8, 8, 61);
+    let mut dadm = Dadm::new(
+        &data,
+        &part,
+        SmoothHinge::default(),
+        ElasticNet::new(0.0),
+        Zero,
+        0.1,
+        ProxSdca,
+        opts(1.0),
+    );
+    let r = dadm.solve(1e-6, 500);
+    assert!(r.converged, "gap {}", r.normalized_gap());
+}
+
+/// All labels identical: the optimum is a large-margin one-class
+/// predictor; the solver must still converge (no division blowups).
+#[test]
+fn degenerate_single_class() {
+    let mut data = tiny_classification(60, 4, 62);
+    for y in &mut data.y {
+        *y = 1.0;
+    }
+    let part = Partition::balanced(60, 3, 62);
+    let mut dadm = Dadm::new(
+        &data,
+        &part,
+        Logistic,
+        ElasticNet::new(0.01),
+        Zero,
+        1e-2,
+        ProxSdca,
+        opts(0.5),
+    );
+    let r = dadm.solve(1e-6, 1000);
+    assert!(r.converged);
+    // The predictor must score the positive class positively on average.
+    let preds = data.x.matvec(&r.w);
+    let mean: f64 = preds.iter().sum::<f64>() / preds.len() as f64;
+    assert!(mean > 0.0);
+}
+
+/// Rows that are entirely zero contribute nothing but must not crash or
+/// corrupt the duals.
+#[test]
+fn zero_feature_rows() {
+    let rows = vec![
+        vec![1.0, 0.0],
+        vec![0.0, 0.0], // empty row
+        vec![0.0, 1.0],
+        vec![0.0, 0.0], // empty row
+        vec![0.5, 0.5],
+        vec![-0.5, 0.5],
+    ];
+    let data = Dataset {
+        x: SparseMatrix::from_dense(&rows),
+        y: vec![1.0, 1.0, -1.0, -1.0, 1.0, -1.0],
+        name: "zeros".into(),
+    };
+    let part = Partition::balanced(6, 2, 63);
+    let mut dadm = Dadm::new(
+        &data,
+        &part,
+        SmoothHinge::default(),
+        ElasticNet::new(0.0),
+        Zero,
+        0.1,
+        ProxSdca,
+        opts(1.0),
+    );
+    let r = dadm.solve(1e-8, 500);
+    assert!(r.converged, "gap {}", r.normalized_gap());
+    // Empty rows contribute nothing to v but their dual term must reach
+    // its own maximizer (α = y for the smooth hinge at u = 0), otherwise
+    // the gap keeps a φ(0) floor.
+    for ws in dadm.machine_states() {
+        for i in 0..ws.n_l() {
+            if ws.x.row(i).nnz() == 0 {
+                assert!((ws.alpha[i] - ws.y[i]).abs() < 1e-6, "α = {}", ws.alpha[i]);
+            }
+        }
+    }
+}
+
+/// Extreme regularization: huge λ drives w → 0; the gap must still hit
+/// machine precision quickly.
+#[test]
+fn huge_lambda_zero_solution() {
+    let data = tiny_classification(50, 4, 64);
+    let part = Partition::balanced(50, 2, 64);
+    let mut dadm = Dadm::new(
+        &data,
+        &part,
+        SmoothHinge::default(),
+        ElasticNet::new(10.0), // heavy L1 too
+        Zero,
+        100.0,
+        ProxSdca,
+        opts(1.0),
+    );
+    let r = dadm.solve(1e-10, 100);
+    assert!(r.converged);
+    assert!(r.w.iter().all(|&w| w.abs() < 1e-6), "{:?}", r.w);
+}
+
+/// Tiny λ with a round cap: must not panic, must report not-converged
+/// honestly, and the trace must stay finite.
+#[test]
+fn tiny_lambda_capped_run_is_sane() {
+    let data = tiny_classification(80, 4, 65);
+    let part = Partition::balanced(80, 4, 65);
+    let mut acc = AccDadm::new(
+        &data,
+        &part,
+        SmoothHinge::default(),
+        Zero,
+        1e-12,
+        1e-9,
+        ProxSdca,
+        AccDadmOptions {
+            dadm: opts(0.5),
+            ..Default::default()
+        },
+    );
+    let r = acc.solve(1e-9, 20);
+    assert!(!r.converged);
+    assert!(r.rounds <= 21);
+    for rec in &r.trace.rounds {
+        assert!(rec.primal.is_finite() && rec.dual.is_finite());
+        assert!(rec.gap() >= -1e-6);
+    }
+}
+
+/// Unbalanced (round-robin with uneven n) partitions: weights n_ℓ/n must
+/// keep the v bookkeeping exact.
+#[test]
+fn unbalanced_partition_bookkeeping() {
+    let data = tiny_classification(101, 4, 66); // 101 % 4 != 0
+    let part = Partition::balanced(101, 4, 66);
+    let mut dadm = Dadm::new(
+        &data,
+        &part,
+        Logistic,
+        ElasticNet::new(0.05),
+        Zero,
+        1e-2,
+        ProxSdca,
+        opts(0.3),
+    );
+    dadm.resync();
+    for _ in 0..5 {
+        dadm.round();
+    }
+    dadm.check_v_invariant().unwrap();
+}
+
+/// The solve must be exactly reproducible for a fixed seed and diverge
+/// for different seeds (mini-batch draws actually depend on the seed).
+#[test]
+fn determinism_and_seed_sensitivity() {
+    let data = tiny_classification(90, 5, 67);
+    let part = Partition::balanced(90, 3, 67);
+    let run = |seed: u64| {
+        let mut dadm = Dadm::new(
+            &data,
+            &part,
+            SmoothHinge::default(),
+            ElasticNet::new(0.1),
+            Zero,
+            1e-3,
+            ProxSdca,
+            DadmOptions {
+                sp: 0.2,
+                seed,
+                cost: CostModel::free(),
+                ..Default::default()
+            },
+        );
+        dadm.resync();
+        for _ in 0..10 {
+            dadm.round();
+        }
+        dadm.w().to_vec()
+    };
+    assert_eq!(run(1), run(1), "same seed must reproduce bit-exactly");
+    assert_ne!(run(1), run(2), "different seeds must draw different batches");
+}

@@ -1,0 +1,155 @@
+//! Integration: the structural equivalences the paper proves.
+//!
+//! * Proposition 2: the duality gap is non-negative for any state.
+//! * Proposition 3/5: the global gap equals the sum of local gaps at the
+//!   Prop-5-optimal β.
+//! * §6: DADM with h = 0 + balanced partitions ≡ CoCoA+ (here: the
+//!   global step reduces to plain averaging, ṽ = v).
+//! * Theorem-6 step scale degrades gracefully with batch size.
+
+use dadm::comm::CostModel;
+use dadm::coordinator::{Dadm, DadmOptions};
+use dadm::data::synthetic::tiny_classification;
+use dadm::data::Partition;
+use dadm::loss::{Loss, SmoothHinge};
+use dadm::reg::{ElasticNet, Regularizer, Zero};
+use dadm::solver::ProxSdca;
+use dadm::testing::prop::for_each_case;
+
+fn opts(sp: f64) -> DadmOptions {
+    DadmOptions {
+        sp,
+        cost: CostModel::free(),
+        ..Default::default()
+    }
+}
+
+/// Prop 2: P(w) − D(α, β) ≥ 0 along the whole trajectory, for random
+/// hyperparameters.
+#[test]
+fn prop2_gap_nonnegative_random_hyperparams() {
+    for_each_case(0xF00D, 12, |g| {
+        let n = g.usize_in(40, 120);
+        let m = g.usize_in(1, 5);
+        let data = tiny_classification(n, 4, g.rng().next_u64());
+        let part = Partition::balanced(n, m, 1);
+        let lambda = g.f64_log_in(1e-5, 1e-1);
+        let tau = if g.bool(0.5) { g.f64_log_in(1e-4, 1.0) } else { 0.0 };
+        let mut dadm = Dadm::new(
+            &data,
+            &part,
+            SmoothHinge::default(),
+            ElasticNet::new(tau),
+            Zero,
+            lambda,
+            ProxSdca,
+            opts(0.5),
+        );
+        dadm.resync();
+        for _ in 0..4 {
+            dadm.round();
+            let gap = dadm.gap();
+            assert!(gap >= -1e-8, "negative gap {gap} (λ={lambda}, τ={tau})");
+        }
+    });
+}
+
+/// Prop 3/5: after the global step, Σ_ℓ local gaps == global gap.
+///
+/// Local gap on machine ℓ (with the Prop-5 β): since ṽ_ℓ = ṽ and
+/// w_ℓ = w, it is Σ_{i∈S_ℓ}[φ_i(x_iᵀw) + φ_i*(−α_i) + α_i·x_iᵀw].
+#[test]
+fn prop5_gap_decomposition() {
+    let n = 90;
+    let data = tiny_classification(n, 5, 51);
+    let part = Partition::balanced(n, 3, 51);
+    let lambda = 1e-2;
+    let loss = SmoothHinge::default();
+    let reg = ElasticNet::new(0.1);
+    let mut dadm = Dadm::new(&data, &part, loss, reg, Zero, lambda, ProxSdca, opts(0.4));
+    dadm.resync();
+    for _ in 0..5 {
+        dadm.round();
+        let global_gap = dadm.gap();
+        // Recompute the sum of local gaps from worker state.
+        let w = dadm.w().to_vec();
+        let mut local_sum = 0.0;
+        for ws in dadm.machine_states() {
+            for i in 0..ws.n_l() {
+                let xi_w = ws.x.row(i).dot(&w);
+                local_sum += loss.phi(xi_w, ws.y[i])
+                    + loss.conj_neg(ws.alpha[i], ws.y[i])
+                    + ws.alpha[i] * xi_w;
+            }
+        }
+        assert!(
+            (global_gap - local_sum).abs() < 1e-7 * (1.0 + global_gap.abs()),
+            "Prop 5 decomposition violated: global {global_gap} vs Σlocal {local_sum}"
+        );
+    }
+}
+
+/// §6 CoCoA+ equivalence: with h = 0 the global step is plain averaging,
+/// so ṽ == v and every machine's ṽ_ℓ equals the global v after sync.
+#[test]
+fn cocoa_plus_equivalence_h_zero() {
+    let n = 80;
+    let data = tiny_classification(n, 6, 52);
+    let part = Partition::balanced(n, 4, 52);
+    let reg = ElasticNet::new(0.2);
+    let mut dadm = Dadm::new(
+        &data,
+        &part,
+        SmoothHinge::default(),
+        reg,
+        Zero,
+        1e-2,
+        ProxSdca,
+        opts(0.5),
+    );
+    dadm.resync();
+    for _ in 0..3 {
+        dadm.round();
+        let v = dadm.v().to_vec();
+        // ρ = 0 and ṽ = v ⇒ every worker's synced ṽ_ℓ == v and
+        // w_ℓ == ∇g*(v).
+        let w_expect = reg.grad_conj(&v);
+        for ws in dadm.machine_states() {
+            for j in 0..v.len() {
+                assert!((ws.v_tilde[j] - v[j]).abs() < 1e-12);
+                assert!((ws.w[j] - w_expect[j]).abs() < 1e-12);
+            }
+        }
+    }
+}
+
+/// The dual objective never decreases across rounds (ascent property),
+/// randomized over solvers and batch sizes.
+#[test]
+fn dual_ascent_property() {
+    for_each_case(0xA5CE, 8, |g| {
+        let n = g.usize_in(50, 150);
+        let data = tiny_classification(n, 4, g.rng().next_u64());
+        let m = g.usize_in(1, 4);
+        let part = Partition::balanced(n, m, 2);
+        let sp = *g.choose(&[0.1, 0.5, 1.0]);
+        let mut dadm = Dadm::new(
+            &data,
+            &part,
+            SmoothHinge::default(),
+            ElasticNet::new(0.05),
+            Zero,
+            5e-3,
+            ProxSdca,
+            opts(sp),
+        );
+        dadm.resync();
+        let mut prev = dadm.dual();
+        for _ in 0..6 {
+            dadm.round();
+            let d = dadm.dual();
+            assert!(d >= prev - 1e-9, "dual decreased {prev} -> {d}");
+            prev = d;
+        }
+    });
+}
