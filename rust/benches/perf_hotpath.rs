@@ -3,16 +3,21 @@
 //! * ProxSDCA epoch throughput (coordinate updates/s, dense + sparse) —
 //!   the innermost solve loop;
 //! * Theorem-step batched update throughput;
-//! * tree allreduce bandwidth;
+//! * tree allreduce bandwidth (dense + sparse Δv messages);
+//! * full DADM rounds on the sparse-delta pipeline (dense vs sparse
+//!   workloads, per-round message sizes);
 //! * PJRT artifact execute latency (when `artifacts/` exists).
 //!
 //! Results feed EXPERIMENTS.md §Perf (before/after iteration log).
 
+use dadm::comm::sparse::{tree_allreduce_delta, Delta, SparseDelta};
+use dadm::comm::CostModel;
+use dadm::coordinator::{Dadm, DadmOptions};
 use dadm::data::synthetic::SyntheticSpec;
 use dadm::data::Partition;
 use dadm::loss::{Loss, SmoothHinge};
 use dadm::metrics::bench::{fmt_secs, time_it, BenchTable};
-use dadm::reg::ElasticNet;
+use dadm::reg::{ElasticNet, Zero};
 use dadm::solver::{LocalSolver, ProxSdca, TheoremStep, WorkerState};
 use dadm::utils::Rng;
 
@@ -43,7 +48,9 @@ fn main() {
         let batch: Vec<usize> = (0..n).collect();
         let mut rng = Rng::new(2);
         let t = time_it(1, 5, || {
-            let dv = ProxSdca.local_step(&mut ws, &batch, &loss, &reg, lambda_n_l, &mut rng);
+            let dv = ProxSdca
+                .local_step(&mut ws, &batch, &loss, &reg, lambda_n_l, &mut rng)
+                .into_dense();
             ws.apply_global(&dv, &reg);
         });
         let coords_per_sec = n as f64 / t.median;
@@ -113,7 +120,9 @@ fn main() {
         let mut rng = Rng::new(4);
         let step = TheoremStep { radius: 1.0 };
         let t = time_it(1, 5, || {
-            let dv = step.local_step(&mut ws, &batch, &loss, &reg, 2.0, &mut rng);
+            let dv = step
+                .local_step(&mut ws, &batch, &loss, &reg, 2.0, &mut rng)
+                .into_dense();
             ws.apply_global(&dv, &reg);
         });
         table.row(&[
@@ -138,6 +147,109 @@ fn main() {
             format!("m={m} d={d}"),
             fmt_secs(t.median),
             format!("{:.2} GB/s", (m * d * 8) as f64 / t.median / 1e9),
+        ]);
+    }
+
+    // --- Sparse allreduce (rcv1-style Δv support ≪ d) ---
+    {
+        let (m, d, nnz) = (32usize, 1 << 16, 512usize);
+        let mut rng = Rng::new(12);
+        let contribs: Vec<SparseDelta> = (0..m)
+            .map(|_| {
+                let mut idx: Vec<u32> = rng
+                    .sample_indices(d, nnz)
+                    .into_iter()
+                    .map(|j| j as u32)
+                    .collect();
+                idx.sort_unstable();
+                let val: Vec<f64> = (0..nnz).map(|_| rng.normal()).collect();
+                SparseDelta { dim: d, idx, val }
+            })
+            .collect();
+        let weights = vec![1.0 / m as f64; m];
+        // The reduce consumes its messages, so pre-build one set per
+        // run to keep clone/alloc cost out of the measured figure.
+        let (warmup, runs) = (2, 10);
+        let mut prepared: Vec<Vec<Delta>> = (0..warmup + runs)
+            .map(|_| contribs.iter().map(|s| Delta::Sparse(s.clone())).collect())
+            .collect();
+        let t = time_it(warmup, runs, || {
+            let messages = prepared.pop().expect("one prepared set per run");
+            let (out, _max_elems) = tree_allreduce_delta(messages, &weights);
+            assert_eq!(out.dim(), d);
+        });
+        table.row(&[
+            "tree_allreduce_sparse".into(),
+            format!("m={m} d={d} nnz={nnz}"),
+            fmt_secs(t.median),
+            format!("{:.1}M nnz/s", (m * nnz) as f64 / t.median / 1e6),
+        ]);
+    }
+
+    // --- Full DADM round on the sparse-delta pipeline ---
+    // Dense workload: epoch-style batches emit dense messages — the
+    // sparse pipeline must not regress this path. Sparse workload:
+    // mini-batches on rcv1-like data emit small sparse messages instead
+    // of per-worker dense length-d vectors (per-round allocations drop
+    // from m·d to m·nnz).
+    // The sparse row sits well inside the sparse regime (batch·avg_nnz
+    // ≈ d/5, touched support ≪ the 2·d/3 densify cutoff), so the bench
+    // actually measures sparse-message rounds rather than the threshold.
+    for (name, density, d, sp) in [
+        ("dense", 1.0, 64usize, 1.0),
+        ("sparse", 0.01, 2048, 0.02),
+    ] {
+        let n = 8_000;
+        let machines = 8;
+        let data = SyntheticSpec {
+            name: format!("round-{name}"),
+            n,
+            d,
+            density,
+            signal_density: 0.2,
+            noise: 0.1,
+            seed: 13,
+        }
+        .generate();
+        let part = Partition::balanced(n, machines, 13);
+        let mut dadm = Dadm::new(
+            &data,
+            &part,
+            SmoothHinge::default(),
+            ElasticNet::new(0.1),
+            Zero,
+            1e-4,
+            ProxSdca,
+            DadmOptions {
+                sp,
+                cost: CostModel::free(),
+                sparse_comm: true,
+                ..Default::default()
+            },
+        );
+        dadm.resync();
+        let t = time_it(1, 5, || {
+            dadm.round();
+        });
+        // One representative worker message, for the size column.
+        let mut ws = WorkerState::from_partition(&data, &part, 0);
+        let mut rng = Rng::new(14);
+        let batch_len = ((sp * ws.n_l() as f64).ceil() as usize).clamp(1, ws.n_l());
+        let batch = rng.sample_indices(ws.n_l(), batch_len);
+        let reg = ElasticNet::new(0.1);
+        let msg = ProxSdca.local_step(
+            &mut ws,
+            &batch,
+            &SmoothHinge::default(),
+            &reg,
+            1e-4 * ws.n_l() as f64,
+            &mut rng,
+        );
+        table.row(&[
+            "dadm_round_sparse_delta".into(),
+            format!("{name} n={n} d={d} m={machines} sp={sp}"),
+            fmt_secs(t.median),
+            format!("Δv msg {} / dense {} elems", msg.message_elems(), d),
         ]);
     }
 

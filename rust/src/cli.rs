@@ -48,7 +48,7 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunOutcome> {
         cost,
         seed: cfg.seed,
         gap_every: 1,
-        sparse_comm: false,
+        sparse_comm: cfg.sparse_comm,
     };
 
     // Dispatch over loss at this boundary only: the coordinators are
@@ -161,9 +161,17 @@ pub fn main_with_args(args: &[String]) -> Result<()> {
             "dadm — Distributed Alternating Dual Maximization (Zheng et al., 2016)\n\n\
              USAGE: dadm --key value ...\n\n\
              Keys: dataset scale method loss solver lambda mu machines sp eps\n\
-                   max-passes cluster seed nu comm-alpha comm-beta\n\n\
+                   max-passes cluster seed nu comm-alpha comm-beta sparse-comm\n\n\
+             --sparse-comm true|false (default false)\n  \
+             The data path always exchanges Δv/Δṽ as sparse index+value\n  \
+             messages when their support is small (falling back to dense\n  \
+             vectors past the wire break-even). With sparse-comm=true the\n  \
+             alpha-beta cost model charges those actual message sizes\n  \
+             (12 B per stored entry, capped at the dense 8·d bytes);\n  \
+             with false it charges dense length-d vectors. The iterates\n  \
+             are bit-identical either way — only modeled comm time moves.\n\n\
              Example:\n  dadm --dataset synth-rcv1 --scale 0.01 --method acc-dadm \\\n       \
-             --loss logistic --lambda 1e-7 --machines 8 --sp 0.2"
+             --loss logistic --lambda 1e-7 --machines 8 --sp 0.2 --sparse-comm true"
         );
         return Ok(());
     }

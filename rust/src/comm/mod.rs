@@ -2,18 +2,23 @@
 //!
 //! The paper runs on an OpenMPI cluster with one process per machine
 //! (§10: "we use one processor to simulate one machine"). We go one level
-//! lighter: one *worker* per machine executed by a thread pool
-//! ([`cluster`]), an explicit [`allreduce`] implementation whose round
-//! structure matches an MPI reduce+broadcast tree, and an alpha-beta
-//! [`cost`] model that accounts communication time per round exactly the
-//! way the figures split compute vs. "Comm. Time". All algorithmic
-//! quantities (rounds, bytes moved, gap-vs-communications) are identical
-//! to a real deployment; only wall-clock is modeled, and both modeled and
-//! real wall-clock are recorded.
+//! lighter: one *worker* per machine executed by a persistent thread
+//! [`pool`] ([`cluster`] selects the backend), an explicit [`allreduce`]
+//! implementation whose round structure matches an MPI reduce+broadcast
+//! tree — including the [`sparse`] Δv/Δṽ message form of §6 — and an
+//! alpha-beta [`cost`] model that accounts communication time per round
+//! exactly the way the figures split compute vs. "Comm. Time". All
+//! algorithmic quantities (rounds, bytes moved, gap-vs-communications)
+//! are identical to a real deployment; only wall-clock is modeled, and
+//! both modeled and real wall-clock are recorded.
 
 pub mod allreduce;
 pub mod cluster;
 pub mod cost;
+pub mod pool;
+pub mod sparse;
 
 pub use cluster::Cluster;
 pub use cost::CostModel;
+pub use pool::WorkerPool;
+pub use sparse::{Delta, SparseDelta};

@@ -1,0 +1,267 @@
+//! Persistent worker pool: long-lived OS threads driven over channels.
+//!
+//! The previous `Cluster::Threads` backend spawned one fresh OS thread
+//! per machine per round through `std::thread::scope`, which puts a
+//! thread create/join pair on every simulated communication round — at
+//! mini-batch sampling fractions (`sp ≪ 1`, thousands of rounds) the
+//! spawn overhead dwarfs the local step itself. This pool spawns each
+//! worker thread once, parks it on an `mpsc` job queue, and reuses it for
+//! every subsequent parallel section (see DESIGN.md §4). Worker `l` of a
+//! parallel section always runs on pool thread `l`, so a solve's
+//! per-machine state stays on the same thread round after round.
+//!
+//! The pool is process-global and grows lazily to the widest machine
+//! count requested; idle workers block on their queue and cost nothing.
+//! Two consequences of the global design: concurrent parallel sections
+//! (e.g. two solves in one process) time-share the same workers — jobs
+//! queue FIFO per worker rather than spawning extra threads — and a
+//! nested [`WorkerPool::run`] issued from inside a pool job degrades to
+//! inline serial execution (dispatching it to the pool would have the
+//! issuing worker deadlock waiting on its own queue).
+
+use super::cluster::ParallelRun;
+use std::cell::Cell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+thread_local! {
+    /// Set for the lifetime of every pool worker thread; guards against
+    /// re-entrant dispatch (see [`WorkerPool::run`]).
+    static IS_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// A type-erased unit of work shipped to a pool thread.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Process-global pool of persistent worker threads.
+pub struct WorkerPool {
+    /// One job queue per worker thread, in spawn order.
+    senders: Mutex<Vec<Sender<Job>>>,
+}
+
+static POOL: OnceLock<WorkerPool> = OnceLock::new();
+
+impl WorkerPool {
+    /// The process-global pool (created empty on first use).
+    pub fn global() -> &'static WorkerPool {
+        POOL.get_or_init(|| WorkerPool {
+            senders: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// Number of worker threads currently alive.
+    pub fn workers(&self) -> usize {
+        self.senders.lock().expect("pool lock poisoned").len()
+    }
+
+    /// Grow the pool to at least `m` workers and hand back their queues.
+    fn ensure_workers(&self, m: usize) -> Vec<Sender<Job>> {
+        let mut senders = self.senders.lock().expect("pool lock poisoned");
+        while senders.len() < m {
+            let (tx, rx) = channel::<Job>();
+            let id = senders.len();
+            std::thread::Builder::new()
+                .name(format!("dadm-worker-{id}"))
+                .spawn(move || {
+                    IS_POOL_WORKER.with(|flag| flag.set(true));
+                    while let Ok(job) = rx.recv() {
+                        // A panicking job must not take down the pool
+                        // thread; the panic is re-raised on the submitting
+                        // side when the job's result slot comes back empty.
+                        let _ = catch_unwind(AssertUnwindSafe(job));
+                    }
+                })
+                .expect("failed to spawn pool worker");
+            senders.push(tx);
+        }
+        senders[..m].to_vec()
+    }
+
+    /// Run `f(l, &mut states[l])` for every `l` concurrently, one pool
+    /// worker per state, blocking until all have finished. Semantics and
+    /// timing accounting match [`super::Cluster::run`].
+    pub fn run<S, T, F>(&self, states: &mut [S], f: F) -> ParallelRun<T>
+    where
+        S: Send,
+        T: Send,
+        F: Fn(usize, &mut S) -> T + Sync,
+    {
+        let m = states.len();
+        if m == 0 {
+            return ParallelRun {
+                results: Vec::new(),
+                parallel_secs: 0.0,
+                total_secs: 0.0,
+            };
+        }
+        if IS_POOL_WORKER.with(|flag| flag.get()) {
+            // Nested parallel section issued from inside a pool job:
+            // dispatching it would have this worker wait on a job queued
+            // behind itself — a guaranteed deadlock. Run inline instead,
+            // with the same timing semantics as `Cluster::Serial`.
+            let mut results = Vec::with_capacity(m);
+            let mut parallel_secs = 0.0f64;
+            let mut total_secs = 0.0f64;
+            for (l, s) in states.iter_mut().enumerate() {
+                let t0 = Instant::now();
+                results.push(f(l, s));
+                let t = t0.elapsed().as_secs_f64();
+                parallel_secs = parallel_secs.max(t);
+                total_secs += t;
+            }
+            return ParallelRun {
+                results,
+                parallel_secs,
+                total_secs,
+            };
+        }
+        let senders = self.ensure_workers(m);
+        // Each job reports either its (result, elapsed) or the panic
+        // payload it caught, so a panicking local step re-raises with the
+        // original message on the submitting side.
+        let (tx, rx) = channel::<(usize, std::thread::Result<(T, f64)>)>();
+        for (l, (s, sender)) in states.iter_mut().zip(&senders).enumerate() {
+            let tx = tx.clone();
+            let f = &f;
+            let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                let t0 = Instant::now();
+                let outcome = catch_unwind(AssertUnwindSafe(|| f(l, s)))
+                    .map(|r| (r, t0.elapsed().as_secs_f64()));
+                let _ = tx.send((l, outcome));
+            });
+            // SAFETY: the job borrows `states` and `f`, which outlive this
+            // call frame, and this function does not return until every
+            // job has run to completion (or been dropped unrun): the drain
+            // loop below blocks until all clones of `tx` are gone, and
+            // each clone lives inside exactly one job. Erasing the borrow
+            // lifetime to 'static is therefore sound — the referents are
+            // live for the whole time any job can observe them.
+            let job: Job = unsafe { std::mem::transmute(job) };
+            // A send can only fail if the worker thread is gone (process
+            // teardown); the undelivered job — and its `tx` clone — are
+            // dropped with the error, so the drain below still terminates
+            // and the empty slot reports the dead worker.
+            let _ = sender.send(job);
+        }
+        drop(tx);
+
+        let mut slots: Vec<Option<std::thread::Result<(T, f64)>>> =
+            (0..m).map(|_| None).collect();
+        while let Ok((l, outcome)) = rx.recv() {
+            slots[l] = Some(outcome);
+        }
+        // All senders are gone ⇒ every job has finished or been dropped;
+        // only now is it safe to unwind past the borrowed state.
+        let mut results = Vec::with_capacity(m);
+        let mut parallel_secs = 0.0f64;
+        let mut total_secs = 0.0f64;
+        for slot in slots {
+            match slot {
+                Some(Ok((r, t))) => {
+                    results.push(r);
+                    parallel_secs = parallel_secs.max(t);
+                    total_secs += t;
+                }
+                Some(Err(payload)) => std::panic::resume_unwind(payload),
+                None => panic!("pool worker thread died"),
+            }
+        }
+        ParallelRun {
+            results,
+            parallel_secs,
+            total_secs,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_preserves_order() {
+        let mut s: Vec<u64> = (0..6).collect();
+        let r = WorkerPool::global().run(&mut s, |l, x| {
+            *x += 100;
+            *x * 10 + l as u64
+        });
+        assert_eq!(s, vec![100, 101, 102, 103, 104, 105]);
+        assert_eq!(
+            r.results,
+            vec![1000, 1011, 1022, 1033, 1044, 1055]
+        );
+        assert!(r.total_secs >= r.parallel_secs);
+    }
+
+    #[test]
+    fn threads_persist_across_runs() {
+        let pool = WorkerPool::global();
+        let collect_ids = |pool: &WorkerPool| -> Vec<std::thread::ThreadId> {
+            let mut s = vec![(); 3];
+            pool.run(&mut s, |_, _| std::thread::current().id()).results
+        };
+        let a = collect_ids(pool);
+        let b = collect_ids(pool);
+        // Same workers serve consecutive parallel sections: no per-round
+        // spawning.
+        assert_eq!(a, b);
+        assert!(pool.workers() >= 3);
+    }
+
+    #[test]
+    fn grows_to_widest_request() {
+        let pool = WorkerPool::global();
+        let mut s = vec![0u8; 9];
+        let r = pool.run(&mut s, |l, _| l);
+        assert_eq!(r.results, (0..9).collect::<Vec<_>>());
+        assert!(pool.workers() >= 9);
+    }
+
+    #[test]
+    fn empty_input() {
+        let mut s: Vec<u8> = vec![];
+        let r = WorkerPool::global().run(&mut s, |_, _| 0u8);
+        assert!(r.results.is_empty());
+        assert_eq!(r.parallel_secs, 0.0);
+        assert_eq!(r.total_secs, 0.0);
+    }
+
+    #[test]
+    fn nested_run_degrades_to_inline_execution() {
+        // A run issued from inside a pool job must not deadlock on the
+        // issuing worker's own queue.
+        let pool = WorkerPool::global();
+        let mut outer = vec![(); 3];
+        let r = pool.run(&mut outer, |l, _| {
+            let mut inner = vec![0usize; 2];
+            let rr = pool.run(&mut inner, |k, _| k + l);
+            rr.results.iter().sum::<usize>()
+        });
+        // Inner sums are (0+l) + (1+l) = 2l + 1.
+        assert_eq!(r.results, vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn pool_survives_a_panicking_job() {
+        let pool = WorkerPool::global();
+        let panicked = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let mut s = vec![(); 2];
+            pool.run(&mut s, |l, _| {
+                if l == 1 {
+                    panic!("boom");
+                }
+                l
+            });
+        }));
+        // The original payload is re-raised, not a generic pool message.
+        let payload = panicked.expect_err("panic must propagate to the caller");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert_eq!(msg, "boom");
+        // The surviving workers keep serving jobs afterwards.
+        let mut s = vec![0usize; 2];
+        let r = pool.run(&mut s, |l, _| l + 1);
+        assert_eq!(r.results, vec![1, 2]);
+    }
+}

@@ -1,0 +1,423 @@
+//! Sparse Δv/Δṽ messages — the real-data-path form of the paper's §6
+//! remark that "it may be beneficial to pass Δṽ instead, especially when
+//! Δṽ is sparse but ṽ is dense" (see DESIGN.md §7).
+//!
+//! A mini-batch local step touches only the coordinates covered by the
+//! sampled rows, so on rcv1-style data the per-round `Δv_ℓ` has support
+//! `≪ d`. Workers therefore emit a [`Delta`]: either an index/value
+//! [`SparseDelta`] message (12 B per stored entry on the wire: `u32`
+//! index + `f64` value) or a dense vector when the support is wide enough
+//! that the sparse encoding would be *larger*. The tree aggregation
+//! ([`tree_allreduce_delta`]) merges sparse messages by index with the
+//! same binary-tree round structure as the dense
+//! [`super::allreduce::tree_allreduce`] — identical pairwise addition
+//! order, so the floating-point result matches the dense reduction
+//! exactly up to `0.0 + x` no-ops — and falls back to dense mid-tree as
+//! soon as a merged message crosses the density threshold.
+
+/// A sparse delta message: coordinate indices (strictly increasing) with
+/// their values, plus the full dimension `d` it is a delta over.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SparseDelta {
+    /// Full vector dimension `d`.
+    pub dim: usize,
+    /// Touched coordinates, strictly increasing.
+    pub idx: Vec<u32>,
+    /// Values, `val[k]` at coordinate `idx[k]`.
+    pub val: Vec<f64>,
+}
+
+impl SparseDelta {
+    /// Build from a dense vector, keeping only the non-zero entries.
+    pub fn from_dense(dense: &[f64]) -> Self {
+        let mut idx = Vec::new();
+        let mut val = Vec::new();
+        for (j, &v) in dense.iter().enumerate() {
+            if v != 0.0 {
+                idx.push(j as u32);
+                val.push(v);
+            }
+        }
+        SparseDelta {
+            dim: dense.len(),
+            idx,
+            val,
+        }
+    }
+
+    /// Stored entries (the message size in index/value pairs).
+    pub fn nnz(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// `out[idx[k]] += val[k]` for every stored entry.
+    pub fn add_into(&self, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.dim);
+        for (&j, &v) in self.idx.iter().zip(&self.val) {
+            out[j as usize] += v;
+        }
+    }
+
+    /// Materialize as a dense vector of length `dim`.
+    pub fn to_dense(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.dim];
+        self.add_into(&mut out);
+        out
+    }
+}
+
+/// Whether a sparse message of `nnz` stored entries over dimension `dim`
+/// should be sent (and reduced) densely instead: the sparse wire encoding
+/// costs 1.5 dense-equivalent elements per entry (12 B vs 8 B), so the
+/// sparse form stops paying for itself at `nnz ≥ ⅔·d`.
+pub fn should_densify(nnz: usize, dim: usize) -> bool {
+    nnz * 3 >= dim * 2
+}
+
+/// A per-round delta message: dense vector or sparse index/value pairs.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Delta {
+    /// Dense length-`d` message.
+    Dense(Vec<f64>),
+    /// Sparse message (small support).
+    Sparse(SparseDelta),
+}
+
+impl Delta {
+    /// Full vector dimension `d`.
+    pub fn dim(&self) -> usize {
+        match self {
+            Delta::Dense(v) => v.len(),
+            Delta::Sparse(s) => s.dim,
+        }
+    }
+
+    /// Stored entries actually carried by the message.
+    pub fn nnz(&self) -> usize {
+        match self {
+            Delta::Dense(v) => v.len(),
+            Delta::Sparse(s) => s.nnz(),
+        }
+    }
+
+    /// Wire size of this message in dense-equivalent f64 elements: the
+    /// quantity the α-β cost model charges. A dense message is `d`
+    /// elements; a sparse one is `⌈1.5·nnz⌉` (u32 index + f64 value per
+    /// entry), capped at the dense size.
+    pub fn message_elems(&self) -> usize {
+        match self {
+            Delta::Dense(v) => v.len(),
+            Delta::Sparse(s) => ((s.nnz() * 3).div_ceil(2)).min(s.dim),
+        }
+    }
+
+    /// Scale every stored value by `c`.
+    pub fn scale(&mut self, c: f64) {
+        match self {
+            Delta::Dense(v) => {
+                for x in v.iter_mut() {
+                    *x *= c;
+                }
+            }
+            Delta::Sparse(s) => {
+                for x in s.val.iter_mut() {
+                    *x *= c;
+                }
+            }
+        }
+    }
+
+    /// `out += self` (dense accumulate).
+    pub fn add_into(&self, out: &mut [f64]) {
+        match self {
+            Delta::Dense(v) => {
+                debug_assert_eq!(out.len(), v.len());
+                for (o, &x) in out.iter_mut().zip(v) {
+                    *o += x;
+                }
+            }
+            Delta::Sparse(s) => s.add_into(out),
+        }
+    }
+
+    /// Materialize as a dense vector of length `dim`.
+    pub fn into_dense(self) -> Vec<f64> {
+        match self {
+            Delta::Dense(v) => v,
+            Delta::Sparse(s) => s.to_dense(),
+        }
+    }
+}
+
+/// Merge two scaled contributions (one tree edge). Sparse–sparse merges
+/// walk both sorted index lists; the result densifies as soon as its
+/// support crosses [`should_densify`], so wide merges near the tree root
+/// degrade to plain dense adds instead of ever-longer index walks.
+fn merge(a: Delta, b: Delta) -> Delta {
+    match (a, b) {
+        (Delta::Dense(mut x), Delta::Dense(y)) => {
+            debug_assert_eq!(x.len(), y.len());
+            for (p, &q) in x.iter_mut().zip(&y) {
+                *p += q;
+            }
+            Delta::Dense(x)
+        }
+        (Delta::Dense(mut x), Delta::Sparse(s)) | (Delta::Sparse(s), Delta::Dense(mut x)) => {
+            // f64 addition is commutative, so folding the sparse side into
+            // the dense buffer matches the left+right order either way.
+            s.add_into(&mut x);
+            Delta::Dense(x)
+        }
+        (Delta::Sparse(a), Delta::Sparse(b)) => {
+            debug_assert_eq!(a.dim, b.dim);
+            let mut idx = Vec::with_capacity(a.nnz() + b.nnz());
+            let mut val = Vec::with_capacity(a.nnz() + b.nnz());
+            let (mut i, mut k) = (0usize, 0usize);
+            while i < a.idx.len() && k < b.idx.len() {
+                match a.idx[i].cmp(&b.idx[k]) {
+                    std::cmp::Ordering::Less => {
+                        idx.push(a.idx[i]);
+                        val.push(a.val[i]);
+                        i += 1;
+                    }
+                    std::cmp::Ordering::Greater => {
+                        idx.push(b.idx[k]);
+                        val.push(b.val[k]);
+                        k += 1;
+                    }
+                    std::cmp::Ordering::Equal => {
+                        idx.push(a.idx[i]);
+                        val.push(a.val[i] + b.val[k]);
+                        i += 1;
+                        k += 1;
+                    }
+                }
+            }
+            idx.extend_from_slice(&a.idx[i..]);
+            val.extend_from_slice(&a.val[i..]);
+            idx.extend_from_slice(&b.idx[k..]);
+            val.extend_from_slice(&b.val[k..]);
+            let merged = SparseDelta {
+                dim: a.dim,
+                idx,
+                val,
+            };
+            if should_densify(merged.nnz(), merged.dim) {
+                Delta::Dense(merged.to_dense())
+            } else {
+                Delta::Sparse(merged)
+            }
+        }
+    }
+}
+
+/// Sparse-aware weighted tree-reduce: `Σ_ℓ weight_ℓ · contributions_ℓ`
+/// over [`Delta`] messages, with the same pairwise binary-tree round
+/// structure as [`super::allreduce::tree_allreduce`]. Consumes the
+/// per-worker messages (they are exactly what would go on the wire).
+///
+/// Returns the reduced total plus the largest message (in
+/// dense-equivalent elements, [`Delta::message_elems`]) observed
+/// anywhere in the tree — leaves *and* merged inner messages, whose
+/// support grows toward the root — which is what the cost model should
+/// charge as the reduce leg's per-hop transfer size.
+pub fn tree_allreduce_delta(mut contributions: Vec<Delta>, weights: &[f64]) -> (Delta, usize) {
+    assert_eq!(contributions.len(), weights.len());
+    assert!(!contributions.is_empty());
+    let d = contributions[0].dim();
+    for (c, &w) in contributions.iter_mut().zip(weights) {
+        assert_eq!(c.dim(), d, "ragged contribution");
+        c.scale(w);
+    }
+    let mut max_elems = contributions
+        .iter()
+        .map(Delta::message_elems)
+        .max()
+        .unwrap_or(0);
+    let mut stride = 1usize;
+    while stride < contributions.len() {
+        let mut i = 0;
+        while i + stride < contributions.len() {
+            // The right operand is dead after this edge (the next tree
+            // level only visits multiples of 2·stride), so take both out,
+            // merge, and put the result back at `i`.
+            let right = std::mem::replace(
+                &mut contributions[i + stride],
+                Delta::Sparse(SparseDelta::default()),
+            );
+            let left = std::mem::replace(
+                &mut contributions[i],
+                Delta::Sparse(SparseDelta::default()),
+            );
+            let merged = merge(left, right);
+            max_elems = max_elems.max(merged.message_elems());
+            contributions[i] = merged;
+            i += stride * 2;
+        }
+        stride *= 2;
+    }
+    (contributions.swap_remove(0), max_elems)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::allreduce::tree_allreduce;
+    use crate::testing::prop::for_each_case;
+
+    #[test]
+    fn sparse_roundtrip() {
+        let dense = vec![0.0, 1.5, 0.0, -2.0, 0.0];
+        let s = SparseDelta::from_dense(&dense);
+        assert_eq!(s.idx, vec![1, 3]);
+        assert_eq!(s.val, vec![1.5, -2.0]);
+        assert_eq!(s.to_dense(), dense);
+        assert_eq!(s.nnz(), 2);
+    }
+
+    #[test]
+    fn message_elems_caps_at_dense() {
+        // 2 entries over d=8: ⌈3⌉ = 3 elems < 8.
+        let sparse = Delta::Sparse(SparseDelta {
+            dim: 8,
+            idx: vec![0, 5],
+            val: vec![1.0, 2.0],
+        });
+        assert_eq!(sparse.message_elems(), 3);
+        // 7 entries over d=8: ⌈10.5⌉ = 11, capped at 8.
+        let wide = Delta::Sparse(SparseDelta {
+            dim: 8,
+            idx: (0..7).collect(),
+            val: vec![1.0; 7],
+        });
+        assert_eq!(wide.message_elems(), 8);
+        assert_eq!(Delta::Dense(vec![0.0; 8]).message_elems(), 8);
+    }
+
+    #[test]
+    fn densify_threshold_tracks_wire_breakeven() {
+        assert!(!should_densify(0, 9));
+        assert!(!should_densify(5, 9)); // 7.5 elems < 9
+        assert!(should_densify(6, 9)); // 9 elems == 9
+        assert!(should_densify(9, 9));
+    }
+
+    #[test]
+    fn sparse_sparse_merge_by_index() {
+        let a = Delta::Sparse(SparseDelta {
+            dim: 100,
+            idx: vec![1, 4, 7],
+            val: vec![1.0, 2.0, 3.0],
+        });
+        let b = Delta::Sparse(SparseDelta {
+            dim: 100,
+            idx: vec![4, 9],
+            val: vec![10.0, 20.0],
+        });
+        match merge(a, b) {
+            Delta::Sparse(s) => {
+                assert_eq!(s.idx, vec![1, 4, 7, 9]);
+                assert_eq!(s.val, vec![1.0, 12.0, 3.0, 20.0]);
+            }
+            Delta::Dense(_) => panic!("small merge must stay sparse"),
+        }
+    }
+
+    #[test]
+    fn wide_merge_densifies() {
+        let a = Delta::Sparse(SparseDelta {
+            dim: 6,
+            idx: vec![0, 2, 4],
+            val: vec![1.0; 3],
+        });
+        let b = Delta::Sparse(SparseDelta {
+            dim: 6,
+            idx: vec![1, 3],
+            val: vec![1.0; 2],
+        });
+        // merged nnz = 5, 5·3 ≥ 6·2 ⇒ dense.
+        match merge(a, b) {
+            Delta::Dense(v) => assert_eq!(v, vec![1.0, 1.0, 1.0, 1.0, 1.0, 0.0]),
+            Delta::Sparse(_) => panic!("wide merge must densify"),
+        }
+    }
+
+    #[test]
+    fn single_contribution_scaled() {
+        let (got, max_elems) = tree_allreduce_delta(
+            vec![Delta::Sparse(SparseDelta {
+                dim: 3,
+                idx: vec![2],
+                val: vec![2.0],
+            })],
+            &[0.5],
+        );
+        assert_eq!(got.into_dense(), vec![0.0, 0.0, 1.0]);
+        assert_eq!(max_elems, 2); // ⌈1.5·1⌉
+    }
+
+    #[test]
+    fn max_message_tracks_merged_growth() {
+        // Four disjoint 2-entry messages over d=1000: leaves are 3 elems,
+        // but the root merge carries 8 entries = 12 elems — the cost
+        // model must see the tree's largest message, not the leaf size.
+        let contribs: Vec<Delta> = (0..4)
+            .map(|l| {
+                Delta::Sparse(SparseDelta {
+                    dim: 1000,
+                    idx: vec![(l * 2) as u32, (l * 2 + 1) as u32],
+                    val: vec![1.0, 1.0],
+                })
+            })
+            .collect();
+        let (total, max_elems) = tree_allreduce_delta(contribs, &[1.0; 4]);
+        assert_eq!(total.nnz(), 8);
+        assert_eq!(max_elems, 12);
+    }
+
+    #[test]
+    fn prop_matches_dense_tree_reduce() {
+        // Random mixes of dense and sparse messages across random machine
+        // counts and densities must match the dense tree reduction within
+        // fp tolerance.
+        for_each_case(0x5DE17A, 60, |g| {
+            let m = g.usize_in(1, 16);
+            let d = g.usize_in(1, 40);
+            let density = g.f64_in(0.0, 1.0);
+            let dense: Vec<Vec<f64>> = (0..m)
+                .map(|_| {
+                    (0..d)
+                        .map(|_| {
+                            if g.bool(density) {
+                                g.f64_in(-5.0, 5.0)
+                            } else {
+                                0.0
+                            }
+                        })
+                        .collect()
+                })
+                .collect();
+            let weights = g.vec_f64(m, 0.0, 1.0);
+            let want = tree_allreduce(&dense, &weights);
+            let deltas: Vec<Delta> = dense
+                .iter()
+                .map(|v| {
+                    if g.bool(0.5) {
+                        Delta::Dense(v.clone())
+                    } else {
+                        Delta::Sparse(SparseDelta::from_dense(v))
+                    }
+                })
+                .collect();
+            let got = tree_allreduce_delta(deltas, &weights).0.into_dense();
+            for j in 0..d {
+                assert!(
+                    (got[j] - want[j]).abs() < 1e-9,
+                    "sparse tree {} vs dense tree {} at {j}",
+                    got[j],
+                    want[j]
+                );
+            }
+        });
+    }
+}

@@ -73,6 +73,9 @@ pub struct ExperimentConfig {
     pub max_passes: f64,
     /// Cluster backend.
     pub cluster: Cluster,
+    /// Charge communication for the actual sparse Δv/Δṽ messages instead
+    /// of dense length-d vectors (see `DadmOptions::sparse_comm`).
+    pub sparse_comm: bool,
     /// RNG seed.
     pub seed: u64,
     /// Momentum ν = 0 (paper's practical choice) vs theory.
@@ -98,6 +101,7 @@ impl Default for ExperimentConfig {
             eps: 1e-3,
             max_passes: 100.0,
             cluster: Cluster::Serial,
+            sparse_comm: false,
             seed: 42,
             nu_theory: false,
             comm_alpha: 100e-6,
@@ -180,6 +184,13 @@ impl ExperimentConfig {
                 "serial" => Cluster::Serial,
                 "threads" => Cluster::Threads,
                 other => bail!("unknown cluster backend `{other}`"),
+            };
+        }
+        if let Some(v) = take("sparse-comm") {
+            cfg.sparse_comm = match v.as_str() {
+                "true" | "1" | "on" => true,
+                "false" | "0" | "off" => false,
+                other => bail!("sparse-comm must be true or false, got `{other}`"),
             };
         }
         if let Some(v) = take("seed") {
@@ -276,6 +287,16 @@ mod tests {
         assert_eq!(c.method, Method::AccDadm);
         assert_eq!(c.lambda, 1e-8);
         assert_eq!(c.sp, 0.05);
+    }
+
+    #[test]
+    fn parses_sparse_comm_flag() {
+        assert!(!ExperimentConfig::default().sparse_comm);
+        let c = ExperimentConfig::from_file_body("sparse-comm = true\n").unwrap();
+        assert!(c.sparse_comm);
+        let c = ExperimentConfig::from_file_body("sparse-comm = off\n").unwrap();
+        assert!(!c.sparse_comm);
+        assert!(ExperimentConfig::from_file_body("sparse-comm = maybe\n").is_err());
     }
 
     #[test]

@@ -21,7 +21,10 @@
 //! The inner problem maps onto a *standard* DADM instance with
 //! `λ̃ = λ + κ` and the shifted elastic net of §9.8
 //! ([`crate::reg::ShiftedElasticNet`]), so the whole inner machinery —
-//! local solvers, global step, cluster, accounting — is reused unchanged.
+//! local solvers, the sparse Δv/Δṽ message pipeline (DESIGN.md §7),
+//! global step, cluster, accounting — is reused unchanged; stage
+//! transitions re-broadcast `ṽ` densely through [`Dadm::set_reg`] since
+//! the regularizer shift moves every coordinate.
 
 use super::dadm::{Dadm, DadmOptions, SolveReport};
 use crate::data::{Dataset, Partition};

@@ -20,7 +20,7 @@
 //! With `h = 0` and balanced partitions this procedure is exactly CoCoA+
 //! (§6), which is how the CoCoA+ baseline is run in the benches.
 
-use crate::comm::allreduce::tree_allreduce;
+use crate::comm::sparse::{should_densify, tree_allreduce_delta, Delta, SparseDelta};
 use crate::comm::{Cluster, CostModel};
 use crate::data::{Dataset, Partition};
 use crate::loss::Loss;
@@ -45,11 +45,14 @@ pub struct DadmOptions {
     /// round). Gap evaluation is instrumentation: excluded from modeled
     /// compute/comm time.
     pub gap_every: usize,
-    /// Charge communication for *sparse* Δv/Δṽ messages (index+value
-    /// pairs, 12 B/nnz) instead of dense vectors — the paper's "it may be
-    /// beneficial to pass Δṽ instead, especially when Δṽ is sparse but ṽ
-    /// is dense" (§6). Algorithmically identical; only the cost model
-    /// changes.
+    /// Charge communication for the *actual* sparse Δv/Δṽ messages the
+    /// pipeline exchanges (index+value pairs, 12 B per stored entry,
+    /// capped at the dense size) instead of dense length-d vectors — the
+    /// paper's "it may be beneficial to pass Δṽ instead, especially when
+    /// Δṽ is sparse but ṽ is dense" (§6). The data path always sends
+    /// sparse messages when the support is small (DESIGN.md §7);
+    /// algorithmically both settings are identical, the flag only selects
+    /// which message size the α-β cost model charges.
     pub sparse_comm: bool,
 }
 
@@ -289,44 +292,63 @@ where
         });
 
         // --- Global step ---
-        // v ← v + Σ (n_ℓ/n)·Δv_ℓ  (one allreduce)
-        let delta_v = tree_allreduce(&run.results, &self.weights);
-        for (vj, dvj) in self.v.iter_mut().zip(&delta_v) {
-            *vj += dvj;
-        }
+        // v ← v + Σ (n_ℓ/n)·Δv_ℓ  (one sparse-aware tree allreduce). The
+        // per-worker Δv_ℓ arrive as the exact messages that would go on
+        // the wire (sparse index/value pairs in the mini-batch regime,
+        // dense vectors otherwise); the reduce also reports the largest
+        // message carried on any tree edge — merged supports grow toward
+        // the root — which is what the cost model charges.
+        let (delta_v, reduce_elems) = tree_allreduce_delta(run.results, &self.weights);
+        delta_v.add_into(&mut self.v);
         let v_tilde_old = self.v_tilde.clone();
         self.global_sync();
-        // Δṽ broadcast; workers update incrementally (Algorithm 2).
-        let delta_v_tilde: Vec<f64> = self
-            .v_tilde
-            .iter()
-            .zip(&v_tilde_old)
-            .map(|(a, b)| a - b)
-            .collect();
+        // Δṽ broadcast; workers update incrementally (Algorithm 2). The
+        // support of Δṽ can exceed Δv's (h's prox couples coordinates),
+        // so it is extracted from the synced ṽ rather than assumed; the
+        // message densifies once the sparse encoding stops paying off.
+        let mut bcast_idx: Vec<u32> = Vec::new();
+        let mut bcast_val: Vec<f64> = Vec::new();
+        for j in 0..self.d {
+            let dv = self.v_tilde[j] - v_tilde_old[j];
+            if dv != 0.0 {
+                bcast_idx.push(j as u32);
+                bcast_val.push(dv);
+            }
+        }
+        let bcast = SparseDelta {
+            dim: self.d,
+            idx: bcast_idx,
+            val: bcast_val,
+        };
+        let delta_v_tilde = if should_densify(bcast.nnz(), self.d) {
+            Delta::Dense(bcast.to_dense())
+        } else {
+            Delta::Sparse(bcast)
+        };
+        let bcast_elems = delta_v_tilde.message_elems();
         let reg = &self.reg;
-        for m in &mut self.machines {
-            m.state.apply_global(&delta_v_tilde, reg);
+        match &delta_v_tilde {
+            Delta::Dense(dv) => {
+                for m in &mut self.machines {
+                    m.state.apply_global(dv, reg);
+                }
+            }
+            Delta::Sparse(s) => {
+                for m in &mut self.machines {
+                    m.state.apply_global_sparse(s, reg);
+                }
+            }
         }
 
         // --- Accounting ---
         let m = self.machines.len();
         let comm = if self.opts.sparse_comm {
-            // Sparse encoding: (u32 index, f64 value) = 12 B per stored
-            // entry vs 8 B per dense element ⇒ 1.5 "dense-equivalent"
-            // elements per nnz, capped at the dense size. The reduce leg
-            // is bounded by the largest worker message, the broadcast leg
-            // by Δṽ's support.
-            let to_elems = |nnz: usize| ((nnz * 3).div_ceil(2)).min(self.d);
-            let reduce_nnz = run
-                .results
-                .iter()
-                .map(|dv| dv.iter().filter(|x| **x != 0.0).count())
-                .max()
-                .unwrap_or(0);
-            let bcast_nnz = delta_v_tilde.iter().filter(|x| **x != 0.0).count();
+            // Charge the actual message sizes: the reduce leg by the
+            // largest message anywhere in its tree (leaf or merged), the
+            // broadcast leg by the Δṽ message just sent.
             self.opts
                 .cost
-                .allreduce_time(m, to_elems(reduce_nnz).max(to_elems(bcast_nnz)))
+                .allreduce_time(m, reduce_elems.max(bcast_elems))
         } else {
             self.opts.cost.allreduce_time(m, self.d)
         };

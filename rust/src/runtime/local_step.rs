@@ -17,6 +17,7 @@
 //! Batches are padded/chunked to the artifact's static `M`; zero rows
 //! (x = 0, y = 0, α = 0) provably produce `Δα = 0` for every loss.
 
+use crate::comm::sparse::{should_densify, Delta, SparseDelta};
 use crate::loss::Loss;
 use crate::reg::Regularizer;
 use crate::solver::{LocalSolver, WorkerState};
@@ -81,7 +82,7 @@ impl LocalSolver for XlaLocalStep {
         _reg: &R,
         lambda_n_l: f64,
         _rng: &mut Rng,
-    ) -> Vec<f64> {
+    ) -> Delta {
         let m = self.batch_rows;
         let d = self.dim;
         assert_eq!(state.dim(), d, "artifact dim mismatch");
@@ -128,7 +129,15 @@ impl LocalSolver for XlaLocalStep {
                 delta_v[j] += delta_v_raw[j] as f64 / lambda_n_l;
             }
         }
-        delta_v
+        // The artifact computes a dense Δv_raw, but a mini-batch's
+        // support may still be sparse — emit whichever form is smaller
+        // on the wire, matching the native solvers.
+        let nnz = delta_v.iter().filter(|x| **x != 0.0).count();
+        if should_densify(nnz, d) {
+            Delta::Dense(delta_v)
+        } else {
+            Delta::Sparse(SparseDelta::from_dense(&delta_v))
+        }
     }
 }
 

@@ -13,7 +13,9 @@
 //!
 //! All local solvers operate on a [`WorkerState`], the per-machine shard
 //! of data + dual variables, and return the scaled update
-//! `Δv_ℓ = Σ_{i∈Q_ℓ} X_i Δα_i / (λ n_ℓ)` that the global step aggregates.
+//! `Δv_ℓ = Σ_{i∈Q_ℓ} X_i Δα_i / (λ n_ℓ)` as a [`Delta`] message — sparse
+//! index/value pairs when the touched support is small, dense otherwise —
+//! that the global step aggregates (DESIGN.md §7).
 
 pub mod lbfgs;
 pub mod owlqn;
@@ -26,6 +28,7 @@ pub use prox_sdca::ProxSdca;
 pub use theorem_step::TheoremStep;
 pub use worker::WorkerState;
 
+use crate::comm::sparse::Delta;
 use crate::loss::Loss;
 use crate::reg::Regularizer;
 use crate::utils::Rng;
@@ -34,7 +37,8 @@ use crate::utils::Rng;
 pub trait LocalSolver: Send + Sync + std::fmt::Debug {
     /// Approximately maximize the local dual over the mini-batch `batch`
     /// (indices into the worker's shard), updating `state.alpha` and
-    /// returning `Δv_ℓ` (dense, length d).
+    /// returning the `Δv_ℓ` message (sparse or dense over length d — the
+    /// exact payload the global aggregation puts on the wire).
     ///
     /// `lambda_n_l = λ_eff · n_ℓ` is the local dual scaling (λ̃ during
     /// Acc-DADM inner solves).
@@ -46,7 +50,7 @@ pub trait LocalSolver: Send + Sync + std::fmt::Debug {
         reg: &R,
         lambda_n_l: f64,
         rng: &mut Rng,
-    ) -> Vec<f64>;
+    ) -> Delta;
 }
 
 /// Which local solver to run (config/CLI surface).

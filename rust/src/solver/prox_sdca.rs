@@ -8,6 +8,7 @@
 //! earlier updates. Cost per step is `O(nnz(x_i))`.
 
 use super::{LocalSolver, WorkerState};
+use crate::comm::sparse::{should_densify, Delta, SparseDelta};
 use crate::loss::Loss;
 use crate::reg::Regularizer;
 use crate::utils::Rng;
@@ -25,15 +26,17 @@ impl LocalSolver for ProxSdca {
         reg: &R,
         lambda_n_l: f64,
         rng: &mut Rng,
-    ) -> Vec<f64> {
+    ) -> Delta {
         // Allocation-free hot path (§Perf iteration 3): Δv accumulates in
         // a persistent zeroed buffer, `w` is updated *in place* so later
         // coordinates see earlier updates, and both are reverted/reset
         // from the touched-coordinate log afterwards — the synchronized
         // (ṽ_ℓ, w_ℓ) are untouched on return, as Algorithm 2 requires.
         debug_assert!(state.scratch_delta.iter().all(|&x| x == 0.0));
-        // Expected touched volume decides the restore strategy up front so
-        // dense epochs skip the per-entry touch log entirely.
+        // Expected touched volume decides both the restore strategy and
+        // the Δv_ℓ message form up front: dense epochs skip the per-entry
+        // touch log entirely and emit a dense message, mini-batch rounds
+        // on sparse data emit the touched coordinates only (DESIGN.md §7).
         let avg_nnz = state.x.nnz() / state.x.rows().max(1);
         let dense_reset = batch.len().saturating_mul(avg_nnz) >= state.dim();
         let mut order: Vec<usize> = batch.to_vec();
@@ -65,21 +68,46 @@ impl LocalSolver for ProxSdca {
             }
         }
 
-        // Emit Δv_ℓ and restore the synchronized state — sparsely when the
-        // touched set is small (mini-batch regime), densely otherwise.
-        let delta_v = state.scratch_delta.clone();
+        // Emit Δv_ℓ and restore the synchronized state. The restore
+        // strategy followed `dense_reset`; the *message form* follows the
+        // wire break-even (`should_densify`), so a wide touched set still
+        // goes out as the cheaper dense vector.
         if dense_reset {
+            let delta_v = state.scratch_delta.clone();
             state.scratch_delta.fill(0.0);
             reg.grad_conj_into(&state.v_tilde, &mut state.w);
+            state.scratch_touched.clear();
+            Delta::Dense(delta_v)
         } else {
-            for &j in &state.scratch_touched {
-                let ju = j as usize;
-                state.scratch_delta[ju] = 0.0;
-                state.w[ju] = reg.grad_conj_at(ju, state.v_tilde[ju]);
-            }
+            state.scratch_touched.sort_unstable();
+            state.scratch_touched.dedup();
+            let densify = should_densify(state.scratch_touched.len(), state.dim());
+            let message = if densify {
+                let delta_v = state.scratch_delta.clone();
+                for &j in &state.scratch_touched {
+                    let ju = j as usize;
+                    state.scratch_delta[ju] = 0.0;
+                    state.w[ju] = reg.grad_conj_at(ju, state.v_tilde[ju]);
+                }
+                Delta::Dense(delta_v)
+            } else {
+                let idx = state.scratch_touched.clone();
+                let mut val = Vec::with_capacity(idx.len());
+                for &j in &idx {
+                    let ju = j as usize;
+                    val.push(state.scratch_delta[ju]);
+                    state.scratch_delta[ju] = 0.0;
+                    state.w[ju] = reg.grad_conj_at(ju, state.v_tilde[ju]);
+                }
+                Delta::Sparse(SparseDelta {
+                    dim: state.dim(),
+                    idx,
+                    val,
+                })
+            };
+            state.scratch_touched.clear();
+            message
         }
-        state.scratch_touched.clear();
-        delta_v
     }
 }
 
@@ -121,7 +149,9 @@ mod tests {
         let mut prev = local_dual(&ws, &loss, &reg, lambda_n_l, &ws.v_tilde);
         for _ in 0..10 {
             let batch: Vec<usize> = (0..ws.n_l()).collect();
-            let dv = ProxSdca.local_step(&mut ws, &batch, &loss, &reg, lambda_n_l, &mut rng);
+            let dv = ProxSdca
+                .local_step(&mut ws, &batch, &loss, &reg, lambda_n_l, &mut rng)
+                .into_dense();
             // Emulate the m=1 global step: ṽ += Δv.
             ws.apply_global(&dv, &reg);
             let cur = local_dual(&ws, &loss, &reg, lambda_n_l, &ws.v_tilde);
@@ -143,7 +173,9 @@ mod tests {
         let mut rng = Rng::new(2);
         let alpha_before = ws.alpha.clone();
         let batch: Vec<usize> = (0..ws.n_l()).step_by(2).collect();
-        let dv = ProxSdca.local_step(&mut ws, &batch, &loss, &reg, lambda_n_l, &mut rng);
+        let dv = ProxSdca
+            .local_step(&mut ws, &batch, &loss, &reg, lambda_n_l, &mut rng)
+            .into_dense();
         let d_alpha: Vec<f64> = ws
             .alpha
             .iter()
@@ -190,7 +222,9 @@ mod tests {
         let mut rng = Rng::new(4);
         // Run a step, then verify w-consistency by recomputing from ṽ.
         let batch: Vec<usize> = (0..ws.n_l()).collect();
-        let dv = ProxSdca.local_step(&mut ws, &batch, &loss, &reg, lambda_n_l, &mut rng);
+        let dv = ProxSdca
+            .local_step(&mut ws, &batch, &loss, &reg, lambda_n_l, &mut rng)
+            .into_dense();
         ws.apply_global(&dv, &reg);
         let full = reg.grad_conj(&ws.v_tilde);
         for (a, b) in ws.w.iter().zip(&full) {
@@ -204,8 +238,62 @@ mod tests {
         let loss = SmoothHinge::default();
         let reg = ElasticNet::new(0.0);
         let mut rng = Rng::new(5);
-        let dv = ProxSdca.local_step(&mut ws, &[], &loss, &reg, 1.0, &mut rng);
+        let dv = ProxSdca
+            .local_step(&mut ws, &[], &loss, &reg, 1.0, &mut rng)
+            .into_dense();
         assert!(dv.iter().all(|&x| x == 0.0));
         assert!(ws.alpha.iter().all(|&a| a == 0.0));
+    }
+
+    #[test]
+    fn minibatch_on_sparse_data_emits_sparse_message() {
+        // rcv1-style shard: a small mini-batch touches ≪ d coordinates, so
+        // the Δv_ℓ message must be the sparse touched-coordinate form and
+        // must agree with the dense X_ℓᵀΔα/(λn_ℓ) recompute.
+        use crate::data::synthetic::SyntheticSpec;
+        let data = SyntheticSpec {
+            name: "sparse-msg".into(),
+            n: 60,
+            d: 512,
+            density: 0.01,
+            signal_density: 0.1,
+            noise: 0.05,
+            seed: 10,
+        }
+        .generate();
+        let part = Partition::balanced(60, 1, 10);
+        let mut ws = WorkerState::from_partition(&data, &part, 0);
+        let loss = SmoothHinge::default();
+        let reg = ElasticNet::new(0.1);
+        let lambda_n_l = 1e-2 * ws.n_l() as f64;
+        let mut rng = Rng::new(11);
+        let alpha_before = ws.alpha.clone();
+        let batch: Vec<usize> = (0..6).collect();
+        let delta = ProxSdca.local_step(&mut ws, &batch, &loss, &reg, lambda_n_l, &mut rng);
+        let sparse = match &delta {
+            Delta::Sparse(s) => s.clone(),
+            Delta::Dense(_) => panic!("mini-batch on sparse data must emit sparsely"),
+        };
+        assert!(sparse.nnz() < 512, "support not sparse: {}", sparse.nnz());
+        assert!(sparse.idx.windows(2).all(|p| p[0] < p[1]), "unsorted idx");
+        let d_alpha: Vec<f64> = ws
+            .alpha
+            .iter()
+            .zip(&alpha_before)
+            .map(|(a, b)| a - b)
+            .collect();
+        let want: Vec<f64> = ws
+            .x
+            .matvec_t(&d_alpha)
+            .into_iter()
+            .map(|x| x / lambda_n_l)
+            .collect();
+        let got = delta.into_dense();
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-12);
+        }
+        // The scratch buffers are fully restored for the next round.
+        assert!(ws.scratch_delta.iter().all(|&x| x == 0.0));
+        assert!(ws.scratch_touched.is_empty());
     }
 }

@@ -18,6 +18,7 @@
 //! implementations of this step are cross-checked in integration tests.
 
 use super::{LocalSolver, WorkerState};
+use crate::comm::sparse::{should_densify, Delta, SparseDelta};
 use crate::loss::Loss;
 use crate::reg::Regularizer;
 use crate::utils::Rng;
@@ -57,7 +58,7 @@ impl LocalSolver for TheoremStep {
         _reg: &R,
         lambda_n_l: f64,
         _rng: &mut Rng,
-    ) -> Vec<f64> {
+    ) -> Delta {
         let s = self.step_scale(loss.gamma(), lambda_n_l, batch.len());
         let mut delta_v = vec![0.0; state.dim()];
         for &i in batch {
@@ -71,7 +72,15 @@ impl LocalSolver for TheoremStep {
             state.alpha[i] += delta;
             row.axpy_into(delta / lambda_n_l, &mut delta_v);
         }
-        delta_v
+        // The update accumulates densely, but a mini-batch only touches
+        // the sampled rows' features — emit the message in whichever
+        // form is smaller on the wire (one O(d) scan).
+        let nnz = delta_v.iter().filter(|x| **x != 0.0).count();
+        if should_densify(nnz, delta_v.len()) {
+            Delta::Dense(delta_v)
+        } else {
+            Delta::Sparse(SparseDelta::from_dense(&delta_v))
+        }
     }
 }
 
@@ -112,8 +121,12 @@ mod tests {
         let mut rng = Rng::new(0);
         let fwd: Vec<usize> = (0..10).collect();
         let rev: Vec<usize> = (0..10).rev().collect();
-        let dv_a = TheoremStep::default().local_step(&mut a, &fwd, &loss, &reg, 0.3, &mut rng);
-        let dv_b = TheoremStep::default().local_step(&mut b, &rev, &loss, &reg, 0.3, &mut rng);
+        let dv_a = TheoremStep::default()
+            .local_step(&mut a, &fwd, &loss, &reg, 0.3, &mut rng)
+            .into_dense();
+        let dv_b = TheoremStep::default()
+            .local_step(&mut b, &rev, &loss, &reg, 0.3, &mut rng)
+            .into_dense();
         for (x, y) in dv_a.iter().zip(&dv_b) {
             assert!((x - y).abs() < 1e-12);
         }
@@ -130,8 +143,9 @@ mod tests {
         let mut rng = Rng::new(1);
         let batch: Vec<usize> = (0..ws.n_l()).collect();
         for _ in 0..5 {
-            let dv =
-                TheoremStep::default().local_step(&mut ws, &batch, &loss, &reg, 0.2, &mut rng);
+            let dv = TheoremStep::default()
+                .local_step(&mut ws, &batch, &loss, &reg, 0.2, &mut rng)
+                .into_dense();
             ws.apply_global(&dv, &reg);
             for i in 0..ws.n_l() {
                 assert!(
@@ -158,7 +172,9 @@ mod tests {
         };
         let before = dual(&ws);
         let batch: Vec<usize> = (0..ws.n_l()).collect();
-        let dv = TheoremStep::default().local_step(&mut ws, &batch, &loss, &reg, lambda_n_l, &mut rng);
+        let dv = TheoremStep::default()
+            .local_step(&mut ws, &batch, &loss, &reg, lambda_n_l, &mut rng)
+            .into_dense();
         ws.apply_global(&dv, &reg);
         assert!(dual(&ws) > before, "no dual progress from zero start");
     }
@@ -171,7 +187,9 @@ mod tests {
         let mut rng = Rng::new(3);
         let batch: Vec<usize> = (0..ws.n_l()).collect();
         for _ in 0..10 {
-            let dv = TheoremStep::default().local_step(&mut ws, &batch, &loss, &reg, 0.05, &mut rng);
+            let dv = TheoremStep::default()
+                .local_step(&mut ws, &batch, &loss, &reg, 0.05, &mut rng)
+                .into_dense();
             ws.apply_global(&dv, &reg);
         }
         for i in 0..ws.n_l() {

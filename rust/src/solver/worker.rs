@@ -1,6 +1,7 @@
 //! Per-machine worker state: the shard of data plus the machine-local
 //! optimizer variables of Algorithm 2.
 
+use crate::comm::sparse::SparseDelta;
 use crate::data::{Dataset, Partition, SparseMatrix};
 use crate::reg::Regularizer;
 
@@ -71,6 +72,21 @@ impl WorkerState {
             *v += dv;
         }
         reg.grad_conj_into(&self.v_tilde, &mut self.w);
+    }
+
+    /// Apply a *sparse* broadcast `Δṽ` message: update only the touched
+    /// coordinates of `ṽ_ℓ` and refresh the matching entries of `w`.
+    /// Equivalent to [`WorkerState::apply_global`] on the densified
+    /// message — `∇g*` is separable for every `g` in this crate, and the
+    /// untouched coordinates of `w` are already consistent — but costs
+    /// `O(nnz(Δṽ))` instead of `O(d)` (DESIGN.md §7).
+    pub fn apply_global_sparse<R: Regularizer>(&mut self, delta: &SparseDelta, reg: &R) {
+        debug_assert_eq!(delta.dim, self.dim());
+        for (&j, &dv) in delta.idx.iter().zip(&delta.val) {
+            let ju = j as usize;
+            self.v_tilde[ju] += dv;
+            self.w[ju] = reg.grad_conj_at(ju, self.v_tilde[ju]);
+        }
     }
 
     /// Overwrite `ṽ_ℓ` (Acc-DADM stage transitions) and refresh `w`.
@@ -145,6 +161,26 @@ mod tests {
         ws.apply_global(&[0.5, 0.0, 0.0], &reg);
         assert_eq!(ws.v_tilde[0], 1.5);
         assert_eq!(ws.w[0], 1.0);
+    }
+
+    #[test]
+    fn apply_global_sparse_matches_dense_apply() {
+        let data = tiny_classification(10, 5, 2);
+        let part = Partition::balanced(10, 2, 2);
+        let reg = ElasticNet::new(0.2);
+        let mut dense_ws = WorkerState::from_partition(&data, &part, 0);
+        let mut sparse_ws = dense_ws.clone();
+        // Establish a nonzero synced state first.
+        let v0 = vec![0.5, -1.0, 0.0, 2.0, -0.3];
+        dense_ws.set_v_tilde(&v0, &reg);
+        sparse_ws.set_v_tilde(&v0, &reg);
+        // A sparse Δṽ touching coordinates 1 and 3 only.
+        let delta_dense = vec![0.0, 0.75, 0.0, -0.5, 0.0];
+        let delta_sparse = crate::comm::sparse::SparseDelta::from_dense(&delta_dense);
+        dense_ws.apply_global(&delta_dense, &reg);
+        sparse_ws.apply_global_sparse(&delta_sparse, &reg);
+        assert_eq!(dense_ws.v_tilde, sparse_ws.v_tilde);
+        assert_eq!(dense_ws.w, sparse_ws.w);
     }
 
     #[test]

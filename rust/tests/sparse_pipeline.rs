@@ -1,0 +1,200 @@
+//! Integration: the sparse Δv/Δṽ pipeline (DESIGN.md §7) against its
+//! dense reference, and the persistent worker-pool backend against
+//! serial execution.
+//!
+//! * The sparse-aware tree allreduce must reproduce the dense tree
+//!   reduction within fp tolerance for any mix of message forms, machine
+//!   counts, and densities.
+//! * A full DADM solve is backend- and message-form-invariant: the pool
+//!   backend (`Cluster::Threads`) must match `Cluster::Serial` exactly,
+//!   and the `sparse_comm` cost accounting must never change iterates.
+
+use dadm::comm::allreduce::tree_allreduce;
+use dadm::comm::sparse::{tree_allreduce_delta, Delta, SparseDelta};
+use dadm::comm::{Cluster, CostModel};
+use dadm::coordinator::{Dadm, DadmOptions};
+use dadm::data::synthetic::SyntheticSpec;
+use dadm::data::{Dataset, Partition};
+use dadm::loss::SmoothHinge;
+use dadm::reg::{ElasticNet, Zero};
+use dadm::solver::ProxSdca;
+use dadm::testing::prop::for_each_case;
+
+#[test]
+fn prop_sparse_allreduce_matches_dense() {
+    for_each_case(0xA11D, 80, |g| {
+        let m = g.usize_in(1, 24);
+        let d = g.usize_in(1, 80);
+        let density = g.f64_in(0.0, 1.0);
+        let dense: Vec<Vec<f64>> = (0..m)
+            .map(|_| {
+                (0..d)
+                    .map(|_| {
+                        if g.bool(density) {
+                            g.f64_in(-10.0, 10.0)
+                        } else {
+                            0.0
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        let weights = g.vec_f64(m, 0.0, 1.0);
+        let want = tree_allreduce(&dense, &weights);
+        // Random mix of message forms per machine, as the real pipeline
+        // produces (dense epochs next to sparse mini-batches).
+        let messages: Vec<Delta> = dense
+            .iter()
+            .map(|v| {
+                if g.bool(0.5) {
+                    Delta::Dense(v.clone())
+                } else {
+                    Delta::Sparse(SparseDelta::from_dense(v))
+                }
+            })
+            .collect();
+        let (total, max_elems) = tree_allreduce_delta(messages, &weights);
+        // The reported largest tree message is at least every leaf's size
+        // and never exceeds the dense vector.
+        assert!(max_elems <= d.max(1));
+        let got = total.into_dense();
+        assert_eq!(got.len(), d);
+        for j in 0..d {
+            assert!(
+                (got[j] - want[j]).abs() < 1e-9,
+                "coordinate {j}: sparse tree {} vs dense tree {}",
+                got[j],
+                want[j]
+            );
+        }
+    });
+}
+
+fn rcv1ish(n: usize, d: usize, seed: u64) -> Dataset {
+    SyntheticSpec {
+        name: "sparse-pipeline".into(),
+        n,
+        d,
+        density: 0.02,
+        signal_density: 0.1,
+        noise: 0.05,
+        seed,
+    }
+    .generate()
+}
+
+fn build(
+    data: &Dataset,
+    part: &Partition,
+    cluster: Cluster,
+    sp: f64,
+) -> Dadm<SmoothHinge, ElasticNet, Zero, ProxSdca> {
+    Dadm::new(
+        data,
+        part,
+        SmoothHinge::default(),
+        ElasticNet::new(0.1),
+        Zero,
+        1e-3,
+        ProxSdca,
+        DadmOptions {
+            sp,
+            cluster,
+            cost: CostModel::free(),
+            ..Default::default()
+        },
+    )
+}
+
+#[test]
+fn pool_backend_matches_serial_solve() {
+    // Mini-batch regime on sparse data: every round exchanges sparse
+    // Δv/Δṽ messages, and the pool backend must reproduce the serial
+    // backend bit for bit (identical mini-batch draws, identical
+    // machine-ordered reduction).
+    let data = rcv1ish(400, 512, 31);
+    let part = Partition::balanced(400, 4, 31);
+    let mut serial = build(&data, &part, Cluster::Serial, 0.1);
+    let mut pooled = build(&data, &part, Cluster::Threads, 0.1);
+    serial.resync();
+    pooled.resync();
+    for _ in 0..12 {
+        serial.round();
+        pooled.round();
+    }
+    for (a, b) in serial.w().iter().zip(pooled.w()) {
+        assert!((a - b).abs() < 1e-12, "backends diverge: {a} vs {b}");
+    }
+    assert!((serial.gap() - pooled.gap()).abs() < 1e-9);
+    serial.check_v_invariant().unwrap();
+    pooled.check_v_invariant().unwrap();
+}
+
+#[test]
+fn pool_backend_full_solve_converges() {
+    let data = rcv1ish(300, 256, 32);
+    let part = Partition::balanced(300, 3, 32);
+    let mut dadm = build(&data, &part, Cluster::Threads, 1.0);
+    let report = dadm.solve(1e-5, 400);
+    assert!(report.converged, "gap = {}", report.normalized_gap());
+    dadm.check_v_invariant().unwrap();
+}
+
+#[test]
+fn prop_v_invariant_holds_under_sparse_aggregation() {
+    // The coordinator's v is built exclusively from sparse-aware tree
+    // reductions of worker messages; it must always equal the full
+    // recompute Σ_ℓ X_ℓᵀ α_ℓ / (λn) regardless of sp, m, and data shape.
+    for_each_case(0x51AB, 6, |g| {
+        let n = g.usize_in(80, 200);
+        let m = g.usize_in(1, 5);
+        let d = g.usize_in(32, 256);
+        let data = rcv1ish(n, d, g.rng().next_u64());
+        let part = Partition::balanced(n, m, 3);
+        let sp = *g.choose(&[0.05, 0.3, 1.0]);
+        let mut dadm = build(&data, &part, Cluster::Serial, sp);
+        dadm.resync();
+        for _ in 0..5 {
+            dadm.round();
+        }
+        dadm.check_v_invariant().unwrap();
+        assert!(dadm.gap() >= -1e-8);
+    });
+}
+
+#[test]
+fn sparse_comm_accounting_reflects_message_sizes() {
+    // On a sparse workload the charged comm time must drop when the cost
+    // model charges actual message sizes, while the iterates stay
+    // bit-identical (the flag never touches the data path).
+    let data = rcv1ish(400, 1024, 33);
+    let part = Partition::balanced(400, 4, 33);
+    let run = |sparse_comm: bool| {
+        let mut dadm = Dadm::new(
+            &data,
+            &part,
+            SmoothHinge::default(),
+            ElasticNet::new(0.1),
+            Zero,
+            1e-3,
+            ProxSdca,
+            DadmOptions {
+                sp: 0.05,
+                sparse_comm,
+                ..DadmOptions::default() // default (non-free) cost model
+            },
+        );
+        dadm.resync();
+        for _ in 0..6 {
+            dadm.round();
+        }
+        (dadm.w().to_vec(), dadm.modeled_secs().1)
+    };
+    let (w_dense, t_dense) = run(false);
+    let (w_sparse, t_sparse) = run(true);
+    assert_eq!(w_dense, w_sparse, "cost accounting must not change math");
+    assert!(
+        t_sparse < t_dense,
+        "sparse messages not cheaper: {t_sparse} vs {t_dense}"
+    );
+}

@@ -66,11 +66,14 @@ fn check_against_native<L: Loss + Clone>(loss: L, batch_rows: usize, dim: usize)
     let mut rng_b = Rng::new(1);
 
     let native = TheoremStep { radius: 1.0 };
-    let dv_native =
-        native.local_step(&mut native_ws, &batch, &loss, &reg, lambda_n_l, &mut rng_a);
+    let dv_native = native
+        .local_step(&mut native_ws, &batch, &loss, &reg, lambda_n_l, &mut rng_a)
+        .into_dense();
 
     let xla = XlaLocalStep::new(loss.name(), batch_rows, dim, 1.0).expect("artifact load");
-    let dv_xla = xla.local_step(&mut xla_ws, &batch, &loss, &reg, lambda_n_l, &mut rng_b);
+    let dv_xla = xla
+        .local_step(&mut xla_ws, &batch, &loss, &reg, lambda_n_l, &mut rng_b)
+        .into_dense();
 
     for (i, (a, b)) in native_ws.alpha.iter().zip(&xla_ws.alpha).enumerate() {
         assert!(
@@ -132,9 +135,13 @@ fn chunking_handles_odd_batches() {
     let native = TheoremStep { radius: 1.0 };
     // Native semantics use the FULL batch size in s; the chunked XLA path
     // passes the full batch length too, so both see identical s.
-    let dv_n = native.local_step(&mut a, &batch, &loss, &reg, 0.4, &mut r1);
+    let dv_n = native
+        .local_step(&mut a, &batch, &loss, &reg, 0.4, &mut r1)
+        .into_dense();
     let xla = XlaLocalStep::new(loss.name(), 8, 16, 1.0).unwrap();
-    let dv_x = xla.local_step(&mut b, &batch, &loss, &reg, 0.4, &mut r2);
+    let dv_x = xla
+        .local_step(&mut b, &batch, &loss, &reg, 0.4, &mut r2)
+        .into_dense();
     for (x, y) in dv_n.iter().zip(&dv_x) {
         assert!((x - y).abs() < 1e-4);
     }

@@ -1,0 +1,254 @@
+//! In-tree, offline shim of the `anyhow` API surface this workspace uses.
+//!
+//! The build environment has no crates.io access, so this crate provides
+//! the subset of `anyhow` the code relies on with identical names and
+//! call-site semantics: [`Result`], [`Error`], the [`anyhow!`]/[`bail!`]/
+//! [`ensure!`] macros, and the [`Context`] extension trait for both
+//! `Result` and `Option`. Swapping the Cargo path dependency for the real
+//! `anyhow` requires no source changes.
+
+use std::fmt::{self, Debug, Display};
+
+/// `Result<T, anyhow::Error>` with a defaultable error type, exactly like
+/// the real crate's alias (so `collect::<Result<_>>()` works).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A context-carrying error: an outermost message plus the chain of
+/// causes it wrapped. Like `anyhow::Error`, it deliberately does *not*
+/// implement `std::error::Error`, which is what makes the blanket
+/// `From<E: std::error::Error>` conversion coherent.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg<M: Display>(message: M) -> Self {
+        Error {
+            msg: message.to_string(),
+            source: None,
+        }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: Display>(self, context: C) -> Self {
+        Error {
+            msg: context.to_string(),
+            source: Some(Box::new(self)),
+        }
+    }
+
+    /// The chain of messages, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut next = Some(self);
+        std::iter::from_fn(move || {
+            let cur = next?;
+            next = cur.source.as_deref();
+            Some(cur.msg.as_str())
+        })
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` prints the whole chain, matching anyhow.
+            let mut first = true;
+            for msg in self.chain() {
+                if !first {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{msg}")?;
+                first = false;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let causes: Vec<&str> = self.chain().skip(1).collect();
+        if !causes.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for c in causes {
+                write!(f, "\n    {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        // Preserve the source chain as messages.
+        let mut chain: Vec<String> = Vec::new();
+        chain.push(e.to_string());
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        let mut err: Option<Error> = None;
+        for msg in chain.into_iter().rev() {
+            err = Some(match err {
+                None => Error::msg(msg),
+                Some(inner) => inner.context(msg),
+            });
+        }
+        err.expect("chain is non-empty")
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`, mirroring `anyhow::Context`.
+pub trait Context<T, E> {
+    /// Wrap the error (or `None`) with a context message.
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static;
+
+    /// Wrap the error (or `None`) with a lazily-built context message.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for std::result::Result<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(context)
+        })
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(f())
+        })
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any `Display` value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from the arguments.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<f64> {
+        let x: f64 = s.parse().context("not a float")?;
+        ensure!(x > 0.0, "x must be positive, got {x}");
+        Ok(x)
+    }
+
+    #[test]
+    fn ok_path() {
+        assert_eq!(parse("2.5").unwrap(), 2.5);
+    }
+
+    #[test]
+    fn context_wraps_std_errors() {
+        let err = parse("nope").unwrap_err();
+        assert_eq!(format!("{err}"), "not a float");
+        assert!(format!("{err:#}").contains("not a float"));
+        assert!(format!("{err:#}").contains("invalid float"));
+    }
+
+    #[test]
+    fn ensure_formats_message() {
+        let err = parse("-1").unwrap_err();
+        assert_eq!(format!("{err}"), "x must be positive, got -1");
+    }
+
+    #[test]
+    fn bail_and_option_context() {
+        fn f(flag: bool) -> Result<u32> {
+            if flag {
+                bail!("flagged: {}", 7);
+            }
+            let v: Option<u32> = None;
+            let v = v.with_context(|| format!("missing {}", "value"))?;
+            Ok(v)
+        }
+        assert_eq!(format!("{}", f(true).unwrap_err()), "flagged: 7");
+        assert_eq!(format!("{}", f(false).unwrap_err()), "missing value");
+    }
+
+    #[test]
+    fn debug_shows_cause_chain() {
+        let inner: Result<()> = Err(anyhow!("root cause"));
+        let err = inner.context("outer layer").unwrap_err();
+        let dbg = format!("{err:?}");
+        assert!(dbg.contains("outer layer"));
+        assert!(dbg.contains("Caused by"));
+        assert!(dbg.contains("root cause"));
+    }
+}
