@@ -253,6 +253,138 @@ fn main() {
         ]);
     }
 
+    // --- Fused broadcast-apply barrier (engine round, m=16, d=1e5) ---
+    // After: one pool section per round — the Δṽ broadcast apply rides
+    // the next round's local-step dispatch. Before (emulated): a second
+    // pool barrier per round, forced by flushing the pending broadcast
+    // through sync_workers() after every round — the pre-engine round
+    // applied the broadcast before returning, paying that extra
+    // synchronization (and, worse, applying serially on the
+    // coordinator thread; the flush here is already machine-parallel,
+    // so the measured gap under-states the old cost).
+    {
+        use dadm::comm::Cluster;
+        let (n, d, machines) = (8_000usize, 100_000usize, 16usize);
+        let data = SyntheticSpec {
+            name: "fused-round".into(),
+            n,
+            d,
+            density: 0.0005,
+            signal_density: 0.2,
+            noise: 0.1,
+            seed: 21,
+        }
+        .generate();
+        let part = Partition::balanced(n, machines, 21);
+        let build = || {
+            let mut dadm = Dadm::new(
+                &data,
+                &part,
+                SmoothHinge::default(),
+                ElasticNet::new(0.1),
+                Zero,
+                1e-4,
+                ProxSdca,
+                DadmOptions {
+                    sp: 0.05,
+                    cluster: Cluster::Threads,
+                    cost: CostModel::free(),
+                    sparse_comm: true,
+                    ..Default::default()
+                },
+            );
+            dadm.resync();
+            dadm
+        };
+        let mut fused = build();
+        let t_fused = time_it(2, 8, || {
+            fused.round();
+        });
+        let mut two_barrier = build();
+        let t_two = time_it(2, 8, || {
+            two_barrier.round();
+            two_barrier.sync_workers();
+        });
+        table.row(&[
+            "dadm_round_fused_barrier".into(),
+            format!("m={machines} d={d} sp=0.05 sparse"),
+            fmt_secs(t_fused.median),
+            format!(
+                "{:.2}x vs two-barrier {}",
+                t_two.median / t_fused.median,
+                fmt_secs(t_two.median)
+            ),
+        ]);
+    }
+
+    // --- Global-step scratch workspace (alloc-free vs per-round Vecs) ---
+    // Before: every round allocated ∇g*'s z, the prox output, a full
+    // ṽ clone, and fresh broadcast index/value vectors. After: all five
+    // live in persistent buffers (GlobalScratch / PendingBroadcast).
+    {
+        use dadm::reg::ExtraReg;
+        use dadm::Regularizer;
+        let d = 100_000usize;
+        let reg = ElasticNet::new(0.1);
+        let h = Zero;
+        let mut rng = Rng::new(31);
+        let v: Vec<f64> = (0..d)
+            .map(|_| if rng.bernoulli(0.01) { rng.normal() } else { 0.0 })
+            .collect();
+        // Independent sparse ṽ so the broadcast extraction actually
+        // pushes entries (with h = 0, ṽ == v would make Δṽ empty).
+        let v_tilde: Vec<f64> = (0..d)
+            .map(|_| if rng.bernoulli(0.01) { rng.normal() } else { 0.0 })
+            .collect();
+        let t_alloc = time_it(2, 10, || {
+            // The pre-engine allocating global step, verbatim shape:
+            // z = ∇g*(v); w = prox_h(z); clone old ṽ; extract broadcast.
+            let z = reg.grad_conj(&v);
+            let w = h.prox(&z, 1.0);
+            let v_tilde_old = v_tilde.clone();
+            let mut idx: Vec<u32> = Vec::new();
+            let mut val: Vec<f64> = Vec::new();
+            for (j, (&vj, &vo)) in v.iter().zip(&v_tilde_old).enumerate() {
+                let nv = vj - (z[j] - w[j]);
+                if nv - vo != 0.0 {
+                    idx.push(j as u32);
+                    val.push(nv);
+                }
+            }
+            std::hint::black_box((z, w, v_tilde_old, idx, val));
+        });
+        let mut z_buf = vec![0.0; d];
+        let mut w_buf = vec![0.0; d];
+        let mut old_buf = vec![0.0; d];
+        let mut idx_buf: Vec<u32> = Vec::new();
+        let mut val_buf: Vec<f64> = Vec::new();
+        let t_scratch = time_it(2, 10, || {
+            old_buf.copy_from_slice(&v_tilde);
+            reg.grad_conj_into(&v, &mut z_buf);
+            h.prox_into(&z_buf, 1.0, &mut w_buf);
+            idx_buf.clear();
+            val_buf.clear();
+            for (j, (&vj, &vo)) in v.iter().zip(&old_buf).enumerate() {
+                let nv = vj - (z_buf[j] - w_buf[j]);
+                if nv - vo != 0.0 {
+                    idx_buf.push(j as u32);
+                    val_buf.push(nv);
+                }
+            }
+            std::hint::black_box((&z_buf, &w_buf, &old_buf, &idx_buf, &val_buf));
+        });
+        table.row(&[
+            "global_step_scratch".into(),
+            format!("d={d} elastic-net + h-prox + bcast extract"),
+            fmt_secs(t_scratch.median),
+            format!(
+                "{:.2}x vs allocating {}",
+                t_alloc.median / t_scratch.median,
+                fmt_secs(t_alloc.median)
+            ),
+        ]);
+    }
+
     // --- PJRT execute latency (requires artifacts) ---
     {
         use dadm::runtime::XlaLocalStep;

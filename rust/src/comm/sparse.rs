@@ -74,6 +74,13 @@ pub fn should_densify(nnz: usize, dim: usize) -> bool {
     nnz * 3 >= dim * 2
 }
 
+/// Wire size of a sparse message of `nnz` entries over dimension `dim`,
+/// in dense-equivalent f64 elements: `⌈1.5·nnz⌉` (u32 index + f64 value
+/// per entry), capped at the dense size `dim`.
+pub fn sparse_message_elems(nnz: usize, dim: usize) -> usize {
+    ((nnz * 3).div_ceil(2)).min(dim)
+}
+
 /// A per-round delta message: dense vector or sparse index/value pairs.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Delta {
@@ -107,7 +114,7 @@ impl Delta {
     pub fn message_elems(&self) -> usize {
         match self {
             Delta::Dense(v) => v.len(),
-            Delta::Sparse(s) => ((s.nnz() * 3).div_ceil(2)).min(s.dim),
+            Delta::Sparse(s) => sparse_message_elems(s.nnz(), s.dim),
         }
     }
 

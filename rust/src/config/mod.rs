@@ -71,8 +71,18 @@ pub struct ExperimentConfig {
     pub eps: f64,
     /// Maximum passes over the data (the paper caps at 100).
     pub max_passes: f64,
+    /// Evaluate the duality gap every `gap_every` rounds (≥ 1; gap
+    /// evaluation is a full pass, so raise this at small `sp`).
+    pub gap_every: usize,
     /// Cluster backend.
     pub cluster: Cluster,
+    /// Write a resumable solver snapshot to this path (DADM only).
+    pub checkpoint: Option<String>,
+    /// Snapshot cadence in rounds (with `checkpoint`).
+    pub checkpoint_every: usize,
+    /// Restore solver state from this snapshot before solving
+    /// (DADM only; requires the identical dataset/partition/λ).
+    pub resume: Option<String>,
     /// Charge communication for the actual sparse Δv/Δṽ messages instead
     /// of dense length-d vectors (see `DadmOptions::sparse_comm`).
     pub sparse_comm: bool,
@@ -100,7 +110,11 @@ impl Default for ExperimentConfig {
             sp: 0.2,
             eps: 1e-3,
             max_passes: 100.0,
+            gap_every: 1,
             cluster: Cluster::Serial,
+            checkpoint: None,
+            checkpoint_every: 10,
+            resume: None,
             sparse_comm: false,
             seed: 42,
             nu_theory: false,
@@ -179,6 +193,18 @@ impl ExperimentConfig {
         if let Some(v) = take("max-passes") {
             cfg.max_passes = v.parse().context("max-passes")?;
         }
+        if let Some(v) = take("gap-every") {
+            cfg.gap_every = v.parse().context("gap-every")?;
+        }
+        if let Some(v) = take("checkpoint") {
+            cfg.checkpoint = Some(v);
+        }
+        if let Some(v) = take("checkpoint-every") {
+            cfg.checkpoint_every = v.parse().context("checkpoint-every")?;
+        }
+        if let Some(v) = take("resume") {
+            cfg.resume = Some(v);
+        }
         if let Some(v) = take("cluster") {
             cfg.cluster = match v.as_str() {
                 "serial" => Cluster::Serial,
@@ -228,6 +254,19 @@ impl ExperimentConfig {
         );
         anyhow::ensure!(self.eps > 0.0, "eps must be > 0");
         anyhow::ensure!(self.scale > 0.0, "scale must be > 0");
+        anyhow::ensure!(self.gap_every >= 1, "gap-every must be ≥ 1, got {}", self.gap_every);
+        anyhow::ensure!(
+            self.checkpoint_every >= 1,
+            "checkpoint-every must be ≥ 1, got {}",
+            self.checkpoint_every
+        );
+        if self.checkpoint.is_some() || self.resume.is_some() {
+            anyhow::ensure!(
+                self.method == Method::Dadm,
+                "checkpoint/resume are supported for method=dadm only \
+                 (Acc-DADM stage state and OWL-QN history are not snapshotted)"
+            );
+        }
         Ok(())
     }
 
@@ -306,6 +345,28 @@ mod tests {
         assert!(ExperimentConfig::from_file_body("lambda = -1\n").is_err());
         let args: Vec<String> = vec!["--sp".into()];
         assert!(ExperimentConfig::from_args(&args).is_err());
+    }
+
+    #[test]
+    fn parses_gap_every_and_rejects_zero() {
+        assert_eq!(ExperimentConfig::default().gap_every, 1);
+        let c = ExperimentConfig::from_file_body("gap-every = 7\n").unwrap();
+        assert_eq!(c.gap_every, 7);
+        assert!(ExperimentConfig::from_file_body("gap-every = 0\n").is_err());
+    }
+
+    #[test]
+    fn checkpoint_flags_require_dadm() {
+        let body = "method = dadm\ncheckpoint = /tmp/x.ck\ncheckpoint-every = 5\n";
+        let ok = ExperimentConfig::from_file_body(body).unwrap();
+        assert_eq!(ok.checkpoint.as_deref(), Some("/tmp/x.ck"));
+        assert_eq!(ok.checkpoint_every, 5);
+        let acc = ExperimentConfig::from_file_body("method = acc\ncheckpoint = x.ck\n");
+        assert!(acc.is_err());
+        let owl = ExperimentConfig::from_file_body("method = owlqn\nresume = x.ck\n");
+        assert!(owl.is_err());
+        let zero = ExperimentConfig::from_file_body("checkpoint-every = 0\n");
+        assert!(zero.is_err());
     }
 
     #[test]

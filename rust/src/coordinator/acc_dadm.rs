@@ -25,14 +25,20 @@
 //! global step, cluster, accounting — is reused unchanged; stage
 //! transitions re-broadcast `ṽ` densely through [`Dadm::set_reg`] since
 //! the regularizer shift moves every coordinate.
+//!
+//! There is no bespoke inner-stage loop: `AccDadm` implements the
+//! engine's [`RoundAlgorithm`] — one engine round = one inner DADM round
+//! — with the stage machinery (target schedule, prox-center momentum,
+//! stage regularizer swap) living in the [`RoundAlgorithm::on_record`]
+//! hook, driven at the per-stage cadence the algorithm itself requests
+//! through [`RoundOutcome::record_due`].
 
 use super::dadm::{Dadm, DadmOptions, SolveReport};
 use crate::data::{Dataset, Partition};
 use crate::loss::Loss;
-use crate::metrics::{RoundRecord, Trace};
 use crate::reg::{ElasticNet, ExtraReg, Regularizer, ShiftedElasticNet};
+use crate::runtime::engine::{Driver, GapCadence, RecordCtx, RoundAlgorithm, RoundOutcome};
 use crate::solver::LocalSolver;
-use std::time::Instant;
 
 /// Momentum choice for the prox-center update (Figure 1's comparison).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -94,6 +100,12 @@ pub struct AccDadm<L, H, S> {
     y: Vec<f64>,
     n: usize,
     stages_done: usize,
+    // --- engine stage machinery (was the bespoke inner loop's locals) ---
+    xi: f64,
+    inner_eps: f64,
+    inner_rounds_in_stage: usize,
+    stage_cap: usize,
+    start_stage: bool,
 }
 
 impl<L, H, S> AccDadm<L, H, S>
@@ -106,6 +118,7 @@ where
     /// `P(w) = Σφ + (λn/2)‖w‖² + μn‖w‖₁ + h(w)`.
     ///
     /// `radius` is the data radius `R = max‖x_i‖²` used by the default κ.
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         data: &Dataset,
         part: &Partition,
@@ -164,6 +177,11 @@ where
             y: vec![0.0; d],
             n,
             stages_done: 0,
+            xi: 0.0,
+            inner_eps: f64::INFINITY,
+            inner_rounds_in_stage: 0,
+            stage_cap: usize::MAX,
+            start_stage: false,
         }
     }
 
@@ -234,17 +252,162 @@ where
     }
 
     /// Run Algorithm 3 until the **original** normalized duality gap
-    /// `(P−D)/n ≤ eps` or `max_rounds` total communication rounds.
+    /// `(P−D)/n ≤ eps` or `max_rounds` total communication rounds — a
+    /// thin wrapper over the shared [`Driver`] with the algorithm-driven
+    /// (per-stage) record cadence.
     pub fn solve(&mut self, eps: f64, max_rounds: usize) -> SolveReport {
-        let wall_start = Instant::now();
-        let mut trace = Trace::new(self.n);
-        self.inner.resync();
+        Driver::new(eps, max_rounds)
+            .with_cadence(GapCadence::AlgorithmDriven)
+            .solve(self)
+    }
+}
 
-        // ξ₀ = (1 + η⁻²)(P(0) − D(0,0)) on the original problem.
-        let (p0, d0) = self.original_objectives();
+impl<L, H, S> RoundAlgorithm for AccDadm<L, H, S>
+where
+    L: Loss,
+    H: ExtraReg,
+    S: LocalSolver,
+{
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn prepare(&mut self) {
+        self.inner.resync();
+        // Practical per-stage round cap: ≈ two passes over the data on
+        // top of the user cap, so a bounded total budget still cycles the
+        // prox center — a stage that never completes leaves the iterate
+        // biased toward a stale y.
+        self.stage_cap = self
+            .opts
+            .inner_max_rounds
+            .min(((2.0 / self.opts.dadm.sp).ceil() as usize).max(3));
+        self.inner_rounds_in_stage = 0;
+        self.start_stage = false; // armed by the initial on_record
+    }
+
+    fn round(&mut self) -> RoundOutcome {
+        if self.start_stage {
+            // Stage target ε_t = η·ξ_{t−1}/(2 + 2η⁻²), scaled; build the
+            // stage regularizer around the current prox center y.
+            let inner_target = self.opts.stage_target_factor * self.eta * self.xi
+                / (2.0 + 2.0 * self.eta.powi(-2));
+            self.inner_eps = inner_target / self.n as f64;
+            let lambda_tilde = self.lambda + self.kappa;
+            let reg = ShiftedElasticNet::acc_stage(self.mu, lambda_tilde, self.kappa, &self.y);
+            self.inner.set_reg(reg);
+            self.inner_rounds_in_stage = 0;
+            self.start_stage = false;
+        }
+        self.inner.round();
+        self.inner_rounds_in_stage += 1;
+        RoundOutcome {
+            record_due: self.inner_rounds_in_stage % self.opts.dadm.gap_every == 0
+                || self.inner_rounds_in_stage >= self.stage_cap,
+            finished: false,
+        }
+    }
+
+    fn objectives(&mut self) -> (f64, f64) {
+        self.original_objectives()
+    }
+
+    fn rounds(&self) -> usize {
+        self.inner.rounds()
+    }
+
+    fn passes(&self) -> f64 {
+        self.inner.passes()
+    }
+
+    fn modeled_secs(&self) -> (f64, f64) {
+        self.inner.modeled_secs()
+    }
+
+    fn final_w(&mut self) -> Vec<f64> {
+        self.w_original()
+    }
+
+    fn on_record(&mut self, ctx: &RecordCtx) {
+        if ctx.initial {
+            // ξ₀ = (1 + η⁻²)(P(0) − D(0,0)) on the original problem.
+            self.xi = (1.0 + self.eta.powi(-2)) * ctx.gap;
+            self.start_stage = true;
+            return;
+        }
+        if ctx.converged || ctx.at_round_cap {
+            // Deliberate divergence from the deleted legacy loop at the
+            // round cap: the legacy code additionally ran the momentum
+            // update and double-incremented `stages_done` on its way
+            // out, but `y`/`w_prev` of an exhausted run feed nothing —
+            // `w_original()` reads only inner state — so the truncated
+            // stage is counted once and left as-is.
+            self.stages_done += 1;
+            return;
+        }
+        let inner_gap = self.inner.gap();
+        if inner_gap / self.n as f64 <= self.inner_eps
+            || self.inner_rounds_in_stage >= self.stage_cap
+        {
+            // Stage complete: momentum update of the prox center (Eq. 20)
+            // and the geometric ξ schedule; the next round opens the next
+            // stage around the new y.
+            let w_new = self.inner.w().to_vec();
+            for (yj, (&wn, &wp)) in self.y.iter_mut().zip(w_new.iter().zip(&self.w_prev)) {
+                *yj = wn + self.nu * (wn - wp);
+            }
+            self.w_prev = w_new;
+            self.stages_done += 1;
+            self.xi *= 1.0 - self.eta / 2.0;
+            self.start_stage = true;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{Cluster, CostModel};
+    use crate::data::synthetic::tiny_classification;
+    use crate::loss::SmoothHinge;
+    use crate::metrics::{RoundRecord, Trace};
+    use crate::reg::Zero;
+    use crate::solver::ProxSdca;
+    use std::time::Instant;
+
+    fn acc_opts(sp: f64) -> AccDadmOptions {
+        AccDadmOptions {
+            dadm: DadmOptions {
+                sp,
+                cost: CostModel::free(),
+                cluster: Cluster::Serial,
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    /// Verbatim replica of the pre-engine bespoke Acc-DADM solve loop
+    /// (the deleted `AccDadm::solve` body), kept as the parity reference:
+    /// the engine-driven solve must reproduce its trace bit for bit.
+    fn legacy_solve<L, H, S>(
+        acc: &mut AccDadm<L, H, S>,
+        eps: f64,
+        max_rounds: usize,
+    ) -> SolveReport
+    where
+        L: Loss,
+        H: ExtraReg,
+        S: LocalSolver,
+    {
+        let wall_start = Instant::now();
+        let mut trace = Trace::new(acc.n);
+        acc.inner.resync();
+
+        let (p0, d0) = acc.original_objectives();
         let gap0 = p0 - d0;
-        let mut xi = (1.0 + self.eta.powi(-2)) * gap0;
-        let record = |s: &mut Self, trace: &mut Trace| -> f64 {
+        let mut xi = (1.0 + acc.eta.powi(-2)) * gap0;
+        let record = |s: &mut AccDadm<L, H, S>, trace: &mut Trace| -> f64 {
             let (p, d) = s.original_objectives();
             let (compute_secs, comm_secs) = s.inner.modeled_secs();
             trace.push(RoundRecord {
@@ -258,95 +421,109 @@ where
             });
             p - d
         };
-        let mut gap = record(self, &mut trace);
-        let mut converged = gap / self.n as f64 <= eps;
+        let mut gap = record(acc, &mut trace);
+        let mut converged = gap / acc.n as f64 <= eps;
 
-        // Practical per-stage round cap: ≈ two passes over the data on top
-        // of the user cap, so a bounded total budget still cycles the prox
-        // center — a stage that never completes leaves the iterate biased
-        // toward a stale y.
-        let stage_cap = self
+        let stage_cap = acc
             .opts
             .inner_max_rounds
-            .min(((2.0 / self.opts.dadm.sp).ceil() as usize).max(3));
+            .min(((2.0 / acc.opts.dadm.sp).ceil() as usize).max(3));
 
-        'outer: while !converged && self.inner.rounds() < max_rounds {
-            // Stage target ε_t = η·ξ_{t−1}/(2 + 2η⁻²), scaled.
-            let inner_target = self.opts.stage_target_factor * self.eta * xi
-                / (2.0 + 2.0 * self.eta.powi(-2));
-            // Build the stage regularizer around the current prox center y.
-            let lambda_tilde = self.lambda + self.kappa;
-            let reg = ShiftedElasticNet::acc_stage(self.mu, lambda_tilde, self.kappa, &self.y);
-            self.inner.set_reg(reg);
-            // Inner DADM rounds to the stage target (normalized gap).
-            let inner_eps = inner_target / self.n as f64;
+        'outer: while !converged && acc.inner.rounds() < max_rounds {
+            let inner_target =
+                acc.opts.stage_target_factor * acc.eta * xi / (2.0 + 2.0 * acc.eta.powi(-2));
+            let lambda_tilde = acc.lambda + acc.kappa;
+            let reg = ShiftedElasticNet::acc_stage(acc.mu, lambda_tilde, acc.kappa, &acc.y);
+            acc.inner.set_reg(reg);
+            let inner_eps = inner_target / acc.n as f64;
             let mut inner_rounds = 0usize;
             loop {
-                self.inner.round();
+                acc.inner.round();
                 inner_rounds += 1;
                 let check =
-                    inner_rounds % self.opts.dadm.gap_every == 0 || inner_rounds >= stage_cap;
+                    inner_rounds % acc.opts.dadm.gap_every == 0 || inner_rounds >= stage_cap;
                 if check {
-                    gap = record(self, &mut trace);
-                    converged = gap / self.n as f64 <= eps;
-                    if converged || self.inner.rounds() >= max_rounds {
-                        self.stages_done += 1;
+                    gap = record(acc, &mut trace);
+                    converged = gap / acc.n as f64 <= eps;
+                    if converged || acc.inner.rounds() >= max_rounds {
+                        acc.stages_done += 1;
                         if converged {
                             break 'outer;
                         } else {
                             break;
                         }
                     }
-                    let inner_gap = self.inner.gap();
-                    if inner_gap / self.n as f64 <= inner_eps || inner_rounds >= stage_cap {
+                    let inner_gap = acc.inner.gap();
+                    if inner_gap / acc.n as f64 <= inner_eps || inner_rounds >= stage_cap {
                         break;
                     }
                 }
             }
-            // Momentum update of the prox center (Eq. 20).
-            let w_new = self.inner.w().to_vec();
+            let w_new = acc.inner.w().to_vec();
             for j in 0..w_new.len() {
-                self.y[j] = w_new[j] + self.nu * (w_new[j] - self.w_prev[j]);
+                acc.y[j] = w_new[j] + acc.nu * (w_new[j] - acc.w_prev[j]);
             }
-            self.w_prev = w_new;
-            self.stages_done += 1;
-            xi *= 1.0 - self.eta / 2.0;
-            if self.inner.rounds() >= max_rounds {
+            acc.w_prev = w_new;
+            acc.stages_done += 1;
+            xi *= 1.0 - acc.eta / 2.0;
+            if acc.inner.rounds() >= max_rounds {
                 break;
             }
         }
 
-        let w = self.w_original();
+        let w = acc.w_original();
         SolveReport {
             w,
             primal: trace.last().map(|r| r.primal).unwrap_or(f64::NAN),
             dual: trace.last().map(|r| r.dual).unwrap_or(f64::NAN),
-            rounds: self.inner.rounds(),
-            passes: self.inner.passes(),
+            rounds: acc.inner.rounds(),
+            passes: acc.inner.passes(),
             converged,
             trace,
         }
     }
-}
 
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::comm::{Cluster, CostModel};
-    use crate::data::synthetic::tiny_classification;
-    use crate::loss::SmoothHinge;
-    use crate::reg::Zero;
-    use crate::solver::ProxSdca;
-
-    fn acc_opts(sp: f64) -> AccDadmOptions {
-        AccDadmOptions {
-            dadm: DadmOptions {
-                sp,
-                cost: CostModel::free(),
-                cluster: Cluster::Serial,
-                ..Default::default()
-            },
-            ..Default::default()
+    #[test]
+    fn engine_matches_legacy_loop_bit_for_bit() {
+        // Driver-vs-old-loop parity at gap_every = 1 (where the legacy
+        // cap semantics and the engine's strict cap coincide), across a
+        // converging run and a capped run, with both momentum choices.
+        let data = tiny_classification(300, 8, 26);
+        let part = Partition::balanced(300, 3, 26);
+        for (nu, eps, max_rounds) in [
+            (NuChoice::Zero, 1e-4, 400usize),
+            (NuChoice::Theory, 1e-12, 25), // hits the round cap
+        ] {
+            let build = || {
+                AccDadm::new(
+                    &data,
+                    &part,
+                    SmoothHinge::default(),
+                    Zero,
+                    1e-4,
+                    1e-5,
+                    ProxSdca,
+                    AccDadmOptions {
+                        nu,
+                        ..acc_opts(0.5)
+                    },
+                )
+            };
+            let mut engine = build();
+            let got = engine.solve(eps, max_rounds);
+            let mut legacy = build();
+            let want = legacy_solve(&mut legacy, eps, max_rounds);
+            assert_eq!(got.converged, want.converged);
+            assert_eq!(got.rounds, want.rounds);
+            assert_eq!(got.passes, want.passes);
+            assert_eq!(got.w, want.w, "final iterates diverge");
+            assert_eq!(got.trace.rounds.len(), want.trace.rounds.len());
+            for (a, b) in got.trace.rounds.iter().zip(&want.trace.rounds) {
+                assert_eq!(a.round, b.round);
+                assert_eq!(a.passes, b.passes);
+                assert_eq!(a.primal, b.primal, "primal diverges at round {}", a.round);
+                assert_eq!(a.dual, b.dual, "dual diverges at round {}", a.round);
+            }
         }
     }
 

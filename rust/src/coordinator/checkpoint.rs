@@ -5,36 +5,59 @@
 //! characterized by `(α, v)` — everything else (`ṽ`, `w`, `β`) is
 //! recomputed by one Proposition-4/5 global sync — so a checkpoint is
 //! small: one f64 per example plus one per feature, stored in a
-//! versioned, self-describing text format (no serde offline).
+//! versioned, self-describing text format (no serde offline). The v2
+//! format adds the cumulative round/pass counters and the per-machine
+//! mini-batch RNG states, so a resumed solve continues the *exact*
+//! sampling stream and reproduces the uninterrupted trajectory bit for
+//! bit (pinned by `rust/tests/engine.rs`). v1 files still load; they
+//! restart the RNG streams.
 //!
 //! Format:
 //! ```text
-//! dadm-checkpoint v1
+//! dadm-checkpoint v2
 //! lambda <float>
+//! rounds <int>
+//! passes <float>
 //! machines <m>
 //! v <d> <float>*d
 //! alpha <l> <n_l> <float>*n_l        (one line per machine)
+//! rng <l> <u64>*4                    (one line per machine; v2 only)
 //! ```
+//!
+//! Checkpoints are written by the engine's snapshot hook
+//! ([`crate::runtime::engine::CheckpointPolicy`], CLI `--checkpoint` /
+//! `--checkpoint-every`) and restored through [`super::Dadm::restore`]
+//! (CLI `--resume`).
 
 use anyhow::{bail, Context, Result};
 use std::io::{BufRead, Write};
 
-/// A dual-state snapshot: global `v` plus per-machine `α_(ℓ)`.
+/// A dual-state snapshot: global `v` plus per-machine `α_(ℓ)`, with the
+/// cumulative counters and RNG streams needed for exact resumption.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Checkpoint {
     /// Effective λ the state was produced under (λ̃ during Acc-DADM).
     pub lambda: f64,
+    /// Communication rounds completed when the snapshot was taken.
+    pub rounds: usize,
+    /// Passes over the data when the snapshot was taken.
+    pub passes: f64,
     /// Global `v = Σ X_i α_i / (λn)`.
     pub v: Vec<f64>,
     /// Per-machine local duals, in machine order.
     pub alpha: Vec<Vec<f64>>,
+    /// Per-machine mini-batch RNG states (`None` in v1 files: streams
+    /// restart on restore).
+    pub rng: Option<Vec<[u64; 4]>>,
 }
 
 impl Checkpoint {
-    /// Serialize to a writer.
+    /// Serialize to a writer (always the v2 format).
     pub fn save<W: Write>(&self, mut w: W) -> Result<()> {
-        writeln!(w, "dadm-checkpoint v1")?;
+        writeln!(w, "dadm-checkpoint v2")?;
         writeln!(w, "lambda {:e}", self.lambda)?;
+        writeln!(w, "rounds {}", self.rounds)?;
+        writeln!(w, "passes {:e}", self.passes)?;
         writeln!(w, "machines {}", self.alpha.len())?;
         write!(w, "v {}", self.v.len())?;
         for x in &self.v {
@@ -48,26 +71,41 @@ impl Checkpoint {
             }
             writeln!(w)?;
         }
+        if let Some(states) = &self.rng {
+            for (l, s) in states.iter().enumerate() {
+                writeln!(w, "rng {l} {} {} {} {}", s[0], s[1], s[2], s[3])?;
+            }
+        }
         Ok(())
     }
 
-    /// Parse from a reader.
+    /// Parse from a reader (v1 and v2).
     pub fn load<R: BufRead>(r: R) -> Result<Self> {
         let mut lines = r.lines();
         let header = lines.next().context("empty checkpoint")??;
-        if header.trim() != "dadm-checkpoint v1" {
-            bail!("unknown checkpoint header `{header}`");
+        match header.trim() {
+            "dadm-checkpoint v1" | "dadm-checkpoint v2" => {}
+            other => bail!("unknown checkpoint header `{other}`"),
         }
         let mut lambda = None;
+        let mut rounds = 0usize;
+        let mut passes = 0.0f64;
         let mut machines = None;
         let mut v: Option<Vec<f64>> = None;
         let mut alpha: Vec<(usize, Vec<f64>)> = vec![];
+        let mut rng: Vec<(usize, [u64; 4])> = vec![];
         for line in lines {
             let line = line?;
             let mut toks = line.split_ascii_whitespace();
             match toks.next() {
                 Some("lambda") => {
                     lambda = Some(toks.next().context("lambda value")?.parse()?);
+                }
+                Some("rounds") => {
+                    rounds = toks.next().context("rounds value")?.parse()?;
+                }
+                Some("passes") => {
+                    passes = toks.next().context("passes value")?.parse()?;
                 }
                 Some("machines") => {
                     machines = Some(toks.next().context("machine count")?.parse::<usize>()?);
@@ -89,6 +127,21 @@ impl Checkpoint {
                     anyhow::ensure!(vals.len() == n, "alpha[{l}] length mismatch");
                     alpha.push((l, vals));
                 }
+                Some("rng") => {
+                    let l: usize = toks.next().context("machine id")?.parse()?;
+                    let words: Vec<u64> = toks
+                        .map(|t| t.parse::<u64>().context("rng word"))
+                        .collect::<Result<_>>()?;
+                    anyhow::ensure!(words.len() == 4, "rng[{l}] needs 4 words");
+                    // The all-zero state is xoshiro256**'s fixed point:
+                    // reject at load time instead of panicking (debug)
+                    // or freezing the stream (release) at restore.
+                    anyhow::ensure!(
+                        words.iter().any(|w| *w != 0),
+                        "rng[{l}] state is all-zero (corrupt checkpoint)"
+                    );
+                    rng.push((l, [words[0], words[1], words[2], words[3]]));
+                }
                 Some(other) => bail!("unknown checkpoint record `{other}`"),
                 None => continue,
             }
@@ -103,10 +156,27 @@ impl Checkpoint {
         for (want, (got, _)) in alpha.iter().enumerate() {
             anyhow::ensure!(*got == want, "missing alpha record for machine {want}");
         }
+        let rng = if rng.is_empty() {
+            None
+        } else {
+            anyhow::ensure!(
+                rng.len() == machines,
+                "expected {machines} rng records, found {}",
+                rng.len()
+            );
+            rng.sort_by_key(|(l, _)| *l);
+            for (want, (got, _)) in rng.iter().enumerate() {
+                anyhow::ensure!(*got == want, "missing rng record for machine {want}");
+            }
+            Some(rng.into_iter().map(|(_, s)| s).collect())
+        };
         Ok(Checkpoint {
             lambda: lambda.context("missing lambda record")?,
+            rounds,
+            passes,
             v: v.context("missing v record")?,
             alpha: alpha.into_iter().map(|(_, a)| a).collect(),
+            rng,
         })
     }
 
@@ -132,8 +202,11 @@ mod tests {
     fn sample() -> Checkpoint {
         Checkpoint {
             lambda: 1e-6,
+            rounds: 17,
+            passes: 3.4000000000000004, // deliberately non-representable
             v: vec![0.25, -1.5e-8, 0.0],
             alpha: vec![vec![1.0, -0.5], vec![0.0, 0.125, 3.0]],
+            rng: Some(vec![[1, 2, 3, 4], [u64::MAX, 7, 0, 9]]),
         }
     }
 
@@ -144,6 +217,16 @@ mod tests {
         ck.save(&mut buf).unwrap();
         let back = Checkpoint::load(std::io::Cursor::new(buf)).unwrap();
         assert_eq!(ck, back); // bit-exact through `{:e}` printing
+    }
+
+    #[test]
+    fn loads_v1_without_counters_or_rng() {
+        let text = "dadm-checkpoint v1\nlambda 1e-6\nmachines 1\nv 1 0.5\nalpha 0 2 1.0 2.0\n";
+        let ck = Checkpoint::load(std::io::Cursor::new(text)).unwrap();
+        assert_eq!(ck.rounds, 0);
+        assert_eq!(ck.passes, 0.0);
+        assert!(ck.rng.is_none());
+        assert_eq!(ck.v, vec![0.5]);
     }
 
     #[test]
@@ -161,6 +244,22 @@ mod tests {
         let text = "dadm-checkpoint v1\nlambda 1e-6\nmachines 2\nv 1 0.5\nalpha 0 1 1.0\n";
         let err = Checkpoint::load(std::io::Cursor::new(text)).unwrap_err();
         assert!(format!("{err:#}").contains("alpha records"));
+    }
+
+    #[test]
+    fn rejects_all_zero_rng_state() {
+        let text = "dadm-checkpoint v2\nlambda 1e-6\nmachines 1\nv 1 0.5\n\
+                    alpha 0 1 1.0\nrng 0 0 0 0 0\n";
+        let err = Checkpoint::load(std::io::Cursor::new(text)).unwrap_err();
+        assert!(format!("{err:#}").contains("all-zero"));
+    }
+
+    #[test]
+    fn rejects_partial_rng_records() {
+        let text = "dadm-checkpoint v2\nlambda 1e-6\nmachines 2\nv 1 0.5\n\
+                    alpha 0 1 1.0\nalpha 1 1 2.0\nrng 0 1 2 3 4\n";
+        let err = Checkpoint::load(std::io::Cursor::new(text)).unwrap_err();
+        assert!(format!("{err:#}").contains("rng records"));
     }
 
     #[test]

@@ -19,16 +19,36 @@
 //!
 //! With `h = 0` and balanced partitions this procedure is exactly CoCoA+
 //! (§6), which is how the CoCoA+ baseline is run in the benches.
+//!
+//! Two hot-path properties of the round (DESIGN.md §4/§7):
+//!
+//! * **Fused broadcast apply.** The `Δṽ` broadcast is *not* applied to
+//!   the machines on the coordinator thread (that loop was O(m·d) serial
+//!   per round); it is parked in a reusable [`PendingBroadcast`] and each
+//!   pool worker applies it to its own machine at the start of the *next*
+//!   round's parallel section, fused with the local-step dispatch — one
+//!   pool barrier per round instead of two, and the apply runs
+//!   machine-parallel. [`Dadm::sync_workers`] flushes the pending message
+//!   when worker state must be observed between rounds.
+//! * **Allocation-free global step.** `∇g*`, the `h`-prox, the old-`ṽ`
+//!   copy and the broadcast extraction all write into persistent scratch
+//!   buffers; after warm-up a round performs no heap allocation on the
+//!   coordinator side.
+//!
+//! The solve loop itself lives in [`crate::runtime::engine`]: `Dadm`
+//! implements [`RoundAlgorithm`] and [`Dadm::solve`] is a thin wrapper
+//! over the shared [`Driver`].
 
-use crate::comm::sparse::{should_densify, tree_allreduce_delta, Delta, SparseDelta};
+use crate::comm::sparse::{should_densify, sparse_message_elems, tree_allreduce_delta};
 use crate::comm::{Cluster, CostModel};
 use crate::data::{Dataset, Partition};
 use crate::loss::Loss;
-use crate::metrics::{RoundRecord, Trace};
 use crate::reg::{ExtraReg, Regularizer};
+use crate::runtime::engine::{Driver, RoundAlgorithm, RoundOutcome};
 use crate::solver::{LocalSolver, WorkerState};
 use crate::utils::Rng;
-use std::time::Instant;
+
+pub use crate::runtime::engine::SolveReport;
 
 /// DADM driver options.
 #[derive(Clone, Debug)]
@@ -42,8 +62,8 @@ pub struct DadmOptions {
     /// Seed for partition-independent mini-batch draws.
     pub seed: u64,
     /// Evaluate the duality gap every `gap_every` rounds (1 = every
-    /// round). Gap evaluation is instrumentation: excluded from modeled
-    /// compute/comm time.
+    /// round; must be ≥ 1). Gap evaluation is instrumentation: excluded
+    /// from modeled compute/comm time.
     pub gap_every: usize,
     /// Charge communication for the *actual* sparse Δv/Δṽ messages the
     /// pipeline exchanges (index+value pairs, 12 B per stored entry,
@@ -69,32 +89,6 @@ impl Default for DadmOptions {
     }
 }
 
-/// Result of a [`Dadm::solve`] run.
-#[derive(Clone, Debug)]
-pub struct SolveReport {
-    /// Final primal iterate.
-    pub w: Vec<f64>,
-    /// Final primal objective.
-    pub primal: f64,
-    /// Final dual objective.
-    pub dual: f64,
-    /// Communication rounds used.
-    pub rounds: usize,
-    /// Passes over the data.
-    pub passes: f64,
-    /// Whether the gap target was reached.
-    pub converged: bool,
-    /// Full per-round trace.
-    pub trace: Trace,
-}
-
-impl SolveReport {
-    /// Final normalized duality gap `(P − D)/n`.
-    pub fn normalized_gap(&self) -> f64 {
-        (self.primal - self.dual) / self.trace.n as f64
-    }
-}
-
 /// One simulated machine: shard state + its private mini-batch RNG.
 #[derive(Clone, Debug)]
 pub struct Machine {
@@ -104,6 +98,57 @@ pub struct Machine {
     pub rng: Rng,
     /// Mini-batch size `M_ℓ`.
     pub batch: usize,
+}
+
+/// The broadcast of the previous round's global step, parked until the
+/// next parallel section applies it (fused with the local-step
+/// dispatch). The message carries the coordinates of `ṽ` that changed —
+/// as their new **values**, not increments, so worker replicas stay
+/// bit-identical to the coordinator (see
+/// [`WorkerState::set_v_tilde_sparse_parts`]); its support and wire size
+/// are exactly those of the paper's `Δṽ`. The buffers are reused round
+/// after round: extraction clears and refills them, so no per-round
+/// allocation happens after warm-up.
+#[derive(Clone, Debug, Default)]
+struct PendingBroadcast {
+    kind: BroadcastKind,
+    idx: Vec<u32>,
+    val: Vec<f64>,
+    dense: Vec<f64>,
+}
+
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+enum BroadcastKind {
+    /// Nothing pending (freshly synced or already applied).
+    #[default]
+    Empty,
+    /// Sparse index/value message (`idx`/`val`).
+    Sparse,
+    /// Dense message (`dense` = the full new `ṽ`).
+    Dense,
+}
+
+impl PendingBroadcast {
+    fn apply_to<R: Regularizer>(&self, state: &mut WorkerState, reg: &R) {
+        match self.kind {
+            BroadcastKind::Empty => {}
+            BroadcastKind::Sparse => state.set_v_tilde_sparse_parts(&self.idx, &self.val, reg),
+            BroadcastKind::Dense => state.set_v_tilde(&self.dense, reg),
+        }
+    }
+
+    fn clear(&mut self) {
+        self.kind = BroadcastKind::Empty;
+    }
+}
+
+/// Persistent scratch for the Proposition-4/5 global step — keeps the
+/// per-round coordinator work allocation-free (`z = ∇g*(v)`, the prox
+/// output, and the previous `ṽ` for broadcast extraction all live here).
+#[derive(Clone, Debug)]
+struct GlobalScratch {
+    z: Vec<f64>,
+    v_tilde_old: Vec<f64>,
 }
 
 /// The DADM coordinator (Algorithm 2), generic over loss `L`, strongly
@@ -127,6 +172,8 @@ pub struct Dadm<L, R, H, S> {
     v_tilde: Vec<f64>, // global ṽ (Eq. 15)
     w: Vec<f64>,       // global primal iterate ∇g*(ṽ)
     rho: Vec<f64>,     // Σ_ℓ β_ℓ = ∇h(w)
+    pending: PendingBroadcast,
+    scratch: GlobalScratch,
     n: usize,
     d: usize,
     opts: DadmOptions,
@@ -135,7 +182,6 @@ pub struct Dadm<L, R, H, S> {
     passes: f64,
     compute_secs: f64,
     comm_secs: f64,
-    wall_start: Instant,
 }
 
 impl<L, R, H, S> Dadm<L, R, H, S>
@@ -147,6 +193,7 @@ where
 {
     /// Build a DADM instance: shard the data per `part`, zero-initialize
     /// all dual state.
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         data: &Dataset,
         part: &Partition,
@@ -162,6 +209,7 @@ where
             opts.sp > 0.0 && opts.sp <= 1.0,
             "sampling fraction must be in (0, 1]"
         );
+        assert!(opts.gap_every >= 1, "gap_every must be ≥ 1");
         let m = part.machines();
         let mut seed_rng = Rng::new(opts.seed);
         let machines: Vec<Machine> = (0..m)
@@ -194,6 +242,11 @@ where
             v_tilde: vec![0.0; d],
             w: vec![0.0; d],
             rho: vec![0.0; d],
+            pending: PendingBroadcast::default(),
+            scratch: GlobalScratch {
+                z: vec![0.0; d],
+                v_tilde_old: vec![0.0; d],
+            },
             n,
             d,
             opts,
@@ -201,7 +254,6 @@ where
             passes: 0.0,
             compute_secs: 0.0,
             comm_secs: 0.0,
-            wall_start: Instant::now(),
         }
     }
 
@@ -225,8 +277,11 @@ where
         &self.v
     }
 
-    /// Immutable view of the machines (tests / invariant checks).
-    pub fn machine_states(&self) -> impl Iterator<Item = &WorkerState> {
+    /// Immutable view of the machines (tests / invariant checks). Takes
+    /// `&mut self` because any pending broadcast is flushed first, so the
+    /// observed worker state is the synchronized one.
+    pub fn machine_states(&mut self) -> impl Iterator<Item = &WorkerState> {
+        self.sync_workers();
         self.machines.iter().map(|m| &m.state)
     }
 
@@ -246,50 +301,79 @@ where
     }
 
     /// The Proposition-4/5 global synchronization, recomputing
-    /// `(z, w, ṽ, ρ)` from the current `v`. Called after every aggregate
-    /// and by [`Dadm::resync`].
+    /// `(z, w, ṽ, ρ)` from the current `v` — entirely into persistent
+    /// buffers (no allocation). Called after every aggregate and by
+    /// [`Dadm::resync`].
     fn global_sync(&mut self) {
-        let z = self.reg.grad_conj(&self.v);
-        let w = self.h.prox(&z, 1.0 / (self.lambda * self.n as f64));
+        let lambda_n = self.lambda * self.n as f64;
+        self.reg.grad_conj_into(&self.v, &mut self.scratch.z);
+        self.h.prox_into(&self.scratch.z, 1.0 / lambda_n, &mut self.w);
+        let z = &self.scratch.z;
         for j in 0..self.d {
-            self.rho[j] = self.lambda * self.n as f64 * (z[j] - w[j]);
-            self.v_tilde[j] = self.v[j] - (z[j] - w[j]);
+            let diff = z[j] - self.w[j];
+            self.rho[j] = lambda_n * diff;
+            self.v_tilde[j] = self.v[j] - diff;
         }
-        self.w = w;
     }
 
-    /// Broadcast the current global `ṽ` to every machine (sets, not
-    /// increments — used at init and Acc-DADM stage boundaries).
+    /// Broadcast the current global `ṽ` to every machine in parallel
+    /// (sets, not increments — used at init and Acc-DADM stage
+    /// boundaries; supersedes any pending incremental broadcast).
     pub fn resync(&mut self) {
         self.global_sync();
+        self.pending.clear();
+        let cluster = self.opts.cluster;
         let (v_tilde, reg) = (&self.v_tilde, &self.reg);
-        for m in &mut self.machines {
+        cluster.run(&mut self.machines, |_, m| {
             m.state.set_v_tilde(v_tilde, reg);
-        }
+        });
     }
 
-    /// One DADM iteration (Algorithm 2): local step on every machine,
-    /// aggregate, global step, broadcast. Returns the modeled
-    /// (compute, comm) seconds of this round.
+    /// Apply any still-pending broadcast `Δṽ` to the machines (one
+    /// parallel section, no accounting — the apply is normally fused
+    /// into the next round and charged there). Needed only when worker
+    /// state must be observed between rounds.
+    pub fn sync_workers(&mut self) {
+        if self.pending.kind == BroadcastKind::Empty {
+            return;
+        }
+        let cluster = self.opts.cluster;
+        let (pending, reg) = (&self.pending, &self.reg);
+        cluster.run(&mut self.machines, |_, m| {
+            pending.apply_to(&mut m.state, reg);
+        });
+        self.pending.clear();
+    }
+
+    /// One DADM iteration (Algorithm 2): apply the previous round's
+    /// broadcast and run the local step on every machine (one fused
+    /// parallel section), aggregate, global step, park the new broadcast.
+    /// Returns the modeled (compute, comm) seconds of this round.
     pub fn round(&mut self) -> (f64, f64) {
         let loss = &self.loss;
         let reg = &self.reg;
         let solver = &self.solver;
         let lambda = self.lambda;
+        let cluster = self.opts.cluster;
 
-        // --- Local step (parallel across machines) ---
-        let run = self.opts.cluster.run(&mut self.machines, |_, m| {
-            let n_l = m.state.n_l();
-            let batch_idx = m.rng.sample_indices(n_l, m.batch);
-            solver.local_step(
-                &mut m.state,
-                &batch_idx,
-                loss,
-                reg,
-                lambda * n_l as f64,
-                &mut m.rng,
-            )
-        });
+        // --- Fused broadcast apply + local step (parallel, one barrier) ---
+        let run = {
+            let pending = &self.pending;
+            cluster.run(&mut self.machines, |_, m| {
+                pending.apply_to(&mut m.state, reg);
+                let n_l = m.state.n_l();
+                let batch_idx = m.rng.sample_indices(n_l, m.batch);
+                solver.local_step(
+                    &mut m.state,
+                    &batch_idx,
+                    loss,
+                    reg,
+                    lambda * n_l as f64,
+                    &mut m.rng,
+                )
+            })
+        };
+        self.pending.clear();
 
         // --- Global step ---
         // v ← v + Σ (n_ℓ/n)·Δv_ℓ  (one sparse-aware tree allreduce). The
@@ -300,52 +384,46 @@ where
         // the root — which is what the cost model charges.
         let (delta_v, reduce_elems) = tree_allreduce_delta(run.results, &self.weights);
         delta_v.add_into(&mut self.v);
-        let v_tilde_old = self.v_tilde.clone();
+        self.scratch.v_tilde_old.copy_from_slice(&self.v_tilde);
         self.global_sync();
-        // Δṽ broadcast; workers update incrementally (Algorithm 2). The
+        // Δṽ broadcast, extracted into the reusable pending buffers. The
         // support of Δṽ can exceed Δv's (h's prox couples coordinates),
         // so it is extracted from the synced ṽ rather than assumed; the
         // message densifies once the sparse encoding stops paying off.
-        let mut bcast_idx: Vec<u32> = Vec::new();
-        let mut bcast_val: Vec<f64> = Vec::new();
-        for j in 0..self.d {
-            let dv = self.v_tilde[j] - v_tilde_old[j];
-            if dv != 0.0 {
-                bcast_idx.push(j as u32);
-                bcast_val.push(dv);
-            }
-        }
-        let bcast = SparseDelta {
-            dim: self.d,
-            idx: bcast_idx,
-            val: bcast_val,
-        };
-        let delta_v_tilde = if should_densify(bcast.nnz(), self.d) {
-            Delta::Dense(bcast.to_dense())
-        } else {
-            Delta::Sparse(bcast)
-        };
-        let bcast_elems = delta_v_tilde.message_elems();
-        let reg = &self.reg;
-        match &delta_v_tilde {
-            Delta::Dense(dv) => {
-                for m in &mut self.machines {
-                    m.state.apply_global(dv, reg);
+        // Workers apply it at the start of the next round's parallel
+        // section (fused — see the module docs).
+        let bcast_elems = {
+            let PendingBroadcast { kind, idx, val, dense } = &mut self.pending;
+            idx.clear();
+            val.clear();
+            for (j, (&vt, &vo)) in self
+                .v_tilde
+                .iter()
+                .zip(&self.scratch.v_tilde_old)
+                .enumerate()
+            {
+                if vt - vo != 0.0 {
+                    idx.push(j as u32);
+                    val.push(vt);
                 }
             }
-            Delta::Sparse(s) => {
-                for m in &mut self.machines {
-                    m.state.apply_global_sparse(s, reg);
-                }
+            if should_densify(idx.len(), self.d) {
+                dense.resize(self.d, 0.0);
+                dense.copy_from_slice(&self.v_tilde);
+                *kind = BroadcastKind::Dense;
+                self.d
+            } else {
+                *kind = BroadcastKind::Sparse;
+                sparse_message_elems(idx.len(), self.d)
             }
-        }
+        };
 
         // --- Accounting ---
         let m = self.machines.len();
         let comm = if self.opts.sparse_comm {
             // Charge the actual message sizes: the reduce leg by the
             // largest message anywhere in its tree (leaf or merged), the
-            // broadcast leg by the Δṽ message just sent.
+            // broadcast leg by the Δṽ message just parked.
             self.opts
                 .cost
                 .allreduce_time(m, reduce_elems.max(bcast_elems))
@@ -402,45 +480,13 @@ where
     }
 
     /// Run until the **normalized** duality gap `(P−D)/n ≤ eps` or
-    /// `max_rounds` is exhausted.
+    /// `max_rounds` is exhausted — a thin wrapper over the shared
+    /// [`Driver`] with this instance's `gap_every` cadence.
     pub fn solve(&mut self, eps: f64, max_rounds: usize) -> SolveReport {
-        self.wall_start = Instant::now();
-        let mut trace = Trace::new(self.n);
-        self.resync();
-        let record = |s: &mut Self, trace: &mut Trace| {
-            let primal = s.primal();
-            let dual = s.dual();
-            trace.push(RoundRecord {
-                round: s.rounds,
-                passes: s.passes,
-                primal,
-                dual,
-                compute_secs: s.compute_secs,
-                comm_secs: s.comm_secs,
-                wall_secs: s.wall_start.elapsed().as_secs_f64(),
-            });
-            primal - dual
-        };
-        let mut gap = record(self, &mut trace);
-        let mut converged = gap / self.n as f64 <= eps;
-        let mut rounds_done = 0usize;
-        while !converged && rounds_done < max_rounds {
-            self.round();
-            rounds_done += 1;
-            if rounds_done % self.opts.gap_every == 0 || rounds_done == max_rounds {
-                gap = record(self, &mut trace);
-                converged = gap / self.n as f64 <= eps;
-            }
-        }
-        SolveReport {
-            w: self.w.clone(),
-            primal: trace.last().map(|r| r.primal).unwrap_or(f64::NAN),
-            dual: trace.last().map(|r| r.dual).unwrap_or(f64::NAN),
-            rounds: self.rounds,
-            passes: self.passes,
-            converged,
-            trace,
-        }
+        let gap_every = self.opts.gap_every;
+        Driver::new(eps, max_rounds)
+            .with_gap_every(gap_every)
+            .solve(self)
     }
 
     /// Replace the regularizer (Acc-DADM stage transition) keeping all
@@ -460,21 +506,27 @@ where
     }
 
     /// Snapshot the dual state (see [`super::Checkpoint`]): `(λ, v, α)`
-    /// fully determine the solve; everything else is one global sync.
+    /// plus the round/pass counters and the per-machine RNG states, so a
+    /// restored instance continues the exact solve trajectory.
     pub fn checkpoint(&self) -> super::Checkpoint {
         super::Checkpoint {
             lambda: self.lambda,
+            rounds: self.rounds,
+            passes: self.passes,
             v: self.v.clone(),
             alpha: self
                 .machines
                 .iter()
                 .map(|m| m.state.alpha.clone())
                 .collect(),
+            rng: Some(self.machines.iter().map(|m| m.rng.state()).collect()),
         }
     }
 
     /// Restore a snapshot taken on an identically-configured instance
-    /// (same dataset, partition, λ) and re-synchronize.
+    /// (same dataset, partition, λ) and re-synchronize. Snapshots
+    /// carrying RNG state (the v2 format) resume the exact mini-batch
+    /// stream; v1 snapshots restart the streams from the seed.
     pub fn restore(&mut self, ck: &super::Checkpoint) -> anyhow::Result<()> {
         anyhow::ensure!(
             (ck.lambda - self.lambda).abs() <= 1e-15 * self.lambda.abs(),
@@ -494,6 +546,17 @@ where
             );
             m.state.alpha.copy_from_slice(a);
         }
+        if let Some(states) = &ck.rng {
+            anyhow::ensure!(
+                states.len() == self.machines.len(),
+                "rng stream count mismatch"
+            );
+            for (m, s) in self.machines.iter_mut().zip(states) {
+                m.rng = Rng::from_state(*s);
+            }
+        }
+        self.rounds = ck.rounds;
+        self.passes = ck.passes;
         self.v.copy_from_slice(&ck.v);
         self.resync();
         anyhow::Context::context(self.check_v_invariant(), "restored state is inconsistent")?;
@@ -517,6 +580,53 @@ where
             );
         }
         Ok(())
+    }
+}
+
+impl<L, R, H, S> RoundAlgorithm for Dadm<L, R, H, S>
+where
+    L: Loss,
+    R: Regularizer,
+    H: ExtraReg,
+    S: LocalSolver,
+{
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn prepare(&mut self) {
+        self.resync();
+    }
+
+    fn round(&mut self) -> RoundOutcome {
+        // Inherent-method resolution: this is `Dadm::round`, one
+        // Algorithm-2 iteration.
+        let (_compute, _comm): (f64, f64) = self.round();
+        RoundOutcome::default()
+    }
+
+    fn objectives(&mut self) -> (f64, f64) {
+        (self.primal(), self.dual())
+    }
+
+    fn rounds(&self) -> usize {
+        self.rounds
+    }
+
+    fn passes(&self) -> f64 {
+        self.passes
+    }
+
+    fn modeled_secs(&self) -> (f64, f64) {
+        (self.compute_secs, self.comm_secs)
+    }
+
+    fn final_w(&mut self) -> Vec<f64> {
+        self.w.clone()
+    }
+
+    fn snapshot(&self) -> Option<super::Checkpoint> {
+        Some(self.checkpoint())
     }
 }
 
@@ -621,6 +731,41 @@ mod tests {
             dadm.check_v_invariant().unwrap();
             // w == ∇g*(ṽ) == ṽ for τ = 0 and h = 0, and ṽ == v.
             assert_eq!(dadm.w(), &dadm.v_tilde[..]);
+        }
+    }
+
+    #[test]
+    fn deferred_broadcast_applies_before_observation() {
+        // After round() the broadcast is parked; machine_states() must
+        // flush it so the observed worker ṽ_ℓ equals the global ṽ.
+        let data = tiny_classification(80, 6, 19);
+        let part = Partition::balanced(80, 4, 19);
+        let mut dadm = Dadm::new(
+            &data,
+            &part,
+            SmoothHinge::default(),
+            ElasticNet::new(0.1),
+            Zero,
+            1e-2,
+            ProxSdca,
+            opts(),
+        );
+        dadm.resync();
+        for _ in 0..3 {
+            dadm.round();
+        }
+        let v_tilde = dadm.v_tilde.clone();
+        for ws in dadm.machine_states() {
+            for (a, b) in ws.v_tilde.iter().zip(&v_tilde) {
+                assert!((a - b).abs() < 1e-15, "worker ṽ not synced: {a} vs {b}");
+            }
+        }
+        // A second sync is a no-op (the pending message was consumed).
+        dadm.sync_workers();
+        for ws in dadm.machine_states() {
+            for (a, b) in ws.v_tilde.iter().zip(&v_tilde) {
+                assert!((a - b).abs() < 1e-15, "double apply corrupted ṽ");
+            }
         }
     }
 
@@ -765,21 +910,21 @@ mod tests {
         let ck = crate::coordinator::Checkpoint::load(std::io::Cursor::new(buf)).unwrap();
         let mut resumed = build();
         resumed.restore(&ck).unwrap();
-        // Mini-batch RNG streams restart, so the trajectories differ, but
-        // the restored state must be exactly the checkpointed one…
+        // The restored state must be exactly the checkpointed one…
         for (a, b) in resumed.w().iter().zip(first.w()) {
             assert!((a - b).abs() < 1e-15);
         }
         assert!((resumed.gap() - first.gap()).abs() < 1e-9);
-        // …and further rounds must keep converging from there.
-        let before = resumed.gap();
+        assert_eq!(resumed.rounds(), 5);
+        // …and — the RNG streams being part of the v2 snapshot — the
+        // resumed trajectory must match the uninterrupted one bit for
+        // bit, round for round.
         for _ in 0..5 {
             resumed.round();
         }
-        assert!(resumed.gap() < before);
-        // And the uninterrupted run's gap is in the same ballpark (same
-        // algorithm, different mini-batch draws after round 5).
-        assert!(full.gap() > 0.0);
+        assert_eq!(resumed.rounds(), 10);
+        assert_eq!(resumed.w(), full.w(), "resumed trajectory diverged");
+        assert_eq!(resumed.gap(), full.gap());
     }
 
     #[test]
@@ -850,5 +995,25 @@ mod tests {
         // Records: initial + rounds 5, 10, 12 (final).
         let recorded: Vec<usize> = report.trace.rounds.iter().map(|r| r.round).collect();
         assert_eq!(recorded, vec![0, 5, 10, 12]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_zero_gap_every() {
+        let data = tiny_classification(40, 3, 9);
+        let part = Partition::balanced(40, 2, 9);
+        let _ = Dadm::new(
+            &data,
+            &part,
+            SmoothHinge::default(),
+            ElasticNet::new(0.0),
+            Zero,
+            1e-2,
+            ProxSdca,
+            DadmOptions {
+                gap_every: 0,
+                ..opts()
+            },
+        );
     }
 }

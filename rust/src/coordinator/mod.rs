@@ -1,18 +1,32 @@
 //! The paper's system contribution: Distributed Alternating Dual
 //! Maximization and its accelerated variant.
 //!
-//! * [`dadm`] — Algorithm 2: the alternating local/global loop over the
+//! All three methods run through the shared round engine
+//! ([`crate::runtime::engine`]): each coordinator implements
+//! [`crate::runtime::engine::RoundAlgorithm`] — one round of work plus
+//! objective hooks — and the engine's `Driver` owns the solve loop
+//! (stopping policy, gap cadence, trace emission, accounting, periodic
+//! checkpoints). There are no per-method solve loops.
+//!
+//! * [`dadm`] — Algorithm 2: the alternating local/global round over the
 //!   simulated cluster, with the closed-form β-maximization global step
-//!   of Propositions 4/5 and exact duality-gap tracking. With `h = 0` and
-//!   balanced partitions this *is* CoCoA+ (§6), so the CoCoA+ baseline in
-//!   every bench is DADM without acceleration.
+//!   of Propositions 4/5 and exact duality-gap tracking. The round is a
+//!   single fused pool section (broadcast apply + local step) and an
+//!   allocation-free global step. With `h = 0` and balanced partitions
+//!   this *is* CoCoA+ (§6), so the CoCoA+ baseline in every bench is
+//!   DADM without acceleration.
 //! * [`acc_dadm`] — Algorithm 3: the Catalyst-style inner–outer
 //!   acceleration with stage regularizer `g_t` (see
 //!   [`crate::reg::ShiftedElasticNet`]), momentum `ν` (theory value or
 //!   the paper's empirically-smoother `ν = 0`), and the geometric
-//!   stage-target schedule `ξ_t`.
+//!   stage-target schedule `ξ_t` — expressed as engine record hooks, not
+//!   a bespoke nested loop.
 //! * [`owlqn_driver`] — the distributed OWL-QN baseline of Figures 6–7,
-//!   sharing the cluster/cost accounting.
+//!   stepping the stepwise [`crate::solver::OwlqnState`] one iteration
+//!   per engine round and sharing the cluster/cost accounting.
+//! * [`checkpoint`] — resumable solver snapshots (v2: dual state plus
+//!   round counters and RNG streams for bit-exact resumption), written
+//!   by the engine's snapshot hook (CLI `--checkpoint`/`--resume`).
 
 pub mod acc_dadm;
 pub mod checkpoint;
@@ -22,4 +36,4 @@ pub mod owlqn_driver;
 pub use acc_dadm::{AccDadm, AccDadmOptions, NuChoice};
 pub use checkpoint::Checkpoint;
 pub use dadm::{Dadm, DadmOptions, SolveReport};
-pub use owlqn_driver::{run_owlqn_distributed, OwlqnDriverReport};
+pub use owlqn_driver::{run_owlqn_distributed, DistributedOwlqn, OwlqnDriverReport};

@@ -12,13 +12,22 @@
 //! round (gradient allreduce of `d + 1` floats), which is exactly the
 //! accounting the paper's OWL-QN comparison assumes (sp = 1.0 ⇒ one
 //! communication per pass).
+//!
+//! [`DistributedOwlqn`] implements the engine's
+//! [`RoundAlgorithm`]: one engine round = one OWL-QN outer iteration of
+//! the stepwise [`OwlqnState`] (≥ 1 oracle evaluations). Being a
+//! primal-only method it overrides the gap stopping rule and terminates
+//! through [`RoundOutcome::finished`] (tolerance / failed line search /
+//! pass cap); its trace records carry the normalized objective as the
+//! primal and `0.0` as the dual. [`run_owlqn_distributed`] is the batch
+//! wrapper the benches use.
 
 use crate::comm::allreduce::tree_allreduce;
 use crate::comm::{Cluster, CostModel};
 use crate::data::{Dataset, Partition};
 use crate::loss::Loss;
-use crate::solver::{Owlqn, OwlqnOptions, WorkerState};
-use std::time::Instant;
+use crate::runtime::engine::{Driver, RoundAlgorithm, RoundOutcome};
+use crate::solver::{Owlqn, OwlqnOptions, OwlqnState, WorkerState};
 
 /// Report of a distributed OWL-QN run.
 #[derive(Clone, Debug)]
@@ -39,7 +48,240 @@ pub struct OwlqnDriverReport {
     pub wall_secs: f64,
 }
 
-/// Run distributed OWL-QN on the experiments objective.
+/// Distributed OWL-QN as a [`RoundAlgorithm`].
+#[derive(Debug)]
+pub struct DistributedOwlqn<L> {
+    workers: Vec<WorkerState>,
+    loss: L,
+    lambda: f64,
+    owlqn: Owlqn,
+    state: Option<OwlqnState>,
+    n: usize,
+    d: usize,
+    max_passes: usize,
+    cluster: Cluster,
+    cost: CostModel,
+    compute_secs: f64,
+    comm_secs: f64,
+}
+
+/// One distributed smooth-part oracle evaluation:
+/// `f(w) = (1/n)Σφ + (λ/2)‖w‖²` with its gradient, one fused pass over
+/// every shard plus one `(d+1)`-float allreduce, charged to the modeled
+/// compute/comm accumulators.
+#[allow(clippy::too_many_arguments)]
+fn oracle_eval<L: Loss>(
+    workers: &mut [WorkerState],
+    loss: &L,
+    lambda: f64,
+    n: f64,
+    d: usize,
+    cluster: Cluster,
+    cost: &CostModel,
+    compute_secs: &mut f64,
+    comm_secs: &mut f64,
+    w: &[f64],
+) -> (f64, Vec<f64>) {
+    let m = workers.len();
+    let run = cluster.run(workers, |_, ws: &mut WorkerState| {
+        // Per-worker (Σφ_i, Σ x_i·φ'_i) — one fused pass over the shard.
+        let mut grad = vec![0.0; d + 1];
+        for i in 0..ws.n_l() {
+            let row = ws.x.row(i);
+            let u = row.dot(w);
+            grad[d] += loss.phi(u, ws.y[i]);
+            let gi = loss.grad(u, ws.y[i]);
+            if gi != 0.0 {
+                row.axpy_into(gi, &mut grad[..d]);
+            }
+        }
+        grad
+    });
+    *compute_secs += run.parallel_secs;
+    *comm_secs += cost.allreduce_time(m, d + 1);
+    // Weighted by 1 (raw sums; balanced weighting is implicit), then
+    // normalized by n.
+    let ones = vec![1.0; m];
+    let reduced = tree_allreduce(&run.results, &ones);
+    let fval = reduced[d] / n + 0.5 * lambda * crate::utils::math::l2_norm_sq(w);
+    let grad: Vec<f64> = (0..d).map(|j| reduced[j] / n + lambda * w[j]).collect();
+    (fval, grad)
+}
+
+impl<L: Loss> DistributedOwlqn<L> {
+    /// Build for the experiments objective on `part.machines()` workers.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        data: &Dataset,
+        part: &Partition,
+        loss: L,
+        lambda: f64,
+        mu: f64,
+        max_passes: usize,
+        cluster: Cluster,
+        cost: CostModel,
+    ) -> Self {
+        let m = part.machines();
+        let workers: Vec<WorkerState> = (0..m)
+            .map(|l| WorkerState::from_partition(data, part, l))
+            .collect();
+        let owlqn = Owlqn::new(OwlqnOptions {
+            mu,
+            memory: 10, // §10: "we set the memory parameter as 10"
+            max_iters: max_passes,
+            tol: 1e-12,
+            max_line_search: 30,
+        });
+        DistributedOwlqn {
+            workers,
+            loss,
+            lambda,
+            owlqn,
+            state: None,
+            n: data.n(),
+            d: data.dim(),
+            max_passes,
+            cluster,
+            cost,
+            compute_secs: 0.0,
+            comm_secs: 0.0,
+        }
+    }
+
+    fn state(&self) -> &OwlqnState {
+        self.state
+            .as_ref()
+            .expect("Driver::solve prepares before use")
+    }
+
+    /// Consume into the figure report (`report_wall` = wall-clock seconds
+    /// from the engine trace).
+    fn into_report(self, report_wall: f64) -> OwlqnDriverReport {
+        let max_passes = self.max_passes;
+        let objective = self.owlqn.objective(self.state());
+        let st = self.state.expect("solved state");
+        OwlqnDriverReport {
+            w: st.w,
+            objective,
+            objective_per_pass: st.eval_trace.into_iter().take(max_passes).collect(),
+            passes: st.evals.min(max_passes),
+            compute_secs: self.compute_secs,
+            comm_secs: self.comm_secs,
+            wall_secs: report_wall,
+        }
+    }
+}
+
+impl<L: Loss> RoundAlgorithm for DistributedOwlqn<L> {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn prepare(&mut self) {
+        let DistributedOwlqn {
+            workers,
+            loss,
+            lambda,
+            owlqn,
+            state,
+            n,
+            d,
+            cluster,
+            cost,
+            compute_secs,
+            comm_secs,
+            ..
+        } = self;
+        let mut oracle = |w: &[f64]| {
+            oracle_eval(
+                workers,
+                loss,
+                *lambda,
+                *n as f64,
+                *d,
+                *cluster,
+                cost,
+                compute_secs,
+                comm_secs,
+                w,
+            )
+        };
+        *state = Some(owlqn.begin(vec![0.0; *d], &mut oracle));
+    }
+
+    fn round(&mut self) -> RoundOutcome {
+        let DistributedOwlqn {
+            workers,
+            loss,
+            lambda,
+            owlqn,
+            state,
+            n,
+            d,
+            max_passes,
+            cluster,
+            cost,
+            compute_secs,
+            comm_secs,
+        } = self;
+        let st = state.as_mut().expect("Driver::solve prepares before use");
+        let mut oracle = |w: &[f64]| {
+            oracle_eval(
+                workers,
+                loss,
+                *lambda,
+                *n as f64,
+                *d,
+                *cluster,
+                cost,
+                compute_secs,
+                comm_secs,
+                w,
+            )
+        };
+        owlqn.step(st, &mut oracle);
+        RoundOutcome {
+            record_due: true,
+            // The budget caps *iterations* (the engine round counter),
+            // exactly like the batch `minimize` with max_iters =
+            // max_passes — evals may overrun mid-line-search and are
+            // truncated in the report, matching the legacy accounting.
+            finished: st.done || st.iters >= *max_passes,
+        }
+    }
+
+    fn objectives(&mut self) -> (f64, f64) {
+        (self.owlqn.objective(self.state()), 0.0)
+    }
+
+    fn rounds(&self) -> usize {
+        // Comm rounds = oracle evaluations (one allreduce each), capped
+        // at the pass budget like the paper's accounting.
+        self.state
+            .as_ref()
+            .map_or(0, |st| st.evals.min(self.max_passes))
+    }
+
+    fn passes(&self) -> f64 {
+        self.rounds() as f64
+    }
+
+    fn modeled_secs(&self) -> (f64, f64) {
+        (self.compute_secs, self.comm_secs)
+    }
+
+    fn final_w(&mut self) -> Vec<f64> {
+        self.state().w.clone()
+    }
+
+    /// Primal-only method: never stops on the duality gap.
+    fn gap_converged(&self, _normalized_gap: f64, _eps: f64) -> bool {
+        false
+    }
+}
+
+/// Run distributed OWL-QN on the experiments objective (batch wrapper
+/// over the engine: `Driver` + [`DistributedOwlqn`]).
 #[allow(clippy::too_many_arguments)]
 pub fn run_owlqn_distributed<L: Loss + Clone>(
     data: &Dataset,
@@ -51,66 +293,10 @@ pub fn run_owlqn_distributed<L: Loss + Clone>(
     cluster: Cluster,
     cost: CostModel,
 ) -> OwlqnDriverReport {
-    let n = data.n() as f64;
-    let d = data.dim();
-    let m = part.machines();
-    let mut workers: Vec<WorkerState> = (0..m)
-        .map(|l| WorkerState::from_partition(data, part, l))
-        .collect();
-    let weights: Vec<f64> = workers.iter().map(|w| w.n_l() as f64 / n).collect();
-
-    let compute_secs = std::cell::Cell::new(0.0f64);
-    let comm_secs = std::cell::Cell::new(0.0f64);
-    let wall_start = Instant::now();
-
-    // Smooth-part oracle: f(w) = (1/n)Σφ + (λ/2)‖w‖².
-    let oracle = |w: &[f64]| -> (f64, Vec<f64>) {
-        let loss = &loss;
-        let run = cluster.run(&mut workers, |_, ws: &mut WorkerState| {
-            // Per-worker (Σφ_i, Σ x_i·φ'_i) — one fused pass over the shard.
-            let mut grad = vec![0.0; d + 1];
-            for i in 0..ws.n_l() {
-                let row = ws.x.row(i);
-                let u = row.dot(w);
-                grad[d] += loss.phi(u, ws.y[i]);
-                let gi = loss.grad(u, ws.y[i]);
-                if gi != 0.0 {
-                    row.axpy_into(gi, &mut grad[..d]);
-                }
-            }
-            grad
-        });
-        compute_secs.set(compute_secs.get() + run.parallel_secs);
-        comm_secs.set(comm_secs.get() + cost.allreduce_time(m, d + 1));
-        // Weighted by 1 (raw sums), then normalized by n.
-        let ones = vec![1.0; m];
-        let reduced = tree_allreduce(&run.results, &ones);
-        let fval = reduced[d] / n + 0.5 * lambda * crate::utils::math::l2_norm_sq(w);
-        let grad: Vec<f64> = (0..d).map(|j| reduced[j] / n + lambda * w[j]).collect();
-        (fval, grad)
-    };
-
-    let owlqn = Owlqn::new(OwlqnOptions {
-        mu,
-        memory: 10, // §10: "we set the memory parameter as 10"
-        max_iters: max_passes,
-        tol: 1e-12,
-        max_line_search: 30,
-    });
-    // OwlqnResult.evals counts oracle calls; cap total passes by giving the
-    // optimizer max_iters = max_passes (it does ≥ 1 eval per iter).
-    let result = owlqn.minimize(vec![0.0; d], oracle);
-    let _ = weights; // balanced weighting is implicit in the raw sums
-
-    OwlqnDriverReport {
-        w: result.w,
-        objective: result.objective,
-        objective_per_pass: result.eval_trace.into_iter().take(max_passes).collect(),
-        passes: result.evals.min(max_passes),
-        compute_secs: compute_secs.get(),
-        comm_secs: comm_secs.get(),
-        wall_secs: wall_start.elapsed().as_secs_f64(),
-    }
+    let mut algo = DistributedOwlqn::new(data, part, loss, lambda, mu, max_passes, cluster, cost);
+    let report = Driver::new(0.0, max_passes).solve(&mut algo);
+    let wall = report.trace.last().map(|r| r.wall_secs).unwrap_or(0.0);
+    algo.into_report(wall)
 }
 
 #[cfg(test)]
@@ -162,6 +348,65 @@ mod tests {
         for (x, y) in a.w.iter().zip(&b.w) {
             assert!((x - y).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn engine_round_equals_batch_minimize() {
+        // Driver-vs-old-loop parity: one machine, serial cluster — the
+        // distributed oracle reduces to the plain in-process oracle, so
+        // the engine-driven run must match `Owlqn::minimize` on the same
+        // objective bit for bit.
+        let data = tiny_classification(150, 5, 35);
+        let part = Partition::balanced(150, 1, 35);
+        let (lambda, mu, max_passes) = (1e-3, 1e-4, 40usize);
+        let report = run_owlqn_distributed(
+            &data,
+            &part,
+            Logistic,
+            lambda,
+            mu,
+            max_passes,
+            Cluster::Serial,
+            CostModel::free(),
+        );
+        let n = data.n() as f64;
+        let d = data.dim();
+        let oracle = |w: &[f64]| {
+            // Same shard traversal order as the single worker (the
+            // balanced partition shuffles), so sums match bit for bit.
+            let mut grad = vec![0.0; d];
+            let mut fsum = 0.0;
+            for &i in part.shard(0) {
+                let row = data.x.row(i);
+                let u = row.dot(w);
+                fsum += Logistic.phi(u, data.y[i]);
+                let gi = Logistic.grad(u, data.y[i]);
+                if gi != 0.0 {
+                    row.axpy_into(gi, &mut grad[..]);
+                }
+            }
+            let fval = fsum / n + 0.5 * lambda * crate::utils::math::l2_norm_sq(w);
+            let g: Vec<f64> = (0..d).map(|j| grad[j] / n + lambda * w[j]).collect();
+            (fval, g)
+        };
+        let owlqn = Owlqn::new(OwlqnOptions {
+            mu,
+            memory: 10,
+            max_iters: max_passes,
+            tol: 1e-12,
+            max_line_search: 30,
+        });
+        let reference = owlqn.minimize(vec![0.0; d], oracle);
+        assert_eq!(report.w, reference.w, "engine and batch loops diverge");
+        assert_eq!(report.objective, reference.objective);
+        let want: Vec<f64> = reference
+            .eval_trace
+            .iter()
+            .copied()
+            .take(max_passes)
+            .collect();
+        assert_eq!(report.objective_per_pass, want);
+        assert_eq!(report.passes, reference.evals.min(max_passes));
     }
 
     #[test]

@@ -13,7 +13,9 @@ use crate::coordinator::{AccDadm, AccDadmOptions, Dadm, DadmOptions, NuChoice, S
 use crate::data::{Dataset, Partition};
 use crate::loss::Loss;
 use crate::reg::{ElasticNet, Zero};
+use crate::runtime::engine::{Driver, GapCadence, RoundAlgorithm};
 use crate::solver::ProxSdca;
+use std::sync::OnceLock;
 
 /// The paper's λ grid translated to this n through λn-matching.
 pub fn lambda_grid(n: usize) -> [f64; 3] {
@@ -31,14 +33,23 @@ pub const SP_GRID: [f64; 3] = [0.05, 0.20, 0.80];
 /// The §10 L1 weight.
 pub const MU: f64 = 1e-5;
 
-/// Benchmark datasets at `DADM_BENCH_SCALE` (covtype/rcv1 analogues big
+/// The `DADM_BENCH_SCALE` factor, parsed once per process (a `OnceLock`
+/// pins the value, so repeated bench cells can never observe different
+/// scales if the environment mutates mid-run).
+pub fn bench_scale() -> f64 {
+    static BENCH_SCALE: OnceLock<f64> = OnceLock::new();
+    *BENCH_SCALE.get_or_init(|| {
+        std::env::var("DADM_BENCH_SCALE")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(5e-4)
+    })
+}
+
+/// Benchmark datasets at [`bench_scale`] (covtype/rcv1 analogues big
 /// enough to show the condition-number effect, HIGGS/kdd small).
 pub fn bench_datasets() -> Vec<Dataset> {
-    let scale: f64 = std::env::var("DADM_BENCH_SCALE")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(5e-4);
-    crate::data::synthetic::paper_suite(scale)
+    crate::data::synthetic::paper_suite(bench_scale())
         .iter()
         .map(|s| s.generate())
         .collect()
@@ -63,7 +74,10 @@ pub struct CellResult {
 pub const EPS: f64 = 1e-3;
 
 /// Run one (dataset, method, λ, sp, m) cell under the 100-pass cap.
-pub fn run_cell<L: Loss + Clone>(
+/// (`L: 'static` because the method dispatch boxes the coordinator as a
+/// `dyn RoundAlgorithm`; every loss in the crate is a plain value type.)
+#[allow(clippy::too_many_arguments)]
+pub fn run_cell<L: Loss + Clone + 'static>(
     data: &Dataset,
     loss: L,
     method: Method,
@@ -82,9 +96,10 @@ pub fn run_cell<L: Loss + Clone>(
         gap_every,
         ..Default::default()
     };
-    let report = match method {
-        Method::Dadm => {
-            let mut dadm = Dadm::new(
+    // Dispatch = engine construction; the solve loop is the shared Driver.
+    let (mut algo, cadence): (Box<dyn RoundAlgorithm>, GapCadence) = match method {
+        Method::Dadm => (
+            Box::new(Dadm::new(
                 data,
                 &part,
                 loss,
@@ -93,11 +108,11 @@ pub fn run_cell<L: Loss + Clone>(
                 lambda,
                 ProxSdca,
                 opts,
-            );
-            dadm.solve(EPS, max_rounds)
-        }
-        Method::AccDadm => {
-            let mut acc = AccDadm::new(
+            )),
+            GapCadence::EveryRounds(gap_every),
+        ),
+        Method::AccDadm => (
+            Box::new(AccDadm::new(
                 data,
                 &part,
                 loss,
@@ -110,11 +125,14 @@ pub fn run_cell<L: Loss + Clone>(
                     dadm: opts,
                     ..Default::default()
                 },
-            );
-            acc.solve(EPS, max_rounds)
-        }
+            )),
+            GapCadence::AlgorithmDriven,
+        ),
         Method::Owlqn => unreachable!("use run_owlqn_distributed for OWL-QN"),
     };
+    let report = Driver::new(EPS, max_rounds)
+        .with_cadence(cadence)
+        .solve(algo.as_mut());
     summarize(report)
 }
 

@@ -17,13 +17,17 @@
 //!   `h` (elastic net, group lasso), with `∇g*` maps and prox operators.
 //! * [`solver`] — local dual solvers: ProxSDCA, the Theorem-6 mini-batch
 //!   update, and the OWL-QN / L-BFGS primal baselines.
-//! * [`coordinator`] — the paper's contribution: the DADM alternating
-//!   local/global loop (Algorithm 2), the accelerated outer loop
-//!   Acc-DADM (Algorithm 3), and the CoCoA+ equivalence mode.
+//! * [`coordinator`] — the paper's contribution: the DADM round
+//!   (Algorithm 2), the accelerated outer stages of Acc-DADM
+//!   (Algorithm 3), the distributed OWL-QN baseline, and the CoCoA+
+//!   equivalence mode — all driven by the shared round engine.
 //! * [`comm`] — the simulated multi-machine substrate: worker threads,
 //!   an allreduce tree, and an alpha-beta communication cost model.
-//! * [`runtime`] — PJRT client wrapper loading the AOT-compiled JAX/Pallas
-//!   artifacts (`artifacts/*.hlo.txt`) for the batched hot path.
+//! * [`runtime`] — the unified round engine (`runtime::engine`: one
+//!   `Driver` solve loop + `RoundAlgorithm` per method, with gap
+//!   cadence, trace emission and periodic checkpoints) and the PJRT
+//!   client wrapper loading the AOT-compiled JAX/Pallas artifacts
+//!   (`artifacts/*.hlo.txt`) for the batched hot path.
 //! * [`metrics`] — duality-gap traces, timers, CSV emission for benches.
 //! * [`config`] / [`cli`] — experiment configuration and the launcher.
 //! * [`testing`] — an in-tree property-based testing harness (stand-in
@@ -47,3 +51,4 @@ pub use coordinator::{AccDadm, AccDadmOptions, Dadm, DadmOptions, SolveReport};
 pub use data::{Dataset, Partition, SparseMatrix};
 pub use loss::Loss;
 pub use reg::{ElasticNet, Regularizer};
+pub use runtime::{Driver, GapCadence, RoundAlgorithm};

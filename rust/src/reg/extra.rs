@@ -19,7 +19,16 @@ pub trait ExtraReg: Send + Sync + std::fmt::Debug {
     /// Proximal map `argmin_w ½‖w − z‖² + scale·h(w)` — the Proposition-4
     /// global synchronization step uses this with `scale = 1/(λn)` after
     /// the elastic-net soft-threshold.
-    fn prox(&self, z: &[f64], scale: f64) -> Vec<f64>;
+    fn prox(&self, z: &[f64], scale: f64) -> Vec<f64> {
+        let mut out = vec![0.0; z.len()];
+        self.prox_into(z, scale, &mut out);
+        out
+    }
+
+    /// [`ExtraReg::prox`] written into a caller-owned buffer — the
+    /// allocation-free form the per-round global step uses (the scratch
+    /// workspace of DESIGN.md §4).
+    fn prox_into(&self, z: &[f64], scale: f64, out: &mut [f64]);
 
     /// Name for bench output.
     fn name(&self) -> &'static str;
@@ -43,8 +52,8 @@ impl ExtraReg for Zero {
         }
     }
 
-    fn prox(&self, z: &[f64], _scale: f64) -> Vec<f64> {
-        z.to_vec()
+    fn prox_into(&self, z: &[f64], _scale: f64, out: &mut [f64]) {
+        out.copy_from_slice(z);
     }
 
     fn name(&self) -> &'static str {
@@ -121,18 +130,17 @@ impl ExtraReg for GroupLasso {
         0.0
     }
 
-    fn prox(&self, z: &[f64], scale: f64) -> Vec<f64> {
+    fn prox_into(&self, z: &[f64], scale: f64, out: &mut [f64]) {
         // Group soft-threshold (block shrinkage): w_G = max(0, 1 − c/‖z_G‖)·z_G.
         let c = scale * self.weight;
-        let mut w = z.to_vec();
+        out.copy_from_slice(z);
         for g in &self.groups {
             let norm = Self::group_norm(z, g);
             let shrink = if norm > c { 1.0 - c / norm } else { 0.0 };
             for j in g.clone() {
-                w[j] = shrink * z[j];
+                out[j] = shrink * z[j];
             }
         }
-        w
     }
 
     fn name(&self) -> &'static str {

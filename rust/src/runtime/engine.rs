@@ -1,0 +1,452 @@
+//! The unified round engine: one shared driver loop for every
+//! round-structured method in the crate.
+//!
+//! The paper's three algorithms — DADM (Algorithm 2), Acc-DADM
+//! (Algorithm 3) and the OWL-QN baseline of Figures 6–7 — share one
+//! skeleton: *local step, aggregate, global step, broadcast, gap/trace
+//! bookkeeping*. CoCoA+-style frameworks get their generality from
+//! separating the outer driver from the local subproblem; this module is
+//! that separation as a real abstraction. A [`RoundAlgorithm`] supplies
+//! the per-round work and the objective hooks; the [`Driver`] owns
+//! everything every method used to reimplement:
+//!
+//! * the stopping policy on the **normalized** duality gap `(P − D)/n`
+//!   (overridable — the primal-only OWL-QN stops on its own criteria);
+//! * the `gap_every` instrumentation cadence ([`GapCadence`]), including
+//!   algorithm-driven cadences (Acc-DADM records on its *per-stage*
+//!   schedule, not a global one);
+//! * [`Trace`]/[`RoundRecord`] emission with modeled compute/comm
+//!   accounting and real wall-clock;
+//! * periodic [`Checkpoint`] snapshots through the
+//!   [`RoundAlgorithm::snapshot`] hook ([`CheckpointPolicy`]).
+//!
+//! The coordinators implement `RoundAlgorithm` and keep thin
+//! `solve(eps, max_rounds)` wrappers; the CLI and the experiment harness
+//! construct a boxed algorithm per method and run this one loop.
+
+use crate::coordinator::Checkpoint;
+use crate::metrics::{RoundRecord, Trace};
+use std::path::PathBuf;
+use std::time::Instant;
+
+/// Result of a [`Driver::solve`] run (uniform across methods).
+#[derive(Clone, Debug)]
+pub struct SolveReport {
+    /// Final primal iterate.
+    pub w: Vec<f64>,
+    /// Final primal objective.
+    pub primal: f64,
+    /// Final dual objective.
+    pub dual: f64,
+    /// Communication rounds used.
+    pub rounds: usize,
+    /// Passes over the data.
+    pub passes: f64,
+    /// Whether the gap target was reached.
+    pub converged: bool,
+    /// Full per-round trace.
+    pub trace: Trace,
+}
+
+impl SolveReport {
+    /// Final normalized duality gap `(P − D)/n`.
+    pub fn normalized_gap(&self) -> f64 {
+        (self.primal - self.dual) / self.trace.n as f64
+    }
+}
+
+/// What one [`RoundAlgorithm::round`] reports back to the driver.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RoundOutcome {
+    /// Under [`GapCadence::AlgorithmDriven`]: this round ends an
+    /// algorithm-internal cadence window, record the gap now.
+    pub record_due: bool,
+    /// The algorithm has terminated on its own criteria (e.g. OWL-QN
+    /// tolerance or a failed line search); the driver records a final
+    /// trace entry and stops.
+    pub finished: bool,
+}
+
+/// Context handed to [`RoundAlgorithm::on_record`] after every trace
+/// record (including the initial one) — the place for stage machinery
+/// like Acc-DADM's prox-center updates.
+#[derive(Clone, Copy, Debug)]
+pub struct RecordCtx {
+    /// True for the pre-loop record of the starting state.
+    pub initial: bool,
+    /// The (unnormalized) gap `P − D` just recorded.
+    pub gap: f64,
+    /// Whether the driver's stopping rule fired on this record.
+    pub converged: bool,
+    /// Whether the round budget is exhausted.
+    pub at_round_cap: bool,
+}
+
+/// When the driver evaluates the objectives and appends to the trace.
+///
+/// Gap evaluation is instrumentation — excluded from modeled
+/// compute/comm time — but it is a full pass over the data, so the
+/// cadence matters at small sampling fractions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GapCadence {
+    /// Record every `k`-th round (`k ≥ 1`); the final round always
+    /// records.
+    EveryRounds(usize),
+    /// Record when [`RoundOutcome::record_due`] says so (Acc-DADM's
+    /// per-stage schedule).
+    AlgorithmDriven,
+}
+
+/// Periodic solver-state snapshots (see [`Checkpoint`]).
+#[derive(Clone, Debug)]
+pub struct CheckpointPolicy {
+    /// Where to write the snapshot (overwritten in place each time).
+    pub path: PathBuf,
+    /// Snapshot every `every` rounds.
+    pub every: usize,
+}
+
+/// One round-structured optimization method, as seen by the [`Driver`].
+///
+/// Implementations keep all their per-round state; the driver only ever
+/// asks for one more round, the current objectives, and the cumulative
+/// accounting. Object-safe so launchers can dispatch on a
+/// `Box<dyn RoundAlgorithm>`.
+pub trait RoundAlgorithm {
+    /// Problem size `n` (trace normalization).
+    fn n(&self) -> usize;
+
+    /// One-time setup before the loop (initial broadcast/oracle call).
+    fn prepare(&mut self) {}
+
+    /// Run one communication round.
+    fn round(&mut self) -> RoundOutcome;
+
+    /// Exact `(primal, dual)` objectives at the current state
+    /// (instrumentation; a full pass). Primal-only methods report their
+    /// objective as the primal and `0.0` as the dual.
+    fn objectives(&mut self) -> (f64, f64);
+
+    /// Cumulative communication rounds.
+    fn rounds(&self) -> usize;
+
+    /// Cumulative passes over the data.
+    fn passes(&self) -> f64;
+
+    /// Cumulative modeled `(compute, comm)` seconds.
+    fn modeled_secs(&self) -> (f64, f64);
+
+    /// The final primal iterate for the report.
+    fn final_w(&mut self) -> Vec<f64>;
+
+    /// Stopping rule given the latest normalized gap. Defaults to the
+    /// dual methods' `(P − D)/n ≤ eps`; primal-only methods override to
+    /// `false` and stop through [`RoundOutcome::finished`] instead.
+    fn gap_converged(&self, normalized_gap: f64, eps: f64) -> bool {
+        normalized_gap <= eps
+    }
+
+    /// Hook called after every trace record — stage transitions
+    /// (Acc-DADM) live here, not in a bespoke loop.
+    fn on_record(&mut self, _ctx: &RecordCtx) {}
+
+    /// Resumable snapshot of the solver state, if the method supports
+    /// checkpointing (see [`CheckpointPolicy`]).
+    fn snapshot(&self) -> Option<Checkpoint> {
+        None
+    }
+}
+
+/// The shared solve loop (see the module docs).
+#[derive(Clone, Debug)]
+pub struct Driver {
+    /// Target normalized gap.
+    pub eps: f64,
+    /// Round budget *for this run*: the driver counts rounds it issues
+    /// itself, independent of the algorithm's cumulative counter. A
+    /// caller resuming from a checkpoint subtracts the restored rounds
+    /// to enforce a total budget (as the CLI does for `--resume`).
+    pub max_rounds: usize,
+    /// Instrumentation cadence.
+    pub cadence: GapCadence,
+    /// Optional periodic checkpointing.
+    pub checkpoint: Option<CheckpointPolicy>,
+}
+
+impl Driver {
+    /// Driver with the default cadence (record every round) and no
+    /// checkpointing.
+    pub fn new(eps: f64, max_rounds: usize) -> Self {
+        Driver {
+            eps,
+            max_rounds,
+            cadence: GapCadence::EveryRounds(1),
+            checkpoint: None,
+        }
+    }
+
+    /// Set the cadence.
+    pub fn with_cadence(mut self, cadence: GapCadence) -> Self {
+        if let GapCadence::EveryRounds(k) = cadence {
+            assert!(k >= 1, "gap_every must be ≥ 1, got {k}");
+        }
+        self.cadence = cadence;
+        self
+    }
+
+    /// Record every `k`-th round.
+    pub fn with_gap_every(self, k: usize) -> Self {
+        self.with_cadence(GapCadence::EveryRounds(k))
+    }
+
+    /// Snapshot to `path` every `every` rounds (methods whose
+    /// [`RoundAlgorithm::snapshot`] returns `None` skip silently).
+    pub fn with_checkpoint(mut self, path: PathBuf, every: usize) -> Self {
+        assert!(every >= 1, "checkpoint cadence must be ≥ 1");
+        self.checkpoint = Some(CheckpointPolicy { path, every });
+        self
+    }
+
+    fn record(algo: &mut dyn RoundAlgorithm, trace: &mut Trace, wall_start: Instant) -> f64 {
+        let (primal, dual) = algo.objectives();
+        let (compute_secs, comm_secs) = algo.modeled_secs();
+        trace.push(RoundRecord {
+            round: algo.rounds(),
+            passes: algo.passes(),
+            primal,
+            dual,
+            compute_secs,
+            comm_secs,
+            wall_secs: wall_start.elapsed().as_secs_f64(),
+        });
+        primal - dual
+    }
+
+    /// Run `algo` until the stopping rule fires, the algorithm finishes,
+    /// or the round budget is exhausted.
+    pub fn solve(&self, algo: &mut dyn RoundAlgorithm) -> SolveReport {
+        let wall_start = Instant::now();
+        let n = algo.n() as f64;
+        let mut trace = Trace::new(algo.n());
+        algo.prepare();
+
+        let gap = Self::record(algo, &mut trace, wall_start);
+        let mut converged = algo.gap_converged(gap / n, self.eps);
+        algo.on_record(&RecordCtx {
+            initial: true,
+            gap,
+            converged,
+            at_round_cap: self.max_rounds == 0,
+        });
+
+        let mut rounds_done = 0usize;
+        let mut finished = false;
+        while !converged && !finished && rounds_done < self.max_rounds {
+            let out = algo.round();
+            rounds_done += 1;
+            finished = out.finished;
+            let due = match self.cadence {
+                GapCadence::EveryRounds(k) => rounds_done % k == 0,
+                GapCadence::AlgorithmDriven => out.record_due,
+            };
+            if due || rounds_done == self.max_rounds || finished {
+                let gap = Self::record(algo, &mut trace, wall_start);
+                converged = algo.gap_converged(gap / n, self.eps);
+                algo.on_record(&RecordCtx {
+                    initial: false,
+                    gap,
+                    converged,
+                    at_round_cap: rounds_done >= self.max_rounds,
+                });
+            }
+            if let Some(ck) = &self.checkpoint {
+                if rounds_done % ck.every == 0 {
+                    if let Some(snapshot) = algo.snapshot() {
+                        if let Err(e) = snapshot.save_file(&ck.path) {
+                            eprintln!(
+                                "warning: checkpoint to {} failed: {e:#}",
+                                ck.path.display()
+                            );
+                        }
+                    }
+                }
+            }
+        }
+
+        SolveReport {
+            w: algo.final_w(),
+            primal: trace.last().map(|r| r.primal).unwrap_or(f64::NAN),
+            dual: trace.last().map(|r| r.dual).unwrap_or(f64::NAN),
+            rounds: algo.rounds(),
+            passes: algo.passes(),
+            converged,
+            trace,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Toy algorithm: the "gap" shrinks by half each round.
+    struct Halving {
+        gap: f64,
+        rounds: usize,
+        records_at: Vec<usize>,
+        finish_after: Option<usize>,
+    }
+
+    impl Halving {
+        fn new(gap: f64) -> Self {
+            Halving {
+                gap,
+                rounds: 0,
+                records_at: vec![],
+                finish_after: None,
+            }
+        }
+    }
+
+    impl RoundAlgorithm for Halving {
+        fn n(&self) -> usize {
+            1
+        }
+
+        fn round(&mut self) -> RoundOutcome {
+            self.gap *= 0.5;
+            self.rounds += 1;
+            RoundOutcome {
+                record_due: self.rounds % 3 == 0,
+                finished: self.finish_after == Some(self.rounds),
+            }
+        }
+
+        fn objectives(&mut self) -> (f64, f64) {
+            self.records_at.push(self.rounds);
+            (self.gap, 0.0)
+        }
+
+        fn rounds(&self) -> usize {
+            self.rounds
+        }
+
+        fn passes(&self) -> f64 {
+            self.rounds as f64
+        }
+
+        fn modeled_secs(&self) -> (f64, f64) {
+            (0.0, 0.0)
+        }
+
+        fn final_w(&mut self) -> Vec<f64> {
+            vec![self.gap]
+        }
+    }
+
+    #[test]
+    fn stops_on_normalized_gap() {
+        let mut algo = Halving::new(1.0);
+        let report = Driver::new(0.1, 100).solve(&mut algo);
+        assert!(report.converged);
+        // 1 → .5 → .25 → .125 → .0625 ≤ .1 after 4 rounds.
+        assert_eq!(report.rounds, 4);
+        assert_eq!(report.trace.rounds.len(), 5); // initial + 4
+    }
+
+    #[test]
+    fn round_cap_forces_final_record() {
+        let mut algo = Halving::new(1.0);
+        let report = Driver::new(0.0, 7).with_gap_every(3).solve(&mut algo);
+        assert!(!report.converged);
+        assert_eq!(algo.records_at, vec![0, 3, 6, 7]);
+        assert_eq!(report.rounds, 7);
+    }
+
+    #[test]
+    fn algorithm_driven_cadence() {
+        let mut algo = Halving::new(1.0);
+        let report = Driver::new(0.0, 8)
+            .with_cadence(GapCadence::AlgorithmDriven)
+            .solve(&mut algo);
+        // record_due fires every 3rd round; the cap forces round 8.
+        assert_eq!(algo.records_at, vec![0, 3, 6, 8]);
+        assert!(!report.converged);
+    }
+
+    #[test]
+    fn finished_stops_and_records() {
+        let mut algo = Halving::new(1.0);
+        algo.finish_after = Some(2);
+        let report = Driver::new(0.0, 100).with_gap_every(10).solve(&mut algo);
+        assert!(!report.converged);
+        assert_eq!(report.rounds, 2);
+        // Initial record plus the forced final one at the finish.
+        assert_eq!(algo.records_at, vec![0, 2]);
+    }
+
+    #[test]
+    fn zero_round_budget_reports_initial_state() {
+        let mut algo = Halving::new(0.5);
+        let report = Driver::new(1e-9, 0).solve(&mut algo);
+        assert!(!report.converged);
+        assert_eq!(report.rounds, 0);
+        assert_eq!(report.trace.rounds.len(), 1);
+        assert_eq!(report.primal, 0.5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_zero_gap_cadence() {
+        let _ = Driver::new(0.1, 10).with_gap_every(0);
+    }
+
+    #[test]
+    fn snapshot_hook_called_on_cadence() {
+        struct Snapping(Halving);
+        impl RoundAlgorithm for Snapping {
+            fn n(&self) -> usize {
+                1
+            }
+            fn round(&mut self) -> RoundOutcome {
+                self.0.round()
+            }
+            fn objectives(&mut self) -> (f64, f64) {
+                self.0.objectives()
+            }
+            fn rounds(&self) -> usize {
+                self.0.rounds
+            }
+            fn passes(&self) -> f64 {
+                self.0.rounds as f64
+            }
+            fn modeled_secs(&self) -> (f64, f64) {
+                (0.0, 0.0)
+            }
+            fn final_w(&mut self) -> Vec<f64> {
+                vec![]
+            }
+            fn snapshot(&self) -> Option<Checkpoint> {
+                Some(Checkpoint {
+                    lambda: 1.0,
+                    rounds: self.0.rounds,
+                    passes: self.0.rounds as f64,
+                    v: vec![0.0],
+                    alpha: vec![vec![0.0]],
+                    rng: None,
+                })
+            }
+        }
+        let dir = std::env::temp_dir().join("dadm-engine-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("snap.ck");
+        let mut algo = Snapping(Halving::new(1.0));
+        let _ = Driver::new(0.0, 5)
+            .with_checkpoint(path.clone(), 2)
+            .solve(&mut algo);
+        let ck = Checkpoint::load_file(&path).unwrap();
+        // Last snapshot at round 4 (cadence 2, budget 5).
+        assert_eq!(ck.rounds, 4);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,14 +1,23 @@
-//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//! Runtime substrate: the unified round engine plus the PJRT client for
+//! AOT-compiled artifacts.
 //!
-//! The build-time Python layers (`python/compile/`) lower the batched
-//! Theorem-6 local step to HLO **text** (`artifacts/local_step_*.hlo.txt`;
-//! text, not serialized proto — xla_extension 0.5.1 rejects jax ≥ 0.5's
-//! 64-bit instruction ids). This module wraps the `xla` crate's PJRT CPU
-//! client to compile those artifacts once and execute them from the Rust
-//! hot path, so Python is never on the solve path.
+//! * [`engine`] — the shared solve loop. A [`engine::Driver`] owns the
+//!   stopping policy, gap cadence, trace emission, modeled accounting and
+//!   periodic checkpoints for every [`engine::RoundAlgorithm`] (DADM,
+//!   Acc-DADM, distributed OWL-QN); the coordinators supply only the
+//!   per-round work. See DESIGN.md §4.
+//! * [`artifact`]/[`local_step`] — the PJRT runtime. The build-time
+//!   Python layers (`python/compile/`) lower the batched Theorem-6 local
+//!   step to HLO **text** (`artifacts/local_step_*.hlo.txt`; text, not
+//!   serialized proto — xla_extension 0.5.1 rejects jax ≥ 0.5's 64-bit
+//!   instruction ids). The `xla` crate's PJRT CPU client compiles those
+//!   artifacts once and executes them from the Rust hot path, so Python
+//!   is never on the solve path.
 
 mod artifact;
+pub mod engine;
 mod local_step;
 
 pub use artifact::{artifact_path, ArtifactSpec, XlaRuntime};
+pub use engine::{Driver, GapCadence, RoundAlgorithm, RoundOutcome, SolveReport};
 pub use local_step::XlaLocalStep;

@@ -23,7 +23,7 @@ mod prox_sdca;
 mod theorem_step;
 mod worker;
 
-pub use owlqn::{Owlqn, OwlqnOptions};
+pub use owlqn::{Owlqn, OwlqnOptions, OwlqnState};
 pub use prox_sdca::ProxSdca;
 pub use theorem_step::TheoremStep;
 pub use worker::WorkerState;

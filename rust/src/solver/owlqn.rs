@@ -58,6 +58,34 @@ pub struct OwlqnResult {
     pub eval_trace: Vec<f64>,
 }
 
+/// Explicit optimizer state, one [`Owlqn::step`] per outer iteration.
+///
+/// Inverting the classic "the optimizer owns the loop" control flow lets
+/// the distributed driver ([`crate::coordinator::DistributedOwlqn`]) run
+/// OWL-QN through the same round engine as the dual methods: one engine
+/// round = one outer iteration (≥ 1 oracle evaluations). The batch
+/// [`Owlqn::minimize`] is a thin loop over the same state.
+#[derive(Clone, Debug)]
+pub struct OwlqnState {
+    /// Current iterate.
+    pub w: Vec<f64>,
+    /// Smooth-part value `f(w)` at the current iterate.
+    pub fval: f64,
+    /// `∇f(w)` at the current iterate.
+    pub grad: Vec<f64>,
+    /// Oracle evaluations so far (including the initial one).
+    pub evals: usize,
+    /// Outer iterations started.
+    pub iters: usize,
+    /// Full objective after every oracle evaluation (monotone envelope —
+    /// the per-pass trace of Figures 6/7).
+    pub eval_trace: Vec<f64>,
+    /// The optimizer has terminated on its own criteria (tolerance, no
+    /// descent direction, or a failed line search).
+    pub done: bool,
+    history: LbfgsHistory,
+}
+
 /// OWL-QN optimizer.
 #[derive(Clone, Debug)]
 pub struct Owlqn {
@@ -91,101 +119,136 @@ impl Owlqn {
             .collect()
     }
 
-    /// Minimize using the oracle `f_and_grad(w) -> (f(w), ∇f(w))`.
+    /// Full objective `F(w) = f(w) + μ‖w‖₁` at the state's iterate.
+    pub fn objective(&self, st: &OwlqnState) -> f64 {
+        st.fval + self.opts.mu * crate::utils::math::l1_norm(&st.w)
+    }
+
+    /// Start a run at `w0` (performs the initial oracle evaluation).
+    pub fn begin<F>(&self, w0: Vec<f64>, f_and_grad: &mut F) -> OwlqnState
+    where
+        F: FnMut(&[f64]) -> (f64, Vec<f64>),
+    {
+        let (fval, grad) = f_and_grad(&w0);
+        let mut st = OwlqnState {
+            w: w0,
+            fval,
+            grad,
+            evals: 1,
+            iters: 0,
+            eval_trace: Vec::new(),
+            done: false,
+            history: LbfgsHistory::new(self.opts.memory),
+        };
+        st.eval_trace.push(self.objective(&st));
+        st
+    }
+
+    /// One outer iteration: pseudo-gradient, aligned quasi-Newton
+    /// direction, orthant-projected backtracking line search. Returns
+    /// `false` once the state is finished (tolerance reached, no descent
+    /// direction, failed line search, or iteration budget exhausted) —
+    /// in that case no further iterations will run.
+    pub fn step<F>(&self, st: &mut OwlqnState, f_and_grad: &mut F) -> bool
+    where
+        F: FnMut(&[f64]) -> (f64, Vec<f64>),
+    {
+        if st.done || st.iters >= self.opts.max_iters {
+            return false;
+        }
+        st.iters += 1;
+        let mu = self.opts.mu;
+        let pg = self.pseudo_gradient(&st.w, &st.grad);
+        let pg_inf = pg.iter().fold(0.0f64, |m, x| m.max(x.abs()));
+        if pg_inf < self.opts.tol {
+            st.done = true;
+            return false;
+        }
+        // Quasi-Newton direction on the pseudo-gradient…
+        let mut dir: Vec<f64> = st.history.apply(&pg).iter().map(|x| -x).collect();
+        // …aligned: discard components that disagree with −⋄F.
+        for (dj, pgj) in dir.iter_mut().zip(&pg) {
+            if *dj * -pgj <= 0.0 {
+                *dj = 0.0;
+            }
+        }
+        // Orthant ξ: sign of w, or of −⋄F where w = 0.
+        let xi: Vec<f64> = st
+            .w
+            .iter()
+            .zip(&pg)
+            .map(|(&wj, &pgj)| if wj != 0.0 { wj.signum() } else { -pgj.signum() })
+            .collect();
+        let dir_deriv = dot(&pg, &dir);
+        if dir_deriv >= 0.0 {
+            st.done = true; // no descent possible
+            return false;
+        }
+        // Backtracking line search with orthant projection.
+        let f_old_full = self.objective(st);
+        let mut t = if st.history.is_empty() {
+            // conservative first step like the reference implementation
+            1.0 / (1.0 + crate::utils::math::l2_norm_sq(&pg).sqrt())
+        } else {
+            1.0
+        };
+        let c1 = 1e-4;
+        let mut accepted = false;
+        for _ in 0..self.opts.max_line_search {
+            let w_new: Vec<f64> = st
+                .w
+                .iter()
+                .zip(&dir)
+                .zip(&xi)
+                .map(|((&wj, &dj), &xij)| {
+                    let cand = wj + t * dj;
+                    // Project onto the orthant: zero if sign flips.
+                    if cand * xij < 0.0 {
+                        0.0
+                    } else {
+                        cand
+                    }
+                })
+                .collect();
+            let (f_new, g_new) = f_and_grad(&w_new);
+            st.evals += 1;
+            let f_new_full = f_new + mu * crate::utils::math::l1_norm(&w_new);
+            st.eval_trace
+                .push(f_new_full.min(*st.eval_trace.last().unwrap()));
+            if f_new_full <= f_old_full + c1 * t * dir_deriv {
+                // Curvature pair from accepted step.
+                let s: Vec<f64> = w_new.iter().zip(&st.w).map(|(a, b)| a - b).collect();
+                let yv: Vec<f64> = g_new.iter().zip(&st.grad).map(|(a, b)| a - b).collect();
+                st.history.push(s, yv);
+                st.w = w_new;
+                st.fval = f_new;
+                st.grad = g_new;
+                accepted = true;
+                break;
+            }
+            t *= 0.5;
+        }
+        if !accepted {
+            st.done = true; // line search failed — practical convergence
+            return false;
+        }
+        st.iters < self.opts.max_iters
+    }
+
+    /// Minimize using the oracle `f_and_grad(w) -> (f(w), ∇f(w))` — the
+    /// batch entry point, a loop over [`Owlqn::step`].
     pub fn minimize<F>(&self, w0: Vec<f64>, mut f_and_grad: F) -> OwlqnResult
     where
         F: FnMut(&[f64]) -> (f64, Vec<f64>),
     {
-        let mu = self.opts.mu;
-        let full = |fval: f64, w: &[f64]| fval + mu * crate::utils::math::l1_norm(w);
-
-        let mut w = w0;
-        let mut evals = 0usize;
-        let mut eval_trace = Vec::new();
-        let (mut fval, mut grad) = f_and_grad(&w);
-        evals += 1;
-        eval_trace.push(full(fval, &w));
-        let mut history = LbfgsHistory::new(self.opts.memory);
-        let mut iters = 0usize;
-
-        for it in 0..self.opts.max_iters {
-            iters = it + 1;
-            let pg = self.pseudo_gradient(&w, &grad);
-            let pg_inf = pg.iter().fold(0.0f64, |m, x| m.max(x.abs()));
-            if pg_inf < self.opts.tol {
-                break;
-            }
-            // Quasi-Newton direction on the pseudo-gradient…
-            let mut dir: Vec<f64> = history.apply(&pg).iter().map(|x| -x).collect();
-            // …aligned: discard components that disagree with −⋄F.
-            for (dj, pgj) in dir.iter_mut().zip(&pg) {
-                if *dj * -pgj <= 0.0 {
-                    *dj = 0.0;
-                }
-            }
-            // Orthant ξ: sign of w, or of −⋄F where w = 0.
-            let xi: Vec<f64> = w
-                .iter()
-                .zip(&pg)
-                .map(|(&wj, &pgj)| if wj != 0.0 { wj.signum() } else { -pgj.signum() })
-                .collect();
-            let dir_deriv = dot(&pg, &dir);
-            if dir_deriv >= 0.0 {
-                break; // no descent possible
-            }
-            // Backtracking line search with orthant projection.
-            let f_old_full = full(fval, &w);
-            let mut t = if history.is_empty() {
-                // conservative first step like the reference implementation
-                1.0 / (1.0 + crate::utils::math::l2_norm_sq(&pg).sqrt())
-            } else {
-                1.0
-            };
-            let c1 = 1e-4;
-            let mut accepted = false;
-            for _ in 0..self.opts.max_line_search {
-                let w_new: Vec<f64> = w
-                    .iter()
-                    .zip(&dir)
-                    .zip(&xi)
-                    .map(|((&wj, &dj), &xij)| {
-                        let cand = wj + t * dj;
-                        // Project onto the orthant: zero if sign flips.
-                        if cand * xij < 0.0 {
-                            0.0
-                        } else {
-                            cand
-                        }
-                    })
-                    .collect();
-                let (f_new, g_new) = f_and_grad(&w_new);
-                evals += 1;
-                let f_new_full = full(f_new, &w_new);
-                eval_trace.push(f_new_full.min(*eval_trace.last().unwrap()));
-                if f_new_full <= f_old_full + c1 * t * dir_deriv {
-                    // Curvature pair from accepted step.
-                    let s: Vec<f64> = w_new.iter().zip(&w).map(|(a, b)| a - b).collect();
-                    let yv: Vec<f64> = g_new.iter().zip(&grad).map(|(a, b)| a - b).collect();
-                    history.push(s, yv);
-                    w = w_new;
-                    fval = f_new;
-                    grad = g_new;
-                    accepted = true;
-                    break;
-                }
-                t *= 0.5;
-            }
-            if !accepted {
-                break; // line search failed — practical convergence
-            }
-        }
-
+        let mut st = self.begin(w0, &mut f_and_grad);
+        while self.step(&mut st, &mut f_and_grad) {}
         OwlqnResult {
-            objective: full(fval, &w),
-            w,
-            evals,
-            iters,
-            eval_trace,
+            objective: self.objective(&st),
+            w: st.w,
+            evals: st.evals,
+            iters: st.iters,
+            eval_trace: st.eval_trace,
         }
     }
 }

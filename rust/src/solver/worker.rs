@@ -1,7 +1,6 @@
 //! Per-machine worker state: the shard of data plus the machine-local
 //! optimizer variables of Algorithm 2.
 
-use crate::comm::sparse::SparseDelta;
 use crate::data::{Dataset, Partition, SparseMatrix};
 use crate::reg::Regularizer;
 
@@ -74,18 +73,18 @@ impl WorkerState {
         reg.grad_conj_into(&self.v_tilde, &mut self.w);
     }
 
-    /// Apply a *sparse* broadcast `Δṽ` message: update only the touched
-    /// coordinates of `ṽ_ℓ` and refresh the matching entries of `w`.
-    /// Equivalent to [`WorkerState::apply_global`] on the densified
-    /// message — `∇g*` is separable for every `g` in this crate, and the
-    /// untouched coordinates of `w` are already consistent — but costs
-    /// `O(nnz(Δṽ))` instead of `O(d)` (DESIGN.md §7).
-    pub fn apply_global_sparse<R: Regularizer>(&mut self, delta: &SparseDelta, reg: &R) {
-        debug_assert_eq!(delta.dim, self.dim());
-        for (&j, &dv) in delta.idx.iter().zip(&delta.val) {
+    /// Overwrite the *touched* coordinates of `ṽ_ℓ` with their new
+    /// global values and refresh the matching entries of `w`. This is
+    /// the broadcast-apply of the fused round (DESIGN.md §4/§7): the
+    /// message carries the changed coordinates of `ṽ` as values, not
+    /// increments, so the worker replica stays **bit-identical** to the
+    /// coordinator's `ṽ` (incremental `a + (Δ)` application accumulates
+    /// ulp drift, which would break exact checkpoint resumption).
+    pub fn set_v_tilde_sparse_parts<R: Regularizer>(&mut self, idx: &[u32], val: &[f64], reg: &R) {
+        for (&j, &vj) in idx.iter().zip(val) {
             let ju = j as usize;
-            self.v_tilde[ju] += dv;
-            self.w[ju] = reg.grad_conj_at(ju, self.v_tilde[ju]);
+            self.v_tilde[ju] = vj;
+            self.w[ju] = reg.grad_conj_at(ju, vj);
         }
     }
 
@@ -164,7 +163,11 @@ mod tests {
     }
 
     #[test]
-    fn apply_global_sparse_matches_dense_apply() {
+    fn sparse_value_set_matches_dense_set() {
+        // The sparse broadcast apply (values at touched coordinates)
+        // must land on exactly the state a full `set_v_tilde` produces
+        // when only those coordinates changed — the bit-identical
+        // worker-replica property of DESIGN.md §7.
         let data = tiny_classification(10, 5, 2);
         let part = Partition::balanced(10, 2, 2);
         let reg = ElasticNet::new(0.2);
@@ -174,11 +177,10 @@ mod tests {
         let v0 = vec![0.5, -1.0, 0.0, 2.0, -0.3];
         dense_ws.set_v_tilde(&v0, &reg);
         sparse_ws.set_v_tilde(&v0, &reg);
-        // A sparse Δṽ touching coordinates 1 and 3 only.
-        let delta_dense = vec![0.0, 0.75, 0.0, -0.5, 0.0];
-        let delta_sparse = crate::comm::sparse::SparseDelta::from_dense(&delta_dense);
-        dense_ws.apply_global(&delta_dense, &reg);
-        sparse_ws.apply_global_sparse(&delta_sparse, &reg);
+        // The next global ṽ differs at coordinates 1 and 3 only.
+        let v1 = vec![0.5, -0.25, 0.0, 1.5, -0.3];
+        dense_ws.set_v_tilde(&v1, &reg);
+        sparse_ws.set_v_tilde_sparse_parts(&[1, 3], &[v1[1], v1[3]], &reg);
         assert_eq!(dense_ws.v_tilde, sparse_ws.v_tilde);
         assert_eq!(dense_ws.w, sparse_ws.w);
     }

@@ -1,0 +1,180 @@
+//! Engine-level integration tests: Driver-vs-legacy-loop parity,
+//! bit-exact checkpoint resumption through the engine's snapshot hook,
+//! and concurrent pool-backed solves time-sharing the global workers.
+
+use dadm::comm::{Cluster, CostModel};
+use dadm::coordinator::Checkpoint;
+use dadm::data::synthetic::tiny_classification;
+use dadm::data::{Dataset, Partition};
+use dadm::loss::SmoothHinge;
+use dadm::reg::{ElasticNet, Zero};
+use dadm::solver::ProxSdca;
+use dadm::{Dadm, DadmOptions, Driver};
+
+type TestDadm = Dadm<SmoothHinge, ElasticNet, Zero, ProxSdca>;
+
+fn build(
+    data: &Dataset,
+    part: &Partition,
+    cluster: Cluster,
+    sp: f64,
+    gap_every: usize,
+) -> TestDadm {
+    Dadm::new(
+        data,
+        part,
+        SmoothHinge::default(),
+        ElasticNet::new(0.1),
+        Zero,
+        1e-3,
+        ProxSdca,
+        DadmOptions {
+            sp,
+            cluster,
+            cost: CostModel::free(),
+            gap_every,
+            ..Default::default()
+        },
+    )
+}
+
+/// The math fields of a trace record (cumulative modeled/wall seconds
+/// are measured, not derived, so bit-equality claims exclude them).
+fn math_fields(report: &dadm::SolveReport) -> Vec<(usize, f64, f64, f64)> {
+    report
+        .trace
+        .rounds
+        .iter()
+        .map(|r| (r.round, r.passes, r.primal, r.dual))
+        .collect()
+}
+
+/// Verbatim replica of the pre-engine `Dadm::solve` loop, written
+/// against the public API: the engine-driven solve must reproduce its
+/// records and final iterate bit for bit.
+fn legacy_dadm_solve(
+    dadm: &mut TestDadm,
+    eps: f64,
+    max_rounds: usize,
+    gap_every: usize,
+) -> (Vec<(usize, f64, f64, f64)>, Vec<f64>, bool) {
+    let n = dadm.n() as f64;
+    let mut records = Vec::new();
+    dadm.resync();
+    let record = |d: &mut TestDadm, records: &mut Vec<(usize, f64, f64, f64)>| {
+        let primal = d.primal();
+        let dual = d.dual();
+        records.push((d.rounds(), d.passes(), primal, dual));
+        primal - dual
+    };
+    let mut gap = record(dadm, &mut records);
+    let mut converged = gap / n <= eps;
+    let mut rounds_done = 0usize;
+    while !converged && rounds_done < max_rounds {
+        dadm.round();
+        rounds_done += 1;
+        if rounds_done % gap_every == 0 || rounds_done == max_rounds {
+            gap = record(dadm, &mut records);
+            converged = gap / n <= eps;
+        }
+    }
+    (records, dadm.w().to_vec(), converged)
+}
+
+#[test]
+fn driver_matches_legacy_dadm_loop_bit_for_bit() {
+    let data = tiny_classification(260, 7, 91);
+    let part = Partition::balanced(260, 4, 91);
+    // A converging run and a capped run, at an off-cadence gap_every.
+    for (eps, max_rounds) in [(1e-5, 500usize), (1e-14, 17)] {
+        let gap_every = 3;
+        let mut engine = build(&data, &part, Cluster::Serial, 0.3, gap_every);
+        let report = engine.solve(eps, max_rounds);
+        let mut legacy = build(&data, &part, Cluster::Serial, 0.3, gap_every);
+        let (want_records, want_w, want_converged) =
+            legacy_dadm_solve(&mut legacy, eps, max_rounds, gap_every);
+        assert_eq!(report.converged, want_converged);
+        assert_eq!(math_fields(&report), want_records);
+        assert_eq!(report.w, want_w, "final iterates diverge");
+    }
+}
+
+#[test]
+fn checkpoint_resume_reproduces_trace_bit_for_bit() {
+    let dir = std::env::temp_dir().join("dadm-engine-resume");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("resume.ck");
+
+    let data = tiny_classification(200, 6, 92);
+    let part = Partition::balanced(200, 3, 92);
+
+    // Reference: 10 uninterrupted rounds, recorded every round.
+    let mut full = build(&data, &part, Cluster::Serial, 0.2, 1);
+    let full_report = Driver::new(0.0, 10).solve(&mut full);
+
+    // Interrupted: 5 rounds with the engine snapshotting at round 5…
+    let mut first = build(&data, &part, Cluster::Serial, 0.2, 1);
+    let _ = Driver::new(0.0, 5)
+        .with_checkpoint(path.clone(), 5)
+        .solve(&mut first);
+    let ck = Checkpoint::load_file(&path).unwrap();
+    assert_eq!(ck.rounds, 5);
+    assert!(ck.rng.is_some(), "v2 snapshots carry the RNG streams");
+
+    // …then a fresh instance restored from disk runs the back half.
+    let mut resumed = build(&data, &part, Cluster::Serial, 0.2, 1);
+    resumed.restore(&ck).unwrap();
+    let resumed_report = Driver::new(0.0, 5).solve(&mut resumed);
+
+    // The resumed trace (initial record at round 5, then 6..10) must
+    // equal the tail of the uninterrupted trace bit for bit: the
+    // snapshot carries the mini-batch RNG streams and the broadcast is
+    // value-setting, so worker replicas cannot drift.
+    let full_fields = math_fields(&full_report);
+    let resumed_fields = math_fields(&resumed_report);
+    let tail: Vec<_> = full_fields
+        .iter()
+        .filter(|(round, ..)| *round >= 5)
+        .copied()
+        .collect();
+    assert_eq!(resumed_fields, tail, "resumed trajectory diverged");
+    assert_eq!(resumed_report.w, full_report.w);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn concurrent_pool_solves_do_not_corrupt_state() {
+    // Two solves on different datasets, running simultaneously on the
+    // process-global worker pool, must each reproduce their serial
+    // counterpart bit for bit (jobs time-share workers FIFO; per-machine
+    // state must never leak across solves).
+    let data_a = tiny_classification(300, 8, 101);
+    let part_a = Partition::balanced(300, 4, 101);
+    let data_b = tiny_classification(240, 5, 202);
+    let part_b = Partition::balanced(240, 3, 202);
+
+    let run = |data: &Dataset, part: &Partition, cluster: Cluster| {
+        let mut d = build(data, part, cluster, 0.25, 1);
+        d.resync();
+        for _ in 0..15 {
+            d.round();
+        }
+        d.check_v_invariant().unwrap();
+        (d.w().to_vec(), d.gap())
+    };
+
+    let (serial_a, serial_b) = (
+        run(&data_a, &part_a, Cluster::Serial),
+        run(&data_b, &part_b, Cluster::Serial),
+    );
+    let (pooled_a, pooled_b) = std::thread::scope(|s| {
+        let ha = s.spawn(|| run(&data_a, &part_a, Cluster::Threads));
+        let hb = s.spawn(|| run(&data_b, &part_b, Cluster::Threads));
+        (ha.join().unwrap(), hb.join().unwrap())
+    });
+
+    assert_eq!(serial_a.0, pooled_a.0, "solve A corrupted under sharing");
+    assert_eq!(serial_b.0, pooled_b.0, "solve B corrupted under sharing");
+    assert!((serial_a.1 - pooled_a.1).abs() < 1e-9);
+    assert!((serial_b.1 - pooled_b.1).abs() < 1e-9);
+}
