@@ -1,0 +1,152 @@
+//! Loopback distributed smoke test: one coordinator + four real worker
+//! **processes** on 127.0.0.1 (the CI `distributed-smoke` job's entry
+//! point, also runnable locally):
+//!
+//! ```text
+//! cargo run --release --example distributed_smoke
+//! ```
+//!
+//! The binary re-executes itself in worker mode (`worker --connect
+//! HOST:PORT`), so no separate worker binary is needed. The coordinator
+//! assigns a synthetic problem by *seed* — training data never crosses
+//! the wire — runs DADM over the TCP backend and over `Cluster::Serial`,
+//! and fails (non-zero exit) if the final duality gaps diverge beyond
+//! 1e-9 or the round counts differ.
+
+use anyhow::{bail, Context, Result};
+use dadm::comm::tcp::{run_worker, synthetic_specs, TcpClusterBuilder, TcpHandle};
+use dadm::comm::wire::{WireLoss, WireSolver};
+use dadm::comm::{Cluster, CostModel};
+use dadm::coordinator::{Dadm, DadmOptions, SolveReport};
+use dadm::data::synthetic::SyntheticSpec;
+use dadm::data::{Dataset, Partition};
+use dadm::loss::SmoothHinge;
+use dadm::reg::{ElasticNet, Zero};
+use dadm::solver::ProxSdca;
+use std::process::{Child, Command, Stdio};
+
+const MACHINES: usize = 4;
+const PART_SEED: u64 = 31;
+const RNG_SEED: u64 = 0x51107E;
+const SP: f64 = 0.25;
+const EPS: f64 = 1e-5;
+const MAX_ROUNDS: usize = 60;
+const GAP_TOLERANCE: f64 = 1e-9;
+
+fn spec() -> SyntheticSpec {
+    SyntheticSpec {
+        name: "distributed-smoke".into(),
+        n: 600,
+        d: 64,
+        density: 0.3,
+        signal_density: 0.4,
+        noise: 0.1,
+        seed: 0x5E_ED,
+    }
+}
+
+fn solve(data: &Dataset, part: &Partition, cluster: Cluster) -> SolveReport {
+    let mut dadm = Dadm::new(
+        data,
+        part,
+        SmoothHinge::default(),
+        ElasticNet::new(0.1),
+        Zero,
+        1e-2,
+        ProxSdca,
+        DadmOptions {
+            sp: SP,
+            cluster,
+            cost: CostModel::default(),
+            seed: RNG_SEED,
+            gap_every: 1,
+            sparse_comm: true,
+        },
+    );
+    dadm.solve(EPS, MAX_ROUNDS)
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    // Worker mode: this same binary, re-executed by the coordinator.
+    if args.first().map(String::as_str) == Some("worker") {
+        let addr = match args.get(1).map(String::as_str) {
+            Some("--connect") => args.get(2).context("worker: missing address")?,
+            _ => bail!("usage: distributed_smoke worker --connect HOST:PORT"),
+        };
+        return run_worker(addr);
+    }
+
+    // --- Coordinator ---
+    let builder = TcpClusterBuilder::bind("127.0.0.1:0")?;
+    let addr = builder.local_addr()?.to_string();
+    let exe = std::env::current_exe().context("locating own binary")?;
+    println!("coordinator on {addr}; spawning {MACHINES} worker processes");
+    let mut children: Vec<Child> = (0..MACHINES)
+        .map(|_| {
+            Command::new(&exe)
+                .args(["worker", "--connect", &addr])
+                .stdin(Stdio::null())
+                .spawn()
+                .context("spawning worker process")
+        })
+        .collect::<Result<_>>()?;
+
+    let outcome = (|| -> Result<()> {
+        let mut cluster = builder.accept(MACHINES)?;
+        let problem = spec();
+        cluster.assign(synthetic_specs(
+            &problem,
+            MACHINES,
+            PART_SEED,
+            RNG_SEED,
+            SP,
+            WireLoss::SmoothHinge(SmoothHinge::default()),
+            WireSolver::ProxSdca,
+        ))?;
+        let handle = TcpHandle::new(cluster);
+
+        let data = problem.generate();
+        let part = Partition::balanced(data.n(), MACHINES, PART_SEED);
+        let tcp = solve(&data, &part, Cluster::Tcp(handle.clone()));
+        let serial = solve(&data, &part, Cluster::Serial);
+
+        let gap_tcp = tcp.normalized_gap();
+        let gap_serial = serial.normalized_gap();
+        let diff = (gap_tcp - gap_serial).abs();
+        let stats = handle.stats();
+        println!(
+            "tcp:    rounds={} gap={gap_tcp:.3e} (wire: {} B sent, {} B received, {} frames)",
+            tcp.rounds, stats.bytes_sent, stats.bytes_received, stats.frames_sent
+        );
+        println!("serial: rounds={} gap={gap_serial:.3e}", serial.rounds);
+
+        if tcp.rounds != serial.rounds {
+            bail!("round counts diverged: tcp {} vs serial {}", tcp.rounds, serial.rounds);
+        }
+        if diff.is_nan() || diff > GAP_TOLERANCE {
+            bail!("duality gaps diverged by {diff:.3e} (> {GAP_TOLERANCE:.0e})");
+        }
+        if stats.bytes_sent == 0 || stats.bytes_received == 0 {
+            bail!("no wire traffic recorded");
+        }
+        handle.with(|c| c.shutdown());
+        Ok(())
+    })();
+
+    // Reap workers whatever happened above.
+    for child in &mut children {
+        if outcome.is_ok() {
+            let status = child.wait().context("waiting for worker")?;
+            if !status.success() {
+                bail!("worker exited with {status}");
+            }
+        } else {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+    outcome?;
+    println!("distributed smoke PASS: gap diff ≤ {GAP_TOLERANCE:.0e}, bit-identical iterates");
+    Ok(())
+}

@@ -6,15 +6,21 @@
 //! * tree allreduce bandwidth (dense + sparse Δv messages);
 //! * full DADM rounds on the sparse-delta pipeline (dense vs sparse
 //!   workloads, per-round message sizes);
+//! * full DADM rounds over the loopback TCP transport (real sockets,
+//!   per-round wire bytes);
 //! * PJRT artifact execute latency (when `artifacts/` exists).
 //!
-//! Results feed EXPERIMENTS.md §Perf (before/after iteration log).
+//! Problem sizes scale with `DADM_BENCH_SCALE` (a float, or `smoke` for
+//! the CI bench-smoke job); results land in
+//! `target/bench_out/BENCH_perf_hotpath.json` and feed EXPERIMENTS.md
+//! §Perf (before/after iteration log).
 
 use dadm::comm::sparse::{tree_allreduce_delta, Delta, SparseDelta};
 use dadm::comm::CostModel;
 use dadm::coordinator::{Dadm, DadmOptions};
 use dadm::data::synthetic::SyntheticSpec;
 use dadm::data::Partition;
+use dadm::experiments::{bench_scale, scaled_bench_n};
 use dadm::loss::{Loss, SmoothHinge};
 use dadm::metrics::bench::{fmt_secs, time_it, BenchTable};
 use dadm::reg::{ElasticNet, Zero};
@@ -26,10 +32,11 @@ fn main() {
         "perf_hotpath",
         &["bench", "config", "median", "throughput"],
     );
+    table.meta("scale", format!("{}", bench_scale()));
 
     // --- ProxSDCA epoch throughput ---
     for (name, density, d) in [("dense", 1.0, 64), ("sparse", 0.02, 2048)] {
-        let n = 20_000;
+        let n = scaled_bench_n(20_000);
         let data = SyntheticSpec {
             name: format!("perf-{name}"),
             n,
@@ -65,7 +72,7 @@ fn main() {
 
     // --- ProxSDCA mini-batch regime (sp ≪ 1: many small local steps) ---
     {
-        let n = 20_000;
+        let n = scaled_bench_n(20_000);
         let d = 2048;
         let data = SyntheticSpec {
             name: "perf-mini".into(),
@@ -101,7 +108,7 @@ fn main() {
 
     // --- Theorem batched step ---
     {
-        let n = 20_000;
+        let n = scaled_bench_n(20_000);
         let data = SyntheticSpec {
             name: "perf-thm".into(),
             n,
@@ -199,7 +206,7 @@ fn main() {
         ("dense", 1.0, 64usize, 1.0),
         ("sparse", 0.01, 2048, 0.02),
     ] {
-        let n = 8_000;
+        let n = scaled_bench_n(8_000);
         let machines = 8;
         let data = SyntheticSpec {
             name: format!("round-{name}"),
@@ -253,6 +260,90 @@ fn main() {
         ]);
     }
 
+    // --- Full DADM round over the loopback TCP transport ---
+    // Same round as above but with every machine in a thread-hosted
+    // worker behind a real socket (the in-process twin of `dadm worker`
+    // processes): measures transport overhead per round and reports the
+    // actual wire bytes a sparse round moves.
+    {
+        use dadm::comm::tcp::{serve, synthetic_specs, TcpClusterBuilder, TcpHandle};
+        use dadm::comm::wire::{WireLoss, WireSolver};
+        use dadm::comm::Cluster;
+        let machines = 4usize;
+        let n = scaled_bench_n(8_000);
+        let (sp, d) = (0.02, 2048usize);
+        let spec = SyntheticSpec {
+            name: "tcp-round".into(),
+            n,
+            d,
+            density: 0.01,
+            signal_density: 0.2,
+            noise: 0.1,
+            seed: 17,
+        };
+        let data = spec.generate();
+        let part = Partition::balanced(n, machines, 17);
+        let builder = TcpClusterBuilder::bind("127.0.0.1:0").expect("bind loopback");
+        let addr = builder.local_addr().expect("local addr");
+        let workers: Vec<_> = (0..machines)
+            .map(|_| {
+                std::thread::spawn(move || {
+                    let s = std::net::TcpStream::connect(addr).expect("worker connect");
+                    serve(s).expect("worker serve");
+                })
+            })
+            .collect();
+        let mut cluster = builder.accept(machines).expect("accept workers");
+        cluster
+            .assign(synthetic_specs(
+                &spec,
+                machines,
+                17,
+                0xDAD_A,
+                sp,
+                WireLoss::SmoothHinge(SmoothHinge::default()),
+                WireSolver::ProxSdca,
+            ))
+            .expect("assign");
+        let handle = TcpHandle::new(cluster);
+        let mut dadm = Dadm::new(
+            &data,
+            &part,
+            SmoothHinge::default(),
+            ElasticNet::new(0.1),
+            Zero,
+            1e-4,
+            ProxSdca,
+            DadmOptions {
+                sp,
+                cluster: Cluster::Tcp(handle.clone()),
+                cost: CostModel::free(),
+                sparse_comm: true,
+                ..Default::default()
+            },
+        );
+        dadm.resync();
+        let bytes_before = dadm.wire_bytes();
+        let mut rounds_timed = 0u64;
+        let t = time_it(2, 8, || {
+            dadm.round();
+            rounds_timed += 1;
+        });
+        let per_round = (dadm.wire_bytes() - bytes_before) / rounds_timed.max(1);
+        table.row(&[
+            "dadm_round_tcp_loopback".into(),
+            format!("m={machines} d={d} sp={sp} sparse"),
+            fmt_secs(t.median),
+            format!("{per_round} B/round on the wire"),
+        ]);
+        handle.with(|c| c.shutdown());
+        drop(dadm);
+        drop(handle);
+        for w in workers {
+            w.join().expect("worker thread");
+        }
+    }
+
     // --- Fused broadcast-apply barrier (engine round, m=16, d=1e5) ---
     // After: one pool section per round — the Δṽ broadcast apply rides
     // the next round's local-step dispatch. Before (emulated): a second
@@ -264,7 +355,7 @@ fn main() {
     // so the measured gap under-states the old cost).
     {
         use dadm::comm::Cluster;
-        let (n, d, machines) = (8_000usize, 100_000usize, 16usize);
+        let (n, d, machines) = (scaled_bench_n(8_000), 100_000usize, 16usize);
         let data = SyntheticSpec {
             name: "fused-round".into(),
             n,

@@ -7,18 +7,20 @@
 //! driver scripts. Kept out of `main.rs` so integration tests can run the
 //! launcher in-process.
 
-use crate::comm::CostModel;
-use crate::config::{ExperimentConfig, Method};
+use crate::comm::tcp::{shard_specs, synthetic_specs, TcpClusterBuilder, TcpHandle};
+use crate::comm::wire::{WireLoss, WireSolver};
+use crate::comm::{Cluster, CostModel};
+use crate::config::{ClusterKind, ExperimentConfig, Method};
 use crate::coordinator::{
     AccDadm, AccDadmOptions, Checkpoint, Dadm, DadmOptions, DistributedOwlqn, NuChoice,
     SolveReport,
 };
-use crate::data::Partition;
-use crate::loss::{Hinge, Logistic, LossKind, SmoothHinge, Squared};
+use crate::data::{Dataset, Partition};
+use crate::loss::{LossKind, SmoothHinge};
 use crate::reg::{ElasticNet, Zero};
 use crate::runtime::engine::{Driver, GapCadence, RoundAlgorithm};
 use crate::solver::ProxSdca;
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 /// Outcome of a launcher run (uniform across methods).
 #[derive(Clone, Debug)]
@@ -38,6 +40,63 @@ pub struct RunOutcome {
     pub trace_csv: Option<String>,
 }
 
+/// The wire loss spec matching [`run_experiment`]'s loss dispatch
+/// (including the §8.2 hinge smoothing under Acc-DADM) — what TCP
+/// workers are assigned so their local steps replicate the
+/// coordinator's bit for bit.
+fn wire_loss_for(cfg: &ExperimentConfig) -> WireLoss {
+    match cfg.loss {
+        LossKind::SmoothHinge => WireLoss::SmoothHinge(SmoothHinge::default()),
+        LossKind::Logistic => WireLoss::Logistic,
+        LossKind::Hinge => {
+            if cfg.method == Method::AccDadm {
+                WireLoss::SmoothHinge(SmoothHinge::nesterov(cfg.eps))
+            } else {
+                WireLoss::Hinge
+            }
+        }
+        LossKind::Squared => WireLoss::Squared,
+    }
+}
+
+/// Materialize the execution backend. For `cluster = tcp` this binds the
+/// listener, waits for `machines` worker processes, and ships each its
+/// assignment: the synthetic *generator* when the dataset names one (no
+/// training data crosses the wire), otherwise exactly its shard's rows.
+fn build_cluster(cfg: &ExperimentConfig, data: &Dataset, part: &Partition) -> Result<Cluster> {
+    Ok(match cfg.cluster {
+        ClusterKind::Serial => Cluster::Serial,
+        ClusterKind::Threads => Cluster::Threads,
+        ClusterKind::Tcp => {
+            let builder = TcpClusterBuilder::bind(&cfg.tcp_listen)?;
+            let addr = builder.local_addr()?;
+            println!(
+                "coordinator listening on {addr}; waiting for {} workers \
+                 (start each with `dadm worker --connect {addr}`)",
+                cfg.machines
+            );
+            let mut cluster = builder.accept(cfg.machines)?;
+            // The launcher's local solver is ProxSDCA (paper §10); the
+            // workers must match it.
+            let (loss, solver) = (wire_loss_for(cfg), WireSolver::ProxSdca);
+            let specs = match cfg.synthetic_spec() {
+                Some(spec) => synthetic_specs(
+                    &spec,
+                    cfg.machines,
+                    cfg.seed,
+                    cfg.seed,
+                    cfg.sp,
+                    loss,
+                    solver,
+                ),
+                None => shard_specs(data, part, cfg.seed, cfg.sp, loss, solver),
+            };
+            cluster.assign(specs)?;
+            Cluster::Tcp(TcpHandle::new(cluster))
+        }
+    })
+}
+
 /// Run one experiment according to `cfg`.
 pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunOutcome> {
     let data = cfg.load_dataset()?;
@@ -46,20 +105,22 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunOutcome> {
         alpha: cfg.comm_alpha,
         beta: cfg.comm_beta,
     };
+    let cluster = build_cluster(cfg, &data, &part)?;
     let dadm_opts = DadmOptions {
         sp: cfg.sp,
-        cluster: cfg.cluster,
+        cluster: cluster.clone(),
         cost,
         seed: cfg.seed,
         gap_every: cfg.gap_every,
         sparse_comm: cfg.sparse_comm,
     };
 
-    // Dispatch over loss at this boundary only: the coordinators are
-    // generic, and the smoothed hinge (§8.2) substitutes for the plain
-    // hinge inside the accelerated method. Within a loss, the method
-    // match builds an engine algorithm — the solve loop itself is the
-    // one shared `Driver`.
+    // Loss selection happens exactly once, in `wire_loss_for` (the §8.2
+    // smoothed hinge substitution included), and the coordinator runs on
+    // the resulting `WireLoss` — the *same* value TCP workers are
+    // assigned, so the two sides cannot dispatch to different losses.
+    // The method match builds an engine algorithm — the solve loop
+    // itself is the one shared `Driver`.
     macro_rules! with_loss {
         ($loss:expr) => {{
             let loss = $loss;
@@ -125,7 +186,7 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunOutcome> {
                             cfg.lambda,
                             cfg.mu,
                             cfg.max_passes as usize,
-                            cfg.cluster,
+                            cluster.clone(),
                             cost,
                         );
                         (
@@ -139,19 +200,7 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunOutcome> {
         }};
     }
 
-    Ok(match cfg.loss {
-        LossKind::SmoothHinge => with_loss!(SmoothHinge::default()),
-        LossKind::Logistic => with_loss!(Logistic),
-        LossKind::Hinge => {
-            if cfg.method == Method::AccDadm {
-                // §8.2 / Corollary 13: smooth with γ = ε/L² then accelerate.
-                with_loss!(SmoothHinge::nesterov(cfg.eps))
-            } else {
-                with_loss!(Hinge)
-            }
-        }
-        LossKind::Squared => with_loss!(Squared),
-    })
+    Ok(with_loss!(wire_loss_for(cfg)))
 }
 
 /// Run a boxed algorithm through the shared driver and map the report
@@ -207,26 +256,75 @@ fn outcome_from_report(method: &'static str, report: SolveReport) -> RunOutcome 
     }
 }
 
+/// `dadm worker` subcommand: host one machine's state for a TCP
+/// coordinator until it sends `Shutdown` or disconnects.
+fn worker_main(args: &[String]) -> Result<()> {
+    let mut connect: Option<String> = None;
+    let mut it = args.iter();
+    while let Some(k) = it.next() {
+        match k.as_str() {
+            "--connect" => {
+                connect = Some(
+                    it.next()
+                        .context("missing value for `--connect`")?
+                        .clone(),
+                );
+            }
+            "--help" => {
+                println!(
+                    "dadm worker — one TCP cluster machine\n\n\
+                     USAGE: dadm worker --connect HOST:PORT\n\n\
+                     Connects to a coordinator started with `--cluster tcp`,\n\
+                     receives its partition assignment (a synthetic-data seed\n\
+                     or an explicit shard — training data never moves for\n\
+                     synthetic runs), then serves fused local-step rounds\n\
+                     until the coordinator shuts the fleet down."
+                );
+                return Ok(());
+            }
+            other => bail!("unknown worker flag `{other}` (try `dadm worker --help`)"),
+        }
+    }
+    let addr = connect.context("worker requires `--connect host:port`")?;
+    crate::comm::tcp::run_worker(&addr)
+}
+
 /// Entry point used by `main.rs`.
 pub fn main_with_args(args: &[String]) -> Result<()> {
+    if args.first().map(String::as_str) == Some("worker") {
+        return worker_main(&args[1..]);
+    }
     if args.first().map(String::as_str) == Some("--help") || args.is_empty() {
         println!(
             "dadm — Distributed Alternating Dual Maximization (Zheng et al., 2016)\n\n\
-             USAGE: dadm --key value ...\n\n\
+             USAGE: dadm --key value ...        (coordinator / launcher)\n       \
+             dadm worker --connect HOST:PORT  (TCP cluster worker)\n\n\
              Keys: dataset scale method loss solver lambda mu machines sp eps\n\
-                   max-passes gap-every cluster seed nu comm-alpha comm-beta\n\
-                   sparse-comm checkpoint checkpoint-every resume\n\n\
+                   max-passes gap-every cluster tcp-listen seed nu comm-alpha\n\
+                   comm-beta sparse-comm checkpoint checkpoint-every resume\n\n\
+             --cluster serial|threads|tcp (default serial)\n  \
+             Execution backend for the per-machine local steps. `serial`\n  \
+             and `threads` simulate the cluster in-process; `tcp` is a\n  \
+             real coordinator/worker deployment: the launcher binds\n  \
+             --tcp-listen (default 127.0.0.1:7171, port 0 = ephemeral),\n  \
+             waits for `machines` worker processes started with\n  \
+             `dadm worker --connect HOST:PORT`, and ships each worker its\n  \
+             assignment. Synthetic datasets travel as generator seeds —\n  \
+             training data never crosses the wire — and actual wire bytes\n  \
+             are recorded alongside the modeled comm cost. Iterates are\n  \
+             bit-identical across all three backends.\n\n\
              --gap-every K (default 1)\n  \
              Evaluate the duality gap (a full instrumentation pass) every\n  \
              K rounds instead of every round — recommended at small sp.\n\n\
              --checkpoint PATH / --checkpoint-every K (default 10)\n  \
              Write a resumable solver snapshot to PATH every K rounds\n  \
-             (dadm only). --resume PATH restores such a snapshot before\n  \
-             solving — with the identical dataset/partition/seed/lambda\n  \
-             the resumed run reproduces the uninterrupted trajectory\n  \
-             bit for bit (snapshots carry the mini-batch RNG streams),\n  \
-             and the restored rounds count against max-passes so the\n  \
-             total budget matches an uninterrupted run.\n\n\
+             (dadm only; in-process backends only). --resume PATH restores\n  \
+             such a snapshot before solving — with the identical\n  \
+             dataset/partition/seed/lambda the resumed run reproduces the\n  \
+             uninterrupted trajectory bit for bit (snapshots carry the\n  \
+             mini-batch RNG streams), and the restored rounds count\n  \
+             against max-passes so the total budget matches an\n  \
+             uninterrupted run.\n\n\
              --sparse-comm true|false (default false)\n  \
              The data path always exchanges Δv/Δṽ as sparse index+value\n  \
              messages when their support is small (falling back to dense\n  \
@@ -331,5 +429,14 @@ mod tests {
     #[test]
     fn help_does_not_error() {
         main_with_args(&["--help".to_string()]).unwrap();
+    }
+
+    #[test]
+    fn worker_subcommand_validates_flags() {
+        // Missing --connect and unknown flags are errors before any
+        // network activity; --help succeeds.
+        assert!(main_with_args(&["worker".to_string()]).is_err());
+        assert!(main_with_args(&["worker".to_string(), "--bogus".to_string()]).is_err());
+        main_with_args(&["worker".to_string(), "--help".to_string()]).unwrap();
     }
 }

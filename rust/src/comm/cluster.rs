@@ -1,13 +1,21 @@
 //! Worker execution: run a closure on every machine, serially or on the
 //! persistent worker pool, returning per-worker results plus the modeled
 //! parallel compute time (`max_ℓ t_ℓ` — the machines run concurrently).
+//!
+//! The third backend, [`Cluster::Tcp`], hosts every machine in a real
+//! OS *process* reached over sockets; closures cannot cross that
+//! boundary, so the coordinators route their machine operations through
+//! the typed wire ops of [`super::tcp::TcpHandle`] instead of
+//! [`Cluster::run`] (which panics on the TCP variant by design — any
+//! closure reaching it is a coordinator bug, not a runtime condition).
 
 use std::time::Instant;
 
 use super::pool::WorkerPool;
+use super::tcp::TcpHandle;
 
 /// Execution backend for the per-machine local steps.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug)]
 pub enum Cluster {
     /// Deterministic serial execution; parallel wall-clock is *modeled*
     /// as the max over per-worker compute times.
@@ -15,7 +23,23 @@ pub enum Cluster {
     /// Real OS-thread parallelism on the persistent [`WorkerPool`] (one
     /// long-lived worker per machine, reused across rounds).
     Threads,
+    /// Real multi-process coordinator/worker TCP transport
+    /// (DESIGN.md §9): one OS process per machine, length-prefixed
+    /// binary frames, actual wire bytes recorded.
+    Tcp(TcpHandle),
 }
+
+impl PartialEq for Cluster {
+    fn eq(&self, other: &Self) -> bool {
+        match (self, other) {
+            (Cluster::Serial, Cluster::Serial) | (Cluster::Threads, Cluster::Threads) => true,
+            (Cluster::Tcp(a), Cluster::Tcp(b)) => a.same_cluster(b),
+            _ => false,
+        }
+    }
+}
+
+impl Eq for Cluster {}
 
 /// Outcome of one parallel section.
 #[derive(Debug)]
@@ -29,7 +53,21 @@ pub struct ParallelRun<T> {
 }
 
 impl Cluster {
-    /// Run `f(l, &mut states[l])` for every machine `l`.
+    /// The TCP handle, when this is the TCP backend.
+    pub fn tcp(&self) -> Option<&TcpHandle> {
+        match self {
+            Cluster::Tcp(h) => Some(h),
+            _ => None,
+        }
+    }
+
+    /// Whether this is the multi-process TCP backend.
+    pub fn is_tcp(&self) -> bool {
+        matches!(self, Cluster::Tcp(_))
+    }
+
+    /// Run `f(l, &mut states[l])` for every machine `l` (in-process
+    /// backends only — see the module docs for the TCP variant).
     pub fn run<S, T, F>(&self, states: &mut [S], f: F) -> ParallelRun<T>
     where
         S: Send,
@@ -37,6 +75,10 @@ impl Cluster {
         F: Fn(usize, &mut S) -> T + Sync,
     {
         match self {
+            Cluster::Tcp(_) => panic!(
+                "Cluster::Tcp cannot execute closures; route this operation \
+                 through the TcpHandle wire ops (coordinator bug)"
+            ),
             Cluster::Serial => {
                 let mut results = Vec::with_capacity(states.len());
                 let mut times = Vec::with_capacity(states.len());

@@ -1,24 +1,30 @@
-//! Simulated multi-machine substrate.
+//! The multi-machine substrate: simulated and real.
 //!
 //! The paper runs on an OpenMPI cluster with one process per machine
-//! (§10: "we use one processor to simulate one machine"). We go one level
-//! lighter: one *worker* per machine executed by a persistent thread
-//! [`pool`] ([`cluster`] selects the backend), an explicit [`allreduce`]
-//! implementation whose round structure matches an MPI reduce+broadcast
-//! tree — including the [`sparse`] Δv/Δṽ message form of §6 — and an
-//! alpha-beta [`cost`] model that accounts communication time per round
-//! exactly the way the figures split compute vs. "Comm. Time". All
-//! algorithmic quantities (rounds, bytes moved, gap-vs-communications)
-//! are identical to a real deployment; only wall-clock is modeled, and
-//! both modeled and real wall-clock are recorded.
+//! (§10: "we use one processor to simulate one machine"). Two in-process
+//! backends simulate that — one *worker* per machine executed serially
+//! or by a persistent thread [`pool`] ([`cluster`] selects the backend) —
+//! and a third runs it for real: the [`tcp`] backend hosts every machine
+//! in its own OS process behind the length-prefixed [`wire`] protocol,
+//! with actual wire bytes recorded (DESIGN.md §9). All backends share an
+//! explicit [`allreduce`] implementation whose round structure matches
+//! an MPI reduce+broadcast tree — including the [`sparse`] Δv/Δṽ message
+//! form of §6 — and an alpha-beta [`cost`] model that accounts
+//! communication time per round exactly the way the figures split
+//! compute vs. "Comm. Time". All algorithmic quantities (rounds, bytes
+//! moved, gap-vs-communications) are identical across backends — the
+//! Tcp-vs-Serial parity tests pin them bit for bit.
 
 pub mod allreduce;
 pub mod cluster;
 pub mod cost;
 pub mod pool;
 pub mod sparse;
+pub mod tcp;
+pub mod wire;
 
 pub use cluster::Cluster;
 pub use cost::CostModel;
 pub use pool::WorkerPool;
 pub use sparse::{Delta, SparseDelta};
+pub use tcp::{TcpCluster, TcpClusterBuilder, TcpHandle, WireStats};

@@ -66,19 +66,31 @@ impl SparseDelta {
     }
 }
 
+/// Wire bytes of one stored sparse entry: `u32` index + `f64` value.
+/// The single source of truth for the sparse/dense break-even — used by
+/// the reduce densify rule ([`should_densify`]), the cost-model message
+/// sizing ([`sparse_message_elems`]), and the TCP wire layer's actual
+/// encoding ([`super::wire`]), which all must agree.
+pub const SPARSE_ENTRY_BYTES: usize = 12;
+
+/// Wire bytes of one dense `f64` element.
+pub const DENSE_ENTRY_BYTES: usize = 8;
+
 /// Whether a sparse message of `nnz` stored entries over dimension `dim`
-/// should be sent (and reduced) densely instead: the sparse wire encoding
-/// costs 1.5 dense-equivalent elements per entry (12 B vs 8 B), so the
-/// sparse form stops paying for itself at `nnz ≥ ⅔·d`.
+/// should be sent (and reduced) densely instead: a stored entry costs
+/// [`SPARSE_ENTRY_BYTES`] against [`DENSE_ENTRY_BYTES`] per dense
+/// element (1.5 dense-equivalent elements each), so the sparse form
+/// stops paying for itself at `nnz ≥ ⅔·d`.
 pub fn should_densify(nnz: usize, dim: usize) -> bool {
-    nnz * 3 >= dim * 2
+    nnz * SPARSE_ENTRY_BYTES >= dim * DENSE_ENTRY_BYTES
 }
 
 /// Wire size of a sparse message of `nnz` entries over dimension `dim`,
-/// in dense-equivalent f64 elements: `⌈1.5·nnz⌉` (u32 index + f64 value
-/// per entry), capped at the dense size `dim`.
+/// in dense-equivalent f64 elements:
+/// `⌈nnz · SPARSE_ENTRY_BYTES / DENSE_ENTRY_BYTES⌉` (= `⌈1.5·nnz⌉`),
+/// capped at the dense size `dim`.
 pub fn sparse_message_elems(nnz: usize, dim: usize) -> usize {
-    ((nnz * 3).div_ceil(2)).min(dim)
+    ((nnz * SPARSE_ENTRY_BYTES).div_ceil(DENSE_ENTRY_BYTES)).min(dim)
 }
 
 /// A per-round delta message: dense vector or sparse index/value pairs.
@@ -307,6 +319,30 @@ mod tests {
         assert!(!should_densify(5, 9)); // 7.5 elems < 9
         assert!(should_densify(6, 9)); // 9 elems == 9
         assert!(should_densify(9, 9));
+    }
+
+    #[test]
+    fn densify_and_message_size_share_one_breakeven() {
+        // The densify rule and the cost-model message size must agree at
+        // every (nnz, dim): a message densifies exactly when its sparse
+        // encoding would be at least the dense one — both derived from
+        // the same SPARSE_ENTRY_BYTES / DENSE_ENTRY_BYTES constants.
+        assert_eq!(SPARSE_ENTRY_BYTES, 12);
+        assert_eq!(DENSE_ENTRY_BYTES, 8);
+        for dim in 1..40usize {
+            for nnz in 0..=dim {
+                let sparse_bytes = nnz * SPARSE_ENTRY_BYTES;
+                let dense_bytes = dim * DENSE_ENTRY_BYTES;
+                assert_eq!(should_densify(nnz, dim), sparse_bytes >= dense_bytes);
+                if !should_densify(nnz, dim) {
+                    assert!(sparse_message_elems(nnz, dim) <= dim);
+                    assert_eq!(
+                        sparse_message_elems(nnz, dim),
+                        sparse_bytes.div_ceil(DENSE_ENTRY_BYTES)
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,1040 @@
+//! The multi-process TCP cluster backend (DESIGN.md §9).
+//!
+//! One coordinator process drives `m` worker processes over loopback or
+//! a real network. Each worker hosts exactly one machine's
+//! [`WorkerState`] — built locally from a [`ProblemSpec`], so for
+//! synthetic data **no training examples cross the wire** — and executes
+//! the same fused broadcast-apply + local-step round the in-process
+//! backends run, returning the `Δv_ℓ` message the coordinator's
+//! tree-reduce consumes. Because floats travel as raw bit patterns and
+//! every per-machine quantity (partition, RNG stream, batch size) is
+//! derived from shared seeds, a TCP solve is **bit-identical** to a
+//! `Cluster::Serial` solve of the same problem.
+//!
+//! Handshake (see [`Frame`]):
+//!
+//! ```text
+//! worker                     coordinator
+//!   | -- Hello{magic,ver} ----> |   accept order = machine index
+//!   | <-- Welcome{ver,l,m} ---- |   (mismatch ⇒ Error frame + Err)
+//!   | <-- AssignPartition ----- |
+//!   | --- Ack ---------------->  |
+//! ```
+//!
+//! Failure semantics: handshake and assignment errors are recoverable
+//! `Err`s on the coordinator (a malformed or version-skewed worker never
+//! panics the coordinator); once a solve is in flight, a transport
+//! failure aborts the solve with a descriptive panic — there is no
+//! partial-round recovery, matching the synchronous semantics of
+//! Algorithm 2. Workers exit on `Shutdown`, on coordinator disconnect,
+//! or after reporting an `Error` frame.
+//!
+//! The coordinator records **actual wire bytes** (header + payload, both
+//! directions) in [`WireStats`]; `Dadm::wire_bytes` surfaces them so the
+//! `sparse_comm` α-β cost model can be validated against real traffic.
+
+use anyhow::{bail, ensure, Context, Result};
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::sparse::Delta;
+use super::wire::{
+    shard_data_spec, write_broadcast, write_local_step, BroadcastRef, DataSpec, EvalOp, Frame,
+    ProblemSpec, WireBroadcast, WireLoss, WireReg, WireSolver, WIRE_MAGIC, WIRE_VERSION,
+};
+use crate::data::{Dataset, Partition};
+use crate::solver::{batch_size, machine_rng, run_local_step, WorkerState};
+use crate::utils::Rng;
+
+/// Cumulative transport counters (coordinator side; bytes include the
+/// 5-byte frame header).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WireStats {
+    /// Bytes written to workers.
+    pub bytes_sent: u64,
+    /// Bytes read from workers.
+    pub bytes_received: u64,
+    /// Frames written to workers.
+    pub frames_sent: u64,
+    /// Frames read from workers.
+    pub frames_received: u64,
+}
+
+impl WireStats {
+    /// Total bytes moved in either direction.
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes_sent + self.bytes_received
+    }
+}
+
+/// One framed, buffered, byte-counted connection.
+struct Framed {
+    r: BufReader<TcpStream>,
+    w: BufWriter<TcpStream>,
+    sent: u64,
+    received: u64,
+    frames_sent: u64,
+    frames_received: u64,
+}
+
+impl Framed {
+    fn new(stream: TcpStream) -> Result<Self> {
+        // One small frame per barrier: latency matters, Nagle does not.
+        stream.set_nodelay(true).ok();
+        let r = BufReader::new(stream.try_clone().context("cloning stream")?);
+        Ok(Framed {
+            r,
+            w: BufWriter::new(stream),
+            sent: 0,
+            received: 0,
+            frames_sent: 0,
+            frames_received: 0,
+        })
+    }
+
+    fn send(&mut self, frame: &Frame) -> Result<()> {
+        self.sent += frame.write_to(&mut self.w)? as u64;
+        self.frames_sent += 1;
+        self.w.flush().context("flushing frame")?;
+        Ok(())
+    }
+
+    /// Write one pre-encoded frame (fan-out path: encode once, send the
+    /// same bytes to every worker).
+    fn send_bytes(&mut self, bytes: &[u8]) -> Result<()> {
+        self.w.write_all(bytes).context("writing frame")?;
+        self.sent += bytes.len() as u64;
+        self.frames_sent += 1;
+        self.w.flush().context("flushing frame")?;
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Frame> {
+        let (frame, bytes) = Frame::read_from(&mut self.r)?;
+        self.received += bytes as u64;
+        self.frames_received += 1;
+        Ok(frame)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Coordinator side
+// ---------------------------------------------------------------------
+
+/// A bound-but-not-yet-connected cluster (split from [`TcpCluster`] so
+/// callers can learn the ephemeral port before spawning workers).
+pub struct TcpClusterBuilder {
+    listener: TcpListener,
+}
+
+impl TcpClusterBuilder {
+    /// Bind the coordinator listener (e.g. `"127.0.0.1:0"`).
+    pub fn bind(addr: &str) -> Result<Self> {
+        Ok(TcpClusterBuilder {
+            listener: TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?,
+        })
+    }
+
+    /// The bound address (resolves `:0` to the actual port).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        self.listener.local_addr().context("local_addr")
+    }
+
+    /// Accept and handshake exactly `m` workers (accept order = machine
+    /// index). A worker speaking the wrong magic/version receives an
+    /// `Error` frame and the accept returns `Err` — never panics.
+    pub fn accept(self, m: usize) -> Result<TcpCluster> {
+        ensure!(m >= 1, "need at least one worker");
+        let mut conns = Vec::with_capacity(m);
+        for worker_id in 0..m {
+            let (stream, peer) = self.listener.accept().context("accepting worker")?;
+            let mut conn = Framed::new(stream)?;
+            let hello = conn
+                .recv()
+                .with_context(|| format!("handshake with {peer}"))?;
+            if let Err(e) = hello.expect_hello() {
+                let _ = conn.send(&Frame::Error {
+                    message: format!("{e:#}"),
+                });
+                return Err(e.context(format!("worker {peer} rejected")));
+            }
+            conn.send(&Frame::Welcome {
+                version: WIRE_VERSION,
+                worker_id: worker_id as u32,
+                machines: m as u32,
+            })?;
+            conns.push(conn);
+        }
+        Ok(TcpCluster {
+            conns,
+            shut_down: false,
+        })
+    }
+}
+
+/// The coordinator's view of the worker fleet: one framed connection per
+/// machine, in machine order.
+pub struct TcpCluster {
+    conns: Vec<Framed>,
+    shut_down: bool,
+}
+
+impl std::fmt::Debug for TcpCluster {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TcpCluster")
+            .field("workers", &self.conns.len())
+            .field("stats", &self.stats())
+            .finish()
+    }
+}
+
+impl TcpCluster {
+    /// Number of connected workers `m`.
+    pub fn workers(&self) -> usize {
+        self.conns.len()
+    }
+
+    /// Cumulative transport counters (summed over connections).
+    pub fn stats(&self) -> WireStats {
+        let mut s = WireStats::default();
+        for c in &self.conns {
+            s.bytes_sent += c.sent;
+            s.bytes_received += c.received;
+            s.frames_sent += c.frames_sent;
+            s.frames_received += c.frames_received;
+        }
+        s
+    }
+
+    fn expect_ack(&mut self, l: usize) -> Result<()> {
+        match self.conns[l].recv()? {
+            Frame::Ack => Ok(()),
+            Frame::Error { message } => bail!("worker {l} failed: {message}"),
+            other => bail!("worker {l}: expected Ack, got {other:?}"),
+        }
+    }
+
+    /// Ship one [`ProblemSpec`] per worker (machine order) and await the
+    /// build acknowledgements.
+    pub fn assign(&mut self, specs: Vec<ProblemSpec>) -> Result<()> {
+        ensure!(
+            specs.len() == self.conns.len(),
+            "got {} specs for {} workers",
+            specs.len(),
+            self.conns.len()
+        );
+        for (l, spec) in specs.into_iter().enumerate() {
+            ensure!(
+                spec.worker as usize == l && spec.machines as usize == self.conns.len(),
+                "spec {l} is for worker {}/{} machines",
+                spec.worker,
+                spec.machines
+            );
+            self.conns[l].send(&Frame::AssignPartition(Box::new(spec)))?;
+        }
+        for l in 0..self.conns.len() {
+            self.expect_ack(l).with_context(|| format!("assigning worker {l}"))?;
+        }
+        Ok(())
+    }
+
+    fn send_all_bytes(&mut self, bytes: &[u8]) -> Result<()> {
+        for conn in &mut self.conns {
+            conn.send_bytes(bytes)?;
+        }
+        Ok(())
+    }
+
+    /// Swap every worker's regularizer (Acc-DADM stage transition /
+    /// initial resync).
+    pub fn set_reg(&mut self, reg: &WireReg) -> Result<()> {
+        let mut buf = Vec::new();
+        Frame::SetReg(reg.clone()).write_to(&mut buf)?;
+        self.send_all_bytes(&buf)?;
+        for l in 0..self.conns.len() {
+            self.expect_ack(l)?;
+        }
+        Ok(())
+    }
+
+    /// Apply a value-setting ṽ update on every worker (resync or
+    /// observation flush of a parked `Δṽ`).
+    pub fn broadcast(&mut self, b: BroadcastRef<'_>) -> Result<()> {
+        let mut buf = Vec::new();
+        write_broadcast(&mut buf, b)?;
+        self.send_all_bytes(&buf)?;
+        for l in 0..self.conns.len() {
+            self.expect_ack(l)?;
+        }
+        Ok(())
+    }
+
+    /// One fused round leg: ship the parked broadcast + local-step
+    /// request to every worker, collect the `Δv_ℓ` messages in machine
+    /// order. Workers compute concurrently (real processes); the second
+    /// return is the slowest worker's reported compute seconds — the
+    /// `max_ℓ t_ℓ` the accounting charges as parallel time.
+    pub fn local_step(&mut self, lambda: f64, b: BroadcastRef<'_>) -> Result<(Vec<Delta>, f64)> {
+        let mut buf = Vec::new();
+        write_local_step(&mut buf, lambda, b)?;
+        self.send_all_bytes(&buf)?;
+        let mut deltas = Vec::with_capacity(self.conns.len());
+        let mut parallel_secs = 0.0f64;
+        for (l, conn) in self.conns.iter_mut().enumerate() {
+            match conn.recv().with_context(|| format!("local step reply {l}"))? {
+                Frame::DeltaReply {
+                    delta,
+                    elapsed_secs,
+                } => {
+                    parallel_secs = parallel_secs.max(elapsed_secs);
+                    deltas.push(delta);
+                }
+                Frame::Error { message } => bail!("worker {l} failed: {message}"),
+                other => bail!("worker {l}: expected DeltaReply, got {other:?}"),
+            }
+        }
+        Ok((deltas, parallel_secs))
+    }
+
+    /// Run a scalar instrumentation op on every worker and sum the
+    /// replies in machine order (matching the serial backend's
+    /// summation order bit for bit).
+    pub fn eval_sum(&mut self, op: &EvalOp) -> Result<f64> {
+        let mut buf = Vec::new();
+        Frame::Eval(op.clone()).write_to(&mut buf)?;
+        self.send_all_bytes(&buf)?;
+        let mut sum = 0.0;
+        for (l, conn) in self.conns.iter_mut().enumerate() {
+            match conn.recv()? {
+                Frame::Scalar(x) => sum += x,
+                Frame::Error { message } => bail!("worker {l} failed: {message}"),
+                other => bail!("worker {l}: expected Scalar, got {other:?}"),
+            }
+        }
+        Ok(sum)
+    }
+
+    /// OWL-QN smooth-part oracle: per-worker raw `(grad ‖ loss-sum)`
+    /// vectors in machine order, plus the slowest worker's compute
+    /// seconds.
+    pub fn eval_gradients(&mut self, w: &[f64]) -> Result<(Vec<Vec<f64>>, f64)> {
+        let mut buf = Vec::new();
+        Frame::Eval(EvalOp::GradOracle(w.to_vec())).write_to(&mut buf)?;
+        self.send_all_bytes(&buf)?;
+        let mut grads = Vec::with_capacity(self.conns.len());
+        let mut parallel_secs = 0.0f64;
+        for (l, conn) in self.conns.iter_mut().enumerate() {
+            match conn.recv()? {
+                Frame::Vector { v, elapsed_secs } => {
+                    parallel_secs = parallel_secs.max(elapsed_secs);
+                    grads.push(v);
+                }
+                Frame::Error { message } => bail!("worker {l} failed: {message}"),
+                other => bail!("worker {l}: expected Vector, got {other:?}"),
+            }
+        }
+        Ok((grads, parallel_secs))
+    }
+
+    /// Orderly fleet shutdown (idempotent, best-effort per worker).
+    pub fn shutdown(&mut self) {
+        if self.shut_down {
+            return;
+        }
+        self.shut_down = true;
+        for conn in &mut self.conns {
+            let _ = conn.send(&Frame::Shutdown);
+        }
+    }
+}
+
+impl Drop for TcpCluster {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Shared, cloneable handle to a [`TcpCluster`] — the payload of
+/// [`super::Cluster::Tcp`]. All coordinator wire ops go through
+/// [`TcpHandle::with`], which serializes access (rounds are synchronous;
+/// the lock is never contended in a healthy solve).
+#[derive(Clone)]
+pub struct TcpHandle(Arc<Mutex<TcpCluster>>);
+
+impl TcpHandle {
+    /// Wrap a connected cluster.
+    pub fn new(cluster: TcpCluster) -> Self {
+        TcpHandle(Arc::new(Mutex::new(cluster)))
+    }
+
+    /// Run `f` against the cluster under the lock.
+    pub fn with<T>(&self, f: impl FnOnce(&mut TcpCluster) -> T) -> T {
+        f(&mut self.0.lock().expect("tcp cluster mutex poisoned"))
+    }
+
+    /// Number of connected workers `m`.
+    pub fn workers(&self) -> usize {
+        self.with(|c| c.workers())
+    }
+
+    /// Cumulative transport counters.
+    pub fn stats(&self) -> WireStats {
+        self.with(|c| c.stats())
+    }
+
+    /// Whether two handles refer to the same underlying cluster.
+    pub fn same_cluster(&self, other: &TcpHandle) -> bool {
+        Arc::ptr_eq(&self.0, &other.0)
+    }
+}
+
+impl std::fmt::Debug for TcpHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.0.try_lock() {
+            Ok(c) => write!(f, "TcpHandle(m={})", c.workers()),
+            Err(_) => write!(f, "TcpHandle(<locked>)"),
+        }
+    }
+}
+
+/// Build uniform synthetic-data [`ProblemSpec`]s for every machine —
+/// the zero-data-movement assignment path.
+#[allow(clippy::too_many_arguments)]
+pub fn synthetic_specs(
+    spec: &crate::data::synthetic::SyntheticSpec,
+    machines: usize,
+    part_seed: u64,
+    seed: u64,
+    sp: f64,
+    loss: WireLoss,
+    solver: WireSolver,
+) -> Vec<ProblemSpec> {
+    (0..machines)
+        .map(|l| ProblemSpec {
+            worker: l as u32,
+            machines: machines as u32,
+            seed,
+            part_seed,
+            sp,
+            data: DataSpec::Synthetic(spec.clone()),
+            loss,
+            solver,
+        })
+        .collect()
+}
+
+/// Build explicit-shard [`ProblemSpec`]s (LIBSVM / externally-loaded
+/// data): each worker receives exactly its own rows.
+#[allow(clippy::too_many_arguments)]
+pub fn shard_specs(
+    data: &Dataset,
+    part: &Partition,
+    seed: u64,
+    sp: f64,
+    loss: WireLoss,
+    solver: WireSolver,
+) -> Vec<ProblemSpec> {
+    let m = part.machines();
+    (0..m)
+        .map(|l| ProblemSpec {
+            worker: l as u32,
+            machines: m as u32,
+            seed,
+            part_seed: 0, // unused: the shard is explicit
+            sp,
+            data: shard_data_spec(data, part, l),
+            loss,
+            solver,
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// Worker side
+// ---------------------------------------------------------------------
+
+/// One hosted machine: shard state + private RNG + batch size (the TCP
+/// twin of the coordinator's in-process `Machine`).
+struct HostedMachine {
+    state: WorkerState,
+    rng: Rng,
+    batch: usize,
+}
+
+/// The worker process's event-loop state.
+struct WorkerHost {
+    machine: Option<HostedMachine>,
+    loss: Option<WireLoss>,
+    solver: Option<WireSolver>,
+    /// Current regularizer; pushed by `SetReg` before any use (the
+    /// coordinator's resync precedes every round).
+    reg: Option<WireReg>,
+}
+
+impl WorkerHost {
+    fn new() -> Self {
+        WorkerHost {
+            machine: None,
+            loss: None,
+            solver: None,
+            reg: None,
+        }
+    }
+
+    fn machine(&mut self) -> Result<&mut HostedMachine> {
+        self.machine
+            .as_mut()
+            .context("no partition assigned (AssignPartition must precede this frame)")
+    }
+
+    fn build(&mut self, spec: ProblemSpec) -> Result<()> {
+        let l = spec.worker as usize;
+        let m = spec.machines as usize;
+        let state = match spec.data {
+            DataSpec::Synthetic(s) => {
+                // Regenerate locally; the training data never crossed the
+                // wire. Same generator + same partition seed ⇒ the exact
+                // shard the coordinator's in-process twin holds.
+                let data = s.generate();
+                ensure!(
+                    data.n() >= m,
+                    "synthetic spec too small: n = {} for m = {m}",
+                    data.n()
+                );
+                let part = Partition::balanced(data.n(), m, spec.part_seed);
+                WorkerState::from_partition(&data, &part, l)
+            }
+            DataSpec::Shard {
+                dim,
+                global_indices,
+                rows,
+                y,
+                ..
+            } => WorkerState::from_shard(
+                rows,
+                y,
+                global_indices.into_iter().map(|g| g as usize).collect(),
+                dim as usize,
+            ),
+        };
+        let batch = batch_size(spec.sp, state.n_l());
+        self.machine = Some(HostedMachine {
+            state,
+            rng: machine_rng(spec.seed, l),
+            batch,
+        });
+        self.loss = Some(spec.loss);
+        self.solver = Some(spec.solver);
+        Ok(())
+    }
+
+    fn apply_broadcast(&mut self, b: &WireBroadcast) -> Result<()> {
+        let reg = self.reg.clone().context("no regularizer set")?;
+        let mch = self.machine()?;
+        match b {
+            WireBroadcast::Empty => {}
+            WireBroadcast::SparseSet { idx, val } => {
+                if let Some(&j) = idx.last() {
+                    ensure!(
+                        (j as usize) < mch.state.dim(),
+                        "broadcast index {j} out of bounds (d = {})",
+                        mch.state.dim()
+                    );
+                }
+                mch.state.set_v_tilde_sparse_parts(idx, val, &reg);
+            }
+            WireBroadcast::DenseSet(v) => {
+                ensure!(
+                    v.len() == mch.state.dim(),
+                    "broadcast dimension {} != {}",
+                    v.len(),
+                    mch.state.dim()
+                );
+                mch.state.set_v_tilde(v, &reg);
+            }
+        }
+        Ok(())
+    }
+
+    /// Handle one frame; `Ok(None)` means orderly shutdown.
+    fn handle(&mut self, frame: Frame) -> Result<Option<Frame>> {
+        Ok(Some(match frame {
+            Frame::AssignPartition(spec) => {
+                self.build(*spec)?;
+                Frame::Ack
+            }
+            Frame::SetReg(reg) => {
+                self.reg = Some(reg);
+                Frame::Ack
+            }
+            Frame::Broadcast(b) => {
+                self.apply_broadcast(&b)?;
+                Frame::Ack
+            }
+            Frame::LocalStep { lambda, broadcast } => {
+                ensure!(
+                    lambda.is_finite() && lambda > 0.0,
+                    "λ must be positive and finite, got {lambda}"
+                );
+                let t0 = Instant::now();
+                // Fused section, mirroring the in-process round exactly:
+                // apply the parked Δṽ, then run the local step.
+                self.apply_broadcast(&broadcast)?;
+                let loss = self.loss.context("no loss assigned")?;
+                let solver = self.solver.context("no solver assigned")?;
+                let reg = self.reg.clone().context("no regularizer set")?;
+                let mch = self.machine()?;
+                // Shared with Dadm::round's in-process leg.
+                let delta = run_local_step(
+                    &solver,
+                    &mut mch.state,
+                    &mut mch.rng,
+                    mch.batch,
+                    &loss,
+                    &reg,
+                    lambda,
+                );
+                Frame::DeltaReply {
+                    delta,
+                    elapsed_secs: t0.elapsed().as_secs_f64(),
+                }
+            }
+            Frame::Eval(op) => {
+                let loss = self.loss.context("no loss assigned")?;
+                let mch = self.machine()?;
+                match op {
+                    EvalOp::LossSumAt(w) => {
+                        ensure!(
+                            w.len() == mch.state.dim(),
+                            "eval dimension {} != {}",
+                            w.len(),
+                            mch.state.dim()
+                        );
+                        Frame::Scalar(mch.state.primal_loss_sum(&loss, &w))
+                    }
+                    EvalOp::ConjSum => Frame::Scalar(mch.state.dual_conj_sum(&loss)),
+                    EvalOp::GradOracle(w) => {
+                        let d = mch.state.dim();
+                        ensure!(w.len() == d, "eval dimension {} != {d}", w.len());
+                        // The same fused shard pass the in-process
+                        // OWL-QN oracle runs (`grad_oracle_sums`).
+                        let t0 = Instant::now();
+                        let grad = mch.state.grad_oracle_sums(&loss, &w);
+                        Frame::Vector {
+                            v: grad,
+                            elapsed_secs: t0.elapsed().as_secs_f64(),
+                        }
+                    }
+                }
+            }
+            Frame::Shutdown => return Ok(None),
+            other => bail!("unexpected frame on worker: {other:?}"),
+        }))
+    }
+}
+
+/// Serve one coordinator connection until `Shutdown` or disconnect —
+/// the body of the `dadm worker` subcommand, also hostable on a thread
+/// for in-process tests.
+pub fn serve(stream: TcpStream) -> Result<()> {
+    let mut conn = Framed::new(stream)?;
+    conn.send(&Frame::Hello {
+        magic: WIRE_MAGIC,
+        version: WIRE_VERSION,
+    })?;
+    match conn.recv().context("awaiting Welcome")? {
+        Frame::Welcome { version, .. } => ensure!(
+            version == WIRE_VERSION,
+            "coordinator speaks protocol v{version}, worker v{WIRE_VERSION}"
+        ),
+        Frame::Error { message } => bail!("coordinator rejected handshake: {message}"),
+        other => bail!("expected Welcome, got {other:?}"),
+    }
+    let mut host = WorkerHost::new();
+    loop {
+        let frame = match conn.recv() {
+            Ok(f) => f,
+            // Coordinator went away without Shutdown (crash, test abort):
+            // exit quietly rather than erroring the whole process tree.
+            Err(e) if is_disconnect(&e) => return Ok(()),
+            Err(e) => return Err(e.context("reading coordinator frame")),
+        };
+        match host.handle(frame) {
+            Ok(Some(reply)) => conn.send(&reply)?,
+            Ok(None) => return Ok(()),
+            Err(e) => {
+                let _ = conn.send(&Frame::Error {
+                    message: format!("{e:#}"),
+                });
+                return Err(e);
+            }
+        }
+    }
+}
+
+fn is_disconnect(e: &anyhow::Error) -> bool {
+    // The vendored anyhow shim carries causes as rendered messages, so
+    // classify by the std::io display forms of a dropped peer.
+    e.chain().any(|c| {
+        let c = c.to_ascii_lowercase();
+        c.contains("failed to fill whole buffer") // read_exact at EOF
+            || c.contains("unexpected end of file")
+            || c.contains("connection reset")
+            || c.contains("broken pipe")
+    })
+}
+
+/// `dadm worker --connect host:port` entry point.
+pub fn run_worker(addr: &str) -> Result<()> {
+    let stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting to coordinator {addr}"))?;
+    serve(stream)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::Cluster;
+    use crate::coordinator::{Dadm, DadmOptions};
+    use crate::comm::CostModel;
+    use crate::data::synthetic::SyntheticSpec;
+    use crate::loss::SmoothHinge;
+    use crate::reg::{ElasticNet, Zero};
+    use crate::solver::ProxSdca;
+    use std::thread::JoinHandle;
+
+    /// Spawn `m` in-process worker threads against a loopback
+    /// coordinator — the thread-hosted twin of real `dadm worker`
+    /// processes (the child-process variant lives in
+    /// `rust/tests/tcp_cluster.rs`).
+    fn loopback(m: usize) -> (TcpHandle, Vec<JoinHandle<Result<()>>>) {
+        let builder = TcpClusterBuilder::bind("127.0.0.1:0").unwrap();
+        let addr = builder.local_addr().unwrap();
+        let threads: Vec<_> = (0..m)
+            .map(|_| {
+                std::thread::spawn(move || {
+                    let stream = TcpStream::connect(addr).context("worker connect")?;
+                    serve(stream)
+                })
+            })
+            .collect();
+        let cluster = builder.accept(m).unwrap();
+        (TcpHandle::new(cluster), threads)
+    }
+
+    fn join_workers(handle: TcpHandle, threads: Vec<JoinHandle<Result<()>>>) {
+        handle.with(|c| c.shutdown());
+        drop(handle);
+        for t in threads {
+            t.join().expect("worker thread panicked").expect("worker errored");
+        }
+    }
+
+    fn test_spec() -> SyntheticSpec {
+        SyntheticSpec {
+            name: "tcp-test".into(),
+            n: 160,
+            d: 24,
+            density: 0.4,
+            signal_density: 0.5,
+            noise: 0.1,
+            seed: 0x7C9,
+        }
+    }
+
+    fn build_dadm(
+        data: &Dataset,
+        part: &Partition,
+        cluster: Cluster,
+    ) -> Dadm<SmoothHinge, ElasticNet, Zero, ProxSdca> {
+        Dadm::new(
+            data,
+            part,
+            SmoothHinge::default(),
+            ElasticNet::new(0.1),
+            Zero,
+            1e-2,
+            ProxSdca,
+            DadmOptions {
+                sp: 0.25,
+                cluster,
+                cost: CostModel::default(),
+                seed: 0xDAD_A,
+                gap_every: 1,
+                sparse_comm: true,
+            },
+        )
+    }
+
+    #[test]
+    fn tcp_rounds_match_serial_bit_for_bit() {
+        let spec = test_spec();
+        let data = spec.generate();
+        let part = Partition::balanced(data.n(), 4, 9);
+        let (handle, threads) = loopback(4);
+        handle
+            .with(|c| {
+                c.assign(synthetic_specs(
+                    &spec,
+                    4,
+                    9,
+                    0xDAD_A,
+                    0.25,
+                    WireLoss::SmoothHinge(SmoothHinge::default()),
+                    WireSolver::ProxSdca,
+                ))
+            })
+            .unwrap();
+
+        let mut serial = build_dadm(&data, &part, Cluster::Serial);
+        let mut tcp = build_dadm(&data, &part, Cluster::Tcp(handle.clone()));
+        serial.resync();
+        tcp.resync();
+        for round in 0..6 {
+            let (_, comm_s) = serial.round();
+            let (_, comm_t) = tcp.round();
+            assert_eq!(
+                comm_s.to_bits(),
+                comm_t.to_bits(),
+                "modeled comm diverged at round {round}"
+            );
+            assert_eq!(serial.w(), tcp.w(), "w diverged at round {round}");
+            assert_eq!(serial.v(), tcp.v(), "v diverged at round {round}");
+            assert_eq!(
+                serial.gap().to_bits(),
+                tcp.gap().to_bits(),
+                "gap diverged at round {round}"
+            );
+        }
+        assert!(tcp.wire_bytes() > 0, "no wire traffic recorded");
+        join_workers(handle, threads);
+    }
+
+    #[test]
+    fn explicit_shard_assignment_matches_serial() {
+        // The LIBSVM-style path: workers receive their rows explicitly
+        // (DataSpec::Shard) instead of a generator seed — and must still
+        // be bit-identical to the in-process machines.
+        let spec = test_spec();
+        let data = spec.generate();
+        let part = Partition::balanced(data.n(), 3, 5);
+        let (handle, threads) = loopback(3);
+        handle
+            .with(|c| {
+                c.assign(shard_specs(
+                    &data,
+                    &part,
+                    0xDAD_A,
+                    0.25,
+                    WireLoss::SmoothHinge(SmoothHinge::default()),
+                    WireSolver::ProxSdca,
+                ))
+            })
+            .unwrap();
+        let mut serial = build_dadm(&data, &part, Cluster::Serial);
+        let mut tcp = build_dadm(&data, &part, Cluster::Tcp(handle.clone()));
+        serial.resync();
+        tcp.resync();
+        for round in 0..4 {
+            serial.round();
+            tcp.round();
+            assert_eq!(serial.w(), tcp.w(), "shard-path w diverged at round {round}");
+        }
+        assert_eq!(serial.gap().to_bits(), tcp.gap().to_bits());
+        join_workers(handle, threads);
+    }
+
+    #[test]
+    fn eval_ops_match_local_computation() {
+        let spec = test_spec();
+        let data = spec.generate();
+        let part = Partition::balanced(data.n(), 2, 9);
+        let (handle, threads) = loopback(2);
+        handle
+            .with(|c| {
+                c.assign(synthetic_specs(
+                    &spec,
+                    2,
+                    9,
+                    1,
+                    1.0,
+                    WireLoss::SmoothHinge(SmoothHinge::default()),
+                    WireSolver::ProxSdca,
+                ))
+            })
+            .unwrap();
+        let reg = WireReg::ElasticNet(ElasticNet::new(0.0));
+        handle.with(|c| c.set_reg(&reg)).unwrap();
+        let w = vec![0.05; data.dim()];
+        let got = handle
+            .with(|c| c.eval_sum(&EvalOp::LossSumAt(w.clone())))
+            .unwrap();
+        let loss = SmoothHinge::default();
+        let want: f64 = (0..data.n())
+            .map(|i| crate::loss::Loss::phi(&loss, data.x.row(i).dot(&w), data.y[i]))
+            .sum();
+        assert!((got - want).abs() < 1e-12, "{got} vs {want}");
+        // All-zero duals: conjugate sum must be exactly the φ*(0) sum.
+        let conj = handle.with(|c| c.eval_sum(&EvalOp::ConjSum)).unwrap();
+        let conj_want: f64 = (0..data.n())
+            .map(|i| -crate::loss::Loss::conj_neg(&loss, 0.0, data.y[i]))
+            .sum();
+        assert!((conj - conj_want).abs() < 1e-12);
+        join_workers(handle, threads);
+    }
+
+    #[test]
+    fn acc_dadm_runs_unchanged_over_tcp() {
+        // Acc-DADM exercises the full stage machinery over the wire:
+        // per-stage SetReg (shifted elastic net) + dense resync
+        // broadcasts + λ̃-carrying local steps. Bit parity with Serial.
+        use crate::coordinator::{AccDadm, AccDadmOptions};
+        let spec = test_spec();
+        let data = spec.generate();
+        let part = Partition::balanced(data.n(), 2, 9);
+        let (handle, threads) = loopback(2);
+        handle
+            .with(|c| {
+                c.assign(synthetic_specs(
+                    &spec,
+                    2,
+                    9,
+                    0xACC,
+                    0.5,
+                    WireLoss::SmoothHinge(SmoothHinge::default()),
+                    WireSolver::ProxSdca,
+                ))
+            })
+            .unwrap();
+        let build = |cluster: Cluster| {
+            AccDadm::new(
+                &data,
+                &part,
+                SmoothHinge::default(),
+                Zero,
+                1e-3,
+                1e-5,
+                ProxSdca,
+                AccDadmOptions {
+                    dadm: DadmOptions {
+                        sp: 0.5,
+                        cluster,
+                        cost: CostModel::free(),
+                        seed: 0xACC,
+                        gap_every: 1,
+                        sparse_comm: false,
+                    },
+                    ..Default::default()
+                },
+            )
+        };
+        let mut serial = build(Cluster::Serial);
+        let mut tcp = build(Cluster::Tcp(handle.clone()));
+        let rs = serial.solve(1e-4, 30);
+        let rt = tcp.solve(1e-4, 30);
+        assert_eq!(rs.rounds, rt.rounds);
+        assert_eq!(rs.w, rt.w, "Acc-DADM iterates diverge over TCP");
+        assert_eq!(rs.primal.to_bits(), rt.primal.to_bits());
+        assert_eq!(rs.dual.to_bits(), rt.dual.to_bits());
+        join_workers(handle, threads);
+    }
+
+    #[test]
+    fn owlqn_runs_unchanged_over_tcp() {
+        // The primal baseline's oracle (GradOracle frames) must reduce
+        // to the exact in-process sums.
+        use crate::coordinator::run_owlqn_distributed;
+        use crate::loss::Logistic;
+        let spec = test_spec();
+        let data = spec.generate();
+        let part = Partition::balanced(data.n(), 2, 9);
+        let (handle, threads) = loopback(2);
+        handle
+            .with(|c| {
+                c.assign(synthetic_specs(
+                    &spec,
+                    2,
+                    9,
+                    1,
+                    1.0,
+                    WireLoss::Logistic,
+                    WireSolver::ProxSdca,
+                ))
+            })
+            .unwrap();
+        let serial = run_owlqn_distributed(
+            &data,
+            &part,
+            Logistic,
+            1e-3,
+            1e-4,
+            20,
+            Cluster::Serial,
+            CostModel::free(),
+        );
+        let tcp = run_owlqn_distributed(
+            &data,
+            &part,
+            Logistic,
+            1e-3,
+            1e-4,
+            20,
+            Cluster::Tcp(handle.clone()),
+            CostModel::free(),
+        );
+        assert_eq!(serial.w, tcp.w, "OWL-QN iterates diverge over TCP");
+        assert_eq!(serial.objective.to_bits(), tcp.objective.to_bits());
+        assert_eq!(serial.passes, tcp.passes);
+        join_workers(handle, threads);
+    }
+
+    #[test]
+    fn version_mismatch_is_err_not_panic() {
+        let builder = TcpClusterBuilder::bind("127.0.0.1:0").unwrap();
+        let addr = builder.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let stream = TcpStream::connect(addr).unwrap();
+            let mut conn = Framed::new(stream).unwrap();
+            conn.send(&Frame::Hello {
+                magic: WIRE_MAGIC,
+                version: WIRE_VERSION + 7,
+            })
+            .unwrap();
+            // The coordinator must answer with an Error frame.
+            matches!(conn.recv(), Ok(Frame::Error { .. }))
+        });
+        let err = builder.accept(1);
+        assert!(err.is_err(), "version skew must be rejected");
+        assert!(t.join().unwrap(), "worker did not receive the Error frame");
+    }
+
+    #[test]
+    fn malformed_handshake_is_err_not_panic() {
+        let builder = TcpClusterBuilder::bind("127.0.0.1:0").unwrap();
+        let addr = builder.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            // Garbage bytes instead of a Hello frame.
+            stream.write_all(&[0xFF; 32]).unwrap();
+        });
+        assert!(builder.accept(1).is_err());
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn worker_errors_surface_as_err() {
+        // An Eval before any AssignPartition must come back as a typed
+        // error, not a hang or panic.
+        let (handle, threads) = loopback(1);
+        let res = handle.with(|c| c.eval_sum(&EvalOp::ConjSum));
+        let msg = format!("{:#}", res.unwrap_err());
+        assert!(msg.contains("no"), "unexpected error: {msg}");
+        // The worker exits (with an error) after reporting.
+        drop(handle);
+        for t in threads {
+            assert!(t.join().unwrap().is_err());
+        }
+    }
+}

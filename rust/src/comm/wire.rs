@@ -1,0 +1,1380 @@
+//! Length-prefixed binary wire protocol for the TCP cluster backend
+//! (DESIGN.md §9).
+//!
+//! Every frame is `[tag: u8][len: u32 LE][payload: len bytes]`, all
+//! multi-byte integers and floats little-endian, no external
+//! dependencies. Floats travel as raw `f64` bit patterns, so a value
+//! that crosses the wire is **bit-identical** on the other side — the
+//! property the Tcp-vs-Serial trace-parity tests pin.
+//!
+//! Frame table (C = coordinator, W = worker):
+//!
+//! | tag | frame             | direction | payload |
+//! |-----|-------------------|-----------|---------|
+//! | 0   | `Hello`           | W → C     | magic `b"DADM"`, version |
+//! | 1   | `Welcome`         | C → W     | version, worker id, m |
+//! | 2   | `AssignPartition` | C → W     | [`ProblemSpec`] |
+//! | 3   | `LocalStep`       | C → W     | effective λ + fused [`WireBroadcast`] |
+//! | 4   | `DeltaReply`      | W → C     | [`Delta`] (sparse or dense) + elapsed seconds |
+//! | 5   | `Broadcast`       | C → W     | [`WireBroadcast`] (value-setting ṽ update) |
+//! | 6   | `SetReg`          | C → W     | [`WireReg`] (Acc-DADM stage swaps) |
+//! | 7   | `Eval`            | C → W     | [`EvalOp`] instrumentation request |
+//! | 8   | `Scalar`          | W → C     | one `f64` |
+//! | 9   | `Vector`          | W → C     | `f64` vector + elapsed seconds |
+//! | 10  | `Ack`             | W → C     | empty |
+//! | 11  | `Shutdown`        | C → W     | empty |
+//! | 12  | `Error`           | both      | UTF-8 message |
+//!
+//! Decoding is **total**: malformed input — truncated frames, unknown
+//! tags, oversized length prefixes, inconsistent vector lengths,
+//! non-increasing sparse indices, trailing bytes — returns `Err` and
+//! never panics or makes an attacker-sized allocation ([`MAX_FRAME_LEN`]
+//! caps the length prefix, and every element count is validated against
+//! the bytes actually present before allocating).
+
+use anyhow::{bail, ensure, Context, Result};
+use std::io::{Read, Write};
+
+use crate::comm::sparse::{Delta, SparseDelta};
+use crate::data::synthetic::SyntheticSpec;
+use crate::data::{Dataset, Partition};
+use crate::loss::{Hinge, Logistic, Loss, SmoothHinge, Squared};
+use crate::reg::{ElasticNet, Regularizer, ShiftedElasticNet};
+use crate::solver::{LocalSolver, ProxSdca, TheoremStep, WorkerState};
+
+/// Protocol magic carried by the worker's `Hello`.
+pub const WIRE_MAGIC: [u8; 4] = *b"DADM";
+/// Protocol version; bumped on any incompatible frame change.
+pub const WIRE_VERSION: u16 = 1;
+/// Hard cap on one frame's payload (256 MiB): a corrupt length prefix
+/// must never drive a giant allocation.
+pub const MAX_FRAME_LEN: u32 = 256 << 20;
+/// Fixed per-frame overhead: 1 tag byte + 4 length bytes.
+pub const FRAME_HEADER_BYTES: usize = 5;
+
+// ---------------------------------------------------------------------
+// Byte-level encoder / decoder
+// ---------------------------------------------------------------------
+
+/// Append-only little-endian payload builder.
+#[derive(Default)]
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn u8(&mut self, x: u8) {
+        self.buf.push(x);
+    }
+
+    fn u16(&mut self, x: u16) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    fn u32(&mut self, x: u32) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    fn u64(&mut self, x: u64) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    fn f64(&mut self, x: f64) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    /// Element count prefix (u32 — no in-protocol collection exceeds it,
+    /// and [`MAX_FRAME_LEN`] bounds it anyway).
+    fn count(&mut self, n: usize) {
+        self.u32(u32::try_from(n).expect("collection too large for wire"));
+    }
+
+    fn f64s(&mut self, xs: &[f64]) {
+        self.count(xs.len());
+        self.buf.reserve(xs.len() * 8);
+        for &x in xs {
+            self.f64(x);
+        }
+    }
+
+    fn u32s(&mut self, xs: &[u32]) {
+        self.count(xs.len());
+        self.buf.reserve(xs.len() * 4);
+        for &x in xs {
+            self.u32(x);
+        }
+    }
+
+    fn str(&mut self, s: &str) {
+        self.count(s.len());
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+}
+
+/// Consuming little-endian payload reader; every accessor validates the
+/// remaining length before touching the buffer.
+struct Dec<'a> {
+    buf: &'a [u8],
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Dec { buf }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.buf.len() >= n, "truncated payload: need {n} more bytes");
+        let (head, tail) = self.buf.split_at(n);
+        self.buf = tail;
+        Ok(head)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Element count whose `n · elem_bytes` must fit in the remaining
+    /// payload — rejects inflated counts *before* any allocation.
+    fn count(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.u32()? as usize;
+        ensure!(
+            n.saturating_mul(elem_bytes) <= self.buf.len(),
+            "element count {n} exceeds remaining payload ({} bytes)",
+            self.buf.len()
+        );
+        Ok(n)
+    }
+
+    /// Bulk vector decode: one length check + one contiguous take, then
+    /// a chunked conversion — the per-round hot path for dense
+    /// broadcasts and eval vectors, so no per-element `Result` plumbing.
+    fn f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.count(8)?;
+        let bytes = self.take(n * 8)?;
+        Ok(bytes
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn u32s(&mut self) -> Result<Vec<u32>> {
+        let n = self.count(4)?;
+        let bytes = self.take(n * 4)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.count(1)?;
+        String::from_utf8(self.take(n)?.to_vec()).context("non-UTF-8 string on wire")
+    }
+
+    /// Reject trailing garbage after a fully-decoded payload.
+    fn finish(self) -> Result<()> {
+        ensure!(
+            self.buf.is_empty(),
+            "{} trailing bytes after frame payload",
+            self.buf.len()
+        );
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Wire-serializable problem pieces
+// ---------------------------------------------------------------------
+
+/// Loss functions as they travel in an [`ProblemSpec`] — the concrete
+/// loss zoo behind an enum so the worker process can host the same
+/// generic solvers the coordinator runs.
+#[derive(Clone, Copy, Debug)]
+pub enum WireLoss {
+    /// Smooth hinge (carries its γ — Nesterov-smoothed hinge included).
+    SmoothHinge(SmoothHinge),
+    /// Logistic.
+    Logistic,
+    /// Non-smooth hinge.
+    Hinge,
+    /// Squared loss.
+    Squared,
+}
+
+macro_rules! delegate_loss {
+    ($self:ident, $l:ident => $e:expr) => {
+        match $self {
+            WireLoss::SmoothHinge($l) => $e,
+            WireLoss::Logistic => {
+                let $l = &Logistic;
+                $e
+            }
+            WireLoss::Hinge => {
+                let $l = &Hinge;
+                $e
+            }
+            WireLoss::Squared => {
+                let $l = &Squared;
+                $e
+            }
+        }
+    };
+}
+
+impl Loss for WireLoss {
+    #[inline]
+    fn phi(&self, u: f64, y: f64) -> f64 {
+        delegate_loss!(self, l => l.phi(u, y))
+    }
+
+    #[inline]
+    fn grad(&self, u: f64, y: f64) -> f64 {
+        delegate_loss!(self, l => l.grad(u, y))
+    }
+
+    #[inline]
+    fn conj_neg(&self, alpha: f64, y: f64) -> f64 {
+        delegate_loss!(self, l => l.conj_neg(alpha, y))
+    }
+
+    #[inline]
+    fn coordinate_delta(&self, alpha: f64, u: f64, q: f64, y: f64) -> f64 {
+        delegate_loss!(self, l => l.coordinate_delta(alpha, u, q, y))
+    }
+
+    #[inline]
+    fn theorem_direction(&self, u: f64, y: f64) -> f64 {
+        delegate_loss!(self, l => l.theorem_direction(u, y))
+    }
+
+    fn gamma(&self) -> f64 {
+        delegate_loss!(self, l => l.gamma())
+    }
+
+    fn lipschitz(&self) -> f64 {
+        delegate_loss!(self, l => l.lipschitz())
+    }
+
+    #[inline]
+    fn project_dual(&self, alpha: f64, y: f64) -> f64 {
+        delegate_loss!(self, l => l.project_dual(alpha, y))
+    }
+
+    fn name(&self) -> &'static str {
+        delegate_loss!(self, l => l.name())
+    }
+}
+
+/// Regularizers as they travel in a `SetReg` frame. The worker applies
+/// broadcasts through this, so it must cover every `g` the coordinators
+/// use: the elastic net and the Acc-DADM stage shift.
+#[derive(Clone, Debug)]
+pub enum WireReg {
+    /// Elastic net `½‖w‖² + τ‖w‖₁`.
+    ElasticNet(ElasticNet),
+    /// Linearly-shifted elastic net (Acc-DADM inner stages).
+    Shifted(ShiftedElasticNet),
+}
+
+macro_rules! delegate_reg {
+    ($self:ident, $r:ident => $e:expr) => {
+        match $self {
+            WireReg::ElasticNet($r) => $e,
+            WireReg::Shifted($r) => $e,
+        }
+    };
+}
+
+impl Regularizer for WireReg {
+    fn value(&self, w: &[f64]) -> f64 {
+        delegate_reg!(self, r => r.value(w))
+    }
+
+    fn conj(&self, v: &[f64]) -> f64 {
+        delegate_reg!(self, r => r.conj(v))
+    }
+
+    #[inline]
+    fn grad_conj_at(&self, j: usize, vj: f64) -> f64 {
+        delegate_reg!(self, r => r.grad_conj_at(j, vj))
+    }
+
+    fn grad_conj_into(&self, v: &[f64], w: &mut [f64]) {
+        delegate_reg!(self, r => r.grad_conj_into(v, w))
+    }
+
+    fn strong_convexity(&self) -> f64 {
+        delegate_reg!(self, r => r.strong_convexity())
+    }
+
+    fn name(&self) -> &'static str {
+        delegate_reg!(self, r => r.name())
+    }
+
+    fn wire_spec(&self) -> Option<WireReg> {
+        Some(self.clone())
+    }
+}
+
+/// Local solvers as they travel in a [`ProblemSpec`].
+#[derive(Clone, Copy, Debug)]
+pub enum WireSolver {
+    /// Sequential aggressive ProxSDCA.
+    ProxSdca,
+    /// Theorem-6/7 conservative scaled update with data radius `R`.
+    Theorem {
+        /// Data radius `R ≥ max‖x_i‖²`.
+        radius: f64,
+    },
+}
+
+impl LocalSolver for WireSolver {
+    fn local_step<L: Loss, R: Regularizer>(
+        &self,
+        state: &mut WorkerState,
+        batch: &[usize],
+        loss: &L,
+        reg: &R,
+        lambda_n_l: f64,
+        rng: &mut crate::utils::Rng,
+    ) -> Delta {
+        match self {
+            WireSolver::ProxSdca => ProxSdca.local_step(state, batch, loss, reg, lambda_n_l, rng),
+            WireSolver::Theorem { radius } => TheoremStep { radius: *radius }
+                .local_step(state, batch, loss, reg, lambda_n_l, rng),
+        }
+    }
+}
+
+/// Where the worker's shard comes from. `Synthetic` re-generates the
+/// dataset from its seed on the worker — **no training data crosses the
+/// wire** — while `Shard` ships exactly one machine's rows (LIBSVM /
+/// externally-loaded data).
+#[derive(Clone, Debug)]
+pub enum DataSpec {
+    /// Deterministic synthetic generation + balanced partition; only the
+    /// generator parameters travel.
+    Synthetic(SyntheticSpec),
+    /// Explicit shard payload (this worker's rows only).
+    Shard {
+        /// Total problem size `n` across all machines.
+        n_total: u64,
+        /// Feature dimension `d`.
+        dim: u32,
+        /// Global example indices of the shard rows (debug/trace parity
+        /// with [`WorkerState::from_partition`]).
+        global_indices: Vec<u64>,
+        /// Per-row sparse features `(col, value)`.
+        rows: Vec<Vec<(u32, f64)>>,
+        /// Shard labels.
+        y: Vec<f64>,
+    },
+}
+
+/// Everything a worker process needs to reconstruct machine `l`'s state
+/// bit-identically to the coordinator's in-process [`WorkerState`]: the
+/// data source, the partition/minibatch seeds, and the loss/solver pair.
+#[derive(Clone, Debug)]
+pub struct ProblemSpec {
+    /// Machine index `l` this worker hosts.
+    pub worker: u32,
+    /// Total machine count `m`.
+    pub machines: u32,
+    /// Mini-batch RNG seed (`DadmOptions::seed`).
+    pub seed: u64,
+    /// Balanced-partition seed (`Synthetic` data mode).
+    pub part_seed: u64,
+    /// Sampling fraction `sp`.
+    pub sp: f64,
+    /// Shard source.
+    pub data: DataSpec,
+    /// Loss `φ`.
+    pub loss: WireLoss,
+    /// Local solver.
+    pub solver: WireSolver,
+}
+
+/// Build the explicit-shard [`DataSpec`] for machine `l` (ships only
+/// that machine's rows).
+pub fn shard_data_spec(data: &Dataset, part: &Partition, l: usize) -> DataSpec {
+    let shard = part.shard(l);
+    let rows = shard
+        .iter()
+        .map(|&i| {
+            let row = data.x.row(i);
+            row.indices
+                .iter()
+                .copied()
+                .zip(row.values.iter().copied())
+                .collect()
+        })
+        .collect();
+    DataSpec::Shard {
+        n_total: data.n() as u64,
+        dim: data.dim() as u32,
+        global_indices: shard.iter().map(|&i| i as u64).collect(),
+        rows,
+        y: shard.iter().map(|&i| data.y[i]).collect(),
+    }
+}
+
+/// A value-setting ṽ update as broadcast by the global step (the
+/// message form of `Δṽ`: changed coordinates carried as new values so
+/// worker replicas stay bit-identical to the coordinator).
+#[derive(Clone, Debug, Default)]
+pub enum WireBroadcast {
+    /// Nothing pending.
+    #[default]
+    Empty,
+    /// Sparse value-set at the listed coordinates.
+    SparseSet {
+        /// Touched coordinates, strictly increasing.
+        idx: Vec<u32>,
+        /// New `ṽ` values at those coordinates.
+        val: Vec<f64>,
+    },
+    /// Dense replacement of the full `ṽ`.
+    DenseSet(Vec<f64>),
+}
+
+/// Borrowed view of a broadcast for zero-copy encoding (the per-round
+/// hot path sends straight from the coordinator's reusable buffers).
+#[derive(Clone, Copy, Debug)]
+pub enum BroadcastRef<'a> {
+    /// Nothing pending.
+    Empty,
+    /// Sparse value-set.
+    SparseSet {
+        /// Touched coordinates, strictly increasing.
+        idx: &'a [u32],
+        /// New values.
+        val: &'a [f64],
+    },
+    /// Dense replacement.
+    DenseSet(&'a [f64]),
+}
+
+impl WireBroadcast {
+    /// Borrow as a [`BroadcastRef`] (named to avoid shadowing
+    /// `AsRef::as_ref`).
+    pub fn to_ref(&self) -> BroadcastRef<'_> {
+        match self {
+            WireBroadcast::Empty => BroadcastRef::Empty,
+            WireBroadcast::SparseSet { idx, val } => BroadcastRef::SparseSet { idx, val },
+            WireBroadcast::DenseSet(v) => BroadcastRef::DenseSet(v),
+        }
+    }
+}
+
+/// Instrumentation requests (duality-gap evaluation, OWL-QN oracle).
+#[derive(Clone, Debug)]
+pub enum EvalOp {
+    /// Local primal sum `Σ φ_i(x_iᵀw)` at the given `w`.
+    LossSumAt(Vec<f64>),
+    /// Local conjugate sum `Σ −φ*(−α_i)` at the current duals.
+    ConjSum,
+    /// OWL-QN smooth-part oracle: raw `(Σ x_i φ'_i ‖ Σ φ_i)` as a
+    /// `d + 1` vector.
+    GradOracle(Vec<f64>),
+}
+
+// ---------------------------------------------------------------------
+// Frames
+// ---------------------------------------------------------------------
+
+/// One protocol message (see the module-level frame table).
+#[derive(Clone, Debug)]
+pub enum Frame {
+    /// Worker greeting (magic + version).
+    Hello {
+        /// Must equal [`WIRE_MAGIC`].
+        magic: [u8; 4],
+        /// Must equal [`WIRE_VERSION`].
+        version: u16,
+    },
+    /// Coordinator acceptance.
+    Welcome {
+        /// Coordinator protocol version.
+        version: u16,
+        /// Assigned worker id (accept order).
+        worker_id: u32,
+        /// Total machine count `m`.
+        machines: u32,
+    },
+    /// Shard assignment.
+    AssignPartition(Box<ProblemSpec>),
+    /// Fused broadcast-apply + local step request.
+    LocalStep {
+        /// Effective regularization λ (λ̃ during Acc-DADM stages).
+        lambda: f64,
+        /// The previous round's parked `Δṽ`.
+        broadcast: WireBroadcast,
+    },
+    /// Local-step result.
+    DeltaReply {
+        /// The `Δv_ℓ` message (exactly what the reduce consumes).
+        delta: Delta,
+        /// Worker-side wall-clock seconds for the fused section.
+        elapsed_secs: f64,
+    },
+    /// Standalone ṽ update (resync / observation flush).
+    Broadcast(WireBroadcast),
+    /// Regularizer swap (Acc-DADM stage transitions).
+    SetReg(WireReg),
+    /// Instrumentation request.
+    Eval(EvalOp),
+    /// Scalar reply.
+    Scalar(f64),
+    /// Vector reply (OWL-QN oracle) + worker wall-clock seconds.
+    Vector {
+        /// Payload vector.
+        v: Vec<f64>,
+        /// Worker-side wall-clock seconds.
+        elapsed_secs: f64,
+    },
+    /// Success acknowledgement.
+    Ack,
+    /// Orderly termination request.
+    Shutdown,
+    /// Failure report (either direction).
+    Error {
+        /// Human-readable cause.
+        message: String,
+    },
+}
+
+const TAG_HELLO: u8 = 0;
+const TAG_WELCOME: u8 = 1;
+const TAG_ASSIGN: u8 = 2;
+const TAG_LOCAL_STEP: u8 = 3;
+const TAG_DELTA_REPLY: u8 = 4;
+const TAG_BROADCAST: u8 = 5;
+const TAG_SET_REG: u8 = 6;
+const TAG_EVAL: u8 = 7;
+const TAG_SCALAR: u8 = 8;
+const TAG_VECTOR: u8 = 9;
+const TAG_ACK: u8 = 10;
+const TAG_SHUTDOWN: u8 = 11;
+const TAG_ERROR: u8 = 12;
+
+fn put_broadcast(e: &mut Enc, b: BroadcastRef<'_>) {
+    match b {
+        BroadcastRef::Empty => e.u8(0),
+        BroadcastRef::SparseSet { idx, val } => {
+            e.u8(1);
+            e.u32s(idx);
+            e.f64s(val);
+        }
+        BroadcastRef::DenseSet(v) => {
+            e.u8(2);
+            e.f64s(v);
+        }
+    }
+}
+
+fn take_broadcast(d: &mut Dec<'_>) -> Result<WireBroadcast> {
+    Ok(match d.u8()? {
+        0 => WireBroadcast::Empty,
+        1 => {
+            let idx = d.u32s()?;
+            let val = d.f64s()?;
+            ensure!(
+                idx.len() == val.len(),
+                "broadcast idx/val length mismatch: {} vs {}",
+                idx.len(),
+                val.len()
+            );
+            ensure!(
+                idx.windows(2).all(|w| w[0] < w[1]),
+                "broadcast indices not strictly increasing"
+            );
+            WireBroadcast::SparseSet { idx, val }
+        }
+        2 => WireBroadcast::DenseSet(d.f64s()?),
+        t => bail!("unknown broadcast kind {t}"),
+    })
+}
+
+fn put_delta(e: &mut Enc, delta: &Delta) {
+    match delta {
+        Delta::Dense(v) => {
+            e.u8(0);
+            e.f64s(v);
+        }
+        Delta::Sparse(s) => {
+            e.u8(1);
+            e.u64(s.dim as u64);
+            e.u32s(&s.idx);
+            e.f64s(&s.val);
+        }
+    }
+}
+
+fn take_delta(d: &mut Dec<'_>) -> Result<Delta> {
+    Ok(match d.u8()? {
+        0 => Delta::Dense(d.f64s()?),
+        1 => {
+            let dim = d.u64()? as usize;
+            let idx = d.u32s()?;
+            let val = d.f64s()?;
+            ensure!(
+                idx.len() == val.len(),
+                "delta idx/val length mismatch: {} vs {}",
+                idx.len(),
+                val.len()
+            );
+            ensure!(
+                idx.windows(2).all(|w| w[0] < w[1]),
+                "delta indices not strictly increasing"
+            );
+            if let Some(&j) = idx.last() {
+                ensure!((j as usize) < dim, "delta index {j} out of bounds (d = {dim})");
+            }
+            Delta::Sparse(SparseDelta { dim, idx, val })
+        }
+        t => bail!("unknown delta kind {t}"),
+    })
+}
+
+fn put_loss(e: &mut Enc, loss: &WireLoss) {
+    match loss {
+        WireLoss::SmoothHinge(sh) => {
+            e.u8(0);
+            e.f64(sh.gamma());
+        }
+        WireLoss::Logistic => e.u8(1),
+        WireLoss::Hinge => e.u8(2),
+        WireLoss::Squared => e.u8(3),
+    }
+}
+
+fn take_loss(d: &mut Dec<'_>) -> Result<WireLoss> {
+    Ok(match d.u8()? {
+        0 => {
+            let gamma = d.f64()?;
+            ensure!(
+                gamma.is_finite() && gamma > 0.0,
+                "smooth hinge γ must be positive and finite, got {gamma}"
+            );
+            WireLoss::SmoothHinge(SmoothHinge::new(gamma))
+        }
+        1 => WireLoss::Logistic,
+        2 => WireLoss::Hinge,
+        3 => WireLoss::Squared,
+        t => bail!("unknown loss kind {t}"),
+    })
+}
+
+fn put_reg(e: &mut Enc, reg: &WireReg) {
+    match reg {
+        WireReg::ElasticNet(en) => {
+            e.u8(0);
+            e.f64(en.tau());
+        }
+        WireReg::Shifted(s) => {
+            e.u8(1);
+            e.f64(s.base().tau());
+            e.f64s(s.shift());
+        }
+    }
+}
+
+fn take_tau(d: &mut Dec<'_>) -> Result<f64> {
+    // `ElasticNet::new` asserts; validate first so corrupt input stays Err.
+    let tau = d.f64()?;
+    ensure!(
+        tau.is_finite() && tau >= 0.0,
+        "τ must be finite and ≥ 0, got {tau}"
+    );
+    Ok(tau)
+}
+
+fn take_reg(d: &mut Dec<'_>) -> Result<WireReg> {
+    Ok(match d.u8()? {
+        0 => WireReg::ElasticNet(ElasticNet::new(take_tau(d)?)),
+        1 => {
+            let tau = take_tau(d)?;
+            let shift = d.f64s()?;
+            WireReg::Shifted(ShiftedElasticNet::new(ElasticNet::new(tau), shift))
+        }
+        t => bail!("unknown regularizer kind {t}"),
+    })
+}
+
+fn put_solver(e: &mut Enc, solver: &WireSolver) {
+    match solver {
+        WireSolver::ProxSdca => e.u8(0),
+        WireSolver::Theorem { radius } => {
+            e.u8(1);
+            e.f64(*radius);
+        }
+    }
+}
+
+fn take_solver(d: &mut Dec<'_>) -> Result<WireSolver> {
+    Ok(match d.u8()? {
+        0 => WireSolver::ProxSdca,
+        1 => WireSolver::Theorem { radius: d.f64()? },
+        t => bail!("unknown solver kind {t}"),
+    })
+}
+
+fn put_spec(e: &mut Enc, spec: &ProblemSpec) {
+    e.u32(spec.worker);
+    e.u32(spec.machines);
+    e.u64(spec.seed);
+    e.u64(spec.part_seed);
+    e.f64(spec.sp);
+    put_loss(e, &spec.loss);
+    put_solver(e, &spec.solver);
+    match &spec.data {
+        DataSpec::Synthetic(s) => {
+            e.u8(0);
+            e.str(&s.name);
+            e.u64(s.n as u64);
+            e.u64(s.d as u64);
+            e.f64(s.density);
+            e.f64(s.signal_density);
+            e.f64(s.noise);
+            e.u64(s.seed);
+        }
+        DataSpec::Shard {
+            n_total,
+            dim,
+            global_indices,
+            rows,
+            y,
+        } => {
+            e.u8(1);
+            e.u64(*n_total);
+            e.u32(*dim);
+            e.count(global_indices.len());
+            for &g in global_indices {
+                e.u64(g);
+            }
+            e.count(rows.len());
+            for row in rows {
+                e.count(row.len());
+                for &(j, v) in row {
+                    e.u32(j);
+                    e.f64(v);
+                }
+            }
+            e.f64s(y);
+        }
+    }
+}
+
+fn take_spec(d: &mut Dec<'_>) -> Result<ProblemSpec> {
+    let worker = d.u32()?;
+    let machines = d.u32()?;
+    ensure!(machines >= 1, "machine count must be ≥ 1");
+    ensure!(
+        worker < machines,
+        "worker index {worker} out of range for m = {machines}"
+    );
+    let seed = d.u64()?;
+    let part_seed = d.u64()?;
+    let sp = d.f64()?;
+    ensure!(
+        sp > 0.0 && sp <= 1.0,
+        "sampling fraction must be in (0, 1], got {sp}"
+    );
+    let loss = take_loss(d)?;
+    let solver = take_solver(d)?;
+    let data = match d.u8()? {
+        0 => DataSpec::Synthetic(SyntheticSpec {
+            name: d.str()?,
+            n: d.u64()? as usize,
+            d: d.u64()? as usize,
+            density: d.f64()?,
+            signal_density: d.f64()?,
+            noise: d.f64()?,
+            seed: d.u64()?,
+        }),
+        1 => {
+            let n_total = d.u64()?;
+            let dim = d.u32()?;
+            let n_gi = d.count(8)?;
+            let global_indices: Vec<u64> = (0..n_gi).map(|_| d.u64()).collect::<Result<_>>()?;
+            let n_rows = d.count(4)?;
+            let mut rows = Vec::with_capacity(n_rows);
+            for _ in 0..n_rows {
+                let nnz = d.count(12)?;
+                let mut row = Vec::with_capacity(nnz);
+                for _ in 0..nnz {
+                    let j = d.u32()?;
+                    ensure!(j < dim, "shard column {j} out of bounds (d = {dim})");
+                    row.push((j, d.f64()?));
+                }
+                rows.push(row);
+            }
+            let y = d.f64s()?;
+            ensure!(
+                rows.len() == y.len() && rows.len() == global_indices.len(),
+                "shard rows/labels/indices length mismatch: {}/{}/{}",
+                rows.len(),
+                y.len(),
+                global_indices.len()
+            );
+            DataSpec::Shard {
+                n_total,
+                dim,
+                global_indices,
+                rows,
+                y,
+            }
+        }
+        t => bail!("unknown data spec kind {t}"),
+    };
+    Ok(ProblemSpec {
+        worker,
+        machines,
+        seed,
+        part_seed,
+        sp,
+        data,
+        loss,
+        solver,
+    })
+}
+
+fn put_eval(e: &mut Enc, op: &EvalOp) {
+    match op {
+        EvalOp::LossSumAt(w) => {
+            e.u8(0);
+            e.f64s(w);
+        }
+        EvalOp::ConjSum => e.u8(1),
+        EvalOp::GradOracle(w) => {
+            e.u8(2);
+            e.f64s(w);
+        }
+    }
+}
+
+fn take_eval(d: &mut Dec<'_>) -> Result<EvalOp> {
+    Ok(match d.u8()? {
+        0 => EvalOp::LossSumAt(d.f64s()?),
+        1 => EvalOp::ConjSum,
+        2 => EvalOp::GradOracle(d.f64s()?),
+        t => bail!("unknown eval op {t}"),
+    })
+}
+
+fn write_framed<W: Write>(w: &mut W, tag: u8, payload: &[u8]) -> Result<usize> {
+    ensure!(
+        payload.len() <= MAX_FRAME_LEN as usize,
+        "frame payload too large: {} bytes",
+        payload.len()
+    );
+    w.write_all(&[tag])?;
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    Ok(FRAME_HEADER_BYTES + payload.len())
+}
+
+/// Encode a `LocalStep` frame straight from borrowed buffers (the
+/// per-round hot path — no owned [`WireBroadcast`] clone). Byte-for-byte
+/// identical to encoding [`Frame::LocalStep`].
+pub fn write_local_step<W: Write>(w: &mut W, lambda: f64, b: BroadcastRef<'_>) -> Result<usize> {
+    let mut e = Enc::default();
+    e.f64(lambda);
+    put_broadcast(&mut e, b);
+    write_framed(w, TAG_LOCAL_STEP, &e.buf)
+}
+
+/// Encode a `Broadcast` frame from borrowed buffers (see
+/// [`write_local_step`]).
+pub fn write_broadcast<W: Write>(w: &mut W, b: BroadcastRef<'_>) -> Result<usize> {
+    let mut e = Enc::default();
+    put_broadcast(&mut e, b);
+    write_framed(w, TAG_BROADCAST, &e.buf)
+}
+
+impl Frame {
+    /// Serialize onto `w`; returns the exact number of bytes written
+    /// (header + payload) — the quantity the wire-byte accounting records.
+    pub fn write_to<W: Write>(&self, w: &mut W) -> Result<usize> {
+        let mut e = Enc::default();
+        let tag = match self {
+            Frame::Hello { magic, version } => {
+                e.buf.extend_from_slice(magic);
+                e.u16(*version);
+                TAG_HELLO
+            }
+            Frame::Welcome {
+                version,
+                worker_id,
+                machines,
+            } => {
+                e.u16(*version);
+                e.u32(*worker_id);
+                e.u32(*machines);
+                TAG_WELCOME
+            }
+            Frame::AssignPartition(spec) => {
+                put_spec(&mut e, spec);
+                TAG_ASSIGN
+            }
+            Frame::LocalStep { lambda, broadcast } => {
+                e.f64(*lambda);
+                put_broadcast(&mut e, broadcast.to_ref());
+                TAG_LOCAL_STEP
+            }
+            Frame::DeltaReply {
+                delta,
+                elapsed_secs,
+            } => {
+                put_delta(&mut e, delta);
+                e.f64(*elapsed_secs);
+                TAG_DELTA_REPLY
+            }
+            Frame::Broadcast(b) => {
+                put_broadcast(&mut e, b.to_ref());
+                TAG_BROADCAST
+            }
+            Frame::SetReg(reg) => {
+                put_reg(&mut e, reg);
+                TAG_SET_REG
+            }
+            Frame::Eval(op) => {
+                put_eval(&mut e, op);
+                TAG_EVAL
+            }
+            Frame::Scalar(x) => {
+                e.f64(*x);
+                TAG_SCALAR
+            }
+            Frame::Vector { v, elapsed_secs } => {
+                e.f64s(v);
+                e.f64(*elapsed_secs);
+                TAG_VECTOR
+            }
+            Frame::Ack => TAG_ACK,
+            Frame::Shutdown => TAG_SHUTDOWN,
+            Frame::Error { message } => {
+                e.str(message);
+                TAG_ERROR
+            }
+        };
+        write_framed(w, tag, &e.buf)
+    }
+
+    /// Read one frame; `Err` (never a panic) on truncation, unknown
+    /// tags, oversized lengths, or any payload inconsistency. The second
+    /// tuple element is the exact number of bytes consumed.
+    pub fn read_from<R: Read>(r: &mut R) -> Result<(Frame, usize)> {
+        let mut header = [0u8; FRAME_HEADER_BYTES];
+        r.read_exact(&mut header).context("reading frame header")?;
+        let tag = header[0];
+        let len = u32::from_le_bytes(header[1..5].try_into().unwrap());
+        ensure!(
+            len <= MAX_FRAME_LEN,
+            "frame length {len} exceeds protocol cap {MAX_FRAME_LEN}"
+        );
+        let mut payload = vec![0u8; len as usize];
+        r.read_exact(&mut payload).context("reading frame payload")?;
+        let frame = Self::decode(tag, &payload)?;
+        Ok((frame, FRAME_HEADER_BYTES + len as usize))
+    }
+
+    fn decode(tag: u8, payload: &[u8]) -> Result<Frame> {
+        let mut d = Dec::new(payload);
+        let frame = match tag {
+            TAG_HELLO => Frame::Hello {
+                magic: d.take(4)?.try_into().unwrap(),
+                version: d.u16()?,
+            },
+            TAG_WELCOME => Frame::Welcome {
+                version: d.u16()?,
+                worker_id: d.u32()?,
+                machines: d.u32()?,
+            },
+            TAG_ASSIGN => Frame::AssignPartition(Box::new(take_spec(&mut d)?)),
+            TAG_LOCAL_STEP => Frame::LocalStep {
+                lambda: d.f64()?,
+                broadcast: take_broadcast(&mut d)?,
+            },
+            TAG_DELTA_REPLY => Frame::DeltaReply {
+                delta: take_delta(&mut d)?,
+                elapsed_secs: d.f64()?,
+            },
+            TAG_BROADCAST => Frame::Broadcast(take_broadcast(&mut d)?),
+            TAG_SET_REG => Frame::SetReg(take_reg(&mut d)?),
+            TAG_EVAL => Frame::Eval(take_eval(&mut d)?),
+            TAG_SCALAR => Frame::Scalar(d.f64()?),
+            TAG_VECTOR => Frame::Vector {
+                v: d.f64s()?,
+                elapsed_secs: d.f64()?,
+            },
+            TAG_ACK => Frame::Ack,
+            TAG_SHUTDOWN => Frame::Shutdown,
+            TAG_ERROR => Frame::Error { message: d.str()? },
+            t => bail!("unknown frame tag {t}"),
+        };
+        d.finish()?;
+        Ok(frame)
+    }
+
+    /// Validate a worker greeting; version/magic mismatches are `Err`.
+    pub fn expect_hello(&self) -> Result<()> {
+        match self {
+            Frame::Hello { magic, version } => {
+                ensure!(
+                    *magic == WIRE_MAGIC,
+                    "bad protocol magic {magic:?} (expected {WIRE_MAGIC:?})"
+                );
+                ensure!(
+                    *version == WIRE_VERSION,
+                    "protocol version mismatch: worker speaks v{version}, coordinator v{WIRE_VERSION}"
+                );
+                Ok(())
+            }
+            other => bail!("expected Hello, got {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::{for_each_case, Gen};
+    use std::io::Cursor;
+
+    fn encode(f: &Frame) -> Vec<u8> {
+        let mut buf = Vec::new();
+        let n = f.write_to(&mut buf).unwrap();
+        assert_eq!(n, buf.len(), "write_to must report exact bytes");
+        buf
+    }
+
+    fn roundtrip(f: &Frame) -> Frame {
+        let bytes = encode(f);
+        let (decoded, consumed) = Frame::read_from(&mut Cursor::new(&bytes)).unwrap();
+        assert_eq!(consumed, bytes.len(), "read_from must report exact bytes");
+        // Re-encoding the decoded frame must be byte-identical — the
+        // equality notion that matters on a wire.
+        assert_eq!(encode(&decoded), bytes, "re-encode differs for {f:?}");
+        decoded
+    }
+
+    fn gen_broadcast(g: &mut Gen) -> WireBroadcast {
+        match g.usize_in(0, 3) {
+            0 => WireBroadcast::Empty,
+            1 => {
+                let n = g.usize_in(0, 12);
+                let mut idx: Vec<u32> = (0..n).map(|_| g.usize_in(0, 64) as u32).collect();
+                idx.sort_unstable();
+                idx.dedup();
+                let val = g.vec_f64(idx.len(), -5.0, 5.0);
+                WireBroadcast::SparseSet { idx, val }
+            }
+            _ => WireBroadcast::DenseSet(g.vec_f64(g.usize_in(0, 16), -5.0, 5.0)),
+        }
+    }
+
+    fn gen_delta(g: &mut Gen) -> Delta {
+        if g.bool(0.5) {
+            // Dense, including the empty vector.
+            Delta::Dense(g.vec_f64(g.usize_in(0, 20), -3.0, 3.0))
+        } else {
+            // Sparse, including the empty (nnz = 0) delta.
+            let dim = g.usize_in(1, 40);
+            let nnz = g.usize_in(0, dim.min(8) + 1);
+            let mut idx: Vec<u32> = g
+                .rng()
+                .sample_indices(dim, nnz)
+                .into_iter()
+                .map(|j| j as u32)
+                .collect();
+            idx.sort_unstable();
+            let val = g.vec_f64(idx.len(), -3.0, 3.0);
+            Delta::Sparse(SparseDelta { dim, idx, val })
+        }
+    }
+
+    fn gen_spec(g: &mut Gen) -> ProblemSpec {
+        let machines = g.usize_in(1, 8) as u32;
+        let data = if g.bool(0.5) {
+            DataSpec::Synthetic(SyntheticSpec {
+                name: "prop".into(),
+                n: g.usize_in(8, 200),
+                d: g.usize_in(1, 32),
+                density: g.f64_in(0.05, 1.0),
+                signal_density: g.f64_in(0.05, 1.0),
+                noise: g.f64_in(0.0, 0.4),
+                seed: g.rng().next_u64(),
+            })
+        } else {
+            let dim = g.usize_in(1, 16) as u32;
+            let n_rows = g.usize_in(0, 6);
+            let rows: Vec<Vec<(u32, f64)>> = (0..n_rows)
+                .map(|_| {
+                    let nnz = g.usize_in(0, dim as usize + 1);
+                    let mut cols = g.rng().sample_indices(dim as usize, nnz);
+                    cols.sort_unstable();
+                    cols.into_iter()
+                        .map(|j| (j as u32, g.f64_in(-2.0, 2.0)))
+                        .collect()
+                })
+                .collect();
+            DataSpec::Shard {
+                n_total: g.usize_in(n_rows.max(1), 500) as u64,
+                dim,
+                global_indices: (0..n_rows as u64).collect(),
+                y: g.vec_f64(n_rows, -1.0, 1.0),
+                rows,
+            }
+        };
+        ProblemSpec {
+            worker: g.usize_in(0, machines as usize) as u32,
+            machines,
+            seed: g.rng().next_u64(),
+            part_seed: g.rng().next_u64(),
+            sp: g.f64_in(0.01, 1.0),
+            data,
+            loss: match g.usize_in(0, 4) {
+                0 => WireLoss::SmoothHinge(SmoothHinge::new(g.f64_log_in(1e-6, 10.0))),
+                1 => WireLoss::Logistic,
+                2 => WireLoss::Hinge,
+                _ => WireLoss::Squared,
+            },
+            solver: if g.bool(0.5) {
+                WireSolver::ProxSdca
+            } else {
+                WireSolver::Theorem {
+                    radius: g.f64_in(0.1, 4.0),
+                }
+            },
+        }
+    }
+
+    #[test]
+    fn prop_every_frame_roundtrips() {
+        for_each_case(0x71C9, 120, |g| {
+            let frame = match g.usize_in(0, 13) {
+                0 => Frame::Hello {
+                    magic: WIRE_MAGIC,
+                    version: WIRE_VERSION,
+                },
+                1 => Frame::Welcome {
+                    version: WIRE_VERSION,
+                    worker_id: g.usize_in(0, 64) as u32,
+                    machines: g.usize_in(1, 64) as u32,
+                },
+                2 => Frame::AssignPartition(Box::new(gen_spec(g))),
+                3 => Frame::LocalStep {
+                    lambda: g.f64_log_in(1e-9, 1.0),
+                    broadcast: gen_broadcast(g),
+                },
+                4 => Frame::DeltaReply {
+                    delta: gen_delta(g),
+                    elapsed_secs: g.f64_in(0.0, 1.0),
+                },
+                5 => Frame::Broadcast(gen_broadcast(g)),
+                6 => Frame::SetReg(if g.bool(0.5) {
+                    WireReg::ElasticNet(ElasticNet::new(g.f64_in(0.0, 2.0)))
+                } else {
+                    WireReg::Shifted(ShiftedElasticNet::new(
+                        ElasticNet::new(g.f64_in(0.0, 2.0)),
+                        g.vec_f64(g.usize_in(0, 10), -2.0, 2.0),
+                    ))
+                }),
+                7 => Frame::Eval(match g.usize_in(0, 3) {
+                    0 => EvalOp::LossSumAt(g.vec_f64(g.usize_in(0, 12), -2.0, 2.0)),
+                    1 => EvalOp::ConjSum,
+                    _ => EvalOp::GradOracle(g.vec_f64(g.usize_in(0, 12), -2.0, 2.0)),
+                }),
+                8 => Frame::Scalar(g.f64_in(-1e6, 1e6)),
+                9 => Frame::Vector {
+                    v: g.vec_f64(g.usize_in(0, 20), -10.0, 10.0),
+                    elapsed_secs: g.f64_in(0.0, 2.0),
+                },
+                10 => Frame::Ack,
+                11 => Frame::Shutdown,
+                _ => Frame::Error {
+                    message: "ü message with µnicode".into(),
+                },
+            };
+            roundtrip(&frame);
+        });
+    }
+
+    #[test]
+    fn empty_and_dense_fallback_deltas_roundtrip() {
+        // The two boundary messages DESIGN.md §7 cares about: an empty
+        // sparse delta (no coordinate touched) and the dense fallback.
+        for delta in [
+            Delta::Sparse(SparseDelta {
+                dim: 100,
+                idx: vec![],
+                val: vec![],
+            }),
+            Delta::Dense(vec![0.5; 100]),
+            Delta::Dense(vec![]),
+        ] {
+            let f = Frame::DeltaReply {
+                delta,
+                elapsed_secs: 0.25,
+            };
+            roundtrip(&f);
+        }
+    }
+
+    #[test]
+    fn zero_copy_encoders_match_owned_frames() {
+        let idx = vec![1u32, 5, 9];
+        let val = vec![0.5, -1.0, 2.0];
+        let owned = Frame::LocalStep {
+            lambda: 1e-3,
+            broadcast: WireBroadcast::SparseSet {
+                idx: idx.clone(),
+                val: val.clone(),
+            },
+        };
+        let mut borrowed = Vec::new();
+        write_local_step(
+            &mut borrowed,
+            1e-3,
+            BroadcastRef::SparseSet {
+                idx: &idx,
+                val: &val,
+            },
+        )
+        .unwrap();
+        assert_eq!(encode(&owned), borrowed);
+
+        let dense = vec![1.0, 2.0, 3.0];
+        let owned = Frame::Broadcast(WireBroadcast::DenseSet(dense.clone()));
+        let mut borrowed = Vec::new();
+        write_broadcast(&mut borrowed, BroadcastRef::DenseSet(&dense)).unwrap();
+        assert_eq!(encode(&owned), borrowed);
+    }
+
+    #[test]
+    fn prop_truncation_is_err_never_panic() {
+        for_each_case(0x7A61, 80, |g| {
+            let frame = Frame::DeltaReply {
+                delta: gen_delta(g),
+                elapsed_secs: 0.1,
+            };
+            let bytes = encode(&frame);
+            let cut = g.usize_in(0, bytes.len());
+            if cut == bytes.len() {
+                return;
+            }
+            assert!(
+                Frame::read_from(&mut Cursor::new(&bytes[..cut])).is_err(),
+                "truncated frame at {cut}/{} decoded",
+                bytes.len()
+            );
+        });
+    }
+
+    #[test]
+    fn prop_corrupted_frames_never_panic() {
+        // Flipping any byte must yield Ok (benign payload flip) or Err —
+        // never a panic or a huge allocation. for_each_case re-raises
+        // panics, so reaching the end is the assertion.
+        for_each_case(0xF177, 120, |g| {
+            let frame = Frame::AssignPartition(Box::new(gen_spec(g)));
+            let mut bytes = encode(&frame);
+            let pos = g.usize_in(0, bytes.len());
+            let bit = g.usize_in(0, 8);
+            bytes[pos] ^= 1 << bit;
+            let _ = Frame::read_from(&mut Cursor::new(&bytes));
+        });
+    }
+
+    #[test]
+    fn prop_random_garbage_never_panics() {
+        for_each_case(0x6A5B, 150, |g| {
+            let n = g.usize_in(0, 64);
+            let bytes = g.bytes(n);
+            let _ = Frame::read_from(&mut Cursor::new(&bytes));
+        });
+    }
+
+    #[test]
+    fn unknown_tag_and_oversized_length_are_err() {
+        // Unknown tag.
+        let bad_tag = [200u8, 0, 0, 0, 0];
+        assert!(Frame::read_from(&mut Cursor::new(&bad_tag)).is_err());
+        // Length prefix past the protocol cap — must be rejected before
+        // any allocation.
+        let mut oversized = vec![TAG_ACK];
+        oversized.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(Frame::read_from(&mut Cursor::new(&oversized)).is_err());
+        // Trailing garbage after a valid payload.
+        let trailing = vec![TAG_ACK, 3, 0, 0, 0, 1, 2, 3];
+        assert!(Frame::read_from(&mut Cursor::new(&trailing)).is_err());
+        // Inflated element count inside a well-formed frame.
+        let mut inflated = vec![TAG_SCALAR];
+        inflated.extend_from_slice(&4u32.to_le_bytes());
+        inflated.extend_from_slice(&[1, 2, 3, 4]); // not 8 bytes of f64
+        assert!(Frame::read_from(&mut Cursor::new(&inflated)).is_err());
+    }
+
+    #[test]
+    fn version_and_magic_mismatch_are_err() {
+        Frame::Hello {
+            magic: WIRE_MAGIC,
+            version: WIRE_VERSION,
+        }
+        .expect_hello()
+        .unwrap();
+        assert!(Frame::Hello {
+            magic: WIRE_MAGIC,
+            version: WIRE_VERSION + 1,
+        }
+        .expect_hello()
+        .is_err());
+        assert!(Frame::Hello {
+            magic: *b"XXXX",
+            version: WIRE_VERSION,
+        }
+        .expect_hello()
+        .is_err());
+        assert!(Frame::Ack.expect_hello().is_err());
+    }
+
+    #[test]
+    fn shard_spec_carries_exactly_one_machine() {
+        let data = crate::data::synthetic::tiny_classification(30, 6, 5);
+        let part = Partition::balanced(30, 3, 5);
+        let spec = shard_data_spec(&data, &part, 1);
+        match &spec {
+            DataSpec::Shard {
+                n_total,
+                dim,
+                global_indices,
+                rows,
+                y,
+            } => {
+                assert_eq!(*n_total, 30);
+                assert_eq!(*dim, 6);
+                assert_eq!(rows.len(), part.shard_size(1));
+                assert_eq!(y.len(), rows.len());
+                assert_eq!(global_indices.len(), rows.len());
+            }
+            _ => panic!("expected shard spec"),
+        }
+    }
+}

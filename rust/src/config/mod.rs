@@ -6,11 +6,37 @@
 //! method — parsed from CLI `--key value` pairs or a `key = value` file,
 //! with validation and defaults matching §10.
 
-use crate::comm::Cluster;
 use crate::loss::LossKind;
 use crate::solver::SolverKind;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
+
+/// Which execution backend the launcher should build. `Serial` and
+/// `Threads` map directly onto [`crate::comm::Cluster`] variants; `Tcp`
+/// makes the launcher bind `tcp_listen`, wait for `machines` worker
+/// processes (`dadm worker --connect host:port`), and assign them their
+/// partitions before solving.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClusterKind {
+    /// Deterministic in-process serial execution.
+    Serial,
+    /// In-process thread-pool parallelism.
+    Threads,
+    /// Real multi-process TCP transport (DESIGN.md §9).
+    Tcp,
+}
+
+impl ClusterKind {
+    /// Parse from a CLI string.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "serial" => ClusterKind::Serial,
+            "threads" => ClusterKind::Threads,
+            "tcp" => ClusterKind::Tcp,
+            other => bail!("unknown cluster backend `{other}` (serial|threads|tcp)"),
+        })
+    }
+}
 
 /// Optimization method to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -75,7 +101,10 @@ pub struct ExperimentConfig {
     /// evaluation is a full pass, so raise this at small `sp`).
     pub gap_every: usize,
     /// Cluster backend.
-    pub cluster: Cluster,
+    pub cluster: ClusterKind,
+    /// Coordinator listen address for `cluster = tcp` (use port 0 for an
+    /// ephemeral port; the launcher prints the bound address).
+    pub tcp_listen: String,
     /// Write a resumable solver snapshot to this path (DADM only).
     pub checkpoint: Option<String>,
     /// Snapshot cadence in rounds (with `checkpoint`).
@@ -111,7 +140,8 @@ impl Default for ExperimentConfig {
             eps: 1e-3,
             max_passes: 100.0,
             gap_every: 1,
-            cluster: Cluster::Serial,
+            cluster: ClusterKind::Serial,
+            tcp_listen: "127.0.0.1:7171".into(),
             checkpoint: None,
             checkpoint_every: 10,
             resume: None,
@@ -206,11 +236,10 @@ impl ExperimentConfig {
             cfg.resume = Some(v);
         }
         if let Some(v) = take("cluster") {
-            cfg.cluster = match v.as_str() {
-                "serial" => Cluster::Serial,
-                "threads" => Cluster::Threads,
-                other => bail!("unknown cluster backend `{other}`"),
-            };
+            cfg.cluster = ClusterKind::parse(&v)?;
+        }
+        if let Some(v) = take("tcp-listen") {
+            cfg.tcp_listen = v;
         }
         if let Some(v) = take("sparse-comm") {
             cfg.sparse_comm = match v.as_str() {
@@ -266,6 +295,11 @@ impl ExperimentConfig {
                 "checkpoint/resume are supported for method=dadm only \
                  (Acc-DADM stage state and OWL-QN history are not snapshotted)"
             );
+            anyhow::ensure!(
+                self.cluster != ClusterKind::Tcp,
+                "checkpoint/resume are unsupported on cluster=tcp \
+                 (worker dual state lives in remote processes)"
+            );
         }
         Ok(())
     }
@@ -275,17 +309,37 @@ impl ExperimentConfig {
         (self.max_passes / self.sp).ceil() as usize
     }
 
+    /// The synthetic generator behind `dataset`, when it names one —
+    /// `None` for LIBSVM paths. Used both to materialize the dataset
+    /// locally and, under `cluster = tcp`, to ship the *generator* to
+    /// the workers so no training data crosses the wire.
+    pub fn synthetic_spec(&self) -> Option<crate::data::synthetic::SyntheticSpec> {
+        use crate::data::synthetic::SyntheticSpec;
+        Some(match self.dataset.as_str() {
+            "synth-covtype" => SyntheticSpec::covtype(self.scale),
+            "synth-rcv1" => SyntheticSpec::rcv1(self.scale),
+            "synth-higgs" => SyntheticSpec::higgs(self.scale),
+            "synth-kdd2010" => SyntheticSpec::kdd2010(self.scale),
+            // Matches `tiny_classification(2000, 32, seed)`.
+            "tiny" => SyntheticSpec {
+                name: "tiny".into(),
+                n: 2000,
+                d: 32,
+                density: 1.0,
+                signal_density: 1.0,
+                noise: 0.05,
+                seed: self.seed,
+            },
+            _ => return None,
+        })
+    }
+
     /// Materialize the dataset (synthetic analogue or LIBSVM path).
     pub fn load_dataset(&self) -> Result<crate::data::Dataset> {
-        use crate::data::synthetic::*;
-        Ok(match self.dataset.as_str() {
-            "synth-covtype" => SyntheticSpec::covtype(self.scale).generate(),
-            "synth-rcv1" => SyntheticSpec::rcv1(self.scale).generate(),
-            "synth-higgs" => SyntheticSpec::higgs(self.scale).generate(),
-            "synth-kdd2010" => SyntheticSpec::kdd2010(self.scale).generate(),
-            "tiny" => tiny_classification(2000, 32, self.seed),
-            path => crate::data::libsvm::load(std::path::Path::new(path))?,
-        })
+        match self.synthetic_spec() {
+            Some(spec) => Ok(spec.generate()),
+            None => crate::data::libsvm::load(std::path::Path::new(&self.dataset)),
+        }
     }
 }
 
@@ -367,6 +421,36 @@ mod tests {
         assert!(owl.is_err());
         let zero = ExperimentConfig::from_file_body("checkpoint-every = 0\n");
         assert!(zero.is_err());
+    }
+
+    #[test]
+    fn parses_cluster_backends() {
+        assert_eq!(ExperimentConfig::default().cluster, ClusterKind::Serial);
+        let c = ExperimentConfig::from_file_body("cluster = threads\n").unwrap();
+        assert_eq!(c.cluster, ClusterKind::Threads);
+        let c =
+            ExperimentConfig::from_file_body("cluster = tcp\ntcp-listen = 127.0.0.1:0\n").unwrap();
+        assert_eq!(c.cluster, ClusterKind::Tcp);
+        assert_eq!(c.tcp_listen, "127.0.0.1:0");
+        assert!(ExperimentConfig::from_file_body("cluster = bogus\n").is_err());
+        // Checkpoint/resume need local worker state.
+        let ck = "method = dadm\ncluster = tcp\ncheckpoint = /tmp/x.ck\n";
+        assert!(ExperimentConfig::from_file_body(ck).is_err());
+    }
+
+    #[test]
+    fn synthetic_spec_matches_load_dataset() {
+        let mut c = ExperimentConfig::default();
+        c.dataset = "tiny".into();
+        let spec = c.synthetic_spec().unwrap();
+        assert_eq!(spec.n, 2000);
+        assert_eq!(spec.d, 32);
+        let a = spec.generate();
+        let b = c.load_dataset().unwrap();
+        assert_eq!(a.n(), b.n());
+        assert_eq!(a.y, b.y);
+        c.dataset = "/does/not/name/a/generator".into();
+        assert!(c.synthetic_spec().is_none());
     }
 
     #[test]

@@ -40,12 +40,13 @@
 //! over the shared [`Driver`].
 
 use crate::comm::sparse::{should_densify, sparse_message_elems, tree_allreduce_delta};
+use crate::comm::wire::{BroadcastRef, EvalOp};
 use crate::comm::{Cluster, CostModel};
 use crate::data::{Dataset, Partition};
 use crate::loss::Loss;
 use crate::reg::{ExtraReg, Regularizer};
 use crate::runtime::engine::{Driver, RoundAlgorithm, RoundOutcome};
-use crate::solver::{LocalSolver, WorkerState};
+use crate::solver::{batch_size, machine_rng, run_local_step, LocalSolver, WorkerState};
 use crate::utils::Rng;
 
 pub use crate::runtime::engine::SolveReport;
@@ -137,6 +138,19 @@ impl PendingBroadcast {
         }
     }
 
+    /// The wire form of the parked message (zero-copy: borrows the
+    /// reusable buffers for the TCP backend's encoder).
+    fn as_wire(&self) -> BroadcastRef<'_> {
+        match self.kind {
+            BroadcastKind::Empty => BroadcastRef::Empty,
+            BroadcastKind::Sparse => BroadcastRef::SparseSet {
+                idx: &self.idx,
+                val: &self.val,
+            },
+            BroadcastKind::Dense => BroadcastRef::DenseSet(&self.dense),
+        }
+    }
+
     fn clear(&mut self) {
         self.kind = BroadcastKind::Empty;
     }
@@ -211,24 +225,38 @@ where
         );
         assert!(opts.gap_every >= 1, "gap_every must be ≥ 1");
         let m = part.machines();
-        let mut seed_rng = Rng::new(opts.seed);
-        let machines: Vec<Machine> = (0..m)
-            .map(|l| {
-                let state = WorkerState::from_partition(data, part, l);
-                let batch = ((opts.sp * state.n_l() as f64).ceil() as usize)
-                    .clamp(1, state.n_l());
-                Machine {
-                    state,
-                    rng: seed_rng.fork(l as u64),
-                    batch,
-                }
-            })
-            .collect();
+        if let Some(handle) = opts.cluster.tcp() {
+            assert_eq!(
+                handle.workers(),
+                m,
+                "TCP cluster has {} workers but the partition has {m} machines",
+                handle.workers()
+            );
+        }
+        // `machine_rng`/`batch_size` are the same helpers remote TCP
+        // workers use — shared so in-process and remote machine state is
+        // identical by construction. Under the TCP backend the machines
+        // live in their own processes, so no local shard copies are
+        // built at all: worker state exists only behind the sockets.
+        let machines: Vec<Machine> = if opts.cluster.is_tcp() {
+            Vec::new()
+        } else {
+            (0..m)
+                .map(|l| {
+                    let state = WorkerState::from_partition(data, part, l);
+                    let batch = batch_size(opts.sp, state.n_l());
+                    Machine {
+                        state,
+                        rng: machine_rng(opts.seed, l),
+                        batch,
+                    }
+                })
+                .collect()
+        };
         let n = data.n();
         let d = data.dim();
-        let weights = machines
-            .iter()
-            .map(|mch| mch.state.n_l() as f64 / n as f64)
+        let weights = (0..m)
+            .map(|l| part.shard_size(l) as f64 / n as f64)
             .collect();
         Dadm {
             loss,
@@ -257,9 +285,22 @@ where
         }
     }
 
-    /// Number of machines `m`.
+    /// Number of machines `m` (remote workers under the TCP backend).
     pub fn machines(&self) -> usize {
-        self.machines.len()
+        self.weights.len()
+    }
+
+    /// The TCP handle when running on the multi-process backend.
+    fn tcp(&self) -> Option<&crate::comm::TcpHandle> {
+        self.opts.cluster.tcp()
+    }
+
+    /// Cumulative **actual** wire bytes moved by the TCP transport
+    /// (header + payload, both directions); `0` on in-process backends.
+    /// This is the measured quantity the `sparse_comm` α-β cost model's
+    /// message sizes can be validated against.
+    pub fn wire_bytes(&self) -> u64 {
+        self.tcp().map_or(0, |h| h.stats().total_bytes())
     }
 
     /// Problem size `n`.
@@ -279,8 +320,14 @@ where
 
     /// Immutable view of the machines (tests / invariant checks). Takes
     /// `&mut self` because any pending broadcast is flushed first, so the
-    /// observed worker state is the synchronized one.
+    /// observed worker state is the synchronized one. In-process
+    /// backends only: under TCP the worker state lives in remote
+    /// processes and cannot be borrowed.
     pub fn machine_states(&mut self) -> impl Iterator<Item = &WorkerState> {
+        assert!(
+            !self.opts.cluster.is_tcp(),
+            "machine_states: worker state lives in remote TCP processes"
+        );
         self.sync_workers();
         self.machines.iter().map(|m| &m.state)
     }
@@ -318,11 +365,25 @@ where
 
     /// Broadcast the current global `ṽ` to every machine in parallel
     /// (sets, not increments — used at init and Acc-DADM stage
-    /// boundaries; supersedes any pending incremental broadcast).
+    /// boundaries; supersedes any pending incremental broadcast). On the
+    /// TCP backend this also pushes the current regularizer, so workers
+    /// are always synchronized with stage transitions before any apply.
     pub fn resync(&mut self) {
         self.global_sync();
         self.pending.clear();
-        let cluster = self.opts.cluster;
+        if let Some(h) = self.opts.cluster.tcp() {
+            let spec = self.reg.wire_spec().expect(
+                "the TCP backend requires a wire-serializable regularizer \
+                 (Regularizer::wire_spec returned None)",
+            );
+            h.with(|c| {
+                c.set_reg(&spec)?;
+                c.broadcast(BroadcastRef::DenseSet(&self.v_tilde))
+            })
+            .expect("tcp resync failed");
+            return;
+        }
+        let cluster = self.opts.cluster.clone();
         let (v_tilde, reg) = (&self.v_tilde, &self.reg);
         cluster.run(&mut self.machines, |_, m| {
             m.state.set_v_tilde(v_tilde, reg);
@@ -337,7 +398,13 @@ where
         if self.pending.kind == BroadcastKind::Empty {
             return;
         }
-        let cluster = self.opts.cluster;
+        if let Some(h) = self.opts.cluster.tcp() {
+            h.with(|c| c.broadcast(self.pending.as_wire()))
+                .expect("tcp worker sync failed");
+            self.pending.clear();
+            return;
+        }
+        let cluster = self.opts.cluster.clone();
         let (pending, reg) = (&self.pending, &self.reg);
         cluster.run(&mut self.machines, |_, m| {
             pending.apply_to(&mut m.state, reg);
@@ -354,24 +421,22 @@ where
         let reg = &self.reg;
         let solver = &self.solver;
         let lambda = self.lambda;
-        let cluster = self.opts.cluster;
 
-        // --- Fused broadcast apply + local step (parallel, one barrier) ---
-        let run = {
+        // --- Fused broadcast apply + local step (parallel, one barrier;
+        // one request/reply exchange per worker on the TCP backend) ---
+        let (results, parallel_secs) = if let Some(h) = self.opts.cluster.tcp() {
+            h.with(|c| c.local_step(lambda, self.pending.as_wire()))
+                .expect("tcp local step failed")
+        } else {
+            let cluster = self.opts.cluster.clone();
             let pending = &self.pending;
-            cluster.run(&mut self.machines, |_, m| {
+            let run = cluster.run(&mut self.machines, |_, m| {
                 pending.apply_to(&mut m.state, reg);
-                let n_l = m.state.n_l();
-                let batch_idx = m.rng.sample_indices(n_l, m.batch);
-                solver.local_step(
-                    &mut m.state,
-                    &batch_idx,
-                    loss,
-                    reg,
-                    lambda * n_l as f64,
-                    &mut m.rng,
-                )
-            })
+                // Shared with the TCP worker's LocalStep handler — the
+                // two legs can never drift apart (DESIGN.md §9).
+                run_local_step(solver, &mut m.state, &mut m.rng, m.batch, loss, reg, lambda)
+            });
+            (run.results, run.parallel_secs)
         };
         self.pending.clear();
 
@@ -382,7 +447,7 @@ where
         // dense vectors otherwise); the reduce also reports the largest
         // message carried on any tree edge — merged supports grow toward
         // the root — which is what the cost model charges.
-        let (delta_v, reduce_elems) = tree_allreduce_delta(run.results, &self.weights);
+        let (delta_v, reduce_elems) = tree_allreduce_delta(results, &self.weights);
         delta_v.add_into(&mut self.v);
         self.scratch.v_tilde_old.copy_from_slice(&self.v_tilde);
         self.global_sync();
@@ -419,7 +484,7 @@ where
         };
 
         // --- Accounting ---
-        let m = self.machines.len();
+        let m = self.weights.len();
         let comm = if self.opts.sparse_comm {
             // Charge the actual message sizes: the reduce leg by the
             // largest message anywhere in its tree (leaf or merged), the
@@ -430,16 +495,21 @@ where
         } else {
             self.opts.cost.allreduce_time(m, self.d)
         };
-        self.compute_secs += run.parallel_secs;
+        self.compute_secs += parallel_secs;
         self.comm_secs += comm;
         self.rounds += 1;
         self.passes += self.opts.sp;
-        (run.parallel_secs, comm)
+        (parallel_secs, comm)
     }
 
     /// Distributed loss sum `Σ_i φ_i(x_iᵀ w)` at an arbitrary `w`
     /// (one parallel pass; also used by Acc-DADM's original-problem gap).
     pub fn loss_sum_at(&mut self, w: &[f64]) -> f64 {
+        if let Some(h) = self.opts.cluster.tcp() {
+            return h
+                .with(|c| c.eval_sum(&EvalOp::LossSumAt(w.to_vec())))
+                .expect("tcp loss-sum eval failed");
+        }
         let loss = &self.loss;
         let run = self
             .opts
@@ -450,6 +520,11 @@ where
 
     /// Distributed conjugate sum `Σ_i −φ_i*(−α_i)` at the current duals.
     pub fn conj_sum(&mut self) -> f64 {
+        if let Some(h) = self.opts.cluster.tcp() {
+            return h
+                .with(|c| c.eval_sum(&EvalOp::ConjSum))
+                .expect("tcp conjugate-sum eval failed");
+        }
         let loss = &self.loss;
         let run = self
             .opts
@@ -498,7 +573,12 @@ where
 
     /// Decompose into (machines, v) for state hand-off (Acc-DADM reuses
     /// the same instance, so this is only for tests / inspection).
+    /// In-process backends only.
     pub fn dual_state(&self) -> (&[f64], Vec<&[f64]>) {
+        assert!(
+            !self.opts.cluster.is_tcp(),
+            "dual_state: worker duals live in remote TCP processes"
+        );
         (
             &self.v,
             self.machines.iter().map(|m| m.state.alpha.as_slice()).collect(),
@@ -508,7 +588,13 @@ where
     /// Snapshot the dual state (see [`super::Checkpoint`]): `(λ, v, α)`
     /// plus the round/pass counters and the per-machine RNG states, so a
     /// restored instance continues the exact solve trajectory.
+    /// In-process backends only (the TCP backend's worker duals are
+    /// remote; its engine [`RoundAlgorithm::snapshot`] returns `None`).
     pub fn checkpoint(&self) -> super::Checkpoint {
+        assert!(
+            !self.opts.cluster.is_tcp(),
+            "checkpoint: worker duals live in remote TCP processes"
+        );
         super::Checkpoint {
             lambda: self.lambda,
             rounds: self.rounds,
@@ -528,6 +614,10 @@ where
     /// carrying RNG state (the v2 format) resume the exact mini-batch
     /// stream; v1 snapshots restart the streams from the seed.
     pub fn restore(&mut self, ck: &super::Checkpoint) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            !self.opts.cluster.is_tcp(),
+            "restore is not supported on the TCP backend (worker duals are remote)"
+        );
         anyhow::ensure!(
             (ck.lambda - self.lambda).abs() <= 1e-15 * self.lambda.abs(),
             "checkpoint λ = {} does not match instance λ = {}",
@@ -564,8 +654,13 @@ where
     }
 
     /// Validate the cross-machine bookkeeping invariant
-    /// `v == Σ_ℓ (n_ℓ/n) · X_ℓᵀα_ℓ/(λ n_ℓ)` (tests only; full recompute).
+    /// `v == Σ_ℓ (n_ℓ/n) · X_ℓᵀα_ℓ/(λ n_ℓ)` (tests only; full recompute;
+    /// in-process backends only).
     pub fn check_v_invariant(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            !self.opts.cluster.is_tcp(),
+            "check_v_invariant needs local machine state (TCP backend)"
+        );
         let mut want = vec![0.0; self.d];
         for m in &self.machines {
             let raw = m.state.raw_dual_combination();
@@ -626,6 +721,10 @@ where
     }
 
     fn snapshot(&self) -> Option<super::Checkpoint> {
+        if self.opts.cluster.is_tcp() {
+            // Worker duals are remote; no snapshot frame in protocol v1.
+            return None;
+        }
         Some(self.checkpoint())
     }
 }

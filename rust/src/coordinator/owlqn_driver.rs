@@ -68,7 +68,10 @@ pub struct DistributedOwlqn<L> {
 /// One distributed smooth-part oracle evaluation:
 /// `f(w) = (1/n)Σφ + (λ/2)‖w‖²` with its gradient, one fused pass over
 /// every shard plus one `(d+1)`-float allreduce, charged to the modeled
-/// compute/comm accumulators.
+/// compute/comm accumulators. On the TCP backend the per-shard pass runs
+/// in the worker processes (`Eval::GradOracle` frames) and returns the
+/// identical raw sums, so the reduced oracle is bit-identical across
+/// backends.
 #[allow(clippy::too_many_arguments)]
 fn oracle_eval<L: Loss>(
     workers: &mut [WorkerState],
@@ -76,33 +79,33 @@ fn oracle_eval<L: Loss>(
     lambda: f64,
     n: f64,
     d: usize,
-    cluster: Cluster,
+    cluster: &Cluster,
     cost: &CostModel,
     compute_secs: &mut f64,
     comm_secs: &mut f64,
     w: &[f64],
 ) -> (f64, Vec<f64>) {
-    let m = workers.len();
-    let run = cluster.run(workers, |_, ws: &mut WorkerState| {
-        // Per-worker (Σφ_i, Σ x_i·φ'_i) — one fused pass over the shard.
-        let mut grad = vec![0.0; d + 1];
-        for i in 0..ws.n_l() {
-            let row = ws.x.row(i);
-            let u = row.dot(w);
-            grad[d] += loss.phi(u, ws.y[i]);
-            let gi = loss.grad(u, ws.y[i]);
-            if gi != 0.0 {
-                row.axpy_into(gi, &mut grad[..d]);
-            }
-        }
-        grad
-    });
-    *compute_secs += run.parallel_secs;
+    let (results, parallel_secs, m) = if let Some(h) = cluster.tcp() {
+        let (grads, par) = h
+            .with(|c| c.eval_gradients(w))
+            .expect("tcp gradient oracle failed");
+        let m = grads.len();
+        (grads, par, m)
+    } else {
+        let m = workers.len();
+        // Per-worker (Σφ_i, Σ x_i·φ'_i) — one fused pass over the shard,
+        // via the same `grad_oracle_sums` the TCP worker runs.
+        let run = cluster.run(workers, |_, ws: &mut WorkerState| {
+            ws.grad_oracle_sums(loss, w)
+        });
+        (run.results, run.parallel_secs, m)
+    };
+    *compute_secs += parallel_secs;
     *comm_secs += cost.allreduce_time(m, d + 1);
     // Weighted by 1 (raw sums; balanced weighting is implicit), then
     // normalized by n.
     let ones = vec![1.0; m];
-    let reduced = tree_allreduce(&run.results, &ones);
+    let reduced = tree_allreduce(&results, &ones);
     let fval = reduced[d] / n + 0.5 * lambda * crate::utils::math::l2_norm_sq(w);
     let grad: Vec<f64> = (0..d).map(|j| reduced[j] / n + lambda * w[j]).collect();
     (fval, grad)
@@ -122,9 +125,15 @@ impl<L: Loss> DistributedOwlqn<L> {
         cost: CostModel,
     ) -> Self {
         let m = part.machines();
-        let workers: Vec<WorkerState> = (0..m)
-            .map(|l| WorkerState::from_partition(data, part, l))
-            .collect();
+        // Under the TCP backend the shards live in the worker processes;
+        // no local copies are built.
+        let workers: Vec<WorkerState> = if cluster.is_tcp() {
+            Vec::new()
+        } else {
+            (0..m)
+                .map(|l| WorkerState::from_partition(data, part, l))
+                .collect()
+        };
         let owlqn = Owlqn::new(OwlqnOptions {
             mu,
             memory: 10, // §10: "we set the memory parameter as 10"
@@ -199,7 +208,7 @@ impl<L: Loss> RoundAlgorithm for DistributedOwlqn<L> {
                 *lambda,
                 *n as f64,
                 *d,
-                *cluster,
+                cluster,
                 cost,
                 compute_secs,
                 comm_secs,
@@ -232,7 +241,7 @@ impl<L: Loss> RoundAlgorithm for DistributedOwlqn<L> {
                 *lambda,
                 *n as f64,
                 *d,
-                *cluster,
+                cluster,
                 cost,
                 compute_secs,
                 comm_secs,

@@ -33,17 +33,38 @@ pub const SP_GRID: [f64; 3] = [0.05, 0.20, 0.80];
 /// The §10 L1 weight.
 pub const MU: f64 = 1e-5;
 
+/// Default `DADM_BENCH_SCALE` (full micro-bench sizes).
+pub const DEFAULT_BENCH_SCALE: f64 = 5e-4;
+
+/// The scale the symbolic `DADM_BENCH_SCALE=smoke` setting maps to —
+/// a 10× shrink that keeps every bench cell in CI-smoke territory while
+/// still exercising the real code paths (the `bench-smoke` job runs
+/// `perf_hotpath` at this scale and archives the JSON it emits).
+pub const SMOKE_BENCH_SCALE: f64 = 5e-5;
+
 /// The `DADM_BENCH_SCALE` factor, parsed once per process (a `OnceLock`
 /// pins the value, so repeated bench cells can never observe different
-/// scales if the environment mutates mid-run).
+/// scales if the environment mutates mid-run). Accepts a float or the
+/// symbolic value `smoke` ([`SMOKE_BENCH_SCALE`]).
 pub fn bench_scale() -> f64 {
     static BENCH_SCALE: OnceLock<f64> = OnceLock::new();
-    *BENCH_SCALE.get_or_init(|| {
-        std::env::var("DADM_BENCH_SCALE")
-            .ok()
-            .and_then(|s| s.parse().ok())
-            .unwrap_or(5e-4)
+    *BENCH_SCALE.get_or_init(|| match std::env::var("DADM_BENCH_SCALE") {
+        Ok(s) if s.trim().eq_ignore_ascii_case("smoke") => SMOKE_BENCH_SCALE,
+        Ok(s) => s.trim().parse().unwrap_or(DEFAULT_BENCH_SCALE),
+        Err(_) => DEFAULT_BENCH_SCALE,
     })
+}
+
+/// [`bench_scale`] relative to the default — the multiplier micro-bench
+/// problem sizes apply (`smoke` ⇒ 0.1).
+pub fn bench_scale_factor() -> f64 {
+    bench_scale() / DEFAULT_BENCH_SCALE
+}
+
+/// Scale a micro-bench problem size by [`bench_scale_factor`], keeping a
+/// floor so smoke runs still exercise the vectorized paths.
+pub fn scaled_bench_n(base: usize) -> usize {
+    ((base as f64 * bench_scale_factor()).round() as usize).max(512)
 }
 
 /// Benchmark datasets at [`bench_scale`] (covtype/rcv1 analogues big
@@ -195,6 +216,19 @@ mod tests {
             assert!(c <= cell.report.rounds);
             assert!(cell.time_to_target.is_some());
         }
+    }
+
+    #[test]
+    fn bench_scale_is_pinned_and_positive() {
+        // The OnceLock pins whatever the process environment said first;
+        // assert stability and sanity rather than a specific value so
+        // this passes under any DADM_BENCH_SCALE (including `smoke`).
+        let a = bench_scale();
+        assert_eq!(a, bench_scale());
+        assert!(a > 0.0 && a.is_finite());
+        assert!(bench_scale_factor() > 0.0);
+        assert!(scaled_bench_n(10) >= 512, "floor keeps smoke cells real");
+        assert!(scaled_bench_n(100_000_000) >= 512);
     }
 
     #[test]

@@ -3,8 +3,11 @@
 //! `cargo bench` targets are plain `harness = false` binaries built on
 //! this module: [`time_it`] measures a closure with warmup + repeated
 //! timed runs and reports median/min/max; [`BenchTable`] accumulates rows
-//! and renders both an aligned console table (mirroring the paper's
-//! figures' series) and a CSV file under `target/bench_out/`.
+//! and renders an aligned console table (mirroring the paper's figures'
+//! series), a CSV file under `target/bench_out/`, and a machine-readable
+//! `target/bench_out/BENCH_<name>.json` — the artifact the CI
+//! `bench-smoke` job archives so the perf trajectory accumulates across
+//! commits.
 
 use std::io::Write;
 use std::time::Instant;
@@ -44,12 +47,13 @@ pub fn time_it<F: FnMut()>(warmup: usize, runs: usize, mut f: F) -> Timing {
     }
 }
 
-/// A column-aligned results table that also writes CSV.
+/// A column-aligned results table that also writes CSV and JSON.
 #[derive(Debug)]
 pub struct BenchTable {
     name: String,
     header: Vec<String>,
     rows: Vec<Vec<String>>,
+    meta: Vec<(String, String)>,
 }
 
 impl BenchTable {
@@ -59,7 +63,14 @@ impl BenchTable {
             name: name.to_string(),
             header: header.iter().map(|s| s.to_string()).collect(),
             rows: vec![],
+            meta: vec![],
         }
+    }
+
+    /// Attach a metadata key/value (bench scale, git describe, …) to the
+    /// JSON artifact.
+    pub fn meta(&mut self, key: &str, value: String) {
+        self.meta.push((key.to_string(), value));
     }
 
     /// Append a row (stringified cells).
@@ -92,6 +103,9 @@ impl BenchTable {
         if let Err(e) = self.write_csv() {
             eprintln!("warning: could not write bench CSV: {e}");
         }
+        if let Err(e) = self.write_json() {
+            eprintln!("warning: could not write bench JSON: {e}");
+        }
     }
 
     fn write_csv(&self) -> std::io::Result<()> {
@@ -104,6 +118,71 @@ impl BenchTable {
         }
         Ok(())
     }
+
+    /// Serialize as JSON (hand-rolled — no serde offline) to the string
+    /// the `BENCH_<name>.json` artifact contains.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{");
+        out.push_str(&format!("\"bench\":{}", json_str(&self.name)));
+        out.push_str(",\"meta\":{");
+        for (i, (k, v)) in self.meta.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("{}:{}", json_str(k), json_str(v)));
+        }
+        out.push_str("},\"header\":[");
+        for (i, h) in self.header.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&json_str(h));
+        }
+        out.push_str("],\"rows\":[");
+        for (i, row) in self.rows.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push('[');
+            for (j, c) in row.iter().enumerate() {
+                if j > 0 {
+                    out.push(',');
+                }
+                out.push_str(&json_str(c));
+            }
+            out.push(']');
+        }
+        out.push_str("]}");
+        out
+    }
+
+    fn write_json(&self) -> std::io::Result<()> {
+        let dir = std::path::Path::new("target/bench_out");
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        std::fs::write(&path, self.to_json())?;
+        println!("bench JSON written to {}", path.display());
+        Ok(())
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
 }
 
 /// Format seconds with an adaptive unit.
@@ -145,6 +224,24 @@ mod tests {
             t.row(&["only-one".into()])
         }));
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn json_artifact_shape_and_escaping() {
+        let mut t = BenchTable::new("unit", &["bench", "value"]);
+        t.meta("scale", "5e-5".into());
+        t.row(&["round \"trip\"".into(), "1.5µs".into()]);
+        t.row(&["tab\there".into(), "2".into()]);
+        let json = t.to_json();
+        assert!(json.starts_with('{') && json.ends_with('}'));
+        assert!(json.contains("\"bench\":\"unit\""));
+        assert!(json.contains("\"meta\":{\"scale\":\"5e-5\"}"));
+        assert!(json.contains("\"header\":[\"bench\",\"value\"]"));
+        assert!(json.contains("\\\"trip\\\""));
+        assert!(json.contains("tab\\there"));
+        // Balanced quoting: an even number of unescaped quotes.
+        let unescaped = json.replace("\\\"", "");
+        assert_eq!(unescaped.matches('"').count() % 2, 0);
     }
 
     #[test]

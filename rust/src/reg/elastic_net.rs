@@ -67,6 +67,10 @@ impl Regularizer for ElasticNet {
         }
     }
 
+    fn wire_spec(&self) -> Option<crate::comm::wire::WireReg> {
+        Some(crate::comm::wire::WireReg::ElasticNet(*self))
+    }
+
     fn name(&self) -> &'static str {
         "elastic_net"
     }

@@ -52,6 +52,14 @@ pub trait Regularizer: Send + Sync + std::fmt::Debug {
         1.0
     }
 
+    /// Wire-serializable form for the TCP cluster backend's `SetReg`
+    /// frame (DESIGN.md §9), if this regularizer can travel. `None`
+    /// (the default) makes the TCP coordinator fail fast with a clear
+    /// message instead of silently desynchronizing the workers.
+    fn wire_spec(&self) -> Option<crate::comm::wire::WireReg> {
+        None
+    }
+
     /// Name for bench output.
     fn name(&self) -> &'static str;
 }

@@ -78,6 +78,10 @@ impl Regularizer for ShiftedElasticNet {
         }
     }
 
+    fn wire_spec(&self) -> Option<crate::comm::wire::WireReg> {
+        Some(crate::comm::wire::WireReg::Shifted(self.clone()))
+    }
+
     fn name(&self) -> &'static str {
         "shifted_elastic_net"
     }

@@ -3,6 +3,51 @@
 
 use crate::data::{Dataset, Partition, SparseMatrix};
 use crate::reg::Regularizer;
+use crate::utils::Rng;
+
+/// Machine `l`'s private mini-batch RNG stream, exactly as
+/// `Dadm::new` derives it: a seed generator forked once per machine in
+/// index order. Replaying the fork sequence makes the stream computable
+/// for a *single* machine — which is how a remote TCP worker (hosting
+/// only machine `l`) reproduces the coordinator's draws bit for bit.
+pub fn machine_rng(seed: u64, l: usize) -> Rng {
+    let mut seed_rng = Rng::new(seed);
+    let mut rng = seed_rng.fork(0);
+    for i in 1..=l as u64 {
+        rng = seed_rng.fork(i);
+    }
+    rng
+}
+
+/// Mini-batch size `M_ℓ = ⌈sp · n_ℓ⌉`, clamped into `[1, n_ℓ]` — the one
+/// formula both the coordinator and remote TCP workers must share.
+pub fn batch_size(sp: f64, n_l: usize) -> usize {
+    ((sp * n_l as f64).ceil() as usize).clamp(1, n_l)
+}
+
+/// One machine's local-step leg, exactly as every backend must run it:
+/// draw the mini-batch from the machine's private RNG stream, then run
+/// the solver with the `λ·n_ℓ` dual scaling. Shared by `Dadm::round`'s
+/// in-process closure and the TCP worker's `LocalStep` handler so the
+/// two can never drift apart (the bit-parity contract of DESIGN.md §9).
+pub fn run_local_step<L, R, S>(
+    solver: &S,
+    state: &mut WorkerState,
+    rng: &mut Rng,
+    batch: usize,
+    loss: &L,
+    reg: &R,
+    lambda: f64,
+) -> crate::comm::sparse::Delta
+where
+    L: crate::loss::Loss,
+    R: Regularizer,
+    S: super::LocalSolver,
+{
+    let n_l = state.n_l();
+    let batch_idx = rng.sample_indices(n_l, batch);
+    solver.local_step(state, &batch_idx, loss, reg, lambda * n_l as f64, rng)
+}
 
 /// Machine-local state: `(S_ℓ, α_(ℓ), ṽ_ℓ)` plus caches.
 ///
@@ -51,6 +96,34 @@ impl WorkerState {
             row_norm_sq,
             global_indices: idx.to_vec(),
             scratch_delta: vec![0.0; d],
+            scratch_touched: Vec::new(),
+        }
+    }
+
+    /// Build a worker state directly from an explicit shard (the TCP
+    /// `DataSpec::Shard` path: rows already selected by the coordinator).
+    /// Produces exactly the state [`WorkerState::from_partition`] would
+    /// for the same shard.
+    pub fn from_shard(
+        rows: Vec<Vec<(u32, f64)>>,
+        y: Vec<f64>,
+        global_indices: Vec<usize>,
+        dim: usize,
+    ) -> Self {
+        assert_eq!(rows.len(), y.len(), "shard rows/labels mismatch");
+        assert_eq!(rows.len(), global_indices.len(), "shard rows/indices mismatch");
+        let n_l = rows.len();
+        let x = SparseMatrix::from_rows(rows, dim);
+        let row_norm_sq: Vec<f64> = (0..x.rows()).map(|i| x.row(i).norm_sq()).collect();
+        WorkerState {
+            x,
+            y,
+            alpha: vec![0.0; n_l],
+            v_tilde: vec![0.0; dim],
+            w: vec![0.0; dim],
+            row_norm_sq,
+            global_indices,
+            scratch_delta: vec![0.0; dim],
             scratch_touched: Vec::new(),
         }
     }
@@ -120,6 +193,27 @@ impl WorkerState {
             .map(|i| -loss.conj_neg(self.alpha[i], self.y[i]))
             .sum()
     }
+
+    /// The OWL-QN smooth-part oracle's per-shard raw sums at `w`:
+    /// `(Σ x_i·φ'_i ‖ Σ φ_i)` as a `d + 1` vector — one fused pass over
+    /// the shard. Shared by the in-process oracle and the TCP worker's
+    /// `GradOracle` handler so the two traversals can never drift apart
+    /// (the bit-parity contract of DESIGN.md §9).
+    pub fn grad_oracle_sums<L: crate::loss::Loss>(&self, loss: &L, w: &[f64]) -> Vec<f64> {
+        let d = self.dim();
+        debug_assert_eq!(w.len(), d);
+        let mut grad = vec![0.0; d + 1];
+        for i in 0..self.n_l() {
+            let row = self.x.row(i);
+            let u = row.dot(w);
+            grad[d] += loss.phi(u, self.y[i]);
+            let gi = loss.grad(u, self.y[i]);
+            if gi != 0.0 {
+                row.axpy_into(gi, &mut grad[..d]);
+            }
+        }
+        grad
+    }
 }
 
 #[cfg(test)]
@@ -128,6 +222,56 @@ mod tests {
     use crate::data::synthetic::tiny_classification;
     use crate::loss::{Loss, SmoothHinge};
     use crate::reg::ElasticNet;
+
+    #[test]
+    fn machine_rng_replays_sequential_forks() {
+        // The helper must reproduce the coordinator's fork-in-index-order
+        // streams exactly — the property remote TCP workers rely on.
+        let seed = 0xDA_DA;
+        let mut seq = Rng::new(seed);
+        let direct: Vec<Rng> = (0..5).map(|l| seq.fork(l as u64)).collect();
+        for (l, mut want) in direct.into_iter().enumerate() {
+            let mut got = machine_rng(seed, l);
+            for _ in 0..50 {
+                assert_eq!(got.next_u64(), want.next_u64(), "stream {l} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn batch_size_matches_coordinator_formula() {
+        assert_eq!(batch_size(0.2, 25), 5);
+        assert_eq!(batch_size(1.0, 25), 25);
+        assert_eq!(batch_size(1e-9, 25), 1); // clamped up
+        assert_eq!(batch_size(0.3, 10), 3);
+    }
+
+    #[test]
+    fn from_shard_matches_from_partition() {
+        let data = tiny_classification(20, 4, 3);
+        let part = Partition::balanced(20, 3, 7);
+        for l in 0..3 {
+            let want = WorkerState::from_partition(&data, &part, l);
+            let shard = part.shard(l);
+            let rows: Vec<Vec<(u32, f64)>> = shard
+                .iter()
+                .map(|&i| {
+                    let r = data.x.row(i);
+                    r.indices.iter().copied().zip(r.values.iter().copied()).collect()
+                })
+                .collect();
+            let y: Vec<f64> = shard.iter().map(|&i| data.y[i]).collect();
+            let got = WorkerState::from_shard(rows, y, shard.to_vec(), data.dim());
+            assert_eq!(got.y, want.y);
+            assert_eq!(got.alpha, want.alpha);
+            assert_eq!(got.row_norm_sq, want.row_norm_sq);
+            assert_eq!(got.global_indices, want.global_indices);
+            for i in 0..got.n_l() {
+                assert_eq!(got.x.row(i).indices, want.x.row(i).indices);
+                assert_eq!(got.x.row(i).values, want.x.row(i).values);
+            }
+        }
+    }
 
     #[test]
     fn from_partition_shards_data() {

@@ -74,6 +74,11 @@ impl Gen {
     pub fn bool(&mut self, p: f64) -> bool {
         self.rng.bernoulli(p)
     }
+
+    /// `n` uniformly random bytes (wire-protocol fuzzing).
+    pub fn bytes(&mut self, n: usize) -> Vec<u8> {
+        (0..n).map(|_| self.rng.next_u64() as u8).collect()
+    }
 }
 
 fn case_seed(seed: u64, case: usize) -> u64 {
