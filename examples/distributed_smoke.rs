@@ -45,7 +45,12 @@ fn spec() -> SyntheticSpec {
     }
 }
 
-fn solve(data: &Dataset, part: &Partition, cluster: Cluster) -> SolveReport {
+fn solve(
+    data: &Dataset,
+    part: &Partition,
+    cluster: Cluster,
+    local_threads: usize,
+) -> SolveReport {
     let mut dadm = Dadm::new(
         data,
         part,
@@ -61,6 +66,7 @@ fn solve(data: &Dataset, part: &Partition, cluster: Cluster) -> SolveReport {
             seed: RNG_SEED,
             gap_every: 1,
             sparse_comm: true,
+            local_threads,
         },
     );
     dadm.solve(EPS, MAX_ROUNDS)
@@ -69,6 +75,8 @@ fn solve(data: &Dataset, part: &Partition, cluster: Cluster) -> SolveReport {
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     // Worker mode: this same binary, re-executed by the coordinator.
+    // (The sub-solver count T arrives in the AssignPartition spec, so
+    // worker processes need no flag of their own.)
     if args.first().map(String::as_str) == Some("worker") {
         let addr = match args.get(1).map(String::as_str) {
             Some("--connect") => args.get(2).context("worker: missing address")?,
@@ -77,11 +85,35 @@ fn main() -> Result<()> {
         return run_worker(addr);
     }
 
+    // Coordinator flags: `--local-threads T` runs every worker process
+    // with T concurrent sub-shard solvers (the CI distributed-smoke job
+    // exercises T = 2 on every push).
+    let mut local_threads = 1usize;
+    let mut it = args.iter();
+    while let Some(k) = it.next() {
+        match k.as_str() {
+            "--local-threads" => {
+                local_threads = it
+                    .next()
+                    .context("missing value for --local-threads")?
+                    .parse()
+                    .context("parsing --local-threads")?;
+                if local_threads == 0 {
+                    bail!("the smoke harness needs an explicit --local-threads ≥ 1");
+                }
+            }
+            other => bail!("unknown flag `{other}` (usage: distributed_smoke [--local-threads T])"),
+        }
+    }
+
     // --- Coordinator ---
     let builder = TcpClusterBuilder::bind("127.0.0.1:0")?;
     let addr = builder.local_addr()?.to_string();
     let exe = std::env::current_exe().context("locating own binary")?;
-    println!("coordinator on {addr}; spawning {MACHINES} worker processes");
+    println!(
+        "coordinator on {addr}; spawning {MACHINES} worker processes \
+         (local-threads = {local_threads})"
+    );
     let mut children: Vec<Child> = (0..MACHINES)
         .map(|_| {
             Command::new(&exe)
@@ -103,13 +135,14 @@ fn main() -> Result<()> {
             SP,
             WireLoss::SmoothHinge(SmoothHinge::default()),
             WireSolver::ProxSdca,
+            local_threads,
         ))?;
         let handle = TcpHandle::new(cluster);
 
         let data = problem.generate();
         let part = Partition::balanced(data.n(), MACHINES, PART_SEED);
-        let tcp = solve(&data, &part, Cluster::Tcp(handle.clone()));
-        let serial = solve(&data, &part, Cluster::Serial);
+        let tcp = solve(&data, &part, Cluster::Tcp(handle.clone()), local_threads);
+        let serial = solve(&data, &part, Cluster::Serial, local_threads);
 
         let gap_tcp = tcp.normalized_gap();
         let gap_serial = serial.normalized_gap();

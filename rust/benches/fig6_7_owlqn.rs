@@ -38,6 +38,7 @@ fn main() {
                 max_passes,
                 Cluster::Serial,
                 CostModel::default(),
+                1,
             );
             table.row(&[
                 data.name.clone(),

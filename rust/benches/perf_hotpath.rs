@@ -303,6 +303,7 @@ fn main() {
                 sp,
                 WireLoss::SmoothHinge(SmoothHinge::default()),
                 WireSolver::ProxSdca,
+                1,
             ))
             .expect("assign");
         let handle = TcpHandle::new(cluster);
@@ -474,6 +475,142 @@ fn main() {
                 fmt_secs(t_alloc.median)
             ),
         ]);
+    }
+
+    // --- Unrolled sparse-row dot (4-accumulator ILP gather) ---
+    // Long rcv1-style rows: the serial single-accumulator fold chains
+    // every FP add behind the previous one; four independent streams
+    // overlap the gather loads with the adds. The reference below is the
+    // pre-unroll loop, verbatim.
+    {
+        let d = 1 << 17;
+        let nnz = scaled_bench_n(20_000);
+        let mut rng = Rng::new(0xD07);
+        let mut cols = rng.sample_indices(d, nnz);
+        cols.sort_unstable();
+        let rows: Vec<Vec<(u32, f64)>> = vec![cols
+            .iter()
+            .map(|&j| (j as u32, rng.normal()))
+            .collect()];
+        let m = dadm::data::SparseMatrix::from_rows(rows, d);
+        let w: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+        let row = m.row(0);
+        let reps = 200usize;
+        let t_unrolled = time_it(2, 10, || {
+            let mut acc = 0.0;
+            for _ in 0..reps {
+                acc += row.dot(&w);
+            }
+            std::hint::black_box(acc);
+        });
+        let serial_dot = |r: &dadm::data::SparseRow<'_>, w: &[f64]| -> f64 {
+            let mut acc = 0.0;
+            for (&j, &v) in r.indices.iter().zip(r.values) {
+                acc += v * w[j as usize];
+            }
+            acc
+        };
+        let t_serial = time_it(2, 10, || {
+            let mut acc = 0.0;
+            for _ in 0..reps {
+                acc += serial_dot(&row, &w);
+            }
+            std::hint::black_box(acc);
+        });
+        table.row(&[
+            "sparse_dot_unrolled".into(),
+            format!("nnz={nnz} d={d}"),
+            fmt_secs(t_unrolled.median / reps as f64),
+            format!(
+                "{:.2}x vs serial fold, {:.0}M nnz/s",
+                t_serial.median / t_unrolled.median,
+                (reps * nnz) as f64 / t_unrolled.median / 1e6
+            ),
+        ]);
+    }
+
+    // --- Hierarchical intra-machine parallelism (DESIGN.md §10) ---
+    // A four-machine pool round at d = 1e5 sparse: with T = 1 each
+    // machine is one thread (the pre-hierarchy behavior); with T = 4 the
+    // same machines run four concurrent sub-shard solvers each and merge
+    // sub-deltas machine-locally, so the round saturates 16 threads.
+    {
+        use dadm::comm::Cluster;
+        let (n, d, machines) = (scaled_bench_n(16_000), 100_000usize, 4usize);
+        let data = SyntheticSpec {
+            name: "local-threads".into(),
+            n,
+            d,
+            density: 0.0005,
+            signal_density: 0.2,
+            noise: 0.1,
+            seed: 23,
+        }
+        .generate();
+        let part = Partition::balanced(n, machines, 23);
+        let build = |t: usize| {
+            let mut dadm = Dadm::new(
+                &data,
+                &part,
+                SmoothHinge::default(),
+                ElasticNet::new(0.1),
+                Zero,
+                1e-4,
+                ProxSdca,
+                DadmOptions {
+                    sp: 0.2,
+                    cluster: Cluster::Threads,
+                    cost: CostModel::free(),
+                    sparse_comm: true,
+                    local_threads: t,
+                    ..Default::default()
+                },
+            );
+            dadm.resync();
+            dadm
+        };
+        let mut t1_solver = build(1);
+        let t_one = time_it(2, 8, || {
+            t1_solver.round();
+        });
+        let mut t4_solver = build(4);
+        let t_four = time_it(2, 8, || {
+            t4_solver.round();
+        });
+        for (label, timing) in [("T=1", &t_one), ("T=4", &t_four)] {
+            table.row(&[
+                "dadm_round_local_threads".into(),
+                format!("m={machines} d={d} sp=0.2 {label}"),
+                fmt_secs(timing.median),
+                if label == "T=4" {
+                    format!("{:.2}x vs T=1", t_one.median / t_four.median)
+                } else {
+                    "baseline".into()
+                },
+            ]);
+        }
+
+        // The eval leg (full-pass duality gap: primal + dual sums) on the
+        // same problems — serial per machine at T=1, sub-shard-parallel
+        // at T=4.
+        let t_eval_one = time_it(1, 5, || {
+            std::hint::black_box(t1_solver.gap());
+        });
+        let t_eval_four = time_it(1, 5, || {
+            std::hint::black_box(t4_solver.gap());
+        });
+        for (label, timing) in [("T=1", &t_eval_one), ("T=4", &t_eval_four)] {
+            table.row(&[
+                "eval_leg_parallel".into(),
+                format!("m={machines} d={d} {label}"),
+                fmt_secs(timing.median),
+                if label == "T=4" {
+                    format!("{:.2}x vs T=1", t_eval_one.median / t_eval_four.median)
+                } else {
+                    "baseline".into()
+                },
+            ]);
+        }
     }
 
     // --- PJRT execute latency (requires artifacts) ---

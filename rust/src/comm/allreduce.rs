@@ -46,6 +46,35 @@ pub fn rounds(m: usize) -> usize {
     (usize::BITS - (m.max(1) - 1).leading_zeros()) as usize
 }
 
+/// Pairwise binary-tree sum of scalars — the same stride-doubling
+/// combination order as [`tree_allreduce`], applied to the per-machine
+/// scalar legs (duality-gap loss/conjugate sums).
+///
+/// Why not a left fold: the hierarchical backends (DESIGN.md §10) reduce
+/// `T` sub-shard sums inside each machine and then `m` machine sums at
+/// the coordinator. A pairwise tree over `m·T` leaves factors *exactly*
+/// into tree-over-`T` followed by tree-over-`m` whenever `T` is a power
+/// of two (the flat tree's first `log₂ T` levels never cross a
+/// `T`-aligned block boundary), so a nested `(m, T)` evaluation is
+/// bit-identical to a flat `m·T` one — a left fold has no such
+/// factorization. Pinned by `tree_sum_factors_hierarchically`.
+pub fn tree_sum(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut buf = xs.to_vec();
+    let mut stride = 1usize;
+    while stride < buf.len() {
+        let mut i = 0;
+        while i + stride < buf.len() {
+            buf[i] += buf[i + stride];
+            i += stride * 2;
+        }
+        stride *= 2;
+    }
+    buf[0]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -71,6 +100,51 @@ mod tests {
         assert_eq!(rounds(3), 2);
         assert_eq!(rounds(8), 3);
         assert_eq!(rounds(9), 4);
+    }
+
+    #[test]
+    fn tree_sum_matches_serial_within_fp_tolerance() {
+        for_each_case(0x75F, 50, |g| {
+            let n = g.usize_in(0, 40);
+            let xs = g.vec_f64(n, -10.0, 10.0);
+            let serial: f64 = xs.iter().sum();
+            assert!((tree_sum(&xs) - serial).abs() < 1e-9);
+        });
+        assert_eq!(tree_sum(&[]), 0.0);
+        assert_eq!(tree_sum(&[3.5]), 3.5);
+    }
+
+    #[test]
+    fn tree_sum_matches_tree_allreduce_scalar() {
+        // Same combination structure as the vector reduce with unit
+        // weights (the property the eval legs rely on) — up to the
+        // 1.0-scaling no-op, which is bitwise identity.
+        for_each_case(0x75E, 30, |g| {
+            let m = g.usize_in(1, 20);
+            let xs = g.vec_f64(m, -5.0, 5.0);
+            let contribs: Vec<Vec<f64>> = xs.iter().map(|&x| vec![x]).collect();
+            let want = tree_allreduce(&contribs, &vec![1.0; m])[0];
+            assert_eq!(tree_sum(&xs).to_bits(), want.to_bits());
+        });
+    }
+
+    #[test]
+    fn tree_sum_factors_hierarchically() {
+        // For power-of-two block sizes T, tree over m·T leaves ==
+        // tree-over-T per block then tree-over-m — bitwise. This is the
+        // (m, T)-vs-flat-m·T eval-leg parity of DESIGN.md §10.
+        for_each_case(0x75D, 40, |g| {
+            let t = 1usize << g.usize_in(0, 4); // 1, 2, 4, 8
+            let m = g.usize_in(1, 6);
+            let xs = g.vec_f64(m * t, -5.0, 5.0);
+            let flat = tree_sum(&xs);
+            let blocked: Vec<f64> = xs.chunks(t).map(tree_sum).collect();
+            assert_eq!(
+                flat.to_bits(),
+                tree_sum(&blocked).to_bits(),
+                "m={m} t={t}"
+            );
+        });
     }
 
     #[test]

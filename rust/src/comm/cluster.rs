@@ -66,6 +66,17 @@ impl Cluster {
         matches!(self, Cluster::Tcp(_))
     }
 
+    /// Whether a machine's *intra*-machine legs (sub-shard solvers, eval
+    /// passes — DESIGN.md §10) should run on real threads. `Serial`
+    /// executes sub-shards serially (deterministic, parallelism modeled
+    /// as `max`); `Threads` runs them on the issuing pool worker's
+    /// sub-queues ([`WorkerPool`] nested dispatch). The TCP variant never
+    /// reaches this — remote workers decide locally in their own
+    /// processes.
+    pub fn parallel_local(&self) -> bool {
+        matches!(self, Cluster::Threads)
+    }
+
     /// Run `f(l, &mut states[l])` for every machine `l` (in-process
     /// backends only — see the module docs for the TCP variant).
     pub fn run<S, T, F>(&self, states: &mut [S], f: F) -> ParallelRun<T>
@@ -95,6 +106,28 @@ impl Cluster {
             }
             Cluster::Threads => WorkerPool::global().run(states, f),
         }
+    }
+}
+
+/// Run one machine's intra-machine parallel section: `f(k, &mut
+/// subs[k])` for every sub-shard `k`. With `parallel = false` (the
+/// `Serial` backend) the legs run serially on the calling thread; with
+/// `parallel = true` they go to the worker pool — from inside a pool job
+/// that is the issuing worker's sub-queue tier, from a plain thread (a
+/// remote TCP worker process) it is a top-level pool section. Single-sub
+/// groups always run inline. `parallel_secs` is the modeled machine
+/// time: the max over sub-shard legs, i.e. the wall time of a `T`-thread
+/// machine.
+pub fn run_subgroup<S, T, F>(parallel: bool, subs: &mut [S], f: F) -> ParallelRun<T>
+where
+    S: Send,
+    T: Send,
+    F: Fn(usize, &mut S) -> T + Sync,
+{
+    if parallel && subs.len() > 1 {
+        WorkerPool::global().run(subs, f)
+    } else {
+        super::pool::run_inline(subs, &f)
     }
 }
 
@@ -160,5 +193,37 @@ mod tests {
         let r = Cluster::Serial.run(&mut s, |_, _| 0u8);
         assert!(r.results.is_empty());
         assert_eq!(r.parallel_secs, 0.0);
+    }
+
+    #[test]
+    fn run_subgroup_serial_and_parallel_agree() {
+        let f = |k: usize, s: &mut u64| {
+            *s += k as u64;
+            *s * 2
+        };
+        let mut a = vec![5u64, 6, 7];
+        let mut b = a.clone();
+        let ra = run_subgroup(false, &mut a, f);
+        let rb = run_subgroup(true, &mut b, f);
+        assert_eq!(ra.results, rb.results);
+        assert_eq!(a, b);
+        assert_eq!(ra.results, vec![10, 14, 18]);
+    }
+
+    #[test]
+    fn run_subgroup_nests_inside_cluster_run() {
+        // The exact shape of a hierarchical round: a machine-level pool
+        // section whose jobs each open a sub-shard section.
+        let mut groups: Vec<Vec<u64>> = vec![vec![1, 2], vec![3, 4], vec![5, 6]];
+        let r = Cluster::Threads.run(&mut groups, |_, g| {
+            run_subgroup(true, g, |_, x| *x * 10).results.iter().sum::<u64>()
+        });
+        assert_eq!(r.results, vec![30, 70, 110]);
+    }
+
+    #[test]
+    fn parallel_local_only_for_threads() {
+        assert!(!Cluster::Serial.parallel_local());
+        assert!(Cluster::Threads.parallel_local());
     }
 }

@@ -23,7 +23,7 @@ pub mod sparse;
 pub mod tcp;
 pub mod wire;
 
-pub use cluster::Cluster;
+pub use cluster::{run_subgroup, Cluster};
 pub use cost::CostModel;
 pub use pool::WorkerPool;
 pub use sparse::{Delta, SparseDelta};

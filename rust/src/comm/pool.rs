@@ -1,4 +1,7 @@
-//! Persistent worker pool: long-lived OS threads driven over channels.
+//! Persistent worker pool: long-lived OS threads driven over channels,
+//! with a second tier of per-worker *sub-worker* threads for nested
+//! parallel sections (hierarchical intra-machine parallelism, DESIGN.md
+//! §4/§10).
 //!
 //! The previous `Cluster::Threads` backend spawned one fresh OS thread
 //! per machine per round through `std::thread::scope`, which puts a
@@ -10,30 +13,74 @@
 //! parallel section always runs on pool thread `l`, so a solve's
 //! per-machine state stays on the same thread round after round.
 //!
+//! **Nested sections.** A [`WorkerPool::run`] issued from *inside* a pool
+//! job used to degrade to inline serial execution (dispatching to the
+//! global queues would deadlock the issuing worker behind itself). It now
+//! dispatches to the issuing worker's own lazily-spawned sub-queue
+//! threads: a machine's `T` sub-shard solvers run genuinely concurrently,
+//! with sub-job `0` executed inline on the issuing worker so a `T = 1`
+//! nested section costs nothing and a `T`-wide one occupies exactly `T`
+//! threads. Sub-workers belong to one pool worker and that worker's jobs
+//! are serialized FIFO, so concurrent solves time-sharing the pool can
+//! never contend for the same sub-queues. Nesting is bounded at two
+//! levels — machine × sub-shard, DADM's hierarchy — every sub-shard leg
+//! (queued sub-worker jobs *and* the inline job 0, which runs at
+//! sub-worker tier for its duration) executes further parallel sections
+//! inline serially.
+//!
 //! The pool is process-global and grows lazily to the widest machine
 //! count requested; idle workers block on their queue and cost nothing.
-//! Two consequences of the global design: concurrent parallel sections
-//! (e.g. two solves in one process) time-share the same workers — jobs
-//! queue FIFO per worker rather than spawning extra threads — and a
-//! nested [`WorkerPool::run`] issued from inside a pool job degrades to
-//! inline serial execution (dispatching it to the pool would have the
-//! issuing worker deadlock waiting on its own queue).
+//! Concurrent parallel sections (e.g. two solves in one process)
+//! time-share the same workers — jobs queue FIFO per worker rather than
+//! spawning extra threads.
 
 use super::cluster::ParallelRun;
-use std::cell::Cell;
+use std::cell::{Cell, RefCell};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Mutex, OnceLock};
 use std::time::Instant;
 
+/// How deep in the pool hierarchy the current thread sits: 0 = not a
+/// pool thread, 1 = worker, 2 = sub-worker.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Tier {
+    Outside,
+    Worker,
+    SubWorker,
+}
+
 thread_local! {
-    /// Set for the lifetime of every pool worker thread; guards against
-    /// re-entrant dispatch (see [`WorkerPool::run`]).
-    static IS_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+    /// Set for the lifetime of every pool (sub-)worker thread; selects
+    /// between top-level dispatch, sub-queue dispatch, and inline
+    /// execution in [`WorkerPool::run`].
+    static TIER: Cell<Tier> = const { Cell::new(Tier::Outside) };
+
+    /// The issuing worker's private sub-worker queues (lazily spawned;
+    /// only ever populated on `Tier::Worker` threads).
+    static SUB_SENDERS: RefCell<Vec<Sender<Job>>> = const { RefCell::new(Vec::new()) };
 }
 
 /// A type-erased unit of work shipped to a pool thread.
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Scoped tier override restoring the previous tier on drop. The inline
+/// job-0 leg of a nested section runs at `SubWorker` tier so that *its*
+/// nested sections degrade inline too — the two-level bound (machine ×
+/// sub-shard) holds for every leg, not just the queued ones.
+struct TierGuard(Tier);
+
+impl TierGuard {
+    fn enter(tier: Tier) -> TierGuard {
+        TierGuard(TIER.with(|t| t.replace(tier)))
+    }
+}
+
+impl Drop for TierGuard {
+    fn drop(&mut self) {
+        TIER.with(|t| t.set(self.0));
+    }
+}
 
 /// Process-global pool of persistent worker threads.
 pub struct WorkerPool {
@@ -43,6 +90,24 @@ pub struct WorkerPool {
 
 static POOL: OnceLock<WorkerPool> = OnceLock::new();
 
+/// Spawn one parked queue-driven thread at the given tier.
+fn spawn_queue_thread(name: String, tier: Tier) -> Sender<Job> {
+    let (tx, rx) = channel::<Job>();
+    std::thread::Builder::new()
+        .name(name)
+        .spawn(move || {
+            TIER.with(|t| t.set(tier));
+            while let Ok(job) = rx.recv() {
+                // A panicking job must not take down the pool thread; the
+                // panic is re-raised on the submitting side when the
+                // job's result slot comes back empty.
+                let _ = catch_unwind(AssertUnwindSafe(job));
+            }
+        })
+        .expect("failed to spawn pool worker");
+    tx
+}
+
 impl WorkerPool {
     /// The process-global pool (created empty on first use).
     pub fn global() -> &'static WorkerPool {
@@ -51,7 +116,7 @@ impl WorkerPool {
         })
     }
 
-    /// Number of worker threads currently alive.
+    /// Number of worker threads currently alive (top tier only).
     pub fn workers(&self) -> usize {
         self.senders.lock().expect("pool lock poisoned").len()
     }
@@ -60,28 +125,17 @@ impl WorkerPool {
     fn ensure_workers(&self, m: usize) -> Vec<Sender<Job>> {
         let mut senders = self.senders.lock().expect("pool lock poisoned");
         while senders.len() < m {
-            let (tx, rx) = channel::<Job>();
             let id = senders.len();
-            std::thread::Builder::new()
-                .name(format!("dadm-worker-{id}"))
-                .spawn(move || {
-                    IS_POOL_WORKER.with(|flag| flag.set(true));
-                    while let Ok(job) = rx.recv() {
-                        // A panicking job must not take down the pool
-                        // thread; the panic is re-raised on the submitting
-                        // side when the job's result slot comes back empty.
-                        let _ = catch_unwind(AssertUnwindSafe(job));
-                    }
-                })
-                .expect("failed to spawn pool worker");
-            senders.push(tx);
+            senders.push(spawn_queue_thread(format!("dadm-worker-{id}"), Tier::Worker));
         }
         senders[..m].to_vec()
     }
 
-    /// Run `f(l, &mut states[l])` for every `l` concurrently, one pool
-    /// worker per state, blocking until all have finished. Semantics and
-    /// timing accounting match [`super::Cluster::run`].
+    /// Run `f(l, &mut states[l])` for every `l` concurrently, blocking
+    /// until all have finished. Semantics and timing accounting match
+    /// [`super::Cluster::run`]. Issued from a pool worker, the section
+    /// runs on that worker's sub-queues (job 0 inline); issued from a
+    /// sub-worker, it runs inline serially (two-level nesting bound).
     pub fn run<S, T, F>(&self, states: &mut [S], f: F) -> ParallelRun<T>
     where
         S: Send,
@@ -96,83 +150,145 @@ impl WorkerPool {
                 total_secs: 0.0,
             };
         }
-        if IS_POOL_WORKER.with(|flag| flag.get()) {
-            // Nested parallel section issued from inside a pool job:
-            // dispatching it would have this worker wait on a job queued
-            // behind itself — a guaranteed deadlock. Run inline instead,
-            // with the same timing semantics as `Cluster::Serial`.
-            let mut results = Vec::with_capacity(m);
-            let mut parallel_secs = 0.0f64;
-            let mut total_secs = 0.0f64;
-            for (l, s) in states.iter_mut().enumerate() {
-                let t0 = Instant::now();
-                results.push(f(l, s));
-                let t = t0.elapsed().as_secs_f64();
+        match TIER.with(|t| t.get()) {
+            Tier::Outside => {
+                let senders = self.ensure_workers(m);
+                dispatch(&senders, 0, states, &f)
+            }
+            Tier::Worker => {
+                if m == 1 {
+                    return run_inline(states, &f);
+                }
+                // Sub-queue dispatch: jobs 1.. go to this worker's private
+                // sub-workers, job 0 runs inline on the worker itself —
+                // a T-wide section occupies exactly T threads.
+                let senders = SUB_SENDERS.with(|subs| {
+                    let mut subs = subs.borrow_mut();
+                    while subs.len() < m - 1 {
+                        let id = subs.len();
+                        subs.push(spawn_queue_thread(format!("dadm-sub-{id}"), Tier::SubWorker));
+                    }
+                    subs[..m - 1].to_vec()
+                });
+                dispatch(&senders, 1, states, &f)
+            }
+            // A section issued from a sub-worker: the hierarchy is two
+            // levels deep by design; run inline with Serial timing
+            // semantics rather than growing threads without bound.
+            Tier::SubWorker => run_inline(states, &f),
+        }
+    }
+}
+
+/// Inline serial execution with the same timing semantics as
+/// `Cluster::Serial` (per-leg elapsed, parallel = max, total = sum) —
+/// the one shared serial loop, also behind
+/// [`super::cluster::run_subgroup`]'s non-parallel path.
+pub(crate) fn run_inline<S, T, F>(states: &mut [S], f: &F) -> ParallelRun<T>
+where
+    F: Fn(usize, &mut S) -> T,
+{
+    let mut results = Vec::with_capacity(states.len());
+    let mut parallel_secs = 0.0f64;
+    let mut total_secs = 0.0f64;
+    for (l, s) in states.iter_mut().enumerate() {
+        let t0 = Instant::now();
+        results.push(f(l, s));
+        let t = t0.elapsed().as_secs_f64();
+        parallel_secs = parallel_secs.max(t);
+        total_secs += t;
+    }
+    ParallelRun {
+        results,
+        parallel_secs,
+        total_secs,
+    }
+}
+
+/// Ship jobs `inline_from..` to `senders` (one each, in order), run jobs
+/// `0..inline_from` on the calling thread, and drain all results.
+/// `inline_from` is 0 for top-level sections (all queued) and 1 for
+/// nested ones (job 0 on the issuing worker).
+fn dispatch<S, T, F>(
+    senders: &[Sender<Job>],
+    inline_from: usize,
+    states: &mut [S],
+    f: &F,
+) -> ParallelRun<T>
+where
+    S: Send,
+    T: Send,
+    F: Fn(usize, &mut S) -> T + Sync,
+{
+    let m = states.len();
+    debug_assert_eq!(senders.len(), m - inline_from);
+    // Each job reports either its (result, elapsed) or the panic payload
+    // it caught, so a panicking local step re-raises with the original
+    // message on the submitting side.
+    let (tx, rx) = channel::<(usize, std::thread::Result<(T, f64)>)>();
+    let (inline_states, queued_states) = states.split_at_mut(inline_from);
+    for (k, (s, sender)) in queued_states.iter_mut().zip(senders).enumerate() {
+        let l = inline_from + k;
+        let tx = tx.clone();
+        let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+            let t0 = Instant::now();
+            let outcome = catch_unwind(AssertUnwindSafe(|| f(l, s)))
+                .map(|r| (r, t0.elapsed().as_secs_f64()));
+            let _ = tx.send((l, outcome));
+        });
+        // SAFETY: the job borrows `states` and `f`, which outlive this
+        // call frame, and this function does not return until every job
+        // has run to completion (or been dropped unrun): the drain loop
+        // below blocks until all clones of `tx` are gone, and each clone
+        // lives inside exactly one job. Erasing the borrow lifetime to
+        // 'static is therefore sound — the referents are live for the
+        // whole time any job can observe them.
+        let job: Job = unsafe { std::mem::transmute(job) };
+        // A send can only fail if the worker thread is gone (process
+        // teardown); the undelivered job — and its `tx` clone — are
+        // dropped with the error, so the drain below still terminates
+        // and the empty slot reports the dead worker.
+        let _ = sender.send(job);
+    }
+    // Inline legs run on the calling thread while the queued jobs are
+    // already in flight — at sub-worker tier when this is a nested
+    // section, so their own nested sections run inline like every other
+    // sub-shard leg's would.
+    if !inline_states.is_empty() {
+        let _tier = (inline_from > 0).then(|| TierGuard::enter(Tier::SubWorker));
+        for (l, s) in inline_states.iter_mut().enumerate() {
+            let t0 = Instant::now();
+            let outcome = catch_unwind(AssertUnwindSafe(|| f(l, s)))
+                .map(|r| (r, t0.elapsed().as_secs_f64()));
+            let _ = tx.send((l, outcome));
+        }
+    }
+    drop(tx);
+
+    let mut slots: Vec<Option<std::thread::Result<(T, f64)>>> = (0..m).map(|_| None).collect();
+    while let Ok((l, outcome)) = rx.recv() {
+        slots[l] = Some(outcome);
+    }
+    // All senders are gone ⇒ every job has finished or been dropped;
+    // only now is it safe to unwind past the borrowed state.
+    let mut results = Vec::with_capacity(m);
+    let mut parallel_secs = 0.0f64;
+    let mut total_secs = 0.0f64;
+    for slot in slots {
+        match slot {
+            Some(Ok((r, t))) => {
+                results.push(r);
                 parallel_secs = parallel_secs.max(t);
                 total_secs += t;
             }
-            return ParallelRun {
-                results,
-                parallel_secs,
-                total_secs,
-            };
+            Some(Err(payload)) => std::panic::resume_unwind(payload),
+            None => panic!("pool worker thread died"),
         }
-        let senders = self.ensure_workers(m);
-        // Each job reports either its (result, elapsed) or the panic
-        // payload it caught, so a panicking local step re-raises with the
-        // original message on the submitting side.
-        let (tx, rx) = channel::<(usize, std::thread::Result<(T, f64)>)>();
-        for (l, (s, sender)) in states.iter_mut().zip(&senders).enumerate() {
-            let tx = tx.clone();
-            let f = &f;
-            let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
-                let t0 = Instant::now();
-                let outcome = catch_unwind(AssertUnwindSafe(|| f(l, s)))
-                    .map(|r| (r, t0.elapsed().as_secs_f64()));
-                let _ = tx.send((l, outcome));
-            });
-            // SAFETY: the job borrows `states` and `f`, which outlive this
-            // call frame, and this function does not return until every
-            // job has run to completion (or been dropped unrun): the drain
-            // loop below blocks until all clones of `tx` are gone, and
-            // each clone lives inside exactly one job. Erasing the borrow
-            // lifetime to 'static is therefore sound — the referents are
-            // live for the whole time any job can observe them.
-            let job: Job = unsafe { std::mem::transmute(job) };
-            // A send can only fail if the worker thread is gone (process
-            // teardown); the undelivered job — and its `tx` clone — are
-            // dropped with the error, so the drain below still terminates
-            // and the empty slot reports the dead worker.
-            let _ = sender.send(job);
-        }
-        drop(tx);
-
-        let mut slots: Vec<Option<std::thread::Result<(T, f64)>>> =
-            (0..m).map(|_| None).collect();
-        while let Ok((l, outcome)) = rx.recv() {
-            slots[l] = Some(outcome);
-        }
-        // All senders are gone ⇒ every job has finished or been dropped;
-        // only now is it safe to unwind past the borrowed state.
-        let mut results = Vec::with_capacity(m);
-        let mut parallel_secs = 0.0f64;
-        let mut total_secs = 0.0f64;
-        for slot in slots {
-            match slot {
-                Some(Ok((r, t))) => {
-                    results.push(r);
-                    parallel_secs = parallel_secs.max(t);
-                    total_secs += t;
-                }
-                Some(Err(payload)) => std::panic::resume_unwind(payload),
-                None => panic!("pool worker thread died"),
-            }
-        }
-        ParallelRun {
-            results,
-            parallel_secs,
-            total_secs,
-        }
+    }
+    ParallelRun {
+        results,
+        parallel_secs,
+        total_secs,
     }
 }
 
@@ -188,10 +304,7 @@ mod tests {
             *x * 10 + l as u64
         });
         assert_eq!(s, vec![100, 101, 102, 103, 104, 105]);
-        assert_eq!(
-            r.results,
-            vec![1000, 1011, 1022, 1033, 1044, 1055]
-        );
+        assert_eq!(r.results, vec![1000, 1011, 1022, 1033, 1044, 1055]);
         assert!(r.total_secs >= r.parallel_secs);
     }
 
@@ -229,9 +342,11 @@ mod tests {
     }
 
     #[test]
-    fn nested_run_degrades_to_inline_execution() {
-        // A run issued from inside a pool job must not deadlock on the
-        // issuing worker's own queue.
+    fn nested_run_is_parallel_and_correct() {
+        // A run issued from inside a pool job dispatches to the issuing
+        // worker's sub-queues (no deadlock on its own queue) and must
+        // preserve the result order and state mutations of the old
+        // inline fallback.
         let pool = WorkerPool::global();
         let mut outer = vec![(); 3];
         let r = pool.run(&mut outer, |l, _| {
@@ -241,6 +356,49 @@ mod tests {
         });
         // Inner sums are (0+l) + (1+l) = 2l + 1.
         assert_eq!(r.results, vec![1, 3, 5]);
+    }
+
+    #[test]
+    fn nested_run_overlaps_sub_jobs() {
+        // Two machines × three 60 ms sub-sleeps: run serially that is
+        // ≥ 360 ms of wall clock. Sleeps need no CPU, so even a loaded
+        // box overlaps them; assert a generous wall bound (ideal ≈ 60 ms)
+        // that still proves the sub-shard legs run concurrently.
+        let pool = WorkerPool::global();
+        let mut outer = vec![(); 2];
+        let t0 = Instant::now();
+        let r = pool.run(&mut outer, |_, _| {
+            let mut inner = vec![(); 3];
+            let rr = pool.run(&mut inner, |_, _| {
+                std::thread::sleep(std::time::Duration::from_millis(60));
+            });
+            rr.parallel_secs
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        assert!(
+            wall < 0.75 * 0.36,
+            "nested sections did not overlap: wall {wall}s for six 60 ms sleeps"
+        );
+        assert_eq!(r.results.len(), 2);
+    }
+
+    #[test]
+    fn doubly_nested_run_degrades_to_inline() {
+        // Machine → sub-shard is the whole hierarchy; a third-level
+        // section must run inline (bounded threads), not deadlock.
+        let pool = WorkerPool::global();
+        let mut outer = vec![(); 2];
+        let r = pool.run(&mut outer, |l, _| {
+            let mut mid = vec![(); 2];
+            let rm = pool.run(&mut mid, |k, _| {
+                let mut inner = vec![0usize; 2];
+                let ri = pool.run(&mut inner, |j, _| j + k + l);
+                ri.results.iter().sum::<usize>()
+            });
+            rm.results.iter().sum::<usize>()
+        });
+        // Σ_k Σ_j (j + k + l) = Σ_k (2k + 2l + 1) = 4l + 4.
+        assert_eq!(r.results, vec![4, 8]);
     }
 
     #[test]
@@ -263,5 +421,31 @@ mod tests {
         let mut s = vec![0usize; 2];
         let r = pool.run(&mut s, |l, _| l + 1);
         assert_eq!(r.results, vec![1, 2]);
+    }
+
+    #[test]
+    fn nested_panic_propagates_to_the_outer_caller() {
+        let pool = WorkerPool::global();
+        let panicked = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let mut outer = vec![(); 2];
+            pool.run(&mut outer, |_, _| {
+                let mut inner = vec![(); 2];
+                pool.run(&mut inner, |k, _| {
+                    if k == 1 {
+                        panic!("sub boom");
+                    }
+                });
+            });
+        }));
+        let payload = panicked.expect_err("nested panic must propagate");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert_eq!(msg, "sub boom");
+        // Workers and sub-workers keep serving afterwards.
+        let mut outer = vec![(); 2];
+        let r = pool.run(&mut outer, |l, _| {
+            let mut inner = vec![0usize; 2];
+            pool.run(&mut inner, |k, _| k + l).results.iter().sum::<usize>()
+        });
+        assert_eq!(r.results, vec![1, 3]);
     }
 }

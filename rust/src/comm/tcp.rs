@@ -1,15 +1,17 @@
 //! The multi-process TCP cluster backend (DESIGN.md §9).
 //!
 //! One coordinator process drives `m` worker processes over loopback or
-//! a real network. Each worker hosts exactly one machine's
-//! [`WorkerState`] — built locally from a [`ProblemSpec`], so for
-//! synthetic data **no training examples cross the wire** — and executes
-//! the same fused broadcast-apply + local-step round the in-process
-//! backends run, returning the `Δv_ℓ` message the coordinator's
+//! a real network. Each worker hosts one machine's state — as
+//! `local_threads` sub-shard [`WorkerState`]s built locally from a
+//! [`ProblemSpec`], so for synthetic data **no training examples cross
+//! the wire** — and executes the same fused broadcast-apply +
+//! local-step round the in-process backends run, with its sub-solvers
+//! on real threads and their sub-deltas merged machine-locally
+//! (DESIGN.md §10), returning the one `Δv_ℓ` message the coordinator's
 //! tree-reduce consumes. Because floats travel as raw bit patterns and
 //! every per-machine quantity (partition, RNG stream, batch size) is
 //! derived from shared seeds, a TCP solve is **bit-identical** to a
-//! `Cluster::Serial` solve of the same problem.
+//! `Cluster::Serial` solve of the same problem and `(m, T)` layout.
 //!
 //! Handshake (see [`Frame`]):
 //!
@@ -39,13 +41,16 @@ use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use super::sparse::Delta;
+use super::allreduce::tree_sum;
+use super::cluster::run_subgroup;
+use super::sparse::{tree_allreduce_delta, Delta};
 use super::wire::{
     shard_data_spec, write_broadcast, write_local_step, BroadcastRef, DataSpec, EvalOp, Frame,
     ProblemSpec, WireBroadcast, WireLoss, WireReg, WireSolver, WIRE_MAGIC, WIRE_VERSION,
 };
+use crate::data::partition::split_ranges;
 use crate::data::{Dataset, Partition};
-use crate::solver::{batch_size, machine_rng, run_local_step, WorkerState};
+use crate::solver::{batch_size, machine_rngs, run_local_step, WorkerState};
 use crate::utils::Rng;
 
 /// Cumulative transport counters (coordinator side; bytes include the
@@ -298,22 +303,24 @@ impl TcpCluster {
         Ok((deltas, parallel_secs))
     }
 
-    /// Run a scalar instrumentation op on every worker and sum the
-    /// replies in machine order (matching the serial backend's
-    /// summation order bit for bit).
+    /// Run a scalar instrumentation op on every worker and combine the
+    /// replies by pairwise [`tree_sum`] in machine order — the same
+    /// combination the in-process backends use, so the evaluated gap is
+    /// bit-identical across backends (workers pre-reduce their own
+    /// sub-shard sums with the same tree, DESIGN.md §10).
     pub fn eval_sum(&mut self, op: &EvalOp) -> Result<f64> {
         let mut buf = Vec::new();
         Frame::Eval(op.clone()).write_to(&mut buf)?;
         self.send_all_bytes(&buf)?;
-        let mut sum = 0.0;
+        let mut sums = Vec::with_capacity(self.conns.len());
         for (l, conn) in self.conns.iter_mut().enumerate() {
             match conn.recv()? {
-                Frame::Scalar(x) => sum += x,
+                Frame::Scalar(x) => sums.push(x),
                 Frame::Error { message } => bail!("worker {l} failed: {message}"),
                 other => bail!("worker {l}: expected Scalar, got {other:?}"),
             }
         }
-        Ok(sum)
+        Ok(tree_sum(&sums))
     }
 
     /// OWL-QN smooth-part oracle: per-worker raw `(grad ‖ loss-sum)`
@@ -400,7 +407,11 @@ impl std::fmt::Debug for TcpHandle {
 }
 
 /// Build uniform synthetic-data [`ProblemSpec`]s for every machine —
-/// the zero-data-movement assignment path.
+/// the zero-data-movement assignment path. `local_threads` is the
+/// *resolved* intra-machine thread count `T ≥ 1`
+/// ([`crate::coordinator::resolve_local_threads`]); it must match the
+/// coordinator's `DadmOptions::local_threads` resolution or the
+/// machine-local merges will disagree with the cross-machine weights.
 #[allow(clippy::too_many_arguments)]
 pub fn synthetic_specs(
     spec: &crate::data::synthetic::SyntheticSpec,
@@ -410,7 +421,9 @@ pub fn synthetic_specs(
     sp: f64,
     loss: WireLoss,
     solver: WireSolver,
+    local_threads: usize,
 ) -> Vec<ProblemSpec> {
+    assert!(local_threads >= 1, "ship a resolved local_threads (≥ 1)");
     (0..machines)
         .map(|l| ProblemSpec {
             worker: l as u32,
@@ -418,6 +431,7 @@ pub fn synthetic_specs(
             seed,
             part_seed,
             sp,
+            local_threads: local_threads as u32,
             data: DataSpec::Synthetic(spec.clone()),
             loss,
             solver,
@@ -426,7 +440,10 @@ pub fn synthetic_specs(
 }
 
 /// Build explicit-shard [`ProblemSpec`]s (LIBSVM / externally-loaded
-/// data): each worker receives exactly its own rows.
+/// data): each worker receives exactly its own rows and sub-partitions
+/// them locally into `local_threads` contiguous balanced sub-shards
+/// (the same [`split_ranges`] chunking the coordinator's
+/// `Partition::split` uses).
 #[allow(clippy::too_many_arguments)]
 pub fn shard_specs(
     data: &Dataset,
@@ -435,7 +452,9 @@ pub fn shard_specs(
     sp: f64,
     loss: WireLoss,
     solver: WireSolver,
+    local_threads: usize,
 ) -> Vec<ProblemSpec> {
+    assert!(local_threads >= 1, "ship a resolved local_threads (≥ 1)");
     let m = part.machines();
     (0..m)
         .map(|l| ProblemSpec {
@@ -444,6 +463,7 @@ pub fn shard_specs(
             seed,
             part_seed: 0, // unused: the shard is explicit
             sp,
+            local_threads: local_threads as u32,
             data: shard_data_spec(data, part, l),
             loss,
             solver,
@@ -455,8 +475,10 @@ pub fn shard_specs(
 // Worker side
 // ---------------------------------------------------------------------
 
-/// One hosted machine: shard state + private RNG + batch size (the TCP
-/// twin of the coordinator's in-process `Machine`).
+/// One hosted *logical* machine (sub-shard solver): shard state +
+/// private RNG + batch size — the TCP twin of the coordinator's
+/// in-process `Machine`. A worker process hosts `local_threads` of
+/// these and runs their legs concurrently (DESIGN.md §10).
 struct HostedMachine {
     state: WorkerState,
     rng: Rng,
@@ -465,7 +487,15 @@ struct HostedMachine {
 
 /// The worker process's event-loop state.
 struct WorkerHost {
-    machine: Option<HostedMachine>,
+    /// The hosted sub-solvers, in logical order `l·T .. (l+1)·T`
+    /// (empty until `AssignPartition`).
+    subs: Vec<HostedMachine>,
+    /// Global leaf weights `n_k/n` of the hosted sub-shards — exactly
+    /// the coordinator's logical weights, so the machine-local merge is
+    /// the flat tree's intra-machine subtree.
+    weights: Vec<f64>,
+    /// Resolved intra-machine thread count `T`.
+    threads: usize,
     loss: Option<WireLoss>,
     solver: Option<WireSolver>,
     /// Current regularizer; pushed by `SetReg` before any use (the
@@ -476,27 +506,38 @@ struct WorkerHost {
 impl WorkerHost {
     fn new() -> Self {
         WorkerHost {
-            machine: None,
+            subs: Vec::new(),
+            weights: Vec::new(),
+            threads: 1,
             loss: None,
             solver: None,
             reg: None,
         }
     }
 
-    fn machine(&mut self) -> Result<&mut HostedMachine> {
-        self.machine
-            .as_mut()
-            .context("no partition assigned (AssignPartition must precede this frame)")
+    fn assigned(&self) -> Result<()> {
+        ensure!(
+            !self.subs.is_empty(),
+            "no partition assigned (AssignPartition must precede this frame)"
+        );
+        Ok(())
+    }
+
+    fn dim(&self) -> usize {
+        self.subs.first().map_or(0, |s| s.state.dim())
     }
 
     fn build(&mut self, spec: ProblemSpec) -> Result<()> {
         let l = spec.worker as usize;
         let m = spec.machines as usize;
-        let state = match spec.data {
+        let t = spec.local_threads as usize;
+        let (states, n_total) = match spec.data {
             DataSpec::Synthetic(s) => {
                 // Regenerate locally; the training data never crossed the
-                // wire. Same generator + same partition seed ⇒ the exact
-                // shard the coordinator's in-process twin holds.
+                // wire. Same generator + same partition seed ⇒ exactly
+                // the logical sub-shards the coordinator's in-process
+                // twin holds (`Partition::split` of the same balanced
+                // partition).
                 let data = s.generate();
                 ensure!(
                     data.n() >= m,
@@ -504,57 +545,97 @@ impl WorkerHost {
                     data.n()
                 );
                 let part = Partition::balanced(data.n(), m, spec.part_seed);
-                WorkerState::from_partition(&data, &part, l)
+                ensure!(
+                    part.min_shard() >= t,
+                    "local_threads = {t} exceeds the smallest shard ({})",
+                    part.min_shard()
+                );
+                let lpart = part.split(t);
+                let states: Vec<WorkerState> = (0..t)
+                    .map(|k| WorkerState::from_partition(&data, &lpart, l * t + k))
+                    .collect();
+                (states, data.n())
             }
             DataSpec::Shard {
+                n_total,
                 dim,
                 global_indices,
                 rows,
                 y,
-                ..
-            } => WorkerState::from_shard(
-                rows,
-                y,
-                global_indices.into_iter().map(|g| g as usize).collect(),
-                dim as usize,
-            ),
+            } => {
+                ensure!(
+                    rows.len() >= t,
+                    "local_threads = {t} exceeds the shard size ({})",
+                    rows.len()
+                );
+                // The same contiguous balanced chunking as the
+                // coordinator's `Partition::split`.
+                let ranges = split_ranges(rows.len(), t);
+                let mut rows = rows.into_iter();
+                let mut y = y.into_iter();
+                let mut gi = global_indices.into_iter();
+                let states: Vec<WorkerState> = ranges
+                    .into_iter()
+                    .map(|r| {
+                        let len = r.len();
+                        WorkerState::from_shard(
+                            rows.by_ref().take(len).collect(),
+                            y.by_ref().take(len).collect(),
+                            gi.by_ref().take(len).map(|g| g as usize).collect(),
+                            dim as usize,
+                        )
+                    })
+                    .collect();
+                (states, n_total as usize)
+            }
         };
-        let batch = batch_size(spec.sp, state.n_l());
-        self.machine = Some(HostedMachine {
-            state,
-            rng: machine_rng(spec.seed, l),
-            batch,
-        });
+        // Logical RNG streams l·T .. (l+1)·T, the flat fork discipline.
+        let rngs = machine_rngs(spec.seed, l * t, t);
+        self.subs = states
+            .into_iter()
+            .zip(rngs)
+            .map(|(state, rng)| HostedMachine {
+                batch: batch_size(spec.sp, state.n_l()),
+                state,
+                rng,
+            })
+            .collect();
+        self.weights = self
+            .subs
+            .iter()
+            .map(|s| s.state.n_l() as f64 / n_total as f64)
+            .collect();
+        self.threads = t;
         self.loss = Some(spec.loss);
         self.solver = Some(spec.solver);
         Ok(())
     }
 
-    fn apply_broadcast(&mut self, b: &WireBroadcast) -> Result<()> {
-        let reg = self.reg.clone().context("no regularizer set")?;
-        let mch = self.machine()?;
+    /// Bounds-check a broadcast against the hosted dimension once, so
+    /// the per-sub apply inside a parallel section is infallible.
+    fn validate_broadcast(&self, b: &WireBroadcast) -> Result<()> {
+        let d = self.dim();
         match b {
             WireBroadcast::Empty => {}
-            WireBroadcast::SparseSet { idx, val } => {
+            WireBroadcast::SparseSet { idx, .. } => {
                 if let Some(&j) = idx.last() {
-                    ensure!(
-                        (j as usize) < mch.state.dim(),
-                        "broadcast index {j} out of bounds (d = {})",
-                        mch.state.dim()
-                    );
+                    ensure!((j as usize) < d, "broadcast index {j} out of bounds (d = {d})");
                 }
-                mch.state.set_v_tilde_sparse_parts(idx, val, &reg);
             }
             WireBroadcast::DenseSet(v) => {
-                ensure!(
-                    v.len() == mch.state.dim(),
-                    "broadcast dimension {} != {}",
-                    v.len(),
-                    mch.state.dim()
-                );
-                mch.state.set_v_tilde(v, &reg);
+                ensure!(v.len() == d, "broadcast dimension {} != {d}", v.len());
             }
         }
+        Ok(())
+    }
+
+    fn apply_broadcast(&mut self, b: &WireBroadcast) -> Result<()> {
+        let reg = self.reg.clone().context("no regularizer set")?;
+        self.assigned()?;
+        self.validate_broadcast(b)?;
+        run_subgroup(self.threads > 1, &mut self.subs, |_, sub| {
+            apply_broadcast_to(&mut sub.state, b, &reg);
+        });
         Ok(())
     }
 
@@ -578,24 +659,40 @@ impl WorkerHost {
                     lambda.is_finite() && lambda > 0.0,
                     "λ must be positive and finite, got {lambda}"
                 );
-                let t0 = Instant::now();
-                // Fused section, mirroring the in-process round exactly:
-                // apply the parked Δṽ, then run the local step.
-                self.apply_broadcast(&broadcast)?;
                 let loss = self.loss.context("no loss assigned")?;
                 let solver = self.solver.context("no solver assigned")?;
                 let reg = self.reg.clone().context("no regularizer set")?;
-                let mch = self.machine()?;
-                // Shared with Dadm::round's in-process leg.
-                let delta = run_local_step(
-                    &solver,
-                    &mut mch.state,
-                    &mut mch.rng,
-                    mch.batch,
-                    &loss,
-                    &reg,
-                    lambda,
-                );
+                self.assigned()?;
+                self.validate_broadcast(&broadcast)?;
+                let t0 = Instant::now();
+                // Fused section, mirroring the in-process round exactly:
+                // apply the parked Δṽ, then run the local step — per
+                // sub-shard, concurrently when T > 1 (a top-level pool
+                // section in this worker process). Shared with
+                // Dadm::round's in-process leg (DESIGN.md §9/§10).
+                let threads = self.threads;
+                let run = run_subgroup(threads > 1, &mut self.subs, |_, sub| {
+                    apply_broadcast_to(&mut sub.state, &broadcast, &reg);
+                    run_local_step(
+                        &solver,
+                        &mut sub.state,
+                        &mut sub.rng,
+                        sub.batch,
+                        &loss,
+                        &reg,
+                        lambda,
+                    )
+                });
+                // T = 1 ships the raw Δv_ℓ (the coordinator leaf-scales,
+                // exactly the pre-hierarchy protocol); T > 1 merges
+                // machine-locally with the global n_k/n leaf weights and
+                // ships one pre-scaled message — the wire-free merge of
+                // DESIGN.md §10.
+                let delta = if threads == 1 {
+                    run.results.into_iter().next().expect("one sub-solver")
+                } else {
+                    tree_allreduce_delta(run.results, &self.weights).0
+                };
                 Frame::DeltaReply {
                     delta,
                     elapsed_secs: t0.elapsed().as_secs_f64(),
@@ -603,25 +700,45 @@ impl WorkerHost {
             }
             Frame::Eval(op) => {
                 let loss = self.loss.context("no loss assigned")?;
-                let mch = self.machine()?;
+                self.assigned()?;
+                let d = self.dim();
+                let threads = self.threads;
                 match op {
                     EvalOp::LossSumAt(w) => {
-                        ensure!(
-                            w.len() == mch.state.dim(),
-                            "eval dimension {} != {}",
-                            w.len(),
-                            mch.state.dim()
-                        );
-                        Frame::Scalar(mch.state.primal_loss_sum(&loss, &w))
-                    }
-                    EvalOp::ConjSum => Frame::Scalar(mch.state.dual_conj_sum(&loss)),
-                    EvalOp::GradOracle(w) => {
-                        let d = mch.state.dim();
                         ensure!(w.len() == d, "eval dimension {} != {d}", w.len());
-                        // The same fused shard pass the in-process
-                        // OWL-QN oracle runs (`grad_oracle_sums`).
+                        // Per-sub sums combined by the same pairwise
+                        // tree the coordinator uses (bit parity with the
+                        // in-process hierarchical eval leg).
+                        let run = run_subgroup(threads > 1, &mut self.subs, |_, sub| {
+                            sub.state.primal_loss_sum(&loss, &w)
+                        });
+                        Frame::Scalar(tree_sum(&run.results))
+                    }
+                    EvalOp::ConjSum => {
+                        let run = run_subgroup(threads > 1, &mut self.subs, |_, sub| {
+                            sub.state.dual_conj_sum(&loss)
+                        });
+                        Frame::Scalar(tree_sum(&run.results))
+                    }
+                    EvalOp::GradOracle(w) => {
+                        ensure!(w.len() == d, "eval dimension {} != {d}", w.len());
+                        // The same fused shard pass + machine-local
+                        // unit-weight pre-reduce the in-process OWL-QN
+                        // oracle runs (`grad_oracle_sums`).
                         let t0 = Instant::now();
-                        let grad = mch.state.grad_oracle_sums(&loss, &w);
+                        let mut run = run_subgroup(threads > 1, &mut self.subs, |_, sub| {
+                            sub.state.grad_oracle_sums(&loss, &w)
+                        });
+                        // As in the in-process oracle: a single-vector
+                        // pre-reduce is a bitwise identity — skip it.
+                        let grad = if run.results.len() == 1 {
+                            run.results.pop().expect("one sub-shard")
+                        } else {
+                            crate::comm::allreduce::tree_allreduce(
+                                &run.results,
+                                &vec![1.0; run.results.len()],
+                            )
+                        };
                         Frame::Vector {
                             v: grad,
                             elapsed_secs: t0.elapsed().as_secs_f64(),
@@ -632,6 +749,20 @@ impl WorkerHost {
             Frame::Shutdown => return Ok(None),
             other => bail!("unexpected frame on worker: {other:?}"),
         }))
+    }
+}
+
+/// Apply a pre-validated broadcast to one sub-shard state (infallible —
+/// bounds already checked by [`WorkerHost::validate_broadcast`]).
+fn apply_broadcast_to<R: crate::reg::Regularizer>(
+    state: &mut WorkerState,
+    b: &WireBroadcast,
+    reg: &R,
+) {
+    match b {
+        WireBroadcast::Empty => {}
+        WireBroadcast::SparseSet { idx, val } => state.set_v_tilde_sparse_parts(idx, val, reg),
+        WireBroadcast::DenseSet(v) => state.set_v_tilde(v, reg),
     }
 }
 
@@ -744,10 +875,11 @@ mod tests {
         }
     }
 
-    fn build_dadm(
+    fn build_dadm_t(
         data: &Dataset,
         part: &Partition,
         cluster: Cluster,
+        local_threads: usize,
     ) -> Dadm<SmoothHinge, ElasticNet, Zero, ProxSdca> {
         Dadm::new(
             data,
@@ -764,8 +896,17 @@ mod tests {
                 seed: 0xDAD_A,
                 gap_every: 1,
                 sparse_comm: true,
+                local_threads,
             },
         )
+    }
+
+    fn build_dadm(
+        data: &Dataset,
+        part: &Partition,
+        cluster: Cluster,
+    ) -> Dadm<SmoothHinge, ElasticNet, Zero, ProxSdca> {
+        build_dadm_t(data, part, cluster, 1)
     }
 
     #[test]
@@ -784,6 +925,7 @@ mod tests {
                     0.25,
                     WireLoss::SmoothHinge(SmoothHinge::default()),
                     WireSolver::ProxSdca,
+                    1,
                 ))
             })
             .unwrap();
@@ -830,6 +972,7 @@ mod tests {
                     0.25,
                     WireLoss::SmoothHinge(SmoothHinge::default()),
                     WireSolver::ProxSdca,
+                    1,
                 ))
             })
             .unwrap();
@@ -862,6 +1005,7 @@ mod tests {
                     1.0,
                     WireLoss::SmoothHinge(SmoothHinge::default()),
                     WireSolver::ProxSdca,
+                    1,
                 ))
             })
             .unwrap();
@@ -905,6 +1049,7 @@ mod tests {
                     0.5,
                     WireLoss::SmoothHinge(SmoothHinge::default()),
                     WireSolver::ProxSdca,
+                    1,
                 ))
             })
             .unwrap();
@@ -925,6 +1070,7 @@ mod tests {
                         seed: 0xACC,
                         gap_every: 1,
                         sparse_comm: false,
+                        local_threads: 1,
                     },
                     ..Default::default()
                 },
@@ -961,6 +1107,7 @@ mod tests {
                     1.0,
                     WireLoss::Logistic,
                     WireSolver::ProxSdca,
+                    1,
                 ))
             })
             .unwrap();
@@ -973,6 +1120,7 @@ mod tests {
             20,
             Cluster::Serial,
             CostModel::free(),
+            1,
         );
         let tcp = run_owlqn_distributed(
             &data,
@@ -983,10 +1131,99 @@ mod tests {
             20,
             Cluster::Tcp(handle.clone()),
             CostModel::free(),
+            1,
         );
         assert_eq!(serial.w, tcp.w, "OWL-QN iterates diverge over TCP");
         assert_eq!(serial.objective.to_bits(), tcp.objective.to_bits());
         assert_eq!(serial.passes, tcp.passes);
+        join_workers(handle, threads);
+    }
+
+    #[test]
+    fn local_threads_match_serial_and_flat_over_tcp() {
+        // Hierarchical workers (T = 2 sub-solvers per process, real
+        // threads behind the socket) must be bit-identical to the
+        // in-process (m = 2, T = 2) Serial solve — and both to the flat
+        // m·T = 4 Serial solve over the split partition (DESIGN.md §10).
+        let spec = test_spec(); // n = 160: 4 | 160, machine shards split evenly
+        let data = spec.generate();
+        let part = Partition::balanced(data.n(), 2, 9);
+        let (handle, threads) = loopback(2);
+        handle
+            .with(|c| {
+                c.assign(synthetic_specs(
+                    &spec,
+                    2,
+                    9,
+                    0xDAD_A,
+                    0.25,
+                    WireLoss::SmoothHinge(SmoothHinge::default()),
+                    WireSolver::ProxSdca,
+                    2,
+                ))
+            })
+            .unwrap();
+        let mut serial = build_dadm_t(&data, &part, Cluster::Serial, 2);
+        let mut tcp = build_dadm_t(&data, &part, Cluster::Tcp(handle.clone()), 2);
+        let flat_part = part.split(2);
+        let mut flat = build_dadm_t(&data, &flat_part, Cluster::Serial, 1);
+        serial.resync();
+        tcp.resync();
+        flat.resync();
+        for round in 0..5 {
+            let (_, comm_s) = serial.round();
+            let (_, comm_t) = tcp.round();
+            flat.round();
+            assert_eq!(
+                comm_s.to_bits(),
+                comm_t.to_bits(),
+                "modeled comm diverged at round {round}"
+            );
+            assert_eq!(serial.w(), tcp.w(), "tcp w diverged at round {round}");
+            assert_eq!(serial.v(), tcp.v(), "tcp v diverged at round {round}");
+            assert_eq!(serial.w(), flat.w(), "flat w diverged at round {round}");
+            assert_eq!(serial.v(), flat.v(), "flat v diverged at round {round}");
+            assert_eq!(serial.gap().to_bits(), tcp.gap().to_bits());
+            assert_eq!(serial.gap().to_bits(), flat.gap().to_bits());
+        }
+        // The hierarchy's comm accounting sees 2 wire participants, not 4.
+        assert_eq!(serial.machines(), 2);
+        assert_eq!(serial.local_threads(), 2);
+        assert_eq!(flat.machines(), 4);
+        join_workers(handle, threads);
+    }
+
+    #[test]
+    fn shard_assignment_with_local_threads_matches_serial() {
+        // The explicit-rows path sub-splits on the worker with the same
+        // split_ranges chunking the coordinator uses.
+        let spec = test_spec();
+        let data = spec.generate();
+        let part = Partition::balanced(data.n(), 2, 5);
+        let (handle, threads) = loopback(2);
+        handle
+            .with(|c| {
+                c.assign(shard_specs(
+                    &data,
+                    &part,
+                    0xDAD_A,
+                    0.25,
+                    WireLoss::SmoothHinge(SmoothHinge::default()),
+                    WireSolver::ProxSdca,
+                    2,
+                ))
+            })
+            .unwrap();
+        let mut serial = build_dadm_t(&data, &part, Cluster::Serial, 2);
+        let mut tcp = build_dadm_t(&data, &part, Cluster::Tcp(handle.clone()), 2);
+        serial.resync();
+        tcp.resync();
+        for round in 0..4 {
+            serial.round();
+            tcp.round();
+            assert_eq!(serial.w(), tcp.w(), "shard-path w diverged at round {round}");
+        }
+        assert_eq!(serial.gap().to_bits(), tcp.gap().to_bits());
         join_workers(handle, threads);
     }
 

@@ -45,7 +45,9 @@ use crate::solver::{LocalSolver, ProxSdca, TheoremStep, WorkerState};
 /// Protocol magic carried by the worker's `Hello`.
 pub const WIRE_MAGIC: [u8; 4] = *b"DADM";
 /// Protocol version; bumped on any incompatible frame change.
-pub const WIRE_VERSION: u16 = 1;
+/// v2: [`ProblemSpec`] carries `local_threads` — remote workers run `T`
+/// concurrent sub-shard solvers per machine (DESIGN.md §10).
+pub const WIRE_VERSION: u16 = 2;
 /// Hard cap on one frame's payload (256 MiB): a corrupt length prefix
 /// must never drive a giant allocation.
 pub const MAX_FRAME_LEN: u32 = 256 << 20;
@@ -402,6 +404,11 @@ pub struct ProblemSpec {
     pub part_seed: u64,
     /// Sampling fraction `sp`.
     pub sp: f64,
+    /// Intra-machine thread count `T` (≥ 1, already resolved by the
+    /// coordinator): the worker hosts logical sub-solvers
+    /// `l·T .. (l+1)·T` over contiguous balanced sub-shards and runs
+    /// their local steps concurrently (DESIGN.md §10). Wire v2.
+    pub local_threads: u32,
     /// Shard source.
     pub data: DataSpec,
     /// Loss `φ`.
@@ -741,6 +748,7 @@ fn put_spec(e: &mut Enc, spec: &ProblemSpec) {
     e.u64(spec.seed);
     e.u64(spec.part_seed);
     e.f64(spec.sp);
+    e.u32(spec.local_threads);
     put_loss(e, &spec.loss);
     put_solver(e, &spec.solver);
     match &spec.data {
@@ -796,6 +804,11 @@ fn take_spec(d: &mut Dec<'_>) -> Result<ProblemSpec> {
         sp > 0.0 && sp <= 1.0,
         "sampling fraction must be in (0, 1], got {sp}"
     );
+    let local_threads = d.u32()?;
+    ensure!(
+        local_threads >= 1,
+        "local_threads must be ≥ 1 on the wire (the coordinator resolves 0 = auto)"
+    );
     let loss = take_loss(d)?;
     let solver = take_solver(d)?;
     let data = match d.u8()? {
@@ -849,6 +862,7 @@ fn take_spec(d: &mut Dec<'_>) -> Result<ProblemSpec> {
         seed,
         part_seed,
         sp,
+        local_threads,
         data,
         loss,
         solver,
@@ -1149,6 +1163,7 @@ mod tests {
             seed: g.rng().next_u64(),
             part_seed: g.rng().next_u64(),
             sp: g.f64_in(0.01, 1.0),
+            local_threads: g.usize_in(1, 5) as u32,
             data,
             loss: match g.usize_in(0, 4) {
                 0 => WireLoss::SmoothHinge(SmoothHinge::new(g.f64_log_in(1e-6, 10.0))),

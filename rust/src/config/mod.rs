@@ -91,6 +91,11 @@ pub struct ExperimentConfig {
     pub mu: f64,
     /// Machines m.
     pub machines: usize,
+    /// Intra-machine threads T: each machine runs T concurrent sub-shard
+    /// solvers and eval legs (DESIGN.md §10). 1 = single-threaded
+    /// machines (the default), 0 = auto from the host core count; the
+    /// request is clamped to the smallest shard size.
+    pub local_threads: usize,
     /// Sampling fraction sp.
     pub sp: f64,
     /// Target normalized duality gap.
@@ -136,6 +141,7 @@ impl Default for ExperimentConfig {
             lambda: 1e-6,
             mu: 1e-5,
             machines: 8,
+            local_threads: 1,
             sp: 0.2,
             eps: 1e-3,
             max_passes: 100.0,
@@ -213,6 +219,9 @@ impl ExperimentConfig {
         }
         if let Some(v) = take("machines") {
             cfg.machines = v.parse().context("machines")?;
+        }
+        if let Some(v) = take("local-threads") {
+            cfg.local_threads = v.parse().context("local-threads")?;
         }
         if let Some(v) = take("sp") {
             cfg.sp = v.parse().context("sp")?;
@@ -421,6 +430,17 @@ mod tests {
         assert!(owl.is_err());
         let zero = ExperimentConfig::from_file_body("checkpoint-every = 0\n");
         assert!(zero.is_err());
+    }
+
+    #[test]
+    fn parses_local_threads() {
+        assert_eq!(ExperimentConfig::default().local_threads, 1);
+        let c = ExperimentConfig::from_file_body("local-threads = 4\n").unwrap();
+        assert_eq!(c.local_threads, 4);
+        // 0 = auto (resolved against the partition at launch).
+        let c = ExperimentConfig::from_file_body("local-threads = 0\n").unwrap();
+        assert_eq!(c.local_threads, 0);
+        assert!(ExperimentConfig::from_file_body("local-threads = -1\n").is_err());
     }
 
     #[test]

@@ -130,7 +130,11 @@ where
         opts: AccDadmOptions,
     ) -> Self {
         let n = data.n();
-        let m = part.machines();
+        // Remark 12's m is the number of *independent dual blocks* — under
+        // hierarchical parallelism (DESIGN.md §10) that is the logical
+        // count m·T, the same value a flat m·T-machine solve would use
+        // (the (m, T)-vs-flat bit-parity tests depend on the κ agreeing).
+        let m = part.machines() * opts.dadm.resolved_local_threads(part);
         let radius = data.max_row_norm_sq();
         let gamma = loss.gamma();
         let kappa = opts

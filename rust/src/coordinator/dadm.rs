@@ -39,14 +39,15 @@
 //! implements [`RoundAlgorithm`] and [`Dadm::solve`] is a thin wrapper
 //! over the shared [`Driver`].
 
+use crate::comm::allreduce::tree_sum;
 use crate::comm::sparse::{should_densify, sparse_message_elems, tree_allreduce_delta};
 use crate::comm::wire::{BroadcastRef, EvalOp};
-use crate::comm::{Cluster, CostModel};
+use crate::comm::{run_subgroup, Cluster, CostModel};
 use crate::data::{Dataset, Partition};
 use crate::loss::Loss;
 use crate::reg::{ExtraReg, Regularizer};
 use crate::runtime::engine::{Driver, RoundAlgorithm, RoundOutcome};
-use crate::solver::{batch_size, machine_rng, run_local_step, LocalSolver, WorkerState};
+use crate::solver::{batch_size, machine_rngs, run_local_step, LocalSolver, WorkerState};
 use crate::utils::Rng;
 
 pub use crate::runtime::engine::SolveReport;
@@ -75,6 +76,19 @@ pub struct DadmOptions {
     /// algorithmically both settings are identical, the flag only selects
     /// which message size the α-β cost model charges.
     pub sparse_comm: bool,
+    /// Intra-machine parallelism `T` (DESIGN.md §10): every machine's
+    /// shard is sub-partitioned once at setup into `T` sub-shards, each
+    /// with its own ProxSDCA sub-solver, dual block, RNG stream
+    /// (logical index `ℓ·T + k`, same fork discipline as a flat solve)
+    /// and scratch; the `T` sub-deltas merge machine-locally at zero
+    /// modeled wire cost before the cross-machine reduce. `1` (the
+    /// default) is exactly the previous single-solver behavior; `0`
+    /// resolves to the host's available parallelism. The request is
+    /// clamped to the smallest shard size. Because this is DADM applied
+    /// one level down, an `(m, T)` solve with power-of-two `T` is
+    /// bit-identical to a flat `m·T`-machine solve over the split
+    /// partition (pinned in `rust/tests/local_threads.rs`).
+    pub local_threads: usize,
 }
 
 impl Default for DadmOptions {
@@ -86,11 +100,41 @@ impl Default for DadmOptions {
             seed: 0xDAD_A,
             gap_every: 1,
             sparse_comm: false,
+            local_threads: 1,
         }
     }
 }
 
-/// One simulated machine: shard state + its private mini-batch RNG.
+impl DadmOptions {
+    /// The effective intra-machine thread count for `part` — see
+    /// [`resolve_local_threads`].
+    pub fn resolved_local_threads(&self, part: &Partition) -> usize {
+        resolve_local_threads(self.local_threads, part)
+    }
+}
+
+/// The effective intra-machine thread count for a requested
+/// `local_threads` over `part`: `0` resolves to the host's available
+/// parallelism, and any request is clamped to the smallest shard size
+/// (every sub-shard needs ≥ 1 example). The single resolution rule
+/// shared by [`Dadm`], `AccDadm` (whose Remark-12 κ depends on the
+/// *logical* machine count `m·T`), the OWL-QN driver and the launcher's
+/// TCP worker specs — so they can never disagree on `T`.
+pub fn resolve_local_threads(requested: usize, part: &Partition) -> usize {
+    let requested = if requested == 0 {
+        std::thread::available_parallelism().map_or(1, |n| n.get())
+    } else {
+        requested
+    };
+    requested.min(part.min_shard()).max(1)
+}
+
+/// One *logical* machine: shard state + its private mini-batch RNG.
+/// Under hierarchical parallelism (`local_threads = T`, DESIGN.md §10)
+/// a physical machine hosts `T` consecutive of these — logical machine
+/// `k = ℓ·T + t` is physical machine `ℓ`'s sub-solver `t` — and the
+/// coordinator dispatches them in groups of `T`. With `T = 1` the two
+/// notions coincide and this is exactly the paper's per-machine state.
 #[derive(Clone, Debug)]
 pub struct Machine {
     /// Shard + dual state.
@@ -180,8 +224,14 @@ pub struct Dadm<L, R, H, S> {
     pub lambda: f64,
     /// Local solver.
     pub solver: S,
+    /// Logical machines (physical machine ℓ = `machines[ℓT..(ℓ+1)T]`).
     machines: Vec<Machine>,
-    weights: Vec<f64>, // n_ℓ/n
+    /// Resolved intra-machine thread count `T` (≥ 1).
+    local_threads: usize,
+    weights: Vec<f64>, // n_k/n per *logical* machine
+    /// All-ones weights for the cross-machine reduce when `T > 1` (the
+    /// machine-local merge already applied the `n_k/n` leaf scaling).
+    unit_weights: Vec<f64>,
     v: Vec<f64>,       // global v = Σ X_i α_i / (λn)
     v_tilde: Vec<f64>, // global ṽ (Eq. 15)
     w: Vec<f64>,       // global primal iterate ∇g*(ṽ)
@@ -233,30 +283,42 @@ where
                 handle.workers()
             );
         }
-        // `machine_rng`/`batch_size` are the same helpers remote TCP
+        // Hierarchical parallelism (DESIGN.md §10): sub-partition every
+        // machine's shard once at setup into T sub-shards; the solve then
+        // runs over m·T *logical* machines dispatched in groups of T.
+        let t = opts.resolved_local_threads(part);
+        let lpart_owned;
+        let lpart: &Partition = if t == 1 {
+            part
+        } else {
+            lpart_owned = part.split(t);
+            &lpart_owned
+        };
+        let m_logical = lpart.machines();
+        // `machine_rngs`/`batch_size` are the same helpers remote TCP
         // workers use — shared so in-process and remote machine state is
-        // identical by construction. Under the TCP backend the machines
-        // live in their own processes, so no local shard copies are
-        // built at all: worker state exists only behind the sockets.
+        // identical by construction (stream k = the k-th fork in logical
+        // index order, exactly a flat m·T solve's discipline). Under the
+        // TCP backend the machines live in their own processes, so no
+        // local shard copies are built at all: worker state exists only
+        // behind the sockets.
         let machines: Vec<Machine> = if opts.cluster.is_tcp() {
             Vec::new()
         } else {
-            (0..m)
-                .map(|l| {
-                    let state = WorkerState::from_partition(data, part, l);
+            machine_rngs(opts.seed, 0, m_logical)
+                .into_iter()
+                .enumerate()
+                .map(|(k, rng)| {
+                    let state = WorkerState::from_partition(data, lpart, k);
                     let batch = batch_size(opts.sp, state.n_l());
-                    Machine {
-                        state,
-                        rng: machine_rng(opts.seed, l),
-                        batch,
-                    }
+                    Machine { state, rng, batch }
                 })
                 .collect()
         };
         let n = data.n();
         let d = data.dim();
-        let weights = (0..m)
-            .map(|l| part.shard_size(l) as f64 / n as f64)
+        let weights = (0..m_logical)
+            .map(|k| lpart.shard_size(k) as f64 / n as f64)
             .collect();
         Dadm {
             loss,
@@ -265,7 +327,9 @@ where
             lambda,
             solver,
             machines,
+            local_threads: t,
             weights,
+            unit_weights: vec![1.0; m],
             v: vec![0.0; d],
             v_tilde: vec![0.0; d],
             w: vec![0.0; d],
@@ -285,9 +349,15 @@ where
         }
     }
 
-    /// Number of machines `m` (remote workers under the TCP backend).
+    /// Number of *physical* machines `m` (remote workers under the TCP
+    /// backend; comm-cost participants).
     pub fn machines(&self) -> usize {
-        self.weights.len()
+        self.weights.len() / self.local_threads
+    }
+
+    /// Resolved intra-machine thread count `T` (sub-solvers per machine).
+    pub fn local_threads(&self) -> usize {
+        self.local_threads
     }
 
     /// The TCP handle when running on the multi-process backend.
@@ -318,11 +388,12 @@ where
         &self.v
     }
 
-    /// Immutable view of the machines (tests / invariant checks). Takes
-    /// `&mut self` because any pending broadcast is flushed first, so the
-    /// observed worker state is the synchronized one. In-process
-    /// backends only: under TCP the worker state lives in remote
-    /// processes and cannot be borrowed.
+    /// Immutable view of the *logical* machines (tests / invariant
+    /// checks) — `m·T` states in logical order under hierarchical
+    /// parallelism. Takes `&mut self` because any pending broadcast is
+    /// flushed first, so the observed worker state is the synchronized
+    /// one. In-process backends only: under TCP the worker state lives
+    /// in remote processes and cannot be borrowed.
     pub fn machine_states(&mut self) -> impl Iterator<Item = &WorkerState> {
         assert!(
             !self.opts.cluster.is_tcp(),
@@ -384,9 +455,12 @@ where
             return;
         }
         let cluster = self.opts.cluster.clone();
+        let par = cluster.parallel_local();
         let (v_tilde, reg) = (&self.v_tilde, &self.reg);
-        cluster.run(&mut self.machines, |_, m| {
-            m.state.set_v_tilde(v_tilde, reg);
+        let mut groups: Vec<&mut [Machine]> =
+            self.machines.chunks_mut(self.local_threads).collect();
+        cluster.run(&mut groups, |_, group| {
+            run_subgroup(par, group, |_, m| m.state.set_v_tilde(v_tilde, reg));
         });
     }
 
@@ -405,22 +479,29 @@ where
             return;
         }
         let cluster = self.opts.cluster.clone();
+        let par = cluster.parallel_local();
         let (pending, reg) = (&self.pending, &self.reg);
-        cluster.run(&mut self.machines, |_, m| {
-            pending.apply_to(&mut m.state, reg);
+        let mut groups: Vec<&mut [Machine]> =
+            self.machines.chunks_mut(self.local_threads).collect();
+        cluster.run(&mut groups, |_, group| {
+            run_subgroup(par, group, |_, m| pending.apply_to(&mut m.state, reg));
         });
         self.pending.clear();
     }
 
     /// One DADM iteration (Algorithm 2): apply the previous round's
     /// broadcast and run the local step on every machine (one fused
-    /// parallel section), aggregate, global step, park the new broadcast.
-    /// Returns the modeled (compute, comm) seconds of this round.
+    /// parallel section; with `local_threads = T` each machine runs its
+    /// `T` sub-solvers concurrently and merges their sub-deltas
+    /// machine-locally at zero wire cost), aggregate across machines,
+    /// global step, park the new broadcast. Returns the modeled
+    /// (compute, comm) seconds of this round.
     pub fn round(&mut self) -> (f64, f64) {
         let loss = &self.loss;
         let reg = &self.reg;
         let solver = &self.solver;
         let lambda = self.lambda;
+        let t = self.local_threads;
 
         // --- Fused broadcast apply + local step (parallel, one barrier;
         // one request/reply exchange per worker on the TCP backend) ---
@@ -429,14 +510,41 @@ where
                 .expect("tcp local step failed")
         } else {
             let cluster = self.opts.cluster.clone();
+            let par = cluster.parallel_local();
             let pending = &self.pending;
-            let run = cluster.run(&mut self.machines, |_, m| {
-                pending.apply_to(&mut m.state, reg);
-                // Shared with the TCP worker's LocalStep handler — the
-                // two legs can never drift apart (DESIGN.md §9).
-                run_local_step(solver, &mut m.state, &mut m.rng, m.batch, loss, reg, lambda)
+            let weights = &self.weights;
+            let mut groups: Vec<&mut [Machine]> = self.machines.chunks_mut(t).collect();
+            let run = cluster.run(&mut groups, |l, group| {
+                // The T sub-shard legs of machine l, concurrent under
+                // Cluster::Threads (the pool's sub-queue tier). Shared
+                // with the TCP worker's LocalStep handler — the two legs
+                // can never drift apart (DESIGN.md §9).
+                let sub = run_subgroup(par, group, |_, m| {
+                    pending.apply_to(&mut m.state, reg);
+                    run_local_step(solver, &mut m.state, &mut m.rng, m.batch, loss, reg, lambda)
+                });
+                // Machine-local merge: the same tree reduce as the
+                // cross-machine leg, applied to the T sub-deltas with
+                // their global n_k/n leaf weights — wire-free, so its
+                // message sizes are *not* charged. A flat tree over m·T
+                // leaves factors into exactly this local tree followed by
+                // the cross-machine tree for power-of-two T (bit parity,
+                // DESIGN.md §10). The machine's modeled time is the max
+                // over its concurrent sub-legs.
+                let delta = if t == 1 {
+                    sub.results.into_iter().next().expect("one sub-solver")
+                } else {
+                    tree_allreduce_delta(sub.results, &weights[l * t..l * t + group.len()]).0
+                };
+                (delta, sub.parallel_secs)
             });
-            (run.results, run.parallel_secs)
+            let mut deltas = Vec::with_capacity(run.results.len());
+            let mut machine_secs = 0.0f64;
+            for (delta, secs) in run.results {
+                deltas.push(delta);
+                machine_secs = machine_secs.max(secs);
+            }
+            (deltas, machine_secs)
         };
         self.pending.clear();
 
@@ -446,8 +554,14 @@ where
         // the wire (sparse index/value pairs in the mini-batch regime,
         // dense vectors otherwise); the reduce also reports the largest
         // message carried on any tree edge — merged supports grow toward
-        // the root — which is what the cost model charges.
-        let (delta_v, reduce_elems) = tree_allreduce_delta(results, &self.weights);
+        // the root — which is what the cost model charges. With T > 1
+        // the machine deltas are already leaf-weighted by the local
+        // merge, so the cross-machine reduce runs with unit weights.
+        let (delta_v, reduce_elems) = if t == 1 {
+            tree_allreduce_delta(results, &self.weights)
+        } else {
+            tree_allreduce_delta(results, &self.unit_weights)
+        };
         delta_v.add_into(&mut self.v);
         self.scratch.v_tilde_old.copy_from_slice(&self.v_tilde);
         self.global_sync();
@@ -484,7 +598,10 @@ where
         };
 
         // --- Accounting ---
-        let m = self.weights.len();
+        // Comm participants are the *physical* machines: the T sub-deltas
+        // merged inside a machine never touch the wire — that is the
+        // whole point of the hierarchy.
+        let m = self.machines();
         let comm = if self.opts.sparse_comm {
             // Charge the actual message sizes: the reduce leg by the
             // largest message anywhere in its tree (leaf or merged), the
@@ -502,8 +619,13 @@ where
         (parallel_secs, comm)
     }
 
-    /// Distributed loss sum `Σ_i φ_i(x_iᵀ w)` at an arbitrary `w`
-    /// (one parallel pass; also used by Acc-DADM's original-problem gap).
+    /// Distributed loss sum `Σ_i φ_i(x_iᵀ w)` at an arbitrary `w` (one
+    /// parallel pass, sub-shard-parallel inside each machine; also used
+    /// by Acc-DADM's original-problem gap). Per-machine partials combine
+    /// by pairwise [`tree_sum`] — locally over the `T` sub-shard sums,
+    /// then over the `m` machine sums — the combination that makes a
+    /// nested evaluation bit-identical to a flat `m·T` one (DESIGN.md
+    /// §10) and that the TCP coordinator replicates.
     pub fn loss_sum_at(&mut self, w: &[f64]) -> f64 {
         if let Some(h) = self.opts.cluster.tcp() {
             return h
@@ -511,14 +633,19 @@ where
                 .expect("tcp loss-sum eval failed");
         }
         let loss = &self.loss;
-        let run = self
-            .opts
-            .cluster
-            .run(&mut self.machines, |_, m| m.state.primal_loss_sum(loss, w));
-        run.results.iter().sum()
+        let cluster = self.opts.cluster.clone();
+        let par = cluster.parallel_local();
+        let mut groups: Vec<&mut [Machine]> =
+            self.machines.chunks_mut(self.local_threads).collect();
+        let run = cluster.run(&mut groups, |_, group| {
+            tree_sum(&run_subgroup(par, group, |_, m| m.state.primal_loss_sum(loss, w)).results)
+        });
+        tree_sum(&run.results)
     }
 
-    /// Distributed conjugate sum `Σ_i −φ_i*(−α_i)` at the current duals.
+    /// Distributed conjugate sum `Σ_i −φ_i*(−α_i)` at the current duals
+    /// (same hierarchical pass and [`tree_sum`] combination as
+    /// [`Dadm::loss_sum_at`]).
     pub fn conj_sum(&mut self) -> f64 {
         if let Some(h) = self.opts.cluster.tcp() {
             return h
@@ -526,18 +653,26 @@ where
                 .expect("tcp conjugate-sum eval failed");
         }
         let loss = &self.loss;
-        let run = self
-            .opts
-            .cluster
-            .run(&mut self.machines, |_, m| m.state.dual_conj_sum(loss));
-        run.results.iter().sum()
+        let cluster = self.opts.cluster.clone();
+        let par = cluster.parallel_local();
+        let mut groups: Vec<&mut [Machine]> =
+            self.machines.chunks_mut(self.local_threads).collect();
+        let run = cluster.run(&mut groups, |_, group| {
+            tree_sum(&run_subgroup(par, group, |_, m| m.state.dual_conj_sum(loss)).results)
+        });
+        tree_sum(&run.results)
     }
 
     /// Exact primal objective `P(w) = Σφ_i(x_iᵀw) + λn·g(w) + h(w)` at the
-    /// current iterate.
+    /// current iterate. The iterate is lent to the distributed pass via
+    /// `mem::take` rather than cloned — at `d = 10⁵` with `--gap-every 1`
+    /// the old per-evaluation clone moved 800 KB per round for nothing
+    /// (nothing in the eval leg reads `self.w`; the buffer is restored
+    /// before returning).
     pub fn primal(&mut self) -> f64 {
-        let w = self.w.clone();
+        let w = std::mem::take(&mut self.w);
         let loss_sum = self.loss_sum_at(&w);
+        self.w = w;
         loss_sum + self.lambda * self.n as f64 * self.reg.value(&self.w) + self.h.value(&self.w)
     }
 

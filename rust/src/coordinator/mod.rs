@@ -35,5 +35,5 @@ pub mod owlqn_driver;
 
 pub use acc_dadm::{AccDadm, AccDadmOptions, NuChoice};
 pub use checkpoint::Checkpoint;
-pub use dadm::{Dadm, DadmOptions, SolveReport};
+pub use dadm::{resolve_local_threads, Dadm, DadmOptions, SolveReport};
 pub use owlqn_driver::{run_owlqn_distributed, DistributedOwlqn, OwlqnDriverReport};

@@ -22,8 +22,9 @@
 //! primal and `0.0` as the dual. [`run_owlqn_distributed`] is the batch
 //! wrapper the benches use.
 
+use super::dadm::resolve_local_threads;
 use crate::comm::allreduce::tree_allreduce;
-use crate::comm::{Cluster, CostModel};
+use crate::comm::{run_subgroup, Cluster, CostModel};
 use crate::data::{Dataset, Partition};
 use crate::loss::Loss;
 use crate::runtime::engine::{Driver, RoundAlgorithm, RoundOutcome};
@@ -51,7 +52,11 @@ pub struct OwlqnDriverReport {
 /// Distributed OWL-QN as a [`RoundAlgorithm`].
 #[derive(Debug)]
 pub struct DistributedOwlqn<L> {
+    /// Logical shard states (`m·T` under hierarchical parallelism,
+    /// dispatched in groups of `local_threads` — DESIGN.md §10).
     workers: Vec<WorkerState>,
+    /// Resolved intra-machine thread count `T`.
+    local_threads: usize,
     loss: L,
     lambda: f64,
     owlqn: Owlqn,
@@ -68,13 +73,19 @@ pub struct DistributedOwlqn<L> {
 /// One distributed smooth-part oracle evaluation:
 /// `f(w) = (1/n)Σφ + (λ/2)‖w‖²` with its gradient, one fused pass over
 /// every shard plus one `(d+1)`-float allreduce, charged to the modeled
-/// compute/comm accumulators. On the TCP backend the per-shard pass runs
-/// in the worker processes (`Eval::GradOracle` frames) and returns the
-/// identical raw sums, so the reduced oracle is bit-identical across
-/// backends.
+/// compute/comm accumulators. Each machine runs its `T` sub-shard passes
+/// concurrently and pre-reduces the `T` raw-sum vectors machine-locally
+/// (unit-weight tree — wire-free), so the cross-machine reduce sees one
+/// `(d+1)`-vector per physical machine; for power-of-two `T` the
+/// factored reduction is bit-identical to a flat `m·T` one (DESIGN.md
+/// §10). On the TCP backend the per-shard pass and the local pre-reduce
+/// run in the worker processes (`Eval::GradOracle` frames) and return
+/// the identical machine vectors, so the reduced oracle is bit-identical
+/// across backends.
 #[allow(clippy::too_many_arguments)]
 fn oracle_eval<L: Loss>(
     workers: &mut [WorkerState],
+    local_threads: usize,
     loss: &L,
     lambda: f64,
     n: f64,
@@ -85,21 +96,35 @@ fn oracle_eval<L: Loss>(
     comm_secs: &mut f64,
     w: &[f64],
 ) -> (f64, Vec<f64>) {
-    let (results, parallel_secs, m) = if let Some(h) = cluster.tcp() {
-        let (grads, par) = h
-            .with(|c| c.eval_gradients(w))
-            .expect("tcp gradient oracle failed");
-        let m = grads.len();
-        (grads, par, m)
+    let (results, parallel_secs) = if let Some(h) = cluster.tcp() {
+        h.with(|c| c.eval_gradients(w))
+            .expect("tcp gradient oracle failed")
     } else {
-        let m = workers.len();
-        // Per-worker (Σφ_i, Σ x_i·φ'_i) — one fused pass over the shard,
-        // via the same `grad_oracle_sums` the TCP worker runs.
-        let run = cluster.run(workers, |_, ws: &mut WorkerState| {
-            ws.grad_oracle_sums(loss, w)
+        // Per-worker (Σφ_i, Σ x_i·φ'_i) — one fused pass over each
+        // sub-shard, via the same `grad_oracle_sums` the TCP worker runs.
+        let par = cluster.parallel_local();
+        let mut groups: Vec<&mut [WorkerState]> = workers.chunks_mut(local_threads).collect();
+        let run = cluster.run(&mut groups, |_, group| {
+            let mut sub = run_subgroup(par, group, |_, ws| ws.grad_oracle_sums(loss, w));
+            // Single sub-shard: the unit-weight pre-reduce is a bitwise
+            // identity (1.0 · v), so skip its O(d) copy on the default
+            // T = 1 path.
+            let machine = if sub.results.len() == 1 {
+                sub.results.pop().expect("one sub-shard")
+            } else {
+                tree_allreduce(&sub.results, &vec![1.0; sub.results.len()])
+            };
+            (machine, sub.parallel_secs)
         });
-        (run.results, run.parallel_secs, m)
+        let mut vectors = Vec::with_capacity(run.results.len());
+        let mut machine_secs = 0.0f64;
+        for (v, secs) in run.results {
+            vectors.push(v);
+            machine_secs = machine_secs.max(secs);
+        }
+        (vectors, machine_secs)
     };
+    let m = results.len(); // physical machines = comm participants
     *compute_secs += parallel_secs;
     *comm_secs += cost.allreduce_time(m, d + 1);
     // Weighted by 1 (raw sums; balanced weighting is implicit), then
@@ -112,7 +137,10 @@ fn oracle_eval<L: Loss>(
 }
 
 impl<L: Loss> DistributedOwlqn<L> {
-    /// Build for the experiments objective on `part.machines()` workers.
+    /// Build for the experiments objective on `part.machines()` workers,
+    /// each evaluating its shard with `local_threads` sub-shard legs
+    /// (`1` = the previous serial per-machine pass, `0` = auto from the
+    /// core count).
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         data: &Dataset,
@@ -123,15 +151,23 @@ impl<L: Loss> DistributedOwlqn<L> {
         max_passes: usize,
         cluster: Cluster,
         cost: CostModel,
+        local_threads: usize,
     ) -> Self {
-        let m = part.machines();
+        let t = resolve_local_threads(local_threads, part);
+        let lpart_owned;
+        let lpart: &Partition = if t == 1 {
+            part
+        } else {
+            lpart_owned = part.split(t);
+            &lpart_owned
+        };
         // Under the TCP backend the shards live in the worker processes;
         // no local copies are built.
         let workers: Vec<WorkerState> = if cluster.is_tcp() {
             Vec::new()
         } else {
-            (0..m)
-                .map(|l| WorkerState::from_partition(data, part, l))
+            (0..lpart.machines())
+                .map(|k| WorkerState::from_partition(data, lpart, k))
                 .collect()
         };
         let owlqn = Owlqn::new(OwlqnOptions {
@@ -143,6 +179,7 @@ impl<L: Loss> DistributedOwlqn<L> {
         });
         DistributedOwlqn {
             workers,
+            local_threads: t,
             loss,
             lambda,
             owlqn,
@@ -189,6 +226,7 @@ impl<L: Loss> RoundAlgorithm for DistributedOwlqn<L> {
     fn prepare(&mut self) {
         let DistributedOwlqn {
             workers,
+            local_threads,
             loss,
             lambda,
             owlqn,
@@ -204,6 +242,7 @@ impl<L: Loss> RoundAlgorithm for DistributedOwlqn<L> {
         let mut oracle = |w: &[f64]| {
             oracle_eval(
                 workers,
+                *local_threads,
                 loss,
                 *lambda,
                 *n as f64,
@@ -221,6 +260,7 @@ impl<L: Loss> RoundAlgorithm for DistributedOwlqn<L> {
     fn round(&mut self) -> RoundOutcome {
         let DistributedOwlqn {
             workers,
+            local_threads,
             loss,
             lambda,
             owlqn,
@@ -237,6 +277,7 @@ impl<L: Loss> RoundAlgorithm for DistributedOwlqn<L> {
         let mut oracle = |w: &[f64]| {
             oracle_eval(
                 workers,
+                *local_threads,
                 loss,
                 *lambda,
                 *n as f64,
@@ -301,8 +342,19 @@ pub fn run_owlqn_distributed<L: Loss + Clone>(
     max_passes: usize,
     cluster: Cluster,
     cost: CostModel,
+    local_threads: usize,
 ) -> OwlqnDriverReport {
-    let mut algo = DistributedOwlqn::new(data, part, loss, lambda, mu, max_passes, cluster, cost);
+    let mut algo = DistributedOwlqn::new(
+        data,
+        part,
+        loss,
+        lambda,
+        mu,
+        max_passes,
+        cluster,
+        cost,
+        local_threads,
+    );
     let report = Driver::new(0.0, max_passes).solve(&mut algo);
     let wall = report.trace.last().map(|r| r.wall_secs).unwrap_or(0.0);
     algo.into_report(wall)
@@ -327,6 +379,7 @@ mod tests {
             60,
             Cluster::Serial,
             CostModel::free(),
+            1,
         );
         assert!(report.passes >= 2);
         let first = report.objective_per_pass[0];
@@ -349,6 +402,7 @@ mod tests {
                 30,
                 Cluster::Serial,
                 CostModel::free(),
+                1,
             )
         };
         let a = run(1);
@@ -377,6 +431,7 @@ mod tests {
             max_passes,
             Cluster::Serial,
             CostModel::free(),
+            1,
         );
         let n = data.n() as f64;
         let d = data.dim();
@@ -419,6 +474,34 @@ mod tests {
     }
 
     #[test]
+    fn local_threads_match_flat_logical_machines() {
+        // (m, T) with power-of-two T must reproduce the flat m·T run bit
+        // for bit: same logical shards (split == balanced when m·T | n),
+        // same tree-factored oracle reduction (DESIGN.md §10).
+        let data = tiny_classification(240, 5, 36);
+        let run = |m: usize, t: usize| {
+            let part = Partition::balanced(240, m, 36);
+            run_owlqn_distributed(
+                &data,
+                &part,
+                Logistic,
+                1e-3,
+                1e-4,
+                25,
+                Cluster::Serial,
+                CostModel::free(),
+                t,
+            )
+        };
+        let nested = run(2, 2);
+        let flat = run(4, 1);
+        assert_eq!(nested.w, flat.w, "nested OWL-QN diverged from flat");
+        assert_eq!(nested.objective.to_bits(), flat.objective.to_bits());
+        assert_eq!(nested.passes, flat.passes);
+        assert_eq!(nested.objective_per_pass, flat.objective_per_pass);
+    }
+
+    #[test]
     fn comm_cost_counted_per_evaluation() {
         let data = tiny_classification(100, 4, 33);
         let part = Partition::balanced(100, 4, 33);
@@ -431,6 +514,7 @@ mod tests {
             20,
             Cluster::Serial,
             CostModel::default(),
+            1,
         );
         assert!(report.comm_secs > 0.0);
     }
@@ -449,6 +533,7 @@ mod tests {
             100,
             Cluster::Serial,
             CostModel::free(),
+            1,
         );
         // ∇F(w*) ≈ 0: check via finite difference of the objective.
         let f = |w: &[f64]| {

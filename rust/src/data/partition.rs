@@ -75,6 +75,39 @@ impl Partition {
             .fold(0.0, f64::max)
     }
 
+    /// Smallest shard size `min_ℓ n_ℓ` — the upper bound on how many
+    /// sub-shards a machine can be split into ([`Partition::split`]).
+    pub fn min_shard(&self) -> usize {
+        self.shards.iter().map(Vec::len).min().unwrap_or(0)
+    }
+
+    /// Sub-partition every machine's shard into `t` contiguous balanced
+    /// sub-shards (hierarchical parallelism, DESIGN.md §10): the result
+    /// has `m·t` *logical* machines where logical shard `ℓ·t + k` is the
+    /// `k`-th contiguous chunk of machine `ℓ`'s shard, chunk sizes
+    /// differing by at most one within each machine.
+    ///
+    /// Because [`Partition::balanced`] splits one seeded shuffle into
+    /// contiguous chunks, `balanced(n, m, s).split(t)` is **identical**
+    /// to `balanced(n, m·t, s)` whenever `m·t` divides `n` — the property
+    /// that lets an `(m, t)` hierarchical solve reproduce a flat `m·t`
+    /// solve bit for bit (pinned in `rust/tests/local_threads.rs`).
+    pub fn split(&self, t: usize) -> Partition {
+        assert!(t >= 1, "need at least one sub-shard per machine");
+        let mut shards = Vec::with_capacity(self.shards.len() * t);
+        for shard in &self.shards {
+            assert!(
+                shard.len() >= t,
+                "cannot split a shard of {} examples into {t} sub-shards",
+                shard.len()
+            );
+            for r in split_ranges(shard.len(), t) {
+                shards.push(shard[r].to_vec());
+            }
+        }
+        Partition { shards, n: self.n }
+    }
+
     /// Verify partition invariants: disjoint cover of `{0..n}` with shard
     /// sizes differing by ≤ 1 (balanced variants only).
     pub fn check_invariants(&self, balanced: bool) -> anyhow::Result<()> {
@@ -94,6 +127,25 @@ impl Partition {
         }
         Ok(())
     }
+}
+
+/// The contiguous balanced chunking `{0..n} → t` ranges (sizes differ by
+/// at most one, larger chunks first) shared by [`Partition::split`] and
+/// the TCP worker's local sub-shard reconstruction — one formula, so the
+/// coordinator's logical partition and a remote worker's locally-derived
+/// sub-shards can never disagree (DESIGN.md §10).
+pub fn split_ranges(n: usize, t: usize) -> Vec<std::ops::Range<usize>> {
+    assert!(t >= 1 && n >= t, "cannot split {n} examples into {t} chunks");
+    let base = n / t;
+    let extra = n % t;
+    let mut out = Vec::with_capacity(t);
+    let mut cursor = 0usize;
+    for k in 0..t {
+        let size = base + usize::from(k < extra);
+        out.push(cursor..cursor + size);
+        cursor += size;
+    }
+    out
 }
 
 #[cfg(test)]
@@ -161,5 +213,72 @@ mod tests {
     #[should_panic]
     fn rejects_more_machines_than_examples() {
         Partition::balanced(3, 5, 0);
+    }
+
+    #[test]
+    fn split_ranges_are_balanced_and_cover() {
+        for &(n, t) in &[(10, 3), (12, 4), (7, 7), (100, 1), (5, 2)] {
+            let rs = split_ranges(n, t);
+            assert_eq!(rs.len(), t);
+            assert_eq!(rs[0].start, 0);
+            assert_eq!(rs.last().unwrap().end, n);
+            for pair in rs.windows(2) {
+                assert_eq!(pair[0].end, pair[1].start, "ranges must be contiguous");
+            }
+            let min = rs.iter().map(|r| r.len()).min().unwrap();
+            let max = rs.iter().map(|r| r.len()).max().unwrap();
+            assert!(max - min <= 1, "unbalanced chunks: {min}..{max}");
+            assert!(min >= 1);
+        }
+    }
+
+    #[test]
+    fn split_preserves_cover_and_order() {
+        let p = Partition::balanced(100, 4, 7);
+        let s = p.split(3);
+        assert_eq!(s.machines(), 12);
+        assert_eq!(s.total(), 100);
+        s.check_invariants(false).unwrap();
+        // Sub-shards of machine ℓ concatenate back to ℓ's shard in order.
+        for l in 0..4 {
+            let rebuilt: Vec<usize> = (0..3).flat_map(|k| s.shard(l * 3 + k).to_vec()).collect();
+            assert_eq!(rebuilt, p.shard(l));
+        }
+    }
+
+    #[test]
+    fn split_one_is_identity() {
+        let p = Partition::balanced(57, 5, 9);
+        let s = p.split(1);
+        for l in 0..5 {
+            assert_eq!(s.shard(l), p.shard(l));
+        }
+    }
+
+    #[test]
+    fn split_matches_flat_balanced_when_divisible() {
+        // The bit-parity anchor: when m·t | n, splitting the m-machine
+        // partition reproduces the flat m·t-machine partition exactly.
+        for &(n, m, t) in &[(240, 2, 2), (240, 3, 4), (64, 4, 4), (96, 2, 8)] {
+            assert_eq!(n % (m * t), 0);
+            let nested = Partition::balanced(n, m, 11).split(t);
+            let flat = Partition::balanced(n, m * t, 11);
+            assert_eq!(nested.machines(), flat.machines());
+            for k in 0..m * t {
+                assert_eq!(nested.shard(k), flat.shard(k), "shard {k} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn min_shard_reports_smallest() {
+        let p = Partition::balanced(10, 3, 0); // sizes 4, 3, 3
+        assert_eq!(p.min_shard(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn split_rejects_oversized_t() {
+        Partition::balanced(10, 3, 0).split(4); // min shard is 3
     }
 }

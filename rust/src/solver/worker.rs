@@ -19,6 +19,25 @@ pub fn machine_rng(seed: u64, l: usize) -> Rng {
     rng
 }
 
+/// The `count` consecutive logical-machine RNG streams starting at index
+/// `first`, with one replay of the fork sequence (instead of `count`
+/// O(first) replays of [`machine_rng`]). Under hierarchical parallelism
+/// (DESIGN.md §10) machine `l` hosts logical sub-solvers
+/// `l·T .. l·T + T`, so a remote TCP worker calls
+/// `machine_rngs(seed, l * t, t)` and gets streams bit-identical to the
+/// coordinator's flat `machine_rng(seed, l·T + k)` forks.
+pub fn machine_rngs(seed: u64, first: usize, count: usize) -> Vec<Rng> {
+    let mut seed_rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(count);
+    for i in 0..(first + count) as u64 {
+        let rng = seed_rng.fork(i);
+        if i >= first as u64 {
+            out.push(rng);
+        }
+    }
+    out
+}
+
 /// Mini-batch size `M_ℓ = ⌈sp · n_ℓ⌉`, clamped into `[1, n_ℓ]` — the one
 /// formula both the coordinator and remote TCP workers must share.
 pub fn batch_size(sp: f64, n_l: usize) -> usize {
@@ -234,6 +253,26 @@ mod tests {
             let mut got = machine_rng(seed, l);
             for _ in 0..50 {
                 assert_eq!(got.next_u64(), want.next_u64(), "stream {l} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn machine_rngs_match_per_index_replay() {
+        let seed = 0xF0_0D;
+        for (first, count) in [(0usize, 4usize), (3, 2), (6, 1), (2, 0)] {
+            let got = machine_rngs(seed, first, count);
+            assert_eq!(got.len(), count);
+            for (k, mut rng) in got.into_iter().enumerate() {
+                let mut want = machine_rng(seed, first + k);
+                for _ in 0..40 {
+                    assert_eq!(
+                        rng.next_u64(),
+                        want.next_u64(),
+                        "stream {} diverged",
+                        first + k
+                    );
+                }
             }
         }
     }

@@ -1,0 +1,278 @@
+//! Hierarchical intra-machine parallelism (DESIGN.md §10): an `(m, T)`
+//! solve is DADM over `m·T` logical machines, so with power-of-two `T`
+//! it must reproduce the flat `m·T`-machine solve **bit for bit** —
+//! same sub-shard RNG draws, same per-round deltas, same trace math
+//! fields, same final iterate — on every in-process backend (the TCP
+//! twin lives in `comm/tcp.rs` and `rust/tests/tcp_cluster.rs`).
+
+use dadm::comm::{Cluster, CostModel};
+use dadm::coordinator::resolve_local_threads;
+use dadm::data::synthetic::tiny_classification;
+use dadm::data::{Dataset, Partition};
+use dadm::loss::SmoothHinge;
+use dadm::reg::{ElasticNet, Zero};
+use dadm::solver::{machine_rng, machine_rngs, ProxSdca};
+use dadm::testing::prop::for_each_case;
+use dadm::{AccDadm, AccDadmOptions, Dadm, DadmOptions, SolveReport};
+
+type TestDadm = Dadm<SmoothHinge, ElasticNet, Zero, ProxSdca>;
+
+fn build(
+    data: &Dataset,
+    part: &Partition,
+    cluster: Cluster,
+    sp: f64,
+    local_threads: usize,
+) -> TestDadm {
+    Dadm::new(
+        data,
+        part,
+        SmoothHinge::default(),
+        ElasticNet::new(0.1),
+        Zero,
+        1e-3,
+        ProxSdca,
+        DadmOptions {
+            sp,
+            cluster,
+            cost: CostModel::free(),
+            local_threads,
+            ..Default::default()
+        },
+    )
+}
+
+/// The deterministic math fields of a trace (modeled compute is
+/// wall-clock-measured and modeled comm intentionally differs between a
+/// nested solve — m wire participants — and its flat m·T equivalent).
+fn math_fields(report: &SolveReport) -> Vec<(usize, u64, u64, u64)> {
+    report
+        .trace
+        .rounds
+        .iter()
+        .map(|r| {
+            (
+                r.round,
+                r.passes.to_bits(),
+                r.primal.to_bits(),
+                r.dual.to_bits(),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn nested_rng_streams_equal_flat_machine_streams() {
+    // Sub-shard k of machine l draws from fork l·T + k — identical to
+    // flat logical machine l·T + k (the satellite's RNG-draw property).
+    let seed = 0x5EED;
+    for (m, t) in [(2usize, 2usize), (3, 4), (1, 8)] {
+        for l in 0..m {
+            let streams = machine_rngs(seed, l * t, t);
+            for (k, mut got) in streams.into_iter().enumerate() {
+                let mut flat = machine_rng(seed, l * t + k);
+                for _ in 0..64 {
+                    assert_eq!(got.next_u64(), flat.next_u64(), "m={m} t={t} l={l} k={k}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn one_round_state_is_bit_identical_to_flat() {
+    // After any number of rounds, every logical machine's dual state
+    // (α, ṽ, w) in the nested solve equals the corresponding flat
+    // machine's, bit for bit — which pins the per-round sub-deltas too
+    // (they are deterministic functions of that state and the RNG).
+    let n = 240; // divisible by m·T = 8 → split == flat balanced
+    let data = tiny_classification(n, 6, 42);
+    let part = Partition::balanced(n, 2, 42);
+    let flat_part = Partition::balanced(n, 8, 42);
+
+    let mut nested = build(&data, &part, Cluster::Serial, 0.3, 4);
+    let mut flat = build(&data, &flat_part, Cluster::Serial, 0.3, 1);
+    nested.resync();
+    flat.resync();
+    for _ in 0..4 {
+        nested.round();
+        flat.round();
+    }
+    assert_eq!(nested.w(), flat.w());
+    assert_eq!(nested.v(), flat.v());
+    let flat_states: Vec<_> = flat
+        .machine_states()
+        .map(|ws| (ws.alpha.clone(), ws.v_tilde.clone(), ws.w.clone()))
+        .collect();
+    for (k, ws) in nested.machine_states().enumerate() {
+        assert_eq!(ws.alpha, flat_states[k].0, "α diverged on logical machine {k}");
+        assert_eq!(ws.v_tilde, flat_states[k].1, "ṽ diverged on logical machine {k}");
+        assert_eq!(ws.w, flat_states[k].2, "w diverged on logical machine {k}");
+    }
+}
+
+#[test]
+fn dadm_trace_matches_flat_on_serial_and_threads() {
+    // Full-solve bit parity: (m = 2, T = 2) vs flat m = 4, on both
+    // in-process backends (the acceptance pin of ISSUE 4).
+    let n = 240;
+    let data = tiny_classification(n, 8, 91);
+    let part = Partition::balanced(n, 2, 91);
+    let flat_part = Partition::balanced(n, 4, 91);
+    for cluster in [Cluster::Serial, Cluster::Threads] {
+        let mut nested = build(&data, &part, cluster.clone(), 0.25, 2);
+        let nested_report = nested.solve(1e-6, 40);
+        let mut flat = build(&data, &flat_part, cluster.clone(), 0.25, 1);
+        let flat_report = flat.solve(1e-6, 40);
+        assert_eq!(nested_report.converged, flat_report.converged);
+        assert_eq!(
+            math_fields(&nested_report),
+            math_fields(&flat_report),
+            "trace diverged on {cluster:?}"
+        );
+        assert_eq!(nested_report.w, flat_report.w, "iterates diverged on {cluster:?}");
+        assert_eq!(nested.machines(), 2);
+        assert_eq!(nested.local_threads(), 2);
+        assert_eq!(flat.machines(), 4);
+    }
+}
+
+#[test]
+fn serial_and_threads_agree_under_local_threads() {
+    // The threaded backend (pool sub-queue dispatch) must be bit-equal
+    // to the serial one at the same (m, T) — including non-power-of-two
+    // T, where flat parity is not claimed but backend parity is.
+    let n = 210;
+    let data = tiny_classification(n, 6, 7);
+    let part = Partition::balanced(n, 2, 7);
+    for t in [2usize, 3, 4] {
+        let mut serial = build(&data, &part, Cluster::Serial, 0.3, t);
+        let mut threads = build(&data, &part, Cluster::Threads, 0.3, t);
+        serial.resync();
+        threads.resync();
+        for round in 0..6 {
+            serial.round();
+            threads.round();
+            assert_eq!(serial.w(), threads.w(), "T={t} diverged at round {round}");
+        }
+        assert_eq!(serial.gap().to_bits(), threads.gap().to_bits(), "T={t}");
+        serial.check_v_invariant().unwrap();
+        threads.check_v_invariant().unwrap();
+    }
+}
+
+#[test]
+fn prop_one_round_parity_across_shapes() {
+    // Random (m, power-of-two T, sp) shapes with m·T | n: one nested
+    // round equals one flat round bit for bit on both backends.
+    for_each_case(0x10CA1, 12, |g| {
+        let m = g.usize_in(1, 4);
+        let t = 1usize << g.usize_in(0, 3); // 1, 2, 4
+        let per = g.usize_in(2, 7);
+        let n = m * t * per * 4;
+        let sp = [0.2, 0.5, 1.0][g.usize_in(0, 3)];
+        let seed = g.rng().next_u64();
+        let data = tiny_classification(n, 5, seed);
+        let part = Partition::balanced(n, m, seed);
+        let flat_part = Partition::balanced(n, m * t, seed);
+        let cluster = if g.bool(0.5) {
+            Cluster::Serial
+        } else {
+            Cluster::Threads
+        };
+        let mut nested = build(&data, &part, cluster.clone(), sp, t);
+        let mut flat = build(&data, &flat_part, cluster, sp, 1);
+        nested.resync();
+        flat.resync();
+        nested.round();
+        flat.round();
+        assert_eq!(nested.v(), flat.v(), "m={m} t={t} sp={sp}");
+        assert_eq!(nested.w(), flat.w(), "m={m} t={t} sp={sp}");
+        assert_eq!(nested.gap().to_bits(), flat.gap().to_bits(), "m={m} t={t}");
+    });
+}
+
+#[test]
+fn acc_dadm_trace_matches_flat() {
+    // Acc-DADM inherits the hierarchy through its inner DADM; the
+    // Remark-12 default κ uses the logical machine count m·T, so the
+    // nested and flat stage schedules are identical.
+    let n = 240;
+    let data = tiny_classification(n, 6, 19);
+    let part = Partition::balanced(n, 2, 19);
+    let flat_part = Partition::balanced(n, 4, 19);
+    let build_acc = |part: &Partition, t: usize| {
+        AccDadm::new(
+            &data,
+            part,
+            SmoothHinge::default(),
+            Zero,
+            1e-3,
+            1e-5,
+            ProxSdca,
+            AccDadmOptions {
+                dadm: DadmOptions {
+                    sp: 0.5,
+                    cost: CostModel::free(),
+                    local_threads: t,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+        )
+    };
+    let mut nested = build_acc(&part, 2);
+    let nested_report = nested.solve(1e-4, 30);
+    let mut flat = build_acc(&flat_part, 1);
+    let flat_report = flat.solve(1e-4, 30);
+    assert_eq!(nested.kappa.to_bits(), flat.kappa.to_bits(), "κ must agree");
+    assert_eq!(nested_report.rounds, flat_report.rounds);
+    assert_eq!(math_fields(&nested_report), math_fields(&flat_report));
+    assert_eq!(nested_report.w, flat_report.w, "Acc-DADM iterates diverged");
+    assert_eq!(nested.stages(), flat.stages());
+}
+
+#[test]
+fn auto_and_oversized_requests_resolve_safely() {
+    let part = Partition::balanced(12, 3, 5); // shards of 4
+    // Explicit oversized request clamps to the smallest shard.
+    assert_eq!(resolve_local_threads(64, &part), 4);
+    // Auto resolves to ≥ 1 and never exceeds the smallest shard.
+    let auto = resolve_local_threads(0, &part);
+    assert!((1..=4).contains(&auto), "auto resolved to {auto}");
+    // A tiny solve with an oversized request still runs (clamped).
+    let data = tiny_classification(12, 4, 5);
+    let mut dadm = build(&data, &part, Cluster::Serial, 1.0, 64);
+    assert_eq!(dadm.local_threads(), 4);
+    assert_eq!(dadm.machines(), 3);
+    let report = dadm.solve(1e-4, 50);
+    assert!(report.primal.is_finite());
+    dadm.check_v_invariant().unwrap();
+}
+
+#[test]
+fn checkpoint_resume_is_bit_exact_under_local_threads() {
+    // Snapshots store the logical machines (m·T dual blocks + RNG
+    // streams), so a nested solve resumes bit-exactly too.
+    let n = 160;
+    let data = tiny_classification(n, 5, 77);
+    let part = Partition::balanced(n, 2, 77);
+    let mut full = build(&data, &part, Cluster::Serial, 0.25, 2);
+    full.resync();
+    for _ in 0..8 {
+        full.round();
+    }
+    let mut first = build(&data, &part, Cluster::Serial, 0.25, 2);
+    first.resync();
+    for _ in 0..4 {
+        first.round();
+    }
+    let ck = first.checkpoint();
+    let mut resumed = build(&data, &part, Cluster::Serial, 0.25, 2);
+    resumed.restore(&ck).unwrap();
+    for _ in 0..4 {
+        resumed.round();
+    }
+    assert_eq!(resumed.w(), full.w(), "resumed nested trajectory diverged");
+    assert_eq!(resumed.gap().to_bits(), full.gap().to_bits());
+}

@@ -73,10 +73,11 @@ fn problem_spec() -> SyntheticSpec {
     }
 }
 
-fn build_dadm(
+fn build_dadm_t(
     data: &Dataset,
     part: &Partition,
     cluster: Cluster,
+    local_threads: usize,
 ) -> Dadm<SmoothHinge, ElasticNet, Zero, ProxSdca> {
     Dadm::new(
         data,
@@ -93,13 +94,22 @@ fn build_dadm(
             seed: RNG_SEED,
             gap_every: 1,
             sparse_comm: true,
+            local_threads,
         },
     )
 }
 
+fn build_dadm(
+    data: &Dataset,
+    part: &Partition,
+    cluster: Cluster,
+) -> Dadm<SmoothHinge, ElasticNet, Zero, ProxSdca> {
+    build_dadm_t(data, part, cluster, 1)
+}
+
 /// Start a loopback coordinator + child-process fleet, assigned and
-/// ready to solve.
-fn connected_fleet(spec: &SyntheticSpec) -> (TcpHandle, WorkerFleet) {
+/// ready to solve with `local_threads` sub-solvers per worker process.
+fn connected_fleet_t(spec: &SyntheticSpec, local_threads: usize) -> (TcpHandle, WorkerFleet) {
     let builder = TcpClusterBuilder::bind("127.0.0.1:0").expect("bind");
     let addr = builder.local_addr().expect("local addr").to_string();
     let fleet = WorkerFleet::spawn(&addr, MACHINES);
@@ -113,9 +123,14 @@ fn connected_fleet(spec: &SyntheticSpec) -> (TcpHandle, WorkerFleet) {
             SP,
             WireLoss::SmoothHinge(SmoothHinge::default()),
             WireSolver::ProxSdca,
+            local_threads,
         ))
         .expect("assigning partitions");
     (TcpHandle::new(cluster), fleet)
+}
+
+fn connected_fleet(spec: &SyntheticSpec) -> (TcpHandle, WorkerFleet) {
+    connected_fleet_t(spec, 1)
 }
 
 fn assert_traces_bit_identical(serial: &SolveReport, tcp: &SolveReport) {
@@ -191,6 +206,41 @@ fn tcp_solve_matches_serial_trace_bit_for_bit() {
     );
 
     // Orderly teardown: Shutdown frames, workers exit 0.
+    handle.with(|c| c.shutdown());
+    drop(tcp);
+    drop(handle);
+    fleet.join();
+}
+
+#[test]
+fn multithreaded_workers_match_serial_and_flat_trace_bit_for_bit() {
+    // Real `dadm worker` child processes each running T = 2 concurrent
+    // sub-shard solvers: the trace must be bit-identical to the nested
+    // in-process Serial solve, and both to a flat m·T = 8-machine Serial
+    // solve over the split partition (n = 320 is divisible by 8, so the
+    // split partition equals the flat balanced one — DESIGN.md §10).
+    let spec = problem_spec();
+    let data = spec.generate();
+    let part = Partition::balanced(data.n(), MACHINES, PART_SEED);
+
+    let mut serial = build_dadm_t(&data, &part, Cluster::Serial, 2);
+    let serial_report = serial.solve(1e-6, 30);
+
+    let flat_part = Partition::balanced(data.n(), MACHINES * 2, PART_SEED);
+    let mut flat = build_dadm_t(&data, &flat_part, Cluster::Serial, 1);
+    let flat_report = flat.solve(1e-6, 30);
+    // Flat comm accounting differs (8 wire participants vs 4), so
+    // compare the math fields + iterate, not comm seconds.
+    assert_eq!(serial_report.rounds, flat_report.rounds);
+    assert_eq!(serial_report.primal.to_bits(), flat_report.primal.to_bits());
+    assert_eq!(serial_report.dual.to_bits(), flat_report.dual.to_bits());
+    assert_eq!(serial_report.w, flat_report.w, "nested vs flat iterates differ");
+
+    let (handle, fleet) = connected_fleet_t(&spec, 2);
+    let mut tcp = build_dadm_t(&data, &part, Cluster::Tcp(handle.clone()), 2);
+    let tcp_report = tcp.solve(1e-6, 30);
+    assert_traces_bit_identical(&serial_report, &tcp_report);
+
     handle.with(|c| c.shutdown());
     drop(tcp);
     drop(handle);

@@ -1,0 +1,114 @@
+#!/usr/bin/env python3
+"""Diff a fresh BENCH_*.json against the committed baseline.
+
+Usage:
+    bench_diff.py BASELINE.json FRESH.json [--threshold=1.25]
+
+Both files are BenchTable JSON artifacts ({"bench", "meta", "header",
+"rows"}). Rows are keyed by (bench, config) — the first two columns —
+and the third column is the median time as emitted by `fmt_secs`
+(e.g. "1.5µs", "2.30ms", "0.123s", "40.0ns"). The gate FAILS (exit 1)
+when any row present in both files regresses past the threshold
+(fresh > baseline * threshold, default 1.25 = the 25% budget), or when
+fewer than half of the baseline's timed rows could be matched (which
+means the bench configs drifted and the baseline needs a refresh).
+
+Rows whose median is not a time (e.g. "skipped") are ignored. Rows
+missing on either side are reported but only count toward the
+match-coverage check. Speedups are reported, never required.
+
+The committed baseline may be *seeded* (meta.provenance starts with
+"seeded"): conservative upper bounds written before the first CI
+artifact existed. Refresh it by copying a bench-smoke artifact's
+BENCH_perf_hotpath.json rows into BENCH_baseline.json (keep the meta
+block, update provenance) — the gate tightens automatically.
+"""
+
+import json
+import re
+import sys
+
+TIME_RE = re.compile(r"^([0-9]+(?:\.[0-9]+)?)(ns|µs|us|ms|s)$")
+SCALE = {"ns": 1e-9, "µs": 1e-6, "us": 1e-6, "ms": 1e-3, "s": 1.0}
+
+
+def parse_secs(cell):
+    m = TIME_RE.match(cell.strip())
+    if not m:
+        return None
+    return float(m.group(1)) * SCALE[m.group(2)]
+
+
+def load_rows(path):
+    with open(path, encoding="utf-8") as f:
+        doc = json.load(f)
+    rows = {}
+    for row in doc.get("rows", []):
+        if len(row) < 3:
+            continue
+        secs = parse_secs(row[2])
+        if secs is not None:
+            rows[(row[0], row[1])] = secs
+    return doc, rows
+
+
+def main(argv):
+    args, threshold = [], 1.25
+    for a in argv[1:]:
+        if a.startswith("--threshold="):
+            threshold = float(a.split("=", 1)[1])
+        elif a.startswith("--"):
+            print(f"unknown flag {a} (use --threshold=X)")
+            return 2
+        else:
+            args.append(a)
+    if len(args) != 2:
+        print(__doc__)
+        return 2
+    base_doc, base = load_rows(args[0])
+    _, fresh = load_rows(args[1])
+
+    provenance = base_doc.get("meta", {}).get("provenance", "")
+    if provenance.startswith("seeded"):
+        print(
+            f"note: baseline is seeded with conservative upper bounds "
+            f"({provenance}); refresh it from a CI bench artifact to tighten the gate"
+        )
+
+    regressions, matched = [], 0
+    for key in sorted(base):
+        bench, config = key
+        if key not in fresh:
+            print(f"MISSING  {bench} [{config}]: not in fresh run")
+            continue
+        matched += 1
+        b, f = base[key], fresh[key]
+        ratio = f / b if b > 0 else float("inf")
+        status = "ok"
+        if ratio > threshold:
+            status = "REGRESSED"
+            regressions.append((bench, config, b, f, ratio))
+        print(f"{status:>9}  {bench} [{config}]: {b * 1e3:.3f}ms -> {f * 1e3:.3f}ms ({ratio:.2f}x)")
+    for key in sorted(set(fresh) - set(base)):
+        print(f"NEW      {key[0]} [{key[1]}]: {fresh[key] * 1e3:.3f}ms (no baseline yet)")
+
+    if regressions:
+        print(f"\nFAIL: {len(regressions)} row(s) regressed past {threshold:.2f}x:")
+        for bench, config, b, f, ratio in regressions:
+            print(f"  {bench} [{config}]: {b * 1e3:.3f}ms -> {f * 1e3:.3f}ms ({ratio:.2f}x)")
+        return 1
+    if not base:
+        print("FAIL: baseline has no timed rows")
+        return 1
+    if matched * 2 < len(base):
+        print(
+            f"\nFAIL: only {matched}/{len(base)} baseline rows matched — bench "
+            f"configs drifted; refresh BENCH_baseline.json from the artifact"
+        )
+        return 1
+    print(f"\nPASS: {matched}/{len(base)} rows within {threshold:.2f}x of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
