@@ -67,6 +67,7 @@ fn solve(
             gap_every: 1,
             sparse_comm: true,
             local_threads,
+            conj_resum_every: 64,
         },
     );
     dadm.solve(EPS, MAX_ROUNDS)
@@ -163,6 +164,111 @@ fn main() -> Result<()> {
         if stats.bytes_sent == 0 || stats.bytes_received == 0 {
             bail!("no wire traffic recorded");
         }
+
+        // --- Fused-gap wire check (DESIGN.md §11): a --gap-every 1 run
+        // with fused telemetry must move strictly fewer bytes than the
+        // legacy LossSumAt pattern, which re-ships the 8·d-byte iterate
+        // to every worker for each gap evaluation. Re-assigning resets
+        // the worker fleet's dual state between the two measurements. ---
+        let wire_rounds = 10usize;
+        let reassign = |handle: &TcpHandle| -> Result<()> {
+            handle.with(|c| {
+                c.assign(synthetic_specs(
+                    &problem,
+                    MACHINES,
+                    PART_SEED,
+                    RNG_SEED,
+                    SP,
+                    WireLoss::SmoothHinge(SmoothHinge::default()),
+                    WireSolver::ProxSdca,
+                    local_threads,
+                ))
+            })
+        };
+
+        reassign(&handle)?;
+        let before = handle.stats().total_bytes();
+        let fused = |cluster: Cluster| -> SolveReport {
+            let mut dadm = Dadm::new(
+                &data,
+                &part,
+                SmoothHinge::default(),
+                ElasticNet::new(0.1),
+                Zero,
+                1e-2,
+                ProxSdca,
+                DadmOptions {
+                    sp: SP,
+                    cluster,
+                    cost: CostModel::default(),
+                    seed: RNG_SEED,
+                    gap_every: 1,
+                    sparse_comm: true,
+                    local_threads,
+                    conj_resum_every: 64,
+                },
+            );
+            dadm.solve(0.0, wire_rounds) // eps 0: run all rounds, record each
+        };
+        let fused_report = fused(Cluster::Tcp(handle.clone()));
+        let fused_bytes = handle.stats().total_bytes() - before;
+
+        reassign(&handle)?;
+        let before = handle.stats().total_bytes();
+        let mut legacy = Dadm::new(
+            &data,
+            &part,
+            SmoothHinge::default(),
+            ElasticNet::new(0.1),
+            Zero,
+            1e-2,
+            ProxSdca,
+            DadmOptions {
+                sp: SP,
+                cluster: Cluster::Tcp(handle.clone()),
+                cost: CostModel::default(),
+                seed: RNG_SEED,
+                gap_every: 1,
+                sparse_comm: true,
+                local_threads,
+                conj_resum_every: 64,
+            },
+        );
+        legacy.resync();
+        let _ = legacy.gap();
+        let mut legacy_last_gap = f64::NAN;
+        for _ in 0..wire_rounds {
+            legacy.round();
+            // The pre-fusion wire pattern: ship the iterate for the
+            // primal sum, then the dual.
+            let w = legacy.w().to_vec();
+            let loss_sum = legacy.loss_sum_at(&w);
+            let lambda_n = 1e-2 * data.n() as f64;
+            let primal = loss_sum
+                + lambda_n * dadm::Regularizer::value(&ElasticNet::new(0.1), &w);
+            legacy_last_gap = primal - legacy.dual();
+        }
+        let legacy_bytes = handle.stats().total_bytes() - before;
+
+        let fused_last = fused_report.trace.last().expect("trace");
+        let fused_last_gap = fused_last.gap();
+        println!(
+            "fused gap wire: {fused_bytes} B over {wire_rounds} rounds vs legacy \
+             LossSumAt {legacy_bytes} B (final gaps {fused_last_gap:.6e} / {legacy_last_gap:.6e})"
+        );
+        if (fused_last_gap - legacy_last_gap).abs() > GAP_TOLERANCE {
+            bail!(
+                "fused vs legacy gap traces diverged: {fused_last_gap:.6e} vs {legacy_last_gap:.6e}"
+            );
+        }
+        let w_payload = (wire_rounds * MACHINES * 8 * data.dim()) as u64;
+        if fused_bytes + w_payload / 2 > legacy_bytes {
+            bail!(
+                "fused telemetry did not shrink the eval wire: {fused_bytes} B vs \
+                 legacy {legacy_bytes} B (w payload ≈ {w_payload} B)"
+            );
+        }
+
         handle.with(|c| c.shutdown());
         Ok(())
     })();

@@ -613,6 +613,113 @@ fn main() {
         }
     }
 
+    // --- Fused gap telemetry vs separate eval barriers (DESIGN.md §11) ---
+    // A --gap-every 1 round used to pay three pool barriers (fused local
+    // step, primal loss pass, dual conj pass); the fused protocol rides
+    // everything on the local-step leg plus an O(1) conjugate read.
+    {
+        use dadm::comm::Cluster;
+        let (n, d, machines) = (scaled_bench_n(8_000), 100_000usize, 8usize);
+        let data = SyntheticSpec {
+            name: "gap-fused".into(),
+            n,
+            d,
+            density: 0.0005,
+            signal_density: 0.2,
+            noise: 0.1,
+            seed: 27,
+        }
+        .generate();
+        let part = Partition::balanced(n, machines, 27);
+        let build = || {
+            let mut dadm = Dadm::new(
+                &data,
+                &part,
+                SmoothHinge::default(),
+                ElasticNet::new(0.1),
+                Zero,
+                1e-4,
+                ProxSdca,
+                DadmOptions {
+                    sp: 0.05,
+                    cluster: Cluster::Threads,
+                    cost: CostModel::free(),
+                    sparse_comm: true,
+                    ..Default::default()
+                },
+            );
+            dadm.resync();
+            let _ = dadm.gap(); // arm the running conjugate sums
+            dadm
+        };
+        let mut fused = build();
+        let t_fused = time_it(2, 8, || {
+            // One barrier: round + entering loss sum + post-step conj.
+            let _ = fused.round_fused(true, true);
+        });
+        let mut separate = build();
+        let t_sep = time_it(2, 8, || {
+            separate.round();
+            std::hint::black_box(separate.primal());
+            std::hint::black_box(separate.dual());
+        });
+        table.row(&[
+            "gap_eval_fused".into(),
+            format!("m={machines} d={d} sp=0.05 sparse"),
+            fmt_secs(t_fused.median),
+            format!(
+                "{:.2}x vs three-barrier {}",
+                t_sep.median / t_fused.median,
+                fmt_secs(t_sep.median)
+            ),
+        ]);
+    }
+
+    // --- Incremental dual conjugate sum vs exact O(n) resummation ---
+    // The dual side of a gap eval reads a held scalar (maintained in
+    // O(1) per touched coordinate); the exact pass remains only as the
+    // periodic drift-bounding resummation.
+    {
+        let n = scaled_bench_n(20_000);
+        let data = SyntheticSpec {
+            name: "conj-incr".into(),
+            n,
+            d: 2048,
+            density: 0.02,
+            signal_density: 0.2,
+            noise: 0.1,
+            seed: 29,
+        }
+        .generate();
+        let part = Partition::balanced(n, 1, 1);
+        let mut ws = WorkerState::from_partition(&data, &part, 0);
+        let loss = SmoothHinge::default();
+        let reg = ElasticNet::new(0.1);
+        let lambda_n_l = 1e-4 * n as f64;
+        let mut rng = Rng::new(30);
+        let _ = ws.conj_running(&loss); // arm the running sum
+        for _ in 0..5 {
+            let batch = rng.sample_indices(n, 256.min(n));
+            let _ = ProxSdca.local_step(&mut ws, &batch, &loss, &reg, lambda_n_l, &mut rng);
+        }
+        let t_exact = time_it(2, 10, || {
+            std::hint::black_box(ws.dual_conj_sum(&loss));
+        });
+        let t_incr = time_it(2, 10, || {
+            std::hint::black_box(ws.conj_running(&loss));
+        });
+        table.row(&[
+            "conj_sum_incremental".into(),
+            format!("n={n} exact resum pass"),
+            fmt_secs(t_exact.median),
+            format!(
+                "{:.0}x vs O(1) held read {}",
+                t_exact.median / t_incr.median.max(1e-9),
+                fmt_secs(t_incr.median)
+            ),
+        ]);
+    }
+
     // --- PJRT execute latency (requires artifacts) ---
     {
         use dadm::runtime::XlaLocalStep;

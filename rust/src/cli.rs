@@ -119,6 +119,7 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunOutcome> {
         gap_every: cfg.gap_every,
         sparse_comm: cfg.sparse_comm,
         local_threads: cfg.local_threads,
+        conj_resum_every: cfg.conj_resum_every,
     };
 
     // Loss selection happens exactly once, in `wire_loss_for` (the §8.2
@@ -307,9 +308,9 @@ pub fn main_with_args(args: &[String]) -> Result<()> {
              USAGE: dadm --key value ...        (coordinator / launcher)\n       \
              dadm worker --connect HOST:PORT  (TCP cluster worker)\n\n\
              Keys: dataset scale method loss solver lambda mu machines sp eps\n\
-                   max-passes gap-every cluster tcp-listen local-threads seed\n\
-                   nu comm-alpha comm-beta sparse-comm checkpoint\n\
-                   checkpoint-every resume\n\n\
+                   max-passes gap-every conj-resum-every cluster tcp-listen\n\
+                   local-threads seed nu comm-alpha comm-beta sparse-comm\n\
+                   checkpoint checkpoint-every resume\n\n\
              --cluster serial|threads|tcp (default serial)\n  \
              Execution backend for the per-machine local steps. `serial`\n  \
              and `threads` simulate the cluster in-process; `tcp` is a\n  \
@@ -331,8 +332,22 @@ pub fn main_with_args(args: &[String]) -> Result<()> {
              to a flat m*T solve over the split partition. T=0 picks the\n  \
              host core count; requests are clamped to the smallest shard.\n\n\
              --gap-every K (default 1)\n  \
-             Evaluate the duality gap (a full instrumentation pass) every\n  \
-             K rounds instead of every round — recommended at small sp.\n\n\
+             Evaluate the duality gap every K rounds instead of every\n  \
+             round. Gap telemetry is fused into the round itself: a gap\n  \
+             round costs no extra cluster barrier, and over TCP it adds\n  \
+             16 bytes per machine instead of re-shipping the 8*d-byte\n  \
+             iterate — the reported trace trails the solve by one round\n  \
+             and is bit-identical to a separate-barrier evaluation.\n  \
+             The primal sum is still one pass over the data, so raising\n  \
+             K still saves compute at small sp.\n\n\
+             --conj-resum-every K (default 64, 0 = never)\n  \
+             The dual side of the gap is a running per-machine sum of\n  \
+             -phi*(-alpha), updated in O(1) per touched coordinate\n  \
+             instead of recomputed with an O(n) pass. Every K rounds\n  \
+             each machine resums it exactly, bounding the accumulated\n  \
+             float drift; the cadence follows the round counter, so all\n  \
+             backends (and checkpoint-resumed runs) resum at the same\n  \
+             rounds and traces stay bit-identical across backends.\n\n\
              --checkpoint PATH / --checkpoint-every K (default 10)\n  \
              Write a resumable solver snapshot to PATH every K rounds\n  \
              (dadm only; in-process backends only). --resume PATH restores\n  \

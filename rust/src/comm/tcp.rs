@@ -45,12 +45,13 @@ use super::allreduce::tree_sum;
 use super::cluster::run_subgroup;
 use super::sparse::{tree_allreduce_delta, Delta};
 use super::wire::{
-    shard_data_spec, write_broadcast, write_local_step, BroadcastRef, DataSpec, EvalOp, Frame,
-    ProblemSpec, WireBroadcast, WireLoss, WireReg, WireSolver, WIRE_MAGIC, WIRE_VERSION,
+    shard_data_spec, write_broadcast, write_eval, write_local_step, BroadcastRef, DataSpec,
+    EvalOp, Frame, ProblemSpec, StepFlags, WireBroadcast, WireLoss, WireReg, WireSolver,
+    WIRE_MAGIC, WIRE_VERSION,
 };
 use crate::data::partition::split_ranges;
 use crate::data::{Dataset, Partition};
-use crate::solver::{batch_size, machine_rngs, run_local_step, WorkerState};
+use crate::solver::{batch_size, machine_rngs, run_fused_step, WorkerState};
 use crate::utils::Rng;
 
 /// Cumulative transport counters (coordinator side; bytes include the
@@ -74,7 +75,9 @@ impl WireStats {
     }
 }
 
-/// One framed, buffered, byte-counted connection.
+/// One framed, buffered, byte-counted connection. The encode and
+/// payload-read scratch buffers persist for the connection's lifetime,
+/// so the per-message hot path allocates no fresh frame `Vec`s.
 struct Framed {
     r: BufReader<TcpStream>,
     w: BufWriter<TcpStream>,
@@ -82,6 +85,10 @@ struct Framed {
     received: u64,
     frames_sent: u64,
     frames_received: u64,
+    /// Reused frame-encode scratch (cleared per send).
+    enc_buf: Vec<u8>,
+    /// Reused frame-payload read scratch (resized per recv).
+    dec_buf: Vec<u8>,
 }
 
 impl Framed {
@@ -96,11 +103,16 @@ impl Framed {
             received: 0,
             frames_sent: 0,
             frames_received: 0,
+            enc_buf: Vec::new(),
+            dec_buf: Vec::new(),
         })
     }
 
     fn send(&mut self, frame: &Frame) -> Result<()> {
-        self.sent += frame.write_to(&mut self.w)? as u64;
+        self.enc_buf.clear();
+        frame.write_to(&mut self.enc_buf)?;
+        self.w.write_all(&self.enc_buf).context("writing frame")?;
+        self.sent += self.enc_buf.len() as u64;
         self.frames_sent += 1;
         self.w.flush().context("flushing frame")?;
         Ok(())
@@ -117,9 +129,15 @@ impl Framed {
     }
 
     fn recv(&mut self) -> Result<Frame> {
-        let (frame, bytes) = Frame::read_from(&mut self.r)?;
+        let (frame, bytes) = Frame::read_from_reusing(&mut self.r, &mut self.dec_buf)?;
         self.received += bytes as u64;
         self.frames_received += 1;
+        // An outsized one-off frame (a shard-carrying AssignPartition can
+        // legally approach MAX_FRAME_LEN) must not pin its payload size
+        // for the connection's lifetime; steady-state frames sit far
+        // below this cap, so the scratch reuse is undisturbed.
+        const MAX_RETAINED_PAYLOAD: usize = 1 << 20;
+        self.dec_buf.shrink_to(MAX_RETAINED_PAYLOAD);
         Ok(frame)
     }
 }
@@ -175,8 +193,23 @@ impl TcpClusterBuilder {
         Ok(TcpCluster {
             conns,
             shut_down: false,
+            frame_buf: Vec::new(),
         })
     }
+}
+
+/// One worker's reply to a fused `LocalStep` round: the `Δv_ℓ` message
+/// plus whatever gap telemetry the [`StepFlags`] asked it to piggyback
+/// (DESIGN.md §11).
+#[derive(Clone, Debug)]
+pub struct StepReply {
+    /// The `Δv_ℓ` message (exactly what the reduce consumes).
+    pub delta: Delta,
+    /// `Σφ_i(x_iᵀw)` at the entering (just-synced) iterate, when
+    /// requested.
+    pub loss_sum: Option<f64>,
+    /// Post-step running `Σ−φ*(−α)`, when requested.
+    pub conj_sum: Option<f64>,
 }
 
 /// The coordinator's view of the worker fleet: one framed connection per
@@ -184,6 +217,8 @@ impl TcpClusterBuilder {
 pub struct TcpCluster {
     conns: Vec<Framed>,
     shut_down: bool,
+    /// Reused fan-out encode scratch (one encode, m sends).
+    frame_buf: Vec<u8>,
 }
 
 impl std::fmt::Debug for TcpCluster {
@@ -252,12 +287,22 @@ impl TcpCluster {
         Ok(())
     }
 
+    /// Encode one frame into the reusable fan-out scratch and ship the
+    /// same bytes to every worker. The buffer always returns to the pool
+    /// — even when encoding or a send fails — so the fan-out hot path
+    /// never falls back to per-call allocation.
+    fn send_all_framed(&mut self, enc: impl FnOnce(&mut Vec<u8>) -> Result<usize>) -> Result<()> {
+        let mut buf = std::mem::take(&mut self.frame_buf);
+        buf.clear();
+        let sent = enc(&mut buf).and_then(|_| self.send_all_bytes(&buf));
+        self.frame_buf = buf;
+        sent
+    }
+
     /// Swap every worker's regularizer (Acc-DADM stage transition /
     /// initial resync).
     pub fn set_reg(&mut self, reg: &WireReg) -> Result<()> {
-        let mut buf = Vec::new();
-        Frame::SetReg(reg.clone()).write_to(&mut buf)?;
-        self.send_all_bytes(&buf)?;
+        self.send_all_framed(|buf| Frame::SetReg(reg.clone()).write_to(buf))?;
         for l in 0..self.conns.len() {
             self.expect_ack(l)?;
         }
@@ -267,9 +312,7 @@ impl TcpCluster {
     /// Apply a value-setting ṽ update on every worker (resync or
     /// observation flush of a parked `Δṽ`).
     pub fn broadcast(&mut self, b: BroadcastRef<'_>) -> Result<()> {
-        let mut buf = Vec::new();
-        write_broadcast(&mut buf, b)?;
-        self.send_all_bytes(&buf)?;
+        self.send_all_framed(|buf| write_broadcast(buf, b))?;
         for l in 0..self.conns.len() {
             self.expect_ack(l)?;
         }
@@ -277,41 +320,55 @@ impl TcpCluster {
     }
 
     /// One fused round leg: ship the parked broadcast + local-step
-    /// request to every worker, collect the `Δv_ℓ` messages in machine
-    /// order. Workers compute concurrently (real processes); the second
-    /// return is the slowest worker's reported compute seconds — the
-    /// `max_ℓ t_ℓ` the accounting charges as parallel time.
-    pub fn local_step(&mut self, lambda: f64, b: BroadcastRef<'_>) -> Result<(Vec<Delta>, f64)> {
-        let mut buf = Vec::new();
-        write_local_step(&mut buf, lambda, b)?;
-        self.send_all_bytes(&buf)?;
-        let mut deltas = Vec::with_capacity(self.conns.len());
+    /// request (with its gap-telemetry flags) to every worker, collect
+    /// the [`StepReply`]s in machine order. Workers compute concurrently
+    /// (real processes); the second return is the slowest worker's
+    /// reported compute seconds — the `max_ℓ t_ℓ` the accounting charges
+    /// as parallel time.
+    pub fn local_step(
+        &mut self,
+        lambda: f64,
+        b: BroadcastRef<'_>,
+        flags: StepFlags,
+    ) -> Result<(Vec<StepReply>, f64)> {
+        self.send_all_framed(|buf| write_local_step(buf, lambda, b, flags))?;
+        let mut replies = Vec::with_capacity(self.conns.len());
         let mut parallel_secs = 0.0f64;
         for (l, conn) in self.conns.iter_mut().enumerate() {
             match conn.recv().with_context(|| format!("local step reply {l}"))? {
                 Frame::DeltaReply {
                     delta,
                     elapsed_secs,
+                    loss_sum,
+                    conj_sum,
                 } => {
+                    ensure!(
+                        loss_sum.is_some() == flags.eval_loss
+                            && conj_sum.is_some() == flags.want_conj,
+                        "worker {l}: piggybacked telemetry does not match the requested flags"
+                    );
                     parallel_secs = parallel_secs.max(elapsed_secs);
-                    deltas.push(delta);
+                    replies.push(StepReply {
+                        delta,
+                        loss_sum,
+                        conj_sum,
+                    });
                 }
                 Frame::Error { message } => bail!("worker {l} failed: {message}"),
                 other => bail!("worker {l}: expected DeltaReply, got {other:?}"),
             }
         }
-        Ok((deltas, parallel_secs))
+        Ok((replies, parallel_secs))
     }
 
-    /// Run a scalar instrumentation op on every worker and combine the
-    /// replies by pairwise [`tree_sum`] in machine order — the same
-    /// combination the in-process backends use, so the evaluated gap is
-    /// bit-identical across backends (workers pre-reduce their own
-    /// sub-shard sums with the same tree, DESIGN.md §10).
-    pub fn eval_sum(&mut self, op: &EvalOp) -> Result<f64> {
-        let mut buf = Vec::new();
-        Frame::Eval(op.clone()).write_to(&mut buf)?;
-        self.send_all_bytes(&buf)?;
+    /// Run a scalar instrumentation op on every worker — with the fused
+    /// broadcast applied to the replicas first — and combine the replies
+    /// by pairwise [`tree_sum`] in machine order, the same combination
+    /// the in-process backends use, so the evaluated gap is bit-identical
+    /// across backends (workers pre-reduce their own sub-shard sums with
+    /// the same tree, DESIGN.md §10).
+    pub fn eval_sum(&mut self, op: &EvalOp, b: BroadcastRef<'_>) -> Result<f64> {
+        self.send_all_framed(|buf| write_eval(buf, op, b))?;
         let mut sums = Vec::with_capacity(self.conns.len());
         for (l, conn) in self.conns.iter_mut().enumerate() {
             match conn.recv()? {
@@ -323,13 +380,36 @@ impl TcpCluster {
         Ok(tree_sum(&sums))
     }
 
+    /// The eval-only fused frame (DESIGN.md §11): apply the pending
+    /// broadcast and evaluate *both* duality-gap sums in one exchange.
+    /// Returns the tree-combined `(Σφ(x_iᵀw), Σ−φ*(−α))`.
+    pub fn eval_gap_sums(&mut self, b: BroadcastRef<'_>) -> Result<(f64, f64)> {
+        self.send_all_framed(|buf| write_eval(buf, &EvalOp::GapSums, b))?;
+        let mut losses = Vec::with_capacity(self.conns.len());
+        let mut conjs = Vec::with_capacity(self.conns.len());
+        for (l, conn) in self.conns.iter_mut().enumerate() {
+            match conn.recv()? {
+                Frame::GapReply {
+                    loss_sum,
+                    conj_sum,
+                } => {
+                    losses.push(loss_sum);
+                    conjs.push(conj_sum);
+                }
+                Frame::Error { message } => bail!("worker {l} failed: {message}"),
+                other => bail!("worker {l}: expected GapReply, got {other:?}"),
+            }
+        }
+        Ok((tree_sum(&losses), tree_sum(&conjs)))
+    }
+
     /// OWL-QN smooth-part oracle: per-worker raw `(grad ‖ loss-sum)`
     /// vectors in machine order, plus the slowest worker's compute
     /// seconds.
     pub fn eval_gradients(&mut self, w: &[f64]) -> Result<(Vec<Vec<f64>>, f64)> {
-        let mut buf = Vec::new();
-        Frame::Eval(EvalOp::GradOracle(w.to_vec())).write_to(&mut buf)?;
-        self.send_all_bytes(&buf)?;
+        self.send_all_framed(|buf| {
+            write_eval(buf, &EvalOp::GradOracle(w.to_vec()), BroadcastRef::Empty)
+        })?;
         let mut grads = Vec::with_capacity(self.conns.len());
         let mut parallel_secs = 0.0f64;
         for (l, conn) in self.conns.iter_mut().enumerate() {
@@ -654,7 +734,11 @@ impl WorkerHost {
                 self.apply_broadcast(&b)?;
                 Frame::Ack
             }
-            Frame::LocalStep { lambda, broadcast } => {
+            Frame::LocalStep {
+                lambda,
+                broadcast,
+                flags,
+            } => {
                 ensure!(
                     lambda.is_finite() && lambda > 0.0,
                     "λ must be positive and finite, got {lambda}"
@@ -666,14 +750,17 @@ impl WorkerHost {
                 self.validate_broadcast(&broadcast)?;
                 let t0 = Instant::now();
                 // Fused section, mirroring the in-process round exactly:
-                // apply the parked Δṽ, then run the local step — per
-                // sub-shard, concurrently when T > 1 (a top-level pool
-                // section in this worker process). Shared with
-                // Dadm::round's in-process leg (DESIGN.md §9/§10).
+                // apply the parked Δṽ, piggyback the requested gap
+                // telemetry (loss sum at the just-synced iterate — i.e.
+                // *before* the step — and the post-step running conjugate
+                // sum), then run the local step — per sub-shard,
+                // concurrently when T > 1 (a top-level pool section in
+                // this worker process). Shared with Dadm::round_fused's
+                // in-process leg (DESIGN.md §9/§10/§11).
                 let threads = self.threads;
                 let run = run_subgroup(threads > 1, &mut self.subs, |_, sub| {
                     apply_broadcast_to(&mut sub.state, &broadcast, &reg);
-                    run_local_step(
+                    run_fused_step(
                         &solver,
                         &mut sub.state,
                         &mut sub.rng,
@@ -681,26 +768,42 @@ impl WorkerHost {
                         &loss,
                         &reg,
                         lambda,
+                        flags.eval_loss,
+                        flags.want_conj,
+                        flags.resum_conj,
                     )
                 });
+                let mut deltas = Vec::with_capacity(run.results.len());
+                let mut losses = Vec::with_capacity(run.results.len());
+                let mut conjs = Vec::with_capacity(run.results.len());
+                for (delta, loss_sum, conj_sum) in run.results {
+                    deltas.push(delta);
+                    losses.extend(loss_sum);
+                    conjs.extend(conj_sum);
+                }
                 // T = 1 ships the raw Δv_ℓ (the coordinator leaf-scales,
                 // exactly the pre-hierarchy protocol); T > 1 merges
                 // machine-locally with the global n_k/n leaf weights and
                 // ships one pre-scaled message — the wire-free merge of
-                // DESIGN.md §10.
+                // DESIGN.md §10. The telemetry scalars pre-reduce with
+                // the same machine-local pairwise tree as the eval legs.
                 let delta = if threads == 1 {
-                    run.results.into_iter().next().expect("one sub-solver")
+                    deltas.into_iter().next().expect("one sub-solver")
                 } else {
-                    tree_allreduce_delta(run.results, &self.weights).0
+                    tree_allreduce_delta(deltas, &self.weights).0
                 };
                 Frame::DeltaReply {
                     delta,
                     elapsed_secs: t0.elapsed().as_secs_f64(),
+                    loss_sum: flags.eval_loss.then(|| tree_sum(&losses)),
+                    conj_sum: flags.want_conj.then(|| tree_sum(&conjs)),
                 }
             }
-            Frame::Eval(op) => {
+            Frame::Eval { op, broadcast } => {
                 let loss = self.loss.context("no loss assigned")?;
+                let reg = self.reg.clone().context("no regularizer set")?;
                 self.assigned()?;
+                self.validate_broadcast(&broadcast)?;
                 let d = self.dim();
                 let threads = self.threads;
                 match op {
@@ -710,15 +813,43 @@ impl WorkerHost {
                         // tree the coordinator uses (bit parity with the
                         // in-process hierarchical eval leg).
                         let run = run_subgroup(threads > 1, &mut self.subs, |_, sub| {
+                            apply_broadcast_to(&mut sub.state, &broadcast, &reg);
                             sub.state.primal_loss_sum(&loss, &w)
+                        });
+                        Frame::Scalar(tree_sum(&run.results))
+                    }
+                    EvalOp::LossSumAtCurrent => {
+                        // Evaluate against this worker's own synchronized
+                        // replica w_ℓ — zero payload shipped, bit-identical
+                        // to LossSumAt of the coordinator's w because the
+                        // replicas are value-set (DESIGN.md §7/§11).
+                        let run = run_subgroup(threads > 1, &mut self.subs, |_, sub| {
+                            apply_broadcast_to(&mut sub.state, &broadcast, &reg);
+                            sub.state.primal_loss_sum(&loss, &sub.state.w)
                         });
                         Frame::Scalar(tree_sum(&run.results))
                     }
                     EvalOp::ConjSum => {
                         let run = run_subgroup(threads > 1, &mut self.subs, |_, sub| {
-                            sub.state.dual_conj_sum(&loss)
+                            apply_broadcast_to(&mut sub.state, &broadcast, &reg);
+                            sub.state.conj_running(&loss)
                         });
                         Frame::Scalar(tree_sum(&run.results))
+                    }
+                    EvalOp::GapSums => {
+                        // The eval-only fused frame: apply the pending
+                        // Δṽ, then both gap sums in one pass each.
+                        let run = run_subgroup(threads > 1, &mut self.subs, |_, sub| {
+                            apply_broadcast_to(&mut sub.state, &broadcast, &reg);
+                            let loss_sum = sub.state.primal_loss_sum(&loss, &sub.state.w);
+                            (loss_sum, sub.state.conj_running(&loss))
+                        });
+                        let (losses, conjs): (Vec<f64>, Vec<f64>) =
+                            run.results.into_iter().unzip();
+                        Frame::GapReply {
+                            loss_sum: tree_sum(&losses),
+                            conj_sum: tree_sum(&conjs),
+                        }
                     }
                     EvalOp::GradOracle(w) => {
                         ensure!(w.len() == d, "eval dimension {} != {d}", w.len());
@@ -727,6 +858,7 @@ impl WorkerHost {
                         // oracle runs (`grad_oracle_sums`).
                         let t0 = Instant::now();
                         let mut run = run_subgroup(threads > 1, &mut self.subs, |_, sub| {
+                            apply_broadcast_to(&mut sub.state, &broadcast, &reg);
                             sub.state.grad_oracle_sums(&loss, &w)
                         });
                         // As in the in-process oracle: a single-vector
@@ -897,6 +1029,7 @@ mod tests {
                 gap_every: 1,
                 sparse_comm: true,
                 local_threads,
+                conj_resum_every: 64,
             },
         )
     }
@@ -1013,7 +1146,7 @@ mod tests {
         handle.with(|c| c.set_reg(&reg)).unwrap();
         let w = vec![0.05; data.dim()];
         let got = handle
-            .with(|c| c.eval_sum(&EvalOp::LossSumAt(w.clone())))
+            .with(|c| c.eval_sum(&EvalOp::LossSumAt(w.clone()), BroadcastRef::Empty))
             .unwrap();
         let loss = SmoothHinge::default();
         let want: f64 = (0..data.n())
@@ -1021,7 +1154,9 @@ mod tests {
             .sum();
         assert!((got - want).abs() < 1e-12, "{got} vs {want}");
         // All-zero duals: conjugate sum must be exactly the φ*(0) sum.
-        let conj = handle.with(|c| c.eval_sum(&EvalOp::ConjSum)).unwrap();
+        let conj = handle
+            .with(|c| c.eval_sum(&EvalOp::ConjSum, BroadcastRef::Empty))
+            .unwrap();
         let conj_want: f64 = (0..data.n())
             .map(|i| -crate::loss::Loss::conj_neg(&loss, 0.0, data.y[i]))
             .sum();
@@ -1071,6 +1206,7 @@ mod tests {
                         gap_every: 1,
                         sparse_comm: false,
                         local_threads: 1,
+                        conj_resum_every: 64,
                     },
                     ..Default::default()
                 },
@@ -1265,7 +1401,7 @@ mod tests {
         // An Eval before any AssignPartition must come back as a typed
         // error, not a hang or panic.
         let (handle, threads) = loopback(1);
-        let res = handle.with(|c| c.eval_sum(&EvalOp::ConjSum));
+        let res = handle.with(|c| c.eval_sum(&EvalOp::ConjSum, BroadcastRef::Empty));
         let msg = format!("{:#}", res.unwrap_err());
         assert!(msg.contains("no"), "unexpected error: {msg}");
         // The worker exits (with an error) after reporting.

@@ -14,16 +14,24 @@
 //! | 0   | `Hello`           | W → C     | magic `b"DADM"`, version |
 //! | 1   | `Welcome`         | C → W     | version, worker id, m |
 //! | 2   | `AssignPartition` | C → W     | [`ProblemSpec`] |
-//! | 3   | `LocalStep`       | C → W     | effective λ + fused [`WireBroadcast`] |
-//! | 4   | `DeltaReply`      | W → C     | [`Delta`] (sparse or dense) + elapsed seconds |
+//! | 3   | `LocalStep`       | C → W     | effective λ + fused [`WireBroadcast`] + [`StepFlags`] (v3) |
+//! | 4   | `DeltaReply`      | W → C     | [`Delta`] + elapsed seconds + piggybacked gap sums (v3) |
 //! | 5   | `Broadcast`       | C → W     | [`WireBroadcast`] (value-setting ṽ update) |
 //! | 6   | `SetReg`          | C → W     | [`WireReg`] (Acc-DADM stage swaps) |
-//! | 7   | `Eval`            | C → W     | [`EvalOp`] instrumentation request |
+//! | 7   | `Eval`            | C → W     | [`EvalOp`] + fused [`WireBroadcast`] to apply first (v3) |
 //! | 8   | `Scalar`          | W → C     | one `f64` |
 //! | 9   | `Vector`          | W → C     | `f64` vector + elapsed seconds |
 //! | 10  | `Ack`             | W → C     | empty |
 //! | 11  | `Shutdown`        | C → W     | empty |
 //! | 12  | `Error`           | both      | UTF-8 message |
+//! | 13  | `GapReply`        | W → C     | local `Σφ(x_iᵀw)` + running `Σ−φ*(−α)` |
+//!
+//! v3 extends three v2 payloads with *trailing* fields (a flags byte on
+//! `LocalStep`, flags + optional telemetry scalars on `DeltaReply`, a
+//! fused broadcast on `Eval`); the decoder treats an exactly-exhausted
+//! v2-shaped payload as "no extension", so v2 frames remain decodable
+//! (pinned by `v2_shaped_payloads_still_decode`) even though the
+//! handshake itself requires matching versions.
 //!
 //! Decoding is **total**: malformed input — truncated frames, unknown
 //! tags, oversized length prefixes, inconsistent vector lengths,
@@ -47,7 +55,12 @@ pub const WIRE_MAGIC: [u8; 4] = *b"DADM";
 /// Protocol version; bumped on any incompatible frame change.
 /// v2: [`ProblemSpec`] carries `local_threads` — remote workers run `T`
 /// concurrent sub-shard solvers per machine (DESIGN.md §10).
-pub const WIRE_VERSION: u16 = 2;
+/// v3: fused gap telemetry (DESIGN.md §11) — `LocalStep` carries
+/// [`StepFlags`], `DeltaReply` piggybacks the loss/conjugate sums,
+/// `Eval` carries a fused broadcast, and the `GapReply` frame plus the
+/// `LossSumAtCurrent`/`GapSums` eval ops evaluate against the worker's
+/// own replica so no iterate ships for a gap evaluation.
+pub const WIRE_VERSION: u16 = 3;
 /// Hard cap on one frame's payload (256 MiB): a corrupt length prefix
 /// must never drive a giant allocation.
 pub const MAX_FRAME_LEN: u32 = 256 << 20;
@@ -492,13 +505,71 @@ impl WireBroadcast {
 /// Instrumentation requests (duality-gap evaluation, OWL-QN oracle).
 #[derive(Clone, Debug)]
 pub enum EvalOp {
-    /// Local primal sum `Σ φ_i(x_iᵀw)` at the given `w`.
+    /// Local primal sum `Σ φ_i(x_iᵀw)` at the given `w` (Acc-DADM's
+    /// original-problem objectives evaluate at reconstructed iterates the
+    /// workers do not hold, so the explicit-`w` form must exist — but it
+    /// ships `8·d` bytes per machine; current-iterate evals use
+    /// [`EvalOp::LossSumAtCurrent`] instead).
     LossSumAt(Vec<f64>),
-    /// Local conjugate sum `Σ −φ*(−α_i)` at the current duals.
+    /// Local conjugate sum `Σ −φ*(−α_i)` at the current duals (the
+    /// worker's running sum — an O(1) read once tracking is armed).
     ConjSum,
     /// OWL-QN smooth-part oracle: raw `(Σ x_i φ'_i ‖ Σ φ_i)` as a
     /// `d + 1` vector.
     GradOracle(Vec<f64>),
+    /// Local primal sum `Σ φ_i(x_iᵀw)` at the worker's *own* synchronized
+    /// replica `w_ℓ` — bit-identical to [`EvalOp::LossSumAt`] of the
+    /// coordinator's `w` (the replicas are value-set, DESIGN.md §7) at
+    /// 0 instead of `8·d` payload bytes. v3.
+    LossSumAtCurrent,
+    /// Both duality-gap sums in one exchange: apply the `Eval` frame's
+    /// fused broadcast, then reply [`Frame::GapReply`] with the loss sum
+    /// at the replica `w_ℓ` and the running conjugate sum — the
+    /// eval-only fused frame the coordinator uses at stop/final-report
+    /// time (DESIGN.md §11). v3.
+    GapSums,
+}
+
+/// Per-round telemetry requests fused into a `LocalStep` frame
+/// (DESIGN.md §11). Encoded as one flags byte on the wire; a v2 frame
+/// without the byte decodes as all-false.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StepFlags {
+    /// Compute `Σφ_i(x_iᵀw)` at the just-synced iterate (immediately
+    /// after the fused broadcast apply, before the local step) and
+    /// piggyback it in the `DeltaReply` — the one-round-lagged primal
+    /// telemetry.
+    pub eval_loss: bool,
+    /// Piggyback the post-step running `Σ−φ*(−α)` in the `DeltaReply`.
+    pub want_conj: bool,
+    /// Resum the running conjugate sum exactly after this step (the
+    /// drift-bounding cadence, driven by the coordinator's round counter
+    /// so every backend and every resumed run resums at the same rounds).
+    pub resum_conj: bool,
+}
+
+const STEP_FLAG_EVAL_LOSS: u8 = 1 << 0;
+const STEP_FLAG_WANT_CONJ: u8 = 1 << 1;
+const STEP_FLAG_RESUM_CONJ: u8 = 1 << 2;
+
+impl StepFlags {
+    fn to_byte(self) -> u8 {
+        (self.eval_loss as u8) * STEP_FLAG_EVAL_LOSS
+            | (self.want_conj as u8) * STEP_FLAG_WANT_CONJ
+            | (self.resum_conj as u8) * STEP_FLAG_RESUM_CONJ
+    }
+
+    fn from_byte(b: u8) -> Result<Self> {
+        ensure!(
+            b & !(STEP_FLAG_EVAL_LOSS | STEP_FLAG_WANT_CONJ | STEP_FLAG_RESUM_CONJ) == 0,
+            "unknown step flag bits {b:#x}"
+        );
+        Ok(StepFlags {
+            eval_loss: b & STEP_FLAG_EVAL_LOSS != 0,
+            want_conj: b & STEP_FLAG_WANT_CONJ != 0,
+            resum_conj: b & STEP_FLAG_RESUM_CONJ != 0,
+        })
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -532,6 +603,8 @@ pub enum Frame {
         lambda: f64,
         /// The previous round's parked `Δṽ`.
         broadcast: WireBroadcast,
+        /// Fused gap-telemetry requests for this round (v3).
+        flags: StepFlags,
     },
     /// Local-step result.
     DeltaReply {
@@ -539,13 +612,35 @@ pub enum Frame {
         delta: Delta,
         /// Worker-side wall-clock seconds for the fused section.
         elapsed_secs: f64,
+        /// Piggybacked `Σφ_i(x_iᵀw)` at the entering (just-synced)
+        /// iterate, when [`StepFlags::eval_loss`] asked for it (v3).
+        loss_sum: Option<f64>,
+        /// Piggybacked post-step running `Σ−φ*(−α)`, when
+        /// [`StepFlags::want_conj`] asked for it (v3).
+        conj_sum: Option<f64>,
     },
     /// Standalone ṽ update (resync / observation flush).
     Broadcast(WireBroadcast),
     /// Regularizer swap (Acc-DADM stage transitions).
     SetReg(WireReg),
-    /// Instrumentation request.
-    Eval(EvalOp),
+    /// Instrumentation request; the fused broadcast (v3) is applied to
+    /// the worker's replica *before* the op runs, so current-iterate
+    /// evals see the fully synchronized state without a separate
+    /// `Broadcast` round trip.
+    Eval {
+        /// The instrumentation operation.
+        op: EvalOp,
+        /// Pending `Δṽ` to apply first ([`WireBroadcast::Empty`] when the
+        /// workers are already synced).
+        broadcast: WireBroadcast,
+    },
+    /// Gap-sums reply (answer to [`EvalOp::GapSums`]).
+    GapReply {
+        /// Local `Σφ_i(x_iᵀw)` at the replica iterate.
+        loss_sum: f64,
+        /// Local running `Σ−φ*(−α)`.
+        conj_sum: f64,
+    },
     /// Scalar reply.
     Scalar(f64),
     /// Vector reply (OWL-QN oracle) + worker wall-clock seconds.
@@ -579,6 +674,7 @@ const TAG_VECTOR: u8 = 9;
 const TAG_ACK: u8 = 10;
 const TAG_SHUTDOWN: u8 = 11;
 const TAG_ERROR: u8 = 12;
+const TAG_GAP_REPLY: u8 = 13;
 
 fn put_broadcast(e: &mut Enc, b: BroadcastRef<'_>) {
     match b {
@@ -880,6 +976,8 @@ fn put_eval(e: &mut Enc, op: &EvalOp) {
             e.u8(2);
             e.f64s(w);
         }
+        EvalOp::LossSumAtCurrent => e.u8(3),
+        EvalOp::GapSums => e.u8(4),
     }
 }
 
@@ -888,6 +986,8 @@ fn take_eval(d: &mut Dec<'_>) -> Result<EvalOp> {
         0 => EvalOp::LossSumAt(d.f64s()?),
         1 => EvalOp::ConjSum,
         2 => EvalOp::GradOracle(d.f64s()?),
+        3 => EvalOp::LossSumAtCurrent,
+        4 => EvalOp::GapSums,
         t => bail!("unknown eval op {t}"),
     })
 }
@@ -907,11 +1007,26 @@ fn write_framed<W: Write>(w: &mut W, tag: u8, payload: &[u8]) -> Result<usize> {
 /// Encode a `LocalStep` frame straight from borrowed buffers (the
 /// per-round hot path — no owned [`WireBroadcast`] clone). Byte-for-byte
 /// identical to encoding [`Frame::LocalStep`].
-pub fn write_local_step<W: Write>(w: &mut W, lambda: f64, b: BroadcastRef<'_>) -> Result<usize> {
+pub fn write_local_step<W: Write>(
+    w: &mut W,
+    lambda: f64,
+    b: BroadcastRef<'_>,
+    flags: StepFlags,
+) -> Result<usize> {
     let mut e = Enc::default();
     e.f64(lambda);
     put_broadcast(&mut e, b);
+    e.u8(flags.to_byte());
     write_framed(w, TAG_LOCAL_STEP, &e.buf)
+}
+
+/// Encode an `Eval` frame with its fused broadcast from borrowed buffers
+/// (see [`write_local_step`]).
+pub fn write_eval<W: Write>(w: &mut W, op: &EvalOp, b: BroadcastRef<'_>) -> Result<usize> {
+    let mut e = Enc::default();
+    put_eval(&mut e, op);
+    put_broadcast(&mut e, b);
+    write_framed(w, TAG_EVAL, &e.buf)
 }
 
 /// Encode a `Broadcast` frame from borrowed buffers (see
@@ -947,17 +1062,33 @@ impl Frame {
                 put_spec(&mut e, spec);
                 TAG_ASSIGN
             }
-            Frame::LocalStep { lambda, broadcast } => {
+            Frame::LocalStep {
+                lambda,
+                broadcast,
+                flags,
+            } => {
                 e.f64(*lambda);
                 put_broadcast(&mut e, broadcast.to_ref());
+                e.u8(flags.to_byte());
                 TAG_LOCAL_STEP
             }
             Frame::DeltaReply {
                 delta,
                 elapsed_secs,
+                loss_sum,
+                conj_sum,
             } => {
                 put_delta(&mut e, delta);
                 e.f64(*elapsed_secs);
+                let flags = (loss_sum.is_some() as u8) * STEP_FLAG_EVAL_LOSS
+                    | (conj_sum.is_some() as u8) * STEP_FLAG_WANT_CONJ;
+                e.u8(flags);
+                if let Some(c) = conj_sum {
+                    e.f64(*c);
+                }
+                if let Some(l) = loss_sum {
+                    e.f64(*l);
+                }
                 TAG_DELTA_REPLY
             }
             Frame::Broadcast(b) => {
@@ -968,9 +1099,18 @@ impl Frame {
                 put_reg(&mut e, reg);
                 TAG_SET_REG
             }
-            Frame::Eval(op) => {
+            Frame::Eval { op, broadcast } => {
                 put_eval(&mut e, op);
+                put_broadcast(&mut e, broadcast.to_ref());
                 TAG_EVAL
+            }
+            Frame::GapReply {
+                loss_sum,
+                conj_sum,
+            } => {
+                e.f64(*loss_sum);
+                e.f64(*conj_sum);
+                TAG_GAP_REPLY
             }
             Frame::Scalar(x) => {
                 e.f64(*x);
@@ -995,6 +1135,14 @@ impl Frame {
     /// tags, oversized lengths, or any payload inconsistency. The second
     /// tuple element is the exact number of bytes consumed.
     pub fn read_from<R: Read>(r: &mut R) -> Result<(Frame, usize)> {
+        let mut payload = Vec::new();
+        Self::read_from_reusing(r, &mut payload)
+    }
+
+    /// [`Frame::read_from`] with a caller-owned payload scratch buffer —
+    /// the per-connection hot path reuses one buffer across frames
+    /// instead of allocating `len` bytes per message.
+    pub fn read_from_reusing<R: Read>(r: &mut R, payload: &mut Vec<u8>) -> Result<(Frame, usize)> {
         let mut header = [0u8; FRAME_HEADER_BYTES];
         r.read_exact(&mut header).context("reading frame header")?;
         let tag = header[0];
@@ -1003,9 +1151,10 @@ impl Frame {
             len <= MAX_FRAME_LEN,
             "frame length {len} exceeds protocol cap {MAX_FRAME_LEN}"
         );
-        let mut payload = vec![0u8; len as usize];
-        r.read_exact(&mut payload).context("reading frame payload")?;
-        let frame = Self::decode(tag, &payload)?;
+        payload.clear();
+        payload.resize(len as usize, 0);
+        r.read_exact(payload).context("reading frame payload")?;
+        let frame = Self::decode(tag, payload)?;
         Ok((frame, FRAME_HEADER_BYTES + len as usize))
     }
 
@@ -1022,17 +1171,56 @@ impl Frame {
                 machines: d.u32()?,
             },
             TAG_ASSIGN => Frame::AssignPartition(Box::new(take_spec(&mut d)?)),
-            TAG_LOCAL_STEP => Frame::LocalStep {
-                lambda: d.f64()?,
-                broadcast: take_broadcast(&mut d)?,
-            },
-            TAG_DELTA_REPLY => Frame::DeltaReply {
-                delta: take_delta(&mut d)?,
-                elapsed_secs: d.f64()?,
-            },
+            TAG_LOCAL_STEP => {
+                let lambda = d.f64()?;
+                let broadcast = take_broadcast(&mut d)?;
+                // v2 payloads end here; v3 appends the flags byte.
+                let flags = if d.buf.is_empty() {
+                    StepFlags::default()
+                } else {
+                    StepFlags::from_byte(d.u8()?)?
+                };
+                Frame::LocalStep {
+                    lambda,
+                    broadcast,
+                    flags,
+                }
+            }
+            TAG_DELTA_REPLY => {
+                let delta = take_delta(&mut d)?;
+                let elapsed_secs = d.f64()?;
+                // v2 payloads end here; v3 appends flags + the scalars.
+                let (loss_sum, conj_sum) = if d.buf.is_empty() {
+                    (None, None)
+                } else {
+                    let flags = StepFlags::from_byte(d.u8()?)?;
+                    let conj = if flags.want_conj { Some(d.f64()?) } else { None };
+                    let loss = if flags.eval_loss { Some(d.f64()?) } else { None };
+                    (loss, conj)
+                };
+                Frame::DeltaReply {
+                    delta,
+                    elapsed_secs,
+                    loss_sum,
+                    conj_sum,
+                }
+            }
             TAG_BROADCAST => Frame::Broadcast(take_broadcast(&mut d)?),
             TAG_SET_REG => Frame::SetReg(take_reg(&mut d)?),
-            TAG_EVAL => Frame::Eval(take_eval(&mut d)?),
+            TAG_EVAL => {
+                let op = take_eval(&mut d)?;
+                // v2 payloads end here; v3 appends the fused broadcast.
+                let broadcast = if d.buf.is_empty() {
+                    WireBroadcast::Empty
+                } else {
+                    take_broadcast(&mut d)?
+                };
+                Frame::Eval { op, broadcast }
+            }
+            TAG_GAP_REPLY => Frame::GapReply {
+                loss_sum: d.f64()?,
+                conj_sum: d.f64()?,
+            },
             TAG_SCALAR => Frame::Scalar(d.f64()?),
             TAG_VECTOR => Frame::Vector {
                 v: d.f64s()?,
@@ -1181,10 +1369,18 @@ mod tests {
         }
     }
 
+    fn gen_flags(g: &mut Gen) -> StepFlags {
+        StepFlags {
+            eval_loss: g.bool(0.5),
+            want_conj: g.bool(0.5),
+            resum_conj: g.bool(0.5),
+        }
+    }
+
     #[test]
     fn prop_every_frame_roundtrips() {
-        for_each_case(0x71C9, 120, |g| {
-            let frame = match g.usize_in(0, 13) {
+        for_each_case(0x71C9, 140, |g| {
+            let frame = match g.usize_in(0, 14) {
                 0 => Frame::Hello {
                     magic: WIRE_MAGIC,
                     version: WIRE_VERSION,
@@ -1198,10 +1394,13 @@ mod tests {
                 3 => Frame::LocalStep {
                     lambda: g.f64_log_in(1e-9, 1.0),
                     broadcast: gen_broadcast(g),
+                    flags: gen_flags(g),
                 },
                 4 => Frame::DeltaReply {
                     delta: gen_delta(g),
                     elapsed_secs: g.f64_in(0.0, 1.0),
+                    loss_sum: g.bool(0.5).then(|| g.f64_in(-10.0, 1e4)),
+                    conj_sum: g.bool(0.5).then(|| g.f64_in(-1e4, 1e4)),
                 },
                 5 => Frame::Broadcast(gen_broadcast(g)),
                 6 => Frame::SetReg(if g.bool(0.5) {
@@ -1212,11 +1411,16 @@ mod tests {
                         g.vec_f64(g.usize_in(0, 10), -2.0, 2.0),
                     ))
                 }),
-                7 => Frame::Eval(match g.usize_in(0, 3) {
-                    0 => EvalOp::LossSumAt(g.vec_f64(g.usize_in(0, 12), -2.0, 2.0)),
-                    1 => EvalOp::ConjSum,
-                    _ => EvalOp::GradOracle(g.vec_f64(g.usize_in(0, 12), -2.0, 2.0)),
-                }),
+                7 => Frame::Eval {
+                    op: match g.usize_in(0, 5) {
+                        0 => EvalOp::LossSumAt(g.vec_f64(g.usize_in(0, 12), -2.0, 2.0)),
+                        1 => EvalOp::ConjSum,
+                        2 => EvalOp::GradOracle(g.vec_f64(g.usize_in(0, 12), -2.0, 2.0)),
+                        3 => EvalOp::LossSumAtCurrent,
+                        _ => EvalOp::GapSums,
+                    },
+                    broadcast: gen_broadcast(g),
+                },
                 8 => Frame::Scalar(g.f64_in(-1e6, 1e6)),
                 9 => Frame::Vector {
                     v: g.vec_f64(g.usize_in(0, 20), -10.0, 10.0),
@@ -1224,12 +1428,95 @@ mod tests {
                 },
                 10 => Frame::Ack,
                 11 => Frame::Shutdown,
+                12 => Frame::GapReply {
+                    loss_sum: g.f64_in(0.0, 1e5),
+                    conj_sum: g.f64_in(-1e5, 1e5),
+                },
                 _ => Frame::Error {
                     message: "ü message with µnicode".into(),
                 },
             };
             roundtrip(&frame);
         });
+    }
+
+    #[test]
+    fn v2_shaped_payloads_still_decode() {
+        // A v2 LocalStep payload ends after the broadcast (no flags
+        // byte); v3 decoders must read it as all-false flags.
+        let mut e = Vec::new();
+        write_local_step(&mut e, 1e-3, BroadcastRef::DenseSet(&[1.0, 2.0]), StepFlags::default())
+            .unwrap();
+        // Strip the trailing flags byte and fix the length prefix.
+        let mut v2 = e[..e.len() - 1].to_vec();
+        let len = (v2.len() - FRAME_HEADER_BYTES) as u32;
+        v2[1..5].copy_from_slice(&len.to_le_bytes());
+        let (frame, _) = Frame::read_from(&mut Cursor::new(&v2)).unwrap();
+        match frame {
+            Frame::LocalStep { flags, .. } => assert_eq!(flags, StepFlags::default()),
+            other => panic!("expected LocalStep, got {other:?}"),
+        }
+
+        // A v2 DeltaReply payload ends after elapsed_secs.
+        let full = encode(&Frame::DeltaReply {
+            delta: Delta::Dense(vec![0.5, -1.0]),
+            elapsed_secs: 0.25,
+            loss_sum: None,
+            conj_sum: None,
+        });
+        let mut v2 = full[..full.len() - 1].to_vec(); // drop the flags byte
+        let len = (v2.len() - FRAME_HEADER_BYTES) as u32;
+        v2[1..5].copy_from_slice(&len.to_le_bytes());
+        let (frame, _) = Frame::read_from(&mut Cursor::new(&v2)).unwrap();
+        match frame {
+            Frame::DeltaReply {
+                loss_sum, conj_sum, ..
+            } => {
+                assert_eq!(loss_sum, None);
+                assert_eq!(conj_sum, None);
+            }
+            other => panic!("expected DeltaReply, got {other:?}"),
+        }
+
+        // A v2 Eval payload ends after the op (no fused broadcast).
+        let full = encode(&Frame::Eval {
+            op: EvalOp::ConjSum,
+            broadcast: WireBroadcast::Empty,
+        });
+        let mut v2 = full[..full.len() - 1].to_vec(); // drop the Empty broadcast byte
+        let len = (v2.len() - FRAME_HEADER_BYTES) as u32;
+        v2[1..5].copy_from_slice(&len.to_le_bytes());
+        let (frame, _) = Frame::read_from(&mut Cursor::new(&v2)).unwrap();
+        match frame {
+            Frame::Eval { broadcast, .. } => {
+                assert!(matches!(broadcast, WireBroadcast::Empty))
+            }
+            other => panic!("expected Eval, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn delta_reply_telemetry_roundtrips_bitwise() {
+        let f = Frame::DeltaReply {
+            delta: Delta::Dense(vec![1.0]),
+            elapsed_secs: 0.5,
+            loss_sum: Some(3.5000000000000004),
+            conj_sum: Some(-2.25),
+        };
+        match roundtrip(&f) {
+            Frame::DeltaReply {
+                loss_sum, conj_sum, ..
+            } => {
+                assert_eq!(loss_sum.unwrap().to_bits(), 3.5000000000000004f64.to_bits());
+                assert_eq!(conj_sum.unwrap().to_bits(), (-2.25f64).to_bits());
+            }
+            other => panic!("expected DeltaReply, got {other:?}"),
+        }
+        // Unknown flag bits are a decode error, not a silent skip.
+        let mut bytes = encode(&f);
+        let flag_pos = bytes.len() - 17; // flags byte precedes the two f64s
+        bytes[flag_pos] |= 1 << 7;
+        assert!(Frame::read_from(&mut Cursor::new(&bytes)).is_err());
     }
 
     #[test]
@@ -1248,6 +1535,8 @@ mod tests {
             let f = Frame::DeltaReply {
                 delta,
                 elapsed_secs: 0.25,
+                loss_sum: None,
+                conj_sum: Some(1.5),
             };
             roundtrip(&f);
         }
@@ -1257,17 +1546,43 @@ mod tests {
     fn zero_copy_encoders_match_owned_frames() {
         let idx = vec![1u32, 5, 9];
         let val = vec![0.5, -1.0, 2.0];
+        let flags = StepFlags {
+            eval_loss: true,
+            want_conj: true,
+            resum_conj: false,
+        };
         let owned = Frame::LocalStep {
             lambda: 1e-3,
             broadcast: WireBroadcast::SparseSet {
                 idx: idx.clone(),
                 val: val.clone(),
             },
+            flags,
         };
         let mut borrowed = Vec::new();
         write_local_step(
             &mut borrowed,
             1e-3,
+            BroadcastRef::SparseSet {
+                idx: &idx,
+                val: &val,
+            },
+            flags,
+        )
+        .unwrap();
+        assert_eq!(encode(&owned), borrowed);
+
+        let owned = Frame::Eval {
+            op: EvalOp::GapSums,
+            broadcast: WireBroadcast::SparseSet {
+                idx: idx.clone(),
+                val: val.clone(),
+            },
+        };
+        let mut borrowed = Vec::new();
+        write_eval(
+            &mut borrowed,
+            &EvalOp::GapSums,
             BroadcastRef::SparseSet {
                 idx: &idx,
                 val: &val,
@@ -1289,6 +1604,8 @@ mod tests {
             let frame = Frame::DeltaReply {
                 delta: gen_delta(g),
                 elapsed_secs: 0.1,
+                loss_sum: g.bool(0.5).then_some(2.0),
+                conj_sum: g.bool(0.5).then_some(-1.0),
             };
             let bytes = encode(&frame);
             let cut = g.usize_in(0, bytes.len());

@@ -102,9 +102,16 @@ pub struct ExperimentConfig {
     pub eps: f64,
     /// Maximum passes over the data (the paper caps at 100).
     pub max_passes: f64,
-    /// Evaluate the duality gap every `gap_every` rounds (≥ 1; gap
-    /// evaluation is a full pass, so raise this at small `sp`).
+    /// Evaluate the duality gap every `gap_every` rounds (≥ 1). With the
+    /// fused telemetry of DESIGN.md §11 a gap round costs no extra
+    /// barrier, but the primal sum is still a pass over the data — raise
+    /// this at small `sp` if compute is the bottleneck.
     pub gap_every: usize,
+    /// Exactly resum the incremental dual telemetry every
+    /// `conj_resum_every` rounds (bounds the float drift of the O(1)
+    /// running `Σ−φ*(−α)` updates; 0 = never resum). See
+    /// `DadmOptions::conj_resum_every`.
+    pub conj_resum_every: usize,
     /// Cluster backend.
     pub cluster: ClusterKind,
     /// Coordinator listen address for `cluster = tcp` (use port 0 for an
@@ -146,6 +153,7 @@ impl Default for ExperimentConfig {
             eps: 1e-3,
             max_passes: 100.0,
             gap_every: 1,
+            conj_resum_every: 64,
             cluster: ClusterKind::Serial,
             tcp_listen: "127.0.0.1:7171".into(),
             checkpoint: None,
@@ -234,6 +242,9 @@ impl ExperimentConfig {
         }
         if let Some(v) = take("gap-every") {
             cfg.gap_every = v.parse().context("gap-every")?;
+        }
+        if let Some(v) = take("conj-resum-every") {
+            cfg.conj_resum_every = v.parse().context("conj-resum-every")?;
         }
         if let Some(v) = take("checkpoint") {
             cfg.checkpoint = Some(v);
@@ -416,6 +427,17 @@ mod tests {
         let c = ExperimentConfig::from_file_body("gap-every = 7\n").unwrap();
         assert_eq!(c.gap_every, 7);
         assert!(ExperimentConfig::from_file_body("gap-every = 0\n").is_err());
+    }
+
+    #[test]
+    fn parses_conj_resum_every() {
+        assert_eq!(ExperimentConfig::default().conj_resum_every, 64);
+        let c = ExperimentConfig::from_file_body("conj-resum-every = 16\n").unwrap();
+        assert_eq!(c.conj_resum_every, 16);
+        // 0 = never resum (drift unbounded, the user's call).
+        let c = ExperimentConfig::from_file_body("conj-resum-every = 0\n").unwrap();
+        assert_eq!(c.conj_resum_every, 0);
+        assert!(ExperimentConfig::from_file_body("conj-resum-every = -3\n").is_err());
     }
 
     #[test]

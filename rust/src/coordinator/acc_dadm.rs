@@ -37,7 +37,9 @@ use super::dadm::{Dadm, DadmOptions, SolveReport};
 use crate::data::{Dataset, Partition};
 use crate::loss::Loss;
 use crate::reg::{ElasticNet, ExtraReg, Regularizer, ShiftedElasticNet};
-use crate::runtime::engine::{Driver, GapCadence, RecordCtx, RoundAlgorithm, RoundOutcome};
+use crate::runtime::engine::{
+    Driver, GapCadence, RecordCtx, RoundAlgorithm, RoundOutcome, RoundRequest,
+};
 use crate::solver::LocalSolver;
 
 /// Momentum choice for the prox-center update (Figure 1's comparison).
@@ -290,7 +292,12 @@ where
         self.start_stage = false; // armed by the initial on_record
     }
 
-    fn round(&mut self) -> RoundOutcome {
+    fn round(&mut self, _req: RoundRequest) -> RoundOutcome {
+        // Acc-DADM records on its algorithm-driven (per-stage) cadence,
+        // where stage transitions must see the gap eagerly — the lagged
+        // fused-gap protocol stays off (`fused_gap` = false). Its gap
+        // evals still ride the single-barrier fused frames through the
+        // inner DADM (`Dadm::gap_sums` / the running conjugate sums).
         if self.start_stage {
             // Stage target ε_t = η·ξ_{t−1}/(2 + 2η⁻²), scaled; build the
             // stage regularizer around the current prox center y.
@@ -308,7 +315,7 @@ where
         RoundOutcome {
             record_due: self.inner_rounds_in_stage % self.opts.dadm.gap_every == 0
                 || self.inner_rounds_in_stage >= self.stage_cap,
-            finished: false,
+            ..RoundOutcome::default()
         }
     }
 

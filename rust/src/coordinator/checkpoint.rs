@@ -9,19 +9,26 @@
 //! format adds the cumulative round/pass counters and the per-machine
 //! mini-batch RNG states, so a resumed solve continues the *exact*
 //! sampling stream and reproduces the uninterrupted trajectory bit for
-//! bit (pinned by `rust/tests/engine.rs`). v1 files still load; they
-//! restart the RNG streams.
+//! bit (pinned by `rust/tests/engine.rs`). The v3 format adds the
+//! per-machine running dual sums `Σ−φ*(−α_i)` (DESIGN.md §11) — they
+//! are incrementally maintained solver state, so a resumed run that
+//! merely recomputed them exactly would drift off the uninterrupted
+//! gap trace by ulps. v1/v2 files still load; v1 restarts the RNG
+//! streams, and both mark the running sums stale (rebuilt exactly on
+//! the next telemetry read).
 //!
 //! Format:
 //! ```text
-//! dadm-checkpoint v2
+//! dadm-checkpoint v3
 //! lambda <float>
 //! rounds <int>
 //! passes <float>
 //! machines <m>
 //! v <d> <float>*d
 //! alpha <l> <n_l> <float>*n_l        (one line per machine)
-//! rng <l> <u64>*4                    (one line per machine; v2 only)
+//! rng <l> <u64>*4                    (one line per machine; v2+)
+//! conj <l> <float>                   (one line per machine; v3, only
+//!                                     when telemetry was armed)
 //! ```
 //!
 //! Checkpoints are written by the engine's snapshot hook
@@ -49,12 +56,16 @@ pub struct Checkpoint {
     /// Per-machine mini-batch RNG states (`None` in v1 files: streams
     /// restart on restore).
     pub rng: Option<Vec<[u64; 4]>>,
+    /// Per-machine running dual sums `Σ−φ*(−α_i)` (`None` in v1/v2
+    /// files, or when gap telemetry was never armed: the sums are
+    /// rebuilt exactly on the next read).
+    pub conj: Option<Vec<f64>>,
 }
 
 impl Checkpoint {
-    /// Serialize to a writer (always the v2 format).
+    /// Serialize to a writer (always the v3 format).
     pub fn save<W: Write>(&self, mut w: W) -> Result<()> {
-        writeln!(w, "dadm-checkpoint v2")?;
+        writeln!(w, "dadm-checkpoint v3")?;
         writeln!(w, "lambda {:e}", self.lambda)?;
         writeln!(w, "rounds {}", self.rounds)?;
         writeln!(w, "passes {:e}", self.passes)?;
@@ -76,15 +87,20 @@ impl Checkpoint {
                 writeln!(w, "rng {l} {} {} {} {}", s[0], s[1], s[2], s[3])?;
             }
         }
+        if let Some(conj) = &self.conj {
+            for (l, c) in conj.iter().enumerate() {
+                writeln!(w, "conj {l} {c:e}")?;
+            }
+        }
         Ok(())
     }
 
-    /// Parse from a reader (v1 and v2).
+    /// Parse from a reader (v1, v2 and v3).
     pub fn load<R: BufRead>(r: R) -> Result<Self> {
         let mut lines = r.lines();
         let header = lines.next().context("empty checkpoint")??;
         match header.trim() {
-            "dadm-checkpoint v1" | "dadm-checkpoint v2" => {}
+            "dadm-checkpoint v1" | "dadm-checkpoint v2" | "dadm-checkpoint v3" => {}
             other => bail!("unknown checkpoint header `{other}`"),
         }
         let mut lambda = None;
@@ -94,6 +110,7 @@ impl Checkpoint {
         let mut v: Option<Vec<f64>> = None;
         let mut alpha: Vec<(usize, Vec<f64>)> = vec![];
         let mut rng: Vec<(usize, [u64; 4])> = vec![];
+        let mut conj: Vec<(usize, f64)> = vec![];
         for line in lines {
             let line = line?;
             let mut toks = line.split_ascii_whitespace();
@@ -142,6 +159,11 @@ impl Checkpoint {
                     );
                     rng.push((l, [words[0], words[1], words[2], words[3]]));
                 }
+                Some("conj") => {
+                    let l: usize = toks.next().context("machine id")?.parse()?;
+                    let c: f64 = toks.next().context("conj value")?.parse()?;
+                    conj.push((l, c));
+                }
                 Some(other) => bail!("unknown checkpoint record `{other}`"),
                 None => continue,
             }
@@ -170,6 +192,20 @@ impl Checkpoint {
             }
             Some(rng.into_iter().map(|(_, s)| s).collect())
         };
+        let conj = if conj.is_empty() {
+            None
+        } else {
+            anyhow::ensure!(
+                conj.len() == machines,
+                "expected {machines} conj records, found {}",
+                conj.len()
+            );
+            conj.sort_by_key(|(l, _)| *l);
+            for (want, (got, _)) in conj.iter().enumerate() {
+                anyhow::ensure!(*got == want, "missing conj record for machine {want}");
+            }
+            Some(conj.into_iter().map(|(_, c)| c).collect())
+        };
         Ok(Checkpoint {
             lambda: lambda.context("missing lambda record")?,
             rounds,
@@ -177,6 +213,7 @@ impl Checkpoint {
             v: v.context("missing v record")?,
             alpha: alpha.into_iter().map(|(_, a)| a).collect(),
             rng,
+            conj,
         })
     }
 
@@ -207,6 +244,7 @@ mod tests {
             v: vec![0.25, -1.5e-8, 0.0],
             alpha: vec![vec![1.0, -0.5], vec![0.0, 0.125, 3.0]],
             rng: Some(vec![[1, 2, 3, 4], [u64::MAX, 7, 0, 9]]),
+            conj: Some(vec![-1.2500000000000002, 0.75]),
         }
     }
 
@@ -226,7 +264,25 @@ mod tests {
         assert_eq!(ck.rounds, 0);
         assert_eq!(ck.passes, 0.0);
         assert!(ck.rng.is_none());
+        assert!(ck.conj.is_none());
         assert_eq!(ck.v, vec![0.5]);
+    }
+
+    #[test]
+    fn loads_v2_without_conj_records() {
+        let text = "dadm-checkpoint v2\nlambda 1e-6\nrounds 3\npasses 0.6\nmachines 1\n\
+                    v 1 0.5\nalpha 0 1 1.0\nrng 0 1 2 3 4\n";
+        let ck = Checkpoint::load(std::io::Cursor::new(text)).unwrap();
+        assert!(ck.conj.is_none(), "v2 files carry no running dual sums");
+        assert!(ck.rng.is_some());
+    }
+
+    #[test]
+    fn rejects_partial_conj_records() {
+        let text = "dadm-checkpoint v3\nlambda 1e-6\nmachines 2\nv 1 0.5\n\
+                    alpha 0 1 1.0\nalpha 1 1 2.0\nconj 0 0.25\n";
+        let err = Checkpoint::load(std::io::Cursor::new(text)).unwrap_err();
+        assert!(format!("{err:#}").contains("conj records"));
     }
 
     #[test]

@@ -34,6 +34,14 @@
 //!   copy and the broadcast extraction all write into persistent scratch
 //!   buffers; after warm-up a round performs no heap allocation on the
 //!   coordinator side.
+//! * **Fused gap telemetry.** (DESIGN.md §11.) The duality-gap sums ride
+//!   the same barrier: the leg evaluates `Σφ_i(x_iᵀw)` right after the
+//!   broadcast apply (i.e. at the entering synced iterate) and reads the
+//!   machines' running `Σ−φ*(−α)` after the step, so a `--gap-every 1`
+//!   solve issues exactly one cluster barrier per steady-state round and
+//!   its records — lagged by one round — are bit-identical to the
+//!   three-barrier eval path's ([`Dadm::round_fused`], [`Dadm::gap_sums`],
+//!   [`Dadm::barriers`]).
 //!
 //! The solve loop itself lives in [`crate::runtime::engine`]: `Dadm`
 //! implements [`RoundAlgorithm`] and [`Dadm::solve`] is a thin wrapper
@@ -46,8 +54,8 @@ use crate::comm::{run_subgroup, Cluster, CostModel};
 use crate::data::{Dataset, Partition};
 use crate::loss::Loss;
 use crate::reg::{ExtraReg, Regularizer};
-use crate::runtime::engine::{Driver, RoundAlgorithm, RoundOutcome};
-use crate::solver::{batch_size, machine_rngs, run_local_step, LocalSolver, WorkerState};
+use crate::runtime::engine::{Driver, RoundAlgorithm, RoundOutcome, RoundRequest};
+use crate::solver::{batch_size, machine_rngs, run_fused_step, LocalSolver, WorkerState};
 use crate::utils::Rng;
 
 pub use crate::runtime::engine::SolveReport;
@@ -89,6 +97,14 @@ pub struct DadmOptions {
     /// bit-identical to a flat `m·T`-machine solve over the split
     /// partition (pinned in `rust/tests/local_threads.rs`).
     pub local_threads: usize,
+    /// Exact-resummation cadence for the incremental dual telemetry
+    /// (DESIGN.md §11): every `conj_resum_every`-th round each machine
+    /// recomputes its running `Σ−φ*(−α_i)` with one exact O(n_ℓ) pass,
+    /// bounding the float drift of the O(1) per-coordinate updates.
+    /// `0` disables resummation. Driven by the coordinator's round
+    /// counter, so every backend — and a checkpoint-resumed run — resums
+    /// at the same rounds (bit parity).
+    pub conj_resum_every: usize,
 }
 
 impl Default for DadmOptions {
@@ -101,6 +117,7 @@ impl Default for DadmOptions {
             gap_every: 1,
             sparse_comm: false,
             local_threads: 1,
+            conj_resum_every: 64,
         }
     }
 }
@@ -238,6 +255,11 @@ pub struct Dadm<L, R, H, S> {
     rho: Vec<f64>,     // Σ_ℓ β_ℓ = ∇h(w)
     pending: PendingBroadcast,
     scratch: GlobalScratch,
+    /// Global `Σ−φ*(−α)` at the *current* duals, when a round leg or an
+    /// eval just combined the machines' running sums (DESIGN.md §11).
+    /// `None` = no fresh combination (the per-machine sums may still be
+    /// maintained; a conj read re-combines them in one cheap exchange).
+    conj_cache: Option<f64>,
     n: usize,
     d: usize,
     opts: DadmOptions,
@@ -246,6 +268,10 @@ pub struct Dadm<L, R, H, S> {
     passes: f64,
     compute_secs: f64,
     comm_secs: f64,
+    /// Cluster synchronization points issued so far: every parallel
+    /// section / TCP round trip counts one. The quantity the
+    /// single-barrier-per-round acceptance tests pin (DESIGN.md §11).
+    barriers: u64,
 }
 
 impl<L, R, H, S> Dadm<L, R, H, S>
@@ -339,6 +365,7 @@ where
                 z: vec![0.0; d],
                 v_tilde_old: vec![0.0; d],
             },
+            conj_cache: None,
             n,
             d,
             opts,
@@ -346,6 +373,7 @@ where
             passes: 0.0,
             compute_secs: 0.0,
             comm_secs: 0.0,
+            barriers: 0,
         }
     }
 
@@ -371,6 +399,15 @@ where
     /// message sizes can be validated against.
     pub fn wire_bytes(&self) -> u64 {
         self.tcp().map_or(0, |h| h.stats().total_bytes())
+    }
+
+    /// Cluster synchronization points (parallel sections / TCP round
+    /// trips) issued so far — on every backend. With the fused gap
+    /// telemetry of DESIGN.md §11 a `--gap-every 1` solve issues exactly
+    /// **one** barrier per steady-state round; the legacy three-barrier
+    /// eval path (`round` + `primal` + `dual`) issues three.
+    pub fn barriers(&self) -> u64 {
+        self.barriers
     }
 
     /// Problem size `n`.
@@ -442,6 +479,7 @@ where
     pub fn resync(&mut self) {
         self.global_sync();
         self.pending.clear();
+        self.barriers += 1;
         if let Some(h) = self.opts.cluster.tcp() {
             let spec = self.reg.wire_spec().expect(
                 "the TCP backend requires a wire-serializable regularizer \
@@ -472,6 +510,7 @@ where
         if self.pending.kind == BroadcastKind::Empty {
             return;
         }
+        self.barriers += 1;
         if let Some(h) = self.opts.cluster.tcp() {
             h.with(|c| c.broadcast(self.pending.as_wire()))
                 .expect("tcp worker sync failed");
@@ -495,19 +534,75 @@ where
     /// `T` sub-solvers concurrently and merges their sub-deltas
     /// machine-locally at zero wire cost), aggregate across machines,
     /// global step, park the new broadcast. Returns the modeled
-    /// (compute, comm) seconds of this round.
+    /// (compute, comm) seconds of this round. Telemetry-free — see
+    /// [`Dadm::round_fused`] for the fused-gap variant the engine drives.
     pub fn round(&mut self) -> (f64, f64) {
+        self.round_fused(false, false).0
+    }
+
+    /// One DADM iteration with **fused gap telemetry** (DESIGN.md §11):
+    /// on top of [`Dadm::round`]'s fused broadcast-apply + local step,
+    /// the same single barrier can
+    ///
+    /// * with `eval_entering` — have every machine evaluate its local
+    ///   `Σφ_i(x_iᵀw)` immediately after the broadcast apply, i.e. at
+    ///   exactly the *entering* synchronized iterate `w_{t−1}`, and
+    ///   piggyback the sum in its reply (16 extra bytes per machine on
+    ///   the TCP wire instead of a separate `8·d`-byte eval exchange);
+    ///   combined with the conjugate sum piggybacked by the *previous*
+    ///   round, the coordinator then returns the previous round's exact
+    ///   `(P, D)` — the one-round-lagged record the engine consumes;
+    /// * with `want_conj` — piggyback each machine's post-step running
+    ///   `Σ−φ*(−α)` (an O(1) read), caching the tree-combined global
+    ///   value for the *next* round's lagged record or any direct
+    ///   [`Dadm::conj_sum`] read.
+    ///
+    /// `eval_entering` requires the previous round (or a preceding
+    /// objectives evaluation) to have requested the conjugate sum — the
+    /// entering α is gone once this round's local step runs.
+    pub fn round_fused(
+        &mut self,
+        eval_entering: bool,
+        want_conj: bool,
+    ) -> ((f64, f64), Option<(f64, f64)>) {
+        assert!(
+            !eval_entering || self.conj_cache.is_some(),
+            "round_fused: entering objectives need the previous round's \
+             conjugate sum (request want_conj there, or evaluate objectives first)"
+        );
         let loss = &self.loss;
         let reg = &self.reg;
         let solver = &self.solver;
         let lambda = self.lambda;
         let t = self.local_threads;
+        // Exact-resummation cadence for the running dual sums, driven by
+        // the round counter so all backends/resumes agree (DESIGN.md §11).
+        let resum = self.opts.conj_resum_every > 0
+            && (self.rounds + 1) % self.opts.conj_resum_every == 0;
 
-        // --- Fused broadcast apply + local step (parallel, one barrier;
-        // one request/reply exchange per worker on the TCP backend) ---
-        let (results, parallel_secs) = if let Some(h) = self.opts.cluster.tcp() {
-            h.with(|c| c.local_step(lambda, self.pending.as_wire()))
-                .expect("tcp local step failed")
+        // --- Fused broadcast apply + entering-loss eval + local step +
+        // conj read (parallel, one barrier; one request/reply exchange
+        // per worker on the TCP backend) ---
+        self.barriers += 1;
+        let mut results = Vec::new();
+        let mut machine_losses = Vec::new();
+        let mut machine_conjs = Vec::new();
+        let parallel_secs = if let Some(h) = self.opts.cluster.tcp() {
+            let flags = crate::comm::wire::StepFlags {
+                eval_loss: eval_entering,
+                want_conj,
+                resum_conj: resum,
+            };
+            let (replies, secs) = h
+                .with(|c| c.local_step(lambda, self.pending.as_wire(), flags))
+                .expect("tcp local step failed");
+            results.reserve(replies.len());
+            for r in replies {
+                results.push(r.delta);
+                machine_losses.extend(r.loss_sum);
+                machine_conjs.extend(r.conj_sum);
+            }
+            secs
         } else {
             let cluster = self.opts.cluster.clone();
             let par = cluster.parallel_local();
@@ -516,12 +611,24 @@ where
             let mut groups: Vec<&mut [Machine]> = self.machines.chunks_mut(t).collect();
             let run = cluster.run(&mut groups, |l, group| {
                 // The T sub-shard legs of machine l, concurrent under
-                // Cluster::Threads (the pool's sub-queue tier). Shared
-                // with the TCP worker's LocalStep handler — the two legs
-                // can never drift apart (DESIGN.md §9).
+                // Cluster::Threads (the pool's sub-queue tier). The leg
+                // body is `run_fused_step`, shared with the TCP worker's
+                // LocalStep handler — the telemetry points can never
+                // drift apart between backends (DESIGN.md §9/§11).
                 let sub = run_subgroup(par, group, |_, m| {
                     pending.apply_to(&mut m.state, reg);
-                    run_local_step(solver, &mut m.state, &mut m.rng, m.batch, loss, reg, lambda)
+                    run_fused_step(
+                        solver,
+                        &mut m.state,
+                        &mut m.rng,
+                        m.batch,
+                        loss,
+                        reg,
+                        lambda,
+                        eval_entering,
+                        want_conj,
+                        resum,
+                    )
                 });
                 // Machine-local merge: the same tree reduce as the
                 // cross-machine leg, applied to the T sub-deltas with
@@ -529,24 +636,55 @@ where
                 // message sizes are *not* charged. A flat tree over m·T
                 // leaves factors into exactly this local tree followed by
                 // the cross-machine tree for power-of-two T (bit parity,
-                // DESIGN.md §10). The machine's modeled time is the max
-                // over its concurrent sub-legs.
+                // DESIGN.md §10); the telemetry scalars pre-reduce with
+                // the same pairwise tree as the eval legs. The machine's
+                // modeled time is the max over its concurrent sub-legs.
+                let mut deltas = Vec::with_capacity(sub.results.len());
+                let mut losses = Vec::with_capacity(sub.results.len());
+                let mut conjs = Vec::with_capacity(sub.results.len());
+                for (delta, loss_sum, conj) in sub.results {
+                    deltas.push(delta);
+                    losses.extend(loss_sum);
+                    conjs.extend(conj);
+                }
                 let delta = if t == 1 {
-                    sub.results.into_iter().next().expect("one sub-solver")
+                    deltas.into_iter().next().expect("one sub-solver")
                 } else {
-                    tree_allreduce_delta(sub.results, &weights[l * t..l * t + group.len()]).0
+                    tree_allreduce_delta(deltas, &weights[l * t..l * t + group.len()]).0
                 };
-                (delta, sub.parallel_secs)
+                let loss_sum = eval_entering.then(|| tree_sum(&losses));
+                let conj = want_conj.then(|| tree_sum(&conjs));
+                ((delta, loss_sum, conj), sub.parallel_secs)
             });
-            let mut deltas = Vec::with_capacity(run.results.len());
+            results.reserve(run.results.len());
             let mut machine_secs = 0.0f64;
-            for (delta, secs) in run.results {
-                deltas.push(delta);
+            for ((delta, loss_sum, conj), secs) in run.results {
+                results.push(delta);
+                machine_losses.extend(loss_sum);
+                machine_conjs.extend(conj);
                 machine_secs = machine_secs.max(secs);
             }
-            (deltas, machine_secs)
+            machine_secs
         };
         self.pending.clear();
+
+        // --- Complete the previous round's record while (w, ṽ, ρ) still
+        // hold the entering state: the piggybacked loss sums are at
+        // w_{t−1}, the cached conjugate sum is at α_{t−1} — together the
+        // exact (P, D) the legacy three-barrier eval path would have
+        // produced after round t−1, bit for bit (DESIGN.md §11). ---
+        let entering = eval_entering.then(|| {
+            let lambda_n = self.lambda * self.n as f64;
+            let loss_sum = tree_sum(&machine_losses);
+            let primal = loss_sum + lambda_n * self.reg.value(&self.w) + self.h.value(&self.w);
+            let dual = self.conj_cache.expect("checked above")
+                - lambda_n * self.reg.conj(&self.v_tilde)
+                - self.h.conj(&self.rho);
+            (primal, dual)
+        });
+        // The post-step conjugate sum (if read) supersedes the entering
+        // one; otherwise the cache is stale — α moved without a read.
+        self.conj_cache = want_conj.then(|| tree_sum(&machine_conjs));
 
         // --- Global step ---
         // v ← v + Σ (n_ℓ/n)·Δv_ℓ  (one sparse-aware tree allreduce). The
@@ -616,20 +754,24 @@ where
         self.comm_secs += comm;
         self.rounds += 1;
         self.passes += self.opts.sp;
-        (parallel_secs, comm)
+        ((parallel_secs, comm), entering)
     }
 
-    /// Distributed loss sum `Σ_i φ_i(x_iᵀ w)` at an arbitrary `w` (one
-    /// parallel pass, sub-shard-parallel inside each machine; also used
-    /// by Acc-DADM's original-problem gap). Per-machine partials combine
-    /// by pairwise [`tree_sum`] — locally over the `T` sub-shard sums,
-    /// then over the `m` machine sums — the combination that makes a
-    /// nested evaluation bit-identical to a flat `m·T` one (DESIGN.md
-    /// §10) and that the TCP coordinator replicates.
+    /// Distributed loss sum `Σ_i φ_i(x_iᵀ w)` at an **arbitrary** `w`
+    /// (one parallel pass, sub-shard-parallel inside each machine; used
+    /// by Acc-DADM's original-problem gap, whose reconstructed iterates
+    /// the workers do not hold — this is the one eval that still ships
+    /// `8·d` bytes per machine on the TCP backend). Per-machine partials
+    /// combine by pairwise [`tree_sum`] — locally over the `T` sub-shard
+    /// sums, then over the `m` machine sums — the combination that makes
+    /// a nested evaluation bit-identical to a flat `m·T` one (DESIGN.md
+    /// §10) and that the TCP coordinator replicates. Current-iterate
+    /// evals use [`Dadm::loss_sum_current`] instead (zero payload).
     pub fn loss_sum_at(&mut self, w: &[f64]) -> f64 {
+        self.barriers += 1;
         if let Some(h) = self.opts.cluster.tcp() {
             return h
-                .with(|c| c.eval_sum(&EvalOp::LossSumAt(w.to_vec())))
+                .with(|c| c.eval_sum(&EvalOp::LossSumAt(w.to_vec()), BroadcastRef::Empty))
                 .expect("tcp loss-sum eval failed");
         }
         let loss = &self.loss;
@@ -643,14 +785,19 @@ where
         tree_sum(&run.results)
     }
 
-    /// Distributed conjugate sum `Σ_i −φ_i*(−α_i)` at the current duals
-    /// (same hierarchical pass and [`tree_sum`] combination as
-    /// [`Dadm::loss_sum_at`]).
-    pub fn conj_sum(&mut self) -> f64 {
+    /// Distributed loss sum at the **current** synchronized iterate,
+    /// evaluated against each worker's own replica `w_ℓ`
+    /// ([`EvalOp::LossSumAtCurrent`]) — bit-identical to
+    /// `loss_sum_at(self.w())` because the replicas are value-set
+    /// (DESIGN.md §7), but no `8·d·m` iterate payload moves. Flushes any
+    /// pending broadcast first so the replicas *are* current.
+    pub fn loss_sum_current(&mut self) -> f64 {
+        self.sync_workers();
+        self.barriers += 1;
         if let Some(h) = self.opts.cluster.tcp() {
             return h
-                .with(|c| c.eval_sum(&EvalOp::ConjSum))
-                .expect("tcp conjugate-sum eval failed");
+                .with(|c| c.eval_sum(&EvalOp::LossSumAtCurrent, BroadcastRef::Empty))
+                .expect("tcp loss-sum eval failed");
         }
         let loss = &self.loss;
         let cluster = self.opts.cluster.clone();
@@ -658,21 +805,95 @@ where
         let mut groups: Vec<&mut [Machine]> =
             self.machines.chunks_mut(self.local_threads).collect();
         let run = cluster.run(&mut groups, |_, group| {
-            tree_sum(&run_subgroup(par, group, |_, m| m.state.dual_conj_sum(loss)).results)
+            let sub = run_subgroup(par, group, |_, m| m.state.primal_loss_sum(loss, &m.state.w));
+            tree_sum(&sub.results)
         });
         tree_sum(&run.results)
     }
 
-    /// Exact primal objective `P(w) = Σφ_i(x_iᵀw) + λn·g(w) + h(w)` at the
-    /// current iterate. The iterate is lent to the distributed pass via
-    /// `mem::take` rather than cloned — at `d = 10⁵` with `--gap-every 1`
-    /// the old per-evaluation clone moved 800 KB per round for nothing
-    /// (nothing in the eval leg reads `self.w`; the buffer is restored
-    /// before returning).
+    /// Distributed conjugate sum `Σ_i −φ_i*(−α_i)` at the current duals:
+    /// the tree combination of the machines' **running** sums
+    /// (DESIGN.md §11) — an O(m·T) read of already-held scalars rather
+    /// than the O(n) pass it used to be. Served from the cache when a
+    /// round leg or gap eval just combined them; the first-ever read
+    /// initializes each machine's running sum exactly.
+    pub fn conj_sum(&mut self) -> f64 {
+        if let Some(c) = self.conj_cache {
+            return c;
+        }
+        self.barriers += 1;
+        let c = if let Some(h) = self.opts.cluster.tcp() {
+            h.with(|c| c.eval_sum(&EvalOp::ConjSum, BroadcastRef::Empty))
+                .expect("tcp conjugate-sum eval failed")
+        } else {
+            let loss = &self.loss;
+            let cluster = self.opts.cluster.clone();
+            let par = cluster.parallel_local();
+            let mut groups: Vec<&mut [Machine]> =
+                self.machines.chunks_mut(self.local_threads).collect();
+            let run = cluster.run(&mut groups, |_, group| {
+                tree_sum(&run_subgroup(par, group, |_, m| m.state.conj_running(loss)).results)
+            });
+            tree_sum(&run.results)
+        };
+        self.conj_cache = Some(c);
+        c
+    }
+
+    /// The eval-only fused frame (DESIGN.md §11): apply any pending
+    /// broadcast and evaluate **both** duality-gap sums —
+    /// `(Σφ_i(x_iᵀw), Σ−φ*(−α_i))` at the current synchronized state —
+    /// in a single barrier. This is what [`Dadm::gap`] and the engine's
+    /// initial/final records ride.
+    pub fn gap_sums(&mut self) -> (f64, f64) {
+        self.barriers += 1;
+        let (loss_sum, conj) = if let Some(h) = self.opts.cluster.tcp() {
+            let sums = h
+                .with(|c| c.eval_gap_sums(self.pending.as_wire()))
+                .expect("tcp gap eval failed");
+            self.pending.clear();
+            sums
+        } else {
+            let loss = &self.loss;
+            let reg = &self.reg;
+            let pending = &self.pending;
+            let cluster = self.opts.cluster.clone();
+            let par = cluster.parallel_local();
+            let mut groups: Vec<&mut [Machine]> =
+                self.machines.chunks_mut(self.local_threads).collect();
+            let run = cluster.run(&mut groups, |_, group| {
+                let sub = run_subgroup(par, group, |_, m| {
+                    pending.apply_to(&mut m.state, reg);
+                    let loss_sum = m.state.primal_loss_sum(loss, &m.state.w);
+                    (loss_sum, m.state.conj_running(loss))
+                });
+                let (losses, conjs): (Vec<f64>, Vec<f64>) = sub.results.into_iter().unzip();
+                (tree_sum(&losses), tree_sum(&conjs))
+            });
+            let (losses, conjs): (Vec<f64>, Vec<f64>) = run.results.into_iter().unzip();
+            self.pending.clear();
+            (tree_sum(&losses), tree_sum(&conjs))
+        };
+        self.conj_cache = Some(conj);
+        (loss_sum, conj)
+    }
+
+    /// Exact `(P, D)` at the current state from one fused gap-sums
+    /// barrier — the engine's objectives hook.
+    pub fn current_objectives(&mut self) -> (f64, f64) {
+        let (loss_sum, conj) = self.gap_sums();
+        let lambda_n = self.lambda * self.n as f64;
+        let primal = loss_sum + lambda_n * self.reg.value(&self.w) + self.h.value(&self.w);
+        let dual = conj - lambda_n * self.reg.conj(&self.v_tilde) - self.h.conj(&self.rho);
+        (primal, dual)
+    }
+
+    /// Exact primal objective `P(w) = Σφ_i(x_iᵀw) + λn·g(w) + h(w)` at
+    /// the current iterate, evaluated against the worker replicas
+    /// ([`Dadm::loss_sum_current`] — no iterate ships on the TCP
+    /// backend).
     pub fn primal(&mut self) -> f64 {
-        let w = std::mem::take(&mut self.w);
-        let loss_sum = self.loss_sum_at(&w);
-        self.w = w;
+        let loss_sum = self.loss_sum_current();
         loss_sum + self.lambda * self.n as f64 * self.reg.value(&self.w) + self.h.value(&self.w)
     }
 
@@ -684,9 +905,11 @@ where
             - self.h.conj(&self.rho)
     }
 
-    /// Current duality gap `P − D` (one full pass; instrumentation).
+    /// Current duality gap `P − D` (instrumentation; one fused barrier
+    /// via [`Dadm::gap_sums`]).
     pub fn gap(&mut self) -> f64 {
-        self.primal() - self.dual()
+        let (primal, dual) = self.current_objectives();
+        primal - dual
     }
 
     /// Run until the **normalized** duality gap `(P−D)/n ≤ eps` or
@@ -741,6 +964,12 @@ where
                 .map(|m| m.state.alpha.clone())
                 .collect(),
             rng: Some(self.machines.iter().map(|m| m.rng.state()).collect()),
+            // The running dual sums are solver state too (DESIGN.md §11):
+            // without them a resumed run would restart from an exact
+            // resummation and drift off the uninterrupted trajectory by
+            // ulps. `None` when telemetry was never read (all-or-none:
+            // the sums arm together in one eval leg).
+            conj: self.machines.iter().map(|m| m.state.conj_sum).collect(),
         }
     }
 
@@ -764,13 +993,20 @@ where
             ck.alpha.len() == self.machines.len(),
             "machine count mismatch"
         );
-        for (m, a) in self.machines.iter_mut().zip(&ck.alpha) {
+        if let Some(conj) = &ck.conj {
+            anyhow::ensure!(conj.len() == self.machines.len(), "conj record count mismatch");
+        }
+        for (k, (m, a)) in self.machines.iter_mut().zip(&ck.alpha).enumerate() {
             anyhow::ensure!(
                 a.len() == m.state.n_l(),
                 "shard size mismatch (same partition seed required)"
             );
             m.state.alpha.copy_from_slice(a);
+            // Restore the running dual sums alongside α (v3 snapshots) or
+            // mark them stale — the next telemetry read rebuilds exactly.
+            m.state.conj_sum = ck.conj.as_ref().map(|c| c[k]);
         }
+        self.conj_cache = None;
         if let Some(states) = &ck.rng {
             anyhow::ensure!(
                 states.len() == self.machines.len(),
@@ -828,15 +1064,24 @@ where
         self.resync();
     }
 
-    fn round(&mut self) -> RoundOutcome {
-        // Inherent-method resolution: this is `Dadm::round`, one
-        // Algorithm-2 iteration.
-        let (_compute, _comm): (f64, f64) = self.round();
-        RoundOutcome::default()
+    fn round(&mut self, req: RoundRequest) -> RoundOutcome {
+        // One Algorithm-2 iteration with the driver's fused-telemetry
+        // requests riding the same barrier (DESIGN.md §11).
+        let (_secs, entering) = self.round_fused(req.eval_entering_primal, req.want_exit_conj);
+        RoundOutcome {
+            entering_objectives: entering,
+            ..RoundOutcome::default()
+        }
     }
 
     fn objectives(&mut self) -> (f64, f64) {
-        (self.primal(), self.dual())
+        self.current_objectives()
+    }
+
+    /// DADM supports the one-round-lagged fused gap protocol on every
+    /// backend.
+    fn fused_gap(&self) -> bool {
+        true
     }
 
     fn rounds(&self) -> usize {
@@ -1127,10 +1372,18 @@ mod tests {
                 opts(),
             )
         };
-        // Reference: 10 uninterrupted rounds.
+        // Reference: 10 uninterrupted rounds. The mid-run gap read
+        // mirrors the resumed run's round-5 read below: gap telemetry is
+        // solver state now (the first read arms the machines' running
+        // Σ−φ*(−α) sums, DESIGN.md §11), so a bit-exact comparison must
+        // replay the same instrumentation schedule.
         let mut full = build();
         full.resync();
-        for _ in 0..10 {
+        for _ in 0..5 {
+            full.round();
+        }
+        let _ = full.gap();
+        for _ in 0..5 {
             full.round();
         }
         // Checkpoint after 5, restore into a fresh instance, run 5 more.

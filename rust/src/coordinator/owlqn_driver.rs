@@ -27,7 +27,7 @@ use crate::comm::allreduce::tree_allreduce;
 use crate::comm::{run_subgroup, Cluster, CostModel};
 use crate::data::{Dataset, Partition};
 use crate::loss::Loss;
-use crate::runtime::engine::{Driver, RoundAlgorithm, RoundOutcome};
+use crate::runtime::engine::{Driver, RoundAlgorithm, RoundOutcome, RoundRequest};
 use crate::solver::{Owlqn, OwlqnOptions, OwlqnState, WorkerState};
 
 /// Report of a distributed OWL-QN run.
@@ -257,7 +257,9 @@ impl<L: Loss> RoundAlgorithm for DistributedOwlqn<L> {
         *state = Some(owlqn.begin(vec![0.0; *d], &mut oracle));
     }
 
-    fn round(&mut self) -> RoundOutcome {
+    fn round(&mut self, _req: RoundRequest) -> RoundOutcome {
+        // Primal-only: no duality-gap telemetry to fuse (`fused_gap` =
+        // false), the driver records eagerly after every iteration.
         let DistributedOwlqn {
             workers,
             local_threads,
@@ -297,6 +299,7 @@ impl<L: Loss> RoundAlgorithm for DistributedOwlqn<L> {
             // max_passes — evals may overrun mid-line-search and are
             // truncated in the report, matching the legacy accounting.
             finished: st.done || st.iters >= *max_passes,
+            ..RoundOutcome::default()
         }
     }
 

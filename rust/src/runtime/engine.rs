@@ -55,6 +55,22 @@ impl SolveReport {
     }
 }
 
+/// What the driver asks of one round — the fused gap-telemetry plumbing
+/// of DESIGN.md §11. Algorithms without fused telemetry
+/// ([`RoundAlgorithm::fused_gap`] = false) ignore it.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RoundRequest {
+    /// Piggyback the primal loss sum at the *entering* iterate (the
+    /// previous round's synced state) in this round's fused leg and
+    /// return the previous round's exact objectives in
+    /// [`RoundOutcome::entering_objectives`].
+    pub eval_entering_primal: bool,
+    /// Piggyback the post-step dual conjugate sum in this round's fused
+    /// leg (needed by the *next* round's entering record, or by a direct
+    /// conj read).
+    pub want_exit_conj: bool,
+}
+
 /// What one [`RoundAlgorithm::round`] reports back to the driver.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct RoundOutcome {
@@ -65,6 +81,11 @@ pub struct RoundOutcome {
     /// tolerance or a failed line search); the driver records a final
     /// trace entry and stops.
     pub finished: bool,
+    /// Exact `(primal, dual)` of the **entering** state — the previous
+    /// round's record, completed by this round's piggybacked telemetry.
+    /// `Some` iff [`RoundRequest::eval_entering_primal`] asked for it
+    /// and the algorithm supports fused telemetry.
+    pub entering_objectives: Option<(f64, f64)>,
 }
 
 /// Context handed to [`RoundAlgorithm::on_record`] after every trace
@@ -119,13 +140,30 @@ pub trait RoundAlgorithm {
     /// One-time setup before the loop (initial broadcast/oracle call).
     fn prepare(&mut self) {}
 
-    /// Run one communication round.
-    fn round(&mut self) -> RoundOutcome;
+    /// Run one communication round. `req` carries the driver's fused
+    /// gap-telemetry requests (DESIGN.md §11); algorithms whose
+    /// [`RoundAlgorithm::fused_gap`] is false may ignore it.
+    fn round(&mut self, req: RoundRequest) -> RoundOutcome;
 
     /// Exact `(primal, dual)` objectives at the current state
-    /// (instrumentation; a full pass). Primal-only methods report their
-    /// objective as the primal and `0.0` as the dual.
+    /// (instrumentation; one evaluation pass over the data). Primal-only
+    /// methods report their objective as the primal and `0.0` as the
+    /// dual.
     fn objectives(&mut self) -> (f64, f64);
+
+    /// Whether this algorithm completes [`RoundRequest`] telemetry —
+    /// i.e. returns [`RoundOutcome::entering_objectives`] when asked.
+    /// When true and the cadence is [`GapCadence::EveryRounds`], the
+    /// driver switches to the single-barrier lagged record protocol
+    /// (DESIGN.md §11): steady-state records ride the next round's leg,
+    /// and only the initial and final records pay a dedicated (fused)
+    /// evaluation. The stopping rule then fires one round late — the
+    /// telemetry for round `t` completes during round `t+1` — so a
+    /// converging solve runs exactly one more round than the eager
+    /// protocol would (its trace still ends at the converged record).
+    fn fused_gap(&self) -> bool {
+        false
+    }
 
     /// Cumulative communication rounds.
     fn rounds(&self) -> usize;
@@ -224,6 +262,16 @@ impl Driver {
 
     /// Run `algo` until the stopping rule fires, the algorithm finishes,
     /// or the round budget is exhausted.
+    ///
+    /// With a fused-gap algorithm ([`RoundAlgorithm::fused_gap`]) under
+    /// an [`GapCadence::EveryRounds`] cadence, the loop runs the
+    /// single-barrier lagged protocol of DESIGN.md §11: the record for
+    /// round `t` is completed by round `t+1`'s piggybacked telemetry
+    /// (bit-identical values to an eager evaluation at round `t`), and
+    /// only the initial record and the final close-the-books record pay
+    /// a dedicated fused evaluation barrier. Stopping consequently
+    /// trails by one round; when it fires, the trace already ends at the
+    /// converged record and no further evaluation is issued.
     pub fn solve(&self, algo: &mut dyn RoundAlgorithm) -> SolveReport {
         let wall_start = Instant::now();
         let n = algo.n() as f64;
@@ -239,25 +287,69 @@ impl Driver {
             at_round_cap: self.max_rounds == 0,
         });
 
+        let fused_k = match self.cadence {
+            GapCadence::EveryRounds(k) if algo.fused_gap() => Some(k),
+            _ => None,
+        };
+
         let mut rounds_done = 0usize;
         let mut finished = false;
+        let mut lag_converged = false;
         while !converged && !finished && rounds_done < self.max_rounds {
-            let out = algo.round();
+            let req = match fused_k {
+                // Entering state = `rounds_done` completed rounds; its
+                // record is due when it sits on the cadence (round 0 was
+                // recorded eagerly above). The post-step conjugate sum is
+                // requested whenever *this* round will need a record.
+                Some(k) => RoundRequest {
+                    eval_entering_primal: rounds_done >= 1 && rounds_done % k == 0,
+                    want_exit_conj: (rounds_done + 1) % k == 0,
+                },
+                None => RoundRequest::default(),
+            };
+            // Accounting snapshot of the entering state, stamped onto the
+            // lagged record (its primal/dual describe this state, not the
+            // round that completed them).
+            let entering = (algo.rounds(), algo.passes(), algo.modeled_secs());
+            let out = algo.round(req);
             rounds_done += 1;
             finished = out.finished;
-            let due = match self.cadence {
-                GapCadence::EveryRounds(k) => rounds_done % k == 0,
-                GapCadence::AlgorithmDriven => out.record_due,
-            };
-            if due || rounds_done == self.max_rounds || finished {
-                let gap = Self::record(algo, &mut trace, wall_start);
+            if let Some((primal, dual)) = out.entering_objectives {
+                let (compute_secs, comm_secs) = entering.2;
+                trace.push(RoundRecord {
+                    round: entering.0,
+                    passes: entering.1,
+                    primal,
+                    dual,
+                    compute_secs,
+                    comm_secs,
+                    wall_secs: wall_start.elapsed().as_secs_f64(),
+                });
+                let gap = primal - dual;
                 converged = algo.gap_converged(gap / n, self.eps);
+                lag_converged = converged;
                 algo.on_record(&RecordCtx {
                     initial: false,
                     gap,
                     converged,
-                    at_round_cap: rounds_done >= self.max_rounds,
+                    at_round_cap: false,
                 });
+            }
+            if fused_k.is_none() {
+                let due = match self.cadence {
+                    GapCadence::EveryRounds(k) => rounds_done % k == 0,
+                    GapCadence::AlgorithmDriven => out.record_due,
+                };
+                if due || rounds_done == self.max_rounds || finished {
+                    let gap = Self::record(algo, &mut trace, wall_start);
+                    converged = algo.gap_converged(gap / n, self.eps);
+                    algo.on_record(&RecordCtx {
+                        initial: false,
+                        gap,
+                        converged,
+                        at_round_cap: rounds_done >= self.max_rounds,
+                    });
+                }
             }
             if let Some(ck) = &self.checkpoint {
                 if rounds_done % ck.every == 0 {
@@ -271,6 +363,22 @@ impl Driver {
                     }
                 }
             }
+        }
+
+        // Close the books under the lagged protocol: the newest state's
+        // record was never completed by a following round (round cap or
+        // algorithm finish) — evaluate it now with one fused barrier.
+        // Skipped when lagged stopping fired: the trace already ends at
+        // the converged record, exactly like the eager protocol's.
+        if fused_k.is_some() && rounds_done > 0 && !lag_converged {
+            let gap = Self::record(algo, &mut trace, wall_start);
+            converged = converged || algo.gap_converged(gap / n, self.eps);
+            algo.on_record(&RecordCtx {
+                initial: false,
+                gap,
+                converged,
+                at_round_cap: rounds_done >= self.max_rounds,
+            });
         }
 
         SolveReport {
@@ -313,12 +421,13 @@ mod tests {
             1
         }
 
-        fn round(&mut self) -> RoundOutcome {
+        fn round(&mut self, _req: RoundRequest) -> RoundOutcome {
             self.gap *= 0.5;
             self.rounds += 1;
             RoundOutcome {
                 record_due: self.rounds % 3 == 0,
                 finished: self.finish_after == Some(self.rounds),
+                ..RoundOutcome::default()
             }
         }
 
@@ -401,6 +510,111 @@ mod tests {
         let _ = Driver::new(0.1, 10).with_gap_every(0);
     }
 
+    /// Toy fused-telemetry algorithm: the same halving gap, but it
+    /// completes entering objectives on request like Dadm's piggyback
+    /// protocol, and counts dedicated `objectives()` barriers.
+    struct FusedHalving {
+        gap: f64,
+        conj_ready: bool,
+        rounds: usize,
+        evals: usize,
+    }
+
+    impl FusedHalving {
+        fn new() -> Self {
+            FusedHalving {
+                gap: 1.0,
+                conj_ready: false,
+                rounds: 0,
+                evals: 0,
+            }
+        }
+    }
+
+    impl RoundAlgorithm for FusedHalving {
+        fn n(&self) -> usize {
+            1
+        }
+        fn fused_gap(&self) -> bool {
+            true
+        }
+        fn round(&mut self, req: RoundRequest) -> RoundOutcome {
+            let entering = req.eval_entering_primal.then(|| {
+                assert!(
+                    self.conj_ready,
+                    "protocol: the entering conj must have been requested last round"
+                );
+                (self.gap, 0.0)
+            });
+            self.gap *= 0.5;
+            self.rounds += 1;
+            self.conj_ready = req.want_exit_conj;
+            RoundOutcome {
+                entering_objectives: entering,
+                ..RoundOutcome::default()
+            }
+        }
+        fn objectives(&mut self) -> (f64, f64) {
+            self.evals += 1;
+            self.conj_ready = true;
+            (self.gap, 0.0)
+        }
+        fn rounds(&self) -> usize {
+            self.rounds
+        }
+        fn passes(&self) -> f64 {
+            self.rounds as f64
+        }
+        fn modeled_secs(&self) -> (f64, f64) {
+            (0.0, 0.0)
+        }
+        fn final_w(&mut self) -> Vec<f64> {
+            vec![self.gap]
+        }
+    }
+
+    #[test]
+    fn fused_capped_run_records_like_eager_with_two_eval_barriers() {
+        // Capped fused run: same record set/values as the eager loop —
+        // records at every round, gap 0.5^r — but only the initial and
+        // closing records pay a dedicated evaluation.
+        let mut algo = FusedHalving::new();
+        let report = Driver::new(0.0, 6).solve(&mut algo);
+        assert!(!report.converged);
+        assert_eq!(report.rounds, 6);
+        let recorded: Vec<(usize, f64)> =
+            report.trace.rounds.iter().map(|r| (r.round, r.primal)).collect();
+        let want: Vec<(usize, f64)> = (0..=6).map(|r| (r, 0.5f64.powi(r as i32))).collect();
+        assert_eq!(recorded, want);
+        assert_eq!(algo.evals, 2, "initial + closing evaluation only");
+    }
+
+    #[test]
+    fn fused_cadence_skips_rounds_and_closes_at_cap() {
+        let mut algo = FusedHalving::new();
+        let report = Driver::new(0.0, 8).with_gap_every(3).solve(&mut algo);
+        let recorded: Vec<usize> = report.trace.rounds.iter().map(|r| r.round).collect();
+        // Same set as the eager cadence: 0, 3, 6, forced cap 8.
+        assert_eq!(recorded, vec![0, 3, 6, 8]);
+        assert_eq!(algo.evals, 2);
+    }
+
+    #[test]
+    fn fused_lagged_stop_overruns_one_round_and_skips_closing_eval() {
+        // Gap 0.5^r ≤ 0.1 first at record 4 — which round 5's piggyback
+        // completes: the solve runs 5 rounds, the trace still ends at
+        // the converged record 4 (eager semantics), and no closing
+        // evaluation is issued.
+        let mut algo = FusedHalving::new();
+        let report = Driver::new(0.1, 100).solve(&mut algo);
+        assert!(report.converged);
+        assert_eq!(report.rounds, 5);
+        let last = report.trace.last().unwrap();
+        assert_eq!(last.round, 4);
+        assert!(last.primal <= 0.1);
+        assert_eq!(algo.evals, 1, "initial evaluation only");
+    }
+
     #[test]
     fn snapshot_hook_called_on_cadence() {
         struct Snapping(Halving);
@@ -408,8 +622,8 @@ mod tests {
             fn n(&self) -> usize {
                 1
             }
-            fn round(&mut self) -> RoundOutcome {
-                self.0.round()
+            fn round(&mut self, req: RoundRequest) -> RoundOutcome {
+                self.0.round(req)
             }
             fn objectives(&mut self) -> (f64, f64) {
                 self.0.objectives()
@@ -434,6 +648,7 @@ mod tests {
                     v: vec![0.0],
                     alpha: vec![vec![0.0]],
                     rng: None,
+                    conj: None,
                 })
             }
         }

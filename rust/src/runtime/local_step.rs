@@ -125,6 +125,10 @@ impl LocalSolver for XlaLocalStep {
             for (k, &i) in chunk.iter().enumerate() {
                 state.alpha[i] = alpha_new[k] as f64;
             }
+            // α was overwritten from device floats; the running dual sum
+            // cannot be maintained incrementally here — mark it stale so
+            // the next telemetry read rebuilds it exactly (DESIGN.md §11).
+            state.conj_sum = None;
             for j in 0..d {
                 delta_v[j] += delta_v_raw[j] as f64 / lambda_n_l;
             }

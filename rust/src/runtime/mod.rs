@@ -19,5 +19,5 @@ pub mod engine;
 mod local_step;
 
 pub use artifact::{artifact_path, ArtifactSpec, XlaRuntime};
-pub use engine::{Driver, GapCadence, RoundAlgorithm, RoundOutcome, SolveReport};
+pub use engine::{Driver, GapCadence, RoundAlgorithm, RoundOutcome, RoundRequest, SolveReport};
 pub use local_step::XlaLocalStep;

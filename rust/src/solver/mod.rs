@@ -26,7 +26,9 @@ mod worker;
 pub use owlqn::{Owlqn, OwlqnOptions, OwlqnState};
 pub use prox_sdca::ProxSdca;
 pub use theorem_step::TheoremStep;
-pub use worker::{batch_size, machine_rng, machine_rngs, run_local_step, WorkerState};
+pub use worker::{
+    batch_size, machine_rng, machine_rngs, run_fused_step, run_local_step, WorkerState,
+};
 
 use crate::comm::sparse::Delta;
 use crate::loss::Loss;

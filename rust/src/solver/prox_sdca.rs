@@ -17,6 +17,21 @@ use crate::utils::Rng;
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ProxSdca;
 
+/// Hand the filled `scratch_delta` out as the dense Δv_ℓ message,
+/// swapping the pre-zeroed spare in as the next round's accumulator
+/// (`mem::replace`) — the message buffer leaves the worker through the
+/// reduce, so the spare is replenished with a fresh zeroed vector on the
+/// following dense round (a calloc, cheaper than the old clone + fill).
+fn take_dense_delta(state: &mut WorkerState) -> Vec<f64> {
+    let d = state.dim();
+    let mut spare = std::mem::take(&mut state.scratch_delta_spare);
+    if spare.len() != d {
+        spare = vec![0.0; d];
+    }
+    debug_assert!(spare.iter().all(|&x| x == 0.0));
+    std::mem::replace(&mut state.scratch_delta, spare)
+}
+
 impl LocalSolver for ProxSdca {
     fn local_step<L: Loss, R: Regularizer>(
         &self,
@@ -39,7 +54,12 @@ impl LocalSolver for ProxSdca {
         // on sparse data emit the touched coordinates only (DESIGN.md §7).
         let avg_nnz = state.x.nnz() / state.x.rows().max(1);
         let dense_reset = batch.len().saturating_mul(avg_nnz) >= state.dim();
-        let mut order: Vec<usize> = batch.to_vec();
+        // Shuffle in the persistent order buffer — no per-round
+        // `batch.to_vec()` allocation (taken out of `state` so the loop
+        // below can borrow the rest of the worker mutably).
+        let mut order = std::mem::take(&mut state.scratch_order);
+        order.clear();
+        order.extend_from_slice(batch);
         rng.shuffle(&mut order);
 
         for &i in &order {
@@ -49,11 +69,19 @@ impl LocalSolver for ProxSdca {
             // the dual term −φ*(−α_i) still needs maximizing there or the
             // duality gap keeps a φ_i(0) floor forever.
             let q = state.row_norm_sq[i] / lambda_n_l;
-            let delta = loss.coordinate_delta(state.alpha[i], u, q, state.y[i]);
+            let a_old = state.alpha[i];
+            let delta = loss.coordinate_delta(a_old, u, q, state.y[i]);
             if delta == 0.0 {
                 continue;
             }
-            state.alpha[i] += delta;
+            state.alpha[i] = a_old + delta;
+            // Incremental dual telemetry (DESIGN.md §11): the running
+            // Σ−φ*(−α) moves by the new-minus-old conjugate at this one
+            // coordinate — O(1) instead of the O(n_ℓ) pass a gap
+            // evaluation used to pay.
+            if let Some(cs) = state.conj_sum.as_mut() {
+                *cs += loss.conj_neg(a_old, state.y[i]) - loss.conj_neg(a_old + delta, state.y[i]);
+            }
             // Δv += x_i·δ/(λn_ℓ); refresh the touched w entries (∇g* is
             // separable for every g in this crate).
             let c = delta / lambda_n_l;
@@ -67,14 +95,16 @@ impl LocalSolver for ProxSdca {
                 }
             }
         }
+        state.scratch_order = order;
 
         // Emit Δv_ℓ and restore the synchronized state. The restore
         // strategy followed `dense_reset`; the *message form* follows the
         // wire break-even (`should_densify`), so a wide touched set still
-        // goes out as the cheaper dense vector.
+        // goes out as the cheaper dense vector. A dense message gives the
+        // accumulator itself away and swaps in the pre-zeroed spare — no
+        // length-d clone + fill on the dense path.
         if dense_reset {
-            let delta_v = state.scratch_delta.clone();
-            state.scratch_delta.fill(0.0);
+            let delta_v = take_dense_delta(state);
             reg.grad_conj_into(&state.v_tilde, &mut state.w);
             state.scratch_touched.clear();
             Delta::Dense(delta_v)
@@ -83,13 +113,11 @@ impl LocalSolver for ProxSdca {
             state.scratch_touched.dedup();
             let densify = should_densify(state.scratch_touched.len(), state.dim());
             let message = if densify {
-                let delta_v = state.scratch_delta.clone();
                 for &j in &state.scratch_touched {
                     let ju = j as usize;
-                    state.scratch_delta[ju] = 0.0;
                     state.w[ju] = reg.grad_conj_at(ju, state.v_tilde[ju]);
                 }
-                Delta::Dense(delta_v)
+                Delta::Dense(take_dense_delta(state))
             } else {
                 let idx = state.scratch_touched.clone();
                 let mut val = Vec::with_capacity(idx.len());
@@ -243,6 +271,61 @@ mod tests {
             .into_dense();
         assert!(dv.iter().all(|&x| x == 0.0));
         assert!(ws.alpha.iter().all(|&a| a == 0.0));
+    }
+
+    #[test]
+    fn incremental_conj_tracks_exact_recomputation() {
+        // With tracking armed, the O(1) new-minus-old updates must stay
+        // within float-drift distance of the exact O(n) pass across many
+        // mini-batch steps (DESIGN.md §11).
+        let mut ws = setup(21);
+        let loss = SmoothHinge::default();
+        let reg = ElasticNet::new(0.1);
+        let lambda_n_l = 1e-2 * ws.n_l() as f64;
+        let mut rng = Rng::new(22);
+        let _ = ws.conj_running(&loss); // arm
+        for _ in 0..60 {
+            let batch = rng.sample_indices(ws.n_l(), 8);
+            let dv = ProxSdca
+                .local_step(&mut ws, &batch, &loss, &reg, lambda_n_l, &mut rng)
+                .into_dense();
+            ws.apply_global(&dv, &reg);
+        }
+        let exact = ws.dual_conj_sum(&loss);
+        let running = ws.conj_running(&loss);
+        assert!(
+            (running - exact).abs() <= 1e-9 * (1.0 + exact.abs()),
+            "incremental conj drifted: {running} vs {exact}"
+        );
+        // An untracked worker pays nothing and stays None.
+        let mut cold = setup(21);
+        let batch: Vec<usize> = (0..8).collect();
+        let _ = ProxSdca.local_step(&mut cold, &batch, &loss, &reg, lambda_n_l, &mut rng);
+        assert!(cold.conj_sum.is_none());
+    }
+
+    #[test]
+    fn dense_message_swap_leaves_zeroed_accumulator() {
+        // An epoch-style batch emits a dense message by giving the
+        // accumulator away; the swapped-in spare must leave the state
+        // ready for the next round (all-zero scratch).
+        let mut ws = setup(23);
+        let loss = SmoothHinge::default();
+        let reg = ElasticNet::new(0.0);
+        let lambda_n_l = 1e-2 * ws.n_l() as f64;
+        let mut rng = Rng::new(24);
+        let batch: Vec<usize> = (0..ws.n_l()).collect();
+        for round in 0..3 {
+            let delta = ProxSdca.local_step(&mut ws, &batch, &loss, &reg, lambda_n_l, &mut rng);
+            assert!(
+                matches!(delta, Delta::Dense(_)),
+                "epoch batch on dense data must emit densely (round {round})"
+            );
+            assert!(ws.scratch_delta.iter().all(|&x| x == 0.0));
+            assert_eq!(ws.scratch_delta.len(), ws.dim());
+            let dv = delta.into_dense();
+            ws.apply_global(&dv, &reg);
+        }
     }
 
     #[test]

@@ -65,11 +65,18 @@ impl LocalSolver for TheoremStep {
             let row = state.x.row(i);
             let u_margin = row.dot(&state.w); // all coords read the same w_ℓ
             let u_i = loss.theorem_direction(u_margin, state.y[i]);
-            let delta = s * (u_i - state.alpha[i]);
+            let a_old = state.alpha[i];
+            let delta = s * (u_i - a_old);
             if delta == 0.0 {
                 continue;
             }
-            state.alpha[i] += delta;
+            state.alpha[i] = a_old + delta;
+            // Keep the running Σ−φ*(−α) exact under this solver too
+            // (new-minus-old conjugate per touched coordinate, DESIGN.md
+            // §11) so gap telemetry stays O(1) regardless of the solver.
+            if let Some(cs) = state.conj_sum.as_mut() {
+                *cs += loss.conj_neg(a_old, state.y[i]) - loss.conj_neg(a_old + delta, state.y[i]);
+            }
             row.axpy_into(delta / lambda_n_l, &mut delta_v);
         }
         // The update accumulates densely, but a mini-batch only touches

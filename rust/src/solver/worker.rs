@@ -68,6 +68,41 @@ where
     solver.local_step(state, &batch_idx, loss, reg, lambda * n_l as f64, rng)
 }
 
+/// [`run_local_step`] plus the fused gap telemetry of DESIGN.md §11, in
+/// the one canonical order every backend must follow: entering loss sum
+/// (at the just-synced replica, *before* the step), local step, exact
+/// conjugate resummation, post-step running-conjugate read. The caller
+/// applies its pending broadcast first (the broadcast types differ per
+/// backend). Shared by `Dadm::round_fused`'s in-process leg and the TCP
+/// worker's `LocalStep` handler so the telemetry points can never drift
+/// apart between backends.
+#[allow(clippy::too_many_arguments)]
+pub fn run_fused_step<L, R, S>(
+    solver: &S,
+    state: &mut WorkerState,
+    rng: &mut Rng,
+    batch: usize,
+    loss: &L,
+    reg: &R,
+    lambda: f64,
+    eval_loss: bool,
+    want_conj: bool,
+    resum_conj: bool,
+) -> (crate::comm::sparse::Delta, Option<f64>, Option<f64>)
+where
+    L: crate::loss::Loss,
+    R: Regularizer,
+    S: super::LocalSolver,
+{
+    let loss_sum = eval_loss.then(|| state.primal_loss_sum(loss, &state.w));
+    let delta = run_local_step(solver, state, rng, batch, loss, reg, lambda);
+    if resum_conj {
+        state.resum_conj(loss);
+    }
+    let conj = want_conj.then(|| state.conj_running(loss));
+    (delta, loss_sum, conj)
+}
+
 /// Machine-local state: `(S_ℓ, α_(ℓ), ṽ_ℓ)` plus caches.
 ///
 /// `v_tilde` is kept at the *globally synchronized* value (Eq. 15);
@@ -96,6 +131,22 @@ pub struct WorkerState {
     /// Reused touched-coordinate log for reverting the in-place `w`
     /// updates after a local step.
     pub scratch_touched: Vec<u32>,
+    /// Reused mini-batch visit-order buffer ([`crate::solver::ProxSdca`]
+    /// shuffles here instead of allocating a `batch.to_vec()` per round).
+    pub scratch_order: Vec<usize>,
+    /// Spare pre-zeroed Δv buffer: a dense-message round gives its
+    /// `scratch_delta` away as the outgoing message and swaps this in
+    /// (`mem::replace`) so the next round starts from zeros without a
+    /// length-d clone + fill; subsequent dense rounds replenish it with
+    /// a fresh zeroed vector (calloc — still cheaper than clone + fill).
+    pub scratch_delta_spare: Vec<f64>,
+    /// Running local dual sum `Σ_{i∈S_ℓ} −φ*(−α_i)` (DESIGN.md §11),
+    /// maintained in O(1) per touched coordinate by the local solvers.
+    /// `None` = stale: the value has not been requested yet, or `α` was
+    /// mutated by a path that cannot maintain it (reset, a non-tracking
+    /// solver, a v1/v2 checkpoint restore); the next
+    /// [`WorkerState::conj_running`] read rebuilds it exactly.
+    pub conj_sum: Option<f64>,
 }
 
 impl WorkerState {
@@ -116,6 +167,9 @@ impl WorkerState {
             global_indices: idx.to_vec(),
             scratch_delta: vec![0.0; d],
             scratch_touched: Vec::new(),
+            scratch_order: Vec::new(),
+            scratch_delta_spare: vec![0.0; d],
+            conj_sum: None,
         }
     }
 
@@ -144,6 +198,9 @@ impl WorkerState {
             global_indices,
             scratch_delta: vec![0.0; dim],
             scratch_touched: Vec::new(),
+            scratch_order: Vec::new(),
+            scratch_delta_spare: vec![0.0; dim],
+            conj_sum: None,
         }
     }
 
@@ -191,6 +248,7 @@ impl WorkerState {
         self.alpha.iter_mut().for_each(|a| *a = 0.0);
         self.v_tilde.iter_mut().for_each(|v| *v = 0.0);
         self.w.iter_mut().for_each(|w| *w = 0.0);
+        self.conj_sum = None;
     }
 
     /// `v_ℓ`-side contribution `Σ_{i∈S_ℓ} X_i α_i` (unscaled) — used by
@@ -206,11 +264,37 @@ impl WorkerState {
             .sum()
     }
 
-    /// Local dual sum `Σ_{i∈S_ℓ} −φ_i*(−α_i)`.
+    /// Local dual sum `Σ_{i∈S_ℓ} −φ_i*(−α_i)`, recomputed exactly with
+    /// one O(n_ℓ) pass — the reference the running [`WorkerState::conj_sum`]
+    /// is initialized from, resummed against, and drift-tested against.
     pub fn dual_conj_sum<L: crate::loss::Loss>(&self, loss: &L) -> f64 {
         (0..self.n_l())
             .map(|i| -loss.conj_neg(self.alpha[i], self.y[i]))
             .sum()
+    }
+
+    /// The running local dual sum `Σ −φ*(−α_i)` — an O(1) read once
+    /// initialized (DESIGN.md §11). A stale sum (`conj_sum == None`) is
+    /// rebuilt exactly here, which is also what arms the incremental
+    /// maintenance in the tracking local solvers.
+    pub fn conj_running<L: crate::loss::Loss>(&mut self, loss: &L) -> f64 {
+        match self.conj_sum {
+            Some(c) => c,
+            None => {
+                let c = self.dual_conj_sum(loss);
+                self.conj_sum = Some(c);
+                c
+            }
+        }
+    }
+
+    /// Exact resummation of the running dual sum — bounds the float
+    /// drift of the incremental O(1) updates. A no-op while the sum is
+    /// not being tracked (a later first read is exact anyway).
+    pub fn resum_conj<L: crate::loss::Loss>(&mut self, loss: &L) {
+        if self.conj_sum.is_some() {
+            self.conj_sum = Some(self.dual_conj_sum(loss));
+        }
     }
 
     /// The OWL-QN smooth-part oracle's per-shard raw sums at `w`:
@@ -366,6 +450,25 @@ mod tests {
         sparse_ws.set_v_tilde_sparse_parts(&[1, 3], &[v1[1], v1[3]], &reg);
         assert_eq!(dense_ws.v_tilde, sparse_ws.v_tilde);
         assert_eq!(dense_ws.w, sparse_ws.w);
+    }
+
+    #[test]
+    fn conj_running_initializes_exactly_and_invalidates() {
+        let data = tiny_classification(16, 3, 4);
+        let part = Partition::balanced(16, 2, 4);
+        let mut ws = WorkerState::from_partition(&data, &part, 0);
+        let loss = SmoothHinge::default();
+        assert!(ws.conj_sum.is_none(), "lazy: no cost before the first read");
+        // resum_conj is a no-op while untracked.
+        ws.resum_conj(&loss);
+        assert!(ws.conj_sum.is_none());
+        // First read = exact recomputation, bit for bit.
+        let got = ws.conj_running(&loss);
+        assert_eq!(got.to_bits(), ws.dual_conj_sum(&loss).to_bits());
+        assert_eq!(ws.conj_sum, Some(got));
+        // reset() marks the sum stale along with the duals.
+        ws.reset();
+        assert!(ws.conj_sum.is_none());
     }
 
     #[test]

@@ -1,0 +1,394 @@
+//! Fused gap telemetry (DESIGN.md §11): the single-barrier lagged
+//! record protocol must be **bit-identical** to the legacy three-barrier
+//! eval path (round + primal + dual as separate cluster exchanges) on
+//! every backend — Serial, Threads, and TCP loopback including
+//! `--local-threads 2` — while issuing exactly one cluster barrier per
+//! steady-state round and shipping O(m) instead of O(d·m) eval bytes.
+//! Plus the drift bound of the incremental dual conjugate sum against
+//! exact resummation.
+
+use dadm::comm::tcp::{serve, synthetic_specs, TcpClusterBuilder, TcpHandle};
+use dadm::comm::wire::{WireLoss, WireSolver};
+use dadm::comm::{Cluster, CostModel};
+use dadm::data::synthetic::SyntheticSpec;
+use dadm::data::{Dataset, Partition};
+use dadm::loss::SmoothHinge;
+use dadm::reg::{ElasticNet, Zero};
+use dadm::solver::ProxSdca;
+use dadm::{Dadm, DadmOptions, SolveReport};
+use std::net::TcpStream;
+use std::thread::JoinHandle;
+
+type TestDadm = Dadm<SmoothHinge, ElasticNet, Zero, ProxSdca>;
+
+const SEED: u64 = 0xFA5ED;
+
+fn spec(n: usize, d: usize) -> SyntheticSpec {
+    SyntheticSpec {
+        name: "fused-gap".into(),
+        n,
+        d,
+        density: 0.2,
+        signal_density: 0.4,
+        noise: 0.1,
+        seed: 0x5EED5,
+    }
+}
+
+fn build(
+    data: &Dataset,
+    part: &Partition,
+    cluster: Cluster,
+    gap_every: usize,
+    local_threads: usize,
+    conj_resum_every: usize,
+) -> TestDadm {
+    Dadm::new(
+        data,
+        part,
+        SmoothHinge::default(),
+        ElasticNet::new(0.1),
+        Zero,
+        1e-2,
+        ProxSdca,
+        DadmOptions {
+            sp: 0.25,
+            cluster,
+            cost: CostModel::free(),
+            seed: SEED,
+            gap_every,
+            sparse_comm: true,
+            local_threads,
+            conj_resum_every,
+        },
+    )
+}
+
+/// Spawn `m` thread-hosted loopback workers (the in-process twin of real
+/// `dadm worker` processes; the child-process variant lives in
+/// `rust/tests/tcp_cluster.rs`).
+fn loopback(m: usize) -> (TcpHandle, Vec<JoinHandle<()>>) {
+    let builder = TcpClusterBuilder::bind("127.0.0.1:0").unwrap();
+    let addr = builder.local_addr().unwrap();
+    let threads: Vec<_> = (0..m)
+        .map(|_| {
+            std::thread::spawn(move || {
+                let stream = TcpStream::connect(addr).expect("worker connect");
+                serve(stream).expect("worker serve");
+            })
+        })
+        .collect();
+    (TcpHandle::new(builder.accept(m).unwrap()), threads)
+}
+
+fn join_workers(handle: TcpHandle, threads: Vec<JoinHandle<()>>) {
+    handle.with(|c| c.shutdown());
+    drop(handle);
+    for t in threads {
+        t.join().expect("worker thread panicked");
+    }
+}
+
+/// The trace's deterministic math fields, as bits.
+fn math_fields(report: &SolveReport) -> Vec<(usize, u64, u64, u64)> {
+    report
+        .trace
+        .rounds
+        .iter()
+        .map(|r| (r.round, r.passes.to_bits(), r.primal.to_bits(), r.dual.to_bits()))
+        .collect()
+}
+
+/// The legacy three-barrier eval path, written against the public API:
+/// one fused round, then primal and dual as separate cluster exchanges
+/// every `gap_every` rounds. The fused engine trace must reproduce these
+/// records bit for bit.
+fn three_barrier_records(
+    dadm: &mut TestDadm,
+    max_rounds: usize,
+    gap_every: usize,
+) -> (Vec<(usize, u64, u64, u64)>, Vec<f64>) {
+    dadm.resync();
+    let mut records = Vec::new();
+    let mut record = |d: &mut TestDadm, records: &mut Vec<(usize, u64, u64, u64)>| {
+        let primal = d.primal();
+        let dual = d.dual();
+        records.push((d.rounds(), d.passes().to_bits(), primal.to_bits(), dual.to_bits()));
+    };
+    record(dadm, &mut records);
+    for r in 1..=max_rounds {
+        dadm.round();
+        if r % gap_every == 0 || r == max_rounds {
+            record(dadm, &mut records);
+        }
+    }
+    (records, dadm.w().to_vec())
+}
+
+#[test]
+fn fused_trace_matches_three_barrier_path_in_process() {
+    let data = spec(240, 32).generate();
+    let part = Partition::balanced(data.n(), 4, 7);
+    for cluster in [Cluster::Serial, Cluster::Threads] {
+        for gap_every in [1usize, 3] {
+            let max_rounds = 10;
+            // Fused engine solve (capped: eps = 0 never fires, so the
+            // trace covers rounds 0..=max like the legacy loop's).
+            let mut fused = build(&data, &part, cluster.clone(), gap_every, 1, 64);
+            let report = fused.solve(0.0, max_rounds);
+            let mut legacy = build(&data, &part, cluster.clone(), gap_every, 1, 64);
+            let (want, want_w) = three_barrier_records(&mut legacy, max_rounds, gap_every);
+            assert_eq!(
+                math_fields(&report),
+                want,
+                "trace diverged on {cluster:?} at gap_every {gap_every}"
+            );
+            assert_eq!(report.w, want_w, "iterates diverged on {cluster:?}");
+            assert_eq!(report.rounds, max_rounds);
+        }
+    }
+}
+
+#[test]
+fn fused_trace_matches_three_barrier_path_over_tcp() {
+    // TCP loopback at T = 1 and T = 2 (multi-threaded workers): the
+    // fused engine solve vs the legacy three-barrier loop on a second
+    // identical fleet — traces bit-identical, and the fused fleet moves
+    // strictly fewer wire bytes.
+    let problem = spec(240, 32);
+    let data = problem.generate();
+    let m = 2usize;
+    let part = Partition::balanced(data.n(), m, 7);
+    for t in [1usize, 2] {
+        let max_rounds = 8;
+        let assign = |handle: &TcpHandle| {
+            handle
+                .with(|c| {
+                    c.assign(synthetic_specs(
+                        &problem,
+                        m,
+                        7,
+                        SEED,
+                        0.25,
+                        WireLoss::SmoothHinge(SmoothHinge::default()),
+                        WireSolver::ProxSdca,
+                        t,
+                    ))
+                })
+                .unwrap();
+        };
+        let (fused_handle, fused_workers) = loopback(m);
+        assign(&fused_handle);
+        let mut fused = build(&data, &part, Cluster::Tcp(fused_handle.clone()), 1, t, 64);
+        let report = fused.solve(0.0, max_rounds);
+        let fused_bytes = fused.wire_bytes();
+
+        let (legacy_handle, legacy_workers) = loopback(m);
+        assign(&legacy_handle);
+        let mut legacy = build(&data, &part, Cluster::Tcp(legacy_handle.clone()), 1, t, 64);
+        let (want, _) = three_barrier_records(&mut legacy, max_rounds, 1);
+        let legacy_bytes = legacy.wire_bytes();
+
+        assert_eq!(math_fields(&report), want, "TCP trace diverged at T = {t}");
+        assert!(
+            fused_bytes < legacy_bytes,
+            "fused telemetry must move fewer bytes: {fused_bytes} vs {legacy_bytes}"
+        );
+        join_workers(fused_handle, fused_workers);
+        join_workers(legacy_handle, legacy_workers);
+    }
+}
+
+#[test]
+fn gap_round_eval_wire_is_constant_in_d() {
+    // The acceptance pin: at --gap-every 1 the per-round eval wire drops
+    // from O(d·m) (shipping the iterate for LossSumAt) to O(m) (16
+    // telemetry bytes per machine). Fleet A solves with fused telemetry;
+    // fleet B replays the pre-fusion wire pattern — round + LossSumAt(w)
+    // + dual — and must move ≳ 8·d bytes per machine per round more.
+    let d = 2048usize;
+    let problem = spec(120, d);
+    let data = problem.generate();
+    let m = 2usize;
+    let part = Partition::balanced(data.n(), m, 7);
+    let rounds = 6usize;
+
+    let (fused_handle, fused_workers) = loopback(m);
+    fused_handle
+        .with(|c| {
+            c.assign(synthetic_specs(
+                &problem,
+                m,
+                7,
+                SEED,
+                0.25,
+                WireLoss::SmoothHinge(SmoothHinge::default()),
+                WireSolver::ProxSdca,
+                1,
+            ))
+        })
+        .unwrap();
+    let mut fused = build(&data, &part, Cluster::Tcp(fused_handle.clone()), 1, 1, 64);
+    let _ = fused.solve(0.0, rounds);
+    let fused_bytes = fused.wire_bytes();
+
+    let (legacy_handle, legacy_workers) = loopback(m);
+    legacy_handle
+        .with(|c| {
+            c.assign(synthetic_specs(
+                &problem,
+                m,
+                7,
+                SEED,
+                0.25,
+                WireLoss::SmoothHinge(SmoothHinge::default()),
+                WireSolver::ProxSdca,
+                1,
+            ))
+        })
+        .unwrap();
+    let mut legacy = build(&data, &part, Cluster::Tcp(legacy_handle.clone()), 1, 1, 64);
+    legacy.resync();
+    let _ = legacy.gap();
+    for _ in 0..rounds {
+        legacy.round();
+        // The pre-fusion eval wire: the full iterate ships to every
+        // worker for the loss sum.
+        let w = legacy.w().to_vec();
+        let _ = legacy.loss_sum_at(&w);
+        let _ = legacy.dual();
+    }
+    let legacy_bytes = legacy.wire_bytes();
+
+    // Each legacy gap round ships ≥ 8·d bytes per machine for w alone.
+    let w_payload = (rounds * m * 8 * d) as u64;
+    assert!(
+        legacy_bytes >= fused_bytes + w_payload / 2,
+        "legacy eval wire should dominate: legacy {legacy_bytes} vs fused {fused_bytes} \
+         (w payload ≈ {w_payload})"
+    );
+    join_workers(fused_handle, fused_workers);
+    join_workers(legacy_handle, legacy_workers);
+}
+
+#[test]
+fn steady_state_gap_round_is_one_barrier() {
+    // Barrier accounting at --gap-every 1: resync + initial record +
+    // R fused rounds + closing record — exactly R + 3 cluster barriers,
+    // i.e. ONE per steady-state round. The three-barrier loop pays
+    // 3 extra barriers per gap round on top of its rounds.
+    let data = spec(160, 24).generate();
+    let part = Partition::balanced(data.n(), 4, 7);
+    let rounds = 12usize;
+    for gap_every in [1usize, 3] {
+        let mut fused = build(&data, &part, Cluster::Serial, gap_every, 1, 64);
+        let report = fused.solve(0.0, rounds);
+        assert_eq!(report.rounds, rounds);
+        assert_eq!(
+            fused.barriers(),
+            rounds as u64 + 3,
+            "fused solve must issue one barrier per round plus resync, \
+             initial and closing records (gap_every {gap_every})"
+        );
+    }
+    // Contrast: the legacy path's explicit evals each pay barriers.
+    let mut legacy = build(&data, &part, Cluster::Serial, 1, 1, 64);
+    legacy.resync();
+    let _ = legacy.gap();
+    let base = legacy.barriers(); // resync + fused initial gap
+    for _ in 0..rounds {
+        legacy.round();
+        let _ = legacy.primal(); // sync_workers + loss barrier
+        let _ = legacy.dual(); // conj barrier
+    }
+    let per_round = (legacy.barriers() - base) as usize;
+    assert_eq!(
+        per_round,
+        rounds * 4,
+        "three-barrier eval path: round + flush + loss + conj per round"
+    );
+}
+
+#[test]
+fn loss_sum_current_is_bit_identical_to_shipping_w() {
+    // EvalOp::LossSumAtCurrent evaluates against the worker replicas;
+    // value-setting broadcasts keep those bit-identical to the
+    // coordinator's iterate, so the two loss sums must agree exactly.
+    let data = spec(200, 24).generate();
+    let part = Partition::balanced(data.n(), 4, 7);
+    let mut dadm = build(&data, &part, Cluster::Serial, 1, 1, 64);
+    dadm.resync();
+    for _ in 0..5 {
+        dadm.round();
+        let shipped = {
+            let w = dadm.w().to_vec();
+            dadm.sync_workers();
+            dadm.loss_sum_at(&w)
+        };
+        let current = dadm.loss_sum_current();
+        assert_eq!(shipped.to_bits(), current.to_bits());
+    }
+}
+
+#[test]
+fn incremental_conj_sum_drift_is_bounded_and_resummable() {
+    let data = spec(200, 24).generate();
+    let part = Partition::balanced(data.n(), 4, 7);
+    let loss = SmoothHinge::default();
+
+    // Never resum: after many rounds of O(1) incremental updates the
+    // running sums must still sit within float-drift distance of the
+    // exact O(n) recomputation.
+    let mut free_run = build(&data, &part, Cluster::Serial, 1, 1, 0);
+    free_run.resync();
+    let _ = free_run.gap(); // arm the running sums
+    for _ in 0..120 {
+        free_run.round();
+    }
+    let _ = free_run.gap();
+    for ws in free_run.machine_states() {
+        let exact = ws.dual_conj_sum(&loss);
+        let running = ws.conj_sum.expect("telemetry armed");
+        assert!(
+            (running - exact).abs() <= 1e-8 * (1.0 + exact.abs()),
+            "incremental conj drifted: running {running} vs exact {exact}"
+        );
+    }
+
+    // Resum cadence 5: round 120 is a resum round, so right after it the
+    // running sums ARE the exact recomputation, bit for bit.
+    let mut resummed = build(&data, &part, Cluster::Serial, 1, 1, 5);
+    resummed.resync();
+    let _ = resummed.gap();
+    for _ in 0..120 {
+        resummed.round();
+    }
+    for ws in resummed.machine_states() {
+        let exact = ws.dual_conj_sum(&loss);
+        let running = ws.conj_sum.expect("telemetry armed");
+        assert_eq!(
+            running.to_bits(),
+            exact.to_bits(),
+            "a resum round must land exactly on the recomputed sum"
+        );
+    }
+}
+
+#[test]
+fn lagged_stop_trace_still_ends_at_converged_record() {
+    // A converging fused solve detects the gap target one round late
+    // (the record for round T completes during round T+1) but reports
+    // the same trace: its last record is the converged one.
+    let data = spec(240, 16).generate();
+    let part = Partition::balanced(data.n(), 3, 7);
+    let mut dadm = build(&data, &part, Cluster::Serial, 1, 1, 64);
+    let report = dadm.solve(1e-5, 400);
+    assert!(report.converged, "gap {}", report.normalized_gap());
+    let last = report.trace.last().unwrap();
+    assert!(last.gap() / data.n() as f64 <= 1e-5);
+    assert_eq!(
+        report.rounds,
+        last.round + 1,
+        "lagged stopping overruns by exactly one round"
+    );
+}

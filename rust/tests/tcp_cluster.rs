@@ -95,6 +95,7 @@ fn build_dadm_t(
             gap_every: 1,
             sparse_comm: true,
             local_threads,
+            conj_resum_every: 64,
         },
     )
 }
