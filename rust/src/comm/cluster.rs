@@ -86,6 +86,7 @@ impl Cluster {
         F: Fn(usize, &mut S) -> T + Sync,
     {
         match self {
+            // dadm-lint: allow(total-decoding) — by-design coordinator-bug guard (see module docs); closures cannot cross a process boundary
             Cluster::Tcp(_) => panic!(
                 "Cluster::Tcp cannot execute closures; route this operation \
                  through the TcpHandle wire ops (coordinator bug)"
@@ -94,6 +95,7 @@ impl Cluster {
                 let mut results = Vec::with_capacity(states.len());
                 let mut times = Vec::with_capacity(states.len());
                 for (l, s) in states.iter_mut().enumerate() {
+                    // dadm-lint: allow(wall-clock) — per-leg compute timing for the cost model; reported, never control flow
                     let t0 = Instant::now();
                     results.push(f(l, s));
                     times.push(t0.elapsed().as_secs_f64());
@@ -101,6 +103,7 @@ impl Cluster {
                 ParallelRun {
                     results,
                     parallel_secs: times.iter().cloned().fold(0.0, f64::max),
+                    // dadm-lint: allow(naive-reduction) — local timing accounting, not cross-machine float math
                     total_secs: times.iter().sum(),
                 }
             }

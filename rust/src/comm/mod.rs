@@ -14,6 +14,13 @@
 //! compute vs. "Comm. Time". All algorithmic quantities (rounds, bytes
 //! moved, gap-vs-communications) are identical across backends — the
 //! Tcp-vs-Serial parity tests pin them bit for bit.
+//!
+//! The total-decoding discipline (DESIGN.md §12) is enforced twice: by
+//! `dadm-lint check` and by the module-wide clippy deny below — no
+//! `unwrap`/`expect` in non-test communication code (`clippy.toml`
+//! exempts tests); the audited exceptions carry an explicit `#[allow]`
+//! beside their `dadm-lint: allow` waiver.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
 
 pub mod allreduce;
 pub mod cluster;

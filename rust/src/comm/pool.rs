@@ -93,6 +93,7 @@ static POOL: OnceLock<WorkerPool> = OnceLock::new();
 /// Spawn one parked queue-driven thread at the given tier.
 fn spawn_queue_thread(name: String, tier: Tier) -> Sender<Job> {
     let (tx, rx) = channel::<Job>();
+    #[allow(clippy::expect_used)]
     std::thread::Builder::new()
         .name(name)
         .spawn(move || {
@@ -104,6 +105,7 @@ fn spawn_queue_thread(name: String, tier: Tier) -> Sender<Job> {
                 let _ = catch_unwind(AssertUnwindSafe(job));
             }
         })
+        // dadm-lint: allow(total-decoding) — OS thread-spawn failure at pool growth is unrecoverable; abort loudly
         .expect("failed to spawn pool worker");
     tx
 }
@@ -117,13 +119,25 @@ impl WorkerPool {
     }
 
     /// Number of worker threads currently alive (top tier only).
+    ///
+    /// A poisoned registry lock is recovered rather than propagated: the
+    /// registry (a grow-only `Vec` of queue senders) is never left
+    /// half-mutated by a panicking round, and `Drop`-driven teardown
+    /// still needs to count workers.
     pub fn workers(&self) -> usize {
-        self.senders.lock().expect("pool lock poisoned").len()
+        self.senders
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .len()
     }
 
     /// Grow the pool to at least `m` workers and hand back their queues.
+    /// Poison recovery as in [`WorkerPool::workers`].
     fn ensure_workers(&self, m: usize) -> Vec<Sender<Job>> {
-        let mut senders = self.senders.lock().expect("pool lock poisoned");
+        let mut senders = self
+            .senders
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
         while senders.len() < m {
             let id = senders.len();
             senders.push(spawn_queue_thread(format!("dadm-worker-{id}"), Tier::Worker));
@@ -282,6 +296,7 @@ where
                 total_secs += t;
             }
             Some(Err(payload)) => std::panic::resume_unwind(payload),
+            // dadm-lint: allow(total-decoding) — a dead worker dropped a job unrun; the synchronous barrier cannot fill its slot
             None => panic!("pool worker thread died"),
         }
     }

@@ -456,9 +456,16 @@ impl TcpHandle {
         TcpHandle(Arc::new(Mutex::new(cluster)))
     }
 
-    /// Run `f` against the cluster under the lock.
+    /// Run `f` against the cluster under the lock. A poisoned lock (a
+    /// panicked round on another thread) is recovered, not propagated:
+    /// the panicking round already aborted its solve, and the
+    /// `Drop`-driven shutdown path still needs the cluster to send
+    /// orderly `Shutdown` frames.
     pub fn with<T>(&self, f: impl FnOnce(&mut TcpCluster) -> T) -> T {
-        f(&mut self.0.lock().expect("tcp cluster mutex poisoned"))
+        f(&mut self
+            .0
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner))
     }
 
     /// Number of connected workers `m`.
@@ -748,6 +755,7 @@ impl WorkerHost {
                 let reg = self.reg.clone().context("no regularizer set")?;
                 self.assigned()?;
                 self.validate_broadcast(&broadcast)?;
+                // dadm-lint: allow(wall-clock) — elapsed-seconds telemetry shipped in the reply; never control flow
                 let t0 = Instant::now();
                 // Fused section, mirroring the in-process round exactly:
                 // apply the parked Δṽ, piggyback the requested gap
@@ -787,6 +795,8 @@ impl WorkerHost {
                 // ships one pre-scaled message — the wire-free merge of
                 // DESIGN.md §10. The telemetry scalars pre-reduce with
                 // the same machine-local pairwise tree as the eval legs.
+                // dadm-lint: allow(total-decoding) — T == 1 guarantees exactly one sub-solver delta
+                #[allow(clippy::expect_used)]
                 let delta = if threads == 1 {
                     deltas.into_iter().next().expect("one sub-solver")
                 } else {
@@ -856,6 +866,7 @@ impl WorkerHost {
                         // The same fused shard pass + machine-local
                         // unit-weight pre-reduce the in-process OWL-QN
                         // oracle runs (`grad_oracle_sums`).
+                        // dadm-lint: allow(wall-clock) — elapsed-seconds telemetry shipped in the reply; never control flow
                         let t0 = Instant::now();
                         let mut run = run_subgroup(threads > 1, &mut self.subs, |_, sub| {
                             apply_broadcast_to(&mut sub.state, &broadcast, &reg);
@@ -863,6 +874,8 @@ impl WorkerHost {
                         });
                         // As in the in-process oracle: a single-vector
                         // pre-reduce is a bitwise identity — skip it.
+                        // dadm-lint: allow(total-decoding) — guarded by `len() == 1`, pop cannot fail
+                        #[allow(clippy::expect_used)]
                         let grad = if run.results.len() == 1 {
                             run.results.pop().expect("one sub-shard")
                         } else {

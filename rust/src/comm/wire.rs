@@ -71,10 +71,51 @@ pub const FRAME_HEADER_BYTES: usize = 5;
 // Byte-level encoder / decoder
 // ---------------------------------------------------------------------
 
-/// Append-only little-endian payload builder.
+/// Structural encode-side failures. Decode-side failures stay plain
+/// `anyhow` errors (they carry malformed-input context strings); the
+/// encode side has exactly two ways to fail, both of which mean the
+/// *caller* built something the frame format cannot represent — they
+/// surface as typed `Err`s, never panics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireError {
+    /// A collection's element count exceeded the `u32` count field.
+    CollectionTooLarge {
+        /// The offending element count.
+        len: usize,
+    },
+    /// A frame payload exceeded [`MAX_FRAME_LEN`].
+    FrameTooLarge {
+        /// The offending payload size in bytes.
+        len: usize,
+    },
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::CollectionTooLarge { len } => {
+                write!(f, "collection too large for wire: {len} elements exceed u32")
+            }
+            WireError::FrameTooLarge { len } => {
+                write!(
+                    f,
+                    "frame payload too large: {len} bytes exceed cap {MAX_FRAME_LEN}"
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// Append-only little-endian payload builder. Oversized element counts
+/// are *recorded* rather than panicking; [`Enc::finish`] converts the
+/// record into a [`WireError`] before any byte reaches a socket.
 #[derive(Default)]
 struct Enc {
     buf: Vec<u8>,
+    /// First oversized collection length seen, if any (sticky).
+    oversize: Option<usize>,
 }
 
 impl Enc {
@@ -99,9 +140,18 @@ impl Enc {
     }
 
     /// Element count prefix (u32 — no in-protocol collection exceeds it,
-    /// and [`MAX_FRAME_LEN`] bounds it anyway).
+    /// and [`MAX_FRAME_LEN`] bounds it anyway). A count that does not
+    /// fit is latched into `oversize` and reported by [`Enc::finish`] —
+    /// keeping this method infallible keeps every `put_*` encoder free
+    /// of `Result` plumbing without hiding the failure.
     fn count(&mut self, n: usize) {
-        self.u32(u32::try_from(n).expect("collection too large for wire"));
+        match u32::try_from(n) {
+            Ok(x) => self.u32(x),
+            Err(_) => {
+                self.oversize.get_or_insert(n);
+                self.u32(u32::MAX);
+            }
+        }
     }
 
     fn f64s(&mut self, xs: &[f64]) {
@@ -124,6 +174,29 @@ impl Enc {
         self.count(s.len());
         self.buf.extend_from_slice(s.as_bytes());
     }
+
+    /// The finished payload — or the latched [`WireError`] if any
+    /// collection was too large for its count field.
+    fn finish(self) -> Result<Vec<u8>, WireError> {
+        match self.oversize {
+            Some(len) => Err(WireError::CollectionTooLarge { len }),
+            None => Ok(self.buf),
+        }
+    }
+}
+
+/// Copy a length-`N` slice into an array without indexing or `unwrap`:
+/// `zip` truncates, so this is total even on a caller bug (which
+/// `debug_assert!` would catch in test builds). Every fixed-width read
+/// in [`Dec`] funnels through here — the decode layer is literally
+/// panic-free, not just panic-free-by-argument.
+fn le_array<const N: usize>(chunk: &[u8]) -> [u8; N] {
+    debug_assert_eq!(chunk.len(), N);
+    let mut out = [0u8; N];
+    for (o, &b) in out.iter_mut().zip(chunk) {
+        *o = b;
+    }
+    out
 }
 
 /// Consuming little-endian payload reader; every accessor validates the
@@ -144,24 +217,30 @@ impl<'a> Dec<'a> {
         Ok(head)
     }
 
+    /// Take exactly `N` bytes as a fixed-size array — the single
+    /// infallible-conversion point every fixed-width accessor uses.
+    fn le_bytes<const N: usize>(&mut self) -> Result<[u8; N]> {
+        Ok(le_array(self.take(N)?))
+    }
+
     fn u8(&mut self) -> Result<u8> {
-        Ok(self.take(1)?[0])
+        Ok(u8::from_le_bytes(self.le_bytes()?))
     }
 
     fn u16(&mut self) -> Result<u16> {
-        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+        Ok(u16::from_le_bytes(self.le_bytes()?))
     }
 
     fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(u32::from_le_bytes(self.le_bytes()?))
     }
 
     fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(u64::from_le_bytes(self.le_bytes()?))
     }
 
     fn f64(&mut self) -> Result<f64> {
-        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(f64::from_le_bytes(self.le_bytes()?))
     }
 
     /// Element count whose `n · elem_bytes` must fit in the remaining
@@ -184,7 +263,7 @@ impl<'a> Dec<'a> {
         let bytes = self.take(n * 8)?;
         Ok(bytes
             .chunks_exact(8)
-            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .map(|c| f64::from_le_bytes(le_array(c)))
             .collect())
     }
 
@@ -193,7 +272,7 @@ impl<'a> Dec<'a> {
         let bytes = self.take(n * 4)?;
         Ok(bytes
             .chunks_exact(4)
-            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .map(|c| u32::from_le_bytes(le_array(c)))
             .collect())
     }
 
@@ -676,6 +755,13 @@ const TAG_SHUTDOWN: u8 = 11;
 const TAG_ERROR: u8 = 12;
 const TAG_GAP_REPLY: u8 = 13;
 
+/// Strict-monotonicity check for sparse index vectors, written with
+/// iterator pairing instead of `w[0] < w[1]` windows — the decode layer
+/// admits no slice indexing at all (dadm-lint `total-decoding`).
+fn strictly_increasing(idx: &[u32]) -> bool {
+    idx.iter().zip(idx.iter().skip(1)).all(|(a, b)| a < b)
+}
+
 fn put_broadcast(e: &mut Enc, b: BroadcastRef<'_>) {
     match b {
         BroadcastRef::Empty => e.u8(0),
@@ -704,7 +790,7 @@ fn take_broadcast(d: &mut Dec<'_>) -> Result<WireBroadcast> {
                 val.len()
             );
             ensure!(
-                idx.windows(2).all(|w| w[0] < w[1]),
+                strictly_increasing(&idx),
                 "broadcast indices not strictly increasing"
             );
             WireBroadcast::SparseSet { idx, val }
@@ -743,7 +829,7 @@ fn take_delta(d: &mut Dec<'_>) -> Result<Delta> {
                 val.len()
             );
             ensure!(
-                idx.windows(2).all(|w| w[0] < w[1]),
+                strictly_increasing(&idx),
                 "delta indices not strictly increasing"
             );
             if let Some(&j) = idx.last() {
@@ -993,11 +1079,9 @@ fn take_eval(d: &mut Dec<'_>) -> Result<EvalOp> {
 }
 
 fn write_framed<W: Write>(w: &mut W, tag: u8, payload: &[u8]) -> Result<usize> {
-    ensure!(
-        payload.len() <= MAX_FRAME_LEN as usize,
-        "frame payload too large: {} bytes",
-        payload.len()
-    );
+    if payload.len() > MAX_FRAME_LEN as usize {
+        return Err(WireError::FrameTooLarge { len: payload.len() }.into());
+    }
     w.write_all(&[tag])?;
     w.write_all(&(payload.len() as u32).to_le_bytes())?;
     w.write_all(payload)?;
@@ -1017,7 +1101,7 @@ pub fn write_local_step<W: Write>(
     e.f64(lambda);
     put_broadcast(&mut e, b);
     e.u8(flags.to_byte());
-    write_framed(w, TAG_LOCAL_STEP, &e.buf)
+    write_framed(w, TAG_LOCAL_STEP, &e.finish()?)
 }
 
 /// Encode an `Eval` frame with its fused broadcast from borrowed buffers
@@ -1026,7 +1110,7 @@ pub fn write_eval<W: Write>(w: &mut W, op: &EvalOp, b: BroadcastRef<'_>) -> Resu
     let mut e = Enc::default();
     put_eval(&mut e, op);
     put_broadcast(&mut e, b);
-    write_framed(w, TAG_EVAL, &e.buf)
+    write_framed(w, TAG_EVAL, &e.finish()?)
 }
 
 /// Encode a `Broadcast` frame from borrowed buffers (see
@@ -1034,7 +1118,7 @@ pub fn write_eval<W: Write>(w: &mut W, op: &EvalOp, b: BroadcastRef<'_>) -> Resu
 pub fn write_broadcast<W: Write>(w: &mut W, b: BroadcastRef<'_>) -> Result<usize> {
     let mut e = Enc::default();
     put_broadcast(&mut e, b);
-    write_framed(w, TAG_BROADCAST, &e.buf)
+    write_framed(w, TAG_BROADCAST, &e.finish()?)
 }
 
 impl Frame {
@@ -1128,7 +1212,7 @@ impl Frame {
                 TAG_ERROR
             }
         };
-        write_framed(w, tag, &e.buf)
+        write_framed(w, tag, &e.finish()?)
     }
 
     /// Read one frame; `Err` (never a panic) on truncation, unknown
@@ -1145,8 +1229,11 @@ impl Frame {
     pub fn read_from_reusing<R: Read>(r: &mut R, payload: &mut Vec<u8>) -> Result<(Frame, usize)> {
         let mut header = [0u8; FRAME_HEADER_BYTES];
         r.read_exact(&mut header).context("reading frame header")?;
-        let tag = header[0];
-        let len = u32::from_le_bytes(header[1..5].try_into().unwrap());
+        // Parse the header through `Dec` like any other payload — no
+        // indexing, no infallible-by-argument conversions.
+        let mut h = Dec::new(&header);
+        let tag = h.u8()?;
+        let len = h.u32()?;
         ensure!(
             len <= MAX_FRAME_LEN,
             "frame length {len} exceeds protocol cap {MAX_FRAME_LEN}"
@@ -1162,7 +1249,7 @@ impl Frame {
         let mut d = Dec::new(payload);
         let frame = match tag {
             TAG_HELLO => Frame::Hello {
-                magic: d.take(4)?.try_into().unwrap(),
+                magic: d.le_bytes()?,
                 version: d.u16()?,
             },
             TAG_WELCOME => Frame::Welcome {
@@ -1708,5 +1795,58 @@ mod tests {
             }
             _ => panic!("expected shard spec"),
         }
+    }
+
+    #[test]
+    fn oversized_count_is_latched_not_panicked() {
+        // A count beyond u32 must surface as `WireError`, never a panic
+        // (the pre-PR-6 encoder `expect`ed here).
+        let mut e = Enc::default();
+        let too_big = u32::MAX as usize + 1;
+        e.count(too_big);
+        e.count(too_big + 7); // sticky: first offender is reported
+        match e.finish() {
+            Err(WireError::CollectionTooLarge { len }) => assert_eq!(len, too_big),
+            other => panic!("expected CollectionTooLarge, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn in_range_counts_finish_clean() {
+        let mut e = Enc::default();
+        e.f64s(&[1.0, 2.0, 3.0]);
+        e.str("ok");
+        let payload = e.finish().unwrap();
+        let mut d = Dec::new(&payload);
+        assert_eq!(d.f64s().unwrap(), vec![1.0, 2.0, 3.0]);
+        assert_eq!(d.str().unwrap(), "ok");
+        d.finish().unwrap();
+    }
+
+    #[test]
+    fn wire_error_messages_name_the_size() {
+        let c = WireError::CollectionTooLarge { len: 5_000_000_000 };
+        assert!(format!("{c}").contains("5000000000"));
+        let f = WireError::FrameTooLarge { len: 7 };
+        assert!(format!("{f}").contains("7"));
+        // Converts into `anyhow::Error` through the std-error blanket.
+        let err: anyhow::Error = c.into();
+        assert!(format!("{err}").contains("collection too large"));
+    }
+
+    #[test]
+    fn strictly_increasing_matches_windows_semantics() {
+        assert!(strictly_increasing(&[]));
+        assert!(strictly_increasing(&[3]));
+        assert!(strictly_increasing(&[0, 1, 2, 9]));
+        assert!(!strictly_increasing(&[0, 1, 1]));
+        assert!(!strictly_increasing(&[2, 1]));
+    }
+
+    #[test]
+    fn le_array_truncates_rather_than_panics() {
+        // Total even on a (debug-asserted) caller bug in release builds.
+        assert_eq!(le_array::<2>(&[0xAB, 0xCD]), [0xAB, 0xCD]);
+        assert_eq!(le_array::<0>(&[]), [0u8; 0]);
     }
 }

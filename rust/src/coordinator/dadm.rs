@@ -1013,6 +1013,7 @@ where
                 "rng stream count mismatch"
             );
             for (m, s) in self.machines.iter_mut().zip(states) {
+                // dadm-lint: allow(rng-construction) — checkpoint restore resumes the captured fork stream verbatim
                 m.rng = Rng::from_state(*s);
             }
         }

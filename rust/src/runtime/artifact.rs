@@ -1,6 +1,7 @@
 //! Artifact discovery + PJRT compilation cache.
 
 use anyhow::{Context, Result};
+// dadm-lint: allow(hash-iter) — compile cache is keyed lookup/insert only, never iterated
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
@@ -33,6 +34,7 @@ pub fn artifact_path() -> PathBuf {
 /// A PJRT CPU client plus a compile cache of loaded artifacts.
 pub struct XlaRuntime {
     client: xla::PjRtClient,
+    // dadm-lint: allow(hash-iter) — keyed lookup/insert only, never iterated
     cache: HashMap<ArtifactSpec, xla::PjRtLoadedExecutable>,
     dir: PathBuf,
 }
@@ -67,6 +69,7 @@ impl XlaRuntime {
         let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
         Ok(XlaRuntime {
             client,
+            // dadm-lint: allow(hash-iter) — keyed lookup/insert only, never iterated
             cache: HashMap::new(),
             dir,
         })

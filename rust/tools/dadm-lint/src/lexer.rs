@@ -1,0 +1,514 @@
+//! A hand-rolled Rust token scanner — just enough lexical structure for
+//! the invariant rules: identifiers, punctuation, and literals, with
+//! comments and strings fully delimited so rule patterns can never match
+//! inside them. Line comments are kept (per line) because they carry the
+//! `dadm-lint: allow(...)` waivers; everything else about comments is
+//! discarded.
+//!
+//! The scanner is deliberately *not* a full Rust lexer: it does not
+//! classify keywords, does not parse numeric suffixes precisely, and
+//! treats a float literal as `digits . digits` (three tokens). All that
+//! matters is that (a) token boundaries are correct for the patterns the
+//! rules match, and (b) the normalization is stable — the wire-schema
+//! fingerprint hashes these token streams, so any lexer change that
+//! alters token text for `wire.rs` items requires regenerating
+//! `rust/src/comm/wire.schema`.
+
+/// Token classes — coarse on purpose (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`[A-Za-z_][A-Za-z0-9_]*`, raw `r#ident`).
+    Ident,
+    /// Single punctuation character.
+    Punct,
+    /// String/char/byte/numeric literal or lifetime, verbatim text.
+    Literal,
+}
+
+/// One token with its source line (1-based).
+#[derive(Clone, Debug)]
+pub struct Tok {
+    /// Verbatim source text of the token.
+    pub text: String,
+    /// Coarse class.
+    pub kind: TokKind,
+    /// 1-based source line the token starts on.
+    pub line: usize,
+}
+
+/// A scanned file: the token stream plus line comments by line number.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    /// All non-comment tokens in source order.
+    pub toks: Vec<Tok>,
+    /// `(line, comment_text)` for every `//` comment (text excludes the
+    /// leading slashes), in source order.
+    pub comments: Vec<(usize, String)>,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+struct Scanner {
+    chars: Vec<char>,
+    i: usize,
+    line: usize,
+}
+
+impl Scanner {
+    fn peek(&self, ahead: usize) -> char {
+        self.chars.get(self.i + ahead).copied().unwrap_or('\0')
+    }
+
+    fn bump(&mut self) -> char {
+        let c = self.peek(0);
+        if c == '\n' {
+            self.line += 1;
+        }
+        self.i += 1;
+        c
+    }
+
+    fn eof(&self) -> bool {
+        self.i >= self.chars.len()
+    }
+
+    /// Consume a run of `#` characters, returning the count.
+    fn hashes(&mut self) -> usize {
+        let mut n = 0;
+        while self.peek(0) == '#' {
+            self.bump();
+            n += 1;
+        }
+        n
+    }
+
+    /// Consume a (possibly raw) string body starting at the opening
+    /// quote; `raw_hashes > 0` means raw-string rules (no escapes,
+    /// terminated by `"` + that many `#`).
+    fn string_body(&mut self, out: &mut String, raw_hashes: usize) {
+        out.push(self.bump()); // opening quote
+        while !self.eof() {
+            let c = self.bump();
+            out.push(c);
+            if raw_hashes == 0 {
+                if c == '\\' {
+                    out.push(self.bump());
+                } else if c == '"' {
+                    return;
+                }
+            } else if c == '"' {
+                let mut seen = 0;
+                while seen < raw_hashes && self.peek(0) == '#' {
+                    out.push(self.bump());
+                    seen += 1;
+                }
+                if seen == raw_hashes {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Scan `src` into a [`Lexed`] token stream. Total: any input produces
+/// some tokenization (unterminated literals run to end of file).
+pub fn lex(src: &str) -> Lexed {
+    let mut s = Scanner {
+        chars: src.chars().collect(),
+        i: 0,
+        line: 1,
+    };
+    let mut out = Lexed::default();
+    while !s.eof() {
+        let c = s.peek(0);
+        let line = s.line;
+        if c.is_whitespace() {
+            s.bump();
+            continue;
+        }
+        // Comments.
+        if c == '/' && s.peek(1) == '/' {
+            s.bump();
+            s.bump();
+            let mut text = String::new();
+            while !s.eof() && s.peek(0) != '\n' {
+                text.push(s.bump());
+            }
+            out.comments.push((line, text));
+            continue;
+        }
+        if c == '/' && s.peek(1) == '*' {
+            s.bump();
+            s.bump();
+            let mut depth = 1usize;
+            while !s.eof() && depth > 0 {
+                if s.peek(0) == '/' && s.peek(1) == '*' {
+                    s.bump();
+                    s.bump();
+                    depth += 1;
+                } else if s.peek(0) == '*' && s.peek(1) == '/' {
+                    s.bump();
+                    s.bump();
+                    depth -= 1;
+                } else {
+                    s.bump();
+                }
+            }
+            continue;
+        }
+        // Raw strings / byte strings / raw identifiers: r"..", r#".."#,
+        // b"..", br#".."#, b'..', r#ident.
+        if c == 'r' || c == 'b' {
+            let (prefix_len, has_b, has_r) = if c == 'b' && s.peek(1) == 'r' {
+                (2, true, true)
+            } else if c == 'b' {
+                (1, true, false)
+            } else {
+                (1, false, true)
+            };
+            let mut j = prefix_len;
+            let mut nh = 0;
+            if has_r {
+                while s.peek(j) == '#' {
+                    j += 1;
+                    nh += 1;
+                }
+            }
+            if s.peek(j) == '"' {
+                let mut text = String::new();
+                for _ in 0..prefix_len {
+                    text.push(s.bump());
+                }
+                for _ in 0..nh {
+                    text.push(s.bump());
+                }
+                s.string_body(&mut text, nh);
+                out.toks.push(Tok {
+                    text,
+                    kind: TokKind::Literal,
+                    line,
+                });
+                continue;
+            }
+            if has_b && !has_r && s.peek(1) == '\'' {
+                // Byte char literal b'x'.
+                let mut text = String::new();
+                text.push(s.bump());
+                text.push(s.bump());
+                while !s.eof() {
+                    let ch = s.bump();
+                    text.push(ch);
+                    if ch == '\\' {
+                        text.push(s.bump());
+                    } else if ch == '\'' {
+                        break;
+                    }
+                }
+                out.toks.push(Tok {
+                    text,
+                    kind: TokKind::Literal,
+                    line,
+                });
+                continue;
+            }
+            if has_r && !has_b && s.peek(1) == '#' && is_ident_start(s.peek(2)) {
+                // Raw identifier r#ident.
+                let mut text = String::new();
+                text.push(s.bump());
+                s.hashes();
+                text.push('#');
+                while is_ident_continue(s.peek(0)) {
+                    text.push(s.bump());
+                }
+                out.toks.push(Tok {
+                    text,
+                    kind: TokKind::Ident,
+                    line,
+                });
+                continue;
+            }
+            // Fall through: plain identifier starting with r/b.
+        }
+        if is_ident_start(c) {
+            let mut text = String::new();
+            while is_ident_continue(s.peek(0)) {
+                text.push(s.bump());
+            }
+            out.toks.push(Tok {
+                text,
+                kind: TokKind::Ident,
+                line,
+            });
+            continue;
+        }
+        if c.is_ascii_digit() {
+            // Digits, underscores, and alphanumeric suffixes (0xFF, 1u32)
+            // — but never `.`, so `0..n` and `1.5` split cleanly.
+            let mut text = String::new();
+            while is_ident_continue(s.peek(0)) {
+                text.push(s.bump());
+            }
+            out.toks.push(Tok {
+                text,
+                kind: TokKind::Literal,
+                line,
+            });
+            continue;
+        }
+        if c == '"' {
+            let mut text = String::new();
+            s.string_body(&mut text, 0);
+            out.toks.push(Tok {
+                text,
+                kind: TokKind::Literal,
+                line,
+            });
+            continue;
+        }
+        if c == '\'' {
+            // Lifetime (`'a`) vs char literal (`'x'`, `'\n'`): a
+            // lifetime is `'` + ident run *not* closed by another `'`.
+            if is_ident_start(s.peek(1)) && s.peek(2) != '\'' {
+                let mut text = String::new();
+                text.push(s.bump());
+                while is_ident_continue(s.peek(0)) {
+                    text.push(s.bump());
+                }
+                out.toks.push(Tok {
+                    text,
+                    kind: TokKind::Literal,
+                    line,
+                });
+                continue;
+            }
+            let mut text = String::new();
+            text.push(s.bump());
+            while !s.eof() {
+                let ch = s.bump();
+                text.push(ch);
+                if ch == '\\' {
+                    text.push(s.bump());
+                } else if ch == '\'' {
+                    break;
+                }
+            }
+            out.toks.push(Tok {
+                text,
+                kind: TokKind::Literal,
+                line,
+            });
+            continue;
+        }
+        // Everything else: one punctuation character per token.
+        let mut text = String::new();
+        text.push(s.bump());
+        out.toks.push(Tok {
+            text,
+            kind: TokKind::Punct,
+            line,
+        });
+    }
+    out
+}
+
+/// Is token `i` the punctuation character `c`?
+pub fn is_punct(toks: &[Tok], i: usize, c: char) -> bool {
+    toks.get(i)
+        .map(|t| t.kind == TokKind::Punct && t.text.chars().next() == Some(c))
+        .unwrap_or(false)
+}
+
+/// The identifier text at token `i`, if it is an identifier.
+pub fn ident_at(toks: &[Tok], i: usize) -> Option<&str> {
+    toks.get(i).and_then(|t| {
+        if t.kind == TokKind::Ident {
+            Some(t.text.as_str())
+        } else {
+            None
+        }
+    })
+}
+
+/// Token-index ranges `[start, end)` covered by `#[test]` / `#[cfg(test)]`
+/// items — attributes included. Rules skip findings inside these ranges,
+/// which is what makes "non-`#[cfg(test)]` code" a lexical notion the
+/// linter can enforce.
+pub fn test_regions(toks: &[Tok]) -> Vec<(usize, usize)> {
+    let mut regions = Vec::new();
+    let mut i = 0;
+    while i < toks.len() {
+        if is_punct(toks, i, '#') && is_punct(toks, i + 1, '[') {
+            let attr_start = i;
+            let mut any_test = false;
+            while is_punct(toks, i, '#') && is_punct(toks, i + 1, '[') {
+                let (idents, after) = attr_span(toks, i);
+                if attr_marks_test(&idents) {
+                    any_test = true;
+                }
+                i = after;
+            }
+            if any_test {
+                let end = item_end(toks, i);
+                regions.push((attr_start, end));
+                i = end;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    regions
+}
+
+/// From token `i` at `#` of an outer attribute, return the identifier
+/// texts inside the attribute and the index just past its closing `]`.
+fn attr_span(toks: &[Tok], i: usize) -> (Vec<String>, usize) {
+    let mut idents = Vec::new();
+    let mut j = i + 2; // past `#[`
+    let mut depth = 1usize;
+    while j < toks.len() && depth > 0 {
+        if is_punct(toks, j, '[') {
+            depth += 1;
+        } else if is_punct(toks, j, ']') {
+            depth -= 1;
+        } else if let Some(id) = ident_at(toks, j) {
+            idents.push(id.to_string());
+        }
+        j += 1;
+    }
+    (idents, j)
+}
+
+/// Does an attribute's identifier list mark a test item? `#[test]`
+/// exactly, or `#[cfg(...)]` with `test` anywhere in the predicate
+/// (covers `cfg(test)` and `cfg(all(test, ...))`; `cfg_attr` does not
+/// count — it gates an attribute, not the item's compilation).
+fn attr_marks_test(idents: &[String]) -> bool {
+    match idents.first().map(String::as_str) {
+        Some("test") => idents.len() == 1,
+        Some("cfg") => idents.iter().skip(1).any(|s| s == "test"),
+        _ => false,
+    }
+}
+
+/// Index just past the end of the item starting at token `i`: the first
+/// top-level `;`, or the `}` matching the first top-level `{`.
+fn item_end(toks: &[Tok], i: usize) -> usize {
+    let mut depth = 0usize;
+    let mut j = i;
+    while j < toks.len() {
+        if is_punct(toks, j, '{') {
+            depth += 1;
+        } else if is_punct(toks, j, '}') {
+            depth = depth.saturating_sub(1);
+            if depth == 0 {
+                return j + 1;
+            }
+        } else if is_punct(toks, j, ';') && depth == 0 {
+            return j + 1;
+        }
+        j += 1;
+    }
+    toks.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn texts(src: &str) -> Vec<String> {
+        lex(src).toks.into_iter().map(|t| t.text).collect()
+    }
+
+    #[test]
+    fn idents_puncts_and_numbers() {
+        assert_eq!(
+            texts("let x2 = a_b + 0x1F;"),
+            vec!["let", "x2", "=", "a_b", "+", "0x1F", ";"]
+        );
+    }
+
+    #[test]
+    fn ranges_and_floats_split_on_dot() {
+        assert_eq!(texts("0..n"), vec!["0", ".", ".", "n"]);
+        assert_eq!(texts("1.5"), vec!["1", ".", "5"]);
+    }
+
+    #[test]
+    fn strings_hide_their_contents() {
+        let toks = texts(r#"f("panic! .unwrap() HashMap")"#);
+        assert_eq!(toks[0], "f");
+        assert_eq!(toks[2], r#""panic! .unwrap() HashMap""#);
+        assert_eq!(toks.len(), 4);
+    }
+
+    #[test]
+    fn raw_and_byte_strings() {
+        assert_eq!(texts(r##"r#"a "quoted" b"#"##).len(), 1);
+        assert_eq!(texts(r#"b"DADM""#).len(), 1);
+        assert_eq!(texts("b'\\n'").len(), 1);
+    }
+
+    #[test]
+    fn comments_are_captured_not_tokenized() {
+        let l = lex("a // dadm-lint: allow(x) — y\nb /* panic! */ c");
+        assert_eq!(l.toks.len(), 3);
+        assert_eq!(l.comments.len(), 1);
+        assert_eq!(l.comments[0].0, 1);
+        assert!(l.comments[0].1.contains("allow(x)"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        assert_eq!(texts("a /* x /* y */ z */ b"), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn lifetimes_vs_char_literals() {
+        assert_eq!(texts("&'a str"), vec!["&", "'a", "str"]);
+        assert_eq!(texts("'x'"), vec!["'x'"]);
+        assert_eq!(texts("'\\n'"), vec!["'\\n'"]);
+    }
+
+    #[test]
+    fn line_numbers_advance() {
+        let l = lex("a\nb\n\nc");
+        let lines: Vec<usize> = l.toks.iter().map(|t| t.line).collect();
+        assert_eq!(lines, vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn cfg_test_region_covers_module() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests { fn a() { x.unwrap(); } }\nfn tail() {}";
+        let l = lex(src);
+        let regions = test_regions(&l.toks);
+        assert_eq!(regions.len(), 1);
+        let (s, e) = regions[0];
+        // The region starts at `#` and ends after the closing `}`.
+        assert_eq!(l.toks[s].text, "#");
+        assert_eq!(l.toks[e].text, "fn");
+        assert_eq!(l.toks[e + 1].text, "tail");
+    }
+
+    #[test]
+    fn test_attribute_with_allow_chain() {
+        let src = "#[test]\n#[allow(dead_code)]\nfn t() { a.unwrap(); }\nfn live() {}";
+        let l = lex(src);
+        let regions = test_regions(&l.toks);
+        assert_eq!(regions.len(), 1);
+        let (_, e) = regions[0];
+        assert_eq!(l.toks[e + 1].text, "live");
+    }
+
+    #[test]
+    fn cfg_attr_is_not_a_test_marker() {
+        let src = "#[cfg_attr(test, allow(dead_code))]\nfn live() { x.unwrap(); }";
+        let l = lex(src);
+        assert!(test_regions(&l.toks).is_empty());
+    }
+}

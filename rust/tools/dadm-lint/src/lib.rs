@@ -1,0 +1,138 @@
+//! dadm-lint — the repo's invariant analyzer (DESIGN.md §12).
+//!
+//! A hand-rolled token walker (no syn, no proc-macro machinery — the
+//! only dependency is the vendored `anyhow` shim) that enforces the
+//! determinism, total-decoding, blessed-reduction, wire-schema, and
+//! unsafe-audit invariants over `rust/src/**`. Run as
+//! `cargo run -p dadm-lint -- check` from anywhere in the repo; CI runs
+//! it on every push (`lint-invariants` job).
+//!
+//! The crate is a library plus a thin CLI so the fixture corpus under
+//! `tests/` can drive [`rules::lint_tokens`] and [`schema`] directly.
+
+pub mod lexer;
+pub mod rules;
+pub mod schema;
+
+use anyhow::{Context, Result};
+use rules::{FileLint, Finding, Rule, Waiver};
+use std::path::{Path, PathBuf};
+
+/// Aggregated result of a full `check` run over a repo tree.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// Number of `.rs` files linted under `rust/src`.
+    pub files_checked: usize,
+    /// Unwaived violations — any entry here fails the run.
+    pub violations: Vec<Finding>,
+    /// Waived findings, kept for the waiver inventory.
+    pub waived: Vec<Finding>,
+    /// Waiver comments that matched no finding (stale).
+    pub unused_waivers: Vec<(String, Waiver)>,
+}
+
+impl Report {
+    /// Does the run pass? Unused waivers warn but do not fail.
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+/// Read the `unsafe` allowlist (paths relative to `rust/src`, `#`
+/// comments and blank lines ignored). A missing file means an empty
+/// allowlist — absence must fail closed, not open.
+fn read_unsafe_allowlist(root: &Path) -> Vec<String> {
+    let path = root
+        .join("rust")
+        .join("tools")
+        .join("dadm-lint")
+        .join("unsafe_allowlist.txt");
+    let Ok(text) = std::fs::read_to_string(path) else {
+        return Vec::new();
+    };
+    text.lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .map(str::to_string)
+        .collect()
+}
+
+/// Collect every `.rs` file under `dir`, depth-first, sorted by path at
+/// each level so the walk order (and thus the report order) is
+/// deterministic across filesystems.
+fn walk_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)
+        .with_context(|| format!("reading directory {}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            walk_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Lint one file's source text as if it lived at `rel` (relative to
+/// `rust/src`, forward slashes). Exposed for the fixture tests, which
+/// lint corpus snippets under virtual paths.
+pub fn lint_source(rel: &str, src: &str, unsafe_allowlist: &[String]) -> FileLint {
+    rules::lint_tokens(rel, &lexer::lex(src), unsafe_allowlist)
+}
+
+/// Run the full check over the repo tree at `root` (the directory
+/// containing `rust/src`).
+pub fn run_check(root: &Path) -> Result<Report> {
+    let src_root = root.join("rust").join("src");
+    let mut files = Vec::new();
+    walk_rs_files(&src_root, &mut files)?;
+    let allowlist = read_unsafe_allowlist(root);
+
+    let mut report = Report::default();
+    for path in &files {
+        let rel_path = path.strip_prefix(&src_root).unwrap_or(path);
+        let rel = rel_path.to_string_lossy().replace('\\', "/");
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let fl = lint_source(&rel, &src, &allowlist);
+        report.files_checked += 1;
+        for f in fl.findings {
+            if f.waived {
+                report.waived.push(f);
+            } else {
+                report.violations.push(f);
+            }
+        }
+        for w in fl.unused_waivers {
+            report.unused_waivers.push((rel.clone(), w));
+        }
+    }
+
+    if let Some(msg) = schema::check(root)? {
+        report.violations.push(Finding {
+            file: "comm/wire.rs".to_string(),
+            line: 0,
+            rule: Rule::WireSchema,
+            message: msg,
+            waived: false,
+            waiver_reason: None,
+        });
+    }
+    Ok(report)
+}
+
+/// Locate the repo root: walk up from `start` looking for
+/// `rust/src/lib.rs`. Lets the binary run from any subdirectory.
+pub fn find_root(start: &Path) -> Option<PathBuf> {
+    let mut dir = Some(start);
+    while let Some(d) = dir {
+        if d.join("rust").join("src").join("lib.rs").is_file() {
+            return Some(d.to_path_buf());
+        }
+        dir = d.parent();
+    }
+    None
+}

@@ -1,0 +1,142 @@
+//! CLI for the invariant analyzer.
+//!
+//! ```text
+//! cargo run -p dadm-lint -- check [--root <repo>]
+//! cargo run -p dadm-lint -- schema [--update [--force]] [--root <repo>]
+//! ```
+//!
+//! `check` exits 0 when every invariant holds (unused waivers only
+//! warn), 1 on violations, 2 on usage or I/O errors. `schema` prints
+//! the current fingerprint, or regenerates `rust/src/comm/wire.schema`
+//! with `--update` (refusing same-version digest drift unless
+//! `--force`).
+
+use anyhow::{bail, Result};
+use dadm_lint::{find_root, run_check, schema, Report};
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+struct Args {
+    command: String,
+    root: Option<PathBuf>,
+    update: bool,
+    force: bool,
+}
+
+fn parse_args() -> Result<Args> {
+    let mut args = Args {
+        command: String::new(),
+        root: None,
+        update: false,
+        force: false,
+    };
+    let mut it = std::env::args().skip(1);
+    match it.next() {
+        Some(c) if c == "check" || c == "schema" => args.command = c,
+        Some(c) => bail!("unknown command `{c}` (expected `check` or `schema`)"),
+        None => bail!("usage: dadm-lint <check|schema> [--root <repo>] [--update] [--force]"),
+    }
+    while let Some(flag) = it.next() {
+        match flag.as_str() {
+            "--root" => match it.next() {
+                Some(p) => args.root = Some(PathBuf::from(p)),
+                None => bail!("--root requires a path"),
+            },
+            "--update" => args.update = true,
+            "--force" => args.force = true,
+            other => bail!("unknown flag `{other}`"),
+        }
+    }
+    if args.command != "schema" && (args.update || args.force) {
+        bail!("--update/--force only apply to the `schema` command");
+    }
+    Ok(args)
+}
+
+/// Resolve the repo root: explicit `--root`, else walk up from the
+/// current directory, else walk up from this crate's manifest (covers
+/// `cargo run -p dadm-lint` from an unrelated working directory).
+fn resolve_root(explicit: Option<PathBuf>) -> Result<PathBuf> {
+    if let Some(r) = explicit {
+        if !r.join("rust").join("src").join("lib.rs").is_file() {
+            bail!("--root {} does not contain rust/src/lib.rs", r.display());
+        }
+        return Ok(r);
+    }
+    if let Ok(cwd) = std::env::current_dir() {
+        if let Some(r) = find_root(&cwd) {
+            return Ok(r);
+        }
+    }
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    if let Some(r) = find_root(&manifest) {
+        return Ok(r);
+    }
+    bail!("could not locate the repo root (no rust/src/lib.rs above cwd); pass --root")
+}
+
+fn print_report(report: &Report) {
+    for f in &report.violations {
+        if f.line == 0 {
+            println!("error[{}]: {}: {}", f.rule.slug(), f.file, f.message);
+        } else {
+            println!("error[{}]: {}:{}: {}", f.rule.slug(), f.file, f.line, f.message);
+        }
+    }
+    for (file, w) in &report.unused_waivers {
+        println!(
+            "warning[stale-waiver]: {}:{}: allow({}) matched no finding — remove it",
+            file,
+            w.line,
+            w.rule.slug()
+        );
+    }
+    println!(
+        "dadm-lint: {} files checked, {} violations, {} waived ({} stale waivers)",
+        report.files_checked,
+        report.violations.len(),
+        report.waived.len(),
+        report.unused_waivers.len()
+    );
+    if !report.waived.is_empty() {
+        println!("waiver inventory:");
+        for f in &report.waived {
+            let reason = f.waiver_reason.as_deref().unwrap_or("");
+            println!("  {}:{} [{}] {}", f.file, f.line, f.rule.slug(), reason);
+        }
+    }
+}
+
+fn run() -> Result<bool> {
+    let args = parse_args()?;
+    let root = resolve_root(args.root)?;
+    match args.command.as_str() {
+        "check" => {
+            let report = run_check(&root)?;
+            print_report(&report);
+            Ok(report.ok())
+        }
+        _ => {
+            if args.update {
+                let digest = schema::update(&root, args.force)?;
+                println!("wrote rust/src/comm/wire.schema (digest {digest})");
+            } else {
+                let wire = root.join("rust").join("src").join("comm").join("wire.rs");
+                let fp = schema::fingerprint(&std::fs::read_to_string(wire)?)?;
+                println!("version = {}\ndigest = {}", fp.version, fp.digest);
+            }
+            Ok(true)
+        }
+    }
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => ExitCode::from(1),
+        Err(e) => {
+            eprintln!("dadm-lint: {e:#}");
+            ExitCode::from(2)
+        }
+    }
+}

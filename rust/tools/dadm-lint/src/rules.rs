@@ -1,0 +1,479 @@
+//! The invariant catalog (DESIGN.md §12): token-pattern rules over the
+//! `rust/src/**` tree, each waivable inline with
+//! `// dadm-lint: allow(<rule>) — <reason>` on the offending line or
+//! within the three preceding lines (so an interposed `#[allow(...)]`
+//! attribute does not break the association). A waiver with an empty
+//! reason does not waive — justifications are part of the contract.
+
+use crate::lexer::{ident_at, is_punct, test_regions, Lexed, Tok, TokKind};
+
+/// The rule families `dadm-lint check` enforces.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rule {
+    /// No `HashMap`/`HashSet` in determinism-scoped paths.
+    HashIter,
+    /// RNG construction only in the blessed fork-discipline sites.
+    RngConstruction,
+    /// No wall-clock reads outside the metrics/driver allowlist.
+    WallClock,
+    /// Cross-machine float accumulation only via the blessed reductions.
+    NaiveReduction,
+    /// No panic paths (and, in `wire.rs`, no slice indexing) in `comm/`.
+    TotalDecoding,
+    /// Committed wire-schema fingerprint must match the source.
+    WireSchema,
+    /// `unsafe` only in files on the explicit allowlist.
+    UnsafeCode,
+}
+
+impl Rule {
+    /// Every rule, in report order.
+    pub const ALL: [Rule; 7] = [
+        Rule::HashIter,
+        Rule::RngConstruction,
+        Rule::WallClock,
+        Rule::NaiveReduction,
+        Rule::TotalDecoding,
+        Rule::WireSchema,
+        Rule::UnsafeCode,
+    ];
+
+    /// The slug used in waiver comments and report lines.
+    pub fn slug(self) -> &'static str {
+        match self {
+            Rule::HashIter => "hash-iter",
+            Rule::RngConstruction => "rng-construction",
+            Rule::WallClock => "wall-clock",
+            Rule::NaiveReduction => "naive-reduction",
+            Rule::TotalDecoding => "total-decoding",
+            Rule::WireSchema => "wire-schema",
+            Rule::UnsafeCode => "unsafe-code",
+        }
+    }
+
+    /// Inverse of [`Rule::slug`].
+    pub fn from_slug(s: &str) -> Option<Rule> {
+        Rule::ALL.into_iter().find(|r| r.slug() == s)
+    }
+}
+
+/// One rule violation (possibly waived).
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// Path relative to `rust/src`, forward slashes.
+    pub file: String,
+    /// 1-based source line.
+    pub line: usize,
+    /// The violated rule.
+    pub rule: Rule,
+    /// Human-readable description.
+    pub message: String,
+    /// Set when an inline waiver covers this finding.
+    pub waived: bool,
+    /// The waiver's justification, when waived.
+    pub waiver_reason: Option<String>,
+}
+
+/// A parsed `dadm-lint: allow(<rule>) — <reason>` comment.
+#[derive(Clone, Debug)]
+pub struct Waiver {
+    /// 1-based line the comment sits on.
+    pub line: usize,
+    /// The rule it waives.
+    pub rule: Rule,
+    /// Justification text (non-empty by construction).
+    pub reason: String,
+    /// Set once a finding consumed it.
+    pub used: bool,
+}
+
+/// Result of linting one file.
+#[derive(Debug, Default)]
+pub struct FileLint {
+    /// All findings, waived or not.
+    pub findings: Vec<Finding>,
+    /// Waivers that matched no finding (stale — reported as warnings).
+    pub unused_waivers: Vec<Waiver>,
+}
+
+/// Directories (relative to `rust/src`) whose math paths must be
+/// deterministic: the scope of `hash-iter`, `rng-construction`, and
+/// `wall-clock`.
+const DETERMINISM_DIRS: [&str; 4] = ["solver/", "comm/", "coordinator/", "runtime/"];
+
+/// Files allowed to construct RNGs: the fork-discipline helpers that
+/// derive per-machine streams (`utils/rng.rs` is outside the scoped
+/// dirs and needs no entry).
+const RNG_ALLOWED_FILES: [&str; 1] = ["solver/worker.rs"];
+
+/// Files allowed to read the wall clock: the driver's wall-time capture
+/// and the pool's compute-timing core — both feed *reported* cost-model
+/// telemetry, never control flow.
+const WALL_CLOCK_ALLOWED_FILES: [&str; 2] = ["runtime/engine.rs", "comm/pool.rs"];
+
+/// The blessed reduction implementations themselves.
+const REDUCTION_BLESSED_FILES: [&str; 2] = ["comm/allreduce.rs", "comm/sparse.rs"];
+
+/// Identifiers that precede `[` without forming an index expression.
+const NON_INDEX_KEYWORDS: [&str; 16] = [
+    "return", "in", "if", "else", "match", "break", "loop", "while", "for", "as", "mut", "ref",
+    "move", "box", "dyn", "where",
+];
+
+fn in_determinism_scope(rel: &str) -> bool {
+    DETERMINISM_DIRS.iter().any(|d| rel.starts_with(d))
+}
+
+/// Lint one file's token stream against every token rule (the
+/// `wire-schema` rule is file-set-level and handled by [`crate::schema`]).
+/// `rel` is the path relative to `rust/src`; `unsafe_allowlist` holds
+/// such relative paths where `unsafe` is permitted.
+pub fn lint_tokens(rel: &str, lexed: &Lexed, unsafe_allowlist: &[String]) -> FileLint {
+    let toks = &lexed.toks;
+    let regions = test_regions(toks);
+    let in_test = |i: usize| regions.iter().any(|&(s, e)| i >= s && i < e);
+    let mut raw: Vec<Finding> = Vec::new();
+    let mut push = |line: usize, rule: Rule, message: String| {
+        raw.push(Finding {
+            file: rel.to_string(),
+            line,
+            rule,
+            message,
+            waived: false,
+            waiver_reason: None,
+        });
+    };
+
+    let determinism = in_determinism_scope(rel);
+    let rng_allowed = RNG_ALLOWED_FILES.contains(&rel);
+    let clock_allowed = WALL_CLOCK_ALLOWED_FILES.contains(&rel);
+    let in_comm = rel.starts_with("comm/");
+    let reduction_scoped = in_comm && !REDUCTION_BLESSED_FILES.contains(&rel);
+    let unsafe_allowed = unsafe_allowlist.iter().any(|p| p == rel);
+
+    for i in 0..toks.len() {
+        if in_test(i) {
+            continue;
+        }
+        let line = toks[i].line;
+
+        if determinism {
+            if let Some(id) = ident_at(toks, i) {
+                if id == "HashMap" || id == "HashSet" {
+                    push(
+                        line,
+                        Rule::HashIter,
+                        format!(
+                            "`{id}` in a determinism-scoped path: iteration order is \
+                             unspecified; use a Vec/BTreeMap or waive if never iterated"
+                        ),
+                    );
+                }
+            }
+            if !rng_allowed {
+                if ident_at(toks, i) == Some("Rng")
+                    && is_punct(toks, i + 1, ':')
+                    && is_punct(toks, i + 2, ':')
+                {
+                    if let Some(m) = ident_at(toks, i + 3) {
+                        if m == "new" || m == "from_state" {
+                            push(
+                                line,
+                                Rule::RngConstruction,
+                                format!(
+                                    "raw RNG construction `Rng::{m}` outside the blessed \
+                                     fork-discipline sites (solver::machine_rng/machine_rngs)"
+                                ),
+                            );
+                        }
+                    }
+                }
+                if ident_at(toks, i) == Some("seed_from_u64") {
+                    push(
+                        line,
+                        Rule::RngConstruction,
+                        "`seed_from_u64` outside the blessed fork-discipline sites".to_string(),
+                    );
+                }
+            }
+            if !clock_allowed {
+                if ident_at(toks, i) == Some("Instant")
+                    && is_punct(toks, i + 1, ':')
+                    && is_punct(toks, i + 2, ':')
+                    && ident_at(toks, i + 3) == Some("now")
+                {
+                    push(
+                        line,
+                        Rule::WallClock,
+                        "`Instant::now` outside the metrics/driver wall-clock allowlist"
+                            .to_string(),
+                    );
+                }
+                if ident_at(toks, i) == Some("SystemTime") {
+                    push(
+                        line,
+                        Rule::WallClock,
+                        "`SystemTime` outside the metrics/driver wall-clock allowlist".to_string(),
+                    );
+                }
+            }
+        }
+
+        if reduction_scoped
+            && is_punct(toks, i, '.')
+            && ident_at(toks, i + 1) == Some("sum")
+            && (is_punct(toks, i + 2, '(') || is_punct(toks, i + 2, ':'))
+        {
+            push(
+                line,
+                Rule::NaiveReduction,
+                "naive `.sum()` in aggregation code: cross-machine float accumulation \
+                 must go through tree_sum/tree_allreduce_delta"
+                    .to_string(),
+            );
+        }
+
+        if in_comm {
+            if is_punct(toks, i, '.') && is_punct(toks, i + 2, '(') {
+                if let Some(m) = ident_at(toks, i + 1) {
+                    if m == "unwrap" || m == "expect" {
+                        push(
+                            line,
+                            Rule::TotalDecoding,
+                            format!("`.{m}(...)` in non-test communication code"),
+                        );
+                    }
+                }
+            }
+            if is_punct(toks, i + 1, '!') {
+                if let Some(m) = ident_at(toks, i) {
+                    if matches!(m, "panic" | "unreachable" | "todo" | "unimplemented") {
+                        push(
+                            line,
+                            Rule::TotalDecoding,
+                            format!("`{m}!` in non-test communication code"),
+                        );
+                    }
+                }
+            }
+            if rel == "comm/wire.rs" && is_punct(toks, i, '[') && i > 0 {
+                let prev = &toks[i - 1];
+                let indexes = match prev.kind {
+                    TokKind::Ident => !NON_INDEX_KEYWORDS.contains(&prev.text.as_str()),
+                    TokKind::Punct => prev.text == ")" || prev.text == "]",
+                    TokKind::Literal => false,
+                };
+                if indexes {
+                    push(
+                        line,
+                        Rule::TotalDecoding,
+                        "slice indexing in wire.rs: decode must be total — use \
+                         `Dec::take`/`le_bytes` or iterator forms"
+                            .to_string(),
+                    );
+                }
+            }
+        }
+
+        if !unsafe_allowed && ident_at(toks, i) == Some("unsafe") {
+            push(
+                line,
+                Rule::UnsafeCode,
+                "`unsafe` outside rust/tools/dadm-lint/unsafe_allowlist.txt".to_string(),
+            );
+        }
+    }
+
+    apply_waivers(raw, &lexed.comments)
+}
+
+/// Parse waivers out of the line comments and match them to findings.
+fn apply_waivers(mut findings: Vec<Finding>, comments: &[(usize, String)]) -> FileLint {
+    let mut waivers: Vec<Waiver> = comments
+        .iter()
+        .filter_map(|(line, text)| parse_waiver(*line, text))
+        .collect();
+    for f in &mut findings {
+        for w in &mut waivers {
+            let window = f.line.saturating_sub(3)..=f.line;
+            if w.rule == f.rule && window.contains(&w.line) {
+                f.waived = true;
+                f.waiver_reason = Some(w.reason.clone());
+                w.used = true;
+                break;
+            }
+        }
+    }
+    FileLint {
+        findings,
+        unused_waivers: waivers.into_iter().filter(|w| !w.used).collect(),
+    }
+}
+
+/// Parse one comment's text as a waiver, if it is one. Requires a
+/// non-empty reason after the `allow(...)` clause (separators `—`, `-`,
+/// `:` are stripped).
+fn parse_waiver(line: usize, text: &str) -> Option<Waiver> {
+    let rest = text.split("dadm-lint:").nth(1)?.trim_start();
+    let rest = rest.strip_prefix("allow(")?;
+    let close = rest.find(')')?;
+    let rule = Rule::from_slug(rest.get(..close)?.trim())?;
+    let reason: String = rest
+        .get(close + 1..)?
+        .trim_matches(|c: char| c.is_whitespace() || c == '—' || c == '-' || c == '–' || c == ':')
+        .to_string();
+    if reason.is_empty() {
+        return None;
+    }
+    Some(Waiver {
+        line,
+        rule,
+        reason,
+        used: false,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::lex;
+
+    fn lint(rel: &str, src: &str) -> FileLint {
+        lint_tokens(rel, &lex(src), &[])
+    }
+
+    fn rules_of(fl: &FileLint) -> Vec<Rule> {
+        fl.findings.iter().filter(|f| !f.waived).map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn hash_iter_scoped_to_determinism_dirs() {
+        let src = "use std::collections::HashMap;";
+        assert_eq!(rules_of(&lint("solver/x.rs", src)), vec![Rule::HashIter]);
+        assert!(rules_of(&lint("data/x.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn rng_construction_blessed_files_pass() {
+        let src = "let r = Rng::new(seed);";
+        assert_eq!(
+            rules_of(&lint("coordinator/x.rs", src)),
+            vec![Rule::RngConstruction]
+        );
+        assert!(rules_of(&lint("solver/worker.rs", src)).is_empty());
+        assert!(rules_of(&lint("data/partition.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn wall_clock_allowlist() {
+        let src = "let t0 = Instant::now();";
+        assert_eq!(rules_of(&lint("comm/cluster.rs", src)), vec![Rule::WallClock]);
+        assert!(rules_of(&lint("comm/pool.rs", src)).is_empty());
+        assert!(rules_of(&lint("runtime/engine.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn instant_mention_without_now_is_fine() {
+        assert!(rules_of(&lint("comm/cluster.rs", "use std::time::Instant;")).is_empty());
+    }
+
+    #[test]
+    fn naive_reduction_excludes_blessed_files() {
+        let src = "let s: f64 = xs.iter().sum();";
+        assert_eq!(
+            rules_of(&lint("comm/cluster.rs", src)),
+            vec![Rule::NaiveReduction]
+        );
+        assert!(rules_of(&lint("comm/allreduce.rs", src)).is_empty());
+        assert!(rules_of(&lint("solver/x.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn turbofish_sum_is_flagged() {
+        let fl = lint("comm/tcp.rs", "let s = xs.iter().sum::<f64>();");
+        assert!(rules_of(&fl).contains(&Rule::NaiveReduction));
+    }
+
+    #[test]
+    fn total_decoding_panics_and_indexing() {
+        let fl = lint("comm/wire.rs", "fn f(b: &[u8]) -> u8 { b[0] }");
+        assert_eq!(rules_of(&fl), vec![Rule::TotalDecoding]);
+        let src = "fn f() { x.unwrap(); y.expect(\"z\"); panic!(\"q\"); }";
+        assert_eq!(rules_of(&lint("comm/tcp.rs", src)).len(), 3);
+        // Indexing is wire.rs-only; other comm files index guarded buffers.
+        assert!(rules_of(&lint("comm/tcp.rs", "fn f(b: &[u8]) -> u8 { b[0] }")).is_empty());
+    }
+
+    #[test]
+    fn array_literals_and_attributes_are_not_indexing() {
+        let src = "#[derive(Clone)]\nstruct S;\nfn f() -> [u8; 4] { let a = [0u8; 4]; a }";
+        assert!(rules_of(&lint("comm/wire.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn unwrap_or_else_is_not_unwrap() {
+        let src = "fn f() { x.lock().unwrap_or_else(std::sync::PoisonError::into_inner); }";
+        assert!(rules_of(&lint("comm/tcp.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn cfg_test_code_is_exempt() {
+        let src = "#[cfg(test)]\nmod tests { fn t() { x.unwrap(); panic!(\"boom\"); } }";
+        assert!(rules_of(&lint("comm/wire.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn unsafe_respects_allowlist() {
+        let src = "unsafe impl Send for X {}";
+        assert_eq!(rules_of(&lint("runtime/x.rs", src)), vec![Rule::UnsafeCode]);
+        let fl = lint_tokens("runtime/x.rs", &lex(src), &["runtime/x.rs".to_string()]);
+        assert!(rules_of(&fl).is_empty());
+    }
+
+    #[test]
+    fn waiver_same_line_and_above() {
+        let src = concat!(
+            "// dadm-lint: allow(total-decoding) — guarded by construction\n",
+            "fn f() { x.unwrap(); }",
+        );
+        let fl = lint("comm/tcp.rs", src);
+        assert_eq!(fl.findings.len(), 1);
+        assert!(fl.findings[0].waived);
+        assert!(fl.unused_waivers.is_empty());
+
+        let src = "fn f() { x.unwrap() } // dadm-lint: allow(total-decoding) - same line";
+        assert!(rules_of(&lint("comm/tcp.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn waiver_reaches_past_interposed_attribute() {
+        let src = concat!(
+            "// dadm-lint: allow(total-decoding) — unreachable by guard\n",
+            "#[allow(clippy::expect_used)]\n",
+            "let v = x.expect(\"y\");",
+        );
+        assert!(rules_of(&lint("comm/tcp.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn waiver_without_reason_does_not_waive() {
+        let src = "// dadm-lint: allow(total-decoding)\nfn f() { x.unwrap(); }";
+        assert_eq!(rules_of(&lint("comm/tcp.rs", src)), vec![Rule::TotalDecoding]);
+    }
+
+    #[test]
+    fn wrong_rule_waiver_does_not_waive_and_reports_unused() {
+        let src = "// dadm-lint: allow(hash-iter) — wrong rule\nfn f() { x.unwrap(); }";
+        let fl = lint("comm/tcp.rs", src);
+        assert_eq!(rules_of(&fl), vec![Rule::TotalDecoding]);
+        assert_eq!(fl.unused_waivers.len(), 1);
+    }
+
+    #[test]
+    fn slugs_roundtrip() {
+        for r in Rule::ALL {
+            assert_eq!(Rule::from_slug(r.slug()), Some(r));
+        }
+        assert_eq!(Rule::from_slug("nope"), None);
+    }
+}

@@ -1,0 +1,390 @@
+//! Wire-schema fingerprinting (DESIGN.md §12.4).
+//!
+//! The frame-format-bearing items of `rust/src/comm/wire.rs` — the
+//! protocol constants, tag/flag constants, and the frame payload
+//! structs/enums — are extracted from the token stream, normalized
+//! (attributes stripped, tokens joined by single spaces, items sorted by
+//! name), and hashed with FNV-1a 64. The digest and the `WIRE_VERSION`
+//! it was computed at are committed as `rust/src/comm/wire.schema`; the
+//! `wire-schema` rule fails whenever the digest drifts at an unchanged
+//! version — i.e. someone edited a frame definition without bumping
+//! `WIRE_VERSION` — or when the version changed without regenerating the
+//! file. Regenerate with `cargo run -p dadm-lint -- schema --update`.
+//!
+//! `scripts/wire_schema_digest.py` is a line-for-line port of the
+//! normalization (for toolchain-free environments); the
+//! `real_tree_lints_clean` test pins the two implementations to the same
+//! committed digest.
+
+use crate::lexer::{ident_at, is_punct, lex, Tok};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Named items whose definitions are part of the wire contract.
+const TRACKED_ITEMS: [&str; 14] = [
+    "WIRE_MAGIC",
+    "WIRE_VERSION",
+    "MAX_FRAME_LEN",
+    "FRAME_HEADER_BYTES",
+    "WireLoss",
+    "WireReg",
+    "WireSolver",
+    "DataSpec",
+    "ProblemSpec",
+    "WireBroadcast",
+    "BroadcastRef",
+    "EvalOp",
+    "StepFlags",
+    "Frame",
+];
+
+/// Const-name prefixes that are part of the wire contract (frame tags
+/// and flag bits).
+const TRACKED_PREFIXES: [&str; 2] = ["TAG_", "STEP_FLAG_"];
+
+fn tracked(name: &str) -> bool {
+    TRACKED_ITEMS.contains(&name) || TRACKED_PREFIXES.iter().any(|p| name.starts_with(p))
+}
+
+/// The fingerprint of a `wire.rs` source text: the `WIRE_VERSION` value
+/// and the normalized-item digest.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Fingerprint {
+    /// `WIRE_VERSION` as written in the source.
+    pub version: u16,
+    /// FNV-1a 64 digest, 16 lowercase hex digits.
+    pub digest: String,
+}
+
+/// FNV-1a 64-bit.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Extract `(name, normalized_tokens)` for every tracked top-level item.
+fn extract_items(toks: &[Tok]) -> Vec<(String, String)> {
+    let mut items = Vec::new();
+    let mut depth = 0usize;
+    let mut i = 0;
+    while i < toks.len() {
+        if is_punct(toks, i, '{') {
+            depth += 1;
+        } else if is_punct(toks, i, '}') {
+            depth = depth.saturating_sub(1);
+        } else if depth == 0 {
+            if let Some(kw) = ident_at(toks, i) {
+                if matches!(kw, "const" | "struct" | "enum") {
+                    if let Some(name) = ident_at(toks, i + 1) {
+                        if tracked(name) {
+                            let end = item_span_end(toks, i, kw);
+                            items.push((name.to_string(), normalize(&toks[i..end])));
+                            i = end;
+                            continue;
+                        }
+                    }
+                }
+            }
+        }
+        i += 1;
+    }
+    items.sort();
+    items
+}
+
+/// End (exclusive) of the item starting at keyword token `i`: consts
+/// and unit/tuple structs end at the first top-level `;`, brace-bodied
+/// structs/enums at their closing `}`. Depth counts `[`/`(` too —
+/// `const WIRE_MAGIC: [u8; 4] = ...;` has a `;` inside the array type
+/// that must not end the item — and only a `}` can close a struct/enum
+/// body (`const` items keep going to their `;` even after a block
+/// initializer's `}`).
+fn item_span_end(toks: &[Tok], i: usize, kw: &str) -> usize {
+    let brace_bodied = kw != "const";
+    let mut depth = 0usize;
+    let mut j = i;
+    while j < toks.len() {
+        if is_punct(toks, j, '{') || is_punct(toks, j, '[') || is_punct(toks, j, '(') {
+            depth += 1;
+        } else if is_punct(toks, j, '}') {
+            depth = depth.saturating_sub(1);
+            if depth == 0 && brace_bodied {
+                return j + 1;
+            }
+        } else if is_punct(toks, j, ']') || is_punct(toks, j, ')') {
+            depth = depth.saturating_sub(1);
+        } else if is_punct(toks, j, ';') && depth == 0 {
+            return j + 1;
+        }
+        j += 1;
+    }
+    toks.len()
+}
+
+/// Join an item's tokens with single spaces, dropping `#[...]`
+/// attribute sequences (derives and field attributes are not part of
+/// the wire format).
+fn normalize(toks: &[Tok]) -> String {
+    let mut parts: Vec<&str> = Vec::new();
+    let mut i = 0;
+    while i < toks.len() {
+        if is_punct(toks, i, '#') && is_punct(toks, i + 1, '[') {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < toks.len() && depth > 0 {
+                if is_punct(toks, j, '[') {
+                    depth += 1;
+                } else if is_punct(toks, j, ']') {
+                    depth -= 1;
+                }
+                j += 1;
+            }
+            i = j;
+            continue;
+        }
+        parts.push(&toks[i].text);
+        i += 1;
+    }
+    parts.join(" ")
+}
+
+/// Compute the fingerprint of a `wire.rs` source text.
+pub fn fingerprint(src: &str) -> Result<Fingerprint> {
+    let lexed = lex(src);
+    let items = extract_items(&lexed.toks);
+    let version_item = items
+        .iter()
+        .find(|(name, _)| name == "WIRE_VERSION")
+        .context("wire.rs has no top-level WIRE_VERSION const")?;
+    let version = parse_version(&version_item.1)?;
+    let joined: Vec<String> = items
+        .iter()
+        .map(|(name, norm)| format!("{name} := {norm}"))
+        .collect();
+    let digest = format!("{:016x}", fnv1a64(joined.join("\n").as_bytes()));
+    Ok(Fingerprint { version, digest })
+}
+
+/// Pull the numeric value out of the normalized
+/// `const WIRE_VERSION : u16 = <n> ;` token string.
+fn parse_version(normalized: &str) -> Result<u16> {
+    let mut after_eq = false;
+    for tok in normalized.split(' ') {
+        if after_eq {
+            return tok
+                .parse::<u16>()
+                .with_context(|| format!("non-numeric WIRE_VERSION value `{tok}`"));
+        }
+        if tok == "=" {
+            after_eq = true;
+        }
+    }
+    bail!("WIRE_VERSION const has no `=` initializer")
+}
+
+/// The committed fingerprint parsed from `wire.schema`.
+fn parse_schema_file(text: &str) -> Result<Fingerprint> {
+    let mut version: Option<u16> = None;
+    let mut digest: Option<String> = None;
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some((key, value)) = line.split_once('=') {
+            let value = value.trim();
+            match key.trim() {
+                "version" => {
+                    version = Some(value.parse::<u16>().context("bad `version` in wire.schema")?);
+                }
+                "digest" => digest = Some(value.to_string()),
+                other => bail!("unknown wire.schema key `{other}`"),
+            }
+        } else {
+            bail!("malformed wire.schema line `{line}`");
+        }
+    }
+    Ok(Fingerprint {
+        version: version.context("wire.schema missing `version`")?,
+        digest: digest.context("wire.schema missing `digest`")?,
+    })
+}
+
+fn wire_rs(root: &Path) -> std::path::PathBuf {
+    root.join("rust").join("src").join("comm").join("wire.rs")
+}
+
+fn wire_schema(root: &Path) -> std::path::PathBuf {
+    root.join("rust").join("src").join("comm").join("wire.schema")
+}
+
+/// Run the `wire-schema` rule over the tree at `root`. `Ok(None)` is a
+/// pass; `Ok(Some(msg))` is a rule violation; `Err` is an I/O or parse
+/// failure of the inputs themselves.
+pub fn check(root: &Path) -> Result<Option<String>> {
+    let src = std::fs::read_to_string(wire_rs(root))
+        .with_context(|| format!("reading {}", wire_rs(root).display()))?;
+    let current = fingerprint(&src)?;
+    let schema_path = wire_schema(root);
+    let committed = match std::fs::read_to_string(&schema_path) {
+        Ok(text) => parse_schema_file(&text)?,
+        Err(_) => {
+            return Ok(Some(format!(
+                "missing {}: run `cargo run -p dadm-lint -- schema --update`",
+                schema_path.display()
+            )))
+        }
+    };
+    if current.version != committed.version {
+        return Ok(Some(format!(
+            "WIRE_VERSION is {} but wire.schema records {}: regenerate with \
+             `cargo run -p dadm-lint -- schema --update`",
+            current.version, committed.version
+        )));
+    }
+    if current.digest != committed.digest {
+        return Ok(Some(format!(
+            "wire schema drifted without a WIRE_VERSION bump (digest {} != committed {}): \
+             bump WIRE_VERSION in wire.rs and regenerate wire.schema",
+            current.digest, committed.digest
+        )));
+    }
+    Ok(None)
+}
+
+/// Regenerate `wire.schema`. Refuses to update when the digest drifted
+/// at an unchanged `WIRE_VERSION` (that is exactly the mistake the rule
+/// exists to catch) unless `force` is set for bootstrap or
+/// cosmetic-normalization cases.
+pub fn update(root: &Path, force: bool) -> Result<String> {
+    let src = std::fs::read_to_string(wire_rs(root))
+        .with_context(|| format!("reading {}", wire_rs(root).display()))?;
+    let current = fingerprint(&src)?;
+    let schema_path = wire_schema(root);
+    if !force {
+        if let Ok(text) = std::fs::read_to_string(&schema_path) {
+            let committed = parse_schema_file(&text)?;
+            if committed.version == current.version && committed.digest != current.digest {
+                bail!(
+                    "refusing to update: frame definitions changed but WIRE_VERSION is \
+                     still {} — bump it in wire.rs first (or pass --force for a \
+                     cosmetic-only normalization change)",
+                    current.version
+                );
+            }
+        }
+    }
+    let contents = format!(
+        "# Wire-schema fingerprint for rust/src/comm/wire.rs (DESIGN.md §12.4).\n\
+         # FNV-1a 64 over the normalized frame-item token streams; fails the\n\
+         # `wire-schema` lint when frame definitions drift without a\n\
+         # WIRE_VERSION bump. Regenerate: cargo run -p dadm-lint -- schema --update\n\
+         version = {}\n\
+         digest = {}\n",
+        current.version, current.digest
+    );
+    std::fs::write(&schema_path, &contents)
+        .with_context(|| format!("writing {}", schema_path.display()))?;
+    Ok(current.digest)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI_WIRE: &str = r#"
+//! Mini wire module.
+pub const WIRE_MAGIC: [u8; 4] = *b"DADM";
+pub const WIRE_VERSION: u16 = 3;
+const TAG_HELLO: u8 = 0;
+const HELPER: u8 = 9; // untracked
+#[derive(Clone, Debug)]
+pub struct StepFlags {
+    pub eval_loss: bool,
+}
+pub enum Frame {
+    Hello { magic: [u8; 4], version: u16 },
+    Ack,
+}
+fn le_array<const N: usize>(c: &[u8]) {}
+#[cfg(test)]
+mod tests {
+    pub const TAG_FAKE: u8 = 99;
+}
+"#;
+
+    #[test]
+    fn fingerprint_is_stable_under_comments_and_whitespace() {
+        let a = fingerprint(MINI_WIRE).unwrap();
+        let b = fingerprint(&MINI_WIRE.replace("// untracked", "// changed comment")).unwrap();
+        let spaced = MINI_WIRE.replace("pub eval_loss: bool,", "pub eval_loss:   bool,");
+        let c = fingerprint(&spaced).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a, c);
+        assert_eq!(a.version, 3);
+    }
+
+    #[test]
+    fn fingerprint_changes_on_frame_edit() {
+        let a = fingerprint(MINI_WIRE).unwrap();
+        let edited = MINI_WIRE.replace(
+            "pub eval_loss: bool,",
+            "pub eval_loss: bool,\n    pub extra: u64,",
+        );
+        let b = fingerprint(&edited).unwrap();
+        assert_ne!(a.digest, b.digest);
+        let c = fingerprint(&MINI_WIRE.replace("Ack,", "Ack, Nack,")).unwrap();
+        assert_ne!(a.digest, c.digest);
+    }
+
+    #[test]
+    fn untracked_and_test_items_do_not_count() {
+        let a = fingerprint(MINI_WIRE).unwrap();
+        let helper = MINI_WIRE.replace("const HELPER: u8 = 9;", "const HELPER: u8 = 10;");
+        let b = fingerprint(&helper).unwrap();
+        let fake = MINI_WIRE.replace("TAG_FAKE: u8 = 99", "TAG_FAKE: u8 = 98");
+        let c = fingerprint(&fake).unwrap();
+        assert_eq!(a.digest, b.digest);
+        assert_eq!(a.digest, c.digest);
+    }
+
+    #[test]
+    fn version_bump_changes_digest_and_version() {
+        let edited = MINI_WIRE.replace(
+            "pub const WIRE_VERSION: u16 = 3;",
+            "pub const WIRE_VERSION: u16 = 4;",
+        );
+        let b = fingerprint(&edited).unwrap();
+        assert_eq!(b.version, 4);
+        assert_ne!(b.digest, fingerprint(MINI_WIRE).unwrap().digest);
+    }
+
+    #[test]
+    fn const_with_array_type_spans_to_real_semicolon() {
+        // The `;` inside `[u8; 4]` must not end the WIRE_MAGIC item:
+        // its *value* is part of the fingerprint.
+        let a = fingerprint(MINI_WIRE).unwrap();
+        let b = fingerprint(&MINI_WIRE.replace("*b\"DADM\"", "*b\"XXXX\"")).unwrap();
+        assert_ne!(a.digest, b.digest);
+    }
+
+    #[test]
+    fn const_generic_is_not_an_item() {
+        // `fn le_array<const N: usize>` contains a depth-0 `const`
+        // keyword; the name filter must ignore it.
+        assert!(fingerprint(MINI_WIRE).is_ok());
+    }
+
+    #[test]
+    fn schema_file_roundtrip() {
+        let fp = parse_schema_file("# c\nversion = 3\ndigest = 00ff\n").unwrap();
+        assert_eq!(fp.version, 3);
+        assert_eq!(fp.digest, "00ff");
+        assert!(parse_schema_file("version = 3").is_err()); // missing digest
+        assert!(parse_schema_file("bogus line").is_err());
+    }
+}

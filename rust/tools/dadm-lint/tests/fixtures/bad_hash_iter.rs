@@ -1,0 +1,12 @@
+// Fixture: trips `hash-iter` when linted under a determinism-scoped
+// virtual path (solver/, comm/, coordinator/, runtime/). Not compiled.
+
+use std::collections::HashMap;
+
+pub fn histogram(xs: &[u32]) -> HashMap<u32, usize> {
+    let mut h = HashMap::new();
+    for &x in xs {
+        *h.entry(x).or_insert(0usize) += 1;
+    }
+    h
+}

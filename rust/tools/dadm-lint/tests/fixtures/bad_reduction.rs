@@ -1,0 +1,10 @@
+// Fixture: trips `naive-reduction` in aggregation code — float
+// accumulation outside tree_sum/tree_allreduce_delta. Not compiled.
+
+pub fn merge(parts: &[f64]) -> f64 {
+    parts.iter().sum()
+}
+
+pub fn merge_turbofish(parts: &[f64]) -> f64 {
+    parts.iter().copied().sum::<f64>()
+}

@@ -1,0 +1,14 @@
+// Fixture: trips `rng-construction` outside the blessed
+// fork-discipline sites. Not compiled.
+
+pub fn fresh_stream(seed: u64) -> Rng {
+    Rng::new(seed)
+}
+
+pub fn resume(state: [u64; 4]) -> Rng {
+    Rng::from_state(state)
+}
+
+pub fn reseed(r: &mut SomeRng, s: u64) {
+    r.seed_from_u64(s);
+}

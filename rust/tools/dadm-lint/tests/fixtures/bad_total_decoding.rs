@@ -1,0 +1,24 @@
+// Fixture: every `total-decoding` pattern the rule must catch when
+// linted under the virtual path comm/wire.rs. Not compiled.
+
+pub fn decode(buf: &[u8]) -> u8 {
+    let tag = buf[0];
+    let n = u32::from_le_bytes(buf[1..5].try_into().unwrap());
+    if n > 10 {
+        panic!("frame too large");
+    }
+    let body = buf.get(5).expect("truncated frame");
+    match tag {
+        0 => *body,
+        _ => unreachable!("unknown tag"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn exempt_inside_cfg_test() {
+        let v: Result<u8, ()> = Ok(1);
+        v.unwrap();
+    }
+}

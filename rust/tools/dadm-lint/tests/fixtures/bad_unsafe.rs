@@ -1,0 +1,6 @@
+// Fixture: trips `unsafe-code` for any file not on
+// unsafe_allowlist.txt. Not compiled.
+
+pub fn read_first(xs: &[f64]) -> f64 {
+    unsafe { *xs.get_unchecked(0) }
+}

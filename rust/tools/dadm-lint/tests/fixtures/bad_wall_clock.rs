@@ -1,0 +1,11 @@
+// Fixture: trips `wall-clock` outside the metrics/driver allowlist.
+// Not compiled.
+
+use std::time::Instant;
+
+pub fn stamp() -> f64 {
+    let t0 = Instant::now();
+    let wall = std::time::SystemTime::now();
+    drop(wall);
+    t0.elapsed().as_secs_f64()
+}

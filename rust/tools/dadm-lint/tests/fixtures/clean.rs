@@ -1,0 +1,33 @@
+// Fixture: near-miss corpus — none of this may trip any rule, even
+// under the strictest virtual path (comm/wire.rs). Not compiled.
+
+use std::collections::BTreeMap;
+
+/// Rule patterns inside strings and comments must not count:
+/// HashMap, panic!, Instant::now(), .unwrap(), xs.iter().sum().
+pub fn describe() -> String {
+    let s = "HashMap panic! Instant::now() .unwrap() xs.iter().sum()";
+    s.to_string()
+}
+
+pub fn recover<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+pub fn tallies(xs: &[u32]) -> BTreeMap<u32, usize> {
+    let mut m = BTreeMap::new();
+    for &x in xs {
+        *m.entry(x).or_insert(0usize) += 1;
+    }
+    m
+}
+
+pub fn array_forms(n: usize) -> [u8; 4] {
+    let a = [1u8, 2, 3, 4];
+    let _ = 0..n;
+    a
+}
+
+pub fn checksum(xs: &[u64]) -> u64 {
+    xs.iter().fold(0u64, |acc, &x| acc.wrapping_add(x))
+}

@@ -1,0 +1,13 @@
+// Fixture: findings covered by well-formed waivers — lints clean, and
+// every waiver is consumed (no stale-waiver warnings). Not compiled.
+
+// dadm-lint: allow(total-decoding) — fixture: caller guarantees Some
+pub fn guarded(x: Option<u8>) -> u8 {
+    x.expect("guarded by caller")
+}
+
+pub fn timed() -> f64 {
+    // dadm-lint: allow(wall-clock) — fixture: telemetry only, never control flow
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_secs_f64()
+}

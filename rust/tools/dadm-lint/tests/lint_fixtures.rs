@@ -1,0 +1,197 @@
+//! Fixture-corpus tests: every rule family has at least one snippet
+//! that trips it, the near-miss corpus stays clean, the real
+//! `rust/src/**` tree lints clean, and the wire-schema fingerprint
+//! flips when a frame struct is edited without a `WIRE_VERSION` bump.
+
+#![allow(clippy::unwrap_used, clippy::expect_used)]
+
+use dadm_lint::rules::{FileLint, Rule};
+use dadm_lint::{find_root, lint_source, run_check, schema};
+use std::path::PathBuf;
+
+const BAD_HASH_ITER: &str = include_str!("fixtures/bad_hash_iter.rs");
+const BAD_RNG: &str = include_str!("fixtures/bad_rng.rs");
+const BAD_WALL_CLOCK: &str = include_str!("fixtures/bad_wall_clock.rs");
+const BAD_REDUCTION: &str = include_str!("fixtures/bad_reduction.rs");
+const BAD_TOTAL_DECODING: &str = include_str!("fixtures/bad_total_decoding.rs");
+const BAD_UNSAFE: &str = include_str!("fixtures/bad_unsafe.rs");
+const CLEAN: &str = include_str!("fixtures/clean.rs");
+const WAIVED: &str = include_str!("fixtures/waived.rs");
+
+/// Field injected into `StepFlags` by the schema-mutation tests.
+const PROBE_FIELD: &str = "pub struct StepFlags {\n    pub schema_probe: u64,";
+
+fn lint(rel: &str, src: &str) -> FileLint {
+    lint_source(rel, src, &[])
+}
+
+fn active_rules(fl: &FileLint) -> Vec<Rule> {
+    fl.findings.iter().filter(|f| !f.waived).map(|f| f.rule).collect()
+}
+
+#[test]
+fn hash_iter_fixture_trips() {
+    let rules = active_rules(&lint("solver/fixture.rs", BAD_HASH_ITER));
+    assert!(rules.contains(&Rule::HashIter), "{rules:?}");
+    // Out of the determinism scope the same source is fine.
+    assert!(active_rules(&lint("data/fixture.rs", BAD_HASH_ITER)).is_empty());
+}
+
+#[test]
+fn rng_construction_fixture_trips() {
+    let rules = active_rules(&lint("coordinator/fixture.rs", BAD_RNG));
+    let hits = rules.iter().filter(|r| **r == Rule::RngConstruction).count();
+    // Rng::new, Rng::from_state, and seed_from_u64 must each be caught.
+    assert_eq!(hits, 3, "{rules:?}");
+    assert!(active_rules(&lint("solver/worker.rs", BAD_RNG)).is_empty());
+}
+
+#[test]
+fn wall_clock_fixture_trips() {
+    let rules = active_rules(&lint("comm/fixture.rs", BAD_WALL_CLOCK));
+    assert!(rules.contains(&Rule::WallClock), "{rules:?}");
+    assert!(active_rules(&lint("comm/pool.rs", BAD_WALL_CLOCK)).is_empty());
+}
+
+#[test]
+fn naive_reduction_fixture_trips() {
+    let rules = active_rules(&lint("comm/fixture.rs", BAD_REDUCTION));
+    let hits = rules.iter().filter(|r| **r == Rule::NaiveReduction).count();
+    // Plain `.sum()` and turbofish `.sum::<f64>()` both count.
+    assert_eq!(hits, 2, "{rules:?}");
+    assert!(active_rules(&lint("comm/allreduce.rs", BAD_REDUCTION)).is_empty());
+}
+
+#[test]
+fn total_decoding_fixture_trips() {
+    let fl = lint("comm/wire.rs", BAD_TOTAL_DECODING);
+    let rules = active_rules(&fl);
+    // Two indexings, unwrap, expect, panic!, unreachable! — and nothing
+    // from the #[cfg(test)] module at the bottom of the fixture.
+    assert_eq!(rules.len(), 6, "{:?}", fl.findings);
+    assert!(rules.iter().all(|r| *r == Rule::TotalDecoding));
+}
+
+#[test]
+fn unsafe_fixture_trips_unless_allowlisted() {
+    let rules = active_rules(&lint("solver/fixture.rs", BAD_UNSAFE));
+    assert_eq!(rules, vec![Rule::UnsafeCode]);
+    let allow = ["solver/fixture.rs".to_string()];
+    let fl = lint_source("solver/fixture.rs", BAD_UNSAFE, &allow);
+    assert!(active_rules(&fl).is_empty());
+}
+
+#[test]
+fn clean_fixture_passes_under_strictest_path() {
+    let fl = lint("comm/wire.rs", CLEAN);
+    assert!(fl.findings.is_empty(), "{:?}", fl.findings);
+    assert!(fl.unused_waivers.is_empty());
+}
+
+#[test]
+fn waived_fixture_is_clean_with_no_stale_waivers() {
+    let fl = lint("comm/cluster.rs", WAIVED);
+    assert!(active_rules(&fl).is_empty(), "{:?}", fl.findings);
+    let waived: Vec<_> = fl.findings.iter().filter(|f| f.waived).collect();
+    assert_eq!(waived.len(), 2, "{:?}", fl.findings);
+    assert!(waived.iter().all(|f| f.waiver_reason.is_some()));
+    assert!(fl.unused_waivers.is_empty(), "{:?}", fl.unused_waivers);
+}
+
+fn repo_root() -> PathBuf {
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    find_root(&manifest).expect("repo root above dadm-lint crate")
+}
+
+#[test]
+fn real_tree_lints_clean() {
+    let report = run_check(&repo_root()).unwrap();
+    assert!(report.files_checked > 20, "walked only {} files", report.files_checked);
+    let msgs: Vec<String> = report
+        .violations
+        .iter()
+        .map(|f| format!("{}:{} [{}] {}", f.file, f.line, f.rule.slug(), f.message))
+        .collect();
+    assert!(report.ok(), "real tree has violations:\n{}", msgs.join("\n"));
+    // The audited waivers in comm/ must all be live (none stale).
+    assert!(!report.waived.is_empty());
+    let stale: Vec<String> = report
+        .unused_waivers
+        .iter()
+        .map(|(file, w)| format!("{}:{} allow({})", file, w.line, w.rule.slug()))
+        .collect();
+    assert!(stale.is_empty(), "stale waivers:\n{}", stale.join("\n"));
+}
+
+/// A scratch repo tree holding a copy of the real `wire.rs` (and
+/// optionally `wire.schema`), so schema mutations never touch the repo.
+fn scratch_tree(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("dadm-lint-{}-{}", tag, std::process::id()));
+    if dir.exists() {
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+    std::fs::create_dir_all(dir.join("rust/src/comm")).unwrap();
+    dir
+}
+
+fn real_wire_src() -> String {
+    std::fs::read_to_string(repo_root().join("rust/src/comm/wire.rs")).unwrap()
+}
+
+#[test]
+fn schema_check_matches_committed_file_and_flips_on_mutation() {
+    let root = scratch_tree("flip");
+    let wire = root.join("rust/src/comm/wire.rs");
+    let src = real_wire_src();
+    std::fs::write(&wire, &src).unwrap();
+
+    // Missing schema file is a violation, not a pass.
+    assert!(schema::check(&root).unwrap().is_some());
+
+    // Bootstrap, then the unmodified tree passes.
+    schema::update(&root, true).unwrap();
+    assert_eq!(schema::check(&root).unwrap(), None);
+
+    // Editing a frame struct without bumping WIRE_VERSION fails.
+    let marker = "pub struct StepFlags {";
+    assert!(src.contains(marker), "wire.rs layout changed; update this test");
+    let mutated = src.replace(marker, PROBE_FIELD);
+    std::fs::write(&wire, &mutated).unwrap();
+    let msg = schema::check(&root).unwrap().expect("mutation must be flagged");
+    assert!(msg.contains("WIRE_VERSION"), "{msg}");
+
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn schema_update_refuses_same_version_drift_without_force() {
+    let root = scratch_tree("refuse");
+    let wire = root.join("rust/src/comm/wire.rs");
+    let src = real_wire_src();
+    std::fs::write(&wire, &src).unwrap();
+    schema::update(&root, true).unwrap();
+
+    // Drift at the same version: update must refuse without --force.
+    let marker = "pub struct StepFlags {";
+    let mutated = src.replace(marker, PROBE_FIELD);
+    std::fs::write(&wire, &mutated).unwrap();
+    assert!(schema::update(&root, false).is_err());
+
+    // Bump WIRE_VERSION too: check flags the stale file, update accepts
+    // without force, and the tree then passes.
+    let version_marker = "pub const WIRE_VERSION: u16 = ";
+    assert!(src.contains(version_marker), "wire.rs layout changed; update this test");
+    let old = schema::fingerprint(&src).unwrap().version;
+    let bumped = mutated.replace(
+        &format!("{version_marker}{old};"),
+        &format!("{version_marker}{};", old + 1),
+    );
+    assert_ne!(bumped, mutated, "version bump replace had no effect");
+    std::fs::write(&wire, &bumped).unwrap();
+    let msg = schema::check(&root).unwrap().expect("stale schema file must be flagged");
+    assert!(msg.contains("regenerate"), "{msg}");
+    schema::update(&root, false).unwrap();
+    assert_eq!(schema::check(&root).unwrap(), None);
+
+    std::fs::remove_dir_all(&root).unwrap();
+}

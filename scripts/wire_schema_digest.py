@@ -1,0 +1,309 @@
+#!/usr/bin/env python3
+"""Wire-schema fingerprint for rust/src/comm/wire.rs — Python port.
+
+A line-for-line port of the normalization in
+rust/tools/dadm-lint/src/schema.rs (and the token scanner in
+src/lexer.rs), for environments without a Rust toolchain. Both
+implementations must produce identical digests over wire.rs; the
+dadm-lint `real_tree_lints_clean` test pins the Rust side to the
+committed rust/src/comm/wire.schema, and CI runs `dadm-lint -- check`
+on every push, so any divergence between the two ports fails loudly.
+
+Usage:
+    python3 scripts/wire_schema_digest.py            # print version/digest
+    python3 scripts/wire_schema_digest.py --write    # regenerate wire.schema
+"""
+
+import sys
+from pathlib import Path
+
+TRACKED_ITEMS = {
+    "WIRE_MAGIC",
+    "WIRE_VERSION",
+    "MAX_FRAME_LEN",
+    "FRAME_HEADER_BYTES",
+    "WireLoss",
+    "WireReg",
+    "WireSolver",
+    "DataSpec",
+    "ProblemSpec",
+    "WireBroadcast",
+    "BroadcastRef",
+    "EvalOp",
+    "StepFlags",
+    "Frame",
+}
+TRACKED_PREFIXES = ("TAG_", "STEP_FLAG_")
+
+
+def tracked(name):
+    return name in TRACKED_ITEMS or name.startswith(TRACKED_PREFIXES)
+
+
+def is_ident_start(c):
+    return ("a" <= c <= "z") or ("A" <= c <= "Z") or c == "_"
+
+
+def is_ident_continue(c):
+    return is_ident_start(c) or ("0" <= c <= "9")
+
+
+def lex(src):
+    """Token texts, mirroring lexer.rs exactly (comments dropped).
+
+    Each token is (text, kind) with kind in {"ident", "punct", "lit"} —
+    the schema path only needs text plus punct identification.
+    """
+    toks = []
+    i = 0
+    n = len(src)
+
+    def peek(a):
+        j = i + a
+        return src[j] if j < n else "\0"
+
+    while i < n:
+        c = src[i]
+        if c.isspace():
+            i += 1
+            continue
+        # Line comments (waivers are irrelevant here — dropped).
+        if c == "/" and peek(1) == "/":
+            while i < n and src[i] != "\n":
+                i += 1
+            continue
+        # Nested block comments.
+        if c == "/" and peek(1) == "*":
+            i += 2
+            depth = 1
+            while i < n and depth > 0:
+                if src[i] == "/" and peek(1) == "*":
+                    i += 2
+                    depth += 1
+                elif src[i] == "*" and peek(1) == "/":
+                    i += 2
+                    depth -= 1
+                else:
+                    i += 1
+            continue
+        # Raw strings / byte strings / raw identifiers.
+        if c in ("r", "b"):
+            if c == "b" and peek(1) == "r":
+                prefix_len, has_b, has_r = 2, True, True
+            elif c == "b":
+                prefix_len, has_b, has_r = 1, True, False
+            else:
+                prefix_len, has_b, has_r = 1, False, True
+            j = prefix_len
+            nh = 0
+            if has_r:
+                while peek(j) == "#":
+                    j += 1
+                    nh += 1
+            if peek(j) == '"':
+                start = i
+                i += prefix_len + nh + 1  # prefix, hashes, opening quote
+                while i < n:
+                    ch = src[i]
+                    i += 1
+                    if nh == 0:
+                        if ch == "\\":
+                            i += 1
+                        elif ch == '"':
+                            break
+                    elif ch == '"':
+                        seen = 0
+                        while seen < nh and peek(0) == "#":
+                            i += 1
+                            seen += 1
+                        if seen == nh:
+                            break
+                toks.append((src[start:i], "lit"))
+                continue
+            if has_b and not has_r and peek(1) == "'":
+                start = i
+                i += 2
+                while i < n:
+                    ch = src[i]
+                    i += 1
+                    if ch == "\\":
+                        i += 1
+                    elif ch == "'":
+                        break
+                toks.append((src[start:i], "lit"))
+                continue
+            if has_r and not has_b and peek(1) == "#" and is_ident_start(peek(2)):
+                start = i
+                i += 2
+                while i < n and is_ident_continue(src[i]):
+                    i += 1
+                toks.append((src[start:i], "ident"))
+                continue
+            # Fall through: plain identifier starting with r/b.
+        if is_ident_start(c):
+            start = i
+            while i < n and is_ident_continue(src[i]):
+                i += 1
+            toks.append((src[start:i], "ident"))
+            continue
+        if "0" <= c <= "9":
+            # Never consumes `.` — `0..n` and `1.5` split, as in lexer.rs.
+            start = i
+            while i < n and is_ident_continue(src[i]):
+                i += 1
+            toks.append((src[start:i], "lit"))
+            continue
+        if c == '"':
+            start = i
+            i += 1
+            while i < n:
+                ch = src[i]
+                i += 1
+                if ch == "\\":
+                    i += 1
+                elif ch == '"':
+                    break
+            toks.append((src[start:i], "lit"))
+            continue
+        if c == "'":
+            if is_ident_start(peek(1)) and peek(2) != "'":
+                start = i
+                i += 1
+                while i < n and is_ident_continue(src[i]):
+                    i += 1
+                toks.append((src[start:i], "lit"))
+                continue
+            start = i
+            i += 1
+            while i < n:
+                ch = src[i]
+                i += 1
+                if ch == "\\":
+                    i += 1
+                elif ch == "'":
+                    break
+            toks.append((src[start:i], "lit"))
+            continue
+        toks.append((c, "punct"))
+        i += 1
+    return toks
+
+
+def is_punct(toks, i, c):
+    return 0 <= i < len(toks) and toks[i][1] == "punct" and toks[i][0] == c
+
+
+def ident_at(toks, i):
+    if 0 <= i < len(toks) and toks[i][1] == "ident":
+        return toks[i][0]
+    return None
+
+
+def item_span_end(toks, i, kw):
+    # Depth counts []/() too: `const WIRE_MAGIC: [u8; 4] = ...;` has a
+    # `;` inside the array type. Only `}` closes a struct/enum body;
+    # `const` items always run to their `;`.
+    brace_bodied = kw != "const"
+    depth = 0
+    j = i
+    while j < len(toks):
+        if is_punct(toks, j, "{") or is_punct(toks, j, "[") or is_punct(toks, j, "("):
+            depth += 1
+        elif is_punct(toks, j, "}"):
+            depth = max(depth - 1, 0)
+            if depth == 0 and brace_bodied:
+                return j + 1
+        elif is_punct(toks, j, "]") or is_punct(toks, j, ")"):
+            depth = max(depth - 1, 0)
+        elif is_punct(toks, j, ";") and depth == 0:
+            return j + 1
+        j += 1
+    return len(toks)
+
+
+def normalize(toks):
+    parts = []
+    i = 0
+    while i < len(toks):
+        if is_punct(toks, i, "#") and is_punct(toks, i + 1, "["):
+            depth = 1
+            j = i + 2
+            while j < len(toks) and depth > 0:
+                if is_punct(toks, j, "["):
+                    depth += 1
+                elif is_punct(toks, j, "]"):
+                    depth -= 1
+                j += 1
+            i = j
+            continue
+        parts.append(toks[i][0])
+        i += 1
+    return " ".join(parts)
+
+
+def extract_items(toks):
+    items = []
+    depth = 0
+    i = 0
+    while i < len(toks):
+        if is_punct(toks, i, "{"):
+            depth += 1
+        elif is_punct(toks, i, "}"):
+            depth = max(depth - 1, 0)
+        elif depth == 0:
+            kw = ident_at(toks, i)
+            if kw in ("const", "struct", "enum"):
+                name = ident_at(toks, i + 1)
+                if name is not None and tracked(name):
+                    end = item_span_end(toks, i, kw)
+                    items.append((name, normalize(toks[i:end])))
+                    i = end
+                    continue
+        i += 1
+    items.sort()
+    return items
+
+
+def fnv1a64(data):
+    h = 0xCBF29CE484222325
+    for b in data:
+        h ^= b
+        h = (h * 0x100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+def fingerprint(src):
+    items = extract_items(lex(src))
+    version = None
+    for name, norm in items:
+        if name == "WIRE_VERSION":
+            parts = norm.split(" ")
+            version = int(parts[parts.index("=") + 1])
+    if version is None:
+        raise SystemExit("wire.rs has no top-level WIRE_VERSION const")
+    joined = "\n".join(f"{name} := {norm}" for name, norm in items)
+    return version, format(fnv1a64(joined.encode("utf-8")), "016x")
+
+
+def main():
+    root = Path(__file__).resolve().parent.parent
+    wire = root / "rust" / "src" / "comm" / "wire.rs"
+    version, digest = fingerprint(wire.read_text())
+    if "--write" in sys.argv[1:]:
+        schema = root / "rust" / "src" / "comm" / "wire.schema"
+        schema.write_text(
+            "# Wire-schema fingerprint for rust/src/comm/wire.rs (DESIGN.md §12.4).\n"
+            "# FNV-1a 64 over the normalized frame-item token streams; fails the\n"
+            "# `wire-schema` lint when frame definitions drift without a\n"
+            "# WIRE_VERSION bump. Regenerate: cargo run -p dadm-lint -- schema --update\n"
+            f"version = {version}\n"
+            f"digest = {digest}\n"
+        )
+        print(f"wrote {schema} (digest {digest})")
+    else:
+        print(f"version = {version}")
+        print(f"digest = {digest}")
+
+
+if __name__ == "__main__":
+    main()
