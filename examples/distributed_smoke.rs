@@ -12,8 +12,14 @@
 //! the wire — runs DADM over the TCP backend and over `Cluster::Serial`,
 //! and fails (non-zero exit) if the final duality gaps diverge beyond
 //! 1e-9 or the round counts differ.
+//!
+//! `--compress f32|i16` instead runs the quantized-delta wire check
+//! (gap within 10× of exact, DeltaReply bytes below the codec's bound);
+//! `--overlap` runs the double-buffered-rounds check (barrier collapse
+//! plus convergence). See DESIGN.md §13.
 
 use anyhow::{bail, Context, Result};
+use dadm::comm::sparse::DeltaCodec;
 use dadm::comm::tcp::{run_worker, synthetic_specs, TcpClusterBuilder, TcpHandle};
 use dadm::comm::wire::{WireLoss, WireSolver};
 use dadm::comm::{Cluster, CostModel};
@@ -68,9 +74,44 @@ fn solve(
             sparse_comm: true,
             local_threads,
             conj_resum_every: 64,
+            compress: DeltaCodec::F64,
+            overlap: false,
         },
     );
     dadm.solve(EPS, MAX_ROUNDS)
+}
+
+/// Build a smoke-configured coordinator with an explicit codec and
+/// engine mode (the `--compress` / `--overlap` runs).
+fn build_dadm(
+    data: &Dataset,
+    part: &Partition,
+    cluster: Cluster,
+    local_threads: usize,
+    compress: DeltaCodec,
+    overlap: bool,
+) -> Dadm<SmoothHinge, ElasticNet, Zero, ProxSdca> {
+    Dadm::new(
+        data,
+        part,
+        SmoothHinge::default(),
+        ElasticNet::new(0.1),
+        Zero,
+        1e-2,
+        ProxSdca,
+        DadmOptions {
+            sp: SP,
+            cluster,
+            cost: CostModel::default(),
+            seed: RNG_SEED,
+            gap_every: 1,
+            sparse_comm: true,
+            local_threads,
+            conj_resum_every: 64,
+            compress,
+            overlap,
+        },
+    )
 }
 
 fn main() -> Result<()> {
@@ -87,9 +128,14 @@ fn main() -> Result<()> {
     }
 
     // Coordinator flags: `--local-threads T` runs every worker process
-    // with T concurrent sub-shard solvers (the CI distributed-smoke job
-    // exercises T = 2 on every push).
+    // with T concurrent sub-shard solvers; `--compress f32|i16` runs the
+    // quantized-delta wire check instead of the exact-parity checks;
+    // `--overlap` runs the double-buffered-rounds check (the CI
+    // distributed-smoke job exercises T = 2, `--compress i16` and
+    // `--overlap` on every push).
     let mut local_threads = 1usize;
+    let mut compress = DeltaCodec::F64;
+    let mut overlap = false;
     let mut it = args.iter();
     while let Some(k) = it.next() {
         match k.as_str() {
@@ -103,7 +149,18 @@ fn main() -> Result<()> {
                     bail!("the smoke harness needs an explicit --local-threads ≥ 1");
                 }
             }
-            other => bail!("unknown flag `{other}` (usage: distributed_smoke [--local-threads T])"),
+            "--compress" => {
+                let v = it.next().context("missing value for --compress")?;
+                compress = DeltaCodec::parse(v)
+                    .with_context(|| format!("--compress must be f64, f32 or i16, got `{v}`"))?;
+            }
+            "--overlap" => {
+                overlap = true;
+            }
+            other => bail!(
+                "unknown flag `{other}` (usage: distributed_smoke \
+                 [--local-threads T] [--compress f64|f32|i16] [--overlap])"
+            ),
         }
     }
 
@@ -142,6 +199,127 @@ fn main() -> Result<()> {
 
         let data = problem.generate();
         let part = Partition::balanced(data.n(), MACHINES, PART_SEED);
+
+        // Re-assigning resets the worker fleet's dual state between
+        // independently measured runs.
+        let reassign = |handle: &TcpHandle| -> Result<()> {
+            handle.with(|c| {
+                c.assign(synthetic_specs(
+                    &problem,
+                    MACHINES,
+                    PART_SEED,
+                    RNG_SEED,
+                    SP,
+                    WireLoss::SmoothHinge(SmoothHinge::default()),
+                    WireSolver::ProxSdca,
+                    local_threads,
+                ))
+            })
+        };
+
+        if compress != DeltaCodec::F64 {
+            // --- Quantized-delta wire check (DESIGN.md §13): at an equal
+            // round budget the lossy codec must stay within 10× of the
+            // exact run's final gap (error feedback at work) while its
+            // DeltaReply payloads shrink below the codec's bound. ---
+            let rounds = 20usize;
+            let measured = |codec: DeltaCodec| -> Result<(SolveReport, u64)> {
+                reassign(&handle)?;
+                let before = handle.stats().delta_reply_bytes;
+                let mut dadm = build_dadm(
+                    &data,
+                    &part,
+                    Cluster::Tcp(handle.clone()),
+                    local_threads,
+                    codec,
+                    false,
+                );
+                let report = dadm.solve(0.0, rounds);
+                Ok((report, handle.stats().delta_reply_bytes - before))
+            };
+            let (exact, exact_bytes) = measured(DeltaCodec::F64)?;
+            let (lossy, lossy_bytes) = measured(compress)?;
+            let (gap_exact, gap_lossy) = (exact.normalized_gap(), lossy.normalized_gap());
+            let ratio = lossy_bytes as f64 / exact_bytes as f64;
+            println!(
+                "compress {}: DeltaReply {lossy_bytes} B vs exact {exact_bytes} B \
+                 (ratio {ratio:.3}); gaps {gap_lossy:.3e} vs {gap_exact:.3e}",
+                compress.name()
+            );
+            if !gap_lossy.is_finite() || gap_lossy > gap_exact * 10.0 {
+                bail!(
+                    "{} gap {gap_lossy:.3e} drifted past 10× the exact {gap_exact:.3e}",
+                    compress.name()
+                );
+            }
+            let limit = match compress {
+                DeltaCodec::I16 => 0.5,
+                _ => 0.75,
+            };
+            if ratio >= limit {
+                bail!(
+                    "{} DeltaReply bytes did not shrink: ratio {ratio:.3} ≥ {limit}",
+                    compress.name()
+                );
+            }
+            handle.with(|c| c.shutdown());
+            return Ok(());
+        }
+
+        if overlap {
+            // --- Double-buffered rounds (DESIGN.md §13): same round
+            // budget with pipelined issue/complete halves — the
+            // per-round barrier collapses (the counter pins the overlap
+            // schedule) and the solve still converges. ---
+            let rounds = 30usize;
+            reassign(&handle)?;
+            let mut seq = build_dadm(
+                &data,
+                &part,
+                Cluster::Tcp(handle.clone()),
+                local_threads,
+                DeltaCodec::F64,
+                false,
+            );
+            let seq_report = seq.solve(0.0, rounds);
+            let seq_barriers = seq.barriers();
+            reassign(&handle)?;
+            let mut ovl = build_dadm(
+                &data,
+                &part,
+                Cluster::Tcp(handle.clone()),
+                local_threads,
+                DeltaCodec::F64,
+                true,
+            );
+            let ovl_report = ovl.solve(0.0, rounds);
+            let ovl_barriers = ovl.barriers();
+            let (gap_seq, gap_ovl) = (seq_report.normalized_gap(), ovl_report.normalized_gap());
+            println!(
+                "overlap: rounds {} vs {} sequential, barriers {ovl_barriers} vs \
+                 {seq_barriers}, gaps {gap_ovl:.3e} vs {gap_seq:.3e}",
+                ovl_report.rounds, seq_report.rounds
+            );
+            if ovl_report.rounds != seq_report.rounds {
+                bail!(
+                    "overlap round count diverged: {} vs {}",
+                    ovl_report.rounds,
+                    seq_report.rounds
+                );
+            }
+            if !gap_ovl.is_finite() || gap_ovl > gap_seq * 10.0 {
+                bail!("overlapped gap {gap_ovl:.3e} drifted past 10× sequential {gap_seq:.3e}");
+            }
+            if ovl_barriers >= seq_barriers {
+                bail!(
+                    "overlap did not collapse barriers: {ovl_barriers} vs \
+                     sequential {seq_barriers}"
+                );
+            }
+            handle.with(|c| c.shutdown());
+            return Ok(());
+        }
+
         let tcp = solve(&data, &part, Cluster::Tcp(handle.clone()), local_threads);
         let serial = solve(&data, &part, Cluster::Serial, local_threads);
 
@@ -171,21 +349,6 @@ fn main() -> Result<()> {
         // to every worker for each gap evaluation. Re-assigning resets
         // the worker fleet's dual state between the two measurements. ---
         let wire_rounds = 10usize;
-        let reassign = |handle: &TcpHandle| -> Result<()> {
-            handle.with(|c| {
-                c.assign(synthetic_specs(
-                    &problem,
-                    MACHINES,
-                    PART_SEED,
-                    RNG_SEED,
-                    SP,
-                    WireLoss::SmoothHinge(SmoothHinge::default()),
-                    WireSolver::ProxSdca,
-                    local_threads,
-                ))
-            })
-        };
-
         reassign(&handle)?;
         let before = handle.stats().total_bytes();
         let fused = |cluster: Cluster| -> SolveReport {
@@ -206,6 +369,8 @@ fn main() -> Result<()> {
                     sparse_comm: true,
                     local_threads,
                     conj_resum_every: 64,
+                    compress: DeltaCodec::F64,
+                    overlap: false,
                 },
             );
             dadm.solve(0.0, wire_rounds) // eps 0: run all rounds, record each
@@ -232,6 +397,8 @@ fn main() -> Result<()> {
                 sparse_comm: true,
                 local_threads,
                 conj_resum_every: 64,
+                compress: DeltaCodec::F64,
+                overlap: false,
             },
         );
         legacy.resync();

@@ -345,6 +345,192 @@ fn main() {
         }
     }
 
+    // --- Quantized-delta rounds over the loopback TCP transport ---
+    // Dense-support workload (the per-round Δv densifies under every
+    // codec), so the codec's dense entry width dominates the DeltaReply
+    // payload: 8 B/elem exact f64, 4 B f32, 2 B scaled i16 with error
+    // feedback (DESIGN.md §13). Reports per-round DeltaReply bytes next
+    // to the round time for each codec.
+    {
+        use dadm::comm::sparse::DeltaCodec;
+        use dadm::comm::tcp::{serve, synthetic_specs, TcpClusterBuilder, TcpHandle};
+        use dadm::comm::wire::{WireLoss, WireSolver};
+        use dadm::comm::Cluster;
+        let machines = 4usize;
+        let n = scaled_bench_n(4_000);
+        let (sp, d) = (0.25, 512usize);
+        let spec = SyntheticSpec {
+            name: "compressed-round".into(),
+            n,
+            d,
+            density: 0.1,
+            signal_density: 0.2,
+            noise: 0.1,
+            seed: 29,
+        };
+        let data = spec.generate();
+        let part = Partition::balanced(n, machines, 29);
+        for codec in [DeltaCodec::F64, DeltaCodec::F32, DeltaCodec::I16] {
+            let builder = TcpClusterBuilder::bind("127.0.0.1:0").expect("bind loopback");
+            let addr = builder.local_addr().expect("local addr");
+            let workers: Vec<_> = (0..machines)
+                .map(|_| {
+                    std::thread::spawn(move || {
+                        let s = std::net::TcpStream::connect(addr).expect("worker connect");
+                        serve(s).expect("worker serve");
+                    })
+                })
+                .collect();
+            let mut cluster = builder.accept(machines).expect("accept workers");
+            cluster
+                .assign(synthetic_specs(
+                    &spec,
+                    machines,
+                    29,
+                    0xDAD_A,
+                    sp,
+                    WireLoss::SmoothHinge(SmoothHinge::default()),
+                    WireSolver::ProxSdca,
+                    1,
+                ))
+                .expect("assign");
+            let handle = TcpHandle::new(cluster);
+            let mut dadm = Dadm::new(
+                &data,
+                &part,
+                SmoothHinge::default(),
+                ElasticNet::new(0.1),
+                Zero,
+                1e-4,
+                ProxSdca,
+                DadmOptions {
+                    sp,
+                    cluster: Cluster::Tcp(handle.clone()),
+                    cost: CostModel::free(),
+                    sparse_comm: true,
+                    compress: codec,
+                    ..Default::default()
+                },
+            );
+            dadm.resync();
+            let bytes_before = dadm.delta_reply_bytes();
+            let mut rounds_timed = 0u64;
+            let t = time_it(2, 8, || {
+                dadm.round();
+                rounds_timed += 1;
+            });
+            let per_round = (dadm.delta_reply_bytes() - bytes_before) / rounds_timed.max(1);
+            table.row(&[
+                "dadm_round_compressed".into(),
+                format!("m={machines} d={d} sp={sp} codec={}", codec.name()),
+                fmt_secs(t.median),
+                format!("{per_round} B/round DeltaReply"),
+            ]);
+            handle.with(|c| c.shutdown());
+            drop(dadm);
+            drop(handle);
+            for w in workers {
+                w.join().expect("worker thread");
+            }
+        }
+    }
+
+    // --- Double-buffered rounds over the loopback TCP transport ---
+    // Equal work, two schedules: N sequential fused rounds vs N
+    // pipelined issue/complete pairs with one round primed in flight
+    // (steady-state depth two, DESIGN.md §13). Overlapping round t+1's
+    // dispatch with round t's reduce/global step hides the socket
+    // turnaround: overlapped should come in at or under sequential.
+    {
+        use dadm::comm::tcp::{serve, synthetic_specs, TcpClusterBuilder, TcpHandle};
+        use dadm::comm::wire::{WireLoss, WireSolver};
+        use dadm::comm::Cluster;
+        let machines = 4usize;
+        let n = scaled_bench_n(8_000);
+        let (sp, d) = (0.02, 2048usize);
+        let spec = SyntheticSpec {
+            name: "overlap-round".into(),
+            n,
+            d,
+            density: 0.01,
+            signal_density: 0.2,
+            noise: 0.1,
+            seed: 31,
+        };
+        let data = spec.generate();
+        let part = Partition::balanced(n, machines, 31);
+        for overlapped in [false, true] {
+            let builder = TcpClusterBuilder::bind("127.0.0.1:0").expect("bind loopback");
+            let addr = builder.local_addr().expect("local addr");
+            let workers: Vec<_> = (0..machines)
+                .map(|_| {
+                    std::thread::spawn(move || {
+                        let s = std::net::TcpStream::connect(addr).expect("worker connect");
+                        serve(s).expect("worker serve");
+                    })
+                })
+                .collect();
+            let mut cluster = builder.accept(machines).expect("accept workers");
+            cluster
+                .assign(synthetic_specs(
+                    &spec,
+                    machines,
+                    31,
+                    0xDAD_A,
+                    sp,
+                    WireLoss::SmoothHinge(SmoothHinge::default()),
+                    WireSolver::ProxSdca,
+                    1,
+                ))
+                .expect("assign");
+            let handle = TcpHandle::new(cluster);
+            let mut dadm = Dadm::new(
+                &data,
+                &part,
+                SmoothHinge::default(),
+                ElasticNet::new(0.1),
+                Zero,
+                1e-4,
+                ProxSdca,
+                DadmOptions {
+                    sp,
+                    cluster: Cluster::Tcp(handle.clone()),
+                    cost: CostModel::free(),
+                    sparse_comm: true,
+                    overlap: overlapped,
+                    ..Default::default()
+                },
+            );
+            dadm.resync();
+            let (mode, t) = if overlapped {
+                dadm.round_issue(false, false); // prime the pipeline
+                let t = time_it(2, 8, || {
+                    dadm.round_issue(false, false);
+                    dadm.round_complete();
+                });
+                dadm.round_complete(); // drain
+                ("overlapped", t)
+            } else {
+                let t = time_it(2, 8, || {
+                    dadm.round();
+                });
+                ("sequential", t)
+            };
+            table.row(&[
+                "dadm_round_overlap".into(),
+                format!("m={machines} d={d} sp={sp} {mode}"),
+                fmt_secs(t.median),
+                format!("barriers={}", dadm.barriers()),
+            ]);
+            handle.with(|c| c.shutdown());
+            drop(dadm);
+            drop(handle);
+            for w in workers {
+                w.join().expect("worker thread");
+            }
+        }
+    }
+
     // --- Fused broadcast-apply barrier (engine round, m=16, d=1e5) ---
     // After: one pool section per round — the Δṽ broadcast apply rides
     // the next round's local-step dispatch. Before (emulated): a second

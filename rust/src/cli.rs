@@ -120,6 +120,8 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunOutcome> {
         sparse_comm: cfg.sparse_comm,
         local_threads: cfg.local_threads,
         conj_resum_every: cfg.conj_resum_every,
+        compress: cfg.compress,
+        overlap: cfg.overlap,
     };
 
     // Loss selection happens exactly once, in `wire_loss_for` (the §8.2
@@ -310,7 +312,7 @@ pub fn main_with_args(args: &[String]) -> Result<()> {
              Keys: dataset scale method loss solver lambda mu machines sp eps\n\
                    max-passes gap-every conj-resum-every cluster tcp-listen\n\
                    local-threads seed nu comm-alpha comm-beta sparse-comm\n\
-                   checkpoint checkpoint-every resume\n\n\
+                   compress overlap checkpoint checkpoint-every resume\n\n\
              --cluster serial|threads|tcp (default serial)\n  \
              Execution backend for the per-machine local steps. `serial`\n  \
              and `threads` simulate the cluster in-process; `tcp` is a\n  \
@@ -365,6 +367,21 @@ pub fn main_with_args(args: &[String]) -> Result<()> {
              (12 B per stored entry, capped at the dense 8·d bytes);\n  \
              with false it charges dense length-d vectors. The iterates\n  \
              are bit-identical either way — only modeled comm time moves.\n\n\
+             --compress f64|f32|i16 (default f64)\n  \
+             Wire codec for the Δv/Δṽ payloads (dual methods). f64 is\n  \
+             exact and bit-identical to not compressing. f32 and scaled\n  \
+             i16 quantize each sender's delta at the wire boundary and\n  \
+             keep the quantization error in a per-sender residual that\n  \
+             is fed back into the next round's delta (error feedback),\n  \
+             so the solve still converges to the same solution; i16\n  \
+             cuts dense payloads to 2 bytes per element (vs 8).\n\n\
+             --overlap true|false (default false, dadm only)\n  \
+             Double-buffered rounds: issue round t+1's fused local-step\n  \
+             dispatch while round t's reduce and global step complete,\n  \
+             overlapping communication with the coordinator's work at\n  \
+             one round of bounded broadcast staleness. The trace keeps\n  \
+             the exact dual telemetry; entering-primal records are\n  \
+             approximate under overlap.\n\n\
              Example:\n  dadm --dataset synth-rcv1 --scale 0.01 --method acc-dadm \\\n       \
              --loss logistic --lambda 1e-7 --machines 8 --sp 0.2 --sparse-comm true"
         );
@@ -418,6 +435,30 @@ mod tests {
             assert!(outcome.final_metric.is_finite(), "{method}");
             assert!(outcome.comms > 0, "{method}");
         }
+    }
+
+    #[test]
+    fn launcher_runs_compressed_and_overlapped_dadm() {
+        let exact = run_experiment(&quick_cfg("dadm")).unwrap();
+        for codec in ["f32", "i16"] {
+            let mut cfg = quick_cfg("dadm");
+            cfg.compress = crate::comm::sparse::DeltaCodec::parse(codec).unwrap();
+            let outcome = run_experiment(&cfg).unwrap();
+            assert!(outcome.final_metric.is_finite(), "{codec}");
+            // Error feedback keeps the lossy run in the exact run's
+            // neighborhood at equal budget.
+            assert!(
+                outcome.final_metric <= exact.final_metric.max(cfg.eps) * 10.0,
+                "{codec}: {} vs {}",
+                outcome.final_metric,
+                exact.final_metric
+            );
+        }
+        let mut cfg = quick_cfg("dadm");
+        cfg.overlap = true;
+        let outcome = run_experiment(&cfg).unwrap();
+        assert!(outcome.final_metric.is_finite());
+        assert!(outcome.comms > 0);
     }
 
     #[test]

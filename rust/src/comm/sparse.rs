@@ -76,13 +76,82 @@ pub const SPARSE_ENTRY_BYTES: usize = 12;
 /// Wire bytes of one dense `f64` element.
 pub const DENSE_ENTRY_BYTES: usize = 8;
 
+/// Value encoding for delta payloads (DESIGN.md §13). `F64` is the
+/// exact default — bit-identical to the uncompressed pipeline, no
+/// residual kept. The lossy codecs quantize every stored value at the
+/// sender and carry the quantization error forward as an error-feedback
+/// residual ([`compress_delta`]), so the long-run sum of transmitted
+/// images tracks the exact sum to within one quantization step.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DeltaCodec {
+    /// Exact 8-byte IEEE-754 doubles (the parity-pinned default).
+    #[default]
+    F64,
+    /// 4-byte IEEE-754 singles: widening back to f64 is exact, so the
+    /// receiver reconstructs the sender's image bit for bit.
+    F32,
+    /// 2-byte integer levels against a shared power-of-two step
+    /// ([`i16_step`]): scaling by the step never rounds, so quantize,
+    /// dequantize, and wire re-encoding are all exact in f64.
+    I16,
+}
+
+impl DeltaCodec {
+    /// Wire bytes of one stored value under this codec.
+    pub const fn value_bytes(self) -> usize {
+        match self {
+            DeltaCodec::F64 => 8,
+            DeltaCodec::F32 => 4,
+            DeltaCodec::I16 => 2,
+        }
+    }
+
+    /// Wire bytes of one stored sparse entry: `u32` index + value.
+    pub const fn sparse_entry_bytes(self) -> usize {
+        4 + self.value_bytes()
+    }
+
+    /// Wire bytes of one dense element.
+    pub const fn dense_entry_bytes(self) -> usize {
+        self.value_bytes()
+    }
+
+    /// The config/CLI name (`f64`, `f32`, `i16`).
+    pub fn name(self) -> &'static str {
+        match self {
+            DeltaCodec::F64 => "f64",
+            DeltaCodec::F32 => "f32",
+            DeltaCodec::I16 => "i16",
+        }
+    }
+
+    /// Inverse of [`DeltaCodec::name`].
+    pub fn parse(s: &str) -> Option<DeltaCodec> {
+        match s {
+            "f64" => Some(DeltaCodec::F64),
+            "f32" => Some(DeltaCodec::F32),
+            "i16" => Some(DeltaCodec::I16),
+            _ => None,
+        }
+    }
+}
+
 /// Whether a sparse message of `nnz` stored entries over dimension `dim`
 /// should be sent (and reduced) densely instead: a stored entry costs
 /// [`SPARSE_ENTRY_BYTES`] against [`DENSE_ENTRY_BYTES`] per dense
 /// element (1.5 dense-equivalent elements each), so the sparse form
 /// stops paying for itself at `nnz ≥ ⅔·d`.
 pub fn should_densify(nnz: usize, dim: usize) -> bool {
-    nnz * SPARSE_ENTRY_BYTES >= dim * DENSE_ENTRY_BYTES
+    should_densify_with(DeltaCodec::F64, nnz, dim)
+}
+
+/// Per-codec generalization of [`should_densify`]: the break-even moves
+/// with the codec's entry widths — `nnz ≥ ⅔·d` for `f64` (12 B vs 8 B),
+/// `nnz ≥ ½·d` for `f32` (8 B vs 4 B), `nnz ≥ ⅓·d` for `i16`
+/// (6 B vs 2 B) — narrower values make the per-entry index overhead
+/// relatively more expensive, so compressed messages densify sooner.
+pub fn should_densify_with(codec: DeltaCodec, nnz: usize, dim: usize) -> bool {
+    nnz * codec.sparse_entry_bytes() >= dim * codec.dense_entry_bytes()
 }
 
 /// Wire size of a sparse message of `nnz` entries over dimension `dim`,
@@ -90,7 +159,129 @@ pub fn should_densify(nnz: usize, dim: usize) -> bool {
 /// `⌈nnz · SPARSE_ENTRY_BYTES / DENSE_ENTRY_BYTES⌉` (= `⌈1.5·nnz⌉`),
 /// capped at the dense size `dim`.
 pub fn sparse_message_elems(nnz: usize, dim: usize) -> usize {
-    ((nnz * SPARSE_ENTRY_BYTES).div_ceil(DENSE_ENTRY_BYTES)).min(dim)
+    sparse_message_elems_with(DeltaCodec::F64, nnz, dim)
+}
+
+/// Per-codec generalization of [`sparse_message_elems`]: the message
+/// size the cost model charges, in 8-byte dense-equivalent elements,
+/// capped at this codec's *dense* encoding of the same vector.
+pub fn sparse_message_elems_with(codec: DeltaCodec, nnz: usize, dim: usize) -> usize {
+    ((nnz * codec.sparse_entry_bytes()).div_ceil(DENSE_ENTRY_BYTES))
+        .min((dim * codec.dense_entry_bytes()).div_ceil(DENSE_ENTRY_BYTES))
+}
+
+/// Largest i16 level magnitude used by the scaled-i16 codec. Symmetric
+/// (±32767) so negation is exact and `i16::MIN` never appears.
+const I16_MAX_Q: f64 = 32767.0;
+
+/// Largest magnitude in a value vector (0.0 when empty) — the input to
+/// [`i16_step`], shared by the quantizer here and the wire encoder's
+/// canonical step re-derivation.
+pub fn max_abs(vals: &[f64]) -> f64 {
+    vals.iter().fold(0.0f64, |m, v| m.max(v.abs()))
+}
+
+/// The canonical quantization step for the scaled-i16 codec: the
+/// smallest power of two `s` with `max_abs / s ≤ 32767`. A power-of-two
+/// step makes every scaling exact in f64, which gives the codec its two
+/// load-bearing properties: `level · s` reconstructs the sender's image
+/// bit for bit, and the wire encoder can re-derive `(s, levels)` from
+/// the image values alone (the max-magnitude carry always quantizes to
+/// a level in `(16383, 32767]`, so the minimal step of the image vector
+/// is the minimal step of the carry vector).
+pub fn i16_step(max_abs: f64) -> f64 {
+    if !max_abs.is_finite() || max_abs <= 0.0 {
+        return 1.0;
+    }
+    let mut step = 1.0f64;
+    while max_abs / step > I16_MAX_Q {
+        step *= 2.0;
+    }
+    while step > f64::MIN_POSITIVE && max_abs / (step * 0.5) <= I16_MAX_Q {
+        step *= 0.5;
+    }
+    step
+}
+
+/// The scaled-i16 level of one value for a given step (total: non-finite
+/// values saturate through `clamp`/`as`, they never panic).
+pub fn i16_level(v: f64, step: f64) -> i16 {
+    (v / step).round().clamp(-I16_MAX_Q, I16_MAX_Q) as i16
+}
+
+/// The codec image of one value: the exact f64 the receiver
+/// reconstructs. `step` is this message's [`i16_step`] (ignored by the
+/// other codecs).
+pub fn codec_image(codec: DeltaCodec, v: f64, step: f64) -> f64 {
+    match codec {
+        DeltaCodec::F64 => v,
+        DeltaCodec::F32 => {
+            let x = v as f32;
+            if x.is_finite() || !v.is_finite() {
+                x as f64
+            } else {
+                // A finite f64 beyond f32 range saturates instead of
+                // poisoning the image (and the residual) with ±∞.
+                f32::MAX.copysign(x) as f64
+            }
+        }
+        DeltaCodec::I16 => i16_level(v, step) as f64 * step,
+    }
+}
+
+/// Quantize a delta message in place under `codec`, carrying the
+/// error-feedback residual (DESIGN.md §13).
+///
+/// `residual` is the sender's dense unsent-error buffer (resized to the
+/// message dimension on first use). The previous rounds' error is
+/// folded into the message first, the carry is re-extracted at this
+/// codec's sparse/dense break-even ([`should_densify_with`]), every
+/// stored value is replaced by its codec image, and the new
+/// per-coordinate error `carry − image` is left in `residual` for the
+/// next round. The fold and the subtraction are exact in f64 (the image
+/// is within half a step of the carry, so Sterbenz cancellation
+/// applies), which gives the error-feedback invariant: at every round,
+/// `Σ transmitted images + residual == Σ exact deltas` bit for bit.
+///
+/// `F64` is the identity: message and residual are untouched, keeping
+/// that path bit-identical to the uncompressed pipeline.
+pub fn compress_delta(delta: &mut Delta, codec: DeltaCodec, residual: &mut Vec<f64>) {
+    if codec == DeltaCodec::F64 {
+        return;
+    }
+    let dim = delta.dim();
+    residual.resize(dim, 0.0);
+    // Fold the message into the carried error: `residual` now holds the
+    // exact carry (delta + unsent error), supported on the union.
+    delta.add_into(residual);
+    let nnz = residual.iter().filter(|v| **v != 0.0).count();
+    let step = match codec {
+        DeltaCodec::I16 => i16_step(max_abs(residual)),
+        _ => 1.0,
+    };
+    if should_densify_with(codec, nnz, dim) {
+        let mut img = vec![0.0; dim];
+        for (j, r) in residual.iter_mut().enumerate() {
+            let image = codec_image(codec, *r, step);
+            img[j] = image;
+            *r -= image;
+        }
+        *delta = Delta::Dense(img);
+    } else {
+        let mut idx = Vec::with_capacity(nnz);
+        let mut val = Vec::with_capacity(nnz);
+        for (j, r) in residual.iter_mut().enumerate() {
+            if *r != 0.0 {
+                let image = codec_image(codec, *r, step);
+                if image != 0.0 {
+                    idx.push(j as u32);
+                    val.push(image);
+                }
+                *r -= image;
+            }
+        }
+        *delta = Delta::Sparse(SparseDelta { dim, idx, val });
+    }
 }
 
 /// A per-round delta message: dense vector or sparse index/value pairs.
@@ -416,6 +607,207 @@ mod tests {
         let (total, max_elems) = tree_allreduce_delta(contribs, &[1.0; 4]);
         assert_eq!(total.nnz(), 8);
         assert_eq!(max_elems, 12);
+    }
+
+    #[test]
+    fn merge_preserves_reserved_capacity() {
+        // The sparse–sparse merge pre-reserves both output buffers to the
+        // summed-nnz upper bound, so the two-pointer walk never
+        // reallocates. Disjoint supports make the merged length hit the
+        // bound exactly; an unreserved implementation growing from empty
+        // would double past it (1→2→…→64 for 33 entries).
+        let a = SparseDelta {
+            dim: 100_000,
+            idx: (0..17).map(|k| k * 2).collect(),
+            val: vec![1.0; 17],
+        };
+        let b = SparseDelta {
+            dim: 100_000,
+            idx: (0..16).map(|k| k * 2 + 1).collect(),
+            val: vec![1.0; 16],
+        };
+        let bound = a.nnz() + b.nnz();
+        match merge(Delta::Sparse(a), Delta::Sparse(b)) {
+            Delta::Sparse(s) => {
+                assert_eq!(s.nnz(), bound);
+                assert!(
+                    s.idx.capacity() <= bound && s.val.capacity() <= bound,
+                    "merge reallocated past its reservation: idx cap {} / val cap {} > {bound}",
+                    s.idx.capacity(),
+                    s.val.capacity()
+                );
+            }
+            Delta::Dense(_) => panic!("33 entries over d=100000 must stay sparse"),
+        }
+    }
+
+    #[test]
+    fn codec_entry_widths_and_breakeven_agree() {
+        // The generalized densify rule and message sizing must agree at
+        // every (codec, nnz, dim), and the f64 codec must reproduce the
+        // legacy single-codec functions exactly.
+        assert_eq!(DeltaCodec::F64.sparse_entry_bytes(), SPARSE_ENTRY_BYTES);
+        assert_eq!(DeltaCodec::F64.dense_entry_bytes(), DENSE_ENTRY_BYTES);
+        assert_eq!(DeltaCodec::F32.sparse_entry_bytes(), 8);
+        assert_eq!(DeltaCodec::I16.sparse_entry_bytes(), 6);
+        for codec in [DeltaCodec::F64, DeltaCodec::F32, DeltaCodec::I16] {
+            for dim in 1..40usize {
+                for nnz in 0..=dim {
+                    let sparse_bytes = nnz * codec.sparse_entry_bytes();
+                    let dense_bytes = dim * codec.dense_entry_bytes();
+                    assert_eq!(
+                        should_densify_with(codec, nnz, dim),
+                        sparse_bytes >= dense_bytes
+                    );
+                    assert!(
+                        sparse_message_elems_with(codec, nnz, dim)
+                            <= dense_bytes.div_ceil(DENSE_ENTRY_BYTES)
+                    );
+                }
+            }
+        }
+        for dim in 1..40usize {
+            for nnz in 0..=dim {
+                assert_eq!(
+                    should_densify(nnz, dim),
+                    should_densify_with(DeltaCodec::F64, nnz, dim)
+                );
+                assert_eq!(
+                    sparse_message_elems(nnz, dim),
+                    sparse_message_elems_with(DeltaCodec::F64, nnz, dim)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn codec_names_roundtrip() {
+        for codec in [DeltaCodec::F64, DeltaCodec::F32, DeltaCodec::I16] {
+            assert_eq!(DeltaCodec::parse(codec.name()), Some(codec));
+        }
+        assert_eq!(DeltaCodec::parse("f16"), None);
+        assert_eq!(DeltaCodec::default(), DeltaCodec::F64);
+    }
+
+    #[test]
+    fn i16_step_is_minimal_power_of_two() {
+        for_each_case(0x517E9, 200, |g| {
+            let max_abs = g.f64_in(1e-12, 1e12);
+            let step = i16_step(max_abs);
+            // A power of two: log2 is an exact integer.
+            let e = step.log2();
+            assert_eq!(e, e.floor(), "step {step} not a power of two");
+            assert_eq!(step, (2.0f64).powi(e as i32));
+            assert!(max_abs / step <= 32767.0, "step {step} too small for {max_abs}");
+            assert!(
+                max_abs / (step * 0.5) > 32767.0,
+                "step {step} not minimal for {max_abs}"
+            );
+        });
+        assert_eq!(i16_step(0.0), 1.0);
+        assert_eq!(i16_step(f64::NAN), 1.0);
+        assert_eq!(i16_step(f64::INFINITY), 1.0);
+    }
+
+    #[test]
+    fn f64_codec_is_the_identity() {
+        let mut delta = Delta::Sparse(SparseDelta {
+            dim: 10,
+            idx: vec![1, 7],
+            val: vec![0.1, -2.5],
+        });
+        let want = delta.clone();
+        let mut residual = Vec::new();
+        compress_delta(&mut delta, DeltaCodec::F64, &mut residual);
+        assert_eq!(delta, want);
+        assert!(residual.is_empty(), "f64 codec must not touch the residual");
+    }
+
+    #[test]
+    fn prop_error_feedback_reconstructs_exact_delta() {
+        // One compressed round: transmitted image + residual must equal
+        // the exact carry (prior residual + this round's delta) bit for
+        // bit, for both lossy codecs and both message shapes.
+        for_each_case(0xEF_C0DE, 80, |g| {
+            let d = g.usize_in(1, 48);
+            let codec = if g.bool(0.5) {
+                DeltaCodec::F32
+            } else {
+                DeltaCodec::I16
+            };
+            let mut residual: Vec<f64> = (0..d)
+                .map(|_| if g.bool(0.3) { g.f64_in(-1e-3, 1e-3) } else { 0.0 })
+                .collect();
+            let dense: Vec<f64> = (0..d)
+                .map(|_| if g.bool(0.6) { g.f64_in(-5.0, 5.0) } else { 0.0 })
+                .collect();
+            let carry: Vec<f64> = dense
+                .iter()
+                .zip(&residual)
+                .map(|(x, r)| x + r)
+                .collect();
+            let mut delta = if g.bool(0.5) {
+                Delta::Dense(dense.clone())
+            } else {
+                Delta::Sparse(SparseDelta::from_dense(&dense))
+            };
+            compress_delta(&mut delta, codec, &mut residual);
+            let image = delta.clone().into_dense();
+            for j in 0..d {
+                let reconstructed = image[j] + residual[j];
+                assert_eq!(
+                    reconstructed.to_bits(),
+                    carry[j].to_bits(),
+                    "image {} + residual {} != carry {} at {j}",
+                    image[j],
+                    residual[j],
+                    carry[j]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn prop_residual_stays_bounded_across_rounds() {
+        // Error feedback must not accumulate: after every round the
+        // leftover error is at most one quantization step of that
+        // round's carry, no matter how many rounds have run.
+        for_each_case(0xB0_04D3, 30, |g| {
+            let d = g.usize_in(1, 32);
+            let codec = if g.bool(0.5) {
+                DeltaCodec::F32
+            } else {
+                DeltaCodec::I16
+            };
+            let mut residual: Vec<f64> = Vec::new();
+            for _round in 0..12 {
+                let dense: Vec<f64> = (0..d)
+                    .map(|_| if g.bool(0.5) { g.f64_in(-3.0, 3.0) } else { 0.0 })
+                    .collect();
+                let mut prior = residual.clone();
+                prior.resize(d, 0.0);
+                let carry_max = dense
+                    .iter()
+                    .zip(&prior)
+                    .map(|(x, r)| (x + r).abs())
+                    .fold(0.0f64, f64::max);
+                let mut delta = Delta::Dense(dense);
+                compress_delta(&mut delta, codec, &mut residual);
+                let bound = match codec {
+                    // Half an i16 step; the minimal step is < 2·max/32767.
+                    DeltaCodec::I16 => i16_step(carry_max),
+                    // f32 rounding: half an ulp is ≤ 2⁻²⁴ relative, plus
+                    // an absolute floor for the subnormal-f32 zone.
+                    _ => carry_max * 1e-6 + 1e-40,
+                };
+                for (j, r) in residual.iter().enumerate() {
+                    assert!(
+                        r.abs() <= bound,
+                        "round {_round}: residual {r} at {j} exceeds bound {bound}"
+                    );
+                }
+            }
+        });
     }
 
     #[test]

@@ -43,7 +43,7 @@ use std::time::Instant;
 
 use super::allreduce::tree_sum;
 use super::cluster::run_subgroup;
-use super::sparse::{tree_allreduce_delta, Delta};
+use super::sparse::{compress_delta, tree_allreduce_delta, Delta, DeltaCodec};
 use super::wire::{
     shard_data_spec, write_broadcast, write_eval, write_local_step, BroadcastRef, DataSpec,
     EvalOp, Frame, ProblemSpec, StepFlags, WireBroadcast, WireLoss, WireReg, WireSolver,
@@ -66,6 +66,10 @@ pub struct WireStats {
     pub frames_sent: u64,
     /// Frames read from workers.
     pub frames_received: u64,
+    /// Bytes of received `DeltaReply` frames (header included) — the
+    /// reduce leg's actual traffic, which the compression acceptance
+    /// gate compares across codecs (DESIGN.md §13).
+    pub delta_reply_bytes: u64,
 }
 
 impl WireStats {
@@ -194,6 +198,7 @@ impl TcpClusterBuilder {
             conns,
             shut_down: false,
             frame_buf: Vec::new(),
+            delta_reply_bytes: 0,
         })
     }
 }
@@ -219,6 +224,8 @@ pub struct TcpCluster {
     shut_down: bool,
     /// Reused fan-out encode scratch (one encode, m sends).
     frame_buf: Vec<u8>,
+    /// Cumulative bytes of received `DeltaReply` frames.
+    delta_reply_bytes: u64,
 }
 
 impl std::fmt::Debug for TcpCluster {
@@ -245,6 +252,7 @@ impl TcpCluster {
             s.frames_sent += c.frames_sent;
             s.frames_received += c.frames_received;
         }
+        s.delta_reply_bytes = self.delta_reply_bytes;
         s
     }
 
@@ -319,34 +327,56 @@ impl TcpCluster {
         Ok(())
     }
 
-    /// One fused round leg: ship the parked broadcast + local-step
-    /// request (with its gap-telemetry flags) to every worker, collect
-    /// the [`StepReply`]s in machine order. Workers compute concurrently
-    /// (real processes); the second return is the slowest worker's
-    /// reported compute seconds — the `max_ℓ t_ℓ` the accounting charges
-    /// as parallel time.
-    pub fn local_step(
+    /// Ship one fused round leg — parked broadcast + local-step request
+    /// (gap-telemetry flags + requested reply codec) — to every worker
+    /// *without* waiting for replies. Pairs with
+    /// [`TcpCluster::local_step_collect`]; the split is what lets the
+    /// overlapped engine keep two rounds' frames outstanding per
+    /// connection (DESIGN.md §13): replies come back in FIFO order per
+    /// worker, so issue/issue/collect/collect is exactly two sequential
+    /// rounds from the worker's point of view.
+    pub fn local_step_issue(
         &mut self,
         lambda: f64,
         b: BroadcastRef<'_>,
         flags: StepFlags,
+        codec: DeltaCodec,
+    ) -> Result<()> {
+        self.send_all_framed(|buf| write_local_step(buf, lambda, b, flags, codec))
+    }
+
+    /// Collect the [`StepReply`]s of the oldest outstanding issued round,
+    /// in machine order. Workers compute concurrently (real processes);
+    /// the second return is the slowest worker's reported compute seconds
+    /// — the `max_ℓ t_ℓ` the accounting charges as parallel time.
+    pub fn local_step_collect(
+        &mut self,
+        flags: StepFlags,
+        codec: DeltaCodec,
     ) -> Result<(Vec<StepReply>, f64)> {
-        self.send_all_framed(|buf| write_local_step(buf, lambda, b, flags))?;
         let mut replies = Vec::with_capacity(self.conns.len());
         let mut parallel_secs = 0.0f64;
+        let mut reply_bytes = 0u64;
         for (l, conn) in self.conns.iter_mut().enumerate() {
+            let before = conn.received;
             match conn.recv().with_context(|| format!("local step reply {l}"))? {
                 Frame::DeltaReply {
                     delta,
                     elapsed_secs,
                     loss_sum,
                     conj_sum,
+                    codec: reply_codec,
                 } => {
                     ensure!(
                         loss_sum.is_some() == flags.eval_loss
                             && conj_sum.is_some() == flags.want_conj,
                         "worker {l}: piggybacked telemetry does not match the requested flags"
                     );
+                    ensure!(
+                        reply_codec == codec,
+                        "worker {l}: reply codec {reply_codec:?} != requested {codec:?}"
+                    );
+                    reply_bytes += conn.received - before;
                     parallel_secs = parallel_secs.max(elapsed_secs);
                     replies.push(StepReply {
                         delta,
@@ -358,7 +388,20 @@ impl TcpCluster {
                 other => bail!("worker {l}: expected DeltaReply, got {other:?}"),
             }
         }
+        self.delta_reply_bytes += reply_bytes;
         Ok((replies, parallel_secs))
+    }
+
+    /// One fused round leg, synchronously: issue, then collect.
+    pub fn local_step(
+        &mut self,
+        lambda: f64,
+        b: BroadcastRef<'_>,
+        flags: StepFlags,
+        codec: DeltaCodec,
+    ) -> Result<(Vec<StepReply>, f64)> {
+        self.local_step_issue(lambda, b, flags, codec)?;
+        self.local_step_collect(flags, codec)
     }
 
     /// Run a scalar instrumentation op on every worker — with the fused
@@ -712,6 +755,11 @@ impl WorkerHost {
             WireBroadcast::DenseSet(v) => {
                 ensure!(v.len() == d, "broadcast dimension {} != {d}", v.len());
             }
+            WireBroadcast::Add { delta, .. } => {
+                // The decoder already enforces idx < delta.dim; only the
+                // hosted dimension needs checking here.
+                ensure!(delta.dim() == d, "broadcast dimension {} != {d}", delta.dim());
+            }
         }
         Ok(())
     }
@@ -745,6 +793,7 @@ impl WorkerHost {
                 lambda,
                 broadcast,
                 flags,
+                codec,
             } => {
                 ensure!(
                     lambda.is_finite() && lambda > 0.0,
@@ -797,16 +846,22 @@ impl WorkerHost {
                 // the same machine-local pairwise tree as the eval legs.
                 // dadm-lint: allow(total-decoding) — T == 1 guarantees exactly one sub-solver delta
                 #[allow(clippy::expect_used)]
-                let delta = if threads == 1 {
+                let mut delta = if threads == 1 {
                     deltas.into_iter().next().expect("one sub-solver")
                 } else {
                     tree_allreduce_delta(deltas, &self.weights).0
                 };
+                // Quantize once per machine, at the wire boundary (after
+                // the wire-free sub-merge): the error feedback lives on
+                // the lead sub-solver, exactly where the in-process leg
+                // keeps it (DESIGN.md §13). F64 is the identity.
+                compress_delta(&mut delta, codec, &mut self.subs[0].state.residual);
                 Frame::DeltaReply {
                     delta,
                     elapsed_secs: t0.elapsed().as_secs_f64(),
                     loss_sum: flags.eval_loss.then(|| tree_sum(&losses)),
                     conj_sum: flags.want_conj.then(|| tree_sum(&conjs)),
+                    codec,
                 }
             }
             Frame::Eval { op, broadcast } => {
@@ -908,6 +963,14 @@ fn apply_broadcast_to<R: crate::reg::Regularizer>(
         WireBroadcast::Empty => {}
         WireBroadcast::SparseSet { idx, val } => state.set_v_tilde_sparse_parts(idx, val, reg),
         WireBroadcast::DenseSet(v) => state.set_v_tilde(v, reg),
+        // Compressed Δṽ updates apply as increments: every replica runs
+        // the same f64 adds in the same order, so all replicas stay
+        // bit-identical to the coordinator's `v_image` shadow
+        // (DESIGN.md §13).
+        WireBroadcast::Add { delta, .. } => match delta {
+            Delta::Sparse(s) => state.add_v_tilde_sparse_parts(&s.idx, &s.val, reg),
+            Delta::Dense(v) => state.apply_global(v, reg),
+        },
     }
 }
 
@@ -1043,6 +1106,8 @@ mod tests {
                 sparse_comm: true,
                 local_threads,
                 conj_resum_every: 64,
+                compress: DeltaCodec::F64,
+                overlap: false,
             },
         )
     }
@@ -1136,6 +1201,184 @@ mod tests {
     }
 
     #[test]
+    fn pipelined_issue_collect_matches_serial_pipeline_bit_for_bit() {
+        // Double-buffered rounds over TCP (DESIGN.md §13): two LocalStep
+        // frames outstanding per connection, replies drained FIFO. The
+        // trajectory must be bit-identical to the in-process backend
+        // running the same issue/complete schedule.
+        let spec = test_spec();
+        let data = spec.generate();
+        let part = Partition::balanced(data.n(), 4, 9);
+        let (handle, threads) = loopback(4);
+        handle
+            .with(|c| {
+                c.assign(synthetic_specs(
+                    &spec,
+                    4,
+                    9,
+                    0xDAD_A,
+                    0.25,
+                    WireLoss::SmoothHinge(SmoothHinge::default()),
+                    WireSolver::ProxSdca,
+                    1,
+                ))
+            })
+            .unwrap();
+        let mut serial = build_dadm(&data, &part, Cluster::Serial);
+        let mut tcp = build_dadm(&data, &part, Cluster::Tcp(handle.clone()));
+        serial.resync();
+        tcp.resync();
+        serial.round_issue(false, false);
+        tcp.round_issue(false, false);
+        for round in 0..5 {
+            serial.round_issue(false, false);
+            tcp.round_issue(false, false);
+            serial.round_complete();
+            tcp.round_complete();
+            assert_eq!(serial.w(), tcp.w(), "pipelined w diverged at round {round}");
+            assert_eq!(serial.v(), tcp.v(), "pipelined v diverged at round {round}");
+        }
+        serial.round_complete();
+        tcp.round_complete();
+        assert_eq!(serial.w(), tcp.w());
+        assert_eq!(serial.gap().to_bits(), tcp.gap().to_bits());
+        assert_eq!(
+            serial.barriers(),
+            tcp.barriers(),
+            "overlap barrier schedule diverged across backends"
+        );
+        join_workers(handle, threads);
+    }
+
+    #[test]
+    fn compressed_i16_rounds_match_serial_bit_for_bit() {
+        // Worker-side quantization + error feedback must replicate the
+        // in-process path exactly: same residual evolution, same wire
+        // images, same iterates.
+        let spec = test_spec();
+        let data = spec.generate();
+        let part = Partition::balanced(data.n(), 4, 9);
+        let (handle, threads) = loopback(4);
+        handle
+            .with(|c| {
+                c.assign(synthetic_specs(
+                    &spec,
+                    4,
+                    9,
+                    0xDAD_A,
+                    0.25,
+                    WireLoss::SmoothHinge(SmoothHinge::default()),
+                    WireSolver::ProxSdca,
+                    1,
+                ))
+            })
+            .unwrap();
+        let compressed = |cluster| {
+            Dadm::new(
+                &data,
+                &part,
+                SmoothHinge::default(),
+                ElasticNet::new(0.1),
+                Zero,
+                1e-2,
+                ProxSdca,
+                DadmOptions {
+                    sp: 0.25,
+                    cluster,
+                    sparse_comm: true,
+                    compress: DeltaCodec::I16,
+                    ..Default::default()
+                },
+            )
+        };
+        let mut serial = compressed(Cluster::Serial);
+        let mut tcp = compressed(Cluster::Tcp(handle.clone()));
+        serial.resync();
+        tcp.resync();
+        for round in 0..6 {
+            serial.round();
+            tcp.round();
+            assert_eq!(serial.w(), tcp.w(), "compressed w diverged at round {round}");
+            assert_eq!(serial.v(), tcp.v(), "compressed v diverged at round {round}");
+        }
+        assert_eq!(serial.gap().to_bits(), tcp.gap().to_bits());
+        join_workers(handle, threads);
+    }
+
+    #[test]
+    fn compressed_i16_cuts_delta_reply_bytes_to_a_third() {
+        // The PR's wire-cost gate: on an m=8 loopback workload whose
+        // per-round support densifies under both codecs, the i16
+        // DeltaReply payloads must come in at ≤ 0.3× the exact-f64 run's
+        // (dense entries shrink 8 B → 2 B), with the final gap within
+        // 10× of exact at equal round budget.
+        let spec = SyntheticSpec {
+            name: "i16-gate".into(),
+            n: 320,
+            d: 200,
+            density: 0.15,
+            signal_density: 0.5,
+            noise: 0.1,
+            seed: 0x16,
+        };
+        let data = spec.generate();
+        let part = Partition::balanced(data.n(), 8, 11);
+        let run = |codec: DeltaCodec| {
+            let (handle, threads) = loopback(8);
+            handle
+                .with(|c| {
+                    c.assign(synthetic_specs(
+                        &spec,
+                        8,
+                        11,
+                        0xDAD_A,
+                        0.5,
+                        WireLoss::SmoothHinge(SmoothHinge::default()),
+                        WireSolver::ProxSdca,
+                        1,
+                    ))
+                })
+                .unwrap();
+            let mut dadm = Dadm::new(
+                &data,
+                &part,
+                SmoothHinge::default(),
+                ElasticNet::new(0.1),
+                Zero,
+                1e-2,
+                ProxSdca,
+                DadmOptions {
+                    sp: 0.5,
+                    cluster: Cluster::Tcp(handle.clone()),
+                    sparse_comm: true,
+                    compress: codec,
+                    ..Default::default()
+                },
+            );
+            dadm.resync();
+            for _ in 0..8 {
+                dadm.round();
+            }
+            let bytes = dadm.delta_reply_bytes();
+            let gap = dadm.gap();
+            join_workers(handle, threads);
+            (bytes, gap)
+        };
+        let (bytes_f64, gap_f64) = run(DeltaCodec::F64);
+        let (bytes_i16, gap_i16) = run(DeltaCodec::I16);
+        assert!(bytes_f64 > 0 && bytes_i16 > 0);
+        let ratio = bytes_i16 as f64 / bytes_f64 as f64;
+        assert!(
+            ratio <= 0.3,
+            "i16 DeltaReply bytes {bytes_i16} vs f64 {bytes_f64}: ratio {ratio:.3} > 0.3"
+        );
+        assert!(
+            gap_i16 <= gap_f64 * 10.0,
+            "i16 gap {gap_i16:e} drifted past 10× the exact gap {gap_f64:e}"
+        );
+    }
+
+    #[test]
     fn eval_ops_match_local_computation() {
         let spec = test_spec();
         let data = spec.generate();
@@ -1220,6 +1463,8 @@ mod tests {
                         sparse_comm: false,
                         local_threads: 1,
                         conj_resum_every: 64,
+                        compress: DeltaCodec::F64,
+                        overlap: false,
                     },
                     ..Default::default()
                 },

@@ -14,9 +14,9 @@
 //! | 0   | `Hello`           | W → C     | magic `b"DADM"`, version |
 //! | 1   | `Welcome`         | C → W     | version, worker id, m |
 //! | 2   | `AssignPartition` | C → W     | [`ProblemSpec`] |
-//! | 3   | `LocalStep`       | C → W     | effective λ + fused [`WireBroadcast`] + [`StepFlags`] (v3) |
-//! | 4   | `DeltaReply`      | W → C     | [`Delta`] + elapsed seconds + piggybacked gap sums (v3) |
-//! | 5   | `Broadcast`       | C → W     | [`WireBroadcast`] (value-setting ṽ update) |
+//! | 3   | `LocalStep`       | C → W     | effective λ + fused [`WireBroadcast`] + [`StepFlags`] (v3) + reply codec byte (v4) |
+//! | 4   | `DeltaReply`      | W → C     | [`Delta`] + elapsed seconds + piggybacked gap sums (v3) + codec byte (v4) |
+//! | 5   | `Broadcast`       | C → W     | [`WireBroadcast`] (value-setting or additive (v4) ṽ update) |
 //! | 6   | `SetReg`          | C → W     | [`WireReg`] (Acc-DADM stage swaps) |
 //! | 7   | `Eval`            | C → W     | [`EvalOp`] + fused [`WireBroadcast`] to apply first (v3) |
 //! | 8   | `Scalar`          | W → C     | one `f64` |
@@ -33,6 +33,13 @@
 //! (pinned by `v2_shaped_payloads_still_decode`) even though the
 //! handshake itself requires matching versions.
 //!
+//! v4 adds quantized delta payloads (DESIGN.md §13): [`Delta`] encodings
+//! gain f32 and scaled-i16 kinds, `LocalStep`/`DeltaReply` carry a
+//! trailing [`DeltaCodec`] byte written only for non-default codecs —
+//! exact-f64 frames stay *byte-identical* to their v3 shape — and
+//! [`WireBroadcast`] gains an additive kind whose payload reuses the
+//! self-describing delta encoding (compressed Δṽ updates).
+//!
 //! Decoding is **total**: malformed input — truncated frames, unknown
 //! tags, oversized length prefixes, inconsistent vector lengths,
 //! non-increasing sparse indices, trailing bytes — returns `Err` and
@@ -43,7 +50,7 @@
 use anyhow::{bail, ensure, Context, Result};
 use std::io::{Read, Write};
 
-use crate::comm::sparse::{Delta, SparseDelta};
+use crate::comm::sparse::{i16_level, i16_step, max_abs, Delta, DeltaCodec, SparseDelta};
 use crate::data::synthetic::SyntheticSpec;
 use crate::data::{Dataset, Partition};
 use crate::loss::{Hinge, Logistic, Loss, SmoothHinge, Squared};
@@ -60,7 +67,11 @@ pub const WIRE_MAGIC: [u8; 4] = *b"DADM";
 /// `Eval` carries a fused broadcast, and the `GapReply` frame plus the
 /// `LossSumAtCurrent`/`GapSums` eval ops evaluate against the worker's
 /// own replica so no iterate ships for a gap evaluation.
-pub const WIRE_VERSION: u16 = 3;
+/// v4: compressed deltas (DESIGN.md §13) — quantized f32/scaled-i16
+/// delta kinds (error feedback lives at the sender, not on the wire), a
+/// trailing [`DeltaCodec`] byte on `LocalStep`/`DeltaReply`, and an
+/// additive broadcast kind for compressed Δṽ updates.
+pub const WIRE_VERSION: u16 = 4;
 /// Hard cap on one frame's payload (256 MiB): a corrupt length prefix
 /// must never drive a giant allocation.
 pub const MAX_FRAME_LEN: u32 = 256 << 20;
@@ -170,6 +181,28 @@ impl Enc {
         }
     }
 
+    /// f32-narrowing vector encode (the f32 codec's value array). The
+    /// values are codec *images* — f64s exactly representable in f32 —
+    /// so the narrowing cast is lossless.
+    fn f32s_narrow(&mut self, xs: &[f64]) {
+        self.count(xs.len());
+        self.buf.reserve(xs.len() * 4);
+        for &x in xs {
+            self.buf.extend_from_slice(&(x as f32).to_le_bytes());
+        }
+    }
+
+    /// Scaled-i16 vector encode (the i16 codec's level array). The
+    /// values are codec images `level · step`, so [`i16_level`] recovers
+    /// each level exactly.
+    fn i16s_quant(&mut self, xs: &[f64], step: f64) {
+        self.count(xs.len());
+        self.buf.reserve(xs.len() * 2);
+        for &x in xs {
+            self.buf.extend_from_slice(&i16_level(x, step).to_le_bytes());
+        }
+    }
+
     fn str(&mut self, s: &str) {
         self.count(s.len());
         self.buf.extend_from_slice(s.as_bytes());
@@ -273,6 +306,27 @@ impl<'a> Dec<'a> {
         Ok(bytes
             .chunks_exact(4)
             .map(|c| u32::from_le_bytes(le_array(c)))
+            .collect())
+    }
+
+    /// f32-widening vector decode (the f32 codec's value array).
+    fn f32s_widen(&mut self) -> Result<Vec<f64>> {
+        let n = self.count(4)?;
+        let bytes = self.take(n * 4)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(le_array(c)) as f64)
+            .collect())
+    }
+
+    /// Scaled-i16 vector decode: reconstructs the sender's codec images
+    /// `level · step` (exact — the step is a power of two).
+    fn i16s_dequant(&mut self, step: f64) -> Result<Vec<f64>> {
+        let n = self.count(2)?;
+        let bytes = self.take(n * 2)?;
+        Ok(bytes
+            .chunks_exact(2)
+            .map(|c| i16::from_le_bytes(le_array(c)) as f64 * step)
             .collect())
     }
 
@@ -550,6 +604,16 @@ pub enum WireBroadcast {
     },
     /// Dense replacement of the full `ṽ`.
     DenseSet(Vec<f64>),
+    /// Additive update: the carried delta is *added* onto `ṽ` — the
+    /// compressed-broadcast form, where quantized Δṽ images plus the
+    /// coordinator's error-feedback residual replace the exact value-set
+    /// (DESIGN.md §13). v4.
+    Add {
+        /// The quantized increment; values are codec images.
+        delta: Delta,
+        /// Codec the payload travels under.
+        codec: DeltaCodec,
+    },
 }
 
 /// Borrowed view of a broadcast for zero-copy encoding (the per-round
@@ -567,6 +631,13 @@ pub enum BroadcastRef<'a> {
     },
     /// Dense replacement.
     DenseSet(&'a [f64]),
+    /// Additive update (v4, compressed Δṽ).
+    Add {
+        /// The quantized increment.
+        delta: &'a Delta,
+        /// Codec the values travel under.
+        codec: DeltaCodec,
+    },
 }
 
 impl WireBroadcast {
@@ -577,6 +648,10 @@ impl WireBroadcast {
             WireBroadcast::Empty => BroadcastRef::Empty,
             WireBroadcast::SparseSet { idx, val } => BroadcastRef::SparseSet { idx, val },
             WireBroadcast::DenseSet(v) => BroadcastRef::DenseSet(v),
+            WireBroadcast::Add { delta, codec } => BroadcastRef::Add {
+                delta,
+                codec: *codec,
+            },
         }
     }
 }
@@ -684,6 +759,9 @@ pub enum Frame {
         broadcast: WireBroadcast,
         /// Fused gap-telemetry requests for this round (v3).
         flags: StepFlags,
+        /// Codec the worker must compress this round's `DeltaReply`
+        /// under (v4; trailing byte, absent ⇒ [`DeltaCodec::F64`]).
+        codec: DeltaCodec,
     },
     /// Local-step result.
     DeltaReply {
@@ -697,6 +775,9 @@ pub enum Frame {
         /// Piggybacked post-step running `Σ−φ*(−α)`, when
         /// [`StepFlags::want_conj`] asked for it (v3).
         conj_sum: Option<f64>,
+        /// Codec the delta payload travels under (v4; trailing byte,
+        /// absent ⇒ [`DeltaCodec::F64`], must agree with the delta kind).
+        codec: DeltaCodec,
     },
     /// Standalone ṽ update (resync / observation flush).
     Broadcast(WireBroadcast),
@@ -774,6 +855,10 @@ fn put_broadcast(e: &mut Enc, b: BroadcastRef<'_>) {
             e.u8(2);
             e.f64s(v);
         }
+        BroadcastRef::Add { delta, codec } => {
+            e.u8(3);
+            put_delta(e, delta, codec);
+        }
     }
 }
 
@@ -796,46 +881,144 @@ fn take_broadcast(d: &mut Dec<'_>) -> Result<WireBroadcast> {
             WireBroadcast::SparseSet { idx, val }
         }
         2 => WireBroadcast::DenseSet(d.f64s()?),
+        3 => {
+            let (delta, codec) = take_delta(d)?;
+            WireBroadcast::Add { delta, codec }
+        }
         t => bail!("unknown broadcast kind {t}"),
     })
 }
 
-fn put_delta(e: &mut Enc, delta: &Delta) {
-    match delta {
-        Delta::Dense(v) => {
+/// One-byte wire form of a [`DeltaCodec`] (the v4 trailing codec byte).
+fn codec_byte(codec: DeltaCodec) -> u8 {
+    match codec {
+        DeltaCodec::F64 => 0,
+        DeltaCodec::F32 => 1,
+        DeltaCodec::I16 => 2,
+    }
+}
+
+fn take_codec(b: u8) -> Result<DeltaCodec> {
+    Ok(match b {
+        0 => DeltaCodec::F64,
+        1 => DeltaCodec::F32,
+        2 => DeltaCodec::I16,
+        t => bail!("unknown delta codec {t}"),
+    })
+}
+
+/// Append the v4 trailing codec byte — written only for non-default
+/// codecs, so exact-f64 frames stay byte-identical to their v3 shape.
+fn put_trailing_codec(e: &mut Enc, codec: DeltaCodec) {
+    if codec != DeltaCodec::F64 {
+        e.u8(codec_byte(codec));
+    }
+}
+
+fn put_sparse_header(e: &mut Enc, s: &SparseDelta) {
+    e.u64(s.dim as u64);
+    e.u32s(&s.idx);
+}
+
+/// Encode a delta under `codec`. Kind bytes are codec-describing
+/// (0/1 dense/sparse f64, 2/3 f32, 4/5 scaled i16), so decoding needs no
+/// out-of-band codec. The i16 step is *re-derived* from the image values
+/// ([`i16_step`] of their max magnitude): the quantizer's max-magnitude
+/// carry always lands on a level in `(16383, 32767]`, so this recovers
+/// exactly the step the images were built with — encode → decode →
+/// re-encode is byte-stable without shipping quantizer state.
+fn put_delta(e: &mut Enc, delta: &Delta, codec: DeltaCodec) {
+    match (delta, codec) {
+        (Delta::Dense(v), DeltaCodec::F64) => {
             e.u8(0);
             e.f64s(v);
         }
-        Delta::Sparse(s) => {
+        (Delta::Sparse(s), DeltaCodec::F64) => {
             e.u8(1);
-            e.u64(s.dim as u64);
-            e.u32s(&s.idx);
+            put_sparse_header(e, s);
             e.f64s(&s.val);
+        }
+        (Delta::Dense(v), DeltaCodec::F32) => {
+            e.u8(2);
+            e.f32s_narrow(v);
+        }
+        (Delta::Sparse(s), DeltaCodec::F32) => {
+            e.u8(3);
+            put_sparse_header(e, s);
+            e.f32s_narrow(&s.val);
+        }
+        (Delta::Dense(v), DeltaCodec::I16) => {
+            e.u8(4);
+            let step = i16_step(max_abs(v));
+            e.f64(step);
+            e.i16s_quant(v, step);
+        }
+        (Delta::Sparse(s), DeltaCodec::I16) => {
+            e.u8(5);
+            put_sparse_header(e, s);
+            let step = i16_step(max_abs(&s.val));
+            e.f64(step);
+            e.i16s_quant(&s.val, step);
         }
     }
 }
 
-fn take_delta(d: &mut Dec<'_>) -> Result<Delta> {
+/// Validate a decoded sparse delta's invariants (shared by every sparse
+/// kind): aligned lengths, strictly increasing indices, in-bounds.
+fn finish_sparse(dim: usize, idx: Vec<u32>, val: Vec<f64>) -> Result<Delta> {
+    ensure!(
+        idx.len() == val.len(),
+        "delta idx/val length mismatch: {} vs {}",
+        idx.len(),
+        val.len()
+    );
+    ensure!(
+        strictly_increasing(&idx),
+        "delta indices not strictly increasing"
+    );
+    if let Some(&j) = idx.last() {
+        ensure!((j as usize) < dim, "delta index {j} out of bounds (d = {dim})");
+    }
+    Ok(Delta::Sparse(SparseDelta { dim, idx, val }))
+}
+
+/// Validated i16-codec step: a corrupt step must not poison the
+/// reconstructed images with ∞/NaN.
+fn take_step(d: &mut Dec<'_>) -> Result<f64> {
+    let step = d.f64()?;
+    ensure!(
+        step.is_finite() && step > 0.0,
+        "i16 codec step must be positive and finite, got {step}"
+    );
+    Ok(step)
+}
+
+fn take_delta(d: &mut Dec<'_>) -> Result<(Delta, DeltaCodec)> {
     Ok(match d.u8()? {
-        0 => Delta::Dense(d.f64s()?),
+        0 => (Delta::Dense(d.f64s()?), DeltaCodec::F64),
         1 => {
             let dim = d.u64()? as usize;
             let idx = d.u32s()?;
             let val = d.f64s()?;
-            ensure!(
-                idx.len() == val.len(),
-                "delta idx/val length mismatch: {} vs {}",
-                idx.len(),
-                val.len()
-            );
-            ensure!(
-                strictly_increasing(&idx),
-                "delta indices not strictly increasing"
-            );
-            if let Some(&j) = idx.last() {
-                ensure!((j as usize) < dim, "delta index {j} out of bounds (d = {dim})");
-            }
-            Delta::Sparse(SparseDelta { dim, idx, val })
+            (finish_sparse(dim, idx, val)?, DeltaCodec::F64)
+        }
+        2 => (Delta::Dense(d.f32s_widen()?), DeltaCodec::F32),
+        3 => {
+            let dim = d.u64()? as usize;
+            let idx = d.u32s()?;
+            let val = d.f32s_widen()?;
+            (finish_sparse(dim, idx, val)?, DeltaCodec::F32)
+        }
+        4 => {
+            let step = take_step(d)?;
+            (Delta::Dense(d.i16s_dequant(step)?), DeltaCodec::I16)
+        }
+        5 => {
+            let dim = d.u64()? as usize;
+            let idx = d.u32s()?;
+            let step = take_step(d)?;
+            let val = d.i16s_dequant(step)?;
+            (finish_sparse(dim, idx, val)?, DeltaCodec::I16)
         }
         t => bail!("unknown delta kind {t}"),
     })
@@ -1096,11 +1279,13 @@ pub fn write_local_step<W: Write>(
     lambda: f64,
     b: BroadcastRef<'_>,
     flags: StepFlags,
+    codec: DeltaCodec,
 ) -> Result<usize> {
     let mut e = Enc::default();
     e.f64(lambda);
     put_broadcast(&mut e, b);
     e.u8(flags.to_byte());
+    put_trailing_codec(&mut e, codec);
     write_framed(w, TAG_LOCAL_STEP, &e.finish()?)
 }
 
@@ -1150,10 +1335,12 @@ impl Frame {
                 lambda,
                 broadcast,
                 flags,
+                codec,
             } => {
                 e.f64(*lambda);
                 put_broadcast(&mut e, broadcast.to_ref());
                 e.u8(flags.to_byte());
+                put_trailing_codec(&mut e, *codec);
                 TAG_LOCAL_STEP
             }
             Frame::DeltaReply {
@@ -1161,8 +1348,9 @@ impl Frame {
                 elapsed_secs,
                 loss_sum,
                 conj_sum,
+                codec,
             } => {
-                put_delta(&mut e, delta);
+                put_delta(&mut e, delta, *codec);
                 e.f64(*elapsed_secs);
                 let flags = (loss_sum.is_some() as u8) * STEP_FLAG_EVAL_LOSS
                     | (conj_sum.is_some() as u8) * STEP_FLAG_WANT_CONJ;
@@ -1173,6 +1361,7 @@ impl Frame {
                 if let Some(l) = loss_sum {
                     e.f64(*l);
                 }
+                put_trailing_codec(&mut e, *codec);
                 TAG_DELTA_REPLY
             }
             Frame::Broadcast(b) => {
@@ -1261,22 +1450,30 @@ impl Frame {
             TAG_LOCAL_STEP => {
                 let lambda = d.f64()?;
                 let broadcast = take_broadcast(&mut d)?;
-                // v2 payloads end here; v3 appends the flags byte.
+                // v2 payloads end here; v3 appends the flags byte, v4
+                // the codec byte.
                 let flags = if d.buf.is_empty() {
                     StepFlags::default()
                 } else {
                     StepFlags::from_byte(d.u8()?)?
                 };
+                let codec = if d.buf.is_empty() {
+                    DeltaCodec::F64
+                } else {
+                    take_codec(d.u8()?)?
+                };
                 Frame::LocalStep {
                     lambda,
                     broadcast,
                     flags,
+                    codec,
                 }
             }
             TAG_DELTA_REPLY => {
-                let delta = take_delta(&mut d)?;
+                let (delta, kind_codec) = take_delta(&mut d)?;
                 let elapsed_secs = d.f64()?;
-                // v2 payloads end here; v3 appends flags + the scalars.
+                // v2 payloads end here; v3 appends flags + the scalars,
+                // v4 the codec byte.
                 let (loss_sum, conj_sum) = if d.buf.is_empty() {
                     (None, None)
                 } else {
@@ -1285,11 +1482,26 @@ impl Frame {
                     let loss = if flags.eval_loss { Some(d.f64()?) } else { None };
                     (loss, conj)
                 };
+                // A trailing codec byte must agree with the (already
+                // codec-describing) delta kind; when absent, the kind
+                // alone carries the codec — v3-shaped payloads use f64
+                // kinds, so they decode unchanged.
+                let codec = if d.buf.is_empty() {
+                    kind_codec
+                } else {
+                    let c = take_codec(d.u8()?)?;
+                    ensure!(
+                        c == kind_codec,
+                        "delta codec byte says {c:?} but the delta kind is {kind_codec:?}"
+                    );
+                    c
+                };
                 Frame::DeltaReply {
                     delta,
                     elapsed_secs,
                     loss_sum,
                     conj_sum,
+                    codec,
                 }
             }
             TAG_BROADCAST => Frame::Broadcast(take_broadcast(&mut d)?),
@@ -1344,6 +1556,7 @@ impl Frame {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comm::sparse::codec_image;
     use crate::testing::prop::{for_each_case, Gen};
     use std::io::Cursor;
 
@@ -1364,8 +1577,30 @@ mod tests {
         decoded
     }
 
-    fn gen_broadcast(g: &mut Gen) -> WireBroadcast {
+    fn gen_codec(g: &mut Gen) -> DeltaCodec {
         match g.usize_in(0, 3) {
+            0 => DeltaCodec::F64,
+            1 => DeltaCodec::F32,
+            _ => DeltaCodec::I16,
+        }
+    }
+
+    /// Replace a delta's values with their codec images — what a real
+    /// (error-feedback) sender transmits — so compressed roundtrips are
+    /// byte-exact.
+    fn quantize_values(delta: &mut Delta, codec: DeltaCodec) {
+        let vals = match delta {
+            Delta::Dense(v) => v,
+            Delta::Sparse(s) => &mut s.val,
+        };
+        let step = i16_step(max_abs(vals));
+        for v in vals.iter_mut() {
+            *v = codec_image(codec, *v, step);
+        }
+    }
+
+    fn gen_broadcast(g: &mut Gen) -> WireBroadcast {
+        match g.usize_in(0, 4) {
             0 => WireBroadcast::Empty,
             1 => {
                 let n = g.usize_in(0, 12);
@@ -1375,7 +1610,13 @@ mod tests {
                 let val = g.vec_f64(idx.len(), -5.0, 5.0);
                 WireBroadcast::SparseSet { idx, val }
             }
-            _ => WireBroadcast::DenseSet(g.vec_f64(g.usize_in(0, 16), -5.0, 5.0)),
+            2 => WireBroadcast::DenseSet(g.vec_f64(g.usize_in(0, 16), -5.0, 5.0)),
+            _ => {
+                let codec = gen_codec(g);
+                let mut delta = gen_delta(g);
+                quantize_values(&mut delta, codec);
+                WireBroadcast::Add { delta, codec }
+            }
         }
     }
 
@@ -1482,13 +1723,20 @@ mod tests {
                     lambda: g.f64_log_in(1e-9, 1.0),
                     broadcast: gen_broadcast(g),
                     flags: gen_flags(g),
+                    codec: gen_codec(g),
                 },
-                4 => Frame::DeltaReply {
-                    delta: gen_delta(g),
-                    elapsed_secs: g.f64_in(0.0, 1.0),
-                    loss_sum: g.bool(0.5).then(|| g.f64_in(-10.0, 1e4)),
-                    conj_sum: g.bool(0.5).then(|| g.f64_in(-1e4, 1e4)),
-                },
+                4 => {
+                    let codec = gen_codec(g);
+                    let mut delta = gen_delta(g);
+                    quantize_values(&mut delta, codec);
+                    Frame::DeltaReply {
+                        delta,
+                        elapsed_secs: g.f64_in(0.0, 1.0),
+                        loss_sum: g.bool(0.5).then(|| g.f64_in(-10.0, 1e4)),
+                        conj_sum: g.bool(0.5).then(|| g.f64_in(-1e4, 1e4)),
+                        codec,
+                    }
+                }
                 5 => Frame::Broadcast(gen_broadcast(g)),
                 6 => Frame::SetReg(if g.bool(0.5) {
                     WireReg::ElasticNet(ElasticNet::new(g.f64_in(0.0, 2.0)))
@@ -1532,8 +1780,14 @@ mod tests {
         // A v2 LocalStep payload ends after the broadcast (no flags
         // byte); v3 decoders must read it as all-false flags.
         let mut e = Vec::new();
-        write_local_step(&mut e, 1e-3, BroadcastRef::DenseSet(&[1.0, 2.0]), StepFlags::default())
-            .unwrap();
+        write_local_step(
+            &mut e,
+            1e-3,
+            BroadcastRef::DenseSet(&[1.0, 2.0]),
+            StepFlags::default(),
+            DeltaCodec::F64,
+        )
+        .unwrap();
         // Strip the trailing flags byte and fix the length prefix.
         let mut v2 = e[..e.len() - 1].to_vec();
         let len = (v2.len() - FRAME_HEADER_BYTES) as u32;
@@ -1550,6 +1804,7 @@ mod tests {
             elapsed_secs: 0.25,
             loss_sum: None,
             conj_sum: None,
+            codec: DeltaCodec::F64,
         });
         let mut v2 = full[..full.len() - 1].to_vec(); // drop the flags byte
         let len = (v2.len() - FRAME_HEADER_BYTES) as u32;
@@ -1589,6 +1844,7 @@ mod tests {
             elapsed_secs: 0.5,
             loss_sum: Some(3.5000000000000004),
             conj_sum: Some(-2.25),
+            codec: DeltaCodec::F64,
         };
         match roundtrip(&f) {
             Frame::DeltaReply {
@@ -1604,6 +1860,184 @@ mod tests {
         let flag_pos = bytes.len() - 17; // flags byte precedes the two f64s
         bytes[flag_pos] |= 1 << 7;
         assert!(Frame::read_from(&mut Cursor::new(&bytes)).is_err());
+    }
+
+    #[test]
+    fn compressed_delta_replies_roundtrip_and_shrink() {
+        let dim = 1000usize;
+        let idx: Vec<u32> = (0..200u32).map(|j| j * 5).collect();
+        let raw: Vec<f64> = (0..200).map(|i| (i as f64 - 100.0) * 0.01).collect();
+        let step = i16_step(max_abs(&raw));
+        let mut lens = Vec::new();
+        for codec in [DeltaCodec::F64, DeltaCodec::F32, DeltaCodec::I16] {
+            let val: Vec<f64> = raw.iter().map(|&v| codec_image(codec, v, step)).collect();
+            let f = Frame::DeltaReply {
+                delta: Delta::Sparse(SparseDelta {
+                    dim,
+                    idx: idx.clone(),
+                    val: val.clone(),
+                }),
+                elapsed_secs: 0.25,
+                loss_sum: None,
+                conj_sum: None,
+                codec,
+            };
+            // Roundtrip (which also pins re-encode byte-stability — the
+            // i16 step re-derivation from images must be canonical) and
+            // check every image survives the wire bit for bit.
+            match roundtrip(&f) {
+                Frame::DeltaReply {
+                    delta: Delta::Sparse(s),
+                    codec: c,
+                    ..
+                } => {
+                    assert_eq!(c, codec);
+                    assert_eq!(s.idx, idx);
+                    let got: Vec<u64> = s.val.iter().map(|v| v.to_bits()).collect();
+                    let want: Vec<u64> = val.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(got, want, "{codec:?} images must survive bit for bit");
+                }
+                other => panic!("expected sparse DeltaReply, got {other:?}"),
+            }
+            lens.push(encode(&f).len());
+        }
+        // Entry widths 12 / 8 / 6 bytes ⇒ strictly shrinking frames.
+        assert!(
+            lens[2] < lens[1] && lens[1] < lens[0],
+            "frame sizes must shrink with the codec: {lens:?}"
+        );
+        // At nnz = 200 the i16 frame is comfortably near its 6/12
+        // asymptote; allow slack for headers, step, and codec byte.
+        assert!(
+            lens[2] * 10 <= lens[0] * 6,
+            "i16 frame {} not ≤ 0.6× f64 frame {}",
+            lens[2],
+            lens[0]
+        );
+    }
+
+    #[test]
+    fn v3_shaped_payloads_decode_as_exact_f64() {
+        // An exact-f64 v4 frame writes *no* codec byte: its payload is
+        // byte-identical to the v3 shape. Pin the exact length —
+        // lambda (8) + dense-set broadcast (1 + 4 + 16) + flags (1).
+        let mut ls = Vec::new();
+        write_local_step(
+            &mut ls,
+            1e-3,
+            BroadcastRef::DenseSet(&[1.0, 2.0]),
+            StepFlags::default(),
+            DeltaCodec::F64,
+        )
+        .unwrap();
+        assert_eq!(ls.len(), FRAME_HEADER_BYTES + 8 + 21 + 1);
+
+        // A compressed LocalStep carries exactly one extra byte...
+        let mut ls_i16 = Vec::new();
+        write_local_step(
+            &mut ls_i16,
+            1e-3,
+            BroadcastRef::DenseSet(&[1.0, 2.0]),
+            StepFlags::default(),
+            DeltaCodec::I16,
+        )
+        .unwrap();
+        assert_eq!(ls_i16.len(), ls.len() + 1);
+        // ...and stripping it yields a v3-shaped payload that decodes
+        // with the default codec.
+        let mut v3 = ls_i16[..ls_i16.len() - 1].to_vec();
+        let len = (v3.len() - FRAME_HEADER_BYTES) as u32;
+        v3[1..5].copy_from_slice(&len.to_le_bytes());
+        match Frame::read_from(&mut Cursor::new(&v3)).unwrap().0 {
+            Frame::LocalStep { codec, .. } => assert_eq!(codec, DeltaCodec::F64),
+            other => panic!("expected LocalStep, got {other:?}"),
+        }
+
+        // A compressed DeltaReply stripped of its trailing codec byte
+        // still knows its codec — the delta kind byte carries it.
+        let step = i16_step(3.0);
+        let full = encode(&Frame::DeltaReply {
+            delta: Delta::Dense(vec![codec_image(DeltaCodec::I16, 3.0, step)]),
+            elapsed_secs: 0.5,
+            loss_sum: None,
+            conj_sum: None,
+            codec: DeltaCodec::I16,
+        });
+        let mut v3 = full[..full.len() - 1].to_vec();
+        let len = (v3.len() - FRAME_HEADER_BYTES) as u32;
+        v3[1..5].copy_from_slice(&len.to_le_bytes());
+        match Frame::read_from(&mut Cursor::new(&v3)).unwrap().0 {
+            Frame::DeltaReply { codec, .. } => assert_eq!(codec, DeltaCodec::I16),
+            other => panic!("expected DeltaReply, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn codec_kind_mismatch_and_bad_step_are_err() {
+        let step = i16_step(1.0);
+        let f = Frame::DeltaReply {
+            delta: Delta::Dense(vec![codec_image(DeltaCodec::I16, 1.0, step)]),
+            elapsed_secs: 0.5,
+            loss_sum: None,
+            conj_sum: None,
+            codec: DeltaCodec::I16,
+        };
+        let mut bytes = encode(&f);
+        let last = bytes.len() - 1;
+        bytes[last] = 1; // trailing byte claims f32 over an i16-kind delta
+        assert!(Frame::read_from(&mut Cursor::new(&bytes)).is_err());
+        bytes[last] = 9; // unknown codec byte
+        assert!(Frame::read_from(&mut Cursor::new(&bytes)).is_err());
+
+        // A non-finite / non-positive i16 step is rejected before any
+        // image is reconstructed.
+        for bad in [0.0f64, -1.0, f64::NAN, f64::INFINITY] {
+            let mut payload = vec![4u8]; // dense-i16 delta kind
+            payload.extend_from_slice(&bad.to_le_bytes());
+            payload.extend_from_slice(&1u32.to_le_bytes());
+            payload.extend_from_slice(&5i16.to_le_bytes());
+            payload.extend_from_slice(&0.5f64.to_le_bytes()); // elapsed
+            payload.push(0); // flags
+            payload.push(2); // codec = i16
+            let mut frame = vec![TAG_DELTA_REPLY];
+            frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+            frame.extend_from_slice(&payload);
+            assert!(
+                Frame::read_from(&mut Cursor::new(&frame)).is_err(),
+                "step {bad} must be a decode error"
+            );
+        }
+    }
+
+    #[test]
+    fn add_broadcast_roundtrips_images_bitwise() {
+        let raw = [0.5, -0.25, 1.0];
+        let step = i16_step(max_abs(&raw));
+        let val: Vec<f64> = raw
+            .iter()
+            .map(|&v| codec_image(DeltaCodec::I16, v, step))
+            .collect();
+        let f = Frame::Broadcast(WireBroadcast::Add {
+            delta: Delta::Sparse(SparseDelta {
+                dim: 10,
+                idx: vec![0, 3, 7],
+                val: val.clone(),
+            }),
+            codec: DeltaCodec::I16,
+        });
+        match roundtrip(&f) {
+            Frame::Broadcast(WireBroadcast::Add {
+                delta: Delta::Sparse(s),
+                codec,
+            }) => {
+                assert_eq!(codec, DeltaCodec::I16);
+                assert_eq!(s.idx, vec![0, 3, 7]);
+                let got: Vec<u64> = s.val.iter().map(|v| v.to_bits()).collect();
+                let want: Vec<u64> = val.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(got, want, "add images must survive the wire bit for bit");
+            }
+            other => panic!("expected Add broadcast, got {other:?}"),
+        }
     }
 
     #[test]
@@ -1624,6 +2058,7 @@ mod tests {
                 elapsed_secs: 0.25,
                 loss_sum: None,
                 conj_sum: Some(1.5),
+                codec: DeltaCodec::F64,
             };
             roundtrip(&f);
         }
@@ -1645,6 +2080,7 @@ mod tests {
                 val: val.clone(),
             },
             flags,
+            codec: DeltaCodec::F64,
         };
         let mut borrowed = Vec::new();
         write_local_step(
@@ -1655,6 +2091,43 @@ mod tests {
                 val: &val,
             },
             flags,
+            DeltaCodec::F64,
+        )
+        .unwrap();
+        assert_eq!(encode(&owned), borrowed);
+
+        // The Add broadcast's borrowed form matches the owned form too
+        // (the compressed hot path sends straight from the assembled
+        // quantized delta).
+        let step = i16_step(max_abs(&val));
+        let qval: Vec<f64> = val
+            .iter()
+            .map(|&v| codec_image(DeltaCodec::I16, v, step))
+            .collect();
+        let add = Delta::Sparse(SparseDelta {
+            dim: 16,
+            idx: idx.clone(),
+            val: qval,
+        });
+        let owned = Frame::LocalStep {
+            lambda: 1e-3,
+            broadcast: WireBroadcast::Add {
+                delta: add.clone(),
+                codec: DeltaCodec::I16,
+            },
+            flags,
+            codec: DeltaCodec::I16,
+        };
+        let mut borrowed = Vec::new();
+        write_local_step(
+            &mut borrowed,
+            1e-3,
+            BroadcastRef::Add {
+                delta: &add,
+                codec: DeltaCodec::I16,
+            },
+            flags,
+            DeltaCodec::I16,
         )
         .unwrap();
         assert_eq!(encode(&owned), borrowed);
@@ -1688,11 +2161,15 @@ mod tests {
     #[test]
     fn prop_truncation_is_err_never_panic() {
         for_each_case(0x7A61, 80, |g| {
+            let codec = gen_codec(g);
+            let mut delta = gen_delta(g);
+            quantize_values(&mut delta, codec);
             let frame = Frame::DeltaReply {
-                delta: gen_delta(g),
+                delta,
                 elapsed_secs: 0.1,
                 loss_sum: g.bool(0.5).then_some(2.0),
                 conj_sum: g.bool(0.5).then_some(-1.0),
+                codec,
             };
             let bytes = encode(&frame);
             let cut = g.usize_in(0, bytes.len());

@@ -6,6 +6,7 @@
 //! method — parsed from CLI `--key value` pairs or a `key = value` file,
 //! with validation and defaults matching §10.
 
+use crate::comm::sparse::DeltaCodec;
 use crate::loss::LossKind;
 use crate::solver::SolverKind;
 use anyhow::{bail, Context, Result};
@@ -127,6 +128,16 @@ pub struct ExperimentConfig {
     /// Charge communication for the actual sparse Δv/Δṽ messages instead
     /// of dense length-d vectors (see `DadmOptions::sparse_comm`).
     pub sparse_comm: bool,
+    /// Wire codec for the Δv/Δṽ payloads: exact `f64` (the default),
+    /// `f32`, or scaled `i16` — the lossy codecs keep their quantization
+    /// error in per-sender residuals and feed it back into the next
+    /// round's delta (DESIGN.md §13; see `DadmOptions::compress`).
+    pub compress: DeltaCodec,
+    /// Double-buffered rounds: issue round `t+1`'s fused local-step
+    /// dispatch while round `t`'s reduce/global step completes, at one
+    /// round of bounded broadcast staleness (DADM only; see
+    /// `DadmOptions::overlap`).
+    pub overlap: bool,
     /// RNG seed.
     pub seed: u64,
     /// Momentum ν = 0 (paper's practical choice) vs theory.
@@ -160,6 +171,8 @@ impl Default for ExperimentConfig {
             checkpoint_every: 10,
             resume: None,
             sparse_comm: false,
+            compress: DeltaCodec::F64,
+            overlap: false,
             seed: 42,
             nu_theory: false,
             comm_alpha: 100e-6,
@@ -268,6 +281,17 @@ impl ExperimentConfig {
                 other => bail!("sparse-comm must be true or false, got `{other}`"),
             };
         }
+        if let Some(v) = take("compress") {
+            cfg.compress = DeltaCodec::parse(&v)
+                .with_context(|| format!("compress must be f64, f32 or i16, got `{v}`"))?;
+        }
+        if let Some(v) = take("overlap") {
+            cfg.overlap = match v.as_str() {
+                "true" | "1" | "on" => true,
+                "false" | "0" | "off" => false,
+                other => bail!("overlap must be true or false, got `{other}`"),
+            };
+        }
         if let Some(v) = take("seed") {
             cfg.seed = v.parse().context("seed")?;
         }
@@ -309,6 +333,19 @@ impl ExperimentConfig {
             "checkpoint-every must be ≥ 1, got {}",
             self.checkpoint_every
         );
+        if self.overlap {
+            anyhow::ensure!(
+                self.method == Method::Dadm,
+                "overlap (double-buffered rounds) is supported for method=dadm only"
+            );
+        }
+        if self.compress != DeltaCodec::F64 {
+            anyhow::ensure!(
+                self.method != Method::Owlqn,
+                "compress applies to the dual methods' Δv exchange (dadm/acc-dadm); \
+                 OWL-QN has no delta wire path"
+            );
+        }
         if self.checkpoint.is_some() || self.resume.is_some() {
             anyhow::ensure!(
                 self.method == Method::Dadm,
@@ -410,6 +447,30 @@ mod tests {
         let c = ExperimentConfig::from_file_body("sparse-comm = off\n").unwrap();
         assert!(!c.sparse_comm);
         assert!(ExperimentConfig::from_file_body("sparse-comm = maybe\n").is_err());
+    }
+
+    #[test]
+    fn parses_compress_codec() {
+        assert_eq!(ExperimentConfig::default().compress, DeltaCodec::F64);
+        let c = ExperimentConfig::from_file_body("method = dadm\ncompress = i16\n").unwrap();
+        assert_eq!(c.compress, DeltaCodec::I16);
+        let c = ExperimentConfig::from_file_body("method = acc\ncompress = f32\n").unwrap();
+        assert_eq!(c.compress, DeltaCodec::F32);
+        assert!(ExperimentConfig::from_file_body("compress = i8\n").is_err());
+        // OWL-QN has no delta wire path to compress.
+        assert!(ExperimentConfig::from_file_body("method = owlqn\ncompress = i16\n").is_err());
+    }
+
+    #[test]
+    fn parses_overlap_flag() {
+        assert!(!ExperimentConfig::default().overlap);
+        let c = ExperimentConfig::from_file_body("method = dadm\noverlap = true\n").unwrap();
+        assert!(c.overlap);
+        let c = ExperimentConfig::from_file_body("method = dadm\noverlap = off\n").unwrap();
+        assert!(!c.overlap);
+        assert!(ExperimentConfig::from_file_body("method = dadm\noverlap = maybe\n").is_err());
+        // Double-buffered rounds are a plain-DADM engine mode.
+        assert!(ExperimentConfig::from_file_body("method = acc\noverlap = true\n").is_err());
     }
 
     #[test]

@@ -13,13 +13,18 @@
 //! per-machine running dual sums `Σ−φ*(−α_i)` (DESIGN.md §11) — they
 //! are incrementally maintained solver state, so a resumed run that
 //! merely recomputed them exactly would drift off the uninterrupted
-//! gap trace by ulps. v1/v2 files still load; v1 restarts the RNG
-//! streams, and both mark the running sums stale (rebuilt exactly on
-//! the next telemetry read).
+//! gap trace by ulps. The v4 format adds the quantized-delta error
+//! feedback of DESIGN.md §13: the per-machine wire residuals and the
+//! coordinator's broadcast image `W` (the bitwise shadow of the worker
+//! replicas' `ṽ`) — both live solver state under `--compress`, so a
+//! bit-parity resume must carry them. v1–v3 files still load; v1
+//! restarts the RNG streams, v1/v2 mark the running sums stale
+//! (rebuilt exactly on the next telemetry read), and v1–v3 imply no
+//! compression state (residuals restart at zero).
 //!
 //! Format:
 //! ```text
-//! dadm-checkpoint v3
+//! dadm-checkpoint v4
 //! lambda <float>
 //! rounds <int>
 //! passes <float>
@@ -27,8 +32,11 @@
 //! v <d> <float>*d
 //! alpha <l> <n_l> <float>*n_l        (one line per machine)
 //! rng <l> <u64>*4                    (one line per machine; v2+)
-//! conj <l> <float>                   (one line per machine; v3, only
+//! conj <l> <float>                   (one line per machine; v3+, only
 //!                                     when telemetry was armed)
+//! residual <l> <d> <float>*d         (one line per machine; v4, only
+//!                                     under a non-exact codec)
+//! vimage <d> <float>*d               (v4, only under a non-exact codec)
 //! ```
 //!
 //! Checkpoints are written by the engine's snapshot hook
@@ -60,12 +68,20 @@ pub struct Checkpoint {
     /// files, or when gap telemetry was never armed: the sums are
     /// rebuilt exactly on the next read).
     pub conj: Option<Vec<f64>>,
+    /// Per-machine quantization residuals of the error-feedback wire
+    /// codec (DESIGN.md §13). `None` in v1–v3 files and whenever the
+    /// run used the exact `f64` codec.
+    pub residual: Option<Vec<Vec<f64>>>,
+    /// The coordinator's broadcast image `W` — the bitwise shadow of
+    /// the worker replicas' `ṽ` under a lossy codec. `None` exactly
+    /// when `residual` is.
+    pub v_image: Option<Vec<f64>>,
 }
 
 impl Checkpoint {
-    /// Serialize to a writer (always the v3 format).
+    /// Serialize to a writer (always the v4 format).
     pub fn save<W: Write>(&self, mut w: W) -> Result<()> {
-        writeln!(w, "dadm-checkpoint v3")?;
+        writeln!(w, "dadm-checkpoint v4")?;
         writeln!(w, "lambda {:e}", self.lambda)?;
         writeln!(w, "rounds {}", self.rounds)?;
         writeln!(w, "passes {:e}", self.passes)?;
@@ -92,15 +108,32 @@ impl Checkpoint {
                 writeln!(w, "conj {l} {c:e}")?;
             }
         }
+        if let Some(residual) = &self.residual {
+            for (l, r) in residual.iter().enumerate() {
+                write!(w, "residual {l} {}", r.len())?;
+                for x in r {
+                    write!(w, " {x:e}")?;
+                }
+                writeln!(w)?;
+            }
+        }
+        if let Some(img) = &self.v_image {
+            write!(w, "vimage {}", img.len())?;
+            for x in img {
+                write!(w, " {x:e}")?;
+            }
+            writeln!(w)?;
+        }
         Ok(())
     }
 
-    /// Parse from a reader (v1, v2 and v3).
+    /// Parse from a reader (v1 through v4).
     pub fn load<R: BufRead>(r: R) -> Result<Self> {
         let mut lines = r.lines();
         let header = lines.next().context("empty checkpoint")??;
         match header.trim() {
-            "dadm-checkpoint v1" | "dadm-checkpoint v2" | "dadm-checkpoint v3" => {}
+            "dadm-checkpoint v1" | "dadm-checkpoint v2" | "dadm-checkpoint v3"
+            | "dadm-checkpoint v4" => {}
             other => bail!("unknown checkpoint header `{other}`"),
         }
         let mut lambda = None;
@@ -111,6 +144,8 @@ impl Checkpoint {
         let mut alpha: Vec<(usize, Vec<f64>)> = vec![];
         let mut rng: Vec<(usize, [u64; 4])> = vec![];
         let mut conj: Vec<(usize, f64)> = vec![];
+        let mut residual: Vec<(usize, Vec<f64>)> = vec![];
+        let mut v_image: Option<Vec<f64>> = None;
         for line in lines {
             let line = line?;
             let mut toks = line.split_ascii_whitespace();
@@ -164,6 +199,23 @@ impl Checkpoint {
                     let c: f64 = toks.next().context("conj value")?.parse()?;
                     conj.push((l, c));
                 }
+                Some("residual") => {
+                    let l: usize = toks.next().context("machine id")?.parse()?;
+                    let d: usize = toks.next().context("residual length")?.parse()?;
+                    let vals: Vec<f64> = toks
+                        .map(|t| t.parse::<f64>().context("residual entry"))
+                        .collect::<Result<_>>()?;
+                    anyhow::ensure!(vals.len() == d, "residual[{l}] length mismatch");
+                    residual.push((l, vals));
+                }
+                Some("vimage") => {
+                    let d: usize = toks.next().context("vimage length")?.parse()?;
+                    let vals: Vec<f64> = toks
+                        .map(|t| t.parse::<f64>().context("vimage entry"))
+                        .collect::<Result<_>>()?;
+                    anyhow::ensure!(vals.len() == d, "vimage length mismatch");
+                    v_image = Some(vals);
+                }
                 Some(other) => bail!("unknown checkpoint record `{other}`"),
                 None => continue,
             }
@@ -206,6 +258,24 @@ impl Checkpoint {
             }
             Some(conj.into_iter().map(|(_, c)| c).collect())
         };
+        let residual = if residual.is_empty() {
+            None
+        } else {
+            anyhow::ensure!(
+                residual.len() == machines,
+                "expected {machines} residual records, found {}",
+                residual.len()
+            );
+            residual.sort_by_key(|(l, _)| *l);
+            for (want, (got, _)) in residual.iter().enumerate() {
+                anyhow::ensure!(*got == want, "missing residual record for machine {want}");
+            }
+            Some(residual.into_iter().map(|(_, r)| r).collect::<Vec<_>>())
+        };
+        anyhow::ensure!(
+            residual.is_some() == v_image.is_some(),
+            "residual and vimage records must appear together"
+        );
         Ok(Checkpoint {
             lambda: lambda.context("missing lambda record")?,
             rounds,
@@ -214,6 +284,8 @@ impl Checkpoint {
             alpha: alpha.into_iter().map(|(_, a)| a).collect(),
             rng,
             conj,
+            residual,
+            v_image,
         })
     }
 
@@ -245,6 +317,16 @@ mod tests {
             alpha: vec![vec![1.0, -0.5], vec![0.0, 0.125, 3.0]],
             rng: Some(vec![[1, 2, 3, 4], [u64::MAX, 7, 0, 9]]),
             conj: Some(vec![-1.2500000000000002, 0.75]),
+            residual: None,
+            v_image: None,
+        }
+    }
+
+    fn sample_compressed() -> Checkpoint {
+        Checkpoint {
+            residual: Some(vec![vec![1e-9, -2.5e-17, 0.0], vec![]]),
+            v_image: Some(vec![0.25, -1.5e-8, 0.0]),
+            ..sample()
         }
     }
 
@@ -255,6 +337,53 @@ mod tests {
         ck.save(&mut buf).unwrap();
         let back = Checkpoint::load(std::io::Cursor::new(buf)).unwrap();
         assert_eq!(ck, back); // bit-exact through `{:e}` printing
+    }
+
+    #[test]
+    fn roundtrip_exact_with_compression_state() {
+        let ck = sample_compressed();
+        let mut buf = Vec::new();
+        ck.save(&mut buf).unwrap();
+        let text = String::from_utf8(buf.clone()).unwrap();
+        assert!(text.starts_with("dadm-checkpoint v4\n"));
+        assert!(text.contains("\nresidual 0 3 "));
+        assert!(text.contains("\nresidual 1 0\n"), "empty residuals still recorded");
+        assert!(text.contains("\nvimage 3 "));
+        let back = Checkpoint::load(std::io::Cursor::new(buf)).unwrap();
+        assert_eq!(ck, back);
+    }
+
+    #[test]
+    fn loads_v3_shaped_body_without_compression_state() {
+        // A v3-era body (no residual/vimage records) under either header
+        // loads with the compression state absent — lossy-codec state
+        // restarts at zero on restore.
+        for header in ["dadm-checkpoint v3", "dadm-checkpoint v4"] {
+            let text = format!(
+                "{header}\nlambda 1e-6\nrounds 3\npasses 0.6\nmachines 1\n\
+                 v 1 0.5\nalpha 0 1 1.0\nrng 0 1 2 3 4\nconj 0 0.25\n"
+            );
+            let ck = Checkpoint::load(std::io::Cursor::new(text)).unwrap();
+            assert!(ck.residual.is_none());
+            assert!(ck.v_image.is_none());
+            assert!(ck.conj.is_some());
+        }
+    }
+
+    #[test]
+    fn rejects_partial_residual_records() {
+        let text = "dadm-checkpoint v4\nlambda 1e-6\nmachines 2\nv 1 0.5\n\
+                    alpha 0 1 1.0\nalpha 1 1 2.0\nresidual 0 1 0.25\nvimage 1 0.5\n";
+        let err = Checkpoint::load(std::io::Cursor::new(text)).unwrap_err();
+        assert!(format!("{err:#}").contains("residual records"));
+    }
+
+    #[test]
+    fn rejects_residual_without_vimage() {
+        let text = "dadm-checkpoint v4\nlambda 1e-6\nmachines 1\nv 1 0.5\n\
+                    alpha 0 1 1.0\nresidual 0 1 0.25\n";
+        let err = Checkpoint::load(std::io::Cursor::new(text)).unwrap_err();
+        assert!(format!("{err:#}").contains("must appear together"));
     }
 
     #[test]

@@ -48,8 +48,12 @@
 //! over the shared [`Driver`].
 
 use crate::comm::allreduce::tree_sum;
-use crate::comm::sparse::{should_densify, sparse_message_elems, tree_allreduce_delta};
-use crate::comm::wire::{BroadcastRef, EvalOp};
+use crate::comm::sparse::{
+    codec_image, compress_delta, i16_step, max_abs, should_densify, should_densify_with,
+    sparse_message_elems, sparse_message_elems_with, tree_allreduce_delta, Delta, DeltaCodec,
+    SparseDelta, DENSE_ENTRY_BYTES,
+};
+use crate::comm::wire::{BroadcastRef, EvalOp, StepFlags};
 use crate::comm::{run_subgroup, Cluster, CostModel};
 use crate::data::{Dataset, Partition};
 use crate::loss::Loss;
@@ -105,6 +109,21 @@ pub struct DadmOptions {
     /// counter, so every backend — and a checkpoint-resumed run — resums
     /// at the same rounds (bit parity).
     pub conj_resum_every: usize,
+    /// Per-value codec for the cross-machine delta messages
+    /// (DESIGN.md §13): each machine quantizes its Δv reply at the wire
+    /// boundary and the coordinator quantizes the Δṽ broadcast, both
+    /// with error feedback — the quantization error is carried in a
+    /// residual and re-sent in later rounds instead of being dropped, so
+    /// convergence is preserved. [`DeltaCodec::F64`] (the default) is
+    /// exact and bit-identical to the uncompressed pipeline.
+    pub compress: DeltaCodec,
+    /// Double-buffered rounds (DESIGN.md §13): the engine issues round
+    /// `t+1`'s fused local-step dispatch before completing round `t`'s
+    /// reduce/global step, hiding the coordinator leg behind worker
+    /// compute at the price of one round of staleness on the broadcast
+    /// iterate. Opt-in; checkpoint snapshots are disabled while
+    /// overlapping (the pipeline holds un-reduced rounds).
+    pub overlap: bool,
 }
 
 impl Default for DadmOptions {
@@ -118,6 +137,8 @@ impl Default for DadmOptions {
             sparse_comm: false,
             local_threads: 1,
             conj_resum_every: 64,
+            compress: DeltaCodec::F64,
+            overlap: false,
         }
     }
 }
@@ -164,19 +185,39 @@ pub struct Machine {
 
 /// The broadcast of the previous round's global step, parked until the
 /// next parallel section applies it (fused with the local-step
-/// dispatch). The message carries the coordinates of `ṽ` that changed —
-/// as their new **values**, not increments, so worker replicas stay
-/// bit-identical to the coordinator (see
+/// dispatch). In exact mode the message carries the coordinates of `ṽ`
+/// that changed — as their new **values**, not increments, so worker
+/// replicas stay bit-identical to the coordinator (see
 /// [`WorkerState::set_v_tilde_sparse_parts`]); its support and wire size
-/// are exactly those of the paper's `Δṽ`. The buffers are reused round
-/// after round: extraction clears and refills them, so no per-round
-/// allocation happens after warm-up.
-#[derive(Clone, Debug, Default)]
+/// are exactly those of the paper's `Δṽ`, and the buffers are reused
+/// round after round (no per-round allocation after warm-up). Under a
+/// compressed codec the message is instead an **increment** (`Add`): the
+/// quantized Δṽ images of DESIGN.md §13, applied with plain f64 adds so
+/// every replica — and the coordinator's `v_image` shadow — performs the
+/// identical operations.
+#[derive(Clone, Debug)]
 struct PendingBroadcast {
     kind: BroadcastKind,
     idx: Vec<u32>,
     val: Vec<f64>,
     dense: Vec<f64>,
+    /// The compressed-broadcast increment message (`Add` kind only).
+    add: Delta,
+    /// Codec of `add` (stamped on the wire frame).
+    codec: DeltaCodec,
+}
+
+impl Default for PendingBroadcast {
+    fn default() -> Self {
+        PendingBroadcast {
+            kind: BroadcastKind::Empty,
+            idx: Vec::new(),
+            val: Vec::new(),
+            dense: Vec::new(),
+            add: Delta::Sparse(SparseDelta::default()),
+            codec: DeltaCodec::F64,
+        }
+    }
 }
 
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -188,6 +229,8 @@ enum BroadcastKind {
     Sparse,
     /// Dense message (`dense` = the full new `ṽ`).
     Dense,
+    /// Quantized increment message (`add`) — compressed codecs only.
+    Add,
 }
 
 impl PendingBroadcast {
@@ -196,6 +239,10 @@ impl PendingBroadcast {
             BroadcastKind::Empty => {}
             BroadcastKind::Sparse => state.set_v_tilde_sparse_parts(&self.idx, &self.val, reg),
             BroadcastKind::Dense => state.set_v_tilde(&self.dense, reg),
+            BroadcastKind::Add => match &self.add {
+                Delta::Sparse(s) => state.add_v_tilde_sparse_parts(&s.idx, &s.val, reg),
+                Delta::Dense(v) => state.apply_global(v, reg),
+            },
         }
     }
 
@@ -209,6 +256,10 @@ impl PendingBroadcast {
                 val: &self.val,
             },
             BroadcastKind::Dense => BroadcastRef::DenseSet(&self.dense),
+            BroadcastKind::Add => BroadcastRef::Add {
+                delta: &self.add,
+                codec: self.codec,
+            },
         }
     }
 
@@ -224,6 +275,29 @@ impl PendingBroadcast {
 struct GlobalScratch {
     z: Vec<f64>,
     v_tilde_old: Vec<f64>,
+}
+
+/// The per-machine results of one round's fused parallel section.
+#[derive(Debug)]
+struct RoundReplies {
+    deltas: Vec<Delta>,
+    losses: Vec<f64>,
+    conjs: Vec<f64>,
+    parallel_secs: f64,
+}
+
+/// One issued-but-not-completed round in the two-slot pipeline
+/// (DESIGN.md §13). In-process backends compute eagerly at issue time —
+/// the worker math is identical either way, because a TCP worker also
+/// runs round `t+1`'s step before any later coordinator state exists —
+/// so only the coordinator's reduce/global step is actually deferred;
+/// under TCP the replies genuinely stay on the sockets until collected.
+#[derive(Debug)]
+struct InflightRound {
+    flags: StepFlags,
+    /// Eagerly computed worker results; `None` while the replies are
+    /// still outstanding on the TCP connections.
+    ready: Option<RoundReplies>,
 }
 
 /// The DADM coordinator (Algorithm 2), generic over loss `L`, strongly
@@ -255,6 +329,20 @@ pub struct Dadm<L, R, H, S> {
     rho: Vec<f64>,     // Σ_ℓ β_ℓ = ∇h(w)
     pending: PendingBroadcast,
     scratch: GlobalScratch,
+    /// Compressed-broadcast shadow of the workers' replica `ṽ`
+    /// (DESIGN.md §13): the cumulative quantized increments, updated
+    /// with exactly the adds every replica applies, so shadow and
+    /// replicas are bitwise identical. The outstanding broadcast error
+    /// feedback is implicitly `ṽ − v_image`. Empty in exact-f64 mode.
+    v_image: Vec<f64>,
+    /// The two-slot round pipeline: issued rounds whose reduce/global
+    /// step has not completed yet. Empty except inside an `--overlap`
+    /// schedule (sequential rounds push and pop within one call).
+    inflight: std::collections::VecDeque<InflightRound>,
+    /// Rounds issued so far — runs ahead of `rounds` while the pipeline
+    /// holds work; drives the resummation cadence so an overlapped
+    /// schedule resums at the same logical rounds as a sequential one.
+    issued: usize,
     /// Global `Σ−φ*(−α)` at the *current* duals, when a round leg or an
     /// eval just combined the machines' running sums (DESIGN.md §11).
     /// `None` = no fresh combination (the per-machine sums may still be
@@ -365,6 +453,13 @@ where
                 z: vec![0.0; d],
                 v_tilde_old: vec![0.0; d],
             },
+            v_image: if opts.compress != DeltaCodec::F64 {
+                vec![0.0; d]
+            } else {
+                Vec::new()
+            },
+            inflight: std::collections::VecDeque::new(),
+            issued: 0,
             conj_cache: None,
             n,
             d,
@@ -399,6 +494,14 @@ where
     /// message sizes can be validated against.
     pub fn wire_bytes(&self) -> u64 {
         self.tcp().map_or(0, |h| h.stats().total_bytes())
+    }
+
+    /// Cumulative **actual** bytes of `DeltaReply` frames received from
+    /// TCP workers (header + payload; `0` on in-process backends) — the
+    /// reduce leg's traffic in isolation, which the compression
+    /// acceptance gate compares across codecs (DESIGN.md §13).
+    pub fn delta_reply_bytes(&self) -> u64 {
+        self.tcp().map_or(0, |h| h.stats().delta_reply_bytes)
     }
 
     /// Cluster synchronization points (parallel sections / TCP round
@@ -479,6 +582,13 @@ where
     pub fn resync(&mut self) {
         self.global_sync();
         self.pending.clear();
+        if self.opts.compress != DeltaCodec::F64 {
+            // A value-setting resync puts every replica at exactly ṽ, so
+            // the image shadow is ṽ and no broadcast error is
+            // outstanding (DESIGN.md §13).
+            self.v_image.clear();
+            self.v_image.extend_from_slice(&self.v_tilde);
+        }
         self.barriers += 1;
         if let Some(h) = self.opts.cluster.tcp() {
             let spec = self.reg.wire_spec().expect(
@@ -565,108 +675,199 @@ where
         eval_entering: bool,
         want_conj: bool,
     ) -> ((f64, f64), Option<(f64, f64)>) {
+        self.round_issue(eval_entering, want_conj);
+        self.round_complete()
+    }
+
+    /// Issue one round's fused parallel section — pending-broadcast
+    /// apply + local step + piggybacked telemetry — without consuming
+    /// the results ([`Dadm::round_complete`] does). At most two rounds
+    /// may be in flight (the two-slot buffer of DESIGN.md §13). Issuing
+    /// round `t+1` before completing round `t` overlaps the worker
+    /// compute with the coordinator's reduce/global step; the price is
+    /// that round `t+1` steps against the broadcast parked by round
+    /// `t−1` — bounded staleness of one round on the broadcast iterate.
+    pub fn round_issue(&mut self, eval_entering: bool, want_conj: bool) {
         assert!(
-            !eval_entering || self.conj_cache.is_some(),
-            "round_fused: entering objectives need the previous round's \
-             conjugate sum (request want_conj there, or evaluate objectives first)"
+            self.inflight.len() < 2,
+            "round_issue: at most two rounds may be in flight"
         );
+        // Exact-resummation cadence for the running dual sums, driven by
+        // the issue counter (== the round counter whenever the pipeline
+        // is drained) so all backends and schedules — sequential or
+        // overlapped — resum at the same logical rounds (DESIGN.md §11).
+        let resum = self.opts.conj_resum_every > 0
+            && (self.issued + 1) % self.opts.conj_resum_every == 0;
+        self.issued += 1;
+        let flags = StepFlags {
+            eval_loss: eval_entering,
+            want_conj,
+            resum_conj: resum,
+        };
+        let ready = if let Some(h) = self.opts.cluster.tcp() {
+            // Send only: the replies stay on the sockets until
+            // `round_complete` collects them, so a second round's frames
+            // can go out while these are being worked on.
+            h.with(|c| {
+                c.local_step_issue(self.lambda, self.pending.as_wire(), flags, self.opts.compress)
+            })
+            .expect("tcp local step issue failed");
+            None
+        } else {
+            Some(self.run_local_step(flags))
+        };
+        self.pending.clear();
+        self.inflight.push_back(InflightRound { flags, ready });
+    }
+
+    /// The in-process fused parallel section (one pool barrier): apply
+    /// the pending broadcast, run every logical machine's local step,
+    /// merge the `T` sub-deltas machine-locally, and quantize each
+    /// machine delta at the (virtual) wire boundary. The body mirrors
+    /// the TCP worker's `LocalStep` handler operation for operation, so
+    /// the backends stay bit-identical (DESIGN.md §9/§11/§13).
+    fn run_local_step(&mut self, flags: StepFlags) -> RoundReplies {
         let loss = &self.loss;
         let reg = &self.reg;
         let solver = &self.solver;
         let lambda = self.lambda;
         let t = self.local_threads;
-        // Exact-resummation cadence for the running dual sums, driven by
-        // the round counter so all backends/resumes agree (DESIGN.md §11).
-        let resum = self.opts.conj_resum_every > 0
-            && (self.rounds + 1) % self.opts.conj_resum_every == 0;
-
-        // --- Fused broadcast apply + entering-loss eval + local step +
-        // conj read (parallel, one barrier; one request/reply exchange
-        // per worker on the TCP backend) ---
-        self.barriers += 1;
-        let mut results = Vec::new();
-        let mut machine_losses = Vec::new();
-        let mut machine_conjs = Vec::new();
-        let parallel_secs = if let Some(h) = self.opts.cluster.tcp() {
-            let flags = crate::comm::wire::StepFlags {
-                eval_loss: eval_entering,
-                want_conj,
-                resum_conj: resum,
-            };
-            let (replies, secs) = h
-                .with(|c| c.local_step(lambda, self.pending.as_wire(), flags))
-                .expect("tcp local step failed");
-            results.reserve(replies.len());
-            for r in replies {
-                results.push(r.delta);
-                machine_losses.extend(r.loss_sum);
-                machine_conjs.extend(r.conj_sum);
-            }
-            secs
-        } else {
-            let cluster = self.opts.cluster.clone();
-            let par = cluster.parallel_local();
-            let pending = &self.pending;
-            let weights = &self.weights;
-            let mut groups: Vec<&mut [Machine]> = self.machines.chunks_mut(t).collect();
-            let run = cluster.run(&mut groups, |l, group| {
-                // The T sub-shard legs of machine l, concurrent under
-                // Cluster::Threads (the pool's sub-queue tier). The leg
-                // body is `run_fused_step`, shared with the TCP worker's
-                // LocalStep handler — the telemetry points can never
-                // drift apart between backends (DESIGN.md §9/§11).
-                let sub = run_subgroup(par, group, |_, m| {
-                    pending.apply_to(&mut m.state, reg);
-                    run_fused_step(
-                        solver,
-                        &mut m.state,
-                        &mut m.rng,
-                        m.batch,
-                        loss,
-                        reg,
-                        lambda,
-                        eval_entering,
-                        want_conj,
-                        resum,
-                    )
-                });
-                // Machine-local merge: the same tree reduce as the
-                // cross-machine leg, applied to the T sub-deltas with
-                // their global n_k/n leaf weights — wire-free, so its
-                // message sizes are *not* charged. A flat tree over m·T
-                // leaves factors into exactly this local tree followed by
-                // the cross-machine tree for power-of-two T (bit parity,
-                // DESIGN.md §10); the telemetry scalars pre-reduce with
-                // the same pairwise tree as the eval legs. The machine's
-                // modeled time is the max over its concurrent sub-legs.
-                let mut deltas = Vec::with_capacity(sub.results.len());
-                let mut losses = Vec::with_capacity(sub.results.len());
-                let mut conjs = Vec::with_capacity(sub.results.len());
-                for (delta, loss_sum, conj) in sub.results {
-                    deltas.push(delta);
-                    losses.extend(loss_sum);
-                    conjs.extend(conj);
-                }
-                let delta = if t == 1 {
-                    deltas.into_iter().next().expect("one sub-solver")
-                } else {
-                    tree_allreduce_delta(deltas, &weights[l * t..l * t + group.len()]).0
-                };
-                let loss_sum = eval_entering.then(|| tree_sum(&losses));
-                let conj = want_conj.then(|| tree_sum(&conjs));
-                ((delta, loss_sum, conj), sub.parallel_secs)
+        let compress = self.opts.compress;
+        let cluster = self.opts.cluster.clone();
+        let par = cluster.parallel_local();
+        let pending = &self.pending;
+        let weights = &self.weights;
+        let mut groups: Vec<&mut [Machine]> = self.machines.chunks_mut(t).collect();
+        let run = cluster.run(&mut groups, |l, group| {
+            // The T sub-shard legs of machine l, concurrent under
+            // Cluster::Threads (the pool's sub-queue tier). The leg
+            // body is `run_fused_step`, shared with the TCP worker's
+            // LocalStep handler — the telemetry points can never
+            // drift apart between backends (DESIGN.md §9/§11).
+            let sub = run_subgroup(par, group, |_, m| {
+                pending.apply_to(&mut m.state, reg);
+                run_fused_step(
+                    solver,
+                    &mut m.state,
+                    &mut m.rng,
+                    m.batch,
+                    loss,
+                    reg,
+                    lambda,
+                    flags.eval_loss,
+                    flags.want_conj,
+                    flags.resum_conj,
+                )
             });
-            results.reserve(run.results.len());
-            let mut machine_secs = 0.0f64;
-            for ((delta, loss_sum, conj), secs) in run.results {
-                results.push(delta);
-                machine_losses.extend(loss_sum);
-                machine_conjs.extend(conj);
-                machine_secs = machine_secs.max(secs);
+            // Machine-local merge: the same tree reduce as the
+            // cross-machine leg, applied to the T sub-deltas with
+            // their global n_k/n leaf weights — wire-free, so its
+            // message sizes are *not* charged. A flat tree over m·T
+            // leaves factors into exactly this local tree followed by
+            // the cross-machine tree for power-of-two T (bit parity,
+            // DESIGN.md §10); the telemetry scalars pre-reduce with
+            // the same pairwise tree as the eval legs. The machine's
+            // modeled time is the max over its concurrent sub-legs.
+            let mut deltas = Vec::with_capacity(sub.results.len());
+            let mut losses = Vec::with_capacity(sub.results.len());
+            let mut conjs = Vec::with_capacity(sub.results.len());
+            for (delta, loss_sum, conj) in sub.results {
+                deltas.push(delta);
+                losses.extend(loss_sum);
+                conjs.extend(conj);
             }
-            machine_secs
+            let mut delta = if t == 1 {
+                deltas.into_iter().next().expect("one sub-solver")
+            } else {
+                tree_allreduce_delta(deltas, &weights[l * t..l * t + group.len()]).0
+            };
+            // Quantize once per machine, at the wire boundary (after
+            // the wire-free sub-merge), with the error feedback on the
+            // lead sub-solver — exactly where the TCP worker keeps it
+            // (DESIGN.md §13). F64 is the identity.
+            compress_delta(&mut delta, compress, &mut group[0].state.residual);
+            let loss_sum = flags.eval_loss.then(|| tree_sum(&losses));
+            let conj = flags.want_conj.then(|| tree_sum(&conjs));
+            ((delta, loss_sum, conj), sub.parallel_secs)
+        });
+        let mut deltas = Vec::with_capacity(run.results.len());
+        let mut losses = Vec::new();
+        let mut conjs = Vec::new();
+        let mut parallel_secs = 0.0f64;
+        for ((delta, loss_sum, conj), secs) in run.results {
+            deltas.push(delta);
+            losses.extend(loss_sum);
+            conjs.extend(conj);
+            parallel_secs = parallel_secs.max(secs);
+        }
+        RoundReplies {
+            deltas,
+            losses,
+            conjs,
+            parallel_secs,
+        }
+    }
+
+    /// Complete the **oldest** in-flight round: collect its worker
+    /// replies (TCP — in machine order, FIFO per connection) or take the
+    /// eagerly computed in-process ones, finish the lagged telemetry
+    /// record, reduce the machine deltas, run the global step and park
+    /// the next Δṽ broadcast. Returns the modeled (compute, comm)
+    /// seconds plus the previous round's `(P, D)` when its entering
+    /// evaluation was requested. Under an overlapped schedule the
+    /// entering **primal** is approximate — the loss sums were evaluated
+    /// at the one-round-stale replicas — while the dual side stays exact
+    /// (α and the running conjugate sums are local state, DESIGN.md §13).
+    pub fn round_complete(&mut self) -> ((f64, f64), Option<(f64, f64)>) {
+        let entry = self
+            .inflight
+            .pop_front()
+            .expect("round_complete: no round in flight");
+        let flags = entry.flags;
+        let eval_entering = flags.eval_loss;
+        let want_conj = flags.want_conj;
+        assert!(
+            !eval_entering || self.conj_cache.is_some(),
+            "round_fused: entering objectives need the previous round's \
+             conjugate sum (request want_conj there, or evaluate objectives first)"
+        );
+        let RoundReplies {
+            deltas: results,
+            losses: machine_losses,
+            conjs: machine_conjs,
+            parallel_secs,
+        } = match entry.ready {
+            Some(r) => r,
+            None => {
+                let codec = self.opts.compress;
+                let h = self.tcp().expect("TCP replies without a TCP cluster");
+                let (replies, secs) = h
+                    .with(|c| c.local_step_collect(flags, codec))
+                    .expect("tcp local step failed");
+                let mut deltas = Vec::with_capacity(replies.len());
+                let mut losses = Vec::new();
+                let mut conjs = Vec::new();
+                for r in replies {
+                    deltas.push(r.delta);
+                    losses.extend(r.loss_sum);
+                    conjs.extend(r.conj_sum);
+                }
+                RoundReplies {
+                    deltas,
+                    losses,
+                    conjs,
+                    parallel_secs: secs,
+                }
+            }
         };
-        self.pending.clear();
+        // A barrier is a point with no worker work outstanding: every
+        // sequential round drains the pipeline here (one barrier per
+        // round, exactly as before), while an overlapped schedule keeps
+        // a round in flight and only drains at the end — the collapse
+        // [`Dadm::barriers`] pins (DESIGN.md §13).
+        if self.inflight.is_empty() {
+            self.barriers += 1;
+        }
 
         // --- Complete the previous round's record while (w, ṽ, ρ) still
         // hold the entering state: the piggybacked loss sums are at
@@ -695,7 +896,7 @@ where
         // the root — which is what the cost model charges. With T > 1
         // the machine deltas are already leaf-weighted by the local
         // merge, so the cross-machine reduce runs with unit weights.
-        let (delta_v, reduce_elems) = if t == 1 {
+        let (delta_v, reduce_elems) = if self.local_threads == 1 {
             tree_allreduce_delta(results, &self.weights)
         } else {
             tree_allreduce_delta(results, &self.unit_weights)
@@ -709,8 +910,14 @@ where
         // message densifies once the sparse encoding stops paying off.
         // Workers apply it at the start of the next round's parallel
         // section (fused — see the module docs).
-        let bcast_elems = {
-            let PendingBroadcast { kind, idx, val, dense } = &mut self.pending;
+        let bcast_elems = if self.opts.compress == DeltaCodec::F64 {
+            let PendingBroadcast {
+                kind,
+                idx,
+                val,
+                dense,
+                ..
+            } = &mut self.pending;
             idx.clear();
             val.clear();
             for (j, (&vt, &vo)) in self
@@ -733,6 +940,8 @@ where
                 *kind = BroadcastKind::Sparse;
                 sparse_message_elems(idx.len(), self.d)
             }
+        } else {
+            self.park_compressed_broadcast()
         };
 
         // --- Accounting ---
@@ -755,6 +964,75 @@ where
         self.rounds += 1;
         self.passes += self.opts.sp;
         ((parallel_secs, comm), entering)
+    }
+
+    /// Extract the compressed Δṽ broadcast (DESIGN.md §13). The worker
+    /// replicas hold `v_image` — the cumulative quantized increments
+    /// applied so far — so the exact outstanding increment at each
+    /// coordinate, this round's Δṽ *plus* all previously unsent
+    /// quantization error, is `ṽ − v_image`. Quantizing *that* is the
+    /// error-feedback loop: error is never dropped, only deferred, and
+    /// because it is re-measured against `v_image` every round it can
+    /// never silently accumulate. The images are applied to `v_image`
+    /// with the same per-coordinate f64 adds every replica performs,
+    /// keeping shadow and replicas bitwise identical. Returns the parked
+    /// message's size in dense-equivalent f64 elements (per-codec bytes,
+    /// for the sparse-comm cost model).
+    fn park_compressed_broadcast(&mut self) -> usize {
+        let codec = self.opts.compress;
+        let d = self.d;
+        let mut idx: Vec<u32> = Vec::new();
+        let mut val: Vec<f64> = Vec::new();
+        for (j, (&vt, &img)) in self.v_tilde.iter().zip(&self.v_image).enumerate() {
+            let inc = vt - img;
+            if inc != 0.0 {
+                idx.push(j as u32);
+                val.push(inc);
+            }
+        }
+        // Canonical step over the raw increments. The max-magnitude
+        // increment keeps a level in (16383, 32767], so the wire encoder
+        // re-derives the identical step from the image values alone
+        // (see [`i16_step`]).
+        let step = match codec {
+            DeltaCodec::I16 => i16_step(max_abs(&val)),
+            _ => 1.0,
+        };
+        // Quantize; drop zero images (increments below half a step stay
+        // owed in `ṽ − v_image` and re-appear in a later round).
+        let mut kept = 0;
+        for k in 0..val.len() {
+            let image = codec_image(codec, val[k], step);
+            if image != 0.0 {
+                idx[kept] = idx[k];
+                val[kept] = image;
+                kept += 1;
+            }
+        }
+        idx.truncate(kept);
+        val.truncate(kept);
+        self.pending.codec = codec;
+        self.pending.kind = BroadcastKind::Add;
+        if should_densify_with(codec, idx.len(), d) {
+            let mut dense = vec![0.0; d];
+            for (&j, &image) in idx.iter().zip(&val) {
+                dense[j as usize] = image;
+            }
+            // Replicas add the full dense image, zeros included; the
+            // shadow applies the identical operations.
+            for (vi, &image) in self.v_image.iter_mut().zip(&dense) {
+                *vi += image;
+            }
+            self.pending.add = Delta::Dense(dense);
+            (d * codec.dense_entry_bytes()).div_ceil(DENSE_ENTRY_BYTES)
+        } else {
+            for (&j, &image) in idx.iter().zip(&val) {
+                self.v_image[j as usize] += image;
+            }
+            let elems = sparse_message_elems_with(codec, idx.len(), d);
+            self.pending.add = Delta::Sparse(SparseDelta { dim: d, idx, val });
+            elems
+        }
     }
 
     /// Distributed loss sum `Σ_i φ_i(x_iᵀ w)` at an **arbitrary** `w`
@@ -953,6 +1231,11 @@ where
             !self.opts.cluster.is_tcp(),
             "checkpoint: worker duals live in remote TCP processes"
         );
+        assert!(
+            self.inflight.is_empty(),
+            "checkpoint: rounds still in flight (drain the overlap pipeline first)"
+        );
+        let compressed = self.opts.compress != DeltaCodec::F64;
         super::Checkpoint {
             lambda: self.lambda,
             rounds: self.rounds,
@@ -970,6 +1253,15 @@ where
             // ulps. `None` when telemetry was never read (all-or-none:
             // the sums arm together in one eval leg).
             conj: self.machines.iter().map(|m| m.state.conj_sum).collect(),
+            // Compressed-mode solver state (checkpoint v4, DESIGN.md
+            // §13): the per-machine error-feedback residuals and the
+            // broadcast image shadow. Without them a resumed run would
+            // quantize different deltas — and value-set replicas to ṽ
+            // instead of the image they actually held — drifting off the
+            // uninterrupted trajectory.
+            residual: compressed
+                .then(|| self.machines.iter().map(|m| m.state.residual.clone()).collect()),
+            v_image: compressed.then(|| self.v_image.clone()),
         }
     }
 
@@ -1017,10 +1309,51 @@ where
                 m.rng = Rng::from_state(*s);
             }
         }
+        // Compressed-mode residuals (v4 records): restore them verbatim,
+        // or clear them for pre-v4 snapshots (a fresh error-feedback
+        // state — exact-f64 runs never have any).
+        if let Some(res) = &ck.residual {
+            anyhow::ensure!(
+                res.len() == self.machines.len(),
+                "residual record count mismatch"
+            );
+            for (m, r) in self.machines.iter_mut().zip(res) {
+                m.state.residual.clear();
+                m.state.residual.extend_from_slice(r);
+            }
+        } else {
+            for m in &mut self.machines {
+                m.state.residual.clear();
+            }
+        }
         self.rounds = ck.rounds;
         self.passes = ck.passes;
+        self.issued = ck.rounds;
+        self.inflight.clear();
         self.v.copy_from_slice(&ck.v);
         self.resync();
+        // Compressed-broadcast image shadow (v4): the replicas must hold
+        // the quantized image they held at save time, not the exact ṽ
+        // the resync just value-set — re-set them to the saved image so
+        // the resumed broadcast increments are bit-identical to the
+        // uninterrupted run's (DESIGN.md §13).
+        if let Some(img) = &ck.v_image {
+            anyhow::ensure!(
+                self.opts.compress != DeltaCodec::F64,
+                "checkpoint carries a broadcast image but compression is off"
+            );
+            anyhow::ensure!(img.len() == self.d, "v_image dimension mismatch");
+            self.v_image.copy_from_slice(img);
+            self.barriers += 1;
+            let cluster = self.opts.cluster.clone();
+            let par = cluster.parallel_local();
+            let (v_image, reg) = (&self.v_image, &self.reg);
+            let mut groups: Vec<&mut [Machine]> =
+                self.machines.chunks_mut(self.local_threads).collect();
+            cluster.run(&mut groups, |_, group| {
+                run_subgroup(par, group, |_, m| m.state.set_v_tilde(v_image, reg));
+            });
+        }
         anyhow::Context::context(self.check_v_invariant(), "restored state is inconsistent")?;
         Ok(())
     }
@@ -1038,6 +1371,21 @@ where
             let raw = m.state.raw_dual_combination();
             for (wj, rj) in want.iter_mut().zip(&raw) {
                 *wj += rj / (self.lambda * self.n as f64);
+            }
+        }
+        // Under a compressed codec `v` holds the sum of *transmitted
+        // images*, which lags the exact dual combination by exactly the
+        // per-machine error-feedback residuals (DESIGN.md §13) — in raw
+        // per-machine units with T = 1 (the n_ℓ/n leaf scaling happens
+        // in the cross-machine tree), already leaf-weighted with T > 1
+        // (the machine-local merge applied it before quantization).
+        if self.opts.compress != DeltaCodec::F64 {
+            let t = self.local_threads;
+            for (l, group) in self.machines.chunks(t).enumerate() {
+                let scale = if t == 1 { self.weights[l] } else { 1.0 };
+                for (wj, rj) in want.iter_mut().zip(&group[0].state.residual) {
+                    *wj -= scale * rj;
+                }
             }
         }
         for (j, (got, want)) in self.v.iter().zip(&want).enumerate() {
@@ -1075,6 +1423,25 @@ where
         }
     }
 
+    /// Double-buffered rounds when the instance opted in (DESIGN.md §13).
+    fn overlap_capable(&self) -> bool {
+        self.opts.overlap
+    }
+
+    fn round_issue(&mut self, req: &RoundRequest) {
+        Dadm::round_issue(self, req.eval_entering_primal, req.want_exit_conj);
+    }
+
+    fn round_complete(&mut self, _req: RoundRequest) -> RoundOutcome {
+        // The telemetry requests were fixed at issue time; the driver
+        // passes the same request back for interface symmetry.
+        let (_secs, entering) = Dadm::round_complete(self);
+        RoundOutcome {
+            entering_objectives: entering,
+            ..RoundOutcome::default()
+        }
+    }
+
     fn objectives(&mut self) -> (f64, f64) {
         self.current_objectives()
     }
@@ -1104,6 +1471,11 @@ where
     fn snapshot(&self) -> Option<super::Checkpoint> {
         if self.opts.cluster.is_tcp() {
             // Worker duals are remote; no snapshot frame in protocol v1.
+            return None;
+        }
+        if self.opts.overlap {
+            // The pipeline may hold un-reduced rounds between driver
+            // steps; overlapped solves don't snapshot (DESIGN.md §13).
             return None;
         }
         Some(self.checkpoint())
@@ -1483,6 +1855,183 @@ mod tests {
         // Records: initial + rounds 5, 10, 12 (final).
         let recorded: Vec<usize> = report.trace.rounds.iter().map(|r| r.round).collect();
         assert_eq!(recorded, vec![0, 5, 10, 12]);
+    }
+
+    #[test]
+    fn compressed_rounds_converge_and_track_exact() {
+        // Error-feedback quantization (DESIGN.md §13) must preserve
+        // convergence: the dual stays monotone (α updates are exact and
+        // local — only the broadcast iterate each step works from is
+        // slightly stale), and the final gap stays within a small factor
+        // of the exact run's.
+        let data = tiny_classification(200, 8, 21);
+        let part = Partition::balanced(200, 4, 21);
+        let run = |compress: DeltaCodec| {
+            let mut dadm = Dadm::new(
+                &data,
+                &part,
+                SmoothHinge::default(),
+                ElasticNet::new(0.1),
+                Zero,
+                1e-2,
+                ProxSdca,
+                DadmOptions { compress, ..opts() },
+            );
+            dadm.resync();
+            let mut prev_dual = dadm.dual();
+            for _ in 0..20 {
+                dadm.round();
+                let dual = dadm.dual();
+                assert!(
+                    dual >= prev_dual - 1e-8,
+                    "{compress:?}: dual decreased: {prev_dual} -> {dual}"
+                );
+                prev_dual = dual;
+            }
+            dadm.check_v_invariant().unwrap();
+            dadm.gap()
+        };
+        let gap_exact = run(DeltaCodec::F64);
+        for codec in [DeltaCodec::F32, DeltaCodec::I16] {
+            let gap = run(codec);
+            assert!(
+                gap <= 10.0 * gap_exact.max(1e-12),
+                "{codec:?} gap {gap} not within 10x of exact {gap_exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn issue_complete_split_matches_fused() {
+        // Structural staleness-0 parity: a manually driven
+        // issue-then-complete schedule is the fused round, bit for bit
+        // — on the exact and the compressed path.
+        let data = tiny_classification(120, 6, 22);
+        let part = Partition::balanced(120, 3, 22);
+        for compress in [DeltaCodec::F64, DeltaCodec::I16] {
+            let build = || {
+                Dadm::new(
+                    &data,
+                    &part,
+                    SmoothHinge::default(),
+                    ElasticNet::new(0.1),
+                    Zero,
+                    1e-2,
+                    ProxSdca,
+                    DadmOptions { compress, ..opts() },
+                )
+            };
+            let mut fused = build();
+            let mut split = build();
+            fused.resync();
+            split.resync();
+            for _ in 0..5 {
+                fused.round_fused(false, false);
+                split.round_issue(false, false);
+                split.round_complete();
+            }
+            assert_eq!(fused.w(), split.w(), "{compress:?}: split diverged");
+            assert_eq!(fused.barriers(), split.barriers());
+            assert_eq!(fused.gap(), split.gap());
+        }
+    }
+
+    #[test]
+    fn overlapped_schedule_converges_and_collapses_barriers() {
+        // A depth-2 pipelined schedule: round t+1 is issued before round
+        // t completes, so its local step runs against the broadcast of
+        // round t−1 (staleness 1). Convergence degrades gracefully, and
+        // the pipeline only drains once — the barrier collapse the
+        // overlap acceptance gate pins (DESIGN.md §13).
+        let data = tiny_classification(200, 8, 23);
+        let part = Partition::balanced(200, 4, 23);
+        let mut dadm = Dadm::new(
+            &data,
+            &part,
+            SmoothHinge::default(),
+            ElasticNet::new(0.1),
+            Zero,
+            1e-2,
+            ProxSdca,
+            DadmOptions {
+                overlap: true,
+                ..opts()
+            },
+        );
+        dadm.resync();
+        let gap0 = dadm.gap();
+        let before = dadm.barriers();
+        let rounds = 12;
+        dadm.round_issue(false, false);
+        for _ in 1..rounds {
+            dadm.round_issue(false, false);
+            dadm.round_complete();
+        }
+        dadm.round_complete();
+        // 12 overlapped rounds issue 12 parallel sections but drain the
+        // pipeline exactly once (the last complete).
+        assert_eq!(dadm.barriers(), before + 1, "overlap schedule not pinned");
+        assert_eq!(dadm.rounds(), rounds);
+        let gap_end = dadm.gap();
+        assert!(
+            gap_end < 0.5 * gap0,
+            "no progress under staleness: {gap0} -> {gap_end}"
+        );
+        dadm.check_v_invariant().unwrap();
+    }
+
+    #[test]
+    fn compressed_checkpoint_resume_continues_identically() {
+        // Checkpoint v4 carries the live error-feedback residuals and
+        // the broadcast image shadow, so a compressed run resumes on the
+        // exact bit trajectory (the replicas are re-set to the image
+        // they held, not to the exact ṽ).
+        let data = tiny_classification(120, 6, 73);
+        let part = Partition::balanced(120, 3, 73);
+        let build = || {
+            Dadm::new(
+                &data,
+                &part,
+                SmoothHinge::default(),
+                ElasticNet::new(0.1),
+                Zero,
+                1e-3,
+                ProxSdca,
+                DadmOptions {
+                    compress: DeltaCodec::I16,
+                    ..opts()
+                },
+            )
+        };
+        let mut full = build();
+        full.resync();
+        for _ in 0..5 {
+            full.round();
+        }
+        let _ = full.gap();
+        for _ in 0..5 {
+            full.round();
+        }
+        let mut first = build();
+        first.resync();
+        for _ in 0..5 {
+            first.round();
+        }
+        let ck = first.checkpoint();
+        assert!(ck.residual.is_some(), "v4 residual records missing");
+        assert!(ck.v_image.is_some(), "v4 image record missing");
+        let mut buf = Vec::new();
+        ck.save(&mut buf).unwrap();
+        let ck = crate::coordinator::Checkpoint::load(std::io::Cursor::new(buf)).unwrap();
+        let mut resumed = build();
+        resumed.restore(&ck).unwrap();
+        let _ = resumed.gap();
+        for _ in 0..5 {
+            resumed.round();
+        }
+        assert_eq!(resumed.rounds(), 10);
+        assert_eq!(resumed.w(), full.w(), "compressed resume diverged");
+        assert_eq!(resumed.gap(), full.gap());
     }
 
     #[test]

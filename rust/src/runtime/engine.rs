@@ -26,6 +26,7 @@
 
 use crate::coordinator::Checkpoint;
 use crate::metrics::{RoundRecord, Trace};
+use std::collections::VecDeque;
 use std::path::PathBuf;
 use std::time::Instant;
 
@@ -144,6 +145,28 @@ pub trait RoundAlgorithm {
     /// gap-telemetry requests (DESIGN.md §11); algorithms whose
     /// [`RoundAlgorithm::fused_gap`] is false may ignore it.
     fn round(&mut self, req: RoundRequest) -> RoundOutcome;
+
+    /// Whether this algorithm supports double-buffered rounds via
+    /// [`RoundAlgorithm::round_issue`]/[`RoundAlgorithm::round_complete`]
+    /// (DESIGN.md §13). When true — and the cadence supports the fused
+    /// lagged protocol — the driver runs the two-slot pipelined loop,
+    /// keeping one round in flight while the previous one completes.
+    fn overlap_capable(&self) -> bool {
+        false
+    }
+
+    /// Issue one round's dispatch without consuming its results (the
+    /// first half of [`RoundAlgorithm::round`] for overlap-capable
+    /// algorithms). The default is a no-op: sequential algorithms do all
+    /// their work in [`RoundAlgorithm::round_complete`].
+    fn round_issue(&mut self, _req: &RoundRequest) {}
+
+    /// Complete the **oldest** issued round and report its outcome. The
+    /// default runs a full round, so issue-then-complete at pipeline
+    /// depth one is exactly the sequential loop.
+    fn round_complete(&mut self, req: RoundRequest) -> RoundOutcome {
+        self.round(req)
+    }
 
     /// Exact `(primal, dual)` objectives at the current state
     /// (instrumentation; one evaluation pass over the data). Primal-only
@@ -295,7 +318,70 @@ impl Driver {
         let mut rounds_done = 0usize;
         let mut finished = false;
         let mut lag_converged = false;
-        while !converged && !finished && rounds_done < self.max_rounds {
+        // Double-buffered rounds (DESIGN.md §13): when the algorithm can
+        // split a round into issue/complete halves and the cadence runs
+        // the fused lagged protocol, keep up to two rounds in flight —
+        // round `t+1`'s dispatch is issued before round `t`'s
+        // reduce/global step completes. Requests derive from the *issue*
+        // index, so the flag schedule matches the sequential loop
+        // exactly; completes run FIFO, so record and convergence
+        // bookkeeping are unchanged. Once a lagged record converges (or
+        // the algorithm finishes) issuing stops and the pipeline drains,
+        // overrunning by at most the one extra in-flight round.
+        let overlap_k = fused_k.filter(|_| algo.overlap_capable());
+        if let Some(k) = overlap_k {
+            let mut inflight: VecDeque<RoundRequest> = VecDeque::new();
+            let mut issued = 0usize;
+            while (!converged && !finished && issued < self.max_rounds) || !inflight.is_empty() {
+                while !converged && !finished && issued < self.max_rounds && inflight.len() < 2 {
+                    let req = RoundRequest {
+                        eval_entering_primal: issued >= 1 && issued % k == 0,
+                        want_exit_conj: (issued + 1) % k == 0,
+                    };
+                    algo.round_issue(&req);
+                    inflight.push_back(req);
+                    issued += 1;
+                }
+                let req = inflight.pop_front().expect("overlap loop: pipeline empty");
+                // Accounting snapshot of the entering state: counters
+                // advance in the complete half, so this is still the
+                // state after `rounds_done` completed rounds.
+                let entering = (algo.rounds(), algo.passes(), algo.modeled_secs());
+                let out = algo.round_complete(req);
+                rounds_done += 1;
+                finished = finished || out.finished;
+                if let Some((primal, dual)) = out.entering_objectives {
+                    // Records completing while the pipeline drains past a
+                    // converged record are dropped, so the trace still
+                    // ends at the converged record like the sequential
+                    // protocol's.
+                    if !converged {
+                        let (compute_secs, comm_secs) = entering.2;
+                        trace.push(RoundRecord {
+                            round: entering.0,
+                            passes: entering.1,
+                            primal,
+                            dual,
+                            compute_secs,
+                            comm_secs,
+                            wall_secs: wall_start.elapsed().as_secs_f64(),
+                        });
+                        let gap = primal - dual;
+                        converged = algo.gap_converged(gap / n, self.eps);
+                        lag_converged = converged;
+                        algo.on_record(&RecordCtx {
+                            initial: false,
+                            gap,
+                            converged,
+                            at_round_cap: false,
+                        });
+                    }
+                }
+                // No checkpoint hook here: overlap-capable algorithms
+                // decline snapshots while rounds are in flight.
+            }
+        }
+        while overlap_k.is_none() && !converged && !finished && rounds_done < self.max_rounds {
             let req = match fused_k {
                 // Entering state = `rounds_done` completed rounds; its
                 // record is due when it sits on the cadence (round 0 was
@@ -615,6 +701,96 @@ mod tests {
         assert_eq!(algo.evals, 1, "initial evaluation only");
     }
 
+    /// Overlap-capable fused toy: queues issued requests and completes
+    /// them FIFO against the inner [`FusedHalving`], recording the
+    /// deepest pipeline the driver built.
+    struct OverlapHalving {
+        inner: FusedHalving,
+        queue: VecDeque<RoundRequest>,
+        max_depth: usize,
+    }
+
+    impl RoundAlgorithm for OverlapHalving {
+        fn n(&self) -> usize {
+            1
+        }
+        fn fused_gap(&self) -> bool {
+            true
+        }
+        fn overlap_capable(&self) -> bool {
+            true
+        }
+        fn round_issue(&mut self, req: &RoundRequest) {
+            self.queue.push_back(*req);
+            self.max_depth = self.max_depth.max(self.queue.len());
+        }
+        fn round_complete(&mut self, req: RoundRequest) -> RoundOutcome {
+            let issued = self.queue.pop_front().expect("complete without issue");
+            assert_eq!(issued, req, "driver must complete rounds in issue order");
+            self.inner.round(issued)
+        }
+        fn round(&mut self, req: RoundRequest) -> RoundOutcome {
+            self.inner.round(req)
+        }
+        fn objectives(&mut self) -> (f64, f64) {
+            self.inner.objectives()
+        }
+        fn rounds(&self) -> usize {
+            self.inner.rounds
+        }
+        fn passes(&self) -> f64 {
+            self.inner.rounds as f64
+        }
+        fn modeled_secs(&self) -> (f64, f64) {
+            (0.0, 0.0)
+        }
+        fn final_w(&mut self) -> Vec<f64> {
+            vec![self.inner.gap]
+        }
+    }
+
+    #[test]
+    fn overlap_loop_pipelines_two_rounds_and_matches_sequential_records() {
+        // Same record set/values as the sequential fused loop (FIFO
+        // completes keep the telemetry schedule identical), but the
+        // driver genuinely double-buffers: two rounds in flight.
+        let mut algo = OverlapHalving {
+            inner: FusedHalving::new(),
+            queue: VecDeque::new(),
+            max_depth: 0,
+        };
+        let report = Driver::new(0.0, 6).solve(&mut algo);
+        assert_eq!(algo.max_depth, 2, "driver never double-buffered");
+        assert!(algo.queue.is_empty(), "pipeline must drain");
+        assert!(!report.converged);
+        assert_eq!(report.rounds, 6);
+        let recorded: Vec<(usize, f64)> =
+            report.trace.rounds.iter().map(|r| (r.round, r.primal)).collect();
+        let want: Vec<(usize, f64)> = (0..=6).map(|r| (r, 0.5f64.powi(r as i32))).collect();
+        assert_eq!(recorded, want);
+        assert_eq!(algo.inner.evals, 2, "initial + closing evaluation only");
+    }
+
+    #[test]
+    fn overlap_lagged_stop_drains_pipeline_and_ends_at_converged_record() {
+        // Gap 0.5^r ≤ 0.1 first at record 4, completed by round 5; the
+        // extra in-flight round 6 drains (its record is dropped), so the
+        // trace still ends at the converged record with no closing eval.
+        let mut algo = OverlapHalving {
+            inner: FusedHalving::new(),
+            queue: VecDeque::new(),
+            max_depth: 0,
+        };
+        let report = Driver::new(0.1, 100).solve(&mut algo);
+        assert!(report.converged);
+        assert_eq!(report.rounds, 6, "one-round overrun beyond the lagged stop");
+        assert!(algo.queue.is_empty(), "pipeline must drain");
+        let last = report.trace.last().unwrap();
+        assert_eq!(last.round, 4);
+        assert!(last.primal <= 0.1);
+        assert_eq!(algo.inner.evals, 1, "initial evaluation only");
+    }
+
     #[test]
     fn snapshot_hook_called_on_cadence() {
         struct Snapping(Halving);
@@ -649,6 +825,8 @@ mod tests {
                     alpha: vec![vec![0.0]],
                     rng: None,
                     conj: None,
+                    residual: None,
+                    v_image: None,
                 })
             }
         }

@@ -147,6 +147,16 @@ pub struct WorkerState {
     /// solver, a v1/v2 checkpoint restore); the next
     /// [`WorkerState::conj_running`] read rebuilds it exactly.
     pub conj_sum: Option<f64>,
+    /// Error-feedback residual of the machine's outgoing Δv compression
+    /// (DESIGN.md §13): the per-coordinate quantization error still owed
+    /// to the coordinator, folded back into the next round's delta by
+    /// [`crate::comm::sparse::compress_delta`]. Empty until the first
+    /// compressed round (and always empty in exact-f64 mode). Under
+    /// hierarchical parallelism the residual lives on the machine's
+    /// *lead* sub-solver only — quantization happens once per machine,
+    /// after the wire-free sub-merge. Solver state: checkpointed (v4)
+    /// so a resumed compressed run replays bit-identically.
+    pub residual: Vec<f64>,
 }
 
 impl WorkerState {
@@ -170,6 +180,7 @@ impl WorkerState {
             scratch_order: Vec::new(),
             scratch_delta_spare: vec![0.0; d],
             conj_sum: None,
+            residual: Vec::new(),
         }
     }
 
@@ -201,6 +212,7 @@ impl WorkerState {
             scratch_order: Vec::new(),
             scratch_delta_spare: vec![0.0; dim],
             conj_sum: None,
+            residual: Vec::new(),
         }
     }
 
@@ -237,6 +249,21 @@ impl WorkerState {
         }
     }
 
+    /// Add the broadcast increment at the listed coordinates and refresh
+    /// the matching entries of `w` — the compressed-broadcast apply
+    /// (DESIGN.md §13). Unlike [`WorkerState::set_v_tilde_sparse_parts`]
+    /// the message carries *increments* (quantized Δṽ images carrying the
+    /// coordinator's error feedback); every replica applies the same
+    /// f64 adds in the same coordinate order, so all replicas — and the
+    /// coordinator's `v_image` shadow — stay bit-identical to each other.
+    pub fn add_v_tilde_sparse_parts<R: Regularizer>(&mut self, idx: &[u32], val: &[f64], reg: &R) {
+        for (&j, &dv) in idx.iter().zip(val) {
+            let ju = j as usize;
+            self.v_tilde[ju] += dv;
+            self.w[ju] = reg.grad_conj_at(ju, self.v_tilde[ju]);
+        }
+    }
+
     /// Overwrite `ṽ_ℓ` (Acc-DADM stage transitions) and refresh `w`.
     pub fn set_v_tilde<R: Regularizer>(&mut self, v_tilde: &[f64], reg: &R) {
         self.v_tilde.copy_from_slice(v_tilde);
@@ -249,6 +276,7 @@ impl WorkerState {
         self.v_tilde.iter_mut().for_each(|v| *v = 0.0);
         self.w.iter_mut().for_each(|w| *w = 0.0);
         self.conj_sum = None;
+        self.residual.clear();
     }
 
     /// `v_ℓ`-side contribution `Σ_{i∈S_ℓ} X_i α_i` (unscaled) — used by
@@ -450,6 +478,32 @@ mod tests {
         sparse_ws.set_v_tilde_sparse_parts(&[1, 3], &[v1[1], v1[3]], &reg);
         assert_eq!(dense_ws.v_tilde, sparse_ws.v_tilde);
         assert_eq!(dense_ws.w, sparse_ws.w);
+    }
+
+    #[test]
+    fn sparse_add_applies_increments_and_refreshes_w() {
+        // The compressed-broadcast apply (increments at touched
+        // coordinates) must land on the state a value-set would produce
+        // when the increments are exactly representable — and must
+        // refresh `w` at exactly the touched coordinates.
+        let data = tiny_classification(10, 5, 2);
+        let part = Partition::balanced(10, 2, 2);
+        let reg = ElasticNet::new(0.2);
+        let mut set_ws = WorkerState::from_partition(&data, &part, 0);
+        let mut add_ws = set_ws.clone();
+        let v0 = vec![0.5, -1.0, 0.0, 2.0, -0.3];
+        set_ws.set_v_tilde(&v0, &reg);
+        add_ws.set_v_tilde(&v0, &reg);
+        // Increments at coordinates 1 and 3; powers of two keep the f64
+        // adds exact so the two paths must agree bit for bit.
+        add_ws.add_v_tilde_sparse_parts(&[1, 3], &[0.75, -0.5], &reg);
+        set_ws.set_v_tilde_sparse_parts(&[1, 3], &[-0.25, 1.5], &reg);
+        assert_eq!(set_ws.v_tilde, add_ws.v_tilde);
+        assert_eq!(set_ws.w, add_ws.w);
+        // A second add accumulates on top of the first.
+        add_ws.add_v_tilde_sparse_parts(&[1], &[0.25], &reg);
+        assert_eq!(add_ws.v_tilde[1], 0.0);
+        assert_eq!(add_ws.w[1], reg.grad_conj_at(1, 0.0));
     }
 
     #[test]

@@ -60,6 +60,7 @@ fn build(
             sparse_comm: true,
             local_threads,
             conj_resum_every,
+            ..Default::default()
         },
     )
 }

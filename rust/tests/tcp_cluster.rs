@@ -96,6 +96,7 @@ fn build_dadm_t(
             sparse_comm: true,
             local_threads,
             conj_resum_every: 64,
+            ..Default::default()
         },
     )
 }

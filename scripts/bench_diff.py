@@ -13,9 +13,11 @@ when any row present in both files regresses past the threshold
 fewer than half of the baseline's timed rows could be matched (which
 means the bench configs drifted and the baseline needs a refresh).
 
-Rows whose median is not a time (e.g. "skipped") are ignored. Rows
-missing on either side are reported but only count toward the
-match-coverage check. Speedups are reported, never required.
+Rows whose median is not a time (e.g. "skipped") are ignored. Baseline
+rows missing from the fresh run count toward the match-coverage check;
+fresh rows missing from the baseline FAIL the gate outright (a new
+bench landed without a seeded baseline row — every timed row must be
+covered). Speedups are reported, never required.
 
 The committed baseline may be *seeded* (meta.provenance starts with
 "seeded"): conservative upper bounds written before the first CI
@@ -89,13 +91,20 @@ def main(argv):
             status = "REGRESSED"
             regressions.append((bench, config, b, f, ratio))
         print(f"{status:>9}  {bench} [{config}]: {b * 1e3:.3f}ms -> {f * 1e3:.3f}ms ({ratio:.2f}x)")
-    for key in sorted(set(fresh) - set(base)):
-        print(f"NEW      {key[0]} [{key[1]}]: {fresh[key] * 1e3:.3f}ms (no baseline yet)")
+    uncovered = sorted(set(fresh) - set(base))
+    for key in uncovered:
+        print(f"NEW      {key[0]} [{key[1]}]: {fresh[key] * 1e3:.3f}ms (uncovered: no baseline row)")
 
     if regressions:
         print(f"\nFAIL: {len(regressions)} row(s) regressed past {threshold:.2f}x:")
         for bench, config, b, f, ratio in regressions:
             print(f"  {bench} [{config}]: {b * 1e3:.3f}ms -> {f * 1e3:.3f}ms ({ratio:.2f}x)")
+        return 1
+    if uncovered:
+        print(f"\nFAIL: {len(uncovered)} fresh row(s) have no baseline coverage:")
+        for bench, config in uncovered:
+            print(f"  {bench} [{config}]")
+        print("seed them in BENCH_baseline.json (conservative ceiling) so the gate covers them")
         return 1
     if not base:
         print("FAIL: baseline has no timed rows")
