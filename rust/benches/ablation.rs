@@ -7,6 +7,7 @@
 //! * **κ choice** (Remark 12): the default `κ = mR/(γn) − λ` vs
 //!   under-/over-regularized prox weights.
 
+#![allow(deprecated)] // positional constructors: shims over the Problem builder
 use dadm::comm::CostModel;
 use dadm::coordinator::{AccDadm, AccDadmOptions, Dadm, DadmOptions};
 use dadm::data::synthetic::SyntheticSpec;

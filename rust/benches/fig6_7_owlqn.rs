@@ -6,6 +6,7 @@
 //! than the batch quasi-Newton baseline, and Acc-DADM keeps its edge as
 //! λ shrinks.
 
+#![allow(deprecated)] // positional constructors: shims over the Problem builder
 use dadm::comm::{Cluster, CostModel};
 use dadm::config::Method;
 use dadm::coordinator::{run_owlqn_distributed, NuChoice};

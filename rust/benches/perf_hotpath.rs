@@ -15,6 +15,7 @@
 //! `target/bench_out/BENCH_perf_hotpath.json` and feed EXPERIMENTS.md
 //! §Perf (before/after iteration log).
 
+#![allow(deprecated)] // positional constructors: shims over the Problem builder
 use dadm::comm::sparse::{tree_allreduce_delta, Delta, SparseDelta};
 use dadm::comm::CostModel;
 use dadm::coordinator::{Dadm, DadmOptions};

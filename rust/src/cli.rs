@@ -11,13 +11,10 @@ use crate::comm::tcp::{shard_specs, synthetic_specs, TcpClusterBuilder, TcpHandl
 use crate::comm::wire::{WireLoss, WireSolver};
 use crate::comm::{Cluster, CostModel};
 use crate::config::{ClusterKind, ExperimentConfig, Method};
-use crate::coordinator::{
-    AccDadm, AccDadmOptions, Checkpoint, Dadm, DadmOptions, DistributedOwlqn, NuChoice,
-    SolveReport,
-};
+use crate::coordinator::{AccDadmOptions, Checkpoint, DadmOptions, NuChoice, Problem, SolveReport};
 use crate::data::{Dataset, Partition};
 use crate::loss::{LossKind, SmoothHinge};
-use crate::reg::{ElasticNet, Zero};
+use crate::reg::ElasticNet;
 use crate::runtime::engine::{Driver, GapCadence, RoundAlgorithm};
 use crate::solver::ProxSdca;
 use anyhow::{bail, Context, Result};
@@ -68,7 +65,8 @@ fn build_cluster(cfg: &ExperimentConfig, data: &Dataset, part: &Partition) -> Re
         ClusterKind::Serial => Cluster::Serial,
         ClusterKind::Threads => Cluster::Threads,
         ClusterKind::Tcp => {
-            let builder = TcpClusterBuilder::bind(&cfg.tcp_listen)?;
+            let builder =
+                TcpClusterBuilder::bind(&cfg.tcp_listen)?.fault_tolerance(cfg.fault_tolerance());
             let addr = builder.local_addr()?;
             println!(
                 "coordinator listening on {addr}; waiting for {} workers \
@@ -136,16 +134,11 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunOutcome> {
             let (algo, cadence, max_rounds): (Box<dyn RoundAlgorithm>, GapCadence, usize) =
                 match cfg.method {
                     Method::Dadm => {
-                        let mut dadm = Dadm::new(
-                            &data,
-                            &part,
-                            loss,
-                            ElasticNet::new(cfg.mu / cfg.lambda),
-                            Zero,
-                            cfg.lambda,
-                            ProxSdca,
-                            dadm_opts.clone(),
-                        );
+                        let mut dadm = Problem::new(&data, &part)
+                            .loss(loss)
+                            .reg(ElasticNet::new(cfg.mu / cfg.lambda))
+                            .lambda(cfg.lambda)
+                            .build_dadm(ProxSdca, dadm_opts.clone());
                         if let Some(path) = &cfg.resume {
                             let ck = Checkpoint::load_file(std::path::Path::new(path))
                                 .with_context(|| format!("resume from {path}"))?;
@@ -163,24 +156,22 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunOutcome> {
                         )
                     }
                     Method::AccDadm => {
-                        let acc = AccDadm::new(
-                            &data,
-                            &part,
-                            loss,
-                            Zero,
-                            cfg.lambda,
-                            cfg.mu,
-                            ProxSdca,
-                            AccDadmOptions {
-                                nu: if cfg.nu_theory {
-                                    NuChoice::Theory
-                                } else {
-                                    NuChoice::Zero
+                        let acc = Problem::new(&data, &part)
+                            .loss(loss)
+                            .lambda(cfg.lambda)
+                            .l1(cfg.mu)
+                            .build_acc_dadm(
+                                ProxSdca,
+                                AccDadmOptions {
+                                    nu: if cfg.nu_theory {
+                                        NuChoice::Theory
+                                    } else {
+                                        NuChoice::Zero
+                                    },
+                                    dadm: dadm_opts.clone(),
+                                    ..Default::default()
                                 },
-                                dadm: dadm_opts.clone(),
-                                ..Default::default()
-                            },
-                        );
+                            );
                         (
                             Box::new(acc),
                             GapCadence::AlgorithmDriven,
@@ -188,17 +179,16 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunOutcome> {
                         )
                     }
                     Method::Owlqn => {
-                        let owlqn = DistributedOwlqn::new(
-                            &data,
-                            &part,
-                            loss,
-                            cfg.lambda,
-                            cfg.mu,
-                            cfg.max_passes as usize,
-                            cluster.clone(),
-                            cost,
-                            cfg.local_threads,
-                        );
+                        let owlqn = Problem::new(&data, &part)
+                            .loss(loss)
+                            .lambda(cfg.lambda)
+                            .l1(cfg.mu)
+                            .build_owlqn(
+                                cfg.max_passes as usize,
+                                cluster.clone(),
+                                cost,
+                                cfg.local_threads,
+                            );
                         (
                             Box::new(owlqn),
                             GapCadence::EveryRounds(1),
@@ -296,7 +286,7 @@ fn worker_main(args: &[String]) -> Result<()> {
         }
     }
     let addr = connect.context("worker requires `--connect host:port`")?;
-    crate::comm::tcp::run_worker(&addr)
+    Ok(crate::comm::tcp::run_worker(&addr)?)
 }
 
 /// Entry point used by `main.rs`.
@@ -312,7 +302,8 @@ pub fn main_with_args(args: &[String]) -> Result<()> {
              Keys: dataset scale method loss solver lambda mu machines sp eps\n\
                    max-passes gap-every conj-resum-every cluster tcp-listen\n\
                    local-threads seed nu comm-alpha comm-beta sparse-comm\n\
-                   compress overlap checkpoint checkpoint-every resume\n\n\
+                   compress overlap checkpoint checkpoint-every resume\n\
+                   worker-timeout heartbeat-every max-rejoins\n\n\
              --cluster serial|threads|tcp (default serial)\n  \
              Execution backend for the per-machine local steps. `serial`\n  \
              and `threads` simulate the cluster in-process; `tcp` is a\n  \
@@ -375,6 +366,18 @@ pub fn main_with_args(args: &[String]) -> Result<()> {
              is fed back into the next round's delta (error feedback),\n  \
              so the solve still converges to the same solution; i16\n  \
              cuts dense payloads to 2 bytes per element (vs 8).\n\n\
+             --worker-timeout S / --heartbeat-every S / --max-rejoins N\n  \
+             (defaults 30 / 5 / 0; cluster=tcp only — DESIGN.md §14.)\n  \
+             Liveness and fault tolerance for remote workers: while a\n  \
+             reply is pending the coordinator probes each worker every\n  \
+             heartbeat-every seconds and declares it dead after\n  \
+             worker-timeout seconds of silence — a typed WorkerFault\n  \
+             error instead of an indefinite hang. With max-rejoins > 0\n  \
+             up to N deaths are healed in place: the coordinator\n  \
+             re-listens, re-ships the dead worker's assignment plus a\n  \
+             replay of every frame it had already consumed, verifies the\n  \
+             rebuilt replica bit-for-bit, and resumes — the trace is\n  \
+             bit-identical to an uninterrupted run.\n\n\
              --overlap true|false (default false, dadm only)\n  \
              Double-buffered rounds: issue round t+1's fused local-step\n  \
              dispatch while round t's reduce and global step complete,\n  \

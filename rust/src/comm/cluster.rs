@@ -53,17 +53,35 @@ pub struct ParallelRun<T> {
 }
 
 impl Cluster {
-    /// The TCP handle, when this is the TCP backend.
-    pub fn tcp(&self) -> Option<&TcpHandle> {
+    /// The remote transport handle, when the machines live in other OS
+    /// processes — the **one** dispatch point coordinators branch on:
+    /// `Some` routes an operation through the typed wire ops, `None`
+    /// runs it in-process via [`Cluster::run`]. (The handle locks
+    /// internally, so a shared reference carries full wire-op access.)
+    pub fn remote(&self) -> Option<&TcpHandle> {
         match self {
             Cluster::Tcp(h) => Some(h),
             _ => None,
         }
     }
 
-    /// Whether this is the multi-process TCP backend.
-    pub fn is_tcp(&self) -> bool {
-        matches!(self, Cluster::Tcp(_))
+    /// Whether solver state can be checkpointed/restored on this
+    /// backend. Remote workers own their dual variables — the
+    /// coordinator cannot serialize state it does not hold — so only
+    /// the in-process backends support it (fault tolerance for remote
+    /// workers is the §14 resurrection protocol instead).
+    pub fn supports_checkpoint(&self) -> bool {
+        self.remote().is_none()
+    }
+
+    /// Whether per-machine [`WorkerState`]s are observable in this
+    /// process (state introspection, invariant checks, direct dual
+    /// reads). False for the remote backend, where that state lives in
+    /// other processes.
+    ///
+    /// [`WorkerState`]: crate::solver::WorkerState
+    pub fn has_local_workers(&self) -> bool {
+        self.remote().is_none()
     }
 
     /// Whether a machine's *intra*-machine legs (sub-shard solvers, eval

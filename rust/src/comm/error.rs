@@ -1,0 +1,274 @@
+//! Typed communication errors (DESIGN.md §14).
+//!
+//! Every fallible operation in `comm/` returns [`CommResult`]: a
+//! [`CommError`] that callers *match on* — death detection in the
+//! fault-tolerant TCP backend dispatches on [`CommError::Disconnect`] /
+//! [`CommError::Timeout`] variants, never on rendered message strings
+//! (the pre-PR-8 `is_disconnect` hack). The `worker` slot carries the
+//! machine index once the failing connection is known; errors raised
+//! below that attribution point (inside [`super::wire`], inside a single
+//! socket read) travel with `None` and are tagged by the first caller
+//! that knows which machine it was talking to ([`CommError::for_worker`]).
+//!
+//! [`CommError`] implements [`std::error::Error`], so non-`comm` callers
+//! (`cli`, examples, tests) keep using `?` into `anyhow::Result` through
+//! the std-error blanket — the typed boundary is `comm/`-internal and
+//! costs the rest of the crate nothing.
+
+use std::fmt;
+use std::io;
+
+use super::wire::WireError;
+
+/// `Result` alias every `comm/` operation uses.
+pub type CommResult<T> = Result<T, CommError>;
+
+/// A communication failure, classified for programmatic dispatch.
+#[derive(Debug)]
+pub enum CommError {
+    /// The peer hung up: clean EOF, connection reset, or broken pipe.
+    /// A killed worker process surfaces here (the OS closes its sockets
+    /// immediately), so death detection is usually instant.
+    Disconnect {
+        /// Machine index of the dead connection, once attributed.
+        worker: Option<u32>,
+    },
+    /// No frame arrived within the configured `--worker-timeout`: the
+    /// peer process is alive enough to keep the socket open but wedged
+    /// (or the network is partitioned).
+    Timeout {
+        /// Machine index of the silent connection, once attributed.
+        worker: Option<u32>,
+    },
+    /// The wire codec rejected a frame (malformed payload, unknown tag,
+    /// oversized length) or could not represent one (encode-side caps).
+    Decode(WireError),
+    /// Handshake version disagreement — the peer speaks a different
+    /// protocol revision.
+    VersionSkew {
+        /// The version the peer announced.
+        theirs: u16,
+        /// The version this side speaks ([`super::wire::WIRE_VERSION`]).
+        ours: u16,
+    },
+    /// The worker itself reported a failure (a [`super::wire::Frame::Error`]
+    /// frame): the transport is healthy, the remote computation is not.
+    WorkerFault {
+        /// Machine index of the faulting worker.
+        id: u32,
+        /// The worker's rendered failure message, verbatim.
+        message: String,
+    },
+    /// Any other I/O failure on the socket.
+    Io {
+        /// Machine index of the failing connection, once attributed.
+        worker: Option<u32>,
+        /// The underlying OS error.
+        source: io::Error,
+    },
+}
+
+impl CommError {
+    /// Attribute this error to machine `id` (fills the `worker` slot on
+    /// the connection-level variants; fault/decode/skew variants already
+    /// carry their own context and pass through unchanged).
+    #[must_use]
+    pub fn for_worker(self, id: u32) -> Self {
+        match self {
+            CommError::Disconnect { worker: None } => CommError::Disconnect { worker: Some(id) },
+            CommError::Timeout { worker: None } => CommError::Timeout { worker: Some(id) },
+            CommError::Io {
+                worker: None,
+                source,
+            } => CommError::Io {
+                worker: Some(id),
+                source,
+            },
+            other => other,
+        }
+    }
+
+    /// The machine index this error is attributed to, if known.
+    pub fn worker(&self) -> Option<u32> {
+        match self {
+            CommError::Disconnect { worker }
+            | CommError::Timeout { worker }
+            | CommError::Io { worker, .. } => *worker,
+            CommError::WorkerFault { id, .. } => Some(*id),
+            CommError::Decode(_) | CommError::VersionSkew { .. } => None,
+        }
+    }
+
+    /// Whether this failure means the *connection* is dead or silent —
+    /// the condition that triggers resurrection (a [`CommError::WorkerFault`]
+    /// is a healthy transport reporting a computation error; replaying
+    /// the same work would fault identically, so it is not recoverable).
+    pub fn is_connection_death(&self) -> bool {
+        matches!(
+            self,
+            CommError::Disconnect { .. } | CommError::Timeout { .. }
+        )
+    }
+}
+
+fn fmt_worker(worker: &Option<u32>) -> String {
+    match worker {
+        Some(id) => format!("worker {id}"),
+        None => "peer".to_string(),
+    }
+}
+
+impl fmt::Display for CommError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CommError::Disconnect { worker } => {
+                write!(f, "{} disconnected", fmt_worker(worker))
+            }
+            CommError::Timeout { worker } => {
+                write!(f, "{} timed out (no frame within the liveness deadline)", fmt_worker(worker))
+            }
+            CommError::Decode(e) => write!(f, "wire codec error: {e}"),
+            CommError::VersionSkew { theirs, ours } => write!(
+                f,
+                "protocol version mismatch: peer speaks v{theirs}, this side v{ours}"
+            ),
+            CommError::WorkerFault { id, message } => {
+                write!(f, "worker {id} fault: {message}")
+            }
+            CommError::Io { worker, source } => {
+                write!(f, "i/o error on {}: {source}", fmt_worker(worker))
+            }
+        }
+    }
+}
+
+impl std::error::Error for CommError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CommError::Decode(e) => Some(e),
+            CommError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+/// Classify an OS error: hangup kinds become [`CommError::Disconnect`],
+/// deadline kinds [`CommError::Timeout`], the rest [`CommError::Io`] —
+/// all unattributed until a caller knows the machine index.
+impl From<io::Error> for CommError {
+    fn from(e: io::Error) -> Self {
+        match e.kind() {
+            io::ErrorKind::UnexpectedEof
+            | io::ErrorKind::ConnectionReset
+            | io::ErrorKind::ConnectionAborted
+            | io::ErrorKind::BrokenPipe => CommError::Disconnect { worker: None },
+            io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut => {
+                CommError::Timeout { worker: None }
+            }
+            _ => CommError::Io {
+                worker: None,
+                source: e,
+            },
+        }
+    }
+}
+
+impl From<WireError> for CommError {
+    fn from(e: WireError) -> Self {
+        match e {
+            WireError::VersionSkew { got, want } => CommError::VersionSkew {
+                theirs: got,
+                ours: want,
+            },
+            other => CommError::Decode(other),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn io_kinds_classify_into_variants() {
+        for kind in [
+            io::ErrorKind::UnexpectedEof,
+            io::ErrorKind::ConnectionReset,
+            io::ErrorKind::ConnectionAborted,
+            io::ErrorKind::BrokenPipe,
+        ] {
+            let e = CommError::from(io::Error::new(kind, "x"));
+            assert!(
+                matches!(e, CommError::Disconnect { worker: None }),
+                "{kind:?} must classify as Disconnect, got {e:?}"
+            );
+        }
+        for kind in [io::ErrorKind::WouldBlock, io::ErrorKind::TimedOut] {
+            let e = CommError::from(io::Error::new(kind, "x"));
+            assert!(
+                matches!(e, CommError::Timeout { worker: None }),
+                "{kind:?} must classify as Timeout, got {e:?}"
+            );
+        }
+        let e = CommError::from(io::Error::new(io::ErrorKind::PermissionDenied, "x"));
+        assert!(matches!(e, CommError::Io { worker: None, .. }));
+    }
+
+    #[test]
+    fn for_worker_attributes_connection_variants_only() {
+        let e = CommError::Disconnect { worker: None }.for_worker(3);
+        assert_eq!(e.worker(), Some(3));
+        let e = CommError::Timeout { worker: None }.for_worker(1);
+        assert_eq!(e.worker(), Some(1));
+        // Already-attributed errors keep their first attribution.
+        let e = CommError::Disconnect { worker: Some(2) }.for_worker(9);
+        assert_eq!(e.worker(), Some(2));
+        // Fault/skew variants pass through unchanged.
+        let e = CommError::VersionSkew { theirs: 3, ours: 5 }.for_worker(0);
+        assert_eq!(e.worker(), None);
+    }
+
+    #[test]
+    fn version_skew_maps_from_wire_error() {
+        let e = CommError::from(WireError::VersionSkew { got: 4, want: 5 });
+        match e {
+            CommError::VersionSkew { theirs, ours } => {
+                assert_eq!((theirs, ours), (4, 5));
+            }
+            other => panic!("expected VersionSkew, got {other:?}"),
+        }
+        let e = CommError::from(WireError::Malformed("bad".into()));
+        assert!(matches!(e, CommError::Decode(_)));
+    }
+
+    #[test]
+    fn display_names_the_worker_and_keeps_fault_messages() {
+        let e = CommError::WorkerFault {
+            id: 2,
+            message: "no partition assigned".into(),
+        };
+        let s = format!("{e}");
+        assert!(s.contains("worker 2"), "{s}");
+        assert!(s.contains("no partition assigned"), "{s}");
+
+        let e = CommError::Disconnect { worker: Some(1) };
+        assert!(format!("{e}").contains("worker 1"));
+
+        let e = CommError::VersionSkew { theirs: 4, ours: 5 };
+        let s = format!("{e}");
+        assert!(s.contains("version"), "{s}");
+        assert!(s.contains("v4") && s.contains("v5"), "{s}");
+    }
+
+    #[test]
+    fn connection_death_is_disconnect_or_timeout() {
+        assert!(CommError::Disconnect { worker: None }.is_connection_death());
+        assert!(CommError::Timeout { worker: Some(0) }.is_connection_death());
+        assert!(!CommError::Decode(WireError::FrameTooLarge { len: 1 }).is_connection_death());
+        assert!(!CommError::WorkerFault {
+            id: 0,
+            message: String::new()
+        }
+        .is_connection_death());
+    }
+}

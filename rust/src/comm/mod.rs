@@ -25,6 +25,7 @@
 pub mod allreduce;
 pub mod cluster;
 pub mod cost;
+pub mod error;
 pub mod pool;
 pub mod sparse;
 pub mod tcp;
@@ -32,6 +33,7 @@ pub mod wire;
 
 pub use cluster::{run_subgroup, Cluster};
 pub use cost::CostModel;
+pub use error::{CommError, CommResult};
 pub use pool::WorkerPool;
 pub use sparse::{Delta, SparseDelta};
-pub use tcp::{TcpCluster, TcpClusterBuilder, TcpHandle, WireStats};
+pub use tcp::{FaultTolerance, TcpCluster, TcpClusterBuilder, TcpHandle, WireStats};

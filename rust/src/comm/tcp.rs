@@ -1,4 +1,4 @@
-//! The multi-process TCP cluster backend (DESIGN.md §9).
+//! The multi-process TCP cluster backend (DESIGN.md §9, §14).
 //!
 //! One coordinator process drives `m` worker processes over loopback or
 //! a real network. Each worker hosts one machine's state — as
@@ -23,36 +23,113 @@
 //!   | --- Ack ---------------->  |
 //! ```
 //!
-//! Failure semantics: handshake and assignment errors are recoverable
-//! `Err`s on the coordinator (a malformed or version-skewed worker never
-//! panics the coordinator); once a solve is in flight, a transport
-//! failure aborts the solve with a descriptive panic — there is no
-//! partial-round recovery, matching the synchronous semantics of
-//! Algorithm 2. Workers exit on `Shutdown`, on coordinator disconnect,
-//! or after reporting an `Error` frame.
+//! Failure semantics (DESIGN.md §14): every fallible operation returns a
+//! typed [`CommError`] — never a panic, never a hang. Connections run
+//! under a liveness regime ([`FaultTolerance`]): socket reads time out
+//! every `heartbeat_every`, each expiry probes the worker with a
+//! `Heartbeat` frame (a dead route fails the probe write immediately),
+//! and a worker that produces no frame within `worker_timeout` is
+//! *declared dead*. A declared-dead worker either surfaces as a typed
+//! [`CommError::WorkerFault`] (resurrection disabled or budget
+//! exhausted) or is deterministically **resurrected**: the coordinator
+//! re-listens on its retained listener, re-admits a replacement process
+//! via the `Rejoin` handshake — re-shipping the dead machine's original
+//! [`ProblemSpec`] plus the replay log of every state-mutating frame it
+//! had fully processed and the coordinator's shadow ṽ replica as a
+//! bitwise determinism cross-check — then resends the not-yet-retired
+//! in-flight frames in FIFO order, so the solve's trace is
+//! bit-identical to an uninterrupted run. Workers exit cleanly on
+//! `Shutdown` or on coordinator disconnect.
 //!
 //! The coordinator records **actual wire bytes** (header + payload, both
 //! directions) in [`WireStats`]; `Dadm::wire_bytes` surfaces them so the
 //! `sparse_comm` α-β cost model can be validated against real traffic.
 
-use anyhow::{bail, ensure, Context, Result};
-use std::io::{BufReader, BufWriter, Write};
+use std::collections::VecDeque;
+use std::io::{BufReader, BufWriter, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use super::allreduce::tree_sum;
 use super::cluster::run_subgroup;
+use super::error::{CommError, CommResult};
 use super::sparse::{compress_delta, tree_allreduce_delta, Delta, DeltaCodec};
 use super::wire::{
     shard_data_spec, write_broadcast, write_eval, write_local_step, BroadcastRef, DataSpec,
-    EvalOp, Frame, ProblemSpec, StepFlags, WireBroadcast, WireLoss, WireReg, WireSolver,
-    WIRE_MAGIC, WIRE_VERSION,
+    EvalOp, Frame, ProblemSpec, StepFlags, WireBroadcast, WireError, WireLoss, WireReg,
+    WireSolver, FRAME_HEADER_BYTES, MAX_FRAME_LEN, WIRE_MAGIC, WIRE_VERSION,
 };
 use crate::data::partition::split_ranges;
 use crate::data::{Dataset, Partition};
 use crate::solver::{batch_size, machine_rngs, run_fused_step, WorkerState};
 use crate::utils::Rng;
+
+/// A worker-attributed fault: the transport (or the worker itself)
+/// failed in a way tied to machine `l`.
+fn fault(l: usize, message: String) -> CommError {
+    CommError::WorkerFault {
+        id: l as u32,
+        message,
+    }
+}
+
+/// A protocol/usage error with no particular worker to blame
+/// (mis-sized spec lists, unexpected frame kinds during negotiation).
+fn proto(message: String) -> CommError {
+    CommError::Decode(WireError::Malformed(message))
+}
+
+/// Worker-side `bail!`: hosted computation reports failures as plain
+/// rendered strings — [`serve`] ships them verbatim in a
+/// [`Frame::Error`], and the coordinator re-types them as
+/// [`CommError::WorkerFault`].
+macro_rules! wbail {
+    ($($arg:tt)*) => {
+        return Err(format!($($arg)*))
+    };
+}
+
+/// Worker-side `ensure!` over [`wbail!`].
+macro_rules! wensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            wbail!($($arg)*);
+        }
+    };
+}
+
+/// Liveness + resurrection policy for one cluster (DESIGN.md §14;
+/// `--worker-timeout` / `--heartbeat-every` / `--max-rejoins`).
+///
+/// `worker_timeout` bounds one *logical* receive: a worker that
+/// produces no frame for that long is declared dead, so it must exceed
+/// the longest compute leg (plus, under resurrection, the replay time
+/// of a rejoining worker). `heartbeat_every` is the probe cadence —
+/// each expiry of the socket read timeout sends one `Heartbeat`, so a
+/// dead *route* (as opposed to a dead process, which surfaces instantly
+/// as EOF/RST) fails the probe write well before the deadline.
+/// `max_rejoins = 0` disables resurrection: death surfaces as a typed
+/// [`CommError::WorkerFault`] instead.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultTolerance {
+    /// Declare a worker dead after this long without a frame.
+    pub worker_timeout: Duration,
+    /// Probe cadence while waiting (also the socket read timeout).
+    pub heartbeat_every: Duration,
+    /// How many worker deaths may be healed by resurrection (0 = none).
+    pub max_rejoins: u32,
+}
+
+impl Default for FaultTolerance {
+    fn default() -> Self {
+        FaultTolerance {
+            worker_timeout: Duration::from_secs(30),
+            heartbeat_every: Duration::from_secs(5),
+            max_rejoins: 0,
+        }
+    }
+}
 
 /// Cumulative transport counters (coordinator side; bytes include the
 /// 5-byte frame header).
@@ -79,12 +156,22 @@ impl WireStats {
     }
 }
 
+/// An outsized one-off frame (a shard-carrying AssignPartition can
+/// legally approach [`MAX_FRAME_LEN`]) must not pin its payload size
+/// for a connection's lifetime; steady-state frames sit far below this
+/// cap, so the scratch reuse is undisturbed.
+const MAX_RETAINED_PAYLOAD: usize = 1 << 20;
+
 /// One framed, buffered, byte-counted connection. The encode and
 /// payload-read scratch buffers persist for the connection's lifetime,
 /// so the per-message hot path allocates no fresh frame `Vec`s.
+/// With `liveness` set (coordinator side), receives run under the §14
+/// deadline/heartbeat regime instead of blocking indefinitely.
 struct Framed {
     r: BufReader<TcpStream>,
     w: BufWriter<TcpStream>,
+    /// §14 liveness regime; `None` blocks indefinitely (worker side).
+    liveness: Option<FaultTolerance>,
     sent: u64,
     received: u64,
     frames_sent: u64,
@@ -96,13 +183,14 @@ struct Framed {
 }
 
 impl Framed {
-    fn new(stream: TcpStream) -> Result<Self> {
+    fn new(stream: TcpStream) -> CommResult<Self> {
         // One small frame per barrier: latency matters, Nagle does not.
         stream.set_nodelay(true).ok();
-        let r = BufReader::new(stream.try_clone().context("cloning stream")?);
+        let r = BufReader::new(stream.try_clone()?);
         Ok(Framed {
             r,
             w: BufWriter::new(stream),
+            liveness: None,
             sent: 0,
             received: 0,
             frames_sent: 0,
@@ -112,37 +200,130 @@ impl Framed {
         })
     }
 
-    fn send(&mut self, frame: &Frame) -> Result<()> {
+    /// Switch the §14 liveness regime on (`Some`) or off (`None`): the
+    /// socket read timeout becomes the heartbeat cadence, so a blocked
+    /// receive wakes up to probe instead of waiting forever.
+    fn set_liveness(&mut self, ft: Option<FaultTolerance>) -> CommResult<()> {
+        self.r
+            .get_ref()
+            .set_read_timeout(ft.map(|f| f.heartbeat_every))?;
+        self.liveness = ft;
+        Ok(())
+    }
+
+    fn send(&mut self, frame: &Frame) -> CommResult<()> {
         self.enc_buf.clear();
         frame.write_to(&mut self.enc_buf)?;
-        self.w.write_all(&self.enc_buf).context("writing frame")?;
+        self.w.write_all(&self.enc_buf)?;
         self.sent += self.enc_buf.len() as u64;
         self.frames_sent += 1;
-        self.w.flush().context("flushing frame")?;
+        self.w.flush()?;
         Ok(())
     }
 
     /// Write one pre-encoded frame (fan-out path: encode once, send the
     /// same bytes to every worker).
-    fn send_bytes(&mut self, bytes: &[u8]) -> Result<()> {
-        self.w.write_all(bytes).context("writing frame")?;
+    fn send_bytes(&mut self, bytes: &[u8]) -> CommResult<()> {
+        self.w.write_all(bytes)?;
         self.sent += bytes.len() as u64;
         self.frames_sent += 1;
-        self.w.flush().context("flushing frame")?;
+        self.w.flush()?;
         Ok(())
     }
 
-    fn recv(&mut self) -> Result<Frame> {
-        let (frame, bytes) = Frame::read_from_reusing(&mut self.r, &mut self.dec_buf)?;
+    /// Receive the next substantive frame. `HeartbeatAck`s — a live but
+    /// slow worker answering our probes — are counted and skipped; they
+    /// do **not** extend the liveness deadline, which spans the whole
+    /// logical receive (otherwise a live-idle worker acking probes could
+    /// stall an erroneous wait forever, violating the never-hang
+    /// guarantee).
+    fn recv(&mut self) -> CommResult<Frame> {
+        match self.liveness {
+            None => loop {
+                let (frame, bytes) = Frame::read_from_reusing(&mut self.r, &mut self.dec_buf)?;
+                self.received += bytes as u64;
+                self.frames_received += 1;
+                self.dec_buf.shrink_to(MAX_RETAINED_PAYLOAD);
+                if !matches!(frame, Frame::HeartbeatAck) {
+                    return Ok(frame);
+                }
+            },
+            Some(ft) => {
+                // dadm-lint: allow(wall-clock) — liveness deadline anchor for this logical receive (§14); drives failure detection, never the algorithm
+                let start = Instant::now();
+                loop {
+                    let frame = self.recv_live(ft, start)?;
+                    if !matches!(frame, Frame::HeartbeatAck) {
+                        return Ok(frame);
+                    }
+                }
+            }
+        }
+    }
+
+    /// One deadline-guarded frame receive (scratch-buffer dance around
+    /// [`Framed::recv_live_into`], which needs the buffer detached from
+    /// `self` to read and probe concurrently).
+    fn recv_live(&mut self, ft: FaultTolerance, start: Instant) -> CommResult<Frame> {
+        let mut buf = std::mem::take(&mut self.dec_buf);
+        let res = self.recv_live_into(ft, start, &mut buf);
+        buf.shrink_to(MAX_RETAINED_PAYLOAD);
+        self.dec_buf = buf;
+        res
+    }
+
+    /// Assemble one full frame (header + payload) under the liveness
+    /// deadline, then decode it from the completed buffer. Assembling
+    /// first is what makes socket-timeout wakeups safe: `read_exact`
+    /// leaves unspecified partial state across errors, so the fill loop
+    /// below tracks its own progress instead.
+    fn recv_live_into(
+        &mut self,
+        ft: FaultTolerance,
+        start: Instant,
+        buf: &mut Vec<u8>,
+    ) -> CommResult<Frame> {
+        buf.resize(FRAME_HEADER_BYTES, 0);
+        self.fill_live(ft, start, &mut buf[..])?;
+        let len = u32::from_le_bytes([buf[1], buf[2], buf[3], buf[4]]);
+        if len > MAX_FRAME_LEN {
+            return Err(WireError::FrameTooLarge { len: len as usize }.into());
+        }
+        buf.resize(FRAME_HEADER_BYTES + len as usize, 0);
+        self.fill_live(ft, start, &mut buf[FRAME_HEADER_BYTES..])?;
+        let mut r: &[u8] = buf;
+        let (frame, bytes) = Frame::read_from(&mut r)?;
         self.received += bytes as u64;
         self.frames_received += 1;
-        // An outsized one-off frame (a shard-carrying AssignPartition can
-        // legally approach MAX_FRAME_LEN) must not pin its payload size
-        // for the connection's lifetime; steady-state frames sit far
-        // below this cap, so the scratch reuse is undisturbed.
-        const MAX_RETAINED_PAYLOAD: usize = 1 << 20;
-        self.dec_buf.shrink_to(MAX_RETAINED_PAYLOAD);
         Ok(frame)
+    }
+
+    /// Fill `buf` completely, probing with a `Heartbeat` on every read
+    /// timeout and declaring death once `start` ages past the
+    /// `worker_timeout` deadline. A dead process surfaces instantly
+    /// (EOF / connection reset); a dead route fails the probe write.
+    fn fill_live(&mut self, ft: FaultTolerance, start: Instant, buf: &mut [u8]) -> CommResult<()> {
+        let mut filled = 0;
+        while filled < buf.len() {
+            match self.r.read(&mut buf[filled..]) {
+                Ok(0) => return Err(CommError::Disconnect { worker: None }),
+                Ok(n) => filled += n,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    if start.elapsed() >= ft.worker_timeout {
+                        return Err(CommError::Timeout { worker: None });
+                    }
+                    self.send(&Frame::Heartbeat)?;
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        Ok(())
     }
 }
 
@@ -154,38 +335,51 @@ impl Framed {
 /// callers can learn the ephemeral port before spawning workers).
 pub struct TcpClusterBuilder {
     listener: TcpListener,
+    ft: FaultTolerance,
 }
 
 impl TcpClusterBuilder {
     /// Bind the coordinator listener (e.g. `"127.0.0.1:0"`).
-    pub fn bind(addr: &str) -> Result<Self> {
+    pub fn bind(addr: &str) -> CommResult<Self> {
         Ok(TcpClusterBuilder {
-            listener: TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?,
+            listener: TcpListener::bind(addr)?,
+            ft: FaultTolerance::default(),
         })
     }
 
     /// The bound address (resolves `:0` to the actual port).
-    pub fn local_addr(&self) -> Result<SocketAddr> {
-        self.listener.local_addr().context("local_addr")
+    pub fn local_addr(&self) -> CommResult<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Set the §14 liveness/resurrection policy (defaults to
+    /// [`FaultTolerance::default`]: 30 s deadline, 5 s probes, no
+    /// resurrection).
+    pub fn fault_tolerance(mut self, ft: FaultTolerance) -> Self {
+        self.ft = ft;
+        self
     }
 
     /// Accept and handshake exactly `m` workers (accept order = machine
     /// index). A worker speaking the wrong magic/version receives an
-    /// `Error` frame and the accept returns `Err` — never panics.
-    pub fn accept(self, m: usize) -> Result<TcpCluster> {
-        ensure!(m >= 1, "need at least one worker");
+    /// `Error` frame and the accept returns a typed
+    /// [`CommError::VersionSkew`] / [`CommError::Decode`] — never
+    /// panics. The listener is retained for §14 resurrection.
+    pub fn accept(self, m: usize) -> CommResult<TcpCluster> {
+        if m < 1 {
+            return Err(proto("need at least one worker".into()));
+        }
         let mut conns = Vec::with_capacity(m);
         for worker_id in 0..m {
-            let (stream, peer) = self.listener.accept().context("accepting worker")?;
+            let (stream, _peer) = self.listener.accept()?;
             let mut conn = Framed::new(stream)?;
-            let hello = conn
-                .recv()
-                .with_context(|| format!("handshake with {peer}"))?;
+            conn.set_liveness(Some(self.ft))?;
+            let hello = conn.recv()?;
             if let Err(e) = hello.expect_hello() {
                 let _ = conn.send(&Frame::Error {
-                    message: format!("{e:#}"),
+                    message: format!("{e}"),
                 });
-                return Err(e.context(format!("worker {peer} rejected")));
+                return Err(e.into());
             }
             conn.send(&Frame::Welcome {
                 version: WIRE_VERSION,
@@ -195,10 +389,18 @@ impl TcpClusterBuilder {
             conns.push(conn);
         }
         Ok(TcpCluster {
+            listener: self.listener,
+            ft: self.ft,
             conns,
             shut_down: false,
             frame_buf: Vec::new(),
             delta_reply_bytes: 0,
+            specs: Vec::new(),
+            shadow_v: Vec::new(),
+            replay: Vec::new(),
+            inflight: VecDeque::new(),
+            rejoins_used: 0,
+            rejoins_pending: 0,
         })
     }
 }
@@ -218,20 +420,49 @@ pub struct StepReply {
 }
 
 /// The coordinator's view of the worker fleet: one framed connection per
-/// machine, in machine order.
+/// machine, in machine order — plus the §14 resurrection state: the
+/// retained listener, the per-machine [`ProblemSpec`]s, the replay log
+/// of retired state-mutating frames, the in-flight (issued but not yet
+/// retired) frames, and a shadow of the workers' ṽ replica used as the
+/// bitwise determinism cross-check in the `Rejoin` handshake.
 pub struct TcpCluster {
+    /// Retained after accept so replacement workers can reconnect.
+    listener: TcpListener,
+    ft: FaultTolerance,
     conns: Vec<Framed>,
     shut_down: bool,
     /// Reused fan-out encode scratch (one encode, m sends).
     frame_buf: Vec<u8>,
     /// Cumulative bytes of received `DeltaReply` frames.
     delta_reply_bytes: u64,
+    /// The specs as assigned, in machine order (resurrection re-ships
+    /// the dead machine's).
+    specs: Vec<ProblemSpec>,
+    /// Shadow of every worker's ṽ replica, advanced at frame-retire
+    /// time by re-decoding the retired frame's exact wire bytes — the
+    /// same bytes every worker applied, so the shadow matches the
+    /// replicas bit for bit (codec images round-trip exactly, §13).
+    /// Empty when resurrection is disabled.
+    shadow_v: Vec<f64>,
+    /// Encoded state-mutating frames every worker has fully processed
+    /// (retired), in order — the `Rejoin` replay log.
+    replay: Vec<Vec<u8>>,
+    /// Encoded fan-out frames issued but not yet retired (≤ 2 deep
+    /// under the overlapped engine) — resent verbatim to a resurrected
+    /// worker after its replay.
+    inflight: VecDeque<Vec<u8>>,
+    /// Resurrections performed over the cluster's lifetime.
+    rejoins_used: u32,
+    /// Resurrections since the last [`TcpCluster::take_rejoins`] — the
+    /// engine's `RoundOutcome::retried` telemetry feed.
+    rejoins_pending: usize,
 }
 
 impl std::fmt::Debug for TcpCluster {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("TcpCluster")
             .field("workers", &self.conns.len())
+            .field("rejoins_used", &self.rejoins_used)
             .field("stats", &self.stats())
             .finish()
     }
@@ -243,7 +474,9 @@ impl TcpCluster {
         self.conns.len()
     }
 
-    /// Cumulative transport counters (summed over connections).
+    /// Cumulative transport counters (summed over connections; a
+    /// resurrected connection inherits its predecessor's counters, so
+    /// the totals are monotone across deaths).
     pub fn stats(&self) -> WireStats {
         let mut s = WireStats::default();
         for c in &self.conns {
@@ -256,41 +489,147 @@ impl TcpCluster {
         s
     }
 
-    fn expect_ack(&mut self, l: usize) -> Result<()> {
-        match self.conns[l].recv()? {
+    /// The active §14 policy.
+    pub fn fault_tolerance(&self) -> FaultTolerance {
+        self.ft
+    }
+
+    /// Resurrections performed over the cluster's lifetime.
+    pub fn rejoins_total(&self) -> u32 {
+        self.rejoins_used
+    }
+
+    /// Drain the resurrections-since-last-call counter (the engine's
+    /// per-round `RoundOutcome::retried` telemetry hook).
+    pub fn take_rejoins(&mut self) -> usize {
+        std::mem::take(&mut self.rejoins_pending)
+    }
+
+    /// Whether replay/shadow state is being tracked (resurrection on).
+    fn track(&self) -> bool {
+        self.ft.max_rejoins > 0
+    }
+
+    fn rejoins_left(&self) -> bool {
+        self.rejoins_used < self.ft.max_rejoins
+    }
+
+    fn spec_dim(spec: &ProblemSpec) -> usize {
+        match &spec.data {
+            DataSpec::Synthetic(s) => s.d,
+            DataSpec::Shard { dim, .. } => *dim as usize,
+        }
+    }
+
+    /// Upgrade a connection-death error into the terminal typed fault
+    /// the acceptance criteria require when resurrection cannot run;
+    /// other errors are merely attributed to the machine.
+    fn death_error(&self, l: usize, e: CommError) -> CommError {
+        if e.is_connection_death() {
+            let why = if self.ft.max_rejoins == 0 {
+                "resurrection disabled (--max-rejoins 0)".to_string()
+            } else {
+                format!("rejoin budget exhausted ({} used)", self.rejoins_used)
+            };
+            let e = e.for_worker(l as u32);
+            fault(l, format!("declared dead ({e}); {why}"))
+        } else {
+            e.for_worker(l as u32)
+        }
+    }
+
+    /// Receive worker `l`'s next frame, healing connection death by
+    /// resurrection when the budget allows: the `Rejoin` replay rebuilds
+    /// the dead machine and the in-flight resend re-issues whatever
+    /// frame this receive was waiting on, so the retry loop converges.
+    fn recv_or_recover(&mut self, l: usize) -> CommResult<Frame> {
+        loop {
+            match self.conns[l].recv() {
+                Ok(f) => return Ok(f),
+                Err(e) if e.is_connection_death() && self.rejoins_left() => self.resurrect(l)?,
+                Err(e) => return Err(self.death_error(l, e)),
+            }
+        }
+    }
+
+    fn expect_ack(&mut self, l: usize) -> CommResult<()> {
+        match self.recv_or_recover(l)? {
             Frame::Ack => Ok(()),
-            Frame::Error { message } => bail!("worker {l} failed: {message}"),
-            other => bail!("worker {l}: expected Ack, got {other:?}"),
+            Frame::Error { message } => Err(fault(l, message)),
+            other => Err(fault(l, format!("expected Ack, got {other:?}"))),
         }
     }
 
     /// Ship one [`ProblemSpec`] per worker (machine order) and await the
-    /// build acknowledgements.
-    pub fn assign(&mut self, specs: Vec<ProblemSpec>) -> Result<()> {
-        ensure!(
-            specs.len() == self.conns.len(),
-            "got {} specs for {} workers",
-            specs.len(),
-            self.conns.len()
-        );
-        for (l, spec) in specs.into_iter().enumerate() {
-            ensure!(
-                spec.worker as usize == l && spec.machines as usize == self.conns.len(),
-                "spec {l} is for worker {}/{} machines",
-                spec.worker,
-                spec.machines
-            );
-            self.conns[l].send(&Frame::AssignPartition(Box::new(spec)))?;
+    /// build acknowledgements. The specs are remembered *before* any
+    /// send so a worker that dies mid-assignment can be resurrected —
+    /// the `Rejoin` handshake rebuilds from the stored spec, and its Ack
+    /// doubles as the build acknowledgement (`AssignPartition` is never
+    /// part of the in-flight window).
+    pub fn assign(&mut self, specs: Vec<ProblemSpec>) -> CommResult<()> {
+        if specs.len() != self.conns.len() {
+            return Err(proto(format!(
+                "got {} specs for {} workers",
+                specs.len(),
+                self.conns.len()
+            )));
+        }
+        for (l, spec) in specs.iter().enumerate() {
+            if spec.worker as usize != l || spec.machines as usize != self.conns.len() {
+                return Err(proto(format!(
+                    "spec {l} is for worker {}/{} machines",
+                    spec.worker, spec.machines
+                )));
+            }
+        }
+        self.specs = specs;
+        if self.track() {
+            self.shadow_v = vec![0.0; self.specs.first().map_or(0, Self::spec_dim)];
+            self.replay.clear();
+            self.inflight.clear();
+        }
+        // Fan the specs out first so the workers build concurrently;
+        // `covered` marks machines whose build was acknowledged through
+        // a mid-assignment resurrection instead of a plain Ack.
+        let mut covered = vec![false; self.conns.len()];
+        for l in 0..self.conns.len() {
+            let frame = Frame::AssignPartition(Box::new(self.specs[l].clone()));
+            if let Err(e) = self.conns[l].send(&frame) {
+                if e.is_connection_death() && self.rejoins_left() {
+                    self.resurrect(l)?;
+                    covered[l] = true;
+                } else {
+                    return Err(self.death_error(l, e));
+                }
+            }
         }
         for l in 0..self.conns.len() {
-            self.expect_ack(l).with_context(|| format!("assigning worker {l}"))?;
+            if covered[l] {
+                continue;
+            }
+            match self.conns[l].recv() {
+                Ok(Frame::Ack) => {}
+                Ok(Frame::Error { message }) => return Err(fault(l, message)),
+                Ok(other) => return Err(fault(l, format!("expected Ack, got {other:?}"))),
+                Err(e) if e.is_connection_death() && self.rejoins_left() => self.resurrect(l)?,
+                Err(e) => return Err(self.death_error(l, e)),
+            }
         }
         Ok(())
     }
 
-    fn send_all_bytes(&mut self, bytes: &[u8]) -> Result<()> {
-        for conn in &mut self.conns {
-            conn.send_bytes(bytes)?;
+    fn send_all_bytes(&mut self, bytes: &[u8]) -> CommResult<()> {
+        for l in 0..self.conns.len() {
+            if let Err(e) = self.conns[l].send_bytes(bytes) {
+                if e.is_connection_death() && self.rejoins_left() {
+                    // The in-flight window already holds this frame
+                    // (pushed before the fan-out), so the resurrection's
+                    // resend delivers it — no direct retry needed.
+                    self.resurrect(l)?;
+                } else {
+                    return Err(self.death_error(l, e));
+                }
+            }
         }
         Ok(())
     }
@@ -298,33 +637,98 @@ impl TcpCluster {
     /// Encode one frame into the reusable fan-out scratch and ship the
     /// same bytes to every worker. The buffer always returns to the pool
     /// — even when encoding or a send fails — so the fan-out hot path
-    /// never falls back to per-call allocation.
-    fn send_all_framed(&mut self, enc: impl FnOnce(&mut Vec<u8>) -> Result<usize>) -> Result<()> {
+    /// never falls back to per-call allocation. Under resurrection
+    /// tracking the encoded bytes join the in-flight window *before*
+    /// the fan-out, so a send-time death can replay them.
+    fn send_all_framed(
+        &mut self,
+        enc: impl FnOnce(&mut Vec<u8>) -> CommResult<usize>,
+    ) -> CommResult<()> {
         let mut buf = std::mem::take(&mut self.frame_buf);
         buf.clear();
-        let sent = enc(&mut buf).and_then(|_| self.send_all_bytes(&buf));
+        let sent = enc(&mut buf).and_then(|_| {
+            if self.track() {
+                self.inflight.push_back(buf.clone());
+            }
+            self.send_all_bytes(&buf)
+        });
         self.frame_buf = buf;
         sent
     }
 
+    /// Retire the oldest in-flight frame: every worker has fully
+    /// processed it (all replies collected), so it moves to the replay
+    /// log and its broadcast advances the shadow ṽ — decoded from the
+    /// exact wire bytes the workers applied, for bitwise fidelity.
+    fn retire_inflight(&mut self) -> CommResult<()> {
+        if !self.track() {
+            return Ok(());
+        }
+        let Some(bytes) = self.inflight.pop_front() else {
+            return Ok(());
+        };
+        let mut r: &[u8] = &bytes;
+        let (frame, _) = Frame::read_from(&mut r)?;
+        match &frame {
+            Frame::Broadcast(b) => self.shadow_apply(b),
+            Frame::LocalStep { broadcast, .. } | Frame::Eval { broadcast, .. } => {
+                self.shadow_apply(broadcast)
+            }
+            _ => {}
+        }
+        self.replay.push(bytes);
+        Ok(())
+    }
+
+    /// Mirror one broadcast onto the shadow ṽ exactly the way
+    /// [`apply_broadcast_to`] drives the worker replicas: same f64
+    /// operations in the same order, so shadow and replica stay
+    /// bit-identical (DESIGN.md §13).
+    fn shadow_apply(&mut self, b: &WireBroadcast) {
+        if self.shadow_v.is_empty() {
+            return;
+        }
+        match b {
+            WireBroadcast::Empty => {}
+            WireBroadcast::SparseSet { idx, val } => {
+                for (&j, &x) in idx.iter().zip(val) {
+                    self.shadow_v[j as usize] = x;
+                }
+            }
+            WireBroadcast::DenseSet(v) => self.shadow_v.copy_from_slice(v),
+            WireBroadcast::Add { delta, .. } => match delta {
+                Delta::Sparse(s) => {
+                    for (&j, &dv) in s.idx.iter().zip(&s.val) {
+                        self.shadow_v[j as usize] += dv;
+                    }
+                }
+                Delta::Dense(v) => {
+                    for (sv, dv) in self.shadow_v.iter_mut().zip(v) {
+                        *sv += dv;
+                    }
+                }
+            },
+        }
+    }
+
     /// Swap every worker's regularizer (Acc-DADM stage transition /
     /// initial resync).
-    pub fn set_reg(&mut self, reg: &WireReg) -> Result<()> {
+    pub fn set_reg(&mut self, reg: &WireReg) -> CommResult<()> {
         self.send_all_framed(|buf| Frame::SetReg(reg.clone()).write_to(buf))?;
         for l in 0..self.conns.len() {
             self.expect_ack(l)?;
         }
-        Ok(())
+        self.retire_inflight()
     }
 
     /// Apply a value-setting ṽ update on every worker (resync or
     /// observation flush of a parked `Δṽ`).
-    pub fn broadcast(&mut self, b: BroadcastRef<'_>) -> Result<()> {
+    pub fn broadcast(&mut self, b: BroadcastRef<'_>) -> CommResult<()> {
         self.send_all_framed(|buf| write_broadcast(buf, b))?;
         for l in 0..self.conns.len() {
             self.expect_ack(l)?;
         }
-        Ok(())
+        self.retire_inflight()
     }
 
     /// Ship one fused round leg — parked broadcast + local-step request
@@ -341,7 +745,7 @@ impl TcpCluster {
         b: BroadcastRef<'_>,
         flags: StepFlags,
         codec: DeltaCodec,
-    ) -> Result<()> {
+    ) -> CommResult<()> {
         self.send_all_framed(|buf| write_local_step(buf, lambda, b, flags, codec))
     }
 
@@ -349,17 +753,22 @@ impl TcpCluster {
     /// in machine order. Workers compute concurrently (real processes);
     /// the second return is the slowest worker's reported compute seconds
     /// — the `max_ℓ t_ℓ` the accounting charges as parallel time.
+    ///
+    /// On a round that resurrects a worker, the per-connection byte span
+    /// also covers the rejoin handshake, so `delta_reply_bytes` may be
+    /// inflated for that round — transport accounting, never part of the
+    /// parity-pinned trace.
     pub fn local_step_collect(
         &mut self,
         flags: StepFlags,
         codec: DeltaCodec,
-    ) -> Result<(Vec<StepReply>, f64)> {
+    ) -> CommResult<(Vec<StepReply>, f64)> {
         let mut replies = Vec::with_capacity(self.conns.len());
         let mut parallel_secs = 0.0f64;
         let mut reply_bytes = 0u64;
-        for (l, conn) in self.conns.iter_mut().enumerate() {
-            let before = conn.received;
-            match conn.recv().with_context(|| format!("local step reply {l}"))? {
+        for l in 0..self.conns.len() {
+            let before = self.conns[l].received;
+            match self.recv_or_recover(l)? {
                 Frame::DeltaReply {
                     delta,
                     elapsed_secs,
@@ -367,16 +776,21 @@ impl TcpCluster {
                     conj_sum,
                     codec: reply_codec,
                 } => {
-                    ensure!(
-                        loss_sum.is_some() == flags.eval_loss
-                            && conj_sum.is_some() == flags.want_conj,
-                        "worker {l}: piggybacked telemetry does not match the requested flags"
-                    );
-                    ensure!(
-                        reply_codec == codec,
-                        "worker {l}: reply codec {reply_codec:?} != requested {codec:?}"
-                    );
-                    reply_bytes += conn.received - before;
+                    if loss_sum.is_some() != flags.eval_loss
+                        || conj_sum.is_some() != flags.want_conj
+                    {
+                        return Err(fault(
+                            l,
+                            "piggybacked telemetry does not match the requested flags".into(),
+                        ));
+                    }
+                    if reply_codec != codec {
+                        return Err(fault(
+                            l,
+                            format!("reply codec {reply_codec:?} != requested {codec:?}"),
+                        ));
+                    }
+                    reply_bytes += self.conns[l].received - before;
                     parallel_secs = parallel_secs.max(elapsed_secs);
                     replies.push(StepReply {
                         delta,
@@ -384,11 +798,12 @@ impl TcpCluster {
                         conj_sum,
                     });
                 }
-                Frame::Error { message } => bail!("worker {l} failed: {message}"),
-                other => bail!("worker {l}: expected DeltaReply, got {other:?}"),
+                Frame::Error { message } => return Err(fault(l, message)),
+                other => return Err(fault(l, format!("expected DeltaReply, got {other:?}"))),
             }
         }
         self.delta_reply_bytes += reply_bytes;
+        self.retire_inflight()?;
         Ok((replies, parallel_secs))
     }
 
@@ -399,7 +814,7 @@ impl TcpCluster {
         b: BroadcastRef<'_>,
         flags: StepFlags,
         codec: DeltaCodec,
-    ) -> Result<(Vec<StepReply>, f64)> {
+    ) -> CommResult<(Vec<StepReply>, f64)> {
         self.local_step_issue(lambda, b, flags, codec)?;
         self.local_step_collect(flags, codec)
     }
@@ -410,62 +825,152 @@ impl TcpCluster {
     /// the in-process backends use, so the evaluated gap is bit-identical
     /// across backends (workers pre-reduce their own sub-shard sums with
     /// the same tree, DESIGN.md §10).
-    pub fn eval_sum(&mut self, op: &EvalOp, b: BroadcastRef<'_>) -> Result<f64> {
+    pub fn eval_sum(&mut self, op: &EvalOp, b: BroadcastRef<'_>) -> CommResult<f64> {
         self.send_all_framed(|buf| write_eval(buf, op, b))?;
         let mut sums = Vec::with_capacity(self.conns.len());
-        for (l, conn) in self.conns.iter_mut().enumerate() {
-            match conn.recv()? {
+        for l in 0..self.conns.len() {
+            match self.recv_or_recover(l)? {
                 Frame::Scalar(x) => sums.push(x),
-                Frame::Error { message } => bail!("worker {l} failed: {message}"),
-                other => bail!("worker {l}: expected Scalar, got {other:?}"),
+                Frame::Error { message } => return Err(fault(l, message)),
+                other => return Err(fault(l, format!("expected Scalar, got {other:?}"))),
             }
         }
+        self.retire_inflight()?;
         Ok(tree_sum(&sums))
     }
 
     /// The eval-only fused frame (DESIGN.md §11): apply the pending
     /// broadcast and evaluate *both* duality-gap sums in one exchange.
     /// Returns the tree-combined `(Σφ(x_iᵀw), Σ−φ*(−α))`.
-    pub fn eval_gap_sums(&mut self, b: BroadcastRef<'_>) -> Result<(f64, f64)> {
+    pub fn eval_gap_sums(&mut self, b: BroadcastRef<'_>) -> CommResult<(f64, f64)> {
         self.send_all_framed(|buf| write_eval(buf, &EvalOp::GapSums, b))?;
         let mut losses = Vec::with_capacity(self.conns.len());
         let mut conjs = Vec::with_capacity(self.conns.len());
-        for (l, conn) in self.conns.iter_mut().enumerate() {
-            match conn.recv()? {
-                Frame::GapReply {
-                    loss_sum,
-                    conj_sum,
-                } => {
+        for l in 0..self.conns.len() {
+            match self.recv_or_recover(l)? {
+                Frame::GapReply { loss_sum, conj_sum } => {
                     losses.push(loss_sum);
                     conjs.push(conj_sum);
                 }
-                Frame::Error { message } => bail!("worker {l} failed: {message}"),
-                other => bail!("worker {l}: expected GapReply, got {other:?}"),
+                Frame::Error { message } => return Err(fault(l, message)),
+                other => return Err(fault(l, format!("expected GapReply, got {other:?}"))),
             }
         }
+        self.retire_inflight()?;
         Ok((tree_sum(&losses), tree_sum(&conjs)))
     }
 
     /// OWL-QN smooth-part oracle: per-worker raw `(grad ‖ loss-sum)`
     /// vectors in machine order, plus the slowest worker's compute
     /// seconds.
-    pub fn eval_gradients(&mut self, w: &[f64]) -> Result<(Vec<Vec<f64>>, f64)> {
+    pub fn eval_gradients(&mut self, w: &[f64]) -> CommResult<(Vec<Vec<f64>>, f64)> {
         self.send_all_framed(|buf| {
             write_eval(buf, &EvalOp::GradOracle(w.to_vec()), BroadcastRef::Empty)
         })?;
         let mut grads = Vec::with_capacity(self.conns.len());
         let mut parallel_secs = 0.0f64;
-        for (l, conn) in self.conns.iter_mut().enumerate() {
-            match conn.recv()? {
+        for l in 0..self.conns.len() {
+            match self.recv_or_recover(l)? {
                 Frame::Vector { v, elapsed_secs } => {
                     parallel_secs = parallel_secs.max(elapsed_secs);
                     grads.push(v);
                 }
-                Frame::Error { message } => bail!("worker {l} failed: {message}"),
-                other => bail!("worker {l}: expected Vector, got {other:?}"),
+                Frame::Error { message } => return Err(fault(l, message)),
+                other => return Err(fault(l, format!("expected Vector, got {other:?}"))),
             }
         }
+        self.retire_inflight()?;
         Ok((grads, parallel_secs))
+    }
+
+    /// Replace dead machine `l` with a freshly connected process and
+    /// rebuild it bit-identically (DESIGN.md §14): re-admit on the
+    /// retained listener (bounded by `worker_timeout`), handshake, ship
+    /// the `Rejoin` — original spec + replay log + expected ṽ — await
+    /// its Ack (the worker verifies the rebuilt replica bitwise before
+    /// acking), then resend the in-flight window in FIFO order so the
+    /// interrupted barrier's frames are back on the wire.
+    fn resurrect(&mut self, l: usize) -> CommResult<()> {
+        self.rejoins_used += 1;
+        let spec = self.specs.get(l).cloned().ok_or_else(|| {
+            fault(l, "died before AssignPartition; nothing to resurrect".into())
+        })?;
+        // Poll-accept the replacement: non-blocking with a short sleep,
+        // bounded by the same deadline that declared the old one dead.
+        self.listener.set_nonblocking(true)?;
+        // dadm-lint: allow(wall-clock) — re-admission deadline for the replacement worker (§14); failure detection, never the algorithm
+        let start = Instant::now();
+        let stream = loop {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => break stream,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if start.elapsed() >= self.ft.worker_timeout {
+                        let _ = self.listener.set_nonblocking(false);
+                        return Err(fault(
+                            l,
+                            format!(
+                                "declared dead and no replacement connected within {:?}",
+                                self.ft.worker_timeout
+                            ),
+                        ));
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => {
+                    let _ = self.listener.set_nonblocking(false);
+                    return Err(CommError::from(e).for_worker(l as u32));
+                }
+            }
+        };
+        self.listener.set_nonblocking(false)?;
+        let mut conn = Framed::new(stream)?;
+        conn.set_liveness(Some(self.ft))?;
+        let hello = conn.recv().map_err(|e| e.for_worker(l as u32))?;
+        if let Err(e) = hello.expect_hello() {
+            let _ = conn.send(&Frame::Error {
+                message: format!("{e}"),
+            });
+            return Err(e.into());
+        }
+        conn.send(&Frame::Welcome {
+            version: WIRE_VERSION,
+            worker_id: l as u32,
+            machines: self.conns.len() as u32,
+        })?;
+        // The replacement inherits the dead connection's counters so the
+        // cluster-level transport totals stay monotone.
+        conn.sent += self.conns[l].sent;
+        conn.received += self.conns[l].received;
+        conn.frames_sent += self.conns[l].frames_sent;
+        conn.frames_received += self.conns[l].frames_received;
+        let mut blob = Vec::new();
+        for f in &self.replay {
+            blob.extend_from_slice(f);
+        }
+        conn.send(&Frame::Rejoin {
+            worker_id: l as u32,
+            spec: Box::new(spec),
+            expect_v: self.shadow_v.clone(),
+            replay: blob,
+        })?;
+        match conn.recv() {
+            Ok(Frame::Ack) => {}
+            Ok(Frame::Error { message }) => return Err(fault(l, message)),
+            Ok(other) => return Err(fault(l, format!("expected rejoin Ack, got {other:?}"))),
+            Err(e) => return Err(e.for_worker(l as u32)),
+        }
+        self.conns[l] = conn;
+        // Re-prime the pipeline: the not-yet-retired frames go back on
+        // the wire oldest-first, so the interrupted barrier (and, under
+        // overlap, the round behind it) completes as if uninterrupted.
+        for i in 0..self.inflight.len() {
+            let bytes = self.inflight[i].clone();
+            self.conns[l]
+                .send_bytes(&bytes)
+                .map_err(|e| e.for_worker(l as u32))?;
+        }
+        self.rejoins_pending += 1;
+        Ok(())
     }
 
     /// Orderly fleet shutdown (idempotent, best-effort per worker).
@@ -615,7 +1120,9 @@ struct HostedMachine {
     batch: usize,
 }
 
-/// The worker process's event-loop state.
+/// The worker process's event-loop state. Hosted computation reports
+/// failures as rendered `String`s — [`serve`] ships them verbatim in a
+/// [`Frame::Error`] and exits with a typed [`CommError::WorkerFault`].
 struct WorkerHost {
     /// The hosted sub-solvers, in logical order `l·T .. (l+1)·T`
     /// (empty until `AssignPartition`).
@@ -645,8 +1152,8 @@ impl WorkerHost {
         }
     }
 
-    fn assigned(&self) -> Result<()> {
-        ensure!(
+    fn assigned(&self) -> Result<(), String> {
+        wensure!(
             !self.subs.is_empty(),
             "no partition assigned (AssignPartition must precede this frame)"
         );
@@ -657,7 +1164,7 @@ impl WorkerHost {
         self.subs.first().map_or(0, |s| s.state.dim())
     }
 
-    fn build(&mut self, spec: ProblemSpec) -> Result<()> {
+    fn build(&mut self, spec: ProblemSpec) -> Result<(), String> {
         let l = spec.worker as usize;
         let m = spec.machines as usize;
         let t = spec.local_threads as usize;
@@ -669,13 +1176,13 @@ impl WorkerHost {
                 // twin holds (`Partition::split` of the same balanced
                 // partition).
                 let data = s.generate();
-                ensure!(
+                wensure!(
                     data.n() >= m,
                     "synthetic spec too small: n = {} for m = {m}",
                     data.n()
                 );
                 let part = Partition::balanced(data.n(), m, spec.part_seed);
-                ensure!(
+                wensure!(
                     part.min_shard() >= t,
                     "local_threads = {t} exceeds the smallest shard ({})",
                     part.min_shard()
@@ -693,7 +1200,7 @@ impl WorkerHost {
                 rows,
                 y,
             } => {
-                ensure!(
+                wensure!(
                     rows.len() >= t,
                     "local_threads = {t} exceeds the shard size ({})",
                     rows.len()
@@ -743,29 +1250,29 @@ impl WorkerHost {
 
     /// Bounds-check a broadcast against the hosted dimension once, so
     /// the per-sub apply inside a parallel section is infallible.
-    fn validate_broadcast(&self, b: &WireBroadcast) -> Result<()> {
+    fn validate_broadcast(&self, b: &WireBroadcast) -> Result<(), String> {
         let d = self.dim();
         match b {
             WireBroadcast::Empty => {}
             WireBroadcast::SparseSet { idx, .. } => {
                 if let Some(&j) = idx.last() {
-                    ensure!((j as usize) < d, "broadcast index {j} out of bounds (d = {d})");
+                    wensure!((j as usize) < d, "broadcast index {j} out of bounds (d = {d})");
                 }
             }
             WireBroadcast::DenseSet(v) => {
-                ensure!(v.len() == d, "broadcast dimension {} != {d}", v.len());
+                wensure!(v.len() == d, "broadcast dimension {} != {d}", v.len());
             }
             WireBroadcast::Add { delta, .. } => {
                 // The decoder already enforces idx < delta.dim; only the
                 // hosted dimension needs checking here.
-                ensure!(delta.dim() == d, "broadcast dimension {} != {d}", delta.dim());
+                wensure!(delta.dim() == d, "broadcast dimension {} != {d}", delta.dim());
             }
         }
         Ok(())
     }
 
-    fn apply_broadcast(&mut self, b: &WireBroadcast) -> Result<()> {
-        let reg = self.reg.clone().context("no regularizer set")?;
+    fn apply_broadcast(&mut self, b: &WireBroadcast) -> Result<(), String> {
+        let reg = self.reg.clone().ok_or("no regularizer set")?;
         self.assigned()?;
         self.validate_broadcast(b)?;
         run_subgroup(self.threads > 1, &mut self.subs, |_, sub| {
@@ -774,8 +1281,33 @@ impl WorkerHost {
         Ok(())
     }
 
+    /// Verify the rebuilt ṽ replica against the coordinator's shadow,
+    /// bit for bit — any mismatch means the resurrection would fork the
+    /// trace, which must fail loudly instead of silently diverging.
+    fn verify_v_tilde(&self, expect_v: &[f64]) -> Result<(), String> {
+        let v = &self
+            .subs
+            .first()
+            .ok_or("rejoin rebuilt no sub-solvers")?
+            .state
+            .v_tilde;
+        wensure!(
+            v.len() == expect_v.len(),
+            "rebuilt ṽ dimension {} != expected {}",
+            v.len(),
+            expect_v.len()
+        );
+        for (k, (a, b)) in v.iter().zip(expect_v).enumerate() {
+            wensure!(
+                a.to_bits() == b.to_bits(),
+                "rebuilt ṽ[{k}] = {a:e} != expected {b:e}: resurrection would fork the trace"
+            );
+        }
+        Ok(())
+    }
+
     /// Handle one frame; `Ok(None)` means orderly shutdown.
-    fn handle(&mut self, frame: Frame) -> Result<Option<Frame>> {
+    fn handle(&mut self, frame: Frame) -> Result<Option<Frame>, String> {
         Ok(Some(match frame {
             Frame::AssignPartition(spec) => {
                 self.build(*spec)?;
@@ -789,19 +1321,53 @@ impl WorkerHost {
                 self.apply_broadcast(&b)?;
                 Frame::Ack
             }
+            Frame::Heartbeat => Frame::HeartbeatAck,
+            Frame::Rejoin {
+                worker_id,
+                spec,
+                expect_v,
+                replay,
+            } => {
+                // Become the dead machine, bit-identically (§14): rebuild
+                // from the original spec, then re-handle every logged
+                // frame in order, discarding the replies — worker state
+                // is a pure function of (spec, frame sequence) — and
+                // finally verify the rebuilt ṽ against the coordinator's
+                // shadow before acking.
+                wensure!(
+                    worker_id == spec.worker,
+                    "rejoin for worker {worker_id} carries a spec for worker {}",
+                    spec.worker
+                );
+                self.build(*spec)?;
+                let mut rest: &[u8] = &replay;
+                while !rest.is_empty() {
+                    let (frame, _) = Frame::read_from(&mut rest)
+                        .map_err(|e| format!("replaying logged frame: {e}"))?;
+                    wensure!(
+                        !matches!(frame, Frame::Rejoin { .. } | Frame::Shutdown),
+                        "illegal frame in replay log: {frame:?}"
+                    );
+                    let _ = self.handle(frame)?;
+                }
+                if !expect_v.is_empty() {
+                    self.verify_v_tilde(&expect_v)?;
+                }
+                Frame::Ack
+            }
             Frame::LocalStep {
                 lambda,
                 broadcast,
                 flags,
                 codec,
             } => {
-                ensure!(
+                wensure!(
                     lambda.is_finite() && lambda > 0.0,
                     "λ must be positive and finite, got {lambda}"
                 );
-                let loss = self.loss.context("no loss assigned")?;
-                let solver = self.solver.context("no solver assigned")?;
-                let reg = self.reg.clone().context("no regularizer set")?;
+                let loss = self.loss.ok_or("no loss assigned")?;
+                let solver = self.solver.ok_or("no solver assigned")?;
+                let reg = self.reg.clone().ok_or("no regularizer set")?;
                 self.assigned()?;
                 self.validate_broadcast(&broadcast)?;
                 // dadm-lint: allow(wall-clock) — elapsed-seconds telemetry shipped in the reply; never control flow
@@ -865,15 +1431,15 @@ impl WorkerHost {
                 }
             }
             Frame::Eval { op, broadcast } => {
-                let loss = self.loss.context("no loss assigned")?;
-                let reg = self.reg.clone().context("no regularizer set")?;
+                let loss = self.loss.ok_or("no loss assigned")?;
+                let reg = self.reg.clone().ok_or("no regularizer set")?;
                 self.assigned()?;
                 self.validate_broadcast(&broadcast)?;
                 let d = self.dim();
                 let threads = self.threads;
                 match op {
                     EvalOp::LossSumAt(w) => {
-                        ensure!(w.len() == d, "eval dimension {} != {d}", w.len());
+                        wensure!(w.len() == d, "eval dimension {} != {d}", w.len());
                         // Per-sub sums combined by the same pairwise
                         // tree the coordinator uses (bit parity with the
                         // in-process hierarchical eval leg).
@@ -917,7 +1483,7 @@ impl WorkerHost {
                         }
                     }
                     EvalOp::GradOracle(w) => {
-                        ensure!(w.len() == d, "eval dimension {} != {d}", w.len());
+                        wensure!(w.len() == d, "eval dimension {} != {d}", w.len());
                         // The same fused shard pass + machine-local
                         // unit-weight pre-reduce the in-process OWL-QN
                         // oracle runs (`grad_oracle_sums`).
@@ -947,7 +1513,7 @@ impl WorkerHost {
                 }
             }
             Frame::Shutdown => return Ok(None),
-            other => bail!("unexpected frame on worker: {other:?}"),
+            other => wbail!("unexpected frame on worker: {other:?}"),
         }))
     }
 }
@@ -976,68 +1542,75 @@ fn apply_broadcast_to<R: crate::reg::Regularizer>(
 
 /// Serve one coordinator connection until `Shutdown` or disconnect —
 /// the body of the `dadm worker` subcommand, also hostable on a thread
-/// for in-process tests.
-pub fn serve(stream: TcpStream) -> Result<()> {
+/// for in-process tests. A replacement process spawned for §14
+/// resurrection runs this very loop: the `Rejoin` frame it receives
+/// instead of an `AssignPartition` carries everything needed to become
+/// the dead machine.
+pub fn serve(stream: TcpStream) -> CommResult<()> {
     let mut conn = Framed::new(stream)?;
     conn.send(&Frame::Hello {
         magic: WIRE_MAGIC,
         version: WIRE_VERSION,
     })?;
-    match conn.recv().context("awaiting Welcome")? {
-        Frame::Welcome { version, .. } => ensure!(
-            version == WIRE_VERSION,
-            "coordinator speaks protocol v{version}, worker v{WIRE_VERSION}"
-        ),
-        Frame::Error { message } => bail!("coordinator rejected handshake: {message}"),
-        other => bail!("expected Welcome, got {other:?}"),
-    }
+    // Await the Welcome, acking any liveness probe that races the
+    // handshake (the coordinator's read timeouts apply from accept on).
+    let worker_id = loop {
+        match conn.recv()? {
+            Frame::Welcome { version, worker_id, .. } => {
+                if version != WIRE_VERSION {
+                    return Err(CommError::VersionSkew {
+                        theirs: version,
+                        ours: WIRE_VERSION,
+                    });
+                }
+                break worker_id;
+            }
+            Frame::Heartbeat => conn.send(&Frame::HeartbeatAck)?,
+            Frame::Error { message } => {
+                return Err(proto(format!("coordinator rejected handshake: {message}")))
+            }
+            other => return Err(proto(format!("expected Welcome, got {other:?}"))),
+        }
+    };
     let mut host = WorkerHost::new();
     loop {
         let frame = match conn.recv() {
             Ok(f) => f,
             // Coordinator went away without Shutdown (crash, test abort):
             // exit quietly rather than erroring the whole process tree.
-            Err(e) if is_disconnect(&e) => return Ok(()),
-            Err(e) => return Err(e.context("reading coordinator frame")),
+            Err(e) if e.is_connection_death() => return Ok(()),
+            Err(e) => return Err(e),
         };
         match host.handle(frame) {
             Ok(Some(reply)) => conn.send(&reply)?,
             Ok(None) => return Ok(()),
-            Err(e) => {
+            Err(message) => {
                 let _ = conn.send(&Frame::Error {
-                    message: format!("{e:#}"),
+                    message: message.clone(),
                 });
-                return Err(e);
+                return Err(CommError::WorkerFault {
+                    id: worker_id,
+                    message,
+                });
             }
         }
     }
 }
 
-fn is_disconnect(e: &anyhow::Error) -> bool {
-    // The vendored anyhow shim carries causes as rendered messages, so
-    // classify by the std::io display forms of a dropped peer.
-    e.chain().any(|c| {
-        let c = c.to_ascii_lowercase();
-        c.contains("failed to fill whole buffer") // read_exact at EOF
-            || c.contains("unexpected end of file")
-            || c.contains("connection reset")
-            || c.contains("broken pipe")
-    })
-}
-
 /// `dadm worker --connect host:port` entry point.
-pub fn run_worker(addr: &str) -> Result<()> {
-    let stream =
-        TcpStream::connect(addr).with_context(|| format!("connecting to coordinator {addr}"))?;
-    serve(stream)
+pub fn run_worker(addr: &str) -> CommResult<()> {
+    serve(TcpStream::connect(addr)?)
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)]
+    // The deprecated positional constructors are fine in tests — shims
+    // over the `Problem` builder (see coordinator::problem).
     use super::*;
     use crate::comm::Cluster;
-    use crate::coordinator::{Dadm, DadmOptions};
     use crate::comm::CostModel;
+    use crate::coordinator::{Dadm, DadmOptions};
     use crate::data::synthetic::SyntheticSpec;
     use crate::loss::SmoothHinge;
     use crate::reg::{ElasticNet, Zero};
@@ -1047,15 +1620,20 @@ mod tests {
     /// Spawn `m` in-process worker threads against a loopback
     /// coordinator — the thread-hosted twin of real `dadm worker`
     /// processes (the child-process variant lives in
-    /// `rust/tests/tcp_cluster.rs`).
-    fn loopback(m: usize) -> (TcpHandle, Vec<JoinHandle<Result<()>>>) {
-        let builder = TcpClusterBuilder::bind("127.0.0.1:0").unwrap();
+    /// `rust/tests/tcp_cluster.rs` and `rust/tests/chaos.rs`).
+    fn loopback(m: usize) -> (TcpHandle, Vec<JoinHandle<CommResult<()>>>) {
+        loopback_ft(m, FaultTolerance::default())
+    }
+
+    fn loopback_ft(m: usize, ft: FaultTolerance) -> (TcpHandle, Vec<JoinHandle<CommResult<()>>>) {
+        let builder = TcpClusterBuilder::bind("127.0.0.1:0")
+            .unwrap()
+            .fault_tolerance(ft);
         let addr = builder.local_addr().unwrap();
         let threads: Vec<_> = (0..m)
             .map(|_| {
-                std::thread::spawn(move || {
-                    let stream = TcpStream::connect(addr).context("worker connect")?;
-                    serve(stream)
+                std::thread::spawn(move || -> CommResult<()> {
+                    serve(TcpStream::connect(addr)?)
                 })
             })
             .collect();
@@ -1063,7 +1641,7 @@ mod tests {
         (TcpHandle::new(cluster), threads)
     }
 
-    fn join_workers(handle: TcpHandle, threads: Vec<JoinHandle<Result<()>>>) {
+    fn join_workers(handle: TcpHandle, threads: Vec<JoinHandle<CommResult<()>>>) {
         handle.with(|c| c.shutdown());
         drop(handle);
         for t in threads {
@@ -1636,8 +2214,11 @@ mod tests {
             // The coordinator must answer with an Error frame.
             matches!(conn.recv(), Ok(Frame::Error { .. }))
         });
-        let err = builder.accept(1);
-        assert!(err.is_err(), "version skew must be rejected");
+        let err = builder.accept(1).unwrap_err();
+        assert!(
+            matches!(err, CommError::VersionSkew { .. }),
+            "version skew must surface typed, got {err:?}"
+        );
         assert!(t.join().unwrap(), "worker did not receive the Error frame");
     }
 
@@ -1657,15 +2238,245 @@ mod tests {
     #[test]
     fn worker_errors_surface_as_err() {
         // An Eval before any AssignPartition must come back as a typed
-        // error, not a hang or panic.
+        // WorkerFault, not a hang or panic.
         let (handle, threads) = loopback(1);
         let res = handle.with(|c| c.eval_sum(&EvalOp::ConjSum, BroadcastRef::Empty));
-        let msg = format!("{:#}", res.unwrap_err());
+        let err = res.unwrap_err();
+        assert!(
+            matches!(err, CommError::WorkerFault { id: 0, .. }),
+            "expected WorkerFault, got {err:?}"
+        );
+        let msg = format!("{err}");
         assert!(msg.contains("no"), "unexpected error: {msg}");
         // The worker exits (with an error) after reporting.
         drop(handle);
         for t in threads {
             assert!(t.join().unwrap().is_err());
         }
+    }
+
+    #[test]
+    fn silent_worker_times_out_with_typed_error() {
+        // A wedged (alive but silent) worker must surface as a typed
+        // WorkerFault within the liveness deadline — never a hang
+        // (acceptance criterion for resurrection-disabled clusters).
+        let ft = FaultTolerance {
+            worker_timeout: Duration::from_millis(400),
+            heartbeat_every: Duration::from_millis(80),
+            max_rejoins: 0,
+        };
+        let builder = TcpClusterBuilder::bind("127.0.0.1:0")
+            .unwrap()
+            .fault_tolerance(ft);
+        let addr = builder.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let mut conn = Framed::new(TcpStream::connect(addr).unwrap()).unwrap();
+            conn.send(&Frame::Hello {
+                magic: WIRE_MAGIC,
+                version: WIRE_VERSION,
+            })
+            .unwrap();
+            loop {
+                match conn.recv().unwrap() {
+                    Frame::Welcome { .. } => break,
+                    Frame::Heartbeat => conn.send(&Frame::HeartbeatAck).unwrap(),
+                    other => panic!("expected Welcome, got {other:?}"),
+                }
+            }
+            // Wedge: keep the socket open but never answer anything.
+            std::thread::sleep(Duration::from_millis(1200));
+        });
+        let mut cluster = builder.accept(1).unwrap();
+        let t0 = Instant::now();
+        let err = cluster
+            .local_step(1e-2, BroadcastRef::Empty, StepFlags::default(), DeltaCodec::F64)
+            .unwrap_err();
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "death detection took {:?}",
+            t0.elapsed()
+        );
+        assert!(
+            matches!(err, CommError::WorkerFault { id: 0, .. }),
+            "expected WorkerFault, got {err:?}"
+        );
+        let msg = format!("{err}");
+        assert!(msg.contains("declared dead"), "{msg}");
+        assert!(msg.contains("resurrection disabled"), "{msg}");
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn dead_worker_without_resurrection_is_worker_fault() {
+        // A worker process that dies mid-solve surfaces as a typed
+        // fault (instant EOF, well before the deadline) when
+        // resurrection is off — never a hang, never a panic.
+        let ft = FaultTolerance {
+            worker_timeout: Duration::from_millis(500),
+            heartbeat_every: Duration::from_millis(50),
+            max_rejoins: 0,
+        };
+        let spec = test_spec();
+        let builder = TcpClusterBuilder::bind("127.0.0.1:0")
+            .unwrap()
+            .fault_tolerance(ft);
+        let addr = builder.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let mut conn = Framed::new(TcpStream::connect(addr).unwrap()).unwrap();
+            conn.send(&Frame::Hello {
+                magic: WIRE_MAGIC,
+                version: WIRE_VERSION,
+            })
+            .unwrap();
+            loop {
+                match conn.recv().unwrap() {
+                    Frame::Welcome { .. } => break,
+                    Frame::Heartbeat => conn.send(&Frame::HeartbeatAck).unwrap(),
+                    other => panic!("expected Welcome, got {other:?}"),
+                }
+            }
+            // Ack the build, then die abruptly (socket drop on return).
+            match conn.recv().unwrap() {
+                Frame::AssignPartition(_) => conn.send(&Frame::Ack).unwrap(),
+                other => panic!("expected AssignPartition, got {other:?}"),
+            }
+        });
+        let mut cluster = builder.accept(1).unwrap();
+        cluster
+            .assign(synthetic_specs(
+                &spec,
+                1,
+                9,
+                1,
+                0.25,
+                WireLoss::SmoothHinge(SmoothHinge::default()),
+                WireSolver::ProxSdca,
+                1,
+            ))
+            .unwrap();
+        t.join().unwrap();
+        let err = cluster
+            .local_step(1e-2, BroadcastRef::Empty, StepFlags::default(), DeltaCodec::F64)
+            .unwrap_err();
+        assert!(
+            matches!(err, CommError::WorkerFault { id: 0, .. }),
+            "expected WorkerFault, got {err:?}"
+        );
+        assert!(format!("{err}").contains("declared dead"), "{err}");
+    }
+
+    /// A serve-twin that dies abruptly after replying to its
+    /// `die_after`-th LocalStep, then reconnects as the §14 replacement
+    /// (the listener backlog parks the connection until the coordinator's
+    /// resurrection accepts it) and runs the real [`serve`] loop — which
+    /// receives the `Rejoin`, replays, verifies ṽ, and resumes.
+    fn mortal_serve(addr: SocketAddr, die_after: usize) -> CommResult<()> {
+        let mut conn = Framed::new(TcpStream::connect(addr)?)?;
+        conn.send(&Frame::Hello {
+            magic: WIRE_MAGIC,
+            version: WIRE_VERSION,
+        })?;
+        loop {
+            match conn.recv()? {
+                Frame::Welcome { .. } => break,
+                Frame::Heartbeat => conn.send(&Frame::HeartbeatAck)?,
+                other => return Err(proto(format!("expected Welcome, got {other:?}"))),
+            }
+        }
+        let mut host = WorkerHost::new();
+        let mut steps = 0usize;
+        loop {
+            let frame = match conn.recv() {
+                Ok(f) => f,
+                Err(e) if e.is_connection_death() => return Ok(()),
+                Err(e) => return Err(e),
+            };
+            let is_step = matches!(frame, Frame::LocalStep { .. });
+            match host.handle(frame) {
+                Ok(Some(reply)) => conn.send(&reply)?,
+                Ok(None) => return Ok(()),
+                Err(message) => {
+                    let _ = conn.send(&Frame::Error {
+                        message: message.clone(),
+                    });
+                    return Err(proto(message));
+                }
+            }
+            if is_step {
+                steps += 1;
+                if steps == die_after {
+                    drop(conn);
+                    return serve(TcpStream::connect(addr)?);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn killed_worker_resurrects_bit_identically() {
+        // The tentpole pin: a worker that dies mid-solve and rejoins via
+        // the §14 protocol must leave the trajectory bit-identical to an
+        // uninterrupted Serial run — same w, same v, same gap, every
+        // round across the kill.
+        let spec = test_spec();
+        let data = spec.generate();
+        let part = Partition::balanced(data.n(), 2, 9);
+        let ft = FaultTolerance {
+            worker_timeout: Duration::from_secs(10),
+            heartbeat_every: Duration::from_secs(1),
+            max_rejoins: 2,
+        };
+        let builder = TcpClusterBuilder::bind("127.0.0.1:0")
+            .unwrap()
+            .fault_tolerance(ft);
+        let addr = builder.local_addr().unwrap();
+        let threads: Vec<JoinHandle<CommResult<()>>> = (0..2)
+            .map(|l| {
+                std::thread::spawn(move || -> CommResult<()> {
+                    if l == 1 {
+                        mortal_serve(addr, 2)
+                    } else {
+                        serve(TcpStream::connect(addr)?)
+                    }
+                })
+            })
+            .collect();
+        let cluster = builder.accept(2).unwrap();
+        let handle = TcpHandle::new(cluster);
+        handle
+            .with(|c| {
+                c.assign(synthetic_specs(
+                    &spec,
+                    2,
+                    9,
+                    0xDAD_A,
+                    0.25,
+                    WireLoss::SmoothHinge(SmoothHinge::default()),
+                    WireSolver::ProxSdca,
+                    1,
+                ))
+            })
+            .unwrap();
+        let mut serial = build_dadm(&data, &part, Cluster::Serial);
+        let mut tcp = build_dadm(&data, &part, Cluster::Tcp(handle.clone()));
+        serial.resync();
+        tcp.resync();
+        for round in 0..6 {
+            serial.round();
+            tcp.round();
+            assert_eq!(serial.w(), tcp.w(), "w diverged at round {round} across the kill");
+            assert_eq!(serial.v(), tcp.v(), "v diverged at round {round} across the kill");
+            assert_eq!(
+                serial.gap().to_bits(),
+                tcp.gap().to_bits(),
+                "gap diverged at round {round} across the kill"
+            );
+        }
+        assert_eq!(
+            handle.with(|c| c.rejoins_total()),
+            1,
+            "exactly one resurrection expected"
+        );
+        join_workers(handle, threads);
     }
 }

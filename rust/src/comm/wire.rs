@@ -25,6 +25,9 @@
 //! | 11  | `Shutdown`        | C → W     | empty |
 //! | 12  | `Error`           | both      | UTF-8 message |
 //! | 13  | `GapReply`        | W → C     | local `Σφ(x_iᵀw)` + running `Σ−φ*(−α)` |
+//! | 14  | `Heartbeat`       | C → W     | empty (liveness probe, v5) |
+//! | 15  | `HeartbeatAck`    | W → C     | empty (liveness answer, v5) |
+//! | 16  | `Rejoin`          | C → W     | worker id + [`ProblemSpec`] + expected ṽ + replay log (v5) |
 //!
 //! v3 extends three v2 payloads with *trailing* fields (a flags byte on
 //! `LocalStep`, flags + optional telemetry scalars on `DeltaReply`, a
@@ -40,6 +43,13 @@
 //! [`WireBroadcast`] gains an additive kind whose payload reuses the
 //! self-describing delta encoding (compressed Δṽ updates).
 //!
+//! v5 adds the liveness/resurrection frames (DESIGN.md §14): the empty
+//! `Heartbeat`/`HeartbeatAck` pair and the `Rejoin` handshake that
+//! re-admits a replacement worker mid-solve. No existing payload shape
+//! changed, so every v4 payload still decodes byte-for-byte (pinned by
+//! `v4_shaped_payloads_still_decode_under_v5`); only the *frame set*
+//! grew, which is what the handshake version gate protects.
+//!
 //! Decoding is **total**: malformed input — truncated frames, unknown
 //! tags, oversized length prefixes, inconsistent vector lengths,
 //! non-increasing sparse indices, trailing bytes — returns `Err` and
@@ -47,15 +57,37 @@
 //! caps the length prefix, and every element count is validated against
 //! the bytes actually present before allocating).
 
-use anyhow::{bail, ensure, Context, Result};
 use std::io::{Read, Write};
 
+use crate::comm::error::CommResult;
 use crate::comm::sparse::{i16_level, i16_step, max_abs, Delta, DeltaCodec, SparseDelta};
 use crate::data::synthetic::SyntheticSpec;
 use crate::data::{Dataset, Partition};
 use crate::loss::{Hinge, Logistic, Loss, SmoothHinge, Squared};
 use crate::reg::{ElasticNet, Regularizer, ShiftedElasticNet};
 use crate::solver::{LocalSolver, ProxSdca, TheoremStep, WorkerState};
+
+/// Module-local result alias: pure codec paths fail with [`WireError`];
+/// the socket-touching entry points return [`CommResult`] instead.
+type Result<T, E = WireError> = std::result::Result<T, E>;
+
+/// Module-local `bail!`: constructs a [`WireError::Malformed`] and
+/// `.into()`s it, so the same macro works in `WireError`- and
+/// `CommError`-returning functions alike (no `anyhow` in `comm/`).
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err(WireError::Malformed(format!($($arg)*)).into())
+    };
+}
+
+/// Module-local `ensure!` over the module-local `bail!`.
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            bail!($($arg)*)
+        }
+    };
+}
 
 /// Protocol magic carried by the worker's `Hello`.
 pub const WIRE_MAGIC: [u8; 4] = *b"DADM";
@@ -71,7 +103,10 @@ pub const WIRE_MAGIC: [u8; 4] = *b"DADM";
 /// delta kinds (error feedback lives at the sender, not on the wire), a
 /// trailing [`DeltaCodec`] byte on `LocalStep`/`DeltaReply`, and an
 /// additive broadcast kind for compressed Δṽ updates.
-pub const WIRE_VERSION: u16 = 4;
+/// v5: fault tolerance (DESIGN.md §14) — the `Heartbeat`/`HeartbeatAck`
+/// liveness pair and the `Rejoin` resurrection handshake; all v4 payload
+/// shapes are unchanged.
+pub const WIRE_VERSION: u16 = 5;
 /// Hard cap on one frame's payload (256 MiB): a corrupt length prefix
 /// must never drive a giant allocation.
 pub const MAX_FRAME_LEN: u32 = 256 << 20;
@@ -82,12 +117,13 @@ pub const FRAME_HEADER_BYTES: usize = 5;
 // Byte-level encoder / decoder
 // ---------------------------------------------------------------------
 
-/// Structural encode-side failures. Decode-side failures stay plain
-/// `anyhow` errors (they carry malformed-input context strings); the
-/// encode side has exactly two ways to fail, both of which mean the
-/// *caller* built something the frame format cannot represent — they
-/// surface as typed `Err`s, never panics.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Every way the wire codec itself can fail — encode-side caps the
+/// caller exceeded, decode-side malformed input, and the handshake
+/// version gate. Socket-level failures (EOF, resets, deadlines) are NOT
+/// wire errors; they classify into [`crate::comm::CommError`] variants
+/// at the transport layer. All variants surface as typed `Err`s, never
+/// panics.
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum WireError {
     /// A collection's element count exceeded the `u32` count field.
     CollectionTooLarge {
@@ -99,6 +135,18 @@ pub enum WireError {
         /// The offending payload size in bytes.
         len: usize,
     },
+    /// Handshake version disagreement (promoted to
+    /// [`crate::comm::CommError::VersionSkew`] at the transport layer).
+    VersionSkew {
+        /// Version the peer announced.
+        got: u16,
+        /// Version this side speaks.
+        want: u16,
+    },
+    /// Malformed input: truncated payloads, unknown tags/kinds,
+    /// inconsistent lengths, trailing bytes — the total-decoding reject
+    /// path, carrying its diagnostic rendered at the reject site.
+    Malformed(String),
 }
 
 impl std::fmt::Display for WireError {
@@ -113,6 +161,11 @@ impl std::fmt::Display for WireError {
                     "frame payload too large: {len} bytes exceed cap {MAX_FRAME_LEN}"
                 )
             }
+            WireError::VersionSkew { got, want } => write!(
+                f,
+                "protocol version mismatch: peer speaks v{got}, this side v{want}"
+            ),
+            WireError::Malformed(msg) => write!(f, "{msg}"),
         }
     }
 }
@@ -206,6 +259,13 @@ impl Enc {
     fn str(&mut self, s: &str) {
         self.count(s.len());
         self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Opaque byte blob with a count prefix (the `Rejoin` replay log —
+    /// already-framed bytes carried verbatim).
+    fn bytes(&mut self, b: &[u8]) {
+        self.count(b.len());
+        self.buf.extend_from_slice(b);
     }
 
     /// The finished payload — or the latched [`WireError`] if any
@@ -332,7 +392,14 @@ impl<'a> Dec<'a> {
 
     fn str(&mut self) -> Result<String> {
         let n = self.count(1)?;
-        String::from_utf8(self.take(n)?.to_vec()).context("non-UTF-8 string on wire")
+        String::from_utf8(self.take(n)?.to_vec())
+            .map_err(|_| WireError::Malformed("non-UTF-8 string on wire".into()))
+    }
+
+    /// Count-prefixed opaque byte blob (the `Rejoin` replay log).
+    fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.count(1)?;
+        Ok(self.take(n)?.to_vec())
     }
 
     /// Reject trailing garbage after a fully-decoded payload.
@@ -819,6 +886,35 @@ pub enum Frame {
         /// Human-readable cause.
         message: String,
     },
+    /// Liveness probe sent by the coordinator after an idle interval on
+    /// a silent connection (v5, DESIGN.md §14). Empty payload.
+    Heartbeat,
+    /// Liveness answer: the worker replies immediately from its recv
+    /// loop, proving the process is alive and draining its socket (v5).
+    /// Empty payload.
+    HeartbeatAck,
+    /// Resurrection handshake (v5, DESIGN.md §14): everything a fresh
+    /// replacement process needs to become the dead machine `l`
+    /// *bit-identically* — the original [`ProblemSpec`] plus the replay
+    /// log of every state-mutating frame the dead worker had fully
+    /// processed, in order. The worker rebuilds from the spec, re-handles
+    /// the log (its state is a pure function of `(spec, frame sequence)`),
+    /// checks its reconstructed ṽ replica against `expect_v` bit for
+    /// bit, and replies `Ack`.
+    Rejoin {
+        /// Machine index `l` being resurrected.
+        worker_id: u32,
+        /// The dead worker's original assignment.
+        spec: Box<ProblemSpec>,
+        /// The coordinator's current ṽ replica for machine `l` — the
+        /// determinism cross-check the replayed state must reproduce
+        /// exactly (covers reg phase, broadcast history, and — under
+        /// lossy codecs — the residual-corrected v image).
+        expect_v: Vec<f64>,
+        /// Concatenated encoded frames (each `[tag][len][payload]`) to
+        /// re-handle in order, replies discarded.
+        replay: Vec<u8>,
+    },
 }
 
 const TAG_HELLO: u8 = 0;
@@ -835,6 +931,9 @@ const TAG_ACK: u8 = 10;
 const TAG_SHUTDOWN: u8 = 11;
 const TAG_ERROR: u8 = 12;
 const TAG_GAP_REPLY: u8 = 13;
+const TAG_HEARTBEAT: u8 = 14;
+const TAG_HEARTBEAT_ACK: u8 = 15;
+const TAG_REJOIN: u8 = 16;
 
 /// Strict-monotonicity check for sparse index vectors, written with
 /// iterator pairing instead of `w[0] < w[1]` windows — the decode layer
@@ -1261,7 +1360,7 @@ fn take_eval(d: &mut Dec<'_>) -> Result<EvalOp> {
     })
 }
 
-fn write_framed<W: Write>(w: &mut W, tag: u8, payload: &[u8]) -> Result<usize> {
+fn write_framed<W: Write>(w: &mut W, tag: u8, payload: &[u8]) -> CommResult<usize> {
     if payload.len() > MAX_FRAME_LEN as usize {
         return Err(WireError::FrameTooLarge { len: payload.len() }.into());
     }
@@ -1280,7 +1379,7 @@ pub fn write_local_step<W: Write>(
     b: BroadcastRef<'_>,
     flags: StepFlags,
     codec: DeltaCodec,
-) -> Result<usize> {
+) -> CommResult<usize> {
     let mut e = Enc::default();
     e.f64(lambda);
     put_broadcast(&mut e, b);
@@ -1291,7 +1390,7 @@ pub fn write_local_step<W: Write>(
 
 /// Encode an `Eval` frame with its fused broadcast from borrowed buffers
 /// (see [`write_local_step`]).
-pub fn write_eval<W: Write>(w: &mut W, op: &EvalOp, b: BroadcastRef<'_>) -> Result<usize> {
+pub fn write_eval<W: Write>(w: &mut W, op: &EvalOp, b: BroadcastRef<'_>) -> CommResult<usize> {
     let mut e = Enc::default();
     put_eval(&mut e, op);
     put_broadcast(&mut e, b);
@@ -1300,7 +1399,7 @@ pub fn write_eval<W: Write>(w: &mut W, op: &EvalOp, b: BroadcastRef<'_>) -> Resu
 
 /// Encode a `Broadcast` frame from borrowed buffers (see
 /// [`write_local_step`]).
-pub fn write_broadcast<W: Write>(w: &mut W, b: BroadcastRef<'_>) -> Result<usize> {
+pub fn write_broadcast<W: Write>(w: &mut W, b: BroadcastRef<'_>) -> CommResult<usize> {
     let mut e = Enc::default();
     put_broadcast(&mut e, b);
     write_framed(w, TAG_BROADCAST, &e.finish()?)
@@ -1309,7 +1408,7 @@ pub fn write_broadcast<W: Write>(w: &mut W, b: BroadcastRef<'_>) -> Result<usize
 impl Frame {
     /// Serialize onto `w`; returns the exact number of bytes written
     /// (header + payload) — the quantity the wire-byte accounting records.
-    pub fn write_to<W: Write>(&self, w: &mut W) -> Result<usize> {
+    pub fn write_to<W: Write>(&self, w: &mut W) -> CommResult<usize> {
         let mut e = Enc::default();
         let tag = match self {
             Frame::Hello { magic, version } => {
@@ -1400,6 +1499,20 @@ impl Frame {
                 e.str(message);
                 TAG_ERROR
             }
+            Frame::Heartbeat => TAG_HEARTBEAT,
+            Frame::HeartbeatAck => TAG_HEARTBEAT_ACK,
+            Frame::Rejoin {
+                worker_id,
+                spec,
+                expect_v,
+                replay,
+            } => {
+                e.u32(*worker_id);
+                put_spec(&mut e, spec);
+                e.f64s(expect_v);
+                e.bytes(replay);
+                TAG_REJOIN
+            }
         };
         write_framed(w, tag, &e.finish()?)
     }
@@ -1407,7 +1520,7 @@ impl Frame {
     /// Read one frame; `Err` (never a panic) on truncation, unknown
     /// tags, oversized lengths, or any payload inconsistency. The second
     /// tuple element is the exact number of bytes consumed.
-    pub fn read_from<R: Read>(r: &mut R) -> Result<(Frame, usize)> {
+    pub fn read_from<R: Read>(r: &mut R) -> CommResult<(Frame, usize)> {
         let mut payload = Vec::new();
         Self::read_from_reusing(r, &mut payload)
     }
@@ -1415,9 +1528,12 @@ impl Frame {
     /// [`Frame::read_from`] with a caller-owned payload scratch buffer —
     /// the per-connection hot path reuses one buffer across frames
     /// instead of allocating `len` bytes per message.
-    pub fn read_from_reusing<R: Read>(r: &mut R, payload: &mut Vec<u8>) -> Result<(Frame, usize)> {
+    pub fn read_from_reusing<R: Read>(
+        r: &mut R,
+        payload: &mut Vec<u8>,
+    ) -> CommResult<(Frame, usize)> {
         let mut header = [0u8; FRAME_HEADER_BYTES];
-        r.read_exact(&mut header).context("reading frame header")?;
+        r.read_exact(&mut header)?;
         // Parse the header through `Dec` like any other payload — no
         // indexing, no infallible-by-argument conversions.
         let mut h = Dec::new(&header);
@@ -1429,7 +1545,7 @@ impl Frame {
         );
         payload.clear();
         payload.resize(len as usize, 0);
-        r.read_exact(payload).context("reading frame payload")?;
+        r.read_exact(payload)?;
         let frame = Self::decode(tag, payload)?;
         Ok((frame, FRAME_HEADER_BYTES + len as usize))
     }
@@ -1528,13 +1644,23 @@ impl Frame {
             TAG_ACK => Frame::Ack,
             TAG_SHUTDOWN => Frame::Shutdown,
             TAG_ERROR => Frame::Error { message: d.str()? },
+            TAG_HEARTBEAT => Frame::Heartbeat,
+            TAG_HEARTBEAT_ACK => Frame::HeartbeatAck,
+            TAG_REJOIN => Frame::Rejoin {
+                worker_id: d.u32()?,
+                spec: Box::new(take_spec(&mut d)?),
+                expect_v: d.f64s()?,
+                replay: d.bytes()?,
+            },
             t => bail!("unknown frame tag {t}"),
         };
         d.finish()?;
         Ok(frame)
     }
 
-    /// Validate a worker greeting; version/magic mismatches are `Err`.
+    /// Validate a worker greeting; version/magic mismatches are `Err`
+    /// (the version gate is a typed [`WireError::VersionSkew`] so the
+    /// transport layer can surface it as such).
     pub fn expect_hello(&self) -> Result<()> {
         match self {
             Frame::Hello { magic, version } => {
@@ -1542,10 +1668,12 @@ impl Frame {
                     *magic == WIRE_MAGIC,
                     "bad protocol magic {magic:?} (expected {WIRE_MAGIC:?})"
                 );
-                ensure!(
-                    *version == WIRE_VERSION,
-                    "protocol version mismatch: worker speaks v{version}, coordinator v{WIRE_VERSION}"
-                );
+                if *version != WIRE_VERSION {
+                    return Err(WireError::VersionSkew {
+                        got: *version,
+                        want: WIRE_VERSION,
+                    });
+                }
                 Ok(())
             }
             other => bail!("expected Hello, got {other:?}"),
@@ -1707,8 +1835,8 @@ mod tests {
 
     #[test]
     fn prop_every_frame_roundtrips() {
-        for_each_case(0x71C9, 140, |g| {
-            let frame = match g.usize_in(0, 14) {
+        for_each_case(0x71C9, 170, |g| {
+            let frame = match g.usize_in(0, 17) {
                 0 => Frame::Hello {
                     magic: WIRE_MAGIC,
                     version: WIRE_VERSION,
@@ -1767,8 +1895,16 @@ mod tests {
                     loss_sum: g.f64_in(0.0, 1e5),
                     conj_sum: g.f64_in(-1e5, 1e5),
                 },
-                _ => Frame::Error {
+                13 => Frame::Error {
                     message: "ü message with µnicode".into(),
+                },
+                14 => Frame::Heartbeat,
+                15 => Frame::HeartbeatAck,
+                _ => Frame::Rejoin {
+                    worker_id: g.usize_in(0, 64) as u32,
+                    spec: Box::new(gen_spec(g)),
+                    expect_v: g.vec_f64(g.usize_in(0, 12), -3.0, 3.0),
+                    replay: g.bytes(g.usize_in(0, 48)),
                 },
             };
             roundtrip(&frame);
@@ -2306,9 +2442,166 @@ mod tests {
         assert!(format!("{c}").contains("5000000000"));
         let f = WireError::FrameTooLarge { len: 7 };
         assert!(format!("{f}").contains("7"));
-        // Converts into `anyhow::Error` through the std-error blanket.
-        let err: anyhow::Error = c.into();
+        // Boxes as a std error object (what lets non-comm callers `?`
+        // these into their own error types).
+        let err: Box<dyn std::error::Error> = Box::new(c);
         assert!(format!("{err}").contains("collection too large"));
+    }
+
+    #[test]
+    fn heartbeat_frames_are_empty_payload() {
+        // The liveness pair must cost exactly one frame header each —
+        // they fire on otherwise-idle connections and must not perturb
+        // the wire-byte accounting by more than the minimum.
+        assert_eq!(encode(&Frame::Heartbeat).len(), FRAME_HEADER_BYTES);
+        assert_eq!(encode(&Frame::HeartbeatAck).len(), FRAME_HEADER_BYTES);
+        roundtrip(&Frame::Heartbeat);
+        roundtrip(&Frame::HeartbeatAck);
+    }
+
+    #[test]
+    fn rejoin_carries_spec_expectation_and_replay_verbatim() {
+        // The replay blob is a concatenation of *real* encoded frames —
+        // exactly what the coordinator's replay log holds — and must
+        // survive the wire byte-for-byte so the replacement worker
+        // re-handles the identical byte sequence.
+        let mut replay = Vec::new();
+        Frame::SetReg(WireReg::ElasticNet(ElasticNet::new(0.25)))
+            .write_to(&mut replay)
+            .unwrap();
+        write_local_step(
+            &mut replay,
+            1e-3,
+            BroadcastRef::DenseSet(&[1.0, -2.0]),
+            StepFlags::default(),
+            DeltaCodec::F64,
+        )
+        .unwrap();
+        let f = Frame::Rejoin {
+            worker_id: 2,
+            spec: Box::new(ProblemSpec {
+                worker: 2,
+                machines: 4,
+                seed: 0xDAD_A,
+                part_seed: 11,
+                sp: 0.2,
+                local_threads: 1,
+                data: DataSpec::Synthetic(SyntheticSpec {
+                    name: "rejoin".into(),
+                    n: 64,
+                    d: 8,
+                    density: 0.5,
+                    signal_density: 0.5,
+                    noise: 0.1,
+                    seed: 7,
+                }),
+                loss: WireLoss::Logistic,
+                solver: WireSolver::ProxSdca,
+            }),
+            expect_v: vec![0.5, -0.25, 1.0 + f64::EPSILON],
+            replay: replay.clone(),
+        };
+        match roundtrip(&f) {
+            Frame::Rejoin {
+                worker_id,
+                expect_v,
+                replay: got,
+                ..
+            } => {
+                assert_eq!(worker_id, 2);
+                let bits: Vec<u64> = expect_v.iter().map(|v| v.to_bits()).collect();
+                let want: Vec<u64> = [0.5, -0.25, 1.0 + f64::EPSILON]
+                    .iter()
+                    .map(|v| v.to_bits())
+                    .collect();
+                assert_eq!(bits, want, "expect_v must survive bit for bit");
+                assert_eq!(got, replay, "replay log must travel verbatim");
+                // The carried log itself decodes back into the frames.
+                let mut cur = Cursor::new(&got);
+                let (f1, _) = Frame::read_from(&mut cur).unwrap();
+                assert!(matches!(f1, Frame::SetReg(_)));
+                let (f2, _) = Frame::read_from(&mut cur).unwrap();
+                assert!(matches!(f2, Frame::LocalStep { .. }));
+            }
+            other => panic!("expected Rejoin, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn prop_rejoin_truncation_and_corruption_never_panic() {
+        for_each_case(0x5E10, 80, |g| {
+            let frame = Frame::Rejoin {
+                worker_id: g.usize_in(0, 16) as u32,
+                spec: Box::new(gen_spec(g)),
+                expect_v: g.vec_f64(g.usize_in(0, 10), -2.0, 2.0),
+                replay: g.bytes(g.usize_in(0, 40)),
+            };
+            let mut bytes = encode(&frame);
+            if g.bool(0.5) {
+                let cut = g.usize_in(0, bytes.len());
+                if cut == bytes.len() {
+                    return;
+                }
+                assert!(
+                    Frame::read_from(&mut Cursor::new(&bytes[..cut])).is_err(),
+                    "truncated Rejoin at {cut}/{} decoded",
+                    bytes.len()
+                );
+            } else {
+                let pos = g.usize_in(0, bytes.len());
+                let bit = g.usize_in(0, 8);
+                bytes[pos] ^= 1 << bit;
+                let _ = Frame::read_from(&mut Cursor::new(&bytes));
+            }
+        });
+    }
+
+    #[test]
+    fn v4_shaped_payloads_still_decode_under_v5() {
+        // v5 added frames, not payload bytes: every v4 shape must decode
+        // unchanged. Exercise one frame of each direction-critical kind
+        // and pin that the encoded bytes contain no v5 artifacts (the
+        // tags stay below TAG_HEARTBEAT).
+        let frames = [
+            Frame::LocalStep {
+                lambda: 1e-3,
+                broadcast: WireBroadcast::DenseSet(vec![1.0, 2.0]),
+                flags: StepFlags::default(),
+                codec: DeltaCodec::F64,
+            },
+            Frame::DeltaReply {
+                delta: Delta::Dense(vec![0.5]),
+                elapsed_secs: 0.1,
+                loss_sum: Some(2.0),
+                conj_sum: Some(-1.0),
+                codec: DeltaCodec::F64,
+            },
+            Frame::Broadcast(WireBroadcast::Empty),
+            Frame::Eval {
+                op: EvalOp::GapSums,
+                broadcast: WireBroadcast::Empty,
+            },
+        ];
+        for f in &frames {
+            let bytes = encode(f);
+            assert!(
+                bytes.first().is_some_and(|&t| t < TAG_HEARTBEAT),
+                "v4 frame encoded with a v5 tag: {f:?}"
+            );
+            roundtrip(f);
+        }
+        // The handshake gate: a v4 worker greeting against a v5
+        // coordinator is a typed VersionSkew, not a string to parse.
+        let hello = Frame::Hello {
+            magic: WIRE_MAGIC,
+            version: 4,
+        };
+        match hello.expect_hello() {
+            Err(WireError::VersionSkew { got, want }) => {
+                assert_eq!((got, want), (4, WIRE_VERSION));
+            }
+            other => panic!("expected VersionSkew, got {other:?}"),
+        }
     }
 
     #[test]

@@ -118,6 +118,16 @@ pub struct ExperimentConfig {
     /// Coordinator listen address for `cluster = tcp` (use port 0 for an
     /// ephemeral port; the launcher prints the bound address).
     pub tcp_listen: String,
+    /// Declare a TCP worker dead after this many seconds without a frame
+    /// (DESIGN.md §14 liveness; `cluster = tcp` only).
+    pub worker_timeout: f64,
+    /// Heartbeat-probe cadence in seconds while a TCP reply is pending —
+    /// also the socket read timeout; must be ≤ `worker_timeout`.
+    pub heartbeat_every: f64,
+    /// How many worker deaths the coordinator may heal by deterministic
+    /// resurrection (§14 rejoin protocol); 0 = fail fast with a typed
+    /// `CommError::WorkerFault` instead.
+    pub max_rejoins: u32,
     /// Write a resumable solver snapshot to this path (DADM only).
     pub checkpoint: Option<String>,
     /// Snapshot cadence in rounds (with `checkpoint`).
@@ -167,6 +177,9 @@ impl Default for ExperimentConfig {
             conj_resum_every: 64,
             cluster: ClusterKind::Serial,
             tcp_listen: "127.0.0.1:7171".into(),
+            worker_timeout: 30.0,
+            heartbeat_every: 5.0,
+            max_rejoins: 0,
             checkpoint: None,
             checkpoint_every: 10,
             resume: None,
@@ -274,6 +287,15 @@ impl ExperimentConfig {
         if let Some(v) = take("tcp-listen") {
             cfg.tcp_listen = v;
         }
+        if let Some(v) = take("worker-timeout") {
+            cfg.worker_timeout = v.parse().context("worker-timeout")?;
+        }
+        if let Some(v) = take("heartbeat-every") {
+            cfg.heartbeat_every = v.parse().context("heartbeat-every")?;
+        }
+        if let Some(v) = take("max-rejoins") {
+            cfg.max_rejoins = v.parse().context("max-rejoins")?;
+        }
         if let Some(v) = take("sparse-comm") {
             cfg.sparse_comm = match v.as_str() {
                 "true" | "1" | "on" => true,
@@ -346,6 +368,17 @@ impl ExperimentConfig {
                  OWL-QN has no delta wire path"
             );
         }
+        anyhow::ensure!(
+            self.worker_timeout > 0.0,
+            "worker-timeout must be > 0 seconds, got {}",
+            self.worker_timeout
+        );
+        anyhow::ensure!(
+            self.heartbeat_every > 0.0 && self.heartbeat_every <= self.worker_timeout,
+            "heartbeat-every must be in (0, worker-timeout], got {} (worker-timeout {})",
+            self.heartbeat_every,
+            self.worker_timeout
+        );
         if self.checkpoint.is_some() || self.resume.is_some() {
             anyhow::ensure!(
                 self.method == Method::Dadm,
@@ -359,6 +392,16 @@ impl ExperimentConfig {
             );
         }
         Ok(())
+    }
+
+    /// The §14 liveness/resurrection policy for the TCP backend, as the
+    /// comm layer consumes it.
+    pub fn fault_tolerance(&self) -> crate::comm::FaultTolerance {
+        crate::comm::FaultTolerance {
+            worker_timeout: std::time::Duration::from_secs_f64(self.worker_timeout),
+            heartbeat_every: std::time::Duration::from_secs_f64(self.heartbeat_every),
+            max_rejoins: self.max_rejoins,
+        }
     }
 
     /// Max communication rounds implied by the pass cap: `passes/sp`.
@@ -447,6 +490,39 @@ mod tests {
         let c = ExperimentConfig::from_file_body("sparse-comm = off\n").unwrap();
         assert!(!c.sparse_comm);
         assert!(ExperimentConfig::from_file_body("sparse-comm = maybe\n").is_err());
+    }
+
+    #[test]
+    fn parses_fault_tolerance_keys() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.worker_timeout, 30.0);
+        assert_eq!(c.heartbeat_every, 5.0);
+        assert_eq!(c.max_rejoins, 0);
+        let c = ExperimentConfig::from_file_body(
+            "worker-timeout = 2.5
+heartbeat-every = 0.5
+max-rejoins = 3
+",
+        )
+        .unwrap();
+        assert_eq!(c.worker_timeout, 2.5);
+        assert_eq!(c.heartbeat_every, 0.5);
+        assert_eq!(c.max_rejoins, 3);
+        let ft = c.fault_tolerance();
+        assert_eq!(ft.worker_timeout, std::time::Duration::from_millis(2500));
+        assert_eq!(ft.heartbeat_every, std::time::Duration::from_millis(500));
+        assert_eq!(ft.max_rejoins, 3);
+        // The probe cadence must fit inside the death deadline.
+        assert!(ExperimentConfig::from_file_body(
+            "worker-timeout = 1
+heartbeat-every = 2
+"
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_file_body("worker-timeout = 0
+").is_err());
+        assert!(ExperimentConfig::from_file_body("heartbeat-every = 0
+").is_err());
     }
 
     #[test]

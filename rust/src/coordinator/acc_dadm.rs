@@ -34,6 +34,7 @@
 //! through [`RoundOutcome::record_due`].
 
 use super::dadm::{Dadm, DadmOptions, SolveReport};
+use super::problem::Problem;
 use crate::data::{Dataset, Partition};
 use crate::loss::Loss;
 use crate::reg::{ElasticNet, ExtraReg, Regularizer, ShiftedElasticNet};
@@ -117,9 +118,12 @@ where
     S: LocalSolver,
 {
     /// Build for the original problem
-    /// `P(w) = Σφ + (λn/2)‖w‖² + μn‖w‖₁ + h(w)`.
-    ///
-    /// `radius` is the data radius `R = max‖x_i‖²` used by the default κ.
+    /// `P(w) = Σφ + (λn/2)‖w‖² + μn‖w‖₁ + h(w)`. Deprecated positional
+    /// form — see [`Problem`](super::problem::Problem) for the named
+    /// builder.
+    #[deprecated(
+        note = "use Problem::new(data, part).loss(φ).extra_reg(h).lambda(λ).l1(μ).build_acc_dadm(solver, opts)"
+    )]
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         data: &Dataset,
@@ -131,6 +135,33 @@ where
         solver: S,
         opts: AccDadmOptions,
     ) -> Self {
+        Self::from_problem(
+            Problem::new(data, part)
+                .loss(loss)
+                .extra_reg(h)
+                .lambda(lambda)
+                .l1(mu),
+            solver,
+            opts,
+        )
+    }
+
+    /// Build from a completed [`Problem`] description (the
+    /// [`Problem::build_acc_dadm`] entry point). The inner DADM's stage
+    /// regularizer is derived here (§9.8), which is why the problem must
+    /// arrive with its `g` slot unset.
+    ///
+    /// `radius` is the data radius `R = max‖x_i‖²` used by the default κ.
+    pub(crate) fn from_problem(p: Problem<'_, L, (), H>, solver: S, opts: AccDadmOptions) -> Self {
+        let lambda = p.lambda_value();
+        let Problem {
+            data,
+            part,
+            loss,
+            h,
+            mu,
+            ..
+        } = p;
         let n = data.n();
         // Remark 12's m is the number of *independent dual blocks* — under
         // hierarchical parallelism (DESIGN.md §10) that is the logical
@@ -161,16 +192,12 @@ where
         };
         let d = data.dim();
         let stage_reg = ShiftedElasticNet::acc_stage(mu, lambda_tilde, kappa, &vec![0.0; d]);
-        let inner = Dadm::new(
-            data,
-            part,
-            loss,
-            stage_reg,
-            h,
-            lambda_tilde,
-            solver,
-            opts.dadm.clone(),
-        );
+        let inner = Problem::new(data, part)
+            .loss(loss)
+            .reg(stage_reg)
+            .extra_reg(h)
+            .lambda(lambda_tilde)
+            .build_dadm(solver, opts.dadm.clone());
         AccDadm {
             inner,
             lambda,
@@ -377,6 +404,9 @@ where
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)]
+    // Deprecated positional constructors are exercised on purpose — they
+    // are shims over `from_problem` (parity pinned in `problem::tests`).
     use super::*;
     use crate::comm::{Cluster, CostModel};
     use crate::data::synthetic::tiny_classification;
@@ -490,6 +520,7 @@ mod tests {
             rounds: acc.inner.rounds(),
             passes: acc.inner.passes(),
             converged,
+            retries: 0,
             trace,
         }
     }

@@ -47,6 +47,7 @@
 //! implements [`RoundAlgorithm`] and [`Dadm::solve`] is a thin wrapper
 //! over the shared [`Driver`].
 
+use super::problem::Problem;
 use crate::comm::allreduce::tree_sum;
 use crate::comm::sparse::{
     codec_image, compress_delta, i16_step, max_abs, should_densify, should_densify_with,
@@ -369,8 +370,11 @@ where
     H: ExtraReg,
     S: LocalSolver,
 {
-    /// Build a DADM instance: shard the data per `part`, zero-initialize
-    /// all dual state.
+    /// Build a DADM instance. Deprecated positional form — see
+    /// [`Problem`](super::problem::Problem) for the named builder.
+    #[deprecated(
+        note = "use Problem::new(data, part).loss(φ).reg(g).extra_reg(h).lambda(λ).build_dadm(solver, opts)"
+    )]
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         data: &Dataset,
@@ -382,6 +386,30 @@ where
         solver: S,
         opts: DadmOptions,
     ) -> Self {
+        Self::from_problem(
+            Problem::new(data, part)
+                .loss(loss)
+                .reg(reg)
+                .extra_reg(h)
+                .lambda(lambda),
+            solver,
+            opts,
+        )
+    }
+
+    /// Build a DADM instance from a completed [`Problem`] description
+    /// (the [`Problem::build_dadm`] entry point): shard the data per its
+    /// partition, zero-initialize all dual state.
+    pub(crate) fn from_problem(p: Problem<'_, L, R, H>, solver: S, opts: DadmOptions) -> Self {
+        let lambda = p.lambda_value();
+        let Problem {
+            data,
+            part,
+            loss,
+            reg,
+            h,
+            ..
+        } = p;
         assert!(lambda > 0.0, "λ must be positive");
         assert!(
             opts.sp > 0.0 && opts.sp <= 1.0,
@@ -389,7 +417,7 @@ where
         );
         assert!(opts.gap_every >= 1, "gap_every must be ≥ 1");
         let m = part.machines();
-        if let Some(handle) = opts.cluster.tcp() {
+        if let Some(handle) = opts.cluster.remote() {
             assert_eq!(
                 handle.workers(),
                 m,
@@ -416,7 +444,7 @@ where
         // TCP backend the machines live in their own processes, so no
         // local shard copies are built at all: worker state exists only
         // behind the sockets.
-        let machines: Vec<Machine> = if opts.cluster.is_tcp() {
+        let machines: Vec<Machine> = if !opts.cluster.has_local_workers() {
             Vec::new()
         } else {
             machine_rngs(opts.seed, 0, m_logical)
@@ -483,9 +511,18 @@ where
         self.local_threads
     }
 
-    /// The TCP handle when running on the multi-process backend.
-    fn tcp(&self) -> Option<&crate::comm::TcpHandle> {
-        self.opts.cluster.tcp()
+    /// The remote transport handle when running on the multi-process
+    /// backend (`None` in-process) — the one dispatch point this
+    /// coordinator branches on.
+    fn remote(&self) -> Option<&crate::comm::TcpHandle> {
+        self.opts.cluster.remote()
+    }
+
+    /// Drain the resurrections-performed-since-last-read counter from
+    /// the remote transport (`0` in-process) — the engine's
+    /// `RoundOutcome::retried` telemetry feed (DESIGN.md §14).
+    fn take_rejoins(&self) -> usize {
+        self.remote().map_or(0, |h| h.with(|c| c.take_rejoins()))
     }
 
     /// Cumulative **actual** wire bytes moved by the TCP transport
@@ -493,7 +530,7 @@ where
     /// This is the measured quantity the `sparse_comm` α-β cost model's
     /// message sizes can be validated against.
     pub fn wire_bytes(&self) -> u64 {
-        self.tcp().map_or(0, |h| h.stats().total_bytes())
+        self.remote().map_or(0, |h| h.stats().total_bytes())
     }
 
     /// Cumulative **actual** bytes of `DeltaReply` frames received from
@@ -501,7 +538,7 @@ where
     /// reduce leg's traffic in isolation, which the compression
     /// acceptance gate compares across codecs (DESIGN.md §13).
     pub fn delta_reply_bytes(&self) -> u64 {
-        self.tcp().map_or(0, |h| h.stats().delta_reply_bytes)
+        self.remote().map_or(0, |h| h.stats().delta_reply_bytes)
     }
 
     /// Cluster synchronization points (parallel sections / TCP round
@@ -536,7 +573,7 @@ where
     /// in remote processes and cannot be borrowed.
     pub fn machine_states(&mut self) -> impl Iterator<Item = &WorkerState> {
         assert!(
-            !self.opts.cluster.is_tcp(),
+            self.opts.cluster.has_local_workers(),
             "machine_states: worker state lives in remote TCP processes"
         );
         self.sync_workers();
@@ -590,7 +627,7 @@ where
             self.v_image.extend_from_slice(&self.v_tilde);
         }
         self.barriers += 1;
-        if let Some(h) = self.opts.cluster.tcp() {
+        if let Some(h) = self.opts.cluster.remote() {
             let spec = self.reg.wire_spec().expect(
                 "the TCP backend requires a wire-serializable regularizer \
                  (Regularizer::wire_spec returned None)",
@@ -621,7 +658,7 @@ where
             return;
         }
         self.barriers += 1;
-        if let Some(h) = self.opts.cluster.tcp() {
+        if let Some(h) = self.opts.cluster.remote() {
             h.with(|c| c.broadcast(self.pending.as_wire()))
                 .expect("tcp worker sync failed");
             self.pending.clear();
@@ -704,7 +741,7 @@ where
             want_conj,
             resum_conj: resum,
         };
-        let ready = if let Some(h) = self.opts.cluster.tcp() {
+        let ready = if let Some(h) = self.opts.cluster.remote() {
             // Send only: the replies stay on the sockets until
             // `round_complete` collects them, so a second round's frames
             // can go out while these are being worked on.
@@ -840,7 +877,7 @@ where
             Some(r) => r,
             None => {
                 let codec = self.opts.compress;
-                let h = self.tcp().expect("TCP replies without a TCP cluster");
+                let h = self.remote().expect("TCP replies without a TCP cluster");
                 let (replies, secs) = h
                     .with(|c| c.local_step_collect(flags, codec))
                     .expect("tcp local step failed");
@@ -1047,7 +1084,7 @@ where
     /// evals use [`Dadm::loss_sum_current`] instead (zero payload).
     pub fn loss_sum_at(&mut self, w: &[f64]) -> f64 {
         self.barriers += 1;
-        if let Some(h) = self.opts.cluster.tcp() {
+        if let Some(h) = self.opts.cluster.remote() {
             return h
                 .with(|c| c.eval_sum(&EvalOp::LossSumAt(w.to_vec()), BroadcastRef::Empty))
                 .expect("tcp loss-sum eval failed");
@@ -1072,7 +1109,7 @@ where
     pub fn loss_sum_current(&mut self) -> f64 {
         self.sync_workers();
         self.barriers += 1;
-        if let Some(h) = self.opts.cluster.tcp() {
+        if let Some(h) = self.opts.cluster.remote() {
             return h
                 .with(|c| c.eval_sum(&EvalOp::LossSumAtCurrent, BroadcastRef::Empty))
                 .expect("tcp loss-sum eval failed");
@@ -1100,7 +1137,7 @@ where
             return c;
         }
         self.barriers += 1;
-        let c = if let Some(h) = self.opts.cluster.tcp() {
+        let c = if let Some(h) = self.opts.cluster.remote() {
             h.with(|c| c.eval_sum(&EvalOp::ConjSum, BroadcastRef::Empty))
                 .expect("tcp conjugate-sum eval failed")
         } else {
@@ -1125,7 +1162,7 @@ where
     /// initial/final records ride.
     pub fn gap_sums(&mut self) -> (f64, f64) {
         self.barriers += 1;
-        let (loss_sum, conj) = if let Some(h) = self.opts.cluster.tcp() {
+        let (loss_sum, conj) = if let Some(h) = self.opts.cluster.remote() {
             let sums = h
                 .with(|c| c.eval_gap_sums(self.pending.as_wire()))
                 .expect("tcp gap eval failed");
@@ -1212,7 +1249,7 @@ where
     /// In-process backends only.
     pub fn dual_state(&self) -> (&[f64], Vec<&[f64]>) {
         assert!(
-            !self.opts.cluster.is_tcp(),
+            self.opts.cluster.has_local_workers(),
             "dual_state: worker duals live in remote TCP processes"
         );
         (
@@ -1228,7 +1265,7 @@ where
     /// remote; its engine [`RoundAlgorithm::snapshot`] returns `None`).
     pub fn checkpoint(&self) -> super::Checkpoint {
         assert!(
-            !self.opts.cluster.is_tcp(),
+            self.opts.cluster.supports_checkpoint(),
             "checkpoint: worker duals live in remote TCP processes"
         );
         assert!(
@@ -1271,7 +1308,7 @@ where
     /// stream; v1 snapshots restart the streams from the seed.
     pub fn restore(&mut self, ck: &super::Checkpoint) -> anyhow::Result<()> {
         anyhow::ensure!(
-            !self.opts.cluster.is_tcp(),
+            self.opts.cluster.supports_checkpoint(),
             "restore is not supported on the TCP backend (worker duals are remote)"
         );
         anyhow::ensure!(
@@ -1363,7 +1400,7 @@ where
     /// in-process backends only).
     pub fn check_v_invariant(&self) -> anyhow::Result<()> {
         anyhow::ensure!(
-            !self.opts.cluster.is_tcp(),
+            self.opts.cluster.has_local_workers(),
             "check_v_invariant needs local machine state (TCP backend)"
         );
         let mut want = vec![0.0; self.d];
@@ -1419,6 +1456,7 @@ where
         let (_secs, entering) = self.round_fused(req.eval_entering_primal, req.want_exit_conj);
         RoundOutcome {
             entering_objectives: entering,
+            retried: self.take_rejoins(),
             ..RoundOutcome::default()
         }
     }
@@ -1438,6 +1476,7 @@ where
         let (_secs, entering) = Dadm::round_complete(self);
         RoundOutcome {
             entering_objectives: entering,
+            retried: self.take_rejoins(),
             ..RoundOutcome::default()
         }
     }
@@ -1469,8 +1508,9 @@ where
     }
 
     fn snapshot(&self) -> Option<super::Checkpoint> {
-        if self.opts.cluster.is_tcp() {
-            // Worker duals are remote; no snapshot frame in protocol v1.
+        if !self.opts.cluster.supports_checkpoint() {
+            // Worker duals are remote; §14 resurrection is the TCP
+            // backend's fault-tolerance story instead.
             return None;
         }
         if self.opts.overlap {
@@ -1484,6 +1524,10 @@ where
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)]
+    // Tests exercise the deprecated positional constructors on purpose:
+    // they are shims over `from_problem`, so this covers both paths
+    // (builder-vs-direct parity lives in `problem::tests`).
     use super::*;
     use crate::data::synthetic::{tiny_classification, tiny_regression};
     use crate::loss::{Logistic, SmoothHinge, Squared};

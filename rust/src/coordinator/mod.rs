@@ -24,6 +24,10 @@
 //! * [`owlqn_driver`] — the distributed OWL-QN baseline of Figures 6–7,
 //!   stepping the stepwise [`crate::solver::OwlqnState`] one iteration
 //!   per engine round and sharing the cluster/cost accounting.
+//! * [`problem`] — the [`Problem`] builder, the one front door that
+//!   names the objective ingredients `(φ, g, h, λ, μ)` and constructs
+//!   any of the three coordinators (the positional `new` constructors
+//!   are deprecated shims over it).
 //! * [`checkpoint`] — resumable solver snapshots (v2: dual state plus
 //!   round counters and RNG streams for bit-exact resumption), written
 //!   by the engine's snapshot hook (CLI `--checkpoint`/`--resume`).
@@ -32,8 +36,11 @@ pub mod acc_dadm;
 pub mod checkpoint;
 pub mod dadm;
 pub mod owlqn_driver;
+pub mod problem;
 
 pub use acc_dadm::{AccDadm, AccDadmOptions, NuChoice};
 pub use checkpoint::Checkpoint;
 pub use dadm::{resolve_local_threads, Dadm, DadmOptions, SolveReport};
+#[allow(deprecated)]
 pub use owlqn_driver::{run_owlqn_distributed, DistributedOwlqn, OwlqnDriverReport};
+pub use problem::Problem;

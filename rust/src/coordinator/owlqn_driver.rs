@@ -23,10 +23,12 @@
 //! wrapper the benches use.
 
 use super::dadm::resolve_local_threads;
+use super::problem::Problem;
 use crate::comm::allreduce::tree_allreduce;
 use crate::comm::{run_subgroup, Cluster, CostModel};
 use crate::data::{Dataset, Partition};
 use crate::loss::Loss;
+use crate::reg::Zero;
 use crate::runtime::engine::{Driver, RoundAlgorithm, RoundOutcome, RoundRequest};
 use crate::solver::{Owlqn, OwlqnOptions, OwlqnState, WorkerState};
 
@@ -70,6 +72,9 @@ pub struct DistributedOwlqn<L> {
     comm_secs: f64,
 }
 
+/// Grouped borrow of the algorithm state one oracle evaluation needs —
+/// what used to be `oracle_eval`'s 11 positional arguments.
+///
 /// One distributed smooth-part oracle evaluation:
 /// `f(w) = (1/n)Σφ + (λ/2)‖w‖²` with its gradient, one fused pass over
 /// every shard plus one `(d+1)`-float allreduce, charged to the modeled
@@ -82,21 +87,26 @@ pub struct DistributedOwlqn<L> {
 /// run in the worker processes (`Eval::GradOracle` frames) and return
 /// the identical machine vectors, so the reduced oracle is bit-identical
 /// across backends.
-#[allow(clippy::too_many_arguments)]
-fn oracle_eval<L: Loss>(
-    workers: &mut [WorkerState],
+struct OracleCtx<'c, L> {
+    workers: &'c mut [WorkerState],
     local_threads: usize,
-    loss: &L,
+    loss: &'c L,
     lambda: f64,
     n: f64,
     d: usize,
-    cluster: &Cluster,
-    cost: &CostModel,
-    compute_secs: &mut f64,
-    comm_secs: &mut f64,
-    w: &[f64],
-) -> (f64, Vec<f64>) {
-    let (results, parallel_secs) = if let Some(h) = cluster.tcp() {
+    cluster: &'c Cluster,
+    cost: &'c CostModel,
+    compute_secs: &'c mut f64,
+    comm_secs: &'c mut f64,
+}
+
+fn oracle_eval<L: Loss>(ctx: &mut OracleCtx<'_, L>, w: &[f64]) -> (f64, Vec<f64>) {
+    let (local_threads, loss, lambda, n, d) =
+        (ctx.local_threads, ctx.loss, ctx.lambda, ctx.n, ctx.d);
+    let (cluster, cost) = (ctx.cluster, ctx.cost);
+    let workers = &mut *ctx.workers;
+    let (compute_secs, comm_secs) = (&mut *ctx.compute_secs, &mut *ctx.comm_secs);
+    let (results, parallel_secs) = if let Some(h) = cluster.remote() {
         h.with(|c| c.eval_gradients(w))
             .expect("tcp gradient oracle failed")
     } else {
@@ -137,10 +147,11 @@ fn oracle_eval<L: Loss>(
 }
 
 impl<L: Loss> DistributedOwlqn<L> {
-    /// Build for the experiments objective on `part.machines()` workers,
-    /// each evaluating its shard with `local_threads` sub-shard legs
-    /// (`1` = the previous serial per-machine pass, `0` = auto from the
-    /// core count).
+    /// Build for the experiments objective. Deprecated positional form
+    /// — see [`Problem`](super::problem::Problem) for the named builder.
+    #[deprecated(
+        note = "use Problem::new(data, part).loss(φ).lambda(λ).l1(μ).build_owlqn(max_passes, cluster, cost, local_threads)"
+    )]
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         data: &Dataset,
@@ -153,6 +164,35 @@ impl<L: Loss> DistributedOwlqn<L> {
         cost: CostModel,
         local_threads: usize,
     ) -> Self {
+        Self::from_problem(
+            Problem::new(data, part).loss(loss).lambda(lambda).l1(mu),
+            max_passes,
+            cluster,
+            cost,
+            local_threads,
+        )
+    }
+
+    /// Build from a completed [`Problem`] description (the
+    /// [`Problem::build_owlqn`] entry point) on `part.machines()`
+    /// workers, each evaluating its shard with `local_threads` sub-shard
+    /// legs (`1` = the previous serial per-machine pass, `0` = auto from
+    /// the core count).
+    pub(crate) fn from_problem(
+        p: Problem<'_, L, (), Zero>,
+        max_passes: usize,
+        cluster: Cluster,
+        cost: CostModel,
+        local_threads: usize,
+    ) -> Self {
+        let lambda = p.lambda_value();
+        let Problem {
+            data,
+            part,
+            loss,
+            mu,
+            ..
+        } = p;
         let t = resolve_local_threads(local_threads, part);
         let lpart_owned;
         let lpart: &Partition = if t == 1 {
@@ -163,7 +203,7 @@ impl<L: Loss> DistributedOwlqn<L> {
         };
         // Under the TCP backend the shards live in the worker processes;
         // no local copies are built.
-        let workers: Vec<WorkerState> = if cluster.is_tcp() {
+        let workers: Vec<WorkerState> = if !cluster.has_local_workers() {
             Vec::new()
         } else {
             (0..lpart.machines())
@@ -239,21 +279,19 @@ impl<L: Loss> RoundAlgorithm for DistributedOwlqn<L> {
             comm_secs,
             ..
         } = self;
-        let mut oracle = |w: &[f64]| {
-            oracle_eval(
-                workers,
-                *local_threads,
-                loss,
-                *lambda,
-                *n as f64,
-                *d,
-                cluster,
-                cost,
-                compute_secs,
-                comm_secs,
-                w,
-            )
+        let mut ctx = OracleCtx {
+            workers,
+            local_threads: *local_threads,
+            loss,
+            lambda: *lambda,
+            n: *n as f64,
+            d: *d,
+            cluster,
+            cost,
+            compute_secs,
+            comm_secs,
         };
+        let mut oracle = |w: &[f64]| oracle_eval(&mut ctx, w);
         *state = Some(owlqn.begin(vec![0.0; *d], &mut oracle));
     }
 
@@ -276,21 +314,19 @@ impl<L: Loss> RoundAlgorithm for DistributedOwlqn<L> {
             comm_secs,
         } = self;
         let st = state.as_mut().expect("Driver::solve prepares before use");
-        let mut oracle = |w: &[f64]| {
-            oracle_eval(
-                workers,
-                *local_threads,
-                loss,
-                *lambda,
-                *n as f64,
-                *d,
-                cluster,
-                cost,
-                compute_secs,
-                comm_secs,
-                w,
-            )
+        let mut ctx = OracleCtx {
+            workers,
+            local_threads: *local_threads,
+            loss,
+            lambda: *lambda,
+            n: *n as f64,
+            d: *d,
+            cluster,
+            cost,
+            compute_secs,
+            comm_secs,
         };
+        let mut oracle = |w: &[f64]| oracle_eval(&mut ctx, w);
         owlqn.step(st, &mut oracle);
         RoundOutcome {
             record_due: true,
@@ -333,8 +369,28 @@ impl<L: Loss> RoundAlgorithm for DistributedOwlqn<L> {
     }
 }
 
-/// Run distributed OWL-QN on the experiments objective (batch wrapper
-/// over the engine: `Driver` + [`DistributedOwlqn`]).
+/// Run distributed OWL-QN on a completed [`Problem`] description (batch
+/// wrapper over the engine: `Driver` + [`DistributedOwlqn`]) — the
+/// [`Problem::solve_owlqn`] entry point.
+pub(crate) fn solve_owlqn_problem<L: Loss>(
+    p: Problem<'_, L, (), Zero>,
+    max_passes: usize,
+    cluster: Cluster,
+    cost: CostModel,
+    local_threads: usize,
+) -> OwlqnDriverReport {
+    let mut algo = DistributedOwlqn::from_problem(p, max_passes, cluster, cost, local_threads);
+    let report = Driver::new(0.0, max_passes).solve(&mut algo);
+    let wall = report.trace.last().map(|r| r.wall_secs).unwrap_or(0.0);
+    algo.into_report(wall)
+}
+
+/// Run distributed OWL-QN on the experiments objective. Deprecated
+/// positional form — see [`Problem`](super::problem::Problem) for the
+/// named builder.
+#[deprecated(
+    note = "use Problem::new(data, part).loss(φ).lambda(λ).l1(μ).solve_owlqn(max_passes, cluster, cost, local_threads)"
+)]
 #[allow(clippy::too_many_arguments)]
 pub fn run_owlqn_distributed<L: Loss + Clone>(
     data: &Dataset,
@@ -347,24 +403,20 @@ pub fn run_owlqn_distributed<L: Loss + Clone>(
     cost: CostModel,
     local_threads: usize,
 ) -> OwlqnDriverReport {
-    let mut algo = DistributedOwlqn::new(
-        data,
-        part,
-        loss,
-        lambda,
-        mu,
+    solve_owlqn_problem(
+        Problem::new(data, part).loss(loss).lambda(lambda).l1(mu),
         max_passes,
         cluster,
         cost,
         local_threads,
-    );
-    let report = Driver::new(0.0, max_passes).solve(&mut algo);
-    let wall = report.trace.last().map(|r| r.wall_secs).unwrap_or(0.0);
-    algo.into_report(wall)
+    )
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)]
+    // Deprecated positional wrappers are exercised on purpose — they are
+    // shims over `solve_owlqn_problem` (parity pinned in `problem::tests`).
     use super::*;
     use crate::data::synthetic::tiny_classification;
     use crate::loss::Logistic;

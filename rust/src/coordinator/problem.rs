@@ -1,0 +1,321 @@
+//! Problem description builder — the one front door to the three
+//! coordinators.
+//!
+//! The regularized loss minimization problem of the paper,
+//!
+//! ```text
+//! P(w) = Σ_i φ_i(X_iᵀw) + λn·g(w) + h(w)
+//! ```
+//!
+//! used to be spelled out positionally at every construction site:
+//! `Dadm::new` took 8 arguments, `AccDadm::new` 8,
+//! `DistributedOwlqn::new` and `run_owlqn_distributed` 9 — every one
+//! hiding behind `#[allow(clippy::too_many_arguments)]` and easy to
+//! transpose (λ and μ are both `f64`...). [`Problem`] replaces them: a
+//! type-state builder that names each ingredient once and hands the
+//! completed description to the solver constructors in a single grouped
+//! argument.
+//!
+//! ```ignore
+//! let dadm = Problem::new(&data, &part)
+//!     .loss(SmoothHinge::nesterov())
+//!     .reg(ElasticNet::new(mu / lambda))
+//!     .lambda(lambda)
+//!     .build_dadm(ProxSdca, opts);
+//! ```
+//!
+//! Type-state does the argument checking at compile time: `build_dadm`
+//! only exists once `.loss(..)` and `.reg(..)` have been called (the
+//! placeholder `()` types implement neither trait), `build_acc_dadm` /
+//! `build_owlqn` only while **no** explicit `g` regularizer has been set
+//! (those methods derive their own — the Acc-DADM stage regularizer and
+//! the OWL-QN L1 term — so a caller-supplied one would be silently
+//! dropped, and the builder makes that a type error instead). The only
+//! runtime check left is λ: it has no safe default, so building without
+//! `.lambda(..)` panics with a message naming the missing call.
+//!
+//! The old constructors survive as `#[deprecated]` shims for one release
+//! and delegate here, so builder and direct construction are the same
+//! code path — the `builder_matches_direct_*` tests below pin that
+//! bitwise.
+
+use super::acc_dadm::{AccDadm, AccDadmOptions};
+use super::dadm::{Dadm, DadmOptions};
+use super::owlqn_driver::{solve_owlqn_problem, DistributedOwlqn, OwlqnDriverReport};
+use crate::comm::{Cluster, CostModel};
+use crate::data::{Dataset, Partition};
+use crate::loss::Loss;
+use crate::reg::{ExtraReg, Regularizer, Zero};
+use crate::solver::LocalSolver;
+
+/// A regularized loss minimization problem under construction: the data
+/// and its machine partition plus the objective ingredients
+/// `(φ, g, h, λ, μ)` as they are named. See the module docs for the
+/// type-state rules; the `build_*` / `solve_*` methods hand the
+/// completed description to the coordinator constructors.
+#[derive(Clone, Debug)]
+pub struct Problem<'a, L = (), R = (), H = Zero> {
+    pub(crate) data: &'a Dataset,
+    pub(crate) part: &'a Partition,
+    pub(crate) loss: L,
+    pub(crate) reg: R,
+    pub(crate) h: H,
+    pub(crate) lambda: Option<f64>,
+    pub(crate) mu: f64,
+}
+
+impl<'a> Problem<'a, (), (), Zero> {
+    /// Start describing a problem over `data` sharded by `part`. No
+    /// loss, no regularizer, `h = 0`, `μ = 0`, λ unset.
+    pub fn new(data: &'a Dataset, part: &'a Partition) -> Self {
+        Problem {
+            data,
+            part,
+            loss: (),
+            reg: (),
+            h: Zero,
+            lambda: None,
+            mu: 0.0,
+        }
+    }
+}
+
+impl<'a, L, R, H> Problem<'a, L, R, H> {
+    /// Set the loss `φ` (required before any `build_*`).
+    pub fn loss<L2: Loss>(self, loss: L2) -> Problem<'a, L2, R, H> {
+        Problem {
+            data: self.data,
+            part: self.part,
+            loss,
+            reg: self.reg,
+            h: self.h,
+            lambda: self.lambda,
+            mu: self.mu,
+        }
+    }
+
+    /// Set the strongly-convex regularizer `g` (required for
+    /// [`Problem::build_dadm`]; **not** accepted by the Acc-DADM /
+    /// OWL-QN builds, which derive their own — see the module docs).
+    pub fn reg<R2: Regularizer>(self, reg: R2) -> Problem<'a, L, R2, H> {
+        Problem {
+            data: self.data,
+            part: self.part,
+            loss: self.loss,
+            reg,
+            h: self.h,
+            lambda: self.lambda,
+            mu: self.mu,
+        }
+    }
+
+    /// Set the extra (possibly non-strongly-convex) regularizer `h`
+    /// (default [`Zero`]).
+    pub fn extra_reg<H2: ExtraReg>(self, h: H2) -> Problem<'a, L, R, H2> {
+        Problem {
+            data: self.data,
+            part: self.part,
+            loss: self.loss,
+            reg: self.reg,
+            h,
+            lambda: self.lambda,
+            mu: self.mu,
+        }
+    }
+
+    /// Set the strong-convexity weight λ (required — building without
+    /// it panics).
+    pub fn lambda(mut self, lambda: f64) -> Self {
+        self.lambda = Some(lambda);
+        self
+    }
+
+    /// Set the L1 weight μ (default `0.0`). Consumed by the Acc-DADM
+    /// and OWL-QN builds; the plain DADM build encodes L1 inside its
+    /// explicit `g` (e.g. `ElasticNet::new(μ/λ)`) instead.
+    pub fn l1(mut self, mu: f64) -> Self {
+        self.mu = mu;
+        self
+    }
+
+    /// λ, or a clear panic if the builder chain never set it.
+    pub(crate) fn lambda_value(&self) -> f64 {
+        match self.lambda {
+            Some(l) => l,
+            None => panic!("Problem: call .lambda(λ) before building a solver"),
+        }
+    }
+}
+
+impl<'a, L: Loss, R: Regularizer, H: ExtraReg> Problem<'a, L, R, H> {
+    /// Build the DADM coordinator (Algorithm 2) for this problem.
+    pub fn build_dadm<S: LocalSolver>(self, solver: S, opts: DadmOptions) -> Dadm<L, R, H, S> {
+        Dadm::from_problem(self, solver, opts)
+    }
+}
+
+impl<'a, L: Loss, H: ExtraReg> Problem<'a, L, (), H> {
+    /// Build the Acc-DADM coordinator (Algorithm 3) for
+    /// `P(w) = Σφ + (λn/2)‖w‖² + μn‖w‖₁ + h(w)` — the g regularizer is
+    /// the stage-derived shifted elastic net, so this build only exists
+    /// while `.reg(..)` has not been called.
+    pub fn build_acc_dadm<S: LocalSolver>(
+        self,
+        solver: S,
+        opts: AccDadmOptions,
+    ) -> AccDadm<L, H, S> {
+        AccDadm::from_problem(self, solver, opts)
+    }
+}
+
+impl<'a, L: Loss> Problem<'a, L, (), Zero> {
+    /// Build the distributed OWL-QN baseline for the normalized
+    /// objective `F(w) = (1/n)Σφ + (λ/2)‖w‖² + μ‖w‖₁` (primal-only;
+    /// `g`/`h` are fixed by the method, so this build only exists on the
+    /// default `()`/[`Zero`] placeholders).
+    pub fn build_owlqn(
+        self,
+        max_passes: usize,
+        cluster: Cluster,
+        cost: CostModel,
+        local_threads: usize,
+    ) -> DistributedOwlqn<L> {
+        DistributedOwlqn::from_problem(self, max_passes, cluster, cost, local_threads)
+    }
+
+    /// Build **and solve** with distributed OWL-QN: the batch wrapper
+    /// the benches use (engine `Driver` + [`DistributedOwlqn`]).
+    pub fn solve_owlqn(
+        self,
+        max_passes: usize,
+        cluster: Cluster,
+        cost: CostModel,
+        local_threads: usize,
+    ) -> OwlqnDriverReport {
+        solve_owlqn_problem(self, max_passes, cluster, cost, local_threads)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // The whole point of these tests is calling the deprecated direct
+    // constructors next to the builder and pinning bitwise agreement.
+    #![allow(deprecated)]
+
+    use super::*;
+    use crate::coordinator::acc_dadm::NuChoice;
+    use crate::coordinator::owlqn_driver::run_owlqn_distributed;
+    use crate::data::synthetic::tiny_classification;
+    use crate::loss::{Logistic, SmoothHinge};
+    use crate::reg::ElasticNet;
+    use crate::solver::ProxSdca;
+
+    fn opts() -> DadmOptions {
+        DadmOptions {
+            sp: 0.5,
+            seed: 7,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn builder_matches_direct_dadm_bitwise() {
+        let data = tiny_classification(160, 6, 11);
+        let part = Partition::balanced(160, 4, 11);
+        let (lambda, mu) = (1e-3, 1e-4);
+        let mut direct = Dadm::new(
+            &data,
+            &part,
+            SmoothHinge::nesterov(0.1),
+            ElasticNet::new(mu / lambda),
+            Zero,
+            lambda,
+            ProxSdca,
+            opts(),
+        );
+        let mut built = Problem::new(&data, &part)
+            .loss(SmoothHinge::nesterov(0.1))
+            .reg(ElasticNet::new(mu / lambda))
+            .lambda(lambda)
+            .build_dadm(ProxSdca, opts());
+        let a = direct.solve(0.0, 12);
+        let b = built.solve(0.0, 12);
+        assert_eq!(a.primal.to_bits(), b.primal.to_bits());
+        assert_eq!(a.dual.to_bits(), b.dual.to_bits());
+        assert_eq!(a.w.len(), b.w.len());
+        for (x, y) in a.w.iter().zip(&b.w) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn builder_matches_direct_acc_dadm_bitwise() {
+        let data = tiny_classification(160, 6, 12);
+        let part = Partition::balanced(160, 4, 12);
+        let (lambda, mu) = (1e-3, 1e-4);
+        let acc_opts = || AccDadmOptions {
+            nu: NuChoice::Zero,
+            dadm: opts(),
+            ..Default::default()
+        };
+        let mut direct = AccDadm::new(
+            &data,
+            &part,
+            Logistic,
+            Zero,
+            lambda,
+            mu,
+            ProxSdca,
+            acc_opts(),
+        );
+        let mut built = Problem::new(&data, &part)
+            .loss(Logistic)
+            .lambda(lambda)
+            .l1(mu)
+            .build_acc_dadm(ProxSdca, acc_opts());
+        let a = direct.solve(1e-9, 15);
+        let b = built.solve(1e-9, 15);
+        assert_eq!(a.primal.to_bits(), b.primal.to_bits());
+        for (x, y) in a.w.iter().zip(&b.w) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn builder_matches_direct_owlqn_bitwise() {
+        let data = tiny_classification(120, 5, 13);
+        let part = Partition::balanced(120, 4, 13);
+        let a = run_owlqn_distributed(
+            &data,
+            &part,
+            Logistic,
+            1e-3,
+            1e-4,
+            20,
+            Cluster::Serial,
+            CostModel::free(),
+            1,
+        );
+        let b = Problem::new(&data, &part)
+            .loss(Logistic)
+            .lambda(1e-3)
+            .l1(1e-4)
+            .solve_owlqn(20, Cluster::Serial, CostModel::free(), 1);
+        assert_eq!(a.objective.to_bits(), b.objective.to_bits());
+        assert_eq!(a.passes, b.passes);
+        for (x, y) in a.w.iter().zip(&b.w) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "call .lambda")]
+    fn missing_lambda_panics_clearly() {
+        let data = tiny_classification(40, 3, 14);
+        let part = Partition::balanced(40, 2, 14);
+        let _ = Problem::new(&data, &part)
+            .loss(Logistic)
+            .reg(ElasticNet::new(0.1))
+            .build_dadm(ProxSdca, DadmOptions::default());
+    }
+}

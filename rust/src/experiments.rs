@@ -9,10 +9,10 @@
 
 use crate::comm::CostModel;
 use crate::config::Method;
-use crate::coordinator::{AccDadm, AccDadmOptions, Dadm, DadmOptions, NuChoice, SolveReport};
+use crate::coordinator::{AccDadmOptions, DadmOptions, NuChoice, Problem, SolveReport};
 use crate::data::{Dataset, Partition};
 use crate::loss::Loss;
-use crate::reg::{ElasticNet, Zero};
+use crate::reg::ElasticNet;
 use crate::runtime::engine::{Driver, GapCadence, RoundAlgorithm};
 use crate::solver::ProxSdca;
 use std::sync::OnceLock;
@@ -120,33 +120,30 @@ pub fn run_cell<L: Loss + Clone + 'static>(
     // Dispatch = engine construction; the solve loop is the shared Driver.
     let (mut algo, cadence): (Box<dyn RoundAlgorithm>, GapCadence) = match method {
         Method::Dadm => (
-            Box::new(Dadm::new(
-                data,
-                &part,
-                loss,
-                ElasticNet::new(MU / lambda),
-                Zero,
-                lambda,
-                ProxSdca,
-                opts,
-            )),
+            Box::new(
+                Problem::new(data, &part)
+                    .loss(loss)
+                    .reg(ElasticNet::new(MU / lambda))
+                    .lambda(lambda)
+                    .build_dadm(ProxSdca, opts),
+            ),
             GapCadence::EveryRounds(gap_every),
         ),
         Method::AccDadm => (
-            Box::new(AccDadm::new(
-                data,
-                &part,
-                loss,
-                Zero,
-                lambda,
-                MU,
-                ProxSdca,
-                AccDadmOptions {
-                    nu,
-                    dadm: opts,
-                    ..Default::default()
-                },
-            )),
+            Box::new(
+                Problem::new(data, &part)
+                    .loss(loss)
+                    .lambda(lambda)
+                    .l1(MU)
+                    .build_acc_dadm(
+                        ProxSdca,
+                        AccDadmOptions {
+                            nu,
+                            dadm: opts,
+                            ..Default::default()
+                        },
+                    ),
+            ),
             GapCadence::AlgorithmDriven,
         ),
         Method::Owlqn => unreachable!("use run_owlqn_distributed for OWL-QN"),

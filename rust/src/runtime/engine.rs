@@ -45,6 +45,10 @@ pub struct SolveReport {
     pub passes: f64,
     /// Whether the gap target was reached.
     pub converged: bool,
+    /// Worker resurrections consumed over the whole solve (sum of
+    /// [`RoundOutcome::retried`]; nonzero only when the fault-tolerant
+    /// TCP backend re-admitted replacement workers mid-solve).
+    pub retries: usize,
     /// Full per-round trace.
     pub trace: Trace,
 }
@@ -87,6 +91,12 @@ pub struct RoundOutcome {
     /// `Some` iff [`RoundRequest::eval_entering_primal`] asked for it
     /// and the algorithm supports fused telemetry.
     pub entering_objectives: Option<(f64, f64)>,
+    /// Worker resurrections consumed while completing this round
+    /// (fault-tolerant TCP backend, DESIGN.md §14). The driver sums
+    /// these into [`SolveReport::retries`] — the telemetry hook that
+    /// lets a caller see a solve survived worker death without parsing
+    /// logs. Always `0` on the in-process backends.
+    pub retried: usize,
 }
 
 /// Context handed to [`RoundAlgorithm::on_record`] after every trace
@@ -318,6 +328,7 @@ impl Driver {
         let mut rounds_done = 0usize;
         let mut finished = false;
         let mut lag_converged = false;
+        let mut retries = 0usize;
         // Double-buffered rounds (DESIGN.md §13): when the algorithm can
         // split a round into issue/complete halves and the cadence runs
         // the fused lagged protocol, keep up to two rounds in flight —
@@ -349,6 +360,7 @@ impl Driver {
                 let entering = (algo.rounds(), algo.passes(), algo.modeled_secs());
                 let out = algo.round_complete(req);
                 rounds_done += 1;
+                retries += out.retried;
                 finished = finished || out.finished;
                 if let Some((primal, dual)) = out.entering_objectives {
                     // Records completing while the pipeline drains past a
@@ -399,6 +411,7 @@ impl Driver {
             let entering = (algo.rounds(), algo.passes(), algo.modeled_secs());
             let out = algo.round(req);
             rounds_done += 1;
+            retries += out.retried;
             finished = out.finished;
             if let Some((primal, dual)) = out.entering_objectives {
                 let (compute_secs, comm_secs) = entering.2;
@@ -474,6 +487,7 @@ impl Driver {
             rounds: algo.rounds(),
             passes: algo.passes(),
             converged,
+            retries,
             trace,
         }
     }

@@ -1,0 +1,335 @@
+//! Chaos tests: kill a **real** `dadm worker` child process mid-solve
+//! and pin the fault-tolerant TCP backend's promises (DESIGN.md §14):
+//!
+//! * with resurrection enabled, a replacement process rejoins through
+//!   the `Rejoin` replay handshake and the trajectory stays
+//!   **bit-identical** to an uninterrupted Serial solve — same w, same
+//!   gap, same modeled comm seconds, every round across the kill;
+//! * the solve report says it happened ([`SolveReport::retries`]);
+//! * with resurrection disabled, death surfaces as a typed
+//!   [`CommError::WorkerFault`] within the liveness deadline — never a
+//!   hang.
+//!
+//! Unlike the in-process twins in `comm/tcp.rs`, the workers here are
+//! actual child processes of the `dadm` binary and the kill is a real
+//! SIGKILL — nothing in the worker gets to run cleanup.
+
+use dadm::comm::sparse::DeltaCodec;
+use dadm::comm::tcp::{synthetic_specs, TcpClusterBuilder, TcpHandle};
+use dadm::comm::wire::{BroadcastRef, StepFlags, WireLoss, WireSolver};
+use dadm::comm::{Cluster, CommError, CostModel, FaultTolerance};
+use dadm::coordinator::{Dadm, DadmOptions, Problem};
+use dadm::data::synthetic::SyntheticSpec;
+use dadm::data::{Dataset, Partition};
+use dadm::loss::SmoothHinge;
+use dadm::reg::{ElasticNet, Zero};
+use dadm::solver::ProxSdca;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+const MACHINES: usize = 4;
+const PART_SEED: u64 = 11;
+const RNG_SEED: u64 = 0xDAD_A;
+const SP: f64 = 0.2;
+
+fn spawn_worker(addr: &str) -> Child {
+    Command::new(env!("CARGO_BIN_EXE_dadm"))
+        .args(["worker", "--connect", addr])
+        .stdin(Stdio::null())
+        .spawn()
+        .expect("spawning dadm worker process")
+}
+
+/// Kills any still-running children on drop so a failing assertion
+/// never leaks worker processes into the CI runner.
+struct WorkerFleet(Vec<Child>);
+
+impl WorkerFleet {
+    fn spawn(addr: &str, m: usize) -> Self {
+        WorkerFleet((0..m).map(|_| spawn_worker(addr)).collect())
+    }
+
+    /// SIGKILL child `idx` and reap it — the abrupt §14 death. The
+    /// victim leaves the fleet, so [`WorkerFleet::join`]'s clean-exit
+    /// assertion only covers survivors and replacements.
+    fn kill(&mut self, idx: usize) {
+        let mut victim = self.0.remove(idx);
+        victim.kill().expect("killing worker");
+        victim.wait().expect("reaping killed worker");
+    }
+
+    /// Spawn a replacement child against the coordinator's retained
+    /// listener; the OS backlog parks its connection until the
+    /// coordinator's resurrection accepts it.
+    fn reinforce(&mut self, addr: &str) {
+        self.0.push(spawn_worker(addr));
+    }
+
+    /// Wait for every worker to exit and assert clean status.
+    fn join(mut self) {
+        for child in &mut self.0 {
+            let status = child.wait().expect("waiting for worker");
+            assert!(status.success(), "worker exited with {status}");
+        }
+        self.0.clear();
+    }
+}
+
+impl Drop for WorkerFleet {
+    fn drop(&mut self) {
+        for child in &mut self.0 {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+}
+
+fn problem_spec() -> SyntheticSpec {
+    SyntheticSpec {
+        name: "chaos".into(),
+        n: 320,
+        d: 48,
+        density: 0.25,
+        signal_density: 0.4,
+        noise: 0.1,
+        seed: 0xBEEF,
+    }
+}
+
+fn build_dadm(
+    data: &Dataset,
+    part: &Partition,
+    cluster: Cluster,
+) -> Dadm<SmoothHinge, ElasticNet, Zero, ProxSdca> {
+    Problem::new(data, part)
+        .loss(SmoothHinge::default())
+        .reg(ElasticNet::new(0.1))
+        .lambda(1e-2)
+        .build_dadm(
+            ProxSdca,
+            DadmOptions {
+                sp: SP,
+                cluster,
+                cost: CostModel::default(),
+                seed: RNG_SEED,
+                gap_every: 1,
+                sparse_comm: true,
+                local_threads: 1,
+                conj_resum_every: 64,
+                ..Default::default()
+            },
+        )
+}
+
+/// Loopback coordinator + child-process fleet under fault tolerance
+/// `ft`, assigned and ready to solve. Also returns the listener address
+/// so a replacement can be pointed at it after a kill.
+fn connected_fleet(spec: &SyntheticSpec, ft: FaultTolerance) -> (TcpHandle, WorkerFleet, String) {
+    let builder = TcpClusterBuilder::bind("127.0.0.1:0")
+        .expect("bind")
+        .fault_tolerance(ft);
+    let addr = builder.local_addr().expect("local addr").to_string();
+    let fleet = WorkerFleet::spawn(&addr, MACHINES);
+    let mut cluster = builder.accept(MACHINES).expect("accepting workers");
+    cluster
+        .assign(synthetic_specs(
+            spec,
+            MACHINES,
+            PART_SEED,
+            RNG_SEED,
+            SP,
+            WireLoss::SmoothHinge(SmoothHinge::default()),
+            WireSolver::ProxSdca,
+            1,
+        ))
+        .expect("assigning partitions");
+    (TcpHandle::new(cluster), fleet, addr)
+}
+
+fn resurrecting_ft() -> FaultTolerance {
+    FaultTolerance {
+        worker_timeout: Duration::from_secs(10),
+        heartbeat_every: Duration::from_millis(500),
+        max_rejoins: 2,
+    }
+}
+
+#[test]
+fn killed_child_process_resurrects_bit_identically() {
+    // The tentpole pin, against real OS processes: drive Serial and TCP
+    // round by round, SIGKILL one worker child between rounds, hand the
+    // coordinator a replacement process, and require every subsequent
+    // round's iterate, dual image, and gap to stay bit-identical —
+    // resurrection must be algorithmically invisible.
+    let spec = problem_spec();
+    let data = spec.generate();
+    let part = Partition::balanced(data.n(), MACHINES, PART_SEED);
+
+    let (handle, mut fleet, addr) = connected_fleet(&spec, resurrecting_ft());
+    let mut serial = build_dadm(&data, &part, Cluster::Serial);
+    let mut tcp = build_dadm(&data, &part, Cluster::Tcp(handle.clone()));
+    serial.resync();
+    tcp.resync();
+    for round in 0..8 {
+        serial.round();
+        tcp.round();
+        assert_eq!(serial.w(), tcp.w(), "w diverged at round {round} across the kill");
+        assert_eq!(serial.v(), tcp.v(), "v diverged at round {round} across the kill");
+        assert_eq!(
+            serial.gap().to_bits(),
+            tcp.gap().to_bits(),
+            "gap diverged at round {round} across the kill"
+        );
+        if round == 2 {
+            // Abrupt death between barriers; the replacement connects
+            // into the listener backlog and is admitted by the §14
+            // rejoin during round 3's collect.
+            fleet.kill(0);
+            fleet.reinforce(&addr);
+        }
+    }
+    assert_eq!(
+        handle.with(|c| c.rejoins_total()),
+        1,
+        "exactly one resurrection expected"
+    );
+
+    handle.with(|c| c.shutdown());
+    drop(tcp);
+    drop(handle);
+    fleet.join();
+}
+
+#[test]
+fn full_solve_survives_kill_with_identical_trace_and_retry_telemetry() {
+    // End-to-end: a full `solve` whose fleet loses a worker must finish
+    // with a trace bit-identical to Serial *and* say so in the report
+    // (`retries` — the §14 telemetry hook). The kill lands after
+    // assignment, so the very first wire barrier of the solve runs the
+    // detection + rejoin path deterministically.
+    let spec = problem_spec();
+    let data = spec.generate();
+    let part = Partition::balanced(data.n(), MACHINES, PART_SEED);
+
+    let mut serial = build_dadm(&data, &part, Cluster::Serial);
+    let serial_report = serial.solve(1e-6, 40);
+
+    let (handle, mut fleet, addr) = connected_fleet(&spec, resurrecting_ft());
+    fleet.kill(0);
+    fleet.reinforce(&addr);
+    let mut tcp = build_dadm(&data, &part, Cluster::Tcp(handle.clone()));
+    let tcp_report = tcp.solve(1e-6, 40);
+
+    assert_eq!(serial_report.converged, tcp_report.converged);
+    assert_eq!(serial_report.rounds, tcp_report.rounds);
+    assert_eq!(
+        serial_report.trace.rounds.len(),
+        tcp_report.trace.rounds.len(),
+        "trace lengths differ"
+    );
+    for (s, t) in serial_report.trace.rounds.iter().zip(&tcp_report.trace.rounds) {
+        assert_eq!(s.round, t.round);
+        assert_eq!(
+            s.passes.to_bits(),
+            t.passes.to_bits(),
+            "passes diverged at round {}",
+            s.round
+        );
+        assert_eq!(
+            s.primal.to_bits(),
+            t.primal.to_bits(),
+            "primal diverged at round {}: {} vs {}",
+            s.round,
+            s.primal,
+            t.primal
+        );
+        assert_eq!(
+            s.dual.to_bits(),
+            t.dual.to_bits(),
+            "dual diverged at round {}: {} vs {}",
+            s.round,
+            s.dual,
+            t.dual
+        );
+        // Modeled comm time is deterministic (message sizes, not wall
+        // clock) and is NOT charged for the heal (§14.4), so it must
+        // match exactly even across the resurrection round.
+        assert_eq!(
+            s.comm_secs.to_bits(),
+            t.comm_secs.to_bits(),
+            "modeled comm diverged at round {}",
+            s.round
+        );
+    }
+    assert_eq!(serial_report.w, tcp_report.w, "final iterates differ");
+
+    assert_eq!(serial_report.retries, 0, "Serial backend cannot retry");
+    assert!(
+        tcp_report.retries >= 1,
+        "report should record the resurrection, got retries = {}",
+        tcp_report.retries
+    );
+    assert_eq!(
+        handle.with(|c| c.rejoins_total()),
+        1,
+        "exactly one resurrection expected"
+    );
+
+    handle.with(|c| c.shutdown());
+    drop(tcp);
+    drop(handle);
+    fleet.join();
+}
+
+#[test]
+fn dead_child_without_resurrection_is_typed_fault_within_deadline() {
+    // Acceptance criterion: with `max_rejoins = 0`, a killed worker
+    // process surfaces as `CommError::WorkerFault` well inside the
+    // liveness deadline — a typed error, never a hang, never a panic.
+    let ft = FaultTolerance {
+        worker_timeout: Duration::from_secs(1),
+        heartbeat_every: Duration::from_millis(200),
+        max_rejoins: 0,
+    };
+    let spec = problem_spec();
+    let builder = TcpClusterBuilder::bind("127.0.0.1:0")
+        .expect("bind")
+        .fault_tolerance(ft);
+    let addr = builder.local_addr().expect("local addr").to_string();
+    let mut fleet = WorkerFleet::spawn(&addr, 2);
+    let mut cluster = builder.accept(2).expect("accepting workers");
+    cluster
+        .assign(synthetic_specs(
+            &spec,
+            2,
+            PART_SEED,
+            RNG_SEED,
+            SP,
+            WireLoss::SmoothHinge(SmoothHinge::default()),
+            WireSolver::ProxSdca,
+            1,
+        ))
+        .expect("assigning partitions");
+    fleet.kill(0);
+
+    let t0 = Instant::now();
+    let err = cluster
+        .local_step(1e-2, BroadcastRef::Empty, StepFlags::default(), DeltaCodec::F64)
+        .unwrap_err();
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "death detection took {:?}",
+        t0.elapsed()
+    );
+    assert!(
+        matches!(err, CommError::WorkerFault { .. }),
+        "expected WorkerFault, got {err:?}"
+    );
+    let msg = format!("{err}");
+    assert!(msg.contains("declared dead"), "unexpected error: {msg}");
+    assert!(msg.contains("resurrection disabled"), "unexpected error: {msg}");
+
+    // Orderly teardown for the survivor.
+    drop(cluster);
+    fleet.join();
+}

@@ -1,6 +1,7 @@
 //! Integration: end-to-end convergence properties of the full stack on
 //! problems with independently-known answers.
 
+#![allow(deprecated)] // positional constructors: shims over the Problem builder
 use dadm::comm::{Cluster, CostModel};
 use dadm::coordinator::{AccDadm, AccDadmOptions, Dadm, DadmOptions};
 use dadm::data::synthetic::{tiny_classification, tiny_regression};

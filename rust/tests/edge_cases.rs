@@ -1,5 +1,6 @@
 //! Integration: edge cases and failure injection across the stack.
 
+#![allow(deprecated)] // positional constructors: shims over the Problem builder
 use dadm::comm::CostModel;
 use dadm::coordinator::{AccDadm, AccDadmOptions, Dadm, DadmOptions};
 use dadm::data::synthetic::tiny_classification;

@@ -2,6 +2,7 @@
 //! bit-exact checkpoint resumption through the engine's snapshot hook,
 //! and concurrent pool-backed solves time-sharing the global workers.
 
+#![allow(deprecated)] // positional constructors: shims over the Problem builder
 use dadm::comm::{Cluster, CostModel};
 use dadm::coordinator::Checkpoint;
 use dadm::data::synthetic::tiny_classification;

@@ -7,6 +7,7 @@
 //!   global step reduces to plain averaging, ṽ = v).
 //! * Theorem-6 step scale degrades gracefully with batch size.
 
+#![allow(deprecated)] // positional constructors: shims over the Problem builder
 use dadm::comm::CostModel;
 use dadm::coordinator::{Dadm, DadmOptions};
 use dadm::data::synthetic::tiny_classification;

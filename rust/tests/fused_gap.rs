@@ -7,6 +7,7 @@
 //! Plus the drift bound of the incremental dual conjugate sum against
 //! exact resummation.
 
+#![allow(deprecated)] // positional constructors: shims over the Problem builder
 use dadm::comm::tcp::{serve, synthetic_specs, TcpClusterBuilder, TcpHandle};
 use dadm::comm::wire::{WireLoss, WireSolver};
 use dadm::comm::{Cluster, CostModel};

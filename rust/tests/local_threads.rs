@@ -5,6 +5,7 @@
 //! fields, same final iterate — on every in-process backend (the TCP
 //! twin lives in `comm/tcp.rs` and `rust/tests/tcp_cluster.rs`).
 
+#![allow(deprecated)] // positional constructors: shims over the Problem builder
 use dadm::comm::{Cluster, CostModel};
 use dadm::coordinator::resolve_local_threads;
 use dadm::data::synthetic::tiny_classification;

@@ -9,6 +9,7 @@
 //!   backend (`Cluster::Threads`) must match `Cluster::Serial` exactly,
 //!   and the `sparse_comm` cost accounting must never change iterates.
 
+#![allow(deprecated)] // positional constructors: shims over the Problem builder
 use dadm::comm::allreduce::tree_allreduce;
 use dadm::comm::sparse::{tree_allreduce_delta, Delta, SparseDelta};
 use dadm::comm::{Cluster, CostModel};

@@ -7,6 +7,7 @@
 //! dual objectives, same modeled comm seconds. Only wall-clock-derived
 //! fields (compute seconds, wall seconds) may differ between backends.
 
+#![allow(deprecated)] // positional constructors: shims over the Problem builder
 use dadm::comm::tcp::{synthetic_specs, TcpClusterBuilder, TcpHandle};
 use dadm::comm::wire::{WireLoss, WireSolver};
 use dadm::comm::{Cluster, CostModel};

@@ -4,6 +4,7 @@
 //! These tests exercise the full L1→L2→runtime→L3 chain and skip with a
 //! notice when `artifacts/` has not been built (`make artifacts`).
 
+#![allow(deprecated)] // positional constructors: shims over the Problem builder
 use dadm::comm::CostModel;
 use dadm::coordinator::{Dadm, DadmOptions};
 use dadm::data::synthetic::SyntheticSpec;

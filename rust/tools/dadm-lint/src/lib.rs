@@ -2,8 +2,8 @@
 //!
 //! A hand-rolled token walker (no syn, no proc-macro machinery — the
 //! only dependency is the vendored `anyhow` shim) that enforces the
-//! determinism, total-decoding, blessed-reduction, wire-schema, and
-//! unsafe-audit invariants over `rust/src/**`. Run as
+//! determinism, total-decoding, blessed-reduction, wire-schema,
+//! comm-error-boundary, and unsafe-audit invariants over `rust/src/**`. Run as
 //! `cargo run -p dadm-lint -- check` from anywhere in the repo; CI runs
 //! it on every push (`lint-invariants` job).
 //!

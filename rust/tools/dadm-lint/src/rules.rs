@@ -24,11 +24,17 @@ pub enum Rule {
     WireSchema,
     /// `unsafe` only in files on the explicit allowlist.
     UnsafeCode,
+    /// No `anyhow` error construction inside `comm/` — the transport
+    /// speaks typed [`CommError`]s so callers can match on failure
+    /// classes (disconnect vs timeout vs fault) instead of strings.
+    ///
+    /// [`CommError`]: ../../../src/comm/error.rs
+    CommErrorBoundary,
 }
 
 impl Rule {
     /// Every rule, in report order.
-    pub const ALL: [Rule; 7] = [
+    pub const ALL: [Rule; 8] = [
         Rule::HashIter,
         Rule::RngConstruction,
         Rule::WallClock,
@@ -36,6 +42,7 @@ impl Rule {
         Rule::TotalDecoding,
         Rule::WireSchema,
         Rule::UnsafeCode,
+        Rule::CommErrorBoundary,
     ];
 
     /// The slug used in waiver comments and report lines.
@@ -48,6 +55,7 @@ impl Rule {
             Rule::TotalDecoding => "total-decoding",
             Rule::WireSchema => "wire-schema",
             Rule::UnsafeCode => "unsafe-code",
+            Rule::CommErrorBoundary => "comm-error",
         }
     }
 
@@ -275,6 +283,15 @@ pub fn lint_tokens(rel: &str, lexed: &Lexed, unsafe_allowlist: &[String]) -> Fil
             }
         }
 
+        if in_comm && ident_at(toks, i) == Some("anyhow") {
+            push(
+                line,
+                Rule::CommErrorBoundary,
+                "`anyhow` inside comm/: the transport's error surface is the typed                  `CommError` (comm/error.rs) — map failures onto its variants instead"
+                    .to_string(),
+            );
+        }
+
         if !unsafe_allowed && ident_at(toks, i) == Some("unsafe") {
             push(
                 line,
@@ -467,6 +484,22 @@ mod tests {
         let fl = lint("comm/tcp.rs", src);
         assert_eq!(rules_of(&fl), vec![Rule::TotalDecoding]);
         assert_eq!(fl.unused_waivers.len(), 1);
+    }
+
+    #[test]
+    fn comm_error_boundary_flags_anyhow_in_comm() {
+        let src = "use anyhow::{bail, Result};";
+        assert_eq!(
+            rules_of(&lint("comm/tcp.rs", src)),
+            vec![Rule::CommErrorBoundary]
+        );
+        let src = "fn f() -> anyhow::Result<()> { Err(anyhow::anyhow!(\"x\")) }";
+        assert_eq!(rules_of(&lint("comm/cluster.rs", src)).len(), 3);
+        // Outside comm/ anyhow is the normal application error type.
+        assert!(rules_of(&lint("coordinator/dadm.rs", "use anyhow::Result;")).is_empty());
+        // Test code inside comm/ is exempt like the other comm rules.
+        let src = "#[cfg(test)]\nmod tests { use anyhow::Result; }";
+        assert!(rules_of(&lint("comm/tcp.rs", src)).is_empty());
     }
 
     #[test]

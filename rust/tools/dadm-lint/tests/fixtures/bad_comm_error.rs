@@ -1,0 +1,24 @@
+// Fixture: every `comm-error` pattern the rule must catch when linted
+// under a virtual comm/ path. The transport's failure surface is the
+// typed `CommError` (comm/error.rs); `anyhow` erases the failure class
+// the fault-tolerance paths match on. Not compiled.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+pub fn recv_step(ok: bool) -> Result<u32> {
+    if !ok {
+        bail!("worker hung up");
+    }
+    Err(anyhow!("still stringly")).context("collect")
+}
+
+#[cfg(test)]
+mod tests {
+    // Test code inside comm/ may use anyhow like the rest of the repo.
+    use anyhow::Result;
+
+    #[test]
+    fn exempt_inside_cfg_test() -> Result<()> {
+        Ok(())
+    }
+}

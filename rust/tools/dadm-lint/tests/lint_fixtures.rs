@@ -15,6 +15,7 @@ const BAD_WALL_CLOCK: &str = include_str!("fixtures/bad_wall_clock.rs");
 const BAD_REDUCTION: &str = include_str!("fixtures/bad_reduction.rs");
 const BAD_TOTAL_DECODING: &str = include_str!("fixtures/bad_total_decoding.rs");
 const BAD_UNSAFE: &str = include_str!("fixtures/bad_unsafe.rs");
+const BAD_COMM_ERROR: &str = include_str!("fixtures/bad_comm_error.rs");
 const CLEAN: &str = include_str!("fixtures/clean.rs");
 const WAIVED: &str = include_str!("fixtures/waived.rs");
 
@@ -79,6 +80,19 @@ fn unsafe_fixture_trips_unless_allowlisted() {
     let allow = ["solver/fixture.rs".to_string()];
     let fl = lint_source("solver/fixture.rs", BAD_UNSAFE, &allow);
     assert!(active_rules(&fl).is_empty());
+}
+
+#[test]
+fn comm_error_fixture_trips_only_inside_comm() {
+    let fl = lint("comm/fixture.rs", BAD_COMM_ERROR);
+    let rules = active_rules(&fl);
+    // The use-import (`anyhow` + the braced `anyhow` macro name) and the
+    // `anyhow!(..)` construction — and nothing from the #[cfg(test)]
+    // module at the bottom.
+    let hits = rules.iter().filter(|r| **r == Rule::CommErrorBoundary).count();
+    assert_eq!(hits, 3, "{:?}", fl.findings);
+    // Outside comm/ anyhow is the repo's normal application error type.
+    assert!(active_rules(&lint("coordinator/fixture.rs", BAD_COMM_ERROR)).is_empty());
 }
 
 #[test]
