@@ -23,7 +23,7 @@ use dadm::comm::sparse::DeltaCodec;
 use dadm::comm::tcp::{run_worker, synthetic_specs, TcpClusterBuilder, TcpHandle};
 use dadm::comm::wire::{WireLoss, WireSolver};
 use dadm::comm::{Cluster, CostModel};
-use dadm::coordinator::{Dadm, DadmOptions, SolveReport};
+use dadm::coordinator::{Dadm, DadmOptions, Problem, SolveReport};
 use dadm::data::synthetic::SyntheticSpec;
 use dadm::data::{Dataset, Partition};
 use dadm::loss::SmoothHinge;
@@ -57,28 +57,7 @@ fn solve(
     cluster: Cluster,
     local_threads: usize,
 ) -> SolveReport {
-    let mut dadm = Dadm::new(
-        data,
-        part,
-        SmoothHinge::default(),
-        ElasticNet::new(0.1),
-        Zero,
-        1e-2,
-        ProxSdca,
-        DadmOptions {
-            sp: SP,
-            cluster,
-            cost: CostModel::default(),
-            seed: RNG_SEED,
-            gap_every: 1,
-            sparse_comm: true,
-            local_threads,
-            conj_resum_every: 64,
-            compress: DeltaCodec::F64,
-            overlap: false,
-        },
-    );
-    dadm.solve(EPS, MAX_ROUNDS)
+    build_dadm(data, part, cluster, local_threads, DeltaCodec::F64, false).solve(EPS, MAX_ROUNDS)
 }
 
 /// Build a smoke-configured coordinator with an explicit codec and
@@ -91,27 +70,25 @@ fn build_dadm(
     compress: DeltaCodec,
     overlap: bool,
 ) -> Dadm<SmoothHinge, ElasticNet, Zero, ProxSdca> {
-    Dadm::new(
-        data,
-        part,
-        SmoothHinge::default(),
-        ElasticNet::new(0.1),
-        Zero,
-        1e-2,
-        ProxSdca,
-        DadmOptions {
-            sp: SP,
-            cluster,
-            cost: CostModel::default(),
-            seed: RNG_SEED,
-            gap_every: 1,
-            sparse_comm: true,
-            local_threads,
-            conj_resum_every: 64,
-            compress,
-            overlap,
-        },
-    )
+    Problem::new(data, part)
+        .loss(SmoothHinge::default())
+        .reg(ElasticNet::new(0.1))
+        .lambda(1e-2)
+        .build_dadm(
+            ProxSdca,
+            DadmOptions {
+                sp: SP,
+                cluster,
+                cost: CostModel::default(),
+                seed: RNG_SEED,
+                gap_every: 1,
+                sparse_comm: true,
+                local_threads,
+                conj_resum_every: 64,
+                compress,
+                overlap,
+            },
+        )
 }
 
 fn main() -> Result<()> {
@@ -352,54 +329,21 @@ fn main() -> Result<()> {
         reassign(&handle)?;
         let before = handle.stats().total_bytes();
         let fused = |cluster: Cluster| -> SolveReport {
-            let mut dadm = Dadm::new(
-                &data,
-                &part,
-                SmoothHinge::default(),
-                ElasticNet::new(0.1),
-                Zero,
-                1e-2,
-                ProxSdca,
-                DadmOptions {
-                    sp: SP,
-                    cluster,
-                    cost: CostModel::default(),
-                    seed: RNG_SEED,
-                    gap_every: 1,
-                    sparse_comm: true,
-                    local_threads,
-                    conj_resum_every: 64,
-                    compress: DeltaCodec::F64,
-                    overlap: false,
-                },
-            );
-            dadm.solve(0.0, wire_rounds) // eps 0: run all rounds, record each
+            build_dadm(&data, &part, cluster, local_threads, DeltaCodec::F64, false)
+                .solve(0.0, wire_rounds) // eps 0: run all rounds, record each
         };
         let fused_report = fused(Cluster::Tcp(handle.clone()));
         let fused_bytes = handle.stats().total_bytes() - before;
 
         reassign(&handle)?;
         let before = handle.stats().total_bytes();
-        let mut legacy = Dadm::new(
+        let mut legacy = build_dadm(
             &data,
             &part,
-            SmoothHinge::default(),
-            ElasticNet::new(0.1),
-            Zero,
-            1e-2,
-            ProxSdca,
-            DadmOptions {
-                sp: SP,
-                cluster: Cluster::Tcp(handle.clone()),
-                cost: CostModel::default(),
-                seed: RNG_SEED,
-                gap_every: 1,
-                sparse_comm: true,
-                local_threads,
-                conj_resum_every: 64,
-                compress: DeltaCodec::F64,
-                overlap: false,
-            },
+            Cluster::Tcp(handle.clone()),
+            local_threads,
+            DeltaCodec::F64,
+            false,
         );
         legacy.resync();
         let _ = legacy.gap();

@@ -7,11 +7,11 @@
 //! ```
 
 use dadm::comm::CostModel;
-use dadm::coordinator::{AccDadm, AccDadmOptions, Dadm, DadmOptions};
+use dadm::coordinator::{AccDadmOptions, DadmOptions, Problem};
 use dadm::data::synthetic::SyntheticSpec;
 use dadm::data::Partition;
 use dadm::loss::SmoothHinge;
-use dadm::reg::{ElasticNet, Zero};
+use dadm::reg::ElasticNet;
 use dadm::solver::ProxSdca;
 
 fn main() -> anyhow::Result<()> {
@@ -48,35 +48,28 @@ fn main() -> anyhow::Result<()> {
             ..Default::default()
         };
 
-        let mut cocoa = Dadm::new(
-            &data,
-            &part,
-            SmoothHinge::default(),
-            ElasticNet::new(mu / lambda),
-            Zero,
-            lambda,
-            ProxSdca,
-            opts.clone(),
-        );
+        let mut cocoa = Problem::new(&data, &part)
+            .loss(SmoothHinge::default())
+            .reg(ElasticNet::new(mu / lambda))
+            .lambda(lambda)
+            .build_dadm(ProxSdca, opts.clone());
         let r = cocoa.solve(eps, max_rounds);
         println!(
             "{lambda:>9.0e}  {:>12}  {:>10}  {:>10.1}  {:>12.3e}",
             "CoCoA+", r.rounds, r.passes, r.normalized_gap()
         );
 
-        let mut acc = AccDadm::new(
-            &data,
-            &part,
-            SmoothHinge::default(),
-            Zero,
-            lambda,
-            mu,
-            ProxSdca,
-            AccDadmOptions {
-                dadm: opts,
-                ..Default::default()
-            },
-        );
+        let mut acc = Problem::new(&data, &part)
+            .loss(SmoothHinge::default())
+            .lambda(lambda)
+            .l1(mu)
+            .build_acc_dadm(
+                ProxSdca,
+                AccDadmOptions {
+                    dadm: opts,
+                    ..Default::default()
+                },
+            );
         let r = acc.solve(eps, max_rounds);
         println!(
             "{lambda:>9.0e}  {:>12}  {:>10}  {:>10.1}  {:>12.3e}",

@@ -15,11 +15,11 @@
 //! The run is recorded in EXPERIMENTS.md §End-to-end.
 
 use dadm::comm::CostModel;
-use dadm::coordinator::{Dadm, DadmOptions};
+use dadm::coordinator::{DadmOptions, Problem};
 use dadm::data::synthetic::SyntheticSpec;
 use dadm::data::Partition;
 use dadm::loss::{Loss, SmoothHinge};
-use dadm::reg::{ElasticNet, Zero};
+use dadm::reg::ElasticNet;
 use dadm::runtime::XlaLocalStep;
 use dadm::solver::TheoremStep;
 use std::time::Instant;
@@ -58,18 +58,16 @@ fn main() -> anyhow::Result<()> {
 
     // --- Native Rust Theorem-6 local step ---
     let t0 = Instant::now();
-    let mut native = Dadm::new(
-        &data,
-        &part,
-        loss,
-        ElasticNet::new(mu / lambda),
-        Zero,
-        lambda,
-        TheoremStep {
-            radius: data.max_row_norm_sq(),
-        },
-        opts.clone(),
-    );
+    let mut native = Problem::new(&data, &part)
+        .loss(loss)
+        .reg(ElasticNet::new(mu / lambda))
+        .lambda(lambda)
+        .build_dadm(
+            TheoremStep {
+                radius: data.max_row_norm_sq(),
+            },
+            opts.clone(),
+        );
     let r_native = native.solve(1e-2, 1500);
     let native_secs = t0.elapsed().as_secs_f64();
     println!(
@@ -91,16 +89,11 @@ fn main() -> anyhow::Result<()> {
         }
     };
     let t0 = Instant::now();
-    let mut xla = Dadm::new(
-        &data,
-        &part,
-        loss,
-        ElasticNet::new(mu / lambda),
-        Zero,
-        lambda,
-        xla_step,
-        opts,
-    );
+    let mut xla = Problem::new(&data, &part)
+        .loss(loss)
+        .reg(ElasticNet::new(mu / lambda))
+        .lambda(lambda)
+        .build_dadm(xla_step, opts);
     let r_xla = xla.solve(1e-2, 1500);
     let xla_secs = t0.elapsed().as_secs_f64();
     println!(

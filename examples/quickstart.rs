@@ -7,10 +7,10 @@
 
 use dadm::comm::CostModel;
 use dadm::config::ExperimentConfig;
-use dadm::coordinator::{AccDadm, AccDadmOptions, Dadm, DadmOptions};
+use dadm::coordinator::{AccDadmOptions, DadmOptions, Problem};
 use dadm::data::Partition;
 use dadm::loss::SmoothHinge;
-use dadm::reg::{ElasticNet, Zero};
+use dadm::reg::ElasticNet;
 use dadm::solver::ProxSdca;
 
 fn main() -> anyhow::Result<()> {
@@ -37,16 +37,11 @@ fn main() -> anyhow::Result<()> {
     };
 
     // Plain DADM (≡ CoCoA+ here: h = 0, balanced partitions).
-    let mut plain = Dadm::new(
-        &data,
-        &part,
-        SmoothHinge::default(),
-        ElasticNet::new(mu / lambda),
-        Zero,
-        lambda,
-        ProxSdca,
-        opts.clone(),
-    );
+    let mut plain = Problem::new(&data, &part)
+        .loss(SmoothHinge::default())
+        .reg(ElasticNet::new(mu / lambda))
+        .lambda(lambda)
+        .build_dadm(ProxSdca, opts.clone());
     let r1 = plain.solve(1e-4, 400);
     println!(
         "DADM/CoCoA+ : gap {:.3e} in {} communications ({:.1} passes)",
@@ -56,19 +51,17 @@ fn main() -> anyhow::Result<()> {
     );
 
     // Acc-DADM (Algorithm 3, ν = 0 practical variant).
-    let mut acc = AccDadm::new(
-        &data,
-        &part,
-        SmoothHinge::default(),
-        Zero,
-        lambda,
-        mu,
-        ProxSdca,
-        AccDadmOptions {
-            dadm: opts,
-            ..Default::default()
-        },
-    );
+    let mut acc = Problem::new(&data, &part)
+        .loss(SmoothHinge::default())
+        .lambda(lambda)
+        .l1(mu)
+        .build_acc_dadm(
+            ProxSdca,
+            AccDadmOptions {
+                dadm: opts,
+                ..Default::default()
+            },
+        );
     let r2 = acc.solve(1e-4, 400);
     println!(
         "Acc-DADM    : gap {:.3e} in {} communications ({:.1} passes, {} stages)",

@@ -10,10 +10,10 @@
 //! ```
 
 use dadm::comm::CostModel;
-use dadm::coordinator::{Dadm, DadmOptions};
+use dadm::coordinator::{DadmOptions, Problem};
 use dadm::data::{Dataset, Partition, SparseMatrix};
 use dadm::loss::Squared;
-use dadm::reg::{ElasticNet, GroupLasso, Zero};
+use dadm::reg::{ElasticNet, GroupLasso};
 use dadm::solver::ProxSdca;
 use dadm::utils::Rng;
 
@@ -56,29 +56,20 @@ fn main() -> anyhow::Result<()> {
     };
 
     // Without group norm (plain elastic net).
-    let mut en_only = Dadm::new(
-        &data,
-        &part,
-        Squared,
-        ElasticNet::new(l1 / lambda),
-        Zero,
-        lambda,
-        ProxSdca,
-        opts.clone(),
-    );
+    let mut en_only = Problem::new(&data, &part)
+        .loss(Squared)
+        .reg(ElasticNet::new(l1 / lambda))
+        .lambda(lambda)
+        .build_dadm(ProxSdca, opts.clone());
     let r_en = en_only.solve(1e-8, 800);
 
     // With the group norm assigned to h (the §6 split).
-    let mut sgl = Dadm::new(
-        &data,
-        &part,
-        Squared,
-        ElasticNet::new(l1 / lambda),
-        GroupLasso::contiguous(d, group_size, group_weight),
-        lambda,
-        ProxSdca,
-        opts,
-    );
+    let mut sgl = Problem::new(&data, &part)
+        .loss(Squared)
+        .reg(ElasticNet::new(l1 / lambda))
+        .extra_reg(GroupLasso::contiguous(d, group_size, group_weight))
+        .lambda(lambda)
+        .build_dadm(ProxSdca, opts);
     let r_sgl = sgl.solve(1e-8, 800);
 
     let group_pattern = |w: &[f64]| -> Vec<bool> {

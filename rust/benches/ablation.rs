@@ -7,14 +7,13 @@
 //! * **κ choice** (Remark 12): the default `κ = mR/(γn) − λ` vs
 //!   under-/over-regularized prox weights.
 
-#![allow(deprecated)] // positional constructors: shims over the Problem builder
 use dadm::comm::CostModel;
-use dadm::coordinator::{AccDadm, AccDadmOptions, Dadm, DadmOptions};
+use dadm::coordinator::{AccDadmOptions, DadmOptions, Problem};
 use dadm::data::synthetic::SyntheticSpec;
 use dadm::data::Partition;
 use dadm::loss::SmoothHinge;
 use dadm::metrics::bench::BenchTable;
-use dadm::reg::{ElasticNet, Zero};
+use dadm::reg::ElasticNet;
 use dadm::solver::{ProxSdca, TheoremStep};
 
 fn main() {
@@ -38,16 +37,11 @@ fn main() {
 
     // --- Local solver ablation (plain DADM) ---
     {
-        let mut dadm = Dadm::new(
-            &data,
-            &part,
-            SmoothHinge::default(),
-            ElasticNet::new(mu / lambda),
-            Zero,
-            lambda,
-            ProxSdca,
-            opts.clone(),
-        );
+        let mut dadm = Problem::new(&data, &part)
+            .loss(SmoothHinge::default())
+            .reg(ElasticNet::new(mu / lambda))
+            .lambda(lambda)
+            .build_dadm(ProxSdca, opts.clone());
         let r = dadm.solve(eps, max_rounds);
         table.row(&[
             "local_solver".into(),
@@ -58,18 +52,16 @@ fn main() {
                 .unwrap_or(format!(">{max_rounds}")),
             format!("{:.3e}", r.normalized_gap()),
         ]);
-        let mut dadm = Dadm::new(
-            &data,
-            &part,
-            SmoothHinge::default(),
-            ElasticNet::new(mu / lambda),
-            Zero,
-            lambda,
-            TheoremStep {
-                radius: data.max_row_norm_sq(),
-            },
-            opts.clone(),
-        );
+        let mut dadm = Problem::new(&data, &part)
+            .loss(SmoothHinge::default())
+            .reg(ElasticNet::new(mu / lambda))
+            .lambda(lambda)
+            .build_dadm(
+                TheoremStep {
+                    radius: data.max_row_norm_sq(),
+                },
+                opts.clone(),
+            );
         let r = dadm.solve(eps, max_rounds);
         table.row(&[
             "local_solver".into(),
@@ -90,20 +82,18 @@ fn main() {
         ("16κ* (over)", kappa_star * 16.0),
         ("κ = 0 (≡ DADM)", 0.0),
     ] {
-        let mut acc = AccDadm::new(
-            &data,
-            &part,
-            SmoothHinge::default(),
-            Zero,
-            lambda,
-            mu,
-            ProxSdca,
-            AccDadmOptions {
-                kappa: Some(kappa.max(0.0)),
-                dadm: opts.clone(),
-                ..Default::default()
-            },
-        );
+        let mut acc = Problem::new(&data, &part)
+            .loss(SmoothHinge::default())
+            .lambda(lambda)
+            .l1(mu)
+            .build_acc_dadm(
+                ProxSdca,
+                AccDadmOptions {
+                    kappa: Some(kappa.max(0.0)),
+                    dadm: opts.clone(),
+                    ..Default::default()
+                },
+            );
         let r = acc.solve(eps, max_rounds);
         table.row(&[
             "kappa".into(),

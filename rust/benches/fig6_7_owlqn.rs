@@ -6,10 +6,9 @@
 //! than the batch quasi-Newton baseline, and Acc-DADM keeps its edge as
 //! λ shrinks.
 
-#![allow(deprecated)] // positional constructors: shims over the Problem builder
 use dadm::comm::{Cluster, CostModel};
 use dadm::config::Method;
-use dadm::coordinator::{run_owlqn_distributed, NuChoice};
+use dadm::coordinator::{NuChoice, Problem};
 use dadm::data::Partition;
 use dadm::experiments::*;
 use dadm::loss::Logistic;
@@ -30,17 +29,11 @@ fn main() {
         for (li, &lambda) in lambda_grid(data.n()).iter().enumerate() {
             // OWL-QN baseline.
             let part = Partition::balanced(data.n(), m, 7);
-            let ow = run_owlqn_distributed(
-                data,
-                &part,
-                Logistic,
-                lambda,
-                MU,
-                max_passes,
-                Cluster::Serial,
-                CostModel::default(),
-                1,
-            );
+            let ow = Problem::new(data, &part)
+                .loss(Logistic)
+                .lambda(lambda)
+                .l1(MU)
+                .solve_owlqn(max_passes, Cluster::Serial, CostModel::default(), 1);
             table.row(&[
                 data.name.clone(),
                 lambda_label(li).into(),

@@ -15,18 +15,44 @@
 //! `target/bench_out/BENCH_perf_hotpath.json` and feed EXPERIMENTS.md
 //! §Perf (before/after iteration log).
 
-#![allow(deprecated)] // positional constructors: shims over the Problem builder
 use dadm::comm::sparse::{tree_allreduce_delta, Delta, SparseDelta};
 use dadm::comm::CostModel;
-use dadm::coordinator::{Dadm, DadmOptions};
+use dadm::coordinator::{Dadm, DadmOptions, Problem};
 use dadm::data::synthetic::SyntheticSpec;
-use dadm::data::Partition;
+use dadm::data::{Dataset, Partition};
 use dadm::experiments::{bench_scale, scaled_bench_n};
 use dadm::loss::{Loss, SmoothHinge};
 use dadm::metrics::bench::{fmt_secs, time_it, BenchTable};
-use dadm::reg::{ElasticNet, Zero};
+use dadm::reg::{ElasticNet, ExtraReg, Regularizer, Zero};
 use dadm::solver::{LocalSolver, ProxSdca, TheoremStep, WorkerState};
 use dadm::utils::Rng;
+
+/// Positional convenience over the [`Problem`] builder — the only
+/// construction path — for this file's repetitive setups.
+#[allow(clippy::too_many_arguments)]
+fn build_dadm<L, R, H, S>(
+    data: &Dataset,
+    part: &Partition,
+    loss: L,
+    reg: R,
+    h: H,
+    lambda: f64,
+    solver: S,
+    opts: DadmOptions,
+) -> Dadm<L, R, H, S>
+where
+    L: Loss,
+    R: Regularizer,
+    H: ExtraReg,
+    S: LocalSolver,
+{
+    Problem::new(data, part)
+        .loss(loss)
+        .reg(reg)
+        .extra_reg(h)
+        .lambda(lambda)
+        .build_dadm(solver, opts)
+}
 
 fn main() {
     let mut table = BenchTable::new(
@@ -220,7 +246,7 @@ fn main() {
         }
         .generate();
         let part = Partition::balanced(n, machines, 13);
-        let mut dadm = Dadm::new(
+        let mut dadm = build_dadm(
             &data,
             &part,
             SmoothHinge::default(),
@@ -308,7 +334,7 @@ fn main() {
             ))
             .expect("assign");
         let handle = TcpHandle::new(cluster);
-        let mut dadm = Dadm::new(
+        let mut dadm = build_dadm(
             &data,
             &part,
             SmoothHinge::default(),
@@ -396,7 +422,7 @@ fn main() {
                 ))
                 .expect("assign");
             let handle = TcpHandle::new(cluster);
-            let mut dadm = Dadm::new(
+            let mut dadm = build_dadm(
                 &data,
                 &part,
                 SmoothHinge::default(),
@@ -485,7 +511,7 @@ fn main() {
                 ))
                 .expect("assign");
             let handle = TcpHandle::new(cluster);
-            let mut dadm = Dadm::new(
+            let mut dadm = build_dadm(
                 &data,
                 &part,
                 SmoothHinge::default(),
@@ -556,7 +582,7 @@ fn main() {
         .generate();
         let part = Partition::balanced(n, machines, 21);
         let build = || {
-            let mut dadm = Dadm::new(
+            let mut dadm = build_dadm(
                 &data,
                 &part,
                 SmoothHinge::default(),
@@ -601,8 +627,6 @@ fn main() {
     // ṽ clone, and fresh broadcast index/value vectors. After: all five
     // live in persistent buffers (GlobalScratch / PendingBroadcast).
     {
-        use dadm::reg::ExtraReg;
-        use dadm::Regularizer;
         let d = 100_000usize;
         let reg = ElasticNet::new(0.1);
         let h = Zero;
@@ -736,7 +760,7 @@ fn main() {
         .generate();
         let part = Partition::balanced(n, machines, 23);
         let build = |t: usize| {
-            let mut dadm = Dadm::new(
+            let mut dadm = build_dadm(
                 &data,
                 &part,
                 SmoothHinge::default(),
@@ -819,7 +843,7 @@ fn main() {
         .generate();
         let part = Partition::balanced(n, machines, 27);
         let build = || {
-            let mut dadm = Dadm::new(
+            let mut dadm = build_dadm(
                 &data,
                 &part,
                 SmoothHinge::default(),
@@ -905,6 +929,80 @@ fn main() {
                 fmt_secs(t_incr.median)
             ),
         ]);
+    }
+
+    // --- LIBSVM text parse vs mmap cache open (out-of-core loader, §15) ---
+    {
+        use dadm::data::{cache, libsvm, CsrCache};
+        let n = scaled_bench_n(20_000);
+        let data = SyntheticSpec {
+            name: "perf-cache".into(),
+            n,
+            d: 512,
+            density: 0.05,
+            signal_density: 0.2,
+            noise: 0.1,
+            seed: 31,
+        }
+        .generate();
+        let dir = std::env::temp_dir();
+        let text = dir.join(format!("dadm_perf_cache_{}.libsvm", std::process::id()));
+        let bin = dir.join(format!("dadm_perf_cache_{}.bin", std::process::id()));
+        let mut buf = Vec::new();
+        libsvm::write(&data, &mut buf).expect("serialize libsvm");
+        std::fs::write(&text, &buf).expect("write text fixture");
+        let t_parse = time_it(1, 5, || {
+            std::hint::black_box(libsvm::load(&text).expect("parse").n());
+        });
+        cache::compile(&text, &bin).expect("compile cache");
+        // Cache open is O(1) + one O(n) row-offset scan — no float
+        // parsing, no per-row allocation — so it must come in far under
+        // the text parse (the ≥ 50x acceptance pin of ISSUE 9).
+        let t_open = time_it(2, 20, || {
+            std::hint::black_box(CsrCache::open(&bin).expect("open").rows());
+        });
+        table.row(&[
+            "libsvm_parse_vs_cache_open".into(),
+            format!("parse n={n} d=512"),
+            fmt_secs(t_parse.median),
+            String::new(),
+        ]);
+        table.row(&[
+            "libsvm_parse_vs_cache_open".into(),
+            format!("mmap open n={n} d=512"),
+            fmt_secs(t_open.median),
+            format!(
+                "{:.0}x faster than parse",
+                t_parse.median / t_open.median.max(1e-9)
+            ),
+        ]);
+
+        // A full ProxSDCA epoch over zero-copy mapped rows (contiguous
+        // partition → `slice_rows` fast path): the hot loop reads
+        // indices/values straight out of the mapping.
+        let cache = CsrCache::open(&bin).expect("open cache");
+        let mapped = cache.dataset().expect("decode cache");
+        let part = Partition::contiguous(n, 1);
+        let mut ws = WorkerState::from_partition(&mapped, &part, 0);
+        let loss = SmoothHinge::default();
+        let reg = ElasticNet::new(0.1);
+        let lambda_n_l = 1e-4 * n as f64;
+        let batch: Vec<usize> = (0..n).collect();
+        let mut rng = Rng::new(32);
+        let t = time_it(1, 5, || {
+            let dv = ProxSdca
+                .local_step(&mut ws, &batch, &loss, &reg, lambda_n_l, &mut rng)
+                .into_dense();
+            ws.apply_global(&dv, &reg);
+        });
+        table.row(&[
+            "epoch_over_mmap".into(),
+            format!("n={n} d=512 dens=0.05"),
+            fmt_secs(t.median),
+            format!("{:.2}M coord/s", n as f64 / t.median / 1e6),
+        ]);
+        let _ = std::fs::remove_file(&text);
+        let _ = std::fs::remove_file(&bin);
     }
 
     // --- PJRT execute latency (requires artifacts) ---

@@ -7,7 +7,7 @@
 //! driver scripts. Kept out of `main.rs` so integration tests can run the
 //! launcher in-process.
 
-use crate::comm::tcp::{shard_specs, synthetic_specs, TcpClusterBuilder, TcpHandle};
+use crate::comm::tcp::{cache_specs, shard_specs, synthetic_specs, TcpClusterBuilder, TcpHandle};
 use crate::comm::wire::{WireLoss, WireSolver};
 use crate::comm::{Cluster, CostModel};
 use crate::config::{ClusterKind, ExperimentConfig, Method};
@@ -81,18 +81,38 @@ fn build_cluster(cfg: &ExperimentConfig, data: &Dataset, part: &Partition) -> Re
             // DadmOptions resolution produces.
             let (loss, solver) = (wire_loss_for(cfg), WireSolver::ProxSdca);
             let local_threads = crate::coordinator::resolve_local_threads(cfg.local_threads, part);
-            let specs = match cfg.synthetic_spec() {
-                Some(spec) => synthetic_specs(
-                    &spec,
+            let specs = if let Some(cache_path) = &cfg.cache {
+                // Out-of-core assignment (wire v6): ship the cache path,
+                // each worker's contiguous row range, and the content
+                // hash; workers mmap the file locally, so no training
+                // rows cross the wire and a resurrected worker provably
+                // re-maps the same bytes.
+                let cache = crate::data::CsrCache::open(std::path::Path::new(cache_path))
+                    .with_context(|| format!("open cache {cache_path}"))?;
+                cache_specs(
+                    &cache,
+                    cache_path,
                     cfg.machines,
-                    cfg.seed,
                     cfg.seed,
                     cfg.sp,
                     loss,
                     solver,
                     local_threads,
-                ),
-                None => shard_specs(data, part, cfg.seed, cfg.sp, loss, solver, local_threads),
+                )
+            } else {
+                match cfg.synthetic_spec() {
+                    Some(spec) => synthetic_specs(
+                        &spec,
+                        cfg.machines,
+                        cfg.seed,
+                        cfg.seed,
+                        cfg.sp,
+                        loss,
+                        solver,
+                        local_threads,
+                    ),
+                    None => shard_specs(data, part, cfg.seed, cfg.sp, loss, solver, local_threads),
+                }
             };
             cluster.assign(specs)?;
             Cluster::Tcp(TcpHandle::new(cluster))
@@ -103,7 +123,7 @@ fn build_cluster(cfg: &ExperimentConfig, data: &Dataset, part: &Partition) -> Re
 /// Run one experiment according to `cfg`.
 pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunOutcome> {
     let data = cfg.load_dataset()?;
-    let part = Partition::balanced(data.n(), cfg.machines, cfg.seed);
+    let part = cfg.build_partition(data.n());
     let cost = CostModel {
         alpha: cfg.comm_alpha,
         beta: cfg.comm_beta,
@@ -289,21 +309,77 @@ fn worker_main(args: &[String]) -> Result<()> {
     Ok(crate::comm::tcp::run_worker(&addr)?)
 }
 
+/// `dadm compile-cache` subcommand: compile a LIBSVM text file into the
+/// binary CSR cache of DESIGN.md §15 (streaming two-pass; the input is
+/// never materialized in memory).
+fn compile_cache_main(args: &[String]) -> Result<()> {
+    if args.first().map(String::as_str) == Some("--help") || args.is_empty() {
+        println!(
+            "dadm compile-cache — compile LIBSVM text into a binary CSR cache\n\n\
+             USAGE: dadm compile-cache INPUT.libsvm OUTPUT.dadmcache\n\n\
+             Parses INPUT once (streaming, two passes, O(1) memory in n)\n\
+             and writes a versioned, 8-byte-aligned little-endian CSR\n\
+             image: header (magic, version, FNV-1a-64 content hash, n, d,\n\
+             nnz, section offsets) + labels + row offsets + column\n\
+             indices + values. Training with `--cache OUTPUT` then mmaps\n\
+             the file and serves rows zero-copy — open is O(1) instead of\n\
+             re-parsing the text — and produces bit-identical iterates to\n\
+             a text-parsed run with `partition = contiguous`."
+        );
+        return Ok(());
+    }
+    anyhow::ensure!(
+        args.len() == 2,
+        "expected `dadm compile-cache INPUT OUTPUT` (try `dadm compile-cache --help`)"
+    );
+    let (input, output) = (&args[0], &args[1]);
+    let report =
+        crate::data::cache::compile(std::path::Path::new(input), std::path::Path::new(output))
+            .with_context(|| format!("compile {input} -> {output}"))?;
+    println!(
+        "compiled {input} -> {output}: n={} d={} nnz={} bytes={} hash={:016x}",
+        report.n, report.d, report.nnz, report.bytes, report.content_hash
+    );
+    Ok(())
+}
+
 /// Entry point used by `main.rs`.
 pub fn main_with_args(args: &[String]) -> Result<()> {
     if args.first().map(String::as_str) == Some("worker") {
         return worker_main(&args[1..]);
     }
+    if args.first().map(String::as_str) == Some("compile-cache") {
+        return compile_cache_main(&args[1..]);
+    }
     if args.first().map(String::as_str) == Some("--help") || args.is_empty() {
         println!(
             "dadm — Distributed Alternating Dual Maximization (Zheng et al., 2016)\n\n\
              USAGE: dadm --key value ...        (coordinator / launcher)\n       \
-             dadm worker --connect HOST:PORT  (TCP cluster worker)\n\n\
+             dadm worker --connect HOST:PORT  (TCP cluster worker)\n       \
+             dadm compile-cache INPUT OUTPUT  (LIBSVM -> binary CSR cache)\n\n\
              Keys: dataset scale method loss solver lambda mu machines sp eps\n\
                    max-passes gap-every conj-resum-every cluster tcp-listen\n\
                    local-threads seed nu comm-alpha comm-beta sparse-comm\n\
                    compress overlap checkpoint checkpoint-every resume\n\
-                   worker-timeout heartbeat-every max-rejoins\n\n\
+                   worker-timeout heartbeat-every max-rejoins cache partition\n\n\
+             --cache PATH (default unset)\n  \
+             Train out-of-core from a compiled binary CSR cache (the\n  \
+             output of `dadm compile-cache`; DESIGN.md §15) instead of\n  \
+             parsing --dataset. The cache is mmapped — open is O(1) and\n  \
+             the OS pages rows in on demand — and rows are served\n  \
+             zero-copy out of the mapping. Under --cluster tcp each\n  \
+             worker maps PATH itself (shared filesystem or a local\n  \
+             copy; a content hash in the assignment catches divergent\n  \
+             copies) so no training rows cross the wire, and a\n  \
+             resurrected worker re-maps instead of re-parsing. Implies\n  \
+             --partition contiguous; iterates are bit-identical to a\n  \
+             text-parsed run of the same file with that partition.\n\n\
+             --partition balanced|contiguous (default: auto)\n  \
+             How examples are assigned to machines: `balanced` is the\n  \
+             paper's seeded-shuffle protocol (the default for in-memory\n  \
+             data); `contiguous` assigns contiguous balanced row ranges\n  \
+             (the default — and the only legal choice — with --cache,\n  \
+             where each shard is a zero-copy range of the mapping).\n\n\
              --cluster serial|threads|tcp (default serial)\n  \
              Execution backend for the per-machine local steps. `serial`\n  \
              and `threads` simulate the cluster in-process; `tcp` is a\n  \
@@ -516,6 +592,79 @@ mod tests {
     #[test]
     fn help_does_not_error() {
         main_with_args(&["--help".to_string()]).unwrap();
+    }
+
+    #[test]
+    fn compile_cache_subcommand_validates_and_compiles() {
+        // --help and arity errors happen before any I/O.
+        main_with_args(&["compile-cache".into(), "--help".into()]).unwrap();
+        assert!(main_with_args(&["compile-cache".into(), "only-one".into()]).is_err());
+
+        let dir = std::env::temp_dir().join(format!("dadm-cli-cache-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let text = dir.join("in.libsvm");
+        let cache = dir.join("in.dadmcache");
+        let data = crate::data::synthetic::tiny_classification(60, 12, 7);
+        let mut buf = Vec::new();
+        crate::data::libsvm::write(&data, &mut buf).unwrap();
+        std::fs::write(&text, &buf).unwrap();
+        main_with_args(&[
+            "compile-cache".into(),
+            text.to_str().unwrap().into(),
+            cache.to_str().unwrap().into(),
+        ])
+        .unwrap();
+        let opened = crate::data::CsrCache::open(&cache).unwrap();
+        assert_eq!(opened.rows(), 60);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    /// The trace CSV minus its last column (`wall_secs`, the one
+    /// wall-clock-derived field — everything else is modeled math and
+    /// must reproduce bit for bit; `scripts/cache_smoke.sh` applies the
+    /// same projection with `cut`).
+    fn math_columns(csv: &str) -> String {
+        csv.lines()
+            .map(|l| l.rsplit_once(',').map_or(l, |(math, _wall)| math))
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+
+    #[test]
+    fn cache_solve_is_bit_identical_to_text_solve() {
+        // The acceptance pin at the launcher level: a solve started from
+        // the compiled cache reproduces the text-parsed solve (with the
+        // same contiguous partition) bit for bit — trace CSV included.
+        let dir = std::env::temp_dir().join(format!("dadm-cli-parity-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let text = dir.join("p.libsvm");
+        let cache = dir.join("p.dadmcache");
+        let data = crate::data::synthetic::tiny_classification(200, 16, 3);
+        let mut buf = Vec::new();
+        crate::data::libsvm::write(&data, &mut buf).unwrap();
+        std::fs::write(&text, &buf).unwrap();
+        crate::data::cache::compile(&text, &cache).unwrap();
+
+        let mut text_cfg = quick_cfg("dadm");
+        text_cfg.dataset = text.to_str().unwrap().to_string();
+        text_cfg.partition = Some(crate::config::PartitionKind::Contiguous);
+        text_cfg.max_passes = 6.0;
+        let mut cache_cfg = quick_cfg("dadm");
+        cache_cfg.cache = Some(cache.to_str().unwrap().to_string());
+        cache_cfg.max_passes = 6.0;
+
+        let from_text = run_experiment(&text_cfg).unwrap();
+        let from_cache = run_experiment(&cache_cfg).unwrap();
+        assert_eq!(
+            math_columns(from_text.trace_csv.as_deref().unwrap()),
+            math_columns(from_cache.trace_csv.as_deref().unwrap())
+        );
+        assert_eq!(
+            from_text.final_metric.to_bits(),
+            from_cache.final_metric.to_bits()
+        );
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -1106,6 +1106,62 @@ pub fn shard_specs(
         .collect()
 }
 
+/// Build out-of-core cache [`ProblemSpec`]s (wire v6): each worker
+/// mmaps `path` locally and serves its contiguous row range zero-copy
+/// out of the mapping — **no training rows cross the wire and none are
+/// copied on the worker** (DESIGN.md §15). The partition is the
+/// contiguous balanced chunking of [`Partition::contiguous`] /
+/// [`split_ranges`], so a text-parsed run with the same contiguous
+/// partition is bit-identical. The cache's content hash rides in every
+/// spec: a resurrected worker re-opens with
+/// [`crate::data::CsrCache::open_expecting`], so its state is provably
+/// a pure function of `(spec, replayed frames)` even though the bytes
+/// live on local disk.
+///
+/// `path` is shipped verbatim — it must resolve to the same compiled
+/// cache on every worker host (shared filesystem or a pre-distributed
+/// copy; the hash check catches divergent copies).
+#[allow(clippy::too_many_arguments)]
+pub fn cache_specs(
+    cache: &crate::data::CsrCache,
+    path: &str,
+    machines: usize,
+    seed: u64,
+    sp: f64,
+    loss: WireLoss,
+    solver: WireSolver,
+    local_threads: usize,
+) -> Vec<ProblemSpec> {
+    assert!(local_threads >= 1, "ship a resolved local_threads (≥ 1)");
+    let n = cache.rows();
+    assert!(
+        n >= machines * local_threads,
+        "cache too small: {n} rows for {machines} machines × {local_threads} threads"
+    );
+    split_ranges(n, machines)
+        .into_iter()
+        .enumerate()
+        .map(|(l, r)| ProblemSpec {
+            worker: l as u32,
+            machines: machines as u32,
+            seed,
+            part_seed: 0, // unused: the shard range is explicit
+            sp,
+            local_threads: local_threads as u32,
+            data: DataSpec::Cache {
+                path: path.to_string(),
+                start: r.start as u64,
+                end: r.end as u64,
+                n_total: n as u64,
+                dim: cache.dim() as u32,
+                hash: cache.content_hash(),
+            },
+            loss,
+            solver,
+        })
+        .collect()
+}
+
 // ---------------------------------------------------------------------
 // Worker side
 // ---------------------------------------------------------------------
@@ -1223,6 +1279,59 @@ impl WorkerHost {
                         )
                     })
                     .collect();
+                (states, n_total as usize)
+            }
+            DataSpec::Cache {
+                path,
+                start,
+                end,
+                n_total,
+                dim,
+                hash,
+            } => {
+                // Out-of-core shard source: mmap the local compiled
+                // cache and serve our contiguous row range zero-copy.
+                // `open_expecting` pins the cache *identity* — a
+                // resurrected worker provably re-maps the same bytes
+                // the dead worker trained on (DESIGN.md §15.5).
+                let cache = crate::data::CsrCache::open_expecting(
+                    std::path::Path::new(&path),
+                    hash,
+                )
+                .map_err(|e| format!("cache shard {path:?}: {e}"))?;
+                wensure!(
+                    cache.rows() as u64 == n_total,
+                    "cache {path:?} has {} rows but the spec says n = {n_total}",
+                    cache.rows()
+                );
+                wensure!(
+                    cache.dim() as u64 == u64::from(dim),
+                    "cache {path:?} has dimension {} but the spec says d = {dim}",
+                    cache.dim()
+                );
+                let (lo, hi) = (start as usize, end as usize);
+                wensure!(
+                    hi - lo >= t,
+                    "local_threads = {t} exceeds the shard size ({})",
+                    hi - lo
+                );
+                let labels = cache.labels();
+                // The same contiguous balanced chunking as the
+                // coordinator's `Partition::split`.
+                let states: Vec<WorkerState> = split_ranges(hi - lo, t)
+                    .into_iter()
+                    .map(|r| {
+                        let (a, b) = (lo + r.start, lo + r.end);
+                        let x = cache
+                            .matrix_range(a..b)
+                            .map_err(|e| format!("cache shard {path:?}: {e}"))?;
+                        Ok(WorkerState::from_matrix(
+                            x,
+                            labels[a..b].to_vec(),
+                            (a..b).collect(),
+                        ))
+                    })
+                    .collect::<Result<_, String>>()?;
                 (states, n_total as usize)
             }
         };
@@ -1604,13 +1713,10 @@ pub fn run_worker(addr: &str) -> CommResult<()> {
 
 #[cfg(test)]
 mod tests {
-    #![allow(deprecated)]
-    // The deprecated positional constructors are fine in tests — shims
-    // over the `Problem` builder (see coordinator::problem).
     use super::*;
     use crate::comm::Cluster;
     use crate::comm::CostModel;
-    use crate::coordinator::{Dadm, DadmOptions};
+    use crate::coordinator::{Dadm, DadmOptions, Problem};
     use crate::data::synthetic::SyntheticSpec;
     use crate::loss::SmoothHinge;
     use crate::reg::{ElasticNet, Zero};
@@ -1667,27 +1773,25 @@ mod tests {
         cluster: Cluster,
         local_threads: usize,
     ) -> Dadm<SmoothHinge, ElasticNet, Zero, ProxSdca> {
-        Dadm::new(
-            data,
-            part,
-            SmoothHinge::default(),
-            ElasticNet::new(0.1),
-            Zero,
-            1e-2,
-            ProxSdca,
-            DadmOptions {
-                sp: 0.25,
-                cluster,
-                cost: CostModel::default(),
-                seed: 0xDAD_A,
-                gap_every: 1,
-                sparse_comm: true,
-                local_threads,
-                conj_resum_every: 64,
-                compress: DeltaCodec::F64,
-                overlap: false,
-            },
-        )
+        Problem::new(data, part)
+            .loss(SmoothHinge::default())
+            .reg(ElasticNet::new(0.1))
+            .lambda(1e-2)
+            .build_dadm(
+                ProxSdca,
+                DadmOptions {
+                    sp: 0.25,
+                    cluster,
+                    cost: CostModel::default(),
+                    seed: 0xDAD_A,
+                    gap_every: 1,
+                    sparse_comm: true,
+                    local_threads,
+                    conj_resum_every: 64,
+                    compress: DeltaCodec::F64,
+                    overlap: false,
+                },
+            )
     }
 
     fn build_dadm(
@@ -1852,22 +1956,20 @@ mod tests {
             })
             .unwrap();
         let compressed = |cluster| {
-            Dadm::new(
-                &data,
-                &part,
-                SmoothHinge::default(),
-                ElasticNet::new(0.1),
-                Zero,
-                1e-2,
-                ProxSdca,
-                DadmOptions {
-                    sp: 0.25,
-                    cluster,
-                    sparse_comm: true,
-                    compress: DeltaCodec::I16,
-                    ..Default::default()
-                },
-            )
+            Problem::new(&data, &part)
+                .loss(SmoothHinge::default())
+                .reg(ElasticNet::new(0.1))
+                .lambda(1e-2)
+                .build_dadm(
+                    ProxSdca,
+                    DadmOptions {
+                        sp: 0.25,
+                        cluster,
+                        sparse_comm: true,
+                        compress: DeltaCodec::I16,
+                        ..Default::default()
+                    },
+                )
         };
         let mut serial = compressed(Cluster::Serial);
         let mut tcp = compressed(Cluster::Tcp(handle.clone()));
@@ -1917,22 +2019,20 @@ mod tests {
                     ))
                 })
                 .unwrap();
-            let mut dadm = Dadm::new(
-                &data,
-                &part,
-                SmoothHinge::default(),
-                ElasticNet::new(0.1),
-                Zero,
-                1e-2,
-                ProxSdca,
-                DadmOptions {
-                    sp: 0.5,
-                    cluster: Cluster::Tcp(handle.clone()),
-                    sparse_comm: true,
-                    compress: codec,
-                    ..Default::default()
-                },
-            );
+            let mut dadm = Problem::new(&data, &part)
+                .loss(SmoothHinge::default())
+                .reg(ElasticNet::new(0.1))
+                .lambda(1e-2)
+                .build_dadm(
+                    ProxSdca,
+                    DadmOptions {
+                        sp: 0.5,
+                        cluster: Cluster::Tcp(handle.clone()),
+                        sparse_comm: true,
+                        compress: codec,
+                        ..Default::default()
+                    },
+                );
             dadm.resync();
             for _ in 0..8 {
                 dadm.round();
@@ -2003,7 +2103,7 @@ mod tests {
         // Acc-DADM exercises the full stage machinery over the wire:
         // per-stage SetReg (shifted elastic net) + dense resync
         // broadcasts + λ̃-carrying local steps. Bit parity with Serial.
-        use crate::coordinator::{AccDadm, AccDadmOptions};
+        use crate::coordinator::AccDadmOptions;
         let spec = test_spec();
         let data = spec.generate();
         let part = Partition::balanced(data.n(), 2, 9);
@@ -2023,30 +2123,28 @@ mod tests {
             })
             .unwrap();
         let build = |cluster: Cluster| {
-            AccDadm::new(
-                &data,
-                &part,
-                SmoothHinge::default(),
-                Zero,
-                1e-3,
-                1e-5,
-                ProxSdca,
-                AccDadmOptions {
-                    dadm: DadmOptions {
-                        sp: 0.5,
-                        cluster,
-                        cost: CostModel::free(),
-                        seed: 0xACC,
-                        gap_every: 1,
-                        sparse_comm: false,
-                        local_threads: 1,
-                        conj_resum_every: 64,
-                        compress: DeltaCodec::F64,
-                        overlap: false,
+            Problem::new(&data, &part)
+                .loss(SmoothHinge::default())
+                .lambda(1e-3)
+                .l1(1e-5)
+                .build_acc_dadm(
+                    ProxSdca,
+                    AccDadmOptions {
+                        dadm: DadmOptions {
+                            sp: 0.5,
+                            cluster,
+                            cost: CostModel::free(),
+                            seed: 0xACC,
+                            gap_every: 1,
+                            sparse_comm: false,
+                            local_threads: 1,
+                            conj_resum_every: 64,
+                            compress: DeltaCodec::F64,
+                            overlap: false,
+                        },
+                        ..Default::default()
                     },
-                    ..Default::default()
-                },
-            )
+                )
         };
         let mut serial = build(Cluster::Serial);
         let mut tcp = build(Cluster::Tcp(handle.clone()));
@@ -2063,7 +2161,6 @@ mod tests {
     fn owlqn_runs_unchanged_over_tcp() {
         // The primal baseline's oracle (GradOracle frames) must reduce
         // to the exact in-process sums.
-        use crate::coordinator::run_owlqn_distributed;
         use crate::loss::Logistic;
         let spec = test_spec();
         let data = spec.generate();
@@ -2083,28 +2180,15 @@ mod tests {
                 ))
             })
             .unwrap();
-        let serial = run_owlqn_distributed(
-            &data,
-            &part,
-            Logistic,
-            1e-3,
-            1e-4,
-            20,
-            Cluster::Serial,
-            CostModel::free(),
-            1,
-        );
-        let tcp = run_owlqn_distributed(
-            &data,
-            &part,
-            Logistic,
-            1e-3,
-            1e-4,
-            20,
-            Cluster::Tcp(handle.clone()),
-            CostModel::free(),
-            1,
-        );
+        let owlqn = |cluster: Cluster| {
+            Problem::new(&data, &part)
+                .loss(Logistic)
+                .lambda(1e-3)
+                .l1(1e-4)
+                .solve_owlqn(20, cluster, CostModel::free(), 1)
+        };
+        let serial = owlqn(Cluster::Serial);
+        let tcp = owlqn(Cluster::Tcp(handle.clone()));
         assert_eq!(serial.w, tcp.w, "OWL-QN iterates diverge over TCP");
         assert_eq!(serial.objective.to_bits(), tcp.objective.to_bits());
         assert_eq!(serial.passes, tcp.passes);

@@ -106,7 +106,13 @@ pub const WIRE_MAGIC: [u8; 4] = *b"DADM";
 /// v5: fault tolerance (DESIGN.md §14) — the `Heartbeat`/`HeartbeatAck`
 /// liveness pair and the `Rejoin` resurrection handshake; all v4 payload
 /// shapes are unchanged.
-pub const WIRE_VERSION: u16 = 5;
+/// v6: out-of-core shard source (DESIGN.md §15) — the trailing
+/// [`DataSpec::Cache`] kind (byte 2): workers mmap a locally-accessible
+/// compiled cache path + contiguous row range instead of receiving shard
+/// rows in `AssignPartition`; the cache's content hash travels in the
+/// spec so a resurrected worker provably re-maps the same bytes. Kinds
+/// 0/1 and every other payload shape are unchanged.
+pub const WIRE_VERSION: u16 = 6;
 /// Hard cap on one frame's payload (256 MiB): a corrupt length prefix
 /// must never drive a giant allocation.
 pub const MAX_FRAME_LEN: u32 = 256 << 20;
@@ -580,7 +586,10 @@ impl LocalSolver for WireSolver {
 /// Where the worker's shard comes from. `Synthetic` re-generates the
 /// dataset from its seed on the worker — **no training data crosses the
 /// wire** — while `Shard` ships exactly one machine's rows (LIBSVM /
-/// externally-loaded data).
+/// externally-loaded data) and `Cache` (wire v6) ships only a path +
+/// row range into a compiled binary cache the worker mmaps locally
+/// (DESIGN.md §15): no training data crosses the wire *and* none is
+/// copied on the worker.
 #[derive(Clone, Debug)]
 pub enum DataSpec {
     /// Deterministic synthetic generation + balanced partition; only the
@@ -599,6 +608,28 @@ pub enum DataSpec {
         rows: Vec<Vec<(u32, f64)>>,
         /// Shard labels.
         y: Vec<f64>,
+    },
+    /// Out-of-core shard (wire v6): mmap a compiled cache file that is
+    /// accessible on the worker's filesystem and serve rows
+    /// `[start, end)` zero-copy. The identity hash keeps the PR-8
+    /// resurrection invariant — worker state stays a pure function of
+    /// `(spec, frame bytes)` because the spec pins *which bytes* the
+    /// cache must contain, and the worker refuses any file whose
+    /// recorded identity differs.
+    Cache {
+        /// Cache file path on the worker's filesystem (shared
+        /// filesystem or per-host copy of the same compile output).
+        path: String,
+        /// First shard row (inclusive).
+        start: u64,
+        /// One past the last shard row.
+        end: u64,
+        /// Total problem size `n` across all machines.
+        n_total: u64,
+        /// Feature dimension `d`.
+        dim: u32,
+        /// Expected cache identity (`CsrCache::content_hash`).
+        hash: u64,
     },
 }
 
@@ -1250,6 +1281,22 @@ fn put_spec(e: &mut Enc, spec: &ProblemSpec) {
             }
             e.f64s(y);
         }
+        DataSpec::Cache {
+            path,
+            start,
+            end,
+            n_total,
+            dim,
+            hash,
+        } => {
+            e.u8(2);
+            e.str(path);
+            e.u64(*start);
+            e.u64(*end);
+            e.u64(*n_total);
+            e.u32(*dim);
+            e.u64(*hash);
+        }
     }
 }
 
@@ -1316,6 +1363,32 @@ fn take_spec(d: &mut Dec<'_>) -> Result<ProblemSpec> {
                 global_indices,
                 rows,
                 y,
+            }
+        }
+        2 => {
+            let path = d.str()?;
+            let start = d.u64()?;
+            let end = d.u64()?;
+            let n_total = d.u64()?;
+            let dim = d.u32()?;
+            let hash = d.u64()?;
+            ensure!(!path.is_empty(), "cache path must be non-empty");
+            ensure!(
+                start < end,
+                "cache row range [{start}, {end}) is empty or inverted"
+            );
+            ensure!(
+                end <= n_total,
+                "cache row range end {end} exceeds n_total {n_total}"
+            );
+            ensure!(dim >= 1, "cache dimension must be ≥ 1");
+            DataSpec::Cache {
+                path,
+                start,
+                end,
+                n_total,
+                dim,
+                hash,
             }
         }
         t => bail!("unknown data spec kind {t}"),
@@ -1770,7 +1843,8 @@ mod tests {
 
     fn gen_spec(g: &mut Gen) -> ProblemSpec {
         let machines = g.usize_in(1, 8) as u32;
-        let data = if g.bool(0.5) {
+        let kind = g.usize_in(0, 3);
+        let data = if kind == 0 {
             DataSpec::Synthetic(SyntheticSpec {
                 name: "prop".into(),
                 n: g.usize_in(8, 200),
@@ -1780,6 +1854,18 @@ mod tests {
                 noise: g.f64_in(0.0, 0.4),
                 seed: g.rng().next_u64(),
             })
+        } else if kind == 2 {
+            let n_total = g.usize_in(2, 500) as u64;
+            let start = g.usize_in(0, n_total as usize - 1) as u64;
+            let end = g.usize_in(start as usize + 1, n_total as usize + 1) as u64;
+            DataSpec::Cache {
+                path: "/tmp/prop.dadmcache".into(),
+                start,
+                end,
+                n_total,
+                dim: g.usize_in(1, 64) as u32,
+                hash: g.rng().next_u64(),
+            }
         } else {
             let dim = g.usize_in(1, 16) as u32;
             let n_rows = g.usize_in(0, 6);
@@ -2599,6 +2685,141 @@ mod tests {
         match hello.expect_hello() {
             Err(WireError::VersionSkew { got, want }) => {
                 assert_eq!((got, want), (4, WIRE_VERSION));
+            }
+            other => panic!("expected VersionSkew, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn cache_spec_roundtrips_verbatim() {
+        let spec = ProblemSpec {
+            worker: 1,
+            machines: 4,
+            seed: 9,
+            part_seed: 0,
+            sp: 0.25,
+            local_threads: 2,
+            data: DataSpec::Cache {
+                path: "/data/rcv1.dadmcache".into(),
+                start: 100,
+                end: 200,
+                n_total: 400,
+                dim: 47_236,
+                hash: 0xFEED_FACE_CAFE_BEEF,
+            },
+            loss: WireLoss::Logistic,
+            solver: WireSolver::ProxSdca,
+        };
+        match roundtrip(&Frame::AssignPartition(Box::new(spec))) {
+            Frame::AssignPartition(got) => match got.data {
+                DataSpec::Cache {
+                    path,
+                    start,
+                    end,
+                    n_total,
+                    dim,
+                    hash,
+                } => {
+                    assert_eq!(path, "/data/rcv1.dadmcache");
+                    assert_eq!((start, end, n_total, dim), (100, 200, 400, 47_236));
+                    assert_eq!(hash, 0xFEED_FACE_CAFE_BEEF);
+                }
+                other => panic!("expected cache spec, got {other:?}"),
+            },
+            other => panic!("expected AssignPartition, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn cache_spec_rejects_bad_range_and_empty_path() {
+        let bad_specs = [
+            ("empty range", "/ok".to_string(), 5u64, 5u64, 10u64),
+            ("inverted range", "/ok".to_string(), 7, 3, 10),
+            ("end past n_total", "/ok".to_string(), 0, 11, 10),
+            ("empty path", String::new(), 0, 5, 10),
+        ];
+        for (what, path, start, end, n_total) in bad_specs {
+            let spec = ProblemSpec {
+                worker: 0,
+                machines: 1,
+                seed: 0,
+                part_seed: 0,
+                sp: 0.5,
+                local_threads: 1,
+                data: DataSpec::Cache {
+                    path,
+                    start,
+                    end,
+                    n_total,
+                    dim: 3,
+                    hash: 1,
+                },
+                loss: WireLoss::Logistic,
+                solver: WireSolver::ProxSdca,
+            };
+            let mut e = Enc::default();
+            put_spec(&mut e, &spec);
+            let payload = e.finish().unwrap();
+            let mut d = Dec::new(&payload);
+            assert!(take_spec(&mut d).is_err(), "decoder accepted {what}");
+        }
+    }
+
+    #[test]
+    fn v5_shaped_payloads_still_decode_under_v6() {
+        // v6 appended `DataSpec` kind 2 (cache); kinds 0/1 must stay
+        // byte-compatible with v5 — the trailing-field compat pin.
+        let mk = |data| ProblemSpec {
+            worker: 0,
+            machines: 2,
+            seed: 1,
+            part_seed: 2,
+            sp: 0.5,
+            local_threads: 1,
+            data,
+            loss: WireLoss::Logistic,
+            solver: WireSolver::ProxSdca,
+        };
+        let cases = [
+            mk(DataSpec::Synthetic(SyntheticSpec {
+                name: "v5".into(),
+                n: 16,
+                d: 4,
+                density: 0.5,
+                signal_density: 0.5,
+                noise: 0.1,
+                seed: 3,
+            })),
+            mk(DataSpec::Shard {
+                n_total: 4,
+                dim: 2,
+                global_indices: vec![1, 3],
+                rows: vec![vec![(0, 1.0)], vec![(1, -1.0)]],
+                y: vec![1.0, -1.0],
+            }),
+        ];
+        for (want_kind, spec) in [0u8, 1].into_iter().zip(cases) {
+            let mut e = Enc::default();
+            put_spec(&mut e, &spec);
+            let payload = e.finish().unwrap();
+            let mut d = Dec::new(&payload);
+            let got = take_spec(&mut d).unwrap();
+            d.finish().unwrap();
+            match (want_kind, &got.data) {
+                (0, DataSpec::Synthetic(s)) => assert_eq!(s.seed, 3),
+                (1, DataSpec::Shard { y, .. }) => assert_eq!(y, &[1.0, -1.0]),
+                (_, other) => panic!("spec kind {want_kind} changed meaning: {other:?}"),
+            }
+        }
+        // A v5 worker greeting a v6 coordinator is a typed VersionSkew.
+        match (Frame::Hello {
+            magic: WIRE_MAGIC,
+            version: 5,
+        })
+        .expect_hello()
+        {
+            Err(WireError::VersionSkew { got, want }) => {
+                assert_eq!((got, want), (5, WIRE_VERSION));
             }
             other => panic!("expected VersionSkew, got {other:?}"),
         }

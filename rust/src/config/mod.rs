@@ -39,6 +39,29 @@ impl ClusterKind {
     }
 }
 
+/// How examples are assigned to machines (`partition` key).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PartitionKind {
+    /// Seeded-shuffle balanced partition ([`crate::data::Partition::balanced`])
+    /// — the paper's §10 protocol and the default for in-memory data.
+    Balanced,
+    /// Contiguous balanced row ranges ([`crate::data::Partition::contiguous`])
+    /// — required (and the default) when training from a compiled cache,
+    /// so each worker's shard is a zero-copy range of the mapping.
+    Contiguous,
+}
+
+impl PartitionKind {
+    /// Parse from a CLI string.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "balanced" => PartitionKind::Balanced,
+            "contiguous" => PartitionKind::Contiguous,
+            other => bail!("unknown partition scheme `{other}` (balanced|contiguous)"),
+        })
+    }
+}
+
 /// Optimization method to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Method {
@@ -80,6 +103,17 @@ pub struct ExperimentConfig {
     pub dataset: String,
     /// Scale factor for synthetic generation (fraction of the paper n).
     pub scale: f64,
+    /// Train out-of-core from a compiled binary CSR cache at this path
+    /// (`dadm compile-cache` output; DESIGN.md §15) instead of parsing
+    /// `dataset`. The cache is mmapped and rows are served zero-copy;
+    /// under `cluster = tcp` the workers map the file themselves and no
+    /// training rows cross the wire. Implies `partition = contiguous`.
+    pub cache: Option<String>,
+    /// Partition scheme override; `None` = auto (contiguous when `cache`
+    /// is set, the seeded balanced shuffle otherwise). A text-parsed run
+    /// with `partition = contiguous` is bit-identical to the cache run
+    /// of the same file.
+    pub partition: Option<PartitionKind>,
     /// Method.
     pub method: Method,
     /// Loss.
@@ -163,6 +197,8 @@ impl Default for ExperimentConfig {
         ExperimentConfig {
             dataset: "synth-covtype".into(),
             scale: 0.01,
+            cache: None,
+            partition: None,
             method: Method::AccDadm,
             loss: LossKind::SmoothHinge,
             solver: SolverKind::ProxSdca,
@@ -235,6 +271,12 @@ impl ExperimentConfig {
         }
         if let Some(v) = take("scale") {
             cfg.scale = v.parse().context("scale")?;
+        }
+        if let Some(v) = take("cache") {
+            cfg.cache = Some(v);
+        }
+        if let Some(v) = take("partition") {
+            cfg.partition = Some(PartitionKind::parse(&v)?);
         }
         if let Some(v) = take("method") {
             cfg.method = Method::parse(&v)?;
@@ -379,6 +421,13 @@ impl ExperimentConfig {
             self.heartbeat_every,
             self.worker_timeout
         );
+        if self.cache.is_some() {
+            anyhow::ensure!(
+                self.partition != Some(PartitionKind::Balanced),
+                "cache requires contiguous partitioning: mapped shards are \
+                 zero-copy row ranges (drop `partition = balanced` or the cache)"
+            );
+        }
         if self.checkpoint.is_some() || self.resume.is_some() {
             anyhow::ensure!(
                 self.method == Method::Dadm,
@@ -415,6 +464,10 @@ impl ExperimentConfig {
     /// the workers so no training data crosses the wire.
     pub fn synthetic_spec(&self) -> Option<crate::data::synthetic::SyntheticSpec> {
         use crate::data::synthetic::SyntheticSpec;
+        if self.cache.is_some() {
+            // The compiled cache *is* the data source; never regenerate.
+            return None;
+        }
         Some(match self.dataset.as_str() {
             "synth-covtype" => SyntheticSpec::covtype(self.scale),
             "synth-rcv1" => SyntheticSpec::rcv1(self.scale),
@@ -434,11 +487,37 @@ impl ExperimentConfig {
         })
     }
 
-    /// Materialize the dataset (synthetic analogue or LIBSVM path).
+    /// Materialize the dataset: the mmapped cache when `cache` is set,
+    /// else the synthetic analogue or LIBSVM path named by `dataset`.
     pub fn load_dataset(&self) -> Result<crate::data::Dataset> {
+        if let Some(cache) = &self.cache {
+            let c = crate::data::CsrCache::open(std::path::Path::new(cache))?;
+            return Ok(c.dataset()?);
+        }
         match self.synthetic_spec() {
             Some(spec) => Ok(spec.generate()),
             None => crate::data::libsvm::load(std::path::Path::new(&self.dataset)),
+        }
+    }
+
+    /// The effective partition scheme: the explicit `partition` key,
+    /// else contiguous when training from a cache, else the paper's
+    /// seeded balanced shuffle.
+    pub fn partition_kind(&self) -> PartitionKind {
+        self.partition.unwrap_or(if self.cache.is_some() {
+            PartitionKind::Contiguous
+        } else {
+            PartitionKind::Balanced
+        })
+    }
+
+    /// Build the effective [`crate::data::Partition`] over `n` examples.
+    pub fn build_partition(&self, n: usize) -> crate::data::Partition {
+        match self.partition_kind() {
+            PartitionKind::Balanced => {
+                crate::data::Partition::balanced(n, self.machines, self.seed)
+            }
+            PartitionKind::Contiguous => crate::data::Partition::contiguous(n, self.machines),
         }
     }
 }
@@ -615,6 +694,53 @@ heartbeat-every = 2
         // Checkpoint/resume need local worker state.
         let ck = "method = dadm\ncluster = tcp\ncheckpoint = /tmp/x.ck\n";
         assert!(ExperimentConfig::from_file_body(ck).is_err());
+    }
+
+    #[test]
+    fn parses_cache_and_partition_keys() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.cache, None);
+        assert_eq!(c.partition, None);
+        assert_eq!(c.partition_kind(), PartitionKind::Balanced);
+
+        let c = ExperimentConfig::from_file_body("partition = contiguous\n").unwrap();
+        assert_eq!(c.partition, Some(PartitionKind::Contiguous));
+        assert_eq!(c.partition_kind(), PartitionKind::Contiguous);
+
+        // A cache implies contiguous shards unless explicitly overridden…
+        let c = ExperimentConfig::from_file_body("cache = /tmp/x.dadmcache\n").unwrap();
+        assert_eq!(c.cache.as_deref(), Some("/tmp/x.dadmcache"));
+        assert_eq!(c.partition_kind(), PartitionKind::Contiguous);
+        // …and a shuffled partition cannot be served as mapped row ranges.
+        assert!(ExperimentConfig::from_file_body(
+            "cache = /tmp/x.dadmcache\npartition = balanced\n"
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_file_body("partition = bogus\n").is_err());
+    }
+
+    #[test]
+    fn cache_suppresses_synthetic_regeneration() {
+        let mut c = ExperimentConfig::default();
+        c.dataset = "tiny".into();
+        assert!(c.synthetic_spec().is_some());
+        c.cache = Some("/tmp/x.dadmcache".into());
+        // The compiled cache is the data source even when `dataset`
+        // names a generator — a TCP launch must ship DataSpec::Cache,
+        // never DataSpec::Synthetic.
+        assert!(c.synthetic_spec().is_none());
+    }
+
+    #[test]
+    fn build_partition_matches_kind() {
+        let mut c = ExperimentConfig::default();
+        c.machines = 3;
+        let p = c.build_partition(10);
+        p.check_invariants(true).unwrap();
+        c.partition = Some(PartitionKind::Contiguous);
+        let p = c.build_partition(10);
+        assert_eq!(p.shard(0), &[0, 1, 2, 3]);
+        assert_eq!(p.shard(2), &[7, 8, 9]);
     }
 
     #[test]

@@ -117,35 +117,6 @@ where
     H: ExtraReg,
     S: LocalSolver,
 {
-    /// Build for the original problem
-    /// `P(w) = Σφ + (λn/2)‖w‖² + μn‖w‖₁ + h(w)`. Deprecated positional
-    /// form — see [`Problem`](super::problem::Problem) for the named
-    /// builder.
-    #[deprecated(
-        note = "use Problem::new(data, part).loss(φ).extra_reg(h).lambda(λ).l1(μ).build_acc_dadm(solver, opts)"
-    )]
-    #[allow(clippy::too_many_arguments)]
-    pub fn new(
-        data: &Dataset,
-        part: &Partition,
-        loss: L,
-        h: H,
-        lambda: f64,
-        mu: f64,
-        solver: S,
-        opts: AccDadmOptions,
-    ) -> Self {
-        Self::from_problem(
-            Problem::new(data, part)
-                .loss(loss)
-                .extra_reg(h)
-                .lambda(lambda)
-                .l1(mu),
-            solver,
-            opts,
-        )
-    }
-
     /// Build from a completed [`Problem`] description (the
     /// [`Problem::build_acc_dadm`] entry point). The inner DADM's stage
     /// regularizer is derived here (§9.8), which is why the problem must
@@ -404,9 +375,6 @@ where
 
 #[cfg(test)]
 mod tests {
-    #![allow(deprecated)]
-    // Deprecated positional constructors are exercised on purpose — they
-    // are shims over `from_problem` (parity pinned in `problem::tests`).
     use super::*;
     use crate::comm::{Cluster, CostModel};
     use crate::data::synthetic::tiny_classification;
@@ -426,6 +394,32 @@ mod tests {
             },
             ..Default::default()
         }
+    }
+
+    /// Positional convenience over the [`Problem`] builder — the only
+    /// construction path — for this module's repetitive setups.
+    #[allow(clippy::too_many_arguments)]
+    fn build_acc<L, H, S>(
+        data: &Dataset,
+        part: &Partition,
+        loss: L,
+        h: H,
+        lambda: f64,
+        mu: f64,
+        solver: S,
+        opts: AccDadmOptions,
+    ) -> AccDadm<L, H, S>
+    where
+        L: Loss,
+        H: ExtraReg,
+        S: LocalSolver,
+    {
+        Problem::new(data, part)
+            .loss(loss)
+            .extra_reg(h)
+            .lambda(lambda)
+            .l1(mu)
+            .build_acc_dadm(solver, opts)
     }
 
     /// Verbatim replica of the pre-engine bespoke Acc-DADM solve loop
@@ -537,7 +531,7 @@ mod tests {
             (NuChoice::Theory, 1e-12, 25), // hits the round cap
         ] {
             let build = || {
-                AccDadm::new(
+                build_acc(
                     &data,
                     &part,
                     SmoothHinge::default(),
@@ -573,7 +567,7 @@ mod tests {
     fn converges_on_well_conditioned_problem() {
         let data = tiny_classification(150, 6, 21);
         let part = Partition::balanced(150, 3, 21);
-        let mut acc = AccDadm::new(
+        let mut acc = build_acc(
             &data,
             &part,
             SmoothHinge::default(),
@@ -591,7 +585,7 @@ mod tests {
     fn kappa_default_matches_remark_12() {
         let data = tiny_classification(100, 5, 22);
         let part = Partition::balanced(100, 4, 22);
-        let acc = AccDadm::new(
+        let acc = build_acc(
             &data,
             &part,
             SmoothHinge::default(),
@@ -612,7 +606,7 @@ mod tests {
         let data = tiny_classification(80, 4, 23);
         let part = Partition::balanced(80, 2, 23);
         let mk = |nu| {
-            AccDadm::new(
+            build_acc(
                 &data,
                 &part,
                 SmoothHinge::default(),
@@ -643,23 +637,21 @@ mod tests {
         let eps = 1e-3;
         let max_rounds = 150;
 
-        let mut plain = Dadm::new(
-            &data,
-            &part,
-            SmoothHinge::default(),
-            ElasticNet::new(0.0),
-            Zero,
-            lambda,
-            ProxSdca,
-            DadmOptions {
-                sp: 1.0,
-                cost: CostModel::free(),
-                ..Default::default()
-            },
-        );
+        let mut plain = Problem::new(&data, &part)
+            .loss(SmoothHinge::default())
+            .reg(ElasticNet::new(0.0))
+            .lambda(lambda)
+            .build_dadm(
+                ProxSdca,
+                DadmOptions {
+                    sp: 1.0,
+                    cost: CostModel::free(),
+                    ..Default::default()
+                },
+            );
         let plain_report = plain.solve(eps, max_rounds);
 
-        let mut acc = AccDadm::new(
+        let mut acc = build_acc(
             &data,
             &part,
             SmoothHinge::default(),
@@ -690,7 +682,7 @@ mod tests {
     fn original_gap_is_nonnegative() {
         let data = tiny_classification(100, 5, 25);
         let part = Partition::balanced(100, 2, 25);
-        let mut acc = AccDadm::new(
+        let mut acc = build_acc(
             &data,
             &part,
             SmoothHinge::default(),

@@ -370,33 +370,6 @@ where
     H: ExtraReg,
     S: LocalSolver,
 {
-    /// Build a DADM instance. Deprecated positional form — see
-    /// [`Problem`](super::problem::Problem) for the named builder.
-    #[deprecated(
-        note = "use Problem::new(data, part).loss(φ).reg(g).extra_reg(h).lambda(λ).build_dadm(solver, opts)"
-    )]
-    #[allow(clippy::too_many_arguments)]
-    pub fn new(
-        data: &Dataset,
-        part: &Partition,
-        loss: L,
-        reg: R,
-        h: H,
-        lambda: f64,
-        solver: S,
-        opts: DadmOptions,
-    ) -> Self {
-        Self::from_problem(
-            Problem::new(data, part)
-                .loss(loss)
-                .reg(reg)
-                .extra_reg(h)
-                .lambda(lambda),
-            solver,
-            opts,
-        )
-    }
-
     /// Build a DADM instance from a completed [`Problem`] description
     /// (the [`Problem::build_dadm`] entry point): shard the data per its
     /// partition, zero-initialize all dual state.
@@ -1524,10 +1497,6 @@ where
 
 #[cfg(test)]
 mod tests {
-    #![allow(deprecated)]
-    // Tests exercise the deprecated positional constructors on purpose:
-    // they are shims over `from_problem`, so this covers both paths
-    // (builder-vs-direct parity lives in `problem::tests`).
     use super::*;
     use crate::data::synthetic::{tiny_classification, tiny_regression};
     use crate::loss::{Logistic, SmoothHinge, Squared};
@@ -1541,11 +1510,38 @@ mod tests {
         }
     }
 
+    /// Positional convenience over the [`Problem`] builder — the only
+    /// construction path — for this module's repetitive setups.
+    #[allow(clippy::too_many_arguments)]
+    fn build_dadm<L, R, H, S>(
+        data: &Dataset,
+        part: &Partition,
+        loss: L,
+        reg: R,
+        h: H,
+        lambda: f64,
+        solver: S,
+        opts: DadmOptions,
+    ) -> Dadm<L, R, H, S>
+    where
+        L: Loss,
+        R: Regularizer,
+        H: ExtraReg,
+        S: LocalSolver,
+    {
+        Problem::new(data, part)
+            .loss(loss)
+            .reg(reg)
+            .extra_reg(h)
+            .lambda(lambda)
+            .build_dadm(solver, opts)
+    }
+
     #[test]
     fn gap_is_nonnegative_and_decreases() {
         let data = tiny_classification(200, 8, 1);
         let part = Partition::balanced(200, 4, 1);
-        let mut dadm = Dadm::new(
+        let mut dadm = build_dadm(
             &data,
             &part,
             SmoothHinge::default(),
@@ -1583,7 +1579,7 @@ mod tests {
     fn converges_to_target() {
         let data = tiny_classification(150, 6, 2);
         let part = Partition::balanced(150, 3, 2);
-        let mut dadm = Dadm::new(
+        let mut dadm = build_dadm(
             &data,
             &part,
             SmoothHinge::default(),
@@ -1612,7 +1608,7 @@ mod tests {
         let data = tiny_classification(120, 5, 3);
         for m in [1usize, 2, 4] {
             let part = Partition::balanced(120, m, 3);
-            let mut dadm = Dadm::new(
+            let mut dadm = build_dadm(
                 &data,
                 &part,
                 SmoothHinge::default(),
@@ -1636,7 +1632,7 @@ mod tests {
         // flush it so the observed worker ṽ_ℓ equals the global ṽ.
         let data = tiny_classification(80, 6, 19);
         let part = Partition::balanced(80, 4, 19);
-        let mut dadm = Dadm::new(
+        let mut dadm = build_dadm(
             &data,
             &part,
             SmoothHinge::default(),
@@ -1669,7 +1665,7 @@ mod tests {
     fn logistic_converges() {
         let data = tiny_classification(100, 4, 4);
         let part = Partition::balanced(100, 4, 4);
-        let mut dadm = Dadm::new(
+        let mut dadm = build_dadm(
             &data,
             &part,
             Logistic,
@@ -1692,7 +1688,7 @@ mod tests {
         let data = tiny_regression(80, 4, 0.05, 5);
         let part = Partition::balanced(80, 2, 5);
         let lambda = 0.05;
-        let mut dadm = Dadm::new(
+        let mut dadm = build_dadm(
             &data,
             &part,
             Squared,
@@ -1720,7 +1716,7 @@ mod tests {
         let data = tiny_classification(100, 5, 6);
         let part = Partition::balanced(100, 4, 6);
         let build = |cluster: Cluster| {
-            Dadm::new(
+            build_dadm(
                 &data,
                 &part,
                 SmoothHinge::default(),
@@ -1753,7 +1749,7 @@ mod tests {
         let data = tiny_classification(120, 16, 7);
         let run = |m: usize| {
             let part = Partition::balanced(120, m, 7);
-            let mut dadm = Dadm::new(
+            let mut dadm = build_dadm(
                 &data,
                 &part,
                 SmoothHinge::default(),
@@ -1778,7 +1774,7 @@ mod tests {
         let data = tiny_classification(120, 6, 71);
         let part = Partition::balanced(120, 3, 71);
         let build = || {
-            Dadm::new(
+            build_dadm(
                 &data,
                 &part,
                 SmoothHinge::default(),
@@ -1849,7 +1845,7 @@ mod tests {
         .generate();
         let part = Partition::balanced(300, 4, 9);
         let run = |sparse_comm: bool| {
-            let mut dadm = Dadm::new(
+            let mut dadm = build_dadm(
                 &data,
                 &part,
                 SmoothHinge::default(),
@@ -1882,7 +1878,7 @@ mod tests {
     fn gap_every_skips_instrumentation() {
         let data = tiny_classification(100, 4, 8);
         let part = Partition::balanced(100, 2, 8);
-        let mut dadm = Dadm::new(
+        let mut dadm = build_dadm(
             &data,
             &part,
             SmoothHinge::default(),
@@ -1911,7 +1907,7 @@ mod tests {
         let data = tiny_classification(200, 8, 21);
         let part = Partition::balanced(200, 4, 21);
         let run = |compress: DeltaCodec| {
-            let mut dadm = Dadm::new(
+            let mut dadm = build_dadm(
                 &data,
                 &part,
                 SmoothHinge::default(),
@@ -1954,7 +1950,7 @@ mod tests {
         let part = Partition::balanced(120, 3, 22);
         for compress in [DeltaCodec::F64, DeltaCodec::I16] {
             let build = || {
-                Dadm::new(
+                build_dadm(
                     &data,
                     &part,
                     SmoothHinge::default(),
@@ -1989,7 +1985,7 @@ mod tests {
         // overlap acceptance gate pins (DESIGN.md §13).
         let data = tiny_classification(200, 8, 23);
         let part = Partition::balanced(200, 4, 23);
-        let mut dadm = Dadm::new(
+        let mut dadm = build_dadm(
             &data,
             &part,
             SmoothHinge::default(),
@@ -2033,7 +2029,7 @@ mod tests {
         let data = tiny_classification(120, 6, 73);
         let part = Partition::balanced(120, 3, 73);
         let build = || {
-            Dadm::new(
+            build_dadm(
                 &data,
                 &part,
                 SmoothHinge::default(),
@@ -2083,7 +2079,7 @@ mod tests {
     fn rejects_zero_gap_every() {
         let data = tiny_classification(40, 3, 9);
         let part = Partition::balanced(40, 2, 9);
-        let _ = Dadm::new(
+        let _ = build_dadm(
             &data,
             &part,
             SmoothHinge::default(),

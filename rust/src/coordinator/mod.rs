@@ -26,8 +26,8 @@
 //!   per engine round and sharing the cluster/cost accounting.
 //! * [`problem`] — the [`Problem`] builder, the one front door that
 //!   names the objective ingredients `(φ, g, h, λ, μ)` and constructs
-//!   any of the three coordinators (the positional `new` constructors
-//!   are deprecated shims over it).
+//!   any of the three coordinators (the old positional `new`
+//!   constructors are gone; every construction goes through it).
 //! * [`checkpoint`] — resumable solver snapshots (v2: dual state plus
 //!   round counters and RNG streams for bit-exact resumption), written
 //!   by the engine's snapshot hook (CLI `--checkpoint`/`--resume`).
@@ -41,6 +41,5 @@ pub mod problem;
 pub use acc_dadm::{AccDadm, AccDadmOptions, NuChoice};
 pub use checkpoint::Checkpoint;
 pub use dadm::{resolve_local_threads, Dadm, DadmOptions, SolveReport};
-#[allow(deprecated)]
-pub use owlqn_driver::{run_owlqn_distributed, DistributedOwlqn, OwlqnDriverReport};
+pub use owlqn_driver::{DistributedOwlqn, OwlqnDriverReport};
 pub use problem::Problem;

@@ -19,7 +19,7 @@
 //! primal-only method it overrides the gap stopping rule and terminates
 //! through [`RoundOutcome::finished`] (tolerance / failed line search /
 //! pass cap); its trace records carry the normalized objective as the
-//! primal and `0.0` as the dual. [`run_owlqn_distributed`] is the batch
+//! primal and `0.0` as the dual. `Problem::solve_owlqn` is the batch
 //! wrapper the benches use.
 
 use super::dadm::resolve_local_threads;
@@ -147,32 +147,6 @@ fn oracle_eval<L: Loss>(ctx: &mut OracleCtx<'_, L>, w: &[f64]) -> (f64, Vec<f64>
 }
 
 impl<L: Loss> DistributedOwlqn<L> {
-    /// Build for the experiments objective. Deprecated positional form
-    /// — see [`Problem`](super::problem::Problem) for the named builder.
-    #[deprecated(
-        note = "use Problem::new(data, part).loss(φ).lambda(λ).l1(μ).build_owlqn(max_passes, cluster, cost, local_threads)"
-    )]
-    #[allow(clippy::too_many_arguments)]
-    pub fn new(
-        data: &Dataset,
-        part: &Partition,
-        loss: L,
-        lambda: f64,
-        mu: f64,
-        max_passes: usize,
-        cluster: Cluster,
-        cost: CostModel,
-        local_threads: usize,
-    ) -> Self {
-        Self::from_problem(
-            Problem::new(data, part).loss(loss).lambda(lambda).l1(mu),
-            max_passes,
-            cluster,
-            cost,
-            local_threads,
-        )
-    }
-
     /// Build from a completed [`Problem`] description (the
     /// [`Problem::build_owlqn`] entry point) on `part.machines()`
     /// workers, each evaluating its shard with `local_threads` sub-shard
@@ -385,47 +359,38 @@ pub(crate) fn solve_owlqn_problem<L: Loss>(
     algo.into_report(wall)
 }
 
-/// Run distributed OWL-QN on the experiments objective. Deprecated
-/// positional form — see [`Problem`](super::problem::Problem) for the
-/// named builder.
-#[deprecated(
-    note = "use Problem::new(data, part).loss(φ).lambda(λ).l1(μ).solve_owlqn(max_passes, cluster, cost, local_threads)"
-)]
-#[allow(clippy::too_many_arguments)]
-pub fn run_owlqn_distributed<L: Loss + Clone>(
-    data: &Dataset,
-    part: &Partition,
-    loss: L,
-    lambda: f64,
-    mu: f64,
-    max_passes: usize,
-    cluster: Cluster,
-    cost: CostModel,
-    local_threads: usize,
-) -> OwlqnDriverReport {
-    solve_owlqn_problem(
-        Problem::new(data, part).loss(loss).lambda(lambda).l1(mu),
-        max_passes,
-        cluster,
-        cost,
-        local_threads,
-    )
-}
-
 #[cfg(test)]
 mod tests {
-    #![allow(deprecated)]
-    // Deprecated positional wrappers are exercised on purpose — they are
-    // shims over `solve_owlqn_problem` (parity pinned in `problem::tests`).
     use super::*;
     use crate::data::synthetic::tiny_classification;
     use crate::loss::Logistic;
+
+    /// Positional convenience over the [`Problem`] builder — the only
+    /// construction path — for this module's repetitive setups.
+    #[allow(clippy::too_many_arguments)]
+    fn run_owlqn<L: Loss>(
+        data: &Dataset,
+        part: &Partition,
+        loss: L,
+        lambda: f64,
+        mu: f64,
+        max_passes: usize,
+        cluster: Cluster,
+        cost: CostModel,
+        local_threads: usize,
+    ) -> OwlqnDriverReport {
+        Problem::new(data, part)
+            .loss(loss)
+            .lambda(lambda)
+            .l1(mu)
+            .solve_owlqn(max_passes, cluster, cost, local_threads)
+    }
 
     #[test]
     fn decreases_objective_and_counts_passes() {
         let data = tiny_classification(200, 6, 31);
         let part = Partition::balanced(200, 4, 31);
-        let report = run_owlqn_distributed(
+        let report = run_owlqn(
             &data,
             &part,
             Logistic,
@@ -448,7 +413,7 @@ mod tests {
         let data = tiny_classification(120, 5, 32);
         let run = |m: usize| {
             let part = Partition::balanced(120, m, 32);
-            run_owlqn_distributed(
+            run_owlqn(
                 &data,
                 &part,
                 Logistic,
@@ -477,7 +442,7 @@ mod tests {
         let data = tiny_classification(150, 5, 35);
         let part = Partition::balanced(150, 1, 35);
         let (lambda, mu, max_passes) = (1e-3, 1e-4, 40usize);
-        let report = run_owlqn_distributed(
+        let report = run_owlqn(
             &data,
             &part,
             Logistic,
@@ -536,7 +501,7 @@ mod tests {
         let data = tiny_classification(240, 5, 36);
         let run = |m: usize, t: usize| {
             let part = Partition::balanced(240, m, 36);
-            run_owlqn_distributed(
+            run_owlqn(
                 &data,
                 &part,
                 Logistic,
@@ -560,7 +525,7 @@ mod tests {
     fn comm_cost_counted_per_evaluation() {
         let data = tiny_classification(100, 4, 33);
         let part = Partition::balanced(100, 4, 33);
-        let report = run_owlqn_distributed(
+        let report = run_owlqn(
             &data,
             &part,
             Logistic,
@@ -579,7 +544,7 @@ mod tests {
         // Sanity: strongly-regularized LR reaches a small gradient norm.
         let data = tiny_classification(150, 4, 34);
         let part = Partition::balanced(150, 2, 34);
-        let report = run_owlqn_distributed(
+        let report = run_owlqn(
             &data,
             &part,
             Logistic,

@@ -34,10 +34,12 @@
 //! runtime check left is λ: it has no safe default, so building without
 //! `.lambda(..)` panics with a message naming the missing call.
 //!
-//! The old constructors survive as `#[deprecated]` shims for one release
-//! and delegate here, so builder and direct construction are the same
-//! code path — the `builder_matches_direct_*` tests below pin that
-//! bitwise.
+//! The old positional constructors were kept as `#[deprecated]` shims
+//! for one release and have since been removed — the builder is the only
+//! construction path, and the `builder_is_deterministic_*` tests below
+//! pin that two identical builder chains produce bitwise-identical
+//! solves (the property the old shim-vs-builder parity tests
+//! established).
 
 use super::acc_dadm::{AccDadm, AccDadmOptions};
 use super::dadm::{Dadm, DadmOptions};
@@ -198,13 +200,8 @@ impl<'a, L: Loss> Problem<'a, L, (), Zero> {
 
 #[cfg(test)]
 mod tests {
-    // The whole point of these tests is calling the deprecated direct
-    // constructors next to the builder and pinning bitwise agreement.
-    #![allow(deprecated)]
-
     use super::*;
     use crate::coordinator::acc_dadm::NuChoice;
-    use crate::coordinator::owlqn_driver::run_owlqn_distributed;
     use crate::data::synthetic::tiny_classification;
     use crate::loss::{Logistic, SmoothHinge};
     use crate::reg::ElasticNet;
@@ -219,27 +216,19 @@ mod tests {
     }
 
     #[test]
-    fn builder_matches_direct_dadm_bitwise() {
+    fn builder_is_deterministic_dadm_bitwise() {
         let data = tiny_classification(160, 6, 11);
         let part = Partition::balanced(160, 4, 11);
         let (lambda, mu) = (1e-3, 1e-4);
-        let mut direct = Dadm::new(
-            &data,
-            &part,
-            SmoothHinge::nesterov(0.1),
-            ElasticNet::new(mu / lambda),
-            Zero,
-            lambda,
-            ProxSdca,
-            opts(),
-        );
-        let mut built = Problem::new(&data, &part)
-            .loss(SmoothHinge::nesterov(0.1))
-            .reg(ElasticNet::new(mu / lambda))
-            .lambda(lambda)
-            .build_dadm(ProxSdca, opts());
-        let a = direct.solve(0.0, 12);
-        let b = built.solve(0.0, 12);
+        let build = || {
+            Problem::new(&data, &part)
+                .loss(SmoothHinge::nesterov(0.1))
+                .reg(ElasticNet::new(mu / lambda))
+                .lambda(lambda)
+                .build_dadm(ProxSdca, opts())
+        };
+        let a = build().solve(0.0, 12);
+        let b = build().solve(0.0, 12);
         assert_eq!(a.primal.to_bits(), b.primal.to_bits());
         assert_eq!(a.dual.to_bits(), b.dual.to_bits());
         assert_eq!(a.w.len(), b.w.len());
@@ -249,32 +238,26 @@ mod tests {
     }
 
     #[test]
-    fn builder_matches_direct_acc_dadm_bitwise() {
+    fn builder_is_deterministic_acc_dadm_bitwise() {
         let data = tiny_classification(160, 6, 12);
         let part = Partition::balanced(160, 4, 12);
         let (lambda, mu) = (1e-3, 1e-4);
-        let acc_opts = || AccDadmOptions {
-            nu: NuChoice::Zero,
-            dadm: opts(),
-            ..Default::default()
+        let build = || {
+            Problem::new(&data, &part)
+                .loss(Logistic)
+                .lambda(lambda)
+                .l1(mu)
+                .build_acc_dadm(
+                    ProxSdca,
+                    AccDadmOptions {
+                        nu: NuChoice::Zero,
+                        dadm: opts(),
+                        ..Default::default()
+                    },
+                )
         };
-        let mut direct = AccDadm::new(
-            &data,
-            &part,
-            Logistic,
-            Zero,
-            lambda,
-            mu,
-            ProxSdca,
-            acc_opts(),
-        );
-        let mut built = Problem::new(&data, &part)
-            .loss(Logistic)
-            .lambda(lambda)
-            .l1(mu)
-            .build_acc_dadm(ProxSdca, acc_opts());
-        let a = direct.solve(1e-9, 15);
-        let b = built.solve(1e-9, 15);
+        let a = build().solve(1e-9, 15);
+        let b = build().solve(1e-9, 15);
         assert_eq!(a.primal.to_bits(), b.primal.to_bits());
         for (x, y) in a.w.iter().zip(&b.w) {
             assert_eq!(x.to_bits(), y.to_bits());
@@ -282,25 +265,18 @@ mod tests {
     }
 
     #[test]
-    fn builder_matches_direct_owlqn_bitwise() {
+    fn builder_is_deterministic_owlqn_bitwise() {
         let data = tiny_classification(120, 5, 13);
         let part = Partition::balanced(120, 4, 13);
-        let a = run_owlqn_distributed(
-            &data,
-            &part,
-            Logistic,
-            1e-3,
-            1e-4,
-            20,
-            Cluster::Serial,
-            CostModel::free(),
-            1,
-        );
-        let b = Problem::new(&data, &part)
-            .loss(Logistic)
-            .lambda(1e-3)
-            .l1(1e-4)
-            .solve_owlqn(20, Cluster::Serial, CostModel::free(), 1);
+        let run = || {
+            Problem::new(&data, &part)
+                .loss(Logistic)
+                .lambda(1e-3)
+                .l1(1e-4)
+                .solve_owlqn(20, Cluster::Serial, CostModel::free(), 1)
+        };
+        let a = run();
+        let b = run();
         assert_eq!(a.objective.to_bits(), b.objective.to_bits());
         assert_eq!(a.passes, b.passes);
         for (x, y) in a.w.iter().zip(&b.w) {

@@ -1,0 +1,963 @@
+//! Binary CSR shard cache: compile LIBSVM text once, mmap it forever.
+//!
+//! The paper's premise is data parallelism over shards that never move
+//! (§10 runs kdd2010-class datasets), yet text-parsing LIBSVM on every
+//! run makes worker startup O(dataset) and caps the trainable problem
+//! at RAM. This module compiles a LIBSVM file into a versioned binary
+//! CSR image (`dadm compile-cache`), then serves [`SparseRow`] views
+//! zero-copy straight out of a read-only memory mapping: opening a
+//! cache is O(1) in data size, the OS pages rows in on demand, and a
+//! resurrected worker (DESIGN.md §14) re-mmaps in milliseconds instead
+//! of re-parsing gigabytes. On-disk layout, alignment rules, and the
+//! mmap safety argument live in DESIGN.md §15.
+//!
+//! # On-disk layout (all integers little-endian)
+//!
+//! ```text
+//! offset  size  field
+//!      0     8  magic  b"DADMCSR1"
+//!      8     4  format_version (= 1)
+//!     12     4  reserved (= 0)
+//!     16     8  content_hash (FNV-1a-64, see below)
+//!     24     8  n      (rows)
+//!     32     8  d      (columns)
+//!     40     8  nnz    (stored entries)
+//!     48     8  labels_off   (= 88)
+//!     56     8  indptr_off   (= labels_off + 8·n)
+//!     64     8  indices_off  (= indptr_off + 8·(n+1))
+//!     72     8  values_off   (= indices_off + 4·nnz, padded to 8)
+//!     80     8  file_len     (= values_off + 8·nnz)
+//!     88        labels   n × f64
+//!             indptr   (n+1) × u64   (absolute entry offsets, [0] = 0)
+//!             indices  nnz × u32     (+ zero pad to 8-byte boundary)
+//!             values   nnz × f64
+//! ```
+//!
+//! Every section offset is 8-byte aligned by construction (the
+//! `indices` section only needs 4), so reinterpreting mapped bytes as
+//! `u64`/`f64`/`u32` slices is layout-sound on any little-endian host;
+//! big-endian hosts are rejected at open. Decoding is **total**:
+//! corrupt, truncated, misaligned, or hash-mismatched caches surface as
+//! typed [`CacheError`]s — never panics, never count-driven giant
+//! allocations (nothing is allocated from header counts; all sections
+//! stay in the mapping).
+//!
+//! # Content hash = cache identity
+//!
+//! `content_hash` is FNV-1a-64 (same function as the `wire.schema`
+//! fingerprint) over `format_version ‖ n ‖ d ‖ nnz ‖ h(labels) ‖
+//! h(indptr) ‖ h(indices) ‖ h(values)` where each `h(·)` is FNV-1a-64
+//! of that section's logical payload bytes. It is computed once at
+//! compile time and **recorded as the cache's identity**: the wire-v6
+//! `DataSpec::Cache` hashes it into the problem spec so a resurrected
+//! worker provably re-mmaps the same bytes ("state is a pure function
+//! of (spec, frame bytes)"). Opening does *not* rehash the data — that
+//! would make open O(dataset) again; [`CsrCache::verify_content`] does
+//! the full O(data) check on demand.
+
+use super::libsvm::{parse_line, uses_zero_one_labels};
+use super::sparse::append_normalized_row;
+use super::{Dataset, SparseMatrix};
+use crate::utils::mmap::{map_readonly, Mmap};
+use std::fs::File;
+use std::io::{BufRead, BufReader, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// First 8 bytes of every cache file.
+pub const CACHE_MAGIC: [u8; 8] = *b"DADMCSR1";
+/// On-disk format version; bump on any layout change.
+pub const CACHE_FORMAT_VERSION: u32 = 1;
+/// Fixed header size in bytes (the labels section starts here).
+pub const CACHE_HEADER_BYTES: u64 = 88;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv_update(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Typed, total error surface of the cache layer (DESIGN.md §12: no
+/// panic, no unwrap, no unbounded allocation on attacker-controlled
+/// counts).
+#[derive(Debug)]
+pub enum CacheError {
+    /// Underlying file I/O failed.
+    Io(std::io::Error),
+    /// LIBSVM input failed to parse during `compile`.
+    Parse(String),
+    /// The first 8 bytes are not `DADMCSR1`.
+    BadMagic,
+    /// Known magic, unknown format version.
+    BadVersion { got: u32, want: u32 },
+    /// The file is shorter than its header claims.
+    Truncated { need: u64, have: u64 },
+    /// A section offset violates the alignment rules.
+    Misaligned { section: &'static str, offset: u64 },
+    /// The cache identity does not match what the caller expected
+    /// (resurrection safety: a worker must never train on different
+    /// bytes than the coordinator partitioned).
+    HashMismatch { got: u64, want: u64 },
+    /// Structurally invalid contents (bad offsets, non-monotone row
+    /// pointers, out-of-range columns, input changed mid-compile, ...).
+    Malformed(String),
+}
+
+impl std::fmt::Display for CacheError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CacheError::Io(e) => write!(f, "cache i/o error: {e}"),
+            CacheError::Parse(m) => write!(f, "cache compile parse error: {m}"),
+            CacheError::BadMagic => write!(f, "not a dadm cache file (bad magic)"),
+            CacheError::BadVersion { got, want } => {
+                write!(f, "unsupported cache format version {got} (expected {want})")
+            }
+            CacheError::Truncated { need, have } => {
+                write!(f, "truncated cache file: need {need} bytes, have {have}")
+            }
+            CacheError::Misaligned { section, offset } => {
+                write!(f, "misaligned cache section `{section}` at offset {offset}")
+            }
+            CacheError::HashMismatch { got, want } => write!(
+                f,
+                "cache identity mismatch: file has {got:016x}, expected {want:016x}"
+            ),
+            CacheError::Malformed(m) => write!(f, "malformed cache: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for CacheError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CacheError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for CacheError {
+    fn from(e: std::io::Error) -> Self {
+        CacheError::Io(e)
+    }
+}
+
+/// What `compile` produced — printed by `dadm compile-cache`.
+#[derive(Clone, Copy, Debug)]
+pub struct CompileReport {
+    /// Rows compiled.
+    pub n: u64,
+    /// Feature dimension.
+    pub d: u64,
+    /// Stored non-zeros after per-row normalization.
+    pub nnz: u64,
+    /// The cache identity (header `content_hash`).
+    pub content_hash: u64,
+    /// Total output size in bytes.
+    pub bytes: u64,
+}
+
+/// Pad `len` up to the next multiple of 8.
+fn pad8(len: u64) -> u64 {
+    len.div_ceil(8) * 8
+}
+
+/// One output section written incrementally at a fixed file region:
+/// bytes are buffered, hashed, and flushed with an explicit seek so
+/// four sections can interleave over a single descriptor without ever
+/// materializing a section in memory (satellite: streaming compile).
+struct SectionWriter {
+    off: u64,
+    buf: Vec<u8>,
+    hash: u64,
+    written: u64,
+}
+
+const FLUSH_CHUNK: usize = 1 << 20;
+
+impl SectionWriter {
+    fn new(off: u64) -> Self {
+        SectionWriter {
+            off,
+            buf: Vec::new(),
+            hash: FNV_OFFSET,
+            written: 0,
+        }
+    }
+
+    fn push(&mut self, file: &mut File, bytes: &[u8]) -> Result<(), CacheError> {
+        self.hash = fnv_update(self.hash, bytes);
+        self.written += bytes.len() as u64;
+        self.buf.extend_from_slice(bytes);
+        if self.buf.len() >= FLUSH_CHUNK {
+            self.flush(file)?;
+        }
+        Ok(())
+    }
+
+    /// Raw pad bytes: written but not part of the logical payload hash.
+    fn push_pad(&mut self, file: &mut File, bytes: &[u8]) -> Result<(), CacheError> {
+        self.buf.extend_from_slice(bytes);
+        self.flush(file)
+    }
+
+    fn flush(&mut self, file: &mut File) -> Result<(), CacheError> {
+        if self.buf.is_empty() {
+            return Ok(());
+        }
+        file.seek(SeekFrom::Start(self.off))?;
+        file.write_all(&self.buf)?;
+        self.off += self.buf.len() as u64;
+        self.buf.clear();
+        Ok(())
+    }
+}
+
+/// One streaming pass over the LIBSVM input: counts and (optionally)
+/// per-example callbacks, with per-row normalization identical to
+/// [`SparseMatrix::from_rows`] by construction (shared helper).
+struct ScanStats {
+    n: u64,
+    nnz: u64,
+    max_col: usize,
+    all_zero_one: bool,
+    any_zero: bool,
+}
+
+fn scan_input<F>(path: &Path, mut per_row: F) -> Result<ScanStats, CacheError>
+where
+    F: FnMut(f64, &[u32], &[f64]) -> Result<(), CacheError>,
+{
+    let file = File::open(path)?;
+    let reader = BufReader::new(file);
+    let mut stats = ScanStats {
+        n: 0,
+        nnz: 0,
+        max_col: 0,
+        all_zero_one: true,
+        any_zero: false,
+    };
+    let mut scratch_idx: Vec<u32> = Vec::new();
+    let mut scratch_val: Vec<f64> = Vec::new();
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let parsed = parse_line(&line, lineno, &mut stats.max_col)
+            .map_err(|e| CacheError::Parse(format!("{e:#}")))?;
+        let Some((label, feats)) = parsed else {
+            continue;
+        };
+        scratch_idx.clear();
+        scratch_val.clear();
+        // `usize::MAX` disables the helper's column assert; the caller
+        // does its own typed bound check against the final dimension.
+        append_normalized_row(feats, usize::MAX, &mut scratch_idx, &mut scratch_val);
+        stats.n += 1;
+        stats.nnz += scratch_idx.len() as u64;
+        stats.all_zero_one &= label == 0.0 || label == 1.0;
+        stats.any_zero |= label == 0.0;
+        per_row(label, &scratch_idx, &scratch_val)?;
+    }
+    Ok(stats)
+}
+
+/// Compile `input` (LIBSVM text) into the binary cache at `output`.
+///
+/// Two streaming passes: the first counts rows/nnz and detects the
+/// `{0,1}` label convention, the second writes all four sections
+/// incrementally — no `Vec<Vec<(u32, f64)>>` is ever materialized, so
+/// peak memory is O(longest row), not O(dataset).
+pub fn compile(input: &Path, output: &Path) -> Result<CompileReport, CacheError> {
+    // Pass 1: sizes and label convention.
+    let stats = scan_input(input, |_, _, _| Ok(()))?;
+    if stats.n == 0 {
+        return Err(CacheError::Malformed("empty dataset".into()));
+    }
+    let n = stats.n;
+    let d = (stats.max_col.max(1)) as u64;
+    let nnz = stats.nnz;
+    let zero_one = uses_zero_one_labels(stats.all_zero_one, stats.any_zero);
+
+    let labels_off = CACHE_HEADER_BYTES;
+    let indptr_off = labels_off + 8 * n;
+    let indices_off = indptr_off + 8 * (n + 1);
+    let values_off = indices_off + pad8(4 * nnz);
+    let file_len = values_off + 8 * nnz;
+
+    let mut out = File::create(output)?;
+    out.write_all(&[0u8; CACHE_HEADER_BYTES as usize])?;
+
+    let mut labels = SectionWriter::new(labels_off);
+    let mut indptr = SectionWriter::new(indptr_off);
+    let mut indices = SectionWriter::new(indices_off);
+    let mut values = SectionWriter::new(values_off);
+    indptr.push(&mut out, &0u64.to_le_bytes())?;
+
+    // Pass 2: write sections. The borrow checker won't let the closure
+    // capture `out` and the writers at once mutably through `scan_input`,
+    // so collect the per-row work through a RefCell-free split: do the
+    // pass inline here.
+    let mut running: u64 = 0;
+    let pass2 = {
+        let out = &mut out;
+        let labels = &mut labels;
+        let indptr = &mut indptr;
+        let indices = &mut indices;
+        let values = &mut values;
+        let running = &mut running;
+        scan_input(input, move |label, idx, val| {
+            let y = if zero_one {
+                if label == 1.0 {
+                    1.0
+                } else {
+                    -1.0
+                }
+            } else {
+                label
+            };
+            labels.push(out, &y.to_le_bytes())?;
+            for &j in idx {
+                if (j as u64) >= d {
+                    return Err(CacheError::Malformed(
+                        "input changed during compile (column out of range)".into(),
+                    ));
+                }
+                indices.push(out, &j.to_le_bytes())?;
+            }
+            for &v in val {
+                values.push(out, &v.to_le_bytes())?;
+            }
+            *running += idx.len() as u64;
+            indptr.push(out, &running.to_le_bytes())?;
+            Ok(())
+        })?
+    };
+    if pass2.n != n || pass2.nnz != nnz || pass2.max_col != stats.max_col {
+        return Err(CacheError::Malformed(
+            "input changed during compile (pass disagreement)".into(),
+        ));
+    }
+
+    labels.flush(&mut out)?;
+    indptr.flush(&mut out)?;
+    let pad_len = (values_off - (indices_off + 4 * nnz)) as usize;
+    indices.push_pad(&mut out, &vec![0u8; pad_len])?;
+    values.flush(&mut out)?;
+    out.set_len(file_len)?;
+
+    let mut h = FNV_OFFSET;
+    h = fnv_update(h, &CACHE_FORMAT_VERSION.to_le_bytes());
+    h = fnv_update(h, &n.to_le_bytes());
+    h = fnv_update(h, &d.to_le_bytes());
+    h = fnv_update(h, &nnz.to_le_bytes());
+    for s in [&labels, &indptr, &indices, &values] {
+        h = fnv_update(h, &s.hash.to_le_bytes());
+    }
+    let content_hash = h;
+
+    let mut header = Vec::with_capacity(CACHE_HEADER_BYTES as usize);
+    header.extend_from_slice(&CACHE_MAGIC);
+    header.extend_from_slice(&CACHE_FORMAT_VERSION.to_le_bytes());
+    header.extend_from_slice(&0u32.to_le_bytes());
+    header.extend_from_slice(&content_hash.to_le_bytes());
+    for v in [n, d, nnz, labels_off, indptr_off, indices_off, values_off, file_len] {
+        header.extend_from_slice(&v.to_le_bytes());
+    }
+    debug_assert_eq!(header.len() as u64, CACHE_HEADER_BYTES);
+    out.seek(SeekFrom::Start(0))?;
+    out.write_all(&header)?;
+    out.sync_all()?;
+
+    Ok(CompileReport {
+        n,
+        d,
+        nnz,
+        content_hash,
+        bytes: file_len,
+    })
+}
+
+fn rd_u32(bytes: &[u8], off: usize) -> u32 {
+    let mut b = [0u8; 4];
+    b.copy_from_slice(&bytes[off..off + 4]);
+    u32::from_le_bytes(b)
+}
+
+fn rd_u64(bytes: &[u8], off: usize) -> u64 {
+    let mut b = [0u8; 8];
+    b.copy_from_slice(&bytes[off..off + 8]);
+    u64::from_le_bytes(b)
+}
+
+/// An opened, structurally-validated cache file.
+///
+/// Holding one of these keeps the mapping alive; matrices produced by
+/// [`CsrCache::matrix_range`] share it via `Arc`, so the cache handle
+/// itself may be dropped once shards are built.
+#[derive(Clone, Debug)]
+pub struct CsrCache {
+    map: Arc<Mmap>,
+    path: PathBuf,
+    n: usize,
+    d: usize,
+    nnz: usize,
+    content_hash: u64,
+    labels_off: usize,
+    indptr_off: usize,
+    indices_off: usize,
+    values_off: usize,
+}
+
+impl CsrCache {
+    /// Open and structurally validate a cache file: O(1) in data size
+    /// plus one O(n) scan of the row-offset section (the part whose
+    /// corruption could break the `get_unchecked` hot-path contract).
+    /// Column indices are validated per row range in
+    /// [`CsrCache::matrix_range`] — a worker only pays for its shard.
+    pub fn open(path: &Path) -> Result<CsrCache, CacheError> {
+        if cfg!(target_endian = "big") {
+            return Err(CacheError::Malformed(
+                "cache files are little-endian; big-endian hosts are unsupported".into(),
+            ));
+        }
+        let file = File::open(path)?;
+        let map = Arc::new(map_readonly(&file)?);
+        let bytes = map.as_slice();
+        if (bytes.len() as u64) < CACHE_HEADER_BYTES {
+            return Err(CacheError::Truncated {
+                need: CACHE_HEADER_BYTES,
+                have: bytes.len() as u64,
+            });
+        }
+        if bytes[..8] != CACHE_MAGIC {
+            return Err(CacheError::BadMagic);
+        }
+        let version = rd_u32(bytes, 8);
+        if version != CACHE_FORMAT_VERSION {
+            return Err(CacheError::BadVersion {
+                got: version,
+                want: CACHE_FORMAT_VERSION,
+            });
+        }
+        let content_hash = rd_u64(bytes, 16);
+        let n = rd_u64(bytes, 24);
+        let d = rd_u64(bytes, 32);
+        let nnz = rd_u64(bytes, 40);
+        let labels_off = rd_u64(bytes, 48);
+        let indptr_off = rd_u64(bytes, 56);
+        let indices_off = rd_u64(bytes, 64);
+        let values_off = rd_u64(bytes, 72);
+        let file_len = rd_u64(bytes, 80);
+
+        if n == 0 {
+            return Err(CacheError::Malformed("zero rows".into()));
+        }
+        if d == 0 || d > (u32::MAX as u64) + 1 {
+            return Err(CacheError::Malformed(format!("dimension {d} out of range")));
+        }
+        // Alignment first (so a hand-mangled offset reports as such) …
+        for (name, off, align) in [
+            ("labels", labels_off, 8u64),
+            ("indptr", indptr_off, 8),
+            ("indices", indices_off, 4),
+            ("values", values_off, 8),
+        ] {
+            if off % align != 0 {
+                return Err(CacheError::Misaligned {
+                    section: name,
+                    offset: off,
+                });
+            }
+        }
+        // … then exact layout recomputation with overflow-checked
+        // arithmetic: counts can't drive allocations (there are none)
+        // but they also can't place sections outside the mapping.
+        let want_indptr = (|| {
+            let o = labels_off.checked_add(n.checked_mul(8)?)?;
+            Some(o)
+        })();
+        let want_indices =
+            want_indptr.and_then(|o| o.checked_add(n.checked_add(1)?.checked_mul(8)?));
+        let want_values =
+            want_indices.and_then(|o| o.checked_add(pad8(nnz.checked_mul(4)?)));
+        let want_len = want_values.and_then(|o| o.checked_add(nnz.checked_mul(8)?));
+        let (want_indptr, want_indices, want_values, want_len) =
+            match (want_indptr, want_indices, want_values, want_len) {
+                (Some(a), Some(b), Some(c), Some(e)) => (a, b, c, e),
+                _ => return Err(CacheError::Malformed("section offsets overflow".into())),
+            };
+        if labels_off != CACHE_HEADER_BYTES
+            || indptr_off != want_indptr
+            || indices_off != want_indices
+            || values_off != want_values
+            || file_len != want_len
+        {
+            return Err(CacheError::Malformed(
+                "section offsets disagree with counts".into(),
+            ));
+        }
+        let have = bytes.len() as u64;
+        if have < file_len {
+            return Err(CacheError::Truncated {
+                need: file_len,
+                have,
+            });
+        }
+        if have > file_len {
+            return Err(CacheError::Malformed(format!(
+                "trailing bytes: file is {have}, header says {file_len}"
+            )));
+        }
+        if bytes.as_ptr() as usize % 8 != 0 {
+            // Real mappings are page-aligned; this guards the fallback.
+            return Err(CacheError::Misaligned {
+                section: "mapping base",
+                offset: bytes.as_ptr() as u64,
+            });
+        }
+        let (n, d, nnz) = match (
+            usize::try_from(n),
+            usize::try_from(d),
+            usize::try_from(nnz),
+        ) {
+            (Ok(n), Ok(d), Ok(z)) => (n, d, z),
+            _ => return Err(CacheError::Malformed("counts exceed address space".into())),
+        };
+        let cache = CsrCache {
+            map,
+            path: path.to_path_buf(),
+            n,
+            d,
+            nnz,
+            content_hash,
+            labels_off: labels_off as usize,
+            indptr_off: indptr_off as usize,
+            indices_off: indices_off as usize,
+            values_off: values_off as usize,
+        };
+        // O(n) structural scan of indptr — the bound every mapped row
+        // view trusts. Columns are checked lazily per range.
+        let indptr = cache.indptr_section();
+        if indptr[0] != 0 {
+            return Err(CacheError::Malformed("indptr[0] != 0".into()));
+        }
+        for w in indptr.windows(2) {
+            if w[1] < w[0] {
+                return Err(CacheError::Malformed("indptr not monotone".into()));
+            }
+        }
+        if indptr[cache.n] as u64 != cache.nnz as u64 {
+            return Err(CacheError::Malformed(format!(
+                "indptr[n] = {} but header nnz = {}",
+                indptr[cache.n], cache.nnz
+            )));
+        }
+        Ok(cache)
+    }
+
+    /// Open and require a specific cache identity — the resurrection
+    /// path: a worker must refuse to train on bytes other than the
+    /// ones the coordinator partitioned.
+    pub fn open_expecting(path: &Path, want_hash: u64) -> Result<CsrCache, CacheError> {
+        let cache = CsrCache::open(path)?;
+        if cache.content_hash != want_hash {
+            return Err(CacheError::HashMismatch {
+                got: cache.content_hash,
+                want: want_hash,
+            });
+        }
+        Ok(cache)
+    }
+
+    /// Rows `n`.
+    pub fn rows(&self) -> usize {
+        self.n
+    }
+
+    /// Feature dimension `d`.
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// Total stored non-zeros.
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// The cache identity recorded at compile time.
+    pub fn content_hash(&self) -> u64 {
+        self.content_hash
+    }
+
+    /// The file this cache was opened from.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    fn indptr_section(&self) -> &[u64] {
+        // SAFETY: `open` validated that the section lies inside the
+        // mapping, is 8-byte aligned (base + offset), and holds
+        // exactly n+1 u64s; the mapping is immutable and outlives
+        // `self`.
+        unsafe {
+            std::slice::from_raw_parts(
+                self.map.as_slice().as_ptr().add(self.indptr_off) as *const u64,
+                self.n + 1,
+            )
+        }
+    }
+
+    fn indices_section(&self) -> &[u32] {
+        // SAFETY: as in `indptr_section` (4-byte alignment, nnz u32s).
+        unsafe {
+            std::slice::from_raw_parts(
+                self.map.as_slice().as_ptr().add(self.indices_off) as *const u32,
+                self.nnz,
+            )
+        }
+    }
+
+    /// All labels, zero-copy out of the mapping.
+    pub fn labels(&self) -> &[f64] {
+        // SAFETY: as in `indptr_section` (8-byte alignment, n f64s; any
+        // bit pattern is a valid f64).
+        unsafe {
+            std::slice::from_raw_parts(
+                self.map.as_slice().as_ptr().add(self.labels_off) as *const f64,
+                self.n,
+            )
+        }
+    }
+
+    /// A zero-copy matrix over rows `[range.start, range.end)`.
+    ///
+    /// Validates every stored column index in the range against `d` —
+    /// O(range nnz), the one scan that upholds the `get_unchecked`
+    /// contract of [`crate::data::SparseRow::dot`] — so each worker
+    /// pays only for its own shard, never the whole file.
+    pub fn matrix_range(&self, range: std::ops::Range<usize>) -> Result<SparseMatrix, CacheError> {
+        if range.start > range.end || range.end > self.n {
+            return Err(CacheError::Malformed(format!(
+                "row range {range:?} out of bounds ({} rows)",
+                self.n
+            )));
+        }
+        let indptr = self.indptr_section();
+        let (lo, hi) = (indptr[range.start] as usize, indptr[range.end] as usize);
+        let indices = self.indices_section();
+        for &j in &indices[lo..hi] {
+            if (j as usize) >= self.d {
+                return Err(CacheError::Malformed(format!(
+                    "column {j} out of bounds ({} columns)",
+                    self.d
+                )));
+            }
+        }
+        let base = self.map.as_slice().as_ptr();
+        // SAFETY: `open` validated section bounds/alignment and the
+        // monotone indptr; the loop above validated the columns of this
+        // range; the Arc keeps the mapping alive for the matrix.
+        Ok(unsafe {
+            SparseMatrix::from_mapped_sections(
+                Arc::clone(&self.map),
+                (base.add(self.indptr_off) as *const u64).add(range.start),
+                range.end - range.start,
+                base.add(self.indices_off) as *const u32,
+                base.add(self.values_off) as *const f64,
+                self.nnz,
+                self.d,
+            )
+        })
+    }
+
+    /// The whole file as a zero-copy [`Dataset`] (labels are copied —
+    /// they're O(n), not O(nnz); rows stay mapped).
+    pub fn dataset(&self) -> Result<Dataset, CacheError> {
+        let x = self.matrix_range(0..self.n)?;
+        let name = self
+            .path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "cache".into());
+        Ok(Dataset {
+            x,
+            y: self.labels().to_vec(),
+            name,
+        })
+    }
+
+    /// Recompute the content hash from the mapped sections (O(data))
+    /// and compare against the header — on-demand integrity check for
+    /// tooling and tests; deliberately not part of `open`.
+    pub fn verify_content(&self) -> Result<(), CacheError> {
+        let bytes = self.map.as_slice();
+        let sections = [
+            (self.labels_off, 8 * self.n),
+            (self.indptr_off, 8 * (self.n + 1)),
+            (self.indices_off, 4 * self.nnz),
+            (self.values_off, 8 * self.nnz),
+        ];
+        let mut h = FNV_OFFSET;
+        h = fnv_update(h, &CACHE_FORMAT_VERSION.to_le_bytes());
+        h = fnv_update(h, &(self.n as u64).to_le_bytes());
+        h = fnv_update(h, &(self.d as u64).to_le_bytes());
+        h = fnv_update(h, &(self.nnz as u64).to_le_bytes());
+        for (off, len) in sections {
+            let sh = fnv_update(FNV_OFFSET, &bytes[off..off + len]);
+            h = fnv_update(h, &sh.to_le_bytes());
+        }
+        if h != self.content_hash {
+            return Err(CacheError::HashMismatch {
+                got: h,
+                want: self.content_hash,
+            });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::libsvm;
+    use std::io::Cursor;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static UNIQ: AtomicU64 = AtomicU64::new(0);
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!(
+            "dadm_cache_{tag}_{}_{}",
+            std::process::id(),
+            UNIQ.fetch_add(1, Ordering::Relaxed)
+        ))
+    }
+
+    fn write_text(tag: &str, text: &str) -> PathBuf {
+        let p = tmp(&format!("{tag}_txt"));
+        std::fs::write(&p, text).unwrap();
+        p
+    }
+
+    const SMALL: &str = "+1 1:0.5 3:1.25\n-1 2:2.0\n# comment\n\n+1 1:-0.25 2:0.5 3:0.75\n";
+
+    fn compiled(tag: &str, text: &str) -> (PathBuf, CompileReport) {
+        let input = write_text(tag, text);
+        let out = tmp(&format!("{tag}_cache"));
+        let report = compile(&input, &out).unwrap();
+        std::fs::remove_file(&input).ok();
+        (out, report)
+    }
+
+    #[test]
+    fn compile_then_open_matches_text_parse_row_for_row() {
+        let (path, report) = compiled("roundtrip", SMALL);
+        let cache = CsrCache::open(&path).unwrap();
+        let text = libsvm::parse(Cursor::new(SMALL)).unwrap();
+        assert_eq!(report.n as usize, text.n());
+        assert_eq!(report.d as usize, text.dim());
+        assert_eq!(cache.rows(), text.n());
+        assert_eq!(cache.dim(), text.dim());
+        assert_eq!(cache.nnz(), text.x.nnz());
+        assert_eq!(cache.labels(), &text.y[..]);
+        let mapped = cache.dataset().unwrap();
+        assert!(mapped.x.is_mapped());
+        for i in 0..text.n() {
+            let (a, b) = (mapped.x.row(i), text.x.row(i));
+            assert_eq!(a.indices, b.indices, "row {i} indices");
+            assert_eq!(a.values, b.values, "row {i} values");
+        }
+        cache.verify_content().unwrap();
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn prop_parse_compile_mmap_row_parity() {
+        // Property pin: text parse → libsvm::write → compile → mmap is
+        // row-for-row and label-for-label identical to the in-memory
+        // parse, across random shapes, sparsities, and label schemes.
+        crate::testing::prop::for_each_case(0xCACE, 25, |g| {
+            let rows = g.usize_in(1, 20);
+            let cols = g.usize_in(1, 15);
+            let zero_one = g.bool(0.3);
+            let mut text = String::new();
+            for _ in 0..rows {
+                let y = if zero_one {
+                    if g.bool(0.5) {
+                        "1".to_string()
+                    } else {
+                        "0".to_string()
+                    }
+                } else {
+                    format!("{}", g.f64_in(-2.0, 2.0))
+                };
+                text.push_str(&y);
+                for j in 0..cols {
+                    if g.bool(0.4) {
+                        text.push_str(&format!(" {}:{}", j + 1, g.f64_in(-3.0, 3.0)));
+                    }
+                }
+                text.push('\n');
+            }
+            let parsed = match libsvm::parse(Cursor::new(text.as_str())) {
+                Ok(d) => d,
+                // All-empty rows with max_col 0 etc. stay valid; parse
+                // only fails on validate() edge cases we don't emit.
+                Err(e) => panic!("parse failed: {e:#}"),
+            };
+            let input = write_text("prop", &text);
+            let out = tmp("prop_cache");
+            let report = compile(&input, &out).unwrap();
+            let cache = CsrCache::open(&out).unwrap();
+            assert_eq!(cache.rows(), parsed.n());
+            assert_eq!(cache.dim(), parsed.dim());
+            assert_eq!(report.nnz as usize, parsed.x.nnz());
+            assert_eq!(cache.labels(), &parsed.y[..]);
+            let mapped = cache.matrix_range(0..cache.rows()).unwrap();
+            for i in 0..parsed.n() {
+                let (a, b) = (mapped.row(i), parsed.x.row(i));
+                assert_eq!(a.indices, b.indices);
+                assert_eq!(a.values, b.values);
+            }
+            // Ranged views agree with full-view slices.
+            let s = g.usize_in(0, parsed.n());
+            let e = g.usize_in(s, parsed.n() + 1);
+            let sub = cache.matrix_range(s..e).unwrap();
+            for (k, i) in (s..e).enumerate() {
+                assert_eq!(sub.row(k).indices, parsed.x.row(i).indices);
+                assert_eq!(sub.row(k).values, parsed.x.row(i).values);
+            }
+            std::fs::remove_file(&input).ok();
+            std::fs::remove_file(&out).ok();
+        });
+    }
+
+    #[test]
+    fn reopen_is_identity_stable_and_slices_are_zero_copy() {
+        let (path, report) = compiled("stable", SMALL);
+        let a = CsrCache::open(&path).unwrap();
+        let b = CsrCache::open(&path).unwrap();
+        assert_eq!(a.content_hash(), b.content_hash());
+        assert_eq!(a.content_hash(), report.content_hash);
+        CsrCache::open_expecting(&path, report.content_hash).unwrap();
+        let m = a.matrix_range(0..a.rows()).unwrap();
+        let s = m.slice_rows(1..3);
+        assert!(s.is_mapped());
+        assert_eq!(s.rows(), 2);
+        assert_eq!(s.row(0).values, m.row(1).values);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn wrong_expected_hash_is_typed_mismatch() {
+        let (path, report) = compiled("hash", SMALL);
+        let err = CsrCache::open_expecting(&path, report.content_hash ^ 1).unwrap_err();
+        assert!(matches!(err, CacheError::HashMismatch { .. }), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn truncated_cache_is_typed_error_not_panic() {
+        let (path, _) = compiled("trunc", SMALL);
+        let full = std::fs::read(&path).unwrap();
+        // Truncate to a dozen prefixes, including mid-header and
+        // mid-section; every one must be a typed error.
+        for keep in [1usize, 8, 40, 87, 88, 100, full.len() - 1] {
+            if keep >= full.len() {
+                continue;
+            }
+            std::fs::write(&path, &full[..keep]).unwrap();
+            let err = CsrCache::open(&path).unwrap_err();
+            assert!(
+                matches!(err, CacheError::Truncated { .. } | CacheError::Malformed(_)),
+                "keep={keep}: {err}"
+            );
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bad_magic_and_bad_version_are_typed() {
+        let (path, _) = compiled("magic", SMALL);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let orig = bytes.clone();
+        bytes[0] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(matches!(
+            CsrCache::open(&path).unwrap_err(),
+            CacheError::BadMagic
+        ));
+        bytes = orig;
+        bytes[8] = 99; // format_version
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(matches!(
+            CsrCache::open(&path).unwrap_err(),
+            CacheError::BadVersion { got: 99, .. }
+        ));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn misaligned_section_offset_is_typed() {
+        let (path, _) = compiled("align", SMALL);
+        let mut bytes = std::fs::read(&path).unwrap();
+        // labels_off lives at header offset 48; nudge it off 8-byte
+        // alignment.
+        bytes[48] = bytes[48].wrapping_add(4);
+        std::fs::write(&path, &bytes).unwrap();
+        let err = CsrCache::open(&path).unwrap_err();
+        assert!(matches!(err, CacheError::Misaligned { .. }), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupt_indptr_and_columns_are_typed() {
+        let (path, _) = compiled("corrupt", SMALL);
+        let orig = std::fs::read(&path).unwrap();
+        let cache = CsrCache::open(&path).unwrap();
+        let (indptr_off, indices_off) = (cache.indptr_off, cache.indices_off);
+        drop(cache);
+
+        // Non-monotone indptr → rejected at open.
+        let mut bytes = orig.clone();
+        bytes[indptr_off + 8] = 0xFF; // second entry becomes huge
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(matches!(
+            CsrCache::open(&path).unwrap_err(),
+            CacheError::Malformed(_)
+        ));
+
+        // Out-of-range column → rejected at matrix_range.
+        let mut bytes = orig.clone();
+        bytes[indices_off..indices_off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let cache = CsrCache::open(&path).unwrap();
+        assert!(matches!(
+            cache.matrix_range(0..cache.rows()).unwrap_err(),
+            CacheError::Malformed(_)
+        ));
+        // …and the content check flags the flip too.
+        assert!(matches!(
+            cache.verify_content().unwrap_err(),
+            CacheError::HashMismatch { .. }
+        ));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn counts_cannot_drive_allocations_or_out_of_bounds() {
+        let (path, _) = compiled("bounds", SMALL);
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Claim an absurd n with unchanged offsets: offsets disagree →
+        // typed error before anything is allocated or dereferenced.
+        bytes[24..32].copy_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = CsrCache::open(&path).unwrap_err();
+        assert!(matches!(err, CacheError::Malformed(_)), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+}

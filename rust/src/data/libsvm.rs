@@ -12,6 +12,51 @@ use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::path::Path;
 
+/// Parse one LIBSVM line into `(label, features)` with 0-based `u32`
+/// columns, updating `max_col` (1-based max index seen). Returns
+/// `Ok(None)` for blank / comment-only lines.
+///
+/// Shared by the in-memory [`parse`] and the streaming cache compiler
+/// (`data/cache.rs`), so the two paths cannot drift.
+pub(crate) fn parse_line(
+    raw: &str,
+    lineno: usize,
+    max_col: &mut usize,
+) -> Result<Option<(f64, Vec<(u32, f64)>)>> {
+    let line = raw.split('#').next().unwrap_or("").trim();
+    if line.is_empty() {
+        return Ok(None);
+    }
+    let mut parts = line.split_ascii_whitespace();
+    let label: f64 = parts
+        .next()
+        .context("missing label")?
+        .parse()
+        .with_context(|| format!("line {}: bad label", lineno + 1))?;
+    let mut feats = Vec::new();
+    for tok in parts {
+        let (idx, val) = tok
+            .split_once(':')
+            .with_context(|| format!("line {}: bad feature `{tok}`", lineno + 1))?;
+        let idx: usize = idx
+            .parse()
+            .with_context(|| format!("line {}: bad index `{idx}`", lineno + 1))?;
+        anyhow::ensure!(idx >= 1, "line {}: LIBSVM indices are 1-based", lineno + 1);
+        let val: f64 = val
+            .parse()
+            .with_context(|| format!("line {}: bad value `{val}`", lineno + 1))?;
+        *max_col = (*max_col).max(idx);
+        feats.push(((idx - 1) as u32, val));
+    }
+    Ok(Some((label, feats)))
+}
+
+/// True when `labels` uses the rcv1-style `{0, 1}` convention that
+/// [`parse`] (and the cache compiler) remaps to `±1`.
+pub(crate) fn uses_zero_one_labels(all_zero_one: bool, any_zero: bool) -> bool {
+    all_zero_one && any_zero
+}
+
 /// Parse LIBSVM text from a reader. Labels are kept as parsed, except that
 /// `0/1` labels are mapped to `±1` (rcv1-style convention).
 pub fn parse<R: BufRead>(reader: R) -> Result<Dataset> {
@@ -20,37 +65,16 @@ pub fn parse<R: BufRead>(reader: R) -> Result<Dataset> {
     let mut max_col = 0usize;
     for (lineno, line) in reader.lines().enumerate() {
         let line = line?;
-        let line = line.split('#').next().unwrap_or("").trim();
-        if line.is_empty() {
-            continue;
+        if let Some((label, feats)) = parse_line(&line, lineno, &mut max_col)? {
+            labels.push(label);
+            rows.push(feats);
         }
-        let mut parts = line.split_ascii_whitespace();
-        let label: f64 = parts
-            .next()
-            .context("missing label")?
-            .parse()
-            .with_context(|| format!("line {}: bad label", lineno + 1))?;
-        let mut feats = Vec::new();
-        for tok in parts {
-            let (idx, val) = tok
-                .split_once(':')
-                .with_context(|| format!("line {}: bad feature `{tok}`", lineno + 1))?;
-            let idx: usize = idx
-                .parse()
-                .with_context(|| format!("line {}: bad index `{idx}`", lineno + 1))?;
-            anyhow::ensure!(idx >= 1, "line {}: LIBSVM indices are 1-based", lineno + 1);
-            let val: f64 = val
-                .parse()
-                .with_context(|| format!("line {}: bad value `{val}`", lineno + 1))?;
-            max_col = max_col.max(idx);
-            feats.push(((idx - 1) as u32, val));
-        }
-        labels.push(label);
-        rows.push(feats);
     }
     // Map {0,1} labels to ±1 if the file uses that convention.
-    let zero_one = labels.iter().all(|&y| y == 0.0 || y == 1.0)
-        && labels.iter().any(|&y| y == 0.0);
+    let zero_one = uses_zero_one_labels(
+        labels.iter().all(|&y| y == 0.0 || y == 1.0),
+        labels.iter().any(|&y| y == 0.0),
+    );
     if zero_one {
         for y in &mut labels {
             *y = if *y == 1.0 { 1.0 } else { -1.0 };

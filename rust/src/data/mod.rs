@@ -7,12 +7,14 @@
 //! sparsity, label balance) profile at a configurable scale, while
 //! [`libsvm`] parses the real files unchanged if the user supplies them.
 
+pub mod cache;
 pub mod dense;
 pub mod libsvm;
 pub mod partition;
 pub mod sparse;
 pub mod synthetic;
 
+pub use cache::{CacheError, CsrCache};
 pub use partition::Partition;
 pub use sparse::{SparseMatrix, SparseRow};
 

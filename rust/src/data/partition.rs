@@ -32,6 +32,19 @@ impl Partition {
         Partition { shards, n }
     }
 
+    /// Contiguous balanced partition: machine `ℓ` owns the `ℓ`-th range
+    /// of [`split_ranges`]`(n, m)` — no shuffle, no seed.
+    ///
+    /// This is the partition the binary cache path uses (`--cache`):
+    /// each worker's shard is a contiguous row range of the mapped
+    /// file, so shards are served zero-copy. A text-parsed run with
+    /// `partition = contiguous` produces the *same* index sets, which
+    /// is what makes cache-vs-text solves bit-identical.
+    pub fn contiguous(n: usize, m: usize) -> Self {
+        let shards = split_ranges(n, m).into_iter().map(|r| r.collect()).collect();
+        Partition { shards, n }
+    }
+
     /// Deterministic round-robin partition (no shuffle) — used by tests
     /// that need a fixed assignment.
     pub fn round_robin(n: usize, m: usize) -> Self {
@@ -176,6 +189,19 @@ mod tests {
         let a = Partition::balanced(100, 4, 7);
         let b = Partition::balanced(100, 4, 8);
         assert!((0..4).any(|l| a.shard(l) != b.shard(l)));
+    }
+
+    #[test]
+    fn contiguous_matches_split_ranges() {
+        for &(n, m) in &[(10, 3), (100, 8), (7, 7), (1000, 20)] {
+            let p = Partition::contiguous(n, m);
+            p.check_invariants(true).unwrap();
+            let rs = split_ranges(n, m);
+            for l in 0..m {
+                let want: Vec<usize> = rs[l].clone().collect();
+                assert_eq!(p.shard(l), &want[..], "machine {l}");
+            }
+        }
     }
 
     #[test]

@@ -109,44 +109,204 @@ impl<'a> SparseRow<'a> {
     }
 }
 
+/// Normalize one `(col, value)` row list — sort by column, sum
+/// duplicate columns, drop explicit zeros — and append the result to
+/// the CSR `indices`/`values` arrays.
+///
+/// This is the single definition of row normalization: both
+/// [`SparseMatrix::from_rows`] and the streaming cache compiler
+/// (`data/cache.rs`) call it, so a compiled cache is row-for-row
+/// identical to the in-memory parse by construction.
+pub(crate) fn append_normalized_row(
+    mut row: Vec<(u32, f64)>,
+    cols: usize,
+    indices: &mut Vec<u32>,
+    values: &mut Vec<f64>,
+) {
+    row.sort_unstable_by_key(|&(j, _)| j);
+    let mut last: Option<u32> = None;
+    for (j, v) in row {
+        assert!((j as usize) < cols, "column {j} out of bounds ({cols})");
+        if last == Some(j) {
+            *values.last_mut().unwrap() += v;
+        } else if v != 0.0 {
+            indices.push(j);
+            values.push(v);
+            last = Some(j);
+        }
+    }
+}
+
+/// Row storage backend for [`SparseMatrix`].
+///
+/// `Owned` is the classic heap CSR triple. `Mapped` serves rows
+/// zero-copy out of a read-only memory mapping (the binary cache of
+/// DESIGN.md §15): same `SparseRow` views, same `dot`/`axpy` unsafe
+/// contract, but opening is O(1) in data size and the OS pages rows in
+/// on demand.
+#[derive(Clone)]
+enum Storage {
+    Owned {
+        indptr: Vec<usize>,
+        indices: Vec<u32>,
+        values: Vec<f64>,
+    },
+    Mapped(MappedCsr),
+}
+
+impl Default for Storage {
+    fn default() -> Self {
+        Storage::Owned {
+            indptr: vec![0],
+            indices: Vec::new(),
+            values: Vec::new(),
+        }
+    }
+}
+
+impl std::fmt::Debug for Storage {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Storage::Owned { indptr, indices, .. } => f
+                .debug_struct("Owned")
+                .field("rows", &(indptr.len().saturating_sub(1)))
+                .field("nnz", &indices.len())
+                .finish(),
+            Storage::Mapped(m) => f
+                .debug_struct("Mapped")
+                .field("rows", &m.n_rows)
+                .field("section_nnz", &m.nnz)
+                .finish(),
+        }
+    }
+}
+
+/// A window of rows over a memory-mapped CSR file.
+///
+/// `indptr` points at `n_rows + 1` little-endian `u64` offsets that are
+/// *absolute* positions into the file's full `indices`/`values`
+/// sections (whose starts the other two pointers hold), so slicing a
+/// row range is pointer arithmetic on `indptr` alone. The `Arc<Mmap>`
+/// keeps the pages mapped for as long as any view (or clone) lives.
+#[derive(Clone)]
+struct MappedCsr {
+    map: std::sync::Arc<crate::utils::mmap::Mmap>,
+    indptr: *const u64,
+    n_rows: usize,
+    indices: *const u32,
+    values: *const f64,
+    /// Total entries in the file's indices/values sections — the upper
+    /// bound every `indptr` entry was validated against at open.
+    nnz: usize,
+}
+
+// SAFETY: the pointed-to mapping is immutable (`PROT_READ`) for the
+// lifetime of the `Arc<Mmap>` this struct holds, so aliased reads from
+// any thread are data-race free; the raw pointers are derived from that
+// mapping and never written through.
+unsafe impl Send for MappedCsr {}
+unsafe impl Sync for MappedCsr {}
+
+impl MappedCsr {
+    #[inline]
+    fn row(&self, i: usize) -> SparseRow<'_> {
+        assert!(i < self.n_rows, "row {i} out of bounds ({})", self.n_rows);
+        // SAFETY: `i + 1 <= n_rows`, and the constructor contract
+        // (`from_mapped_sections`) guarantees `indptr` holds `n_rows + 1`
+        // readable, monotone entries bounded by `nnz`, with `indices`/
+        // `values` sections of at least `nnz` elements — all validated
+        // by the cache opener before this struct exists.
+        unsafe {
+            let lo = *self.indptr.add(i) as usize;
+            let hi = *self.indptr.add(i + 1) as usize;
+            debug_assert!(lo <= hi && hi <= self.nnz);
+            SparseRow {
+                indices: std::slice::from_raw_parts(self.indices.add(lo), hi - lo),
+                values: std::slice::from_raw_parts(self.values.add(lo), hi - lo),
+            }
+        }
+    }
+
+    fn local_nnz(&self) -> usize {
+        // SAFETY: constructor contract — `n_rows + 1` readable entries.
+        unsafe { (*self.indptr.add(self.n_rows) - *self.indptr) as usize }
+    }
+}
+
 /// CSR sparse matrix with `u32` column indices.
+///
+/// Rows live either in owned heap vectors or zero-copy in a read-only
+/// memory mapping ([`Storage`]); every consumer sees the same
+/// [`SparseRow`] views either way.
 #[derive(Clone, Debug, Default)]
 pub struct SparseMatrix {
-    indptr: Vec<usize>,
-    indices: Vec<u32>,
-    values: Vec<f64>,
+    storage: Storage,
     cols: usize,
 }
 
 impl SparseMatrix {
     /// Build from per-row `(col, value)` lists. Columns within a row are
-    /// sorted and duplicate columns are summed.
+    /// sorted and duplicate columns are summed. Index/value buffers are
+    /// pre-sized with a counted pass so large loads don't reallocate
+    /// per row.
     pub fn from_rows(rows: Vec<Vec<(u32, f64)>>, cols: usize) -> Self {
+        let total: usize = rows.iter().map(Vec::len).sum();
         let mut indptr = Vec::with_capacity(rows.len() + 1);
-        let mut indices = Vec::new();
-        let mut values = Vec::new();
+        let mut indices = Vec::with_capacity(total);
+        let mut values = Vec::with_capacity(total);
         indptr.push(0usize);
-        for mut row in rows {
-            row.sort_unstable_by_key(|&(j, _)| j);
-            let mut last: Option<u32> = None;
-            for (j, v) in row {
-                assert!((j as usize) < cols, "column {j} out of bounds ({cols})");
-                if last == Some(j) {
-                    *values.last_mut().unwrap() += v;
-                } else if v != 0.0 {
-                    indices.push(j);
-                    values.push(v);
-                    last = Some(j);
-                }
-            }
+        for row in rows {
+            append_normalized_row(row, cols, &mut indices, &mut values);
             indptr.push(indices.len());
         }
         SparseMatrix {
-            indptr,
-            indices,
-            values,
+            storage: Storage::Owned {
+                indptr,
+                indices,
+                values,
+            },
             cols,
         }
+    }
+
+    /// Wrap already-validated sections of a memory-mapped cache file as
+    /// a zero-copy matrix over rows `[0, n_rows)` of the mapping.
+    ///
+    /// # Safety
+    ///
+    /// The caller (the cache opener, `data/cache.rs`) must guarantee,
+    /// for the lifetime of `map`:
+    /// * `indptr` points at `n_rows + 1` aligned, readable `u64`s inside
+    ///   the mapping, monotonically non-decreasing, each `<= nnz`;
+    /// * `indices` / `values` point at aligned, readable sections of at
+    ///   least `nnz` elements inside the mapping;
+    /// * every stored column index in rows `[0, n_rows)` is `< cols` —
+    ///   this upholds the `get_unchecked` contract of [`SparseRow::dot`].
+    pub(crate) unsafe fn from_mapped_sections(
+        map: std::sync::Arc<crate::utils::mmap::Mmap>,
+        indptr: *const u64,
+        n_rows: usize,
+        indices: *const u32,
+        values: *const f64,
+        nnz: usize,
+        cols: usize,
+    ) -> SparseMatrix {
+        SparseMatrix {
+            storage: Storage::Mapped(MappedCsr {
+                map,
+                indptr,
+                n_rows,
+                indices,
+                values,
+                nnz,
+            }),
+            cols,
+        }
+    }
+
+    /// True when rows are served from a memory mapping (no heap copy).
+    pub fn is_mapped(&self) -> bool {
+        matches!(self.storage, Storage::Mapped(_))
     }
 
     /// Build from a dense row-major matrix (zeros dropped).
@@ -168,7 +328,10 @@ impl SparseMatrix {
 
     /// Number of rows.
     pub fn rows(&self) -> usize {
-        self.indptr.len() - 1
+        match &self.storage {
+            Storage::Owned { indptr, .. } => indptr.len() - 1,
+            Storage::Mapped(m) => m.n_rows,
+        }
     }
 
     /// Number of columns.
@@ -178,16 +341,28 @@ impl SparseMatrix {
 
     /// Total stored non-zeros.
     pub fn nnz(&self) -> usize {
-        self.values.len()
+        match &self.storage {
+            Storage::Owned { values, .. } => values.len(),
+            Storage::Mapped(m) => m.local_nnz(),
+        }
     }
 
     /// Borrow row `i`.
     #[inline]
     pub fn row(&self, i: usize) -> SparseRow<'_> {
-        let (lo, hi) = (self.indptr[i], self.indptr[i + 1]);
-        SparseRow {
-            indices: &self.indices[lo..hi],
-            values: &self.values[lo..hi],
+        match &self.storage {
+            Storage::Owned {
+                indptr,
+                indices,
+                values,
+            } => {
+                let (lo, hi) = (indptr[i], indptr[i + 1]);
+                SparseRow {
+                    indices: &indices[lo..hi],
+                    values: &values[lo..hi],
+                }
+            }
+            Storage::Mapped(m) => m.row(i),
         }
     }
 
@@ -212,9 +387,10 @@ impl SparseMatrix {
     /// Materialize a subset of rows as a new matrix (used by the
     /// partitioner to give each simulated machine an owned shard).
     pub fn select_rows(&self, rows: &[usize]) -> SparseMatrix {
+        let total: usize = rows.iter().map(|&i| self.row(i).nnz()).sum();
         let mut indptr = Vec::with_capacity(rows.len() + 1);
-        let mut indices = Vec::new();
-        let mut values = Vec::new();
+        let mut indices = Vec::with_capacity(total);
+        let mut values = Vec::with_capacity(total);
         indptr.push(0usize);
         for &i in rows {
             let r = self.row(i);
@@ -223,10 +399,46 @@ impl SparseMatrix {
             indptr.push(indices.len());
         }
         SparseMatrix {
-            indptr,
-            indices,
-            values,
+            storage: Storage::Owned {
+                indptr,
+                indices,
+                values,
+            },
             cols: self.cols,
+        }
+    }
+
+    /// A contiguous row range `[range.start, range.end)` as a matrix.
+    ///
+    /// Zero-copy for mapped storage (pointer arithmetic on the shared
+    /// mapping — this is how each worker gets its shard out-of-core);
+    /// an owned copy otherwise. Either way the values are identical, so
+    /// solves over the two are bit-for-bit the same.
+    pub fn slice_rows(&self, range: std::ops::Range<usize>) -> SparseMatrix {
+        assert!(
+            range.start <= range.end && range.end <= self.rows(),
+            "row range {range:?} out of bounds ({} rows)",
+            self.rows()
+        );
+        match &self.storage {
+            Storage::Owned { .. } => {
+                let idx: Vec<usize> = range.collect();
+                self.select_rows(&idx)
+            }
+            Storage::Mapped(m) => SparseMatrix {
+                storage: Storage::Mapped(MappedCsr {
+                    map: std::sync::Arc::clone(&m.map),
+                    // SAFETY: `range.start <= n_rows` (asserted above),
+                    // so the shifted pointer still addresses valid
+                    // `indptr` entries: `(n_rows - start) + 1` of them.
+                    indptr: unsafe { m.indptr.add(range.start) },
+                    n_rows: range.end - range.start,
+                    indices: m.indices,
+                    values: m.values,
+                    nnz: m.nnz,
+                }),
+                cols: self.cols,
+            },
         }
     }
 
@@ -300,6 +512,25 @@ mod tests {
         assert_eq!(s.rows(), 2);
         assert_eq!(s.row(0).to_dense(3), vec![-1.0, 3.0, 0.0]);
         assert_eq!(s.row(1).to_dense(3), vec![1.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn slice_rows_matches_select_rows_on_owned_storage() {
+        let m = sample();
+        let s = m.slice_rows(1..3);
+        let sel = m.select_rows(&[1, 2]);
+        assert_eq!(s.rows(), 2);
+        assert!(!s.is_mapped());
+        assert_eq!(s.to_dense(), sel.to_dense());
+        // Empty and full ranges are valid.
+        assert_eq!(m.slice_rows(0..0).rows(), 0);
+        assert_eq!(m.slice_rows(0..3).to_dense(), m.to_dense());
+    }
+
+    #[test]
+    #[should_panic]
+    fn slice_rows_rejects_out_of_bounds_range() {
+        sample().slice_rows(1..4);
     }
 
     #[test]

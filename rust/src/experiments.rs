@@ -146,7 +146,7 @@ pub fn run_cell<L: Loss + Clone + 'static>(
             ),
             GapCadence::AlgorithmDriven,
         ),
-        Method::Owlqn => unreachable!("use run_owlqn_distributed for OWL-QN"),
+        Method::Owlqn => unreachable!("use Problem::solve_owlqn for OWL-QN"),
     };
     let report = Driver::new(EPS, max_rounds)
         .with_cadence(cadence)

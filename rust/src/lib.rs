@@ -47,7 +47,7 @@ pub mod solver;
 pub mod testing;
 pub mod utils;
 
-pub use coordinator::{AccDadm, AccDadmOptions, Dadm, DadmOptions, SolveReport};
+pub use coordinator::{AccDadm, AccDadmOptions, Dadm, DadmOptions, Problem, SolveReport};
 pub use data::{Dataset, Partition, SparseMatrix};
 pub use loss::Loss;
 pub use reg::{ElasticNet, Regularizer};

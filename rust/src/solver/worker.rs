@@ -159,29 +159,34 @@ pub struct WorkerState {
     pub residual: Vec<f64>,
 }
 
+/// `Some(start..end)` when `idx` is a non-empty ascending run of
+/// consecutive indices — the shape every [`Partition::contiguous`]
+/// shard has.
+fn contiguous_run(idx: &[usize]) -> Option<std::ops::Range<usize>> {
+    let first = *idx.first()?;
+    for (k, &i) in idx.iter().enumerate() {
+        if i != first + k {
+            return None;
+        }
+    }
+    Some(first..first + idx.len())
+}
+
 impl WorkerState {
     /// Build worker `l`'s state from a dataset and partition.
+    ///
+    /// A contiguous shard of a mapped dataset (the `--cache` +
+    /// contiguous-partition path) is taken as a zero-copy row-range
+    /// view; anything else is an owned copy. The values are identical
+    /// either way, so solves don't depend on the storage backend.
     pub fn from_partition(data: &Dataset, part: &Partition, l: usize) -> Self {
         let idx = part.shard(l);
-        let x = data.x.select_rows(idx);
+        let x = match contiguous_run(idx) {
+            Some(range) if data.x.is_mapped() => data.x.slice_rows(range),
+            _ => data.x.select_rows(idx),
+        };
         let y: Vec<f64> = idx.iter().map(|&i| data.y[i]).collect();
-        let row_norm_sq: Vec<f64> = (0..x.rows()).map(|i| x.row(i).norm_sq()).collect();
-        let d = data.dim();
-        WorkerState {
-            x,
-            y,
-            alpha: vec![0.0; idx.len()],
-            v_tilde: vec![0.0; d],
-            w: vec![0.0; d],
-            row_norm_sq,
-            global_indices: idx.to_vec(),
-            scratch_delta: vec![0.0; d],
-            scratch_touched: Vec::new(),
-            scratch_order: Vec::new(),
-            scratch_delta_spare: vec![0.0; d],
-            conj_sum: None,
-            residual: Vec::new(),
-        }
+        WorkerState::from_matrix(x, y, idx.to_vec())
     }
 
     /// Build a worker state directly from an explicit shard (the TCP
@@ -194,10 +199,21 @@ impl WorkerState {
         global_indices: Vec<usize>,
         dim: usize,
     ) -> Self {
-        assert_eq!(rows.len(), y.len(), "shard rows/labels mismatch");
-        assert_eq!(rows.len(), global_indices.len(), "shard rows/indices mismatch");
-        let n_l = rows.len();
         let x = SparseMatrix::from_rows(rows, dim);
+        WorkerState::from_matrix(x, y, global_indices)
+    }
+
+    /// Build a worker state from an already-built shard matrix — the
+    /// shared tail of [`WorkerState::from_partition`] /
+    /// [`WorkerState::from_shard`], and the entry point of the mapped
+    /// cache path (`DataSpec::Cache`): the matrix may be a zero-copy
+    /// row range of an mmapped cache file, in which case no shard data
+    /// is copied at all.
+    pub fn from_matrix(x: SparseMatrix, y: Vec<f64>, global_indices: Vec<usize>) -> Self {
+        assert_eq!(x.rows(), y.len(), "shard rows/labels mismatch");
+        assert_eq!(x.rows(), global_indices.len(), "shard rows/indices mismatch");
+        let dim = x.cols();
+        let n_l = x.rows();
         let row_norm_sq: Vec<f64> = (0..x.rows()).map(|i| x.row(i).norm_sq()).collect();
         WorkerState {
             x,

@@ -1,0 +1,252 @@
+//! Minimal read-only memory mapping — no new dependencies.
+//!
+//! The offline build environment ships no `memmap2`-style crate, so the
+//! cache layer (DESIGN.md §15) carries its own audited binding: two
+//! `extern "C"` declarations (`mmap`/`munmap`) behind a safe [`Mmap`]
+//! wrapper. The surface is deliberately tiny — read-only, whole-file,
+//! private mappings — because every extra knob would widen the unsafe
+//! audit.
+//!
+//! # Safety argument (dadm-lint `unsafe_allowlist.txt` entry)
+//!
+//! * The mapping is `PROT_READ` + `MAP_PRIVATE`: the kernel rejects any
+//!   write through it (SIGSEGV on a bug, never silent corruption), and
+//!   writes to the underlying file by *other* processes are not
+//!   guaranteed visible — the cache layer therefore treats a mapped
+//!   file as immutable and verifies its header before trusting offsets.
+//! * `as_slice` hands out `&[u8]` borrows tied to the `Mmap`'s
+//!   lifetime; `munmap` runs only in `Drop`, so no live borrow can
+//!   outlast the mapping. Callers that need longer-lived views (the
+//!   mapped `SparseMatrix` storage) hold the `Mmap` in an `Arc` and
+//!   re-derive slices from raw parts per call — the `Arc` keeps the
+//!   pages mapped for as long as any view exists.
+//! * Truncating the file *after* mapping makes the pages beyond the new
+//!   EOF fault with SIGBUS on access. That is an operator error (the
+//!   cache is append-never, rewrite-by-replace); the failure mode is a
+//!   crash, not UB or wrong answers. See DESIGN.md §15.4.
+//! * `Send`/`Sync` are sound because the mapping is immutable shared
+//!   memory: concurrent reads race with nothing, and the unmap is
+//!   serialized by Rust's ownership of the single `Mmap` value.
+
+use std::fs::File;
+use std::io;
+
+#[cfg(unix)]
+pub use unix_impl::Mmap;
+
+#[cfg(not(unix))]
+pub use fallback_impl::Mmap;
+
+/// Map a file read-only. Rejects empty files (zero-length `mmap` is
+/// EINVAL on Linux; an empty cache is malformed anyway).
+pub fn map_readonly(file: &File) -> io::Result<Mmap> {
+    Mmap::map_readonly(file)
+}
+
+#[cfg(unix)]
+mod unix_impl {
+    use std::ffi::c_void;
+    use std::fs::File;
+    use std::io;
+    use std::os::raw::c_int;
+    use std::os::unix::io::AsRawFd;
+
+    // Stable POSIX constants, identical on Linux and macOS — the two
+    // unix targets this repo builds on.
+    const PROT_READ: c_int = 1;
+    const MAP_PRIVATE: c_int = 2;
+
+    extern "C" {
+        fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+
+    /// A read-only, private, whole-file memory mapping.
+    pub struct Mmap {
+        ptr: *const u8,
+        len: usize,
+    }
+
+    // SAFETY: the mapping is immutable (`PROT_READ`) shared memory, so
+    // aliased reads from any thread are data-race free; `munmap` runs
+    // exactly once, in `Drop`, under exclusive ownership.
+    unsafe impl Send for Mmap {}
+    unsafe impl Sync for Mmap {}
+
+    impl Mmap {
+        /// Map `file` read-only in its entirety.
+        pub fn map_readonly(file: &File) -> io::Result<Mmap> {
+            let len = file.metadata()?.len();
+            if len == 0 {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidInput,
+                    "cannot mmap an empty file",
+                ));
+            }
+            let len = usize::try_from(len).map_err(|_| {
+                io::Error::new(
+                    io::ErrorKind::InvalidInput,
+                    "file too large to map on this platform",
+                )
+            })?;
+            // SAFETY: null hint, validated non-zero length, PROT_READ |
+            // MAP_PRIVATE over an owned fd that outlives this call. The
+            // kernel picks the address; we never alias it writable.
+            let ptr = unsafe {
+                mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    PROT_READ,
+                    MAP_PRIVATE,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            if ptr as usize == usize::MAX {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Mmap {
+                ptr: ptr as *const u8,
+                len,
+            })
+        }
+
+        /// The mapped bytes. The borrow cannot outlive the mapping.
+        pub fn as_slice(&self) -> &[u8] {
+            // SAFETY: `ptr` is a live PROT_READ mapping of exactly
+            // `len` bytes (established in `map_readonly`), unmapped
+            // only in `Drop`, which cannot run while `self` is
+            // borrowed.
+            unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+        }
+
+        /// Mapped length in bytes.
+        pub fn len(&self) -> usize {
+            self.len
+        }
+
+        /// Never true: zero-length mappings are rejected at creation.
+        pub fn is_empty(&self) -> bool {
+            self.len == 0
+        }
+    }
+
+    impl Drop for Mmap {
+        fn drop(&mut self) {
+            // SAFETY: `ptr`/`len` came from a successful `mmap` and are
+            // unmapped exactly once. Failure here is unrecoverable but
+            // harmless (the mapping leaks); ignore the return code.
+            unsafe {
+                let _ = munmap(self.ptr as *mut c_void, self.len);
+            }
+        }
+    }
+
+    impl std::fmt::Debug for Mmap {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            // Never dump mapped data — it can be gigabytes.
+            f.debug_struct("Mmap").field("len", &self.len).finish()
+        }
+    }
+}
+
+#[cfg(not(unix))]
+mod fallback_impl {
+    use std::fs::File;
+    use std::io::{self, Read};
+
+    /// Portable fallback: read the whole file into owned memory. Not
+    /// out-of-core, but behaviorally identical — non-unix targets are
+    /// not a deployment platform for this repo. Backing storage is a
+    /// `Vec<u64>` so the base pointer is 8-byte aligned like a real
+    /// page-aligned mapping (the cache layer reinterprets 8-aligned
+    /// sections as `u64`/`f64`).
+    #[derive(Debug)]
+    pub struct Mmap {
+        data: Vec<u64>,
+        len: usize,
+    }
+
+    impl Mmap {
+        pub fn map_readonly(file: &File) -> io::Result<Mmap> {
+            let mut bytes = Vec::new();
+            let mut f = file.try_clone()?;
+            f.read_to_end(&mut bytes)?;
+            if bytes.is_empty() {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidInput,
+                    "cannot mmap an empty file",
+                ));
+            }
+            let len = bytes.len();
+            let mut data = vec![0u64; len.div_ceil(8)];
+            // SAFETY: the destination holds at least `len` bytes and
+            // u64 has no invalid bit patterns.
+            unsafe {
+                std::ptr::copy_nonoverlapping(bytes.as_ptr(), data.as_mut_ptr() as *mut u8, len);
+            }
+            Ok(Mmap { data, len })
+        }
+
+        pub fn as_slice(&self) -> &[u8] {
+            // SAFETY: `data` owns at least `len` initialized bytes.
+            unsafe { std::slice::from_raw_parts(self.data.as_ptr() as *const u8, self.len) }
+        }
+
+        pub fn len(&self) -> usize {
+            self.len
+        }
+
+        pub fn is_empty(&self) -> bool {
+            self.len == 0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    #[test]
+    fn maps_file_contents_exactly() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("dadm_mmap_test_{}.bin", std::process::id()));
+        let payload: Vec<u8> = (0..4096u32).map(|i| (i % 251) as u8).collect();
+        {
+            let mut f = File::create(&path).unwrap();
+            f.write_all(&payload).unwrap();
+        }
+        let f = File::open(&path).unwrap();
+        let map = map_readonly(&f).unwrap();
+        assert_eq!(map.len(), payload.len());
+        assert!(!map.is_empty());
+        assert_eq!(map.as_slice(), &payload[..]);
+        drop(map);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn empty_file_is_rejected() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("dadm_mmap_empty_{}.bin", std::process::id()));
+        File::create(&path).unwrap();
+        let f = File::open(&path).unwrap();
+        let err = map_readonly(&f).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidInput);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn mapping_is_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Mmap>();
+    }
+}

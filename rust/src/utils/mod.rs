@@ -5,6 +5,7 @@
 //! splitmix64), plus the handful of float helpers the solvers share.
 
 pub mod math;
+pub mod mmap;
 pub mod rng;
 
 pub use math::{approx_eq, dot, l1_norm, l2_norm_sq, soft_threshold};

@@ -1,0 +1,220 @@
+//! Out-of-core cache integration (DESIGN.md §15): a solve served from
+//! the mmap-backed binary CSR cache must be **bit-identical** to the
+//! same solve over the text-parsed dataset — on Serial, Threads, and
+//! the TCP loopback backend where workers mmap their own contiguous
+//! shard row ranges (`DataSpec::Cache`) instead of receiving rows over
+//! the wire. Both paths read the same LIBSVM text exactly once, so any
+//! divergence is a cache-layer bug, not a parsing tolerance.
+
+use dadm::comm::tcp::{cache_specs, serve, TcpClusterBuilder, TcpHandle};
+use dadm::comm::wire::{WireLoss, WireSolver};
+use dadm::comm::{Cluster, CostModel};
+use dadm::coordinator::{Dadm, DadmOptions, Problem};
+use dadm::data::synthetic::tiny_classification;
+use dadm::data::{cache, libsvm, CsrCache, Dataset, Partition};
+use dadm::loss::SmoothHinge;
+use dadm::reg::{ElasticNet, Zero};
+use dadm::solver::ProxSdca;
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::thread::JoinHandle;
+
+const MACHINES: usize = 4;
+const RNG_SEED: u64 = 0xDAD_A;
+const SP: f64 = 0.25;
+
+static UNIQ: AtomicU64 = AtomicU64::new(0);
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "dadm_cache_it_{tag}_{}_{}",
+        std::process::id(),
+        UNIQ.fetch_add(1, Ordering::Relaxed)
+    ))
+}
+
+/// Removes the fixture files on drop so failing assertions don't litter
+/// the runner's temp dir.
+struct Fixture {
+    text: PathBuf,
+    bin: PathBuf,
+}
+
+impl Fixture {
+    /// Write `data` as LIBSVM text and compile it into a binary cache.
+    fn build(tag: &str, data: &Dataset) -> Fixture {
+        let text = tmp(&format!("{tag}_txt"));
+        let mut buf = Vec::new();
+        libsvm::write(data, &mut buf).expect("serialize libsvm");
+        std::fs::write(&text, &buf).expect("write text fixture");
+        let bin = tmp(&format!("{tag}_bin"));
+        cache::compile(&text, &bin).expect("compile cache");
+        Fixture { text, bin }
+    }
+
+    fn open(&self) -> CsrCache {
+        CsrCache::open(&self.bin).expect("open cache")
+    }
+}
+
+impl Drop for Fixture {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.text);
+        let _ = std::fs::remove_file(&self.bin);
+    }
+}
+
+fn build_dadm(
+    data: &Dataset,
+    part: &Partition,
+    cluster: Cluster,
+) -> Dadm<SmoothHinge, ElasticNet, Zero, ProxSdca> {
+    Problem::new(data, part)
+        .loss(SmoothHinge::default())
+        .reg(ElasticNet::new(0.1))
+        .lambda(1e-2)
+        .build_dadm(
+            ProxSdca,
+            DadmOptions {
+                sp: SP,
+                cluster,
+                cost: CostModel::default(),
+                seed: RNG_SEED,
+                gap_every: 1,
+                sparse_comm: true,
+                ..Default::default()
+            },
+        )
+}
+
+/// The deterministic math fields of a trace (wall-clock-derived fields
+/// are excluded from bit-equality claims).
+fn math_fields(report: &dadm::SolveReport) -> Vec<(usize, u64, u64, u64)> {
+    report
+        .trace
+        .rounds
+        .iter()
+        .map(|r| {
+            (
+                r.round,
+                r.passes.to_bits(),
+                r.primal.to_bits(),
+                r.dual.to_bits(),
+            )
+        })
+        .collect()
+}
+
+/// Spawn `m` in-process loopback workers (the thread-hosted twin of
+/// real `dadm worker` processes; the child-process cache variant lives
+/// in `rust/tests/chaos.rs`).
+fn loopback(m: usize) -> (TcpHandle, Vec<JoinHandle<()>>) {
+    let builder = TcpClusterBuilder::bind("127.0.0.1:0").unwrap();
+    let addr = builder.local_addr().unwrap();
+    let threads: Vec<_> = (0..m)
+        .map(|_| {
+            std::thread::spawn(move || {
+                let stream = TcpStream::connect(addr).expect("worker connect");
+                serve(stream).expect("worker serve");
+            })
+        })
+        .collect();
+    let cluster = builder.accept(m).unwrap();
+    (TcpHandle::new(cluster), threads)
+}
+
+fn join_workers(handle: TcpHandle, threads: Vec<JoinHandle<()>>) {
+    handle.with(|c| c.shutdown());
+    drop(handle);
+    for t in threads {
+        t.join().expect("worker thread panicked");
+    }
+}
+
+#[test]
+fn cache_dataset_equals_text_parse_exactly() {
+    let data = tiny_classification(180, 12, 0xCAC4E);
+    let fx = Fixture::build("roundtrip", &data);
+    let text = libsvm::load(&fx.text).expect("parse text");
+    let mapped = fx.open().dataset().expect("decode cache");
+    assert_eq!(text.n(), mapped.n());
+    assert_eq!(text.dim(), mapped.dim());
+    for i in 0..text.n() {
+        assert_eq!(text.y[i].to_bits(), mapped.y[i].to_bits(), "label {i}");
+        let (a, b) = (text.x.row(i), mapped.x.row(i));
+        assert_eq!(a.indices, b.indices, "row {i} indices");
+        for (x, y) in a.values.iter().zip(b.values) {
+            assert_eq!(x.to_bits(), y.to_bits(), "row {i} values");
+        }
+    }
+}
+
+#[test]
+fn cache_solve_matches_text_solve_on_serial_and_threads() {
+    let data = tiny_classification(240, 10, 0xCAC4E + 1);
+    let fx = Fixture::build("inproc", &data);
+    let text = libsvm::load(&fx.text).expect("parse text");
+    let mapped = fx.open().dataset().expect("decode cache");
+    let part = Partition::contiguous(text.n(), MACHINES);
+    for cluster in [Cluster::Serial, Cluster::Threads] {
+        let text_report = build_dadm(&text, &part, cluster.clone()).solve(1e-6, 30);
+        let cache_report = build_dadm(&mapped, &part, cluster.clone()).solve(1e-6, 30);
+        assert_eq!(text_report.converged, cache_report.converged);
+        assert_eq!(
+            math_fields(&text_report),
+            math_fields(&cache_report),
+            "trace diverged on {cluster:?}"
+        );
+        assert_eq!(
+            text_report.w, cache_report.w,
+            "iterates diverged on {cluster:?}"
+        );
+    }
+}
+
+#[test]
+fn cache_solve_over_tcp_matches_text_serial_bit_for_bit() {
+    // The acceptance pin: workers mmap their own shard ranges from the
+    // cache file (zero rows on the wire) and the trajectory must match
+    // the in-process text-parsed Serial solve bit for bit, round by
+    // round — w, v, and gap.
+    let data = tiny_classification(200, 8, 0xCAC4E + 2);
+    let fx = Fixture::build("tcp", &data);
+    let text = libsvm::load(&fx.text).expect("parse text");
+    let cache = fx.open();
+    let part = Partition::contiguous(text.n(), MACHINES);
+
+    let (handle, threads) = loopback(MACHINES);
+    handle
+        .with(|c| {
+            c.assign(cache_specs(
+                &cache,
+                fx.bin.to_str().expect("utf-8 temp path"),
+                MACHINES,
+                RNG_SEED,
+                SP,
+                WireLoss::SmoothHinge(SmoothHinge::default()),
+                WireSolver::ProxSdca,
+                1,
+            ))
+        })
+        .unwrap();
+    let mut serial = build_dadm(&text, &part, Cluster::Serial);
+    let mut tcp = build_dadm(&text, &part, Cluster::Tcp(handle.clone()));
+    serial.resync();
+    tcp.resync();
+    for round in 0..8 {
+        serial.round();
+        tcp.round();
+        assert_eq!(serial.w(), tcp.w(), "w diverged at round {round}");
+        assert_eq!(serial.v(), tcp.v(), "v diverged at round {round}");
+        assert_eq!(
+            serial.gap().to_bits(),
+            tcp.gap().to_bits(),
+            "gap diverged at round {round}"
+        );
+    }
+    drop(tcp);
+    join_workers(handle, threads);
+}

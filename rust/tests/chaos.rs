@@ -15,12 +15,12 @@
 //! SIGKILL — nothing in the worker gets to run cleanup.
 
 use dadm::comm::sparse::DeltaCodec;
-use dadm::comm::tcp::{synthetic_specs, TcpClusterBuilder, TcpHandle};
+use dadm::comm::tcp::{cache_specs, synthetic_specs, TcpClusterBuilder, TcpHandle};
 use dadm::comm::wire::{BroadcastRef, StepFlags, WireLoss, WireSolver};
 use dadm::comm::{Cluster, CommError, CostModel, FaultTolerance};
 use dadm::coordinator::{Dadm, DadmOptions, Problem};
 use dadm::data::synthetic::SyntheticSpec;
-use dadm::data::{Dataset, Partition};
+use dadm::data::{cache, libsvm, CsrCache, Dataset, Partition};
 use dadm::loss::SmoothHinge;
 use dadm::reg::{ElasticNet, Zero};
 use dadm::solver::ProxSdca;
@@ -143,6 +143,35 @@ fn connected_fleet(spec: &SyntheticSpec, ft: FaultTolerance) -> (TcpHandle, Work
             1,
         ))
         .expect("assigning partitions");
+    (TcpHandle::new(cluster), fleet, addr)
+}
+
+/// The cache-backed twin of [`connected_fleet`]: workers mmap their own
+/// contiguous row ranges of the compiled cache (`DataSpec::Cache`)
+/// instead of regenerating synthetic shards.
+fn connected_fleet_cache(
+    cache: &CsrCache,
+    path: &str,
+    ft: FaultTolerance,
+) -> (TcpHandle, WorkerFleet, String) {
+    let builder = TcpClusterBuilder::bind("127.0.0.1:0")
+        .expect("bind")
+        .fault_tolerance(ft);
+    let addr = builder.local_addr().expect("local addr").to_string();
+    let fleet = WorkerFleet::spawn(&addr, MACHINES);
+    let mut cluster = builder.accept(MACHINES).expect("accepting workers");
+    cluster
+        .assign(cache_specs(
+            cache,
+            path,
+            MACHINES,
+            RNG_SEED,
+            SP,
+            WireLoss::SmoothHinge(SmoothHinge::default()),
+            WireSolver::ProxSdca,
+            1,
+        ))
+        .expect("assigning cache shards");
     (TcpHandle::new(cluster), fleet, addr)
 }
 
@@ -332,4 +361,65 @@ fn dead_child_without_resurrection_is_typed_fault_within_deadline() {
     // Orderly teardown for the survivor.
     drop(cluster);
     fleet.join();
+}
+
+#[test]
+fn killed_child_resurrects_from_mmap_cache_bit_identically() {
+    // The §15.5 pin: cache-backed shards carry their identity (the
+    // content hash) in the spec, so a resurrected replacement process
+    // re-mmaps the same bytes through the `Rejoin` replay handshake and
+    // the trajectory stays bit-identical across the kill — exactly like
+    // the synthetic-shard variant above, but with the data served from
+    // the on-disk cache instead of regenerated.
+    let data = problem_spec().generate();
+    let tag = std::process::id();
+    let text = std::env::temp_dir().join(format!("dadm_chaos_cache_{tag}.libsvm"));
+    let bin = std::env::temp_dir().join(format!("dadm_chaos_cache_{tag}.bin"));
+    let mut buf = Vec::new();
+    libsvm::write(&data, &mut buf).expect("serialize libsvm");
+    std::fs::write(&text, &buf).expect("write text fixture");
+    cache::compile(&text, &bin).expect("compile cache");
+    let cache = CsrCache::open(&bin).expect("open cache");
+    let mapped = cache.dataset().expect("decode cache");
+    let part = Partition::contiguous(mapped.n(), MACHINES);
+
+    let (handle, mut fleet, addr) = connected_fleet_cache(
+        &cache,
+        bin.to_str().expect("utf-8 temp path"),
+        resurrecting_ft(),
+    );
+    let mut serial = build_dadm(&mapped, &part, Cluster::Serial);
+    let mut tcp = build_dadm(&mapped, &part, Cluster::Tcp(handle.clone()));
+    serial.resync();
+    tcp.resync();
+    for round in 0..8 {
+        serial.round();
+        tcp.round();
+        assert_eq!(serial.w(), tcp.w(), "w diverged at round {round} across the kill");
+        assert_eq!(serial.v(), tcp.v(), "v diverged at round {round} across the kill");
+        assert_eq!(
+            serial.gap().to_bits(),
+            tcp.gap().to_bits(),
+            "gap diverged at round {round} across the kill"
+        );
+        if round == 2 {
+            // Abrupt death between barriers; the replacement re-mmaps
+            // the cache during the §14 rejoin and must land on the very
+            // same bytes (`open_expecting` checks the pinned hash).
+            fleet.kill(0);
+            fleet.reinforce(&addr);
+        }
+    }
+    assert_eq!(
+        handle.with(|c| c.rejoins_total()),
+        1,
+        "exactly one resurrection expected"
+    );
+
+    handle.with(|c| c.shutdown());
+    drop(tcp);
+    drop(handle);
+    fleet.join();
+    let _ = std::fs::remove_file(&text);
+    let _ = std::fs::remove_file(&bin);
 }

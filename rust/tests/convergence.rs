@@ -1,14 +1,13 @@
 //! Integration: end-to-end convergence properties of the full stack on
 //! problems with independently-known answers.
 
-#![allow(deprecated)] // positional constructors: shims over the Problem builder
 use dadm::comm::{Cluster, CostModel};
-use dadm::coordinator::{AccDadm, AccDadmOptions, Dadm, DadmOptions};
+use dadm::coordinator::{AccDadm, AccDadmOptions, Dadm, DadmOptions, Problem};
 use dadm::data::synthetic::{tiny_classification, tiny_regression};
-use dadm::data::Partition;
-use dadm::loss::{Logistic, SmoothHinge, Squared};
-use dadm::reg::{ElasticNet, GroupLasso, Zero};
-use dadm::solver::ProxSdca;
+use dadm::data::{Dataset, Partition};
+use dadm::loss::{Logistic, Loss, SmoothHinge, Squared};
+use dadm::reg::{ElasticNet, ExtraReg, GroupLasso, Regularizer, Zero};
+use dadm::solver::{LocalSolver, ProxSdca};
 use dadm::utils::math::soft_threshold;
 
 fn opts(sp: f64) -> DadmOptions {
@@ -20,6 +19,57 @@ fn opts(sp: f64) -> DadmOptions {
     }
 }
 
+/// Positional convenience over the [`Problem`] builder — the only
+/// construction path — for this file's repetitive setups.
+#[allow(clippy::too_many_arguments)]
+fn build_dadm<L, R, H, S>(
+    data: &Dataset,
+    part: &Partition,
+    loss: L,
+    reg: R,
+    h: H,
+    lambda: f64,
+    solver: S,
+    opts: DadmOptions,
+) -> Dadm<L, R, H, S>
+where
+    L: Loss,
+    R: Regularizer,
+    H: ExtraReg,
+    S: LocalSolver,
+{
+    Problem::new(data, part)
+        .loss(loss)
+        .reg(reg)
+        .extra_reg(h)
+        .lambda(lambda)
+        .build_dadm(solver, opts)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn build_acc<L, H, S>(
+    data: &Dataset,
+    part: &Partition,
+    loss: L,
+    h: H,
+    lambda: f64,
+    mu: f64,
+    solver: S,
+    opts: AccDadmOptions,
+) -> AccDadm<L, H, S>
+where
+    L: Loss,
+    H: ExtraReg,
+    S: LocalSolver,
+{
+    Problem::new(data, part)
+        .loss(loss)
+        .extra_reg(h)
+        .lambda(lambda)
+        .l1(mu)
+        .build_acc_dadm(solver, opts)
+}
+
 /// Lasso-style problem with orthogonal-ish design: the optimal w of
 /// `min Σ(x_iᵀw − y_i)² + (λn/2)‖w‖² + μn‖w‖₁` must satisfy the
 /// first-order condition `2Xᵀ(Xw − y) + λn·w + μn·∂‖w‖₁ ∋ 0`.
@@ -28,7 +78,7 @@ fn elastic_net_regression_kkt() {
     let data = tiny_regression(120, 6, 0.02, 41);
     let part = Partition::balanced(120, 3, 41);
     let (lambda, mu) = (0.02, 0.01);
-    let mut dadm = Dadm::new(
+    let mut dadm = build_dadm(
         &data,
         &part,
         Squared,
@@ -66,7 +116,7 @@ fn elastic_net_regression_kkt() {
 fn single_machine_reduces_to_sdca() {
     let data = tiny_classification(150, 5, 42);
     let part1 = Partition::balanced(150, 1, 42);
-    let mut sdca = Dadm::new(
+    let mut sdca = build_dadm(
         &data,
         &part1,
         Logistic,
@@ -80,7 +130,7 @@ fn single_machine_reduces_to_sdca() {
     assert!(r1.converged);
 
     let part4 = Partition::balanced(150, 4, 42);
-    let mut multi = Dadm::new(
+    let mut multi = build_dadm(
         &data,
         &part4,
         Logistic,
@@ -104,7 +154,7 @@ fn single_machine_reduces_to_sdca() {
 fn group_lasso_solve_is_group_sparse() {
     // Ground truth supported on the first two of four groups; the noise
     // groups must be zeroed by a moderate group weight.
-    use dadm::data::{Dataset, SparseMatrix};
+    use dadm::data::SparseMatrix;
     use dadm::utils::Rng;
     let d = 12;
     let n = 200;
@@ -129,7 +179,7 @@ fn group_lasso_solve_is_group_sparse() {
     let part = Partition::balanced(200, 2, 43);
     let lambda = 0.05;
     let h = GroupLasso::contiguous(d, 3, 2.0);
-    let mut dadm = Dadm::new(
+    let mut dadm = build_dadm(
         &data,
         &part,
         Squared,
@@ -156,7 +206,7 @@ fn acc_and_plain_reach_same_optimum() {
     let data = tiny_classification(200, 6, 44);
     let part = Partition::balanced(200, 4, 44);
     let (lambda, mu) = (1e-3, 1e-4);
-    let mut plain = Dadm::new(
+    let mut plain = build_dadm(
         &data,
         &part,
         SmoothHinge::default(),
@@ -167,7 +217,7 @@ fn acc_and_plain_reach_same_optimum() {
         opts(1.0),
     );
     let r_plain = plain.solve(1e-8, 3000);
-    let mut acc = AccDadm::new(
+    let mut acc = build_acc(
         &data,
         &part,
         SmoothHinge::default(),
@@ -195,7 +245,7 @@ fn solution_has_soft_threshold_structure() {
     let part = Partition::balanced(120, 3, 45);
     let (lambda, mu) = (1e-3, 5e-4);
     let tau = mu / lambda;
-    let mut dadm = Dadm::new(
+    let mut dadm = build_dadm(
         &data,
         &part,
         SmoothHinge::default(),
@@ -219,7 +269,7 @@ fn minibatch_and_fullbatch_same_optimum() {
     let data = tiny_classification(160, 5, 46);
     let part = Partition::balanced(160, 4, 46);
     let solve = |sp: f64| {
-        let mut dadm = Dadm::new(
+        let mut dadm = build_dadm(
             &data,
             &part,
             Logistic,

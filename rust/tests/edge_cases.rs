@@ -1,13 +1,12 @@
 //! Integration: edge cases and failure injection across the stack.
 
-#![allow(deprecated)] // positional constructors: shims over the Problem builder
 use dadm::comm::CostModel;
-use dadm::coordinator::{AccDadm, AccDadmOptions, Dadm, DadmOptions};
+use dadm::coordinator::{AccDadm, AccDadmOptions, Dadm, DadmOptions, Problem};
 use dadm::data::synthetic::tiny_classification;
 use dadm::data::{Dataset, Partition, SparseMatrix};
-use dadm::loss::{Logistic, SmoothHinge};
-use dadm::reg::{ElasticNet, Zero};
-use dadm::solver::ProxSdca;
+use dadm::loss::{Logistic, Loss, SmoothHinge};
+use dadm::reg::{ElasticNet, ExtraReg, Regularizer, Zero};
+use dadm::solver::{LocalSolver, ProxSdca};
 
 fn opts(sp: f64) -> DadmOptions {
     DadmOptions {
@@ -17,12 +16,63 @@ fn opts(sp: f64) -> DadmOptions {
     }
 }
 
+/// Positional convenience over the [`Problem`] builder — the only
+/// construction path — for this file's repetitive setups.
+#[allow(clippy::too_many_arguments)]
+fn build_dadm<L, R, H, S>(
+    data: &Dataset,
+    part: &Partition,
+    loss: L,
+    reg: R,
+    h: H,
+    lambda: f64,
+    solver: S,
+    opts: DadmOptions,
+) -> Dadm<L, R, H, S>
+where
+    L: Loss,
+    R: Regularizer,
+    H: ExtraReg,
+    S: LocalSolver,
+{
+    Problem::new(data, part)
+        .loss(loss)
+        .reg(reg)
+        .extra_reg(h)
+        .lambda(lambda)
+        .build_dadm(solver, opts)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn build_acc<L, H, S>(
+    data: &Dataset,
+    part: &Partition,
+    loss: L,
+    h: H,
+    lambda: f64,
+    mu: f64,
+    solver: S,
+    opts: AccDadmOptions,
+) -> AccDadm<L, H, S>
+where
+    L: Loss,
+    H: ExtraReg,
+    S: LocalSolver,
+{
+    Problem::new(data, part)
+        .loss(loss)
+        .extra_reg(h)
+        .lambda(lambda)
+        .l1(mu)
+        .build_acc_dadm(solver, opts)
+}
+
 /// One example per machine — the most extreme partition.
 #[test]
 fn one_example_per_machine() {
     let data = tiny_classification(8, 3, 61);
     let part = Partition::balanced(8, 8, 61);
-    let mut dadm = Dadm::new(
+    let mut dadm = build_dadm(
         &data,
         &part,
         SmoothHinge::default(),
@@ -45,7 +95,7 @@ fn degenerate_single_class() {
         *y = 1.0;
     }
     let part = Partition::balanced(60, 3, 62);
-    let mut dadm = Dadm::new(
+    let mut dadm = build_dadm(
         &data,
         &part,
         Logistic,
@@ -81,7 +131,7 @@ fn zero_feature_rows() {
         name: "zeros".into(),
     };
     let part = Partition::balanced(6, 2, 63);
-    let mut dadm = Dadm::new(
+    let mut dadm = build_dadm(
         &data,
         &part,
         SmoothHinge::default(),
@@ -111,7 +161,7 @@ fn zero_feature_rows() {
 fn huge_lambda_zero_solution() {
     let data = tiny_classification(50, 4, 64);
     let part = Partition::balanced(50, 2, 64);
-    let mut dadm = Dadm::new(
+    let mut dadm = build_dadm(
         &data,
         &part,
         SmoothHinge::default(),
@@ -132,7 +182,7 @@ fn huge_lambda_zero_solution() {
 fn tiny_lambda_capped_run_is_sane() {
     let data = tiny_classification(80, 4, 65);
     let part = Partition::balanced(80, 4, 65);
-    let mut acc = AccDadm::new(
+    let mut acc = build_acc(
         &data,
         &part,
         SmoothHinge::default(),
@@ -160,7 +210,7 @@ fn tiny_lambda_capped_run_is_sane() {
 fn unbalanced_partition_bookkeeping() {
     let data = tiny_classification(101, 4, 66); // 101 % 4 != 0
     let part = Partition::balanced(101, 4, 66);
-    let mut dadm = Dadm::new(
+    let mut dadm = build_dadm(
         &data,
         &part,
         Logistic,
@@ -184,7 +234,7 @@ fn determinism_and_seed_sensitivity() {
     let data = tiny_classification(90, 5, 67);
     let part = Partition::balanced(90, 3, 67);
     let run = |seed: u64| {
-        let mut dadm = Dadm::new(
+        let mut dadm = build_dadm(
             &data,
             &part,
             SmoothHinge::default(),

@@ -2,7 +2,6 @@
 //! bit-exact checkpoint resumption through the engine's snapshot hook,
 //! and concurrent pool-backed solves time-sharing the global workers.
 
-#![allow(deprecated)] // positional constructors: shims over the Problem builder
 use dadm::comm::{Cluster, CostModel};
 use dadm::coordinator::Checkpoint;
 use dadm::data::synthetic::tiny_classification;
@@ -10,7 +9,7 @@ use dadm::data::{Dataset, Partition};
 use dadm::loss::SmoothHinge;
 use dadm::reg::{ElasticNet, Zero};
 use dadm::solver::ProxSdca;
-use dadm::{Dadm, DadmOptions, Driver};
+use dadm::{Dadm, DadmOptions, Driver, Problem};
 
 type TestDadm = Dadm<SmoothHinge, ElasticNet, Zero, ProxSdca>;
 
@@ -21,22 +20,20 @@ fn build(
     sp: f64,
     gap_every: usize,
 ) -> TestDadm {
-    Dadm::new(
-        data,
-        part,
-        SmoothHinge::default(),
-        ElasticNet::new(0.1),
-        Zero,
-        1e-3,
-        ProxSdca,
-        DadmOptions {
-            sp,
-            cluster,
-            cost: CostModel::free(),
-            gap_every,
-            ..Default::default()
-        },
-    )
+    Problem::new(data, part)
+        .loss(SmoothHinge::default())
+        .reg(ElasticNet::new(0.1))
+        .lambda(1e-3)
+        .build_dadm(
+            ProxSdca,
+            DadmOptions {
+                sp,
+                cluster,
+                cost: CostModel::free(),
+                gap_every,
+                ..Default::default()
+            },
+        )
 }
 
 /// The math fields of a trace record (cumulative modeled/wall seconds

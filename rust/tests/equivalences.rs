@@ -7,14 +7,13 @@
 //!   global step reduces to plain averaging, ṽ = v).
 //! * Theorem-6 step scale degrades gracefully with batch size.
 
-#![allow(deprecated)] // positional constructors: shims over the Problem builder
 use dadm::comm::CostModel;
-use dadm::coordinator::{Dadm, DadmOptions};
+use dadm::coordinator::{Dadm, DadmOptions, Problem};
 use dadm::data::synthetic::tiny_classification;
-use dadm::data::Partition;
+use dadm::data::{Dataset, Partition};
 use dadm::loss::{Loss, SmoothHinge};
-use dadm::reg::{ElasticNet, Regularizer, Zero};
-use dadm::solver::ProxSdca;
+use dadm::reg::{ElasticNet, ExtraReg, Regularizer, Zero};
+use dadm::solver::{LocalSolver, ProxSdca};
 use dadm::testing::prop::for_each_case;
 
 fn opts(sp: f64) -> DadmOptions {
@@ -23,6 +22,33 @@ fn opts(sp: f64) -> DadmOptions {
         cost: CostModel::free(),
         ..Default::default()
     }
+}
+
+/// Positional convenience over the [`Problem`] builder — the only
+/// construction path — for this file's repetitive setups.
+#[allow(clippy::too_many_arguments)]
+fn build_dadm<L, R, H, S>(
+    data: &Dataset,
+    part: &Partition,
+    loss: L,
+    reg: R,
+    h: H,
+    lambda: f64,
+    solver: S,
+    opts: DadmOptions,
+) -> Dadm<L, R, H, S>
+where
+    L: Loss,
+    R: Regularizer,
+    H: ExtraReg,
+    S: LocalSolver,
+{
+    Problem::new(data, part)
+        .loss(loss)
+        .reg(reg)
+        .extra_reg(h)
+        .lambda(lambda)
+        .build_dadm(solver, opts)
 }
 
 /// Prop 2: P(w) − D(α, β) ≥ 0 along the whole trajectory, for random
@@ -36,7 +62,7 @@ fn prop2_gap_nonnegative_random_hyperparams() {
         let part = Partition::balanced(n, m, 1);
         let lambda = g.f64_log_in(1e-5, 1e-1);
         let tau = if g.bool(0.5) { g.f64_log_in(1e-4, 1.0) } else { 0.0 };
-        let mut dadm = Dadm::new(
+        let mut dadm = build_dadm(
             &data,
             &part,
             SmoothHinge::default(),
@@ -67,7 +93,7 @@ fn prop5_gap_decomposition() {
     let lambda = 1e-2;
     let loss = SmoothHinge::default();
     let reg = ElasticNet::new(0.1);
-    let mut dadm = Dadm::new(&data, &part, loss, reg, Zero, lambda, ProxSdca, opts(0.4));
+    let mut dadm = build_dadm(&data, &part, loss, reg, Zero, lambda, ProxSdca, opts(0.4));
     dadm.resync();
     for _ in 0..5 {
         dadm.round();
@@ -98,7 +124,7 @@ fn cocoa_plus_equivalence_h_zero() {
     let data = tiny_classification(n, 6, 52);
     let part = Partition::balanced(n, 4, 52);
     let reg = ElasticNet::new(0.2);
-    let mut dadm = Dadm::new(
+    let mut dadm = build_dadm(
         &data,
         &part,
         SmoothHinge::default(),
@@ -134,7 +160,7 @@ fn dual_ascent_property() {
         let m = g.usize_in(1, 4);
         let part = Partition::balanced(n, m, 2);
         let sp = *g.choose(&[0.1, 0.5, 1.0]);
-        let mut dadm = Dadm::new(
+        let mut dadm = build_dadm(
             &data,
             &part,
             SmoothHinge::default(),

@@ -7,7 +7,6 @@
 //! Plus the drift bound of the incremental dual conjugate sum against
 //! exact resummation.
 
-#![allow(deprecated)] // positional constructors: shims over the Problem builder
 use dadm::comm::tcp::{serve, synthetic_specs, TcpClusterBuilder, TcpHandle};
 use dadm::comm::wire::{WireLoss, WireSolver};
 use dadm::comm::{Cluster, CostModel};
@@ -16,7 +15,7 @@ use dadm::data::{Dataset, Partition};
 use dadm::loss::SmoothHinge;
 use dadm::reg::{ElasticNet, Zero};
 use dadm::solver::ProxSdca;
-use dadm::{Dadm, DadmOptions, SolveReport};
+use dadm::{Dadm, DadmOptions, Problem, SolveReport};
 use std::net::TcpStream;
 use std::thread::JoinHandle;
 
@@ -44,26 +43,24 @@ fn build(
     local_threads: usize,
     conj_resum_every: usize,
 ) -> TestDadm {
-    Dadm::new(
-        data,
-        part,
-        SmoothHinge::default(),
-        ElasticNet::new(0.1),
-        Zero,
-        1e-2,
-        ProxSdca,
-        DadmOptions {
-            sp: 0.25,
-            cluster,
-            cost: CostModel::free(),
-            seed: SEED,
-            gap_every,
-            sparse_comm: true,
-            local_threads,
-            conj_resum_every,
-            ..Default::default()
-        },
-    )
+    Problem::new(data, part)
+        .loss(SmoothHinge::default())
+        .reg(ElasticNet::new(0.1))
+        .lambda(1e-2)
+        .build_dadm(
+            ProxSdca,
+            DadmOptions {
+                sp: 0.25,
+                cluster,
+                cost: CostModel::free(),
+                seed: SEED,
+                gap_every,
+                sparse_comm: true,
+                local_threads,
+                conj_resum_every,
+                ..Default::default()
+            },
+        )
 }
 
 /// Spawn `m` thread-hosted loopback workers (the in-process twin of real

@@ -5,7 +5,6 @@
 //! fields, same final iterate — on every in-process backend (the TCP
 //! twin lives in `comm/tcp.rs` and `rust/tests/tcp_cluster.rs`).
 
-#![allow(deprecated)] // positional constructors: shims over the Problem builder
 use dadm::comm::{Cluster, CostModel};
 use dadm::coordinator::resolve_local_threads;
 use dadm::data::synthetic::tiny_classification;
@@ -14,7 +13,7 @@ use dadm::loss::SmoothHinge;
 use dadm::reg::{ElasticNet, Zero};
 use dadm::solver::{machine_rng, machine_rngs, ProxSdca};
 use dadm::testing::prop::for_each_case;
-use dadm::{AccDadm, AccDadmOptions, Dadm, DadmOptions, SolveReport};
+use dadm::{AccDadm, AccDadmOptions, Dadm, DadmOptions, Problem, SolveReport};
 
 type TestDadm = Dadm<SmoothHinge, ElasticNet, Zero, ProxSdca>;
 
@@ -25,22 +24,20 @@ fn build(
     sp: f64,
     local_threads: usize,
 ) -> TestDadm {
-    Dadm::new(
-        data,
-        part,
-        SmoothHinge::default(),
-        ElasticNet::new(0.1),
-        Zero,
-        1e-3,
-        ProxSdca,
-        DadmOptions {
-            sp,
-            cluster,
-            cost: CostModel::free(),
-            local_threads,
-            ..Default::default()
-        },
-    )
+    Problem::new(data, part)
+        .loss(SmoothHinge::default())
+        .reg(ElasticNet::new(0.1))
+        .lambda(1e-3)
+        .build_dadm(
+            ProxSdca,
+            DadmOptions {
+                sp,
+                cluster,
+                cost: CostModel::free(),
+                local_threads,
+                ..Default::default()
+            },
+        )
 }
 
 /// The deterministic math fields of a trace (modeled compute is
@@ -202,25 +199,23 @@ fn acc_dadm_trace_matches_flat() {
     let data = tiny_classification(n, 6, 19);
     let part = Partition::balanced(n, 2, 19);
     let flat_part = Partition::balanced(n, 4, 19);
-    let build_acc = |part: &Partition, t: usize| {
-        AccDadm::new(
-            &data,
-            part,
-            SmoothHinge::default(),
-            Zero,
-            1e-3,
-            1e-5,
-            ProxSdca,
-            AccDadmOptions {
-                dadm: DadmOptions {
-                    sp: 0.5,
-                    cost: CostModel::free(),
-                    local_threads: t,
+    let build_acc = |part: &Partition, t: usize| -> AccDadm<_, _, _> {
+        Problem::new(&data, part)
+            .loss(SmoothHinge::default())
+            .lambda(1e-3)
+            .l1(1e-5)
+            .build_acc_dadm(
+                ProxSdca,
+                AccDadmOptions {
+                    dadm: DadmOptions {
+                        sp: 0.5,
+                        cost: CostModel::free(),
+                        local_threads: t,
+                        ..Default::default()
+                    },
                     ..Default::default()
                 },
-                ..Default::default()
-            },
-        )
+            )
     };
     let mut nested = build_acc(&part, 2);
     let nested_report = nested.solve(1e-4, 30);

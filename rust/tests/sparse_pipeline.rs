@@ -9,11 +9,10 @@
 //!   backend (`Cluster::Threads`) must match `Cluster::Serial` exactly,
 //!   and the `sparse_comm` cost accounting must never change iterates.
 
-#![allow(deprecated)] // positional constructors: shims over the Problem builder
 use dadm::comm::allreduce::tree_allreduce;
 use dadm::comm::sparse::{tree_allreduce_delta, Delta, SparseDelta};
 use dadm::comm::{Cluster, CostModel};
-use dadm::coordinator::{Dadm, DadmOptions};
+use dadm::coordinator::{Dadm, DadmOptions, Problem};
 use dadm::data::synthetic::SyntheticSpec;
 use dadm::data::{Dataset, Partition};
 use dadm::loss::SmoothHinge;
@@ -90,21 +89,19 @@ fn build(
     cluster: Cluster,
     sp: f64,
 ) -> Dadm<SmoothHinge, ElasticNet, Zero, ProxSdca> {
-    Dadm::new(
-        data,
-        part,
-        SmoothHinge::default(),
-        ElasticNet::new(0.1),
-        Zero,
-        1e-3,
-        ProxSdca,
-        DadmOptions {
-            sp,
-            cluster,
-            cost: CostModel::free(),
-            ..Default::default()
-        },
-    )
+    Problem::new(data, part)
+        .loss(SmoothHinge::default())
+        .reg(ElasticNet::new(0.1))
+        .lambda(1e-3)
+        .build_dadm(
+            ProxSdca,
+            DadmOptions {
+                sp,
+                cluster,
+                cost: CostModel::free(),
+                ..Default::default()
+            },
+        )
 }
 
 #[test]
@@ -171,20 +168,18 @@ fn sparse_comm_accounting_reflects_message_sizes() {
     let data = rcv1ish(400, 1024, 33);
     let part = Partition::balanced(400, 4, 33);
     let run = |sparse_comm: bool| {
-        let mut dadm = Dadm::new(
-            &data,
-            &part,
-            SmoothHinge::default(),
-            ElasticNet::new(0.1),
-            Zero,
-            1e-3,
-            ProxSdca,
-            DadmOptions {
-                sp: 0.05,
-                sparse_comm,
-                ..DadmOptions::default() // default (non-free) cost model
-            },
-        );
+        let mut dadm = Problem::new(&data, &part)
+            .loss(SmoothHinge::default())
+            .reg(ElasticNet::new(0.1))
+            .lambda(1e-3)
+            .build_dadm(
+                ProxSdca,
+                DadmOptions {
+                    sp: 0.05,
+                    sparse_comm,
+                    ..DadmOptions::default() // default (non-free) cost model
+                },
+            );
         dadm.resync();
         for _ in 0..6 {
             dadm.round();

@@ -7,11 +7,10 @@
 //! dual objectives, same modeled comm seconds. Only wall-clock-derived
 //! fields (compute seconds, wall seconds) may differ between backends.
 
-#![allow(deprecated)] // positional constructors: shims over the Problem builder
 use dadm::comm::tcp::{synthetic_specs, TcpClusterBuilder, TcpHandle};
 use dadm::comm::wire::{WireLoss, WireSolver};
 use dadm::comm::{Cluster, CostModel};
-use dadm::coordinator::{Dadm, DadmOptions, SolveReport};
+use dadm::coordinator::{Dadm, DadmOptions, Problem, SolveReport};
 use dadm::data::synthetic::SyntheticSpec;
 use dadm::data::{Dataset, Partition};
 use dadm::loss::SmoothHinge;
@@ -80,26 +79,24 @@ fn build_dadm_t(
     cluster: Cluster,
     local_threads: usize,
 ) -> Dadm<SmoothHinge, ElasticNet, Zero, ProxSdca> {
-    Dadm::new(
-        data,
-        part,
-        SmoothHinge::default(),
-        ElasticNet::new(0.1),
-        Zero,
-        1e-2,
-        ProxSdca,
-        DadmOptions {
-            sp: SP,
-            cluster,
-            cost: CostModel::default(),
-            seed: RNG_SEED,
-            gap_every: 1,
-            sparse_comm: true,
-            local_threads,
-            conj_resum_every: 64,
-            ..Default::default()
-        },
-    )
+    Problem::new(data, part)
+        .loss(SmoothHinge::default())
+        .reg(ElasticNet::new(0.1))
+        .lambda(1e-2)
+        .build_dadm(
+            ProxSdca,
+            DadmOptions {
+                sp: SP,
+                cluster,
+                cost: CostModel::default(),
+                seed: RNG_SEED,
+                gap_every: 1,
+                sparse_comm: true,
+                local_threads,
+                conj_resum_every: 64,
+                ..Default::default()
+            },
+        )
 }
 
 fn build_dadm(

@@ -4,14 +4,12 @@
 //! These tests exercise the full L1→L2→runtime→L3 chain and skip with a
 //! notice when `artifacts/` has not been built (`make artifacts`).
 
-#![allow(deprecated)] // positional constructors: shims over the Problem builder
 use dadm::comm::CostModel;
-use dadm::coordinator::{Dadm, DadmOptions};
+use dadm::coordinator::{DadmOptions, Problem};
 use dadm::data::synthetic::SyntheticSpec;
 use dadm::data::Partition;
 use dadm::loss::{Hinge, Logistic, Loss, SmoothHinge, Squared};
 use dadm::reg::ElasticNet;
-use dadm::reg::Zero;
 use dadm::runtime::{ArtifactSpec, XlaLocalStep, XlaRuntime};
 use dadm::solver::{LocalSolver, TheoremStep, WorkerState};
 use dadm::utils::Rng;
@@ -169,20 +167,18 @@ fn full_dadm_solve_through_pjrt() {
     let part = Partition::balanced(data.n(), 4, 21);
     let loss = SmoothHinge::default();
     let step = XlaLocalStep::new(loss.name(), 8, 16, data.max_row_norm_sq()).unwrap();
-    let mut dadm = Dadm::new(
-        &data,
-        &part,
-        loss,
-        ElasticNet::new(0.1),
-        Zero,
-        1e-2,
-        step,
-        DadmOptions {
-            sp: 8.0 / 128.0, // M_ℓ = artifact batch
-            cost: CostModel::free(),
-            ..Default::default()
-        },
-    );
+    let mut dadm = Problem::new(&data, &part)
+        .loss(loss)
+        .reg(ElasticNet::new(0.1))
+        .lambda(1e-2)
+        .build_dadm(
+            step,
+            DadmOptions {
+                sp: 8.0 / 128.0, // M_ℓ = artifact batch
+                cost: CostModel::free(),
+                ..Default::default()
+            },
+        );
     let report = dadm.solve(1e-4, 2000);
     assert!(
         report.converged,

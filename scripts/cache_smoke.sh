@@ -1,0 +1,78 @@
+#!/usr/bin/env bash
+# Out-of-core cache smoke (DESIGN.md §15), run by the distributed-smoke
+# CI job:
+#
+#   1. compile the checked-in LIBSVM fixture into a binary CSR cache,
+#   2. solve from the text parse on Cluster::Serial (contiguous
+#      partition — the cache's implied scheme),
+#   3. solve from the mmapped cache under --cluster tcp with real
+#      `dadm worker` processes (each worker maps its own shard row
+#      range; no training rows cross the wire),
+#   4. assert the two trace CSVs agree bit for bit on every modeled
+#      column (wall_secs, the CSV's last column, is real elapsed time
+#      and is stripped — the same projection the in-process parity test
+#      `cli::tests::cache_solve_is_bit_identical_to_text_solve` uses).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+BIN=${DADM_BIN:-target/release/dadm}
+FIXTURE=rust/testdata/smoke.libsvm
+MACHINES=4
+WORK=$(mktemp -d)
+cleanup() {
+    # The coordinator shuts workers down; the kill is a safety net for
+    # early-exit failures.
+    kill "${PIDS[@]:-}" 2>/dev/null || true
+    rm -rf "$WORK"
+}
+trap cleanup EXIT
+PIDS=()
+
+echo "== compile-cache =="
+"$BIN" compile-cache "$FIXTURE" "$WORK/smoke.dadmcache"
+
+# One flag set for both runs: only the data source and backend differ.
+COMMON=(--method dadm --loss svm --lambda 1e-3 --machines "$MACHINES"
+    --sp 0.5 --eps 1e-12 --max-passes 6 --seed 7 --partition contiguous)
+
+echo "== text parse, serial =="
+"$BIN" --dataset "$FIXTURE" "${COMMON[@]}"
+mv target/dadm_trace.csv "$WORK/text.csv"
+
+echo "== mmap cache, --cluster tcp ($MACHINES worker processes) =="
+"$BIN" --cache "$WORK/smoke.dadmcache" "${COMMON[@]}" \
+    --cluster tcp --tcp-listen 127.0.0.1:0 >"$WORK/coord.log" 2>&1 &
+COORD=$!
+PIDS+=("$COORD")
+
+# The coordinator binds an ephemeral port and prints it; wait for the
+# line, then connect the fleet.
+ADDR=""
+for _ in $(seq 100); do
+    ADDR=$(sed -n 's/^coordinator listening on \([0-9.:]*\);.*/\1/p' \
+        "$WORK/coord.log" 2>/dev/null | head -n 1)
+    [ -n "$ADDR" ] && break
+    sleep 0.1
+done
+[ -n "$ADDR" ] || {
+    echo "coordinator never announced its address:"
+    cat "$WORK/coord.log"
+    exit 1
+}
+for _ in $(seq "$MACHINES"); do
+    "$BIN" worker --connect "$ADDR" &
+    PIDS+=("$!")
+done
+wait "$COORD"
+cat "$WORK/coord.log"
+mv target/dadm_trace.csv "$WORK/cache.csv"
+
+echo "== trace parity (modeled columns) =="
+cut -d, -f1-8 "$WORK/text.csv" >"$WORK/text.math.csv"
+cut -d, -f1-8 "$WORK/cache.csv" >"$WORK/cache.math.csv"
+if ! diff -u "$WORK/text.math.csv" "$WORK/cache.math.csv"; then
+    echo "FAIL: cache-backed TCP trace diverged from the text-parsed serial trace"
+    exit 1
+fi
+ROUNDS=$(($(wc -l <"$WORK/text.csv") - 1))
+echo "cache-smoke OK: $ROUNDS rounds bit-identical (text/serial vs cache/tcp)"
