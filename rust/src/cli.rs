@@ -619,7 +619,6 @@ mod tests {
         std::fs::remove_dir_all(&dir).ok();
     }
 
-    #[test]
     /// The trace CSV minus its last column (`wall_secs`, the one
     /// wall-clock-derived field — everything else is modeled math and
     /// must reproduce bit for bit; `scripts/cache_smoke.sh` applies the

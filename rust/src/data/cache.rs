@@ -635,10 +635,15 @@ impl CsrCache {
 
     /// A zero-copy matrix over rows `[range.start, range.end)`.
     ///
-    /// Validates every stored column index in the range against `d` —
-    /// O(range nnz), the one scan that upholds the `get_unchecked`
-    /// contract of [`crate::data::SparseRow::dot`] — so each worker
-    /// pays only for its own shard, never the whole file.
+    /// Validates every stored column index in the range: each must be
+    /// `< d` (upholds the `get_unchecked` contract of
+    /// [`crate::data::SparseRow::dot`]) and strictly increasing within
+    /// its row (the dense fast path in `dot`/`axpy_into` assumes a row
+    /// with `nnz == d` has indices exactly `0..d`; without
+    /// monotonicity a corrupt cache could hit it with permuted or
+    /// duplicated columns and silently compute wrong answers). O(range
+    /// nnz) — each worker pays only for its own shard, never the whole
+    /// file.
     pub fn matrix_range(&self, range: std::ops::Range<usize>) -> Result<SparseMatrix, CacheError> {
         if range.start > range.end || range.end > self.n {
             return Err(CacheError::Malformed(format!(
@@ -647,20 +652,32 @@ impl CsrCache {
             )));
         }
         let indptr = self.indptr_section();
-        let (lo, hi) = (indptr[range.start] as usize, indptr[range.end] as usize);
         let indices = self.indices_section();
-        for &j in &indices[lo..hi] {
-            if (j as usize) >= self.d {
-                return Err(CacheError::Malformed(format!(
-                    "column {j} out of bounds ({} columns)",
-                    self.d
-                )));
+        for r in range.clone() {
+            let (lo, hi) = (indptr[r] as usize, indptr[r + 1] as usize);
+            let mut prev: Option<u32> = None;
+            for &j in &indices[lo..hi] {
+                if (j as usize) >= self.d {
+                    return Err(CacheError::Malformed(format!(
+                        "column {j} out of bounds ({} columns)",
+                        self.d
+                    )));
+                }
+                if let Some(p) = prev {
+                    if p >= j {
+                        return Err(CacheError::Malformed(format!(
+                            "non-monotone column indices in row {r}: {p} then {j}"
+                        )));
+                    }
+                }
+                prev = Some(j);
             }
         }
         let base = self.map.as_slice().as_ptr();
         // SAFETY: `open` validated section bounds/alignment and the
         // monotone indptr; the loop above validated the columns of this
-        // range; the Arc keeps the mapping alive for the matrix.
+        // range (bounds and per-row strict monotonicity); the Arc keeps
+        // the mapping alive for the matrix.
         Ok(unsafe {
             SparseMatrix::from_mapped_sections(
                 Arc::clone(&self.map),
@@ -944,6 +961,21 @@ mod tests {
         assert!(matches!(
             cache.verify_content().unwrap_err(),
             CacheError::HashMismatch { .. }
+        ));
+
+        // In-bounds but non-monotone column within a row (row 0 becomes
+        // [0, 0]): every index is < d, but a row whose nnz happens to
+        // equal d would hit the dense fast path in dot/axpy with
+        // permuted or duplicated columns — silent wrong answers, not a
+        // crash — so matrix_range must reject it.
+        drop(cache); // don't rewrite the file under a live mapping
+        let mut bytes = orig.clone();
+        bytes[indices_off + 4..indices_off + 8].copy_from_slice(&0u32.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let cache = CsrCache::open(&path).unwrap();
+        assert!(matches!(
+            cache.matrix_range(0..cache.rows()).unwrap_err(),
+            CacheError::Malformed(_)
         ));
         std::fs::remove_file(&path).ok();
     }

@@ -160,7 +160,7 @@ mod unix_impl {
 #[cfg(not(unix))]
 mod fallback_impl {
     use std::fs::File;
-    use std::io::{self, Read};
+    use std::io::{self, Read, Seek, SeekFrom};
 
     /// Portable fallback: read the whole file into owned memory. Not
     /// out-of-core, but behaviorally identical — non-unix targets are
@@ -178,6 +178,10 @@ mod fallback_impl {
         pub fn map_readonly(file: &File) -> io::Result<Mmap> {
             let mut bytes = Vec::new();
             let mut f = file.try_clone()?;
+            // Real mmap always maps from offset 0 regardless of the
+            // file cursor; match that, or a caller that read the header
+            // first would get a silently shifted "mapping".
+            f.seek(SeekFrom::Start(0))?;
             f.read_to_end(&mut bytes)?;
             if bytes.is_empty() {
                 return Err(io::Error::new(
