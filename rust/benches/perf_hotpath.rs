@@ -1005,6 +1005,124 @@ fn main() {
         let _ = std::fs::remove_file(&bin);
     }
 
+    // --- Straggler repair: nnz-balanced cuts on a skewed set (§16) ---
+    // A head block of dense rows hoards the stored non-zeros, so under
+    // row-balanced contiguous cuts one machine's local step dominates
+    // every round (the straggler). The nnz-balanced cut equalizes
+    // per-shard nnz, so the same 8-machine pool round must come in
+    // well under the row-cut time (the ≥ 25% acceptance pin).
+    {
+        use dadm::comm::Cluster;
+        use dadm::data::SparseMatrix;
+        let (n, d, machines) = (scaled_bench_n(16_000), 4096usize, 8usize);
+        let head = n / 10; // dense head: ~10% of rows, ~90% of nnz
+        let mut rng = Rng::new(33);
+        let mut rows = Vec::with_capacity(n);
+        let mut y = Vec::with_capacity(n);
+        for i in 0..n {
+            let nnz = if i < head { d / 5 } else { d / 500 };
+            let mut row: Vec<(u32, f64)> = (0..nnz)
+                .map(|_| (rng.below(d) as u32, rng.uniform(-1.0, 1.0)))
+                .collect();
+            row.sort_unstable_by_key(|&(j, _)| j);
+            row.dedup_by_key(|&mut (j, _)| j);
+            rows.push(row);
+            y.push(if rng.next_f64() < 0.5 { -1.0 } else { 1.0 });
+        }
+        let data = Dataset {
+            x: SparseMatrix::from_rows(rows, d),
+            y,
+            name: "perf-skewed".into(),
+        };
+        let parts = [
+            ("balance=rows", Partition::contiguous(n, machines)),
+            (
+                "balance=nnz",
+                Partition::contiguous_nnz(&data.x.nnz_prefix(), machines),
+            ),
+        ];
+        let mut medians = Vec::new();
+        for (label, part) in &parts {
+            let mut dadm = build_dadm(
+                &data,
+                part,
+                SmoothHinge::default(),
+                ElasticNet::new(0.1),
+                Zero,
+                1e-4,
+                ProxSdca,
+                DadmOptions {
+                    sp: 0.5,
+                    cluster: Cluster::Threads,
+                    cost: CostModel::free(),
+                    sparse_comm: true,
+                    ..Default::default()
+                },
+            );
+            dadm.resync();
+            let t = time_it(2, 8, || {
+                dadm.round();
+            });
+            medians.push((*label, t.median));
+        }
+        let rows_median = medians[0].1;
+        for (label, median) in &medians {
+            table.row(&[
+                "dadm_round_skewed_balance".into(),
+                format!("m={machines} skewed {label}"),
+                fmt_secs(*median),
+                if *label == "balance=nnz" {
+                    format!(
+                        "{:.2}x vs rows ({:.0}% cut)",
+                        rows_median / median,
+                        100.0 * (1.0 - median / rows_median)
+                    )
+                } else {
+                    "baseline".into()
+                },
+            ]);
+        }
+    }
+
+    // --- Work-stealing pool under skewed job durations (§16) ---
+    // 16 jobs, one 8x heavier than the rest, on the shared pool: with
+    // stealing, idle threads drain the uniform tail while one thread
+    // owns the heavy job, so wall time approaches
+    // max(heavy, total/threads) instead of serializing behind a fixed
+    // job-to-thread assignment.
+    {
+        use dadm::comm::pool::WorkerPool;
+        let jobs = 16usize;
+        let heavy_reps = 400_000u64;
+        let light_reps = heavy_reps / 8;
+        let spin = |reps: u64| {
+            let mut acc = 0.0f64;
+            for i in 0..reps {
+                acc += (i as f64).sqrt();
+            }
+            std::hint::black_box(acc)
+        };
+        let pool = WorkerPool::global();
+        let mut states: Vec<u64> = (0..jobs)
+            .map(|k| if k == 0 { heavy_reps } else { light_reps })
+            .collect();
+        let t = time_it(2, 10, || {
+            let run = pool.run(&mut states, |_, reps| spin(*reps));
+            std::hint::black_box(run.results.len());
+        });
+        let total_reps = heavy_reps + light_reps * (jobs as u64 - 1);
+        table.row(&[
+            "pool_work_stealing".into(),
+            format!("jobs={jobs} skew=8x"),
+            fmt_secs(t.median),
+            format!(
+                "{:.0}M reps/s on {} threads",
+                total_reps as f64 / t.median / 1e6,
+                pool.workers()
+            ),
+        ]);
+    }
+
     // --- PJRT execute latency (requires artifacts) ---
     {
         use dadm::runtime::XlaLocalStep;

@@ -12,7 +12,7 @@ use crate::comm::wire::{WireLoss, WireSolver};
 use crate::comm::{Cluster, CostModel};
 use crate::config::{ClusterKind, ExperimentConfig, Method};
 use crate::coordinator::{AccDadmOptions, Checkpoint, DadmOptions, NuChoice, Problem, SolveReport};
-use crate::data::{Dataset, Partition};
+use crate::data::{Balance, Dataset, Partition};
 use crate::loss::{LossKind, SmoothHinge};
 use crate::reg::ElasticNet;
 use crate::runtime::engine::{Driver, GapCadence, RoundAlgorithm};
@@ -35,6 +35,9 @@ pub struct RunOutcome {
     pub modeled_secs: f64,
     /// CSV trace body (round records) for dual methods.
     pub trace_csv: Option<String>,
+    /// Whole-solve straggler roll-up (DESIGN.md §16.3); zero rounds
+    /// measured for algorithms without per-machine step timing.
+    pub stragglers: crate::metrics::StragglerSummary,
 }
 
 /// The wire loss spec matching [`run_experiment`]'s loss dispatch
@@ -98,10 +101,16 @@ fn build_cluster(cfg: &ExperimentConfig, data: &Dataset, part: &Partition) -> Re
                     loss,
                     solver,
                     local_threads,
+                    cfg.balance,
                 )
             } else {
                 match cfg.synthetic_spec() {
-                    Some(spec) => synthetic_specs(
+                    // Generator seeds only travel under row balance: the
+                    // worker regenerates the seeded balanced partition,
+                    // which has no nnz form. Under `--balance nnz` the
+                    // coordinator's explicit nnz-cut shards ship instead
+                    // (DESIGN.md §16).
+                    Some(spec) if cfg.balance == Balance::Rows => synthetic_specs(
                         &spec,
                         cfg.machines,
                         cfg.seed,
@@ -111,7 +120,16 @@ fn build_cluster(cfg: &ExperimentConfig, data: &Dataset, part: &Partition) -> Re
                         solver,
                         local_threads,
                     ),
-                    None => shard_specs(data, part, cfg.seed, cfg.sp, loss, solver, local_threads),
+                    _ => shard_specs(
+                        data,
+                        part,
+                        cfg.seed,
+                        cfg.sp,
+                        loss,
+                        solver,
+                        local_threads,
+                        cfg.balance,
+                    ),
                 }
             };
             cluster.assign(specs)?;
@@ -123,7 +141,7 @@ fn build_cluster(cfg: &ExperimentConfig, data: &Dataset, part: &Partition) -> Re
 /// Run one experiment according to `cfg`.
 pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunOutcome> {
     let data = cfg.load_dataset()?;
-    let part = cfg.build_partition(data.n());
+    let part = cfg.build_partition(&data);
     let cost = CostModel {
         alpha: cfg.comm_alpha,
         beta: cfg.comm_beta,
@@ -140,6 +158,7 @@ pub fn run_experiment(cfg: &ExperimentConfig) -> Result<RunOutcome> {
         conj_resum_every: cfg.conj_resum_every,
         compress: cfg.compress,
         overlap: cfg.overlap,
+        balance: cfg.balance,
     };
 
     // Loss selection happens exactly once, in `wire_loss_for` (the §8.2
@@ -250,6 +269,7 @@ fn solve_boxed(
                 .map(|r| r.modeled_secs())
                 .unwrap_or(0.0),
             trace_csv: None,
+            stragglers: report.stragglers,
         },
         m => outcome_from_report(m.name(), report),
     }
@@ -273,6 +293,7 @@ fn outcome_from_report(method: &'static str, report: SolveReport) -> RunOutcome 
         passes: report.passes,
         modeled_secs: modeled,
         trace_csv: Some(String::from_utf8(csv).expect("csv is utf8")),
+        stragglers: report.stragglers,
     }
 }
 
@@ -361,7 +382,8 @@ pub fn main_with_args(args: &[String]) -> Result<()> {
                    max-passes gap-every conj-resum-every cluster tcp-listen\n\
                    local-threads seed nu comm-alpha comm-beta sparse-comm\n\
                    compress overlap checkpoint checkpoint-every resume\n\
-                   worker-timeout heartbeat-every max-rejoins cache partition\n\n\
+                   worker-timeout heartbeat-every max-rejoins cache partition\n\
+                   balance\n\n\
              --cache PATH (default unset)\n  \
              Train out-of-core from a compiled binary CSR cache (the\n  \
              output of `dadm compile-cache`; DESIGN.md §15) instead of\n  \
@@ -380,6 +402,18 @@ pub fn main_with_args(args: &[String]) -> Result<()> {
              data); `contiguous` assigns contiguous balanced row ranges\n  \
              (the default — and the only legal choice — with --cache,\n  \
              where each shard is a zero-copy range of the mapping).\n\n\
+             --balance rows|nnz (default rows)\n  \
+             Chunking formula for contiguous shard cuts. `rows`\n  \
+             equalizes row counts (the historical parity pin); `nnz`\n  \
+             chooses the contiguous cut points that minimize the\n  \
+             maximum shard nnz — on skewed sparse data the per-round\n  \
+             barrier waits on the densest shard, so nnz balance is what\n  \
+             equalizes local-step time. Implies --partition contiguous\n  \
+             (a seeded shuffle has no nnz form); over --cluster tcp the\n  \
+             explicit nnz-cut row ranges ship in the assignment, so all\n  \
+             backends produce bit-identical traces. The per-round\n  \
+             spread lands in the trace's step_min/mean/max_secs and\n  \
+             imbalance columns.\n\n\
              --cluster serial|threads|tcp (default serial)\n  \
              Execution backend for the per-machine local steps. `serial`\n  \
              and `threads` simulate the cluster in-process; `tcp` is a\n  \
@@ -472,6 +506,13 @@ pub fn main_with_args(args: &[String]) -> Result<()> {
         "method={} final_metric={:.6e} comms={} passes={:.1} modeled_secs={:.4}",
         outcome.method, outcome.final_metric, outcome.comms, outcome.passes, outcome.modeled_secs
     );
+    if outcome.stragglers.rounds_measured > 0 {
+        let s = &outcome.stragglers;
+        println!(
+            "stragglers: imbalance mean={:.2} max={:.2} idle_secs={:.4} over {} rounds",
+            s.mean_imbalance, s.max_imbalance, s.idle_secs, s.rounds_measured
+        );
+    }
     if let Some(csv) = &outcome.trace_csv {
         let path = format!("target/{}_trace.csv", outcome.method);
         std::fs::create_dir_all("target").ok();
@@ -619,13 +660,14 @@ mod tests {
         std::fs::remove_dir_all(&dir).ok();
     }
 
-    /// The trace CSV minus its last column (`wall_secs`, the one
-    /// wall-clock-derived field — everything else is modeled math and
-    /// must reproduce bit for bit; `scripts/cache_smoke.sh` applies the
-    /// same projection with `cut`).
+    /// The trace CSV's first eight columns (`round..comm_secs`) — the
+    /// parity-pinned modeled math, which must reproduce bit for bit.
+    /// Everything after is wall-clock-derived (`wall_secs` plus the
+    /// straggler telemetry `step_*`/`imbalance` columns, DESIGN.md §16);
+    /// `scripts/cache_smoke.sh` applies the same projection with `cut`.
     fn math_columns(csv: &str) -> String {
         csv.lines()
-            .map(|l| l.rsplit_once(',').map_or(l, |(math, _wall)| math))
+            .map(|l| l.split(',').take(8).collect::<Vec<_>>().join(","))
             .collect::<Vec<_>>()
             .join("\n")
     }

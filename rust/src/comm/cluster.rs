@@ -20,8 +20,9 @@ pub enum Cluster {
     /// Deterministic serial execution; parallel wall-clock is *modeled*
     /// as the max over per-worker compute times.
     Serial,
-    /// Real OS-thread parallelism on the persistent [`WorkerPool`] (one
-    /// long-lived worker per machine, reused across rounds).
+    /// Real OS-thread parallelism on the persistent work-stealing
+    /// [`WorkerPool`] (long-lived threads reused across rounds; any free
+    /// thread may pick up any machine or sub-machine leg).
     Threads,
     /// Real multi-process coordinator/worker TCP transport
     /// (DESIGN.md §9): one OS process per machine, length-prefixed
@@ -87,10 +88,10 @@ impl Cluster {
     /// Whether a machine's *intra*-machine legs (sub-shard solvers, eval
     /// passes — DESIGN.md §10) should run on real threads. `Serial`
     /// executes sub-shards serially (deterministic, parallelism modeled
-    /// as `max`); `Threads` runs them on the issuing pool worker's
-    /// sub-queues ([`WorkerPool`] nested dispatch). The TCP variant never
-    /// reaches this — remote workers decide locally in their own
-    /// processes.
+    /// as `max`); `Threads` publishes them to the shared work-stealing
+    /// injector ([`WorkerPool`] nested dispatch), where any idle pool
+    /// thread may pick them up. The TCP variant never reaches this —
+    /// remote workers decide locally in their own processes.
     pub fn parallel_local(&self) -> bool {
         matches!(self, Cluster::Threads)
     }
@@ -133,12 +134,12 @@ impl Cluster {
 /// Run one machine's intra-machine parallel section: `f(k, &mut
 /// subs[k])` for every sub-shard `k`. With `parallel = false` (the
 /// `Serial` backend) the legs run serially on the calling thread; with
-/// `parallel = true` they go to the worker pool — from inside a pool job
-/// that is the issuing worker's sub-queue tier, from a plain thread (a
-/// remote TCP worker process) it is a top-level pool section. Single-sub
-/// groups always run inline. `parallel_secs` is the modeled machine
-/// time: the max over sub-shard legs, i.e. the wall time of a `T`-thread
-/// machine.
+/// `parallel = true` they go to the worker pool's shared injector —
+/// nested at depth 2 from inside a pool job, a top-level section from a
+/// plain thread (a remote TCP worker process) — where idle threads steal
+/// them. Single-sub groups always run inline. `parallel_secs` is the
+/// modeled machine time: the max over sub-shard legs, i.e. the wall time
+/// of a `T`-thread machine.
 pub fn run_subgroup<S, T, F>(parallel: bool, subs: &mut [S], f: F) -> ParallelRun<T>
 where
     S: Send,

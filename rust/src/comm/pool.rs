@@ -1,155 +1,188 @@
-//! Persistent worker pool: long-lived OS threads driven over channels,
-//! with a second tier of per-worker *sub-worker* threads for nested
-//! parallel sections (hierarchical intra-machine parallelism, DESIGN.md
-//! §4/§10).
+//! Persistent work-stealing worker pool: long-lived OS threads that pull
+//! type-erased jobs from a process-global injector queue, so a thread
+//! that finishes its work early picks up whatever sub-machine is still
+//! pending instead of idling behind the section's straggler (DESIGN.md
+//! §16).
 //!
-//! The previous `Cluster::Threads` backend spawned one fresh OS thread
-//! per machine per round through `std::thread::scope`, which puts a
-//! thread create/join pair on every simulated communication round — at
-//! mini-batch sampling fractions (`sp ≪ 1`, thousands of rounds) the
-//! spawn overhead dwarfs the local step itself. This pool spawns each
-//! worker thread once, parks it on an `mpsc` job queue, and reuses it for
-//! every subsequent parallel section (see DESIGN.md §4). Worker `l` of a
-//! parallel section always runs on pool thread `l`, so a solve's
-//! per-machine state stays on the same thread round after round.
+//! The previous pool pinned job `l` of every parallel section to pool
+//! thread `l` and gave each worker a private set of lazily-spawned
+//! sub-queues for nested sections. That fixed assignment is exactly
+//! wrong on skewed sparse data: when one machine's shard carries most of
+//! the nonzeros, its sub-solvers queue behind that one worker's private
+//! threads while every other worker idles at the round barrier. Here
+//! every job — top-level machine legs and nested sub-machine legs alike
+//! — goes through one shared injector, and any free pool thread may
+//! execute it.
 //!
-//! **Nested sections.** A [`WorkerPool::run`] issued from *inside* a pool
-//! job used to degrade to inline serial execution (dispatching to the
-//! global queues would deadlock the issuing worker behind itself). It now
-//! dispatches to the issuing worker's own lazily-spawned sub-queue
-//! threads: a machine's `T` sub-shard solvers run genuinely concurrently,
-//! with sub-job `0` executed inline on the issuing worker so a `T = 1`
-//! nested section costs nothing and a `T`-wide one occupies exactly `T`
-//! threads. Sub-workers belong to one pool worker and that worker's jobs
-//! are serialized FIFO, so concurrent solves time-sharing the pool can
-//! never contend for the same sub-queues. Nesting is bounded at two
-//! levels — machine × sub-shard, DADM's hierarchy — every sub-shard leg
-//! (queued sub-worker jobs *and* the inline job 0, which runs at
-//! sub-worker tier for its duration) executes further parallel sections
-//! inline serially.
+//! **Determinism.** Scheduling freedom cannot perturb the math: each
+//! section's results land in index-addressed slots (`slots[l]`), every
+//! reduction downstream consumes them in fixed machine order
+//! (`tree_allreduce_delta`/`tree_sum`, DESIGN.md §3), and each job's
+//! closure reads and writes only its own `states[l]`. Which OS thread
+//! runs a job, and in what order jobs complete, is therefore
+//! unobservable in the outputs — property-pinned by
+//! `stealing_results_bit_match_inline_serial`.
 //!
-//! The pool is process-global and grows lazily to the widest machine
-//! count requested; idle workers block on their queue and cost nothing.
-//! Concurrent parallel sections (e.g. two solves in one process)
-//! time-share the same workers — jobs queue FIFO per worker rather than
-//! spawning extra threads.
+//! **Scheduling.** [`WorkerPool::run`] wraps its jobs in a [`Section`]
+//! (one FIFO of pending jobs), pushes one *ticket* per job onto the
+//! global injector, and then participates: the calling thread drains its
+//! own section until the queue is empty, then blocks until stolen jobs
+//! finish. A worker pops a ticket, takes one job from that ticket's
+//! section (tickets whose section the issuer already drained are
+//! discarded), and runs it. Because every issuer drains its own queue,
+//! progress never depends on a pool thread being free — the pool can be
+//! arbitrarily busy and a section still completes on its caller, which
+//! is the deadlock-freedom argument for nested sections.
+//!
+//! **Nesting** stays bounded at two levels: machine × sub-machine is
+//! DADM's whole hierarchy, so sections issued at depth ≥ 2 run inline
+//! serially rather than growing threads without bound. The pool grows
+//! lazily to the number of live jobs minus the participating caller and
+//! never shrinks; idle workers block on the injector's condvar and cost
+//! nothing.
 
 use super::cluster::ParallelRun;
-use std::cell::{Cell, RefCell};
+use std::cell::Cell;
+use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::mpsc::{channel, Sender};
-use std::sync::{Mutex, OnceLock};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock, PoisonError};
 use std::time::Instant;
 
-/// How deep in the pool hierarchy the current thread sits: 0 = not a
-/// pool thread, 1 = worker, 2 = sub-worker.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum Tier {
-    Outside,
-    Worker,
-    SubWorker,
-}
-
-thread_local! {
-    /// Set for the lifetime of every pool (sub-)worker thread; selects
-    /// between top-level dispatch, sub-queue dispatch, and inline
-    /// execution in [`WorkerPool::run`].
-    static TIER: Cell<Tier> = const { Cell::new(Tier::Outside) };
-
-    /// The issuing worker's private sub-worker queues (lazily spawned;
-    /// only ever populated on `Tier::Worker` threads).
-    static SUB_SENDERS: RefCell<Vec<Sender<Job>>> = const { RefCell::new(Vec::new()) };
-}
-
-/// A type-erased unit of work shipped to a pool thread.
+/// A type-erased unit of work run by a pool thread or a participating
+/// caller.
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
-/// Scoped tier override restoring the previous tier on drop. The inline
-/// job-0 leg of a nested section runs at `SubWorker` tier so that *its*
-/// nested sections degrade inline too — the two-level bound (machine ×
-/// sub-shard) holds for every leg, not just the queued ones.
-struct TierGuard(Tier);
+thread_local! {
+    /// Nesting depth of the parallel section the current thread is
+    /// executing a job for: 0 = not inside any section, 1 = machine
+    /// leg, 2 = sub-machine leg. Sections issued at depth ≥ 2 run
+    /// inline.
+    static DEPTH: Cell<u8> = const { Cell::new(0) };
+}
 
-impl TierGuard {
-    fn enter(tier: Tier) -> TierGuard {
-        TierGuard(TIER.with(|t| t.replace(tier)))
+/// Scoped depth override restoring the previous depth on drop; wrapped
+/// around every job execution — worker-side and caller-side alike — so
+/// a job's own nested sections see the right depth no matter which
+/// thread stole it.
+struct DepthGuard(u8);
+
+impl DepthGuard {
+    fn enter(depth: u8) -> DepthGuard {
+        DepthGuard(DEPTH.with(|d| d.replace(depth)))
     }
 }
 
-impl Drop for TierGuard {
+impl Drop for DepthGuard {
     fn drop(&mut self) {
-        TIER.with(|t| t.set(self.0));
+        DEPTH.with(|d| d.set(self.0));
     }
 }
 
-/// Process-global pool of persistent worker threads.
+/// One parallel section's pending jobs. Workers reach it through ticket
+/// clones on the injector; the issuing thread drains it directly.
+struct Section {
+    jobs: Mutex<VecDeque<Job>>,
+    /// Depth the section's jobs execute at (issuer's depth + 1).
+    depth: u8,
+}
+
+/// Poison recovery for every pool lock: jobs are wrapped in
+/// `catch_unwind`, so a poisoned guard only ever protects consistent
+/// state (a grow-only counter and pop-only queues), and teardown paths
+/// still need the data.
+fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Process-global work-stealing pool.
 pub struct WorkerPool {
-    /// One job queue per worker thread, in spawn order.
-    senders: Mutex<Vec<Sender<Job>>>,
+    /// One ticket per pending job. A ticket is a handle to the section
+    /// that owns the job, not the job itself, so the issuer can drain
+    /// its own section without racing ticket delivery.
+    injector: Mutex<VecDeque<Arc<Section>>>,
+    /// Signalled whenever tickets are pushed.
+    available: Condvar,
+    /// Worker threads spawned so far (grow-only).
+    spawned: Mutex<usize>,
+    /// Jobs pushed but not yet completed, across all sections; sizes
+    /// the pool.
+    live_jobs: AtomicUsize,
 }
 
 static POOL: OnceLock<WorkerPool> = OnceLock::new();
 
-/// Spawn one parked queue-driven thread at the given tier.
-fn spawn_queue_thread(name: String, tier: Tier) -> Sender<Job> {
-    let (tx, rx) = channel::<Job>();
-    #[allow(clippy::expect_used)]
-    std::thread::Builder::new()
-        .name(name)
-        .spawn(move || {
-            TIER.with(|t| t.set(tier));
-            while let Ok(job) = rx.recv() {
-                // A panicking job must not take down the pool thread; the
-                // panic is re-raised on the submitting side when the
-                // job's result slot comes back empty.
-                let _ = catch_unwind(AssertUnwindSafe(job));
+/// Body of every pool thread: pop a ticket, take one job from its
+/// section (if the issuer hasn't drained it already), run it, repeat.
+fn worker_loop() {
+    let pool = WorkerPool::global();
+    loop {
+        let ticket = {
+            let mut tickets = relock(&pool.injector);
+            loop {
+                if let Some(t) = tickets.pop_front() {
+                    break t;
+                }
+                tickets = pool
+                    .available
+                    .wait(tickets)
+                    .unwrap_or_else(PoisonError::into_inner);
             }
-        })
-        // dadm-lint: allow(total-decoding) — OS thread-spawn failure at pool growth is unrecoverable; abort loudly
-        .expect("failed to spawn pool worker");
-    tx
+        };
+        // Bind the popped job OUTSIDE the `if let` so the section lock
+        // drops before the job runs — holding it would serialize the
+        // issuer's own drain against this (possibly long) job.
+        let job = relock(&ticket.jobs).pop_front();
+        if let Some(job) = job {
+            let _depth = DepthGuard::enter(ticket.depth);
+            // A panicking job must not take down the pool thread; the
+            // panic is re-raised on the submitting side through the
+            // job's result slot.
+            let _ = catch_unwind(AssertUnwindSafe(job));
+            pool.live_jobs.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
 }
 
 impl WorkerPool {
     /// The process-global pool (created empty on first use).
     pub fn global() -> &'static WorkerPool {
         POOL.get_or_init(|| WorkerPool {
-            senders: Mutex::new(Vec::new()),
+            injector: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            spawned: Mutex::new(0),
+            live_jobs: AtomicUsize::new(0),
         })
     }
 
-    /// Number of worker threads currently alive (top tier only).
-    ///
-    /// A poisoned registry lock is recovered rather than propagated: the
-    /// registry (a grow-only `Vec` of queue senders) is never left
-    /// half-mutated by a panicking round, and `Drop`-driven teardown
-    /// still needs to count workers.
+    /// Number of worker threads currently alive.
     pub fn workers(&self) -> usize {
-        self.senders
-            .lock()
-            .unwrap_or_else(std::sync::PoisonError::into_inner)
-            .len()
+        *relock(&self.spawned)
     }
 
-    /// Grow the pool to at least `m` workers and hand back their queues.
-    /// Poison recovery as in [`WorkerPool::workers`].
-    fn ensure_workers(&self, m: usize) -> Vec<Sender<Job>> {
-        let mut senders = self
-            .senders
-            .lock()
-            .unwrap_or_else(std::sync::PoisonError::into_inner);
-        while senders.len() < m {
-            let id = senders.len();
-            senders.push(spawn_queue_thread(format!("dadm-worker-{id}"), Tier::Worker));
+    /// Grow the pool to at least `target` worker threads.
+    fn ensure_workers(&self, target: usize) {
+        let mut spawned = relock(&self.spawned);
+        while *spawned < target {
+            let id = *spawned;
+            #[allow(clippy::expect_used)]
+            std::thread::Builder::new()
+                .name(format!("dadm-worker-{id}"))
+                .spawn(worker_loop)
+                // dadm-lint: allow(total-decoding) — OS thread-spawn failure at pool growth is unrecoverable; abort loudly
+                .expect("failed to spawn pool worker");
+            *spawned += 1;
         }
-        senders[..m].to_vec()
     }
 
     /// Run `f(l, &mut states[l])` for every `l` concurrently, blocking
     /// until all have finished. Semantics and timing accounting match
-    /// [`super::Cluster::run`]. Issued from a pool worker, the section
-    /// runs on that worker's sub-queues (job 0 inline); issued from a
-    /// sub-worker, it runs inline serially (two-level nesting bound).
+    /// [`super::Cluster::run`]. Jobs are scheduled by work stealing —
+    /// any pool thread (or the caller) may run any leg — but results
+    /// are slot-addressed by `l`, so outputs are bit-identical to the
+    /// serial loop regardless of execution order. Sections issued at
+    /// depth ≥ 2 (below machine × sub-machine) run inline serially.
     pub fn run<S, T, F>(&self, states: &mut [S], f: F) -> ParallelRun<T>
     where
         S: Send,
@@ -164,32 +197,115 @@ impl WorkerPool {
                 total_secs: 0.0,
             };
         }
-        match TIER.with(|t| t.get()) {
-            Tier::Outside => {
-                let senders = self.ensure_workers(m);
-                dispatch(&senders, 0, states, &f)
-            }
-            Tier::Worker => {
-                if m == 1 {
-                    return run_inline(states, &f);
-                }
-                // Sub-queue dispatch: jobs 1.. go to this worker's private
-                // sub-workers, job 0 runs inline on the worker itself —
-                // a T-wide section occupies exactly T threads.
-                let senders = SUB_SENDERS.with(|subs| {
-                    let mut subs = subs.borrow_mut();
-                    while subs.len() < m - 1 {
-                        let id = subs.len();
-                        subs.push(spawn_queue_thread(format!("dadm-sub-{id}"), Tier::SubWorker));
-                    }
-                    subs[..m - 1].to_vec()
+        let depth = DEPTH.with(|d| d.get());
+        if depth >= 2 {
+            return run_inline(states, &f);
+        }
+        if m == 1 {
+            // A 1-wide section needs no dispatch; run it on the caller
+            // at the depth its job would have had, so the job's own
+            // nested sections still parallelize (and still bound at two
+            // levels).
+            let _depth = DepthGuard::enter(depth + 1);
+            return run_inline(states, &f);
+        }
+        self.dispatch(depth + 1, states, &f)
+    }
+
+    /// Work-stealing dispatch: queue all jobs in a fresh [`Section`],
+    /// publish one ticket per job, then help drain our own section and
+    /// collect slot-ordered results.
+    fn dispatch<S, T, F>(&self, depth: u8, states: &mut [S], f: &F) -> ParallelRun<T>
+    where
+        S: Send,
+        T: Send,
+        F: Fn(usize, &mut S) -> T + Sync,
+    {
+        let m = states.len();
+        // Each job reports either its (result, elapsed) or the panic
+        // payload it caught, so a panicking local step re-raises with
+        // the original message on the submitting side.
+        let (tx, rx) = channel::<(usize, std::thread::Result<(T, f64)>)>();
+        let section = Arc::new(Section {
+            jobs: Mutex::new(VecDeque::with_capacity(m)),
+            depth,
+        });
+        {
+            let mut jobs = relock(&section.jobs);
+            for (l, s) in states.iter_mut().enumerate() {
+                let tx = tx.clone();
+                let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    let t0 = Instant::now();
+                    let outcome = catch_unwind(AssertUnwindSafe(|| f(l, s)))
+                        .map(|r| (r, t0.elapsed().as_secs_f64()));
+                    let _ = tx.send((l, outcome));
                 });
-                dispatch(&senders, 1, states, &f)
+                // SAFETY: the job borrows `states` and `f`, which
+                // outlive this call frame, and this function does not
+                // return until every job has run: the collect loop
+                // below blocks until all clones of `tx` are gone, each
+                // clone lives inside exactly one job, and a job leaves
+                // the section queue solely to be executed — by a worker
+                // or by the caller's drain below (tickets orphaned by
+                // the drain carry no job). Erasing the borrow lifetime
+                // to 'static is therefore sound — the referents are
+                // live for the whole time any job can observe them.
+                let job: Job =
+                    unsafe { std::mem::transmute::<Box<dyn FnOnce() + Send + '_>, Job>(job) };
+                jobs.push_back(job);
             }
-            // A section issued from a sub-worker: the hierarchy is two
-            // levels deep by design; run inline with Serial timing
-            // semantics rather than growing threads without bound.
-            Tier::SubWorker => run_inline(states, &f),
+        }
+        drop(tx);
+
+        self.live_jobs.fetch_add(m, Ordering::Relaxed);
+        // The caller participates below, so full overlap needs one
+        // thread per live job minus this one.
+        self.ensure_workers(self.live_jobs.load(Ordering::Relaxed).saturating_sub(1));
+        {
+            let mut tickets = relock(&self.injector);
+            for _ in 0..m {
+                tickets.push_back(Arc::clone(&section));
+            }
+        }
+        self.available.notify_all();
+
+        // Help with our own section: pop jobs until workers have stolen
+        // the rest. Every issuer drains its own queue, so a section
+        // completes even when every pool thread is busy — the
+        // deadlock-freedom argument for nested sections.
+        loop {
+            let job = relock(&section.jobs).pop_front();
+            let Some(job) = job else { break };
+            let _depth = DepthGuard::enter(depth);
+            job();
+            self.live_jobs.fetch_sub(1, Ordering::Relaxed);
+        }
+
+        let mut slots: Vec<Option<std::thread::Result<(T, f64)>>> = (0..m).map(|_| None).collect();
+        while let Ok((l, outcome)) = rx.recv() {
+            slots[l] = Some(outcome);
+        }
+        // All senders are gone ⇒ every job has finished; only now is it
+        // safe to unwind past the borrowed state.
+        let mut results = Vec::with_capacity(m);
+        let mut parallel_secs = 0.0f64;
+        let mut total_secs = 0.0f64;
+        for slot in slots {
+            match slot {
+                Some(Ok((r, t))) => {
+                    results.push(r);
+                    parallel_secs = parallel_secs.max(t);
+                    total_secs += t;
+                }
+                Some(Err(payload)) => std::panic::resume_unwind(payload),
+                // dadm-lint: allow(total-decoding) — unreachable: every queued job runs exactly once and fills its slot
+                None => panic!("pool job lost without a result"),
+            }
+        }
+        ParallelRun {
+            results,
+            parallel_secs,
+            total_secs,
         }
     }
 }
@@ -219,94 +335,6 @@ where
     }
 }
 
-/// Ship jobs `inline_from..` to `senders` (one each, in order), run jobs
-/// `0..inline_from` on the calling thread, and drain all results.
-/// `inline_from` is 0 for top-level sections (all queued) and 1 for
-/// nested ones (job 0 on the issuing worker).
-fn dispatch<S, T, F>(
-    senders: &[Sender<Job>],
-    inline_from: usize,
-    states: &mut [S],
-    f: &F,
-) -> ParallelRun<T>
-where
-    S: Send,
-    T: Send,
-    F: Fn(usize, &mut S) -> T + Sync,
-{
-    let m = states.len();
-    debug_assert_eq!(senders.len(), m - inline_from);
-    // Each job reports either its (result, elapsed) or the panic payload
-    // it caught, so a panicking local step re-raises with the original
-    // message on the submitting side.
-    let (tx, rx) = channel::<(usize, std::thread::Result<(T, f64)>)>();
-    let (inline_states, queued_states) = states.split_at_mut(inline_from);
-    for (k, (s, sender)) in queued_states.iter_mut().zip(senders).enumerate() {
-        let l = inline_from + k;
-        let tx = tx.clone();
-        let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
-            let t0 = Instant::now();
-            let outcome = catch_unwind(AssertUnwindSafe(|| f(l, s)))
-                .map(|r| (r, t0.elapsed().as_secs_f64()));
-            let _ = tx.send((l, outcome));
-        });
-        // SAFETY: the job borrows `states` and `f`, which outlive this
-        // call frame, and this function does not return until every job
-        // has run to completion (or been dropped unrun): the drain loop
-        // below blocks until all clones of `tx` are gone, and each clone
-        // lives inside exactly one job. Erasing the borrow lifetime to
-        // 'static is therefore sound — the referents are live for the
-        // whole time any job can observe them.
-        let job: Job = unsafe { std::mem::transmute(job) };
-        // A send can only fail if the worker thread is gone (process
-        // teardown); the undelivered job — and its `tx` clone — are
-        // dropped with the error, so the drain below still terminates
-        // and the empty slot reports the dead worker.
-        let _ = sender.send(job);
-    }
-    // Inline legs run on the calling thread while the queued jobs are
-    // already in flight — at sub-worker tier when this is a nested
-    // section, so their own nested sections run inline like every other
-    // sub-shard leg's would.
-    if !inline_states.is_empty() {
-        let _tier = (inline_from > 0).then(|| TierGuard::enter(Tier::SubWorker));
-        for (l, s) in inline_states.iter_mut().enumerate() {
-            let t0 = Instant::now();
-            let outcome = catch_unwind(AssertUnwindSafe(|| f(l, s)))
-                .map(|r| (r, t0.elapsed().as_secs_f64()));
-            let _ = tx.send((l, outcome));
-        }
-    }
-    drop(tx);
-
-    let mut slots: Vec<Option<std::thread::Result<(T, f64)>>> = (0..m).map(|_| None).collect();
-    while let Ok((l, outcome)) = rx.recv() {
-        slots[l] = Some(outcome);
-    }
-    // All senders are gone ⇒ every job has finished or been dropped;
-    // only now is it safe to unwind past the borrowed state.
-    let mut results = Vec::with_capacity(m);
-    let mut parallel_secs = 0.0f64;
-    let mut total_secs = 0.0f64;
-    for slot in slots {
-        match slot {
-            Some(Ok((r, t))) => {
-                results.push(r);
-                parallel_secs = parallel_secs.max(t);
-                total_secs += t;
-            }
-            Some(Err(payload)) => std::panic::resume_unwind(payload),
-            // dadm-lint: allow(total-decoding) — a dead worker dropped a job unrun; the synchronous barrier cannot fill its slot
-            None => panic!("pool worker thread died"),
-        }
-    }
-    ParallelRun {
-        results,
-        parallel_secs,
-        total_secs,
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -324,18 +352,25 @@ mod tests {
     }
 
     #[test]
-    fn threads_persist_across_runs() {
+    fn repeated_runs_reuse_threads() {
+        // A hundred narrow sections must not spawn a hundred threads —
+        // the pool is sized by peak live jobs, not run count. Other
+        // tests share the global pool concurrently, so bound generously
+        // instead of asserting exact stability.
         let pool = WorkerPool::global();
-        let collect_ids = |pool: &WorkerPool| -> Vec<std::thread::ThreadId> {
-            let mut s = vec![(); 3];
-            pool.run(&mut s, |_, _| std::thread::current().id()).results
-        };
-        let a = collect_ids(pool);
-        let b = collect_ids(pool);
-        // Same workers serve consecutive parallel sections: no per-round
-        // spawning.
-        assert_eq!(a, b);
-        assert!(pool.workers() >= 3);
+        for _ in 0..100 {
+            let mut s = vec![0u64; 3];
+            let r = pool.run(&mut s, |l, x| {
+                *x = l as u64 + 1;
+                *x
+            });
+            assert_eq!(r.results, vec![1, 2, 3]);
+        }
+        assert!(
+            pool.workers() < 64,
+            "pool grew per-run: {} workers",
+            pool.workers()
+        );
     }
 
     #[test]
@@ -344,7 +379,9 @@ mod tests {
         let mut s = vec![0u8; 9];
         let r = pool.run(&mut s, |l, _| l);
         assert_eq!(r.results, (0..9).collect::<Vec<_>>());
-        assert!(pool.workers() >= 9);
+        // The caller participates, so a 9-wide section needs ≥ 8
+        // workers.
+        assert!(pool.workers() >= 8);
     }
 
     #[test]
@@ -357,11 +394,40 @@ mod tests {
     }
 
     #[test]
+    fn stealing_results_bit_match_inline_serial() {
+        // Work stealing may run legs on any thread in any order; the
+        // results must nonetheless be bit-identical to the serial loop,
+        // because each leg's computation and its result slot are fixed
+        // by `l`. Leg costs are deliberately skewed so completions
+        // interleave differently from issue order.
+        let leg = |l: usize, acc: &mut f64| -> f64 {
+            let mut s = 0.0f64;
+            for i in 1..(400 * (l + 1)) {
+                s += ((l as f64 + 1.0) / i as f64).sin();
+            }
+            *acc = s;
+            s * 2.0
+        };
+        let pool = WorkerPool::global();
+        for _ in 0..4 {
+            let mut a = vec![0.0f64; 6];
+            let mut b = vec![0.0f64; 6];
+            let ra = pool.run(&mut a, |l, s| leg(l, s));
+            let rb = run_inline(&mut b, &|l, s: &mut f64| leg(l, s));
+            assert_eq!(
+                ra.results.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                rb.results.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            );
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
     fn nested_run_is_parallel_and_correct() {
-        // A run issued from inside a pool job dispatches to the issuing
-        // worker's sub-queues (no deadlock on its own queue) and must
-        // preserve the result order and state mutations of the old
-        // inline fallback.
+        // A run issued from inside a pool job publishes to the shared
+        // injector (no deadlock: the issuer drains its own section) and
+        // must preserve the result order and state mutations of a
+        // serial loop.
         let pool = WorkerPool::global();
         let mut outer = vec![(); 3];
         let r = pool.run(&mut outer, |l, _| {
@@ -398,6 +464,31 @@ mod tests {
     }
 
     #[test]
+    fn idle_threads_steal_the_stragglers_sub_jobs() {
+        // One outer leg finishes instantly; the other fans out four
+        // 50 ms sub-sleeps. Under the old fixed assignment a machine's
+        // sub-jobs were confined to its private sub-queues; with a
+        // shared injector any idle pool thread helps, so the whole
+        // section completes in roughly one sleep.
+        let pool = WorkerPool::global();
+        let mut outer = vec![0usize; 2];
+        let t0 = Instant::now();
+        pool.run(&mut outer, |l, _| {
+            if l == 1 {
+                let mut inner = vec![(); 4];
+                pool.run(&mut inner, |_, _| {
+                    std::thread::sleep(std::time::Duration::from_millis(50));
+                });
+            }
+        });
+        let wall = t0.elapsed().as_secs_f64();
+        assert!(
+            wall < 0.75 * 0.20,
+            "sub-jobs were not stolen: wall {wall}s for four 50 ms sleeps"
+        );
+    }
+
+    #[test]
     fn doubly_nested_run_degrades_to_inline() {
         // Machine → sub-shard is the whole hierarchy; a third-level
         // section must run inline (bounded threads), not deadlock.
@@ -414,6 +505,32 @@ mod tests {
         });
         // Σ_k Σ_j (j + k + l) = Σ_k (2k + 2l + 1) = 4l + 4.
         assert_eq!(r.results, vec![4, 8]);
+    }
+
+    #[test]
+    fn stress_nested_sections_from_concurrent_issuers() {
+        // Several machine legs repeatedly issuing nested sections
+        // through the one shared injector: no deadlock, no cross-talk
+        // between sections, results always slot-correct.
+        let pool = WorkerPool::global();
+        for round in 0..10usize {
+            let mut outer = vec![0usize; 5];
+            let r = pool.run(&mut outer, |l, slot| {
+                let mut inner = vec![0usize; 4];
+                let ri = pool.run(&mut inner, |k, s| {
+                    *s = 10 * l + k + round;
+                    *s
+                });
+                assert_eq!(ri.results, inner);
+                *slot = ri.results.iter().sum();
+                *slot
+            });
+            let expect: Vec<usize> = (0..5)
+                .map(|l| (0..4).map(|k| 10 * l + k + round).sum())
+                .collect();
+            assert_eq!(r.results, expect);
+            assert_eq!(outer, expect);
+        }
     }
 
     #[test]
@@ -455,11 +572,14 @@ mod tests {
         let payload = panicked.expect_err("nested panic must propagate");
         let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
         assert_eq!(msg, "sub boom");
-        // Workers and sub-workers keep serving afterwards.
+        // Workers keep serving afterwards.
         let mut outer = vec![(); 2];
         let r = pool.run(&mut outer, |l, _| {
             let mut inner = vec![0usize; 2];
-            pool.run(&mut inner, |k, _| k + l).results.iter().sum::<usize>()
+            pool.run(&mut inner, |k, _| k + l)
+                .results
+                .iter()
+                .sum::<usize>()
         });
         assert_eq!(r.results, vec![1, 3]);
     }

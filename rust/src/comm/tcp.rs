@@ -60,8 +60,8 @@ use super::wire::{
     EvalOp, Frame, ProblemSpec, StepFlags, WireBroadcast, WireError, WireLoss, WireReg,
     WireSolver, FRAME_HEADER_BYTES, MAX_FRAME_LEN, WIRE_MAGIC, WIRE_VERSION,
 };
-use crate::data::partition::split_ranges;
-use crate::data::{Dataset, Partition};
+use crate::data::partition::{split_nnz, split_ranges};
+use crate::data::{Balance, Dataset, Partition};
 use crate::solver::{batch_size, machine_rngs, run_fused_step, WorkerState};
 use crate::utils::Rng;
 
@@ -751,8 +751,10 @@ impl TcpCluster {
 
     /// Collect the [`StepReply`]s of the oldest outstanding issued round,
     /// in machine order. Workers compute concurrently (real processes);
-    /// the second return is the slowest worker's reported compute seconds
-    /// — the `max_ℓ t_ℓ` the accounting charges as parallel time.
+    /// the second return is each worker's reported compute seconds, in
+    /// machine order — the accounting charges their max as parallel
+    /// time, and the straggler telemetry (DESIGN.md §16) records the
+    /// min/mean/max spread.
     ///
     /// On a round that resurrects a worker, the per-connection byte span
     /// also covers the rejoin handshake, so `delta_reply_bytes` may be
@@ -762,9 +764,9 @@ impl TcpCluster {
         &mut self,
         flags: StepFlags,
         codec: DeltaCodec,
-    ) -> CommResult<(Vec<StepReply>, f64)> {
+    ) -> CommResult<(Vec<StepReply>, Vec<f64>)> {
         let mut replies = Vec::with_capacity(self.conns.len());
-        let mut parallel_secs = 0.0f64;
+        let mut leg_secs = Vec::with_capacity(self.conns.len());
         let mut reply_bytes = 0u64;
         for l in 0..self.conns.len() {
             let before = self.conns[l].received;
@@ -791,7 +793,7 @@ impl TcpCluster {
                         ));
                     }
                     reply_bytes += self.conns[l].received - before;
-                    parallel_secs = parallel_secs.max(elapsed_secs);
+                    leg_secs.push(elapsed_secs);
                     replies.push(StepReply {
                         delta,
                         loss_sum,
@@ -804,7 +806,7 @@ impl TcpCluster {
         }
         self.delta_reply_bytes += reply_bytes;
         self.retire_inflight()?;
-        Ok((replies, parallel_secs))
+        Ok((replies, leg_secs))
     }
 
     /// One fused round leg, synchronously: issue, then collect.
@@ -814,7 +816,7 @@ impl TcpCluster {
         b: BroadcastRef<'_>,
         flags: StepFlags,
         codec: DeltaCodec,
-    ) -> CommResult<(Vec<StepReply>, f64)> {
+    ) -> CommResult<(Vec<StepReply>, Vec<f64>)> {
         self.local_step_issue(lambda, b, flags, codec)?;
         self.local_step_collect(flags, codec)
     }
@@ -1047,6 +1049,11 @@ impl std::fmt::Debug for TcpHandle {
 /// ([`crate::coordinator::resolve_local_threads`]); it must match the
 /// coordinator's `DadmOptions::local_threads` resolution or the
 /// machine-local merges will disagree with the cross-machine weights.
+///
+/// Always ships [`Balance::Rows`]: the worker regenerates the seeded
+/// [`Partition::balanced`] locally, which has no nnz-balanced analog —
+/// `--balance nnz` synthetic runs ship explicit shards via
+/// [`shard_specs`] instead (DESIGN.md §16).
 #[allow(clippy::too_many_arguments)]
 pub fn synthetic_specs(
     spec: &crate::data::synthetic::SyntheticSpec,
@@ -1070,15 +1077,17 @@ pub fn synthetic_specs(
             data: DataSpec::Synthetic(spec.clone()),
             loss,
             solver,
+            balance: Balance::Rows,
         })
         .collect()
 }
 
 /// Build explicit-shard [`ProblemSpec`]s (LIBSVM / externally-loaded
 /// data): each worker receives exactly its own rows and sub-partitions
-/// them locally into `local_threads` contiguous balanced sub-shards
-/// (the same [`split_ranges`] chunking the coordinator's
-/// `Partition::split` uses).
+/// them locally into `local_threads` contiguous sub-shards with the
+/// `balance` chunking formula — [`split_ranges`] for [`Balance::Rows`],
+/// [`split_nnz`] for [`Balance::Nnz`] — exactly the coordinator's
+/// `Partition::split` / `Partition::split_nnz` (DESIGN.md §16).
 #[allow(clippy::too_many_arguments)]
 pub fn shard_specs(
     data: &Dataset,
@@ -1088,6 +1097,7 @@ pub fn shard_specs(
     loss: WireLoss,
     solver: WireSolver,
     local_threads: usize,
+    balance: Balance,
 ) -> Vec<ProblemSpec> {
     assert!(local_threads >= 1, "ship a resolved local_threads (≥ 1)");
     let m = part.machines();
@@ -1102,6 +1112,7 @@ pub fn shard_specs(
             data: shard_data_spec(data, part, l),
             loss,
             solver,
+            balance,
         })
         .collect()
 }
@@ -1110,8 +1121,10 @@ pub fn shard_specs(
 /// mmaps `path` locally and serves its contiguous row range zero-copy
 /// out of the mapping — **no training rows cross the wire and none are
 /// copied on the worker** (DESIGN.md §15). The partition is the
-/// contiguous balanced chunking of [`Partition::contiguous`] /
-/// [`split_ranges`], so a text-parsed run with the same contiguous
+/// contiguous chunking of the `balance` formula — [`split_ranges`]
+/// ([`Partition::contiguous`]) for [`Balance::Rows`], [`split_nnz`]
+/// over the cache's own `indptr` ([`Partition::contiguous_nnz`]) for
+/// [`Balance::Nnz`] — so a text-parsed run with the same contiguous
 /// partition is bit-identical. The cache's content hash rides in every
 /// spec: a resurrected worker re-opens with
 /// [`crate::data::CsrCache::open_expecting`], so its state is provably
@@ -1131,6 +1144,7 @@ pub fn cache_specs(
     loss: WireLoss,
     solver: WireSolver,
     local_threads: usize,
+    balance: Balance,
 ) -> Vec<ProblemSpec> {
     assert!(local_threads >= 1, "ship a resolved local_threads (≥ 1)");
     let n = cache.rows();
@@ -1138,7 +1152,11 @@ pub fn cache_specs(
         n >= machines * local_threads,
         "cache too small: {n} rows for {machines} machines × {local_threads} threads"
     );
-    split_ranges(n, machines)
+    let ranges = match balance {
+        Balance::Rows => split_ranges(n, machines),
+        Balance::Nnz => split_nnz(cache.nnz_prefix(), machines),
+    };
+    ranges
         .into_iter()
         .enumerate()
         .map(|(l, r)| ProblemSpec {
@@ -1158,6 +1176,7 @@ pub fn cache_specs(
             },
             loss,
             solver,
+            balance,
         })
         .collect()
 }
@@ -1231,6 +1250,12 @@ impl WorkerHost {
                 // the logical sub-shards the coordinator's in-process
                 // twin holds (`Partition::split` of the same balanced
                 // partition).
+                wensure!(
+                    spec.balance == Balance::Rows,
+                    "synthetic specs regenerate a seeded balanced partition, \
+                     which has no nnz form — nnz-balanced runs ship explicit \
+                     shards (DESIGN.md §16)"
+                );
                 let data = s.generate();
                 wensure!(
                     data.n() >= m,
@@ -1261,9 +1286,23 @@ impl WorkerHost {
                     "local_threads = {t} exceeds the shard size ({})",
                     rows.len()
                 );
-                // The same contiguous balanced chunking as the
-                // coordinator's `Partition::split`.
-                let ranges = split_ranges(rows.len(), t);
+                // The same contiguous chunking formula as the
+                // coordinator's `Partition::split` / `split_nnz`
+                // (DESIGN.md §16) — diverging here would fork the
+                // logical sub-shards and with them the whole trace.
+                let ranges = match spec.balance {
+                    Balance::Rows => split_ranges(rows.len(), t),
+                    Balance::Nnz => {
+                        let mut prefix = Vec::with_capacity(rows.len() + 1);
+                        let mut acc = 0u64;
+                        prefix.push(acc);
+                        for row in &rows {
+                            acc += row.len() as u64;
+                            prefix.push(acc);
+                        }
+                        split_nnz(&prefix, t)
+                    }
+                };
                 let mut rows = rows.into_iter();
                 let mut y = y.into_iter();
                 let mut gi = global_indices.into_iter();
@@ -1316,9 +1355,15 @@ impl WorkerHost {
                     hi - lo
                 );
                 let labels = cache.labels();
-                // The same contiguous balanced chunking as the
-                // coordinator's `Partition::split`.
-                let states: Vec<WorkerState> = split_ranges(hi - lo, t)
+                // The same contiguous chunking formula as the
+                // coordinator's `Partition::split` / `split_nnz`; the
+                // nnz form reads the cache's own `indptr` section, whose
+                // arbitrary base offset `split_nnz` accepts verbatim.
+                let ranges = match spec.balance {
+                    Balance::Rows => split_ranges(hi - lo, t),
+                    Balance::Nnz => split_nnz(&cache.nnz_prefix()[lo..=hi], t),
+                };
+                let states: Vec<WorkerState> = ranges
                     .into_iter()
                     .map(|r| {
                         let (a, b) = (lo + r.start, lo + r.end);
@@ -1866,6 +1911,7 @@ mod tests {
                     WireLoss::SmoothHinge(SmoothHinge::default()),
                     WireSolver::ProxSdca,
                     1,
+                    Balance::Rows,
                 ))
             })
             .unwrap();
@@ -2267,6 +2313,7 @@ mod tests {
                     WireLoss::SmoothHinge(SmoothHinge::default()),
                     WireSolver::ProxSdca,
                     2,
+                    Balance::Rows,
                 ))
             })
             .unwrap();

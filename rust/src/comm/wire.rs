@@ -50,6 +50,12 @@
 //! `v4_shaped_payloads_still_decode_under_v5`); only the *frame set*
 //! grew, which is what the handshake version gate protects.
 //!
+//! v7 appends a trailing balance byte to [`ProblemSpec`] (DESIGN.md
+//! §16): the worker reproduces the coordinator's row- vs nnz-balanced
+//! sub-shard cuts from the same chunking formula, so `--balance nnz`
+//! keeps the Tcp-vs-Serial trace parity. Every other payload shape is
+//! unchanged.
+//!
 //! Decoding is **total**: malformed input — truncated frames, unknown
 //! tags, oversized length prefixes, inconsistent vector lengths,
 //! non-increasing sparse indices, trailing bytes — returns `Err` and
@@ -62,7 +68,7 @@ use std::io::{Read, Write};
 use crate::comm::error::CommResult;
 use crate::comm::sparse::{i16_level, i16_step, max_abs, Delta, DeltaCodec, SparseDelta};
 use crate::data::synthetic::SyntheticSpec;
-use crate::data::{Dataset, Partition};
+use crate::data::{Balance, Dataset, Partition};
 use crate::loss::{Hinge, Logistic, Loss, SmoothHinge, Squared};
 use crate::reg::{ElasticNet, Regularizer, ShiftedElasticNet};
 use crate::solver::{LocalSolver, ProxSdca, TheoremStep, WorkerState};
@@ -112,7 +118,11 @@ pub const WIRE_MAGIC: [u8; 4] = *b"DADM";
 /// rows in `AssignPartition`; the cache's content hash travels in the
 /// spec so a resurrected worker provably re-maps the same bytes. Kinds
 /// 0/1 and every other payload shape are unchanged.
-pub const WIRE_VERSION: u16 = 6;
+/// v7: shard balance mode (DESIGN.md §16) — [`ProblemSpec`] carries a
+/// trailing [`Balance`] byte so workers derive their intra-machine
+/// sub-shard cuts with the same formula (rows vs nnz) as the
+/// coordinator; no other payload shape changed.
+pub const WIRE_VERSION: u16 = 7;
 /// Hard cap on one frame's payload (256 MiB): a corrupt length prefix
 /// must never drive a giant allocation.
 pub const MAX_FRAME_LEN: u32 = 256 << 20;
@@ -659,6 +669,10 @@ pub struct ProblemSpec {
     pub loss: WireLoss,
     /// Local solver.
     pub solver: WireSolver,
+    /// Chunking formula for the worker's locally derived sub-shards
+    /// (rows vs nnz, DESIGN.md §16) — must match the coordinator's or
+    /// the `T > 1` logical sub-machines diverge. Wire v7.
+    pub balance: Balance,
 }
 
 /// Build the explicit-shard [`DataSpec`] for machine `l` (ships only
@@ -1298,6 +1312,10 @@ fn put_spec(e: &mut Enc, spec: &ProblemSpec) {
             e.u64(*hash);
         }
     }
+    e.u8(match spec.balance {
+        Balance::Rows => 0,
+        Balance::Nnz => 1,
+    });
 }
 
 fn take_spec(d: &mut Dec<'_>) -> Result<ProblemSpec> {
@@ -1393,6 +1411,11 @@ fn take_spec(d: &mut Dec<'_>) -> Result<ProblemSpec> {
         }
         t => bail!("unknown data spec kind {t}"),
     };
+    let balance = match d.u8()? {
+        0 => Balance::Rows,
+        1 => Balance::Nnz,
+        b => bail!("unknown balance mode {b}"),
+    };
     Ok(ProblemSpec {
         worker,
         machines,
@@ -1403,6 +1426,7 @@ fn take_spec(d: &mut Dec<'_>) -> Result<ProblemSpec> {
         data,
         loss,
         solver,
+        balance,
     })
 }
 
@@ -1900,6 +1924,11 @@ mod tests {
                 1 => WireLoss::Logistic,
                 2 => WireLoss::Hinge,
                 _ => WireLoss::Squared,
+            },
+            balance: if g.bool(0.5) {
+                Balance::Nnz
+            } else {
+                Balance::Rows
             },
             solver: if g.bool(0.5) {
                 WireSolver::ProxSdca
@@ -2583,6 +2612,7 @@ mod tests {
                 }),
                 loss: WireLoss::Logistic,
                 solver: WireSolver::ProxSdca,
+                balance: Balance::Rows,
             }),
             expect_v: vec![0.5, -0.25, 1.0 + f64::EPSILON],
             replay: replay.clone(),
@@ -2709,23 +2739,27 @@ mod tests {
             },
             loss: WireLoss::Logistic,
             solver: WireSolver::ProxSdca,
+            balance: Balance::Nnz,
         };
         match roundtrip(&Frame::AssignPartition(Box::new(spec))) {
-            Frame::AssignPartition(got) => match got.data {
-                DataSpec::Cache {
-                    path,
-                    start,
-                    end,
-                    n_total,
-                    dim,
-                    hash,
-                } => {
-                    assert_eq!(path, "/data/rcv1.dadmcache");
-                    assert_eq!((start, end, n_total, dim), (100, 200, 400, 47_236));
-                    assert_eq!(hash, 0xFEED_FACE_CAFE_BEEF);
+            Frame::AssignPartition(got) => {
+                assert_eq!(got.balance, Balance::Nnz, "balance must survive the wire");
+                match got.data {
+                    DataSpec::Cache {
+                        path,
+                        start,
+                        end,
+                        n_total,
+                        dim,
+                        hash,
+                    } => {
+                        assert_eq!(path, "/data/rcv1.dadmcache");
+                        assert_eq!((start, end, n_total, dim), (100, 200, 400, 47_236));
+                        assert_eq!(hash, 0xFEED_FACE_CAFE_BEEF);
+                    }
+                    other => panic!("expected cache spec, got {other:?}"),
                 }
-                other => panic!("expected cache spec, got {other:?}"),
-            },
+            }
             other => panic!("expected AssignPartition, got {other:?}"),
         }
     }
@@ -2756,6 +2790,7 @@ mod tests {
                 },
                 loss: WireLoss::Logistic,
                 solver: WireSolver::ProxSdca,
+                balance: Balance::Rows,
             };
             let mut e = Enc::default();
             put_spec(&mut e, &spec);
@@ -2766,9 +2801,10 @@ mod tests {
     }
 
     #[test]
-    fn v5_shaped_payloads_still_decode_under_v6() {
-        // v6 appended `DataSpec` kind 2 (cache); kinds 0/1 must stay
-        // byte-compatible with v5 — the trailing-field compat pin.
+    fn spec_kinds_unchanged_and_pre_v7_versions_rejected() {
+        // v7 appended a trailing balance byte to every spec; the
+        // `DataSpec` kinds 0/1 payload bodies are otherwise unchanged,
+        // and the handshake gate keeps pre-v7 workers out.
         let mk = |data| ProblemSpec {
             worker: 0,
             machines: 2,
@@ -2779,6 +2815,7 @@ mod tests {
             data,
             loss: WireLoss::Logistic,
             solver: WireSolver::ProxSdca,
+            balance: Balance::Rows,
         };
         let cases = [
             mk(DataSpec::Synthetic(SyntheticSpec {
@@ -2811,15 +2848,15 @@ mod tests {
                 (_, other) => panic!("spec kind {want_kind} changed meaning: {other:?}"),
             }
         }
-        // A v5 worker greeting a v6 coordinator is a typed VersionSkew.
+        // A v6 worker greeting a v7 coordinator is a typed VersionSkew.
         match (Frame::Hello {
             magic: WIRE_MAGIC,
-            version: 5,
+            version: 6,
         })
         .expect_hello()
         {
             Err(WireError::VersionSkew { got, want }) => {
-                assert_eq!((got, want), (5, WIRE_VERSION));
+                assert_eq!((got, want), (6, WIRE_VERSION));
             }
             other => panic!("expected VersionSkew, got {other:?}"),
         }

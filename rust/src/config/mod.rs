@@ -7,6 +7,7 @@
 //! with validation and defaults matching §10.
 
 use crate::comm::sparse::DeltaCodec;
+use crate::data::Balance;
 use crate::loss::LossKind;
 use crate::solver::SolverKind;
 use anyhow::{bail, Context, Result};
@@ -110,10 +111,18 @@ pub struct ExperimentConfig {
     /// training rows cross the wire. Implies `partition = contiguous`.
     pub cache: Option<String>,
     /// Partition scheme override; `None` = auto (contiguous when `cache`
-    /// is set, the seeded balanced shuffle otherwise). A text-parsed run
-    /// with `partition = contiguous` is bit-identical to the cache run
-    /// of the same file.
+    /// is set or `balance = nnz`, the seeded balanced shuffle otherwise).
+    /// A text-parsed run with `partition = contiguous` is bit-identical
+    /// to the cache run of the same file.
     pub partition: Option<PartitionKind>,
+    /// Shard chunking formula for contiguous cuts (`balance` key,
+    /// DESIGN.md §16): `rows` equalizes row counts (the default and the
+    /// historical parity pin), `nnz` equalizes stored non-zeros — on
+    /// skewed sparse data the per-round barrier waits on the densest
+    /// shard, so nnz balance is what equalizes local-step time. `nnz`
+    /// implies contiguous partitioning (a seeded shuffle has no nnz
+    /// form).
+    pub balance: Balance,
     /// Method.
     pub method: Method,
     /// Loss.
@@ -199,6 +208,7 @@ impl Default for ExperimentConfig {
             scale: 0.01,
             cache: None,
             partition: None,
+            balance: Balance::Rows,
             method: Method::AccDadm,
             loss: LossKind::SmoothHinge,
             solver: SolverKind::ProxSdca,
@@ -277,6 +287,13 @@ impl ExperimentConfig {
         }
         if let Some(v) = take("partition") {
             cfg.partition = Some(PartitionKind::parse(&v)?);
+        }
+        if let Some(v) = take("balance") {
+            cfg.balance = match v.as_str() {
+                "rows" => Balance::Rows,
+                "nnz" => Balance::Nnz,
+                other => bail!("unknown balance mode `{other}` (rows|nnz)"),
+            };
         }
         if let Some(v) = take("method") {
             cfg.method = Method::parse(&v)?;
@@ -428,6 +445,22 @@ impl ExperimentConfig {
                  zero-copy row ranges (drop `partition = balanced` or the cache)"
             );
         }
+        if self.balance == Balance::Nnz {
+            anyhow::ensure!(
+                self.partition != Some(PartitionKind::Balanced),
+                "balance = nnz chooses contiguous cut points over the nnz \
+                 prefix sums; a seeded shuffle has no nnz form (drop \
+                 `partition = balanced` or use `balance = rows`)"
+            );
+            anyhow::ensure!(
+                self.method != Method::Owlqn || self.local_threads == 1,
+                "balance = nnz with local-threads > 1 is supported for the \
+                 dual methods only: the OWL-QN driver sub-splits shards by \
+                 rows, which would disagree with a remote worker's \
+                 nnz-balanced sub-shards (use local-threads = 1 or \
+                 balance = rows)"
+            );
+        }
         if self.checkpoint.is_some() || self.resume.is_some() {
             anyhow::ensure!(
                 self.method == Method::Dadm,
@@ -501,23 +534,34 @@ impl ExperimentConfig {
     }
 
     /// The effective partition scheme: the explicit `partition` key,
-    /// else contiguous when training from a cache, else the paper's
-    /// seeded balanced shuffle.
+    /// else contiguous when training from a cache or under
+    /// `balance = nnz` (whose cut points are contiguous by
+    /// construction), else the paper's seeded balanced shuffle.
     pub fn partition_kind(&self) -> PartitionKind {
-        self.partition.unwrap_or(if self.cache.is_some() {
-            PartitionKind::Contiguous
-        } else {
-            PartitionKind::Balanced
-        })
+        self.partition
+            .unwrap_or(if self.cache.is_some() || self.balance == Balance::Nnz {
+                PartitionKind::Contiguous
+            } else {
+                PartitionKind::Balanced
+            })
     }
 
-    /// Build the effective [`crate::data::Partition`] over `n` examples.
-    pub fn build_partition(&self, n: usize) -> crate::data::Partition {
+    /// Build the effective [`crate::data::Partition`] over `data`'s
+    /// examples. Under `balance = nnz` the contiguous cut points come
+    /// from the data's nnz prefix sums ([`crate::data::Partition::contiguous_nnz`]);
+    /// row-balanced cuts need only the example count.
+    pub fn build_partition(&self, data: &crate::data::Dataset) -> crate::data::Partition {
+        let n = data.n();
         match self.partition_kind() {
             PartitionKind::Balanced => {
                 crate::data::Partition::balanced(n, self.machines, self.seed)
             }
-            PartitionKind::Contiguous => crate::data::Partition::contiguous(n, self.machines),
+            PartitionKind::Contiguous => match self.balance {
+                Balance::Rows => crate::data::Partition::contiguous(n, self.machines),
+                Balance::Nnz => {
+                    crate::data::Partition::contiguous_nnz(&data.x.nnz_prefix(), self.machines)
+                }
+            },
         }
     }
 }
@@ -733,14 +777,47 @@ heartbeat-every = 2
 
     #[test]
     fn build_partition_matches_kind() {
+        let data = crate::data::synthetic::tiny_classification(10, 4, 1);
         let mut c = ExperimentConfig::default();
         c.machines = 3;
-        let p = c.build_partition(10);
+        let p = c.build_partition(&data);
         p.check_invariants(true).unwrap();
         c.partition = Some(PartitionKind::Contiguous);
-        let p = c.build_partition(10);
+        let p = c.build_partition(&data);
         assert_eq!(p.shard(0), &[0, 1, 2, 3]);
         assert_eq!(p.shard(2), &[7, 8, 9]);
+    }
+
+    #[test]
+    fn parses_balance_key_and_implications() {
+        assert_eq!(ExperimentConfig::default().balance, Balance::Rows);
+        let c = ExperimentConfig::from_file_body("balance = rows\n").unwrap();
+        assert_eq!(c.balance, Balance::Rows);
+        assert_eq!(c.partition_kind(), PartitionKind::Balanced);
+
+        // nnz balance implies contiguous cut points…
+        let c = ExperimentConfig::from_file_body("balance = nnz\n").unwrap();
+        assert_eq!(c.balance, Balance::Nnz);
+        assert_eq!(c.partition_kind(), PartitionKind::Contiguous);
+        // …and a seeded shuffle has no nnz form.
+        assert!(
+            ExperimentConfig::from_file_body("balance = nnz\npartition = balanced\n").is_err()
+        );
+        assert!(ExperimentConfig::from_file_body("balance = columns\n").is_err());
+    }
+
+    #[test]
+    fn nnz_balance_builds_nnz_cuts() {
+        let data = crate::data::synthetic::tiny_classification(12, 4, 1);
+        let mut c = ExperimentConfig::default();
+        c.machines = 3;
+        c.balance = Balance::Nnz;
+        let p = c.build_partition(&data);
+        p.check_invariants(false).unwrap();
+        let q = crate::data::Partition::contiguous_nnz(&data.x.nnz_prefix(), 3);
+        for l in 0..3 {
+            assert_eq!(p.shard(l), q.shard(l), "machine {l}");
+        }
     }
 
     #[test]

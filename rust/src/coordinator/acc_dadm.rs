@@ -333,6 +333,10 @@ where
         self.inner.modeled_secs()
     }
 
+    fn step_stats(&self) -> crate::metrics::StepStats {
+        self.inner.step_stats()
+    }
+
     fn final_w(&mut self) -> Vec<f64> {
         self.w_original()
     }
@@ -453,6 +457,7 @@ mod tests {
                 compute_secs,
                 comm_secs,
                 wall_secs: wall_start.elapsed().as_secs_f64(),
+                steps: s.inner.step_stats(),
             });
             p - d
         };
@@ -515,6 +520,7 @@ mod tests {
             passes: acc.inner.passes(),
             converged,
             retries: 0,
+            stragglers: trace.straggler_summary(),
             trace,
         }
     }

@@ -56,8 +56,9 @@ use crate::comm::sparse::{
 };
 use crate::comm::wire::{BroadcastRef, EvalOp, StepFlags};
 use crate::comm::{run_subgroup, Cluster, CostModel};
-use crate::data::{Dataset, Partition};
+use crate::data::{Balance, Dataset, Partition};
 use crate::loss::Loss;
+use crate::metrics::StepStats;
 use crate::reg::{ExtraReg, Regularizer};
 use crate::runtime::engine::{Driver, RoundAlgorithm, RoundOutcome, RoundRequest};
 use crate::solver::{batch_size, machine_rngs, run_fused_step, LocalSolver, WorkerState};
@@ -125,6 +126,17 @@ pub struct DadmOptions {
     /// iterate. Opt-in; checkpoint snapshots are disabled while
     /// overlapping (the pipeline holds un-reduced rounds).
     pub overlap: bool,
+    /// Cut-point objective for the hierarchical sub-split when
+    /// `local_threads > 1` (DESIGN.md §16): [`Balance::Rows`] (the
+    /// default) equalizes example counts via [`Partition::split`];
+    /// [`Balance::Nnz`] equalizes stored non-zeros via
+    /// [`Partition::split_nnz`], so no sub-shard drags a round out
+    /// because it drew the dense rows. Must match the machine-level
+    /// partition's balance mode — remote TCP workers derive their
+    /// sub-shards from the same formula over the `balance` byte shipped
+    /// in the wire spec, so coordinator and worker cut points agree by
+    /// construction (bit parity).
+    pub balance: Balance,
 }
 
 impl Default for DadmOptions {
@@ -140,6 +152,7 @@ impl Default for DadmOptions {
             conj_resum_every: 64,
             compress: DeltaCodec::F64,
             overlap: false,
+            balance: Balance::Rows,
         }
     }
 }
@@ -285,6 +298,10 @@ struct RoundReplies {
     losses: Vec<f64>,
     conjs: Vec<f64>,
     parallel_secs: f64,
+    /// Per-physical-machine local-step seconds, in machine order —
+    /// the straggler telemetry's raw legs (DESIGN.md §16). Their max is
+    /// `parallel_secs`.
+    leg_secs: Vec<f64>,
 }
 
 /// One issued-but-not-completed round in the two-slot pipeline
@@ -361,6 +378,10 @@ pub struct Dadm<L, R, H, S> {
     /// section / TCP round trip counts one. The quantity the
     /// single-barrier-per-round acceptance tests pin (DESIGN.md §11).
     barriers: u64,
+    /// Per-machine local-step spread of the last completed round —
+    /// straggler telemetry only (wall-clock, excluded from trace parity;
+    /// DESIGN.md §16). Zeros before the first round completes.
+    last_step_stats: StepStats,
 }
 
 impl<L, R, H, S> Dadm<L, R, H, S>
@@ -406,7 +427,18 @@ where
         let lpart: &Partition = if t == 1 {
             part
         } else {
-            lpart_owned = part.split(t);
+            lpart_owned = match opts.balance {
+                Balance::Rows => part.split(t),
+                // Same `split_nnz` formula a remote worker applies to its
+                // shard's indptr slice, so sub-cut points agree across
+                // backends (DESIGN.md §16).
+                Balance::Nnz => {
+                    let prefix = data.x.nnz_prefix();
+                    let row_nnz: Vec<u64> =
+                        prefix.windows(2).map(|w| w[1] - w[0]).collect();
+                    part.split_nnz(t, &row_nnz)
+                }
+            };
             &lpart_owned
         };
         let m_logical = lpart.machines();
@@ -470,6 +502,7 @@ where
             compute_secs: 0.0,
             comm_secs: 0.0,
             barriers: 0,
+            last_step_stats: StepStats::default(),
         }
     }
 
@@ -804,17 +837,20 @@ where
         let mut losses = Vec::new();
         let mut conjs = Vec::new();
         let mut parallel_secs = 0.0f64;
+        let mut leg_secs = Vec::with_capacity(run.results.len());
         for ((delta, loss_sum, conj), secs) in run.results {
             deltas.push(delta);
             losses.extend(loss_sum);
             conjs.extend(conj);
             parallel_secs = parallel_secs.max(secs);
+            leg_secs.push(secs);
         }
         RoundReplies {
             deltas,
             losses,
             conjs,
             parallel_secs,
+            leg_secs,
         }
     }
 
@@ -846,12 +882,13 @@ where
             losses: machine_losses,
             conjs: machine_conjs,
             parallel_secs,
+            leg_secs,
         } = match entry.ready {
             Some(r) => r,
             None => {
                 let codec = self.opts.compress;
                 let h = self.remote().expect("TCP replies without a TCP cluster");
-                let (replies, secs) = h
+                let (replies, leg_secs) = h
                     .with(|c| c.local_step_collect(flags, codec))
                     .expect("tcp local step failed");
                 let mut deltas = Vec::with_capacity(replies.len());
@@ -866,7 +903,8 @@ where
                     deltas,
                     losses,
                     conjs,
-                    parallel_secs: secs,
+                    parallel_secs: leg_secs.iter().cloned().fold(0.0, f64::max),
+                    leg_secs,
                 }
             }
         };
@@ -970,6 +1008,7 @@ where
             self.opts.cost.allreduce_time(m, self.d)
         };
         self.compute_secs += parallel_secs;
+        self.last_step_stats = StepStats::from_legs(&leg_secs);
         self.comm_secs += comm;
         self.rounds += 1;
         self.passes += self.opts.sp;
@@ -1474,6 +1513,10 @@ where
 
     fn modeled_secs(&self) -> (f64, f64) {
         (self.compute_secs, self.comm_secs)
+    }
+
+    fn step_stats(&self) -> StepStats {
+        self.last_step_stats
     }
 
     fn final_w(&mut self) -> Vec<f64> {

@@ -621,6 +621,15 @@ impl CsrCache {
         }
     }
 
+    /// The nnz prefix sum over all rows — the `indptr` section verbatim
+    /// (`n + 1` entries, `[0] = 0`), zero-copy out of the mapping. This
+    /// is what makes `--balance nnz` O(1) per row on the cache path: the
+    /// cut-point search reads these offsets directly, no counting pass
+    /// (DESIGN.md §16).
+    pub fn nnz_prefix(&self) -> &[u64] {
+        self.indptr_section()
+    }
+
     /// All labels, zero-copy out of the mapping.
     pub fn labels(&self) -> &[f64] {
         // SAFETY: as in `indptr_section` (8-byte alignment, n f64s; any
@@ -789,6 +798,23 @@ mod tests {
             assert_eq!(a.values, b.values, "row {i} values");
         }
         cache.verify_content().unwrap();
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn nnz_prefix_matches_text_parse_and_mapped_matrix() {
+        let (path, _) = compiled("nnz_prefix", SMALL);
+        let cache = CsrCache::open(&path).unwrap();
+        let text = libsvm::parse(Cursor::new(SMALL)).unwrap();
+        // The cache's indptr section IS the nnz prefix of the text parse
+        // — the identity `--balance nnz` relies on for cache/text cut
+        // parity.
+        assert_eq!(cache.nnz_prefix(), &text.x.nnz_prefix()[..]);
+        assert_eq!(cache.nnz_prefix()[0], 0);
+        assert_eq!(*cache.nnz_prefix().last().unwrap() as usize, cache.nnz());
+        // And the mapped full-range matrix reports the same prefix.
+        let mapped = cache.matrix_range(0..cache.rows()).unwrap();
+        assert_eq!(mapped.nnz_prefix(), cache.nnz_prefix());
         std::fs::remove_file(&path).ok();
     }
 

@@ -15,7 +15,7 @@ pub mod sparse;
 pub mod synthetic;
 
 pub use cache::{CacheError, CsrCache};
-pub use partition::Partition;
+pub use partition::{Balance, Partition};
 pub use sparse::{SparseMatrix, SparseRow};
 
 /// A binary-classification / regression dataset in row-major sparse form.

@@ -3,8 +3,28 @@
 //! Mirrors the paper's experimental protocol (§10: "we use same balanced
 //! data partitions and random seeds"): a seeded shuffle of `{0..n}` split
 //! into `m` contiguous chunks whose sizes differ by at most one.
+//!
+//! Two chunking formulas exist (DESIGN.md §16): [`split_ranges`] balances
+//! **row counts**, [`split_nnz`] balances **stored non-zeros** — on skewed
+//! sparse data the per-round barrier waits on the densest shard, so
+//! equalizing nnz is what equalizes local-step time. Both are pure
+//! functions of their inputs, so every backend derives identical cuts.
 
 use crate::utils::Rng;
+
+/// How shard cut points are chosen (`--balance {rows,nnz}`): balance row
+/// counts (the default, and the historical parity pin) or stored
+/// non-zeros ([`split_nnz`]). Shipped to remote TCP workers in the
+/// `ProblemSpec` so their locally derived sub-shards use the same
+/// formula as the coordinator's (DESIGN.md §16).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Balance {
+    /// Shard sizes differ by at most one row ([`split_ranges`]).
+    #[default]
+    Rows,
+    /// Contiguous cuts minimizing the max shard nnz ([`split_nnz`]).
+    Nnz,
+}
 
 /// A partition of `{0, …, n−1}` into `m` machine-local index sets `S_ℓ`.
 #[derive(Clone, Debug)]
@@ -20,15 +40,9 @@ impl Partition {
         assert!(n >= m, "need at least one example per machine (n={n}, m={m})");
         let mut idx: Vec<usize> = (0..n).collect();
         Rng::new(seed).shuffle(&mut idx);
-        let base = n / m;
-        let extra = n % m;
-        let mut shards = Vec::with_capacity(m);
-        let mut cursor = 0usize;
-        for l in 0..m {
-            let size = base + usize::from(l < extra);
-            shards.push(idx[cursor..cursor + size].to_vec());
-            cursor += size;
-        }
+        // One chunking formula in the crate (§10): the shuffled sequence
+        // is cut exactly like every other contiguous balanced split.
+        let shards = split_ranges(n, m).into_iter().map(|r| idx[r].to_vec()).collect();
         Partition { shards, n }
     }
 
@@ -42,6 +56,22 @@ impl Partition {
     /// is what makes cache-vs-text solves bit-identical.
     pub fn contiguous(n: usize, m: usize) -> Self {
         let shards = split_ranges(n, m).into_iter().map(|r| r.collect()).collect();
+        Partition { shards, n }
+    }
+
+    /// Contiguous **nnz-balanced** partition: machine `ℓ` owns the `ℓ`-th
+    /// range of [`split_nnz`]`(nnz_prefix, m)` — contiguous cut points
+    /// minimizing the maximum shard nnz (`--balance nnz`, DESIGN.md §16).
+    ///
+    /// `nnz_prefix` holds `n + 1` non-decreasing values with
+    /// `nnz_prefix[i+1] − nnz_prefix[i]` = row `i`'s stored non-zeros
+    /// (the cache's `indptr` section verbatim, or one counting pass for
+    /// text/synthetic data). The cuts are a pure function of the data —
+    /// no seed, no tie randomness — so TCP workers, checkpoint resume
+    /// and §14 resurrection all reconstruct the same shards.
+    pub fn contiguous_nnz(nnz_prefix: &[u64], m: usize) -> Self {
+        let n = nnz_prefix.len().checked_sub(1).expect("nnz prefix needs ≥ 1 entry");
+        let shards = split_nnz(nnz_prefix, m).into_iter().map(|r| r.collect()).collect();
         Partition { shards, n }
     }
 
@@ -121,6 +151,35 @@ impl Partition {
         Partition { shards, n: self.n }
     }
 
+    /// Sub-partition every machine's shard into `t` contiguous
+    /// **nnz-balanced** sub-shards — the `--balance nnz` analog of
+    /// [`Partition::split`] (hierarchical parallelism, DESIGN.md §10/§16).
+    /// `row_nnz[i]` is global row `i`'s stored non-zeros; each shard's
+    /// local prefix sum feeds [`split_nnz`], the same formula a remote
+    /// TCP worker applies to its own rows, so the coordinator's logical
+    /// sub-shards and a worker's locally derived ones can never disagree.
+    pub fn split_nnz(&self, t: usize, row_nnz: &[u64]) -> Partition {
+        assert!(t >= 1, "need at least one sub-shard per machine");
+        assert_eq!(row_nnz.len(), self.n, "row_nnz must cover every example");
+        let mut shards = Vec::with_capacity(self.shards.len() * t);
+        for shard in &self.shards {
+            assert!(
+                shard.len() >= t,
+                "cannot split a shard of {} examples into {t} sub-shards",
+                shard.len()
+            );
+            let mut prefix = Vec::with_capacity(shard.len() + 1);
+            prefix.push(0u64);
+            for &i in shard {
+                prefix.push(prefix.last().unwrap() + row_nnz[i]);
+            }
+            for r in split_nnz(&prefix, t) {
+                shards.push(shard[r].to_vec());
+            }
+        }
+        Partition { shards, n: self.n }
+    }
+
     /// Verify partition invariants: disjoint cover of `{0..n}` with shard
     /// sizes differing by ≤ 1 (balanced variants only).
     pub fn check_invariants(&self, balanced: bool) -> anyhow::Result<()> {
@@ -159,6 +218,70 @@ pub fn split_ranges(n: usize, t: usize) -> Vec<std::ops::Range<usize>> {
         cursor += size;
     }
     out
+}
+
+/// The contiguous **nnz-balanced** chunking `{0..n} → t` ranges
+/// (DESIGN.md §16): cut points minimizing the maximum chunk nnz, every
+/// chunk non-empty. The dual formula to [`split_ranges`] — used by
+/// machine-level `--balance nnz` partitioning ([`Partition::contiguous_nnz`]),
+/// sub-machine splitting ([`Partition::split_nnz`]) and the TCP worker's
+/// local sub-shard reconstruction, so cuts derived from the same nnz
+/// values agree everywhere.
+///
+/// `prefix` holds `n + 1` non-decreasing values whose consecutive
+/// differences are the per-row nnz; an arbitrary base offset is allowed
+/// (a mapped cache's absolute `indptr` entries work verbatim).
+///
+/// The optimum is found by bisecting on the answer `W` (a chunking with
+/// max-nnz ≤ W exists iff the deterministic greedy one below stays
+/// within `W`), then emitting the greedy cuts at the minimal feasible
+/// `W`: each chunk takes the longest row run with nnz ≤ W that still
+/// leaves one row per remaining chunk. O(n log Σnnz), deterministic —
+/// and never worse than row balancing, because [`split_ranges`]'s cuts
+/// are one feasible candidate.
+pub fn split_nnz(prefix: &[u64], t: usize) -> Vec<std::ops::Range<usize>> {
+    let n = prefix.len().checked_sub(1).expect("nnz prefix needs ≥ 1 entry");
+    assert!(t >= 1 && n >= t, "cannot split {n} examples into {t} chunks");
+    assert!(
+        prefix.windows(2).all(|w| w[0] <= w[1]),
+        "nnz prefix must be non-decreasing"
+    );
+    let nnz = |lo: usize, hi: usize| prefix[hi] - prefix[lo];
+    // Greedy cuts at budget w; returns (ranges, max chunk nnz realized).
+    let cuts = |w: u64| -> (Vec<std::ops::Range<usize>>, u64) {
+        let mut out = Vec::with_capacity(t);
+        let mut worst = 0u64;
+        let mut start = 0usize;
+        for k in 0..t {
+            let left = t - k - 1; // chunks still owed one row each
+            let mut end = start + 1;
+            while end < n - left && nnz(start, end + 1) <= w {
+                end += 1;
+            }
+            if k + 1 == t {
+                end = n; // last chunk takes the tail
+            }
+            worst = worst.max(nnz(start, end));
+            out.push(start..end);
+            start = end;
+        }
+        (out, worst)
+    };
+    // Feasibility is monotone in w: bisect the minimal budget. A chunk
+    // holds ≥ 1 row and some chunk holds ≥ ⌈total/t⌉ nnz, so:
+    let total = nnz(0, n);
+    let max_row = (0..n).map(|i| nnz(i, i + 1)).max().unwrap_or(0);
+    let mut lo = max_row.max(total.div_ceil(t as u64));
+    let mut hi = total;
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        if cuts(mid).1 <= mid {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    cuts(lo).0
 }
 
 #[cfg(test)]
@@ -306,5 +429,154 @@ mod tests {
     #[should_panic]
     fn split_rejects_oversized_t() {
         Partition::balanced(10, 3, 0).split(4); // min shard is 3
+    }
+
+    fn prefix_of(row_nnz: &[u64]) -> Vec<u64> {
+        let mut p = vec![0u64];
+        for &c in row_nnz {
+            p.push(p.last().unwrap() + c);
+        }
+        p
+    }
+
+    fn max_chunk_nnz(prefix: &[u64], ranges: &[std::ops::Range<usize>]) -> u64 {
+        ranges.iter().map(|r| prefix[r.end] - prefix[r.start]).max().unwrap()
+    }
+
+    #[test]
+    fn split_nnz_basic_shapes() {
+        // One heavy row dominates: it gets its own chunk, the light rows
+        // spread over the rest.
+        let prefix = prefix_of(&[100, 1, 1, 1, 1, 1]);
+        let rs = split_nnz(&prefix, 3);
+        assert_eq!(rs[0], 0..1, "the heavy row is isolated");
+        assert_eq!(max_chunk_nnz(&prefix, &rs), 100);
+        // Uniform rows: max chunk nnz matches the row-balanced split.
+        let prefix = prefix_of(&[3; 12]);
+        let rs = split_nnz(&prefix, 4);
+        assert_eq!(max_chunk_nnz(&prefix, &rs), 9);
+    }
+
+    #[test]
+    fn split_nnz_accepts_absolute_offset_prefixes() {
+        // A mapped cache hands over absolute indptr entries; cuts must
+        // depend only on the differences.
+        let rel = prefix_of(&[5, 1, 9, 2, 2, 7]);
+        let abs: Vec<u64> = rel.iter().map(|&x| x + 1000).collect();
+        assert_eq!(split_nnz(&rel, 3), split_nnz(&abs, 3));
+    }
+
+    #[test]
+    fn prop_split_nnz_covers_and_never_beats_optimal_bound() {
+        for_each_case(0x57A7, 80, |g| {
+            let t = g.usize_in(1, 8);
+            let n = g.usize_in(t, t * 25);
+            // Zipf-ish skew: most rows tiny, a few huge.
+            let row_nnz: Vec<u64> = (0..n)
+                .map(|_| {
+                    if g.bool(0.15) {
+                        g.usize_in(50, 400) as u64
+                    } else {
+                        g.usize_in(0, 8) as u64
+                    }
+                })
+                .collect();
+            let prefix = prefix_of(&row_nnz);
+            let rs = split_nnz(&prefix, t);
+            // Disjoint contiguous cover, every chunk non-empty.
+            assert_eq!(rs.len(), t);
+            assert_eq!(rs[0].start, 0);
+            assert_eq!(rs.last().unwrap().end, n);
+            for pair in rs.windows(2) {
+                assert_eq!(pair[0].end, pair[1].start, "ranges must be contiguous");
+            }
+            assert!(rs.iter().all(|r| !r.is_empty()));
+            // Deterministic: same inputs, same cuts.
+            assert_eq!(rs, split_nnz(&prefix, t));
+            // Never worse than row balancing.
+            let row_balanced = max_chunk_nnz(&prefix, &split_ranges(n, t));
+            assert!(
+                max_chunk_nnz(&prefix, &rs) <= row_balanced,
+                "nnz cuts worse than row cuts: {} > {row_balanced}",
+                max_chunk_nnz(&prefix, &rs)
+            );
+        });
+    }
+
+    #[test]
+    fn split_nnz_is_optimal_on_small_cases() {
+        // Brute-force every contiguous t-chunking of small inputs and
+        // check the bisection finds the true minimal max-chunk nnz.
+        fn brute(prefix: &[u64], t: usize) -> u64 {
+            let n = prefix.len() - 1;
+            fn rec(prefix: &[u64], start: usize, t: usize) -> u64 {
+                let n = prefix.len() - 1;
+                if t == 1 {
+                    return prefix[n] - prefix[start];
+                }
+                (start + 1..=n - (t - 1))
+                    .map(|cut| (prefix[cut] - prefix[start]).max(rec(prefix, cut, t - 1)))
+                    .min()
+                    .unwrap()
+            }
+            assert!(n >= t);
+            rec(prefix, 0, t)
+        }
+        for_each_case(0x0B57, 60, |g| {
+            let t = g.usize_in(1, 4);
+            let n = g.usize_in(t, 10);
+            let row_nnz: Vec<u64> = (0..n).map(|_| g.usize_in(0, 30) as u64).collect();
+            let prefix = prefix_of(&row_nnz);
+            let got = max_chunk_nnz(&prefix, &split_nnz(&prefix, t));
+            let want = brute(&prefix, t);
+            assert_eq!(got, want, "suboptimal cuts for nnz {row_nnz:?}, t={t}");
+        });
+    }
+
+    #[test]
+    fn contiguous_nnz_invariants_and_degenerate_rows() {
+        let prefix = prefix_of(&[0, 0, 40, 1, 1, 0, 7, 7]);
+        let p = Partition::contiguous_nnz(&prefix, 3);
+        assert_eq!(p.machines(), 3);
+        assert_eq!(p.total(), 8);
+        p.check_invariants(false).unwrap();
+        // Shards are ascending contiguous runs (the zero-copy cache
+        // contract of WorkerState::from_partition).
+        for l in 0..3 {
+            let s = p.shard(l);
+            assert!(s.windows(2).all(|w| w[1] == w[0] + 1));
+        }
+    }
+
+    #[test]
+    fn split_nnz_method_refines_each_shard_in_order() {
+        let row_nnz: Vec<u64> = (0..60).map(|i| if i % 9 == 0 { 120 } else { 2 }).collect();
+        let p = Partition::balanced(60, 4, 5);
+        let s = p.split_nnz(3, &row_nnz);
+        assert_eq!(s.machines(), 12);
+        s.check_invariants(false).unwrap();
+        for l in 0..4 {
+            let rebuilt: Vec<usize> = (0..3).flat_map(|k| s.shard(l * 3 + k).to_vec()).collect();
+            assert_eq!(rebuilt, p.shard(l), "sub-shards must concatenate in order");
+            // Within each machine, the nnz split is no worse than the
+            // row split.
+            let row_split = p.split(3);
+            let nnz_of = |part: &Partition, k: usize| -> u64 {
+                part.shard(l * 3 + k).iter().map(|&i| row_nnz[i]).sum()
+            };
+            let got = (0..3).map(|k| nnz_of(&s, k)).max().unwrap();
+            let via_rows = (0..3).map(|k| nnz_of(&row_split, k)).max().unwrap();
+            assert!(got <= via_rows, "machine {l}: {got} > {via_rows}");
+        }
+    }
+
+    #[test]
+    fn split_nnz_one_is_identity() {
+        let row_nnz = vec![1u64; 30];
+        let p = Partition::balanced(30, 3, 2);
+        let s = p.split_nnz(1, &row_nnz);
+        for l in 0..3 {
+            assert_eq!(s.shard(l), p.shard(l));
+        }
     }
 }

@@ -347,6 +347,25 @@ impl SparseMatrix {
         }
     }
 
+    /// The nnz prefix sum: `rows() + 1` values starting at 0 whose
+    /// consecutive differences are the per-row stored non-zeros — the
+    /// input `split_nnz` cuts on (`--balance nnz`, DESIGN.md §16).
+    /// O(1) per row either way: a copy of the owned `indptr`, or a
+    /// rebased read of the mapped cache's `indptr` section.
+    pub fn nnz_prefix(&self) -> Vec<u64> {
+        match &self.storage {
+            Storage::Owned { indptr, .. } => indptr.iter().map(|&p| p as u64).collect(),
+            Storage::Mapped(m) => {
+                // SAFETY: constructor contract — `n_rows + 1` readable
+                // monotone entries (see `MappedCsr::row`).
+                let base = unsafe { *m.indptr };
+                (0..=m.n_rows)
+                    .map(|i| unsafe { *m.indptr.add(i) } - base)
+                    .collect()
+            }
+        }
+    }
+
     /// Borrow row `i`.
     #[inline]
     pub fn row(&self, i: usize) -> SparseRow<'_> {
@@ -497,6 +516,19 @@ mod tests {
         let m = sample();
         let a = vec![1.0, 5.0, 2.0];
         assert_eq!(m.matvec_t(&a), vec![-1.0, 6.0, 2.0]);
+    }
+
+    #[test]
+    fn nnz_prefix_matches_per_row_counts() {
+        let m = sample();
+        assert_eq!(m.nnz_prefix(), vec![0, 2, 2, 4]);
+        // Differences are exactly the per-row nnz, on a row-range view too.
+        let s = m.slice_rows(1..3);
+        let p = s.nnz_prefix();
+        assert_eq!(p[0], 0);
+        for i in 0..s.rows() {
+            assert_eq!((p[i + 1] - p[i]) as usize, s.row(i).nnz());
+        }
     }
 
     #[test]

@@ -5,4 +5,4 @@ pub mod bench;
 pub mod plot;
 pub mod trace;
 
-pub use trace::{RoundRecord, Trace};
+pub use trace::{RoundRecord, StepStats, StragglerSummary, Trace};

@@ -209,6 +209,7 @@ mod tests {
             compute_secs: 0.0,
             comm_secs: 0.0,
             wall_secs: 0.0,
+            steps: crate::metrics::StepStats::default(),
         });
         let s = series_from_trace("t", &t);
         assert_eq!(s.points, vec![(1.0, 0.5)]);

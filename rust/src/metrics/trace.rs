@@ -1,8 +1,71 @@
 //! Convergence traces — one record per communication round, carrying
 //! everything the paper's figures plot: duality gap, primal objective,
-//! passes over the data, modeled compute/communication time.
+//! passes over the data, modeled compute/communication time — plus
+//! per-round straggler telemetry (DESIGN.md §16).
 
 use std::io::Write;
+
+/// Local-step timing spread across physical machines for one round —
+/// the straggler telemetry of DESIGN.md §16. Every DADM round is a
+/// barrier, so its wall time is `max_ℓ` while its useful work is
+/// `mean_ℓ`; the gap between the two is exactly what nnz-balanced
+/// partitioning and work stealing reclaim. Wall-clock measurements
+/// only: they are reported, never fed into control flow or math, so
+/// they sit outside the bit-parity ("math columns") invariant.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StepStats {
+    /// Fastest machine's local-step seconds this round.
+    pub min_secs: f64,
+    /// Mean local-step seconds across machines.
+    pub mean_secs: f64,
+    /// Slowest machine's local-step seconds — the round's critical path.
+    pub max_secs: f64,
+}
+
+impl StepStats {
+    /// Aggregate per-machine local-step leg times (empty legs — e.g. an
+    /// algorithm that does not measure — yield the zero stats).
+    pub fn from_legs(legs: &[f64]) -> StepStats {
+        if legs.is_empty() {
+            return StepStats::default();
+        }
+        let min = legs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = legs.iter().cloned().fold(0.0, f64::max);
+        // dadm-lint: allow(naive-reduction) — local timing accounting, not cross-machine float math
+        let mean = legs.iter().sum::<f64>() / legs.len() as f64;
+        StepStats {
+            min_secs: min,
+            mean_secs: mean,
+            max_secs: max,
+        }
+    }
+
+    /// Imbalance ratio `max/mean` — 1.0 is a perfectly balanced round,
+    /// `m` is one machine doing all the work; 0.0 when unmeasured.
+    pub fn imbalance(&self) -> f64 {
+        if self.mean_secs > 0.0 {
+            self.max_secs / self.mean_secs
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Whole-solve straggler roll-up for [`SolveReport`] and bench output.
+///
+/// [`SolveReport`]: crate::runtime::SolveReport
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StragglerSummary {
+    /// Rounds that carried non-zero step stats.
+    pub rounds_measured: usize,
+    /// Mean per-round imbalance ratio over measured rounds.
+    pub mean_imbalance: f64,
+    /// Worst per-round imbalance ratio.
+    pub max_imbalance: f64,
+    /// Total seconds the cluster idled behind stragglers: `Σ_rounds
+    /// (max − mean)` — the wall time nnz balancing + stealing target.
+    pub idle_secs: f64,
+}
 
 /// One communication round's measurements.
 #[derive(Clone, Debug)]
@@ -21,6 +84,9 @@ pub struct RoundRecord {
     pub comm_secs: f64,
     /// Cumulative real wall-clock seconds.
     pub wall_secs: f64,
+    /// This round's local-step timing spread (zeros when unmeasured —
+    /// e.g. round-0 records and algorithms without machine legs).
+    pub steps: StepStats,
 }
 
 impl RoundRecord {
@@ -86,17 +152,52 @@ impl Trace {
             .map(|r| r.modeled_secs())
     }
 
-    /// Write the trace as CSV.
+    /// Roll up the per-round straggler telemetry (rounds with zero
+    /// stats — unmeasured — are excluded).
+    pub fn straggler_summary(&self) -> StragglerSummary {
+        let measured: Vec<&StepStats> = self
+            .rounds
+            .iter()
+            .map(|r| &r.steps)
+            .filter(|s| s.max_secs > 0.0)
+            .collect();
+        if measured.is_empty() {
+            return StragglerSummary::default();
+        }
+        let count = measured.len();
+        // dadm-lint: allow(naive-reduction) — local timing accounting, not cross-machine float math
+        let mean_imbalance = measured.iter().map(|s| s.imbalance()).sum::<f64>() / count as f64;
+        let max_imbalance = measured
+            .iter()
+            .map(|s| s.imbalance())
+            .fold(0.0, f64::max);
+        // dadm-lint: allow(naive-reduction) — local timing accounting, not cross-machine float math
+        let idle_secs = measured
+            .iter()
+            .map(|s| s.max_secs - s.mean_secs)
+            .sum::<f64>();
+        StragglerSummary {
+            rounds_measured: count,
+            mean_imbalance,
+            max_imbalance,
+            idle_secs,
+        }
+    }
+
+    /// Write the trace as CSV. The first eight columns (through
+    /// `comm_secs`) are the deterministic "math columns" pinned
+    /// bit-identical across backends; `wall_secs` and the step-timing
+    /// columns after it are wall-clock and excluded from parity checks.
     pub fn write_csv<W: Write>(&self, mut w: W) -> std::io::Result<()> {
         writeln!(
             w,
-            "round,passes,primal,dual,gap,norm_gap,compute_secs,comm_secs,wall_secs"
+            "round,passes,primal,dual,gap,norm_gap,compute_secs,comm_secs,wall_secs,step_min_secs,step_mean_secs,step_max_secs,imbalance"
         )?;
         let n = self.n as f64;
         for r in &self.rounds {
             writeln!(
                 w,
-                "{},{},{},{},{},{},{},{},{}",
+                "{},{},{},{},{},{},{},{},{},{},{},{},{}",
                 r.round,
                 r.passes,
                 r.primal,
@@ -105,7 +206,11 @@ impl Trace {
                 r.gap() / n,
                 r.compute_secs,
                 r.comm_secs,
-                r.wall_secs
+                r.wall_secs,
+                r.steps.min_secs,
+                r.steps.mean_secs,
+                r.steps.max_secs,
+                r.steps.imbalance()
             )?;
         }
         Ok(())
@@ -125,6 +230,7 @@ mod tests {
             compute_secs: round as f64 * 0.1,
             comm_secs: comm,
             wall_secs: round as f64 * 0.15,
+            steps: StepStats::default(),
         }
     }
 
@@ -163,6 +269,42 @@ mod tests {
         t.write_csv(&mut buf).unwrap();
         let text = String::from_utf8(buf).unwrap();
         assert!(text.starts_with("round,passes,primal"));
+        assert!(text.lines().next().unwrap().ends_with(
+            "wall_secs,step_min_secs,step_mean_secs,step_max_secs,imbalance"
+        ));
         assert_eq!(text.lines().count(), 2);
+        // Every row carries the same column count as the header.
+        let cols = text.lines().next().unwrap().split(',').count();
+        assert!(text.lines().all(|l| l.split(',').count() == cols));
+    }
+
+    #[test]
+    fn step_stats_aggregate_and_imbalance() {
+        let s = StepStats::from_legs(&[1.0, 2.0, 3.0]);
+        assert_eq!(s.min_secs, 1.0);
+        assert_eq!(s.max_secs, 3.0);
+        assert!((s.mean_secs - 2.0).abs() < 1e-12);
+        assert!((s.imbalance() - 1.5).abs() < 1e-12);
+        // Unmeasured rounds are the additive identity, not NaN.
+        assert_eq!(StepStats::from_legs(&[]), StepStats::default());
+        assert_eq!(StepStats::default().imbalance(), 0.0);
+    }
+
+    #[test]
+    fn straggler_summary_skips_unmeasured_rounds() {
+        let mut t = Trace::new(10);
+        t.push(rec(0, 10.0, 0.0)); // round-0 record: zero stats
+        let mut r1 = rec(1, 5.0, 0.0);
+        r1.steps = StepStats::from_legs(&[1.0, 1.0, 4.0]);
+        t.push(r1);
+        let mut r2 = rec(2, 1.0, 0.0);
+        r2.steps = StepStats::from_legs(&[2.0, 2.0, 2.0]);
+        t.push(r2);
+        let s = t.straggler_summary();
+        assert_eq!(s.rounds_measured, 2);
+        assert!((s.max_imbalance - 2.0).abs() < 1e-12);
+        assert!((s.mean_imbalance - 1.5).abs() < 1e-12);
+        assert!((s.idle_secs - 2.0).abs() < 1e-12);
+        assert_eq!(Trace::new(5).straggler_summary(), StragglerSummary::default());
     }
 }

@@ -25,7 +25,7 @@
 //! construct a boxed algorithm per method and run this one loop.
 
 use crate::coordinator::Checkpoint;
-use crate::metrics::{RoundRecord, Trace};
+use crate::metrics::{RoundRecord, StepStats, StragglerSummary, Trace};
 use std::collections::VecDeque;
 use std::path::PathBuf;
 use std::time::Instant;
@@ -49,6 +49,11 @@ pub struct SolveReport {
     /// [`RoundOutcome::retried`]; nonzero only when the fault-tolerant
     /// TCP backend re-admitted replacement workers mid-solve).
     pub retries: usize,
+    /// Straggler roll-up over the recorded rounds (DESIGN.md §16):
+    /// imbalance ratios and the total seconds the cluster idled behind
+    /// its slowest machine. Zeros for algorithms without machine-leg
+    /// timing.
+    pub stragglers: StragglerSummary,
     /// Full per-round trace.
     pub trace: Trace,
 }
@@ -217,6 +222,17 @@ pub trait RoundAlgorithm {
         normalized_gap <= eps
     }
 
+    /// Local-step timing spread of the **last completed** round
+    /// (straggler telemetry, DESIGN.md §16). The driver stamps it onto
+    /// the trace record describing the state that round produced — under
+    /// the lagged protocol it is captured in the same entering snapshot
+    /// as the modeled-time counters, so attribution is identical across
+    /// the sequential, fused-lagged, and overlap loops. Wall-clock only;
+    /// excluded from cross-backend parity. Default: unmeasured (zeros).
+    fn step_stats(&self) -> StepStats {
+        StepStats::default()
+    }
+
     /// Hook called after every trace record — stage transitions
     /// (Acc-DADM) live here, not in a bespoke loop.
     fn on_record(&mut self, _ctx: &RecordCtx) {}
@@ -289,6 +305,7 @@ impl Driver {
             compute_secs,
             comm_secs,
             wall_secs: wall_start.elapsed().as_secs_f64(),
+            steps: algo.step_stats(),
         });
         primal - dual
     }
@@ -356,8 +373,15 @@ impl Driver {
                 let req = inflight.pop_front().expect("overlap loop: pipeline empty");
                 // Accounting snapshot of the entering state: counters
                 // advance in the complete half, so this is still the
-                // state after `rounds_done` completed rounds.
-                let entering = (algo.rounds(), algo.passes(), algo.modeled_secs());
+                // state after `rounds_done` completed rounds (and
+                // `step_stats` still describes the round that produced
+                // that state).
+                let entering = (
+                    algo.rounds(),
+                    algo.passes(),
+                    algo.modeled_secs(),
+                    algo.step_stats(),
+                );
                 let out = algo.round_complete(req);
                 rounds_done += 1;
                 retries += out.retried;
@@ -377,6 +401,7 @@ impl Driver {
                             compute_secs,
                             comm_secs,
                             wall_secs: wall_start.elapsed().as_secs_f64(),
+                            steps: entering.3,
                         });
                         let gap = primal - dual;
                         converged = algo.gap_converged(gap / n, self.eps);
@@ -407,8 +432,13 @@ impl Driver {
             };
             // Accounting snapshot of the entering state, stamped onto the
             // lagged record (its primal/dual describe this state, not the
-            // round that completed them).
-            let entering = (algo.rounds(), algo.passes(), algo.modeled_secs());
+            // round that completed them; likewise its step stats).
+            let entering = (
+                algo.rounds(),
+                algo.passes(),
+                algo.modeled_secs(),
+                algo.step_stats(),
+            );
             let out = algo.round(req);
             rounds_done += 1;
             retries += out.retried;
@@ -423,6 +453,7 @@ impl Driver {
                     compute_secs,
                     comm_secs,
                     wall_secs: wall_start.elapsed().as_secs_f64(),
+                    steps: entering.3,
                 });
                 let gap = primal - dual;
                 converged = algo.gap_converged(gap / n, self.eps);
@@ -488,6 +519,7 @@ impl Driver {
             passes: algo.passes(),
             converged,
             retries,
+            stragglers: trace.straggler_summary(),
             trace,
         }
     }

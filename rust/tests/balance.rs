@@ -1,0 +1,243 @@
+//! `--balance nnz` integration (DESIGN.md §16): over the checked-in
+//! skewed fixture — most stored non-zeros concentrated in a dense head
+//! block — an nnz-balanced contiguous partition must (a) actually
+//! equalize per-shard work where the row-balanced cut does not, and
+//! (b) leave the trajectory **bit-identical** across Serial, Threads,
+//! and the TCP loopback backend with hierarchical sub-shards
+//! (`local_threads > 1`), including a §14 kill + resurrection of a
+//! real `dadm worker` child process. Balance changes *where* the cut
+//! points land, never *what* each logical machine computes, so every
+//! backend must reproduce the same w, v, and gap bit for bit.
+
+use dadm::comm::tcp::{serve, shard_specs, TcpClusterBuilder, TcpHandle};
+use dadm::comm::wire::{WireLoss, WireSolver};
+use dadm::comm::{Cluster, CostModel, FaultTolerance};
+use dadm::coordinator::{Dadm, DadmOptions, Problem};
+use dadm::data::{libsvm, Balance, Dataset, Partition};
+use dadm::loss::SmoothHinge;
+use dadm::reg::{ElasticNet, Zero};
+use dadm::solver::ProxSdca;
+use std::net::TcpStream;
+use std::process::{Child, Command, Stdio};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+const MACHINES: usize = 4;
+const LOCAL_THREADS: usize = 2;
+const RNG_SEED: u64 = 0xDAD_A;
+const SP: f64 = 0.5;
+
+fn skewed() -> Dataset {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/testdata/skewed.libsvm");
+    libsvm::load(path).expect("parse skewed fixture")
+}
+
+fn nnz_partition(data: &Dataset, m: usize) -> Partition {
+    Partition::contiguous_nnz(&data.x.nnz_prefix(), m)
+}
+
+/// Stored non-zeros owned by each shard of `part`.
+fn shard_nnz(data: &Dataset, part: &Partition) -> Vec<u64> {
+    (0..part.machines())
+        .map(|l| {
+            part.shard(l)
+                .iter()
+                .map(|&i| data.x.row(i).indices.len() as u64)
+                .sum()
+        })
+        .collect()
+}
+
+fn build_dadm(
+    data: &Dataset,
+    part: &Partition,
+    cluster: Cluster,
+) -> Dadm<SmoothHinge, ElasticNet, Zero, ProxSdca> {
+    Problem::new(data, part)
+        .loss(SmoothHinge::default())
+        .reg(ElasticNet::new(0.1))
+        .lambda(1e-2)
+        .build_dadm(
+            ProxSdca,
+            DadmOptions {
+                sp: SP,
+                cluster,
+                cost: CostModel::default(),
+                seed: RNG_SEED,
+                gap_every: 1,
+                sparse_comm: true,
+                local_threads: LOCAL_THREADS,
+                balance: Balance::Nnz,
+                ..Default::default()
+            },
+        )
+}
+
+fn specs(data: &Dataset, part: &Partition) -> Vec<dadm::comm::wire::ProblemSpec> {
+    shard_specs(
+        data,
+        part,
+        RNG_SEED,
+        SP,
+        WireLoss::SmoothHinge(SmoothHinge::default()),
+        WireSolver::ProxSdca,
+        LOCAL_THREADS,
+        Balance::Nnz,
+    )
+}
+
+#[test]
+fn nnz_cuts_repair_the_skew_row_cuts_leave() {
+    // The fixture must actually exercise the straggler scenario: under
+    // row-balanced contiguous cuts the head shard hoards the nnz; the
+    // nnz-balanced cut has to flatten that hoard substantially.
+    let data = skewed();
+    let rows = shard_nnz(&data, &Partition::contiguous(data.n(), MACHINES));
+    let nnz = shard_nnz(&data, &nnz_partition(&data, MACHINES));
+    let (rows_max, nnz_max) = (*rows.iter().max().unwrap(), *nnz.iter().max().unwrap());
+    assert!(
+        rows_max * 2 >= nnz_max * 3,
+        "fixture is not skewed enough to test balancing: \
+         row-cut max shard {rows_max} nnz vs nnz-cut max shard {nnz_max}"
+    );
+    // The nnz cut is optimal for contiguous cuts, so it can never be
+    // worse than the row cut on any input.
+    assert!(nnz_max <= rows_max, "nnz cut worse than row cut");
+    let total: u64 = nnz.iter().sum();
+    assert_eq!(total, rows.iter().sum::<u64>(), "cuts must cover all nnz");
+}
+
+/// Spawn `m` in-process loopback workers (thread-hosted twins of real
+/// `dadm worker` processes; the child-process variant is below).
+fn loopback(m: usize) -> (TcpHandle, Vec<JoinHandle<()>>) {
+    let builder = TcpClusterBuilder::bind("127.0.0.1:0").unwrap();
+    let addr = builder.local_addr().unwrap();
+    let threads: Vec<_> = (0..m)
+        .map(|_| {
+            std::thread::spawn(move || {
+                let stream = TcpStream::connect(addr).expect("worker connect");
+                serve(stream).expect("worker serve");
+            })
+        })
+        .collect();
+    let cluster = builder.accept(m).unwrap();
+    (TcpHandle::new(cluster), threads)
+}
+
+#[test]
+fn nnz_balanced_traces_are_bit_identical_across_backends() {
+    // The §16 parity pin: Serial, Threads, and TCP must walk the same
+    // trajectory under nnz-balanced machine cuts *and* nnz-balanced
+    // T=2 sub-shards — remote workers derive their sub-cut points from
+    // the spec's balance byte over their own rows, so agreement here
+    // proves the coordinator and worker chunking formulas match.
+    let data = skewed();
+    let part = nnz_partition(&data, MACHINES);
+
+    let (handle, threads) = loopback(MACHINES);
+    handle.with(|c| c.assign(specs(&data, &part))).unwrap();
+
+    let mut serial = build_dadm(&data, &part, Cluster::Serial);
+    let mut shmem = build_dadm(&data, &part, Cluster::Threads);
+    let mut tcp = build_dadm(&data, &part, Cluster::Tcp(handle.clone()));
+    serial.resync();
+    shmem.resync();
+    tcp.resync();
+    for round in 0..8 {
+        serial.round();
+        shmem.round();
+        tcp.round();
+        assert_eq!(serial.w(), shmem.w(), "w diverged on Threads at round {round}");
+        assert_eq!(serial.w(), tcp.w(), "w diverged on Tcp at round {round}");
+        assert_eq!(serial.v(), shmem.v(), "v diverged on Threads at round {round}");
+        assert_eq!(serial.v(), tcp.v(), "v diverged on Tcp at round {round}");
+        assert_eq!(
+            serial.gap().to_bits(),
+            tcp.gap().to_bits(),
+            "gap diverged on Tcp at round {round}"
+        );
+    }
+
+    handle.with(|c| c.shutdown());
+    drop(tcp);
+    drop(handle);
+    for t in threads {
+        t.join().expect("worker thread panicked");
+    }
+}
+
+fn spawn_worker(addr: &str) -> Child {
+    Command::new(env!("CARGO_BIN_EXE_dadm"))
+        .args(["worker", "--connect", addr])
+        .stdin(Stdio::null())
+        .spawn()
+        .expect("spawning dadm worker process")
+}
+
+#[test]
+fn nnz_balanced_kill_and_rejoin_stays_bit_identical() {
+    // §14 × §16: SIGKILL a real child-process worker mid-solve under
+    // nnz cuts and nnz sub-shards; the replacement rebuilds its shard
+    // (rows + balance byte) from the replayed spec, so resurrection
+    // must stay algorithmically invisible exactly as in the
+    // row-balanced chaos tests.
+    let data = skewed();
+    let part = nnz_partition(&data, MACHINES);
+
+    let builder = TcpClusterBuilder::bind("127.0.0.1:0")
+        .expect("bind")
+        .fault_tolerance(FaultTolerance {
+            worker_timeout: Duration::from_secs(10),
+            heartbeat_every: Duration::from_millis(500),
+            max_rejoins: 2,
+        });
+    let addr = builder.local_addr().expect("local addr").to_string();
+    let mut fleet: Vec<Child> = (0..MACHINES).map(|_| spawn_worker(&addr)).collect();
+    let mut cluster = builder.accept(MACHINES).expect("accepting workers");
+    cluster.assign(specs(&data, &part)).expect("assigning shards");
+    let handle = TcpHandle::new(cluster);
+
+    let mut serial = build_dadm(&data, &part, Cluster::Serial);
+    let mut tcp = build_dadm(&data, &part, Cluster::Tcp(handle.clone()));
+    serial.resync();
+    tcp.resync();
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        for round in 0..8 {
+            serial.round();
+            tcp.round();
+            assert_eq!(serial.w(), tcp.w(), "w diverged at round {round} across the kill");
+            assert_eq!(serial.v(), tcp.v(), "v diverged at round {round} across the kill");
+            assert_eq!(
+                serial.gap().to_bits(),
+                tcp.gap().to_bits(),
+                "gap diverged at round {round} across the kill"
+            );
+            if round == 2 {
+                // Abrupt death between barriers; the replacement joins
+                // through the §14 rejoin replay during round 3.
+                let mut victim = fleet.remove(0);
+                victim.kill().expect("killing worker");
+                victim.wait().expect("reaping killed worker");
+                fleet.push(spawn_worker(&addr));
+            }
+        }
+        assert_eq!(
+            handle.with(|c| c.rejoins_total()),
+            1,
+            "exactly one resurrection expected"
+        );
+        handle.with(|c| c.shutdown());
+    }));
+    drop(tcp);
+    drop(handle);
+    for mut child in fleet {
+        if result.is_err() {
+            // Failing assertion: don't leak workers into the runner.
+            let _ = child.kill();
+        }
+        let _ = child.wait();
+    }
+    if let Err(panic) = result {
+        std::panic::resume_unwind(panic);
+    }
+}

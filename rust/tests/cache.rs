@@ -11,7 +11,7 @@ use dadm::comm::wire::{WireLoss, WireSolver};
 use dadm::comm::{Cluster, CostModel};
 use dadm::coordinator::{Dadm, DadmOptions, Problem};
 use dadm::data::synthetic::tiny_classification;
-use dadm::data::{cache, libsvm, CsrCache, Dataset, Partition};
+use dadm::data::{cache, libsvm, Balance, CsrCache, Dataset, Partition};
 use dadm::loss::SmoothHinge;
 use dadm::reg::{ElasticNet, Zero};
 use dadm::solver::ProxSdca;
@@ -197,6 +197,7 @@ fn cache_solve_over_tcp_matches_text_serial_bit_for_bit() {
                 WireLoss::SmoothHinge(SmoothHinge::default()),
                 WireSolver::ProxSdca,
                 1,
+                Balance::Rows,
             ))
         })
         .unwrap();

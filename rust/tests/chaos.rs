@@ -20,7 +20,7 @@ use dadm::comm::wire::{BroadcastRef, StepFlags, WireLoss, WireSolver};
 use dadm::comm::{Cluster, CommError, CostModel, FaultTolerance};
 use dadm::coordinator::{Dadm, DadmOptions, Problem};
 use dadm::data::synthetic::SyntheticSpec;
-use dadm::data::{cache, libsvm, CsrCache, Dataset, Partition};
+use dadm::data::{cache, libsvm, Balance, CsrCache, Dataset, Partition};
 use dadm::loss::SmoothHinge;
 use dadm::reg::{ElasticNet, Zero};
 use dadm::solver::ProxSdca;
@@ -170,6 +170,7 @@ fn connected_fleet_cache(
             WireLoss::SmoothHinge(SmoothHinge::default()),
             WireSolver::ProxSdca,
             1,
+            Balance::Rows,
         ))
         .expect("assigning cache shards");
     (TcpHandle::new(cluster), fleet, addr)

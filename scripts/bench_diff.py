@@ -77,7 +77,7 @@ def main(argv):
             f"({provenance}); refresh it from a CI bench artifact to tighten the gate"
         )
 
-    regressions, matched = [], 0
+    regressions, matched, table = [], 0, []
     for key in sorted(base):
         bench, config = key
         if key not in fresh:
@@ -90,7 +90,21 @@ def main(argv):
         if ratio > threshold:
             status = "REGRESSED"
             regressions.append((bench, config, b, f, ratio))
-        print(f"{status:>9}  {bench} [{config}]: {b * 1e3:.3f}ms -> {f * 1e3:.3f}ms ({ratio:.2f}x)")
+        table.append((status, bench, config, b, f, ratio))
+    # Per-row delta table — printed on success as well as failure, so a
+    # green CI run still shows where the time went (slowest-relative
+    # rows first; negative delta = faster than baseline).
+    if table:
+        table.sort(key=lambda r: -r[5])
+        name_w = max(len(f"{r[1]} [{r[2]}]") for r in table)
+        print(f"{'':>9}  {'row':<{name_w}}  {'base':>10}  {'fresh':>10}  {'ratio':>7}  {'delta':>8}")
+        for status, bench, config, b, f, ratio in table:
+            name = f"{bench} [{config}]"
+            delta = 100.0 * (f - b) / b if b > 0 else float("inf")
+            print(
+                f"{status:>9}  {name:<{name_w}}  {b * 1e3:>8.3f}ms  "
+                f"{f * 1e3:>8.3f}ms  {ratio:>6.2f}x  {delta:>+7.1f}%"
+            )
     uncovered = sorted(set(fresh) - set(base))
     for key in uncovered:
         print(f"NEW      {key[0]} [{key[1]}]: {fresh[key] * 1e3:.3f}ms (uncovered: no baseline row)")

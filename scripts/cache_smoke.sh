@@ -9,8 +9,10 @@
 #      `dadm worker` processes (each worker maps its own shard row
 #      range; no training rows cross the wire),
 #   4. assert the two trace CSVs agree bit for bit on every modeled
-#      column (wall_secs, the CSV's last column, is real elapsed time
-#      and is stripped — the same projection the in-process parity test
+#      column (the first eight fields, round..comm_secs; wall_secs and
+#      the step_min/mean/max_secs + imbalance straggler telemetry are
+#      real elapsed time and are stripped — the same projection the
+#      in-process parity test
 #      `cli::tests::cache_solve_is_bit_identical_to_text_solve` uses).
 set -euo pipefail
 cd "$(dirname "$0")/.."

@@ -1,0 +1,58 @@
+#!/usr/bin/env python3
+"""Regenerate `rust/testdata/skewed.libsvm`, the straggler fixture.
+
+The file is a small LIBSVM classification set whose stored non-zeros
+are deliberately concentrated in a head block of dense rows: under a
+row-balanced contiguous partition the first shard owns almost all of
+the nnz (and therefore almost all of the local-step work), which is
+exactly the skew `--balance nnz` (DESIGN.md §16) is designed to
+repair.  The distributed-smoke CI job and the `--balance nnz` parity
+tests in `rust/tests/balance.rs` read the checked-in copy; the bench
+`dadm_round_skewed_balance` in `rust/benches/perf_hotpath.rs` uses the
+same head/tail shape (generated in-process at larger n).
+
+Deterministic by construction — a fixed-seed Mersenne generator and
+3-decimal values — so re-running this script reproduces the checked-in
+bytes exactly.  Regenerate with:
+
+    python3 scripts/gen_skewed_libsvm.py
+"""
+
+import random
+from pathlib import Path
+
+OUT = Path(__file__).resolve().parent.parent / "rust" / "testdata" / "skewed.libsvm"
+
+SEED = 0xDAD5
+N = 160  # rows
+DIM = 64  # 1-based feature indices 1..=DIM
+HEAD = 24  # dense head rows
+HEAD_NNZ = (40, 56)  # nnz range for head rows
+TAIL_NNZ = (1, 4)  # nnz range for tail rows
+
+
+def main() -> None:
+    rng = random.Random(SEED)
+    lines = []
+    for i in range(N):
+        lo, hi = HEAD_NNZ if i < HEAD else TAIL_NNZ
+        nnz = rng.randint(lo, min(hi, DIM))
+        indices = sorted(rng.sample(range(1, DIM + 1), nnz))
+        label = rng.choice((-1, 1))
+        feats = " ".join(
+            # :g-style trim keeps the file byte-stable and small.
+            f"{j}:{round(rng.uniform(-4.0, 4.0), 3):g}"
+            for j in indices
+        )
+        lines.append(f"{label} {feats}")
+    OUT.write_text("\n".join(lines) + "\n")
+    head_nnz = sum(line.count(":") for line in lines[:HEAD])
+    total_nnz = sum(line.count(":") for line in lines)
+    print(
+        f"wrote {OUT} — {N} rows, {total_nnz} nnz, "
+        f"head {HEAD} rows hold {100 * head_nnz / total_nnz:.0f}% of nnz"
+    )
+
+
+if __name__ == "__main__":
+    main()
